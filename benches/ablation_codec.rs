@@ -1,0 +1,64 @@
+//! Ablation A5: real-codec overhead. The paper accounts `H_Q` bits per
+//! element ("achievable through entropy coding"); this bench measures what
+//! the actual coders cost on real quantized uplink blocks:
+//! range coder ≈ H_Q (per-block constant amortized), Huffman pays the
+//! integer-codeword penalty.
+
+use mpamp::bench_util::{section, Bencher};
+use mpamp::config::{CodecKind, RunConfig};
+use mpamp::metrics::Csv;
+use mpamp::quant::EcsqCoder;
+use mpamp::se::prior::BgChannel;
+use mpamp::se::StateEvolution;
+use mpamp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig::paper_default(0.05);
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let sigma_t2 = se.trajectory(4)[4];
+    let base = BgChannel::new(cfg.prior);
+    let (wch, ws2) = base.worker_channel(sigma_t2, cfg.p);
+    let n = cfg.n;
+    let mut rng = Rng::new(7);
+    let block: Vec<f32> = (0..n)
+        .map(|_| (wch.prior.sample(&mut rng) + rng.gaussian() * ws2.sqrt()) as f32)
+        .collect();
+
+    println!("Wire cost per element on a real uplink block (N={n}):");
+    println!("{:>6} {:>10} {:>10} {:>10} {:>10}", "rate", "H_Q", "range", "huffman", "raw");
+    let mut csv = Csv::new(&["rate", "h_q", "range_bits", "huffman_bits"]);
+    for rate in [1.0, 2.0, 3.0, 4.0, 6.0] {
+        let mut row = [rate, 0.0, 0.0, 0.0];
+        for (i, codec) in [CodecKind::Range, CodecKind::Huffman].iter().enumerate() {
+            let coder = EcsqCoder::for_rate(&wch, ws2, rate, 8.0, *codec)?;
+            let enc = coder.encode(&block)?;
+            row[1] = coder.entropy_bits;
+            row[2 + i] = enc.wire_bits / n as f64;
+        }
+        println!(
+            "{:>6.1} {:>10.3} {:>10.3} {:>10.3} {:>10.1}",
+            rate, row[1], row[2], row[3], 32.0
+        );
+        csv.push_f64(&row);
+        assert!(row[2] < row[1] + 0.05, "range coder overhead too big at rate {rate}");
+        assert!(row[3] >= row[1] - 1e-9, "huffman below entropy?!");
+    }
+    csv.write("results/ablation_codec.csv")?;
+
+    section("codec throughput (encode+decode, N=10000 block)");
+    let mut b = Bencher::new();
+    for codec in [CodecKind::Range, CodecKind::Huffman] {
+        let coder = EcsqCoder::for_rate(&wch, ws2, 4.0, 8.0, codec)?;
+        let syms = coder.quantizer.quantize_block(&block);
+        b.bench_throughput(&format!("{codec:?} encode"), n as u64, || {
+            let _ = mpamp::bench_util::black_box(coder.encode_symbols(&syms).unwrap());
+        });
+        let enc = coder.encode_symbols(&syms)?;
+        let mut out = vec![0f32; n];
+        b.bench_throughput(&format!("{codec:?} decode"), n as u64, || {
+            coder.decode(mpamp::bench_util::black_box(&enc), Some(&syms), &mut out).unwrap();
+        });
+    }
+    println!("→ results/ablation_codec.csv");
+    Ok(())
+}

@@ -1,0 +1,115 @@
+//! Reproduces **Fig. 1** (both rows, all three ε panels): SDR and coding
+//! rate as functions of the iteration number.
+//!
+//! Series per panel (matching the paper's legend):
+//!   * centralized SE (solid reference),
+//!   * BT-MP-AMP, RD prediction (offline SE curve),
+//!   * BT-MP-AMP, ECSQ simulation (real MP-AMP run, range coder),
+//!   * DP-MP-AMP, RD prediction (offline DP trajectory),
+//!   * DP-MP-AMP, ECSQ simulation (real MP-AMP run, range coder).
+//!
+//! Output: printed series + `results/fig1_{sdr,rate}_eps*.csv`.
+
+use mpamp::alloc::backtrack::{BtController, RateModel};
+use mpamp::alloc::dp::DpAllocator;
+use mpamp::config::{RunConfig, ScheduleKind};
+use mpamp::coordinator::session::MpAmpSession;
+use mpamp::metrics::Csv;
+use mpamp::rd::RdCache;
+use mpamp::se::StateEvolution;
+use mpamp::signal::{Instance, ProblemDims};
+use mpamp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let t_all = std::time::Instant::now();
+    for eps in [0.03, 0.05, 0.10] {
+        let cfg = RunConfig::paper_default(eps);
+        let t_iters = cfg.iters;
+        let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+        println!("=== Fig. 1 panel ε={eps} (T={t_iters}) ===");
+
+        // Offline machinery.
+        let fp = se.fixed_point(1e-10, 300);
+        let cache = RdCache::build(&cfg.prior, cfg.p, fp * 0.5, se.sigma0_sq() * 2.0, &cfg.rd)?;
+        let cent = se.trajectory(t_iters);
+        let ctl = BtController::new(&se, cfg.p, 1.02, 6.0, t_iters);
+        let (bt_rd, bt_rd_traj) = ctl.se_schedule(t_iters, RateModel::Rd, Some(&cache));
+        let dp = DpAllocator::new(&se, cfg.p, &cache)?.solve(t_iters, 2.0 * t_iters as f64, 0.1)?;
+
+        // Simulated runs (shared instance).
+        let mut rng = Rng::new(cfg.seed);
+        let inst = Instance::generate(
+            cfg.prior,
+            ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+            &mut rng,
+        )?;
+        let mut bt_cfg = cfg.clone();
+        bt_cfg.schedule = ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 };
+        let bt_run = MpAmpSession::with_instance(bt_cfg, inst.clone())?.run()?;
+        let mut dp_cfg = cfg.clone();
+        dp_cfg.schedule = ScheduleKind::Dp { total_rate: None, delta_r: 0.1 };
+        let dp_run = MpAmpSession::with_instance(dp_cfg, inst)?.run()?;
+
+        // Print + CSV.
+        let tag = (eps * 100.0) as u32;
+        let mut sdr_csv = Csv::new(&[
+            "t",
+            "centralized_se",
+            "bt_rd_pred",
+            "bt_ecsq_sim",
+            "dp_rd_pred",
+            "dp_ecsq_sim",
+        ]);
+        let mut rate_csv = Csv::new(&["t", "bt_rd_pred", "bt_ecsq_sim", "dp_rd_pred", "dp_ecsq_sim"]);
+        println!(
+            "{:>3} | {:>8} {:>8} {:>8} {:>8} {:>8} | {:>6} {:>6} {:>6} {:>6}",
+            "t", "cent", "BT-RD", "BT-sim", "DP-RD", "DP-sim", "rBT-RD", "rBT-s", "rDP-RD", "rDP-s"
+        );
+        for t in 0..t_iters {
+            let row_sdr = [
+                (t + 1) as f64,
+                se.sdr_db(cent[t + 1]),
+                se.sdr_db(bt_rd_traj[t + 1]),
+                bt_run.iters[t].sdr_db,
+                se.sdr_db(dp.sigma_d2[t + 1]),
+                dp_run.iters[t].sdr_db,
+            ];
+            let row_rate = [
+                (t + 1) as f64,
+                bt_rd[t].rate,
+                bt_run.iters[t].rate_wire,
+                dp.rates[t],
+                dp_run.iters[t].rate_wire,
+            ];
+            println!(
+                "{:>3} | {:>8.2} {:>8.2} {:>8.2} {:>8.2} {:>8.2} | {:>6.2} {:>6.2} {:>6.2} {:>6.2}",
+                t + 1,
+                row_sdr[1],
+                row_sdr[2],
+                row_sdr[3],
+                row_sdr[4],
+                row_sdr[5],
+                row_rate[1],
+                row_rate[2],
+                row_rate[3],
+                row_rate[4]
+            );
+            sdr_csv.push_f64(&row_sdr);
+            rate_csv.push_f64(&row_rate);
+        }
+        sdr_csv.write(&format!("results/fig1_sdr_eps{tag:03}.csv"))?;
+        rate_csv.write(&format!("results/fig1_rate_eps{tag:03}.csv"))?;
+
+        // Paper-shape assertions (soft — report, don't abort).
+        let bt_total: f64 = bt_run.iters.iter().map(|r| r.rate_wire).sum();
+        let last_gap = se.sdr_db(cent[t_iters]) - bt_run.iters[t_iters - 1].sdr_db;
+        println!(
+            "checks: BT < 6 bits/iter: {}; BT final within 1 dB of centralized: {} \
+             (gap {last_gap:.2} dB); BT total {bt_total:.1} b/el\n",
+            bt_run.iters.iter().all(|r| r.rate_wire < 6.3),
+            last_gap.abs() < 1.0
+        );
+    }
+    println!("fig1 regenerated in {:.1}s → results/fig1_*.csv", t_all.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,116 @@
+//! P1: hot-path microbenchmarks across all three layers' Rust-side work:
+//! LC matvec pair (Rust vs XLA artifacts), GC denoiser, quantize + range
+//! coding, SE evaluation, RD curve, and the DP table. These are the
+//! numbers the §Perf log in EXPERIMENTS.md tracks.
+
+use mpamp::bench_util::{black_box, section, Bencher};
+use mpamp::config::{RdConfig, RunConfig};
+use mpamp::engine::{ComputeEngine, RustEngine, WorkerData};
+use mpamp::quant::EcsqCoder;
+use mpamp::rd::RdCache;
+use mpamp::se::prior::BgChannel;
+use mpamp::se::StateEvolution;
+use mpamp::signal::{Instance, ProblemDims};
+use mpamp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = RunConfig::paper_default(0.05);
+    let mut rng = Rng::new(3);
+    let inst = Instance::generate(
+        cfg.prior,
+        ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+    )?;
+    let shard = WorkerData::split(&inst.a, &inst.y, cfg.p).remove(0);
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let x: Vec<f32> = (0..cfg.n).map(|_| rng.gaussian() as f32 * 0.1).collect();
+    let z: Vec<f32> = (0..cfg.m / cfg.p).map(|_| rng.gaussian() as f32 * 0.1).collect();
+    let mut b = Bencher::new();
+
+    section("L3: worker LC step (A^p is 100×10000)");
+    let flops = 2 * 2 * shard.a.rows() as u64 * shard.a.cols() as u64;
+    for threads in [1, 4] {
+        let eng = RustEngine::new(cfg.prior, threads);
+        b.bench_throughput(&format!("rust lc_step ({threads} thr), flops"), flops, || {
+            black_box(eng.lc_step(&shard, &x, &z, 0.3, cfg.p).unwrap());
+        });
+    }
+    if std::path::Path::new("artifacts/manifest.toml").exists() {
+        let eng = mpamp::runtime::XlaEngine::load(
+            "artifacts",
+            cfg.prior,
+            cfg.n,
+            cfg.m / cfg.p,
+            cfg.p,
+        )?;
+        b.bench_throughput("xla lc_step (AOT artifact), flops", flops, || {
+            black_box(eng.lc_step(&shard, &x, &z, 0.3, cfg.p).unwrap());
+        });
+    } else {
+        println!("(artifacts/ missing — skipping XLA lc_step; run `make artifacts`)");
+    }
+
+    section("L3: fusion GC denoiser step (N=10000)");
+    let f: Vec<f32> = (0..cfg.n).map(|_| rng.gaussian() as f32 * 0.5).collect();
+    for threads in [1, 4] {
+        let eng = RustEngine::new(cfg.prior, threads);
+        b.bench_throughput(&format!("rust gc_step ({threads} thr), elems"), cfg.n as u64, || {
+            black_box(eng.gc_step(&f, 0.02).unwrap());
+        });
+    }
+    if std::path::Path::new("artifacts/manifest.toml").exists() {
+        let eng = mpamp::runtime::XlaEngine::load(
+            "artifacts",
+            cfg.prior,
+            cfg.n,
+            cfg.m / cfg.p,
+            cfg.p,
+        )?;
+        b.bench_throughput("xla gc_step (AOT artifact), elems", cfg.n as u64, || {
+            black_box(eng.gc_step(&f, 0.02).unwrap());
+        });
+    }
+
+    section("quantize + range-code one uplink vector (N=10000)");
+    let ch = BgChannel::new(cfg.prior);
+    let (wch, ws2) = ch.worker_channel(0.02, cfg.p);
+    let coder = EcsqCoder::for_rate(&wch, ws2, 4.0, 8.0, mpamp::config::CodecKind::Range)?;
+    let fu: Vec<f32> = (0..cfg.n)
+        .map(|_| (wch.prior.sample(&mut rng) + rng.gaussian() * ws2.sqrt()) as f32)
+        .collect();
+    b.bench_throughput("quantize_block, elems", cfg.n as u64, || {
+        black_box(coder.quantizer.quantize_block(&fu));
+    });
+    let syms = coder.quantizer.quantize_block(&fu);
+    b.bench_throughput("range encode, elems", cfg.n as u64, || {
+        black_box(coder.encode_symbols(&syms).unwrap());
+    });
+    let enc = coder.encode_symbols(&syms)?;
+    let mut out = vec![0f32; cfg.n];
+    b.bench_throughput("range decode+dequant, elems", cfg.n as u64, || {
+        coder.decode(black_box(&enc), None, &mut out).unwrap();
+    });
+
+    section("SE / RD / DP machinery");
+    b.bench("se mmse (multiscale quadrature)", || {
+        black_box(se.channel.mmse(black_box(0.02)));
+    });
+    let table = mpamp::se::table::MmseTable::build(&se.channel, 1e-4, 1.0, 768)?;
+    b.bench("se mmse (table lookup)", || {
+        black_box(table.mmse(black_box(0.02)));
+    });
+    let rd_cfg = RdConfig { alphabet: 257, curve_points: 16, tol: 1e-5, gamma_grid: 9 };
+    b.bench("blahut-arimoto curve (257 alphabet, 16 pts)", || {
+        black_box(
+            mpamp::rd::rd_curve_for_channel(&wch, ws2, 257, 16, 1e-5).unwrap(),
+        );
+    });
+    let fp = se.fixed_point(1e-10, 300);
+    let cache = RdCache::build(&cfg.prior, cfg.p, fp * 0.5, se.sigma0_sq() * 2.0, &rd_cfg)?;
+    let alloc = mpamp::alloc::dp::DpAllocator::new(&se, cfg.p, &cache)?;
+    let mut bq = Bencher::quick();
+    bq.bench("dp solve (T=10, R=20, ΔR=0.1 → 201×10 table)", || {
+        black_box(alloc.solve(10, 20.0, 0.1).unwrap());
+    });
+    Ok(())
+}

@@ -1,0 +1,131 @@
+//! Reproduces **Table 1**: total bits per element of MP-AMP for
+//! BT-MP-AMP and DP-MP-AMP, each in RD-prediction and ECSQ-simulation
+//! flavors, at ε ∈ {0.03, 0.05, 0.10}.
+//!
+//! Output: the table with the paper's values alongside, plus
+//! `results/table1.csv`.
+
+use mpamp::alloc::backtrack::{BtController, RateModel};
+use mpamp::config::{RunConfig, ScheduleKind};
+use mpamp::coordinator::session::MpAmpSession;
+use mpamp::metrics::Csv;
+use mpamp::rd::RdCache;
+use mpamp::se::StateEvolution;
+use mpamp::signal::{Instance, ProblemDims};
+use mpamp::util::rng::Rng;
+
+const EPS: [f64; 3] = [0.03, 0.05, 0.10];
+const PAPER: [[f64; 3]; 5] = [
+    [33.82, 46.43, 96.16],   // BT RD prediction
+    [36.09, 49.19, 101.50],  // BT ECSQ (SE model — the paper's accounting)
+    [36.09, 49.19, 101.50],  // BT ECSQ (online simulation; same paper row)
+    [16.0, 20.0, 40.0],      // DP RD prediction (= 2T by construction)
+    [18.04, 22.55, 45.10],   // DP ECSQ simulation (= 2T + 0.255T)
+];
+
+fn main() -> anyhow::Result<()> {
+    let t_all = std::time::Instant::now();
+    let mut ours = [[0f64; 3]; 5];
+    let mut t_col = [0usize; 3];
+
+    for (col, &eps) in EPS.iter().enumerate() {
+        let cfg = RunConfig::paper_default(eps);
+        let t_iters = cfg.iters;
+        t_col[col] = t_iters;
+        let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+        let fp = se.fixed_point(1e-10, 300);
+        let cache =
+            RdCache::build(&cfg.prior, cfg.p, fp * 0.5, se.sigma0_sq() * 2.0, &cfg.rd)?;
+
+        // BT, RD prediction (offline SE schedule under the RD rate model).
+        let ctl = BtController::new(&se, cfg.p, 1.02, 6.0, t_iters);
+        let (bt_rd, _) = ctl.se_schedule(t_iters, RateModel::Rd, Some(&cache));
+        ours[0][col] = bt_rd.iter().map(|d| d.rate).sum();
+
+        // BT, ECSQ under the SE model (offline; apples-to-apples with the
+        // paper's Table 1, whose simulation tracked SE closely).
+        let (bt_ecsq, _) = ctl.se_schedule(t_iters, RateModel::Ecsq, Some(&cache));
+        ours[1][col] = bt_ecsq.iter().map(|d| d.rate).sum();
+
+        // Shared instance for the simulated rows.
+        let mut rng = Rng::new(cfg.seed);
+        let inst = Instance::generate(
+            cfg.prior,
+            ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+            &mut rng,
+        )?;
+
+        // BT, ECSQ simulation (real run, range coder on the wire).
+        let mut bt_cfg = cfg.clone();
+        bt_cfg.schedule = ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 };
+        let bt_run = MpAmpSession::with_instance(bt_cfg, inst.clone())?.run()?;
+        // Online BT spends *fewer* bits than the SE model when the
+        // empirical trajectory runs ahead of SE (finite-N) — see
+        // EXPERIMENTS.md §Table-1 notes.
+        ours[2][col] = bt_run.total_uplink_bits_per_element();
+
+        // DP, RD prediction: the budget itself (allocator uses all of 2T).
+        ours[3][col] = 2.0 * t_iters as f64;
+
+        // DP, ECSQ simulation.
+        let mut dp_cfg = cfg.clone();
+        dp_cfg.schedule = ScheduleKind::Dp { total_rate: None, delta_r: 0.1 };
+        let dp_run = MpAmpSession::with_instance(dp_cfg, inst)?.run()?;
+        ours[4][col] = dp_run.total_uplink_bits_per_element();
+
+        println!(
+            "ε={eps}: BT final SDR {:.2} dB, DP final SDR {:.2} dB",
+            bt_run.final_sdr_db(),
+            dp_run.final_sdr_db()
+        );
+    }
+
+    let rows = [
+        "BT-MP-AMP (RD prediction)",
+        "BT-MP-AMP (ECSQ, SE model)",
+        "BT-MP-AMP (ECSQ, online sim)",
+        "DP-MP-AMP (RD prediction)",
+        "DP-MP-AMP (ECSQ simulation)",
+    ];
+    println!("\n=== Table 1: total bits per element (ours {{paper}}) ===");
+    println!(
+        "{:<30} {:>16} {:>16} {:>16}",
+        "ε", EPS[0], EPS[1], EPS[2]
+    );
+    println!(
+        "{:<30} {:>16} {:>16} {:>16}",
+        "T", t_col[0], t_col[1], t_col[2]
+    );
+    let mut csv = Csv::new(&["method", "eps003", "paper003", "eps005", "paper005", "eps010", "paper010"]);
+    for (ri, name) in rows.iter().enumerate() {
+        println!(
+            "{:<30} {:>8.2} {{{:>6.2}}} {:>8.2} {{{:>6.2}}} {:>8.2} {{{:>6.2}}}",
+            name, ours[ri][0], PAPER[ri][0], ours[ri][1], PAPER[ri][1], ours[ri][2], PAPER[ri][2]
+        );
+        csv.push_raw(vec![
+            name.to_string(),
+            format!("{:.3}", ours[ri][0]),
+            format!("{:.3}", PAPER[ri][0]),
+            format!("{:.3}", ours[ri][1]),
+            format!("{:.3}", PAPER[ri][1]),
+            format!("{:.3}", ours[ri][2]),
+            format!("{:.3}", PAPER[ri][2]),
+        ]);
+    }
+    csv.write("results/table1.csv")?;
+
+    // Shape checks the paper's conclusions rest on.
+    for col in 0..3 {
+        assert!(ours[3][col] < ours[0][col], "DP must beat BT (RD) at col {col}");
+        assert!(ours[4][col] < ours[1][col], "DP must beat BT (ECSQ) at col {col}");
+        assert!(ours[1][col] < 32.0 * t_col[col] as f64 * 0.25, "BT must save >75%");
+        // The 0.255-bit/iter ECSQ overhead (paper §4).
+        let overhead = (ours[4][col] - ours[3][col]) / t_col[col] as f64;
+        println!(
+            "ε={}: DP ECSQ overhead {:.3} bits/iter (theory ≈ 0.255)",
+            EPS[col], overhead
+        );
+    }
+    println!("\ntable1 regenerated in {:.1}s → results/table1.csv", t_all.elapsed().as_secs_f64());
+    Ok(())
+}

@@ -1,0 +1,143 @@
+//! **End-to-end paper reproduction** — the driver that proves all three
+//! layers compose: AOT JAX/Pallas artifacts (when present) executed by the
+//! Rust coordinator across 30 workers with real entropy-coded uplinks, at
+//! the paper's full scale (N=10 000, M=3 000, SNR=20 dB).
+//!
+//! For each sparsity ε ∈ {0.03, 0.05, 0.10} it runs:
+//!   1. centralized AMP (quality ceiling),
+//!   2. uncompressed MP-AMP (32-bit floats — cost ceiling),
+//!   3. BT-MP-AMP (range coder on the wire),
+//!   4. DP-MP-AMP (range coder on the wire),
+//! prints the paper's Table-1 comparison plus the headline claims, and
+//! writes per-iteration CSVs under `results/`.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example full_reproduction
+//! ```
+
+use mpamp::amp::run_centralized;
+use mpamp::config::{EngineKind, RunConfig, ScheduleKind};
+use mpamp::coordinator::session::MpAmpSession;
+use mpamp::engine::RustEngine;
+use mpamp::metrics::Csv;
+use mpamp::se::StateEvolution;
+use mpamp::signal::{Instance, ProblemDims};
+use mpamp::util::rng::Rng;
+
+/// Paper Table 1 reference values (total bits/element).
+const PAPER_BT_ECSQ: [f64; 3] = [36.09, 49.19, 101.50];
+#[allow(dead_code)]
+const PAPER_DP_RD: [f64; 3] = [16.0, 20.0, 40.0];
+const PAPER_DP_ECSQ: [f64; 3] = [18.04, 22.55, 45.10];
+const EPS: [f64; 3] = [0.03, 0.05, 0.10];
+
+fn main() -> anyhow::Result<()> {
+    let t_start = std::time::Instant::now();
+    let engine = if std::path::Path::new("artifacts/manifest.toml").exists() {
+        EngineKind::Xla
+    } else {
+        eprintln!("NOTE: artifacts/ missing — falling back to the pure-Rust engine.");
+        eprintln!("      Run `make artifacts` for the three-layer configuration.\n");
+        EngineKind::Rust
+    };
+
+    let mut table: Vec<[f64; 6]> = Vec::new();
+    for (col, &eps) in EPS.iter().enumerate() {
+        let cfg = RunConfig::paper_default(eps);
+        println!(
+            "=== ε = {eps}  (N={} M={} P={} T={} engine={engine:?}) ===",
+            cfg.n, cfg.m, cfg.p, cfg.iters
+        );
+        // One shared instance per ε so every scheme sees identical data.
+        let mut rng = Rng::new(cfg.seed);
+        let inst = Instance::generate(
+            cfg.prior,
+            ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+            &mut rng,
+        )?;
+        let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+
+        // 1. Centralized baseline.
+        let t0 = std::time::Instant::now();
+        let rust_engine = RustEngine::new(cfg.prior, cfg.threads);
+        let cent = run_centralized(&inst, &se, &rust_engine, cfg.iters)?;
+        println!(
+            "centralized  : final SDR {:>7.2} dB  ({:.1}s)",
+            cent.final_sdr_db(),
+            t0.elapsed().as_secs_f64()
+        );
+
+        // 2–4. The three MP schemes on the same instance.
+        let schemes: [(&str, ScheduleKind); 3] = [
+            ("uncompressed", ScheduleKind::Uncompressed),
+            ("bt", ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 }),
+            ("dp", ScheduleKind::Dp { total_rate: None, delta_r: 0.1 }),
+        ];
+        let mut results = Vec::new();
+        for (name, schedule) in schemes {
+            let mut c = cfg.clone();
+            c.schedule = schedule;
+            c.engine = engine;
+            let t0 = std::time::Instant::now();
+            let report = MpAmpSession::with_instance(c, inst.clone())?.run()?;
+            println!(
+                "{name:<13}: final SDR {:>7.2} dB, {:>7.2} bits/element total \
+                 ({:>5.1}% savings)  ({:.1}s)",
+                report.final_sdr_db(),
+                report.total_uplink_bits_per_element(),
+                report.savings_vs_float_pct(),
+                t0.elapsed().as_secs_f64()
+            );
+            let tag = format!("results/e2e_{name}_eps{:03}.csv", (eps * 100.0) as u32);
+            report.to_csv().write(&tag)?;
+            results.push(report);
+        }
+        // Centralized per-iteration CSV for the Fig-1 overlay.
+        let mut csv = Csv::new(&["t", "sdr_db", "sdr_se_db"]);
+        for r in &cent.iters {
+            csv.push_f64(&[r.t as f64, r.sdr_db, r.sdr_pred_db]);
+        }
+        csv.write(&format!("results/e2e_centralized_eps{:03}.csv", (eps * 100.0) as u32))?;
+
+        let bt = &results[1];
+        let dp = &results[2];
+        table.push([
+            bt.total_uplink_bits_per_element(),
+            PAPER_BT_ECSQ[col],
+            // The allocated H_Q per iteration — the ECSQ realization of the
+            // DP's 2T-bit RD budget (paper: 2T + 0.255T).
+            dp.total_alloc_bits_per_element(),
+            PAPER_DP_ECSQ[col],
+            dp.total_uplink_bits_per_element(),
+            PAPER_DP_ECSQ[col],
+        ]);
+        // Headline checks (shape, not absolute).
+        let sdr_gap = cent.final_sdr_db() - bt.final_sdr_db();
+        println!(
+            "BT vs centralized SDR gap: {sdr_gap:.2} dB | DP saves {:.0}% beyond BT\n",
+            100.0 * (1.0 - dp.total_uplink_bits_per_element()
+                / bt.total_uplink_bits_per_element())
+        );
+    }
+
+    println!("=== Table 1 reproduction (total bits/element; paper values in braces) ===");
+    println!(
+        "(DP's RD-budget row is 2T = {{16, 20, 40}} by construction; the H_Q
+         and wire rows realize it with ECSQ at +0.255 bits/iter.)"
+    );
+    println!(
+        "{:<8} {:>22} {:>22} {:>22}",
+        "ε", "BT wire {paper}", "DP H_Q {paper ECSQ}", "DP wire {paper ECSQ}"
+    );
+    for (i, row) in table.iter().enumerate() {
+        println!(
+            "{:<8} {:>13.2} {{{:>6.2}}} {:>13.2} {{{:>6.2}}} {:>13.2} {{{:>6.2}}}",
+            EPS[i], row[0], row[1], row[2], row[3], row[4], row[5]
+        );
+    }
+    println!(
+        "\ntotal wall time {:.1}s — CSVs under results/ (see EXPERIMENTS.md)",
+        t_start.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

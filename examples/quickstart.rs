@@ -1,0 +1,44 @@
+//! Quickstart: run one BT-MP-AMP session at reduced scale and print the
+//! per-iteration quality/rate table.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use mpamp::config::RunConfig;
+use mpamp::coordinator::session::MpAmpSession;
+
+fn main() -> anyhow::Result<()> {
+    // The paper's ε = 0.05 column, shrunk 5× so this runs in well under a
+    // second. `RunConfig::paper_default(0.05)` gives the full-size setup.
+    let mut cfg = RunConfig::paper_default(0.05);
+    cfg.n = 2_000;
+    cfg.m = 600;
+    cfg.p = 10;
+    println!(
+        "MP-AMP quickstart: N={} M={} P={} ε={} SNR={} dB, schedule {:?}",
+        cfg.n, cfg.m, cfg.p, cfg.prior.eps, cfg.snr_db, cfg.schedule
+    );
+
+    let session = MpAmpSession::new(cfg)?;
+    let report = session.run()?;
+
+    println!(
+        "\n{:>3} {:>9} {:>10} {:>10}",
+        "t", "SDR(dB)", "wire(b/el)", "σ_Q²"
+    );
+    for r in &report.iters {
+        println!(
+            "{:>3} {:>9.2} {:>10.2} {:>10.3e}",
+            r.t, r.sdr_db, r.rate_wire, r.sigma_q2
+        );
+    }
+    println!(
+        "\nfinal SDR {:.2} dB using {:.2} bits/element total — {:.1}% uplink savings vs \
+         32-bit floats",
+        report.final_sdr_db(),
+        report.total_uplink_bits_per_element(),
+        report.savings_vs_float_pct()
+    );
+    Ok(())
+}

@@ -1,0 +1,82 @@
+//! Offline rate-allocation planning — no data, pure SE + RD machinery.
+//!
+//! Prints, for one sparsity level, the paper's two allocation schemes side
+//! by side: the DP-optimal schedule under a total budget (paper §3.4) and
+//! the BT back-tracking schedule (paper §3.3), with their SE-predicted SDR
+//! trajectories.
+//!
+//! ```sh
+//! cargo run --release --example rate_allocation [eps] [total_rate]
+//! ```
+
+use mpamp::alloc::backtrack::{BtController, RateModel};
+use mpamp::alloc::dp::DpAllocator;
+use mpamp::config::{paper_iters, RdConfig};
+use mpamp::rd::RdCache;
+use mpamp::se::StateEvolution;
+use mpamp::signal::{sigma_e2_for_snr, BernoulliGauss};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let eps: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(0.05);
+    let t_iters = paper_iters(eps);
+    let total: f64 = args
+        .get(2)
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2.0 * t_iters as f64);
+
+    let prior = BernoulliGauss::standard(eps);
+    let kappa = 0.3;
+    let se = StateEvolution::new(prior, kappa, sigma_e2_for_snr(&prior, kappa, 20.0));
+    let p = 30;
+
+    println!("ε={eps}, T={t_iters}, P={p}, DP budget R={total} bits/element");
+    println!("building Blahut–Arimoto RD cache...");
+    let fp = se.fixed_point(1e-10, 300);
+    let rd_cfg = RdConfig::default();
+    let cache = RdCache::build(&prior, p, fp * 0.5, se.sigma0_sq() * 2.0, &rd_cfg)?;
+
+    let t0 = std::time::Instant::now();
+    let alloc = DpAllocator::new(&se, p, &cache)?;
+    let dp = alloc.solve(t_iters, total, 0.1)?;
+    println!(
+        "DP: {}×{} table solved in {:.2}s",
+        dp.dims.0,
+        dp.dims.1,
+        t0.elapsed().as_secs_f64()
+    );
+
+    let ctl = BtController::new(&se, p, 1.02, 6.0, t_iters);
+    let (bt, bt_traj) = ctl.se_schedule(t_iters, RateModel::Ecsq, Some(&cache));
+    let cent = se.trajectory(t_iters);
+
+    println!(
+        "\n{:>3} | {:>8} {:>9} | {:>8} {:>9} | {:>9}",
+        "t", "DP R_t", "DP SDR", "BT R_t", "BT SDR", "cent SDR"
+    );
+    for t in 0..t_iters {
+        println!(
+            "{:>3} | {:>8.2} {:>9.3} | {:>8.2} {:>9.3} | {:>9.3}",
+            t,
+            dp.rates[t],
+            se.sdr_db(dp.sigma_d2[t + 1]),
+            bt[t].rate,
+            se.sdr_db(bt_traj[t + 1]),
+            se.sdr_db(cent[t + 1]),
+        );
+    }
+    let bt_total: f64 = bt.iter().map(|d| d.rate).sum();
+    println!(
+        "\ntotals: DP {total:.1} bits/element (by construction), BT {bt_total:.2} \
+         bits/element — DP saves {:.0}%",
+        100.0 * (1.0 - total / bt_total)
+    );
+    println!(
+        "final SDR: DP {:.2} dB, BT {:.2} dB, centralized {:.2} dB",
+        se.sdr_db(*dp.sigma_d2.last().unwrap()),
+        se.sdr_db(*bt_traj.last().unwrap()),
+        se.sdr_db(*cent.last().unwrap()),
+    );
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""Layer-1 Pallas kernels: the worker local-computation matvec pair.
+
+The LC hot spot is the pair `A x` (row-reduction) and `Aᵀ z`
+(column-reduction) over the worker's `(M/P, N)` block row of the sensing
+matrix. Both kernels tile N into `BLOCK_N`-wide stripes; the `(M/P,
+BLOCK_N)` tile of `A` is the unit of HBM→VMEM traffic, and the `jnp.dot`
+inside each tile is the MXU-shaped work (DESIGN.md §Hardware-Adaptation:
+`BlockSpec` here plays the role CUDA threadblock tiling plays in the
+paper-adjacent GPU world).
+
+`interpret=True` — see `denoiser.py`.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+#: Stripe width along N. With M/P = 100 rows, a (100, 512) f32 tile is
+#: 200 KiB — comfortable double-buffering headroom inside 16 MiB VMEM.
+BLOCK_N = 512
+
+
+def _matvec_kernel(a_ref, x_ref, o_ref):
+    """Accumulate `o += A_tile @ x_tile` across the N-stripe grid."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def matvec(a, x, block_n=BLOCK_N):
+    """``A @ x`` for 2-D ``a`` (m, n) and 1-D ``x`` (n,) via Pallas."""
+    a = jnp.asarray(a, jnp.float32)
+    x = jnp.asarray(x, jnp.float32)
+    m, n = a.shape
+    blk = min(block_n, max(n, 1))
+    n_pad = -(-n // blk) * blk
+    a_p = jnp.pad(a, ((0, 0), (0, n_pad - n)))
+    x_p = jnp.pad(x, (0, n_pad - n))
+    grid = (n_pad // blk,)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, blk), lambda j: (0, j)),
+            pl.BlockSpec((blk,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=True,
+    )(a_p, x_p)
+
+
+def _matvec_t_kernel(a_ref, z_ref, o_ref):
+    """One N-stripe of `Aᵀ z`: independent per grid step, no accumulation."""
+    o_ref[...] = a_ref[...].T @ z_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def matvec_t(a, z, block_n=BLOCK_N):
+    """``Aᵀ @ z`` for 2-D ``a`` (m, n) and 1-D ``z`` (m,) via Pallas."""
+    a = jnp.asarray(a, jnp.float32)
+    z = jnp.asarray(z, jnp.float32)
+    m, n = a.shape
+    blk = min(block_n, max(n, 1))
+    n_pad = -(-n // blk) * blk
+    a_p = jnp.pad(a, ((0, 0), (0, n_pad - n)))
+    grid = (n_pad // blk,)
+    out = pl.pallas_call(
+        _matvec_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((m, blk), lambda j: (0, j)),
+            pl.BlockSpec((m,), lambda j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda j: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.float32),
+        interpret=True,
+    )(a_p, z)
+    return out[:n]

@@ -1,0 +1,69 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (Layer 1).
+
+Every kernel in this package must match its `ref_*` counterpart to float32
+tolerance; `python/tests/test_kernel.py` sweeps shapes and parameters with
+hypothesis. These references are also the semantic definition of the
+Layer-2 model (`model.py` composes kernels, and the model tests check the
+composition against `ref_lc_step` / `ref_gc_step`).
+"""
+
+import jax.numpy as jnp
+
+_LOG_2PI = 1.8378770664093453
+
+
+def _log_normal_pdf(x, mu, var):
+    """Elementwise log N(x; mu, var)."""
+    return -0.5 * (_LOG_2PI + jnp.log(var) + (x - mu) ** 2 / var)
+
+
+def ref_bg_denoise(f, sigma2, eps, mu_s, sigma_s2):
+    """Bernoulli-Gauss conditional-mean denoiser η(f) and derivative η′(f).
+
+    Matches `rust/src/se/prior.rs` (`BgChannel::denoise{,_deriv}`): the
+    posterior slab weight is computed through a logit for f32 stability.
+
+    Returns ``(eta, eta_prime)``, both shaped like ``f``.
+    """
+    f = jnp.asarray(f)
+    slab_var = sigma_s2 + sigma2
+    logit = (
+        jnp.log(eps)
+        - jnp.log1p(-eps)
+        + _log_normal_pdf(f, mu_s, slab_var)
+        - _log_normal_pdf(f, 0.0, sigma2)
+    )
+    w = 1.0 / (1.0 + jnp.exp(-logit))
+    m = (f * sigma_s2 + mu_s * sigma2) / slab_var
+    dm = sigma_s2 / slab_var
+    dlog = f / sigma2 - (f - mu_s) / slab_var
+    eta = w * m
+    eta_prime = w * (1.0 - w) * dlog * m + w * dm
+    return eta, eta_prime
+
+
+def ref_matvec(a, x):
+    """``out = A @ x``."""
+    return a @ x
+
+
+def ref_matvec_t(a, z):
+    """``out = Aᵀ @ z``."""
+    return a.T @ z
+
+
+def ref_lc_step(a, y, x, z_prev, coef, inv_p):
+    """Worker local computation (paper §3.1):
+
+    ``z = y − A x + coef·z_prev``; ``f = inv_p·x + Aᵀ z``; ``zn = ‖z‖²``.
+    """
+    z = y - a @ x + coef * z_prev
+    f = inv_p * x + a.T @ z
+    zn = jnp.sum(z * z)
+    return z, f, zn
+
+
+def ref_gc_step(f, sigma2, eps, mu_s, sigma_s2):
+    """Fusion global computation: ``x_next = η(f)``, ``mean(η′(f))``."""
+    eta, eta_p = ref_bg_denoise(f, sigma2, eps, mu_s, sigma_s2)
+    return eta, jnp.mean(eta_p)

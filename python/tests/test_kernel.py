@@ -1,0 +1,126 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle (`ref.py`).
+
+Hypothesis sweeps shapes and parameters; `assert_allclose` against the
+reference is THE correctness signal for the kernels that end up inside the
+AOT artifacts.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.denoiser import bg_denoise
+from compile.kernels.lc import matvec, matvec_t
+from compile.kernels.ref import (
+    ref_bg_denoise,
+    ref_lc_step,
+    ref_matvec,
+    ref_matvec_t,
+)
+
+SETTINGS = dict(max_examples=30, deadline=None)
+
+
+def rand(rng, *shape):
+    return rng.normal(size=shape).astype(np.float32)
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 5000),
+    sigma2=st.floats(1e-4, 10.0),
+    eps=st.floats(0.005, 0.6),
+    mu_s=st.floats(-1.0, 1.0),
+    sigma_s2=st.floats(0.05, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_denoiser_matches_ref(n, sigma2, eps, mu_s, sigma_s2, seed):
+    rng = np.random.default_rng(seed)
+    scale = np.sqrt(sigma_s2 + sigma2) * 3
+    f = (rng.normal(size=n) * scale).astype(np.float32)
+    eta, deta = bg_denoise(f, sigma2, eps, mu_s, sigma_s2)
+    reta, rdeta = ref_bg_denoise(f, sigma2, eps, mu_s, sigma_s2)
+    assert_allclose(np.asarray(eta), np.asarray(reta), atol=1e-5, rtol=1e-5)
+    assert_allclose(np.asarray(deta), np.asarray(rdeta), atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 130),
+    n=st.integers(1, 3000),
+    block=st.sampled_from([64, 512, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_matches_ref(m, n, block, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, n)
+    x = rand(rng, n)
+    got = np.asarray(matvec(a, x, block_n=block))
+    want = np.asarray(ref_matvec(a, x))
+    assert_allclose(got, want, atol=1e-3 * np.sqrt(n), rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 130),
+    n=st.integers(1, 3000),
+    block=st.sampled_from([64, 512, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matvec_t_matches_ref(m, n, block, seed):
+    rng = np.random.default_rng(seed)
+    a = rand(rng, m, n)
+    z = rand(rng, m)
+    got = np.asarray(matvec_t(a, z, block_n=block))
+    want = np.asarray(ref_matvec_t(a, z))
+    assert_allclose(got, want, atol=1e-3 * np.sqrt(m), rtol=1e-4)
+
+
+def test_denoiser_zero_input_maps_near_zero():
+    # η(0) = 0 for μ_s = 0 (the spike dominates at f = 0).
+    eta, _ = bg_denoise(np.zeros(16, np.float32), 0.05, 0.1, 0.0, 1.0)
+    assert np.abs(np.asarray(eta)).max() < 1e-6
+
+
+def test_denoiser_tail_slope():
+    # For |f| ≫ σ the slab posterior → 1 and η(f) ≈ f·σs²/(σs²+σ²).
+    f = np.array([50.0, -50.0], np.float32)
+    eta, deta = bg_denoise(f, 0.1, 0.05, 0.0, 1.0)
+    shrink = 1.0 / 1.1
+    assert_allclose(np.asarray(eta), f * shrink, rtol=1e-3)
+    assert_allclose(np.asarray(deta), [shrink, shrink], rtol=1e-2)
+
+
+def test_matvec_extreme_blocks():
+    # Block larger than n, and n not a multiple of block.
+    rng = np.random.default_rng(3)
+    a = rand(rng, 7, 10)
+    x = rand(rng, 10)
+    assert_allclose(
+        np.asarray(matvec(a, x, block_n=64)), a @ x, atol=1e-5, rtol=1e-5
+    )
+
+
+@settings(**SETTINGS)
+@given(
+    mp=st.integers(1, 60),
+    n=st.integers(1, 1500),
+    coef=st.floats(0.0, 2.0),
+    inv_p=st.floats(0.01, 1.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lc_composition_matches_ref(mp, n, coef, inv_p, seed):
+    # The exact composition the AOT artifact contains.
+    from compile import model
+
+    rng = np.random.default_rng(seed)
+    a = rand(rng, mp, n)
+    y = rand(rng, mp)
+    x = rand(rng, n)
+    z_prev = rand(rng, mp)
+    z, f, zn = model.lc_step(a, y, x, z_prev, np.float32(coef), np.float32(inv_p))
+    rz, rf, rzn = ref_lc_step(a, y, x, z_prev, coef, inv_p)
+    assert_allclose(np.asarray(z), np.asarray(rz), atol=1e-3, rtol=1e-4)
+    assert_allclose(np.asarray(f), np.asarray(rf), atol=2e-3 * np.sqrt(mp), rtol=1e-3)
+    assert_allclose(float(zn), float(rzn), rtol=1e-4)

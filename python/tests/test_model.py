@@ -1,0 +1,86 @@
+"""Layer-2 tests: the jitted model functions and the AOT lowering path.
+
+Checks (i) model semantics vs the reference, (ii) that the HLO-text
+lowering used by `aot.py` succeeds for representative shapes and contains
+no Mosaic custom-calls (which the CPU PJRT client cannot execute), and
+(iii) manifest generation/idempotence.
+"""
+
+import os
+
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import aot, model
+from compile.kernels.ref import ref_gc_step
+
+
+def test_gc_step_matches_ref():
+    rng = np.random.default_rng(1)
+    f = (rng.normal(size=400) * 0.6).astype(np.float32)
+    x, dmean = model.gc_step(f, 0.03, 0.05, 0.0, 1.0)
+    rx, rdmean = ref_gc_step(f, 0.03, 0.05, 0.0, 1.0)
+    assert_allclose(np.asarray(x), np.asarray(rx), atol=1e-5, rtol=1e-5)
+    assert_allclose(float(dmean), float(rdmean), rtol=1e-4)
+
+
+def test_gc_step_denoises_toward_sparsity():
+    # Small inputs collapse to ~0; the output is sparser than the input.
+    rng = np.random.default_rng(2)
+    f = (rng.normal(size=1000) * 0.1).astype(np.float32)
+    x, _ = model.gc_step(f, 0.01, 0.05, 0.0, 1.0)
+    x = np.asarray(x)
+    assert np.mean(np.abs(x) < 1e-3) > 0.5
+    assert np.sum(x * x) < np.sum(f * f)
+
+
+@pytest.mark.parametrize("n,mp", [(64, 8), (600, 30)])
+def test_lc_lowering_produces_clean_hlo(n, mp):
+    text = aot.lower_lc(n, mp)
+    assert "HloModule" in text
+    # interpret=True must not leave TPU-only custom calls behind.
+    assert "mosaic" not in text.lower()
+    assert "custom-call" not in text.lower() or "topk" in text.lower()
+
+
+def test_gc_lowering_produces_clean_hlo():
+    text = aot.lower_gc(128)
+    assert "HloModule" in text
+    assert "mosaic" not in text.lower()
+
+
+def test_manifest_text_roundtrips_with_rust_parser_format():
+    text = aot.manifest_text(10_000, 100)
+    # The exact keys rust/src/runtime reads.
+    assert "[shapes]" in text and "[files]" in text
+    assert "n = 10000" in text and "mp = 100" in text
+    assert 'lc = "lc.hlo.txt"' in text and 'gc = "gc.hlo.txt"' in text
+
+
+def test_aot_idempotent(tmp_path):
+    import subprocess
+    import sys
+
+    out = tmp_path / "arts"
+    env = dict(os.environ)
+    cmd = [
+        sys.executable,
+        "-m",
+        "compile.aot",
+        "--out-dir",
+        str(out),
+        "--n",
+        "64",
+        "--mp",
+        "8",
+    ]
+    cwd = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r1 = subprocess.run(cmd, cwd=cwd, env=env, capture_output=True, text=True)
+    assert r1.returncode == 0, r1.stderr
+    assert "wrote lc.hlo.txt" in r1.stdout
+    mtime = (out / "lc.hlo.txt").stat().st_mtime_ns
+    r2 = subprocess.run(cmd, cwd=cwd, env=env, capture_output=True, text=True)
+    assert r2.returncode == 0, r2.stderr
+    assert "up to date" in r2.stdout
+    assert (out / "lc.hlo.txt").stat().st_mtime_ns == mtime

@@ -1,0 +1,264 @@
+//! DP-MP-AMP: optimal per-iteration coding-rate allocation by dynamic
+//! programming (paper §3.4, eqs. 9–12).
+//!
+//! Given a total budget `R` (bits/element across all `T` iterations) and a
+//! rate resolution `ΔR`, the allocator builds the `S×T` table `Σ` where
+//! `Σ[s][t]` is the minimal `σ²_{t,D}` achievable when `R^{(s)} = s·ΔR`
+//! bits have been spent in the first `t` iterations (eq. 11, with eq. 12 as
+//! the first column), plus a backpointer table to recover the allocation.
+//! The per-step map `f₁(σ², R_t)` composes the RD inverse (rate → σ_Q² for
+//! the iteration-t uplink source) with the quantization-aware SE step
+//! (eq. 8); both are monotone, which is what makes the recursion valid.
+
+use crate::error::{Error, Result};
+use crate::rd::RdCache;
+use crate::se::table::MmseTable;
+use crate::se::StateEvolution;
+
+/// Result of a DP allocation.
+#[derive(Debug, Clone)]
+pub struct DpResult {
+    /// Per-iteration rates `R_t` (bits/element), length T, summing to R.
+    pub rates: Vec<f64>,
+    /// Predicted `σ²_{t,D}` trajectory (length T+1, exact SE along `rates`).
+    pub sigma_d2: Vec<f64>,
+    /// Per-iteration per-worker quantization MSE targets σ_Q².
+    pub sigma_q2: Vec<f64>,
+    /// Table dimensions (S, T).
+    pub dims: (usize, usize),
+    /// Optimal final `σ²_{T,D}` from the table (table-precision SE).
+    pub table_final_sigma_d2: f64,
+}
+
+/// DP-MP-AMP allocator.
+pub struct DpAllocator<'a> {
+    se: &'a StateEvolution,
+    p_workers: usize,
+    cache: &'a RdCache,
+    mmse: MmseTable,
+}
+
+impl<'a> DpAllocator<'a> {
+    /// Build (precomputes the MMSE interpolation table).
+    pub fn new(se: &'a StateEvolution, p_workers: usize, cache: &'a RdCache) -> Result<Self> {
+        let sigma0 = se.sigma0_sq();
+        // Effective noise range: lower end below the centralized fixed
+        // point, upper end σ_0² plus the worst-case quantization noise
+        // (zero-rate: P·Var(F^p) = ε σ_s²/P + σ²).
+        let fp = se.fixed_point(1e-10, 400);
+        let worst_q = se.channel.prior.eps * se.channel.prior.sigma_s2 / p_workers as f64
+            + sigma0;
+        let lo = (fp.min(se.sigma_e2) * 0.5).max(1e-12);
+        let hi = (sigma0 + worst_q) * 1.1;
+        let mmse = MmseTable::build(&se.channel, lo, hi, 768)?;
+        Ok(DpAllocator { se, p_workers, cache, mmse })
+    }
+
+    /// One step `f₁(σ², R)`: RD-optimal σ_Q² at rate R, then eq. 8.
+    #[inline]
+    fn f1(&self, sigma2: f64, rate: f64) -> f64 {
+        let sigma_q2 = self.cache.mse_for_rate(sigma2, rate);
+        let eff = sigma2 + self.p_workers as f64 * sigma_q2;
+        self.se.sigma_e2 + self.mmse.mmse(eff) / self.se.kappa
+    }
+
+    /// Exact (non-table) version of `f₁`, used to report the final
+    /// trajectory at full precision.
+    fn f1_exact(&self, sigma2: f64, rate: f64) -> (f64, f64) {
+        let sigma_q2 = self.cache.mse_for_rate(sigma2, rate);
+        let next = self.se.step_quantized(sigma2, self.p_workers as f64 * sigma_q2);
+        (next, sigma_q2)
+    }
+
+    /// Solve for `t_iters` iterations with budget `total_rate` at
+    /// resolution `delta_r`.
+    pub fn solve(&self, t_iters: usize, total_rate: f64, delta_r: f64) -> Result<DpResult> {
+        if t_iters == 0 {
+            return Err(Error::Config("DP needs at least one iteration".into()));
+        }
+        if total_rate <= 0.0 || delta_r <= 0.0 {
+            return Err(Error::Config("DP rates must be positive".into()));
+        }
+        let s_count = (total_rate / delta_r).round() as usize + 1;
+        if s_count < 2 || s_count > 100_000 {
+            return Err(Error::Config(format!("bad DP grid size S={s_count}")));
+        }
+        let sigma0 = self.se.sigma0_sq();
+        let threads = crate::config::num_threads_default();
+
+        // Column t=0 (eq. 12): spend s·ΔR in the first iteration.
+        let mut prev: Vec<f64> = (0..s_count)
+            .map(|s| self.f1(sigma0, s as f64 * delta_r))
+            .collect();
+        // Backpointers: bp[t][s] = r index of the *previous* column.
+        let mut bp: Vec<Vec<u32>> = Vec::with_capacity(t_iters);
+        bp.push((0..s_count as u32).collect()); // t=0: all budget in iter 0
+
+        for _t in 1..t_iters {
+            let mut cur = vec![f64::INFINITY; s_count];
+            let mut bpt = vec![0u32; s_count];
+            let prev_ref = &prev;
+            std::thread::scope(|scope| {
+                let chunk = s_count.div_ceil(threads);
+                let mut cur_slices: Vec<&mut [f64]> = cur.chunks_mut(chunk).collect();
+                let mut bp_slices: Vec<&mut [u32]> = bpt.chunks_mut(chunk).collect();
+                for ti in (0..cur_slices.len()).rev() {
+                    let cur_chunk = cur_slices.pop().unwrap();
+                    let bp_chunk = bp_slices.pop().unwrap();
+                    let s0 = ti * chunk;
+                    scope.spawn(move || {
+                        for (off, (c, b)) in
+                            cur_chunk.iter_mut().zip(bp_chunk.iter_mut()).enumerate()
+                        {
+                            let s = s0 + off;
+                            let mut best = f64::INFINITY;
+                            let mut best_r = 0u32;
+                            // eq. 11: min over previous spend r ≤ s.
+                            for r in 0..=s {
+                                let rate_t = (s - r) as f64 * delta_r;
+                                let v = self.f1(prev_ref[r], rate_t);
+                                if v < best {
+                                    best = v;
+                                    best_r = r as u32;
+                                }
+                            }
+                            *c = best;
+                            *b = best_r;
+                        }
+                    });
+                }
+            });
+            prev = cur;
+            bp.push(bpt);
+        }
+
+        // Recover the allocation from the backpointers, starting at full
+        // budget (monotonicity ⇒ spending everything is optimal).
+        let mut rates_rev = Vec::with_capacity(t_iters);
+        let mut s = s_count - 1;
+        for t in (1..t_iters).rev() {
+            let r = bp[t][s] as usize;
+            rates_rev.push((s - r) as f64 * delta_r);
+            s = r;
+        }
+        rates_rev.push(s as f64 * delta_r); // iteration 0 gets the rest
+        let rates: Vec<f64> = rates_rev.into_iter().rev().collect();
+        debug_assert!((rates.iter().sum::<f64>() - total_rate).abs() < 1e-9);
+
+        // Exact trajectory along the chosen allocation.
+        let mut sigma_d2 = Vec::with_capacity(t_iters + 1);
+        let mut sigma_q2 = Vec::with_capacity(t_iters);
+        let mut cur_s2 = sigma0;
+        sigma_d2.push(cur_s2);
+        for &r in &rates {
+            let (next, q2) = self.f1_exact(cur_s2, r);
+            sigma_q2.push(q2);
+            sigma_d2.push(next);
+            cur_s2 = next;
+        }
+        Ok(DpResult {
+            rates,
+            sigma_d2,
+            sigma_q2,
+            dims: (s_count, t_iters),
+            table_final_sigma_d2: prev[s_count - 1],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RdConfig;
+    use crate::signal::{sigma_e2_for_snr, BernoulliGauss};
+
+    fn setup(eps: f64, p: usize) -> (StateEvolution, RdCache) {
+        let prior = BernoulliGauss::standard(eps);
+        let kappa = 0.3;
+        let se = StateEvolution::new(prior, kappa, sigma_e2_for_snr(&prior, kappa, 20.0));
+        let fp = se.fixed_point(1e-10, 300);
+        let cfg = RdConfig { alphabet: 161, curve_points: 12, tol: 1e-5, gamma_grid: 9 };
+        let cache = RdCache::build(&prior, p, fp * 0.5, se.sigma0_sq() * 2.0, &cfg).unwrap();
+        (se, cache)
+    }
+
+    #[test]
+    fn dp_beats_uniform_allocation() {
+        let (se, cache) = setup(0.05, 30);
+        let alloc = DpAllocator::new(&se, 30, &cache).unwrap();
+        let t = 6;
+        let total = 12.0;
+        let dp = alloc.solve(t, total, 0.25).unwrap();
+        // Uniform allocation as comparison.
+        let mut s2 = se.sigma0_sq();
+        for _ in 0..t {
+            let q2 = cache.mse_for_rate(s2, total / t as f64);
+            s2 = se.step_quantized(s2, 30.0 * q2);
+        }
+        let dp_final = *dp.sigma_d2.last().unwrap();
+        assert!(
+            dp_final <= s2 * 1.02,
+            "DP {dp_final} should beat uniform {s2}"
+        );
+        assert_eq!(dp.rates.len(), t);
+        assert!((dp.rates.iter().sum::<f64>() - total).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dp_rates_nonnegative_and_final_reasonable() {
+        let (se, cache) = setup(0.05, 30);
+        let alloc = DpAllocator::new(&se, 30, &cache).unwrap();
+        let dp = alloc.solve(5, 10.0, 0.5).unwrap();
+        assert!(dp.rates.iter().all(|&r| r >= 0.0));
+        // With 2 bits/iter avg the final σ² should be well below σ_0².
+        assert!(*dp.sigma_d2.last().unwrap() < se.sigma0_sq() * 0.3);
+        // Table-precision and exact trajectories agree loosely.
+        let exact = *dp.sigma_d2.last().unwrap();
+        assert!(
+            (dp.table_final_sigma_d2 / exact - 1.0).abs() < 0.05,
+            "table {} vs exact {exact}",
+            dp.table_final_sigma_d2
+        );
+    }
+
+    #[test]
+    fn dp_rates_increase_toward_later_iterations() {
+        // The paper's Fig. 1 shows DP allocating more rate as t → T
+        // (early iterations tolerate more noise). Check the trend:
+        // the mean of the second half exceeds the mean of the first half.
+        let (se, cache) = setup(0.05, 30);
+        let alloc = DpAllocator::new(&se, 30, &cache).unwrap();
+        let t = 8;
+        let dp = alloc.solve(t, 16.0, 0.25).unwrap();
+        let first: f64 = dp.rates[..t / 2].iter().sum();
+        let second: f64 = dp.rates[t / 2..].iter().sum();
+        assert!(
+            second > first,
+            "expected increasing allocation, got {:?}",
+            dp.rates
+        );
+    }
+
+    #[test]
+    fn more_budget_never_hurts() {
+        let (se, cache) = setup(0.1, 10);
+        let alloc = DpAllocator::new(&se, 10, &cache).unwrap();
+        let a = alloc.solve(4, 4.0, 0.5).unwrap();
+        let b = alloc.solve(4, 8.0, 0.5).unwrap();
+        assert!(
+            b.sigma_d2.last().unwrap() <= &(a.sigma_d2.last().unwrap() * 1.001),
+            "more budget worse: {:?} vs {:?}",
+            b.sigma_d2.last(),
+            a.sigma_d2.last()
+        );
+    }
+
+    #[test]
+    fn invalid_args_rejected() {
+        let (se, cache) = setup(0.05, 30);
+        let alloc = DpAllocator::new(&se, 30, &cache).unwrap();
+        assert!(alloc.solve(0, 10.0, 0.1).is_err());
+        assert!(alloc.solve(5, -1.0, 0.1).is_err());
+        assert!(alloc.solve(5, 10.0, 0.0).is_err());
+    }
+}

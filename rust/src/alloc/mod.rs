@@ -1,0 +1,12 @@
+//! Coding-rate allocation across AMP iterations — the paper's two schemes:
+//! the online back-tracking heuristic ([`backtrack`], §3.3) and the
+//! dynamic-programming optimum ([`dp`], §3.4) — plus the unified
+//! per-iteration [`schedule::Directive`] interface the coordinator consumes.
+
+pub mod backtrack;
+pub mod dp;
+pub mod schedule;
+
+pub use backtrack::{BtController, BtDecision, RateModel};
+pub use dp::{DpAllocator, DpResult};
+pub use schedule::{Directive, RateController};

@@ -1,0 +1,200 @@
+//! Unified rate-schedule interface consumed by the MP-AMP session: every
+//! scheme (uncompressed / fixed / BT / DP) reduces to a per-iteration
+//! [`Directive`] telling the workers how to code `f_t^p`.
+
+use crate::alloc::backtrack::{BtController, RateModel};
+use crate::alloc::dp::{DpAllocator, DpResult};
+use crate::config::{RunConfig, ScheduleKind};
+use crate::error::Result;
+use crate::rd::RdCache;
+use crate::se::StateEvolution;
+
+/// What the workers should do with `f_t^p` this iteration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Directive {
+    /// Send raw 32-bit floats (32 bits/element on the wire).
+    Raw,
+    /// ECSQ with the given per-worker quantization MSE target.
+    QuantizeMse(f64),
+    /// ECSQ designed for the given rate (bits/element).
+    QuantizeRate(f64),
+    /// Send nothing (zero-rate iteration; fusion reconstructs zeros).
+    Skip,
+}
+
+/// A resolved rate controller for one run.
+pub enum RateController {
+    /// 32-bit float baseline.
+    Uncompressed,
+    /// Fixed rate every iteration.
+    Fixed {
+        /// Bits/element per iteration.
+        bits: f64,
+    },
+    /// BT-MP-AMP (online; decisions depend on σ̂²_{t,D}).
+    BackTrack {
+        /// The controller.
+        ratio_max: f64,
+        /// Per-iteration cap.
+        r_max: f64,
+    },
+    /// DP-MP-AMP (offline; rates precomputed).
+    Dp {
+        /// The DP solution.
+        result: DpResult,
+    },
+}
+
+impl RateController {
+    /// Resolve a config into a controller (runs the DP solver if needed).
+    pub fn from_config(
+        cfg: &RunConfig,
+        se: &StateEvolution,
+        cache: Option<&RdCache>,
+    ) -> Result<Self> {
+        Ok(match &cfg.schedule {
+            ScheduleKind::Uncompressed => RateController::Uncompressed,
+            ScheduleKind::Fixed { bits } => RateController::Fixed { bits: *bits },
+            ScheduleKind::BackTrack { ratio_max, r_max } => {
+                RateController::BackTrack { ratio_max: *ratio_max, r_max: *r_max }
+            }
+            ScheduleKind::Dp { total_rate, delta_r } => {
+                let cache = cache.ok_or_else(|| {
+                    crate::error::Error::Config("DP schedule requires an RdCache".into())
+                })?;
+                let total = total_rate.unwrap_or(2.0 * cfg.iters as f64);
+                let alloc = DpAllocator::new(se, cfg.p, cache)?;
+                let result = alloc.solve(cfg.iters, total, *delta_r)?;
+                RateController::Dp { result }
+            }
+        })
+    }
+
+    /// Directive for iteration `t` given the current σ̂²_{t,D} estimate.
+    pub fn directive(
+        &self,
+        t: usize,
+        sigma_d2_hat: f64,
+        se: &StateEvolution,
+        p_workers: usize,
+        t_iters: usize,
+        cache: Option<&RdCache>,
+    ) -> Directive {
+        match self {
+            RateController::Uncompressed => Directive::Raw,
+            RateController::Fixed { bits } => Directive::QuantizeRate(*bits),
+            RateController::BackTrack { ratio_max, r_max } => {
+                let ctl = BtController::new(se, p_workers, *ratio_max, *r_max, t_iters);
+                let d = ctl.decide(t, sigma_d2_hat, RateModel::Ecsq, cache);
+                if d.sigma_q2 <= 0.0 {
+                    Directive::QuantizeRate(*r_max)
+                } else {
+                    Directive::QuantizeMse(d.sigma_q2)
+                }
+            }
+            RateController::Dp { result } => {
+                let rate = result.rates.get(t).copied().unwrap_or(0.0);
+                if rate <= 0.0 {
+                    Directive::Skip
+                } else {
+                    // ECSQ realization of the DP's RD-optimal σ_Q² target:
+                    // quantize to the σ_Q² the DP assumed; the entropy coder
+                    // then costs ≈ rate + 0.255 bits (paper §4).
+                    Directive::QuantizeMse(
+                        result.sigma_q2.get(t).copied().unwrap_or(f64::INFINITY),
+                    )
+                }
+            }
+        }
+    }
+
+    /// Human-readable name (reports).
+    pub fn name(&self) -> &'static str {
+        match self {
+            RateController::Uncompressed => "uncompressed",
+            RateController::Fixed { .. } => "fixed",
+            RateController::BackTrack { .. } => "bt",
+            RateController::Dp { .. } => "dp",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RdConfig;
+    use crate::signal::{sigma_e2_for_snr, BernoulliGauss};
+
+    fn se_cache(eps: f64, p: usize) -> (StateEvolution, RdCache) {
+        let prior = BernoulliGauss::standard(eps);
+        let kappa = 0.3;
+        let se = StateEvolution::new(prior, kappa, sigma_e2_for_snr(&prior, kappa, 20.0));
+        let fp = se.fixed_point(1e-10, 300);
+        let cfg = RdConfig { alphabet: 161, curve_points: 12, tol: 1e-5, gamma_grid: 9 };
+        let cache = RdCache::build(&prior, p, fp * 0.5, se.sigma0_sq() * 2.0, &cfg).unwrap();
+        (se, cache)
+    }
+
+    #[test]
+    fn uncompressed_and_fixed_directives() {
+        let mut cfg = RunConfig::test_small(0.05);
+        let (se, cache) = se_cache(0.05, cfg.p);
+        cfg.schedule = ScheduleKind::Uncompressed;
+        let rc = RateController::from_config(&cfg, &se, Some(&cache)).unwrap();
+        assert_eq!(
+            rc.directive(0, se.sigma0_sq(), &se, cfg.p, cfg.iters, Some(&cache)),
+            Directive::Raw
+        );
+        cfg.schedule = ScheduleKind::Fixed { bits: 3.0 };
+        let rc = RateController::from_config(&cfg, &se, Some(&cache)).unwrap();
+        assert_eq!(
+            rc.directive(2, 0.1, &se, cfg.p, cfg.iters, Some(&cache)),
+            Directive::QuantizeRate(3.0)
+        );
+    }
+
+    #[test]
+    fn dp_controller_resolves_rates() {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.schedule = ScheduleKind::Dp { total_rate: Some(8.0), delta_r: 0.5 };
+        let (se, cache) = se_cache(0.05, cfg.p);
+        let rc = RateController::from_config(&cfg, &se, Some(&cache)).unwrap();
+        if let RateController::Dp { result } = &rc {
+            assert_eq!(result.rates.len(), cfg.iters);
+            assert!((result.rates.iter().sum::<f64>() - 8.0).abs() < 1e-9);
+        } else {
+            panic!("expected DP controller");
+        }
+        // Directives: Skip for zero-rate, QuantizeMse otherwise.
+        for t in 0..cfg.iters {
+            let d = rc.directive(t, 0.1, &se, cfg.p, cfg.iters, Some(&cache));
+            match d {
+                Directive::Skip | Directive::QuantizeMse(_) => {}
+                other => panic!("unexpected directive {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bt_controller_gives_quantize_directives() {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.schedule = ScheduleKind::BackTrack { ratio_max: 1.05, r_max: 6.0 };
+        let (se, cache) = se_cache(0.05, cfg.p);
+        let rc = RateController::from_config(&cfg, &se, Some(&cache)).unwrap();
+        let d = rc.directive(0, se.sigma0_sq(), &se, cfg.p, cfg.iters, Some(&cache));
+        match d {
+            Directive::QuantizeMse(q) => assert!(q > 0.0),
+            Directive::QuantizeRate(r) => assert!(r > 0.0),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dp_without_cache_errors() {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.schedule = ScheduleKind::Dp { total_rate: None, delta_r: 0.5 };
+        let prior = cfg.prior;
+        let se = StateEvolution::new(prior, cfg.kappa(), cfg.sigma_e2());
+        assert!(RateController::from_config(&cfg, &se, None).is_err());
+    }
+}

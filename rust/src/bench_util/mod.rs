@@ -1,0 +1,235 @@
+//! Micro-benchmark harness (the offline crate set has no `criterion`).
+//!
+//! Provides warmup + timed iterations with robust statistics (median, mean,
+//! stddev, min), throughput reporting, and a `black_box` to defeat
+//! dead-code elimination. Benches under `benches/` are plain
+//! `harness = false` binaries built on this module, so `cargo bench` works
+//! end-to-end.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+/// Re-export of `std::hint::black_box` under the criterion-style name.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std_black_box(x)
+}
+
+/// Result statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    /// Benchmark label.
+    pub name: String,
+    /// Number of timed samples.
+    pub samples: usize,
+    /// Median per-iteration time.
+    pub median: Duration,
+    /// Mean per-iteration time.
+    pub mean: Duration,
+    /// Standard deviation.
+    pub stddev: Duration,
+    /// Fastest sample.
+    pub min: Duration,
+    /// Optional element count for throughput lines.
+    pub elements: Option<u64>,
+}
+
+impl BenchStats {
+    /// Elements/second based on the median, if `elements` was set.
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements.map(|e| e as f64 / self.median.as_secs_f64())
+    }
+
+    /// One human-readable summary row.
+    pub fn row(&self) -> String {
+        let tput = match self.throughput() {
+            Some(t) if t >= 1e9 => format!("  {:>8.2} Gelem/s", t / 1e9),
+            Some(t) if t >= 1e6 => format!("  {:>8.2} Melem/s", t / 1e6),
+            Some(t) if t >= 1e3 => format!("  {:>8.2} Kelem/s", t / 1e3),
+            Some(t) => format!("  {t:>8.2} elem/s"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} median {:>12}  mean {:>12}  sd {:>10}  min {:>12}{}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mean),
+            fmt_dur(self.stddev),
+            fmt_dur(self.min),
+            tput
+        )
+    }
+}
+
+/// Format a duration with an appropriate unit.
+pub fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Benchmark runner with criterion-like ergonomics.
+pub struct Bencher {
+    /// Minimum number of timed samples.
+    pub min_samples: usize,
+    /// Maximum number of timed samples.
+    pub max_samples: usize,
+    /// Warmup budget.
+    pub warmup: Duration,
+    /// Measurement budget.
+    pub budget: Duration,
+    collected: Vec<BenchStats>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            min_samples: 10,
+            max_samples: 200,
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            collected: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    /// New default bencher.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher {
+            min_samples: 3,
+            max_samples: 10,
+            warmup: Duration::from_millis(10),
+            budget: Duration::from_millis(1500),
+            collected: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs exactly one logical iteration per call.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> BenchStats {
+        self.bench_elements(name, None, &mut f)
+    }
+
+    /// Time `f` and report throughput over `elements` per iteration.
+    pub fn bench_throughput<F: FnMut()>(
+        &mut self,
+        name: &str,
+        elements: u64,
+        mut f: F,
+    ) -> BenchStats {
+        self.bench_elements(name, Some(elements), &mut f)
+    }
+
+    fn bench_elements(
+        &mut self,
+        name: &str,
+        elements: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> BenchStats {
+        // Warmup.
+        let warm_start = Instant::now();
+        while warm_start.elapsed() < self.warmup {
+            f();
+        }
+        // Timed samples.
+        let mut samples: Vec<Duration> = Vec::with_capacity(self.min_samples);
+        let start = Instant::now();
+        while samples.len() < self.min_samples
+            || (start.elapsed() < self.budget && samples.len() < self.max_samples)
+        {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let n = samples.len();
+        let median = samples[n / 2];
+        let mean_ns = samples.iter().map(|d| d.as_nanos() as f64).sum::<f64>() / n as f64;
+        let var_ns = samples
+            .iter()
+            .map(|d| {
+                let x = d.as_nanos() as f64 - mean_ns;
+                x * x
+            })
+            .sum::<f64>()
+            / n as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            samples: n,
+            median,
+            mean: Duration::from_nanos(mean_ns as u64),
+            stddev: Duration::from_nanos(var_ns.sqrt() as u64),
+            min: samples[0],
+            elements,
+        };
+        println!("{}", stats.row());
+        self.collected.push(stats.clone());
+        stats
+    }
+
+    /// All stats collected so far.
+    pub fn results(&self) -> &[BenchStats] {
+        &self.collected
+    }
+}
+
+/// Print a section header consistent across bench binaries.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_produces_sane_stats() {
+        let mut b = Bencher {
+            min_samples: 5,
+            max_samples: 8,
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            collected: Vec::new(),
+        };
+        let s = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..10_000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert!(s.samples >= 5);
+        assert!(s.min <= s.median);
+        assert!(s.median > Duration::ZERO);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let mut b = Bencher::quick();
+        let s = b.bench_throughput("noop-1k", 1000, || {
+            black_box(());
+        });
+        assert!(s.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn fmt_dur_units() {
+        assert!(fmt_dur(Duration::from_nanos(500)).contains("ns"));
+        assert!(fmt_dur(Duration::from_micros(5)).contains("µs"));
+        assert!(fmt_dur(Duration::from_millis(5)).contains("ms"));
+        assert!(fmt_dur(Duration::from_secs(5)).contains(" s"));
+    }
+}

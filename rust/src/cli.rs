@@ -1,0 +1,174 @@
+//! Tiny CLI argument parser (no `clap` in the offline crate set).
+//!
+//! Grammar: `mpamp <subcommand> [--key value | --key=value | --flag] ...`
+//! Unrecognized `--key value` pairs whose key contains a `.` or matches a
+//! config field are treated as config overrides (`config::apply_overrides`).
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Switches that never take a value (`--quiet` etc.). Anything else given
+/// as `--key value` is an option; use `--key=value` to force a value that
+/// looks like a flag.
+pub const KNOWN_FLAGS: &[&str] =
+    &["quiet", "verbose", "json", "help", "check", "no-coding", "keep-going"];
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// First positional token (subcommand).
+    pub command: String,
+    /// Remaining positionals.
+    pub positional: Vec<String>,
+    /// `--key value` options, in order of appearance.
+    pub options: Vec<(String, String)>,
+    /// Bare `--flag` switches.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I) -> Result<Args> {
+        let mut it = tokens.into_iter().peekable();
+        let mut args = Args::default();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    return Err(Error::Config("bare '--' is not supported".into()));
+                }
+                if let Some(eq) = body.find('=') {
+                    args.options.push((body[..eq].to_string(), body[eq + 1..].to_string()));
+                } else if KNOWN_FLAGS.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let val = it.next().unwrap();
+                    args.options.push((body.to_string(), val));
+                } else {
+                    args.flags.push(body.to_string());
+                }
+            } else if args.command.is_empty() {
+                args.command = tok;
+            } else {
+                args.positional.push(tok);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Last value of option `key`, if given.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.iter().rev().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Whether `--flag` was passed.
+    pub fn has_flag(&self, flag: &str) -> bool {
+        self.flags.iter().any(|f| f == flag)
+    }
+
+    /// Option parsed as `T`, with an error naming the key on failure.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::Config(format!("cannot parse --{key} value '{v}'"))),
+        }
+    }
+
+    /// All options except the listed reserved keys, as config overrides.
+    pub fn config_overrides(&self, reserved: &[&str]) -> Vec<(String, String)> {
+        self.options
+            .iter()
+            .filter(|(k, _)| !reserved.contains(&k.as_str()))
+            .cloned()
+            .collect()
+    }
+
+    /// Options as a map (last writer wins) — for quick lookups.
+    pub fn option_map(&self) -> BTreeMap<String, String> {
+        self.options.iter().cloned().collect()
+    }
+}
+
+/// Render the top-level usage string.
+pub fn usage() -> &'static str {
+    "mpamp — Multi-Processor AMP with Lossy Compression (Han et al., 2016)
+
+USAGE:
+    mpamp <COMMAND> [OPTIONS]
+
+COMMANDS:
+    run         Run one MP-AMP session and print a per-iteration report
+    centralized Run the centralized AMP baseline
+    se          Print the centralized state-evolution trajectory
+    dp          Compute the DP-MP-AMP rate allocation offline
+    bt          Preview the BT-MP-AMP rate schedule (SE-driven, no data)
+    rd          Print a rate-distortion curve for the scalar channel
+    artifacts   Check AOT artifact availability for the XLA engine
+    help        Show this help
+
+COMMON OPTIONS:
+    --config <file>          Load a TOML run config
+    --<key> <value>          Override any config key (e.g. --p 30,
+                             --prior.eps 0.05, --schedule.kind dp)
+    --out <file>             Write a CSV/JSON report to <file>
+    --quiet                  Suppress the per-iteration table
+
+EXAMPLES:
+    mpamp run --prior.eps 0.05 --schedule.kind bt
+    mpamp run --config configs/paper_eps005.toml --schedule.kind dp
+    mpamp dp --prior.eps 0.03 --schedule.total_rate 16
+"
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags() {
+        let a = parse("run --p 30 --schedule.kind=dp --quiet extra");
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("p"), Some("30"));
+        assert_eq!(a.get("schedule.kind"), Some("dp"));
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn last_option_wins() {
+        let a = parse("run --p 10 --p 20");
+        assert_eq!(a.get("p"), Some("20"));
+    }
+
+    #[test]
+    fn get_parsed_errors_nicely() {
+        let a = parse("run --p abc");
+        let e = a.get_parsed::<usize>("p").unwrap_err();
+        assert!(e.to_string().contains("--p"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --quiet --verbose");
+        assert!(a.has_flag("quiet") && a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn config_overrides_excludes_reserved() {
+        let a = parse("run --config c.toml --p 5 --out o.csv");
+        let ov = a.config_overrides(&["config", "out"]);
+        assert_eq!(ov, vec![("p".to_string(), "5".to_string())]);
+    }
+}

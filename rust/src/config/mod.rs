@@ -1,0 +1,524 @@
+//! Typed run configuration + loading from TOML-subset files and CLI
+//! overrides. This is the single source of truth for every experiment knob.
+
+pub mod toml;
+
+use crate::error::{Error, Result};
+use crate::signal::BernoulliGauss;
+use toml::{parse_value, Table, Value};
+
+/// Rate-allocation scheme for the uplink.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ScheduleKind {
+    /// No compression: 32-bit floats on the wire (the paper's baseline).
+    Uncompressed,
+    /// Fixed ECSQ rate (bits/element) every iteration.
+    Fixed {
+        /// Bits per element per iteration.
+        bits: f64,
+    },
+    /// BT-MP-AMP: online back-tracking (paper §3.3).
+    BackTrack {
+        /// Allowed ratio `σ²_{t+1,D} / σ²_{t+1,C}` (paper: "some constant").
+        ratio_max: f64,
+        /// Per-iteration rate cap in bits/element (paper: "some threshold").
+        r_max: f64,
+    },
+    /// DP-MP-AMP: offline dynamic-programming allocation (paper §3.4).
+    Dp {
+        /// Total budget R in bits/element; `None` → the paper's `R = 2T`.
+        total_rate: Option<f64>,
+        /// Bit-rate resolution ΔR (paper: 0.1).
+        delta_r: f64,
+    },
+}
+
+/// Entropy codec used on the wire.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CodecKind {
+    /// No actual coding — account analytic `H_Q` bits (paper's accounting).
+    Analytic,
+    /// Static range coder over the model pmf (real bits on the wire).
+    Range,
+    /// Canonical Huffman (real bits; integer-bit overhead vs `H_Q`).
+    Huffman,
+}
+
+/// Which compute engine evaluates the LC/GC steps.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// Portable pure-Rust engine.
+    Rust,
+    /// XLA/PJRT engine running AOT-compiled JAX/Pallas artifacts.
+    Xla,
+}
+
+/// Transport between workers and the fusion center.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// In-process channels (byte-metered).
+    InProc,
+    /// TCP loopback sockets (byte-metered at the socket layer).
+    Tcp,
+}
+
+/// Rate-distortion substrate tuning.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RdConfig {
+    /// Source-alphabet discretization size for Blahut–Arimoto.
+    pub alphabet: usize,
+    /// Number of distortion points per RD curve.
+    pub curve_points: usize,
+    /// BA convergence tolerance (bits).
+    pub tol: f64,
+    /// Number of γ grid points for the curve cache.
+    pub gamma_grid: usize,
+}
+
+impl Default for RdConfig {
+    fn default() -> Self {
+        RdConfig { alphabet: 513, curve_points: 48, tol: 1e-4, gamma_grid: 33 }
+    }
+}
+
+/// Full configuration of one MP-AMP run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    /// Signal length N.
+    pub n: usize,
+    /// Measurement count M.
+    pub m: usize,
+    /// Number of worker processors P.
+    pub p: usize,
+    /// Source prior.
+    pub prior: BernoulliGauss,
+    /// Measurement SNR in dB.
+    pub snr_db: f64,
+    /// AMP iteration count T (0 → auto from SE steady state).
+    pub iters: usize,
+    /// RNG seed.
+    pub seed: u64,
+    /// Worker-side compute threads for the pure-Rust engine.
+    pub threads: usize,
+    /// Rate-allocation scheme.
+    pub schedule: ScheduleKind,
+    /// Wire codec.
+    pub codec: CodecKind,
+    /// Compute engine.
+    pub engine: EngineKind,
+    /// Directory holding AOT artifacts (XLA engine).
+    pub artifact_dir: String,
+    /// Transport kind.
+    pub transport: TransportKind,
+    /// RD substrate tuning.
+    pub rd: RdConfig,
+}
+
+/// The paper's steady-state iteration counts per sparsity (Fig. 1 caption).
+pub fn paper_iters(eps: f64) -> usize {
+    if eps <= 0.035 {
+        8
+    } else if eps <= 0.075 {
+        10
+    } else {
+        20
+    }
+}
+
+impl RunConfig {
+    /// The paper's evaluation setup for a given sparsity ε:
+    /// N=10 000, M=3 000, P=30, SNR=20 dB, μ_s=0, σ_s=1, BT schedule.
+    pub fn paper_default(eps: f64) -> Self {
+        RunConfig {
+            n: 10_000,
+            m: 3_000,
+            p: 30,
+            prior: BernoulliGauss::standard(eps),
+            snr_db: 20.0,
+            iters: paper_iters(eps),
+            seed: 0x5EED,
+            threads: num_threads_default(),
+            schedule: ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 },
+            codec: CodecKind::Range,
+            engine: EngineKind::Rust,
+            artifact_dir: "artifacts".into(),
+            transport: TransportKind::InProc,
+            rd: RdConfig::default(),
+        }
+    }
+
+    /// A small config for fast tests (N=600, M=180, P=6).
+    pub fn test_small(eps: f64) -> Self {
+        let mut c = Self::paper_default(eps);
+        c.n = 600;
+        c.m = 180;
+        c.p = 6;
+        c.iters = 6;
+        c.threads = 2;
+        c
+    }
+
+    /// κ = M/N.
+    pub fn kappa(&self) -> f64 {
+        self.m as f64 / self.n as f64
+    }
+
+    /// σ_e² implied by the target SNR.
+    pub fn sigma_e2(&self) -> f64 {
+        crate::signal::sigma_e2_for_snr(&self.prior, self.kappa(), self.snr_db)
+    }
+
+    /// Validate invariants the coordinator relies on.
+    pub fn validate(&self) -> Result<()> {
+        self.prior.validate()?;
+        if self.n == 0 || self.m == 0 {
+            return Err(Error::Config("N and M must be positive".into()));
+        }
+        if self.p == 0 || self.m % self.p != 0 {
+            return Err(Error::Config(format!(
+                "P={} must be positive and divide M={}",
+                self.p, self.m
+            )));
+        }
+        match &self.schedule {
+            ScheduleKind::Fixed { bits } if *bits <= 0.0 => {
+                return Err(Error::Config("fixed rate must be > 0".into()))
+            }
+            ScheduleKind::BackTrack { ratio_max, r_max } => {
+                if *ratio_max <= 1.0 {
+                    return Err(Error::Config("ratio_max must exceed 1".into()));
+                }
+                if *r_max <= 0.0 {
+                    return Err(Error::Config("r_max must be > 0".into()));
+                }
+            }
+            ScheduleKind::Dp { total_rate, delta_r } => {
+                if *delta_r <= 0.0 {
+                    return Err(Error::Config("delta_r must be > 0".into()));
+                }
+                if let Some(r) = total_rate {
+                    if *r <= 0.0 {
+                        return Err(Error::Config("total_rate must be > 0".into()));
+                    }
+                }
+            }
+            _ => {}
+        }
+        Ok(())
+    }
+
+    /// Build from a parsed table (missing keys keep `paper_default(0.05)`
+    /// values — configs only need to state what they change).
+    pub fn from_table(t: &Table) -> Result<Self> {
+        let mut c = RunConfig::paper_default(0.05);
+        // Parse prior first: iters default depends on eps.
+        if let Some(v) = t.get("prior.eps") {
+            c.prior.eps = req_f64(v, "prior.eps")?;
+            c.iters = paper_iters(c.prior.eps);
+        }
+        if let Some(v) = t.get("prior.mu_s") {
+            c.prior.mu_s = req_f64(v, "prior.mu_s")?;
+        }
+        if let Some(v) = t.get("prior.sigma_s2") {
+            c.prior.sigma_s2 = req_f64(v, "prior.sigma_s2")?;
+        }
+        if let Some(v) = t.get("n") {
+            c.n = req_usize(v, "n")?;
+        }
+        if let Some(v) = t.get("m") {
+            c.m = req_usize(v, "m")?;
+        }
+        if let Some(v) = t.get("p") {
+            c.p = req_usize(v, "p")?;
+        }
+        if let Some(v) = t.get("snr_db") {
+            c.snr_db = req_f64(v, "snr_db")?;
+        }
+        if let Some(v) = t.get("iters") {
+            c.iters = req_usize(v, "iters")?;
+        }
+        if let Some(v) = t.get("seed") {
+            c.seed = req_usize(v, "seed")? as u64;
+        }
+        if let Some(v) = t.get("threads") {
+            c.threads = req_usize(v, "threads")?;
+        }
+        if let Some(v) = t.get("artifact_dir") {
+            c.artifact_dir = req_str(v, "artifact_dir")?.to_string();
+        }
+        if let Some(v) = t.get("codec") {
+            c.codec = match req_str(v, "codec")? {
+                "analytic" => CodecKind::Analytic,
+                "range" => CodecKind::Range,
+                "huffman" => CodecKind::Huffman,
+                other => return Err(Error::Config(format!("unknown codec '{other}'"))),
+            };
+        }
+        if let Some(v) = t.get("engine") {
+            c.engine = match req_str(v, "engine")? {
+                "rust" => EngineKind::Rust,
+                "xla" => EngineKind::Xla,
+                other => return Err(Error::Config(format!("unknown engine '{other}'"))),
+            };
+        }
+        if let Some(v) = t.get("transport") {
+            c.transport = match req_str(v, "transport")? {
+                "inproc" => TransportKind::InProc,
+                "tcp" => TransportKind::Tcp,
+                other => return Err(Error::Config(format!("unknown transport '{other}'"))),
+            };
+        }
+        if let Some(v) = t.get("schedule.kind") {
+            c.schedule = match req_str(v, "schedule.kind")? {
+                "uncompressed" => ScheduleKind::Uncompressed,
+                "fixed" => ScheduleKind::Fixed {
+                    bits: t
+                        .get("schedule.bits")
+                        .map(|v| req_f64(v, "schedule.bits"))
+                        .transpose()?
+                        .unwrap_or(4.0),
+                },
+                "bt" | "backtrack" => ScheduleKind::BackTrack {
+                    ratio_max: t
+                        .get("schedule.ratio_max")
+                        .map(|v| req_f64(v, "schedule.ratio_max"))
+                        .transpose()?
+                        .unwrap_or(1.02),
+                    r_max: t
+                        .get("schedule.r_max")
+                        .map(|v| req_f64(v, "schedule.r_max"))
+                        .transpose()?
+                        .unwrap_or(6.0),
+                },
+                "dp" => ScheduleKind::Dp {
+                    total_rate: t
+                        .get("schedule.total_rate")
+                        .map(|v| req_f64(v, "schedule.total_rate"))
+                        .transpose()?,
+                    delta_r: t
+                        .get("schedule.delta_r")
+                        .map(|v| req_f64(v, "schedule.delta_r"))
+                        .transpose()?
+                        .unwrap_or(0.1),
+                },
+                other => return Err(Error::Config(format!("unknown schedule '{other}'"))),
+            };
+        }
+        if let Some(v) = t.get("rd.alphabet") {
+            c.rd.alphabet = req_usize(v, "rd.alphabet")?;
+        }
+        if let Some(v) = t.get("rd.curve_points") {
+            c.rd.curve_points = req_usize(v, "rd.curve_points")?;
+        }
+        if let Some(v) = t.get("rd.tol") {
+            c.rd.tol = req_f64(v, "rd.tol")?;
+        }
+        if let Some(v) = t.get("rd.gamma_grid") {
+            c.rd.gamma_grid = req_usize(v, "rd.gamma_grid")?;
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Load from a config file.
+    pub fn from_file(path: &str) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read '{path}': {e}")))?;
+        Self::from_table(&toml::parse(&text)?)
+    }
+
+    /// Apply `key=value` CLI overrides on top of this config.
+    pub fn apply_overrides(self, overrides: &[(String, String)]) -> Result<Self> {
+        let mut table = Table::new();
+        // Round-trip through the table-based builder: encode current state,
+        // overlay overrides, rebuild. Encoding only the overridden keys and
+        // re-parsing against `self` would drop schedule sub-keys, so we
+        // rebuild from a full table instead.
+        self.encode_into(&mut table);
+        // Overriding ε re-derives the paper's T for that sparsity unless
+        // the caller pins `iters` explicitly — otherwise the encoded base
+        // value would always win inside `from_table`.
+        let overrides_eps = overrides.iter().any(|(k, _)| k == "prior.eps");
+        let overrides_iters = overrides.iter().any(|(k, _)| k == "iters");
+        if overrides_eps && !overrides_iters {
+            table.remove("iters");
+        }
+        for (k, v) in overrides {
+            // CLI values arrive unquoted; fall back to a bare string when
+            // the literal is not a number/bool.
+            let value = parse_value(v, 0).unwrap_or_else(|_| Value::Str(v.clone()));
+            table.insert(k.clone(), value);
+        }
+        Self::from_table(&table)
+    }
+
+    /// Encode this config into a flat table (inverse of `from_table`).
+    pub fn encode_into(&self, t: &mut Table) {
+        t.insert("n".into(), Value::Int(self.n as i64));
+        t.insert("m".into(), Value::Int(self.m as i64));
+        t.insert("p".into(), Value::Int(self.p as i64));
+        t.insert("prior.eps".into(), Value::Float(self.prior.eps));
+        t.insert("prior.mu_s".into(), Value::Float(self.prior.mu_s));
+        t.insert("prior.sigma_s2".into(), Value::Float(self.prior.sigma_s2));
+        t.insert("snr_db".into(), Value::Float(self.snr_db));
+        t.insert("iters".into(), Value::Int(self.iters as i64));
+        t.insert("seed".into(), Value::Int(self.seed as i64));
+        t.insert("threads".into(), Value::Int(self.threads as i64));
+        t.insert("artifact_dir".into(), Value::Str(self.artifact_dir.clone()));
+        let codec = match self.codec {
+            CodecKind::Analytic => "analytic",
+            CodecKind::Range => "range",
+            CodecKind::Huffman => "huffman",
+        };
+        t.insert("codec".into(), Value::Str(codec.into()));
+        let engine = match self.engine {
+            EngineKind::Rust => "rust",
+            EngineKind::Xla => "xla",
+        };
+        t.insert("engine".into(), Value::Str(engine.into()));
+        let transport = match self.transport {
+            TransportKind::InProc => "inproc",
+            TransportKind::Tcp => "tcp",
+        };
+        t.insert("transport".into(), Value::Str(transport.into()));
+        match &self.schedule {
+            ScheduleKind::Uncompressed => {
+                t.insert("schedule.kind".into(), Value::Str("uncompressed".into()));
+            }
+            ScheduleKind::Fixed { bits } => {
+                t.insert("schedule.kind".into(), Value::Str("fixed".into()));
+                t.insert("schedule.bits".into(), Value::Float(*bits));
+            }
+            ScheduleKind::BackTrack { ratio_max, r_max } => {
+                t.insert("schedule.kind".into(), Value::Str("bt".into()));
+                t.insert("schedule.ratio_max".into(), Value::Float(*ratio_max));
+                t.insert("schedule.r_max".into(), Value::Float(*r_max));
+            }
+            ScheduleKind::Dp { total_rate, delta_r } => {
+                t.insert("schedule.kind".into(), Value::Str("dp".into()));
+                if let Some(r) = total_rate {
+                    t.insert("schedule.total_rate".into(), Value::Float(*r));
+                }
+                t.insert("schedule.delta_r".into(), Value::Float(*delta_r));
+            }
+        }
+        t.insert("rd.alphabet".into(), Value::Int(self.rd.alphabet as i64));
+        t.insert("rd.curve_points".into(), Value::Int(self.rd.curve_points as i64));
+        t.insert("rd.tol".into(), Value::Float(self.rd.tol));
+        t.insert("rd.gamma_grid".into(), Value::Int(self.rd.gamma_grid as i64));
+    }
+}
+
+fn req_f64(v: &Value, key: &str) -> Result<f64> {
+    v.as_f64().ok_or_else(|| Error::Config(format!("'{key}' must be a number")))
+}
+
+fn req_usize(v: &Value, key: &str) -> Result<usize> {
+    v.as_usize()
+        .ok_or_else(|| Error::Config(format!("'{key}' must be a non-negative integer")))
+}
+
+fn req_str<'v>(v: &'v Value, key: &str) -> Result<&'v str> {
+    v.as_str().ok_or_else(|| Error::Config(format!("'{key}' must be a string")))
+}
+
+/// Default worker thread count: physical parallelism, capped.
+pub fn num_threads_default() -> usize {
+    std::thread::available_parallelism().map(|n| n.get().min(16)).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_default_matches_paper() {
+        let c = RunConfig::paper_default(0.05);
+        assert_eq!((c.n, c.m, c.p, c.iters), (10_000, 3_000, 30, 10));
+        assert!((c.kappa() - 0.3).abs() < 1e-12);
+        assert!((c.snr_db - 20.0).abs() < 1e-12);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn paper_iters_per_eps() {
+        assert_eq!(paper_iters(0.03), 8);
+        assert_eq!(paper_iters(0.05), 10);
+        assert_eq!(paper_iters(0.10), 20);
+    }
+
+    #[test]
+    fn from_table_roundtrip() {
+        let c = RunConfig::paper_default(0.03);
+        let mut t = Table::new();
+        c.encode_into(&mut t);
+        let c2 = RunConfig::from_table(&t).unwrap();
+        assert_eq!(c, c2);
+    }
+
+    #[test]
+    fn from_table_dp_schedule() {
+        let t = toml::parse(
+            r#"
+            [prior]
+            eps = 0.1
+            [schedule]
+            kind = "dp"
+            total_rate = 40.0
+            delta_r = 0.1
+            "#,
+        )
+        .unwrap();
+        let c = RunConfig::from_table(&t).unwrap();
+        assert_eq!(c.iters, 20);
+        assert_eq!(
+            c.schedule,
+            ScheduleKind::Dp { total_rate: Some(40.0), delta_r: 0.1 }
+        );
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let c = RunConfig::paper_default(0.05)
+            .apply_overrides(&[
+                ("p".into(), "10".into()),
+                ("schedule.kind".into(), "fixed".into()),
+                ("schedule.bits".into(), "3.5".into()),
+            ])
+            .unwrap();
+        assert_eq!(c.p, 10);
+        assert_eq!(c.schedule, ScheduleKind::Fixed { bits: 3.5 });
+    }
+
+    #[test]
+    fn validate_rejects_bad_p() {
+        let mut c = RunConfig::paper_default(0.05);
+        c.p = 7; // does not divide 3000
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_schedule() {
+        let mut c = RunConfig::paper_default(0.05);
+        c.schedule = ScheduleKind::BackTrack { ratio_max: 0.9, r_max: 6.0 };
+        assert!(c.validate().is_err());
+        c.schedule = ScheduleKind::Fixed { bits: -1.0 };
+        assert!(c.validate().is_err());
+        c.schedule = ScheduleKind::Dp { total_rate: Some(-2.0), delta_r: 0.1 };
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn unknown_enum_values_rejected() {
+        let t = toml::parse("codec = \"lzma\"").unwrap();
+        assert!(RunConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn sigma_e2_consistency() {
+        let c = RunConfig::paper_default(0.05);
+        let rho = c.prior.second_moment() / c.kappa();
+        let snr = 10.0 * (rho / c.sigma_e2()).log10();
+        assert!((snr - 20.0).abs() < 1e-9);
+    }
+}

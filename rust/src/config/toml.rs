@@ -1,0 +1,225 @@
+//! Minimal TOML-subset parser (the vendored crate set has no `serde`/`toml`).
+//!
+//! Supported: `[section]` headers, `key = value` pairs with string
+//! (`"..."`), boolean, integer, and float values, `#` comments, blank lines.
+//! Keys inside a section are flattened to `section.key`. This intentionally
+//! covers exactly what run configs need — nested tables and arrays are not
+//! supported and produce clear errors.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    /// Quoted string.
+    Str(String),
+    /// Integer literal.
+    Int(i64),
+    /// Float literal.
+    Float(f64),
+    /// `true` / `false`.
+    Bool(bool),
+}
+
+impl Value {
+    /// As f64 (ints are widened).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Int(i) => Some(*i as f64),
+            Value::Float(f) => Some(*f),
+            _ => None,
+        }
+    }
+
+    /// As i64.
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    /// As usize (rejects negatives).
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    /// As bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// As string slice.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+/// Flat map of `section.key` → value.
+pub type Table = BTreeMap<String, Value>;
+
+/// Parse a single scalar literal.
+pub fn parse_value(raw: &str, line_no: usize) -> Result<Value> {
+    let raw = raw.trim();
+    if raw.is_empty() {
+        return Err(Error::Config(format!("line {line_no}: empty value")));
+    }
+    if let Some(stripped) = raw.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            return Err(Error::Config(format!("line {line_no}: unterminated string")));
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match raw {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if raw.starts_with('[') {
+        return Err(Error::Config(format!(
+            "line {line_no}: arrays are not supported by this config parser"
+        )));
+    }
+    if let Ok(i) = raw.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = raw.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(Error::Config(format!("line {line_no}: cannot parse value '{raw}'")))
+}
+
+/// Parse TOML-subset text into a flat table.
+pub fn parse(text: &str) -> Result<Table> {
+    let mut table = Table::new();
+    let mut section = String::new();
+    for (idx, raw_line) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        // Strip a trailing comment: the first '#' preceded by an *even*
+        // number of quotes is outside any string value.
+        let mut cut = raw_line.len();
+        let mut quotes = 0usize;
+        for (i, c) in raw_line.char_indices() {
+            match c {
+                '"' => quotes += 1,
+                '#' if quotes % 2 == 0 => {
+                    cut = i;
+                    break;
+                }
+                _ => {}
+            }
+        }
+        let line = raw_line[..cut].trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(hdr) = line.strip_prefix('[') {
+            let Some(name) = hdr.strip_suffix(']') else {
+                return Err(Error::Config(format!("line {line_no}: malformed section header")));
+            };
+            let name = name.trim();
+            if name.is_empty() || name.contains('[') {
+                return Err(Error::Config(format!("line {line_no}: bad section name '{name}'")));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let Some(eq) = line.find('=') else {
+            return Err(Error::Config(format!("line {line_no}: expected 'key = value'")));
+        };
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(Error::Config(format!("line {line_no}: empty key")));
+        }
+        let value = parse_value(&line[eq + 1..], line_no)?;
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        if table.insert(full_key.clone(), value).is_some() {
+            return Err(Error::Config(format!("line {line_no}: duplicate key '{full_key}'")));
+        }
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let t = parse(
+            r#"
+            # top comment
+            n = 10000
+            rate = 0.1
+            name = "paper"
+            verbose = true
+
+            [schedule]
+            kind = "dp"
+            total_rate = 16.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t["n"], Value::Int(10000));
+        assert_eq!(t["rate"], Value::Float(0.1));
+        assert_eq!(t["name"], Value::Str("paper".into()));
+        assert_eq!(t["verbose"], Value::Bool(true));
+        assert_eq!(t["schedule.kind"], Value::Str("dp".into()));
+        assert_eq!(t["schedule.total_rate"], Value::Float(16.0));
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        assert!(parse("a = 1\na = 2").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse("just words").is_err());
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("k = ").is_err());
+        assert!(parse("k = [1, 2]").is_err());
+        assert!(parse("k = \"unterminated").is_err());
+    }
+
+    #[test]
+    fn trailing_comments_after_string_values() {
+        let t = parse("engine = \"rust\"  # \"xla\" also works\nk = 3 # three").unwrap();
+        assert_eq!(t["engine"], Value::Str("rust".into()));
+        assert_eq!(t["k"], Value::Int(3));
+    }
+
+    #[test]
+    fn hash_inside_string_survives() {
+        let t = parse("name = \"a#b\"").unwrap();
+        assert_eq!(t["name"], Value::Str("a#b".into()));
+    }
+
+    #[test]
+    fn negative_numbers() {
+        let t = parse("a = -3\nb = -0.5").unwrap();
+        assert_eq!(t["a"].as_i64(), Some(-3));
+        assert_eq!(t["b"].as_f64(), Some(-0.5));
+        assert_eq!(t["a"].as_usize(), None);
+    }
+
+    #[test]
+    fn value_accessors() {
+        assert_eq!(Value::Int(3).as_f64(), Some(3.0));
+        assert_eq!(Value::Str("x".into()).as_f64(), None);
+        assert_eq!(Value::Bool(true).as_bool(), Some(true));
+        assert_eq!(Value::Str("s".into()).as_str(), Some("s"));
+    }
+}

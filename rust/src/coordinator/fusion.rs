@@ -1,0 +1,228 @@
+//! The fusion center: drives the iteration protocol, aggregates worker
+//! uplinks, designs the per-iteration quantizer from the rate controller's
+//! directive, denoises, and broadcasts the next estimate.
+
+use std::time::Instant;
+
+use crate::alloc::schedule::{Directive, RateController};
+use crate::config::{CodecKind, RunConfig};
+use crate::coordinator::message::{FPayload, Message, QuantSpec};
+use crate::coordinator::transport::Endpoint;
+use crate::coordinator::worker::coder_for_spec;
+use crate::engine::ComputeEngine;
+use crate::error::{Error, Result};
+use crate::metrics::IterRecord;
+use crate::quant::{EncodedBlock, UniformQuantizer};
+use crate::rd::RdCache;
+use crate::se::prior::BgChannel;
+use crate::se::StateEvolution;
+use crate::signal::Instance;
+
+/// Everything the fusion loop produces.
+#[derive(Debug, Clone)]
+pub struct FusionOutput {
+    /// Per-iteration records.
+    pub iters: Vec<IterRecord>,
+    /// Final estimate `x_T`.
+    pub final_x: Vec<f32>,
+}
+
+/// Design a [`QuantSpec`] from a directive, given the current σ̂².
+pub fn spec_for_directive(
+    directive: &Directive,
+    se: &StateEvolution,
+    p_workers: usize,
+    sigma_d2_hat: f64,
+    clip_sds: f64,
+) -> Result<QuantSpec> {
+    Ok(match directive {
+        Directive::Raw => QuantSpec::Raw,
+        Directive::Skip => QuantSpec::Skip,
+        Directive::QuantizeMse(q2) => {
+            let (wch, ws2) = se.channel.worker_channel(sigma_d2_hat, p_workers);
+            let clip = wch.clip_range(ws2, clip_sds);
+            let q = UniformQuantizer::for_mse(*q2, clip, 0.0)?;
+            QuantSpec::Ecsq {
+                delta: q.delta,
+                k_max: q.k_max as u32,
+                sigma_d2_hat,
+            }
+        }
+        Directive::QuantizeRate(rate) => {
+            let (wch, ws2) = se.channel.worker_channel(sigma_d2_hat, p_workers);
+            let q = UniformQuantizer::for_rate(&wch, ws2, *rate, clip_sds, 0.0)?;
+            QuantSpec::Ecsq {
+                delta: q.delta,
+                k_max: q.k_max as u32,
+                sigma_d2_hat,
+            }
+        }
+    })
+}
+
+/// Run the fusion protocol for `cfg.iters` iterations over the given
+/// worker endpoints. `eval` (ground truth) fills the SDR fields of the
+/// per-iteration records — it is measurement-only and never feeds back
+/// into the algorithm.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fusion(
+    cfg: &RunConfig,
+    se: &StateEvolution,
+    controller: &RateController,
+    cache: Option<&RdCache>,
+    engine: &dyn ComputeEngine,
+    endpoints: &mut [Endpoint],
+    eval: Option<&Instance>,
+) -> Result<FusionOutput> {
+    let n = cfg.n;
+    let p = cfg.p;
+    let m = cfg.m as f64;
+    debug_assert_eq!(endpoints.len(), p);
+    let mut x = vec![0f32; n];
+    let mut coef = 0.0f32;
+    let mut iters = Vec::with_capacity(cfg.iters);
+
+    for t in 0..cfg.iters {
+        let t0 = Instant::now();
+        // 1. Broadcast the step command.
+        let step = Message::StepCmd { t: t as u32, coef, x: x.clone() };
+        for ep in endpoints.iter_mut() {
+            ep.send(&step)?;
+        }
+        // 2. Collect ‖z‖² scalars → σ̂²_{t,D}.
+        let mut znorm_sum = 0.0f64;
+        for (widx, ep) in endpoints.iter_mut().enumerate() {
+            match ep.recv()? {
+                Message::ZNorm { t: rt, worker, z_norm2 } => {
+                    if rt as usize != t || worker as usize != widx {
+                        return Err(Error::Protocol(format!(
+                            "fusion: bad ZNorm (t={rt}, worker={worker}) expected \
+                             (t={t}, worker={widx})"
+                        )));
+                    }
+                    znorm_sum += z_norm2;
+                }
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "fusion: expected ZNorm, got {other:?}"
+                    )))
+                }
+            }
+        }
+        let sigma_d2_hat = znorm_sum / m;
+        // 3. Resolve the directive and broadcast the quantizer design.
+        let directive =
+            controller.directive(t, sigma_d2_hat, se, p, cfg.iters, cache);
+        let spec = spec_for_directive(&directive, se, p, sigma_d2_hat, 8.0)?;
+        let quant = Message::QuantCmd { t: t as u32, spec };
+        for ep in endpoints.iter_mut() {
+            ep.send(&quant)?;
+        }
+        // The decoder matching the workers' encoder.
+        let coder = coder_for_spec(&spec, &cfg.prior, p, cfg.codec)?;
+        let sigma_q2 = match &spec {
+            QuantSpec::Ecsq { delta, .. } => delta * delta / 12.0,
+            QuantSpec::Raw => 0.0,
+            // Zero-rate: reconstruction is 0, per-worker error = Var(F^p).
+            QuantSpec::Skip => {
+                let (wch, ws2) = se.channel.worker_channel(sigma_d2_hat, p);
+                wch.var_f(ws2)
+            }
+        };
+        // 4. Collect and fuse the f vectors.
+        let mut f_sum = vec![0f32; n];
+        let mut wire_bits = 0.0f64;
+        let mut rate_alloc = 0.0f64;
+        for (widx, ep) in endpoints.iter_mut().enumerate() {
+            let msg = ep.recv()?;
+            wire_bits += msg.f_payload_bits();
+            match msg {
+                Message::FVector { t: rt, worker, payload } => {
+                    if rt as usize != t || worker as usize != widx {
+                        return Err(Error::Protocol(format!(
+                            "fusion: bad FVector (t={rt}, worker={worker})"
+                        )));
+                    }
+                    match payload {
+                        FPayload::Raw(v) => {
+                            if v.len() != n {
+                                return Err(Error::Protocol(format!(
+                                    "fusion: raw f length {} != N {n}",
+                                    v.len()
+                                )));
+                            }
+                            // Analytic codec: account model entropy instead
+                            // of the raw float bits that moved in-process.
+                            if let (CodecKind::Analytic, Some(c)) = (cfg.codec, &coder) {
+                                wire_bits += c.entropy_bits * n as f64 - 32.0 * n as f64;
+                            }
+                            crate::linalg::axpy(1.0, &v, &mut f_sum);
+                        }
+                        FPayload::Coded { n: n_syms, bytes } => {
+                            let c = coder.as_ref().ok_or_else(|| {
+                                Error::Protocol("coded payload without ECSQ spec".into())
+                            })?;
+                            if n_syms as usize != n {
+                                return Err(Error::Protocol(format!(
+                                    "fusion: coded f length {n_syms} != N {n}"
+                                )));
+                            }
+                            let block = EncodedBlock {
+                                bytes,
+                                wire_bits: 0.0,
+                                n: n_syms as usize,
+                            };
+                            let mut v = vec![0f32; n];
+                            c.decode(&block, None, &mut v)?;
+                            crate::linalg::axpy(1.0, &v, &mut f_sum);
+                        }
+                        FPayload::Skipped => {}
+                    }
+                }
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "fusion: expected FVector, got {other:?}"
+                    )))
+                }
+            }
+        }
+        // Allocation accounting (analytic rate for the record).
+        rate_alloc += match &directive {
+            Directive::Raw => 32.0,
+            Directive::Skip => 0.0,
+            Directive::QuantizeRate(r) => *r,
+            Directive::QuantizeMse(_) => coder.as_ref().map(|c| c.entropy_bits).unwrap_or(0.0),
+        };
+        // 5. Global computation: denoise at the quantization-aware level.
+        let sigma_eff2 = sigma_d2_hat + p as f64 * sigma_q2;
+        let gc = engine.gc_step(&f_sum, sigma_eff2)?;
+        x = gc.x_next;
+        coef = (gc.eta_prime_mean / se.kappa) as f32;
+        // 6. Record.
+        let predicted_next = se.step_quantized(sigma_d2_hat, p as f64 * sigma_q2);
+        iters.push(IterRecord {
+            t,
+            sdr_db: eval.map(|inst| inst.sdr_db(&x)).unwrap_or(f64::NAN),
+            sdr_pred_db: se.sdr_db(predicted_next),
+            rate_alloc,
+            rate_wire: wire_bits / (p as f64 * n as f64),
+            sigma_q2,
+            sigma_d2_hat,
+            wall_s: t0.elapsed().as_secs_f64(),
+        });
+    }
+    for ep in endpoints.iter_mut() {
+        ep.send(&Message::Done)?;
+    }
+    Ok(FusionOutput { iters, final_x: x })
+}
+
+/// Model channel for the worker uplink at the given σ̂² (re-exported for
+/// benches and examples that need the same construction).
+pub fn worker_channel_for(
+    se: &StateEvolution,
+    sigma_d2_hat: f64,
+    p_workers: usize,
+) -> (BgChannel, f64) {
+    se.channel.worker_channel(sigma_d2_hat, p_workers)
+}

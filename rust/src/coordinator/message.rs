@@ -1,0 +1,368 @@
+//! Wire format between workers and the fusion center.
+//!
+//! Binary little-endian framing (no serde in the offline crate set):
+//! one type byte, fixed header fields, then the payload. Every message
+//! round-trips exactly (property-tested) and reports its payload bit cost
+//! for the paper's communication accounting.
+
+use byteorder::{ByteOrder, LittleEndian as LE};
+
+use crate::error::{Error, Result};
+
+/// How workers should code `f_t^p` this iteration (broadcast by fusion).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum QuantSpec {
+    /// Send raw 32-bit floats.
+    Raw,
+    /// Send nothing (zero-rate iteration).
+    Skip,
+    /// Entropy-coded scalar quantization. Workers and fusion rebuild the
+    /// identical quantizer + model pmf from these parameters (plus the
+    /// static prior/P from config) — no codebook on the wire.
+    Ecsq {
+        /// Bin width Δ_Q.
+        delta: f64,
+        /// Largest bin index (2·k_max+1 bins).
+        k_max: u32,
+        /// The σ̂²_{t,D} estimate the model pmf is built from.
+        sigma_d2_hat: f64,
+    },
+}
+
+/// The uplinked local estimate.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FPayload {
+    /// Raw floats (32 bits/element), or dequantized values under the
+    /// analytic codec (entropy-accounted, not entropy-coded).
+    Raw(Vec<f32>),
+    /// Entropy-coded symbols.
+    Coded {
+        /// Number of symbols.
+        n: u32,
+        /// Codec output bytes.
+        bytes: Vec<u8>,
+    },
+    /// Zero-rate iteration (fusion substitutes zeros).
+    Skipped,
+}
+
+/// All protocol messages.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Fusion → workers: run LC for iteration `t`.
+    StepCmd {
+        /// Iteration index.
+        t: u32,
+        /// Onsager coefficient `(1/κ)·mean(η′_{t−1})`.
+        coef: f32,
+        /// Current estimate `x_t` (raw broadcast, length N).
+        x: Vec<f32>,
+    },
+    /// Worker → fusion: `‖z_t^p‖²` for the σ̂² estimate.
+    ZNorm {
+        /// Iteration index.
+        t: u32,
+        /// Worker id.
+        worker: u32,
+        /// Squared norm of the local residual.
+        z_norm2: f64,
+    },
+    /// Fusion → workers: coding directive for `f_t^p`.
+    QuantCmd {
+        /// Iteration index.
+        t: u32,
+        /// The directive.
+        spec: QuantSpec,
+    },
+    /// Worker → fusion: the (coded) local estimate.
+    FVector {
+        /// Iteration index.
+        t: u32,
+        /// Worker id.
+        worker: u32,
+        /// Payload.
+        payload: FPayload,
+    },
+    /// Fusion → workers: shut down.
+    Done,
+}
+
+const TAG_STEP: u8 = 1;
+const TAG_ZNORM: u8 = 2;
+const TAG_QUANT: u8 = 3;
+const TAG_FVEC: u8 = 4;
+const TAG_DONE: u8 = 5;
+
+const SPEC_RAW: u8 = 0;
+const SPEC_SKIP: u8 = 1;
+const SPEC_ECSQ: u8 = 2;
+
+const PAY_RAW: u8 = 0;
+const PAY_CODED: u8 = 1;
+const PAY_SKIPPED: u8 = 2;
+
+impl Message {
+    /// Serialize to bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16);
+        match self {
+            Message::StepCmd { t, coef, x } => {
+                out.push(TAG_STEP);
+                push_u32(&mut out, *t);
+                push_f32(&mut out, *coef);
+                push_u32(&mut out, x.len() as u32);
+                let base = out.len();
+                out.resize(base + 4 * x.len(), 0);
+                LE::write_f32_into(x, &mut out[base..]);
+            }
+            Message::ZNorm { t, worker, z_norm2 } => {
+                out.push(TAG_ZNORM);
+                push_u32(&mut out, *t);
+                push_u32(&mut out, *worker);
+                push_f64(&mut out, *z_norm2);
+            }
+            Message::QuantCmd { t, spec } => {
+                out.push(TAG_QUANT);
+                push_u32(&mut out, *t);
+                match spec {
+                    QuantSpec::Raw => out.push(SPEC_RAW),
+                    QuantSpec::Skip => out.push(SPEC_SKIP),
+                    QuantSpec::Ecsq { delta, k_max, sigma_d2_hat } => {
+                        out.push(SPEC_ECSQ);
+                        push_f64(&mut out, *delta);
+                        push_u32(&mut out, *k_max);
+                        push_f64(&mut out, *sigma_d2_hat);
+                    }
+                }
+            }
+            Message::FVector { t, worker, payload } => {
+                out.push(TAG_FVEC);
+                push_u32(&mut out, *t);
+                push_u32(&mut out, *worker);
+                match payload {
+                    FPayload::Raw(v) => {
+                        out.push(PAY_RAW);
+                        push_u32(&mut out, v.len() as u32);
+                        let base = out.len();
+                        out.resize(base + 4 * v.len(), 0);
+                        LE::write_f32_into(v, &mut out[base..]);
+                    }
+                    FPayload::Coded { n, bytes } => {
+                        out.push(PAY_CODED);
+                        push_u32(&mut out, *n);
+                        push_u32(&mut out, bytes.len() as u32);
+                        out.extend_from_slice(bytes);
+                    }
+                    FPayload::Skipped => out.push(PAY_SKIPPED),
+                }
+            }
+            Message::Done => out.push(TAG_DONE),
+        }
+        out
+    }
+
+    /// Deserialize.
+    pub fn decode(buf: &[u8]) -> Result<Message> {
+        let mut c = Cursor { buf, pos: 0 };
+        let tag = c.u8()?;
+        let msg = match tag {
+            TAG_STEP => {
+                let t = c.u32()?;
+                let coef = c.f32()?;
+                let n = c.u32()? as usize;
+                let raw = c.bytes(4 * n)?;
+                let mut x = vec![0f32; n];
+                LE::read_f32_into(raw, &mut x);
+                Message::StepCmd { t, coef, x }
+            }
+            TAG_ZNORM => Message::ZNorm {
+                t: c.u32()?,
+                worker: c.u32()?,
+                z_norm2: c.f64()?,
+            },
+            TAG_QUANT => {
+                let t = c.u32()?;
+                let spec = match c.u8()? {
+                    SPEC_RAW => QuantSpec::Raw,
+                    SPEC_SKIP => QuantSpec::Skip,
+                    SPEC_ECSQ => QuantSpec::Ecsq {
+                        delta: c.f64()?,
+                        k_max: c.u32()?,
+                        sigma_d2_hat: c.f64()?,
+                    },
+                    other => {
+                        return Err(Error::Protocol(format!("bad quant spec tag {other}")))
+                    }
+                };
+                Message::QuantCmd { t, spec }
+            }
+            TAG_FVEC => {
+                let t = c.u32()?;
+                let worker = c.u32()?;
+                let payload = match c.u8()? {
+                    PAY_RAW => {
+                        let n = c.u32()? as usize;
+                        let raw = c.bytes(4 * n)?;
+                        let mut v = vec![0f32; n];
+                        LE::read_f32_into(raw, &mut v);
+                        FPayload::Raw(v)
+                    }
+                    PAY_CODED => {
+                        let n = c.u32()?;
+                        let len = c.u32()? as usize;
+                        FPayload::Coded { n, bytes: c.bytes(len)?.to_vec() }
+                    }
+                    PAY_SKIPPED => FPayload::Skipped,
+                    other => {
+                        return Err(Error::Protocol(format!("bad payload tag {other}")))
+                    }
+                };
+                Message::FVector { t, worker, payload }
+            }
+            TAG_DONE => Message::Done,
+            other => return Err(Error::Protocol(format!("unknown message tag {other}"))),
+        };
+        if c.pos != buf.len() {
+            return Err(Error::Protocol(format!(
+                "trailing bytes: consumed {} of {}",
+                c.pos,
+                buf.len()
+            )));
+        }
+        Ok(msg)
+    }
+
+    /// Payload bits of the f-vector content (the paper's uplink metric);
+    /// 0 for non-FVector messages.
+    pub fn f_payload_bits(&self) -> f64 {
+        match self {
+            Message::FVector { payload, .. } => match payload {
+                FPayload::Raw(v) => 32.0 * v.len() as f64,
+                FPayload::Coded { bytes, .. } => 8.0 * bytes.len() as f64,
+                FPayload::Skipped => 0.0,
+            },
+            _ => 0.0,
+        }
+    }
+}
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    let mut b = [0u8; 4];
+    LE::write_u32(&mut b, v);
+    out.extend_from_slice(&b);
+}
+
+fn push_f32(out: &mut Vec<u8>, v: f32) {
+    let mut b = [0u8; 4];
+    LE::write_f32(&mut b, v);
+    out.extend_from_slice(&b);
+}
+
+fn push_f64(out: &mut Vec<u8>, v: f64) {
+    let mut b = [0u8; 8];
+    LE::write_f64(&mut b, v);
+    out.extend_from_slice(&b);
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::Protocol(format!(
+                "message truncated: need {n} bytes at {}",
+                self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(LE::read_u32(self.bytes(4)?))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(LE::read_f32(self.bytes(4)?))
+    }
+
+    fn f64(&mut self) -> Result<f64> {
+        Ok(LE::read_f64(self.bytes(8)?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, Prop};
+
+    #[test]
+    fn roundtrip_all_variants() {
+        let msgs = vec![
+            Message::StepCmd { t: 3, coef: 0.25, x: vec![1.0, -2.5, 3.25] },
+            Message::ZNorm { t: 1, worker: 7, z_norm2: 123.456 },
+            Message::QuantCmd { t: 2, spec: QuantSpec::Raw },
+            Message::QuantCmd { t: 2, spec: QuantSpec::Skip },
+            Message::QuantCmd {
+                t: 9,
+                spec: QuantSpec::Ecsq { delta: 0.031, k_max: 200, sigma_d2_hat: 0.7 },
+            },
+            Message::FVector { t: 4, worker: 0, payload: FPayload::Raw(vec![0.5; 17]) },
+            Message::FVector {
+                t: 4,
+                worker: 2,
+                payload: FPayload::Coded { n: 100, bytes: vec![1, 2, 3, 255] },
+            },
+            Message::FVector { t: 5, worker: 3, payload: FPayload::Skipped },
+            Message::Done,
+        ];
+        for m in msgs {
+            let enc = m.encode();
+            let dec = Message::decode(&enc).unwrap();
+            assert_eq!(m, dec);
+        }
+    }
+
+    #[test]
+    fn roundtrip_random_stepcmds() {
+        Prop::new("StepCmd roundtrip", 50).check(|g| {
+            let n = g.usize_in(0, 500);
+            let x = g.gaussian_vec(n, 2.0);
+            let m = Message::StepCmd { t: g.u64() as u32, coef: g.f64_in(-1.0, 1.0) as f32, x };
+            let dec = Message::decode(&m.encode()).map_err(|e| e.to_string())?;
+            prop_assert(dec == m, "mismatch")
+        });
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Message::decode(&[]).is_err());
+        assert!(Message::decode(&[99]).is_err());
+        assert!(Message::decode(&[TAG_ZNORM, 1, 2]).is_err()); // truncated
+        // Trailing bytes rejected.
+        let mut enc = Message::Done.encode();
+        enc.push(0);
+        assert!(Message::decode(&enc).is_err());
+    }
+
+    #[test]
+    fn payload_bits_accounting() {
+        let raw = Message::FVector { t: 0, worker: 0, payload: FPayload::Raw(vec![0.0; 10]) };
+        assert_eq!(raw.f_payload_bits(), 320.0);
+        let coded = Message::FVector {
+            t: 0,
+            worker: 0,
+            payload: FPayload::Coded { n: 10, bytes: vec![0; 3] },
+        };
+        assert_eq!(coded.f_payload_bits(), 24.0);
+        assert_eq!(Message::Done.f_payload_bits(), 0.0);
+    }
+}

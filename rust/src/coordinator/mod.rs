@@ -1,0 +1,27 @@
+//! The MP-AMP coordinator — the paper's system contribution.
+//!
+//! * [`message`] — the wire protocol (StepCmd/ZNorm/QuantCmd/FVector/Done),
+//! * [`transport`] — byte-metered in-process + TCP duplex links,
+//! * [`worker`] — the worker processor loop (LC + quantize + encode),
+//! * [`fusion`] — the fusion-center loop (aggregate, design quantizer,
+//!   decode, denoise, broadcast),
+//! * [`session`] — end-to-end orchestration producing a [`session::RunReport`].
+//!
+//! Protocol per iteration `t` (paper §3.1–§3.3):
+//!
+//! ```text
+//! fusion ──StepCmd{t, x_t, coef}──▶ workers          (broadcast)
+//! fusion ◀──ZNorm{‖z_t^p‖²}─────── workers          (σ̂² estimate)
+//! fusion ──QuantCmd{t, Δ, K, σ̂²}──▶ workers         (quantizer design)
+//! fusion ◀──FVector{coded f_t^p}── workers          (the expensive uplink)
+//! fusion: f̃ = Σ dequant(f^p); x_{t+1} = η(f̃); loop
+//! ```
+
+pub mod fusion;
+pub mod message;
+pub mod session;
+pub mod transport;
+pub mod worker;
+
+pub use message::{FPayload, Message, QuantSpec};
+pub use session::{MpAmpSession, RunReport};

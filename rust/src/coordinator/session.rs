@@ -1,0 +1,364 @@
+//! Session orchestration: generate (or accept) a problem instance, shard it
+//! across `P` worker threads, run the fusion protocol, and produce a
+//! [`RunReport`] with per-iteration quality and exact communication costs.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::alloc::schedule::RateController;
+use crate::config::{EngineKind, RunConfig, ScheduleKind, TransportKind};
+use crate::coordinator::fusion::{run_fusion, FusionOutput};
+use crate::coordinator::transport::{inproc_pair, tcp_connect, Endpoint, TcpFusionListener};
+use crate::coordinator::worker::{run_worker, WorkerParams};
+use crate::engine::{ComputeEngine, RustEngine, WorkerData};
+use crate::error::{Error, Result};
+use crate::metrics::{ByteMeter, Csv, IterRecord, Json};
+use crate::rd::RdCache;
+use crate::se::StateEvolution;
+use crate::signal::{Instance, ProblemDims};
+use crate::util::rng::Rng;
+
+/// Result of one MP-AMP run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    /// Per-iteration records.
+    pub iters: Vec<IterRecord>,
+    /// Final estimate.
+    pub final_x: Vec<f32>,
+    /// Problem size (N, M, P).
+    pub dims: (usize, usize, usize),
+    /// Schedule name.
+    pub schedule: String,
+    /// Engine name.
+    pub engine: String,
+    /// Total raw bits that crossed the transport, uplink (incl. headers).
+    pub transport_uplink_bits: u64,
+    /// Total raw bits that crossed the transport, downlink (incl. headers).
+    pub transport_downlink_bits: u64,
+    /// Wall-clock for the whole session.
+    pub wall_s: f64,
+}
+
+impl RunReport {
+    /// Final-iteration SDR in dB.
+    pub fn final_sdr_db(&self) -> f64 {
+        self.iters.last().map(|r| r.sdr_db).unwrap_or(f64::NAN)
+    }
+
+    /// The paper's headline metric: total uplink bits per element of
+    /// `f_t^p` (sum over iterations of the measured per-element wire rate).
+    pub fn total_uplink_bits_per_element(&self) -> f64 {
+        self.iters.iter().map(|r| r.rate_wire).sum()
+    }
+
+    /// Analytic (allocated) total rate — the DP/BT budget actually used.
+    pub fn total_alloc_bits_per_element(&self) -> f64 {
+        self.iters.iter().map(|r| r.rate_alloc).sum()
+    }
+
+    /// Communication saving vs 32-bit floats (%).
+    pub fn savings_vs_float_pct(&self) -> f64 {
+        let raw = 32.0 * self.iters.len() as f64;
+        100.0 * (1.0 - self.total_uplink_bits_per_element() / raw)
+    }
+
+    /// Render the per-iteration table as CSV.
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&[
+            "t",
+            "sdr_db",
+            "sdr_pred_db",
+            "rate_alloc",
+            "rate_wire",
+            "sigma_q2",
+            "sigma_d2_hat",
+            "wall_s",
+        ]);
+        for r in &self.iters {
+            csv.push_f64(&[
+                r.t as f64,
+                r.sdr_db,
+                r.sdr_pred_db,
+                r.rate_alloc,
+                r.rate_wire,
+                r.sigma_q2,
+                r.sigma_d2_hat,
+                r.wall_s,
+            ]);
+        }
+        csv
+    }
+
+    /// Render a summary JSON object.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("n", Json::Num(self.dims.0 as f64))
+            .set("m", Json::Num(self.dims.1 as f64))
+            .set("p", Json::Num(self.dims.2 as f64))
+            .set("schedule", Json::Str(self.schedule.clone()))
+            .set("engine", Json::Str(self.engine.clone()))
+            .set("iters", Json::Num(self.iters.len() as f64))
+            .set("final_sdr_db", Json::Num(self.final_sdr_db()))
+            .set(
+                "total_bits_per_element",
+                Json::Num(self.total_uplink_bits_per_element()),
+            )
+            .set("savings_vs_float_pct", Json::Num(self.savings_vs_float_pct()))
+            .set("wall_s", Json::Num(self.wall_s))
+    }
+}
+
+/// A configured MP-AMP session.
+pub struct MpAmpSession {
+    cfg: RunConfig,
+    instance: Instance,
+    se: StateEvolution,
+    cache: Option<RdCache>,
+    engine: Arc<dyn ComputeEngine>,
+}
+
+impl MpAmpSession {
+    /// Build from a config (generates the instance from the config's seed).
+    pub fn new(cfg: RunConfig) -> Result<Self> {
+        cfg.validate()?;
+        let mut rng = Rng::new(cfg.seed);
+        let instance = Instance::generate(
+            cfg.prior,
+            ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+            &mut rng,
+        )?;
+        Self::with_instance(cfg, instance)
+    }
+
+    /// Build around an existing instance (benches reuse one instance
+    /// across schedules).
+    pub fn with_instance(cfg: RunConfig, instance: Instance) -> Result<Self> {
+        cfg.validate()?;
+        let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+        let cache = match cfg.schedule {
+            // Only the DP allocator consults the RD function at runtime.
+            ScheduleKind::Dp { .. } => {
+                let fp = se.fixed_point(1e-10, 300);
+                Some(RdCache::build(
+                    &cfg.prior,
+                    cfg.p,
+                    fp * 0.5,
+                    se.sigma0_sq() * 2.0,
+                    &cfg.rd,
+                )?)
+            }
+            _ => None,
+        };
+        let engine: Arc<dyn ComputeEngine> = match cfg.engine {
+            EngineKind::Rust => Arc::new(RustEngine::new(cfg.prior, cfg.threads)),
+            EngineKind::Xla => Arc::new(crate::runtime::XlaEngine::load(
+                &cfg.artifact_dir,
+                cfg.prior,
+                cfg.n,
+                cfg.m / cfg.p,
+                cfg.p,
+            )?),
+        };
+        Ok(MpAmpSession { cfg, instance, se, cache, engine })
+    }
+
+    /// Access the underlying instance (e.g. for external SDR checks).
+    pub fn instance(&self) -> &Instance {
+        &self.instance
+    }
+
+    /// The state-evolution engine for this session's problem.
+    pub fn se(&self) -> &StateEvolution {
+        &self.se
+    }
+
+    /// Run the full protocol; returns the report.
+    pub fn run(&self) -> Result<RunReport> {
+        let t0 = Instant::now();
+        let cfg = &self.cfg;
+        let controller = RateController::from_config(cfg, &self.se, self.cache.as_ref())?;
+        let meter = Arc::new(ByteMeter::new());
+        let shards = WorkerData::split(&self.instance.a, &self.instance.y, cfg.p);
+
+        // Build transport pairs.
+        let (mut fusion_eps, worker_eps): (Vec<Endpoint>, Vec<Endpoint>) =
+            match cfg.transport {
+                TransportKind::InProc => {
+                    let pairs: Vec<_> =
+                        (0..cfg.p).map(|_| inproc_pair(meter.clone())).collect();
+                    pairs.into_iter().unzip()
+                }
+                TransportKind::Tcp => {
+                    let listener = TcpFusionListener::bind("127.0.0.1:0", cfg.p)?;
+                    let addr = listener.addr()?;
+                    let meter2 = meter.clone();
+                    let accept =
+                        std::thread::spawn(move || listener.accept_all(meter2));
+                    let mut workers = Vec::with_capacity(cfg.p);
+                    for id in 0..cfg.p as u32 {
+                        workers.push(tcp_connect(addr, id, meter.clone())?);
+                    }
+                    let fusion = accept
+                        .join()
+                        .map_err(|_| Error::Transport("tcp accept thread panicked".into()))??;
+                    (fusion, workers)
+                }
+            };
+
+        // Spawn workers, run fusion, join.
+        let output: Result<FusionOutput> = std::thread::scope(|s| {
+            let mut handles = Vec::with_capacity(cfg.p);
+            for (id, (shard, mut ep)) in
+                shards.iter().zip(worker_eps.into_iter()).enumerate()
+            {
+                let params = WorkerParams {
+                    id: id as u32,
+                    p_workers: cfg.p,
+                    prior: cfg.prior,
+                    codec: cfg.codec,
+                };
+                let engine = self.engine.clone();
+                handles.push(s.spawn(move || {
+                    run_worker(&params, shard, engine.as_ref(), &mut ep)
+                }));
+            }
+            let out = run_fusion(
+                cfg,
+                &self.se,
+                &controller,
+                self.cache.as_ref(),
+                self.engine.as_ref(),
+                &mut fusion_eps,
+                Some(&self.instance),
+            );
+            for (id, h) in handles.into_iter().enumerate() {
+                match h.join() {
+                    Ok(Ok(iters)) => {
+                        if out.is_ok() && iters != cfg.iters {
+                            return Err(Error::Protocol(format!(
+                                "worker {id} served {iters} != {} iterations",
+                                cfg.iters
+                            )));
+                        }
+                    }
+                    Ok(Err(e)) => return Err(e),
+                    Err(_) => {
+                        return Err(Error::Transport(format!("worker {id} panicked")))
+                    }
+                }
+            }
+            out
+        });
+        let output = output?;
+        Ok(RunReport {
+            iters: output.iters,
+            final_x: output.final_x,
+            dims: (cfg.n, cfg.m, cfg.p),
+            schedule: controller.name().to_string(),
+            engine: self.engine.name().to_string(),
+            transport_uplink_bits: meter.uplink_bits(),
+            transport_downlink_bits: meter.downlink_bits(),
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::CodecKind;
+
+    fn run_with(schedule: ScheduleKind, codec: CodecKind) -> RunReport {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.schedule = schedule;
+        cfg.codec = codec;
+        MpAmpSession::new(cfg).unwrap().run().unwrap()
+    }
+
+    #[test]
+    fn uncompressed_recovers_signal() {
+        let r = run_with(ScheduleKind::Uncompressed, CodecKind::Range);
+        assert_eq!(r.iters.len(), 6);
+        assert!(
+            r.final_sdr_db() > 10.0,
+            "MP-AMP should recover at small scale: SDR={}",
+            r.final_sdr_db()
+        );
+        // Raw = 32 bits/element/iteration.
+        assert!((r.total_uplink_bits_per_element() - 32.0 * 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fixed_rate_compresses_with_small_loss() {
+        let raw = run_with(ScheduleKind::Uncompressed, CodecKind::Range);
+        let fixed = run_with(ScheduleKind::Fixed { bits: 4.0 }, CodecKind::Range);
+        // ~8x fewer bits...
+        assert!(
+            fixed.total_uplink_bits_per_element()
+                < raw.total_uplink_bits_per_element() / 5.0
+        );
+        // ...with modest SDR loss.
+        assert!(
+            fixed.final_sdr_db() > raw.final_sdr_db() - 3.0,
+            "fixed {} vs raw {}",
+            fixed.final_sdr_db(),
+            raw.final_sdr_db()
+        );
+    }
+
+    #[test]
+    fn bt_schedule_runs_and_stays_under_cap() {
+        let r = run_with(
+            ScheduleKind::BackTrack { ratio_max: 1.05, r_max: 6.0 },
+            CodecKind::Range,
+        );
+        for it in &r.iters {
+            assert!(it.rate_wire <= 7.0, "t={}: wire rate {}", it.t, it.rate_wire);
+        }
+        assert!(r.final_sdr_db() > 8.0, "SDR={}", r.final_sdr_db());
+        assert!(r.savings_vs_float_pct() > 75.0);
+    }
+
+    #[test]
+    fn codecs_agree_numerically() {
+        // Analytic / Range / Huffman all quantize identically; only the
+        // wire bits differ. Same seed ⇒ identical SDR trajectories.
+        let a = run_with(ScheduleKind::Fixed { bits: 3.0 }, CodecKind::Analytic);
+        let b = run_with(ScheduleKind::Fixed { bits: 3.0 }, CodecKind::Range);
+        let c = run_with(ScheduleKind::Fixed { bits: 3.0 }, CodecKind::Huffman);
+        for ((ra, rb), rc) in a.iters.iter().zip(&b.iters).zip(&c.iters) {
+            assert!((ra.sdr_db - rb.sdr_db).abs() < 1e-9);
+            assert!((ra.sdr_db - rc.sdr_db).abs() < 1e-9);
+        }
+        // Range ≤ Huffman (integer-length penalty), both ≈ analytic.
+        assert!(
+            b.total_uplink_bits_per_element()
+                <= c.total_uplink_bits_per_element() + 1e-9
+        );
+    }
+
+    #[test]
+    fn tcp_transport_matches_inproc() {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.schedule = ScheduleKind::Fixed { bits: 4.0 };
+        let inproc = MpAmpSession::new(cfg.clone()).unwrap().run().unwrap();
+        cfg.transport = TransportKind::Tcp;
+        let tcp = MpAmpSession::new(cfg).unwrap().run().unwrap();
+        for (a, b) in inproc.iters.iter().zip(&tcp.iters) {
+            assert!((a.sdr_db - b.sdr_db).abs() < 1e-9, "transport changed numerics");
+            assert!((a.rate_wire - b.rate_wire).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn transport_meter_counts_everything() {
+        let r = run_with(ScheduleKind::Fixed { bits: 4.0 }, CodecKind::Range);
+        // Uplink raw bytes ≥ payload bits (headers included).
+        let payload_bits: f64 = r.iters.iter().map(|it| it.rate_wire).sum::<f64>()
+            * (r.dims.0 * r.dims.2) as f64;
+        assert!(r.transport_uplink_bits as f64 >= payload_bits);
+        // Downlink dominated by P broadcasts of x per iteration.
+        let min_downlink = (r.iters.len() * r.dims.2 * r.dims.0 * 32) as u64;
+        assert!(r.transport_downlink_bits >= min_downlink);
+    }
+}

@@ -1,0 +1,173 @@
+//! The worker processor loop: owns one row block of the sensing matrix,
+//! runs the LC step on command, and uplinks `‖z‖²` scalars and the
+//! (entropy-coded) local estimate `f_t^p`.
+
+use crate::config::CodecKind;
+use crate::coordinator::message::{FPayload, Message, QuantSpec};
+use crate::coordinator::transport::Endpoint;
+use crate::engine::{ComputeEngine, WorkerData};
+use crate::error::{Error, Result};
+use crate::quant::{EcsqCoder, UniformQuantizer};
+use crate::se::prior::BgChannel;
+use crate::signal::BernoulliGauss;
+
+/// Static parameters a worker needs beyond its data shard.
+#[derive(Debug, Clone)]
+pub struct WorkerParams {
+    /// This worker's id.
+    pub id: u32,
+    /// Total number of workers P.
+    pub p_workers: usize,
+    /// Source prior (for model-pmf reconstruction).
+    pub prior: BernoulliGauss,
+    /// Wire codec.
+    pub codec: CodecKind,
+}
+
+/// Build the ECSQ coder implied by a [`QuantSpec`] (both sides call this —
+/// determinism of the model pmf is what keeps the codec in sync).
+pub fn coder_for_spec(
+    spec: &QuantSpec,
+    prior: &BernoulliGauss,
+    p_workers: usize,
+    codec: CodecKind,
+) -> Result<Option<EcsqCoder>> {
+    match spec {
+        QuantSpec::Raw | QuantSpec::Skip => Ok(None),
+        QuantSpec::Ecsq { delta, k_max, sigma_d2_hat } => {
+            let base = BgChannel::new(*prior);
+            let (wch, ws2) = base.worker_channel(*sigma_d2_hat, p_workers);
+            let q = UniformQuantizer { delta: *delta, k_max: *k_max as i32, center: 0.0 };
+            Ok(Some(EcsqCoder::new(q, &wch, ws2, codec)?))
+        }
+    }
+}
+
+/// Run the worker protocol until `Done`. Returns the number of iterations
+/// served (for tests / sanity checks).
+pub fn run_worker(
+    params: &WorkerParams,
+    data: &WorkerData,
+    engine: &dyn ComputeEngine,
+    endpoint: &mut Endpoint,
+) -> Result<usize> {
+    let mp = data.a.rows();
+    let mut z_prev = vec![0f32; mp];
+    let mut f_cur: Option<Vec<f32>> = None;
+    let mut iters = 0usize;
+    loop {
+        match endpoint.recv()? {
+            Message::StepCmd { t, coef, x } => {
+                if x.len() != data.a.cols() {
+                    return Err(Error::Protocol(format!(
+                        "worker {}: x length {} != N {}",
+                        params.id,
+                        x.len(),
+                        data.a.cols()
+                    )));
+                }
+                let out = engine.lc_step(data, &x, &z_prev, coef, params.p_workers)?;
+                z_prev = out.z;
+                endpoint.send(&Message::ZNorm {
+                    t,
+                    worker: params.id,
+                    z_norm2: out.z_norm2,
+                })?;
+                f_cur = Some(out.f_partial);
+                iters += 1;
+            }
+            Message::QuantCmd { t, spec } => {
+                let f = f_cur.take().ok_or_else(|| {
+                    Error::Protocol(format!(
+                        "worker {}: QuantCmd before StepCmd at t={t}",
+                        params.id
+                    ))
+                })?;
+                let payload = match &spec {
+                    QuantSpec::Raw => FPayload::Raw(f),
+                    QuantSpec::Skip => FPayload::Skipped,
+                    QuantSpec::Ecsq { .. } => {
+                        let coder = coder_for_spec(
+                            &spec,
+                            &params.prior,
+                            params.p_workers,
+                            params.codec,
+                        )?
+                        .expect("ECSQ spec yields a coder");
+                        let syms = coder.quantizer.quantize_block(&f);
+                        match params.codec {
+                            CodecKind::Analytic => {
+                                // Entropy-accounted, not entropy-coded: ship
+                                // the dequantized values so numerics match
+                                // the coded path exactly.
+                                let mut deq = vec![0f32; f.len()];
+                                coder.quantizer.dequantize_block(&syms, &mut deq);
+                                FPayload::Raw(deq)
+                            }
+                            CodecKind::Range | CodecKind::Huffman => {
+                                let block = coder.encode_symbols(&syms)?;
+                                FPayload::Coded {
+                                    n: block.n as u32,
+                                    bytes: block.bytes,
+                                }
+                            }
+                        }
+                    }
+                };
+                endpoint.send(&Message::FVector { t, worker: params.id, payload })?;
+            }
+            Message::Done => return Ok(iters),
+            other => {
+                return Err(Error::Protocol(format!(
+                    "worker {}: unexpected message {other:?}",
+                    params.id
+                )))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::RustEngine;
+    use crate::signal::{Instance, ProblemDims};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn coder_for_spec_deterministic_across_sides() {
+        let prior = BernoulliGauss::standard(0.05);
+        let spec = QuantSpec::Ecsq { delta: 0.01, k_max: 150, sigma_d2_hat: 0.08 };
+        let a = coder_for_spec(&spec, &prior, 30, CodecKind::Range).unwrap().unwrap();
+        let b = coder_for_spec(&spec, &prior, 30, CodecKind::Range).unwrap().unwrap();
+        assert_eq!(a.pmf, b.pmf);
+        assert_eq!(a.quantizer, b.quantizer);
+    }
+
+    #[test]
+    fn worker_rejects_quant_before_step() {
+        let prior = BernoulliGauss::standard(0.1);
+        let mut rng = Rng::new(1);
+        let inst = Instance::generate(
+            prior,
+            ProblemDims { n: 50, m: 10, sigma_e2: 1e-3 },
+            &mut rng,
+        )
+        .unwrap();
+        let data = WorkerData::split(&inst.a, &inst.y, 2).remove(0);
+        let engine = RustEngine::new(prior, 1);
+        let params =
+            WorkerParams { id: 0, p_workers: 2, prior, codec: CodecKind::Range };
+        let meter = std::sync::Arc::new(crate::metrics::ByteMeter::new());
+        let (mut fusion_ep, mut worker_ep) =
+            crate::coordinator::transport::inproc_pair(meter);
+        let h = std::thread::spawn(move || {
+            run_worker(&params, &data, &engine, &mut worker_ep)
+        });
+        fusion_ep
+            .send(&Message::QuantCmd { t: 0, spec: QuantSpec::Raw })
+            .unwrap();
+        let err = h.join().unwrap();
+        assert!(err.is_err(), "expected protocol error, got {err:?}");
+    }
+}

@@ -1,0 +1,269 @@
+//! Pluggable compute engines for the two AMP compute kernels:
+//!
+//! * **LC** (worker local computation, paper §3.1):
+//!   `z_t^p = y^p − A^p x_t + (1/κ)·mean(η′)·z_{t−1}^p`,
+//!   `f_t^p = x_t/P + (A^p)ᵀ z_t^p`,
+//! * **GC** (fusion-center global computation):
+//!   `x_{t+1} = η_t(f̃_t)` with the Bernoulli-Gauss conditional-mean
+//!   denoiser at the effective noise level, plus the empirical `mean(η′)`
+//!   for the next Onsager term.
+//!
+//! [`RustEngine`] is the portable baseline; `runtime::XlaEngine` executes
+//! the same kernels from AOT-compiled JAX/Pallas artifacts and must agree
+//! with it to float tolerance (asserted in integration tests).
+
+use crate::error::Result;
+use crate::linalg::Matrix;
+use crate::se::prior::BgChannel;
+use crate::signal::BernoulliGauss;
+
+/// The per-worker measurement block: `M/P` rows of `A` plus `y^p`.
+#[derive(Debug, Clone)]
+pub struct WorkerData {
+    /// Row block `A^p` of the sensing matrix, shape (M/P, N).
+    pub a: Matrix,
+    /// Local measurements `y^p`.
+    pub y: Vec<f32>,
+}
+
+impl WorkerData {
+    /// Split a full instance into `p` equal row blocks.
+    pub fn split(a: &Matrix, y: &[f32], p: usize) -> Vec<WorkerData> {
+        assert_eq!(a.rows() % p, 0, "P must divide M");
+        let rows_per = a.rows() / p;
+        (0..p)
+            .map(|i| WorkerData {
+                a: a.row_block(i * rows_per, (i + 1) * rows_per),
+                y: y[i * rows_per..(i + 1) * rows_per].to_vec(),
+            })
+            .collect()
+    }
+}
+
+/// Output of one worker LC step.
+#[derive(Debug, Clone)]
+pub struct LcOut {
+    /// Updated local residual `z_t^p` (length M/P).
+    pub z: Vec<f32>,
+    /// Local estimate contribution `f_t^p` (length N).
+    pub f_partial: Vec<f32>,
+    /// `‖z_t^p‖²` (the scalar each worker uplinks for σ̂² estimation).
+    pub z_norm2: f64,
+}
+
+/// Output of one fusion GC step.
+#[derive(Debug, Clone)]
+pub struct GcOut {
+    /// Denoised estimate `x_{t+1}` (length N).
+    pub x_next: Vec<f32>,
+    /// Empirical mean of `η′` over the input vector.
+    pub eta_prime_mean: f64,
+}
+
+/// A compute engine evaluating LC and GC steps.
+pub trait ComputeEngine: Send + Sync {
+    /// Worker LC step. `coef` is the Onsager coefficient
+    /// `(1/κ)·mean(η′_{t−1})` (zero at t = 0), `p_workers` scales the
+    /// `x_t/P` term.
+    fn lc_step(
+        &self,
+        data: &WorkerData,
+        x: &[f32],
+        z_prev: &[f32],
+        coef: f32,
+        p_workers: usize,
+    ) -> Result<LcOut>;
+
+    /// Fusion GC step: denoise `f` at effective noise `sigma_eff2`.
+    fn gc_step(&self, f: &[f32], sigma_eff2: f64) -> Result<GcOut>;
+
+    /// Engine name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Portable pure-Rust engine.
+pub struct RustEngine {
+    channel: BgChannel,
+    threads: usize,
+}
+
+impl RustEngine {
+    /// Build for a prior; `threads` bounds intra-step parallelism.
+    pub fn new(prior: BernoulliGauss, threads: usize) -> Self {
+        RustEngine { channel: BgChannel::new(prior), threads: threads.max(1) }
+    }
+}
+
+impl ComputeEngine for RustEngine {
+    fn lc_step(
+        &self,
+        data: &WorkerData,
+        x: &[f32],
+        z_prev: &[f32],
+        coef: f32,
+        p_workers: usize,
+    ) -> Result<LcOut> {
+        let mp = data.a.rows();
+        let n = data.a.cols();
+        debug_assert_eq!(x.len(), n);
+        debug_assert_eq!(z_prev.len(), mp);
+        // z = y − A x + coef·z_prev
+        let mut z = vec![0f32; mp];
+        data.a.matvec_par(x, &mut z, self.threads);
+        for i in 0..mp {
+            z[i] = data.y[i] - z[i] + coef * z_prev[i];
+        }
+        let z_norm2 = crate::linalg::norm2_sq(&z);
+        // f = x/P + Aᵀ z
+        let mut f = vec![0f32; n];
+        data.a.matvec_t_par(&z, &mut f, self.threads);
+        let inv_p = 1.0 / p_workers as f32;
+        for (fi, &xi) in f.iter_mut().zip(x) {
+            *fi += xi * inv_p;
+        }
+        Ok(LcOut { z, f_partial: f, z_norm2 })
+    }
+
+    fn gc_step(&self, f: &[f32], sigma_eff2: f64) -> Result<GcOut> {
+        let n = f.len();
+        let mut x_next = vec![0f32; n];
+        // Spawn overhead beats the win below ~64k elements (§Perf).
+        let threads = if n < 65_536 { 1 } else { self.threads }.min(n.max(1));
+        let chunk = n.div_ceil(threads.max(1)).max(1);
+        let deriv_sums: Vec<f64> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (ci, out_chunk) in x_next.chunks_mut(chunk).enumerate() {
+                let f0 = ci * chunk;
+                let ch = self.channel;
+                let f_ref = f;
+                handles.push(s.spawn(move || {
+                    let mut dsum = 0.0f64;
+                    for (i, o) in out_chunk.iter_mut().enumerate() {
+                        let fi = f_ref[f0 + i] as f64;
+                        *o = ch.denoise(fi, sigma_eff2) as f32;
+                        dsum += ch.denoise_deriv(fi, sigma_eff2);
+                    }
+                    dsum
+                }));
+            }
+            handles.into_iter().map(|h| h.join().expect("gc thread")).collect()
+        });
+        let eta_prime_mean = deriv_sums.iter().sum::<f64>() / n as f64;
+        Ok(GcOut { x_next, eta_prime_mean })
+    }
+
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::{BernoulliGauss, Instance, ProblemDims};
+    use crate::util::rng::Rng;
+
+    fn small_instance() -> Instance {
+        let prior = BernoulliGauss::standard(0.1);
+        let mut rng = Rng::new(42);
+        Instance::generate(prior, ProblemDims { n: 200, m: 60, sigma_e2: 1e-3 }, &mut rng)
+            .unwrap()
+    }
+
+    #[test]
+    fn lc_step_first_iteration_gives_y_residual() {
+        let inst = small_instance();
+        let eng = RustEngine::new(inst.prior, 2);
+        let parts = WorkerData::split(&inst.a, &inst.y, 3);
+        let x0 = vec![0f32; 200];
+        let z0 = vec![0f32; 20];
+        let out = eng.lc_step(&parts[1], &x0, &z0, 0.0, 3).unwrap();
+        // x=0, coef=0 ⇒ z = y.
+        assert_eq!(out.z, parts[1].y);
+        // f = Aᵀ y here.
+        let mut want = vec![0f32; 200];
+        parts[1].a.matvec_t(&parts[1].y, &mut want);
+        for (a, b) in out.f_partial.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn lc_partials_sum_to_centralized() {
+        // Σ_p f_t^p must equal the centralized f_t = x + Aᵀ z (paper §3.1).
+        let inst = small_instance();
+        let eng = RustEngine::new(inst.prior, 2);
+        let p = 6;
+        let parts = WorkerData::split(&inst.a, &inst.y, p);
+        let mut rng = Rng::new(7);
+        let x: Vec<f32> = (0..200).map(|_| rng.gaussian() as f32 * 0.1).collect();
+        let coef = 0.3f32;
+        let z_prev_full: Vec<f32> = (0..60).map(|_| rng.gaussian() as f32 * 0.05).collect();
+
+        // Distributed.
+        let mut f_sum = vec![0f32; 200];
+        let mut z_cat = Vec::new();
+        for (i, part) in parts.iter().enumerate() {
+            let zp = &z_prev_full[i * 10..(i + 1) * 10];
+            let out = eng.lc_step(part, &x, zp, coef, p).unwrap();
+            for (s, v) in f_sum.iter_mut().zip(&out.f_partial) {
+                *s += v;
+            }
+            z_cat.extend_from_slice(&out.z);
+        }
+        // Centralized.
+        let mut az = vec![0f32; 60];
+        inst.a.matvec(&x, &mut az);
+        let z_cent: Vec<f32> = (0..60)
+            .map(|i| inst.y[i] - az[i] + coef * z_prev_full[i])
+            .collect();
+        let mut f_cent = vec![0f32; 200];
+        inst.a.matvec_t(&z_cent, &mut f_cent);
+        for (fc, &xi) in f_cent.iter_mut().zip(&x) {
+            *fc += xi;
+        }
+        for i in 0..60 {
+            assert!((z_cat[i] - z_cent[i]).abs() < 1e-4, "z mismatch at {i}");
+        }
+        for i in 0..200 {
+            assert!(
+                (f_sum[i] - f_cent[i]).abs() < 1e-3,
+                "f mismatch at {i}: {} vs {}",
+                f_sum[i],
+                f_cent[i]
+            );
+        }
+    }
+
+    #[test]
+    fn gc_step_matches_scalar_denoiser() {
+        let prior = BernoulliGauss::standard(0.1);
+        let eng = RustEngine::new(prior, 3);
+        let ch = BgChannel::new(prior);
+        let mut rng = Rng::new(3);
+        let f: Vec<f32> = (0..501).map(|_| rng.gaussian() as f32).collect();
+        let s2 = 0.09;
+        let out = eng.gc_step(&f, s2).unwrap();
+        let mut dsum = 0.0;
+        for (i, &fi) in f.iter().enumerate() {
+            let want = ch.denoise(fi as f64, s2) as f32;
+            assert!((out.x_next[i] - want).abs() < 1e-6);
+            dsum += ch.denoise_deriv(fi as f64, s2);
+        }
+        assert!((out.eta_prime_mean - dsum / f.len() as f64).abs() < 1e-12);
+    }
+
+    #[test]
+    fn split_covers_all_rows() {
+        let inst = small_instance();
+        let parts = WorkerData::split(&inst.a, &inst.y, 5);
+        assert_eq!(parts.len(), 5);
+        let total_rows: usize = parts.iter().map(|p| p.a.rows()).sum();
+        assert_eq!(total_rows, 60);
+        let mut y_cat = Vec::new();
+        for p in &parts {
+            y_cat.extend_from_slice(&p.y);
+        }
+        assert_eq!(y_cat, inst.y);
+    }
+}

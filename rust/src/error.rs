@@ -1,0 +1,46 @@
+//! Crate-wide error type.
+
+/// Unified error type for the mpamp crate.
+#[derive(Debug, thiserror::Error)]
+pub enum Error {
+    /// Configuration file / CLI errors.
+    #[error("config error: {0}")]
+    Config(String),
+
+    /// Malformed wire messages or framing problems.
+    #[error("protocol error: {0}")]
+    Protocol(String),
+
+    /// Transport-level failures (channel closed, socket error, ...).
+    #[error("transport error: {0}")]
+    Transport(String),
+
+    /// Entropy-coder failures (corrupt stream, model mismatch, ...).
+    #[error("codec error: {0}")]
+    Codec(String),
+
+    /// Numerical failures (non-convergence, domain errors, ...).
+    #[error("numerical error: {0}")]
+    Numerical(String),
+
+    /// Missing or malformed AOT artifacts.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// Errors surfaced by the XLA/PJRT runtime.
+    #[error("xla error: {0}")]
+    Xla(String),
+
+    /// I/O errors.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

@@ -1,0 +1,52 @@
+//! # mpamp — Multi-Processor AMP with Lossy Compression
+//!
+//! A full-system reproduction of Han, Zhu, Niu & Baron, *"Multi-Processor
+//! Approximate Message Passing Using Lossy Compression"* (2016).
+//!
+//! The crate is the **Layer-3 coordinator** of a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * [`coordinator`] — fusion center + `P` worker processors exchanging
+//!   lossily-compressed messages over a byte-metered transport,
+//! * [`se`] — state evolution for the Bernoulli-Gauss prior, including the
+//!   paper's quantization-aware SE (eq. 8),
+//! * [`quant`] — entropy-coded scalar quantization (uniform quantizer +
+//!   static range coder / Huffman),
+//! * [`rd`] — Blahut–Arimoto rate-distortion substrate,
+//! * [`alloc`] — the two rate-allocation schemes: online back-tracking
+//!   (BT-MP-AMP) and dynamic programming (DP-MP-AMP),
+//! * [`amp`] — centralized AMP baseline,
+//! * [`engine`] / [`runtime`] — pluggable compute engines: a portable pure
+//!   Rust engine and an XLA/PJRT engine executing AOT-compiled JAX/Pallas
+//!   artifacts (built once by `make artifacts`, never Python at runtime).
+//!
+//! Quickstart (see `examples/quickstart.rs`):
+//!
+//! ```no_run
+//! use mpamp::config::RunConfig;
+//! use mpamp::coordinator::session::MpAmpSession;
+//!
+//! let cfg = RunConfig::paper_default(0.05); // ε = 0.05 column of the paper
+//! let report = MpAmpSession::new(cfg).unwrap().run().unwrap();
+//! println!("final SDR = {:.2} dB, uplink = {:.2} bits/element",
+//!          report.final_sdr_db(), report.total_uplink_bits_per_element());
+//! ```
+
+pub mod alloc;
+pub mod amp;
+pub mod bench_util;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod error;
+pub mod linalg;
+pub mod metrics;
+pub mod quant;
+pub mod rd;
+pub mod runtime;
+pub mod se;
+pub mod signal;
+pub mod util;
+
+pub use error::{Error, Result};

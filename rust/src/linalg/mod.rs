@@ -1,0 +1,314 @@
+//! Dense linear algebra for the AMP hot path.
+//!
+//! The sensing matrix block a worker owns is `(M/P) × N` row-major `f32`.
+//! Two operations dominate: `A x` (per-row dot products) and `Aᵀ z`
+//! (accumulation across rows). Both are written cache-friendly (unit-stride
+//! inner loops over matrix rows) with optional row-parallelism via scoped
+//! threads; the compiler auto-vectorizes the unrolled inner loops.
+
+use crate::error::{Error, Result};
+
+/// Row-major dense `f32` matrix.
+#[derive(Debug, Clone)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl Matrix {
+    /// Create from row-major data.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::Numerical(format!(
+                "matrix data length {} != {rows}x{cols}",
+                data.len()
+            )));
+        }
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Row-major backing slice.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable backing slice.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Borrow row `r`.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Take a contiguous block of rows `[r0, r1)` as a new matrix (copy).
+    pub fn row_block(&self, r0: usize, r1: usize) -> Matrix {
+        debug_assert!(r0 <= r1 && r1 <= self.rows);
+        Matrix {
+            rows: r1 - r0,
+            cols: self.cols,
+            data: self.data[r0 * self.cols..r1 * self.cols].to_vec(),
+        }
+    }
+
+    /// `out = A x` (`out` has length `rows`).
+    pub fn matvec(&self, x: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(out.len(), self.rows);
+        for (r, o) in out.iter_mut().enumerate() {
+            *o = dot(self.row(r), x);
+        }
+    }
+
+    /// `out = Aᵀ z` (`out` has length `cols`).
+    ///
+    /// Accumulates row-by-row (`out += z_r * row_r`) so the inner loop stays
+    /// unit-stride over the matrix storage.
+    pub fn matvec_t(&self, z: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(z.len(), self.rows);
+        debug_assert_eq!(out.len(), self.cols);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for (r, &zr) in z.iter().enumerate() {
+            if zr != 0.0 {
+                axpy(zr, self.row(r), out);
+            }
+        }
+    }
+
+    /// Threaded `A x` over row chunks. Falls back to serial when the
+    /// matrix is small enough that spawn overhead + memory-bandwidth
+    /// saturation make threads a loss (measured crossover ≈ 4M entries;
+    /// see EXPERIMENTS.md §Perf).
+    pub fn matvec_par(&self, x: &[f32], out: &mut [f32], threads: usize) {
+        if threads <= 1 || self.rows < 4 * threads || self.rows * self.cols < 4_000_000 {
+            return self.matvec(x, out);
+        }
+        let chunk = self.rows.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
+                let r0 = ci * chunk;
+                let mat = &*self;
+                s.spawn(move || {
+                    for (i, o) in out_chunk.iter_mut().enumerate() {
+                        *o = dot(mat.row(r0 + i), x);
+                    }
+                });
+            }
+        });
+    }
+
+    /// Threaded `Aᵀ z`: each thread owns a column range and walks all rows.
+    /// Serial below the measured crossover (see `matvec_par`).
+    pub fn matvec_t_par(&self, z: &[f32], out: &mut [f32], threads: usize) {
+        if threads <= 1 || self.cols < 4 * threads || self.rows * self.cols < 4_000_000 {
+            return self.matvec_t(z, out);
+        }
+        let chunk = self.cols.div_ceil(threads);
+        let cols = self.cols;
+        std::thread::scope(|s| {
+            for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
+                let c0 = ci * chunk;
+                let mat = &*self;
+                s.spawn(move || {
+                    out_chunk.iter_mut().for_each(|o| *o = 0.0);
+                    for (r, &zr) in z.iter().enumerate() {
+                        if zr != 0.0 {
+                            let row = &mat.row(r)[c0..c0 + out_chunk.len()];
+                            axpy(zr, row, out_chunk);
+                        }
+                    }
+                    let _ = cols;
+                });
+            }
+        });
+    }
+}
+
+/// Dot product with 4-way unrolling (auto-vectorizes well).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for j in chunks * 4..n {
+        s += a[j] * b[j];
+    }
+    s
+}
+
+/// `y += alpha * x`.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x.iter()) {
+        *yi += alpha * *xi;
+    }
+}
+
+/// Squared L2 norm in f64 accumulation (AMP uses ‖z‖²/M as a variance
+/// estimator, so accumulation error matters).
+#[inline]
+pub fn norm2_sq(x: &[f32]) -> f64 {
+    x.iter().map(|&v| (v as f64) * (v as f64)).sum()
+}
+
+/// Elementwise `a - b` into `out`.
+#[inline]
+pub fn sub(a: &[f32], b: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len(), out.len());
+    for ((o, &ai), &bi) in out.iter_mut().zip(a).zip(b) {
+        *o = ai - bi;
+    }
+}
+
+/// Mean of a slice (f64 accumulation).
+#[inline]
+pub fn mean(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().map(|&v| v as f64).sum::<f64>() / x.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_close, Prop};
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut data = vec![0f32; r * c];
+        rng.fill_gaussian(&mut data, 1.0);
+        Matrix::from_vec(r, c, data).unwrap()
+    }
+
+    #[test]
+    fn matvec_small_known() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let mut out = vec![0f32; 2];
+        a.matvec(&[1., 1., 1.], &mut out);
+        assert_eq!(out, vec![6., 15.]);
+    }
+
+    #[test]
+    fn matvec_t_small_known() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let mut out = vec![0f32; 3];
+        a.matvec_t(&[1., 2.], &mut out);
+        assert_eq!(out, vec![9., 12., 15.]);
+    }
+
+    #[test]
+    fn from_vec_rejects_bad_len() {
+        assert!(Matrix::from_vec(2, 3, vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        Prop::new("matvec par == serial", 30).check(|g| {
+            let mut rng = Rng::new(g.u64());
+            let r = g.usize_in(1, 80);
+            let c = g.usize_in(1, 120);
+            let a = rand_matrix(&mut rng, r, c);
+            let x = g.gaussian_vec(c, 1.0);
+            let z = g.gaussian_vec(r, 1.0);
+            let (mut o1, mut o2) = (vec![0f32; r], vec![0f32; r]);
+            a.matvec(&x, &mut o1);
+            a.matvec_par(&x, &mut o2, 4);
+            for i in 0..r {
+                prop_close(o1[i] as f64, o2[i] as f64, 1e-4, "matvec")?;
+            }
+            let (mut t1, mut t2) = (vec![0f32; c], vec![0f32; c]);
+            a.matvec_t(&z, &mut t1);
+            a.matvec_t_par(&z, &mut t2, 4);
+            for i in 0..c {
+                prop_close(t1[i] as f64, t2[i] as f64, 1e-4, "matvec_t")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn transpose_adjoint_identity() {
+        // <A x, z> == <x, Aᵀ z> — the adjoint identity AMP relies on.
+        Prop::new("adjoint identity", 40).check(|g| {
+            let mut rng = Rng::new(g.u64());
+            let r = g.usize_in(1, 50);
+            let c = g.usize_in(1, 70);
+            let a = rand_matrix(&mut rng, r, c);
+            let x = g.gaussian_vec(c, 1.0);
+            let z = g.gaussian_vec(r, 1.0);
+            let mut ax = vec![0f32; r];
+            a.matvec(&x, &mut ax);
+            let mut atz = vec![0f32; c];
+            a.matvec_t(&z, &mut atz);
+            let lhs: f64 = ax.iter().zip(&z).map(|(&u, &v)| u as f64 * v as f64).sum();
+            let rhs: f64 = x.iter().zip(&atz).map(|(&u, &v)| u as f64 * v as f64).sum();
+            prop_close(lhs, rhs, 1e-2 * (1.0 + lhs.abs()), "adjoint")
+        });
+    }
+
+    #[test]
+    fn norm2_sq_known() {
+        assert!((norm2_sq(&[3.0, 4.0]) - 25.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        Prop::new("dot unrolled == naive", 50).check(|g| {
+            let n = g.usize_in(0, 257);
+            let a = g.gaussian_vec(n, 1.0);
+            let b = g.gaussian_vec(n, 1.0);
+            let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as f64).sum();
+            prop_close(dot(&a, &b) as f64, naive, 1e-3 * (1.0 + naive.abs()), "dot")
+        });
+    }
+
+    #[test]
+    fn row_block_copies_right_rows() {
+        let a = Matrix::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = a.row_block(1, 3);
+        assert_eq!(b.rows(), 2);
+        assert_eq!(b.data(), &[3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn mean_and_sub() {
+        let mut out = vec![0f32; 2];
+        sub(&[3.0, 5.0], &[1.0, 1.0], &mut out);
+        assert_eq!(out, vec![2.0, 4.0]);
+        assert!((mean(&[1.0, 2.0, 3.0]) - 2.0).abs() < 1e-12);
+    }
+}

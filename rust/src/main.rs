@@ -1,0 +1,240 @@
+//! `mpamp` CLI — leader entrypoint for the MP-AMP coordinator.
+//!
+//! See `cli::usage()` (or `mpamp help`) for the command reference. Every
+//! config key can be overridden on the command line, e.g.
+//! `mpamp run --prior.eps 0.03 --schedule.kind dp --p 30`.
+
+use mpamp::alloc::backtrack::{BtController, RateModel};
+use mpamp::alloc::dp::DpAllocator;
+use mpamp::amp::run_centralized;
+use mpamp::cli::{usage, Args};
+use mpamp::config::{RunConfig, ScheduleKind};
+use mpamp::coordinator::session::MpAmpSession;
+use mpamp::engine::RustEngine;
+use mpamp::error::{Error, Result};
+use mpamp::rd::{rd_curve_for_channel, RdCache};
+use mpamp::runtime::Manifest;
+use mpamp::se::prior::BgChannel;
+use mpamp::se::StateEvolution;
+
+/// Option keys consumed by the CLI itself (everything else is a config
+/// override).
+const RESERVED: &[&str] = &["config", "out", "sigma2"];
+
+fn main() {
+    let args = match Args::from_env() {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    if args.command.is_empty() || args.command == "help" || args.has_flag("help") {
+        print!("{}", usage());
+        return;
+    }
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn load_config(args: &Args) -> Result<RunConfig> {
+    let base = match args.get("config") {
+        Some(path) => RunConfig::from_file(path)?,
+        None => RunConfig::paper_default(0.05),
+    };
+    base.apply_overrides(&args.config_overrides(RESERVED))
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.command.as_str() {
+        "run" => cmd_run(args),
+        "centralized" => cmd_centralized(args),
+        "se" => cmd_se(args),
+        "dp" => cmd_dp(args),
+        "bt" => cmd_bt(args),
+        "rd" => cmd_rd(args),
+        "artifacts" => cmd_artifacts(args),
+        other => Err(Error::Config(format!(
+            "unknown command '{other}' (try `mpamp help`)"
+        ))),
+    }
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let quiet = args.has_flag("quiet");
+    eprintln!(
+        "mpamp run: N={} M={} P={} ε={} SNR={} dB T={} schedule={:?} engine={:?}",
+        cfg.n, cfg.m, cfg.p, cfg.prior.eps, cfg.snr_db, cfg.iters, cfg.schedule, cfg.engine
+    );
+    let session = MpAmpSession::new(cfg)?;
+    let report = session.run()?;
+    if !quiet {
+        println!(
+            "{:>3} {:>9} {:>9} {:>11} {:>10} {:>12}",
+            "t", "SDR(dB)", "SE(dB)", "alloc(b/el)", "wire(b/el)", "sigma_hat^2"
+        );
+        for r in &report.iters {
+            println!(
+                "{:>3} {:>9.3} {:>9.3} {:>11.3} {:>10.3} {:>12.6e}",
+                r.t, r.sdr_db, r.sdr_pred_db, r.rate_alloc, r.rate_wire, r.sigma_d2_hat
+            );
+        }
+    }
+    println!(
+        "final SDR {:.2} dB | uplink {:.2} bits/element total ({:.1}% savings vs 32-bit) | {:.2}s",
+        report.final_sdr_db(),
+        report.total_uplink_bits_per_element(),
+        report.savings_vs_float_pct(),
+        report.wall_s
+    );
+    if let Some(out) = args.get("out") {
+        report.to_csv().write(out)?;
+        eprintln!("wrote {out}");
+    }
+    if args.has_flag("json") {
+        println!("{}", report.to_json().render());
+    }
+    Ok(())
+}
+
+fn cmd_centralized(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let mut rng = mpamp::util::rng::Rng::new(cfg.seed);
+    let inst = mpamp::signal::Instance::generate(
+        cfg.prior,
+        mpamp::signal::ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+    )?;
+    let engine = RustEngine::new(cfg.prior, cfg.threads);
+    let rep = run_centralized(&inst, &se, &engine, cfg.iters)?;
+    println!("{:>3} {:>9} {:>9}", "t", "SDR(dB)", "SE(dB)");
+    for r in &rep.iters {
+        println!("{:>3} {:>9.3} {:>9.3}", r.t, r.sdr_db, r.sdr_pred_db);
+    }
+    println!("final SDR {:.2} dB (centralized baseline)", rep.final_sdr_db());
+    Ok(())
+}
+
+fn cmd_se(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let traj = se.trajectory(cfg.iters);
+    println!("{:>3} {:>14} {:>9}", "t", "sigma_t^2", "SDR(dB)");
+    for (t, s2) in traj.iter().enumerate() {
+        println!("{:>3} {:>14.6e} {:>9.3}", t, s2, se.sdr_db(*s2));
+    }
+    let steady = se.iters_to_steady(0.05, 64);
+    println!("steady state (0.05 dB/iter) at T = {steady}");
+    Ok(())
+}
+
+fn cmd_dp(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let (total, delta_r) = match cfg.schedule {
+        ScheduleKind::Dp { total_rate, delta_r } => {
+            (total_rate.unwrap_or(2.0 * cfg.iters as f64), delta_r)
+        }
+        _ => (2.0 * cfg.iters as f64, 0.1),
+    };
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let fp = se.fixed_point(1e-10, 300);
+    eprintln!(
+        "building RD cache (γ grid {}, alphabet {})...",
+        cfg.rd.gamma_grid, cfg.rd.alphabet
+    );
+    let cache = RdCache::build(&cfg.prior, cfg.p, fp * 0.5, se.sigma0_sq() * 2.0, &cfg.rd)?;
+    let alloc = DpAllocator::new(&se, cfg.p, &cache)?;
+    let t0 = std::time::Instant::now();
+    let dp = alloc.solve(cfg.iters, total, delta_r)?;
+    eprintln!(
+        "DP table {}×{} solved in {:.2}s",
+        dp.dims.0,
+        dp.dims.1,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{:>3} {:>8} {:>14} {:>9}", "t", "R_t", "sigma_D^2", "SDR(dB)");
+    for t in 0..cfg.iters {
+        println!(
+            "{:>3} {:>8.2} {:>14.6e} {:>9.3}",
+            t,
+            dp.rates[t],
+            dp.sigma_d2[t + 1],
+            se.sdr_db(dp.sigma_d2[t + 1])
+        );
+    }
+    println!(
+        "total {:.1} bits/element (budget {total}), final SDR {:.2} dB",
+        dp.rates.iter().sum::<f64>(),
+        se.sdr_db(*dp.sigma_d2.last().unwrap())
+    );
+    Ok(())
+}
+
+fn cmd_bt(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let (ratio_max, r_max) = match cfg.schedule {
+        ScheduleKind::BackTrack { ratio_max, r_max } => (ratio_max, r_max),
+        _ => (1.02, 6.0),
+    };
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let ctl = BtController::new(&se, cfg.p, ratio_max, r_max, cfg.iters);
+    let (decisions, traj) = ctl.se_schedule(cfg.iters, RateModel::Ecsq, None);
+    println!("{:>3} {:>8} {:>14} {:>9}", "t", "R_t", "sigma_D^2", "SDR(dB)");
+    for (t, d) in decisions.iter().enumerate() {
+        println!(
+            "{:>3} {:>8.2} {:>14.6e} {:>9.3}",
+            t,
+            d.rate,
+            traj[t + 1],
+            se.sdr_db(traj[t + 1])
+        );
+    }
+    println!(
+        "total {:.2} bits/element (ECSQ model), final SDR {:.2} dB",
+        decisions.iter().map(|d| d.rate).sum::<f64>(),
+        se.sdr_db(*traj.last().unwrap())
+    );
+    Ok(())
+}
+
+fn cmd_rd(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let sigma_t2: f64 = args.get_parsed("sigma2")?.unwrap_or(0.05);
+    let ch = BgChannel::new(cfg.prior);
+    let (wch, ws2) = ch.worker_channel(sigma_t2, cfg.p);
+    let curve =
+        rd_curve_for_channel(&wch, ws2, cfg.rd.alphabet, cfg.rd.curve_points, cfg.rd.tol)?;
+    println!(
+        "R(D) of the worker uplink source at sigma_t^2={sigma_t2}, P={}",
+        cfg.p
+    );
+    println!("{:>12} {:>8}", "D", "R(bits)");
+    let var = wch.var_f(ws2);
+    for k in 0..=24 {
+        let d = var * 2f64.powi(-k);
+        println!("{:>12.4e} {:>8.3}", d, curve.rate_for_mse(d));
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let m = Manifest::load(&cfg.artifact_dir)?;
+    println!(
+        "artifacts OK in {}: n={} mp={} ({} / {})",
+        cfg.artifact_dir, m.n, m.mp, m.lc_file, m.gc_file
+    );
+    let want_mp = cfg.m / cfg.p;
+    if m.n != cfg.n || m.mp != want_mp {
+        println!(
+            "WARNING: config wants n={} mp={want_mp}; re-run \
+             `make artifacts N={} MP={want_mp}`",
+            cfg.n, cfg.n
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,278 @@
+//! Metrics and report output: byte counters, per-iteration records,
+//! CSV/JSON writers (hand-rolled — no serde in the offline crate set).
+
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Thread-safe bit counter used by the transports (uplink/downlink split).
+#[derive(Debug, Default)]
+pub struct ByteMeter {
+    uplink_bits: AtomicU64,
+    downlink_bits: AtomicU64,
+    uplink_msgs: AtomicU64,
+    downlink_msgs: AtomicU64,
+}
+
+impl ByteMeter {
+    /// New zeroed meter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record an uplink payload of `bits` bits.
+    pub fn add_uplink_bits(&self, bits: u64) {
+        self.uplink_bits.fetch_add(bits, Ordering::Relaxed);
+        self.uplink_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a downlink payload of `bits` bits.
+    pub fn add_downlink_bits(&self, bits: u64) {
+        self.downlink_bits.fetch_add(bits, Ordering::Relaxed);
+        self.downlink_msgs.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Total uplink bits so far.
+    pub fn uplink_bits(&self) -> u64 {
+        self.uplink_bits.load(Ordering::Relaxed)
+    }
+
+    /// Total downlink bits so far.
+    pub fn downlink_bits(&self) -> u64 {
+        self.downlink_bits.load(Ordering::Relaxed)
+    }
+
+    /// Uplink message count.
+    pub fn uplink_msgs(&self) -> u64 {
+        self.uplink_msgs.load(Ordering::Relaxed)
+    }
+
+    /// Downlink message count.
+    pub fn downlink_msgs(&self) -> u64 {
+        self.downlink_msgs.load(Ordering::Relaxed)
+    }
+}
+
+/// Record of a single MP-AMP iteration (one row of the run report).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IterRecord {
+    /// Iteration index t (0-based).
+    pub t: usize,
+    /// Empirical SDR of `x_{t+1}` vs the ground truth, in dB.
+    pub sdr_db: f64,
+    /// SE-predicted SDR at this iteration (quantization-aware SE).
+    pub sdr_pred_db: f64,
+    /// Coding rate allocated this iteration (bits/element, analytic).
+    pub rate_alloc: f64,
+    /// Measured wire rate this iteration (bits/element, actual codec).
+    pub rate_wire: f64,
+    /// Quantization MSE target σ_Q² used this iteration (0 = uncompressed).
+    pub sigma_q2: f64,
+    /// Estimated σ²_{t,D} from the residual (‖z‖²/M).
+    pub sigma_d2_hat: f64,
+    /// Wall-clock seconds spent in this iteration.
+    pub wall_s: f64,
+}
+
+/// CSV writer for a uniform table of f64/str columns.
+#[derive(Debug, Default)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    /// New CSV with the given column names.
+    pub fn new(columns: &[&str]) -> Self {
+        Csv {
+            header: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+        .validate()
+    }
+
+    fn validate(self) -> Self {
+        debug_assert!(!self.header.is_empty());
+        self
+    }
+
+    /// Append a row of already-formatted cells.
+    pub fn push_raw(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.header.len());
+        self.rows.push(cells);
+    }
+
+    /// Append a row of f64 cells (formatted with 6 significant digits).
+    pub fn push_f64(&mut self, cells: &[f64]) {
+        self.push_raw(cells.iter().map(|v| format!("{v:.6}")).collect());
+    }
+
+    /// Render to a CSV string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{}", self.header.join(","));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", row.join(","));
+        }
+        out
+    }
+
+    /// Write to a file, creating parent directories.
+    pub fn write(&self, path: &str) -> std::io::Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.render())
+    }
+}
+
+/// Minimal JSON value builder (objects/arrays/scalars) for run reports.
+#[derive(Debug, Clone)]
+pub enum Json {
+    /// Null.
+    Null,
+    /// Boolean.
+    Bool(bool),
+    /// Number.
+    Num(f64),
+    /// String.
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object (insertion-ordered).
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// New empty object.
+    pub fn obj() -> Json {
+        Json::Obj(Vec::new())
+    }
+
+    /// Insert into an object (panics on non-objects — builder misuse).
+    pub fn set(mut self, key: &str, v: Json) -> Json {
+        match &mut self {
+            Json::Obj(entries) => entries.push((key.to_string(), v)),
+            _ => panic!("Json::set on non-object"),
+        }
+        self
+    }
+
+    /// Serialize.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        self.render_into(&mut s);
+        s
+    }
+
+    fn render_into(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => {
+                let _ = write!(out, "{b}");
+            }
+            Json::Num(v) => {
+                if v.is_finite() {
+                    let _ = write!(out, "{v}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, v) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    v.render_into(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(entries) => {
+                out.push('{');
+                for (i, (k, v)) in entries.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).render_into(out);
+                    out.push(':');
+                    v.render_into(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meter_accumulates() {
+        let m = ByteMeter::new();
+        m.add_uplink_bits(100);
+        m.add_uplink_bits(50);
+        m.add_downlink_bits(7);
+        assert_eq!(m.uplink_bits(), 150);
+        assert_eq!(m.downlink_bits(), 7);
+        assert_eq!(m.uplink_msgs(), 2);
+        assert_eq!(m.downlink_msgs(), 1);
+    }
+
+    #[test]
+    fn meter_thread_safe() {
+        let m = std::sync::Arc::new(ByteMeter::new());
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let m = m.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        m.add_uplink_bits(3);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.uplink_bits(), 8 * 1000 * 3);
+    }
+
+    #[test]
+    fn csv_renders() {
+        let mut c = Csv::new(&["t", "sdr"]);
+        c.push_f64(&[0.0, 12.5]);
+        c.push_raw(vec!["1".into(), "hello".into()]);
+        let s = c.render();
+        assert!(s.starts_with("t,sdr\n"));
+        assert!(s.contains("0.000000,12.500000"));
+        assert!(s.contains("1,hello"));
+    }
+
+    #[test]
+    fn json_escapes_and_nests() {
+        let j = Json::obj()
+            .set("name", Json::Str("a\"b\\c\nd".into()))
+            .set("xs", Json::Arr(vec![Json::Num(1.0), Json::Null, Json::Bool(true)]))
+            .set("nan", Json::Num(f64::NAN));
+        let s = j.render();
+        assert_eq!(
+            s,
+            "{\"name\":\"a\\\"b\\\\c\\nd\",\"xs\":[1,null,true],\"nan\":null}"
+        );
+    }
+}

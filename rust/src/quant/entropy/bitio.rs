@@ -1,0 +1,140 @@
+//! Bit-level I/O used by the canonical Huffman coder.
+
+/// MSB-first bit writer.
+#[derive(Debug, Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    /// New empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Write the lowest `len` bits of `code`, MSB first.
+    pub fn write_bits(&mut self, code: u64, len: u8) {
+        debug_assert!(len <= 64);
+        for i in (0..len).rev() {
+            let bit = ((code >> i) & 1) as u8;
+            self.cur = (self.cur << 1) | bit;
+            self.nbits += 1;
+            if self.nbits == 8 {
+                self.buf.push(self.cur);
+                self.cur = 0;
+                self.nbits = 0;
+            }
+        }
+    }
+
+    /// Number of bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        self.buf.len() as u64 * 8 + self.nbits as u64
+    }
+
+    /// Pad with zeros to a byte boundary and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.cur <<= 8 - self.nbits;
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    bit: u8,
+}
+
+impl<'a> BitReader<'a> {
+    /// Read from a byte slice.
+    pub fn new(buf: &'a [u8]) -> Self {
+        BitReader { buf, pos: 0, bit: 0 }
+    }
+
+    /// Read one bit; returns 0 past the end (callers bound their reads).
+    #[inline]
+    pub fn read_bit(&mut self) -> u8 {
+        if self.pos >= self.buf.len() {
+            return 0;
+        }
+        let b = (self.buf[self.pos] >> (7 - self.bit)) & 1;
+        self.bit += 1;
+        if self.bit == 8 {
+            self.bit = 0;
+            self.pos += 1;
+        }
+        b
+    }
+
+    /// Read `len` bits MSB-first.
+    pub fn read_bits(&mut self, len: u8) -> u64 {
+        let mut v = 0u64;
+        for _ in 0..len {
+            v = (v << 1) | self.read_bit() as u64;
+        }
+        v
+    }
+
+    /// Bits consumed so far.
+    pub fn bit_pos(&self) -> u64 {
+        self.pos as u64 * 8 + self.bit as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, Prop};
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0b11110000, 8);
+        w.write_bits(1, 1);
+        assert_eq!(w.bit_len(), 12);
+        let bytes = w.finish();
+        let mut r = BitReader::new(&bytes);
+        assert_eq!(r.read_bits(3), 0b101);
+        assert_eq!(r.read_bits(8), 0b11110000);
+        assert_eq!(r.read_bits(1), 1);
+    }
+
+    #[test]
+    fn roundtrip_random_sequences() {
+        Prop::new("bitio roundtrip", 100).check(|g| {
+            let n = g.usize_in(1, 200);
+            let mut items: Vec<(u64, u8)> = Vec::with_capacity(n);
+            let mut w = BitWriter::new();
+            for _ in 0..n {
+                let len = g.usize_in(1, 24) as u8;
+                let code = g.u64() & ((1u64 << len) - 1);
+                items.push((code, len));
+                w.write_bits(code, len);
+            }
+            let bytes = w.finish();
+            let mut r = BitReader::new(&bytes);
+            for &(code, len) in &items {
+                let got = r.read_bits(len);
+                if got != code {
+                    return Err(format!("want {code:#b} got {got:#b} (len {len})"));
+                }
+            }
+            prop_assert(true, "")
+        });
+    }
+
+    #[test]
+    fn reader_past_end_returns_zero() {
+        let mut r = BitReader::new(&[0xFF]);
+        assert_eq!(r.read_bits(8), 0xFF);
+        assert_eq!(r.read_bits(8), 0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Shared frequency-model plumbing for the entropy coders.
+//!
+//! Both the range coder and the Huffman coder work from an integer
+//! frequency table derived from the *model* pmf (the Bernoulli-Gauss
+//! mixture bin probabilities). Encoder and decoder derive the identical
+//! table from the quantizer parameters carried in the message header, so no
+//! codebook is ever transmitted.
+
+use crate::error::{Error, Result};
+
+/// Total frequency mass (power of two; range coder needs `total << range`).
+pub const FREQ_TOTAL: u32 = 1 << 16;
+
+/// Integer frequency model with cumulative table.
+#[derive(Debug, Clone)]
+pub struct FreqTable {
+    /// Per-symbol frequency (each ≥ 1, sums to `FREQ_TOTAL`).
+    pub freq: Vec<u32>,
+    /// Cumulative frequencies, `cum[i] = Σ_{j<i} freq[j]`, len = n+1.
+    pub cum: Vec<u32>,
+    /// Direct cumulative-frequency → symbol lookup (len `FREQ_TOTAL`).
+    /// Replaces the binary search on the decoder hot path — §Perf took the
+    /// range decode from ~38 ns/symbol to ~8 ns/symbol.
+    lut: Vec<u16>,
+}
+
+impl FreqTable {
+    /// Quantize a pmf into integer frequencies summing to `FREQ_TOTAL`,
+    /// giving every symbol at least frequency 1 (every bin index must be
+    /// encodable even when the model assigns it ~0 probability).
+    pub fn from_pmf(pmf: &[f64]) -> Result<FreqTable> {
+        let n = pmf.len();
+        if n == 0 {
+            return Err(Error::Codec("empty pmf".into()));
+        }
+        if n as u32 > FREQ_TOTAL / 2 {
+            return Err(Error::Codec(format!("alphabet {n} too large")));
+        }
+        let sum: f64 = pmf.iter().sum();
+        if !(sum.is_finite() && sum > 0.0) || pmf.iter().any(|&p| !(p >= 0.0)) {
+            return Err(Error::Codec("pmf must be non-negative with positive sum".into()));
+        }
+        // Largest-remainder rounding with a floor of 1.
+        let budget = FREQ_TOTAL - n as u32;
+        let mut freq: Vec<u32> = Vec::with_capacity(n);
+        let mut rema: Vec<(f64, usize)> = Vec::with_capacity(n);
+        let mut used: u64 = 0;
+        for (i, &p) in pmf.iter().enumerate() {
+            let exact = p / sum * budget as f64;
+            let fl = exact.floor();
+            freq.push(1 + fl as u32);
+            used += fl as u64;
+            rema.push((exact - fl, i));
+        }
+        let mut left = (budget as u64 - used) as usize;
+        rema.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        for &(_, i) in rema.iter().take(left.min(n)) {
+            freq[i] += 1;
+            left = left.saturating_sub(1);
+        }
+        // Any residue (can happen when left > n from pathological pmfs)
+        // goes to the most probable symbol.
+        if left > 0 {
+            let argmax = (0..n).max_by_key(|&i| freq[i]).unwrap();
+            freq[argmax] += left as u32;
+        }
+        let mut cum = Vec::with_capacity(n + 1);
+        let mut acc = 0u32;
+        cum.push(0);
+        for &f in &freq {
+            acc += f;
+            cum.push(acc);
+        }
+        debug_assert_eq!(acc, FREQ_TOTAL);
+        // Dense decode LUT (symbol count ≤ FREQ_TOTAL/2 always fits u16).
+        let mut lut = vec![0u16; FREQ_TOTAL as usize];
+        for s in 0..n {
+            lut[cum[s] as usize..cum[s + 1] as usize].fill(s as u16);
+        }
+        Ok(FreqTable { freq, cum, lut })
+    }
+
+    /// Number of symbols.
+    pub fn len(&self) -> usize {
+        self.freq.len()
+    }
+
+    /// True when empty (never, post-construction).
+    pub fn is_empty(&self) -> bool {
+        self.freq.is_empty()
+    }
+
+    /// Find the symbol whose cumulative interval contains `target`
+    /// (O(1) dense-LUT lookup; decoder hot path).
+    #[inline]
+    pub fn find(&self, target: u32) -> usize {
+        debug_assert!(target < FREQ_TOTAL);
+        self.lut[target as usize] as usize
+    }
+
+    /// Ideal codeword length of symbol `s` in bits (for analytics).
+    pub fn bits(&self, s: usize) -> f64 {
+        -((self.freq[s] as f64 / FREQ_TOTAL as f64).log2())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, Prop};
+
+    #[test]
+    fn from_pmf_sums_to_total() {
+        let t = FreqTable::from_pmf(&[0.5, 0.25, 0.25]).unwrap();
+        assert_eq!(t.freq.iter().sum::<u32>(), FREQ_TOTAL);
+        assert_eq!(*t.cum.last().unwrap(), FREQ_TOTAL);
+        // Proportions approximately preserved.
+        assert!((t.freq[0] as f64 / FREQ_TOTAL as f64 - 0.5).abs() < 1e-3);
+    }
+
+    #[test]
+    fn zero_prob_symbols_get_floor_one() {
+        let t = FreqTable::from_pmf(&[1.0, 0.0, 0.0]).unwrap();
+        assert!(t.freq[1] >= 1 && t.freq[2] >= 1);
+        assert_eq!(t.freq.iter().sum::<u32>(), FREQ_TOTAL);
+    }
+
+    #[test]
+    fn rejects_bad_pmfs() {
+        assert!(FreqTable::from_pmf(&[]).is_err());
+        assert!(FreqTable::from_pmf(&[0.0, 0.0]).is_err());
+        assert!(FreqTable::from_pmf(&[f64::NAN, 1.0]).is_err());
+        assert!(FreqTable::from_pmf(&[-0.1, 1.1]).is_err());
+    }
+
+    #[test]
+    fn find_inverts_cum() {
+        Prop::new("find(cum) inverse", 100).check(|g| {
+            let n = g.usize_in(1, 600);
+            let pmf: Vec<f64> = (0..n).map(|_| g.f64_in(0.0, 1.0).powi(3)).collect();
+            let t = match FreqTable::from_pmf(&pmf) {
+                Ok(t) => t,
+                Err(_) => return Ok(()), // all-zero draw; skip
+            };
+            for _ in 0..50 {
+                let target = (g.u64() % FREQ_TOTAL as u64) as u32;
+                let s = t.find(target);
+                prop_assert(
+                    t.cum[s] <= target && target < t.cum[s + 1],
+                    format!("target {target} sym {s} cum [{}, {})", t.cum[s], t.cum[s + 1]),
+                )?;
+            }
+            Ok(())
+        });
+    }
+}

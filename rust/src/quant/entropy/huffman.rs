@@ -1,0 +1,282 @@
+//! Canonical Huffman coder over the same [`FreqTable`] model as the range
+//! coder. Used as the integer-bit-length comparison point in the codec
+//! ablation (`benches/ablation_codec.rs`): Huffman pays up to ~1 bit/symbol
+//! over entropy on skewed sources, the range coder does not.
+
+use std::collections::BinaryHeap;
+
+use crate::error::{Error, Result};
+use crate::quant::entropy::bitio::{BitReader, BitWriter};
+use crate::quant::entropy::freq::FreqTable;
+
+/// Maximum codeword length we allow (freqs are ≥ 1/2^16, so Huffman depth
+/// is bounded well below this; the cap is a hard safety net).
+const MAX_LEN: u8 = 48;
+
+/// A canonical Huffman codebook.
+#[derive(Debug, Clone)]
+pub struct Huffman {
+    /// Code length per symbol.
+    pub lens: Vec<u8>,
+    /// Canonical code per symbol (MSB-first).
+    pub codes: Vec<u64>,
+    /// For decoding: symbols sorted by (len, symbol).
+    sorted_syms: Vec<u32>,
+    /// first_code[l] = canonical code of the first length-l codeword.
+    first_code: Vec<u64>,
+    /// first_index[l] = index into sorted_syms of the first length-l code.
+    first_index: Vec<u32>,
+    max_len: u8,
+}
+
+#[derive(PartialEq, Eq)]
+struct Node {
+    weight: u64,
+    id: u32,
+    left: i32,
+    right: i32,
+}
+
+impl Ord for Node {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // Reversed: BinaryHeap is a max-heap, we need min-weight first.
+        other.weight.cmp(&self.weight).then(other.id.cmp(&self.id))
+    }
+}
+
+impl PartialOrd for Node {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Huffman {
+    /// Build from a frequency table.
+    pub fn from_table(table: &FreqTable) -> Result<Huffman> {
+        let n = table.len();
+        if n == 0 {
+            return Err(Error::Codec("empty alphabet".into()));
+        }
+        if n == 1 {
+            // Degenerate: one symbol, 1-bit code (0).
+            return Ok(Huffman {
+                lens: vec![1],
+                codes: vec![0],
+                sorted_syms: vec![0],
+                first_code: vec![0, 0],
+                first_index: vec![0, 0],
+                max_len: 1,
+            });
+        }
+        // Build the tree with a min-heap.
+        let mut nodes: Vec<Node> = Vec::with_capacity(2 * n);
+        let mut heap = BinaryHeap::new();
+        for (i, &f) in table.freq.iter().enumerate() {
+            nodes.push(Node { weight: f as u64, id: i as u32, left: -1, right: -1 });
+        }
+        for i in 0..n {
+            heap.push(Node {
+                weight: nodes[i].weight,
+                id: i as u32,
+                left: -1,
+                right: -1,
+            });
+        }
+        while heap.len() > 1 {
+            let a = heap.pop().unwrap();
+            let b = heap.pop().unwrap();
+            let id = nodes.len() as u32;
+            nodes.push(Node {
+                weight: a.weight + b.weight,
+                id,
+                left: a.id as i32,
+                right: b.id as i32,
+            });
+            heap.push(Node { weight: a.weight + b.weight, id, left: -1, right: -1 });
+        }
+        let root = heap.pop().unwrap().id as usize;
+        // Depth-first to get code lengths.
+        let mut lens = vec![0u8; n];
+        let mut stack = vec![(root, 0u8)];
+        while let Some((idx, depth)) = stack.pop() {
+            let node = &nodes[idx];
+            if node.left < 0 {
+                lens[idx] = depth.max(1);
+            } else {
+                if depth + 1 > MAX_LEN {
+                    return Err(Error::Codec("huffman code too long".into()));
+                }
+                stack.push((node.left as usize, depth + 1));
+                stack.push((node.right as usize, depth + 1));
+            }
+        }
+        Self::from_lengths(lens)
+    }
+
+    /// Build canonical codes from code lengths.
+    pub fn from_lengths(lens: Vec<u8>) -> Result<Huffman> {
+        let n = lens.len();
+        let max_len = *lens.iter().max().unwrap_or(&1);
+        if max_len as usize > MAX_LEN as usize {
+            return Err(Error::Codec("length overflow".into()));
+        }
+        // Sort symbols by (len, symbol) — canonical order.
+        let mut sorted_syms: Vec<u32> = (0..n as u32).collect();
+        sorted_syms.sort_by_key(|&s| (lens[s as usize], s));
+        let mut codes = vec![0u64; n];
+        let mut first_code = vec![0u64; max_len as usize + 2];
+        let mut first_index = vec![0u32; max_len as usize + 2];
+        let mut code = 0u64;
+        let mut prev_len = 0u8;
+        for (rank, &s) in sorted_syms.iter().enumerate() {
+            let l = lens[s as usize];
+            if l == 0 {
+                return Err(Error::Codec("zero-length code".into()));
+            }
+            code <<= l - prev_len;
+            if prev_len != l {
+                for fill in (prev_len + 1)..=l {
+                    first_code[fill as usize] = code >> (l - fill).min(63);
+                    first_index[fill as usize] = rank as u32;
+                }
+            }
+            codes[s as usize] = code;
+            code += 1;
+            prev_len = l;
+        }
+        // Kraft check: codes must fit.
+        let kraft: f64 = lens.iter().map(|&l| 2f64.powi(-(l as i32))).sum();
+        if kraft > 1.0 + 1e-9 {
+            return Err(Error::Codec(format!("kraft sum {kraft} > 1")));
+        }
+        Ok(Huffman { lens, codes, sorted_syms, first_code, first_index, max_len })
+    }
+
+    /// Encode a block of symbols.
+    pub fn encode_block(&self, syms: &[usize]) -> Vec<u8> {
+        let mut w = BitWriter::new();
+        for &s in syms {
+            w.write_bits(self.codes[s], self.lens[s]);
+        }
+        w.finish()
+    }
+
+    /// Exact bit length of a block (without byte padding).
+    pub fn block_bits(&self, syms: &[usize]) -> u64 {
+        syms.iter().map(|&s| self.lens[s] as u64).sum()
+    }
+
+    /// Decode `n` symbols.
+    pub fn decode_block(&self, bytes: &[u8], n: usize) -> Result<Vec<usize>> {
+        let mut r = BitReader::new(bytes);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut code = 0u64;
+            let mut len = 0u8;
+            loop {
+                code = (code << 1) | r.read_bit() as u64;
+                len += 1;
+                if len > self.max_len {
+                    return Err(Error::Codec("invalid huffman stream".into()));
+                }
+                // Canonical decode: within length class `len`, codes are
+                // consecutive starting at first_code[len].
+                let fc = self.first_code[len as usize];
+                if self.has_len(len) && code >= fc {
+                    let rank = self.first_index[len as usize] as u64 + (code - fc);
+                    if let Some(&s) = self.sorted_syms.get(rank as usize) {
+                        if self.lens[s as usize] == len && self.codes[s as usize] == code {
+                            out.push(s as usize);
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn has_len(&self, len: u8) -> bool {
+        self.lens.iter().any(|&l| l == len)
+    }
+
+    /// Mean code length under a pmf (bits/symbol).
+    pub fn mean_len(&self, pmf: &[f64]) -> f64 {
+        pmf.iter().zip(&self.lens).map(|(&p, &l)| p * l as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, Prop};
+    use crate::util::rng::Rng;
+    use crate::util::xlog2x;
+
+    fn table(pmf: &[f64]) -> FreqTable {
+        FreqTable::from_pmf(pmf).unwrap()
+    }
+
+    #[test]
+    fn known_code_lengths() {
+        // pmf {0.5, 0.25, 0.125, 0.125} → lengths {1, 2, 3, 3}.
+        let h = Huffman::from_table(&table(&[0.5, 0.25, 0.125, 0.125])).unwrap();
+        assert_eq!(h.lens, vec![1, 2, 3, 3]);
+    }
+
+    #[test]
+    fn roundtrip_fixed() {
+        let h = Huffman::from_table(&table(&[0.4, 0.3, 0.2, 0.1])).unwrap();
+        let syms = vec![0, 1, 2, 3, 3, 2, 1, 0, 0, 0];
+        let bytes = h.encode_block(&syms);
+        assert_eq!(h.decode_block(&bytes, syms.len()).unwrap(), syms);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        Prop::new("huffman roundtrip", 60).check(|g| {
+            let n_sym = g.usize_in(1, 300);
+            let pmf: Vec<f64> = (0..n_sym).map(|_| g.f64_in(0.0, 1.0).powi(4) + 1e-9).collect();
+            let t = table(&pmf);
+            let h = Huffman::from_table(&t).map_err(|e| e.to_string())?;
+            let mut rng = Rng::new(g.u64());
+            let len = g.usize_in(0, 2000);
+            let syms: Vec<usize> =
+                (0..len).map(|_| rng.below(n_sym as u64) as usize).collect();
+            let bytes = h.encode_block(&syms);
+            let back = h.decode_block(&bytes, len).map_err(|e| e.to_string())?;
+            prop_assert(back == syms, "mismatch")
+        });
+    }
+
+    #[test]
+    fn mean_len_within_one_bit_of_entropy() {
+        Prop::new("huffman ≤ H+1", 40).check(|g| {
+            let n_sym = g.usize_in(2, 64);
+            let raw: Vec<f64> = (0..n_sym).map(|_| g.f64_in(0.001, 1.0)).collect();
+            let s: f64 = raw.iter().sum();
+            let pmf: Vec<f64> = raw.iter().map(|p| p / s).collect();
+            let h = Huffman::from_table(&table(&pmf)).map_err(|e| e.to_string())?;
+            let entropy: f64 = -pmf.iter().map(|&p| xlog2x(p)).sum::<f64>();
+            let ml = h.mean_len(&pmf);
+            prop_assert(
+                ml >= entropy - 1e-6 && ml <= entropy + 1.0 + 1e-6,
+                format!("H={entropy} mean_len={ml}"),
+            )
+        });
+    }
+
+    #[test]
+    fn single_symbol_alphabet() {
+        let h = Huffman::from_table(&table(&[1.0])).unwrap();
+        let syms = vec![0; 17];
+        let bytes = h.encode_block(&syms);
+        assert_eq!(h.decode_block(&bytes, 17).unwrap(), syms);
+        assert_eq!(h.block_bits(&syms), 17);
+    }
+
+    #[test]
+    fn kraft_violation_rejected() {
+        assert!(Huffman::from_lengths(vec![1, 1, 1]).is_err());
+    }
+}

@@ -1,0 +1,12 @@
+//! Entropy coding for the quantized uplink: a static range coder (default)
+//! and a canonical Huffman coder, both driven by the same integer frequency
+//! model derived from the Bernoulli-Gauss mixture bin pmf.
+
+pub mod bitio;
+pub mod freq;
+pub mod huffman;
+pub mod range;
+
+pub use freq::{FreqTable, FREQ_TOTAL};
+pub use huffman::Huffman;
+pub use range::{RangeDecoder, RangeEncoder};

@@ -1,0 +1,222 @@
+//! Static range coder (LZMA-style, carry-aware, byte renormalization).
+//!
+//! Codes a symbol stream against a fixed [`FreqTable`] built from the model
+//! pmf. Overhead vs the ideal `Σ -log2 p_i` is ≤ ~5 bytes per block plus
+//! the pmf-quantization loss — measured in `benches/ablation_codec.rs`.
+
+use crate::error::{Error, Result};
+use crate::quant::entropy::freq::{FreqTable, FREQ_TOTAL};
+
+const TOP: u32 = 1 << 24;
+
+/// Range encoder writing to an internal byte buffer.
+pub struct RangeEncoder {
+    low: u64,
+    range: u32,
+    cache: u8,
+    cache_size: u64,
+    out: Vec<u8>,
+}
+
+impl Default for RangeEncoder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RangeEncoder {
+    /// New encoder.
+    pub fn new() -> Self {
+        RangeEncoder { low: 0, range: u32::MAX, cache: 0, cache_size: 1, out: Vec::new() }
+    }
+
+    /// Encode one symbol under the table.
+    #[inline]
+    pub fn encode(&mut self, table: &FreqTable, sym: usize) {
+        let start = table.cum[sym];
+        let size = table.freq[sym];
+        let r = self.range / FREQ_TOTAL;
+        self.low += (r as u64) * (start as u64);
+        self.range = r * size;
+        while self.range < TOP {
+            self.shift_low();
+            self.range <<= 8;
+        }
+    }
+
+    #[inline]
+    fn shift_low(&mut self) {
+        if (self.low as u32) < 0xFF00_0000 || (self.low >> 32) != 0 {
+            let carry = (self.low >> 32) as u8;
+            let mut first = true;
+            while self.cache_size > 0 {
+                let byte = if first { self.cache.wrapping_add(carry) } else { 0xFFu8.wrapping_add(carry) };
+                self.out.push(byte);
+                first = false;
+                self.cache_size -= 1;
+            }
+            self.cache = (self.low >> 24) as u8;
+        }
+        self.cache_size += 1;
+        self.low = (self.low << 8) & 0xFFFF_FFFF;
+    }
+
+    /// Flush and return the encoded bytes.
+    pub fn finish(mut self) -> Vec<u8> {
+        for _ in 0..5 {
+            self.shift_low();
+        }
+        self.out
+    }
+}
+
+/// Range decoder over a byte slice.
+pub struct RangeDecoder<'a> {
+    range: u32,
+    code: u32,
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> RangeDecoder<'a> {
+    /// Initialize from encoded bytes.
+    pub fn new(buf: &'a [u8]) -> Result<Self> {
+        if buf.is_empty() {
+            return Err(Error::Codec("empty range-coded stream".into()));
+        }
+        let mut d = RangeDecoder { range: u32::MAX, code: 0, buf, pos: 1 };
+        for _ in 0..4 {
+            d.code = (d.code << 8) | d.next_byte() as u32;
+        }
+        Ok(d)
+    }
+
+    #[inline]
+    fn next_byte(&mut self) -> u8 {
+        let b = self.buf.get(self.pos).copied().unwrap_or(0);
+        self.pos += 1;
+        b
+    }
+
+    /// Decode one symbol under the table.
+    #[inline]
+    pub fn decode(&mut self, table: &FreqTable) -> usize {
+        let r = self.range / FREQ_TOTAL;
+        let target = (self.code / r).min(FREQ_TOTAL - 1);
+        let sym = table.find(target);
+        let start = table.cum[sym];
+        let size = table.freq[sym];
+        self.code -= r * start;
+        self.range = r * size;
+        while self.range < TOP {
+            self.code = (self.code << 8) | self.next_byte() as u32;
+            self.range <<= 8;
+        }
+        sym
+    }
+}
+
+/// Encode a full block of symbols.
+pub fn encode_block(table: &FreqTable, syms: &[usize]) -> Vec<u8> {
+    let mut enc = RangeEncoder::new();
+    for &s in syms {
+        debug_assert!(s < table.len());
+        enc.encode(table, s);
+    }
+    enc.finish()
+}
+
+/// Decode `n` symbols from a block.
+pub fn decode_block(table: &FreqTable, bytes: &[u8], n: usize) -> Result<Vec<usize>> {
+    let mut dec = RangeDecoder::new(bytes)?;
+    Ok((0..n).map(|_| dec.decode(table)).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, Prop};
+    use crate::util::rng::Rng;
+
+    fn sample_pmf(rng: &mut Rng, pmf: &[f64]) -> usize {
+        let u: f64 = rng.uniform();
+        let mut acc = 0.0;
+        for (i, &p) in pmf.iter().enumerate() {
+            acc += p;
+            if u < acc {
+                return i;
+            }
+        }
+        pmf.len() - 1
+    }
+
+    #[test]
+    fn roundtrip_uniform_pmf() {
+        let pmf = vec![0.25; 4];
+        let table = FreqTable::from_pmf(&pmf).unwrap();
+        let syms: Vec<usize> = (0..1000).map(|i| i % 4).collect();
+        let bytes = encode_block(&table, &syms);
+        let back = decode_block(&table, &bytes, syms.len()).unwrap();
+        assert_eq!(syms, back);
+        // Uniform 4-ary: 2 bits/symbol + small overhead.
+        assert!((bytes.len() as f64) < 1000.0 * 2.0 / 8.0 + 16.0);
+    }
+
+    #[test]
+    fn roundtrip_random_pmfs() {
+        Prop::new("range coder roundtrip", 60).check(|g| {
+            let n_sym = g.usize_in(2, 500);
+            let pmf: Vec<f64> = (0..n_sym).map(|_| g.f64_in(0.0, 1.0).powi(4) + 1e-9).collect();
+            let total: f64 = pmf.iter().sum();
+            let pmf: Vec<f64> = pmf.iter().map(|p| p / total).collect();
+            let table = FreqTable::from_pmf(&pmf).unwrap();
+            let mut rng = Rng::new(g.u64());
+            let len = g.usize_in(0, 3000);
+            let syms: Vec<usize> = (0..len).map(|_| sample_pmf(&mut rng, &pmf)).collect();
+            let bytes = encode_block(&table, &syms);
+            let back = decode_block(&table, &bytes, len)
+                .map_err(|e| format!("decode failed: {e}"))?;
+            prop_assert(back == syms, format!("mismatch at len {len}"))
+        });
+    }
+
+    #[test]
+    fn rate_close_to_entropy() {
+        // Skewed binary source: H ≈ 0.469 bits. Range coder should land
+        // within ~1% + constant.
+        let pmf = [0.9, 0.1];
+        let table = FreqTable::from_pmf(&pmf).unwrap();
+        let mut rng = Rng::new(99);
+        let n = 100_000;
+        let syms: Vec<usize> = (0..n).map(|_| sample_pmf(&mut rng, &pmf)).collect();
+        let bytes = encode_block(&table, &syms);
+        let bits_per_sym = bytes.len() as f64 * 8.0 / n as f64;
+        let h: f64 = -(0.9f64.log2() * 0.9 + 0.1f64.log2() * 0.1);
+        assert!(
+            bits_per_sym < h * 1.02 + 0.01,
+            "rate {bits_per_sym} vs entropy {h}"
+        );
+    }
+
+    #[test]
+    fn rare_symbols_still_roundtrip() {
+        // Model says symbol 1 has ~0 probability, but the data contains it.
+        let table = FreqTable::from_pmf(&[1.0, 0.0]).unwrap();
+        let syms = vec![0, 0, 1, 0, 1, 1, 0];
+        let bytes = encode_block(&table, &syms);
+        assert_eq!(decode_block(&table, &bytes, syms.len()).unwrap(), syms);
+    }
+
+    #[test]
+    fn empty_block() {
+        let table = FreqTable::from_pmf(&[0.5, 0.5]).unwrap();
+        let bytes = encode_block(&table, &[]);
+        assert_eq!(decode_block(&table, &bytes, 0).unwrap(), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn decoder_rejects_empty_buffer() {
+        let table = FreqTable::from_pmf(&[0.5, 0.5]).unwrap();
+        assert!(decode_block(&table, &[], 1).is_err());
+    }
+}

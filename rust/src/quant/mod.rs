@@ -1,0 +1,231 @@
+//! Entropy-coded scalar quantization (ECSQ) of the worker uplink vectors —
+//! the paper's §3.2. [`uniform`] holds the quantizer + model pmf/entropy,
+//! [`entropy`] the wire codecs. [`EcsqCoder`] ties them together: design a
+//! quantizer from a target MSE or rate, then encode/decode blocks with the
+//! configured codec while tracking analytic and actual bit costs.
+
+pub mod entropy;
+pub mod uniform;
+
+use crate::config::CodecKind;
+use crate::error::Result;
+use crate::quant::entropy::{FreqTable, Huffman};
+use crate::se::prior::BgChannel;
+pub use uniform::UniformQuantizer;
+
+/// A designed quantizer + model + codec, ready to code blocks.
+#[derive(Debug, Clone)]
+pub struct EcsqCoder {
+    /// The scalar quantizer.
+    pub quantizer: UniformQuantizer,
+    /// Model bin pmf (shared by encoder and decoder).
+    pub pmf: Vec<f64>,
+    /// Model entropy `H_Q` in bits/symbol.
+    pub entropy_bits: f64,
+    /// Wire codec.
+    pub codec: CodecKind,
+    freq: FreqTable,
+    huff: Option<Huffman>,
+}
+
+/// Result of encoding one block.
+#[derive(Debug, Clone)]
+pub struct EncodedBlock {
+    /// Wire bytes (empty for `CodecKind::Analytic`).
+    pub bytes: Vec<u8>,
+    /// Exact wire bits (analytic `H_Q·n` for the analytic codec).
+    pub wire_bits: f64,
+    /// Number of symbols.
+    pub n: usize,
+}
+
+impl EcsqCoder {
+    /// Build from an already-designed quantizer.
+    pub fn new(
+        quantizer: UniformQuantizer,
+        channel: &BgChannel,
+        sigma2: f64,
+        codec: CodecKind,
+    ) -> Result<Self> {
+        let pmf = quantizer.bin_pmf(channel, sigma2);
+        let entropy_bits = -pmf.iter().map(|&p| crate::util::xlog2x(p)).sum::<f64>();
+        let freq = FreqTable::from_pmf(&pmf)?;
+        let huff = match codec {
+            CodecKind::Huffman => Some(Huffman::from_table(&freq)?),
+            _ => None,
+        };
+        Ok(EcsqCoder { quantizer, pmf, entropy_bits, codec, freq, huff })
+    }
+
+    /// Design for a target quantization MSE σ_Q² (`Δ = √(12σ_Q²)`).
+    pub fn for_mse(
+        channel: &BgChannel,
+        sigma2: f64,
+        sigma_q2: f64,
+        clip_sds: f64,
+        codec: CodecKind,
+    ) -> Result<Self> {
+        let clip = channel.clip_range(sigma2, clip_sds);
+        let q = UniformQuantizer::for_mse(sigma_q2, clip, 0.0)?;
+        Self::new(q, channel, sigma2, codec)
+    }
+
+    /// Design for a target rate (bits/element), inverting `H_Q`.
+    pub fn for_rate(
+        channel: &BgChannel,
+        sigma2: f64,
+        rate_bits: f64,
+        clip_sds: f64,
+        codec: CodecKind,
+    ) -> Result<Self> {
+        let q = UniformQuantizer::for_rate(channel, sigma2, rate_bits, clip_sds, 0.0)?;
+        Self::new(q, channel, sigma2, codec)
+    }
+
+    /// Quantize + entropy-code a block.
+    pub fn encode(&self, xs: &[f32]) -> Result<EncodedBlock> {
+        let syms = self.quantizer.quantize_block(xs);
+        self.encode_symbols(&syms)
+    }
+
+    /// Entropy-code pre-quantized symbols.
+    pub fn encode_symbols(&self, syms: &[usize]) -> Result<EncodedBlock> {
+        let n = syms.len();
+        let (bytes, wire_bits) = match self.codec {
+            CodecKind::Analytic => (Vec::new(), self.entropy_bits * n as f64),
+            CodecKind::Range => {
+                let bytes = entropy::range::encode_block(&self.freq, syms);
+                let bits = bytes.len() as f64 * 8.0;
+                (bytes, bits)
+            }
+            CodecKind::Huffman => {
+                let h = self.huff.as_ref().expect("huffman built in new()");
+                let bits = h.block_bits(syms) as f64;
+                (h.encode_block(syms), bits)
+            }
+        };
+        Ok(EncodedBlock { bytes, wire_bits, n })
+    }
+
+    /// Decode a block back to reconstruction values.
+    ///
+    /// For the analytic codec (no wire bytes) callers must pass the original
+    /// symbols via `fallback_syms` — the coordinator keeps them local.
+    pub fn decode(
+        &self,
+        block: &EncodedBlock,
+        fallback_syms: Option<&[usize]>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        let syms = self.decode_symbols(block, fallback_syms)?;
+        self.quantizer.dequantize_block(&syms, out);
+        Ok(())
+    }
+
+    /// Decode a block back to symbols.
+    pub fn decode_symbols(
+        &self,
+        block: &EncodedBlock,
+        fallback_syms: Option<&[usize]>,
+    ) -> Result<Vec<usize>> {
+        match self.codec {
+            CodecKind::Analytic => fallback_syms.map(<[usize]>::to_vec).ok_or_else(|| {
+                crate::error::Error::Codec(
+                    "analytic codec requires local symbols".into(),
+                )
+            }),
+            CodecKind::Range => entropy::range::decode_block(&self.freq, &block.bytes, block.n),
+            CodecKind::Huffman => {
+                self.huff.as_ref().expect("huffman built").decode_block(&block.bytes, block.n)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::BernoulliGauss;
+    use crate::util::rng::Rng;
+
+    fn channel(eps: f64) -> BgChannel {
+        BgChannel::new(BernoulliGauss::standard(eps))
+    }
+
+    fn sample_block(c: &BgChannel, s2: f64, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (c.prior.sample(&mut rng) + rng.gaussian() * s2.sqrt()) as f32)
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_all_codecs() {
+        let c = channel(0.05);
+        let s2 = 0.02;
+        let xs = sample_block(&c, s2, 4000, 1);
+        for codec in [CodecKind::Analytic, CodecKind::Range, CodecKind::Huffman] {
+            let coder = EcsqCoder::for_rate(&c, s2, 3.0, 8.0, codec).unwrap();
+            let syms = coder.quantizer.quantize_block(&xs);
+            let block = coder.encode(&xs).unwrap();
+            let mut out = vec![0f32; xs.len()];
+            coder.decode(&block, Some(&syms), &mut out).unwrap();
+            let delta = coder.quantizer.delta;
+            for (x, o) in xs.iter().zip(&out) {
+                assert!(
+                    ((x - o).abs() as f64) <= delta / 2.0 + 1e-6,
+                    "{codec:?}: |{x}-{o}| > Δ/2"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn range_rate_close_to_entropy() {
+        let c = channel(0.05);
+        let s2 = 0.02;
+        let xs = sample_block(&c, s2, 50_000, 2);
+        let coder = EcsqCoder::for_rate(&c, s2, 2.5, 8.0, CodecKind::Range).unwrap();
+        let block = coder.encode(&xs).unwrap();
+        let wire = block.wire_bits / xs.len() as f64;
+        assert!(
+            wire < coder.entropy_bits * 1.02 + 0.01,
+            "wire {wire} vs H {}",
+            coder.entropy_bits
+        );
+        assert!(wire > coder.entropy_bits * 0.95, "wire suspiciously small");
+    }
+
+    #[test]
+    fn huffman_within_one_bit() {
+        let c = channel(0.1);
+        let s2 = 0.05;
+        let xs = sample_block(&c, s2, 30_000, 3);
+        let coder = EcsqCoder::for_rate(&c, s2, 2.0, 8.0, CodecKind::Huffman).unwrap();
+        let block = coder.encode(&xs).unwrap();
+        let wire = block.wire_bits / xs.len() as f64;
+        assert!(wire >= coder.entropy_bits - 1e-9);
+        assert!(wire <= coder.entropy_bits + 1.0 + 0.05, "wire {wire}");
+    }
+
+    #[test]
+    fn analytic_codec_charges_entropy() {
+        let c = channel(0.05);
+        let s2 = 0.02;
+        let xs = sample_block(&c, s2, 1000, 4);
+        let coder = EcsqCoder::for_rate(&c, s2, 3.0, 8.0, CodecKind::Analytic).unwrap();
+        let block = coder.encode(&xs).unwrap();
+        assert!(block.bytes.is_empty());
+        assert!((block.wire_bits - coder.entropy_bits * 1000.0).abs() < 1e-9);
+        // Decoding without local symbols must fail loudly.
+        let mut out = vec![0f32; 1000];
+        assert!(coder.decode(&block, None, &mut out).is_err());
+    }
+
+    #[test]
+    fn for_mse_sets_delta() {
+        let c = channel(0.05);
+        let coder = EcsqCoder::for_mse(&c, 0.02, 1e-4, 8.0, CodecKind::Range).unwrap();
+        assert!((coder.quantizer.sigma_q2() - 1e-4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,377 @@
+//! Uniform scalar quantizer for the worker uplink vectors `f_t^p` (paper
+//! §3.2 "Scalar Quantization"), with model-based bin probabilities and
+//! entropy, and the rate↔bin-size inversions the controllers need.
+//!
+//! Mid-tread with saturation: `index(x) = clamp(round((x−c)/Δ), ±K)`,
+//! reconstruction at bin centers. The paper's validity condition for the
+//! additive-uniform-noise model (`Δ_Q ≤ 2σ_t/√P`, citing Widrow & Kollár)
+//! is exposed as [`UniformQuantizer::dither_model_valid`].
+
+use crate::error::{Error, Result};
+use crate::se::prior::BgChannel;
+use crate::util::xlog2x;
+
+/// A mid-tread uniform quantizer with saturation.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UniformQuantizer {
+    /// Bin width Δ_Q.
+    pub delta: f64,
+    /// Largest bin index: indices run −K..=K (2K+1 bins).
+    pub k_max: i32,
+    /// Center of the zero bin (0 for the paper's symmetric sources).
+    pub center: f64,
+}
+
+impl UniformQuantizer {
+    /// Build from bin width + clip half-range (`K = ceil(clip/Δ)`).
+    pub fn new(delta: f64, clip: f64, center: f64) -> Result<Self> {
+        if !(delta.is_finite() && delta > 0.0) {
+            return Err(Error::Numerical(format!("bad delta {delta}")));
+        }
+        if !(clip.is_finite() && clip > 0.0) {
+            return Err(Error::Numerical(format!("bad clip {clip}")));
+        }
+        let k = (clip / delta).ceil() as i64;
+        if k > 1 << 20 {
+            return Err(Error::Numerical(format!(
+                "quantizer would need {} bins (delta too small)",
+                2 * k + 1
+            )));
+        }
+        Ok(UniformQuantizer { delta, k_max: k.max(1) as i32, center })
+    }
+
+    /// Build for a target quantization MSE `σ_Q² = Δ²/12`.
+    pub fn for_mse(sigma_q2: f64, clip: f64, center: f64) -> Result<Self> {
+        Self::new((12.0 * sigma_q2).sqrt(), clip, center)
+    }
+
+    /// Quantization-noise variance of the uniform model, `Δ²/12`.
+    pub fn sigma_q2(&self) -> f64 {
+        self.delta * self.delta / 12.0
+    }
+
+    /// Number of bins (2K+1).
+    pub fn nbins(&self) -> usize {
+        (2 * self.k_max + 1) as usize
+    }
+
+    /// Signed bin index of a sample.
+    #[inline]
+    pub fn index(&self, x: f64) -> i32 {
+        let i = ((x - self.center) / self.delta).round();
+        (i as i64).clamp(-(self.k_max as i64), self.k_max as i64) as i32
+    }
+
+    /// Symbol (0-based) of a sample — what goes on the wire.
+    #[inline]
+    pub fn symbol(&self, x: f64) -> usize {
+        (self.index(x) + self.k_max) as usize
+    }
+
+    /// Reconstruction value of a signed bin index.
+    #[inline]
+    pub fn reconstruct(&self, index: i32) -> f64 {
+        self.center + index as f64 * self.delta
+    }
+
+    /// Reconstruction value of a 0-based symbol.
+    #[inline]
+    pub fn reconstruct_symbol(&self, sym: usize) -> f64 {
+        self.reconstruct(sym as i32 - self.k_max)
+    }
+
+    /// Quantize a block to symbols.
+    pub fn quantize_block(&self, xs: &[f32]) -> Vec<usize> {
+        xs.iter().map(|&x| self.symbol(x as f64)).collect()
+    }
+
+    /// Dequantize a block of symbols.
+    pub fn dequantize_block(&self, syms: &[usize], out: &mut [f32]) {
+        debug_assert_eq!(syms.len(), out.len());
+        for (o, &s) in out.iter_mut().zip(syms) {
+            *o = self.reconstruct_symbol(s) as f32;
+        }
+    }
+
+    /// Model bin pmf under the scalar channel `F ~ channel(sigma2)`:
+    /// interior bins integrate the mixture pdf over `[c+(i−½)Δ, c+(i+½)Δ]`,
+    /// the two edge bins absorb the tails (saturation).
+    pub fn bin_pmf(&self, channel: &BgChannel, sigma2: f64) -> Vec<f64> {
+        let n = self.nbins();
+        let mut pmf = Vec::with_capacity(n);
+        for sym in 0..n {
+            let i = sym as i32 - self.k_max;
+            let lo = if i == -self.k_max {
+                f64::NEG_INFINITY
+            } else {
+                self.center + (i as f64 - 0.5) * self.delta
+            };
+            let hi = if i == self.k_max {
+                f64::INFINITY
+            } else {
+                self.center + (i as f64 + 0.5) * self.delta
+            };
+            let c_lo = if lo.is_finite() { channel.cdf_f(lo, sigma2) } else { 0.0 };
+            let c_hi = if hi.is_finite() { channel.cdf_f(hi, sigma2) } else { 1.0 };
+            pmf.push((c_hi - c_lo).max(0.0));
+        }
+        // Normalize the tiny numerical residue.
+        let s: f64 = pmf.iter().sum();
+        if s > 0.0 {
+            for p in pmf.iter_mut() {
+                *p /= s;
+            }
+        }
+        pmf
+    }
+
+    /// Entropy `H_Q` of the quantizer output under the model (bits/symbol).
+    pub fn entropy(&self, channel: &BgChannel, sigma2: f64) -> f64 {
+        -self.bin_pmf(channel, sigma2).iter().map(|&p| xlog2x(p)).sum::<f64>()
+    }
+
+    /// Exact model quantization MSE `E[(F − Q(F))²]` by per-bin integration
+    /// (test/validation path; the runtime uses the `Δ²/12` model).
+    pub fn exact_mse(&self, channel: &BgChannel, sigma2: f64) -> f64 {
+        let mut acc = 0.0;
+        for sym in 0..self.nbins() {
+            let i = sym as i32 - self.k_max;
+            let r = self.reconstruct(i);
+            let lo = if i == -self.k_max {
+                // Integrate the saturated tail out to 12σ of the widest
+                // mixture component.
+                self.center
+                    - (self.k_max as f64 + 0.5) * self.delta
+                    - 12.0 * (channel.prior.sigma_s2 + sigma2).sqrt()
+            } else {
+                self.center + (i as f64 - 0.5) * self.delta
+            };
+            let hi = if i == self.k_max {
+                self.center
+                    + (self.k_max as f64 + 0.5) * self.delta
+                    + 12.0 * (channel.prior.sigma_s2 + sigma2).sqrt()
+            } else {
+                self.center + (i as f64 + 0.5) * self.delta
+            };
+            // Composite Simpson within the bin (bins are narrow).
+            let steps = 16;
+            let h = (hi - lo) / steps as f64;
+            let mut bin = 0.0;
+            for j in 0..=steps {
+                let x = lo + j as f64 * h;
+                let w = if j == 0 || j == steps {
+                    1.0
+                } else if j % 2 == 1 {
+                    4.0
+                } else {
+                    2.0
+                };
+                bin += w * channel.pdf_f(x, sigma2) * (x - r) * (x - r);
+            }
+            acc += bin * h / 3.0;
+        }
+        acc
+    }
+
+    /// The paper's additive-noise validity condition: `Δ_Q ≤ 2σ` where σ²
+    /// is the Gaussian-noise variance of the scalar channel being quantized.
+    pub fn dither_model_valid(&self, channel_noise_var: f64) -> bool {
+        self.delta <= 2.0 * channel_noise_var.sqrt()
+    }
+
+    /// Invert the entropy: find Δ with `H_Q(Δ) = rate` (bisection; `H_Q`
+    /// is decreasing in Δ). `clip_sds` sets the saturation range in units
+    /// of the channel's marginal std.
+    pub fn for_rate(
+        channel: &BgChannel,
+        sigma2: f64,
+        rate_bits: f64,
+        clip_sds: f64,
+        center: f64,
+    ) -> Result<Self> {
+        if rate_bits <= 0.0 {
+            return Err(Error::Numerical(format!("rate {rate_bits} must be > 0")));
+        }
+        let std_f = channel.var_f(sigma2).sqrt();
+        let clip = channel.clip_range(sigma2, clip_sds);
+        let entropy_at = |delta: f64| -> Result<f64> {
+            Ok(Self::new(delta, clip, center)?.entropy(channel, sigma2))
+        };
+        // Bracket: grow/shrink until H(lo) > rate > H(hi).
+        let mut lo = std_f * 1e-3;
+        let mut hi = std_f * 8.0;
+        for _ in 0..60 {
+            if entropy_at(lo)? > rate_bits {
+                break;
+            }
+            lo *= 0.5;
+        }
+        for _ in 0..60 {
+            if entropy_at(hi)? < rate_bits {
+                break;
+            }
+            hi *= 2.0;
+        }
+        if entropy_at(lo)? < rate_bits {
+            return Err(Error::Numerical(format!(
+                "cannot reach rate {rate_bits} bits (lo bracket failed)"
+            )));
+        }
+        for _ in 0..80 {
+            let mid = (lo * hi).sqrt();
+            if entropy_at(mid)? > rate_bits {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+            if hi / lo < 1.0 + 1e-10 {
+                break;
+            }
+        }
+        Self::new((lo * hi).sqrt(), clip, center)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::BernoulliGauss;
+    use crate::util::proptest::{prop_assert, prop_close, Prop};
+    use crate::util::rng::Rng;
+
+    fn channel(eps: f64) -> BgChannel {
+        BgChannel::new(BernoulliGauss::standard(eps))
+    }
+
+    #[test]
+    fn index_reconstruct_roundtrip_error_bounded() {
+        Prop::new("quantizer error ≤ Δ/2 in range", 300).check(|g| {
+            let delta = g.f64_log_in(1e-3, 1.0);
+            let q = UniformQuantizer::new(delta, 10.0, 0.0).map_err(|e| e.to_string())?;
+            let x = g.f64_in(-9.9, 9.9);
+            let err = (q.reconstruct(q.index(x)) - x).abs();
+            prop_assert(
+                err <= delta / 2.0 + 1e-12,
+                format!("x={x} delta={delta} err={err}"),
+            )
+        });
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        let q = UniformQuantizer::new(0.5, 2.0, 0.0).unwrap();
+        assert_eq!(q.index(100.0), q.k_max);
+        assert_eq!(q.index(-100.0), -q.k_max);
+        assert_eq!(q.symbol(-100.0), 0);
+        assert_eq!(q.symbol(100.0), q.nbins() - 1);
+    }
+
+    #[test]
+    fn symbol_index_consistency() {
+        let q = UniformQuantizer::new(0.25, 3.0, 0.0).unwrap();
+        for x in [-3.0, -1.1, 0.0, 0.13, 2.9] {
+            let s = q.symbol(x);
+            assert!((q.reconstruct_symbol(s) - q.reconstruct(q.index(x))).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn pmf_sums_to_one_and_peaks_at_zero() {
+        let c = channel(0.05);
+        let q = UniformQuantizer::new(0.05, 2.0, 0.0).unwrap();
+        let pmf = q.bin_pmf(&c, 0.01);
+        assert!((pmf.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        // Sparse source + small noise: the zero bin dominates.
+        let zero_sym = q.k_max as usize;
+        let max_idx = (0..pmf.len()).max_by(|&a, &b| pmf[a].partial_cmp(&pmf[b]).unwrap());
+        assert_eq!(max_idx, Some(zero_sym));
+    }
+
+    #[test]
+    fn entropy_decreasing_in_delta() {
+        let c = channel(0.1);
+        let s2 = 0.05;
+        let mut prev = f64::INFINITY;
+        for delta in [0.01, 0.03, 0.1, 0.3, 1.0] {
+            let q = UniformQuantizer::new(delta, 5.0, 0.0).unwrap();
+            let h = q.entropy(&c, s2);
+            assert!(h < prev, "H not decreasing at delta={delta}");
+            prev = h;
+        }
+    }
+
+    #[test]
+    fn for_rate_hits_target_entropy() {
+        Prop::new("for_rate inverts entropy", 25).check(|g| {
+            let c = channel(g.f64_in(0.02, 0.3));
+            let s2 = g.f64_log_in(1e-3, 0.5);
+            let rate = g.f64_in(0.5, 8.0);
+            let q = UniformQuantizer::for_rate(&c, s2, rate, 8.0, 0.0)
+                .map_err(|e| e.to_string())?;
+            let h = q.entropy(&c, s2);
+            prop_close(h, rate, 1e-5 * (1.0 + rate), "entropy target")
+        });
+    }
+
+    #[test]
+    fn exact_mse_close_to_model_at_small_delta() {
+        // For Δ well below the channel std the Δ²/12 model is accurate.
+        let c = channel(0.1);
+        let s2 = 0.1f64;
+        let q = UniformQuantizer::new(0.05 * s2.sqrt(), c.clip_range(s2, 8.0), 0.0).unwrap();
+        let exact = q.exact_mse(&c, s2);
+        let model = q.sigma_q2();
+        assert!(
+            (exact / model - 1.0).abs() < 0.05,
+            "exact {exact} vs model {model}"
+        );
+    }
+
+    #[test]
+    fn quantize_dequantize_blocks() {
+        let q = UniformQuantizer::new(0.1, 4.0, 0.0).unwrap();
+        let mut rng = Rng::new(4);
+        let xs: Vec<f32> = (0..500).map(|_| rng.gaussian() as f32).collect();
+        let syms = q.quantize_block(&xs);
+        let mut back = vec![0f32; xs.len()];
+        q.dequantize_block(&syms, &mut back);
+        for (x, b) in xs.iter().zip(&back) {
+            assert!((x - b).abs() <= 0.05 + 1e-6, "x={x} b={b}");
+        }
+    }
+
+    #[test]
+    fn empirical_error_variance_matches_model() {
+        // Quantization error ≈ U[−Δ/2, Δ/2] ⇒ variance Δ²/12 (paper §3.2,
+        // valid for Δ ≤ 2σ).
+        let c = channel(0.05);
+        let s2 = 0.04f64; // σ = 0.2
+        let delta = 0.5 * 2.0 * s2.sqrt(); // half the validity limit
+        let q = UniformQuantizer::new(delta, c.clip_range(s2, 8.0), 0.0).unwrap();
+        assert!(q.dither_model_valid(s2));
+        let mut rng = Rng::new(10);
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let s0 = c.prior.sample(&mut rng);
+            let f = s0 + rng.gaussian() * s2.sqrt();
+            let e = q.reconstruct(q.index(f)) - f;
+            acc += e * e;
+        }
+        let emp = acc / n as f64;
+        let model = q.sigma_q2();
+        assert!(
+            (emp / model - 1.0).abs() < 0.03,
+            "empirical {emp} vs model {model}"
+        );
+    }
+
+    #[test]
+    fn rejects_bad_parameters() {
+        assert!(UniformQuantizer::new(0.0, 1.0, 0.0).is_err());
+        assert!(UniformQuantizer::new(-1.0, 1.0, 0.0).is_err());
+        assert!(UniformQuantizer::new(1.0, 0.0, 0.0).is_err());
+        assert!(UniformQuantizer::new(1e-9, 1e6, 0.0).is_err()); // too many bins
+    }
+}

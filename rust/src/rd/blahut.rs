@@ -1,0 +1,457 @@
+//! Blahut–Arimoto computation of the rate-distortion function `R(D)` for
+//! the (discretized) scalar-channel source under squared-error distortion —
+//! the paper's §3.2 "The RD function R(D) can be computed numerically
+//! (cf. Blahut and Arimoto)".
+//!
+//! For a fixed Lagrange slope `s < 0` the BA fixed point yields one point
+//! `(D(s), R(s))` on the curve; sweeping `s` traces the whole curve.
+//! Per-iteration cost is two matvecs over the precomputed kernel
+//! `K_ij = exp(s·d_ij)`.
+
+use crate::error::{Error, Result};
+use crate::rd::gaussian::differential_entropy_bits;
+use crate::se::prior::BgChannel;
+
+/// A computed rate-distortion curve with monotone interpolation.
+///
+/// Points are stored sorted by increasing distortion; rates decrease.
+#[derive(Debug, Clone)]
+pub struct RdCurve {
+    /// ln(D) per point (ascending).
+    ln_d: Vec<f64>,
+    /// Rate in bits per point (descending).
+    r: Vec<f64>,
+    /// Distortion at which the rate hits zero (source variance).
+    pub d_max: f64,
+    /// Differential entropy of the source in bits (None → pure BA curve).
+    ///
+    /// When present, queries return `max(BA, SLB)` where the Shannon lower
+    /// bound `R ≥ h − ½log2(2πeD)` is asymptotically tight as D→0 for
+    /// squared error — this covers the high-rate regime a discretized BA
+    /// cannot reach (the grid caps the achievable rate at its discrete
+    /// entropy and floors D at ~step²/12).
+    pub h_bits: Option<f64>,
+}
+
+impl RdCurve {
+    /// Build from raw (distortion, rate) points + the zero-rate distortion.
+    pub fn from_points(pts: Vec<(f64, f64)>, d_max: f64) -> Result<Self> {
+        Self::from_points_with_entropy(pts, d_max, None)
+    }
+
+    /// Build with a known source differential entropy (enables the SLB
+    /// high-rate extension).
+    pub fn from_points_with_entropy(
+        mut pts: Vec<(f64, f64)>,
+        d_max: f64,
+        h_bits: Option<f64>,
+    ) -> Result<Self> {
+        pts.retain(|&(d, r)| d.is_finite() && r.is_finite() && d > 0.0 && r >= 0.0);
+        if pts.is_empty() {
+            return Err(Error::Numerical("empty RD curve".into()));
+        }
+        pts.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+        // Enforce monotonicity (BA noise can produce tiny violations) and
+        // append the zero-rate endpoint.
+        let mut ln_d = Vec::with_capacity(pts.len() + 1);
+        let mut r = Vec::with_capacity(pts.len() + 1);
+        for (d, rate) in pts {
+            if d >= d_max {
+                continue;
+            }
+            if let Some(&last) = r.last() {
+                if rate >= last {
+                    continue; // keep strictly decreasing rates
+                }
+            }
+            ln_d.push(d.ln());
+            r.push(rate);
+        }
+        ln_d.push(d_max.ln());
+        r.push(0.0);
+        if ln_d.len() < 2 {
+            return Err(Error::Numerical("degenerate RD curve".into()));
+        }
+        Ok(RdCurve { ln_d, r, d_max, h_bits })
+    }
+
+    /// Shannon lower bound `h − ½ log2(2πe D)` (−∞ if no entropy known).
+    #[inline]
+    fn slb(&self, d: f64) -> f64 {
+        match self.h_bits {
+            Some(h) => {
+                h - 0.5 * (2.0 * std::f64::consts::PI * std::f64::consts::E * d).log2()
+            }
+            None => f64::NEG_INFINITY,
+        }
+    }
+
+    /// Inverse SLB: distortion at which the SLB equals `rate`.
+    #[inline]
+    fn slb_inv(&self, rate: f64) -> f64 {
+        match self.h_bits {
+            Some(h) => 2f64.powf(2.0 * (h - rate)) / (2.0 * std::f64::consts::PI * std::f64::consts::E),
+            None => f64::INFINITY,
+        }
+    }
+
+    /// `R(D)` in bits: `max(BA interpolation, SLB)`; 0 beyond `d_max`.
+    pub fn rate_for_mse(&self, d: f64) -> f64 {
+        if d >= self.d_max {
+            return 0.0;
+        }
+        self.ba_rate_for_mse(d).max(self.slb(d)).max(0.0)
+    }
+
+    /// BA-only interpolation (linear in ln D between knots; clamped to the
+    /// first knot's rate below the computed range — SLB covers that side).
+    fn ba_rate_for_mse(&self, d: f64) -> f64 {
+        let x = d.max(1e-300).ln();
+        let n = self.ln_d.len();
+        if x <= self.ln_d[0] {
+            return self.r[0];
+        }
+        let mut lo = 0usize;
+        let mut hi = n - 1;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.ln_d[mid] <= x {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let t = (x - self.ln_d[lo]) / (self.ln_d[hi] - self.ln_d[lo]);
+        (self.r[lo] + t * (self.r[hi] - self.r[lo])).max(0.0)
+    }
+
+    /// Inverse: the distortion achievable at `rate` bits — the pointwise
+    /// min of the BA inverse and the SLB inverse (inverse of a pointwise
+    /// max of decreasing functions).
+    pub fn mse_for_rate(&self, rate: f64) -> f64 {
+        if rate <= 0.0 {
+            return self.d_max;
+        }
+        self.ba_mse_for_rate(rate).min(self.slb_inv(rate)).min(self.d_max)
+    }
+
+    fn ba_mse_for_rate(&self, rate: f64) -> f64 {
+        if rate >= self.r[0] {
+            // Below the BA grid's reach; the SLB inverse governs there.
+            return self.ln_d[0].exp();
+        }
+        // r is descending in index.
+        let n = self.r.len();
+        let mut lo = 0usize;
+        let mut hi = n - 1;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.r[mid] >= rate {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let denom = self.r[hi] - self.r[lo];
+        let t = if denom.abs() < 1e-300 { 0.0 } else { (rate - self.r[lo]) / denom };
+        (self.ln_d[lo] + t * (self.ln_d[hi] - self.ln_d[lo])).exp()
+    }
+
+    /// Number of knots.
+    pub fn len(&self) -> usize {
+        self.r.len()
+    }
+
+    /// Always false post-construction.
+    pub fn is_empty(&self) -> bool {
+        self.r.is_empty()
+    }
+}
+
+/// One Blahut–Arimoto fixed point: returns `(D, R_bits)` for slope `s < 0`.
+///
+/// `px` is the source pmf on support `x`; the reconstruction alphabet is
+/// also `x` (dense enough grids make this immaterial).
+pub fn blahut_point(px: &[f64], x: &[f64], s: f64, tol: f64, max_iter: usize) -> (f64, f64) {
+    let n = x.len();
+    debug_assert_eq!(px.len(), n);
+    debug_assert!(s < 0.0);
+    // Precompute kernel K_ij = exp(s (x_i - x_j)^2), row-major.
+    let mut k = vec![0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            let d = x[i] - x[j];
+            k[i * n + j] = (s * d * d).exp();
+        }
+    }
+    let mut q = vec![1.0 / n as f64; n];
+    let mut r_i = vec![0f64; n]; // normalizers Σ_j q_j K_ij
+    let mut u = vec![0f64; n];
+    let mut prev_obj = f64::INFINITY;
+    for _ in 0..max_iter {
+        // r_i = Σ_j K_ij q_j
+        for i in 0..n {
+            let row = &k[i * n..(i + 1) * n];
+            let mut acc = 0.0;
+            for j in 0..n {
+                acc += row[j] * q[j];
+            }
+            r_i[i] = acc.max(f64::MIN_POSITIVE);
+        }
+        // u_i = p_i / r_i ; q'_j = q_j Σ_i u_i K_ij
+        for i in 0..n {
+            u[i] = px[i] / r_i[i];
+        }
+        let mut norm = 0.0;
+        for j in 0..n {
+            let mut acc = 0.0;
+            for i in 0..n {
+                acc += u[i] * k[i * n + j];
+            }
+            q[j] *= acc;
+            norm += q[j];
+        }
+        for qj in q.iter_mut() {
+            *qj /= norm;
+        }
+        // Convergence via the BA objective (monotone): F = Σ p_i ln r_i.
+        let obj: f64 = px.iter().zip(&r_i).map(|(&p, &r)| p * r.ln()).sum();
+        if (obj - prev_obj).abs() < tol * (1.0 + obj.abs()) {
+            break;
+        }
+        prev_obj = obj;
+    }
+    // Final D and R from the implied conditional W_ij = q_j K_ij / r_i.
+    for i in 0..n {
+        let row = &k[i * n..(i + 1) * n];
+        let mut acc = 0.0;
+        for j in 0..n {
+            acc += row[j] * q[j];
+        }
+        r_i[i] = acc.max(f64::MIN_POSITIVE);
+    }
+    let mut d_avg = 0.0;
+    let mut rate_nats = 0.0;
+    for i in 0..n {
+        let row = &k[i * n..(i + 1) * n];
+        let inv_ri = 1.0 / r_i[i];
+        let mut di = 0.0;
+        let mut ri_nats = 0.0;
+        for j in 0..n {
+            let w = q[j] * row[j] * inv_ri;
+            if w > 0.0 {
+                let dd = (x[i] - x[j]) * (x[i] - x[j]);
+                di += w * dd;
+                // ln(W/q) = ln(K_ij / r_i) = s*d_ij − ln r_i
+                ri_nats += w * (s * dd - r_i[i].ln());
+            }
+        }
+        d_avg += px[i] * di;
+        rate_nats += px[i] * ri_nats;
+    }
+    (d_avg, (rate_nats / std::f64::consts::LN_2).max(0.0))
+}
+
+/// Discretize the scalar-channel marginal onto a *multiscale* grid: the
+/// union of a spike-scale grid and a slab-scale grid (both `n/2` points),
+/// so both mixture components are resolved without quadratic blowup.
+/// Returns (support, pmf) with pmf from CDF differences at midpoints.
+pub fn discretize_channel(
+    channel: &BgChannel,
+    sigma2: f64,
+    n: usize,
+    sds: f64,
+) -> (Vec<f64>, Vec<f64>) {
+    let p = &channel.prior;
+    let spike_sd = sigma2.sqrt();
+    let slab_sd = (p.sigma_s2 + sigma2).sqrt();
+    let half = n / 2;
+    let mut x: Vec<f64> = Vec::with_capacity(2 * half);
+    let step_spike = 2.0 * sds * spike_sd / half as f64;
+    let step_slab = 2.0 * sds * slab_sd / half as f64;
+    for i in 0..half {
+        x.push(-sds * spike_sd + (i as f64 + 0.5) * step_spike);
+        x.push(p.mu_s - sds * slab_sd + (i as f64 + 0.5) * step_slab);
+    }
+    x.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Merge near-duplicates (within 1e-3 of the local spacing).
+    x.dedup_by(|a, b| (*a - *b).abs() < 1e-3 * step_spike);
+    let m = x.len();
+    // pmf via CDF differences at midpoints between neighbors.
+    let mut px = Vec::with_capacity(m);
+    let mut prev_cdf = 0.0;
+    for i in 0..m {
+        let hi_edge = if i + 1 < m {
+            channel.cdf_f(0.5 * (x[i] + x[i + 1]), sigma2)
+        } else {
+            1.0
+        };
+        px.push((hi_edge - prev_cdf).max(0.0));
+        prev_cdf = hi_edge;
+    }
+    let s: f64 = px.iter().sum();
+    for pi in px.iter_mut() {
+        *pi /= s;
+    }
+    (x, px)
+}
+
+/// Mass-weighted distortion floor of a grid: below ~8× this value the
+/// discretized BA curve is dominated by grid granularity and is discarded.
+pub fn grid_distortion_floor(x: &[f64], px: &[f64]) -> f64 {
+    let m = x.len();
+    let mut acc = 0.0;
+    for i in 0..m {
+        let gap = if i == 0 {
+            x[1] - x[0]
+        } else if i + 1 == m {
+            x[m - 1] - x[m - 2]
+        } else {
+            0.5 * (x[i + 1] - x[i - 1])
+        };
+        acc += px[i] * gap * gap / 12.0;
+    }
+    acc
+}
+
+/// Compute the full RD curve of the scalar-channel source by sweeping
+/// Lagrange slopes. `points` controls the sweep resolution.
+pub fn rd_curve_for_channel(
+    channel: &BgChannel,
+    sigma2: f64,
+    alphabet: usize,
+    points: usize,
+    tol: f64,
+) -> Result<RdCurve> {
+    let var = channel.var_f(sigma2);
+    let (x, px) = discretize_channel(channel, sigma2, alphabet, 8.0);
+    // BA covers the low-rate regime: D from ~var down to var/256 (well
+    // above the grid's distortion floor of ~step²/12); the SLB extension
+    // in RdCurve covers higher rates. Slopes: D(s) ≈ −1/(2s) at high rate.
+    let mut pts = Vec::with_capacity(points);
+    let s_lo = -0.5 / var; // gentle slope → D near var, R near 0
+    let growth = 2f64.powf(8.0 / points as f64); // total factor 2^8 = 256
+    let d_trust = 8.0 * grid_distortion_floor(&x, &px);
+    let mut s = s_lo;
+    for _ in 0..points {
+        let (d, r) = blahut_point(&px, &x, s, tol, 400);
+        if d >= d_trust {
+            pts.push((d, r));
+        }
+        s *= growth;
+    }
+    let h = differential_entropy_bits(channel, sigma2);
+    RdCurve::from_points_with_entropy(pts, var, Some(h))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::BernoulliGauss;
+    use crate::util::proptest::{prop_assert, Prop};
+
+    /// Pure Gaussian "mixture" (eps=1) — R(D) = ½log2(σ²/D) closed form.
+    fn gaussian_channel() -> BgChannel {
+        BgChannel::new(BernoulliGauss { eps: 1.0, mu_s: 0.0, sigma_s2: 1e-12 })
+    }
+
+    #[test]
+    fn blahut_matches_gaussian_closed_form() {
+        let c = gaussian_channel();
+        let sigma2 = 1.0;
+        let curve = rd_curve_for_channel(&c, sigma2, 257, 24, 1e-7).unwrap();
+        for d in [0.5, 0.25, 0.1, 0.03, 0.01] {
+            let want = 0.5 * (sigma2 / d).log2();
+            let got = curve.rate_for_mse(d);
+            assert!(
+                (got - want).abs() < 0.06,
+                "R({d}) = {got}, closed form {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn curve_monotone_decreasing() {
+        let c = BgChannel::new(BernoulliGauss::standard(0.1));
+        let curve = rd_curve_for_channel(&c, 0.05, 201, 20, 1e-7).unwrap();
+        let mut prev = f64::INFINITY;
+        for k in 1..100 {
+            let d = 1e-4 * 1.12f64.powi(k);
+            let r = curve.rate_for_mse(d);
+            assert!(r <= prev + 1e-9, "R not decreasing at D={d}");
+            prev = r;
+        }
+    }
+
+    #[test]
+    fn inverse_consistency() {
+        let c = BgChannel::new(BernoulliGauss::standard(0.05));
+        let curve = rd_curve_for_channel(&c, 0.02, 201, 20, 1e-7).unwrap();
+        Prop::new("mse_for_rate inverts rate_for_mse", 60).check(|g| {
+            let rate = g.f64_in(0.1, 9.0);
+            let d = curve.mse_for_rate(rate);
+            let r_back = curve.rate_for_mse(d);
+            // Tolerance reflects knot-interpolation granularity; the DP
+            // allocator works at ΔR = 0.1 bits anyway.
+            prop_assert(
+                (r_back - rate).abs() < 0.06 * (1.0 + rate),
+                format!("rate {rate} → D {d} → rate {r_back}"),
+            )
+        });
+    }
+
+    #[test]
+    fn sparse_source_cheaper_than_gaussian() {
+        // A sparse mixture has smaller R(D) than a Gaussian of equal
+        // variance (Gaussian is the max-entropy source under a variance
+        // constraint).
+        let eps = 0.1;
+        let c = BgChannel::new(BernoulliGauss::standard(eps));
+        let s2 = 0.01;
+        let var = c.var_f(s2);
+        let curve = rd_curve_for_channel(&c, s2, 201, 20, 1e-7).unwrap();
+        for dfrac in [0.01, 0.001] {
+            let d = var * dfrac;
+            let gauss = 0.5 * (var / d).log2();
+            let got = curve.rate_for_mse(d);
+            assert!(
+                got < gauss + 0.02,
+                "sparse R({d})={got} should be ≤ gaussian {gauss}"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_rate_at_variance() {
+        let c = BgChannel::new(BernoulliGauss::standard(0.05));
+        let s2 = 0.02;
+        let curve = rd_curve_for_channel(&c, s2, 201, 16, 1e-7).unwrap();
+        assert_eq!(curve.rate_for_mse(c.var_f(s2) * 1.01), 0.0);
+        assert!((curve.mse_for_rate(0.0) - c.var_f(s2)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn discretize_channel_pmf_valid() {
+        let c = BgChannel::new(BernoulliGauss::standard(0.05));
+        let (x, px) = discretize_channel(&c, 0.02, 301, 8.0);
+        // Multiscale union grid: size ≈ requested (dedup may drop a few).
+        assert!((x.len() as i64 - 300).abs() <= 4, "got {} points", x.len());
+        assert!((px.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(px.iter().all(|&p| p >= 0.0));
+        // Grid symmetric-ish around 0 and sorted.
+        assert!(x.windows(2).all(|w| w[1] > w[0]));
+    }
+
+    #[test]
+    fn high_rate_extrapolation_sane() {
+        let c = gaussian_channel();
+        let curve = rd_curve_for_channel(&c, 1.0, 201, 16, 1e-7).unwrap();
+        // At 14 bits (beyond computed range) D should be ≈ 2^{-28}.
+        let d = curve.mse_for_rate(14.0);
+        let want = 2f64.powf(-28.0);
+        assert!(
+            (d.ln() - want.ln()).abs() < 1.0,
+            "extrapolated D {d} vs {want}"
+        );
+    }
+}

@@ -1,0 +1,95 @@
+//! Closed-form / bound-based RD references: the Gaussian RD function and
+//! the Shannon lower bound for the mixture source. Used to validate
+//! Blahut–Arimoto and as a fast approximation in ablations.
+
+use crate::se::prior::BgChannel;
+use crate::se::quad::integrate_multiscale;
+
+/// Gaussian source `N(0, var)`: `R(D) = max(0, ½ log2(var/D))`.
+pub fn gaussian_rate_for_mse(var: f64, d: f64) -> f64 {
+    if d >= var {
+        0.0
+    } else {
+        0.5 * (var / d).log2()
+    }
+}
+
+/// Inverse of the Gaussian RD function: `D(R) = var·2^{−2R}`.
+pub fn gaussian_mse_for_rate(var: f64, rate: f64) -> f64 {
+    var * 2f64.powf(-2.0 * rate.max(0.0))
+}
+
+/// Differential entropy `h(F)` of the scalar-channel marginal in bits
+/// (numeric; multiscale grid resolves both mixture scales).
+pub fn differential_entropy_bits(channel: &BgChannel, sigma2: f64) -> f64 {
+    let p = &channel.prior;
+    let scales = [(0.0, sigma2.sqrt()), (p.mu_s, (p.sigma_s2 + sigma2).sqrt())];
+    let nats = integrate_multiscale(&scales, 10.0, 0.4, |f| {
+        let pf = channel.pdf_f(f, sigma2);
+        if pf > 0.0 {
+            -pf * pf.ln()
+        } else {
+            0.0
+        }
+    });
+    nats / std::f64::consts::LN_2
+}
+
+/// Shannon lower bound on the mixture RD function:
+/// `R(D) ≥ h(F) − ½ log2(2πe D)`.
+pub fn shannon_lower_bound(channel: &BgChannel, sigma2: f64, d: f64) -> f64 {
+    let h = differential_entropy_bits(channel, sigma2);
+    (h - 0.5 * (2.0 * std::f64::consts::PI * std::f64::consts::E * d).log2()).max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rd::blahut::rd_curve_for_channel;
+    use crate::signal::BernoulliGauss;
+
+    #[test]
+    fn gaussian_rd_roundtrip() {
+        let var = 2.5;
+        for r in [0.5, 1.0, 3.0, 8.0] {
+            let d = gaussian_mse_for_rate(var, r);
+            assert!((gaussian_rate_for_mse(var, d) - r).abs() < 1e-12);
+        }
+        assert_eq!(gaussian_rate_for_mse(var, 3.0), 0.0);
+    }
+
+    #[test]
+    fn entropy_of_pure_gaussian() {
+        // h(N(0,σ²)) = ½ log2(2πeσ²).
+        let c = BgChannel::new(BernoulliGauss { eps: 1.0, mu_s: 0.0, sigma_s2: 1e-12 });
+        let s2 = 0.7;
+        let h = differential_entropy_bits(&c, s2);
+        let want = 0.5 * (2.0 * std::f64::consts::PI * std::f64::consts::E * s2).log2();
+        assert!((h - want).abs() < 1e-6, "h={h} want {want}");
+    }
+
+    #[test]
+    fn mixture_entropy_below_gaussian_of_same_variance() {
+        let c = BgChannel::new(BernoulliGauss::standard(0.05));
+        let s2 = 0.01;
+        let h = differential_entropy_bits(&c, s2);
+        let var = c.var_f(s2);
+        let h_gauss = 0.5 * (2.0 * std::f64::consts::PI * std::f64::consts::E * var).log2();
+        assert!(h < h_gauss, "mixture h={h} ≥ gaussian {h_gauss}");
+    }
+
+    #[test]
+    fn slb_lower_bounds_blahut() {
+        let c = BgChannel::new(BernoulliGauss::standard(0.1));
+        let s2 = 0.05;
+        let curve = rd_curve_for_channel(&c, s2, 201, 20, 1e-7).unwrap();
+        for d in [1e-4, 1e-3, 1e-2] {
+            let slb = shannon_lower_bound(&c, s2, d);
+            let ba = curve.rate_for_mse(d);
+            assert!(
+                ba >= slb - 0.06,
+                "BA R({d})={ba} violates SLB {slb}"
+            );
+        }
+    }
+}

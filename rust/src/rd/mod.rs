@@ -1,0 +1,249 @@
+//! Rate-distortion substrate: Blahut–Arimoto curves ([`blahut`]),
+//! closed-form references ([`gaussian`]), and a γ-parameterized curve cache
+//! ([`RdCache`]) exploiting the scalar-channel normalization (DESIGN.md §6).
+//!
+//! The per-worker source is `F_t^p = S0/P + (σ_t/√P) Z`. Rescaling by
+//! `√P/σ_t` gives the one-parameter family
+//! `X(γ) ~ ε N(μ̃, 1+γ) + (1−ε) N(0, 1)` with `γ = σ_s²/(P σ_t²)`
+//! (μ̃ = μ_s √P/(P σ_t); zero for the paper's priors), and
+//! `R_{F}(D) = R_{X}(D · P/σ_t²)`. We therefore compute Blahut–Arimoto
+//! curves once per γ grid point and serve every (σ_t², rate) query by
+//! interpolation — this is what makes the DP allocator tractable.
+
+pub mod blahut;
+pub mod gaussian;
+
+pub use blahut::{rd_curve_for_channel, RdCurve};
+
+use crate::config::RdConfig;
+use crate::error::{Error, Result};
+use crate::se::prior::BgChannel;
+use crate::signal::BernoulliGauss;
+
+/// Cache of normalized RD curves over a log-spaced γ grid.
+#[derive(Debug, Clone)]
+pub struct RdCache {
+    /// Sparsity ε of the prior (the cache key).
+    pub eps: f64,
+    /// σ_s² of the prior.
+    pub sigma_s2: f64,
+    /// Worker count P.
+    pub p_workers: usize,
+    gammas: Vec<f64>,
+    curves: Vec<RdCurve>,
+}
+
+impl RdCache {
+    /// Build curves for `γ ∈ [γ_lo, γ_hi]` covering the SE trajectory range
+    /// `σ_t² ∈ [sigma2_min, sigma2_max]`.
+    pub fn build(
+        prior: &BernoulliGauss,
+        p_workers: usize,
+        sigma2_min: f64,
+        sigma2_max: f64,
+        cfg: &RdConfig,
+    ) -> Result<Self> {
+        if prior.mu_s != 0.0 {
+            return Err(Error::Numerical(
+                "RdCache requires μ_s = 0 (the paper's setting); use \
+                 rd_curve_for_channel directly for shifted priors"
+                    .into(),
+            ));
+        }
+        if sigma2_min <= 0.0 || sigma2_max < sigma2_min {
+            return Err(Error::Numerical(format!(
+                "bad sigma2 range [{sigma2_min}, {sigma2_max}]"
+            )));
+        }
+        let pf = p_workers as f64;
+        // γ = σ_s²/(P σ²): large σ² → small γ. Pad the range slightly.
+        let g_lo = prior.sigma_s2 / (pf * sigma2_max) * 0.5;
+        let g_hi = prior.sigma_s2 / (pf * sigma2_min) * 2.0;
+        let n = cfg.gamma_grid.max(2);
+        let ratio = (g_hi / g_lo).ln() / (n - 1) as f64;
+        let mut gammas = Vec::with_capacity(n);
+        let mut curves = Vec::with_capacity(n);
+        for i in 0..n {
+            let gamma = g_lo * (ratio * i as f64).exp();
+            gammas.push(gamma);
+        }
+        // Curves are independent — compute in parallel.
+        let eps = prior.eps;
+        let results: Vec<Result<RdCurve>> = std::thread::scope(|s| {
+            let handles: Vec<_> = gammas
+                .iter()
+                .map(|&gamma| {
+                    s.spawn(move || {
+                        let ch = BgChannel::new(BernoulliGauss {
+                            eps,
+                            mu_s: 0.0,
+                            sigma_s2: gamma,
+                        });
+                        rd_curve_for_channel(&ch, 1.0, cfg.alphabet, cfg.curve_points, cfg.tol)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("BA thread panicked")).collect()
+        });
+        for r in results {
+            curves.push(r?);
+        }
+        Ok(RdCache {
+            eps: prior.eps,
+            sigma_s2: prior.sigma_s2,
+            p_workers,
+            gammas,
+            curves,
+        })
+    }
+
+    /// γ for a given σ_t².
+    fn gamma(&self, sigma_t2: f64) -> f64 {
+        self.sigma_s2 / (self.p_workers as f64 * sigma_t2)
+    }
+
+    /// Normalized↔physical distortion scale: `D_phys = D_norm · σ_t²/P`.
+    fn d_scale(&self, sigma_t2: f64) -> f64 {
+        sigma_t2 / self.p_workers as f64
+    }
+
+    /// Bracketing curve indices + interpolation weight for γ.
+    fn locate(&self, gamma: f64) -> (usize, usize, f64) {
+        let n = self.gammas.len();
+        if gamma <= self.gammas[0] {
+            return (0, 0, 0.0);
+        }
+        if gamma >= self.gammas[n - 1] {
+            return (n - 1, n - 1, 0.0);
+        }
+        let mut lo = 0;
+        let mut hi = n - 1;
+        while hi - lo > 1 {
+            let mid = (lo + hi) / 2;
+            if self.gammas[mid] <= gamma {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let t = (gamma.ln() - self.gammas[lo].ln())
+            / (self.gammas[hi].ln() - self.gammas[lo].ln());
+        (lo, hi, t)
+    }
+
+    /// `R(D)` of the iteration-t uplink source (bits/element) for a
+    /// per-worker quantization MSE `sigma_q2`.
+    pub fn rate_for_mse(&self, sigma_t2: f64, sigma_q2: f64) -> f64 {
+        let d_norm = sigma_q2 / self.d_scale(sigma_t2);
+        let (lo, hi, t) = self.locate(self.gamma(sigma_t2));
+        let r_lo = self.curves[lo].rate_for_mse(d_norm);
+        if lo == hi {
+            return r_lo;
+        }
+        let r_hi = self.curves[hi].rate_for_mse(d_norm);
+        r_lo + t * (r_hi - r_lo)
+    }
+
+    /// Inverse: per-worker quantization MSE achievable at `rate` bits.
+    pub fn mse_for_rate(&self, sigma_t2: f64, rate: f64) -> f64 {
+        let (lo, hi, t) = self.locate(self.gamma(sigma_t2));
+        let d_lo = self.curves[lo].mse_for_rate(rate).ln();
+        let d_norm = if lo == hi {
+            d_lo.exp()
+        } else {
+            let d_hi = self.curves[hi].mse_for_rate(rate).ln();
+            (d_lo + t * (d_hi - d_lo)).exp()
+        };
+        d_norm * self.d_scale(sigma_t2)
+    }
+
+    /// Number of cached curves.
+    pub fn len(&self) -> usize {
+        self.curves.len()
+    }
+
+    /// Always false post-construction.
+    pub fn is_empty(&self) -> bool {
+        self.curves.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::se::prior::BgChannel;
+
+    fn small_cfg() -> RdConfig {
+        RdConfig { alphabet: 161, curve_points: 16, tol: 1e-6, gamma_grid: 9 }
+    }
+
+    #[test]
+    fn cache_matches_direct_blahut() {
+        let prior = BernoulliGauss::standard(0.05);
+        let p = 30;
+        let cache = RdCache::build(&prior, p, 1e-3, 0.2, &small_cfg()).unwrap();
+        // Pick a σ_t² inside the range and compare vs a directly-computed
+        // curve on the *worker* channel.
+        let sigma_t2 = 0.02;
+        let base = BgChannel::new(prior);
+        let (wch, ws2) = base.worker_channel(sigma_t2, p);
+        let direct = rd_curve_for_channel(&wch, ws2, 201, 20, 1e-7).unwrap();
+        for rate in [1.0, 2.0, 4.0] {
+            let d_cache = cache.mse_for_rate(sigma_t2, rate);
+            let d_direct = direct.mse_for_rate(rate);
+            let ratio = d_cache / d_direct;
+            assert!(
+                (0.8..1.25).contains(&ratio),
+                "rate {rate}: cache D={d_cache}, direct D={d_direct}"
+            );
+        }
+    }
+
+    #[test]
+    fn rate_mse_inverse_consistency() {
+        let prior = BernoulliGauss::standard(0.1);
+        let cache = RdCache::build(&prior, 10, 1e-3, 0.5, &small_cfg()).unwrap();
+        for sigma_t2 in [0.002, 0.02, 0.3] {
+            for rate in [0.5, 2.0, 5.0] {
+                let d = cache.mse_for_rate(sigma_t2, rate);
+                let r = cache.rate_for_mse(sigma_t2, d);
+                assert!(
+                    (r - rate).abs() < 0.08 * (1.0 + rate),
+                    "σ²={sigma_t2} rate {rate} → D {d} → rate {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rate_gives_source_variance() {
+        let prior = BernoulliGauss::standard(0.05);
+        let p = 30;
+        let cache = RdCache::build(&prior, p, 1e-3, 0.2, &small_cfg()).unwrap();
+        let sigma_t2 = 0.05;
+        let d0 = cache.mse_for_rate(sigma_t2, 0.0);
+        let base = BgChannel::new(prior);
+        let (wch, ws2) = base.worker_channel(sigma_t2, p);
+        let var = wch.var_f(ws2);
+        assert!((d0 / var - 1.0).abs() < 0.05, "D(0)={d0} vs var={var}");
+    }
+
+    #[test]
+    fn more_rate_less_distortion() {
+        let prior = BernoulliGauss::standard(0.05);
+        let cache = RdCache::build(&prior, 30, 1e-3, 0.2, &small_cfg()).unwrap();
+        let s2 = 0.01;
+        let mut prev = f64::INFINITY;
+        for r in [0.0, 0.5, 1.0, 2.0, 4.0, 8.0] {
+            let d = cache.mse_for_rate(s2, r);
+            assert!(d < prev || r == 0.0, "D not decreasing at rate {r}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn rejects_shifted_prior() {
+        let prior = BernoulliGauss { eps: 0.05, mu_s: 1.0, sigma_s2: 1.0 };
+        assert!(RdCache::build(&prior, 30, 1e-3, 0.2, &small_cfg()).is_err());
+    }
+}

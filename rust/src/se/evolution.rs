@@ -1,0 +1,192 @@
+//! State evolution (SE) for centralized AMP (paper eq. 4) and for MP-AMP
+//! with quantized uplinks (paper eq. 8), plus SDR bookkeeping and
+//! steady-state detection used to pick the paper's iteration counts T.
+
+use crate::se::prior::BgChannel;
+use crate::signal::BernoulliGauss;
+
+/// State-evolution engine bound to one problem family (prior, κ, σ_e²).
+#[derive(Debug, Clone, Copy)]
+pub struct StateEvolution {
+    /// Scalar channel of the prior.
+    pub channel: BgChannel,
+    /// Undersampling ratio κ = M/N.
+    pub kappa: f64,
+    /// Measurement noise variance σ_e².
+    pub sigma_e2: f64,
+}
+
+impl StateEvolution {
+    /// Build from prior + problem parameters.
+    pub fn new(prior: BernoulliGauss, kappa: f64, sigma_e2: f64) -> Self {
+        StateEvolution { channel: BgChannel::new(prior), kappa, sigma_e2 }
+    }
+
+    /// Initial effective noise `σ_0² = σ_e² + E[S0²]/κ` (x_0 = 0).
+    pub fn sigma0_sq(&self) -> f64 {
+        self.sigma_e2 + self.channel.prior.second_moment() / self.kappa
+    }
+
+    /// One centralized SE step (eq. 4):
+    /// `σ_{t+1}² = σ_e² + mmse(σ_t²)/κ`.
+    pub fn step(&self, sigma_t2: f64) -> f64 {
+        self.sigma_e2 + self.channel.mmse(sigma_t2) / self.kappa
+    }
+
+    /// One quantization-aware SE step (eq. 8): the denoiser input is
+    /// `S0 + sqrt(σ_t² + P σ_Q²) Z̃`, so
+    /// `σ_{t+1}² = σ_e² + mmse(σ_t² + P σ_Q²)/κ`.
+    pub fn step_quantized(&self, sigma_t2: f64, p_sigma_q2: f64) -> f64 {
+        self.sigma_e2 + self.channel.mmse(sigma_t2 + p_sigma_q2) / self.kappa
+    }
+
+    /// Centralized trajectory `[σ_0², …, σ_T²]` (length T+1).
+    pub fn trajectory(&self, t_max: usize) -> Vec<f64> {
+        let mut out = Vec::with_capacity(t_max + 1);
+        let mut s = self.sigma0_sq();
+        out.push(s);
+        for _ in 0..t_max {
+            s = self.step(s);
+            out.push(s);
+        }
+        out
+    }
+
+    /// SDR in dB implied by an effective noise level (paper §2):
+    /// `SDR = 10 log10(ρ / (σ_t² − σ_e²))` with `ρ = E[S0²]/κ`.
+    pub fn sdr_db(&self, sigma_t2: f64) -> f64 {
+        let rho = self.channel.prior.second_moment() / self.kappa;
+        let denom = (sigma_t2 - self.sigma_e2).max(1e-300);
+        10.0 * (rho / denom).log10()
+    }
+
+    /// Iterations until the SDR gain per iteration drops below `tol_db`
+    /// (the paper's "steady state"; with tol_db = 0.05 this reproduces
+    /// T = 8 / 10 / 20 for ε = 0.03 / 0.05 / 0.10 at the paper's setup).
+    pub fn iters_to_steady(&self, tol_db: f64, t_cap: usize) -> usize {
+        let mut s = self.sigma0_sq();
+        let mut prev_sdr = self.sdr_db(s);
+        for t in 1..=t_cap {
+            s = self.step(s);
+            let sdr = self.sdr_db(s);
+            if (sdr - prev_sdr).abs() < tol_db {
+                return t;
+            }
+            prev_sdr = sdr;
+        }
+        t_cap
+    }
+
+    /// Fixed point of centralized SE (iterate to convergence).
+    pub fn fixed_point(&self, tol: f64, cap: usize) -> f64 {
+        let mut s = self.sigma0_sq();
+        for _ in 0..cap {
+            let next = self.step(s);
+            if (next - s).abs() <= tol * s.abs().max(1e-30) {
+                return next;
+            }
+            s = next;
+        }
+        s
+    }
+}
+
+/// Convenience: SE engine for a run configuration.
+pub fn se_for(prior: BernoulliGauss, kappa: f64, sigma_e2: f64) -> StateEvolution {
+    StateEvolution::new(prior, kappa, sigma_e2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::signal::sigma_e2_for_snr;
+
+    fn paper_se(eps: f64) -> StateEvolution {
+        let prior = BernoulliGauss::standard(eps);
+        let kappa = 0.3;
+        let sigma_e2 = sigma_e2_for_snr(&prior, kappa, 20.0);
+        StateEvolution::new(prior, kappa, sigma_e2)
+    }
+
+    #[test]
+    fn sigma0_matches_definition() {
+        let se = paper_se(0.05);
+        let rho = 0.05 / 0.3;
+        assert!((se.sigma0_sq() - (se.sigma_e2 + rho)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trajectory_monotone_decreasing_to_fixed_point() {
+        let se = paper_se(0.05);
+        let traj = se.trajectory(40);
+        for w in traj.windows(2) {
+            assert!(w[1] <= w[0] + 1e-12, "SE must decrease: {w:?}");
+        }
+        let fp = se.fixed_point(1e-12, 200);
+        assert!((traj[39] - fp).abs() < 1e-6);
+        // Noise floor: σ∞² > σ_e².
+        assert!(fp > se.sigma_e2);
+    }
+
+    #[test]
+    fn quantized_step_reduces_to_plain_when_no_noise() {
+        let se = paper_se(0.1);
+        let s = se.sigma0_sq();
+        assert!((se.step_quantized(s, 0.0) - se.step(s)).abs() < 1e-15);
+        // Positive quantization noise strictly hurts.
+        assert!(se.step_quantized(s, 0.05) > se.step(s));
+    }
+
+    #[test]
+    fn quantized_step_monotone_in_inputs() {
+        let se = paper_se(0.05);
+        // Increasing σ_t² or σ_Q² increases σ_{t+1}² (the DP relies on this).
+        let base = se.step_quantized(0.05, 0.01);
+        assert!(se.step_quantized(0.06, 0.01) > base);
+        assert!(se.step_quantized(0.05, 0.02) > base);
+    }
+
+    #[test]
+    fn sdr_increases_along_trajectory() {
+        let se = paper_se(0.03);
+        let traj = se.trajectory(8);
+        let sdrs: Vec<f64> = traj.iter().map(|&s| se.sdr_db(s)).collect();
+        for w in sdrs.windows(2) {
+            assert!(w[1] >= w[0] - 1e-9, "SDR must increase: {w:?}");
+        }
+        // At t=0 the SDR is 0 dB by construction (x_0 = 0 ⇒ error = ρ).
+        assert!(sdrs[0].abs() < 1e-9, "SDR(0)={}", sdrs[0]);
+    }
+
+    #[test]
+    fn steady_state_iteration_counts_match_paper() {
+        // Fig. 1: T = 8, 10, 20 for ε = 0.03, 0.05, 0.10. We require our SE
+        // to land within ±1 iteration of the paper under the documented
+        // tolerance, and record exact values in EXPERIMENTS.md.
+        let cases = [(0.03, 8usize), (0.05, 10), (0.10, 20)];
+        for (eps, want) in cases {
+            let se = paper_se(eps);
+            let t = se.iters_to_steady(0.05, 64);
+            assert!(
+                t == want,
+                "eps={eps}: T={t}, paper says {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn final_sdr_near_paper_scale() {
+        // At 20 dB SNR with these sparsities, AMP converges to a high-SDR
+        // fixed point (paper Fig. 1 top panels plateau in the ~23-30 dB
+        // range). Sanity-check ours lands in a plausible band.
+        for eps in [0.03, 0.05, 0.10] {
+            let se = paper_se(eps);
+            let fp = se.fixed_point(1e-12, 300);
+            let sdr = se.sdr_db(fp);
+            assert!(
+                (15.0..45.0).contains(&sdr),
+                "eps={eps}: steady-state SDR {sdr} dB out of plausible band"
+            );
+        }
+    }
+}

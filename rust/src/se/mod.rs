@@ -1,0 +1,11 @@
+//! State evolution for Bernoulli-Gauss AMP: quadrature + special functions
+//! ([`quad`]), the scalar-channel denoiser math ([`prior`]), and the SE
+//! recursions of the paper ([`evolution`]).
+
+pub mod evolution;
+pub mod prior;
+pub mod quad;
+pub mod table;
+
+pub use evolution::{se_for, StateEvolution};
+pub use prior::BgChannel;

@@ -1,0 +1,328 @@
+//! Bernoulli-Gauss scalar channel: conditional-mean denoiser η, its
+//! derivative η′, the posterior variance, and expectations over the
+//! effective Gaussian channel `F = S0 + σ Z`.
+//!
+//! All functions take the *effective* noise variance `sigma2` (for MP-AMP
+//! with quantization this is `σ_t² + P σ_Q²`, paper eq. 8) so the same code
+//! serves both the centralized SE (eq. 4) and the quantization-aware SE.
+
+use crate::se::quad::{integrate_multiscale, normal_cdf, normal_pdf};
+use crate::signal::BernoulliGauss;
+
+/// Half-width (in standard deviations) of the SE integration grids.
+pub const QUAD_HALF_WIDTH: f64 = 10.0;
+/// Panel step (in standard deviations) of the SE integration grids. The
+/// spike/slab posterior switches over ≈0.3 narrow-scale σ, so 0.4-wide
+/// 8-point Gauss–Legendre panels resolve it to ~1e-9.
+pub const QUAD_STEP: f64 = 0.4;
+
+/// Scalar-channel view of a Bernoulli-Gauss prior.
+#[derive(Debug, Clone, Copy)]
+pub struct BgChannel {
+    /// The source prior.
+    pub prior: BernoulliGauss,
+}
+
+impl BgChannel {
+    /// Wrap a prior.
+    pub fn new(prior: BernoulliGauss) -> Self {
+        BgChannel { prior }
+    }
+
+    /// Posterior slab weight `w(f) = P(S0 ≠ 0 | F=f)`.
+    #[inline]
+    pub fn slab_weight(&self, f: f64, sigma2: f64) -> f64 {
+        let p = &self.prior;
+        let phi1 = p.eps * normal_pdf(f, p.mu_s, p.sigma_s2 + sigma2);
+        let phi0 = (1.0 - p.eps) * normal_pdf(f, 0.0, sigma2);
+        let den = phi0 + phi1;
+        if den <= f64::MIN_POSITIVE {
+            // Far tails: the wider (slab) component dominates.
+            return 1.0;
+        }
+        phi1 / den
+    }
+
+    /// Posterior slab mean `m(f) = E[S0 | F=f, S0≠0]`.
+    #[inline]
+    pub fn slab_mean(&self, f: f64, sigma2: f64) -> f64 {
+        let p = &self.prior;
+        (f * p.sigma_s2 + p.mu_s * sigma2) / (p.sigma_s2 + sigma2)
+    }
+
+    /// Posterior slab variance (constant in f).
+    #[inline]
+    pub fn slab_var(&self, sigma2: f64) -> f64 {
+        let p = &self.prior;
+        p.sigma_s2 * sigma2 / (p.sigma_s2 + sigma2)
+    }
+
+    /// Conditional-mean denoiser `η(f) = E[S0 | F=f]` (paper eq. 5).
+    #[inline]
+    pub fn denoise(&self, f: f64, sigma2: f64) -> f64 {
+        self.slab_weight(f, sigma2) * self.slab_mean(f, sigma2)
+    }
+
+    /// Derivative `η′(f)` (closed form).
+    ///
+    /// With `w(f)` the slab weight and `m(f)` the slab mean:
+    /// `w′ = w(1−w)·(f/σ² − (f−μ_s)/(σ_s²+σ²))`, `m′ = σ_s²/(σ_s²+σ²)`,
+    /// `η′ = w′ m + w m′`.
+    #[inline]
+    pub fn denoise_deriv(&self, f: f64, sigma2: f64) -> f64 {
+        let p = &self.prior;
+        let w = self.slab_weight(f, sigma2);
+        let m = self.slab_mean(f, sigma2);
+        let dm = p.sigma_s2 / (p.sigma_s2 + sigma2);
+        let dlog = f / sigma2 - (f - p.mu_s) / (p.sigma_s2 + sigma2);
+        w * (1.0 - w) * dlog * m + w * dm
+    }
+
+    /// Posterior variance `Var(S0 | F=f)`.
+    #[inline]
+    pub fn posterior_var(&self, f: f64, sigma2: f64) -> f64 {
+        let w = self.slab_weight(f, sigma2);
+        let m = self.slab_mean(f, sigma2);
+        let v = self.slab_var(sigma2);
+        w * (v + m * m) - (w * m) * (w * m)
+    }
+
+    /// Integration grid for channel expectations: one (center, scale) per
+    /// mixture branch of `F` (the posterior switches at the narrow scale).
+    #[inline]
+    fn quad_scales(&self, sigma2: f64) -> [(f64, f64); 2] {
+        let p = &self.prior;
+        [(0.0, sigma2.sqrt()), (p.mu_s, (p.sigma_s2 + sigma2).sqrt())]
+    }
+
+    /// Expectation `E[g(F)]` over the channel marginal (multiscale GL).
+    pub fn expect_f<G: Fn(f64) -> f64>(&self, sigma2: f64, g: G) -> f64 {
+        integrate_multiscale(&self.quad_scales(sigma2), QUAD_HALF_WIDTH, QUAD_STEP, |f| {
+            self.pdf_f(f, sigma2) * g(f)
+        })
+    }
+
+    /// MMSE of the channel: `E[(η(F) − S0)²] = E[Var(S0|F)]`.
+    pub fn mmse(&self, sigma2: f64) -> f64 {
+        if sigma2 <= 0.0 {
+            return 0.0;
+        }
+        self.expect_f(sigma2, |f| self.posterior_var(f, sigma2))
+    }
+
+    /// `E[η′(F)]` over the channel (used in tests; AMP itself uses the
+    /// empirical mean of η′ over the data).
+    pub fn mean_deriv(&self, sigma2: f64) -> f64 {
+        self.expect_f(sigma2, |f| self.denoise_deriv(f, sigma2))
+    }
+
+    /// Marginal pdf of `F = S0 + σZ`.
+    #[inline]
+    pub fn pdf_f(&self, f: f64, sigma2: f64) -> f64 {
+        let p = &self.prior;
+        (1.0 - p.eps) * normal_pdf(f, 0.0, sigma2)
+            + p.eps * normal_pdf(f, p.mu_s, p.sigma_s2 + sigma2)
+    }
+
+    /// Marginal CDF of `F = S0 + σZ`.
+    #[inline]
+    pub fn cdf_f(&self, f: f64, sigma2: f64) -> f64 {
+        let p = &self.prior;
+        (1.0 - p.eps) * normal_cdf(f, 0.0, sigma2)
+            + p.eps * normal_cdf(f, p.mu_s, p.sigma_s2 + sigma2)
+    }
+
+    /// Variance of the marginal `F` (mean `ε μ_s`).
+    pub fn var_f(&self, sigma2: f64) -> f64 {
+        let p = &self.prior;
+        let mean = p.eps * p.mu_s;
+        let m2 = (1.0 - p.eps) * sigma2
+            + p.eps * (p.sigma_s2 + sigma2 + p.mu_s * p.mu_s);
+        m2 - mean * mean
+    }
+
+    /// Saturation half-range covering `sds` standard deviations of the
+    /// *widest* mixture component (the slab): `|μ_s| + sds·√(σ_s²+σ²)`.
+    /// Using the marginal std instead under-covers the slab at small ε.
+    pub fn clip_range(&self, sigma2: f64, sds: f64) -> f64 {
+        let p = &self.prior;
+        p.mu_s.abs() + sds * (p.sigma_s2 + sigma2).sqrt()
+    }
+
+    /// The per-worker scalar channel `F_t^p = S0/P + (σ_t/√P) Z` (paper
+    /// §3.2) expressed as a [`BgChannel`] on the scaled prior `S0/P` with
+    /// effective noise `σ_t²/P`. Returns (channel, noise variance).
+    pub fn worker_channel(&self, sigma_t2: f64, p_workers: usize) -> (BgChannel, f64) {
+        let pf = p_workers as f64;
+        let p = &self.prior;
+        let scaled = BernoulliGauss {
+            eps: p.eps,
+            mu_s: p.mu_s / pf,
+            sigma_s2: p.sigma_s2 / (pf * pf),
+        };
+        (BgChannel::new(scaled), sigma_t2 / pf)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, prop_close, Prop};
+    use crate::util::rng::Rng;
+
+    fn ch(eps: f64) -> BgChannel {
+        BgChannel::new(BernoulliGauss::standard(eps))
+    }
+
+    #[test]
+    fn denoiser_shrinks_toward_zero_small_f() {
+        let c = ch(0.05);
+        // Near f=0 the spike dominates: η(f) ≈ 0.
+        assert!(c.denoise(0.01, 0.1).abs() < 0.01);
+        // Large |f|: slab dominates, η(f) ≈ f σs²/(σs²+σ²).
+        let f = 20.0;
+        let want = f * 1.0 / (1.0 + 0.1);
+        assert!((c.denoise(f, 0.1) - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn denoiser_odd_symmetry_when_mu_zero() {
+        Prop::new("η odd for μ_s=0", 300).check(|g| {
+            let c = ch(g.f64_in(0.01, 0.5));
+            let s2 = g.f64_log_in(1e-4, 10.0);
+            let f = g.f64_in(-10.0, 10.0);
+            prop_close(c.denoise(f, s2), -c.denoise(-f, s2), 1e-12, "odd")
+        });
+    }
+
+    #[test]
+    fn deriv_matches_finite_difference() {
+        Prop::new("η′ == finite diff", 400).check(|g| {
+            let c = ch(g.f64_in(0.01, 0.5));
+            let s2 = g.f64_log_in(1e-3, 10.0);
+            let f = g.f64_in(-8.0, 8.0);
+            let h = 1e-6 * (1.0 + f.abs());
+            let fd = (c.denoise(f + h, s2) - c.denoise(f - h, s2)) / (2.0 * h);
+            prop_close(c.denoise_deriv(f, s2), fd, 1e-5 * (1.0 + fd.abs()), "deriv")
+        });
+    }
+
+    #[test]
+    fn deriv_bounded_01_like() {
+        // For the BG conditional mean denoiser η′ stays within (0, ~1.3]
+        // in practice; assert positivity + a loose upper bound.
+        Prop::new("η′ in (0, 3)", 400).check(|g| {
+            let c = ch(g.f64_in(0.01, 0.5));
+            let s2 = g.f64_log_in(1e-3, 10.0);
+            let f = g.f64_in(-12.0, 12.0);
+            let d = c.denoise_deriv(f, s2);
+            prop_assert(d > 0.0 && d < 3.0, format!("η′({f})={d}"))
+        });
+    }
+
+    #[test]
+    fn mmse_bounds() {
+        // 0 < mmse(σ²) < min(E[S0²], σ²·slab-only MMSE bound) and
+        // mmse is increasing in σ².
+        let c = ch(0.05);
+        let m_small = c.mmse(1e-4);
+        let m_mid = c.mmse(0.01);
+        let m_big = c.mmse(1.0);
+        assert!(m_small > 0.0 && m_small < m_mid && m_mid < m_big);
+        assert!(m_big < c.prior.second_moment() + 1e-9);
+    }
+
+    #[test]
+    fn mmse_matches_monte_carlo() {
+        let c = ch(0.1);
+        for &s2 in &[0.005f64, 0.05, 0.3] {
+            let mut rng = Rng::new(31 + (s2 * 1000.0) as u64);
+            let n = 400_000;
+            let mut acc = 0.0;
+            for _ in 0..n {
+                let s0 = c.prior.sample(&mut rng);
+                let f = s0 + rng.gaussian() * s2.sqrt();
+                let e = c.denoise(f, s2) - s0;
+                acc += e * e;
+            }
+            let mc = acc / n as f64;
+            let an = c.mmse(s2);
+            assert!(
+                (mc / an - 1.0).abs() < 0.05,
+                "s2={s2}: mc={mc} analytic={an}"
+            );
+        }
+    }
+
+    #[test]
+    fn mean_deriv_matches_monte_carlo() {
+        let c = ch(0.05);
+        let s2 = 0.02f64;
+        let mut rng = Rng::new(7);
+        let n = 200_000;
+        let mut acc = 0.0;
+        for _ in 0..n {
+            let s0 = c.prior.sample(&mut rng);
+            let f = s0 + rng.gaussian() * s2.sqrt();
+            acc += c.denoise_deriv(f, s2);
+        }
+        let mc = acc / n as f64;
+        let an = c.mean_deriv(s2);
+        assert!((mc / an - 1.0).abs() < 0.03, "mc={mc} analytic={an}");
+    }
+
+    #[test]
+    fn pdf_integrates_to_one_and_matches_cdf() {
+        let c = ch(0.1);
+        let s2 = 0.3;
+        // Trapezoid over a wide range.
+        let (a, b, k) = (-30.0f64, 30.0f64, 120_000usize);
+        let h = (b - a) / k as f64;
+        let mut total = 0.0;
+        for i in 0..=k {
+            let x = a + i as f64 * h;
+            let w = if i == 0 || i == k { 0.5 } else { 1.0 };
+            total += w * c.pdf_f(x, s2);
+        }
+        total *= h;
+        assert!((total - 1.0).abs() < 1e-9, "∫pdf={total}");
+        // CDF endpoints.
+        assert!(c.cdf_f(-30.0, s2) < 1e-12);
+        assert!((c.cdf_f(30.0, s2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn var_f_formula() {
+        Prop::new("var_f == ∫ f² p(f) − mean²", 20).check(|g| {
+            let eps = g.f64_in(0.02, 0.4);
+            let mu = g.f64_in(-1.0, 1.0);
+            let c = BgChannel::new(BernoulliGauss { eps, mu_s: mu, sigma_s2: 1.3 });
+            let s2 = g.f64_log_in(0.01, 2.0);
+            // numeric second moment
+            let (a, b, k) = (-40.0f64, 40.0f64, 80_000usize);
+            let h = (b - a) / k as f64;
+            let mut m1 = 0.0;
+            let mut m2 = 0.0;
+            for i in 0..=k {
+                let x = a + i as f64 * h;
+                let w = if i == 0 || i == k { 0.5 } else { 1.0 };
+                let p = c.pdf_f(x, s2);
+                m1 += w * x * p;
+                m2 += w * x * x * p;
+            }
+            m1 *= h;
+            m2 *= h;
+            prop_close(c.var_f(s2), m2 - m1 * m1, 1e-6, "var_f")
+        });
+    }
+
+    #[test]
+    fn worker_channel_scaling() {
+        // Var(F^p) should be Var-consistent: F^p = S0/P + (σ/√P)Z.
+        let c = ch(0.05);
+        let (wc, ws2) = c.worker_channel(0.2, 30);
+        let vf = wc.var_f(ws2);
+        let direct = 0.05 * (1.0 / 900.0) + 0.2 / 30.0; // ε σs²/P² + σ²/P
+        assert!((vf - direct).abs() < 1e-12, "vf={vf} direct={direct}");
+    }
+}

@@ -1,0 +1,365 @@
+//! Numerical quadrature and special functions used by state evolution.
+//!
+//! * Gauss–Hermite rules (physicists' convention, weight `e^{-x²}`),
+//!   computed with Newton iteration on the Hermite recurrence and cached.
+//!   For `Z ~ N(0,1)`: `E[g(Z)] = (1/√π) Σ w_i g(√2 x_i)`.
+//! * `erf`/`erfc` (Cody-style rational approximations, ~1e-15 accurate)
+//!   and the standard normal pdf/cdf.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use once_cell::sync::Lazy;
+
+/// One Gauss–Hermite rule: nodes `x_i` and weights `w_i` for ∫ e^{-x²} g(x).
+#[derive(Debug, Clone)]
+pub struct GaussHermite {
+    /// Nodes (symmetric about 0, ascending).
+    pub nodes: Vec<f64>,
+    /// Weights.
+    pub weights: Vec<f64>,
+}
+
+static GH_CACHE: Lazy<Mutex<HashMap<usize, GaussHermite>>> =
+    Lazy::new(|| Mutex::new(HashMap::new()));
+
+/// Get (and cache) the `n`-point Gauss–Hermite rule.
+pub fn gauss_hermite(n: usize) -> GaussHermite {
+    assert!(n >= 1 && n < 512, "GH order out of range: {n}");
+    if let Some(r) = GH_CACHE.lock().unwrap().get(&n) {
+        return r.clone();
+    }
+    let rule = compute_gauss_hermite(n);
+    GH_CACHE.lock().unwrap().insert(n, rule.clone());
+    rule
+}
+
+/// Newton iteration on H_n roots (Numerical Recipes `gauher`, f64).
+fn compute_gauss_hermite(n: usize) -> GaussHermite {
+    const EPS: f64 = 3e-14;
+    const PIM4: f64 = 0.751_125_544_464_942_9; // π^{-1/4}
+    let mut x = vec![0.0f64; n];
+    let mut w = vec![0.0f64; n];
+    let m = n.div_ceil(2);
+    let mut z = 0.0f64;
+    for i in 0..m {
+        // Initial guesses for the i-th largest root.
+        z = match i {
+            0 => (2.0 * n as f64 + 1.0).sqrt() - 1.85575 * (2.0 * n as f64 + 1.0).powf(-1.0 / 6.0),
+            1 => z - 1.14 * (n as f64).powf(0.426) / z,
+            2 => 1.86 * z - 0.86 * x[0],
+            3 => 1.91 * z - 0.91 * x[1],
+            _ => 2.0 * z - x[i - 2],
+        };
+        let mut pp = 0.0;
+        for _ in 0..200 {
+            // Evaluate H̃_n(z) (orthonormal) via recurrence.
+            let mut p1 = PIM4;
+            let mut p2 = 0.0;
+            for j in 0..n {
+                let p3 = p2;
+                p2 = p1;
+                p1 = z * (2.0 / (j as f64 + 1.0)).sqrt() * p2
+                    - ((j as f64) / (j as f64 + 1.0)).sqrt() * p3;
+            }
+            pp = (2.0 * n as f64).sqrt() * p2;
+            let z1 = z;
+            z = z1 - p1 / pp;
+            if (z - z1).abs() <= EPS {
+                break;
+            }
+        }
+        x[i] = z;
+        x[n - 1 - i] = -z;
+        w[i] = 2.0 / (pp * pp);
+        w[n - 1 - i] = w[i];
+    }
+    // Return ascending.
+    x.reverse();
+    w.reverse();
+    GaussHermite { nodes: x, weights: w }
+}
+
+/// `E[g(X)]` for `X ~ N(mu, sigma2)` using an `n`-point GH rule.
+pub fn expect_gaussian<F: Fn(f64) -> f64>(mu: f64, sigma2: f64, n: usize, g: F) -> f64 {
+    let rule = gauss_hermite(n);
+    let sd = sigma2.max(0.0).sqrt();
+    let c = std::f64::consts::FRAC_2_SQRT_PI / 2.0; // 1/√π
+    let s2 = std::f64::consts::SQRT_2;
+    let mut acc = 0.0;
+    for (x, w) in rule.nodes.iter().zip(rule.weights.iter()) {
+        acc += w * g(mu + sd * s2 * x);
+    }
+    acc * c
+}
+
+/// 8-point Gauss–Legendre nodes on [-1, 1].
+const GL8_X: [f64; 8] = [
+    -0.960_289_856_497_536_3,
+    -0.796_666_477_413_626_7,
+    -0.525_532_409_916_329,
+    -0.183_434_642_495_649_8,
+    0.183_434_642_495_649_8,
+    0.525_532_409_916_329,
+    0.796_666_477_413_626_7,
+    0.960_289_856_497_536_3,
+];
+const GL8_W: [f64; 8] = [
+    0.101_228_536_290_376_26,
+    0.222_381_034_453_374_47,
+    0.313_706_645_877_887_3,
+    0.362_683_783_378_362,
+    0.362_683_783_378_362,
+    0.313_706_645_877_887_3,
+    0.222_381_034_453_374_47,
+    0.101_228_536_290_376_26,
+];
+
+/// Integrate `g` over one panel `[a, b]` with 8-point Gauss–Legendre.
+#[inline]
+pub fn gl8_panel<F: Fn(f64) -> f64>(a: f64, b: f64, g: &F) -> f64 {
+    let c = 0.5 * (a + b);
+    let h = 0.5 * (b - a);
+    let mut acc = 0.0;
+    for i in 0..8 {
+        acc += GL8_W[i] * g(c + h * GL8_X[i]);
+    }
+    acc * h
+}
+
+/// Integrate `∫ g(f) df` where `g` has features on several (center, scale)
+/// combinations — e.g. a Gaussian-mixture density times a posterior that
+/// switches at the narrow component's scale. Builds the union of per-scale
+/// breakpoint grids (`center ± k·step·scale`, `|k·step| ≤ half_width`) and
+/// applies composite 8-point Gauss–Legendre on each panel.
+///
+/// This is the workhorse behind every SE expectation: unlike plain
+/// Gauss–Hermite it resolves the spike/slab posterior transition, which
+/// lives at the *narrow* scale even under the *wide* component's measure.
+pub fn integrate_multiscale<F: Fn(f64) -> f64>(
+    scales: &[(f64, f64)],
+    half_width: f64,
+    step: f64,
+    g: F,
+) -> f64 {
+    debug_assert!(!scales.is_empty() && step > 0.0 && half_width > 0.0);
+    let mut brk: Vec<f64> = Vec::with_capacity(scales.len() * (2.0 * half_width / step) as usize);
+    for &(center, scale) in scales {
+        debug_assert!(scale > 0.0, "non-positive scale {scale}");
+        let k_max = (half_width / step).ceil() as i64;
+        for k in -k_max..=k_max {
+            brk.push(center + k as f64 * step * scale);
+        }
+    }
+    brk.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    // Global support: the widest component decides; drop panels outside.
+    let lo = scales
+        .iter()
+        .map(|&(c, s)| c - half_width * s)
+        .fold(f64::INFINITY, f64::min);
+    let hi = scales
+        .iter()
+        .map(|&(c, s)| c + half_width * s)
+        .fold(f64::NEG_INFINITY, f64::max);
+    let mut acc = 0.0;
+    let mut prev: Option<f64> = None;
+    for &x in brk.iter() {
+        let x = x.clamp(lo, hi);
+        if let Some(p) = prev {
+            if x - p > 1e-14 * (1.0 + x.abs()) {
+                acc += gl8_panel(p, x, &g);
+            }
+        }
+        prev = Some(x);
+    }
+    acc
+}
+
+/// Standard normal pdf.
+#[inline]
+pub fn normal_pdf(x: f64, mu: f64, sigma2: f64) -> f64 {
+    let d = x - mu;
+    (-(d * d) / (2.0 * sigma2)).exp() / (2.0 * std::f64::consts::PI * sigma2).sqrt()
+}
+
+/// Standard normal CDF via erfc (accurate in both tails).
+#[inline]
+pub fn normal_cdf(x: f64, mu: f64, sigma2: f64) -> f64 {
+    let z = (x - mu) / (2.0 * sigma2).sqrt();
+    0.5 * erfc(-z)
+}
+
+/// Error function, |error| < 1.5e-15 (Cody-style rational minimax).
+pub fn erf(x: f64) -> f64 {
+    1.0 - erfc(x)
+}
+
+/// Complementary error function (W. J. Cody 1969 rational approximations).
+pub fn erfc(x: f64) -> f64 {
+    let ax = x.abs();
+    let r = if ax < 0.5 {
+        // erf via rational approx on [0, 0.5]; erfc = 1 - erf.
+        const P: [f64; 5] = [
+            3.209_377_589_138_469_4e3,
+            3.774_852_376_853_020_2e2,
+            1.138_641_541_510_501_6e2,
+            3.161_123_743_870_565_6e0,
+            1.857_777_061_846_031_5e-1,
+        ];
+        const Q: [f64; 4] = [
+            2.844_236_833_439_170_6e3,
+            1.282_616_526_077_372_3e3,
+            2.440_246_379_344_441_6e2,
+            2.360_129_095_234_412_2e1,
+        ];
+        let z = ax * ax;
+        let num = ((((P[4] * z + P[3]) * z + P[2]) * z + P[1]) * z + P[0]) * ax;
+        let den = (((z + Q[3]) * z + Q[2]) * z + Q[1]) * z + Q[0];
+        return if x >= 0.0 { 1.0 - num / den } else { 1.0 + num / den };
+    } else if ax < 4.0 {
+        const P: [f64; 9] = [
+            1.230_339_354_797_997_2e3,
+            2.051_078_377_826_071_5e3,
+            1.712_047_612_634_070_7e3,
+            8.819_522_212_417_691e2,
+            2.986_351_381_974_001_3e2,
+            6.611_919_063_714_162_7e1,
+            8.883_149_794_388_376e0,
+            5.641_884_969_886_7e-1,
+            2.153_115_354_744_038_3e-8,
+        ];
+        const Q: [f64; 8] = [
+            1.230_339_354_803_749_5e3,
+            3.439_367_674_143_721_6e3,
+            4.362_619_090_143_247e3,
+            3.290_799_235_733_459_7e3,
+            1.621_389_574_566_690_3e3,
+            5.371_811_018_620_098_6e2,
+            1.176_939_508_913_124_6e2,
+            1.574_492_611_070_983_3e1,
+        ];
+        let num = ((((((((P[8] * ax + P[7]) * ax + P[6]) * ax + P[5]) * ax + P[4]) * ax + P[3]) * ax
+            + P[2])
+            * ax
+            + P[1])
+            * ax)
+            + P[0];
+        let den = ((((((((ax + Q[7]) * ax + Q[6]) * ax + Q[5]) * ax + Q[4]) * ax + Q[3]) * ax
+            + Q[2])
+            * ax
+            + Q[1])
+            * ax)
+            + Q[0];
+        (-ax * ax).exp() * num / den
+    } else {
+        const P: [f64; 6] = [
+            -6.587_491_615_298_378e-4,
+            -1.608_378_514_874_227_5e-2,
+            -1.257_817_261_112_292_1e-1,
+            -3.603_448_999_498_044_4e-1,
+            -3.053_266_349_612_323e-1,
+            -1.631_538_713_730_209_8e-2,
+        ];
+        const Q: [f64; 5] = [
+            2.335_204_976_268_691_8e-3,
+            6.051_834_131_244_132e-2,
+            5.279_051_029_514_284e-1,
+            1.872_952_849_923_460_4e0,
+            2.568_520_192_289_822e0,
+        ];
+        let z = 1.0 / (ax * ax);
+        let num = ((((P[5] * z + P[4]) * z + P[3]) * z + P[2]) * z + P[1]) * z + P[0];
+        let den = ((((z + Q[4]) * z + Q[3]) * z + Q[2]) * z + Q[1]) * z + Q[0];
+        let frac = 1.0 / std::f64::consts::PI.sqrt() + z * num / den;
+        ((-ax * ax).exp() / ax * frac).max(0.0)
+    };
+    if x >= 0.0 {
+        r
+    } else {
+        2.0 - r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_close, Prop};
+
+    #[test]
+    fn gh_weights_sum_to_sqrt_pi() {
+        for n in [1, 2, 5, 20, 61, 127] {
+            let r = gauss_hermite(n);
+            let s: f64 = r.weights.iter().sum();
+            assert!(
+                (s - std::f64::consts::PI.sqrt()).abs() < 1e-10,
+                "n={n} sum={s}"
+            );
+        }
+    }
+
+    #[test]
+    fn gh_integrates_monomials() {
+        // ∫ e^{-x²} x² dx = √π/2 ; ∫ e^{-x²} x⁴ dx = 3√π/4.
+        let r = gauss_hermite(21);
+        let m2: f64 = r.nodes.iter().zip(&r.weights).map(|(x, w)| w * x * x).sum();
+        let m4: f64 = r.nodes.iter().zip(&r.weights).map(|(x, w)| w * x.powi(4)).sum();
+        let sp = std::f64::consts::PI.sqrt();
+        assert!((m2 - sp / 2.0).abs() < 1e-10);
+        assert!((m4 - 3.0 * sp / 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expect_gaussian_moments() {
+        let m1 = expect_gaussian(2.0, 9.0, 31, |x| x);
+        let m2 = expect_gaussian(2.0, 9.0, 31, |x| (x - 2.0) * (x - 2.0));
+        assert!((m1 - 2.0).abs() < 1e-10);
+        assert!((m2 - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn erf_reference_values() {
+        // Reference values (Abramowitz & Stegun / mpmath).
+        let cases = [
+            (0.0, 0.0),
+            (0.1, 0.112_462_916_018_284_9),
+            (0.5, 0.520_499_877_813_046_5),
+            (1.0, 0.842_700_792_949_714_9),
+            (2.0, 0.995_322_265_018_952_7),
+            (3.0, 0.999_977_909_503_001_4),
+        ];
+        for (x, want) in cases {
+            assert!((erf(x) - want).abs() < 1e-12, "erf({x})={} want {want}", erf(x));
+            assert!((erf(-x) + want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn erfc_tail_accuracy() {
+        // erfc(5) = 1.5374597944280348e-12 (mpmath).
+        let want = 1.537_459_794_428_034_8e-12;
+        let got = erfc(5.0);
+        assert!((got / want - 1.0).abs() < 1e-6, "erfc(5)={got}");
+        // Symmetry erfc(-x) = 2 - erfc(x).
+        assert!((erfc(-1.3) - (2.0 - erfc(1.3))).abs() < 1e-14);
+    }
+
+    #[test]
+    fn normal_cdf_pdf_consistency() {
+        Prop::new("cdf' == pdf (finite diff)", 200).check(|g| {
+            let mu = g.f64_in(-3.0, 3.0);
+            let s2 = g.f64_log_in(1e-3, 10.0);
+            let x = g.f64_in(mu - 4.0 * s2.sqrt(), mu + 4.0 * s2.sqrt());
+            let h = 1e-6 * (1.0 + x.abs());
+            let d = (normal_cdf(x + h, mu, s2) - normal_cdf(x - h, mu, s2)) / (2.0 * h);
+            prop_close(d, normal_pdf(x, mu, s2), 1e-4 * (1.0 + d.abs()), "pdf")
+        });
+    }
+
+    #[test]
+    fn normal_cdf_bounds_and_midpoint() {
+        assert!((normal_cdf(0.0, 0.0, 1.0) - 0.5).abs() < 1e-15);
+        assert!(normal_cdf(-40.0, 0.0, 1.0) >= 0.0);
+        assert!(normal_cdf(40.0, 0.0, 1.0) <= 1.0);
+        assert!((normal_cdf(1.96, 0.0, 1.0) - 0.975_002_104_851_780_2).abs() < 1e-9);
+    }
+}

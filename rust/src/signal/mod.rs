@@ -1,0 +1,248 @@
+//! Signal & measurement model of the paper.
+//!
+//! `s0 ∈ R^N` is i.i.d. Bernoulli-Gauss (eq. 6): with probability `ε` an
+//! `N(μ_s, σ_s²)` draw, otherwise exactly zero. The sensing matrix `A` is
+//! `M×N` with i.i.d. `N(0, 1/M)` entries and the measurement noise `e` is
+//! i.i.d. `N(0, σ_e²)` chosen to meet a target SNR:
+//! `SNR = 10 log10(ρ/σ_e²)` with `ρ = ε/κ`, `κ = M/N`.
+
+use crate::error::{Error, Result};
+use crate::linalg::{norm2_sq, Matrix};
+use crate::util::rng::Rng;
+
+/// Parameters of the Bernoulli-Gauss source (paper eq. 6).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BernoulliGauss {
+    /// Sparsity rate ε (probability of a nonzero).
+    pub eps: f64,
+    /// Mean μ_s of the Gaussian (slab) component.
+    pub mu_s: f64,
+    /// Variance σ_s² of the Gaussian component.
+    pub sigma_s2: f64,
+}
+
+impl BernoulliGauss {
+    /// Paper defaults: μ_s = 0, σ_s = 1.
+    pub fn standard(eps: f64) -> Self {
+        BernoulliGauss { eps, mu_s: 0.0, sigma_s2: 1.0 }
+    }
+
+    /// Second moment `E[S0²] = ε (μ_s² + σ_s²)`.
+    pub fn second_moment(&self) -> f64 {
+        self.eps * (self.mu_s * self.mu_s + self.sigma_s2)
+    }
+
+    /// Draw one realization.
+    pub fn sample(&self, rng: &mut Rng) -> f64 {
+        if rng.bernoulli(self.eps) {
+            rng.gaussian_ms(self.mu_s, self.sigma_s2.sqrt())
+        } else {
+            0.0
+        }
+    }
+
+    /// Draw a length-`n` i.i.d. vector.
+    pub fn sample_vec(&self, n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| self.sample(rng) as f32).collect()
+    }
+
+    /// Validate parameter ranges.
+    pub fn validate(&self) -> Result<()> {
+        if !(0.0..=1.0).contains(&self.eps) {
+            return Err(Error::Config(format!("eps={} outside [0,1]", self.eps)));
+        }
+        if self.sigma_s2 <= 0.0 {
+            return Err(Error::Config(format!("sigma_s2={} must be > 0", self.sigma_s2)));
+        }
+        Ok(())
+    }
+}
+
+/// Dimensions + noise of a CS problem.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProblemDims {
+    /// Signal length N.
+    pub n: usize,
+    /// Measurement count M.
+    pub m: usize,
+    /// Measurement-noise variance σ_e².
+    pub sigma_e2: f64,
+}
+
+impl ProblemDims {
+    /// Undersampling ratio κ = M/N.
+    pub fn kappa(&self) -> f64 {
+        self.m as f64 / self.n as f64
+    }
+}
+
+/// σ_e² that achieves a target SNR (dB) for a given source & κ:
+/// `SNR = 10 log10(ρ/σ_e²)`, `ρ = ε (μ_s²+σ_s²) / κ`.
+pub fn sigma_e2_for_snr(prior: &BernoulliGauss, kappa: f64, snr_db: f64) -> f64 {
+    let rho = prior.second_moment() / kappa;
+    rho / 10f64.powf(snr_db / 10.0)
+}
+
+/// A fully-generated problem instance `y = A s0 + e`.
+#[derive(Debug, Clone)]
+pub struct Instance {
+    /// Sensing matrix (M×N, i.i.d. N(0, 1/M)).
+    pub a: Matrix,
+    /// Ground-truth signal.
+    pub s0: Vec<f32>,
+    /// Noisy measurements.
+    pub y: Vec<f32>,
+    /// Dimensions + noise level used.
+    pub dims: ProblemDims,
+    /// Source prior used.
+    pub prior: BernoulliGauss,
+}
+
+impl Instance {
+    /// Generate an instance from the model.
+    pub fn generate(
+        prior: BernoulliGauss,
+        dims: ProblemDims,
+        rng: &mut Rng,
+    ) -> Result<Instance> {
+        prior.validate()?;
+        if dims.n == 0 || dims.m == 0 {
+            return Err(Error::Config("N and M must be positive".into()));
+        }
+        let (m, n) = (dims.m, dims.n);
+        let mut a_data = vec![0f32; m * n];
+        rng.fill_gaussian(&mut a_data, (1.0 / m as f64).sqrt());
+        let a = Matrix::from_vec(m, n, a_data)?;
+        let s0 = prior.sample_vec(n, rng);
+        let mut y = vec![0f32; m];
+        a.matvec(&s0, &mut y);
+        let noise_sd = dims.sigma_e2.sqrt();
+        for v in y.iter_mut() {
+            *v += rng.gaussian_ms(0.0, noise_sd) as f32;
+        }
+        Ok(Instance { a, s0, y, dims, prior })
+    }
+
+    /// Empirical SNR of this instance, 10 log10(‖A s0‖²/‖e‖²) — for sanity
+    /// checks against the target (they agree as N grows).
+    pub fn empirical_snr_db(&self) -> f64 {
+        let mut as0 = vec![0f32; self.dims.m];
+        self.a.matvec(&self.s0, &mut as0);
+        let sig = norm2_sq(&as0);
+        let mut e = vec![0f32; self.dims.m];
+        crate::linalg::sub(&self.y, &as0, &mut e);
+        let noise = norm2_sq(&e).max(1e-300);
+        10.0 * (sig / noise).log10()
+    }
+
+    /// SDR of an estimate vs the ground truth:
+    /// `10 log10(‖s0‖² / ‖x − s0‖²)`.
+    pub fn sdr_db(&self, x: &[f32]) -> f64 {
+        let sig = norm2_sq(&self.s0);
+        let mut diff = vec![0f32; self.s0.len()];
+        crate::linalg::sub(x, &self.s0, &mut diff);
+        let err = norm2_sq(&diff).max(1e-300);
+        10.0 * (sig / err).log10()
+    }
+
+    /// Mean-squared error of an estimate, ‖x − s0‖²/N.
+    pub fn mse(&self, x: &[f32]) -> f64 {
+        let mut diff = vec![0f32; self.s0.len()];
+        crate::linalg::sub(x, &self.s0, &mut diff);
+        norm2_sq(&diff) / self.s0.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{prop_assert, Prop};
+
+    #[test]
+    fn second_moment_standard() {
+        let p = BernoulliGauss::standard(0.1);
+        assert!((p.second_moment() - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sample_sparsity_and_variance() {
+        let p = BernoulliGauss::standard(0.05);
+        let mut rng = Rng::new(3);
+        let v = p.sample_vec(200_000, &mut rng);
+        let nz = v.iter().filter(|&&x| x != 0.0).count() as f64 / v.len() as f64;
+        assert!((nz - 0.05).abs() < 0.005, "nz rate {nz}");
+        let m2 = v.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / v.len() as f64;
+        assert!((m2 - 0.05).abs() < 0.01, "second moment {m2}");
+    }
+
+    #[test]
+    fn validate_rejects_bad_params() {
+        assert!(BernoulliGauss { eps: 1.5, mu_s: 0.0, sigma_s2: 1.0 }.validate().is_err());
+        assert!(BernoulliGauss { eps: 0.5, mu_s: 0.0, sigma_s2: -1.0 }.validate().is_err());
+    }
+
+    #[test]
+    fn sigma_e2_matches_snr_definition() {
+        let p = BernoulliGauss::standard(0.1);
+        let s = sigma_e2_for_snr(&p, 0.3, 20.0);
+        let rho = 0.1 / 0.3;
+        assert!((10.0 * (rho / s).log10() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn generated_instance_snr_close_to_target() {
+        let prior = BernoulliGauss::standard(0.1);
+        let kappa = 0.3;
+        let n = 2000;
+        let m = 600;
+        let sigma_e2 = sigma_e2_for_snr(&prior, kappa, 20.0);
+        let mut rng = Rng::new(11);
+        let inst = Instance::generate(prior, ProblemDims { n, m, sigma_e2 }, &mut rng).unwrap();
+        let snr = inst.empirical_snr_db();
+        assert!((snr - 20.0).abs() < 1.5, "snr={snr}");
+    }
+
+    #[test]
+    fn sdr_of_truth_is_huge_and_of_zero_is_zero_ish() {
+        let prior = BernoulliGauss::standard(0.1);
+        let mut rng = Rng::new(5);
+        let inst = Instance::generate(
+            prior,
+            ProblemDims { n: 500, m: 150, sigma_e2: 1e-3 },
+            &mut rng,
+        )
+        .unwrap();
+        assert!(inst.sdr_db(&inst.s0.clone()) > 100.0);
+        let zero = vec![0f32; 500];
+        // SDR of the zero estimate is exactly 0 dB by definition.
+        assert!(inst.sdr_db(&zero).abs() < 1e-9);
+    }
+
+    #[test]
+    fn instance_rejects_empty_dims() {
+        let prior = BernoulliGauss::standard(0.1);
+        let mut rng = Rng::new(1);
+        assert!(Instance::generate(prior, ProblemDims { n: 0, m: 5, sigma_e2: 0.1 }, &mut rng)
+            .is_err());
+    }
+
+    #[test]
+    fn matrix_entries_have_variance_one_over_m() {
+        Prop::new("A entries ~ N(0,1/M)", 3).check(|g| {
+            let mut rng = Rng::new(g.u64());
+            let m = 200;
+            let inst = Instance::generate(
+                BernoulliGauss::standard(0.1),
+                ProblemDims { n: 300, m, sigma_e2: 0.01 },
+                &mut rng,
+            )
+            .unwrap();
+            let var = inst.a.data().iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+                / inst.a.data().len() as f64;
+            prop_assert(
+                (var - 1.0 / m as f64).abs() < 0.2 / m as f64,
+                format!("var={var} expected {}", 1.0 / m as f64),
+            )
+        });
+    }
+}

@@ -1,0 +1,58 @@
+//! Small shared utilities: RNG, property-testing helper, misc numerics.
+
+pub mod proptest;
+pub mod rng;
+
+pub use rng::Rng;
+
+/// Clamp a float into `[lo, hi]`.
+#[inline]
+pub fn clampf(x: f64, lo: f64, hi: f64) -> f64 {
+    if x < lo {
+        lo
+    } else if x > hi {
+        hi
+    } else {
+        x
+    }
+}
+
+/// Relative error `|a - b| / max(|b|, floor)` — used throughout tests.
+#[inline]
+pub fn rel_err(a: f64, b: f64) -> f64 {
+    (a - b).abs() / b.abs().max(1e-12)
+}
+
+/// log2 helper that maps 0 → 0 (used for entropy sums `p log2 p`).
+#[inline]
+pub fn xlog2x(p: f64) -> f64 {
+    if p <= 0.0 {
+        0.0
+    } else {
+        p * p.log2()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clampf_basics() {
+        assert_eq!(clampf(5.0, 0.0, 1.0), 1.0);
+        assert_eq!(clampf(-5.0, 0.0, 1.0), 0.0);
+        assert_eq!(clampf(0.5, 0.0, 1.0), 0.5);
+    }
+
+    #[test]
+    fn xlog2x_zero_is_zero() {
+        assert_eq!(xlog2x(0.0), 0.0);
+        assert!((xlog2x(0.5) - (-0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_err_symmetric_enough() {
+        assert!(rel_err(1.0, 1.0) < 1e-15);
+        assert!((rel_err(1.1, 1.0) - 0.1).abs() < 1e-12);
+    }
+}

