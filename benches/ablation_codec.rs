@@ -5,15 +5,16 @@
 //! integer-codeword penalty.
 
 use mpamp::bench_util::{section, Bencher};
-use mpamp::config::{CodecKind, RunConfig};
+use mpamp::config::CodecKind;
 use mpamp::metrics::Csv;
 use mpamp::quant::EcsqCoder;
 use mpamp::se::prior::BgChannel;
 use mpamp::se::StateEvolution;
 use mpamp::util::rng::Rng;
+use mpamp::SessionBuilder;
 
-fn main() -> anyhow::Result<()> {
-    let cfg = RunConfig::paper_default(0.05);
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = SessionBuilder::paper_default(0.05).config()?;
     let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
     let sigma_t2 = se.trajectory(4)[4];
     let base = BgChannel::new(cfg.prior);

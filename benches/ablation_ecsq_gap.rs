@@ -4,16 +4,16 @@
 //! rates the gap is larger. This bench traces `H_Q(Δ) − R(Δ²/12)` over
 //! rates 0.5–8 bits and checks convergence to the constant.
 
-use mpamp::config::RunConfig;
 use mpamp::metrics::Csv;
 use mpamp::quant::UniformQuantizer;
 use mpamp::rd::rd_curve_for_channel;
 use mpamp::se::prior::BgChannel;
 use mpamp::se::StateEvolution;
+use mpamp::SessionBuilder;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let eps = 0.05;
-    let cfg = RunConfig::paper_default(eps);
+    let cfg = SessionBuilder::paper_default(eps).config()?;
     let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
     // A representative mid-trajectory uplink source.
     let sigma_t2 = se.trajectory(4)[4];

@@ -5,13 +5,13 @@
 //! making it cheaper to code. This bench quantifies the net effect.
 
 use mpamp::alloc::backtrack::{BtController, RateModel};
-use mpamp::config::RunConfig;
 use mpamp::metrics::Csv;
 use mpamp::se::StateEvolution;
+use mpamp::SessionBuilder;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let eps = 0.05;
-    let cfg = RunConfig::paper_default(eps);
+    let cfg = SessionBuilder::paper_default(eps).config()?;
     let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
     let mut csv = Csv::new(&["p", "bt_total_bits", "bt_final_sdr_db", "max_iter_rate"]);
     println!("BT-MP-AMP total rate vs worker count (ε={eps}, T={}):", cfg.iters);

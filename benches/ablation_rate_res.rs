@@ -4,14 +4,14 @@
 //! choice.
 
 use mpamp::alloc::dp::DpAllocator;
-use mpamp::config::RunConfig;
 use mpamp::metrics::Csv;
 use mpamp::rd::RdCache;
 use mpamp::se::StateEvolution;
+use mpamp::SessionBuilder;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let eps = 0.05;
-    let cfg = RunConfig::paper_default(eps);
+    let cfg = SessionBuilder::paper_default(eps).config()?;
     let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
     let fp = se.fixed_point(1e-10, 300);
     let cache = RdCache::build(&cfg.prior, cfg.p, fp * 0.5, se.sigma0_sq() * 2.0, &cfg.rd)?;

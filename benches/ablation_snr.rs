@@ -4,12 +4,12 @@
 
 use mpamp::alloc::backtrack::{BtController, RateModel};
 use mpamp::alloc::dp::DpAllocator;
-use mpamp::config::RunConfig;
 use mpamp::metrics::Csv;
 use mpamp::rd::RdCache;
 use mpamp::se::StateEvolution;
+use mpamp::SessionBuilder;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let eps = 0.05;
     let mut csv = Csv::new(&[
         "snr_db",
@@ -24,8 +24,7 @@ fn main() -> anyhow::Result<()> {
         "SNR", "BT total", "BT SDR", "DP SDR", "cent SDR"
     );
     for snr_db in [10.0, 15.0, 20.0, 25.0] {
-        let mut cfg = RunConfig::paper_default(eps);
-        cfg.snr_db = snr_db;
+        let cfg = SessionBuilder::paper_default(eps).snr_db(snr_db).config()?;
         let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
         let t_iters = se.iters_to_steady(0.05, 40);
         let ctl = BtController::new(&se, cfg.p, 1.02, 6.0, t_iters);

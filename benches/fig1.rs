@@ -8,22 +8,54 @@
 //!   * DP-MP-AMP, RD prediction (offline DP trajectory),
 //!   * DP-MP-AMP, ECSQ simulation (real MP-AMP run, range coder).
 //!
+//! All six simulated runs (BT + DP per ε, shared instance per ε) execute
+//! through one [`mpamp::experiment::Sweep`]; the offline SE/DP series are
+//! computed inline as before.
+//!
 //! Output: printed series + `results/fig1_{sdr,rate}_eps*.csv`.
 
 use mpamp::alloc::backtrack::{BtController, RateModel};
 use mpamp::alloc::dp::DpAllocator;
-use mpamp::config::{RunConfig, ScheduleKind};
-use mpamp::coordinator::session::MpAmpSession;
+use mpamp::experiment::Sweep;
 use mpamp::metrics::Csv;
 use mpamp::rd::RdCache;
 use mpamp::se::StateEvolution;
 use mpamp::signal::{Instance, ProblemDims};
 use mpamp::util::rng::Rng;
+use mpamp::SessionBuilder;
 
-fn main() -> anyhow::Result<()> {
+const EPS: [f64; 3] = [0.03, 0.05, 0.10];
+
+use std::sync::Arc;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let t_all = std::time::Instant::now();
-    for eps in [0.03, 0.05, 0.10] {
-        let cfg = RunConfig::paper_default(eps);
+
+    // Simulated runs for every panel first (shared instance per ε).
+    let mut sweep = Sweep::new();
+    for &eps in &EPS {
+        let cfg = SessionBuilder::paper_default(eps).config()?;
+        let mut rng = Rng::new(cfg.seed);
+        let inst = Arc::new(Instance::generate(
+            cfg.prior,
+            ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+            &mut rng,
+        )?);
+        sweep.add(
+            format!("bt/{eps}"),
+            SessionBuilder::paper_default(eps)
+                .backtrack(1.02, 6.0)
+                .instance(inst.clone()),
+        );
+        sweep.add(
+            format!("dp/{eps}"),
+            SessionBuilder::paper_default(eps).dp(None, 0.1).instance(inst),
+        );
+    }
+    let runs = sweep.threads(3).run()?;
+
+    for (panel, &eps) in EPS.iter().enumerate() {
+        let cfg = SessionBuilder::paper_default(eps).config()?;
         let t_iters = cfg.iters;
         let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
         println!("=== Fig. 1 panel ε={eps} (T={t_iters}) ===");
@@ -36,19 +68,9 @@ fn main() -> anyhow::Result<()> {
         let (bt_rd, bt_rd_traj) = ctl.se_schedule(t_iters, RateModel::Rd, Some(&cache));
         let dp = DpAllocator::new(&se, cfg.p, &cache)?.solve(t_iters, 2.0 * t_iters as f64, 0.1)?;
 
-        // Simulated runs (shared instance).
-        let mut rng = Rng::new(cfg.seed);
-        let inst = Instance::generate(
-            cfg.prior,
-            ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
-            &mut rng,
-        )?;
-        let mut bt_cfg = cfg.clone();
-        bt_cfg.schedule = ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 };
-        let bt_run = MpAmpSession::with_instance(bt_cfg, inst.clone())?.run()?;
-        let mut dp_cfg = cfg.clone();
-        dp_cfg.schedule = ScheduleKind::Dp { total_rate: None, delta_r: 0.1 };
-        let dp_run = MpAmpSession::with_instance(dp_cfg, inst)?.run()?;
+        // The panel's simulated runs from the sweep.
+        let bt_run = &runs[2 * panel].report;
+        let dp_run = &runs[2 * panel + 1].report;
 
         // Print + CSV.
         let tag = (eps * 100.0) as u32;

@@ -4,7 +4,7 @@
 //! numbers the §Perf log in EXPERIMENTS.md tracks.
 
 use mpamp::bench_util::{black_box, section, Bencher};
-use mpamp::config::{RdConfig, RunConfig};
+use mpamp::config::RdConfig;
 use mpamp::engine::{ComputeEngine, RustEngine, WorkerData};
 use mpamp::quant::EcsqCoder;
 use mpamp::rd::RdCache;
@@ -12,16 +12,17 @@ use mpamp::se::prior::BgChannel;
 use mpamp::se::StateEvolution;
 use mpamp::signal::{Instance, ProblemDims};
 use mpamp::util::rng::Rng;
+use mpamp::SessionBuilder;
 
-fn main() -> anyhow::Result<()> {
-    let cfg = RunConfig::paper_default(0.05);
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let cfg = SessionBuilder::paper_default(0.05).config()?;
     let mut rng = Rng::new(3);
     let inst = Instance::generate(
         cfg.prior,
         ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
         &mut rng,
     )?;
-    let shard = WorkerData::split(&inst.a, &inst.y, cfg.p).remove(0);
+    let shard = WorkerData::try_split(&inst.a, &inst.y, cfg.p)?.remove(0);
     let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
     let x: Vec<f32> = (0..cfg.n).map(|_| rng.gaussian() as f32 * 0.1).collect();
     let z: Vec<f32> = (0..cfg.m / cfg.p).map(|_| rng.gaussian() as f32 * 0.1).collect();
@@ -35,7 +36,7 @@ fn main() -> anyhow::Result<()> {
             black_box(eng.lc_step(&shard, &x, &z, 0.3, cfg.p).unwrap());
         });
     }
-    if std::path::Path::new("artifacts/manifest.toml").exists() {
+    if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.toml").exists() {
         let eng = mpamp::runtime::XlaEngine::load(
             "artifacts",
             cfg.prior,
@@ -47,7 +48,7 @@ fn main() -> anyhow::Result<()> {
             black_box(eng.lc_step(&shard, &x, &z, 0.3, cfg.p).unwrap());
         });
     } else {
-        println!("(artifacts/ missing — skipping XLA lc_step; run `make artifacts`)");
+        println!("(artifacts/ or xla feature missing — skipping XLA lc_step)");
     }
 
     section("L3: fusion GC denoiser step (N=10000)");
@@ -58,7 +59,7 @@ fn main() -> anyhow::Result<()> {
             black_box(eng.gc_step(&f, 0.02).unwrap());
         });
     }
-    if std::path::Path::new("artifacts/manifest.toml").exists() {
+    if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.toml").exists() {
         let eng = mpamp::runtime::XlaEngine::load(
             "artifacts",
             cfg.prior,

@@ -2,17 +2,21 @@
 //! BT-MP-AMP and DP-MP-AMP, each in RD-prediction and ECSQ-simulation
 //! flavors, at ε ∈ {0.03, 0.05, 0.10}.
 //!
+//! The simulated rows run through [`mpamp::experiment::Sweep`] — one
+//! labelled trial per (ε, schedule) on a shared instance per ε — instead
+//! of a hand-rolled grid loop.
+//!
 //! Output: the table with the paper's values alongside, plus
 //! `results/table1.csv`.
 
 use mpamp::alloc::backtrack::{BtController, RateModel};
-use mpamp::config::{RunConfig, ScheduleKind};
-use mpamp::coordinator::session::MpAmpSession;
+use mpamp::experiment::Sweep;
 use mpamp::metrics::Csv;
 use mpamp::rd::RdCache;
 use mpamp::se::StateEvolution;
 use mpamp::signal::{Instance, ProblemDims};
 use mpamp::util::rng::Rng;
+use mpamp::SessionBuilder;
 
 const EPS: [f64; 3] = [0.03, 0.05, 0.10];
 const PAPER: [[f64; 3]; 5] = [
@@ -23,13 +27,17 @@ const PAPER: [[f64; 3]; 5] = [
     [18.04, 22.55, 45.10],   // DP ECSQ simulation (= 2T + 0.255T)
 ];
 
-fn main() -> anyhow::Result<()> {
+use std::sync::Arc;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let t_all = std::time::Instant::now();
     let mut ours = [[0f64; 3]; 5];
     let mut t_col = [0usize; 3];
 
+    // Offline rows (SE machinery, no data) + the simulated-run sweep.
+    let mut sweep = Sweep::new();
     for (col, &eps) in EPS.iter().enumerate() {
-        let cfg = RunConfig::paper_default(eps);
+        let cfg = SessionBuilder::paper_default(eps).config()?;
         let t_iters = cfg.iters;
         t_col[col] = t_iters;
         let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
@@ -47,32 +55,39 @@ fn main() -> anyhow::Result<()> {
         let (bt_ecsq, _) = ctl.se_schedule(t_iters, RateModel::Ecsq, Some(&cache));
         ours[1][col] = bt_ecsq.iter().map(|d| d.rate).sum();
 
-        // Shared instance for the simulated rows.
+        // DP, RD prediction: the budget itself (allocator uses all of 2T).
+        ours[3][col] = 2.0 * t_iters as f64;
+
+        // Shared instance per ε so BT and DP see identical data.
         let mut rng = Rng::new(cfg.seed);
-        let inst = Instance::generate(
+        let inst = Arc::new(Instance::generate(
             cfg.prior,
             ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
             &mut rng,
-        )?;
+        )?);
+        sweep.add(
+            format!("bt/{eps}"),
+            SessionBuilder::paper_default(eps)
+                .backtrack(1.02, 6.0)
+                .instance(inst.clone()),
+        );
+        sweep.add(
+            format!("dp/{eps}"),
+            SessionBuilder::paper_default(eps).dp(None, 0.1).instance(inst),
+        );
+    }
 
-        // BT, ECSQ simulation (real run, range coder on the wire).
-        let mut bt_cfg = cfg.clone();
-        bt_cfg.schedule = ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 };
-        let bt_run = MpAmpSession::with_instance(bt_cfg, inst.clone())?.run()?;
+    // BT online simulation + DP ECSQ simulation (range coder on the wire).
+    // Three concurrent trials: each session spawns P=30 workers itself.
+    let results = sweep.threads(3).run()?;
+    for (col, &eps) in EPS.iter().enumerate() {
+        let bt_run = &results[2 * col].report;
+        let dp_run = &results[2 * col + 1].report;
         // Online BT spends *fewer* bits than the SE model when the
         // empirical trajectory runs ahead of SE (finite-N) — see
         // EXPERIMENTS.md §Table-1 notes.
         ours[2][col] = bt_run.total_uplink_bits_per_element();
-
-        // DP, RD prediction: the budget itself (allocator uses all of 2T).
-        ours[3][col] = 2.0 * t_iters as f64;
-
-        // DP, ECSQ simulation.
-        let mut dp_cfg = cfg.clone();
-        dp_cfg.schedule = ScheduleKind::Dp { total_rate: None, delta_r: 0.1 };
-        let dp_run = MpAmpSession::with_instance(dp_cfg, inst)?.run()?;
         ours[4][col] = dp_run.total_uplink_bits_per_element();
-
         println!(
             "ε={eps}: BT final SDR {:.2} dB, DP final SDR {:.2} dB",
             bt_run.final_sdr_db(),

@@ -11,18 +11,23 @@
 //! prints the paper's Table-1 comparison plus the headline claims, and
 //! writes per-iteration CSVs under `results/`.
 //!
+//! The nine MP-AMP runs go through one [`mpamp::experiment::Sweep`] (one
+//! shared instance per ε, so every scheme sees identical data); only the
+//! centralized baseline stays inline — it is not an MP session.
+//!
 //! ```sh
 //! make artifacts && cargo run --release --example full_reproduction
 //! ```
 
-use mpamp::amp::run_centralized;
-use mpamp::config::{EngineKind, RunConfig, ScheduleKind};
-use mpamp::coordinator::session::MpAmpSession;
+use mpamp::amp::{run_centralized, CentralizedReport};
+use mpamp::config::EngineKind;
 use mpamp::engine::RustEngine;
+use mpamp::experiment::Sweep;
 use mpamp::metrics::Csv;
 use mpamp::se::StateEvolution;
 use mpamp::signal::{Instance, ProblemDims};
 use mpamp::util::rng::Rng;
+use mpamp::SessionBuilder;
 
 /// Paper Table 1 reference values (total bits/element).
 const PAPER_BT_ECSQ: [f64; 3] = [36.09, 49.19, 101.50];
@@ -30,34 +35,43 @@ const PAPER_BT_ECSQ: [f64; 3] = [36.09, 49.19, 101.50];
 const PAPER_DP_RD: [f64; 3] = [16.0, 20.0, 40.0];
 const PAPER_DP_ECSQ: [f64; 3] = [18.04, 22.55, 45.10];
 const EPS: [f64; 3] = [0.03, 0.05, 0.10];
+const SCHEMES: [&str; 3] = ["uncompressed", "bt", "dp"];
 
-fn main() -> anyhow::Result<()> {
+use std::sync::Arc;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let t_start = std::time::Instant::now();
-    let engine = if std::path::Path::new("artifacts/manifest.toml").exists() {
+    let engine = if cfg!(feature = "xla")
+        && std::path::Path::new("artifacts/manifest.toml").exists()
+    {
         EngineKind::Xla
     } else {
-        eprintln!("NOTE: artifacts/ missing — falling back to the pure-Rust engine.");
-        eprintln!("      Run `make artifacts` for the three-layer configuration.\n");
+        eprintln!(
+            "NOTE: artifacts/ missing or built without the `xla` feature — \
+             falling back to the pure-Rust engine."
+        );
+        eprintln!("      Run `make artifacts` + `--features xla` for all three layers.\n");
         EngineKind::Rust
     };
 
-    let mut table: Vec<[f64; 6]> = Vec::new();
-    for (col, &eps) in EPS.iter().enumerate() {
-        let cfg = RunConfig::paper_default(eps);
+    // Queue every (ε, scheme) pair; one shared instance per ε.
+    let mut sweep = Sweep::new();
+    let mut cents: Vec<CentralizedReport> = Vec::new();
+    for &eps in &EPS {
+        let cfg = SessionBuilder::paper_default(eps).config()?;
         println!(
             "=== ε = {eps}  (N={} M={} P={} T={} engine={engine:?}) ===",
             cfg.n, cfg.m, cfg.p, cfg.iters
         );
-        // One shared instance per ε so every scheme sees identical data.
         let mut rng = Rng::new(cfg.seed);
-        let inst = Instance::generate(
+        let inst = Arc::new(Instance::generate(
             cfg.prior,
             ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
             &mut rng,
-        )?;
+        )?);
         let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
 
-        // 1. Centralized baseline.
+        // 1. Centralized baseline (inline — not an MP session).
         let t0 = std::time::Instant::now();
         let rust_engine = RustEngine::new(cfg.prior, cfg.threads);
         let cent = run_centralized(&inst, &se, &rust_engine, cfg.iters)?;
@@ -66,27 +80,31 @@ fn main() -> anyhow::Result<()> {
             cent.final_sdr_db(),
             t0.elapsed().as_secs_f64()
         );
+        cents.push(cent);
 
         // 2–4. The three MP schemes on the same instance.
-        let schemes: [(&str, ScheduleKind); 3] = [
-            ("uncompressed", ScheduleKind::Uncompressed),
-            ("bt", ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 }),
-            ("dp", ScheduleKind::Dp { total_rate: None, delta_r: 0.1 }),
-        ];
+        let base = SessionBuilder::paper_default(eps)
+            .engine(engine)
+            .instance(inst);
+        sweep.add(format!("uncompressed/{eps}"), base.clone().uncompressed());
+        sweep.add(format!("bt/{eps}"), base.clone().backtrack(1.02, 6.0));
+        sweep.add(format!("dp/{eps}"), base.dp(None, 0.1));
+    }
+    let trials = sweep.threads(3).run()?;
+
+    let mut table: Vec<[f64; 6]> = Vec::new();
+    for (col, &eps) in EPS.iter().enumerate() {
+        let cent = &cents[col];
         let mut results = Vec::new();
-        for (name, schedule) in schemes {
-            let mut c = cfg.clone();
-            c.schedule = schedule;
-            c.engine = engine;
-            let t0 = std::time::Instant::now();
-            let report = MpAmpSession::with_instance(c, inst.clone())?.run()?;
+        for (si, name) in SCHEMES.iter().enumerate() {
+            let report = &trials[3 * col + si].report;
             println!(
                 "{name:<13}: final SDR {:>7.2} dB, {:>7.2} bits/element total \
                  ({:>5.1}% savings)  ({:.1}s)",
                 report.final_sdr_db(),
                 report.total_uplink_bits_per_element(),
                 report.savings_vs_float_pct(),
-                t0.elapsed().as_secs_f64()
+                report.wall_s
             );
             let tag = format!("results/e2e_{name}_eps{:03}.csv", (eps * 100.0) as u32);
             report.to_csv().write(&tag)?;
@@ -99,8 +117,8 @@ fn main() -> anyhow::Result<()> {
         }
         csv.write(&format!("results/e2e_centralized_eps{:03}.csv", (eps * 100.0) as u32))?;
 
-        let bt = &results[1];
-        let dp = &results[2];
+        let bt = results[1];
+        let dp = results[2];
         table.push([
             bt.total_uplink_bits_per_element(),
             PAPER_BT_ECSQ[col],

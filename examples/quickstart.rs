@@ -1,37 +1,48 @@
-//! Quickstart: run one BT-MP-AMP session at reduced scale and print the
-//! per-iteration quality/rate table.
+//! Quickstart: build a reduced-scale BT-MP-AMP session with the fluent
+//! builder, drive it one iteration at a time, and stop early once the
+//! estimate is good enough — the stepwise API in ~20 lines.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
-use mpamp::config::RunConfig;
-use mpamp::coordinator::session::MpAmpSession;
+use mpamp::SessionBuilder;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // The paper's ε = 0.05 column, shrunk 5× so this runs in well under a
-    // second. `RunConfig::paper_default(0.05)` gives the full-size setup.
-    let mut cfg = RunConfig::paper_default(0.05);
-    cfg.n = 2_000;
-    cfg.m = 600;
-    cfg.p = 10;
+    // second. `SessionBuilder::paper_default(0.05)` gives the full-size
+    // setup.
+    let mut session = SessionBuilder::paper_default(0.05)
+        .dims(2_000, 600)
+        .workers(10)
+        .build()?;
+    let cfg = session.config();
     println!(
         "MP-AMP quickstart: N={} M={} P={} ε={} SNR={} dB, schedule {:?}",
         cfg.n, cfg.m, cfg.p, cfg.prior.eps, cfg.snr_db, cfg.schedule
     );
 
-    let session = MpAmpSession::new(cfg)?;
-    let report = session.run()?;
-
     println!(
         "\n{:>3} {:>9} {:>10} {:>10}",
         "t", "SDR(dB)", "wire(b/el)", "σ_Q²"
     );
-    for r in &report.iters {
+    // Drive the protocol step by step: each snapshot is one completed
+    // iteration, and the caller decides whether to continue.
+    while let Some(snap) = session.step()? {
+        let r = &snap.record;
         println!(
             "{:>3} {:>9.2} {:>10.2} {:>10.3e}",
             r.t, r.sdr_db, r.rate_wire, r.sigma_q2
         );
+        if snap.sdr_db() > 19.0 {
+            session.note_stop(format!("SDR {:.2} dB is plenty", snap.sdr_db()));
+            break;
+        }
+    }
+    let report = session.finish()?;
+
+    if let Some(why) = &report.stopped_early {
+        println!("\nstopped early: {why}");
     }
     println!(
         "\nfinal SDR {:.2} dB using {:.2} bits/element total — {:.1}% uplink savings vs \

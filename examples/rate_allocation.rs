@@ -3,7 +3,8 @@
 //! Prints, for one sparsity level, the paper's two allocation schemes side
 //! by side: the DP-optimal schedule under a total budget (paper §3.4) and
 //! the BT back-tracking schedule (paper §3.3), with their SE-predicted SDR
-//! trajectories.
+//! trajectories. The problem setup (κ, SNR, P, T) comes from the paper
+//! preset via [`SessionBuilder`].
 //!
 //! ```sh
 //! cargo run --release --example rate_allocation [eps] [total_rate]
@@ -11,31 +12,28 @@
 
 use mpamp::alloc::backtrack::{BtController, RateModel};
 use mpamp::alloc::dp::DpAllocator;
-use mpamp::config::{paper_iters, RdConfig};
 use mpamp::rd::RdCache;
 use mpamp::se::StateEvolution;
-use mpamp::signal::{sigma_e2_for_snr, BernoulliGauss};
+use mpamp::SessionBuilder;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().collect();
     let eps: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(0.05);
-    let t_iters = paper_iters(eps);
+    let cfg = SessionBuilder::paper_default(eps).config()?;
+    let t_iters = cfg.iters;
     let total: f64 = args
         .get(2)
         .map(|s| s.parse())
         .transpose()?
         .unwrap_or(2.0 * t_iters as f64);
 
-    let prior = BernoulliGauss::standard(eps);
-    let kappa = 0.3;
-    let se = StateEvolution::new(prior, kappa, sigma_e2_for_snr(&prior, kappa, 20.0));
-    let p = 30;
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let p = cfg.p;
 
     println!("ε={eps}, T={t_iters}, P={p}, DP budget R={total} bits/element");
     println!("building Blahut–Arimoto RD cache...");
     let fp = se.fixed_point(1e-10, 300);
-    let rd_cfg = RdConfig::default();
-    let cache = RdCache::build(&prior, p, fp * 0.5, se.sigma0_sq() * 2.0, &rd_cfg)?;
+    let cache = RdCache::build(&cfg.prior, p, fp * 0.5, se.sigma0_sq() * 2.0, &cfg.rd)?;
 
     let t0 = std::time::Instant::now();
     let alloc = DpAllocator::new(&se, p, &cache)?;

@@ -6,20 +6,21 @@
 //! cargo run --release --example tcp_cluster
 //! ```
 
-use mpamp::config::{RunConfig, TransportKind};
-use mpamp::coordinator::session::MpAmpSession;
+use mpamp::config::TransportKind;
+use mpamp::SessionBuilder;
 
-fn main() -> anyhow::Result<()> {
-    let mut cfg = RunConfig::paper_default(0.05);
-    cfg.n = 2_000;
-    cfg.m = 600;
-    cfg.p = 10;
-    cfg.transport = TransportKind::Tcp;
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let session = SessionBuilder::paper_default(0.05)
+        .dims(2_000, 600)
+        .workers(10)
+        .transport(TransportKind::Tcp)
+        .build()?;
+    let cfg = session.config();
     println!(
         "TCP cluster: {} workers on loopback, N={} M={}, schedule {:?}",
         cfg.p, cfg.n, cfg.m, cfg.schedule
     );
-    let report = MpAmpSession::new(cfg)?.run()?;
+    let report = session.run()?;
     println!(
         "final SDR {:.2} dB | payload uplink {:.2} bits/element",
         report.final_sdr_db(),

@@ -121,9 +121,18 @@ COMMON OPTIONS:
     --out <file>             Write a CSV/JSON report to <file>
     --quiet                  Suppress the per-iteration table
 
+EARLY-STOPPING OPTIONS (run):
+    --max-iters <k>          Stop after k iterations (caps config iters)
+    --target-sdr <db>        Stop once the empirical SDR reaches <db>
+    --stall-window <k>       With --stall-delta: stop when SDR improves
+    --stall-delta <db>       by less than <db> over the last <k> iters
+    --max-bits <b>           Stop once total uplink spend reaches <b>
+                             bits/element
+
 EXAMPLES:
     mpamp run --prior.eps 0.05 --schedule.kind bt
     mpamp run --config configs/paper_eps005.toml --schedule.kind dp
+    mpamp run --prior.eps 0.05 --target-sdr 18 --max-bits 40
     mpamp dp --prior.eps 0.03 --schedule.total_rate 16
 "
 }

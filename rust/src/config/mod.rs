@@ -208,8 +208,18 @@ impl RunConfig {
     }
 
     /// Build from a parsed table (missing keys keep `paper_default(0.05)`
-    /// values — configs only need to state what they change).
+    /// values — configs only need to state what they change). Unknown
+    /// keys are rejected so typos fail loudly instead of silently keeping
+    /// defaults.
     pub fn from_table(t: &Table) -> Result<Self> {
+        for key in t.keys() {
+            if !KNOWN_KEYS.contains(&key.as_str()) {
+                return Err(Error::Config(format!(
+                    "unknown config key '{key}' (known keys: {})",
+                    KNOWN_KEYS.join(", ")
+                )));
+            }
+        }
         let mut c = RunConfig::paper_default(0.05);
         // Parse prior first: iters default depends on eps.
         if let Some(v) = t.get("prior.eps") {
@@ -409,6 +419,35 @@ impl RunConfig {
     }
 }
 
+/// Every key `from_table` understands (the schedule sub-keys are valid
+/// regardless of `schedule.kind` so partial overrides round-trip).
+pub const KNOWN_KEYS: &[&str] = &[
+    "n",
+    "m",
+    "p",
+    "prior.eps",
+    "prior.mu_s",
+    "prior.sigma_s2",
+    "snr_db",
+    "iters",
+    "seed",
+    "threads",
+    "artifact_dir",
+    "codec",
+    "engine",
+    "transport",
+    "schedule.kind",
+    "schedule.bits",
+    "schedule.ratio_max",
+    "schedule.r_max",
+    "schedule.total_rate",
+    "schedule.delta_r",
+    "rd.alphabet",
+    "rd.curve_points",
+    "rd.tol",
+    "rd.gamma_grid",
+];
+
 fn req_f64(v: &Value, key: &str) -> Result<f64> {
     v.as_f64().ok_or_else(|| Error::Config(format!("'{key}' must be a number")))
 }
@@ -511,6 +550,16 @@ mod tests {
     #[test]
     fn unknown_enum_values_rejected() {
         let t = toml::parse("codec = \"lzma\"").unwrap();
+        assert!(RunConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let t = toml::parse("snr_dbb = 20.0").unwrap();
+        let err = RunConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("unknown config key 'snr_dbb'"), "{err}");
+        // ...including typos inside sections.
+        let t = toml::parse("[schedule]\nkindd = \"dp\"").unwrap();
         assert!(RunConfig::from_table(&t).is_err());
     }
 

@@ -1,0 +1,267 @@
+//! Fluent construction of [`Session`]s (and validated [`RunConfig`]s):
+//! start from a preset, chain typed setters, validate once at
+//! [`build`](SessionBuilder::build).
+//!
+//! ```no_run
+//! use mpamp::SessionBuilder;
+//!
+//! let report = SessionBuilder::paper_default(0.05)
+//!     .dims(2_000, 600)
+//!     .workers(10)
+//!     .backtrack(1.02, 6.0)
+//!     .build()
+//!     .unwrap()
+//!     .run()
+//!     .unwrap();
+//! ```
+
+use std::sync::Arc;
+
+use crate::config::{
+    paper_iters, CodecKind, EngineKind, RdConfig, RunConfig, ScheduleKind, TransportKind,
+};
+use crate::coordinator::session::Session;
+use crate::error::Result;
+use crate::signal::{BernoulliGauss, Instance};
+
+/// Builder for [`Session`]s. Setters never fail; all invariants are
+/// checked together by [`build`](Self::build) / [`config`](Self::config).
+#[derive(Debug, Clone)]
+pub struct SessionBuilder {
+    cfg: RunConfig,
+    instance: Option<Arc<Instance>>,
+}
+
+impl SessionBuilder {
+    /// Start from the paper's evaluation setup for sparsity ε
+    /// (N=10 000, M=3 000, P=30, SNR=20 dB, BT schedule, paper's T).
+    pub fn paper_default(eps: f64) -> Self {
+        SessionBuilder { cfg: RunConfig::paper_default(eps), instance: None }
+    }
+
+    /// Start from the fast-test preset (N=600, M=180, P=6, T=6).
+    pub fn test_small(eps: f64) -> Self {
+        SessionBuilder { cfg: RunConfig::test_small(eps), instance: None }
+    }
+
+    /// Start from an existing config (e.g. loaded from a file / CLI).
+    pub fn from_config(cfg: RunConfig) -> Self {
+        SessionBuilder { cfg, instance: None }
+    }
+
+    // ---- problem shape ----
+
+    /// Signal length N and measurement count M together (they are almost
+    /// always changed as a pair to preserve κ = M/N).
+    pub fn dims(mut self, n: usize, m: usize) -> Self {
+        self.cfg.n = n;
+        self.cfg.m = m;
+        self
+    }
+
+    /// Signal length N.
+    pub fn n(mut self, n: usize) -> Self {
+        self.cfg.n = n;
+        self
+    }
+
+    /// Measurement count M.
+    pub fn m(mut self, m: usize) -> Self {
+        self.cfg.m = m;
+        self
+    }
+
+    /// Worker processor count P (must divide M — checked at build).
+    pub fn workers(mut self, p: usize) -> Self {
+        self.cfg.p = p;
+        self
+    }
+
+    /// Sparsity ε of the Bernoulli-Gauss prior. Also re-derives the
+    /// paper's iteration count for that sparsity — call
+    /// [`iters`](Self::iters) *afterwards* to pin T explicitly.
+    pub fn eps(mut self, eps: f64) -> Self {
+        self.cfg.prior.eps = eps;
+        self.cfg.iters = paper_iters(eps);
+        self
+    }
+
+    /// Full source prior (leaves the iteration count untouched).
+    pub fn prior(mut self, prior: BernoulliGauss) -> Self {
+        self.cfg.prior = prior;
+        self
+    }
+
+    /// Measurement SNR in dB.
+    pub fn snr_db(mut self, snr_db: f64) -> Self {
+        self.cfg.snr_db = snr_db;
+        self
+    }
+
+    /// AMP iteration count T.
+    pub fn iters(mut self, iters: usize) -> Self {
+        self.cfg.iters = iters;
+        self
+    }
+
+    /// RNG seed for instance generation.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Worker-side compute threads for the pure-Rust engine.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.cfg.threads = threads;
+        self
+    }
+
+    // ---- rate allocation ----
+
+    /// Any schedule, verbatim.
+    pub fn schedule(mut self, schedule: ScheduleKind) -> Self {
+        self.cfg.schedule = schedule;
+        self
+    }
+
+    /// 32-bit floats on the wire (the paper's baseline).
+    pub fn uncompressed(self) -> Self {
+        self.schedule(ScheduleKind::Uncompressed)
+    }
+
+    /// Fixed ECSQ rate (bits/element) every iteration.
+    pub fn fixed_rate(self, bits: f64) -> Self {
+        self.schedule(ScheduleKind::Fixed { bits })
+    }
+
+    /// BT-MP-AMP online back-tracking (paper §3.3).
+    pub fn backtrack(self, ratio_max: f64, r_max: f64) -> Self {
+        self.schedule(ScheduleKind::BackTrack { ratio_max, r_max })
+    }
+
+    /// DP-MP-AMP offline allocation (paper §3.4); `None` → `R = 2T`.
+    pub fn dp(self, total_rate: Option<f64>, delta_r: f64) -> Self {
+        self.schedule(ScheduleKind::Dp { total_rate, delta_r })
+    }
+
+    // ---- execution substrate ----
+
+    /// Wire codec.
+    pub fn codec(mut self, codec: CodecKind) -> Self {
+        self.cfg.codec = codec;
+        self
+    }
+
+    /// Compute engine.
+    pub fn engine(mut self, engine: EngineKind) -> Self {
+        self.cfg.engine = engine;
+        self
+    }
+
+    /// Artifact directory for the XLA engine.
+    pub fn artifact_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cfg.artifact_dir = dir.into();
+        self
+    }
+
+    /// Transport between workers and the fusion center.
+    pub fn transport(mut self, transport: TransportKind) -> Self {
+        self.cfg.transport = transport;
+        self
+    }
+
+    /// Rate-distortion substrate tuning.
+    pub fn rd(mut self, rd: RdConfig) -> Self {
+        self.cfg.rd = rd;
+        self
+    }
+
+    // ---- data ----
+
+    /// Run on this problem instance instead of generating one from the
+    /// seed. Benches share one instance across schedules — pass an
+    /// `Arc<Instance>` (clone the `Arc`, not the instance) so the
+    /// sensing matrix is not deep-copied per trial.
+    pub fn instance(mut self, instance: impl Into<Arc<Instance>>) -> Self {
+        self.instance = Some(instance.into());
+        self
+    }
+
+    // ---- terminal operations ----
+
+    /// Validate and return the accumulated config without building a
+    /// session (for offline SE/RD machinery that needs no data).
+    pub fn config(&self) -> Result<RunConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg.clone())
+    }
+
+    /// Validate everything and construct the [`Session`].
+    pub fn build(self) -> Result<Session> {
+        match self.instance {
+            Some(inst) => Session::with_instance(self.cfg, inst),
+            None => Session::new(self.cfg),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_runconfig_presets() {
+        let b = SessionBuilder::paper_default(0.05).config().unwrap();
+        assert_eq!(b, RunConfig::paper_default(0.05));
+        let s = SessionBuilder::test_small(0.1).config().unwrap();
+        assert_eq!(s, RunConfig::test_small(0.1));
+    }
+
+    #[test]
+    fn setters_compose() {
+        let cfg = SessionBuilder::paper_default(0.05)
+            .dims(2_000, 600)
+            .workers(10)
+            .iters(7)
+            .seed(42)
+            .fixed_rate(3.5)
+            .codec(CodecKind::Huffman)
+            .transport(TransportKind::Tcp)
+            .config()
+            .unwrap();
+        assert_eq!((cfg.n, cfg.m, cfg.p, cfg.iters, cfg.seed), (2_000, 600, 10, 7, 42));
+        assert_eq!(cfg.schedule, ScheduleKind::Fixed { bits: 3.5 });
+        assert_eq!(cfg.codec, CodecKind::Huffman);
+        assert_eq!(cfg.transport, TransportKind::Tcp);
+    }
+
+    #[test]
+    fn eps_rederives_paper_iters_until_pinned() {
+        let cfg = SessionBuilder::paper_default(0.05).eps(0.1).config().unwrap();
+        assert_eq!(cfg.iters, paper_iters(0.1));
+        let cfg =
+            SessionBuilder::paper_default(0.05).eps(0.1).iters(3).config().unwrap();
+        assert_eq!(cfg.iters, 3);
+    }
+
+    #[test]
+    fn build_validates() {
+        // P=7 does not divide M=3000 — must fail at build, not at run.
+        let err = SessionBuilder::paper_default(0.05).workers(7).build();
+        assert!(err.is_err());
+        let err = SessionBuilder::paper_default(0.05).fixed_rate(-2.0).config();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn builder_runs_end_to_end() {
+        let report = SessionBuilder::test_small(0.05)
+            .fixed_rate(4.0)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.iters.len(), 6);
+        assert!(report.final_sdr_db() > 8.0);
+    }
+}

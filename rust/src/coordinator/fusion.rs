@@ -1,6 +1,13 @@
 //! The fusion center: drives the iteration protocol, aggregates worker
 //! uplinks, designs the per-iteration quantizer from the rate controller's
 //! directive, denoises, and broadcasts the next estimate.
+//!
+//! The per-iteration logic lives in [`FusionState::step`] — resumable
+//! state that the stepwise [`crate::coordinator::session::Session`] driver
+//! advances one iteration at a time. [`run_fusion`] is the monolithic
+//! wrapper (a plain loop over `step` + the `Done` barrier) kept for
+//! callers that want the whole protocol in one call; both paths execute
+//! the identical per-iteration code, so their numerics agree bit-for-bit.
 
 use std::time::Instant;
 
@@ -60,32 +67,62 @@ pub fn spec_for_directive(
     })
 }
 
-/// Run the fusion protocol for `cfg.iters` iterations over the given
-/// worker endpoints. `eval` (ground truth) fills the SDR fields of the
-/// per-iteration records — it is measurement-only and never feeds back
-/// into the algorithm.
-#[allow(clippy::too_many_arguments)]
-pub fn run_fusion(
-    cfg: &RunConfig,
-    se: &StateEvolution,
-    controller: &RateController,
-    cache: Option<&RdCache>,
-    engine: &dyn ComputeEngine,
-    endpoints: &mut [Endpoint],
-    eval: Option<&Instance>,
-) -> Result<FusionOutput> {
-    let n = cfg.n;
-    let p = cfg.p;
-    let m = cfg.m as f64;
-    debug_assert_eq!(endpoints.len(), p);
-    let mut x = vec![0f32; n];
-    let mut coef = 0.0f32;
-    let mut iters = Vec::with_capacity(cfg.iters);
+/// Resumable fusion-center iteration state: the current estimate `x_t`,
+/// the Onsager coefficient, and the iteration counter. One [`step`]
+/// executes exactly one protocol round (broadcast → σ̂² → quantizer design
+/// → fuse → denoise) against live worker endpoints.
+///
+/// [`step`]: FusionState::step
+#[derive(Debug, Clone)]
+pub struct FusionState {
+    x: Vec<f32>,
+    coef: f32,
+    t: usize,
+}
 
-    for t in 0..cfg.iters {
+impl FusionState {
+    /// Fresh state at `t = 0` with the all-zero estimate.
+    pub fn new(n: usize) -> Self {
+        FusionState { x: vec![0f32; n], coef: 0.0, t: 0 }
+    }
+
+    /// Iterations completed so far.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// The current estimate `x_t`.
+    pub fn x(&self) -> &[f32] {
+        &self.x
+    }
+
+    /// Consume the state, yielding the final estimate.
+    pub fn into_x(self) -> Vec<f32> {
+        self.x
+    }
+
+    /// Run one protocol iteration over the worker endpoints. `eval`
+    /// (ground truth) fills the SDR fields of the record — it is
+    /// measurement-only and never feeds back into the algorithm.
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        cfg: &RunConfig,
+        se: &StateEvolution,
+        controller: &RateController,
+        cache: Option<&RdCache>,
+        engine: &dyn ComputeEngine,
+        endpoints: &mut [Endpoint],
+        eval: Option<&Instance>,
+    ) -> Result<IterRecord> {
+        let n = cfg.n;
+        let p = cfg.p;
+        let m = cfg.m as f64;
+        let t = self.t;
+        debug_assert_eq!(endpoints.len(), p);
         let t0 = Instant::now();
         // 1. Broadcast the step command.
-        let step = Message::StepCmd { t: t as u32, coef, x: x.clone() };
+        let step = Message::StepCmd { t: t as u32, coef: self.coef, x: self.x.clone() };
         for ep in endpoints.iter_mut() {
             ep.send(&step)?;
         }
@@ -196,25 +233,52 @@ pub fn run_fusion(
         // 5. Global computation: denoise at the quantization-aware level.
         let sigma_eff2 = sigma_d2_hat + p as f64 * sigma_q2;
         let gc = engine.gc_step(&f_sum, sigma_eff2)?;
-        x = gc.x_next;
-        coef = (gc.eta_prime_mean / se.kappa) as f32;
+        self.x = gc.x_next;
+        self.coef = (gc.eta_prime_mean / se.kappa) as f32;
+        self.t = t + 1;
         // 6. Record.
         let predicted_next = se.step_quantized(sigma_d2_hat, p as f64 * sigma_q2);
-        iters.push(IterRecord {
+        Ok(IterRecord {
             t,
-            sdr_db: eval.map(|inst| inst.sdr_db(&x)).unwrap_or(f64::NAN),
+            sdr_db: eval.map(|inst| inst.sdr_db(&self.x)).unwrap_or(f64::NAN),
             sdr_pred_db: se.sdr_db(predicted_next),
             rate_alloc,
             rate_wire: wire_bits / (p as f64 * n as f64),
             sigma_q2,
             sigma_d2_hat,
             wall_s: t0.elapsed().as_secs_f64(),
-        });
+        })
     }
-    for ep in endpoints.iter_mut() {
-        ep.send(&Message::Done)?;
+
+    /// Release the workers: broadcast `Done` on every endpoint.
+    pub fn finish(endpoints: &mut [Endpoint]) -> Result<()> {
+        for ep in endpoints.iter_mut() {
+            ep.send(&Message::Done)?;
+        }
+        Ok(())
     }
-    Ok(FusionOutput { iters, final_x: x })
+}
+
+/// Run the fusion protocol for `cfg.iters` iterations over the given
+/// worker endpoints — a thin loop over [`FusionState::step`] followed by
+/// the `Done` broadcast.
+#[allow(clippy::too_many_arguments)]
+pub fn run_fusion(
+    cfg: &RunConfig,
+    se: &StateEvolution,
+    controller: &RateController,
+    cache: Option<&RdCache>,
+    engine: &dyn ComputeEngine,
+    endpoints: &mut [Endpoint],
+    eval: Option<&Instance>,
+) -> Result<FusionOutput> {
+    let mut state = FusionState::new(cfg.n);
+    let mut iters = Vec::with_capacity(cfg.iters);
+    for _ in 0..cfg.iters {
+        iters.push(state.step(cfg, se, controller, cache, engine, endpoints, eval)?);
+    }
+    FusionState::finish(endpoints)?;
+    Ok(FusionOutput { iters, final_x: state.into_x() })
 }
 
 /// Model channel for the worker uplink at the given σ̂² (re-exported for

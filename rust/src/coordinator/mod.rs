@@ -17,11 +17,13 @@
 //! fusion: f̃ = Σ dequant(f^p); x_{t+1} = η(f̃); loop
 //! ```
 
+pub mod builder;
 pub mod fusion;
 pub mod message;
 pub mod session;
 pub mod transport;
 pub mod worker;
 
+pub use builder::SessionBuilder;
 pub use message::{FPayload, Message, QuantSpec};
-pub use session::{MpAmpSession, RunReport};
+pub use session::{IterSnapshot, MpAmpSession, RunReport, Session};

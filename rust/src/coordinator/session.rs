@@ -1,18 +1,27 @@
 //! Session orchestration: generate (or accept) a problem instance, shard it
-//! across `P` worker threads, run the fusion protocol, and produce a
+//! across `P` worker threads, and drive the fusion protocol — either one
+//! iteration at a time via [`Session::step`] (observable, stoppable) or to
+//! completion via [`Session::run`] (a thin loop over `step`), producing a
 //! [`RunReport`] with per-iteration quality and exact communication costs.
+//!
+//! Construct sessions with [`SessionBuilder`](crate::SessionBuilder); the
+//! `new`/`with_instance` constructors remain for callers that already hold
+//! a validated [`RunConfig`].
 
 use std::sync::Arc;
+use std::thread::JoinHandle;
 use std::time::Instant;
 
 use crate::alloc::schedule::RateController;
 use crate::config::{EngineKind, RunConfig, ScheduleKind, TransportKind};
-use crate::coordinator::fusion::{run_fusion, FusionOutput};
+use crate::coordinator::fusion::FusionState;
+use crate::coordinator::message::Message;
 use crate::coordinator::transport::{inproc_pair, tcp_connect, Endpoint, TcpFusionListener};
 use crate::coordinator::worker::{run_worker, WorkerParams};
 use crate::engine::{ComputeEngine, RustEngine, WorkerData};
 use crate::error::{Error, Result};
 use crate::metrics::{ByteMeter, Csv, IterRecord, Json};
+use crate::observe::{NullObserver, RunObserver, StopSet};
 use crate::rd::RdCache;
 use crate::se::StateEvolution;
 use crate::signal::{Instance, ProblemDims};
@@ -37,6 +46,10 @@ pub struct RunReport {
     pub transport_downlink_bits: u64,
     /// Wall-clock for the whole session.
     pub wall_s: f64,
+    /// Why the run stopped before `cfg.iters`, if a [`StopRule`] fired.
+    ///
+    /// [`StopRule`]: crate::observe::StopRule
+    pub stopped_early: Option<String>,
 }
 
 impl RunReport {
@@ -104,20 +117,90 @@ impl RunReport {
                 Json::Num(self.total_uplink_bits_per_element()),
             )
             .set("savings_vs_float_pct", Json::Num(self.savings_vs_float_pct()))
+            .set(
+                "stopped_early",
+                match &self.stopped_early {
+                    Some(s) => Json::Str(s.clone()),
+                    None => Json::Null,
+                },
+            )
             .set("wall_s", Json::Num(self.wall_s))
     }
 }
 
-/// A configured MP-AMP session.
-pub struct MpAmpSession {
+/// Owned view of one completed iteration, returned by [`Session::step`]
+/// and streamed to [`RunObserver`]s.
+#[derive(Debug, Clone)]
+pub struct IterSnapshot {
+    /// The iteration's record (quality, rates, σ estimates, timing).
+    pub record: IterRecord,
+    /// Measured uplink spend so far, bits per element of `f_t^p`.
+    pub cum_wire_bits_per_element: f64,
+    /// Allocated (analytic) spend so far, bits per element.
+    pub cum_alloc_bits_per_element: f64,
+}
+
+impl IterSnapshot {
+    /// Iteration index (0-based).
+    pub fn t(&self) -> usize {
+        self.record.t
+    }
+
+    /// Empirical SDR after this iteration, dB.
+    pub fn sdr_db(&self) -> f64 {
+        self.record.sdr_db
+    }
+}
+
+/// Live protocol state: worker threads, their endpoints, and the fusion
+/// iteration state. Created lazily on the first [`Session::step`].
+struct Active {
+    controller: RateController,
+    meter: Arc<ByteMeter>,
+    endpoints: Vec<Endpoint>,
+    workers: Vec<JoinHandle<Result<usize>>>,
+    state: FusionState,
+    records: Vec<IterRecord>,
+    t0: Instant,
+    stop_reason: Option<String>,
+}
+
+/// A configured MP-AMP session — the stepwise driver at the heart of the
+/// crate's public API.
+///
+/// ```no_run
+/// use mpamp::SessionBuilder;
+///
+/// let mut session = SessionBuilder::test_small(0.05).build().unwrap();
+/// while let Some(snap) = session.step().unwrap() {
+///     println!("t={} SDR={:.2} dB", snap.t(), snap.sdr_db());
+///     if snap.sdr_db() > 15.0 {
+///         break; // caller-driven early stop
+///     }
+/// }
+/// let report = session.finish().unwrap();
+/// println!("{} iterations, {:.2} bits/element",
+///          report.iters.len(), report.total_uplink_bits_per_element());
+/// ```
+pub struct Session {
     cfg: RunConfig,
-    instance: Instance,
+    instance: Arc<Instance>,
     se: StateEvolution,
     cache: Option<RdCache>,
     engine: Arc<dyn ComputeEngine>,
+    active: Option<Active>,
+    /// Set once a step failed; the session is unusable afterwards (a
+    /// later `finish` must not silently start a fresh run).
+    failed: bool,
+    /// Set once `finish` produced a report; further `step`/`finish`
+    /// calls error instead of silently starting a second run.
+    finished: bool,
 }
 
-impl MpAmpSession {
+/// Former name of [`Session`], kept so existing call sites read naturally.
+pub type MpAmpSession = Session;
+
+impl Session {
     /// Build from a config (generates the instance from the config's seed).
     pub fn new(cfg: RunConfig) -> Result<Self> {
         cfg.validate()?;
@@ -131,9 +214,23 @@ impl MpAmpSession {
     }
 
     /// Build around an existing instance (benches reuse one instance
-    /// across schedules).
-    pub fn with_instance(cfg: RunConfig, instance: Instance) -> Result<Self> {
+    /// across schedules — pass an `Arc<Instance>` to share it without
+    /// cloning the sensing matrix).
+    pub fn with_instance(
+        cfg: RunConfig,
+        instance: impl Into<Arc<Instance>>,
+    ) -> Result<Self> {
         cfg.validate()?;
+        let instance: Arc<Instance> = instance.into();
+        if instance.a.rows() != cfg.m || instance.a.cols() != cfg.n {
+            return Err(Error::Config(format!(
+                "instance shape ({}, {}) does not match config (M={}, N={})",
+                instance.a.rows(),
+                instance.a.cols(),
+                cfg.m,
+                cfg.n
+            )));
+        }
         let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
         let cache = match cfg.schedule {
             // Only the DP allocator consults the RD function at runtime.
@@ -159,12 +256,21 @@ impl MpAmpSession {
                 cfg.p,
             )?),
         };
-        Ok(MpAmpSession { cfg, instance, se, cache, engine })
+        Ok(Session {
+            cfg,
+            instance,
+            se,
+            cache,
+            engine,
+            active: None,
+            failed: false,
+            finished: false,
+        })
     }
 
     /// Access the underlying instance (e.g. for external SDR checks).
     pub fn instance(&self) -> &Instance {
-        &self.instance
+        self.instance.as_ref()
     }
 
     /// The state-evolution engine for this session's problem.
@@ -172,16 +278,32 @@ impl MpAmpSession {
         &self.se
     }
 
-    /// Run the full protocol; returns the report.
-    pub fn run(&self) -> Result<RunReport> {
+    /// The session's configuration.
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+
+    /// Records of all iterations completed so far.
+    pub fn history(&self) -> &[IterRecord] {
+        self.active.as_ref().map(|a| a.records.as_slice()).unwrap_or(&[])
+    }
+
+    /// The current estimate `x_t` (zeros before the first step).
+    pub fn current_x(&self) -> Option<&[f32]> {
+        self.active.as_ref().map(|a| a.state.x())
+    }
+
+    /// Spawn workers and transports; called lazily by the first `step`.
+    fn start(&mut self) -> Result<()> {
+        debug_assert!(self.active.is_none());
         let t0 = Instant::now();
         let cfg = &self.cfg;
         let controller = RateController::from_config(cfg, &self.se, self.cache.as_ref())?;
         let meter = Arc::new(ByteMeter::new());
-        let shards = WorkerData::split(&self.instance.a, &self.instance.y, cfg.p);
+        let shards = WorkerData::try_split(&self.instance.a, &self.instance.y, cfg.p)?;
 
         // Build transport pairs.
-        let (mut fusion_eps, worker_eps): (Vec<Endpoint>, Vec<Endpoint>) =
+        let (fusion_eps, worker_eps): (Vec<Endpoint>, Vec<Endpoint>) =
             match cfg.transport {
                 TransportKind::InProc => {
                     let pairs: Vec<_> =
@@ -205,61 +327,240 @@ impl MpAmpSession {
                 }
             };
 
-        // Spawn workers, run fusion, join.
-        let output: Result<FusionOutput> = std::thread::scope(|s| {
-            let mut handles = Vec::with_capacity(cfg.p);
-            for (id, (shard, mut ep)) in
-                shards.iter().zip(worker_eps.into_iter()).enumerate()
-            {
-                let params = WorkerParams {
-                    id: id as u32,
-                    p_workers: cfg.p,
-                    prior: cfg.prior,
-                    codec: cfg.codec,
+        // Spawn the worker threads; they serve protocol rounds until the
+        // fusion side broadcasts `Done` (or their endpoint drops).
+        let mut workers = Vec::with_capacity(cfg.p);
+        for (id, (shard, mut ep)) in
+            shards.into_iter().zip(worker_eps.into_iter()).enumerate()
+        {
+            let params = WorkerParams {
+                id: id as u32,
+                p_workers: cfg.p,
+                prior: cfg.prior,
+                codec: cfg.codec,
+            };
+            let engine = self.engine.clone();
+            workers.push(std::thread::spawn(move || {
+                run_worker(&params, &shard, engine.as_ref(), &mut ep)
+            }));
+        }
+
+        self.active = Some(Active {
+            controller,
+            meter,
+            endpoints: fusion_eps,
+            workers,
+            state: FusionState::new(cfg.n),
+            records: Vec::with_capacity(cfg.iters),
+            t0,
+            stop_reason: None,
+        });
+        Ok(())
+    }
+
+    /// Advance the protocol by exactly one iteration.
+    ///
+    /// Returns `Ok(Some(snapshot))` for a completed iteration and
+    /// `Ok(None)` once `cfg.iters` iterations have run (the session is
+    /// then waiting for [`finish`](Session::finish)). The first call
+    /// spawns the worker threads.
+    pub fn step(&mut self) -> Result<Option<IterSnapshot>> {
+        if self.failed {
+            return Err(Error::Protocol(
+                "session failed during an earlier step; build a new one".into(),
+            ));
+        }
+        if self.finished {
+            return Err(Error::Protocol(
+                "session already finished; build a new one to run again".into(),
+            ));
+        }
+        if self.active.is_none() {
+            self.start()?;
+        }
+        let act = self.active.as_mut().expect("just started");
+        if act.state.t() >= self.cfg.iters {
+            return Ok(None);
+        }
+        let stepped = act.state.step(
+            &self.cfg,
+            &self.se,
+            &act.controller,
+            self.cache.as_ref(),
+            self.engine.as_ref(),
+            &mut act.endpoints,
+            Some(self.instance.as_ref()),
+        );
+        match stepped {
+            Ok(record) => {
+                act.records.push(record.clone());
+                let snap = IterSnapshot {
+                    cum_wire_bits_per_element: act
+                        .records
+                        .iter()
+                        .map(|r| r.rate_wire)
+                        .sum(),
+                    cum_alloc_bits_per_element: act
+                        .records
+                        .iter()
+                        .map(|r| r.rate_alloc)
+                        .sum(),
+                    record,
                 };
-                let engine = self.engine.clone();
-                handles.push(s.spawn(move || {
-                    run_worker(&params, shard, engine.as_ref(), &mut ep)
-                }));
+                Ok(Some(snap))
             }
-            let out = run_fusion(
-                cfg,
-                &self.se,
-                &controller,
-                self.cache.as_ref(),
-                self.engine.as_ref(),
-                &mut fusion_eps,
-                Some(&self.instance),
-            );
-            for (id, h) in handles.into_iter().enumerate() {
-                match h.join() {
-                    Ok(Ok(iters)) => {
-                        if out.is_ok() && iters != cfg.iters {
-                            return Err(Error::Protocol(format!(
-                                "worker {id} served {iters} != {} iterations",
-                                cfg.iters
-                            )));
-                        }
-                    }
-                    Ok(Err(e)) => return Err(e),
-                    Err(_) => {
-                        return Err(Error::Transport(format!("worker {id} panicked")))
+            // A dead worker surfaces as a transport/protocol error on the
+            // fusion side; join the workers to report the root cause.
+            Err(e) => Err(self.collect_worker_error(e)),
+        }
+    }
+
+    /// Record why the driver is stopping early (shows up in the report).
+    pub fn note_stop(&mut self, reason: String) {
+        if let Some(act) = self.active.as_mut() {
+            act.stop_reason = Some(reason);
+        }
+    }
+
+    /// Release the workers, join them, and assemble the [`RunReport`].
+    ///
+    /// Valid after any number of `step` calls (including zero). Erroring
+    /// workers take precedence over count mismatches in the result.
+    pub fn finish(&mut self) -> Result<RunReport> {
+        if self.failed {
+            return Err(Error::Protocol(
+                "session failed during an earlier step; no report available".into(),
+            ));
+        }
+        if self.finished {
+            return Err(Error::Protocol(
+                "session already finished; the report was already returned".into(),
+            ));
+        }
+        if self.active.is_none() {
+            // Zero-step finish: still spin up/down the protocol so the
+            // report reflects a real (empty) run.
+            self.start()?;
+        }
+        let mut act = self.active.take().expect("active session");
+        let steps = act.records.len();
+        // A failed Done send means the worker already died; keep going so
+        // the join below can report its root-cause error.
+        let mut root_err: Option<Error> = None; // errors returned by workers
+        let mut side_err: Option<Error> = None; // send failures, counts, panics
+        for ep in act.endpoints.iter_mut() {
+            if let Err(e) = ep.send(&Message::Done) {
+                side_err.get_or_insert(e);
+            }
+        }
+        // Drop the endpoints so a worker stuck mid-protocol errors out
+        // rather than deadlocking the join below. Join *every* handle —
+        // even after an error — so no worker thread outlives the session.
+        act.endpoints.clear();
+        for (id, h) in act.workers.into_iter().enumerate() {
+            match h.join() {
+                Ok(Ok(served)) => {
+                    if served != steps && side_err.is_none() {
+                        side_err = Some(Error::Protocol(format!(
+                            "worker {id} served {served} != {steps} iterations"
+                        )));
                     }
                 }
+                Ok(Err(e)) => {
+                    root_err.get_or_insert(e);
+                }
+                Err(_) => {
+                    side_err.get_or_insert(Error::Transport(format!(
+                        "worker {id} panicked"
+                    )));
+                }
             }
-            out
-        });
-        let output = output?;
+        }
+        // Worker root causes beat Done-send/count/panic secondaries.
+        if let Some(e) = root_err.or(side_err) {
+            self.failed = true;
+            return Err(e);
+        }
+        self.finished = true;
         Ok(RunReport {
-            iters: output.iters,
-            final_x: output.final_x,
-            dims: (cfg.n, cfg.m, cfg.p),
-            schedule: controller.name().to_string(),
+            iters: act.records,
+            final_x: act.state.into_x(),
+            dims: (self.cfg.n, self.cfg.m, self.cfg.p),
+            schedule: act.controller.name().to_string(),
             engine: self.engine.name().to_string(),
-            transport_uplink_bits: meter.uplink_bits(),
-            transport_downlink_bits: meter.downlink_bits(),
-            wall_s: t0.elapsed().as_secs_f64(),
+            transport_uplink_bits: act.meter.uplink_bits(),
+            transport_downlink_bits: act.meter.downlink_bits(),
+            wall_s: act.t0.elapsed().as_secs_f64(),
+            stopped_early: act.stop_reason,
         })
+    }
+
+    /// Run the full protocol: a thin loop over [`step`](Session::step)
+    /// followed by [`finish`](Session::finish).
+    pub fn run(self) -> Result<RunReport> {
+        self.run_observed(&mut NullObserver, &StopSet::none())
+    }
+
+    /// Run with per-iteration observation and early stopping: after each
+    /// step the observer sees the snapshot, then the stop rules are
+    /// evaluated on the history; the first rule to fire ends the run (its
+    /// description lands in [`RunReport::stopped_early`]).
+    pub fn run_observed(
+        mut self,
+        observer: &mut dyn RunObserver,
+        stop: &StopSet,
+    ) -> Result<RunReport> {
+        observer.on_start(&self.cfg);
+        while let Some(snap) = self.step()? {
+            observer.on_iter(&snap);
+            if let Some(reason) = stop.triggered(self.history()) {
+                self.note_stop(reason);
+                break;
+            }
+        }
+        let report = self.finish()?;
+        observer.on_finish(&report);
+        Ok(report)
+    }
+
+    /// Join workers after a fusion-side error. A worker's own
+    /// non-transport error is the root cause and wins; transport errors
+    /// reported by workers are usually secondary (their endpoint was just
+    /// dropped to unblock them), so the fusion error wins over those.
+    fn collect_worker_error(&mut self, fusion_err: Error) -> Error {
+        self.failed = true;
+        let mut root: Option<Error> = None;
+        if let Some(act) = self.active.take() {
+            // Unblock workers waiting on a recv, then join every handle.
+            drop(act.endpoints);
+            for h in act.workers {
+                match h.join() {
+                    Ok(Err(Error::Transport(_))) => {}
+                    Ok(Err(worker_err)) => {
+                        root.get_or_insert(worker_err);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        root.unwrap_or(fusion_err)
+    }
+}
+
+impl Drop for Session {
+    fn drop(&mut self) {
+        // Best-effort cleanup when the session is dropped mid-run (e.g. a
+        // caller bails out of a step loop): release and join the workers
+        // so no threads outlive the session.
+        if let Some(mut act) = self.active.take() {
+            for ep in act.endpoints.iter_mut() {
+                let _ = ep.send(&Message::Done);
+            }
+            drop(act.endpoints);
+            for h in act.workers {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -267,12 +568,13 @@ impl MpAmpSession {
 mod tests {
     use super::*;
     use crate::config::CodecKind;
+    use crate::observe::{RecordLog, StopRule};
 
     fn run_with(schedule: ScheduleKind, codec: CodecKind) -> RunReport {
         let mut cfg = RunConfig::test_small(0.05);
         cfg.schedule = schedule;
         cfg.codec = codec;
-        MpAmpSession::new(cfg).unwrap().run().unwrap()
+        Session::new(cfg).unwrap().run().unwrap()
     }
 
     #[test]
@@ -341,9 +643,9 @@ mod tests {
     fn tcp_transport_matches_inproc() {
         let mut cfg = RunConfig::test_small(0.05);
         cfg.schedule = ScheduleKind::Fixed { bits: 4.0 };
-        let inproc = MpAmpSession::new(cfg.clone()).unwrap().run().unwrap();
+        let inproc = Session::new(cfg.clone()).unwrap().run().unwrap();
         cfg.transport = TransportKind::Tcp;
-        let tcp = MpAmpSession::new(cfg).unwrap().run().unwrap();
+        let tcp = Session::new(cfg).unwrap().run().unwrap();
         for (a, b) in inproc.iters.iter().zip(&tcp.iters) {
             assert!((a.sdr_db - b.sdr_db).abs() < 1e-9, "transport changed numerics");
             assert!((a.rate_wire - b.rate_wire).abs() < 1e-12);
@@ -360,5 +662,54 @@ mod tests {
         // Downlink dominated by P broadcasts of x per iteration.
         let min_downlink = (r.iters.len() * r.dims.2 * r.dims.0 * 32) as u64;
         assert!(r.transport_downlink_bits >= min_downlink);
+    }
+
+    #[test]
+    fn stepwise_drive_matches_run() {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.schedule = ScheduleKind::Fixed { bits: 4.0 };
+        let whole = Session::new(cfg.clone()).unwrap().run().unwrap();
+
+        let mut session = Session::new(cfg).unwrap();
+        let mut snaps = Vec::new();
+        while let Some(s) = session.step().unwrap() {
+            snaps.push(s);
+        }
+        let stepped = session.finish().unwrap();
+        assert_eq!(whole.iters.len(), stepped.iters.len());
+        for (a, b) in whole.iters.iter().zip(&stepped.iters) {
+            assert_eq!(a.sdr_db.to_bits(), b.sdr_db.to_bits(), "t={}", a.t);
+            assert_eq!(a.rate_wire.to_bits(), b.rate_wire.to_bits(), "t={}", a.t);
+        }
+        // Snapshots accumulate the wire spend.
+        let total: f64 = stepped.iters.iter().map(|r| r.rate_wire).sum();
+        assert!(
+            (snaps.last().unwrap().cum_wire_bits_per_element - total).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn early_stop_joins_workers_cleanly() {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.schedule = ScheduleKind::Fixed { bits: 4.0 };
+        let stop = StopSet::none().with(StopRule::MaxIters(2));
+        let mut log = RecordLog::new();
+        let report = Session::new(cfg)
+            .unwrap()
+            .run_observed(&mut log, &stop)
+            .unwrap();
+        assert_eq!(report.iters.len(), 2);
+        assert_eq!(log.records.len(), 2);
+        let why = report.stopped_early.as_deref().unwrap();
+        assert!(why.contains("max iterations"), "{why}");
+    }
+
+    #[test]
+    fn dropping_mid_run_does_not_hang() {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.schedule = ScheduleKind::Fixed { bits: 4.0 };
+        let mut session = Session::new(cfg).unwrap();
+        session.step().unwrap().unwrap();
+        drop(session); // Drop impl must release + join the workers.
     }
 }

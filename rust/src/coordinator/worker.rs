@@ -154,7 +154,7 @@ mod tests {
             &mut rng,
         )
         .unwrap();
-        let data = WorkerData::split(&inst.a, &inst.y, 2).remove(0);
+        let data = WorkerData::try_split(&inst.a, &inst.y, 2).unwrap().remove(0);
         let engine = RustEngine::new(prior, 1);
         let params =
             WorkerParams { id: 0, p_workers: 2, prior, codec: CodecKind::Range };

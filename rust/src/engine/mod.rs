@@ -12,7 +12,7 @@
 //! the same kernels from AOT-compiled JAX/Pallas artifacts and must agree
 //! with it to float tolerance (asserted in integration tests).
 
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::se::prior::BgChannel;
 use crate::signal::BernoulliGauss;
@@ -27,16 +27,30 @@ pub struct WorkerData {
 }
 
 impl WorkerData {
-    /// Split a full instance into `p` equal row blocks.
-    pub fn split(a: &Matrix, y: &[f32], p: usize) -> Vec<WorkerData> {
-        assert_eq!(a.rows() % p, 0, "P must divide M");
+    /// Split a full instance into `p` equal row blocks. Errors (instead of
+    /// panicking) when `p` is zero, does not divide `M`, or `y` does not
+    /// match the matrix row count — callers surface this as a config error.
+    pub fn try_split(a: &Matrix, y: &[f32], p: usize) -> Result<Vec<WorkerData>> {
+        if p == 0 || a.rows() % p != 0 {
+            return Err(Error::Config(format!(
+                "P={p} must be positive and divide M={}",
+                a.rows()
+            )));
+        }
+        if y.len() != a.rows() {
+            return Err(Error::Config(format!(
+                "y length {} does not match M={}",
+                y.len(),
+                a.rows()
+            )));
+        }
         let rows_per = a.rows() / p;
-        (0..p)
+        Ok((0..p)
             .map(|i| WorkerData {
                 a: a.row_block(i * rows_per, (i + 1) * rows_per),
                 y: y[i * rows_per..(i + 1) * rows_per].to_vec(),
             })
-            .collect()
+            .collect())
     }
 }
 
@@ -174,7 +188,7 @@ mod tests {
     fn lc_step_first_iteration_gives_y_residual() {
         let inst = small_instance();
         let eng = RustEngine::new(inst.prior, 2);
-        let parts = WorkerData::split(&inst.a, &inst.y, 3);
+        let parts = WorkerData::try_split(&inst.a, &inst.y, 3).unwrap();
         let x0 = vec![0f32; 200];
         let z0 = vec![0f32; 20];
         let out = eng.lc_step(&parts[1], &x0, &z0, 0.0, 3).unwrap();
@@ -194,7 +208,7 @@ mod tests {
         let inst = small_instance();
         let eng = RustEngine::new(inst.prior, 2);
         let p = 6;
-        let parts = WorkerData::split(&inst.a, &inst.y, p);
+        let parts = WorkerData::try_split(&inst.a, &inst.y, p).unwrap();
         let mut rng = Rng::new(7);
         let x: Vec<f32> = (0..200).map(|_| rng.gaussian() as f32 * 0.1).collect();
         let coef = 0.3f32;
@@ -254,9 +268,24 @@ mod tests {
     }
 
     #[test]
+    fn try_split_rejects_bad_partitions() {
+        let inst = small_instance();
+        // 7 does not divide 60; 0 workers is meaningless.
+        for p in [0, 7] {
+            let err = WorkerData::try_split(&inst.a, &inst.y, p).unwrap_err();
+            assert!(
+                matches!(err, crate::error::Error::Config(_)),
+                "p={p}: expected Config error, got {err:?}"
+            );
+        }
+        let err = WorkerData::try_split(&inst.a, &inst.y[..30], 3).unwrap_err();
+        assert!(err.to_string().contains("y length"), "{err}");
+    }
+
+    #[test]
     fn split_covers_all_rows() {
         let inst = small_instance();
-        let parts = WorkerData::split(&inst.a, &inst.y, 5);
+        let parts = WorkerData::try_split(&inst.a, &inst.y, 5).unwrap();
         assert_eq!(parts.len(), 5);
         let total_rows: usize = parts.iter().map(|p| p.a.rows()).sum();
         assert_eq!(total_rows, 60);

@@ -1,41 +1,67 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline crate set has no `thiserror`).
+
+use std::fmt;
 
 /// Unified error type for the mpamp crate.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum Error {
     /// Configuration file / CLI errors.
-    #[error("config error: {0}")]
     Config(String),
 
     /// Malformed wire messages or framing problems.
-    #[error("protocol error: {0}")]
     Protocol(String),
 
     /// Transport-level failures (channel closed, socket error, ...).
-    #[error("transport error: {0}")]
     Transport(String),
 
     /// Entropy-coder failures (corrupt stream, model mismatch, ...).
-    #[error("codec error: {0}")]
     Codec(String),
 
     /// Numerical failures (non-convergence, domain errors, ...).
-    #[error("numerical error: {0}")]
     Numerical(String),
 
     /// Missing or malformed AOT artifacts.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// Errors surfaced by the XLA/PJRT runtime.
-    #[error("xla error: {0}")]
     Xla(String),
 
     /// I/O errors.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Config(m) => write!(f, "config error: {m}"),
+            Error::Protocol(m) => write!(f, "protocol error: {m}"),
+            Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Codec(m) => write!(f, "codec error: {m}"),
+            Error::Numerical(m) => write!(f, "numerical error: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -1,0 +1,286 @@
+//! Experiment orchestration: run grids of configured sessions across a
+//! thread pool and collect their [`RunReport`]s.
+//!
+//! The MP-AMP literature's core experimental object is the sweep — SDR /
+//! rate trade-off curves over ε × SNR × P × budget grids — and before this
+//! module every bench hand-rolled its own loop. [`Sweep`] owns that
+//! scaffolding once: label each trial, optionally share one problem
+//! instance across trials (so schedules are compared on identical data),
+//! bound parallelism, and get back ordered [`TrialReport`]s.
+//!
+//! ```no_run
+//! use mpamp::experiment::Sweep;
+//! use mpamp::SessionBuilder;
+//!
+//! let mut sweep = Sweep::new();
+//! for eps in [0.03, 0.05, 0.10] {
+//!     sweep.add(format!("bt/{eps}"), SessionBuilder::paper_default(eps));
+//!     sweep.add(
+//!         format!("dp/{eps}"),
+//!         SessionBuilder::paper_default(eps).dp(None, 0.1),
+//!     );
+//! }
+//! for trial in sweep.run().unwrap() {
+//!     println!("{}: {:.2} dB", trial.label, trial.report.final_sdr_db());
+//! }
+//! ```
+
+use std::sync::Mutex;
+
+use crate::coordinator::builder::SessionBuilder;
+use crate::coordinator::session::RunReport;
+use crate::error::{Error, Result};
+use crate::observe::StopSet;
+
+/// One configured trial: a label plus a ready-to-build session.
+struct Trial {
+    label: String,
+    builder: SessionBuilder,
+}
+
+/// One finished trial of a [`Sweep`].
+#[derive(Debug, Clone)]
+pub struct TrialReport {
+    /// The label given at [`Sweep::add`] time.
+    pub label: String,
+    /// The run's report.
+    pub report: RunReport,
+}
+
+/// A grid of sessions executed across a thread pool.
+#[derive(Default)]
+pub struct Sweep {
+    trials: Vec<Trial>,
+    threads: Option<usize>,
+    stop: StopSet,
+}
+
+impl Sweep {
+    /// New empty sweep.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bound the number of concurrently running sessions (default: the
+    /// machine's available parallelism, capped by the trial count). Each
+    /// session spawns its own `P` worker threads, so a handful of
+    /// concurrent trials already saturates a large machine.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads.max(1));
+        self
+    }
+
+    /// Apply these early-stopping rules to every trial.
+    pub fn stop(mut self, stop: StopSet) -> Self {
+        self.stop = stop;
+        self
+    }
+
+    /// Queue a trial. The builder is validated/built inside the pool, so
+    /// config errors surface per-trial from [`run`](Self::run) with the
+    /// trial's label attached.
+    pub fn add(&mut self, label: impl Into<String>, builder: SessionBuilder) {
+        self.trials.push(Trial { label: label.into(), builder });
+    }
+
+    /// Number of queued trials.
+    pub fn len(&self) -> usize {
+        self.trials.len()
+    }
+
+    /// Whether the sweep holds no trials.
+    pub fn is_empty(&self) -> bool {
+        self.trials.is_empty()
+    }
+
+    /// Execute every trial, at most `threads` at a time, and return their
+    /// reports **in the order the trials were added**. The first trial
+    /// error aborts the sweep: remaining queued trials are skipped, while
+    /// already-running trials complete their runs normally before the
+    /// pool drains.
+    pub fn run(self) -> Result<Vec<TrialReport>> {
+        let n = self.trials.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let pool = self
+            .threads
+            .unwrap_or_else(crate::config::num_threads_default)
+            .min(n)
+            .max(1);
+        let stop = &self.stop;
+        // Work queue: an index into `trials`; results slotted by index so
+        // output order matches insertion order regardless of completion
+        // order.
+        let next = Mutex::new(0usize);
+        let results: Vec<Mutex<Option<Result<TrialReport>>>> =
+            (0..n).map(|_| Mutex::new(None)).collect();
+        let trials = self.trials;
+        std::thread::scope(|s| {
+            for _ in 0..pool {
+                s.spawn(|| loop {
+                    let idx = {
+                        let mut guard = next.lock().expect("sweep queue poisoned");
+                        if *guard >= n {
+                            return;
+                        }
+                        let i = *guard;
+                        *guard += 1;
+                        i
+                    };
+                    let trial = &trials[idx];
+                    let outcome = trial
+                        .builder
+                        .clone()
+                        .build()
+                        .and_then(|session| {
+                            session.run_observed(
+                                &mut crate::observe::NullObserver,
+                                stop,
+                            )
+                        })
+                        .map(|report| TrialReport {
+                            label: trial.label.clone(),
+                            report,
+                        })
+                        .map_err(|e| label_error(&trial.label, e));
+                    let abort = outcome.is_err();
+                    *results[idx].lock().expect("sweep result poisoned") =
+                        Some(outcome);
+                    if abort {
+                        // Drain the queue so other pool threads stop
+                        // picking up new trials.
+                        *next.lock().expect("sweep queue poisoned") = n;
+                        return;
+                    }
+                });
+            }
+        });
+        let mut out = Vec::with_capacity(n);
+        for slot in results {
+            match slot.into_inner().expect("sweep result poisoned") {
+                Some(Ok(r)) => out.push(r),
+                Some(Err(e)) => return Err(e),
+                // Skipped after an abort: find and return the error below.
+                None => {}
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Attach the trial label to an error's message while keeping its
+/// variant, so callers can still match on the error kind.
+fn label_error(label: &str, e: Error) -> Error {
+    let tag = |m: String| format!("trial '{label}': {m}");
+    match e {
+        Error::Config(m) => Error::Config(tag(m)),
+        Error::Protocol(m) => Error::Protocol(tag(m)),
+        Error::Transport(m) => Error::Transport(tag(m)),
+        Error::Codec(m) => Error::Codec(tag(m)),
+        Error::Numerical(m) => Error::Numerical(tag(m)),
+        Error::Artifact(m) => Error::Artifact(tag(m)),
+        Error::Xla(m) => Error::Xla(tag(m)),
+        // io::Error cannot be rebuilt with a prefixed message losslessly;
+        // keep it untouched (the kind matters more than the label here).
+        Error::Io(e) => Error::Io(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::observe::StopRule;
+    use crate::signal::{Instance, ProblemDims};
+    use crate::util::rng::Rng;
+    use crate::SessionBuilder;
+
+    #[test]
+    fn sweep_preserves_order_and_labels() {
+        let mut sweep = Sweep::new();
+        for (i, bits) in [3.0, 4.0, 5.0].iter().enumerate() {
+            sweep.add(
+                format!("fixed{i}"),
+                SessionBuilder::test_small(0.05).fixed_rate(*bits),
+            );
+        }
+        let results = sweep.threads(2).run().unwrap();
+        assert_eq!(results.len(), 3);
+        for (i, tr) in results.iter().enumerate() {
+            assert_eq!(tr.label, format!("fixed{i}"));
+            assert_eq!(tr.report.iters.len(), 6);
+        }
+        // Coarser quantization must not cost more bits.
+        assert!(
+            results[0].report.total_uplink_bits_per_element()
+                < results[2].report.total_uplink_bits_per_element()
+        );
+    }
+
+    #[test]
+    fn sweep_matches_sequential_run() {
+        // Parallel execution must not perturb numerics: same builder ⇒
+        // identical trajectory as a direct run.
+        let builder = SessionBuilder::test_small(0.05).fixed_rate(4.0);
+        let direct = builder.clone().build().unwrap().run().unwrap();
+        let mut sweep = Sweep::new();
+        sweep.add("a", builder.clone());
+        sweep.add("b", builder);
+        let results = sweep.run().unwrap();
+        for tr in &results {
+            for (x, y) in direct.iters.iter().zip(&tr.report.iters) {
+                assert_eq!(x.sdr_db.to_bits(), y.sdr_db.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn shared_instance_compares_schedules_on_same_data() {
+        let cfg = crate::config::RunConfig::test_small(0.05);
+        let mut rng = Rng::new(cfg.seed);
+        let inst = Instance::generate(
+            cfg.prior,
+            ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+            &mut rng,
+        )
+        .unwrap();
+        let mut sweep = Sweep::new();
+        sweep.add(
+            "fixed",
+            SessionBuilder::test_small(0.05).fixed_rate(4.0).instance(inst.clone()),
+        );
+        sweep.add(
+            "raw",
+            SessionBuilder::test_small(0.05).uncompressed().instance(inst),
+        );
+        let results = sweep.run().unwrap();
+        // Same data: uncompressed is at least as good per iteration.
+        assert!(
+            results[1].report.final_sdr_db() >= results[0].report.final_sdr_db() - 0.5
+        );
+    }
+
+    #[test]
+    fn sweep_stop_rules_apply_to_every_trial() {
+        let mut sweep = Sweep::new();
+        sweep.add("a", SessionBuilder::test_small(0.05).fixed_rate(4.0));
+        sweep.add("b", SessionBuilder::test_small(0.05).uncompressed());
+        let results = sweep
+            .stop(StopSet::none().with(StopRule::MaxIters(3)))
+            .run()
+            .unwrap();
+        for tr in &results {
+            assert_eq!(tr.report.iters.len(), 3, "{}", tr.label);
+            assert!(tr.report.stopped_early.is_some());
+        }
+    }
+
+    #[test]
+    fn trial_error_carries_label() {
+        let mut sweep = Sweep::new();
+        // P=7 does not divide M=180.
+        sweep.add("bad-p", SessionBuilder::test_small(0.05).workers(7));
+        let err = sweep.run().unwrap_err().to_string();
+        assert!(err.contains("bad-p"), "{err}");
+    }
+}

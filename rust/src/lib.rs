@@ -16,20 +16,44 @@
 //! * [`alloc`] — the two rate-allocation schemes: online back-tracking
 //!   (BT-MP-AMP) and dynamic programming (DP-MP-AMP),
 //! * [`amp`] — centralized AMP baseline,
+//! * [`observe`] — per-iteration observers and composable stop rules for
+//!   the stepwise session driver,
+//! * [`experiment`] — the [`Sweep`](experiment::Sweep) runner executing
+//!   config grids across a thread pool,
 //! * [`engine`] / [`runtime`] — pluggable compute engines: a portable pure
 //!   Rust engine and an XLA/PJRT engine executing AOT-compiled JAX/Pallas
 //!   artifacts (built once by `make artifacts`, never Python at runtime).
 //!
-//! Quickstart (see `examples/quickstart.rs`):
+//! Quickstart (see `examples/quickstart.rs`): build a session fluently,
+//! then either `run()` it or drive it one [`Session::step`] at a time.
+//!
+//! [`Session::step`]: coordinator::session::Session::step
 //!
 //! ```no_run
-//! use mpamp::config::RunConfig;
-//! use mpamp::coordinator::session::MpAmpSession;
+//! use mpamp::SessionBuilder;
 //!
-//! let cfg = RunConfig::paper_default(0.05); // ε = 0.05 column of the paper
-//! let report = MpAmpSession::new(cfg).unwrap().run().unwrap();
+//! let report = SessionBuilder::paper_default(0.05) // ε = 0.05 column
+//!     .build().unwrap()
+//!     .run().unwrap();
 //! println!("final SDR = {:.2} dB, uplink = {:.2} bits/element",
 //!          report.final_sdr_db(), report.total_uplink_bits_per_element());
+//! ```
+//!
+//! Observed, early-stopping variant:
+//!
+//! ```no_run
+//! use mpamp::observe::{StopRule, StopSet, TablePrinter};
+//! use mpamp::SessionBuilder;
+//!
+//! let stop = StopSet::none()
+//!     .with(StopRule::TargetSdrDb(18.0))
+//!     .with(StopRule::UplinkBudget { bits_per_element: 40.0 });
+//! let report = SessionBuilder::paper_default(0.05)
+//!     .build().unwrap()
+//!     .run_observed(&mut TablePrinter::new(), &stop).unwrap();
+//! if let Some(why) = &report.stopped_early {
+//!     println!("stopped early: {why}");
+//! }
 //! ```
 
 pub mod alloc;
@@ -40,8 +64,10 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod error;
+pub mod experiment;
 pub mod linalg;
 pub mod metrics;
+pub mod observe;
 pub mod quant;
 pub mod rd;
 pub mod runtime;
@@ -49,4 +75,6 @@ pub mod se;
 pub mod signal;
 pub mod util;
 
+pub use coordinator::builder::SessionBuilder;
+pub use coordinator::session::{IterSnapshot, RunReport, Session};
 pub use error::{Error, Result};

@@ -9,17 +9,27 @@ use mpamp::alloc::dp::DpAllocator;
 use mpamp::amp::run_centralized;
 use mpamp::cli::{usage, Args};
 use mpamp::config::{RunConfig, ScheduleKind};
-use mpamp::coordinator::session::MpAmpSession;
 use mpamp::engine::RustEngine;
 use mpamp::error::{Error, Result};
+use mpamp::observe::{NullObserver, RunObserver, StopRule, StopSet, TablePrinter};
 use mpamp::rd::{rd_curve_for_channel, RdCache};
 use mpamp::runtime::Manifest;
 use mpamp::se::prior::BgChannel;
 use mpamp::se::StateEvolution;
+use mpamp::SessionBuilder;
 
 /// Option keys consumed by the CLI itself (everything else is a config
 /// override).
-const RESERVED: &[&str] = &["config", "out", "sigma2"];
+const RESERVED: &[&str] = &[
+    "config",
+    "out",
+    "sigma2",
+    "max-iters",
+    "target-sdr",
+    "stall-window",
+    "stall-delta",
+    "max-bits",
+];
 
 fn main() {
     let args = match Args::from_env() {
@@ -62,6 +72,34 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
+/// Assemble the early-stopping rules requested on the command line.
+fn stop_rules(args: &Args) -> Result<StopSet> {
+    let mut stop = StopSet::none();
+    if let Some(k) = args.get_parsed::<usize>("max-iters")? {
+        stop.push(StopRule::MaxIters(k));
+    }
+    if let Some(db) = args.get_parsed::<f64>("target-sdr")? {
+        stop.push(StopRule::TargetSdrDb(db));
+    }
+    let window = args.get_parsed::<usize>("stall-window")?;
+    let delta = args.get_parsed::<f64>("stall-delta")?;
+    match (window, delta) {
+        (None, None) => {}
+        (Some(window), Some(min_delta_db)) => {
+            stop.push(StopRule::SdrStall { window, min_delta_db });
+        }
+        _ => {
+            return Err(Error::Config(
+                "--stall-window and --stall-delta must be given together".into(),
+            ))
+        }
+    }
+    if let Some(bits) = args.get_parsed::<f64>("max-bits")? {
+        stop.push(StopRule::UplinkBudget { bits_per_element: bits });
+    }
+    Ok(stop)
+}
+
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let quiet = args.has_flag("quiet");
@@ -69,19 +107,15 @@ fn cmd_run(args: &Args) -> Result<()> {
         "mpamp run: N={} M={} P={} ε={} SNR={} dB T={} schedule={:?} engine={:?}",
         cfg.n, cfg.m, cfg.p, cfg.prior.eps, cfg.snr_db, cfg.iters, cfg.schedule, cfg.engine
     );
-    let session = MpAmpSession::new(cfg)?;
-    let report = session.run()?;
-    if !quiet {
-        println!(
-            "{:>3} {:>9} {:>9} {:>11} {:>10} {:>12}",
-            "t", "SDR(dB)", "SE(dB)", "alloc(b/el)", "wire(b/el)", "sigma_hat^2"
-        );
-        for r in &report.iters {
-            println!(
-                "{:>3} {:>9.3} {:>9.3} {:>11.3} {:>10.3} {:>12.6e}",
-                r.t, r.sdr_db, r.sdr_pred_db, r.rate_alloc, r.rate_wire, r.sigma_d2_hat
-            );
-        }
+    let stop = stop_rules(args)?;
+    let session = SessionBuilder::from_config(cfg).build()?;
+    let mut table = TablePrinter::new();
+    let mut null = NullObserver;
+    let observer: &mut dyn RunObserver =
+        if quiet { &mut null } else { &mut table };
+    let report = session.run_observed(observer, &stop)?;
+    if let Some(why) = &report.stopped_early {
+        println!("stopped early after {} iterations: {why}", report.iters.len());
     }
     println!(
         "final SDR {:.2} dB | uplink {:.2} bits/element total ({:.1}% savings vs 32-bit) | {:.2}s",

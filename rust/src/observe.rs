@@ -1,0 +1,308 @@
+//! Run observation and early stopping for the stepwise session driver.
+//!
+//! * [`RunObserver`] — per-iteration callbacks streaming [`IterRecord`]s
+//!   as a [`Session`] advances (progress tables, CSV capture, adaptive
+//!   controllers, ...),
+//! * [`StopRule`] / [`StopSet`] — composable convergence criteria (max
+//!   iterations, target SDR, SDR stall, uplink byte budget) evaluated
+//!   after every step, making early stopping first-class instead of
+//!   something every caller hand-rolls.
+//!
+//! [`Session`]: crate::coordinator::session::Session
+
+use crate::config::RunConfig;
+use crate::coordinator::session::{IterSnapshot, RunReport};
+use crate::metrics::IterRecord;
+
+/// Callbacks invoked by [`Session::run_observed`] (and anything else
+/// driving [`Session::step`] that wants to share instrumentation).
+///
+/// All methods have empty defaults — implement only what you need.
+///
+/// [`Session::run_observed`]: crate::coordinator::session::Session::run_observed
+/// [`Session::step`]: crate::coordinator::session::Session::step
+pub trait RunObserver {
+    /// Called once before the first iteration.
+    fn on_start(&mut self, _cfg: &RunConfig) {}
+
+    /// Called after every completed iteration.
+    fn on_iter(&mut self, _snap: &IterSnapshot) {}
+
+    /// Called once with the final report (after `Done`/join).
+    fn on_finish(&mut self, _report: &RunReport) {}
+}
+
+/// The do-nothing observer.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NullObserver;
+
+impl RunObserver for NullObserver {}
+
+/// Collects every per-iteration record (e.g. for post-hoc analysis when
+/// the caller does not keep the report).
+#[derive(Debug, Default)]
+pub struct RecordLog {
+    /// Records in iteration order.
+    pub records: Vec<IterRecord>,
+}
+
+impl RecordLog {
+    /// New empty log.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RunObserver for RecordLog {
+    fn on_iter(&mut self, snap: &IterSnapshot) {
+        self.records.push(snap.record.clone());
+    }
+}
+
+/// Streams a human-readable per-iteration table to stdout (the CLI's
+/// `mpamp run` view, now emitted live instead of after the run).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct TablePrinter {
+    header_printed: bool,
+}
+
+impl TablePrinter {
+    /// New printer (prints its header lazily on the first iteration).
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RunObserver for TablePrinter {
+    fn on_iter(&mut self, snap: &IterSnapshot) {
+        if !self.header_printed {
+            println!(
+                "{:>3} {:>9} {:>9} {:>11} {:>10} {:>12}",
+                "t", "SDR(dB)", "SE(dB)", "alloc(b/el)", "wire(b/el)", "sigma_hat^2"
+            );
+            self.header_printed = true;
+        }
+        let r = &snap.record;
+        println!(
+            "{:>3} {:>9.3} {:>9.3} {:>11.3} {:>10.3} {:>12.6e}",
+            r.t, r.sdr_db, r.sdr_pred_db, r.rate_alloc, r.rate_wire, r.sigma_d2_hat
+        );
+    }
+}
+
+/// Adapts a closure into an observer: `fn_observer(|snap| ...)`.
+pub struct FnObserver<F: FnMut(&IterSnapshot)> {
+    f: F,
+}
+
+/// Build a per-iteration closure observer.
+pub fn fn_observer<F: FnMut(&IterSnapshot)>(f: F) -> FnObserver<F> {
+    FnObserver { f }
+}
+
+impl<F: FnMut(&IterSnapshot)> RunObserver for FnObserver<F> {
+    fn on_iter(&mut self, snap: &IterSnapshot) {
+        (self.f)(snap)
+    }
+}
+
+/// Fan-out to several observers (borrowed, so callers keep ownership and
+/// can inspect each one after the run).
+#[derive(Default)]
+pub struct MultiObserver<'a> {
+    parts: Vec<&'a mut dyn RunObserver>,
+}
+
+impl<'a> MultiObserver<'a> {
+    /// New empty fan-out.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add an observer (builder-style).
+    pub fn with(mut self, obs: &'a mut dyn RunObserver) -> Self {
+        self.parts.push(obs);
+        self
+    }
+}
+
+impl RunObserver for MultiObserver<'_> {
+    fn on_start(&mut self, cfg: &RunConfig) {
+        for p in self.parts.iter_mut() {
+            p.on_start(cfg);
+        }
+    }
+
+    fn on_iter(&mut self, snap: &IterSnapshot) {
+        for p in self.parts.iter_mut() {
+            p.on_iter(snap);
+        }
+    }
+
+    fn on_finish(&mut self, report: &RunReport) {
+        for p in self.parts.iter_mut() {
+            p.on_finish(report);
+        }
+    }
+}
+
+/// One early-stopping criterion, evaluated on the history of completed
+/// iterations after every step.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StopRule {
+    /// Stop after this many iterations (caps `cfg.iters` from below).
+    MaxIters(usize),
+    /// Stop once the empirical SDR reaches this many dB.
+    TargetSdrDb(f64),
+    /// Stop when SDR improved by less than `min_delta_db` over the last
+    /// `window` iterations (requires `window + 1` completed iterations).
+    SdrStall {
+        /// Look-back length in iterations (≥ 1).
+        window: usize,
+        /// Minimum improvement over the window to keep going, in dB.
+        min_delta_db: f64,
+    },
+    /// Stop once the cumulative *measured* uplink spend reaches this many
+    /// bits per element of `f_t^p` (the paper's headline cost metric).
+    UplinkBudget {
+        /// Total budget in bits/element.
+        bits_per_element: f64,
+    },
+}
+
+impl StopRule {
+    /// Whether this rule fires on the given iteration history.
+    pub fn triggered(&self, history: &[IterRecord]) -> bool {
+        match self {
+            StopRule::MaxIters(k) => history.len() >= *k,
+            StopRule::TargetSdrDb(db) => {
+                history.last().is_some_and(|r| r.sdr_db >= *db)
+            }
+            StopRule::SdrStall { window, min_delta_db } => {
+                let w = (*window).max(1);
+                if history.len() < w + 1 {
+                    return false;
+                }
+                let now = history[history.len() - 1].sdr_db;
+                let then = history[history.len() - 1 - w].sdr_db;
+                now - then < *min_delta_db
+            }
+            StopRule::UplinkBudget { bits_per_element } => {
+                history.iter().map(|r| r.rate_wire).sum::<f64>() >= *bits_per_element
+            }
+        }
+    }
+
+    /// Short human-readable description (recorded in the run report).
+    pub fn describe(&self) -> String {
+        match self {
+            StopRule::MaxIters(k) => format!("max iterations ({k})"),
+            StopRule::TargetSdrDb(db) => format!("target SDR reached ({db} dB)"),
+            StopRule::SdrStall { window, min_delta_db } => {
+                format!("SDR stalled (<{min_delta_db} dB over {window} iters)")
+            }
+            StopRule::UplinkBudget { bits_per_element } => {
+                format!("uplink budget spent ({bits_per_element} bits/element)")
+            }
+        }
+    }
+}
+
+/// A composable set of stop rules; the run stops when *any* rule fires
+/// (an empty set never stops early).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StopSet {
+    rules: Vec<StopRule>,
+}
+
+impl StopSet {
+    /// The empty set (never stops early).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Builder-style: add a rule.
+    pub fn with(mut self, rule: StopRule) -> Self {
+        self.rules.push(rule);
+        self
+    }
+
+    /// Add a rule in place.
+    pub fn push(&mut self, rule: StopRule) {
+        self.rules.push(rule);
+    }
+
+    /// Whether the set holds no rules.
+    pub fn is_empty(&self) -> bool {
+        self.rules.is_empty()
+    }
+
+    /// The description of the first rule that fires, if any.
+    pub fn triggered(&self, history: &[IterRecord]) -> Option<String> {
+        self.rules
+            .iter()
+            .find(|r| r.triggered(history))
+            .map(StopRule::describe)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(t: usize, sdr_db: f64, rate_wire: f64) -> IterRecord {
+        IterRecord {
+            t,
+            sdr_db,
+            sdr_pred_db: sdr_db,
+            rate_alloc: rate_wire,
+            rate_wire,
+            sigma_q2: 0.0,
+            sigma_d2_hat: 0.1,
+            wall_s: 0.0,
+        }
+    }
+
+    #[test]
+    fn max_iters_counts_completed_steps() {
+        let rule = StopRule::MaxIters(2);
+        assert!(!rule.triggered(&[rec(0, 1.0, 4.0)]));
+        assert!(rule.triggered(&[rec(0, 1.0, 4.0), rec(1, 2.0, 4.0)]));
+    }
+
+    #[test]
+    fn target_sdr_fires_on_last_record() {
+        let rule = StopRule::TargetSdrDb(10.0);
+        assert!(!rule.triggered(&[rec(0, 9.9, 4.0)]));
+        assert!(rule.triggered(&[rec(0, 9.9, 4.0), rec(1, 10.2, 4.0)]));
+    }
+
+    #[test]
+    fn stall_needs_full_window() {
+        let rule = StopRule::SdrStall { window: 2, min_delta_db: 0.1 };
+        let h = [rec(0, 5.0, 4.0), rec(1, 5.01, 4.0)];
+        assert!(!rule.triggered(&h), "window not yet filled");
+        let h = [rec(0, 5.0, 4.0), rec(1, 5.01, 4.0), rec(2, 5.02, 4.0)];
+        assert!(rule.triggered(&h), "0.02 dB over 2 iters is a stall");
+        let h = [rec(0, 5.0, 4.0), rec(1, 6.0, 4.0), rec(2, 7.0, 4.0)];
+        assert!(!rule.triggered(&h));
+    }
+
+    #[test]
+    fn uplink_budget_sums_wire_rate() {
+        let rule = StopRule::UplinkBudget { bits_per_element: 10.0 };
+        assert!(!rule.triggered(&[rec(0, 1.0, 6.0)]));
+        assert!(rule.triggered(&[rec(0, 1.0, 6.0), rec(1, 2.0, 4.0)]));
+    }
+
+    #[test]
+    fn stop_set_any_semantics() {
+        let set = StopSet::none()
+            .with(StopRule::MaxIters(5))
+            .with(StopRule::TargetSdrDb(10.0));
+        assert!(set.triggered(&[rec(0, 3.0, 4.0)]).is_none());
+        let why = set.triggered(&[rec(0, 11.0, 4.0)]).unwrap();
+        assert!(why.contains("target SDR"), "{why}");
+        assert!(StopSet::none().triggered(&[rec(0, 99.0, 99.0)]).is_none());
+    }
+}

@@ -1,0 +1,173 @@
+//! The PJRT-backed [`XlaEngine`] (compiled only with the `xla` feature —
+//! see the module docs in [`super`] for the artifact format and the
+//! thread-safety argument).
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::engine::{ComputeEngine, GcOut, LcOut, WorkerData};
+use crate::error::{Error, Result};
+use crate::runtime::Manifest;
+use crate::signal::BernoulliGauss;
+
+struct XlaInner {
+    // Field order = drop order: executables and cached buffers hold client
+    // Rc clones and must drop before the client.
+    lc_exe: xla::PjRtLoadedExecutable,
+    gc_exe: xla::PjRtLoadedExecutable,
+    /// Device-resident copies of each worker's (A^p, y^p), keyed by the
+    /// host data pointer. The shard matrices are immutable for a session,
+    /// so the pointer identifies the content; this turns the per-call 4 MB
+    /// host→device A^p copy into a one-time upload (§Perf: 31.6 ms →
+    /// ~1 ms per LC step).
+    shard_cache: HashMap<usize, (xla::PjRtBuffer, xla::PjRtBuffer)>,
+    client: xla::PjRtClient,
+}
+
+/// Compute engine executing AOT JAX/Pallas artifacts on the PJRT CPU client.
+pub struct XlaEngine {
+    inner: Mutex<XlaInner>,
+    prior: BernoulliGauss,
+    n: usize,
+    mp: usize,
+}
+
+// SAFETY: every Rc-holding object (client + executables) lives inside the
+// Mutex and no handle is ever cloned out; all FFI + refcount traffic is
+// serialized by the lock. See the module docs.
+unsafe impl Send for XlaEngine {}
+unsafe impl Sync for XlaEngine {}
+
+impl XlaEngine {
+    /// Load artifacts from `dir`, checking shapes against the run config.
+    pub fn load(
+        dir: &str,
+        prior: BernoulliGauss,
+        n: usize,
+        mp: usize,
+        _p_workers: usize,
+    ) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        manifest.check_shapes(n, mp)?;
+        let client = xla::PjRtClient::cpu()?;
+        let load = |file: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = Path::new(dir).join(file);
+            let proto = xla::HloModuleProto::from_text_file(&path)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        let lc_exe = load(&manifest.lc_file)?;
+        let gc_exe = load(&manifest.gc_file)?;
+        Ok(XlaEngine {
+            inner: Mutex::new(XlaInner {
+                lc_exe,
+                gc_exe,
+                shard_cache: HashMap::new(),
+                client,
+            }),
+            prior,
+            n,
+            mp,
+        })
+    }
+
+    /// N the artifacts are compiled for.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// M/P the artifacts are compiled for.
+    pub fn mp(&self) -> usize {
+        self.mp
+    }
+}
+
+fn literal_vec(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+impl ComputeEngine for XlaEngine {
+    fn lc_step(
+        &self,
+        data: &WorkerData,
+        x: &[f32],
+        z_prev: &[f32],
+        coef: f32,
+        p_workers: usize,
+    ) -> Result<LcOut> {
+        if data.a.rows() != self.mp || data.a.cols() != self.n {
+            return Err(Error::Artifact(format!(
+                "LC artifact compiled for ({}, {}), got shard ({}, {})",
+                self.mp,
+                self.n,
+                data.a.rows(),
+                data.a.cols()
+            )));
+        }
+        let mut inner = self.inner.lock().expect("xla engine poisoned");
+        let key = data.a.data().as_ptr() as usize;
+        if !inner.shard_cache.contains_key(&key) {
+            let a_buf = inner.client.buffer_from_host_buffer(
+                data.a.data(),
+                &[self.mp, self.n],
+                None,
+            )?;
+            let y_buf =
+                inner.client.buffer_from_host_buffer(&data.y, &[self.mp], None)?;
+            inner.shard_cache.insert(key, (a_buf, y_buf));
+        }
+        let xb = inner.client.buffer_from_host_buffer(x, &[self.n], None)?;
+        let zb = inner.client.buffer_from_host_buffer(z_prev, &[self.mp], None)?;
+        let coef_b = inner.client.buffer_from_host_buffer(&[coef], &[], None)?;
+        let inv_p_b = inner.client.buffer_from_host_buffer(
+            &[1.0f32 / p_workers as f32],
+            &[],
+            None,
+        )?;
+        let (a_buf, y_buf) = inner.shard_cache.get(&key).expect("just inserted");
+        let result = inner
+            .lc_exe
+            .execute_b(&[a_buf, y_buf, &xb, &zb, &coef_b, &inv_p_b])?[0][0]
+            .to_literal_sync()?;
+        drop(inner);
+        let (z, f, znorm) = result.to_tuple3()?;
+        Ok(LcOut {
+            z: to_f32_vec(&z)?,
+            f_partial: to_f32_vec(&f)?,
+            z_norm2: znorm.to_vec::<f32>()?[0] as f64,
+        })
+    }
+
+    fn gc_step(&self, f: &[f32], sigma_eff2: f64) -> Result<GcOut> {
+        if f.len() != self.n {
+            return Err(Error::Artifact(format!(
+                "GC artifact compiled for n={}, got {}",
+                self.n,
+                f.len()
+            )));
+        }
+        let fl = literal_vec(f);
+        let s2 = xla::Literal::scalar(sigma_eff2 as f32);
+        let eps = xla::Literal::scalar(self.prior.eps as f32);
+        let mu = xla::Literal::scalar(self.prior.mu_s as f32);
+        let ss2 = xla::Literal::scalar(self.prior.sigma_s2 as f32);
+        let inner = self.inner.lock().expect("xla engine poisoned");
+        let result =
+            inner.gc_exe.execute(&[fl, s2, eps, mu, ss2])?[0][0].to_literal_sync()?;
+        drop(inner);
+        let (x_next, dmean) = result.to_tuple2()?;
+        Ok(GcOut {
+            x_next: to_f32_vec(&x_next)?,
+            eta_prime_mean: dmean.to_vec::<f32>()?[0] as f64,
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

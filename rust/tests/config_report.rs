@@ -1,0 +1,154 @@
+//! Satellite coverage: `config::toml` error paths (malformed values,
+//! unknown keys, out-of-range bounds) and `RunReport`'s derived metrics on
+//! a hand-built report — no session run needed for either.
+
+use mpamp::config::{toml, RunConfig};
+use mpamp::metrics::IterRecord;
+use mpamp::RunReport;
+
+// ---------- toml / config error paths ----------
+
+#[test]
+fn toml_malformed_values_error_with_line_numbers() {
+    for (text, needle) in [
+        ("n = ", "empty value"),
+        ("n = \"unterminated", "unterminated string"),
+        ("n = [1, 2]", "arrays are not supported"),
+        ("n = 10e", "cannot parse value"),
+    ] {
+        let err = toml::parse(text).unwrap_err().to_string();
+        assert!(err.contains(needle), "{text:?}: {err}");
+        assert!(err.contains("line 1"), "{text:?}: {err}");
+    }
+}
+
+#[test]
+fn config_rejects_wrongly_typed_values() {
+    // Number where a string is required, and vice versa.
+    let t = toml::parse("codec = 7").unwrap();
+    let err = RunConfig::from_table(&t).unwrap_err().to_string();
+    assert!(err.contains("codec"), "{err}");
+
+    let t = toml::parse("n = \"ten\"").unwrap();
+    let err = RunConfig::from_table(&t).unwrap_err().to_string();
+    assert!(err.contains("'n'"), "{err}");
+
+    // Negative integers cannot become usize fields.
+    let t = toml::parse("p = -3").unwrap();
+    assert!(RunConfig::from_table(&t).is_err());
+}
+
+#[test]
+fn config_rejects_unknown_keys() {
+    let t = toml::parse("[schedule]\nkind = \"bt\"\nratiomax = 1.05").unwrap();
+    let err = RunConfig::from_table(&t).unwrap_err().to_string();
+    assert!(err.contains("schedule.ratiomax"), "{err}");
+}
+
+#[test]
+fn config_rejects_out_of_range_bounds() {
+    // ε must lie in (0, 1].
+    let t = toml::parse("[prior]\neps = 1.5").unwrap();
+    assert!(RunConfig::from_table(&t).is_err());
+    // P must divide M.
+    let t = toml::parse("p = 7").unwrap();
+    let err = RunConfig::from_table(&t).unwrap_err().to_string();
+    assert!(err.contains("divide"), "{err}");
+    // Schedule parameters outside their domains.
+    let t = toml::parse("[schedule]\nkind = \"bt\"\nratio_max = 0.5").unwrap();
+    assert!(RunConfig::from_table(&t).is_err());
+    let t = toml::parse("[schedule]\nkind = \"fixed\"\nbits = -1.0").unwrap();
+    assert!(RunConfig::from_table(&t).is_err());
+    let t = toml::parse("[schedule]\nkind = \"dp\"\ndelta_r = 0.0").unwrap();
+    assert!(RunConfig::from_table(&t).is_err());
+}
+
+#[test]
+fn from_file_reports_missing_path() {
+    let err = RunConfig::from_file("/nonexistent/run.toml").unwrap_err().to_string();
+    assert!(err.contains("/nonexistent/run.toml"), "{err}");
+}
+
+// ---------- RunReport derived metrics ----------
+
+fn record(t: usize, sdr_db: f64, rate_alloc: f64, rate_wire: f64) -> IterRecord {
+    IterRecord {
+        t,
+        sdr_db,
+        sdr_pred_db: sdr_db + 0.1,
+        rate_alloc,
+        rate_wire,
+        sigma_q2: 1e-3,
+        sigma_d2_hat: 1e-2,
+        wall_s: 0.01,
+    }
+}
+
+fn hand_built_report() -> RunReport {
+    RunReport {
+        iters: vec![
+            record(0, 3.0, 6.0, 6.2),
+            record(1, 9.0, 4.0, 4.1),
+            record(2, 14.0, 2.0, 2.2),
+            record(3, 17.5, 1.0, 1.5),
+        ],
+        final_x: vec![0.0; 16],
+        dims: (16, 8, 2),
+        schedule: "bt".into(),
+        engine: "rust".into(),
+        transport_uplink_bits: 1_000,
+        transport_downlink_bits: 2_000,
+        wall_s: 0.5,
+        stopped_early: None,
+    }
+}
+
+#[test]
+fn report_totals_sum_per_iteration_rates() {
+    let r = hand_built_report();
+    assert!((r.total_uplink_bits_per_element() - 14.0).abs() < 1e-12);
+    assert!((r.total_alloc_bits_per_element() - 13.0).abs() < 1e-12);
+    assert!((r.final_sdr_db() - 17.5).abs() < 1e-12);
+}
+
+#[test]
+fn savings_vs_float_uses_executed_iterations() {
+    let r = hand_built_report();
+    // Raw baseline = 32 bits × 4 executed iterations = 128.
+    let want = 100.0 * (1.0 - 14.0 / 128.0);
+    assert!((r.savings_vs_float_pct() - want).abs() < 1e-12);
+
+    // An early-stopped run is compared against floats over the *same*
+    // number of iterations, not the configured T.
+    let mut short = hand_built_report();
+    short.iters.truncate(2);
+    short.stopped_early = Some("target SDR reached".into());
+    let want = 100.0 * (1.0 - 10.3 / 64.0);
+    assert!((short.savings_vs_float_pct() - want).abs() < 1e-12);
+}
+
+#[test]
+fn empty_report_is_well_defined() {
+    let mut r = hand_built_report();
+    r.iters.clear();
+    assert!(r.final_sdr_db().is_nan());
+    assert_eq!(r.total_uplink_bits_per_element(), 0.0);
+}
+
+#[test]
+fn report_serializes_to_csv_and_json() {
+    let r = hand_built_report();
+    let csv = r.to_csv().render();
+    assert!(csv.starts_with("t,sdr_db,"));
+    assert_eq!(csv.lines().count(), 1 + 4);
+
+    let json = r.to_json().render();
+    assert!(json.contains("\"schedule\":\"bt\""), "{json}");
+    assert!(json.contains("\"iters\":4"), "{json}");
+    assert!(json.contains("\"stopped_early\":null"), "{json}");
+    let mut stopped = r;
+    stopped.stopped_early = Some("uplink budget spent".into());
+    assert!(
+        stopped.to_json().render().contains("\"stopped_early\":\"uplink budget spent\"")
+    );
+}

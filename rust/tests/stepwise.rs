@@ -1,0 +1,203 @@
+//! Regression tests for the stepwise session driver: `Session::run()` is
+//! a thin loop over `step()`, and both must reproduce the monolithic
+//! fusion loop's numerics exactly (the seed behaviour) for a fixed
+//! seed/config.
+
+use mpamp::config::{RunConfig, ScheduleKind, TransportKind};
+use mpamp::coordinator::fusion::run_fusion;
+use mpamp::observe::{RecordLog, StopRule, StopSet};
+use mpamp::Session;
+use mpamp::SessionBuilder;
+
+fn cfg_for(schedule: ScheduleKind) -> RunConfig {
+    let mut cfg = RunConfig::test_small(0.05);
+    if matches!(schedule, ScheduleKind::Dp { .. }) {
+        // Shrink the Blahut–Arimoto substrate so the DP cache builds in
+        // test time (mirrors reproduction.rs's mid-scale settings).
+        cfg.rd = mpamp::config::RdConfig {
+            alphabet: 161,
+            curve_points: 12,
+            tol: 1e-5,
+            gamma_grid: 9,
+        };
+    }
+    cfg.schedule = schedule;
+    cfg
+}
+
+/// The equivalence criterion: for a fixed seed/config, the `iters`
+/// trajectory (SDR, wire rate, everything else) of `run()` — which is
+/// built on `step()` — matches a manual `step()` loop to well below
+/// 1e-12. Exercised across every schedule family.
+#[test]
+fn run_equals_manual_step_loop_across_schedules() {
+    for schedule in [
+        ScheduleKind::Uncompressed,
+        ScheduleKind::Fixed { bits: 4.0 },
+        ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 },
+        ScheduleKind::Dp { total_rate: Some(8.0), delta_r: 0.5 },
+    ] {
+        let label = format!("{schedule:?}");
+        let whole = Session::new(cfg_for(schedule.clone()))
+            .unwrap()
+            .run()
+            .unwrap();
+
+        let mut session = Session::new(cfg_for(schedule)).unwrap();
+        while session.step().unwrap().is_some() {}
+        let stepped = session.finish().unwrap();
+
+        assert_eq!(whole.iters.len(), stepped.iters.len(), "{label}");
+        assert!(!whole.iters.is_empty(), "{label}");
+        for (a, b) in whole.iters.iter().zip(&stepped.iters) {
+            assert!((a.sdr_db - b.sdr_db).abs() < 1e-12, "{label} t={}", a.t);
+            assert!((a.sdr_pred_db - b.sdr_pred_db).abs() < 1e-12, "{label}");
+            assert!((a.rate_wire - b.rate_wire).abs() < 1e-12, "{label}");
+            assert!((a.rate_alloc - b.rate_alloc).abs() < 1e-12, "{label}");
+            assert!((a.sigma_d2_hat - b.sigma_d2_hat).abs() < 1e-12, "{label}");
+            assert!((a.sigma_q2 - b.sigma_q2).abs() < 1e-12, "{label}");
+        }
+        for (a, b) in whole.final_x.iter().zip(&stepped.final_x) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{label}: final_x differs");
+        }
+    }
+}
+
+/// `run()` must also agree with the low-level monolithic `run_fusion`
+/// entry point (the seed's code path, still exported) on the identical
+/// instance: the refactor moved the loop, not the numerics.
+#[test]
+fn session_matches_monolithic_run_fusion() {
+    use mpamp::alloc::schedule::RateController;
+    use mpamp::coordinator::transport::inproc_pair;
+    use mpamp::coordinator::worker::{run_worker, WorkerParams};
+    use mpamp::engine::{RustEngine, WorkerData};
+    use mpamp::metrics::ByteMeter;
+    use mpamp::se::StateEvolution;
+    use mpamp::signal::{Instance, ProblemDims};
+    use mpamp::util::rng::Rng;
+    use std::sync::Arc;
+
+    let cfg = cfg_for(ScheduleKind::Fixed { bits: 4.0 });
+    let mut rng = Rng::new(cfg.seed);
+    let inst = Instance::generate(
+        cfg.prior,
+        ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+    )
+    .unwrap();
+
+    // Monolithic path: hand-built transports + run_fusion in one call.
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let controller = RateController::from_config(&cfg, &se, None).unwrap();
+    let engine = RustEngine::new(cfg.prior, cfg.threads);
+    let meter = Arc::new(ByteMeter::new());
+    let shards = WorkerData::try_split(&inst.a, &inst.y, cfg.p).unwrap();
+    let (mut fusion_eps, worker_eps): (Vec<_>, Vec<_>) =
+        (0..cfg.p).map(|_| inproc_pair(meter.clone())).unzip();
+    let output = std::thread::scope(|s| {
+        for (id, (shard, mut ep)) in
+            shards.iter().zip(worker_eps.into_iter()).enumerate()
+        {
+            let params = WorkerParams {
+                id: id as u32,
+                p_workers: cfg.p,
+                prior: cfg.prior,
+                codec: cfg.codec,
+            };
+            let engine = &engine;
+            s.spawn(move || run_worker(&params, shard, engine, &mut ep));
+        }
+        run_fusion(
+            &cfg,
+            &se,
+            &controller,
+            None,
+            &engine,
+            &mut fusion_eps,
+            Some(&inst),
+        )
+    })
+    .unwrap();
+
+    // Stepwise path on the same instance.
+    let report = SessionBuilder::from_config(cfg)
+        .instance(inst)
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+
+    assert_eq!(output.iters.len(), report.iters.len());
+    for (a, b) in output.iters.iter().zip(&report.iters) {
+        assert!((a.sdr_db - b.sdr_db).abs() < 1e-12, "t={}", a.t);
+        assert!((a.rate_wire - b.rate_wire).abs() < 1e-12, "t={}", a.t);
+    }
+    for (a, b) in output.final_x.iter().zip(&report.final_x) {
+        assert_eq!(a.to_bits(), b.to_bits());
+    }
+}
+
+/// Early stopping honours every built-in rule and reports the reason.
+#[test]
+fn stop_rules_end_to_end() {
+    // Uplink budget: 32 bits/el/iter uncompressed ⇒ 2 iterations spend 64.
+    let report = SessionBuilder::test_small(0.05)
+        .uncompressed()
+        .build()
+        .unwrap()
+        .run_observed(
+            &mut RecordLog::new(),
+            &StopSet::none().with(StopRule::UplinkBudget { bits_per_element: 64.0 }),
+        )
+        .unwrap();
+    assert_eq!(report.iters.len(), 2);
+    assert!(report.stopped_early.unwrap().contains("uplink budget"));
+
+    // Target SDR: small-scale MP-AMP passes 2 dB well before T=6.
+    let report = SessionBuilder::test_small(0.05)
+        .fixed_rate(4.0)
+        .build()
+        .unwrap()
+        .run_observed(
+            &mut RecordLog::new(),
+            &StopSet::none().with(StopRule::TargetSdrDb(2.0)),
+        )
+        .unwrap();
+    assert!(report.iters.len() < 6);
+    assert!(report.final_sdr_db() >= 2.0);
+
+    // A rule that never fires leaves the run untouched.
+    let report = SessionBuilder::test_small(0.05)
+        .fixed_rate(4.0)
+        .build()
+        .unwrap()
+        .run_observed(
+            &mut RecordLog::new(),
+            &StopSet::none().with(StopRule::TargetSdrDb(1e9)),
+        )
+        .unwrap();
+    assert_eq!(report.iters.len(), 6);
+    assert!(report.stopped_early.is_none());
+}
+
+/// The stepwise driver works over TCP transports too (workers persist
+/// across step() calls on real sockets).
+#[test]
+fn stepwise_over_tcp() {
+    let mut session = SessionBuilder::test_small(0.05)
+        .fixed_rate(4.0)
+        .transport(TransportKind::Tcp)
+        .build()
+        .unwrap();
+    let mut seen = 0usize;
+    while let Some(snap) = session.step().unwrap() {
+        assert_eq!(snap.t(), seen);
+        seen += 1;
+        if seen == 3 {
+            break;
+        }
+    }
+    let report = session.finish().unwrap();
+    assert_eq!(report.iters.len(), 3);
+}
