@@ -1,9 +1,16 @@
 //! P1: hot-path microbenchmarks across all three layers' Rust-side work:
 //! LC matvec pair (Rust vs XLA artifacts), GC denoiser, quantize + range
-//! coding, SE evaluation, RD curve, and the DP table. These are the
-//! numbers the §Perf log in EXPERIMENTS.md tracks.
+//! coding, SE evaluation, RD curve, and the DP table — plus tiny
+//! end-to-end row/column sessions whose uplink bytes feed the CI perf
+//! trajectory. These are the numbers the §Perf log in EXPERIMENTS.md
+//! tracks.
+//!
+//! Flags (after `cargo bench --bench microbench --`):
+//! * `--smoke`       tiny preset + quick sampling (the CI `bench-smoke` job)
+//! * `--json <path>` write machine-readable `{name, wall_s, bytes_uplinked}`
+//!   records (the `BENCH_pr.json` artifact)
 
-use mpamp::bench_util::{black_box, section, Bencher};
+use mpamp::bench_util::{black_box, section, BenchRecord, Bencher};
 use mpamp::config::RdConfig;
 use mpamp::engine::{ComputeEngine, RustEngine, WorkerData};
 use mpamp::quant::EcsqCoder;
@@ -15,7 +22,21 @@ use mpamp::util::rng::Rng;
 use mpamp::SessionBuilder;
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
-    let cfg = SessionBuilder::paper_default(0.05).config()?;
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    // Smoke preset: the fast-test dimensions and quick sampling, so the CI
+    // job finishes in seconds while exercising the identical code paths.
+    let cfg = if smoke {
+        SessionBuilder::test_small(0.05).config()?
+    } else {
+        SessionBuilder::paper_default(0.05).config()?
+    };
     let mut rng = Rng::new(3);
     let inst = Instance::generate(
         cfg.prior,
@@ -26,9 +47,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
     let x: Vec<f32> = (0..cfg.n).map(|_| rng.gaussian() as f32 * 0.1).collect();
     let z: Vec<f32> = (0..cfg.m / cfg.p).map(|_| rng.gaussian() as f32 * 0.1).collect();
-    let mut b = Bencher::new();
+    let mut b = if smoke { Bencher::quick() } else { Bencher::new() };
 
-    section("L3: worker LC step (A^p is 100×10000)");
+    section(&format!(
+        "L3: worker LC step (A^p is {}×{})",
+        shard.a.rows(),
+        shard.a.cols()
+    ));
     let flops = 2 * 2 * shard.a.rows() as u64 * shard.a.cols() as u64;
     for threads in [1, 4] {
         let eng = RustEngine::new(cfg.prior, threads);
@@ -51,13 +76,17 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         println!("(artifacts/ or xla feature missing — skipping XLA lc_step)");
     }
 
-    section("L3: fusion GC denoiser step (N=10000)");
+    section(&format!("L3: fusion GC denoiser step (N={})", cfg.n));
     let f: Vec<f32> = (0..cfg.n).map(|_| rng.gaussian() as f32 * 0.5).collect();
     for threads in [1, 4] {
         let eng = RustEngine::new(cfg.prior, threads);
-        b.bench_throughput(&format!("rust gc_step ({threads} thr), elems"), cfg.n as u64, || {
-            black_box(eng.gc_step(&f, 0.02).unwrap());
-        });
+        b.bench_throughput(
+            &format!("rust gc_step ({threads} thr), elems"),
+            cfg.n as u64,
+            || {
+                black_box(eng.gc_step(&f, 0.02).unwrap());
+            },
+        );
     }
     if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.toml").exists() {
         let eng = mpamp::runtime::XlaEngine::load(
@@ -72,7 +101,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         });
     }
 
-    section("quantize + range-code one uplink vector (N=10000)");
+    section(&format!(
+        "quantize + range-code one uplink vector (N={})",
+        cfg.n
+    ));
     let ch = BgChannel::new(cfg.prior);
     let (wch, ws2) = ch.worker_channel(0.02, cfg.p);
     let coder = EcsqCoder::for_rate(&wch, ws2, 4.0, 8.0, mpamp::config::CodecKind::Range)?;
@@ -100,12 +132,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     b.bench("se mmse (table lookup)", || {
         black_box(table.mmse(black_box(0.02)));
     });
-    let rd_cfg = RdConfig { alphabet: 257, curve_points: 16, tol: 1e-5, gamma_grid: 9 };
-    b.bench("blahut-arimoto curve (257 alphabet, 16 pts)", || {
-        black_box(
-            mpamp::rd::rd_curve_for_channel(&wch, ws2, 257, 16, 1e-5).unwrap(),
-        );
-    });
+    let (alphabet, points, gamma) = if smoke { (161, 12, 7) } else { (257, 16, 9) };
+    b.bench(
+        &format!("blahut-arimoto curve ({alphabet} alphabet, {points} pts)"),
+        || {
+            black_box(
+                mpamp::rd::rd_curve_for_channel(&wch, ws2, alphabet, points, 1e-5).unwrap(),
+            );
+        },
+    );
+    let rd_cfg = RdConfig { alphabet, curve_points: points, tol: 1e-5, gamma_grid: gamma };
     let fp = se.fixed_point(1e-10, 300);
     let cache = RdCache::build(&cfg.prior, cfg.p, fp * 0.5, se.sigma0_sq() * 2.0, &rd_cfg)?;
     let alloc = mpamp::alloc::dp::DpAllocator::new(&se, cfg.p, &cache)?;
@@ -113,5 +149,40 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     bq.bench("dp solve (T=10, R=20, ΔR=0.1 → 201×10 table)", || {
         black_box(alloc.solve(10, 20.0, 0.1).unwrap());
     });
+
+    // End-to-end sessions, one per partitioning scenario: the wall time
+    // *and* the measured uplink bytes land in the perf records.
+    section("end-to-end sessions (test_small, fixed 4-bit ECSQ)");
+    let mut records: Vec<BenchRecord> = b
+        .results()
+        .iter()
+        .chain(bq.results())
+        .map(BenchRecord::from_stats)
+        .collect();
+    for (label, builder) in [
+        ("e2e session row/fixed4", SessionBuilder::test_small(0.05).fixed_rate(4.0)),
+        (
+            "e2e session column/fixed4",
+            SessionBuilder::test_small(0.05).fixed_rate(4.0).column_partitioned(),
+        ),
+    ] {
+        let t0 = std::time::Instant::now();
+        let report = builder.build()?.run()?;
+        let wall_s = t0.elapsed().as_secs_f64();
+        // Payload bytes, not raw transport: the column scenario carries
+        // eval-only estimate shards on the wire that would skew the
+        // row-vs-column perf trajectory.
+        let bytes = report.uplink_payload_bytes();
+        println!(
+            "{label:<44} {wall_s:>8.3} s   SDR {:>6.2} dB   {bytes} uplink payload bytes",
+            report.final_sdr_db()
+        );
+        records.push(BenchRecord { name: label.to_string(), wall_s, bytes_uplinked: bytes });
+    }
+
+    if let Some(path) = json_path {
+        mpamp::bench_util::write_bench_json(&path, &records)?;
+        println!("\nwrote {} perf records → {path}", records.len());
+    }
     Ok(())
 }

@@ -1,0 +1,68 @@
+//! C-MP-AMP demo: the column-wise partitioning scenario (Ma, Lu & Baron,
+//! 1701.02578) next to the row-wise default on the same problem instance.
+//!
+//! Column-wise workers own `M × (N/P)` blocks of `A` plus their slice of
+//! the estimate; the fusion center owns `y`, broadcasts the combined
+//! residual, and the workers uplink entropy-coded partial residuals
+//! `u^p = A^p x^p`. Same quantizers, same codecs, same rate allocators —
+//! a different message type on the wire.
+//!
+//! ```sh
+//! cargo run --release --example column_partition
+//! ```
+
+use std::sync::Arc;
+
+use mpamp::observe::{StopSet, TablePrinter};
+use mpamp::signal::{Instance, ProblemDims};
+use mpamp::util::rng::Rng;
+use mpamp::SessionBuilder;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // Mid-scale so the demo finishes in seconds: N=2000, M=600, P=10
+    // (10 divides both M and N, so the same instance serves both scenarios).
+    let base = SessionBuilder::paper_default(0.05)
+        .dims(2_000, 600)
+        .workers(10)
+        .iters(8)
+        .fixed_rate(4.0);
+    let cfg = base.clone().config()?;
+    let mut rng = Rng::new(cfg.seed);
+    let inst = Arc::new(Instance::generate(
+        cfg.prior,
+        ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+    )?);
+
+    println!("=== row-partitioned MP-AMP (workers uplink f^p, length N) ===");
+    let row = base
+        .clone()
+        .instance(inst.clone())
+        .build()?
+        .run_observed(&mut TablePrinter::new(), &StopSet::none())?;
+
+    println!("\n=== column-partitioned C-MP-AMP (workers uplink u^p, length M) ===");
+    let col = base
+        .instance(inst)
+        .column_partitioned()
+        .build()?
+        .run_observed(&mut TablePrinter::new(), &StopSet::none())?;
+
+    println!("\nscenario   final SDR   bits/msg-element   uplink payload bytes");
+    for r in [&row, &col] {
+        println!(
+            "{:<9}  {:>8.2}    {:>15.2}   {:>12}",
+            r.partitioning,
+            r.final_sdr_db(),
+            r.total_uplink_bits_per_element(),
+            r.uplink_payload_bytes()
+        );
+    }
+    println!(
+        "\n(row messages have N = {} elements/worker, column messages M = {} —\n \
+         compare payload bytes, not bits/element, across scenarios; raw\n \
+         transport additionally carries eval-only shards in column mode)",
+        row.dims.0, row.dims.1
+    );
+    Ok(())
+}

@@ -39,7 +39,96 @@ const SCHEMES: [&str; 3] = ["uncompressed", "bt", "dp"];
 
 use std::sync::Arc;
 
+/// The scheduled-CI regression preset: fast-test dimensions, every scheme
+/// plus the column scenario, each checked against the reference numbers in
+/// `ci/reference_test_small.toml` (SDR floors + uplink-bit ceilings). Any
+/// regression returns an error, failing the `reproduction` workflow job.
+fn run_test_small_preset(reference: &str) -> Result<(), Box<dyn std::error::Error>> {
+    use mpamp::config::toml;
+    let refs = toml::parse(&std::fs::read_to_string(reference)?)?;
+    let get = |key: &str| -> Result<f64, Box<dyn std::error::Error>> {
+        refs.get(key)
+            .and_then(|v| v.as_f64())
+            .ok_or_else(|| format!("{reference}: missing key '{key}'").into())
+    };
+    let eps = 0.05;
+    let cfg = SessionBuilder::test_small(eps).config()?;
+    let mut rng = Rng::new(cfg.seed);
+    let inst = Arc::new(Instance::generate(
+        cfg.prior,
+        ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+    )?);
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let engine = RustEngine::new(cfg.prior, cfg.threads);
+    let cent = run_centralized(&inst, &se, &engine, cfg.iters)?;
+
+    let mut sweep = Sweep::new();
+    let base = SessionBuilder::test_small(eps).instance(inst);
+    sweep.add("uncompressed", base.clone().uncompressed());
+    sweep.add("bt", base.clone().backtrack(1.05, 6.0));
+    sweep.add("column_fixed5", base.column_partitioned().fixed_rate(5.0));
+    let trials = sweep.threads(2).run()?;
+
+    fn check_sdr(failures: &mut Vec<String>, name: &str, got: f64, floor: f64) {
+        let status = if got >= floor { "ok " } else { "FAIL" };
+        println!("{status} {name:<14} SDR {got:>7.2} dB (reference floor {floor})");
+        if got < floor {
+            failures.push(format!("{name}: SDR {got:.2} dB below reference {floor}"));
+        }
+    }
+    let mut failures = Vec::new();
+    check_sdr(
+        &mut failures,
+        "centralized",
+        cent.final_sdr_db(),
+        get("min_sdr_db.centralized")?,
+    );
+    for trial in &trials {
+        let floor = get(&format!("min_sdr_db.{}", trial.label))?;
+        check_sdr(&mut failures, &trial.label, trial.report.final_sdr_db(), floor);
+    }
+    for trial in &trials {
+        let key = format!("max_bits_per_element.{}", trial.label);
+        if let Some(cap) = refs.get(&key).and_then(|v| v.as_f64()) {
+            let got = trial.report.total_uplink_bits_per_element();
+            let status = if got <= cap { "ok " } else { "FAIL" };
+            println!(
+                "{status} {:<14} uplink {got:>7.2} bits/element (reference cap {cap})",
+                trial.label
+            );
+            if got > cap {
+                failures.push(format!(
+                    "{}: uplink {got:.2} bits/element above reference {cap}",
+                    trial.label
+                ));
+            }
+        }
+    }
+    if failures.is_empty() {
+        println!("test_small reproduction preset: all checks passed");
+        Ok(())
+    } else {
+        Err(format!("reproduction regressions: {}", failures.join("; ")).into())
+    }
+}
+
 fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(i) = args.iter().position(|a| a == "--preset") {
+        match args.get(i + 1).map(String::as_str) {
+            Some("test_small") => {
+                let reference = args
+                    .iter()
+                    .position(|a| a == "--reference")
+                    .and_then(|j| args.get(j + 1))
+                    .map(String::as_str)
+                    .unwrap_or("ci/reference_test_small.toml");
+                return run_test_small_preset(reference);
+            }
+            other => return Err(format!("unknown preset {other:?}").into()),
+        }
+    }
     let t_start = std::time::Instant::now();
     let engine = if cfg!(feature = "xla")
         && std::path::Path::new("artifacts/manifest.toml").exists()

@@ -3,7 +3,7 @@
 //! treating the whole problem as a single worker with `P = 1`.
 
 use crate::engine::{ComputeEngine, WorkerData};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::metrics::IterRecord;
 use crate::se::StateEvolution;
 use crate::signal::Instance;
@@ -31,6 +31,14 @@ pub fn run_centralized(
     engine: &dyn ComputeEngine,
     t_iters: usize,
 ) -> Result<CentralizedReport> {
+    // A zero-iteration run has no final SDR (`final_sdr_db` would be NaN);
+    // reject it up front with a config error, matching the session
+    // builder's validation style.
+    if t_iters == 0 {
+        return Err(Error::Config(
+            "t_iters must be ≥ 1 (a zero-iteration run has no estimate)".into(),
+        ));
+    }
     let n = inst.dims.n;
     let m = inst.dims.m as f64;
     let data = WorkerData { a: inst.a.clone(), y: inst.y.clone() };
@@ -76,6 +84,17 @@ mod tests {
             Instance::generate(prior, ProblemDims { n, m, sigma_e2 }, &mut rng).unwrap();
         let se = StateEvolution::new(prior, kappa, sigma_e2);
         (inst, se)
+    }
+
+    #[test]
+    fn zero_iterations_rejected_with_config_error() {
+        let (inst, se) = setup(200, 60, 0.1, 3);
+        let engine = RustEngine::new(inst.prior, 1);
+        let err = run_centralized(&inst, &se, &engine, 0).unwrap_err();
+        assert!(
+            matches!(err, crate::error::Error::Config(_)),
+            "expected Config error, got {err:?}"
+        );
     }
 
     #[test]

@@ -190,6 +190,53 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// One machine-readable bench record for the CI perf trajectory
+/// (`BENCH_pr.json`): wall seconds plus the bytes the benchmarked run
+/// uplinked (0 for pure-compute microbenches).
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchRecord {
+    /// Record label.
+    pub name: String,
+    /// Wall-clock seconds (the median for repeated microbenches).
+    pub wall_s: f64,
+    /// Uplink bytes moved by the benchmarked run (0 if not applicable).
+    pub bytes_uplinked: u64,
+}
+
+impl BenchRecord {
+    /// Record from microbench stats (no uplink traffic).
+    pub fn from_stats(s: &BenchStats) -> Self {
+        BenchRecord {
+            name: s.name.clone(),
+            wall_s: s.median.as_secs_f64(),
+            bytes_uplinked: 0,
+        }
+    }
+}
+
+/// Write records as a JSON array of `{name, wall_s, bytes_uplinked}`
+/// objects — the schema CI's `bench-smoke` job uploads per PR.
+pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
+    use crate::metrics::Json;
+    let arr = Json::Arr(
+        records
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("name", Json::Str(r.name.clone()))
+                    .set("wall_s", Json::Num(r.wall_s))
+                    .set("bytes_uplinked", Json::Num(r.bytes_uplinked as f64))
+            })
+            .collect(),
+    );
+    if let Some(parent) = std::path::Path::new(path).parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)?;
+        }
+    }
+    std::fs::write(path, arr.render())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -223,6 +270,23 @@ mod tests {
             black_box(());
         });
         assert!(s.throughput().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn bench_json_records_roundtrip_schema() {
+        let records = vec![
+            BenchRecord { name: "lc step".into(), wall_s: 0.0125, bytes_uplinked: 0 },
+            BenchRecord { name: "e2e row".into(), wall_s: 1.5, bytes_uplinked: 4096 },
+        ];
+        let dir = std::env::temp_dir().join("mpamp_bench_json_test");
+        let path = dir.join("BENCH_pr.json");
+        write_bench_json(path.to_str().unwrap(), &records).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert!(text.starts_with('[') && text.ends_with(']'), "{text}");
+        assert!(text.contains("\"name\":\"lc step\""), "{text}");
+        assert!(text.contains("\"wall_s\":0.0125"), "{text}");
+        assert!(text.contains("\"bytes_uplinked\":4096"), "{text}");
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

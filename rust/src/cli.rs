@@ -118,6 +118,9 @@ COMMON OPTIONS:
     --config <file>          Load a TOML run config
     --<key> <value>          Override any config key (e.g. --p 30,
                              --prior.eps 0.05, --schedule.kind dp)
+    --partitioning <scheme>  'row' (default) or 'column' (C-MP-AMP:
+                             workers own column blocks and uplink
+                             quantized partial residuals; P must divide N)
     --out <file>             Write a CSV/JSON report to <file>
     --quiet                  Suppress the per-iteration table
 
@@ -133,6 +136,7 @@ EXAMPLES:
     mpamp run --prior.eps 0.05 --schedule.kind bt
     mpamp run --config configs/paper_eps005.toml --schedule.kind dp
     mpamp run --prior.eps 0.05 --target-sdr 18 --max-bits 40
+    mpamp run --partitioning column --p 40 --schedule.kind fixed
     mpamp dp --prior.eps 0.03 --schedule.total_rate 16
 "
 }

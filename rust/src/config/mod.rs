@@ -7,6 +7,41 @@ use crate::error::{Error, Result};
 use crate::signal::BernoulliGauss;
 use toml::{parse_value, Table, Value};
 
+/// How the sensing matrix is sharded across the `P` worker processors.
+///
+/// The two partitionings exchange different message types over the same
+/// transport/quantizer machinery (see the overview paper 1702.03049):
+/// row-wise workers uplink local estimates `f_t^p` of length `N`,
+/// column-wise workers uplink partial residuals `A^p x_t^p` of length `M`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Partitioning {
+    /// Row-wise MP-AMP (Han, Zhu, Niu & Baron 2016): each worker owns an
+    /// `(M/P) × N` row block of `A` plus the matching slice of `y`.
+    #[default]
+    Row,
+    /// Column-wise C-MP-AMP (Ma, Lu & Baron 2017, 1701.02578): each worker
+    /// owns an `M × (N/P)` column block of `A` and the matching slice of
+    /// the estimate; the fusion center owns `y` and the combined residual.
+    ///
+    /// All schedules apply. Note that the BT/DP allocators pick their
+    /// per-iteration σ_Q² targets under the row-mode state evolution;
+    /// those targets transfer (the fused quantization noise reaches the
+    /// denoiser as `P σ_Q²` in both scenarios) but the allocators' rate
+    /// accounting keeps the row message model, so their bit totals are
+    /// approximate in column mode.
+    Column,
+}
+
+impl Partitioning {
+    /// Stable lowercase label used in configs and reports.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Partitioning::Row => "row",
+            Partitioning::Column => "column",
+        }
+    }
+}
+
 /// Rate-allocation scheme for the uplink.
 #[derive(Debug, Clone, PartialEq)]
 pub enum ScheduleKind {
@@ -90,6 +125,8 @@ pub struct RunConfig {
     pub m: usize,
     /// Number of worker processors P.
     pub p: usize,
+    /// How the sensing matrix is sharded across the workers.
+    pub partitioning: Partitioning,
     /// Source prior.
     pub prior: BernoulliGauss,
     /// Measurement SNR in dB.
@@ -133,6 +170,7 @@ impl RunConfig {
             n: 10_000,
             m: 3_000,
             p: 30,
+            partitioning: Partitioning::Row,
             prior: BernoulliGauss::standard(eps),
             snr_db: 20.0,
             iters: paper_iters(eps),
@@ -174,11 +212,30 @@ impl RunConfig {
         if self.n == 0 || self.m == 0 {
             return Err(Error::Config("N and M must be positive".into()));
         }
-        if self.p == 0 || self.m % self.p != 0 {
-            return Err(Error::Config(format!(
-                "P={} must be positive and divide M={}",
-                self.p, self.m
-            )));
+        match self.partitioning {
+            Partitioning::Row => {
+                if self.p == 0 || self.m % self.p != 0 {
+                    return Err(Error::Config(format!(
+                        "P={} must be positive and divide M={}",
+                        self.p, self.m
+                    )));
+                }
+            }
+            Partitioning::Column => {
+                if self.p == 0 || self.n % self.p != 0 {
+                    return Err(Error::Config(format!(
+                        "column partitioning: P={} must be positive and divide N={}",
+                        self.p, self.n
+                    )));
+                }
+                if self.engine == EngineKind::Xla {
+                    return Err(Error::Config(
+                        "column partitioning requires engine = \"rust\" (the AOT \
+                         artifacts only lower the row-block kernels)"
+                            .into(),
+                    ));
+                }
+            }
         }
         match &self.schedule {
             ScheduleKind::Fixed { bits } if *bits <= 0.0 => {
@@ -240,6 +297,15 @@ impl RunConfig {
         }
         if let Some(v) = t.get("p") {
             c.p = req_usize(v, "p")?;
+        }
+        if let Some(v) = t.get("partitioning") {
+            c.partitioning = match req_str(v, "partitioning")? {
+                "row" => Partitioning::Row,
+                "column" | "col" => Partitioning::Column,
+                other => {
+                    return Err(Error::Config(format!("unknown partitioning '{other}'")))
+                }
+            };
         }
         if let Some(v) = t.get("snr_db") {
             c.snr_db = req_f64(v, "snr_db")?;
@@ -367,6 +433,7 @@ impl RunConfig {
         t.insert("n".into(), Value::Int(self.n as i64));
         t.insert("m".into(), Value::Int(self.m as i64));
         t.insert("p".into(), Value::Int(self.p as i64));
+        t.insert("partitioning".into(), Value::Str(self.partitioning.as_str().into()));
         t.insert("prior.eps".into(), Value::Float(self.prior.eps));
         t.insert("prior.mu_s".into(), Value::Float(self.prior.mu_s));
         t.insert("prior.sigma_s2".into(), Value::Float(self.prior.sigma_s2));
@@ -425,6 +492,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "n",
     "m",
     "p",
+    "partitioning",
     "prior.eps",
     "prior.mu_s",
     "prior.sigma_s2",
@@ -534,6 +602,45 @@ mod tests {
         let mut c = RunConfig::paper_default(0.05);
         c.p = 7; // does not divide 3000
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn partitioning_parses_and_roundtrips() {
+        // P=40 divides N=10000 (the paper default P=30 does not).
+        let t = toml::parse("partitioning = \"column\"\np = 40").unwrap();
+        let c = RunConfig::from_table(&t).unwrap();
+        assert_eq!(c.partitioning, Partitioning::Column);
+        assert_eq!(c.p, 40);
+        let mut enc = Table::new();
+        c.encode_into(&mut enc);
+        assert_eq!(RunConfig::from_table(&enc).unwrap(), c);
+        // Unknown labels fail loudly.
+        let t = toml::parse("partitioning = \"diagonal\"").unwrap();
+        assert!(RunConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn column_partitioning_validates_against_n() {
+        let mut c = RunConfig::paper_default(0.05);
+        c.partitioning = Partitioning::Column;
+        // The paper default P=30 does not divide N=10000 -> must fail.
+        c.p = 30;
+        assert!(c.validate().is_err());
+        // P=16 divides N=10000 but not M=3000 — valid only for columns.
+        c.p = 16;
+        c.validate().unwrap();
+        c.partitioning = Partitioning::Row;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn column_partitioning_rejects_xla_engine() {
+        let mut c = RunConfig::paper_default(0.05);
+        c.partitioning = Partitioning::Column;
+        c.p = 40;
+        c.engine = EngineKind::Xla;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("rust"), "{err}");
     }
 
     #[test]

@@ -18,7 +18,8 @@
 use std::sync::Arc;
 
 use crate::config::{
-    paper_iters, CodecKind, EngineKind, RdConfig, RunConfig, ScheduleKind, TransportKind,
+    paper_iters, CodecKind, EngineKind, Partitioning, RdConfig, RunConfig, ScheduleKind,
+    TransportKind,
 };
 use crate::coordinator::session::Session;
 use crate::error::Result;
@@ -71,10 +72,28 @@ impl SessionBuilder {
         self
     }
 
-    /// Worker processor count P (must divide M — checked at build).
+    /// Worker processor count P (must divide M for row partitioning, N
+    /// for column partitioning — checked at build).
     pub fn workers(mut self, p: usize) -> Self {
         self.cfg.p = p;
         self
+    }
+
+    /// How the sensing matrix is sharded across the workers.
+    pub fn partitioning(mut self, partitioning: Partitioning) -> Self {
+        self.cfg.partitioning = partitioning;
+        self
+    }
+
+    /// Row-wise sharding (the 2016 paper's MP-AMP; the default).
+    pub fn row_partitioned(self) -> Self {
+        self.partitioning(Partitioning::Row)
+    }
+
+    /// Column-wise sharding (C-MP-AMP, Ma–Lu–Baron 2017): workers own
+    /// column blocks and uplink quantized partial residuals `A^p x^p`.
+    pub fn column_partitioned(self) -> Self {
+        self.partitioning(Partitioning::Column)
     }
 
     /// Sparsity ε of the Bernoulli-Gauss prior. Also re-derives the
@@ -250,6 +269,27 @@ mod tests {
         let err = SessionBuilder::paper_default(0.05).workers(7).build();
         assert!(err.is_err());
         let err = SessionBuilder::paper_default(0.05).fixed_rate(-2.0).config();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn partitioning_setters_compose_and_validate() {
+        let cfg = SessionBuilder::test_small(0.05)
+            .column_partitioned()
+            .config()
+            .unwrap();
+        assert_eq!(cfg.partitioning, Partitioning::Column);
+        let cfg = SessionBuilder::test_small(0.05)
+            .column_partitioned()
+            .row_partitioned()
+            .config()
+            .unwrap();
+        assert_eq!(cfg.partitioning, Partitioning::Row);
+        // P must divide N for columns: N=600, P=7 fails at config time.
+        let err = SessionBuilder::test_small(0.05)
+            .column_partitioned()
+            .workers(7)
+            .config();
         assert!(err.is_err());
     }
 

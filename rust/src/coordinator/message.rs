@@ -83,6 +83,32 @@ pub enum Message {
         /// Payload.
         payload: FPayload,
     },
+    /// Fusion → workers (column mode, C-MP-AMP): the combined residual
+    /// `z_t` plus the effective noise level for the local denoiser.
+    ColStep {
+        /// Iteration index.
+        t: u32,
+        /// Denoiser noise level `σ̂² = ‖z_t‖²/M`.
+        sigma_eff2: f64,
+        /// Combined residual (raw broadcast, length M).
+        z: Vec<f32>,
+    },
+    /// Worker → fusion (column mode): the scalars the fusion center needs
+    /// before designing the quantizer, plus the worker's updated estimate
+    /// block. The block is carried for evaluation/reporting only and is
+    /// excluded from the uplink rate accounting (`f_payload_bits`).
+    ColScalars {
+        /// Iteration index.
+        t: u32,
+        /// Worker id.
+        worker: u32,
+        /// `‖u^p‖²` of the pending residual contribution.
+        u_norm2: f64,
+        /// Mean of `η′` over this worker's block (Onsager aggregation).
+        eta_prime_mean: f64,
+        /// The worker's updated `x^p` block (length N/P, eval only).
+        x_shard: Vec<f32>,
+    },
     /// Fusion → workers: shut down.
     Done,
 }
@@ -92,6 +118,8 @@ const TAG_ZNORM: u8 = 2;
 const TAG_QUANT: u8 = 3;
 const TAG_FVEC: u8 = 4;
 const TAG_DONE: u8 = 5;
+const TAG_COLSTEP: u8 = 6;
+const TAG_COLSCALARS: u8 = 7;
 
 const SPEC_RAW: u8 = 0;
 const SPEC_SKIP: u8 = 1;
@@ -156,6 +184,26 @@ impl Message {
                     FPayload::Skipped => out.push(PAY_SKIPPED),
                 }
             }
+            Message::ColStep { t, sigma_eff2, z } => {
+                out.push(TAG_COLSTEP);
+                push_u32(&mut out, *t);
+                push_f64(&mut out, *sigma_eff2);
+                push_u32(&mut out, z.len() as u32);
+                let base = out.len();
+                out.resize(base + 4 * z.len(), 0);
+                LE::write_f32_into(z, &mut out[base..]);
+            }
+            Message::ColScalars { t, worker, u_norm2, eta_prime_mean, x_shard } => {
+                out.push(TAG_COLSCALARS);
+                push_u32(&mut out, *t);
+                push_u32(&mut out, *worker);
+                push_f64(&mut out, *u_norm2);
+                push_f64(&mut out, *eta_prime_mean);
+                push_u32(&mut out, x_shard.len() as u32);
+                let base = out.len();
+                out.resize(base + 4 * x_shard.len(), 0);
+                LE::write_f32_into(x_shard, &mut out[base..]);
+            }
             Message::Done => out.push(TAG_DONE),
         }
         out
@@ -218,6 +266,26 @@ impl Message {
                     }
                 };
                 Message::FVector { t, worker, payload }
+            }
+            TAG_COLSTEP => {
+                let t = c.u32()?;
+                let sigma_eff2 = c.f64()?;
+                let n = c.u32()? as usize;
+                let raw = c.bytes(4 * n)?;
+                let mut z = vec![0f32; n];
+                LE::read_f32_into(raw, &mut z);
+                Message::ColStep { t, sigma_eff2, z }
+            }
+            TAG_COLSCALARS => {
+                let t = c.u32()?;
+                let worker = c.u32()?;
+                let u_norm2 = c.f64()?;
+                let eta_prime_mean = c.f64()?;
+                let n = c.u32()? as usize;
+                let raw = c.bytes(4 * n)?;
+                let mut x_shard = vec![0f32; n];
+                LE::read_f32_into(raw, &mut x_shard);
+                Message::ColScalars { t, worker, u_norm2, eta_prime_mean, x_shard }
             }
             TAG_DONE => Message::Done,
             other => return Err(Error::Protocol(format!("unknown message tag {other}"))),
@@ -322,6 +390,14 @@ mod tests {
                 payload: FPayload::Coded { n: 100, bytes: vec![1, 2, 3, 255] },
             },
             Message::FVector { t: 5, worker: 3, payload: FPayload::Skipped },
+            Message::ColStep { t: 6, sigma_eff2: 0.042, z: vec![0.5, -1.25, 2.0] },
+            Message::ColScalars {
+                t: 6,
+                worker: 4,
+                u_norm2: 9.75,
+                eta_prime_mean: 0.125,
+                x_shard: vec![1.0, 0.0, -0.5],
+            },
             Message::Done,
         ];
         for m in msgs {
@@ -364,5 +440,14 @@ mod tests {
         };
         assert_eq!(coded.f_payload_bits(), 24.0);
         assert_eq!(Message::Done.f_payload_bits(), 0.0);
+        // Column-mode eval shards ride outside the rate accounting.
+        let scalars = Message::ColScalars {
+            t: 0,
+            worker: 0,
+            u_norm2: 1.0,
+            eta_prime_mean: 0.5,
+            x_shard: vec![0.0; 100],
+        };
+        assert_eq!(scalars.f_payload_bits(), 0.0);
     }
 }

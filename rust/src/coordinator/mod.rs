@@ -7,7 +7,7 @@
 //!   decode, denoise, broadcast),
 //! * [`session`] — end-to-end orchestration producing a [`session::RunReport`].
 //!
-//! Protocol per iteration `t` (paper §3.1–§3.3):
+//! Row-partitioned protocol per iteration `t` (paper §3.1–§3.3):
 //!
 //! ```text
 //! fusion ──StepCmd{t, x_t, coef}──▶ workers          (broadcast)
@@ -15,6 +15,18 @@
 //! fusion ──QuantCmd{t, Δ, K, σ̂²}──▶ workers         (quantizer design)
 //! fusion ◀──FVector{coded f_t^p}── workers          (the expensive uplink)
 //! fusion: f̃ = Σ dequant(f^p); x_{t+1} = η(f̃); loop
+//! ```
+//!
+//! Column-partitioned protocol (C-MP-AMP, 1701.02578) — denoising moves
+//! to the workers, the fusion center owns `y` and the combined residual:
+//!
+//! ```text
+//! fusion ──ColStep{t, z_t, σ̂²}───▶ workers           (residual broadcast)
+//! workers: f^p = x^p + (A^p)ᵀ z_t; x^p ← η(f^p); u^p = A^p x^p
+//! fusion ◀──ColScalars{‖u^p‖², η̄′}─ workers          (v̂ + Onsager terms)
+//! fusion ──QuantCmd{t, Δ, K, v̂}───▶ workers          (quantizer design)
+//! fusion ◀──FVector{coded u^p}──── workers           (the expensive uplink)
+//! fusion: z_{t+1} = y − Σ dequant(u^p) + coef·z_t; loop
 //! ```
 
 pub mod builder;

@@ -1,11 +1,19 @@
-//! The worker processor loop: owns one row block of the sensing matrix,
-//! runs the LC step on command, and uplinks `‖z‖²` scalars and the
-//! (entropy-coded) local estimate `f_t^p`.
+//! The worker processor loops, one per [`Partitioning`]:
+//!
+//! * [`run_worker`] (row mode) owns an `(M/P) × N` row block plus `y^p`,
+//!   runs the LC step on command, and uplinks `‖z‖²` scalars and the
+//!   (entropy-coded) local estimate `f_t^p`;
+//! * [`run_column_worker`] (column mode, C-MP-AMP) owns an `M × (N/P)`
+//!   column block plus its slice of the estimate, denoises locally
+//!   against the broadcast residual, and uplinks the (entropy-coded)
+//!   partial residual `u_t^p = A^p x_t^p`.
+//!
+//! [`Partitioning`]: crate::config::Partitioning
 
 use crate::config::CodecKind;
 use crate::coordinator::message::{FPayload, Message, QuantSpec};
 use crate::coordinator::transport::Endpoint;
-use crate::engine::{ComputeEngine, WorkerData};
+use crate::engine::{ColumnWorkerData, ComputeEngine, WorkerData};
 use crate::error::{Error, Result};
 use crate::quant::{EcsqCoder, UniformQuantizer};
 use crate::se::prior::BgChannel;
@@ -41,6 +49,56 @@ pub fn coder_for_spec(
             Ok(Some(EcsqCoder::new(q, &wch, ws2, codec)?))
         }
     }
+}
+
+/// Column-mode analogue of [`coder_for_spec`]: the message model is the
+/// Gaussian column-uplink channel rebuilt from the variance estimate the
+/// spec carries (its `sigma_d2_hat` field holds `v̂ = Σ‖u^p‖²/(P·M)` in
+/// column mode). Deterministic on both sides, like the row path.
+pub fn column_coder_for_spec(
+    spec: &QuantSpec,
+    codec: CodecKind,
+) -> Result<Option<EcsqCoder>> {
+    match spec {
+        QuantSpec::Raw | QuantSpec::Skip => Ok(None),
+        QuantSpec::Ecsq { delta, k_max, sigma_d2_hat } => {
+            let (wch, ws2) = BgChannel::column_message_channel(*sigma_d2_hat);
+            let q = UniformQuantizer { delta: *delta, k_max: *k_max as i32, center: 0.0 };
+            Ok(Some(EcsqCoder::new(q, &wch, ws2, codec)?))
+        }
+    }
+}
+
+/// Code one uplink vector according to the spec, using the given coder
+/// builder (row and column workers differ only in the model channel).
+fn payload_for_spec(
+    v: Vec<f32>,
+    spec: &QuantSpec,
+    codec: CodecKind,
+    coder: Option<EcsqCoder>,
+) -> Result<FPayload> {
+    Ok(match spec {
+        QuantSpec::Raw => FPayload::Raw(v),
+        QuantSpec::Skip => FPayload::Skipped,
+        QuantSpec::Ecsq { .. } => {
+            let coder = coder.expect("ECSQ spec yields a coder");
+            let syms = coder.quantizer.quantize_block(&v);
+            match codec {
+                CodecKind::Analytic => {
+                    // Entropy-accounted, not entropy-coded: ship the
+                    // dequantized values so numerics match the coded path
+                    // exactly.
+                    let mut deq = vec![0f32; v.len()];
+                    coder.quantizer.dequantize_block(&syms, &mut deq);
+                    FPayload::Raw(deq)
+                }
+                CodecKind::Range | CodecKind::Huffman => {
+                    let block = coder.encode_symbols(&syms)?;
+                    FPayload::Coded { n: block.n as u32, bytes: block.bytes }
+                }
+            }
+        }
+    })
 }
 
 /// Run the worker protocol until `Done`. Returns the number of iterations
@@ -83,37 +141,68 @@ pub fn run_worker(
                         params.id
                     ))
                 })?;
-                let payload = match &spec {
-                    QuantSpec::Raw => FPayload::Raw(f),
-                    QuantSpec::Skip => FPayload::Skipped,
-                    QuantSpec::Ecsq { .. } => {
-                        let coder = coder_for_spec(
-                            &spec,
-                            &params.prior,
-                            params.p_workers,
-                            params.codec,
-                        )?
-                        .expect("ECSQ spec yields a coder");
-                        let syms = coder.quantizer.quantize_block(&f);
-                        match params.codec {
-                            CodecKind::Analytic => {
-                                // Entropy-accounted, not entropy-coded: ship
-                                // the dequantized values so numerics match
-                                // the coded path exactly.
-                                let mut deq = vec![0f32; f.len()];
-                                coder.quantizer.dequantize_block(&syms, &mut deq);
-                                FPayload::Raw(deq)
-                            }
-                            CodecKind::Range | CodecKind::Huffman => {
-                                let block = coder.encode_symbols(&syms)?;
-                                FPayload::Coded {
-                                    n: block.n as u32,
-                                    bytes: block.bytes,
-                                }
-                            }
-                        }
-                    }
-                };
+                let coder =
+                    coder_for_spec(&spec, &params.prior, params.p_workers, params.codec)?;
+                let payload = payload_for_spec(f, &spec, params.codec, coder)?;
+                endpoint.send(&Message::FVector { t, worker: params.id, payload })?;
+            }
+            Message::Done => return Ok(iters),
+            other => {
+                return Err(Error::Protocol(format!(
+                    "worker {}: unexpected message {other:?}",
+                    params.id
+                )))
+            }
+        }
+    }
+}
+
+/// Run the column-mode (C-MP-AMP) worker protocol until `Done`: hold the
+/// local estimate block across iterations, denoise against each broadcast
+/// residual, and uplink quantized partial residuals `u_t^p = A^p x_t^p`.
+/// Returns the number of iterations served.
+pub fn run_column_worker(
+    params: &WorkerParams,
+    data: &ColumnWorkerData,
+    engine: &dyn ComputeEngine,
+    endpoint: &mut Endpoint,
+) -> Result<usize> {
+    let np = data.a.cols();
+    let mut x = vec![0f32; np];
+    let mut u_cur: Option<Vec<f32>> = None;
+    let mut iters = 0usize;
+    loop {
+        match endpoint.recv()? {
+            Message::ColStep { t, sigma_eff2, z } => {
+                if z.len() != data.a.rows() {
+                    return Err(Error::Protocol(format!(
+                        "worker {}: z length {} != M {}",
+                        params.id,
+                        z.len(),
+                        data.a.rows()
+                    )));
+                }
+                let out = engine.col_lc_step(data, &x, &z, sigma_eff2)?;
+                x = out.x_next;
+                endpoint.send(&Message::ColScalars {
+                    t,
+                    worker: params.id,
+                    u_norm2: out.u_norm2,
+                    eta_prime_mean: out.eta_prime_mean,
+                    x_shard: x.clone(),
+                })?;
+                u_cur = Some(out.u);
+                iters += 1;
+            }
+            Message::QuantCmd { t, spec } => {
+                let u = u_cur.take().ok_or_else(|| {
+                    Error::Protocol(format!(
+                        "worker {}: QuantCmd before ColStep at t={t}",
+                        params.id
+                    ))
+                })?;
+                let coder = column_coder_for_spec(&spec, params.codec)?;
+                let payload = payload_for_spec(u, &spec, params.codec, coder)?;
                 endpoint.send(&Message::FVector { t, worker: params.id, payload })?;
             }
             Message::Done => return Ok(iters),
@@ -142,6 +231,51 @@ mod tests {
         let b = coder_for_spec(&spec, &prior, 30, CodecKind::Range).unwrap().unwrap();
         assert_eq!(a.pmf, b.pmf);
         assert_eq!(a.quantizer, b.quantizer);
+    }
+
+    #[test]
+    fn column_coder_deterministic_and_gaussian_modeled() {
+        let spec = QuantSpec::Ecsq { delta: 0.004, k_max: 120, sigma_d2_hat: 0.03 };
+        let a = column_coder_for_spec(&spec, CodecKind::Range).unwrap().unwrap();
+        let b = column_coder_for_spec(&spec, CodecKind::Range).unwrap().unwrap();
+        assert_eq!(a.pmf, b.pmf);
+        assert_eq!(a.quantizer, b.quantizer);
+        // The model pmf is symmetric (zero-mean Gaussian message).
+        let n = a.pmf.len();
+        for i in 0..n / 2 {
+            assert!((a.pmf[i] - a.pmf[n - 1 - i]).abs() < 1e-12, "bin {i}");
+        }
+        // Raw/Skip specs need no coder.
+        assert!(column_coder_for_spec(&QuantSpec::Raw, CodecKind::Range)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn column_worker_rejects_quant_before_step() {
+        let prior = BernoulliGauss::standard(0.1);
+        let mut rng = Rng::new(2);
+        let inst = Instance::generate(
+            prior,
+            ProblemDims { n: 50, m: 10, sigma_e2: 1e-3 },
+            &mut rng,
+        )
+        .unwrap();
+        let data = ColumnWorkerData::try_split(&inst.a, 2).unwrap().remove(0);
+        let engine = RustEngine::new(prior, 1);
+        let params =
+            WorkerParams { id: 0, p_workers: 2, prior, codec: CodecKind::Range };
+        let meter = std::sync::Arc::new(crate::metrics::ByteMeter::new());
+        let (mut fusion_ep, mut worker_ep) =
+            crate::coordinator::transport::inproc_pair(meter);
+        let h = std::thread::spawn(move || {
+            run_column_worker(&params, &data, &engine, &mut worker_ep)
+        });
+        fusion_ep
+            .send(&Message::QuantCmd { t: 0, spec: QuantSpec::Raw })
+            .unwrap();
+        let err = h.join().unwrap();
+        assert!(err.is_err(), "expected protocol error, got {err:?}");
     }
 
     #[test]

@@ -54,6 +54,36 @@ impl WorkerData {
     }
 }
 
+/// The per-worker shard for column-wise C-MP-AMP: an `M × (N/P)` column
+/// block of `A` kept in its original row-major orientation, so both hot
+/// kernels — `A^p x^p` (row dot products) and `(A^p)ᵀ z` (row-by-row
+/// accumulation, the unit-stride transposed matvec) — stay unit-stride.
+/// The measurements `y` live at the fusion center in this partitioning.
+#[derive(Debug, Clone)]
+pub struct ColumnWorkerData {
+    /// Column block `A^p` of the sensing matrix, shape (M, N/P).
+    pub a: Matrix,
+}
+
+impl ColumnWorkerData {
+    /// Split a full sensing matrix into `p` equal column blocks. Errors
+    /// (instead of panicking) when `p` is zero or does not divide `N`.
+    pub fn try_split(a: &Matrix, p: usize) -> Result<Vec<ColumnWorkerData>> {
+        if p == 0 || a.cols() % p != 0 {
+            return Err(Error::Config(format!(
+                "P={p} must be positive and divide N={}",
+                a.cols()
+            )));
+        }
+        let cols_per = a.cols() / p;
+        Ok((0..p)
+            .map(|i| ColumnWorkerData {
+                a: a.col_block(i * cols_per, (i + 1) * cols_per),
+            })
+            .collect())
+    }
+}
+
 /// Output of one worker LC step.
 #[derive(Debug, Clone)]
 pub struct LcOut {
@@ -63,6 +93,22 @@ pub struct LcOut {
     pub f_partial: Vec<f32>,
     /// `‖z_t^p‖²` (the scalar each worker uplinks for σ̂² estimation).
     pub z_norm2: f64,
+}
+
+/// Output of one column-mode (C-MP-AMP) worker step.
+#[derive(Debug, Clone)]
+pub struct ColLcOut {
+    /// Updated local estimate block `x_{t+1}^p` (length N/P).
+    pub x_next: Vec<f32>,
+    /// Residual contribution `u^p = A^p x_{t+1}^p` (length M) — the
+    /// message this worker uplinks after quantization.
+    pub u: Vec<f32>,
+    /// `‖u^p‖²` (the scalar each worker uplinks so the fusion center can
+    /// design the quantizer from the empirical message variance).
+    pub u_norm2: f64,
+    /// Empirical mean of `η′` over this worker's block (the fusion center
+    /// aggregates these into the global Onsager coefficient).
+    pub eta_prime_mean: f64,
 }
 
 /// Output of one fusion GC step.
@@ -90,6 +136,44 @@ pub trait ComputeEngine: Send + Sync {
 
     /// Fusion GC step: denoise `f` at effective noise `sigma_eff2`.
     fn gc_step(&self, f: &[f32], sigma_eff2: f64) -> Result<GcOut>;
+
+    /// Column-mode worker step (C-MP-AMP, 1701.02578): pseudo-data
+    /// `f^p = x^p + (A^p)ᵀ z`, local denoising
+    /// `x_{t+1}^p = η(f^p, σ_eff²)`, then the residual contribution
+    /// `u^p = A^p x_{t+1}^p`.
+    ///
+    /// The default implementation composes the portable serial linalg
+    /// kernels with this engine's [`gc_step`](ComputeEngine::gc_step)
+    /// denoiser; engines with their own matvec paths should override it.
+    fn col_lc_step(
+        &self,
+        data: &ColumnWorkerData,
+        x: &[f32],
+        z: &[f32],
+        sigma_eff2: f64,
+    ) -> Result<ColLcOut> {
+        let m = data.a.rows();
+        let np = data.a.cols();
+        debug_assert_eq!(x.len(), np);
+        debug_assert_eq!(z.len(), m);
+        // f = x + Aᵀ z (unit-stride transposed matvec).
+        let mut f = vec![0f32; np];
+        data.a.matvec_t(z, &mut f);
+        for (fi, &xi) in f.iter_mut().zip(x) {
+            *fi += xi;
+        }
+        let gc = self.gc_step(&f, sigma_eff2)?;
+        // u = A x_next.
+        let mut u = vec![0f32; m];
+        data.a.matvec(&gc.x_next, &mut u);
+        let u_norm2 = crate::linalg::norm2_sq(&u);
+        Ok(ColLcOut {
+            x_next: gc.x_next,
+            u,
+            u_norm2,
+            eta_prime_mean: gc.eta_prime_mean,
+        })
+    }
 
     /// Engine name for reports.
     fn name(&self) -> &'static str;
@@ -136,6 +220,37 @@ impl ComputeEngine for RustEngine {
             *fi += xi * inv_p;
         }
         Ok(LcOut { z, f_partial: f, z_norm2 })
+    }
+
+    fn col_lc_step(
+        &self,
+        data: &ColumnWorkerData,
+        x: &[f32],
+        z: &[f32],
+        sigma_eff2: f64,
+    ) -> Result<ColLcOut> {
+        let m = data.a.rows();
+        let np = data.a.cols();
+        debug_assert_eq!(x.len(), np);
+        debug_assert_eq!(z.len(), m);
+        // Same threaded kernels as `lc_step`, so a P = 1 column session is
+        // arithmetic-identical to centralized AMP (asserted bit-for-bit in
+        // `tests/partitioning.rs`).
+        let mut f = vec![0f32; np];
+        data.a.matvec_t_par(z, &mut f, self.threads);
+        for (fi, &xi) in f.iter_mut().zip(x) {
+            *fi += xi;
+        }
+        let gc = self.gc_step(&f, sigma_eff2)?;
+        let mut u = vec![0f32; m];
+        data.a.matvec_par(&gc.x_next, &mut u, self.threads);
+        let u_norm2 = crate::linalg::norm2_sq(&u);
+        Ok(ColLcOut {
+            x_next: gc.x_next,
+            u,
+            u_norm2,
+            eta_prime_mean: gc.eta_prime_mean,
+        })
     }
 
     fn gc_step(&self, f: &[f32], sigma_eff2: f64) -> Result<GcOut> {
@@ -280,6 +395,75 @@ mod tests {
         }
         let err = WorkerData::try_split(&inst.a, &inst.y[..30], 3).unwrap_err();
         assert!(err.to_string().contains("y length"), "{err}");
+    }
+
+    #[test]
+    fn column_split_covers_all_columns() {
+        let inst = small_instance();
+        let parts = ColumnWorkerData::try_split(&inst.a, 5).unwrap();
+        assert_eq!(parts.len(), 5);
+        let total_cols: usize = parts.iter().map(|p| p.a.cols()).sum();
+        assert_eq!(total_cols, 200);
+        for p in &parts {
+            assert_eq!(p.a.rows(), 60);
+        }
+        // Reassembling the blocks column-wise reproduces A x for any x.
+        let mut rng = Rng::new(9);
+        let x: Vec<f32> = (0..200).map(|_| rng.gaussian() as f32).collect();
+        let mut want = vec![0f32; 60];
+        inst.a.matvec(&x, &mut want);
+        let mut got = vec![0f32; 60];
+        for (i, part) in parts.iter().enumerate() {
+            let mut u = vec![0f32; 60];
+            part.a.matvec(&x[i * 40..(i + 1) * 40], &mut u);
+            crate::linalg::axpy(1.0, &u, &mut got);
+        }
+        for i in 0..60 {
+            assert!((want[i] - got[i]).abs() < 1e-4, "row {i}");
+        }
+    }
+
+    #[test]
+    fn column_split_rejects_bad_partitions() {
+        let inst = small_instance();
+        // 7 does not divide N=200; 0 workers is meaningless.
+        for p in [0, 7] {
+            let err = ColumnWorkerData::try_split(&inst.a, p).unwrap_err();
+            assert!(matches!(err, crate::error::Error::Config(_)), "p={p}: {err:?}");
+        }
+    }
+
+    #[test]
+    fn col_lc_step_matches_composed_reference() {
+        // The threaded override must agree with the hand-composed
+        // serial pipeline (f = x + Aᵀz, denoise, u = A x_next).
+        let inst = small_instance();
+        let eng = RustEngine::new(inst.prior, 3);
+        let ch = BgChannel::new(inst.prior);
+        let parts = ColumnWorkerData::try_split(&inst.a, 4).unwrap();
+        let mut rng = Rng::new(21);
+        let x: Vec<f32> = (0..50).map(|_| rng.gaussian() as f32 * 0.1).collect();
+        let z: Vec<f32> = (0..60).map(|_| rng.gaussian() as f32 * 0.05).collect();
+        let s2 = 0.03;
+        let out = eng.col_lc_step(&parts[2], &x, &z, s2).unwrap();
+        let mut f = vec![0f32; 50];
+        parts[2].a.matvec_t(&z, &mut f);
+        for (fi, &xi) in f.iter_mut().zip(&x) {
+            *fi += xi;
+        }
+        let mut dsum = 0.0f64;
+        for (i, &fi) in f.iter().enumerate() {
+            let want = ch.denoise(fi as f64, s2) as f32;
+            assert!((out.x_next[i] - want).abs() < 1e-6, "x_next[{i}]");
+            dsum += ch.denoise_deriv(fi as f64, s2);
+        }
+        assert!((out.eta_prime_mean - dsum / 50.0).abs() < 1e-12);
+        let mut u = vec![0f32; 60];
+        parts[2].a.matvec(&out.x_next, &mut u);
+        for i in 0..60 {
+            assert!((out.u[i] - u[i]).abs() < 1e-5, "u[{i}]");
+        }
+        assert!((out.u_norm2 - crate::linalg::norm2_sq(&u)).abs() < 1e-6);
     }
 
     #[test]

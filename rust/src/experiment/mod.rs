@@ -2,11 +2,13 @@
 //! thread pool and collect their [`RunReport`]s.
 //!
 //! The MP-AMP literature's core experimental object is the sweep — SDR /
-//! rate trade-off curves over ε × SNR × P × budget grids — and before this
-//! module every bench hand-rolled its own loop. [`Sweep`] owns that
-//! scaffolding once: label each trial, optionally share one problem
-//! instance across trials (so schedules are compared on identical data),
-//! bound parallelism, and get back ordered [`TrialReport`]s.
+//! rate trade-off curves over ε × SNR × P × partitioning × budget grids —
+//! and before this module every bench hand-rolled its own loop. [`Sweep`]
+//! owns that scaffolding once: label each trial, optionally share one
+//! problem instance across trials (so schedules — or the row vs. column
+//! partitioning scenarios, see `benches/ablation_partitioning.rs` — are
+//! compared on identical data), bound parallelism, and get back ordered
+//! [`TrialReport`]s.
 //!
 //! ```no_run
 //! use mpamp::experiment::Sweep;

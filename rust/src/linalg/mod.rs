@@ -73,6 +73,33 @@ impl Matrix {
         }
     }
 
+    /// Take a contiguous block of columns `[c0, c1)` as a new matrix
+    /// (copy). The gather is strided over the source (one slice per row) —
+    /// it runs once at session start; the hot-path kernels then stay
+    /// unit-stride over the extracted block.
+    pub fn col_block(&self, c0: usize, c1: usize) -> Matrix {
+        debug_assert!(c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut data = Vec::with_capacity(self.rows * w);
+        for r in 0..self.rows {
+            data.extend_from_slice(&self.data[r * self.cols + c0..r * self.cols + c1]);
+        }
+        Matrix { rows: self.rows, cols: w, data }
+    }
+
+    /// Explicit transpose (copy) — the dense reference the transposed
+    /// matvec ([`matvec_t`](Self::matvec_t), which never materializes `Aᵀ`
+    /// and keeps its inner loop unit-stride) is property-tested against.
+    pub fn transposed(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for (c, &v) in self.row(r).iter().enumerate() {
+                out.data[c * self.rows + r] = v;
+            }
+        }
+        out
+    }
+
     /// `out = A x` (`out` has length `rows`).
     pub fn matvec(&self, x: &[f32], out: &mut [f32]) {
         debug_assert_eq!(x.len(), self.cols);
@@ -205,7 +232,7 @@ pub fn mean(x: &[f32]) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::proptest::{prop_close, Prop};
+    use crate::util::proptest::{prop_assert, prop_close, Prop};
     use crate::util::rng::Rng;
 
     fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
@@ -293,6 +320,40 @@ mod tests {
             let b = g.gaussian_vec(n, 1.0);
             let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as f64).sum();
             prop_close(dot(&a, &b) as f64, naive, 1e-3 * (1.0 + naive.abs()), "dot")
+        });
+    }
+
+    #[test]
+    fn col_block_copies_right_columns() {
+        let a = Matrix::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let b = a.col_block(1, 3);
+        assert_eq!((b.rows(), b.cols()), (2, 2));
+        assert_eq!(b.data(), &[2., 3., 5., 6.]);
+        // Blocks tile the matrix: every column lands in exactly one block.
+        let left = a.col_block(0, 1);
+        assert_eq!(left.data(), &[1., 4.]);
+    }
+
+    #[test]
+    fn transposed_is_involutive_and_matches_matvec_t() {
+        Prop::new("transpose roundtrip + adjoint kernels", 30).check(|g| {
+            let mut rng = Rng::new(g.u64());
+            let r = g.usize_in(1, 40);
+            let c = g.usize_in(1, 60);
+            let a = rand_matrix(&mut rng, r, c);
+            // Aᵀᵀ == A exactly (pure copies).
+            let back = a.transposed().transposed();
+            prop_assert(back.data() == a.data(), "transpose not involutive")?;
+            // The unit-stride transposed matvec equals the dense reference
+            // `Aᵀ z` computed on the materialized transpose.
+            let z = g.gaussian_vec(r, 1.0);
+            let (mut fast, mut dense) = (vec![0f32; c], vec![0f32; c]);
+            a.matvec_t(&z, &mut fast);
+            a.transposed().matvec(&z, &mut dense);
+            for i in 0..c {
+                prop_close(fast[i] as f64, dense[i] as f64, 1e-4, "matvec_t")?;
+            }
+            Ok(())
         });
     }
 

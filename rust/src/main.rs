@@ -104,8 +104,17 @@ fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let quiet = args.has_flag("quiet");
     eprintln!(
-        "mpamp run: N={} M={} P={} ε={} SNR={} dB T={} schedule={:?} engine={:?}",
-        cfg.n, cfg.m, cfg.p, cfg.prior.eps, cfg.snr_db, cfg.iters, cfg.schedule, cfg.engine
+        "mpamp run: N={} M={} P={} ({}-partitioned) ε={} SNR={} dB T={} \
+         schedule={:?} engine={:?}",
+        cfg.n,
+        cfg.m,
+        cfg.p,
+        cfg.partitioning.as_str(),
+        cfg.prior.eps,
+        cfg.snr_db,
+        cfg.iters,
+        cfg.schedule,
+        cfg.engine
     );
     let stop = stop_rules(args)?;
     let session = SessionBuilder::from_config(cfg).build()?;

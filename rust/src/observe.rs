@@ -163,7 +163,9 @@ pub enum StopRule {
         min_delta_db: f64,
     },
     /// Stop once the cumulative *measured* uplink spend reaches this many
-    /// bits per element of `f_t^p` (the paper's headline cost metric).
+    /// bits per element of the uplinked message (the paper's headline cost
+    /// metric): `f_t^p` (length N) under row partitioning, the partial
+    /// residual `u_t^p` (length M) under column partitioning.
     UplinkBudget {
         /// Total budget in bits/element.
         bits_per_element: f64,

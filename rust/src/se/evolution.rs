@@ -40,6 +40,29 @@ impl StateEvolution {
         self.sigma_e2 + self.channel.mmse(sigma_t2 + p_sigma_q2) / self.kappa
     }
 
+    /// One column-partitioned (C-MP-AMP, 1701.02578) residual-variance
+    /// step. In the column scenario the quantization error of the uplinked
+    /// partial residuals `A^p x^p` lands *in the combined residual itself*
+    /// (rather than at the denoiser input as in eq. 8), so the per-block
+    /// recursion is `σ_{t+1}² = σ_e² + mmse(σ_t²)/κ + P σ_Q²` — the
+    /// denoiser then sees the inflated residual directly through `‖z‖²/M`.
+    pub fn column_residual_step(&self, sigma_t2: f64, p_sigma_q2: f64) -> f64 {
+        self.step(sigma_t2) + p_sigma_q2
+    }
+
+    /// Column-partitioned trajectory `[σ_0², …, σ_T²]` of the combined
+    /// residual under a constant per-iteration quantization noise.
+    pub fn column_trajectory(&self, t_max: usize, p_sigma_q2: f64) -> Vec<f64> {
+        let mut out = Vec::with_capacity(t_max + 1);
+        let mut s = self.sigma0_sq();
+        out.push(s);
+        for _ in 0..t_max {
+            s = self.column_residual_step(s, p_sigma_q2);
+            out.push(s);
+        }
+        out
+    }
+
     /// Centralized trajectory `[σ_0², …, σ_T²]` (length T+1).
     pub fn trajectory(&self, t_max: usize) -> Vec<f64> {
         let mut out = Vec::with_capacity(t_max + 1);
@@ -144,6 +167,27 @@ mod tests {
         let base = se.step_quantized(0.05, 0.01);
         assert!(se.step_quantized(0.06, 0.01) > base);
         assert!(se.step_quantized(0.05, 0.02) > base);
+    }
+
+    #[test]
+    fn column_residual_step_reduces_to_plain_and_is_additive() {
+        let se = paper_se(0.05);
+        let s = se.sigma0_sq();
+        // No quantization noise ⇒ the centralized recursion.
+        assert!((se.column_residual_step(s, 0.0) - se.step(s)).abs() < 1e-15);
+        // The P σ_Q² term is exactly additive in the residual.
+        let q = 0.007;
+        assert!((se.column_residual_step(s, q) - (se.step(s) + q)).abs() < 1e-15);
+        // A noiseless column trajectory matches the centralized one.
+        let a = se.column_trajectory(6, 0.0);
+        let b = se.trajectory(6);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-15);
+        }
+        // Quantization noise keeps the steady state strictly above the
+        // centralized fixed point.
+        let noisy = se.column_trajectory(30, 1e-4);
+        assert!(noisy[30] > se.fixed_point(1e-12, 300) + 0.5e-4);
     }
 
     #[test]

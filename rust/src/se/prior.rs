@@ -149,6 +149,20 @@ impl BgChannel {
         p.mu_s.abs() + sds * (p.sigma_s2 + sigma2).sqrt()
     }
 
+    /// Model channel of the column-partitioned (C-MP-AMP) uplink message
+    /// `u^p = A^p x^p`: with i.i.d. `N(0, 1/M)` matrix entries, each entry
+    /// of `u^p` is asymptotically zero-mean Gaussian (CLT over the `N/P`
+    /// columns) with variance `v_hat`, estimated online from the uplinked
+    /// `‖u^p‖²` scalars. Expressed as a pure-slab [`BgChannel`] (ε = 1,
+    /// μ = 0) with the variance split evenly between "source" and "noise";
+    /// every consumer (bin pmf, clip range, rate inversion) only sees the
+    /// marginal `N(0, v_hat)`, so the split is immaterial.
+    pub fn column_message_channel(v_hat: f64) -> (BgChannel, f64) {
+        let v = v_hat.max(1e-30);
+        let prior = BernoulliGauss { eps: 1.0, mu_s: 0.0, sigma_s2: 0.5 * v };
+        (BgChannel::new(prior), 0.5 * v)
+    }
+
     /// The per-worker scalar channel `F_t^p = S0/P + (σ_t/√P) Z` (paper
     /// §3.2) expressed as a [`BgChannel`] on the scaled prior `S0/P` with
     /// effective noise `σ_t²/P`. Returns (channel, noise variance).
@@ -314,6 +328,22 @@ mod tests {
             m2 *= h;
             prop_close(c.var_f(s2), m2 - m1 * m1, 1e-6, "var_f")
         });
+    }
+
+    #[test]
+    fn column_message_channel_is_pure_gaussian() {
+        let v = 0.037;
+        let (ch, s2) = BgChannel::column_message_channel(v);
+        // Marginal variance equals the requested v̂ exactly.
+        assert!((ch.var_f(s2) - v).abs() < 1e-15);
+        // The marginal pdf is the N(0, v) density (no spike component).
+        for f in [-0.4, -0.05, 0.0, 0.13, 0.5] {
+            let want = normal_pdf(f, 0.0, v);
+            assert!((ch.pdf_f(f, s2) - want).abs() < 1e-12, "f={f}");
+        }
+        // Degenerate v̂ is floored, not NaN.
+        let (ch0, s20) = BgChannel::column_message_channel(0.0);
+        assert!(ch0.var_f(s20) > 0.0);
     }
 
     #[test]

@@ -96,6 +96,7 @@ fn hand_built_report() -> RunReport {
         dims: (16, 8, 2),
         schedule: "bt".into(),
         engine: "rust".into(),
+        partitioning: "row".into(),
         transport_uplink_bits: 1_000,
         transport_downlink_bits: 2_000,
         wall_s: 0.5,
@@ -109,6 +110,12 @@ fn report_totals_sum_per_iteration_rates() {
     assert!((r.total_uplink_bits_per_element() - 14.0).abs() < 1e-12);
     assert!((r.total_alloc_bits_per_element() - 13.0).abs() < 1e-12);
     assert!((r.final_sdr_db() - 17.5).abs() < 1e-12);
+    // Row payload: 14 bits/element × P=2 workers × N=16 elements / 8.
+    assert_eq!(r.uplink_payload_bytes(), 56);
+    // Column messages have M elements: 14 × 2 × 8 / 8.
+    let mut col = hand_built_report();
+    col.partitioning = "column".into();
+    assert_eq!(col.uplink_payload_bytes(), 28);
 }
 
 #[test]
@@ -144,6 +151,7 @@ fn report_serializes_to_csv_and_json() {
 
     let json = r.to_json().render();
     assert!(json.contains("\"schedule\":\"bt\""), "{json}");
+    assert!(json.contains("\"partitioning\":\"row\""), "{json}");
     assert!(json.contains("\"iters\":4"), "{json}");
     assert!(json.contains("\"stopped_early\":null"), "{json}");
     let mut stopped = r;

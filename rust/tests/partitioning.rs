@@ -1,0 +1,231 @@
+//! Partitioning-scenario coverage: with `P = 1` and raw (uncompressed)
+//! uplinks, both the row- and the column-partitioned sessions execute the
+//! *identical arithmetic* as centralized AMP — asserted bit-for-bit over
+//! random instances — and at `P > 1` the column scenario (C-MP-AMP)
+//! recovers the signal with compressed uplinks. Also the round-trip
+//! property of the unit-stride transposed matvec against the dense
+//! materialized-transpose reference.
+
+use mpamp::amp::run_centralized;
+use mpamp::config::{Partitioning, RunConfig, ScheduleKind};
+use mpamp::engine::RustEngine;
+use mpamp::linalg::Matrix;
+use mpamp::se::StateEvolution;
+use mpamp::signal::{BernoulliGauss, Instance, ProblemDims};
+use mpamp::util::proptest::{prop_assert, prop_close, Prop};
+use mpamp::util::rng::Rng;
+use mpamp::Session;
+
+/// A P = 1, uncompressed config on the fast-test dimensions.
+fn p1_cfg(partitioning: Partitioning, seed: u64, iters: usize) -> RunConfig {
+    let mut cfg = RunConfig::test_small(0.05);
+    cfg.p = 1;
+    cfg.threads = 2;
+    cfg.seed = seed;
+    cfg.iters = iters;
+    cfg.partitioning = partitioning;
+    cfg.schedule = ScheduleKind::Uncompressed;
+    cfg
+}
+
+/// Run centralized AMP and a P = 1 session on the same instance; compare
+/// the trajectories bit-for-bit. Returns an error description on the
+/// first mismatch (property-test friendly).
+fn check_p1_matches_centralized(
+    partitioning: Partitioning,
+    seed: u64,
+    iters: usize,
+) -> Result<(), String> {
+    let cfg = p1_cfg(partitioning, seed, iters);
+    let mut rng = Rng::new(cfg.seed);
+    let inst = Instance::generate(
+        cfg.prior,
+        ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+    )
+    .map_err(|e| e.to_string())?;
+    let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+    let engine = RustEngine::new(cfg.prior, cfg.threads);
+    let cent =
+        run_centralized(&inst, &se, &engine, cfg.iters).map_err(|e| e.to_string())?;
+    let report = Session::with_instance(cfg, inst)
+        .map_err(|e| e.to_string())?
+        .run()
+        .map_err(|e| e.to_string())?;
+    if cent.iters.len() != report.iters.len() {
+        return Err(format!(
+            "{partitioning:?}: iteration counts differ ({} vs {})",
+            cent.iters.len(),
+            report.iters.len()
+        ));
+    }
+    for (c, r) in cent.iters.iter().zip(&report.iters) {
+        if c.sigma_d2_hat.to_bits() != r.sigma_d2_hat.to_bits() {
+            return Err(format!(
+                "{partitioning:?} t={}: σ̂² {} != centralized {}",
+                c.t, r.sigma_d2_hat, c.sigma_d2_hat
+            ));
+        }
+        if c.sdr_db.to_bits() != r.sdr_db.to_bits() {
+            return Err(format!(
+                "{partitioning:?} t={}: SDR {} != centralized {}",
+                c.t, r.sdr_db, c.sdr_db
+            ));
+        }
+    }
+    for (i, (a, b)) in cent.final_x.iter().zip(&report.final_x).enumerate() {
+        // Plain float equality (tolerates only the ±0.0 ambiguity).
+        if a != b {
+            return Err(format!(
+                "{partitioning:?}: final_x[{i}] {b} != centralized {a}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn row_p1_raw_matches_centralized_bit_for_bit() {
+    check_p1_matches_centralized(Partitioning::Row, 0x5EED, 6).unwrap();
+}
+
+#[test]
+fn column_p1_raw_matches_centralized_bit_for_bit() {
+    check_p1_matches_centralized(Partitioning::Column, 0x5EED, 6).unwrap();
+}
+
+#[test]
+fn p1_equivalence_holds_over_random_seeds() {
+    // Property form: random seeds, both partitionings, shorter runs.
+    Prop::new("P=1 raw == centralized (row & column)", 3).check(|g| {
+        let seed = g.u64();
+        for partitioning in [Partitioning::Row, Partitioning::Column] {
+            check_p1_matches_centralized(partitioning, seed, 3)?;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn column_multiworker_recovers_with_compressed_uplinks() {
+    // P = 6 column blocks, 5-bit ECSQ range-coded uplinks: C-MP-AMP must
+    // still recover the signal and beat the 32-bit baseline on the wire.
+    let mut cfg = RunConfig::test_small(0.05);
+    cfg.partitioning = Partitioning::Column;
+    cfg.schedule = ScheduleKind::Fixed { bits: 5.0 };
+    let report = Session::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.partitioning, "column");
+    assert!(
+        report.final_sdr_db() > 8.0,
+        "C-MP-AMP SDR={}",
+        report.final_sdr_db()
+    );
+    assert!(report.savings_vs_float_pct() > 75.0);
+    // The quantization-aware prediction tracks reality loosely.
+    for it in report.iters.iter().skip(1) {
+        assert!(
+            (it.sdr_db - it.sdr_pred_db).abs() < 5.0,
+            "t={}: empirical {} vs column SE prediction {}",
+            it.t,
+            it.sdr_db,
+            it.sdr_pred_db
+        );
+    }
+}
+
+#[test]
+fn row_and_column_agree_without_quantization_at_same_p() {
+    // With raw uplinks the two scenarios compute the same fixed point —
+    // different message types, same algorithm. P=6 divides both M=180 and
+    // N=600 on the test preset. (Finite-N trajectories differ slightly:
+    // the schemes apply the Onsager term through different channels.)
+    let mut row_cfg = RunConfig::test_small(0.05);
+    row_cfg.schedule = ScheduleKind::Uncompressed;
+    let mut col_cfg = row_cfg.clone();
+    col_cfg.partitioning = Partitioning::Column;
+    let mut rng = Rng::new(row_cfg.seed);
+    let inst = std::sync::Arc::new(
+        Instance::generate(
+            row_cfg.prior,
+            ProblemDims {
+                n: row_cfg.n,
+                m: row_cfg.m,
+                sigma_e2: row_cfg.sigma_e2(),
+            },
+            &mut rng,
+        )
+        .unwrap(),
+    );
+    let row = Session::with_instance(row_cfg, inst.clone()).unwrap().run().unwrap();
+    let col = Session::with_instance(col_cfg, inst).unwrap().run().unwrap();
+    assert!(
+        (row.final_sdr_db() - col.final_sdr_db()).abs() < 1.5,
+        "row {} vs column {} final SDR",
+        row.final_sdr_db(),
+        col.final_sdr_db()
+    );
+}
+
+#[test]
+fn transposed_matvec_round_trips_against_dense_reference() {
+    Prop::new("matvec_t == dense transposed reference", 40).check(|g| {
+        let mut rng = Rng::new(g.u64());
+        let r = g.usize_in(1, 60);
+        let c = g.usize_in(1, 80);
+        let mut data = vec![0f32; r * c];
+        rng.fill_gaussian(&mut data, 1.0);
+        let a = Matrix::from_vec(r, c, data).map_err(|e| e.to_string())?;
+        let at = a.transposed();
+        prop_assert(
+            at.rows() == c && at.cols() == r,
+            format!("transpose shape ({}, {})", at.rows(), at.cols()),
+        )?;
+        // Aᵀᵀ == A exactly.
+        prop_assert(
+            at.transposed().data() == a.data(),
+            "transpose not involutive",
+        )?;
+        // Unit-stride transposed matvec vs the dense reference, both ways.
+        let z = g.gaussian_vec(r, 1.0);
+        let (mut fast, mut dense) = (vec![0f32; c], vec![0f32; c]);
+        a.matvec_t(&z, &mut fast);
+        at.matvec(&z, &mut dense);
+        for i in 0..c {
+            prop_close(fast[i] as f64, dense[i] as f64, 1e-4, "Aᵀz")?;
+        }
+        let x = g.gaussian_vec(c, 1.0);
+        let (mut fwd, mut via_t) = (vec![0f32; r], vec![0f32; r]);
+        a.matvec(&x, &mut fwd);
+        at.matvec_t(&x, &mut via_t);
+        for i in 0..r {
+            prop_close(fwd[i] as f64, via_t[i] as f64, 1e-4, "(Aᵀ)ᵀx")?;
+        }
+        Ok(())
+    });
+}
+
+/// Extraction consistency: column blocks tile the matrix, and the P = 1
+/// block is byte-identical to the source (the bit-for-bit guarantee above
+/// rests on this).
+#[test]
+fn column_blocks_tile_and_p1_block_is_identity() {
+    let prior = BernoulliGauss::standard(0.1);
+    let mut rng = Rng::new(77);
+    let inst = Instance::generate(
+        prior,
+        ProblemDims { n: 120, m: 40, sigma_e2: 1e-3 },
+        &mut rng,
+    )
+    .unwrap();
+    let whole = inst.a.col_block(0, 120);
+    assert_eq!(whole.data(), inst.a.data());
+    let blocks: Vec<Matrix> =
+        (0..4).map(|i| inst.a.col_block(i * 30, (i + 1) * 30)).collect();
+    for r in 0..40 {
+        let mut row = Vec::new();
+        for b in &blocks {
+            row.extend_from_slice(b.row(r));
+        }
+        assert_eq!(row.as_slice(), inst.a.row(r), "row {r}");
+    }
+}
