@@ -16,7 +16,7 @@ use std::sync::Arc;
 use mpamp::bench_util::{write_bench_json, BenchRecord};
 use mpamp::experiment::Sweep;
 use mpamp::metrics::Csv;
-use mpamp::signal::{Instance, ProblemDims};
+use mpamp::signal::{Batch, ProblemDims};
 use mpamp::util::rng::Rng;
 use mpamp::SessionBuilder;
 
@@ -27,10 +27,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let base = SessionBuilder::test_small(eps).dims(1_200, 360).workers(6).iters(8);
     let cfg = base.clone().config()?;
     let mut rng = Rng::new(cfg.seed);
-    let inst = Arc::new(Instance::generate(
+    let inst = Arc::new(Batch::generate(
         cfg.prior,
         ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
         &mut rng,
+        1,
     )?);
 
     let rates = [2.0, 3.0, 4.0, 6.0];
@@ -38,11 +39,11 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for &bits in &rates {
         sweep.add(
             format!("row/{bits}"),
-            base.clone().instance(inst.clone()).fixed_rate(bits),
+            base.clone().signal_batch(inst.clone()).fixed_rate(bits),
         );
         sweep.add(
             format!("column/{bits}"),
-            base.clone().instance(inst.clone()).column_partitioned().fixed_rate(bits),
+            base.clone().signal_batch(inst.clone()).column_partitioned().fixed_rate(bits),
         );
     }
     let trials = sweep.threads(2).run()?;
@@ -87,6 +88,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             name: format!("ablation {}/fixed{bits}", r.partitioning),
             wall_s: r.wall_s,
             bytes_uplinked: r.uplink_payload_bytes(),
+            signals_per_s: r.signals_per_s(),
         });
         // Sanity: at ≥4 bits both scenarios must recover the signal.
         if bits >= 4.0 {

@@ -58,7 +58,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     for threads in [1, 4] {
         let eng = RustEngine::new(cfg.prior, threads);
         b.bench_throughput(&format!("rust lc_step ({threads} thr), flops"), flops, || {
-            black_box(eng.lc_step(&shard, &x, &z, 0.3, cfg.p).unwrap());
+            black_box(eng.lc_step(&shard.a, &shard.y, &x, &z, 0.3, cfg.p).unwrap());
         });
     }
     if cfg!(feature = "xla") && std::path::Path::new("artifacts/manifest.toml").exists() {
@@ -70,11 +70,54 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             cfg.p,
         )?;
         b.bench_throughput("xla lc_step (AOT artifact), flops", flops, || {
-            black_box(eng.lc_step(&shard, &x, &z, 0.3, cfg.p).unwrap());
+            black_box(eng.lc_step(&shard.a, &shard.y, &x, &z, 0.3, cfg.p).unwrap());
         });
     } else {
         println!("(artifacts/ or xla feature missing — skipping XLA lc_step)");
     }
+
+    // The batching acceptance check: one blocked pass over A for B signals
+    // must beat B sequential matvec passes (it reads A once instead of B
+    // times). Same arithmetic per element — asserted bit-for-bit in the
+    // linalg property tests.
+    let bsig = 8usize;
+    section(&format!(
+        "L2: blocked batched matmul vs {bsig} sequential matvecs (A^p is {}×{})",
+        shard.a.rows(),
+        shard.a.cols()
+    ));
+    let (mp_rows, n_cols) = (shard.a.rows(), shard.a.cols());
+    let mut xs_batch = vec![0f32; bsig * n_cols];
+    rng.fill_gaussian(&mut xs_batch, 0.1);
+    let batch_flops = 2 * bsig as u64 * mp_rows as u64 * n_cols as u64;
+    let mut out_seq = vec![0f32; bsig * mp_rows];
+    let seq = b.bench_throughput(
+        &format!("matvec ×{bsig} (sequential), flops"),
+        batch_flops,
+        || {
+            for j in 0..bsig {
+                let (xj, oj) = (
+                    &xs_batch[j * n_cols..(j + 1) * n_cols],
+                    &mut out_seq[j * mp_rows..(j + 1) * mp_rows],
+                );
+                shard.a.matvec(black_box(xj), oj);
+            }
+            black_box(&out_seq);
+        },
+    );
+    let mut out_blk = vec![0f32; bsig * mp_rows];
+    let blk = b.bench_throughput(
+        &format!("matmul (B={bsig}, one pass over A), flops"),
+        batch_flops,
+        || {
+            shard.a.matmul(black_box(&xs_batch), bsig, &mut out_blk);
+            black_box(&out_blk);
+        },
+    );
+    println!(
+        "batched matmul speedup vs sequential: {:.2}x",
+        seq.median.as_secs_f64() / blk.median.as_secs_f64().max(1e-12)
+    );
 
     section(&format!("L3: fusion GC denoiser step (N={})", cfg.n));
     let f: Vec<f32> = (0..cfg.n).map(|_| rng.gaussian() as f32 * 0.5).collect();
@@ -150,8 +193,9 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         black_box(alloc.solve(10, 20.0, 0.1).unwrap());
     });
 
-    // End-to-end sessions, one per partitioning scenario: the wall time
-    // *and* the measured uplink bytes land in the perf records.
+    // End-to-end sessions, one per partitioning scenario, plus the
+    // batched-vs-unbatched throughput comparison: wall time, measured
+    // uplink bytes, and signals/s all land in the perf records.
     section("end-to-end sessions (test_small, fixed 4-bit ECSQ)");
     let mut records: Vec<BenchRecord> = b
         .results()
@@ -159,11 +203,16 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .chain(bq.results())
         .map(BenchRecord::from_stats)
         .collect();
+    let e2e_batch = 8usize;
     for (label, builder) in [
         ("e2e session row/fixed4", SessionBuilder::test_small(0.05).fixed_rate(4.0)),
         (
             "e2e session column/fixed4",
             SessionBuilder::test_small(0.05).fixed_rate(4.0).column_partitioned(),
+        ),
+        (
+            "e2e session row/fixed4/B=8 (batched)",
+            SessionBuilder::test_small(0.05).fixed_rate(4.0).batch(e2e_batch),
         ),
     ] {
         let t0 = std::time::Instant::now();
@@ -174,11 +223,41 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         // row-vs-column perf trajectory.
         let bytes = report.uplink_payload_bytes();
         println!(
-            "{label:<44} {wall_s:>8.3} s   SDR {:>6.2} dB   {bytes} uplink payload bytes",
-            report.final_sdr_db()
+            "{label:<44} {wall_s:>8.3} s   SDR {:>6.2} dB   {bytes} uplink payload \
+             bytes   {:>7.2} signals/s",
+            report.final_sdr_db(),
+            report.signals_per_s()
         );
-        records.push(BenchRecord { name: label.to_string(), wall_s, bytes_uplinked: bytes });
+        records.push(BenchRecord {
+            name: label.to_string(),
+            wall_s,
+            bytes_uplinked: bytes,
+            signals_per_s: report.signals_per_s(),
+        });
     }
+    // The batching win as one number: wall time of 8 sequential B=1
+    // sessions vs the single B=8 session above.
+    let t0 = std::time::Instant::now();
+    for seed in 0..e2e_batch as u64 {
+        let report = SessionBuilder::test_small(0.05)
+            .fixed_rate(4.0)
+            .seed(0x5EED + seed)
+            .build()?
+            .run()?;
+        black_box(report.final_sdr_db());
+    }
+    let wall_seq = t0.elapsed().as_secs_f64();
+    println!(
+        "{:<44} {wall_seq:>8.3} s   ({:.2} signals/s)",
+        format!("e2e session row/fixed4 ×{e2e_batch} (unbatched)"),
+        e2e_batch as f64 / wall_seq.max(1e-12)
+    );
+    records.push(BenchRecord {
+        name: format!("e2e session row/fixed4 x{e2e_batch} (unbatched)"),
+        wall_s: wall_seq,
+        bytes_uplinked: 0,
+        signals_per_s: e2e_batch as f64 / wall_seq.max(1e-12),
+    });
 
     if let Some(path) = json_path {
         mpamp::bench_util::write_bench_json(&path, &records)?;

@@ -14,7 +14,7 @@ use mpamp::experiment::Sweep;
 use mpamp::metrics::Csv;
 use mpamp::rd::RdCache;
 use mpamp::se::StateEvolution;
-use mpamp::signal::{Instance, ProblemDims};
+use mpamp::signal::{Batch, ProblemDims};
 use mpamp::util::rng::Rng;
 use mpamp::SessionBuilder;
 
@@ -60,20 +60,21 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
 
         // Shared instance per ε so BT and DP see identical data.
         let mut rng = Rng::new(cfg.seed);
-        let inst = Arc::new(Instance::generate(
+        let inst = Arc::new(Batch::generate(
             cfg.prior,
             ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
             &mut rng,
+            1,
         )?);
         sweep.add(
             format!("bt/{eps}"),
             SessionBuilder::paper_default(eps)
                 .backtrack(1.02, 6.0)
-                .instance(inst.clone()),
+                .signal_batch(inst.clone()),
         );
         sweep.add(
             format!("dp/{eps}"),
-            SessionBuilder::paper_default(eps).dp(None, 0.1).instance(inst),
+            SessionBuilder::paper_default(eps).dp(None, 0.1).signal_batch(inst),
         );
     }
 

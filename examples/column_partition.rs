@@ -14,7 +14,7 @@
 use std::sync::Arc;
 
 use mpamp::observe::{StopSet, TablePrinter};
-use mpamp::signal::{Instance, ProblemDims};
+use mpamp::signal::{Batch, ProblemDims};
 use mpamp::util::rng::Rng;
 use mpamp::SessionBuilder;
 
@@ -28,22 +28,23 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .fixed_rate(4.0);
     let cfg = base.clone().config()?;
     let mut rng = Rng::new(cfg.seed);
-    let inst = Arc::new(Instance::generate(
+    let inst = Arc::new(Batch::generate(
         cfg.prior,
         ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
         &mut rng,
+        1,
     )?);
 
     println!("=== row-partitioned MP-AMP (workers uplink f^p, length N) ===");
     let row = base
         .clone()
-        .instance(inst.clone())
+        .signal_batch(inst.clone())
         .build()?
         .run_observed(&mut TablePrinter::new(), &StopSet::none())?;
 
     println!("\n=== column-partitioned C-MP-AMP (workers uplink u^p, length M) ===");
     let col = base
-        .instance(inst)
+        .signal_batch(inst)
         .column_partitioned()
         .build()?
         .run_observed(&mut TablePrinter::new(), &StopSet::none())?;

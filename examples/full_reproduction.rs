@@ -25,7 +25,7 @@ use mpamp::engine::RustEngine;
 use mpamp::experiment::Sweep;
 use mpamp::metrics::Csv;
 use mpamp::se::StateEvolution;
-use mpamp::signal::{Instance, ProblemDims};
+use mpamp::signal::{Batch, ProblemDims};
 use mpamp::util::rng::Rng;
 use mpamp::SessionBuilder;
 
@@ -54,17 +54,21 @@ fn run_test_small_preset(reference: &str) -> Result<(), Box<dyn std::error::Erro
     let eps = 0.05;
     let cfg = SessionBuilder::test_small(eps).config()?;
     let mut rng = Rng::new(cfg.seed);
-    let inst = Arc::new(Instance::generate(
+    let batch = Arc::new(Batch::generate(
         cfg.prior,
         ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
         &mut rng,
+        1,
     )?);
+    // One extraction (clones A once) for the centralized baseline; the MP
+    // sessions below share the batch itself with no copy.
+    let inst = batch.instance(0);
     let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
     let engine = RustEngine::new(cfg.prior, cfg.threads);
     let cent = run_centralized(&inst, &se, &engine, cfg.iters)?;
 
     let mut sweep = Sweep::new();
-    let base = SessionBuilder::test_small(eps).instance(inst);
+    let base = SessionBuilder::test_small(eps).signal_batch(batch);
     sweep.add("uncompressed", base.clone().uncompressed());
     sweep.add("bt", base.clone().backtrack(1.05, 6.0));
     sweep.add("column_fixed5", base.column_partitioned().fixed_rate(5.0));
@@ -153,11 +157,15 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             cfg.n, cfg.m, cfg.p, cfg.iters
         );
         let mut rng = Rng::new(cfg.seed);
-        let inst = Arc::new(Instance::generate(
+        let batch = Arc::new(Batch::generate(
             cfg.prior,
             ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
             &mut rng,
+            1,
         )?);
+        // One extraction (clones A once) for the centralized baseline; the
+        // MP sessions below share the batch itself with no copy.
+        let inst = batch.instance(0);
         let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
 
         // 1. Centralized baseline (inline — not an MP session).
@@ -174,7 +182,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         // 2–4. The three MP schemes on the same instance.
         let base = SessionBuilder::paper_default(eps)
             .engine(engine)
-            .instance(inst);
+            .signal_batch(batch);
         sweep.add(format!("uncompressed/{eps}"), base.clone().uncompressed());
         sweep.add(format!("bt/{eps}"), base.clone().backtrack(1.02, 6.0));
         sweep.add(format!("dp/{eps}"), base.dp(None, 0.1));

@@ -2,7 +2,7 @@
 //! MP-AMP schemes are compared against. Runs on any [`ComputeEngine`] by
 //! treating the whole problem as a single worker with `P = 1`.
 
-use crate::engine::{ComputeEngine, WorkerData};
+use crate::engine::ComputeEngine;
 use crate::error::{Error, Result};
 use crate::metrics::IterRecord;
 use crate::se::StateEvolution;
@@ -41,14 +41,13 @@ pub fn run_centralized(
     }
     let n = inst.dims.n;
     let m = inst.dims.m as f64;
-    let data = WorkerData { a: inst.a.clone(), y: inst.y.clone() };
     let mut x = vec![0f32; n];
     let mut z_prev = vec![0f32; inst.dims.m];
     let mut coef = 0.0f32;
     let mut iters = Vec::with_capacity(t_iters);
     for t in 0..t_iters {
         let t0 = std::time::Instant::now();
-        let lc = engine.lc_step(&data, &x, &z_prev, coef, 1)?;
+        let lc = engine.lc_step(&inst.a, &inst.y, &x, &z_prev, coef, 1)?;
         z_prev = lc.z;
         let sigma_d2_hat = lc.z_norm2 / m;
         let gc = engine.gc_step(&lc.f_partial, sigma_d2_hat)?;

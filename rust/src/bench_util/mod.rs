@@ -191,8 +191,9 @@ pub fn section(title: &str) {
 }
 
 /// One machine-readable bench record for the CI perf trajectory
-/// (`BENCH_pr.json`): wall seconds plus the bytes the benchmarked run
-/// uplinked (0 for pure-compute microbenches).
+/// (`BENCH_pr.json`): wall seconds, the bytes the benchmarked run
+/// uplinked (0 for pure-compute microbenches), and the aggregate
+/// signal-instance throughput (0 when not a session run).
 #[derive(Debug, Clone, PartialEq)]
 pub struct BenchRecord {
     /// Record label.
@@ -201,21 +202,25 @@ pub struct BenchRecord {
     pub wall_s: f64,
     /// Uplink bytes moved by the benchmarked run (0 if not applicable).
     pub bytes_uplinked: u64,
+    /// Signal instances recovered per second (0 if not applicable).
+    pub signals_per_s: f64,
 }
 
 impl BenchRecord {
-    /// Record from microbench stats (no uplink traffic).
+    /// Record from microbench stats (no uplink traffic, no signals).
     pub fn from_stats(s: &BenchStats) -> Self {
         BenchRecord {
             name: s.name.clone(),
             wall_s: s.median.as_secs_f64(),
             bytes_uplinked: 0,
+            signals_per_s: 0.0,
         }
     }
 }
 
-/// Write records as a JSON array of `{name, wall_s, bytes_uplinked}`
-/// objects — the schema CI's `bench-smoke` job uploads per PR.
+/// Write records as a JSON array of
+/// `{name, wall_s, bytes_uplinked, signals_per_s}` objects — the schema
+/// CI's `bench-smoke` job uploads per PR.
 pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
     use crate::metrics::Json;
     let arr = Json::Arr(
@@ -226,6 +231,7 @@ pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<
                     .set("name", Json::Str(r.name.clone()))
                     .set("wall_s", Json::Num(r.wall_s))
                     .set("bytes_uplinked", Json::Num(r.bytes_uplinked as f64))
+                    .set("signals_per_s", Json::Num(r.signals_per_s))
             })
             .collect(),
     );
@@ -275,8 +281,18 @@ mod tests {
     #[test]
     fn bench_json_records_roundtrip_schema() {
         let records = vec![
-            BenchRecord { name: "lc step".into(), wall_s: 0.0125, bytes_uplinked: 0 },
-            BenchRecord { name: "e2e row".into(), wall_s: 1.5, bytes_uplinked: 4096 },
+            BenchRecord {
+                name: "lc step".into(),
+                wall_s: 0.0125,
+                bytes_uplinked: 0,
+                signals_per_s: 0.0,
+            },
+            BenchRecord {
+                name: "e2e row".into(),
+                wall_s: 1.5,
+                bytes_uplinked: 4096,
+                signals_per_s: 5.25,
+            },
         ];
         let dir = std::env::temp_dir().join("mpamp_bench_json_test");
         let path = dir.join("BENCH_pr.json");
@@ -286,6 +302,7 @@ mod tests {
         assert!(text.contains("\"name\":\"lc step\""), "{text}");
         assert!(text.contains("\"wall_s\":0.0125"), "{text}");
         assert!(text.contains("\"bytes_uplinked\":4096"), "{text}");
+        assert!(text.contains("\"signals_per_s\":5.25"), "{text}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -121,6 +121,9 @@ COMMON OPTIONS:
     --partitioning <scheme>  'row' (default) or 'column' (C-MP-AMP:
                              workers own column blocks and uplink
                              quantized partial residuals; P must divide N)
+    --batch <B>              Carry B signal instances through the session
+                             together (shared sensing matrix, blocked
+                             matmuls, one protocol round trip per batch)
     --out <file>             Write a CSV/JSON report to <file>
     --quiet                  Suppress the per-iteration table
 
@@ -137,6 +140,7 @@ EXAMPLES:
     mpamp run --config configs/paper_eps005.toml --schedule.kind dp
     mpamp run --prior.eps 0.05 --target-sdr 18 --max-bits 40
     mpamp run --partitioning column --p 40 --schedule.kind fixed
+    mpamp run --batch 8 --schedule.kind fixed --schedule.bits 4
     mpamp dp --prior.eps 0.03 --schedule.total_rate 16
 "
 }

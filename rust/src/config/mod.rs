@@ -125,6 +125,10 @@ pub struct RunConfig {
     pub m: usize,
     /// Number of worker processors P.
     pub p: usize,
+    /// Signal instances carried through the session together (B ≥ 1).
+    /// All B signals share one sensing matrix and every protocol round
+    /// processes the whole batch in one blocked pass over `A`.
+    pub batch: usize,
     /// How the sensing matrix is sharded across the workers.
     pub partitioning: Partitioning,
     /// Source prior.
@@ -170,6 +174,7 @@ impl RunConfig {
             n: 10_000,
             m: 3_000,
             p: 30,
+            batch: 1,
             partitioning: Partitioning::Row,
             prior: BernoulliGauss::standard(eps),
             snr_db: 20.0,
@@ -211,6 +216,16 @@ impl RunConfig {
         self.prior.validate()?;
         if self.n == 0 || self.m == 0 {
             return Err(Error::Config("N and M must be positive".into()));
+        }
+        if self.batch == 0 {
+            return Err(Error::Config("batch must be ≥ 1".into()));
+        }
+        if self.batch > 1 && self.engine == EngineKind::Xla {
+            return Err(Error::Config(
+                "batch > 1 requires engine = \"rust\" (the AOT artifacts are \
+                 lowered for single-signal kernels)"
+                    .into(),
+            ));
         }
         match self.partitioning {
             Partitioning::Row => {
@@ -297,6 +312,9 @@ impl RunConfig {
         }
         if let Some(v) = t.get("p") {
             c.p = req_usize(v, "p")?;
+        }
+        if let Some(v) = t.get("batch") {
+            c.batch = req_usize(v, "batch")?;
         }
         if let Some(v) = t.get("partitioning") {
             c.partitioning = match req_str(v, "partitioning")? {
@@ -433,6 +451,7 @@ impl RunConfig {
         t.insert("n".into(), Value::Int(self.n as i64));
         t.insert("m".into(), Value::Int(self.m as i64));
         t.insert("p".into(), Value::Int(self.p as i64));
+        t.insert("batch".into(), Value::Int(self.batch as i64));
         t.insert("partitioning".into(), Value::Str(self.partitioning.as_str().into()));
         t.insert("prior.eps".into(), Value::Float(self.prior.eps));
         t.insert("prior.mu_s".into(), Value::Float(self.prior.mu_s));
@@ -492,6 +511,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "n",
     "m",
     "p",
+    "batch",
     "partitioning",
     "prior.eps",
     "prior.mu_s",
@@ -631,6 +651,27 @@ mod tests {
         c.validate().unwrap();
         c.partitioning = Partitioning::Row;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn batch_knob_parses_validates_and_roundtrips() {
+        let t = toml::parse("batch = 8").unwrap();
+        let c = RunConfig::from_table(&t).unwrap();
+        assert_eq!(c.batch, 8);
+        let mut enc = Table::new();
+        c.encode_into(&mut enc);
+        assert_eq!(RunConfig::from_table(&enc).unwrap().batch, 8);
+        // batch = 0 is rejected.
+        let t = toml::parse("batch = 0").unwrap();
+        assert!(RunConfig::from_table(&t).is_err());
+        // Batched runs need the rust engine (no batched AOT kernels).
+        let mut c = RunConfig::paper_default(0.05);
+        c.batch = 4;
+        c.engine = EngineKind::Xla;
+        let err = c.validate().unwrap_err().to_string();
+        assert!(err.contains("rust"), "{err}");
+        c.engine = EngineKind::Rust;
+        c.validate().unwrap();
     }
 
     #[test]

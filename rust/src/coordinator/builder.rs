@@ -23,7 +23,7 @@ use crate::config::{
 };
 use crate::coordinator::session::Session;
 use crate::error::Result;
-use crate::signal::{BernoulliGauss, Instance};
+use crate::signal::{Batch, BernoulliGauss, Instance};
 
 /// Builder for [`Session`]s. Setters never fail; all invariants are
 /// checked together by [`build`](Self::build) / [`config`](Self::config).
@@ -31,23 +31,32 @@ use crate::signal::{BernoulliGauss, Instance};
 pub struct SessionBuilder {
     cfg: RunConfig,
     instance: Option<Arc<Instance>>,
+    batch_data: Option<Arc<Batch>>,
 }
 
 impl SessionBuilder {
     /// Start from the paper's evaluation setup for sparsity ε
     /// (N=10 000, M=3 000, P=30, SNR=20 dB, BT schedule, paper's T).
     pub fn paper_default(eps: f64) -> Self {
-        SessionBuilder { cfg: RunConfig::paper_default(eps), instance: None }
+        SessionBuilder {
+            cfg: RunConfig::paper_default(eps),
+            instance: None,
+            batch_data: None,
+        }
     }
 
     /// Start from the fast-test preset (N=600, M=180, P=6, T=6).
     pub fn test_small(eps: f64) -> Self {
-        SessionBuilder { cfg: RunConfig::test_small(eps), instance: None }
+        SessionBuilder {
+            cfg: RunConfig::test_small(eps),
+            instance: None,
+            batch_data: None,
+        }
     }
 
     /// Start from an existing config (e.g. loaded from a file / CLI).
     pub fn from_config(cfg: RunConfig) -> Self {
-        SessionBuilder { cfg, instance: None }
+        SessionBuilder { cfg, instance: None, batch_data: None }
     }
 
     // ---- problem shape ----
@@ -76,6 +85,14 @@ impl SessionBuilder {
     /// for column partitioning — checked at build).
     pub fn workers(mut self, p: usize) -> Self {
         self.cfg.p = p;
+        self
+    }
+
+    /// Number of signal instances `B ≥ 1` the session carries end-to-end.
+    /// All `B` signals share one sensing matrix; every protocol round and
+    /// every pass over `A` is amortized across the batch.
+    pub fn batch(mut self, batch: usize) -> Self {
+        self.cfg.batch = batch;
         self
     }
 
@@ -198,11 +215,22 @@ impl SessionBuilder {
     // ---- data ----
 
     /// Run on this problem instance instead of generating one from the
-    /// seed. Benches share one instance across schedules — pass an
-    /// `Arc<Instance>` (clone the `Arc`, not the instance) so the
-    /// sensing matrix is not deep-copied per trial.
+    /// seed. A uniquely-owned instance is moved in without copying; a
+    /// *shared* `Arc<Instance>` is deep-cloned at build — callers that
+    /// reuse one problem across sessions should share an `Arc<Batch>`
+    /// via [`signal_batch`](Self::signal_batch), which shares the
+    /// sensing matrix with no copy.
     pub fn instance(mut self, instance: impl Into<Arc<Instance>>) -> Self {
         self.instance = Some(instance.into());
+        self
+    }
+
+    /// Run on this signal batch instead of generating one from the seed
+    /// (its size must match the `batch` knob — checked at build). The
+    /// batch is shared by `Arc`, so reusing one across trials never
+    /// copies the sensing matrix.
+    pub fn signal_batch(mut self, batch: impl Into<Arc<Batch>>) -> Self {
+        self.batch_data = Some(batch.into());
         self
     }
 
@@ -217,9 +245,15 @@ impl SessionBuilder {
 
     /// Validate everything and construct the [`Session`].
     pub fn build(self) -> Result<Session> {
-        match self.instance {
-            Some(inst) => Session::with_instance(self.cfg, inst),
-            None => Session::new(self.cfg),
+        match (self.batch_data, self.instance) {
+            (Some(_), Some(_)) => Err(crate::error::Error::Config(
+                "both instance() and signal_batch() were set; supply exactly \
+                 one data source"
+                    .into(),
+            )),
+            (Some(batch), None) => Session::with_batch(self.cfg, batch),
+            (None, Some(inst)) => Session::with_instance(self.cfg, inst),
+            (None, None) => Session::new(self.cfg),
         }
     }
 }
@@ -291,6 +325,51 @@ mod tests {
             .workers(7)
             .config();
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn batch_knob_composes_and_validates() {
+        let cfg = SessionBuilder::test_small(0.05).batch(8).config().unwrap();
+        assert_eq!(cfg.batch, 8);
+        // batch = 0 fails at config time, not at run time.
+        assert!(SessionBuilder::test_small(0.05).batch(0).config().is_err());
+        // A supplied batch must match the knob.
+        let mut rng = crate::util::rng::Rng::new(3);
+        let cfg = SessionBuilder::test_small(0.05).batch(2).config().unwrap();
+        let data = crate::signal::Batch::generate(
+            cfg.prior,
+            crate::signal::ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+            &mut rng,
+            3,
+        )
+        .unwrap();
+        let err = SessionBuilder::test_small(0.05)
+            .batch(2)
+            .signal_batch(data)
+            .build();
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn conflicting_data_sources_rejected() {
+        // Setting both instance() and signal_batch() must fail loudly
+        // instead of silently running on one of them.
+        let cfg = SessionBuilder::test_small(0.05).config().unwrap();
+        let mut rng = crate::util::rng::Rng::new(5);
+        let dims = crate::signal::ProblemDims {
+            n: cfg.n,
+            m: cfg.m,
+            sigma_e2: cfg.sigma_e2(),
+        };
+        let inst =
+            crate::signal::Instance::generate(cfg.prior, dims, &mut rng).unwrap();
+        let data = crate::signal::Batch::generate(cfg.prior, dims, &mut rng, 1).unwrap();
+        let err = SessionBuilder::test_small(0.05)
+            .instance(inst)
+            .signal_batch(data)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("exactly"), "{err}");
     }
 
     #[test]

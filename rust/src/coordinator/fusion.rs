@@ -1,44 +1,28 @@
-//! The fusion center: drives the iteration protocol, aggregates worker
-//! uplinks, designs the per-iteration quantizer from the rate controller's
-//! directive, denoises (row mode) or updates the combined residual
-//! (column mode), and broadcasts the next state.
+//! Fusion-center entry points: quantizer-spec design for both scenarios
+//! and the [`ProtocolState`] dispatcher the stepwise
+//! [`Session`](crate::coordinator::session::Session) driver advances.
 //!
-//! The per-iteration logic lives in [`FusionState::step`] (row-wise
-//! MP-AMP) and [`ColumnFusionState::step`] (column-wise C-MP-AMP) —
-//! resumable states that the stepwise
-//! [`crate::coordinator::session::Session`] driver advances one iteration
-//! at a time through the [`ProtocolState`] dispatcher. [`run_fusion`] is
-//! the monolithic row-mode wrapper (a plain loop over `step` + the `Done`
-//! barrier) kept for callers that want the whole protocol in one call;
-//! both paths execute the identical per-iteration code, so their numerics
-//! agree bit-for-bit.
-
-use std::time::Instant;
+//! The per-iteration round logic lives **once**, in the scenario-generic
+//! [`ProtocolCore`]; this module only keeps the spec-design helpers
+//! (shared with workers, benches, and examples) and the thin enum that
+//! picks the monomorphized core for the configured
+//! [`Partitioning`](crate::config::Partitioning).
 
 use crate::alloc::schedule::{Directive, RateController};
-use crate::config::{CodecKind, RunConfig};
-use crate::coordinator::message::{FPayload, Message, QuantSpec};
+use crate::config::{Partitioning, RunConfig};
+use crate::coordinator::message::QuantSpec;
+use crate::coordinator::scenario::{Column, ProtocolCore, Row};
 use crate::coordinator::transport::Endpoint;
-use crate::coordinator::worker::{coder_for_spec, column_coder_for_spec};
 use crate::engine::ComputeEngine;
-use crate::error::{Error, Result};
+use crate::error::Result;
 use crate::metrics::IterRecord;
-use crate::quant::{EncodedBlock, UniformQuantizer};
+use crate::quant::UniformQuantizer;
 use crate::rd::RdCache;
 use crate::se::prior::BgChannel;
 use crate::se::StateEvolution;
-use crate::signal::Instance;
+use crate::signal::Batch;
 
-/// Everything the fusion loop produces.
-#[derive(Debug, Clone)]
-pub struct FusionOutput {
-    /// Per-iteration records.
-    pub iters: Vec<IterRecord>,
-    /// Final estimate `x_T`.
-    pub final_x: Vec<f32>,
-}
-
-/// Design a [`QuantSpec`] from a directive, given the current σ̂².
+/// Design a row-mode [`QuantSpec`] from a directive, given the current σ̂².
 pub fn spec_for_directive(
     directive: &Directive,
     se: &StateEvolution,
@@ -104,427 +88,29 @@ pub fn column_spec_for_directive(
     })
 }
 
-/// Resumable fusion-center iteration state: the current estimate `x_t`,
-/// the Onsager coefficient, and the iteration counter. One [`step`]
-/// executes exactly one protocol round (broadcast → σ̂² → quantizer design
-/// → fuse → denoise) against live worker endpoints.
-///
-/// [`step`]: FusionState::step
-#[derive(Debug, Clone)]
-pub struct FusionState {
-    x: Vec<f32>,
-    coef: f32,
-    t: usize,
-}
-
-impl FusionState {
-    /// Fresh state at `t = 0` with the all-zero estimate.
-    pub fn new(n: usize) -> Self {
-        FusionState { x: vec![0f32; n], coef: 0.0, t: 0 }
-    }
-
-    /// Iterations completed so far.
-    pub fn t(&self) -> usize {
-        self.t
-    }
-
-    /// The current estimate `x_t`.
-    pub fn x(&self) -> &[f32] {
-        &self.x
-    }
-
-    /// Consume the state, yielding the final estimate.
-    pub fn into_x(self) -> Vec<f32> {
-        self.x
-    }
-
-    /// Run one protocol iteration over the worker endpoints. `eval`
-    /// (ground truth) fills the SDR fields of the record — it is
-    /// measurement-only and never feeds back into the algorithm.
-    #[allow(clippy::too_many_arguments)]
-    pub fn step(
-        &mut self,
-        cfg: &RunConfig,
-        se: &StateEvolution,
-        controller: &RateController,
-        cache: Option<&RdCache>,
-        engine: &dyn ComputeEngine,
-        endpoints: &mut [Endpoint],
-        eval: Option<&Instance>,
-    ) -> Result<IterRecord> {
-        let n = cfg.n;
-        let p = cfg.p;
-        let m = cfg.m as f64;
-        let t = self.t;
-        debug_assert_eq!(endpoints.len(), p);
-        let t0 = Instant::now();
-        // 1. Broadcast the step command.
-        let step = Message::StepCmd { t: t as u32, coef: self.coef, x: self.x.clone() };
-        for ep in endpoints.iter_mut() {
-            ep.send(&step)?;
-        }
-        // 2. Collect ‖z‖² scalars → σ̂²_{t,D}.
-        let mut znorm_sum = 0.0f64;
-        for (widx, ep) in endpoints.iter_mut().enumerate() {
-            match ep.recv()? {
-                Message::ZNorm { t: rt, worker, z_norm2 } => {
-                    if rt as usize != t || worker as usize != widx {
-                        return Err(Error::Protocol(format!(
-                            "fusion: bad ZNorm (t={rt}, worker={worker}) expected \
-                             (t={t}, worker={widx})"
-                        )));
-                    }
-                    znorm_sum += z_norm2;
-                }
-                other => {
-                    return Err(Error::Protocol(format!(
-                        "fusion: expected ZNorm, got {other:?}"
-                    )))
-                }
-            }
-        }
-        let sigma_d2_hat = znorm_sum / m;
-        // 3. Resolve the directive and broadcast the quantizer design.
-        let directive =
-            controller.directive(t, sigma_d2_hat, se, p, cfg.iters, cache);
-        let spec = spec_for_directive(&directive, se, p, sigma_d2_hat, 8.0)?;
-        let quant = Message::QuantCmd { t: t as u32, spec };
-        for ep in endpoints.iter_mut() {
-            ep.send(&quant)?;
-        }
-        // The decoder matching the workers' encoder.
-        let coder = coder_for_spec(&spec, &cfg.prior, p, cfg.codec)?;
-        let sigma_q2 = match &spec {
-            QuantSpec::Ecsq { delta, .. } => delta * delta / 12.0,
-            QuantSpec::Raw => 0.0,
-            // Zero-rate: reconstruction is 0, per-worker error = Var(F^p).
-            QuantSpec::Skip => {
-                let (wch, ws2) = se.channel.worker_channel(sigma_d2_hat, p);
-                wch.var_f(ws2)
-            }
-        };
-        // 4. Collect and fuse the f vectors.
-        let mut f_sum = vec![0f32; n];
-        let mut wire_bits = 0.0f64;
-        let mut rate_alloc = 0.0f64;
-        for (widx, ep) in endpoints.iter_mut().enumerate() {
-            let msg = ep.recv()?;
-            wire_bits += msg.f_payload_bits();
-            match msg {
-                Message::FVector { t: rt, worker, payload } => {
-                    if rt as usize != t || worker as usize != widx {
-                        return Err(Error::Protocol(format!(
-                            "fusion: bad FVector (t={rt}, worker={worker})"
-                        )));
-                    }
-                    match payload {
-                        FPayload::Raw(v) => {
-                            if v.len() != n {
-                                return Err(Error::Protocol(format!(
-                                    "fusion: raw f length {} != N {n}",
-                                    v.len()
-                                )));
-                            }
-                            // Analytic codec: account model entropy instead
-                            // of the raw float bits that moved in-process.
-                            if let (CodecKind::Analytic, Some(c)) = (cfg.codec, &coder) {
-                                wire_bits += c.entropy_bits * n as f64 - 32.0 * n as f64;
-                            }
-                            crate::linalg::axpy(1.0, &v, &mut f_sum);
-                        }
-                        FPayload::Coded { n: n_syms, bytes } => {
-                            let c = coder.as_ref().ok_or_else(|| {
-                                Error::Protocol("coded payload without ECSQ spec".into())
-                            })?;
-                            if n_syms as usize != n {
-                                return Err(Error::Protocol(format!(
-                                    "fusion: coded f length {n_syms} != N {n}"
-                                )));
-                            }
-                            let block = EncodedBlock {
-                                bytes,
-                                wire_bits: 0.0,
-                                n: n_syms as usize,
-                            };
-                            let mut v = vec![0f32; n];
-                            c.decode(&block, None, &mut v)?;
-                            crate::linalg::axpy(1.0, &v, &mut f_sum);
-                        }
-                        FPayload::Skipped => {}
-                    }
-                }
-                other => {
-                    return Err(Error::Protocol(format!(
-                        "fusion: expected FVector, got {other:?}"
-                    )))
-                }
-            }
-        }
-        // Allocation accounting (analytic rate for the record).
-        rate_alloc += match &directive {
-            Directive::Raw => 32.0,
-            Directive::Skip => 0.0,
-            Directive::QuantizeRate(r) => *r,
-            Directive::QuantizeMse(_) => coder.as_ref().map(|c| c.entropy_bits).unwrap_or(0.0),
-        };
-        // 5. Global computation: denoise at the quantization-aware level.
-        let sigma_eff2 = sigma_d2_hat + p as f64 * sigma_q2;
-        let gc = engine.gc_step(&f_sum, sigma_eff2)?;
-        self.x = gc.x_next;
-        self.coef = (gc.eta_prime_mean / se.kappa) as f32;
-        self.t = t + 1;
-        // 6. Record.
-        let predicted_next = se.step_quantized(sigma_d2_hat, p as f64 * sigma_q2);
-        Ok(IterRecord {
-            t,
-            sdr_db: eval.map(|inst| inst.sdr_db(&self.x)).unwrap_or(f64::NAN),
-            sdr_pred_db: se.sdr_db(predicted_next),
-            rate_alloc,
-            rate_wire: wire_bits / (p as f64 * n as f64),
-            sigma_q2,
-            sigma_d2_hat,
-            wall_s: t0.elapsed().as_secs_f64(),
-        })
-    }
-
-    /// Release the workers: broadcast `Done` on every endpoint.
-    pub fn finish(endpoints: &mut [Endpoint]) -> Result<()> {
-        for ep in endpoints.iter_mut() {
-            ep.send(&Message::Done)?;
-        }
-        Ok(())
-    }
-}
-
-/// Resumable C-MP-AMP fusion state (column partitioning): the
-/// measurements `y`, the combined residual `z_t`, the assembled estimate
-/// (from the workers' eval shards), and the iteration counter. One
-/// [`step`](ColumnFusionState::step) executes exactly one protocol round
-/// (broadcast residual → scalars → quantizer design → aggregate partial
-/// residuals → Onsager-corrected residual update).
-///
-/// The denoiser runs *at the workers* in this partitioning — the fusion
-/// center only aggregates, so its per-iteration work is `O(M)`.
-#[derive(Debug, Clone)]
-pub struct ColumnFusionState {
-    y: Vec<f32>,
-    z: Vec<f32>,
-    x: Vec<f32>,
-    t: usize,
-}
-
-impl ColumnFusionState {
-    /// Fresh state at `t = 0`: the residual starts at `y` (the estimate is
-    /// all-zero), matching centralized AMP's first iteration exactly.
-    pub fn new(y: Vec<f32>, n: usize) -> Self {
-        ColumnFusionState { z: y.clone(), y, x: vec![0f32; n], t: 0 }
-    }
-
-    /// Iterations completed so far.
-    pub fn t(&self) -> usize {
-        self.t
-    }
-
-    /// The assembled estimate `x_t` (from the eval shards).
-    pub fn x(&self) -> &[f32] {
-        &self.x
-    }
-
-    /// Consume the state, yielding the final estimate.
-    pub fn into_x(self) -> Vec<f32> {
-        self.x
-    }
-
-    /// Run one C-MP-AMP protocol iteration over the worker endpoints.
-    /// `eval` (ground truth) fills the SDR fields of the record — it is
-    /// measurement-only and never feeds back into the algorithm.
-    pub fn step(
-        &mut self,
-        cfg: &RunConfig,
-        se: &StateEvolution,
-        controller: &RateController,
-        cache: Option<&RdCache>,
-        endpoints: &mut [Endpoint],
-        eval: Option<&Instance>,
-    ) -> Result<IterRecord> {
-        let p = cfg.p;
-        let m_rows = cfg.m;
-        let m = cfg.m as f64;
-        let np = cfg.n / p;
-        let t = self.t;
-        debug_assert_eq!(endpoints.len(), p);
-        let t0 = Instant::now();
-        // 1. Broadcast the residual + the denoiser's effective noise level
-        //    (the residual variance already carries the quantization noise
-        //    of previous iterations — see `StateEvolution::column_residual_step`).
-        let sigma_d2_hat = crate::linalg::norm2_sq(&self.z) / m;
-        let step = Message::ColStep {
-            t: t as u32,
-            sigma_eff2: sigma_d2_hat,
-            z: self.z.clone(),
-        };
-        for ep in endpoints.iter_mut() {
-            ep.send(&step)?;
-        }
-        // 2. Collect the pre-uplink scalars + eval shards.
-        let mut unorm_sum = 0.0f64;
-        let mut deriv_mean_sum = 0.0f64;
-        for (widx, ep) in endpoints.iter_mut().enumerate() {
-            match ep.recv()? {
-                Message::ColScalars { t: rt, worker, u_norm2, eta_prime_mean, x_shard } => {
-                    if rt as usize != t || worker as usize != widx {
-                        return Err(Error::Protocol(format!(
-                            "fusion: bad ColScalars (t={rt}, worker={worker}) expected \
-                             (t={t}, worker={widx})"
-                        )));
-                    }
-                    if x_shard.len() != np {
-                        return Err(Error::Protocol(format!(
-                            "fusion: x shard length {} != N/P {np}",
-                            x_shard.len()
-                        )));
-                    }
-                    unorm_sum += u_norm2;
-                    deriv_mean_sum += eta_prime_mean;
-                    self.x[widx * np..(widx + 1) * np].copy_from_slice(&x_shard);
-                }
-                other => {
-                    return Err(Error::Protocol(format!(
-                        "fusion: expected ColScalars, got {other:?}"
-                    )))
-                }
-            }
-        }
-        // Empirical message variance v̂ = Σ‖u^p‖²/(P·M) — the quantizer's
-        // model channel (the same CLT-Gaussian for every worker).
-        let v_hat = unorm_sum / (p as f64 * m);
-        // 3. Resolve the directive on the residual variance (the SE state
-        //    variable the allocators already understand) and design the
-        //    quantizer on the message variance. BT/DP pick their σ_Q²
-        //    targets under the row-mode SE — a deliberate approximation
-        //    that carries over because the fused quantization noise is
-        //    P·σ_Q² at the denoiser input in *both* scenarios (here via
-        //    the next residual, see `StateEvolution::column_residual_step`);
-        //    only the allocators' internal rate accounting keeps the row
-        //    message model.
-        let directive =
-            controller.directive(t, sigma_d2_hat, se, p, cfg.iters, cache);
-        let spec = column_spec_for_directive(&directive, v_hat, 8.0)?;
-        let quant = Message::QuantCmd { t: t as u32, spec };
-        for ep in endpoints.iter_mut() {
-            ep.send(&quant)?;
-        }
-        let coder = column_coder_for_spec(&spec, cfg.codec)?;
-        let sigma_q2 = match &spec {
-            QuantSpec::Ecsq { delta, .. } => delta * delta / 12.0,
-            QuantSpec::Raw => 0.0,
-            // Zero-rate: reconstruction is 0, per-worker error = Var(U^p).
-            QuantSpec::Skip => v_hat,
-        };
-        // 4. Aggregate the quantized partial residuals.
-        let mut u_sum = vec![0f32; m_rows];
-        let mut wire_bits = 0.0f64;
-        let mut rate_alloc = 0.0f64;
-        for (widx, ep) in endpoints.iter_mut().enumerate() {
-            let msg = ep.recv()?;
-            wire_bits += msg.f_payload_bits();
-            match msg {
-                Message::FVector { t: rt, worker, payload } => {
-                    if rt as usize != t || worker as usize != widx {
-                        return Err(Error::Protocol(format!(
-                            "fusion: bad FVector (t={rt}, worker={worker})"
-                        )));
-                    }
-                    match payload {
-                        FPayload::Raw(v) => {
-                            if v.len() != m_rows {
-                                return Err(Error::Protocol(format!(
-                                    "fusion: raw u length {} != M {m_rows}",
-                                    v.len()
-                                )));
-                            }
-                            // Analytic codec: account model entropy instead
-                            // of the raw float bits that moved in-process.
-                            if let (CodecKind::Analytic, Some(c)) = (cfg.codec, &coder) {
-                                wire_bits += c.entropy_bits * m - 32.0 * m;
-                            }
-                            crate::linalg::axpy(1.0, &v, &mut u_sum);
-                        }
-                        FPayload::Coded { n: n_syms, bytes } => {
-                            let c = coder.as_ref().ok_or_else(|| {
-                                Error::Protocol("coded payload without ECSQ spec".into())
-                            })?;
-                            if n_syms as usize != m_rows {
-                                return Err(Error::Protocol(format!(
-                                    "fusion: coded u length {n_syms} != M {m_rows}"
-                                )));
-                            }
-                            let block = EncodedBlock {
-                                bytes,
-                                wire_bits: 0.0,
-                                n: n_syms as usize,
-                            };
-                            let mut v = vec![0f32; m_rows];
-                            c.decode(&block, None, &mut v)?;
-                            crate::linalg::axpy(1.0, &v, &mut u_sum);
-                        }
-                        FPayload::Skipped => {}
-                    }
-                }
-                other => {
-                    return Err(Error::Protocol(format!(
-                        "fusion: expected FVector, got {other:?}"
-                    )))
-                }
-            }
-        }
-        // Allocation accounting (analytic rate for the record).
-        rate_alloc += match &directive {
-            Directive::Raw => 32.0,
-            Directive::Skip => 0.0,
-            Directive::QuantizeRate(r) => *r,
-            Directive::QuantizeMse(_) => {
-                coder.as_ref().map(|c| c.entropy_bits).unwrap_or(0.0)
-            }
-        };
-        // 5. Onsager-corrected residual update with the aggregated η′ mean
-        //    (equal-size blocks ⇒ the mean of per-block means is the global
-        //    mean): z_{t+1} = y − Σ û^p + coef·z_t.
-        let coef = ((deriv_mean_sum / p as f64) / se.kappa) as f32;
-        for i in 0..m_rows {
-            self.z[i] = self.y[i] - u_sum[i] + coef * self.z[i];
-        }
-        self.t = t + 1;
-        // 6. Record. The estimate x_{t+1} saw the residual at σ̂², so its
-        //    predicted quality is one plain SE step from there; the new
-        //    quantization noise shows up in the *next* residual.
-        Ok(IterRecord {
-            t,
-            sdr_db: eval.map(|inst| inst.sdr_db(&self.x)).unwrap_or(f64::NAN),
-            sdr_pred_db: se.sdr_db(se.step(sigma_d2_hat)),
-            rate_alloc,
-            rate_wire: wire_bits / (p as f64 * m),
-            sigma_q2,
-            sigma_d2_hat,
-            wall_s: t0.elapsed().as_secs_f64(),
-        })
-    }
-}
-
-/// The partitioning-dispatched fusion state a [`Session`] drives — one
-/// protocol round per [`step`](ProtocolState::step), whichever message
-/// type is on the wire.
+/// The partitioning-dispatched fusion state a [`Session`] drives — a thin
+/// enum over the monomorphized [`ProtocolCore`]s, one protocol round per
+/// [`step`](ProtocolState::step), whichever message type is on the wire.
 ///
 /// [`Session`]: crate::coordinator::session::Session
-#[derive(Debug, Clone)]
 pub enum ProtocolState {
     /// Row-wise MP-AMP (Han et al. 2016).
-    Row(FusionState),
+    Row(ProtocolCore<Row>),
     /// Column-wise C-MP-AMP (Ma, Lu & Baron 2017).
-    Column(ColumnFusionState),
+    Column(ProtocolCore<Column>),
 }
 
 impl ProtocolState {
+    /// Fresh state at `t = 0` for the configured partitioning.
+    pub fn new(batch: &Batch, cfg: &RunConfig) -> Self {
+        match cfg.partitioning {
+            Partitioning::Row => ProtocolState::Row(ProtocolCore::new(batch, cfg)),
+            Partitioning::Column => {
+                ProtocolState::Column(ProtocolCore::new(batch, cfg))
+            }
+        }
+    }
+
     /// Iterations completed so far.
     pub fn t(&self) -> usize {
         match self {
@@ -533,23 +119,23 @@ impl ProtocolState {
         }
     }
 
-    /// The current estimate `x_t`.
-    pub fn x(&self) -> &[f32] {
+    /// The current estimate of signal `sig`.
+    pub fn x(&self, sig: usize) -> &[f32] {
         match self {
-            ProtocolState::Row(s) => s.x(),
-            ProtocolState::Column(s) => s.x(),
+            ProtocolState::Row(s) => s.x(sig),
+            ProtocolState::Column(s) => s.x(sig),
         }
     }
 
-    /// Consume the state, yielding the final estimate.
-    pub fn into_x(self) -> Vec<f32> {
+    /// Consume the state, yielding the per-signal final estimates.
+    pub fn into_xs(self) -> Vec<Vec<f32>> {
         match self {
-            ProtocolState::Row(s) => s.into_x(),
-            ProtocolState::Column(s) => s.into_x(),
+            ProtocolState::Row(s) => s.into_xs(),
+            ProtocolState::Column(s) => s.into_xs(),
         }
     }
 
-    /// Run one protocol iteration over the worker endpoints.
+    /// Run one protocol round over the worker endpoints.
     #[allow(clippy::too_many_arguments)]
     pub fn step(
         &mut self,
@@ -559,43 +145,21 @@ impl ProtocolState {
         cache: Option<&RdCache>,
         engine: &dyn ComputeEngine,
         endpoints: &mut [Endpoint],
-        eval: Option<&Instance>,
+        eval: Option<&Batch>,
     ) -> Result<IterRecord> {
         match self {
             ProtocolState::Row(s) => {
                 s.step(cfg, se, controller, cache, engine, endpoints, eval)
             }
             ProtocolState::Column(s) => {
-                s.step(cfg, se, controller, cache, endpoints, eval)
+                s.step(cfg, se, controller, cache, engine, endpoints, eval)
             }
         }
     }
 }
 
-/// Run the fusion protocol for `cfg.iters` iterations over the given
-/// worker endpoints — a thin loop over [`FusionState::step`] followed by
-/// the `Done` broadcast.
-#[allow(clippy::too_many_arguments)]
-pub fn run_fusion(
-    cfg: &RunConfig,
-    se: &StateEvolution,
-    controller: &RateController,
-    cache: Option<&RdCache>,
-    engine: &dyn ComputeEngine,
-    endpoints: &mut [Endpoint],
-    eval: Option<&Instance>,
-) -> Result<FusionOutput> {
-    let mut state = FusionState::new(cfg.n);
-    let mut iters = Vec::with_capacity(cfg.iters);
-    for _ in 0..cfg.iters {
-        iters.push(state.step(cfg, se, controller, cache, engine, endpoints, eval)?);
-    }
-    FusionState::finish(endpoints)?;
-    Ok(FusionOutput { iters, final_x: state.into_x() })
-}
-
-/// Model channel for the worker uplink at the given σ̂² (re-exported for
-/// benches and examples that need the same construction).
+/// Model channel for the row-mode worker uplink at the given σ̂²
+/// (re-exported for benches and examples that need the same construction).
 pub fn worker_channel_for(
     se: &StateEvolution,
     sigma_d2_hat: f64,

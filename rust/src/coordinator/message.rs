@@ -1,15 +1,29 @@
 //! Wire format between workers and the fusion center.
 //!
-//! Binary little-endian framing (no serde in the offline crate set):
-//! one type byte, fixed header fields, then the payload. Every message
+//! Binary little-endian framing (no serde in the offline crate set): one
+//! type byte, fixed header fields, then the payload. Every message
 //! round-trips exactly (property-tested) and reports its payload bit cost
 //! for the paper's communication accounting.
-
-use byteorder::{ByteOrder, LittleEndian as LE};
+//!
+//! Since protocol version 2 every data-bearing message is **natively
+//! batched**: a session carries `B ≥ 1` signal instances, and each round
+//! trip moves all `B` per-signal vectors in one frame (column-major, one
+//! length-prefixed block per message). `B = 1` is simply a batch of one.
+//! Peers exchange [`PROTOCOL_VERSION`] in the transport hello so a
+//! mismatched peer fails fast instead of decoding garbage.
 
 use crate::error::{Error, Result};
 
-/// How workers should code `f_t^p` this iteration (broadcast by fusion).
+/// Version byte exchanged in the worker hello frame. Bump on every wire
+/// format change; peers with a different version refuse to talk.
+///
+/// * v1 — single-signal messages (PR 1–2).
+/// * v2 — batched messages (`B` signals per frame) + versioned hello.
+pub const PROTOCOL_VERSION: u8 = 2;
+
+/// How workers should code one signal's uplink vector this iteration
+/// (broadcast by fusion; one spec per batch member rides in a single
+/// [`Message::QuantCmd`]).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum QuantSpec {
     /// Send raw 32-bit floats.
@@ -24,12 +38,13 @@ pub enum QuantSpec {
         delta: f64,
         /// Largest bin index (2·k_max+1 bins).
         k_max: u32,
-        /// The σ̂²_{t,D} estimate the model pmf is built from.
+        /// The variance estimate the model pmf is built from (σ̂²_{t,D}
+        /// in row mode, the message variance v̂ in column mode).
         sigma_d2_hat: f64,
     },
 }
 
-/// The uplinked local estimate.
+/// The uplinked vector of one signal.
 #[derive(Debug, Clone, PartialEq)]
 pub enum FPayload {
     /// Raw floats (32 bits/element), or dequantized values under the
@@ -46,67 +61,71 @@ pub enum FPayload {
     Skipped,
 }
 
-/// All protocol messages.
+/// All protocol messages. Vector fields hold `B` per-signal blocks
+/// (column-major: signal `j`'s block is contiguous).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Message {
-    /// Fusion → workers: run LC for iteration `t`.
+    /// Fusion → workers (row mode): run LC for iteration `t` on all `B`
+    /// signals.
     StepCmd {
         /// Iteration index.
         t: u32,
-        /// Onsager coefficient `(1/κ)·mean(η′_{t−1})`.
-        coef: f32,
-        /// Current estimate `x_t` (raw broadcast, length N).
+        /// Per-signal Onsager coefficients `(1/κ)·mean(η′_{t−1})`.
+        coefs: Vec<f32>,
+        /// Current estimates, `B × N` column-major (raw broadcast).
         x: Vec<f32>,
     },
-    /// Worker → fusion: `‖z_t^p‖²` for the σ̂² estimate.
+    /// Worker → fusion (row mode): per-signal `‖z_t^p‖²` for the σ̂²
+    /// estimates.
     ZNorm {
         /// Iteration index.
         t: u32,
         /// Worker id.
         worker: u32,
-        /// Squared norm of the local residual.
-        z_norm2: f64,
+        /// Per-signal squared norms of the local residuals.
+        z_norm2: Vec<f64>,
     },
-    /// Fusion → workers: coding directive for `f_t^p`.
+    /// Fusion → workers: per-signal coding directives for this round's
+    /// uplink (one quantizer-design round trip covers the whole batch).
     QuantCmd {
         /// Iteration index.
         t: u32,
-        /// The directive.
-        spec: QuantSpec,
+        /// One spec per batch member.
+        specs: Vec<QuantSpec>,
     },
-    /// Worker → fusion: the (coded) local estimate.
+    /// Worker → fusion: the (coded) uplink vectors, one per signal.
     FVector {
         /// Iteration index.
         t: u32,
         /// Worker id.
         worker: u32,
-        /// Payload.
-        payload: FPayload,
+        /// One payload per batch member.
+        payloads: Vec<FPayload>,
     },
-    /// Fusion → workers (column mode, C-MP-AMP): the combined residual
-    /// `z_t` plus the effective noise level for the local denoiser.
+    /// Fusion → workers (column mode, C-MP-AMP): the combined residuals
+    /// plus per-signal effective noise levels for the local denoisers.
     ColStep {
         /// Iteration index.
         t: u32,
-        /// Denoiser noise level `σ̂² = ‖z_t‖²/M`.
-        sigma_eff2: f64,
-        /// Combined residual (raw broadcast, length M).
+        /// Per-signal denoiser noise levels `σ̂²_j = ‖z_{t,j}‖²/M`.
+        sigma_eff2: Vec<f64>,
+        /// Combined residuals, `B × M` column-major (raw broadcast).
         z: Vec<f32>,
     },
     /// Worker → fusion (column mode): the scalars the fusion center needs
-    /// before designing the quantizer, plus the worker's updated estimate
-    /// block. The block is carried for evaluation/reporting only and is
-    /// excluded from the uplink rate accounting (`f_payload_bits`).
+    /// before designing the quantizers, plus the worker's updated estimate
+    /// blocks. The blocks are carried for evaluation/reporting only and
+    /// are excluded from the uplink rate accounting (`f_payload_bits`).
     ColScalars {
         /// Iteration index.
         t: u32,
         /// Worker id.
         worker: u32,
-        /// `‖u^p‖²` of the pending residual contribution.
-        u_norm2: f64,
-        /// Mean of `η′` over this worker's block (Onsager aggregation).
-        eta_prime_mean: f64,
-        /// The worker's updated `x^p` block (length N/P, eval only).
+        /// Per-signal `‖u^p_j‖²` of the pending residual contributions.
+        u_norm2: Vec<f64>,
+        /// Per-signal means of `η′` over this worker's block.
+        eta_prime_mean: Vec<f64>,
+        /// Updated `x^p` blocks, `B × (N/P)` column-major (eval only).
         x_shard: Vec<f32>,
     },
     /// Fusion → workers: shut down.
@@ -129,80 +148,82 @@ const PAY_RAW: u8 = 0;
 const PAY_CODED: u8 = 1;
 const PAY_SKIPPED: u8 = 2;
 
+/// Upper bound on the per-message batch count accepted by `decode`. The
+/// float blocks are naturally bounded by the transport's frame cap (4–8
+/// wire bytes per element), but `QuantCmd`/`FVector` entries can be a
+/// single tag byte on the wire while costing tens of bytes in memory —
+/// an unbounded count would let a malicious peer amplify a ~1 GiB frame
+/// into a multi-ten-GiB allocation. No real session approaches this.
+const MAX_WIRE_BATCH: u32 = 65_536;
+
 impl Message {
     /// Serialize to bytes.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(16);
         match self {
-            Message::StepCmd { t, coef, x } => {
+            Message::StepCmd { t, coefs, x } => {
                 out.push(TAG_STEP);
                 push_u32(&mut out, *t);
-                push_f32(&mut out, *coef);
-                push_u32(&mut out, x.len() as u32);
-                let base = out.len();
-                out.resize(base + 4 * x.len(), 0);
-                LE::write_f32_into(x, &mut out[base..]);
+                push_f32_block(&mut out, coefs);
+                push_f32_block(&mut out, x);
             }
             Message::ZNorm { t, worker, z_norm2 } => {
                 out.push(TAG_ZNORM);
                 push_u32(&mut out, *t);
                 push_u32(&mut out, *worker);
-                push_f64(&mut out, *z_norm2);
+                push_f64_block(&mut out, z_norm2);
             }
-            Message::QuantCmd { t, spec } => {
+            Message::QuantCmd { t, specs } => {
                 out.push(TAG_QUANT);
                 push_u32(&mut out, *t);
-                match spec {
-                    QuantSpec::Raw => out.push(SPEC_RAW),
-                    QuantSpec::Skip => out.push(SPEC_SKIP),
-                    QuantSpec::Ecsq { delta, k_max, sigma_d2_hat } => {
-                        out.push(SPEC_ECSQ);
-                        push_f64(&mut out, *delta);
-                        push_u32(&mut out, *k_max);
-                        push_f64(&mut out, *sigma_d2_hat);
+                push_u32(&mut out, specs.len() as u32);
+                for spec in specs {
+                    match spec {
+                        QuantSpec::Raw => out.push(SPEC_RAW),
+                        QuantSpec::Skip => out.push(SPEC_SKIP),
+                        QuantSpec::Ecsq { delta, k_max, sigma_d2_hat } => {
+                            out.push(SPEC_ECSQ);
+                            push_f64(&mut out, *delta);
+                            push_u32(&mut out, *k_max);
+                            push_f64(&mut out, *sigma_d2_hat);
+                        }
                     }
                 }
             }
-            Message::FVector { t, worker, payload } => {
+            Message::FVector { t, worker, payloads } => {
                 out.push(TAG_FVEC);
                 push_u32(&mut out, *t);
                 push_u32(&mut out, *worker);
-                match payload {
-                    FPayload::Raw(v) => {
-                        out.push(PAY_RAW);
-                        push_u32(&mut out, v.len() as u32);
-                        let base = out.len();
-                        out.resize(base + 4 * v.len(), 0);
-                        LE::write_f32_into(v, &mut out[base..]);
+                push_u32(&mut out, payloads.len() as u32);
+                for payload in payloads {
+                    match payload {
+                        FPayload::Raw(v) => {
+                            out.push(PAY_RAW);
+                            push_f32_block(&mut out, v);
+                        }
+                        FPayload::Coded { n, bytes } => {
+                            out.push(PAY_CODED);
+                            push_u32(&mut out, *n);
+                            push_u32(&mut out, bytes.len() as u32);
+                            out.extend_from_slice(bytes);
+                        }
+                        FPayload::Skipped => out.push(PAY_SKIPPED),
                     }
-                    FPayload::Coded { n, bytes } => {
-                        out.push(PAY_CODED);
-                        push_u32(&mut out, *n);
-                        push_u32(&mut out, bytes.len() as u32);
-                        out.extend_from_slice(bytes);
-                    }
-                    FPayload::Skipped => out.push(PAY_SKIPPED),
                 }
             }
             Message::ColStep { t, sigma_eff2, z } => {
                 out.push(TAG_COLSTEP);
                 push_u32(&mut out, *t);
-                push_f64(&mut out, *sigma_eff2);
-                push_u32(&mut out, z.len() as u32);
-                let base = out.len();
-                out.resize(base + 4 * z.len(), 0);
-                LE::write_f32_into(z, &mut out[base..]);
+                push_f64_block(&mut out, sigma_eff2);
+                push_f32_block(&mut out, z);
             }
             Message::ColScalars { t, worker, u_norm2, eta_prime_mean, x_shard } => {
                 out.push(TAG_COLSCALARS);
                 push_u32(&mut out, *t);
                 push_u32(&mut out, *worker);
-                push_f64(&mut out, *u_norm2);
-                push_f64(&mut out, *eta_prime_mean);
-                push_u32(&mut out, x_shard.len() as u32);
-                let base = out.len();
-                out.resize(base + 4 * x_shard.len(), 0);
-                LE::write_f32_into(x_shard, &mut out[base..]);
+                push_f64_block(&mut out, u_norm2);
+                push_f64_block(&mut out, eta_prime_mean);
+                push_f32_block(&mut out, x_shard);
             }
             Message::Done => out.push(TAG_DONE),
         }
@@ -214,79 +235,73 @@ impl Message {
         let mut c = Cursor { buf, pos: 0 };
         let tag = c.u8()?;
         let msg = match tag {
-            TAG_STEP => {
-                let t = c.u32()?;
-                let coef = c.f32()?;
-                let n = c.u32()? as usize;
-                let raw = c.bytes(4 * n)?;
-                let mut x = vec![0f32; n];
-                LE::read_f32_into(raw, &mut x);
-                Message::StepCmd { t, coef, x }
-            }
+            TAG_STEP => Message::StepCmd {
+                t: c.u32()?,
+                coefs: c.f32_block()?,
+                x: c.f32_block()?,
+            },
             TAG_ZNORM => Message::ZNorm {
                 t: c.u32()?,
                 worker: c.u32()?,
-                z_norm2: c.f64()?,
+                z_norm2: c.f64_block()?,
             },
             TAG_QUANT => {
                 let t = c.u32()?;
-                let spec = match c.u8()? {
-                    SPEC_RAW => QuantSpec::Raw,
-                    SPEC_SKIP => QuantSpec::Skip,
-                    SPEC_ECSQ => QuantSpec::Ecsq {
-                        delta: c.f64()?,
-                        k_max: c.u32()?,
-                        sigma_d2_hat: c.f64()?,
-                    },
-                    other => {
-                        return Err(Error::Protocol(format!("bad quant spec tag {other}")))
-                    }
-                };
-                Message::QuantCmd { t, spec }
+                let count = c.batch_count()?;
+                let mut specs = Vec::with_capacity(count);
+                for _ in 0..count {
+                    specs.push(match c.u8()? {
+                        SPEC_RAW => QuantSpec::Raw,
+                        SPEC_SKIP => QuantSpec::Skip,
+                        SPEC_ECSQ => QuantSpec::Ecsq {
+                            delta: c.f64()?,
+                            k_max: c.u32()?,
+                            sigma_d2_hat: c.f64()?,
+                        },
+                        other => {
+                            return Err(Error::Protocol(format!(
+                                "bad quant spec tag {other}"
+                            )))
+                        }
+                    });
+                }
+                Message::QuantCmd { t, specs }
             }
             TAG_FVEC => {
                 let t = c.u32()?;
                 let worker = c.u32()?;
-                let payload = match c.u8()? {
-                    PAY_RAW => {
-                        let n = c.u32()? as usize;
-                        let raw = c.bytes(4 * n)?;
-                        let mut v = vec![0f32; n];
-                        LE::read_f32_into(raw, &mut v);
-                        FPayload::Raw(v)
-                    }
-                    PAY_CODED => {
-                        let n = c.u32()?;
-                        let len = c.u32()? as usize;
-                        FPayload::Coded { n, bytes: c.bytes(len)?.to_vec() }
-                    }
-                    PAY_SKIPPED => FPayload::Skipped,
-                    other => {
-                        return Err(Error::Protocol(format!("bad payload tag {other}")))
-                    }
-                };
-                Message::FVector { t, worker, payload }
+                let count = c.batch_count()?;
+                let mut payloads = Vec::with_capacity(count);
+                for _ in 0..count {
+                    payloads.push(match c.u8()? {
+                        PAY_RAW => FPayload::Raw(c.f32_block()?),
+                        PAY_CODED => {
+                            let n = c.u32()?;
+                            let len = c.u32()? as usize;
+                            FPayload::Coded { n, bytes: c.bytes(len)?.to_vec() }
+                        }
+                        PAY_SKIPPED => FPayload::Skipped,
+                        other => {
+                            return Err(Error::Protocol(format!(
+                                "bad payload tag {other}"
+                            )))
+                        }
+                    });
+                }
+                Message::FVector { t, worker, payloads }
             }
-            TAG_COLSTEP => {
-                let t = c.u32()?;
-                let sigma_eff2 = c.f64()?;
-                let n = c.u32()? as usize;
-                let raw = c.bytes(4 * n)?;
-                let mut z = vec![0f32; n];
-                LE::read_f32_into(raw, &mut z);
-                Message::ColStep { t, sigma_eff2, z }
-            }
-            TAG_COLSCALARS => {
-                let t = c.u32()?;
-                let worker = c.u32()?;
-                let u_norm2 = c.f64()?;
-                let eta_prime_mean = c.f64()?;
-                let n = c.u32()? as usize;
-                let raw = c.bytes(4 * n)?;
-                let mut x_shard = vec![0f32; n];
-                LE::read_f32_into(raw, &mut x_shard);
-                Message::ColScalars { t, worker, u_norm2, eta_prime_mean, x_shard }
-            }
+            TAG_COLSTEP => Message::ColStep {
+                t: c.u32()?,
+                sigma_eff2: c.f64_block()?,
+                z: c.f32_block()?,
+            },
+            TAG_COLSCALARS => Message::ColScalars {
+                t: c.u32()?,
+                worker: c.u32()?,
+                u_norm2: c.f64_block()?,
+                eta_prime_mean: c.f64_block()?,
+                x_shard: c.f32_block()?,
+            },
             TAG_DONE => Message::Done,
             other => return Err(Error::Protocol(format!("unknown message tag {other}"))),
         };
@@ -300,36 +315,52 @@ impl Message {
         Ok(msg)
     }
 
-    /// Payload bits of the f-vector content (the paper's uplink metric);
-    /// 0 for non-FVector messages.
+    /// Payload bits of the uplinked vector content, summed over the batch
+    /// (the paper's uplink metric); 0 for non-FVector messages.
     pub fn f_payload_bits(&self) -> f64 {
         match self {
-            Message::FVector { payload, .. } => match payload {
-                FPayload::Raw(v) => 32.0 * v.len() as f64,
-                FPayload::Coded { bytes, .. } => 8.0 * bytes.len() as f64,
-                FPayload::Skipped => 0.0,
-            },
+            Message::FVector { payloads, .. } => payloads
+                .iter()
+                .map(|payload| match payload {
+                    FPayload::Raw(v) => 32.0 * v.len() as f64,
+                    FPayload::Coded { bytes, .. } => 8.0 * bytes.len() as f64,
+                    FPayload::Skipped => 0.0,
+                })
+                .sum(),
             _ => 0.0,
         }
     }
 }
 
 fn push_u32(out: &mut Vec<u8>, v: u32) {
-    let mut b = [0u8; 4];
-    LE::write_u32(&mut b, v);
-    out.extend_from_slice(&b);
-}
-
-fn push_f32(out: &mut Vec<u8>, v: f32) {
-    let mut b = [0u8; 4];
-    LE::write_f32(&mut b, v);
-    out.extend_from_slice(&b);
+    out.extend_from_slice(&v.to_le_bytes());
 }
 
 fn push_f64(out: &mut Vec<u8>, v: f64) {
-    let mut b = [0u8; 8];
-    LE::write_f64(&mut b, v);
-    out.extend_from_slice(&b);
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Length-prefixed little-endian `f32` block. One resize + bulk fill —
+/// broadcast frames carry `B × N` floats re-encoded once per endpoint per
+/// round, so per-element `Vec` bookkeeping would sit on the hot wire path.
+fn push_f32_block(out: &mut Vec<u8>, vs: &[f32]) {
+    push_u32(out, vs.len() as u32);
+    let base = out.len();
+    out.resize(base + 4 * vs.len(), 0);
+    for (chunk, v) in out[base..].chunks_exact_mut(4).zip(vs) {
+        chunk.copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+/// Length-prefixed little-endian `f64` block (bulk-filled like
+/// [`push_f32_block`]).
+fn push_f64_block(out: &mut Vec<u8>, vs: &[f64]) {
+    push_u32(out, vs.len() as u32);
+    let base = out.len();
+    out.resize(base + 8 * vs.len(), 0);
+    for (chunk, v) in out[base..].chunks_exact_mut(8).zip(vs) {
+        chunk.copy_from_slice(&v.to_le_bytes());
+    }
 }
 
 struct Cursor<'a> {
@@ -355,15 +386,54 @@ impl<'a> Cursor<'a> {
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(LE::read_u32(self.bytes(4)?))
+        let b = self.bytes(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
     }
 
-    fn f32(&mut self) -> Result<f32> {
-        Ok(LE::read_f32(self.bytes(4)?))
+    /// A batch count, validated against [`MAX_WIRE_BATCH`] before any
+    /// allocation sized by it.
+    fn batch_count(&mut self) -> Result<usize> {
+        let count = self.u32()?;
+        if count > MAX_WIRE_BATCH {
+            return Err(Error::Protocol(format!(
+                "batch count {count} exceeds the wire limit {MAX_WIRE_BATCH}"
+            )));
+        }
+        Ok(count as usize)
     }
 
     fn f64(&mut self) -> Result<f64> {
-        Ok(LE::read_f64(self.bytes(8)?))
+        let b = self.bytes(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(f64::from_le_bytes(a))
+    }
+
+    fn f32_block(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(4 * n)?;
+        let mut out = vec![0f32; n];
+        for (i, o) in out.iter_mut().enumerate() {
+            *o = f32::from_le_bytes([
+                raw[4 * i],
+                raw[4 * i + 1],
+                raw[4 * i + 2],
+                raw[4 * i + 3],
+            ]);
+        }
+        Ok(out)
+    }
+
+    fn f64_block(&mut self) -> Result<Vec<f64>> {
+        let n = self.u32()? as usize;
+        let raw = self.bytes(8 * n)?;
+        let mut out = vec![0f64; n];
+        for (i, o) in out.iter_mut().enumerate() {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(&raw[8 * i..8 * i + 8]);
+            *o = f64::from_le_bytes(a);
+        }
+        Ok(out)
     }
 }
 
@@ -375,28 +445,41 @@ mod tests {
     #[test]
     fn roundtrip_all_variants() {
         let msgs = vec![
-            Message::StepCmd { t: 3, coef: 0.25, x: vec![1.0, -2.5, 3.25] },
-            Message::ZNorm { t: 1, worker: 7, z_norm2: 123.456 },
-            Message::QuantCmd { t: 2, spec: QuantSpec::Raw },
-            Message::QuantCmd { t: 2, spec: QuantSpec::Skip },
+            Message::StepCmd { t: 3, coefs: vec![0.25, -0.5], x: vec![1.0, -2.5, 3.25, 0.0, 1.5, -9.0] },
+            Message::ZNorm { t: 1, worker: 7, z_norm2: vec![123.456, 0.25] },
+            Message::QuantCmd { t: 2, specs: vec![QuantSpec::Raw, QuantSpec::Skip] },
             Message::QuantCmd {
                 t: 9,
-                spec: QuantSpec::Ecsq { delta: 0.031, k_max: 200, sigma_d2_hat: 0.7 },
+                specs: vec![
+                    QuantSpec::Ecsq { delta: 0.031, k_max: 200, sigma_d2_hat: 0.7 },
+                    QuantSpec::Raw,
+                    QuantSpec::Ecsq { delta: 0.011, k_max: 64, sigma_d2_hat: 0.2 },
+                ],
             },
-            Message::FVector { t: 4, worker: 0, payload: FPayload::Raw(vec![0.5; 17]) },
+            Message::FVector {
+                t: 4,
+                worker: 0,
+                payloads: vec![FPayload::Raw(vec![0.5; 17]), FPayload::Skipped],
+            },
             Message::FVector {
                 t: 4,
                 worker: 2,
-                payload: FPayload::Coded { n: 100, bytes: vec![1, 2, 3, 255] },
+                payloads: vec![
+                    FPayload::Coded { n: 100, bytes: vec![1, 2, 3, 255] },
+                    FPayload::Coded { n: 7, bytes: vec![9] },
+                ],
             },
-            Message::FVector { t: 5, worker: 3, payload: FPayload::Skipped },
-            Message::ColStep { t: 6, sigma_eff2: 0.042, z: vec![0.5, -1.25, 2.0] },
+            Message::ColStep {
+                t: 6,
+                sigma_eff2: vec![0.042, 0.011],
+                z: vec![0.5, -1.25, 2.0, 0.25, 0.0, -3.0],
+            },
             Message::ColScalars {
                 t: 6,
                 worker: 4,
-                u_norm2: 9.75,
-                eta_prime_mean: 0.125,
-                x_shard: vec![1.0, 0.0, -0.5],
+                u_norm2: vec![9.75, 1.5],
+                eta_prime_mean: vec![0.125, 0.25],
+                x_shard: vec![1.0, 0.0, -0.5, 2.0],
             },
             Message::Done,
         ];
@@ -408,11 +491,14 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip_random_stepcmds() {
+    fn roundtrip_random_batched_stepcmds() {
         Prop::new("StepCmd roundtrip", 50).check(|g| {
-            let n = g.usize_in(0, 500);
-            let x = g.gaussian_vec(n, 2.0);
-            let m = Message::StepCmd { t: g.u64() as u32, coef: g.f64_in(-1.0, 1.0) as f32, x };
+            let b = g.usize_in(1, 5);
+            let n = g.usize_in(0, 200);
+            let x = g.gaussian_vec(b * n, 2.0);
+            let coefs: Vec<f32> =
+                (0..b).map(|_| g.f64_in(-1.0, 1.0) as f32).collect();
+            let m = Message::StepCmd { t: g.u64() as u32, coefs, x };
             let dec = Message::decode(&m.encode()).map_err(|e| e.to_string())?;
             prop_assert(dec == m, "mismatch")
         });
@@ -427,25 +513,57 @@ mod tests {
         let mut enc = Message::Done.encode();
         enc.push(0);
         assert!(Message::decode(&enc).is_err());
+        // Truncated batch payloads rejected.
+        let enc = Message::QuantCmd { t: 0, specs: vec![QuantSpec::Raw; 3] }.encode();
+        assert!(Message::decode(&enc[..enc.len() - 1]).is_err());
     }
 
     #[test]
-    fn payload_bits_accounting() {
-        let raw = Message::FVector { t: 0, worker: 0, payload: FPayload::Raw(vec![0.0; 10]) };
-        assert_eq!(raw.f_payload_bits(), 320.0);
-        let coded = Message::FVector {
+    fn decode_rejects_absurd_batch_counts() {
+        // A hostile count must be rejected before any count-sized
+        // allocation: QuantCmd claiming u32::MAX specs...
+        let mut enc = vec![TAG_QUANT];
+        enc.extend_from_slice(&7u32.to_le_bytes());
+        enc.extend_from_slice(&u32::MAX.to_le_bytes());
+        let err = Message::decode(&enc).unwrap_err().to_string();
+        assert!(err.contains("batch count"), "{err}");
+        // ...and an FVector claiming one tag byte per fake payload.
+        let mut enc = vec![TAG_FVEC];
+        enc.extend_from_slice(&0u32.to_le_bytes());
+        enc.extend_from_slice(&0u32.to_le_bytes());
+        enc.extend_from_slice(&(MAX_WIRE_BATCH + 1).to_le_bytes());
+        enc.extend_from_slice(&[PAY_SKIPPED; 64]);
+        let err = Message::decode(&enc).unwrap_err().to_string();
+        assert!(err.contains("batch count"), "{err}");
+        // The limit itself is generous: a real batch passes untouched.
+        let big = Message::QuantCmd { t: 1, specs: vec![QuantSpec::Skip; 512] };
+        assert_eq!(Message::decode(&big.encode()).unwrap(), big);
+    }
+
+    #[test]
+    fn payload_bits_sum_over_batch() {
+        let raw = Message::FVector {
             t: 0,
             worker: 0,
-            payload: FPayload::Coded { n: 10, bytes: vec![0; 3] },
+            payloads: vec![FPayload::Raw(vec![0.0; 10]), FPayload::Raw(vec![0.0; 10])],
         };
-        assert_eq!(coded.f_payload_bits(), 24.0);
+        assert_eq!(raw.f_payload_bits(), 640.0);
+        let mixed = Message::FVector {
+            t: 0,
+            worker: 0,
+            payloads: vec![
+                FPayload::Coded { n: 10, bytes: vec![0; 3] },
+                FPayload::Skipped,
+            ],
+        };
+        assert_eq!(mixed.f_payload_bits(), 24.0);
         assert_eq!(Message::Done.f_payload_bits(), 0.0);
         // Column-mode eval shards ride outside the rate accounting.
         let scalars = Message::ColScalars {
             t: 0,
             worker: 0,
-            u_norm2: 1.0,
-            eta_prime_mean: 0.5,
+            u_norm2: vec![1.0],
+            eta_prime_mean: vec![0.5],
             x_shard: vec![0.0; 100],
         };
         assert_eq!(scalars.f_payload_bits(), 0.0);

@@ -1,41 +1,55 @@
 //! The MP-AMP coordinator — the paper's system contribution.
 //!
-//! * [`message`] — the wire protocol (StepCmd/ZNorm/QuantCmd/FVector/Done),
-//! * [`transport`] — byte-metered in-process + TCP duplex links,
-//! * [`worker`] — the worker processor loop (LC + quantize + encode),
-//! * [`fusion`] — the fusion-center loop (aggregate, design quantizer,
-//!   decode, denoise, broadcast),
+//! * [`message`] — the batched wire protocol (StepCmd/ZNorm/QuantCmd/
+//!   FVector/ColStep/ColScalars/Done) + the protocol version byte,
+//! * [`transport`] — byte-metered in-process + TCP duplex links with
+//!   connect/accept/read timeouts and a versioned hello,
+//! * [`scenario`] — the scenario-generic protocol core: the [`Scenario`]
+//!   trait (implemented by [`scenario::Row`] and [`scenario::Column`])
+//!   and the generic [`scenario::ProtocolCore`] round driver,
+//! * [`worker`] — the one generic worker loop (local step + quantize +
+//!   encode, whatever the scenario),
+//! * [`fusion`] — quantizer-spec design + the thin [`fusion::ProtocolState`]
+//!   enum dispatching to the monomorphized cores,
 //! * [`session`] — end-to-end orchestration producing a [`session::RunReport`].
 //!
-//! Row-partitioned protocol per iteration `t` (paper §3.1–§3.3):
+//! Sessions are **batched**: `B ≥ 1` signal instances share one sensing
+//! matrix and travel through every round together, so each pass over `A`
+//! and each protocol round trip is amortized across the batch.
+//!
+//! Row-partitioned protocol per iteration `t` (paper §3.1–§3.3), batched:
 //!
 //! ```text
-//! fusion ──StepCmd{t, x_t, coef}──▶ workers          (broadcast)
-//! fusion ◀──ZNorm{‖z_t^p‖²}─────── workers          (σ̂² estimate)
-//! fusion ──QuantCmd{t, Δ, K, σ̂²}──▶ workers         (quantizer design)
-//! fusion ◀──FVector{coded f_t^p}── workers          (the expensive uplink)
-//! fusion: f̃ = Σ dequant(f^p); x_{t+1} = η(f̃); loop
+//! fusion ──StepCmd{t, X_t, coefs}──▶ workers          (broadcast, B signals)
+//! fusion ◀──ZNorm{‖z_t^p‖² × B}──── workers          (σ̂² estimates)
+//! fusion ──QuantCmd{t, specs × B}──▶ workers          (quantizer designs)
+//! fusion ◀──FVector{coded f_t^p × B} workers          (the expensive uplink)
+//! fusion: f̃_j = Σ_p dequant(f_j^p); x_{t+1,j} = η(f̃_j); loop
 //! ```
 //!
 //! Column-partitioned protocol (C-MP-AMP, 1701.02578) — denoising moves
-//! to the workers, the fusion center owns `y` and the combined residual:
+//! to the workers, the fusion center owns `y` and the combined residuals:
 //!
 //! ```text
-//! fusion ──ColStep{t, z_t, σ̂²}───▶ workers           (residual broadcast)
-//! workers: f^p = x^p + (A^p)ᵀ z_t; x^p ← η(f^p); u^p = A^p x^p
-//! fusion ◀──ColScalars{‖u^p‖², η̄′}─ workers          (v̂ + Onsager terms)
-//! fusion ──QuantCmd{t, Δ, K, v̂}───▶ workers          (quantizer design)
-//! fusion ◀──FVector{coded u^p}──── workers           (the expensive uplink)
-//! fusion: z_{t+1} = y − Σ dequant(u^p) + coef·z_t; loop
+//! fusion ──ColStep{t, Z_t, σ̂² × B}─▶ workers           (residual broadcast)
+//! workers: f_j^p = x_j^p + (A^p)ᵀ z_{t,j}; x_j^p ← η(f_j^p); u_j^p = A^p x_j^p
+//! fusion ◀──ColScalars{‖u^p‖², η̄′ × B}─ workers        (v̂ + Onsager terms)
+//! fusion ──QuantCmd{t, specs × B}──▶ workers           (quantizer designs)
+//! fusion ◀──FVector{coded u^p × B}── workers           (the expensive uplink)
+//! fusion: z_{t+1,j} = y_j − Σ_p dequant(u_j^p) + coef_j·z_{t,j}; loop
 //! ```
+//!
+//! [`Scenario`]: scenario::Scenario
 
 pub mod builder;
 pub mod fusion;
 pub mod message;
+pub mod scenario;
 pub mod session;
 pub mod transport;
 pub mod worker;
 
 pub use builder::SessionBuilder;
-pub use message::{FPayload, Message, QuantSpec};
+pub use message::{FPayload, Message, QuantSpec, PROTOCOL_VERSION};
+pub use scenario::{ProtocolCore, Scenario};
 pub use session::{IterSnapshot, MpAmpSession, RunReport, Session};

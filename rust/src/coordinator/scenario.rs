@@ -1,0 +1,917 @@
+//! The scenario-generic protocol core.
+//!
+//! Every MP-AMP partitioning in the literature — row-wise MP-AMP (Han,
+//! Zhu, Niu & Baron 2016), column-wise C-MP-AMP (Ma, Lu & Baron 2017,
+//! arXiv:1701.02578), and the family the overview paper (Zhu, Pilgrim &
+//! Baron 2017, arXiv:1702.03049) sketches — shares one round structure:
+//!
+//! 1. the fusion center **broadcasts** the round state,
+//! 2. workers run their **local step** and reply with pre-uplink scalars,
+//! 3. the fusion center **designs a quantizer** per signal from a rate
+//!    directive and broadcasts it,
+//! 4. workers **uplink** lossily-coded vectors, which the fusion center
+//!    decodes and **fuses** by summation,
+//! 5. a scenario-specific **global computation** folds the fused vectors
+//!    into the next round's state.
+//!
+//! [`ProtocolCore`] implements that skeleton exactly once, batched over
+//! `B ≥ 1` signal instances; the [`Scenario`] trait supplies the five
+//! scenario-specific holes. [`Row`] and [`Column`] are the two shipped
+//! scenarios — `ProtocolCore<Row>` replaces the old `FusionState` and
+//! `ProtocolCore<Column>` the old `ColumnFusionState`, with the worker
+//! loops collapsed into one generic
+//! [`run_scenario_worker`](crate::coordinator::worker::run_scenario_worker).
+//!
+//! # Adding a third scenario
+//!
+//! A new partitioning only has to fill the trait's holes — the round
+//! driver, batching, wire protocol, quantizers, codecs, rate allocators,
+//! metering, and session machinery are inherited. Sketch for a
+//! hypothetical overlapping-block scenario:
+//!
+//! ```ignore
+//! use mpamp::coordinator::scenario::{ProtocolCore, RoundStat, Scenario};
+//!
+//! struct Overlap;
+//!
+//! impl Scenario for Overlap {
+//!     type Shard = OverlapShard;      // worker's slice of A (+ data)
+//!     type Fusion = OverlapFusion;    // fusion state across rounds
+//!     type WorkerState = OverlapWorker; // worker state across rounds
+//!     const NAME: &'static str = "overlap";
+//!
+//!     // How the problem shards across P workers:
+//!     fn split(batch: &Batch, p: usize) -> Result<Vec<OverlapShard>> { .. }
+//!     // Fresh fusion/worker state at t = 0:
+//!     fn init(batch: &Batch, cfg: &RunConfig) -> OverlapFusion { .. }
+//!     fn worker_init(shard: &OverlapShard, batch: usize) -> OverlapWorker { .. }
+//!     // Phase 1–2: the broadcast and each worker's reply:
+//!     fn begin_round(fu: &mut OverlapFusion, cfg: &RunConfig, t: usize) -> Message { .. }
+//!     fn worker_serve(.., msg: Message) -> Result<(Message, Vec<Vec<f32>>)> { .. }
+//!     fn absorb(fu: &mut OverlapFusion, .., widx: usize, msg: Message) -> Result<()> { .. }
+//!     // Phase 3: what variance the quantizer models:
+//!     fn stats(fu: &OverlapFusion, cfg: &RunConfig) -> Vec<RoundStat> { .. }
+//!     fn design_spec(..) -> Result<QuantSpec> { .. }
+//!     fn coder(..) -> Result<Option<EcsqCoder>> { .. }
+//!     fn sigma_q2(..) -> f64 { .. }
+//!     // Phase 5: fold the fused uplinks into the next state:
+//!     fn global_step(..) -> Result<()> { .. }
+//!     fn predicted_sigma(..) -> f64 { .. }
+//!     fn uplink_len(cfg: &RunConfig) -> usize { .. }
+//!     fn x(fu: &OverlapFusion, sig: usize) -> &[f32] { .. }
+//!     fn into_xs(fu: OverlapFusion) -> Vec<Vec<f32>> { .. }
+//! }
+//!
+//! // Then: drive it with the generic machinery.
+//! let mut core: ProtocolCore<Overlap> = ProtocolCore::new(&batch, &cfg);
+//! let record = core.step(&cfg, &se, &controller, None, &engine, &mut endpoints, Some(&batch))?;
+//! ```
+//!
+//! The two in-tree implementations below are the best reference for what
+//! each hole has to guarantee (notably: `absorb` must validate iteration
+//! and worker ids, and `coder` must be deterministic from the spec alone,
+//! because the worker rebuilds the identical coder on its side).
+
+use std::time::Instant;
+
+use crate::alloc::schedule::{Directive, RateController};
+use crate::config::{CodecKind, RunConfig};
+use crate::coordinator::fusion::{column_spec_for_directive, spec_for_directive};
+use crate::coordinator::message::{FPayload, Message, QuantSpec};
+use crate::coordinator::transport::Endpoint;
+use crate::coordinator::worker::{coder_for_spec, column_coder_for_spec, WorkerParams};
+use crate::engine::{ColumnWorkerData, ComputeEngine, RowBatchData};
+use crate::error::{Error, Result};
+use crate::metrics::IterRecord;
+use crate::quant::{EcsqCoder, EncodedBlock};
+use crate::rd::RdCache;
+use crate::se::StateEvolution;
+use crate::signal::{Batch, BernoulliGauss};
+
+/// Per-signal statistics available when the round's quantizer is designed.
+#[derive(Debug, Clone, Copy)]
+pub struct RoundStat {
+    /// Residual-variance estimate σ̂²_{t,D} — the SE state variable the
+    /// rate allocators understand.
+    pub sigma_d2_hat: f64,
+    /// Variance the quantizer's model channel is built from (row mode:
+    /// σ̂² again; column mode: the empirical message variance v̂).
+    pub msg_var: f64,
+}
+
+/// The scenario-specific holes of one protocol round (see the module docs
+/// for the worked example). Implementations are zero-sized types; all
+/// state lives in the associated `Fusion`/`WorkerState` types.
+pub trait Scenario: Send + Sync + 'static {
+    /// The worker's shard of the problem (sent to the worker thread once).
+    type Shard: Send + 'static;
+    /// Fusion-side state carried across rounds.
+    type Fusion: Send;
+    /// Worker-side state carried across rounds.
+    type WorkerState: Send;
+
+    /// Stable lowercase scenario label (matches `Partitioning::as_str`).
+    const NAME: &'static str;
+
+    /// Shard the signal batch across `p` workers.
+    fn split(batch: &Batch, p: usize) -> Result<Vec<Self::Shard>>;
+
+    /// Fresh fusion state at `t = 0`.
+    fn init(batch: &Batch, cfg: &RunConfig) -> Self::Fusion;
+
+    /// Per-signal length of the uplinked message vector (`N` in row mode,
+    /// `M` in column mode) — the denominator of the paper's bits/element
+    /// accounting.
+    fn uplink_len(cfg: &RunConfig) -> usize;
+
+    /// Phase 1: reset the round accumulators and build the broadcast.
+    fn begin_round(fu: &mut Self::Fusion, cfg: &RunConfig, t: usize) -> Message;
+
+    /// Phase 2: absorb worker `widx`'s pre-uplink reply (must validate
+    /// the iteration index, worker id, and batch sizes).
+    fn absorb(
+        fu: &mut Self::Fusion,
+        cfg: &RunConfig,
+        t: usize,
+        widx: usize,
+        msg: Message,
+    ) -> Result<()>;
+
+    /// Phase 3a: per-signal round statistics, after all replies.
+    fn stats(fu: &Self::Fusion, cfg: &RunConfig) -> Vec<RoundStat>;
+
+    /// Phase 3b: design one signal's quantizer spec from its directive.
+    fn design_spec(
+        directive: &Directive,
+        se: &StateEvolution,
+        p_workers: usize,
+        stat: RoundStat,
+    ) -> Result<QuantSpec>;
+
+    /// The coder implied by a spec — deterministic from the spec plus the
+    /// static config, because both protocol sides rebuild it.
+    fn coder(
+        spec: &QuantSpec,
+        prior: &BernoulliGauss,
+        p_workers: usize,
+        codec: CodecKind,
+    ) -> Result<Option<EcsqCoder>>;
+
+    /// Per-worker quantization MSE σ_Q² implied by a spec (the `Skip`
+    /// reconstruction error differs between scenarios).
+    fn sigma_q2(
+        spec: &QuantSpec,
+        se: &StateEvolution,
+        p_workers: usize,
+        stat: RoundStat,
+    ) -> f64;
+
+    /// Phase 5: fold the fused uplink sums (one per signal) into the
+    /// next round's state.
+    fn global_step(
+        fu: &mut Self::Fusion,
+        cfg: &RunConfig,
+        se: &StateEvolution,
+        engine: &dyn ComputeEngine,
+        sums: Vec<Vec<f32>>,
+        stats: &[RoundStat],
+        sigma_q2: &[f64],
+    ) -> Result<()>;
+
+    /// SE-predicted next effective noise level for the report (the
+    /// quantization noise enters the two scenarios differently).
+    fn predicted_sigma(se: &StateEvolution, stat: RoundStat, p_sigma_q2: f64) -> f64;
+
+    /// Current estimate of signal `sig`.
+    fn x(fu: &Self::Fusion, sig: usize) -> &[f32];
+
+    /// Consume the fusion state, yielding per-signal final estimates.
+    fn into_xs(fu: Self::Fusion) -> Vec<Vec<f32>>;
+
+    /// Fresh worker state at `t = 0` for a `batch`-signal session.
+    fn worker_init(shard: &Self::Shard, batch: usize) -> Self::WorkerState;
+
+    /// Serve the round's broadcast on the worker: update local state and
+    /// return the pre-uplink reply plus the pending per-signal uplink
+    /// vectors (quantized and shipped when the `QuantCmd` arrives).
+    fn worker_serve(
+        params: &WorkerParams,
+        shard: &Self::Shard,
+        ws: &mut Self::WorkerState,
+        engine: &dyn ComputeEngine,
+        msg: Message,
+    ) -> Result<(Message, Vec<Vec<f32>>)>;
+}
+
+/// Split a flat column-major batch vector into per-signal vectors.
+pub(crate) fn split_batch_vec(flat: Vec<f32>, b: usize) -> Vec<Vec<f32>> {
+    debug_assert_eq!(flat.len() % b.max(1), 0);
+    let len = flat.len() / b.max(1);
+    (0..b).map(|j| flat[j * len..(j + 1) * len].to_vec()).collect()
+}
+
+/// Decode one signal's payload and fuse it into `sum` (shared by both
+/// scenarios — they differ only in the coder that gets passed in).
+fn fuse_payload(
+    payload: FPayload,
+    coder: &Option<EcsqCoder>,
+    len: usize,
+    codec: CodecKind,
+    sum: &mut [f32],
+    wire_bits: &mut f64,
+) -> Result<()> {
+    match payload {
+        FPayload::Raw(v) => {
+            if v.len() != len {
+                return Err(Error::Protocol(format!(
+                    "fusion: raw payload length {} != {len}",
+                    v.len()
+                )));
+            }
+            // Analytic codec: account model entropy instead of the raw
+            // float bits that moved in-process.
+            if let (CodecKind::Analytic, Some(c)) = (codec, coder) {
+                *wire_bits += c.entropy_bits * len as f64 - 32.0 * len as f64;
+            }
+            crate::linalg::axpy(1.0, &v, sum);
+        }
+        FPayload::Coded { n: n_syms, bytes } => {
+            let c = coder.as_ref().ok_or_else(|| {
+                Error::Protocol("coded payload without ECSQ spec".into())
+            })?;
+            if n_syms as usize != len {
+                return Err(Error::Protocol(format!(
+                    "fusion: coded payload length {n_syms} != {len}"
+                )));
+            }
+            let block = EncodedBlock { bytes, wire_bits: 0.0, n: len };
+            let mut v = vec![0f32; len];
+            c.decode(&block, None, &mut v)?;
+            crate::linalg::axpy(1.0, &v, sum);
+        }
+        FPayload::Skipped => {}
+    }
+    Ok(())
+}
+
+/// The generic, resumable fusion-side protocol driver: one [`step`]
+/// executes exactly one round of whichever [`Scenario`] it is
+/// instantiated with, over all `B` signals of the session's batch.
+///
+/// [`step`]: ProtocolCore::step
+pub struct ProtocolCore<S: Scenario> {
+    fu: S::Fusion,
+    b: usize,
+    t: usize,
+}
+
+impl<S: Scenario> ProtocolCore<S> {
+    /// Fresh state at `t = 0`.
+    pub fn new(batch: &Batch, cfg: &RunConfig) -> Self {
+        ProtocolCore { fu: S::init(batch, cfg), b: batch.batch(), t: 0 }
+    }
+
+    /// Iterations completed so far.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Number of signals in the session's batch.
+    pub fn batch(&self) -> usize {
+        self.b
+    }
+
+    /// The current estimate of signal `sig`.
+    pub fn x(&self, sig: usize) -> &[f32] {
+        S::x(&self.fu, sig)
+    }
+
+    /// Consume the state, yielding the per-signal final estimates.
+    pub fn into_xs(self) -> Vec<Vec<f32>> {
+        S::into_xs(self.fu)
+    }
+
+    /// Run one protocol round over the worker endpoints. `eval` (ground
+    /// truth) fills the SDR fields of the record — it is measurement-only
+    /// and never feeds back into the algorithm. Per-signal quantities are
+    /// reported as batch means (for `B = 1` the record is bit-for-bit the
+    /// single-signal record).
+    #[allow(clippy::too_many_arguments)]
+    pub fn step(
+        &mut self,
+        cfg: &RunConfig,
+        se: &StateEvolution,
+        controller: &RateController,
+        cache: Option<&RdCache>,
+        engine: &dyn ComputeEngine,
+        endpoints: &mut [Endpoint],
+        eval: Option<&Batch>,
+    ) -> Result<IterRecord> {
+        let t = self.t;
+        let p = cfg.p;
+        let b = self.b;
+        debug_assert_eq!(endpoints.len(), p);
+        let t0 = Instant::now();
+        // 1. Broadcast the round command.
+        let cmd = S::begin_round(&mut self.fu, cfg, t);
+        for ep in endpoints.iter_mut() {
+            ep.send(&cmd)?;
+        }
+        // 2. Absorb every worker's pre-uplink reply (worker-id order).
+        for (widx, ep) in endpoints.iter_mut().enumerate() {
+            let msg = ep.recv()?;
+            S::absorb(&mut self.fu, cfg, t, widx, msg)?;
+        }
+        // 3. Per-signal stats → directives → one batched quantizer design
+        //    round trip covering the whole batch.
+        let stats = S::stats(&self.fu, cfg);
+        debug_assert_eq!(stats.len(), b);
+        let mut directives = Vec::with_capacity(b);
+        let mut specs = Vec::with_capacity(b);
+        for stat in &stats {
+            let d = controller.directive(t, stat.sigma_d2_hat, se, p, cfg.iters, cache);
+            specs.push(S::design_spec(&d, se, p, *stat)?);
+            directives.push(d);
+        }
+        let quant = Message::QuantCmd { t: t as u32, specs: specs.clone() };
+        for ep in endpoints.iter_mut() {
+            ep.send(&quant)?;
+        }
+        // The decoders matching the workers' encoders, one per signal.
+        let mut coders = Vec::with_capacity(b);
+        let mut sigma_q2s = Vec::with_capacity(b);
+        for (spec, stat) in specs.iter().zip(&stats) {
+            coders.push(S::coder(spec, &cfg.prior, p, cfg.codec)?);
+            sigma_q2s.push(S::sigma_q2(spec, se, p, *stat));
+        }
+        // 4. Collect and fuse the batched uplinks.
+        let len = S::uplink_len(cfg);
+        let mut sums = vec![vec![0f32; len]; b];
+        let mut wire_bits = 0.0f64;
+        for (widx, ep) in endpoints.iter_mut().enumerate() {
+            let msg = ep.recv()?;
+            wire_bits += msg.f_payload_bits();
+            match msg {
+                Message::FVector { t: rt, worker, payloads } => {
+                    if rt as usize != t || worker as usize != widx {
+                        return Err(Error::Protocol(format!(
+                            "fusion: bad FVector (t={rt}, worker={worker}) expected \
+                             (t={t}, worker={widx})"
+                        )));
+                    }
+                    if payloads.len() != b {
+                        return Err(Error::Protocol(format!(
+                            "fusion: {} payloads from worker {widx}, batch is {b}",
+                            payloads.len()
+                        )));
+                    }
+                    for (sig, payload) in payloads.into_iter().enumerate() {
+                        fuse_payload(
+                            payload,
+                            &coders[sig],
+                            len,
+                            cfg.codec,
+                            &mut sums[sig],
+                            &mut wire_bits,
+                        )?;
+                    }
+                }
+                other => {
+                    return Err(Error::Protocol(format!(
+                        "fusion: expected FVector, got {other:?}"
+                    )))
+                }
+            }
+        }
+        // Allocation accounting (analytic rate, batch mean).
+        let rate_alloc = directives
+            .iter()
+            .zip(&coders)
+            .map(|(d, c)| match d {
+                Directive::Raw => 32.0,
+                Directive::Skip => 0.0,
+                Directive::QuantizeRate(r) => *r,
+                Directive::QuantizeMse(_) => {
+                    c.as_ref().map(|c| c.entropy_bits).unwrap_or(0.0)
+                }
+            })
+            .sum::<f64>()
+            / b as f64;
+        // 5. Scenario-specific global computation over all signals.
+        S::global_step(&mut self.fu, cfg, se, engine, sums, &stats, &sigma_q2s)?;
+        self.t = t + 1;
+        // 6. Record.
+        let sdr_db = match eval {
+            Some(batch) => {
+                (0..b).map(|j| batch.sdr_db(j, S::x(&self.fu, j))).sum::<f64>() / b as f64
+            }
+            None => f64::NAN,
+        };
+        let sdr_pred_db = stats
+            .iter()
+            .zip(&sigma_q2s)
+            .map(|(stat, q2)| se.sdr_db(S::predicted_sigma(se, *stat, p as f64 * q2)))
+            .sum::<f64>()
+            / b as f64;
+        Ok(IterRecord {
+            t,
+            sdr_db,
+            sdr_pred_db,
+            rate_alloc,
+            rate_wire: wire_bits / (p as f64 * (b * len) as f64),
+            sigma_q2: sigma_q2s.iter().sum::<f64>() / b as f64,
+            sigma_d2_hat: stats.iter().map(|s| s.sigma_d2_hat).sum::<f64>() / b as f64,
+            wall_s: t0.elapsed().as_secs_f64(),
+        })
+    }
+
+    /// Release the workers: broadcast `Done` on every endpoint.
+    pub fn finish(endpoints: &mut [Endpoint]) -> Result<()> {
+        for ep in endpoints.iter_mut() {
+            ep.send(&Message::Done)?;
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Row-wise MP-AMP (Han, Zhu, Niu & Baron 2016)
+// ---------------------------------------------------------------------
+
+/// Row-partitioned MP-AMP: workers own row blocks of `A` plus measurement
+/// slices and uplink local estimates `f_t^p` (length `N`); the fusion
+/// center denoises.
+#[derive(Debug, Clone, Copy)]
+pub struct Row;
+
+/// Fusion state of the row scenario: per-signal estimates, Onsager
+/// coefficients, and the round's `‖z‖²` accumulators.
+#[derive(Debug, Clone)]
+pub struct RowFusion {
+    n: usize,
+    b: usize,
+    /// Estimates, `B × N` column-major.
+    x: Vec<f32>,
+    /// Per-signal Onsager coefficients.
+    coefs: Vec<f32>,
+    /// Per-signal Σ_p ‖z_t^p‖² accumulators (reset each round).
+    znorm: Vec<f64>,
+}
+
+/// Worker state of the row scenario: the local residuals.
+#[derive(Debug, Clone)]
+pub struct RowWorker {
+    /// Local residuals, `B × (M/P)` column-major.
+    z_prev: Vec<f32>,
+}
+
+impl Scenario for Row {
+    type Shard = RowBatchData;
+    type Fusion = RowFusion;
+    type WorkerState = RowWorker;
+
+    const NAME: &'static str = "row";
+
+    fn split(batch: &Batch, p: usize) -> Result<Vec<RowBatchData>> {
+        RowBatchData::try_split(batch, p)
+    }
+
+    fn init(batch: &Batch, cfg: &RunConfig) -> RowFusion {
+        let b = batch.batch();
+        RowFusion {
+            n: cfg.n,
+            b,
+            x: vec![0f32; b * cfg.n],
+            coefs: vec![0f32; b],
+            znorm: vec![0f64; b],
+        }
+    }
+
+    fn uplink_len(cfg: &RunConfig) -> usize {
+        cfg.n
+    }
+
+    fn begin_round(fu: &mut RowFusion, _cfg: &RunConfig, t: usize) -> Message {
+        fu.znorm.iter_mut().for_each(|v| *v = 0.0);
+        Message::StepCmd { t: t as u32, coefs: fu.coefs.clone(), x: fu.x.clone() }
+    }
+
+    fn absorb(
+        fu: &mut RowFusion,
+        _cfg: &RunConfig,
+        t: usize,
+        widx: usize,
+        msg: Message,
+    ) -> Result<()> {
+        match msg {
+            Message::ZNorm { t: rt, worker, z_norm2 } => {
+                if rt as usize != t || worker as usize != widx {
+                    return Err(Error::Protocol(format!(
+                        "fusion: bad ZNorm (t={rt}, worker={worker}) expected \
+                         (t={t}, worker={widx})"
+                    )));
+                }
+                if z_norm2.len() != fu.b {
+                    return Err(Error::Protocol(format!(
+                        "fusion: {} z-norms from worker {widx}, batch is {}",
+                        z_norm2.len(),
+                        fu.b
+                    )));
+                }
+                for (acc, v) in fu.znorm.iter_mut().zip(&z_norm2) {
+                    *acc += v;
+                }
+                Ok(())
+            }
+            other => {
+                Err(Error::Protocol(format!("fusion: expected ZNorm, got {other:?}")))
+            }
+        }
+    }
+
+    fn stats(fu: &RowFusion, cfg: &RunConfig) -> Vec<RoundStat> {
+        let m = cfg.m as f64;
+        fu.znorm
+            .iter()
+            .map(|&zn| {
+                let s = zn / m;
+                RoundStat { sigma_d2_hat: s, msg_var: s }
+            })
+            .collect()
+    }
+
+    fn design_spec(
+        directive: &Directive,
+        se: &StateEvolution,
+        p_workers: usize,
+        stat: RoundStat,
+    ) -> Result<QuantSpec> {
+        spec_for_directive(directive, se, p_workers, stat.sigma_d2_hat, 8.0)
+    }
+
+    fn coder(
+        spec: &QuantSpec,
+        prior: &BernoulliGauss,
+        p_workers: usize,
+        codec: CodecKind,
+    ) -> Result<Option<EcsqCoder>> {
+        coder_for_spec(spec, prior, p_workers, codec)
+    }
+
+    fn sigma_q2(
+        spec: &QuantSpec,
+        se: &StateEvolution,
+        p_workers: usize,
+        stat: RoundStat,
+    ) -> f64 {
+        match spec {
+            QuantSpec::Ecsq { delta, .. } => delta * delta / 12.0,
+            QuantSpec::Raw => 0.0,
+            // Zero-rate: reconstruction is 0, per-worker error = Var(F^p).
+            QuantSpec::Skip => {
+                let (wch, ws2) =
+                    se.channel.worker_channel(stat.sigma_d2_hat, p_workers);
+                wch.var_f(ws2)
+            }
+        }
+    }
+
+    fn global_step(
+        fu: &mut RowFusion,
+        cfg: &RunConfig,
+        se: &StateEvolution,
+        engine: &dyn ComputeEngine,
+        sums: Vec<Vec<f32>>,
+        stats: &[RoundStat],
+        sigma_q2: &[f64],
+    ) -> Result<()> {
+        let n = fu.n;
+        for (j, f_sum) in sums.iter().enumerate() {
+            // Denoise at the quantization-aware effective noise level.
+            let sigma_eff2 = stats[j].sigma_d2_hat + cfg.p as f64 * sigma_q2[j];
+            let gc = engine.gc_step(f_sum, sigma_eff2)?;
+            fu.x[j * n..(j + 1) * n].copy_from_slice(&gc.x_next);
+            fu.coefs[j] = (gc.eta_prime_mean / se.kappa) as f32;
+        }
+        Ok(())
+    }
+
+    fn predicted_sigma(se: &StateEvolution, stat: RoundStat, p_sigma_q2: f64) -> f64 {
+        se.step_quantized(stat.sigma_d2_hat, p_sigma_q2)
+    }
+
+    fn x(fu: &RowFusion, sig: usize) -> &[f32] {
+        &fu.x[sig * fu.n..(sig + 1) * fu.n]
+    }
+
+    fn into_xs(fu: RowFusion) -> Vec<Vec<f32>> {
+        split_batch_vec(fu.x, fu.b)
+    }
+
+    fn worker_init(shard: &RowBatchData, batch: usize) -> RowWorker {
+        RowWorker { z_prev: vec![0f32; batch * shard.a.rows()] }
+    }
+
+    fn worker_serve(
+        params: &WorkerParams,
+        shard: &RowBatchData,
+        ws: &mut RowWorker,
+        engine: &dyn ComputeEngine,
+        msg: Message,
+    ) -> Result<(Message, Vec<Vec<f32>>)> {
+        match msg {
+            Message::StepCmd { t, coefs, x } => {
+                let b = params.batch;
+                let n = shard.a.cols();
+                if coefs.len() != b || x.len() != b * n {
+                    return Err(Error::Protocol(format!(
+                        "worker {}: StepCmd batch {} / x length {} do not match \
+                         batch {b} × N {n}",
+                        params.id,
+                        coefs.len(),
+                        x.len()
+                    )));
+                }
+                let out = engine.lc_step_batch(
+                    shard,
+                    &x,
+                    &ws.z_prev,
+                    &coefs,
+                    params.p_workers,
+                )?;
+                ws.z_prev = out.z;
+                let reply =
+                    Message::ZNorm { t, worker: params.id, z_norm2: out.z_norm2 };
+                Ok((reply, split_batch_vec(out.f, b)))
+            }
+            other => Err(Error::Protocol(format!(
+                "worker {}: unexpected message {other:?}",
+                params.id
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Column-wise C-MP-AMP (Ma, Lu & Baron 2017)
+// ---------------------------------------------------------------------
+
+/// Column-partitioned C-MP-AMP: workers own column blocks and denoise
+/// locally; the fusion center owns `y`, broadcasts the combined residual,
+/// and workers uplink partial residuals `u_t^p = A^p x_t^p` (length `M`).
+#[derive(Debug, Clone, Copy)]
+pub struct Column;
+
+/// Fusion state of the column scenario: the measurements, combined
+/// residuals, assembled estimates, and the round's scalar accumulators.
+#[derive(Debug, Clone)]
+pub struct ColumnFusion {
+    n: usize,
+    m: usize,
+    b: usize,
+    /// Measurements, `B × M` column-major.
+    y: Vec<f32>,
+    /// Combined residuals, `B × M` column-major.
+    z: Vec<f32>,
+    /// Assembled estimates (from the eval shards), `B × N` column-major.
+    x: Vec<f32>,
+    /// Per-signal σ̂² = ‖z_j‖²/M (computed at broadcast time).
+    sigma_d2: Vec<f64>,
+    /// Per-signal Σ_p ‖u^p_j‖² accumulators (reset each round).
+    unorm: Vec<f64>,
+    /// Per-signal Σ_p mean(η′) accumulators (reset each round).
+    deriv: Vec<f64>,
+}
+
+/// Worker state of the column scenario: the local estimate blocks.
+#[derive(Debug, Clone)]
+pub struct ColumnWorker {
+    /// Local estimate blocks, `B × (N/P)` column-major.
+    x: Vec<f32>,
+}
+
+impl Scenario for Column {
+    type Shard = ColumnWorkerData;
+    type Fusion = ColumnFusion;
+    type WorkerState = ColumnWorker;
+
+    const NAME: &'static str = "column";
+
+    fn split(batch: &Batch, p: usize) -> Result<Vec<ColumnWorkerData>> {
+        ColumnWorkerData::try_split(&batch.a, p)
+    }
+
+    fn init(batch: &Batch, cfg: &RunConfig) -> ColumnFusion {
+        let b = batch.batch();
+        let m = cfg.m;
+        let mut y = Vec::with_capacity(b * m);
+        for yj in &batch.y {
+            y.extend_from_slice(yj);
+        }
+        // The residual starts at y (the estimate is all-zero), matching
+        // centralized AMP's first iteration exactly.
+        ColumnFusion {
+            n: cfg.n,
+            m,
+            b,
+            z: y.clone(),
+            y,
+            x: vec![0f32; b * cfg.n],
+            sigma_d2: vec![0f64; b],
+            unorm: vec![0f64; b],
+            deriv: vec![0f64; b],
+        }
+    }
+
+    fn uplink_len(cfg: &RunConfig) -> usize {
+        cfg.m
+    }
+
+    fn begin_round(fu: &mut ColumnFusion, _cfg: &RunConfig, t: usize) -> Message {
+        let m = fu.m;
+        for j in 0..fu.b {
+            fu.sigma_d2[j] =
+                crate::linalg::norm2_sq(&fu.z[j * m..(j + 1) * m]) / m as f64;
+        }
+        fu.unorm.iter_mut().for_each(|v| *v = 0.0);
+        fu.deriv.iter_mut().for_each(|v| *v = 0.0);
+        // Broadcast the residuals + the denoisers' effective noise levels
+        // (the residual variance already carries the quantization noise of
+        // previous iterations — see `StateEvolution::column_residual_step`).
+        Message::ColStep {
+            t: t as u32,
+            sigma_eff2: fu.sigma_d2.clone(),
+            z: fu.z.clone(),
+        }
+    }
+
+    fn absorb(
+        fu: &mut ColumnFusion,
+        cfg: &RunConfig,
+        t: usize,
+        widx: usize,
+        msg: Message,
+    ) -> Result<()> {
+        let np = cfg.n / cfg.p;
+        match msg {
+            Message::ColScalars { t: rt, worker, u_norm2, eta_prime_mean, x_shard } => {
+                if rt as usize != t || worker as usize != widx {
+                    return Err(Error::Protocol(format!(
+                        "fusion: bad ColScalars (t={rt}, worker={worker}) expected \
+                         (t={t}, worker={widx})"
+                    )));
+                }
+                if u_norm2.len() != fu.b
+                    || eta_prime_mean.len() != fu.b
+                    || x_shard.len() != fu.b * np
+                {
+                    return Err(Error::Protocol(format!(
+                        "fusion: ColScalars batch sizes ({}, {}, {}) from worker \
+                         {widx} do not match batch {} × N/P {np}",
+                        u_norm2.len(),
+                        eta_prime_mean.len(),
+                        x_shard.len(),
+                        fu.b
+                    )));
+                }
+                for j in 0..fu.b {
+                    fu.unorm[j] += u_norm2[j];
+                    fu.deriv[j] += eta_prime_mean[j];
+                    fu.x[j * fu.n + widx * np..j * fu.n + (widx + 1) * np]
+                        .copy_from_slice(&x_shard[j * np..(j + 1) * np]);
+                }
+                Ok(())
+            }
+            other => Err(Error::Protocol(format!(
+                "fusion: expected ColScalars, got {other:?}"
+            ))),
+        }
+    }
+
+    fn stats(fu: &ColumnFusion, cfg: &RunConfig) -> Vec<RoundStat> {
+        // Empirical message variance v̂ = Σ‖u^p‖²/(P·M) — the quantizer's
+        // model channel (the same CLT-Gaussian for every worker). The
+        // directive still resolves on the residual variance, the SE state
+        // variable the allocators understand; see the PR 2 notes on this
+        // deliberate approximation in `config::Partitioning::Column`.
+        let pm = (cfg.p * cfg.m) as f64;
+        (0..fu.b)
+            .map(|j| RoundStat {
+                sigma_d2_hat: fu.sigma_d2[j],
+                msg_var: fu.unorm[j] / pm,
+            })
+            .collect()
+    }
+
+    fn design_spec(
+        directive: &Directive,
+        _se: &StateEvolution,
+        _p_workers: usize,
+        stat: RoundStat,
+    ) -> Result<QuantSpec> {
+        column_spec_for_directive(directive, stat.msg_var, 8.0)
+    }
+
+    fn coder(
+        spec: &QuantSpec,
+        _prior: &BernoulliGauss,
+        _p_workers: usize,
+        codec: CodecKind,
+    ) -> Result<Option<EcsqCoder>> {
+        column_coder_for_spec(spec, codec)
+    }
+
+    fn sigma_q2(
+        spec: &QuantSpec,
+        _se: &StateEvolution,
+        _p_workers: usize,
+        stat: RoundStat,
+    ) -> f64 {
+        match spec {
+            QuantSpec::Ecsq { delta, .. } => delta * delta / 12.0,
+            QuantSpec::Raw => 0.0,
+            // Zero-rate: reconstruction is 0, per-worker error = Var(U^p).
+            QuantSpec::Skip => stat.msg_var,
+        }
+    }
+
+    fn global_step(
+        fu: &mut ColumnFusion,
+        cfg: &RunConfig,
+        se: &StateEvolution,
+        _engine: &dyn ComputeEngine,
+        sums: Vec<Vec<f32>>,
+        _stats: &[RoundStat],
+        _sigma_q2: &[f64],
+    ) -> Result<()> {
+        // Onsager-corrected residual update with the aggregated η′ mean
+        // (equal-size blocks ⇒ the mean of per-block means is the global
+        // mean): z_{t+1} = y − Σ û^p + coef·z_t, per signal.
+        let m = fu.m;
+        for (j, u_sum) in sums.iter().enumerate() {
+            let coef = ((fu.deriv[j] / cfg.p as f64) / se.kappa) as f32;
+            for i in 0..m {
+                let k = j * m + i;
+                fu.z[k] = fu.y[k] - u_sum[i] + coef * fu.z[k];
+            }
+        }
+        Ok(())
+    }
+
+    fn predicted_sigma(se: &StateEvolution, stat: RoundStat, _p_sigma_q2: f64) -> f64 {
+        // The estimate x_{t+1} saw the residual at σ̂², so its predicted
+        // quality is one plain SE step from there; the new quantization
+        // noise shows up in the *next* residual.
+        se.step(stat.sigma_d2_hat)
+    }
+
+    fn x(fu: &ColumnFusion, sig: usize) -> &[f32] {
+        &fu.x[sig * fu.n..(sig + 1) * fu.n]
+    }
+
+    fn into_xs(fu: ColumnFusion) -> Vec<Vec<f32>> {
+        split_batch_vec(fu.x, fu.b)
+    }
+
+    fn worker_init(shard: &ColumnWorkerData, batch: usize) -> ColumnWorker {
+        ColumnWorker { x: vec![0f32; batch * shard.a.cols()] }
+    }
+
+    fn worker_serve(
+        params: &WorkerParams,
+        shard: &ColumnWorkerData,
+        ws: &mut ColumnWorker,
+        engine: &dyn ComputeEngine,
+        msg: Message,
+    ) -> Result<(Message, Vec<Vec<f32>>)> {
+        match msg {
+            Message::ColStep { t, sigma_eff2, z } => {
+                let b = params.batch;
+                let m = shard.a.rows();
+                if sigma_eff2.len() != b || z.len() != b * m {
+                    return Err(Error::Protocol(format!(
+                        "worker {}: ColStep batch {} / z length {} do not match \
+                         batch {b} × M {m}",
+                        params.id,
+                        sigma_eff2.len(),
+                        z.len()
+                    )));
+                }
+                let out = engine.col_lc_step_batch(shard, b, &ws.x, &z, &sigma_eff2)?;
+                ws.x = out.x_next;
+                let reply = Message::ColScalars {
+                    t,
+                    worker: params.id,
+                    u_norm2: out.u_norm2,
+                    eta_prime_mean: out.eta_prime_mean,
+                    x_shard: ws.x.clone(),
+                };
+                Ok((reply, split_batch_vec(out.u, b)))
+            }
+            other => Err(Error::Protocol(format!(
+                "worker {}: unexpected message {other:?}",
+                params.id
+            ))),
+        }
+    }
+}

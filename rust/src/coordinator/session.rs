@@ -1,12 +1,18 @@
-//! Session orchestration: generate (or accept) a problem instance, shard it
+//! Session orchestration: generate (or accept) a signal batch, shard it
 //! across `P` worker threads, and drive the fusion protocol — either one
 //! iteration at a time via [`Session::step`] (observable, stoppable) or to
 //! completion via [`Session::run`] (a thin loop over `step`), producing a
 //! [`RunReport`] with per-iteration quality and exact communication costs.
 //!
+//! Sessions carry `B ≥ 1` signal instances end-to-end (`cfg.batch`): all
+//! `B` signals share one sensing matrix, every protocol round moves the
+//! whole batch in one message per link, and the engine's blocked kernels
+//! amortize each pass over `A` across the batch. `B = 1` reproduces the
+//! single-signal protocol bit-for-bit.
+//!
 //! Construct sessions with [`SessionBuilder`](crate::SessionBuilder); the
-//! `new`/`with_instance` constructors remain for callers that already hold
-//! a validated [`RunConfig`].
+//! `new`/`with_instance`/`with_batch` constructors remain for callers that
+//! already hold a validated [`RunConfig`].
 
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -14,26 +20,31 @@ use std::time::Instant;
 
 use crate::alloc::schedule::RateController;
 use crate::config::{EngineKind, Partitioning, RunConfig, ScheduleKind, TransportKind};
-use crate::coordinator::fusion::{ColumnFusionState, FusionState, ProtocolState};
+use crate::coordinator::fusion::ProtocolState;
 use crate::coordinator::message::Message;
+use crate::coordinator::scenario::{Column, Row, Scenario};
 use crate::coordinator::transport::{inproc_pair, tcp_connect, Endpoint, TcpFusionListener};
-use crate::coordinator::worker::{run_column_worker, run_worker, WorkerParams};
-use crate::engine::{ColumnWorkerData, ComputeEngine, RustEngine, WorkerData};
+use crate::coordinator::worker::{run_scenario_worker, WorkerParams};
+use crate::engine::{ComputeEngine, RustEngine};
 use crate::error::{Error, Result};
 use crate::metrics::{ByteMeter, Csv, IterRecord, Json};
 use crate::observe::{NullObserver, RunObserver, StopSet};
 use crate::rd::RdCache;
 use crate::se::StateEvolution;
-use crate::signal::{Instance, ProblemDims};
+use crate::signal::{Batch, Instance, ProblemDims};
 use crate::util::rng::Rng;
 
 /// Result of one MP-AMP run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
-    /// Per-iteration records.
+    /// Per-iteration records (per-signal quantities as batch means).
     pub iters: Vec<IterRecord>,
-    /// Final estimate.
-    pub final_x: Vec<f32>,
+    /// Final estimates, one per signal in the batch.
+    pub final_xs: Vec<Vec<f32>>,
+    /// Final per-signal SDR in dB (same order as `final_xs`).
+    pub sdr_db_per_signal: Vec<f64>,
+    /// Number of signal instances processed end-to-end.
+    pub batch: usize,
     /// Problem size (N, M, P).
     pub dims: (usize, usize, usize),
     /// Schedule name.
@@ -55,13 +66,26 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// Final-iteration SDR in dB.
+    /// Final estimate of the batch's first signal (the whole-report view
+    /// for `B = 1` runs; batched callers index [`RunReport::final_xs`]).
+    pub fn final_x(&self) -> &[f32] {
+        &self.final_xs[0]
+    }
+
+    /// Final-iteration SDR in dB (batch mean).
     pub fn final_sdr_db(&self) -> f64 {
         self.iters.last().map(|r| r.sdr_db).unwrap_or(f64::NAN)
     }
 
+    /// Aggregate throughput: signal instances recovered per wall-clock
+    /// second. The headline number batching moves.
+    pub fn signals_per_s(&self) -> f64 {
+        self.batch as f64 / self.wall_s.max(1e-12)
+    }
+
     /// The paper's headline metric: total uplink bits per element of
-    /// `f_t^p` (sum over iterations of the measured per-element wire rate).
+    /// the uplinked message (sum over iterations of the measured
+    /// per-element wire rate; batched elements included in the base).
     pub fn total_uplink_bits_per_element(&self) -> f64 {
         self.iters.iter().map(|r| r.rate_wire).sum()
     }
@@ -71,16 +95,17 @@ impl RunReport {
         self.iters.iter().map(|r| r.rate_alloc).sum()
     }
 
-    /// Total uplink *payload* bytes across all workers and iterations —
-    /// the coded message bits only (the paper's cost metric). This is the
-    /// number to compare across partitionings: `transport_uplink_bits`
-    /// additionally counts protocol headers and, in column mode, the
-    /// eval-only estimate shards that ride the wire for reporting.
+    /// Total uplink *payload* bytes across all workers, signals, and
+    /// iterations — the coded message bits only (the paper's cost metric).
+    /// This is the number to compare across partitionings:
+    /// `transport_uplink_bits` additionally counts protocol headers and,
+    /// in column mode, the eval-only estimate shards that ride the wire
+    /// for reporting.
     pub fn uplink_payload_bytes(&self) -> u64 {
         let msg_len =
             if self.partitioning == "column" { self.dims.1 } else { self.dims.0 };
-        let bits =
-            self.total_uplink_bits_per_element() * (self.dims.2 * msg_len) as f64;
+        let bits = self.total_uplink_bits_per_element()
+            * (self.dims.2 * msg_len * self.batch.max(1)) as f64;
         (bits / 8.0).round() as u64
     }
 
@@ -123,16 +148,22 @@ impl RunReport {
             .set("n", Json::Num(self.dims.0 as f64))
             .set("m", Json::Num(self.dims.1 as f64))
             .set("p", Json::Num(self.dims.2 as f64))
+            .set("batch", Json::Num(self.batch as f64))
             .set("schedule", Json::Str(self.schedule.clone()))
             .set("engine", Json::Str(self.engine.clone()))
             .set("partitioning", Json::Str(self.partitioning.clone()))
             .set("iters", Json::Num(self.iters.len() as f64))
             .set("final_sdr_db", Json::Num(self.final_sdr_db()))
             .set(
+                "sdr_db_per_signal",
+                Json::Arr(self.sdr_db_per_signal.iter().map(|&v| Json::Num(v)).collect()),
+            )
+            .set(
                 "total_bits_per_element",
                 Json::Num(self.total_uplink_bits_per_element()),
             )
             .set("savings_vs_float_pct", Json::Num(self.savings_vs_float_pct()))
+            .set("signals_per_s", Json::Num(self.signals_per_s()))
             .set(
                 "stopped_early",
                 match &self.stopped_early {
@@ -150,7 +181,7 @@ impl RunReport {
 pub struct IterSnapshot {
     /// The iteration's record (quality, rates, σ estimates, timing).
     pub record: IterRecord,
-    /// Measured uplink spend so far, bits per element of `f_t^p`.
+    /// Measured uplink spend so far, bits per element of the uplink.
     pub cum_wire_bits_per_element: f64,
     /// Allocated (analytic) spend so far, bits per element.
     pub cum_alloc_bits_per_element: f64,
@@ -162,7 +193,7 @@ impl IterSnapshot {
         self.record.t
     }
 
-    /// Empirical SDR after this iteration, dB.
+    /// Empirical SDR after this iteration, dB (batch mean).
     pub fn sdr_db(&self) -> f64 {
         self.record.sdr_db
     }
@@ -200,7 +231,7 @@ struct Active {
 /// ```
 pub struct Session {
     cfg: RunConfig,
-    instance: Arc<Instance>,
+    batch: Arc<Batch>,
     se: StateEvolution,
     cache: Option<RdCache>,
     engine: Arc<dyn ComputeEngine>,
@@ -217,34 +248,63 @@ pub struct Session {
 pub type MpAmpSession = Session;
 
 impl Session {
-    /// Build from a config (generates the instance from the config's seed).
+    /// Build from a config (generates a `cfg.batch`-signal batch from the
+    /// config's seed).
     pub fn new(cfg: RunConfig) -> Result<Self> {
         cfg.validate()?;
         let mut rng = Rng::new(cfg.seed);
-        let instance = Instance::generate(
+        let batch = Batch::generate(
             cfg.prior,
             ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
             &mut rng,
+            cfg.batch,
         )?;
-        Self::with_instance(cfg, instance)
+        Self::with_batch(cfg, batch)
     }
 
-    /// Build around an existing instance (benches reuse one instance
-    /// across schedules — pass an `Arc<Instance>` to share it without
-    /// cloning the sensing matrix).
+    /// Build around an existing single instance (requires
+    /// `cfg.batch == 1`). A uniquely-owned `Arc` is unwrapped without
+    /// copying the sensing matrix; a **shared** `Arc<Instance>` must be
+    /// deep-cloned into the session's batch — callers that reuse one
+    /// problem across sessions should share an `Arc<Batch>` via
+    /// [`with_batch`](Session::with_batch) (or
+    /// `SessionBuilder::signal_batch`) instead, which shares `A` with no
+    /// copy.
     pub fn with_instance(
         cfg: RunConfig,
         instance: impl Into<Arc<Instance>>,
     ) -> Result<Self> {
-        cfg.validate()?;
-        let instance: Arc<Instance> = instance.into();
-        if instance.a.rows() != cfg.m || instance.a.cols() != cfg.n {
+        if cfg.batch != 1 {
             return Err(Error::Config(format!(
-                "instance shape ({}, {}) does not match config (M={}, N={})",
-                instance.a.rows(),
-                instance.a.cols(),
+                "with_instance carries one signal but cfg.batch = {}; use \
+                 with_batch for batched sessions",
+                cfg.batch
+            )));
+        }
+        let instance: Arc<Instance> = instance.into();
+        let inst = Arc::try_unwrap(instance).unwrap_or_else(|arc| (*arc).clone());
+        Self::with_batch(cfg, Batch::from_instance(inst))
+    }
+
+    /// Build around an existing signal batch (`cfg.batch` must match).
+    pub fn with_batch(cfg: RunConfig, batch: impl Into<Arc<Batch>>) -> Result<Self> {
+        cfg.validate()?;
+        let batch: Arc<Batch> = batch.into();
+        batch.validate()?;
+        if batch.a.rows() != cfg.m || batch.a.cols() != cfg.n {
+            return Err(Error::Config(format!(
+                "batch shape ({}, {}) does not match config (M={}, N={})",
+                batch.a.rows(),
+                batch.a.cols(),
                 cfg.m,
                 cfg.n
+            )));
+        }
+        if batch.batch() != cfg.batch {
+            return Err(Error::Config(format!(
+                "batch holds {} signals but cfg.batch = {}",
+                batch.batch(),
+                cfg.batch
             )));
         }
         let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
@@ -274,7 +334,7 @@ impl Session {
         };
         Ok(Session {
             cfg,
-            instance,
+            batch,
             se,
             cache,
             engine,
@@ -284,9 +344,9 @@ impl Session {
         })
     }
 
-    /// Access the underlying instance (e.g. for external SDR checks).
-    pub fn instance(&self) -> &Instance {
-        self.instance.as_ref()
+    /// Access the underlying signal batch (e.g. for external SDR checks).
+    pub fn batch(&self) -> &Batch {
+        self.batch.as_ref()
     }
 
     /// The state-evolution engine for this session's problem.
@@ -304,9 +364,36 @@ impl Session {
         self.active.as_ref().map(|a| a.records.as_slice()).unwrap_or(&[])
     }
 
-    /// The current estimate `x_t` (zeros before the first step).
+    /// The current estimate of the batch's first signal (zeros before the
+    /// first step).
     pub fn current_x(&self) -> Option<&[f32]> {
-        self.active.as_ref().map(|a| a.state.x())
+        self.active.as_ref().map(|a| a.state.x(0))
+    }
+
+    /// Spawn the worker threads for one scenario over its shards.
+    fn spawn_workers<S: Scenario>(
+        &self,
+        worker_eps: Vec<Endpoint>,
+    ) -> Result<Vec<JoinHandle<Result<usize>>>> {
+        let cfg = &self.cfg;
+        let shards = S::split(self.batch.as_ref(), cfg.p)?;
+        let mut workers = Vec::with_capacity(cfg.p);
+        for (id, (shard, mut ep)) in
+            shards.into_iter().zip(worker_eps.into_iter()).enumerate()
+        {
+            let params = WorkerParams {
+                id: id as u32,
+                p_workers: cfg.p,
+                batch: cfg.batch,
+                prior: cfg.prior,
+                codec: cfg.codec,
+            };
+            let engine = self.engine.clone();
+            workers.push(std::thread::spawn(move || {
+                run_scenario_worker::<S>(&params, &shard, engine.as_ref(), &mut ep)
+            }));
+        }
+        Ok(workers)
     }
 
     /// Spawn workers and transports; called lazily by the first `step`.
@@ -344,53 +431,13 @@ impl Session {
 
         // Spawn the worker threads; they serve protocol rounds until the
         // fusion side broadcasts `Done` (or their endpoint drops). The
-        // partitioning picks the shard type and the worker loop.
-        let mut workers = Vec::with_capacity(cfg.p);
-        match cfg.partitioning {
-            Partitioning::Row => {
-                let shards =
-                    WorkerData::try_split(&self.instance.a, &self.instance.y, cfg.p)?;
-                for (id, (shard, mut ep)) in
-                    shards.into_iter().zip(worker_eps.into_iter()).enumerate()
-                {
-                    let params = WorkerParams {
-                        id: id as u32,
-                        p_workers: cfg.p,
-                        prior: cfg.prior,
-                        codec: cfg.codec,
-                    };
-                    let engine = self.engine.clone();
-                    workers.push(std::thread::spawn(move || {
-                        run_worker(&params, &shard, engine.as_ref(), &mut ep)
-                    }));
-                }
-            }
-            Partitioning::Column => {
-                let shards = ColumnWorkerData::try_split(&self.instance.a, cfg.p)?;
-                for (id, (shard, mut ep)) in
-                    shards.into_iter().zip(worker_eps.into_iter()).enumerate()
-                {
-                    let params = WorkerParams {
-                        id: id as u32,
-                        p_workers: cfg.p,
-                        prior: cfg.prior,
-                        codec: cfg.codec,
-                    };
-                    let engine = self.engine.clone();
-                    workers.push(std::thread::spawn(move || {
-                        run_column_worker(&params, &shard, engine.as_ref(), &mut ep)
-                    }));
-                }
-            }
-        }
-
-        let state = match cfg.partitioning {
-            Partitioning::Row => ProtocolState::Row(FusionState::new(cfg.n)),
-            Partitioning::Column => ProtocolState::Column(ColumnFusionState::new(
-                self.instance.y.clone(),
-                cfg.n,
-            )),
+        // partitioning picks the scenario (and with it the shard type,
+        // worker loop, and fusion core) — everything else is generic.
+        let workers = match cfg.partitioning {
+            Partitioning::Row => self.spawn_workers::<Row>(worker_eps)?,
+            Partitioning::Column => self.spawn_workers::<Column>(worker_eps)?,
         };
+        let state = ProtocolState::new(self.batch.as_ref(), cfg);
         self.active = Some(Active {
             controller,
             meter,
@@ -404,7 +451,7 @@ impl Session {
         Ok(())
     }
 
-    /// Advance the protocol by exactly one iteration.
+    /// Advance the protocol by exactly one iteration (all `B` signals).
     ///
     /// Returns `Ok(Some(snapshot))` for a completed iteration and
     /// `Ok(None)` once `cfg.iters` iterations have run (the session is
@@ -435,7 +482,7 @@ impl Session {
             self.cache.as_ref(),
             self.engine.as_ref(),
             &mut act.endpoints,
-            Some(self.instance.as_ref()),
+            Some(self.batch.as_ref()),
         );
         match stepped {
             Ok(record) => {
@@ -528,9 +575,17 @@ impl Session {
             return Err(e);
         }
         self.finished = true;
+        let final_xs = act.state.into_xs();
+        let sdr_db_per_signal: Vec<f64> = final_xs
+            .iter()
+            .enumerate()
+            .map(|(j, x)| self.batch.sdr_db(j, x))
+            .collect();
         Ok(RunReport {
             iters: act.records,
-            final_x: act.state.into_x(),
+            final_xs,
+            sdr_db_per_signal,
+            batch: self.cfg.batch,
             dims: (self.cfg.n, self.cfg.m, self.cfg.p),
             schedule: act.controller.name().to_string(),
             engine: self.engine.name().to_string(),
@@ -766,6 +821,42 @@ mod tests {
         assert!(
             (snaps.last().unwrap().cum_wire_bits_per_element - total).abs() < 1e-12
         );
+    }
+
+    #[test]
+    fn batched_session_runs_and_reports_per_signal() {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.batch = 3;
+        cfg.schedule = ScheduleKind::Fixed { bits: 4.0 };
+        let r = Session::new(cfg).unwrap().run().unwrap();
+        assert_eq!(r.batch, 3);
+        assert_eq!(r.final_xs.len(), 3);
+        assert_eq!(r.sdr_db_per_signal.len(), 3);
+        for (j, &sdr) in r.sdr_db_per_signal.iter().enumerate() {
+            assert!(sdr > 5.0, "signal {j}: SDR {sdr}");
+        }
+        // The record's SDR is the batch mean of the per-signal finals.
+        let mean: f64 = r.sdr_db_per_signal.iter().sum::<f64>() / 3.0;
+        assert!((r.final_sdr_db() - mean).abs() < 1e-9);
+        assert!(r.signals_per_s() > 0.0);
+        let json = r.to_json().render();
+        assert!(json.contains("\"batch\":3"), "{json}");
+        assert!(json.contains("\"signals_per_s\""), "{json}");
+    }
+
+    #[test]
+    fn with_instance_rejects_batched_config() {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.batch = 2;
+        let mut rng = Rng::new(1);
+        let inst = Instance::generate(
+            cfg.prior,
+            ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+            &mut rng,
+        )
+        .unwrap();
+        let err = Session::with_instance(cfg, inst).unwrap_err();
+        assert!(err.to_string().contains("with_batch"), "{err}");
     }
 
     #[test]

@@ -2,20 +2,31 @@
 //!
 //! Two implementations of the same [`Channel`] trait:
 //! * [`inproc_pair`] — `std::sync::mpsc` channels (default; zero-copy-ish),
-//! * [`tcp_pair_listener`]/[`tcp_pair_connect`] — length-prefixed frames
-//!   over TCP loopback, demonstrating the protocol works across real
-//!   sockets (`examples/tcp_cluster.rs`).
+//! * [`TcpFusionListener`]/[`tcp_connect`] — length-prefixed frames over
+//!   TCP loopback, demonstrating the protocol works across real sockets
+//!   (`examples/tcp_cluster.rs`).
 //!
 //! Every [`Endpoint`] owns one side of a duplex link and a shared
 //! [`ByteMeter`]: worker-side sends count as uplink, fusion-side sends as
 //! downlink, so the run report's communication accounting is exact.
+//!
+//! ## TCP hardening
+//!
+//! The TCP paths never block forever on a dead peer. [`TcpTimeouts`]
+//! bounds connection establishment, the fusion-side accept loop, and
+//! (optionally) every blocking read; expiry surfaces as
+//! [`Error::Transport`] instead of a hang. Workers identify themselves
+//! with a 5-byte hello `[PROTOCOL_VERSION, worker_id: u32 LE]`; a peer
+//! speaking a different protocol version is rejected at accept time with
+//! a clear error rather than decoding garbage frames later.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
-use crate::coordinator::message::Message;
+use crate::coordinator::message::{Message, PROTOCOL_VERSION};
 use crate::error::{Error, Result};
 use crate::metrics::ByteMeter;
 
@@ -108,53 +119,105 @@ pub fn inproc_pair(meter: Arc<ByteMeter>) -> (Endpoint, Endpoint) {
 
 // ---------- TCP transport ----------
 
+/// Timeout policy for the TCP transport. Every limit surfaces as
+/// [`Error::Transport`] when it expires — nothing blocks forever on a
+/// dead peer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TcpTimeouts {
+    /// Limit on establishing a worker→fusion connection.
+    pub connect: Duration,
+    /// Limit on the fusion side waiting for all workers to connect and
+    /// say hello.
+    pub accept: Duration,
+    /// Limit on any single blocking frame read once the link is up;
+    /// `None` waits forever (an idle worker legitimately blocks between
+    /// rounds, so per-read timeouts are opt-in).
+    pub read: Option<Duration>,
+}
+
+impl Default for TcpTimeouts {
+    fn default() -> Self {
+        TcpTimeouts {
+            connect: Duration::from_secs(10),
+            accept: Duration::from_secs(30),
+            read: None,
+        }
+    }
+}
+
 struct TcpChannel {
     stream: TcpStream,
+    read_timeout: Option<Duration>,
 }
 
 impl TcpChannel {
-    fn new(stream: TcpStream) -> Result<Self> {
+    fn new(stream: TcpStream, read_timeout: Option<Duration>) -> Result<Self> {
         stream.set_nodelay(true).map_err(Error::Io)?;
-        Ok(TcpChannel { stream })
+        stream.set_read_timeout(read_timeout).map_err(Error::Io)?;
+        Ok(TcpChannel { stream, read_timeout })
+    }
+
+    fn read_exact_deadlined(&mut self, buf: &mut [u8]) -> Result<()> {
+        self.stream.read_exact(buf).map_err(|e| {
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) {
+                Error::Transport(format!(
+                    "tcp read timed out after {:?} (peer silent)",
+                    self.read_timeout.unwrap_or_default()
+                ))
+            } else {
+                Error::Io(e)
+            }
+        })
     }
 }
 
 impl Channel for TcpChannel {
     fn send_bytes(&mut self, buf: &[u8]) -> Result<()> {
-        let mut hdr = [0u8; 4];
-        byteorder::LittleEndian::write_u32(&mut hdr, buf.len() as u32);
+        let hdr = (buf.len() as u32).to_le_bytes();
         self.stream.write_all(&hdr)?;
         self.stream.write_all(buf)?;
         Ok(())
     }
 
     fn recv_bytes(&mut self) -> Result<Vec<u8>> {
-        use byteorder::ByteOrder;
         let mut hdr = [0u8; 4];
-        self.stream.read_exact(&mut hdr)?;
-        let len = byteorder::LittleEndian::read_u32(&hdr) as usize;
+        self.read_exact_deadlined(&mut hdr)?;
+        let len = u32::from_le_bytes(hdr) as usize;
         if len > 1 << 30 {
             return Err(Error::Transport(format!("oversized frame: {len} bytes")));
         }
         let mut buf = vec![0u8; len];
-        self.stream.read_exact(&mut buf)?;
+        self.read_exact_deadlined(&mut buf)?;
         Ok(buf)
     }
 }
 
-use byteorder::ByteOrder as _;
-
 /// Fusion-side TCP listener: bind first (so the address is known), then
-/// block in [`TcpFusionListener::accept_all`] while workers connect.
+/// block in [`TcpFusionListener::accept_all`] — bounded by the accept
+/// timeout — while workers connect.
 pub struct TcpFusionListener {
     listener: TcpListener,
     n_workers: usize,
+    timeouts: TcpTimeouts,
 }
 
 impl TcpFusionListener {
-    /// Bind on `addr` ("127.0.0.1:0" for an ephemeral port).
+    /// Bind on `addr` ("127.0.0.1:0" for an ephemeral port) with default
+    /// timeouts.
     pub fn bind(addr: &str, n_workers: usize) -> Result<Self> {
-        Ok(TcpFusionListener { listener: TcpListener::bind(addr)?, n_workers })
+        Self::bind_with(addr, n_workers, TcpTimeouts::default())
+    }
+
+    /// Bind with an explicit timeout policy.
+    pub fn bind_with(addr: &str, n_workers: usize, timeouts: TcpTimeouts) -> Result<Self> {
+        Ok(TcpFusionListener {
+            listener: TcpListener::bind(addr)?,
+            n_workers,
+            timeouts,
+        })
     }
 
     /// The bound address workers should connect to.
@@ -162,39 +225,110 @@ impl TcpFusionListener {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Accept all workers; returns endpoints **in worker-id order**
-    /// (workers identify themselves with a 4-byte hello).
+    /// Accept all workers; returns endpoints **in worker-id order**.
+    /// Workers identify themselves with the 5-byte versioned hello; a
+    /// version mismatch, duplicate id, or expired accept timeout is an
+    /// [`Error::Transport`].
     pub fn accept_all(self, meter: Arc<ByteMeter>) -> Result<Vec<Endpoint>> {
+        let deadline = Instant::now() + self.timeouts.accept;
+        self.listener.set_nonblocking(true).map_err(Error::Io)?;
         let mut slots: Vec<Option<Endpoint>> = (0..self.n_workers).map(|_| None).collect();
-        for _ in 0..self.n_workers {
-            let (mut stream, _) = self.listener.accept()?;
-            let mut hello = [0u8; 4];
-            stream.read_exact(&mut hello)?;
-            let id = byteorder::LittleEndian::read_u32(&hello) as usize;
+        let mut accepted = 0usize;
+        while accepted < self.n_workers {
+            let mut stream = match self.listener.accept() {
+                Ok((stream, _)) => stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Err(Error::Transport(format!(
+                            "tcp accept timed out after {:?} ({accepted}/{} workers \
+                             connected)",
+                            self.timeouts.accept, self.n_workers
+                        )));
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                    continue;
+                }
+                Err(e) => return Err(Error::Io(e)),
+            };
+            stream.set_nonblocking(false).map_err(Error::Io)?;
+            // The hello read is bounded by whatever accept budget remains.
+            let remaining = deadline
+                .saturating_duration_since(Instant::now())
+                .max(Duration::from_millis(1));
+            stream.set_read_timeout(Some(remaining)).map_err(Error::Io)?;
+            // Read the version byte *before* the id so a pre-versioning
+            // peer (whose 4-byte hello starts with its worker-id byte) is
+            // rejected from its first byte instead of stalling the accept
+            // loop waiting for bytes it will never send.
+            let mut version = [0u8; 1];
+            stream.read_exact(&mut version).map_err(|e| {
+                Error::Transport(format!("tcp hello read failed: {e}"))
+            })?;
+            if version[0] != PROTOCOL_VERSION {
+                return Err(Error::Transport(format!(
+                    "protocol version mismatch: peer speaks v{}, this build \
+                     speaks v{PROTOCOL_VERSION} — upgrade the older side",
+                    version[0]
+                )));
+            }
+            let mut id_bytes = [0u8; 4];
+            stream.read_exact(&mut id_bytes).map_err(|e| {
+                Error::Transport(format!("tcp hello read failed: {e}"))
+            })?;
+            let id = u32::from_le_bytes(id_bytes) as usize;
             if id >= self.n_workers || slots[id].is_some() {
                 return Err(Error::Transport(format!("bad worker hello id {id}")));
             }
             slots[id] = Some(Endpoint::new(
-                Box::new(TcpChannel::new(stream)?),
+                Box::new(TcpChannel::new(stream, self.timeouts.read)?),
                 meter.clone(),
                 Side::Fusion,
             ));
+            accepted += 1;
         }
         Ok(slots.into_iter().map(|s| s.unwrap()).collect())
     }
 }
 
-/// Worker side: connect to the fusion listener and identify as `worker_id`.
+/// Worker side: connect to the fusion listener (default timeouts) and
+/// identify as `worker_id` with the versioned hello.
 pub fn tcp_connect(
     addr: std::net::SocketAddr,
     worker_id: u32,
     meter: Arc<ByteMeter>,
 ) -> Result<Endpoint> {
-    let mut stream = TcpStream::connect(addr)?;
-    let mut hello = [0u8; 4];
-    byteorder::LittleEndian::write_u32(&mut hello, worker_id);
+    tcp_connect_with(addr, worker_id, meter, TcpTimeouts::default())
+}
+
+/// Worker side with an explicit timeout policy.
+pub fn tcp_connect_with(
+    addr: std::net::SocketAddr,
+    worker_id: u32,
+    meter: Arc<ByteMeter>,
+    timeouts: TcpTimeouts,
+) -> Result<Endpoint> {
+    let mut stream = TcpStream::connect_timeout(&addr, timeouts.connect).map_err(|e| {
+        if matches!(
+            e.kind(),
+            std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+        ) {
+            Error::Transport(format!(
+                "tcp connect to {addr} timed out after {:?}",
+                timeouts.connect
+            ))
+        } else {
+            Error::Transport(format!("tcp connect to {addr} failed: {e}"))
+        }
+    })?;
+    let mut hello = [0u8; 5];
+    hello[0] = PROTOCOL_VERSION;
+    hello[1..5].copy_from_slice(&worker_id.to_le_bytes());
     stream.write_all(&hello)?;
-    Ok(Endpoint::new(Box::new(TcpChannel::new(stream)?), meter, Side::Worker))
+    Ok(Endpoint::new(
+        Box::new(TcpChannel::new(stream, timeouts.read)?),
+        meter,
+        Side::Worker,
+    ))
 }
 
 #[cfg(test)]
@@ -206,10 +340,10 @@ mod tests {
     fn inproc_roundtrip_and_metering() {
         let meter = Arc::new(ByteMeter::new());
         let (mut fusion, mut worker) = inproc_pair(meter.clone());
-        let m1 = Message::StepCmd { t: 0, coef: 0.0, x: vec![1.0; 8] };
+        let m1 = Message::StepCmd { t: 0, coefs: vec![0.0], x: vec![1.0; 8] };
         fusion.send(&m1).unwrap();
         assert_eq!(worker.recv().unwrap(), m1);
-        let m2 = Message::ZNorm { t: 0, worker: 3, z_norm2: 2.5 };
+        let m2 = Message::ZNorm { t: 0, worker: 3, z_norm2: vec![2.5] };
         worker.send(&m2).unwrap();
         assert_eq!(fusion.recv().unwrap(), m2);
         assert_eq!(meter.downlink_bits(), 8 * m1.encode().len() as u64);
@@ -244,7 +378,7 @@ mod tests {
                             ep.send(&Message::ZNorm {
                                 t,
                                 worker: id,
-                                z_norm2: id as f64 + 0.5,
+                                z_norm2: vec![id as f64 + 0.5],
                             })
                             .unwrap();
                         }
@@ -255,16 +389,124 @@ mod tests {
             .collect();
         let mut fusion_eps = listener.accept_all(meter.clone()).unwrap();
         for (i, ep) in fusion_eps.iter_mut().enumerate() {
-            ep.send(&Message::StepCmd { t: 9, coef: 0.5, x: vec![1.0; 4] }).unwrap();
+            ep.send(&Message::StepCmd { t: 9, coefs: vec![0.5], x: vec![1.0; 4] })
+                .unwrap();
             let reply = ep.recv().unwrap();
             assert_eq!(
                 reply,
-                Message::ZNorm { t: 9, worker: i as u32, z_norm2: i as f64 + 0.5 }
+                Message::ZNorm { t: 9, worker: i as u32, z_norm2: vec![i as f64 + 0.5] }
             );
         }
         for h in worker_handles {
             h.join().unwrap();
         }
         assert!(meter.uplink_bits() > 0 && meter.downlink_bits() > 0);
+    }
+
+    #[test]
+    fn accept_times_out_instead_of_hanging() {
+        let timeouts = TcpTimeouts {
+            accept: Duration::from_millis(60),
+            ..TcpTimeouts::default()
+        };
+        let listener = TcpFusionListener::bind_with("127.0.0.1:0", 1, timeouts).unwrap();
+        let meter = Arc::new(ByteMeter::new());
+        let t0 = Instant::now();
+        let err = listener.accept_all(meter).unwrap_err();
+        assert!(
+            matches!(err, Error::Transport(_)),
+            "expected Transport error, got {err:?}"
+        );
+        assert!(err.to_string().contains("accept timed out"), "{err}");
+        assert!(t0.elapsed() < Duration::from_secs(5), "accept hung");
+    }
+
+    #[test]
+    fn read_timeout_surfaces_as_transport_error() {
+        let timeouts = TcpTimeouts {
+            read: Some(Duration::from_millis(60)),
+            ..TcpTimeouts::default()
+        };
+        let listener = TcpFusionListener::bind_with("127.0.0.1:0", 1, timeouts).unwrap();
+        let addr = listener.addr().unwrap();
+        let meter = Arc::new(ByteMeter::new());
+        let m2 = meter.clone();
+        let worker = std::thread::spawn(move || {
+            // Connect, say hello, then stay silent until dropped.
+            let ep = tcp_connect_with(addr, 0, m2, timeouts).unwrap();
+            std::thread::sleep(Duration::from_millis(400));
+            drop(ep);
+        });
+        let mut fusion_eps = listener.accept_all(meter).unwrap();
+        let err = fusion_eps[0].recv().unwrap_err();
+        assert!(
+            matches!(err, Error::Transport(_)),
+            "expected Transport error, got {err:?}"
+        );
+        assert!(err.to_string().contains("timed out"), "{err}");
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn version_mismatch_rejected_at_hello() {
+        let listener = TcpFusionListener::bind("127.0.0.1:0", 1).unwrap();
+        let addr = listener.addr().unwrap();
+        let rogue = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            // A peer with the wrong version byte, then worker id 0.
+            let mut hello = [0u8; 5];
+            hello[0] = 99;
+            stream.write_all(&hello).unwrap();
+            // Hold the socket open until the listener has decided.
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let meter = Arc::new(ByteMeter::new());
+        let err = listener.accept_all(meter).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+        rogue.join().unwrap();
+    }
+
+    #[test]
+    fn pre_versioning_peer_fails_fast_not_on_timeout() {
+        // A v1-era peer sends only a 4-byte hello [worker_id u32 LE] and
+        // then waits. The version byte is read first, so a worker-id-0
+        // hello (first byte 0 ≠ PROTOCOL_VERSION) is rejected from its
+        // first byte — well before the accept budget would expire.
+        let timeouts =
+            TcpTimeouts { accept: Duration::from_secs(30), ..TcpTimeouts::default() };
+        let listener = TcpFusionListener::bind_with("127.0.0.1:0", 1, timeouts).unwrap();
+        let addr = listener.addr().unwrap();
+        let rogue = std::thread::spawn(move || {
+            let mut stream = TcpStream::connect(addr).unwrap();
+            stream.write_all(&0u32.to_le_bytes()).unwrap(); // v1 hello, id 0
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let meter = Arc::new(ByteMeter::new());
+        let t0 = Instant::now();
+        let err = listener.accept_all(meter).unwrap_err();
+        assert!(err.to_string().contains("version mismatch"), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "v1 peer stalled the accept loop"
+        );
+        rogue.join().unwrap();
+    }
+
+    #[test]
+    fn connect_to_dead_port_errors_fast() {
+        // Bind a listener to learn a free port, then drop it so nothing is
+        // listening there; connect must error (refused), not hang.
+        let addr = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap()
+        };
+        let meter = Arc::new(ByteMeter::new());
+        let t0 = Instant::now();
+        let err = tcp_connect(addr, 0, meter).unwrap_err();
+        assert!(
+            matches!(err, Error::Transport(_)),
+            "expected Transport error, got {err:?}"
+        );
+        assert!(t0.elapsed() < Duration::from_secs(11), "connect hung");
     }
 }

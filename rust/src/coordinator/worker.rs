@@ -1,19 +1,19 @@
-//! The worker processor loops, one per [`Partitioning`]:
+//! The generic worker processor loop.
 //!
-//! * [`run_worker`] (row mode) owns an `(M/P) × N` row block plus `y^p`,
-//!   runs the LC step on command, and uplinks `‖z‖²` scalars and the
-//!   (entropy-coded) local estimate `f_t^p`;
-//! * [`run_column_worker`] (column mode, C-MP-AMP) owns an `M × (N/P)`
-//!   column block plus its slice of the estimate, denoises locally
-//!   against the broadcast residual, and uplinks the (entropy-coded)
-//!   partial residual `u_t^p = A^p x_t^p`.
-//!
-//! [`Partitioning`]: crate::config::Partitioning
+//! [`run_scenario_worker`] serves protocol rounds for **any**
+//! [`Scenario`]: each round it hands the broadcast to
+//! [`Scenario::worker_serve`] (local step + pre-uplink reply), then codes
+//! the pending per-signal uplink vectors when the batched `QuantCmd`
+//! arrives. Row mode uplinks local estimates `f_t^p`, column mode partial
+//! residuals `u_t^p = A^p x_t^p`; the quantize/encode machinery is shared
+//! and differs only in the model channel the scenario's
+//! [`coder`](Scenario::coder) builds.
 
 use crate::config::CodecKind;
 use crate::coordinator::message::{FPayload, Message, QuantSpec};
+use crate::coordinator::scenario::Scenario;
 use crate::coordinator::transport::Endpoint;
-use crate::engine::{ColumnWorkerData, ComputeEngine, WorkerData};
+use crate::engine::ComputeEngine;
 use crate::error::{Error, Result};
 use crate::quant::{EcsqCoder, UniformQuantizer};
 use crate::se::prior::BgChannel;
@@ -26,14 +26,17 @@ pub struct WorkerParams {
     pub id: u32,
     /// Total number of workers P.
     pub p_workers: usize,
+    /// Number of signal instances B in the session's batch.
+    pub batch: usize,
     /// Source prior (for model-pmf reconstruction).
     pub prior: BernoulliGauss,
     /// Wire codec.
     pub codec: CodecKind,
 }
 
-/// Build the ECSQ coder implied by a [`QuantSpec`] (both sides call this —
-/// determinism of the model pmf is what keeps the codec in sync).
+/// Build the ECSQ coder implied by a row-mode [`QuantSpec`] (both sides
+/// call this — determinism of the model pmf is what keeps the codec in
+/// sync).
 pub fn coder_for_spec(
     spec: &QuantSpec,
     prior: &BernoulliGauss,
@@ -70,12 +73,12 @@ pub fn column_coder_for_spec(
 }
 
 /// Code one uplink vector according to the spec, using the given coder
-/// builder (row and column workers differ only in the model channel).
+/// (scenarios differ only in the model channel the coder was built from).
 fn payload_for_spec(
     v: Vec<f32>,
     spec: &QuantSpec,
     codec: CodecKind,
-    coder: Option<EcsqCoder>,
+    coder: Option<&EcsqCoder>,
 ) -> Result<FPayload> {
     Ok(match spec {
         QuantSpec::Raw => FPayload::Raw(v),
@@ -101,116 +104,50 @@ fn payload_for_spec(
     })
 }
 
-/// Run the worker protocol until `Done`. Returns the number of iterations
-/// served (for tests / sanity checks).
-pub fn run_worker(
+/// Run the worker protocol for scenario `S` until `Done`: serve each
+/// round's broadcast through [`Scenario::worker_serve`], then quantize +
+/// entropy-code the pending per-signal uplink vectors when the batched
+/// `QuantCmd` arrives. Returns the number of iterations served (for tests
+/// / sanity checks).
+pub fn run_scenario_worker<S: Scenario>(
     params: &WorkerParams,
-    data: &WorkerData,
+    shard: &S::Shard,
     engine: &dyn ComputeEngine,
     endpoint: &mut Endpoint,
 ) -> Result<usize> {
-    let mp = data.a.rows();
-    let mut z_prev = vec![0f32; mp];
-    let mut f_cur: Option<Vec<f32>> = None;
+    let mut state = S::worker_init(shard, params.batch);
+    let mut pending: Option<Vec<Vec<f32>>> = None;
     let mut iters = 0usize;
     loop {
         match endpoint.recv()? {
-            Message::StepCmd { t, coef, x } => {
-                if x.len() != data.a.cols() {
-                    return Err(Error::Protocol(format!(
-                        "worker {}: x length {} != N {}",
-                        params.id,
-                        x.len(),
-                        data.a.cols()
-                    )));
-                }
-                let out = engine.lc_step(data, &x, &z_prev, coef, params.p_workers)?;
-                z_prev = out.z;
-                endpoint.send(&Message::ZNorm {
-                    t,
-                    worker: params.id,
-                    z_norm2: out.z_norm2,
-                })?;
-                f_cur = Some(out.f_partial);
-                iters += 1;
-            }
-            Message::QuantCmd { t, spec } => {
-                let f = f_cur.take().ok_or_else(|| {
+            Message::QuantCmd { t, specs } => {
+                let vs = pending.take().ok_or_else(|| {
                     Error::Protocol(format!(
-                        "worker {}: QuantCmd before StepCmd at t={t}",
+                        "worker {}: QuantCmd before the round's step command at t={t}",
                         params.id
                     ))
                 })?;
-                let coder =
-                    coder_for_spec(&spec, &params.prior, params.p_workers, params.codec)?;
-                let payload = payload_for_spec(f, &spec, params.codec, coder)?;
-                endpoint.send(&Message::FVector { t, worker: params.id, payload })?;
-            }
-            Message::Done => return Ok(iters),
-            other => {
-                return Err(Error::Protocol(format!(
-                    "worker {}: unexpected message {other:?}",
-                    params.id
-                )))
-            }
-        }
-    }
-}
-
-/// Run the column-mode (C-MP-AMP) worker protocol until `Done`: hold the
-/// local estimate block across iterations, denoise against each broadcast
-/// residual, and uplink quantized partial residuals `u_t^p = A^p x_t^p`.
-/// Returns the number of iterations served.
-pub fn run_column_worker(
-    params: &WorkerParams,
-    data: &ColumnWorkerData,
-    engine: &dyn ComputeEngine,
-    endpoint: &mut Endpoint,
-) -> Result<usize> {
-    let np = data.a.cols();
-    let mut x = vec![0f32; np];
-    let mut u_cur: Option<Vec<f32>> = None;
-    let mut iters = 0usize;
-    loop {
-        match endpoint.recv()? {
-            Message::ColStep { t, sigma_eff2, z } => {
-                if z.len() != data.a.rows() {
+                if specs.len() != vs.len() {
                     return Err(Error::Protocol(format!(
-                        "worker {}: z length {} != M {}",
+                        "worker {}: {} specs for {} pending uplinks at t={t}",
                         params.id,
-                        z.len(),
-                        data.a.rows()
+                        specs.len(),
+                        vs.len()
                     )));
                 }
-                let out = engine.col_lc_step(data, &x, &z, sigma_eff2)?;
-                x = out.x_next;
-                endpoint.send(&Message::ColScalars {
-                    t,
-                    worker: params.id,
-                    u_norm2: out.u_norm2,
-                    eta_prime_mean: out.eta_prime_mean,
-                    x_shard: x.clone(),
-                })?;
-                u_cur = Some(out.u);
-                iters += 1;
-            }
-            Message::QuantCmd { t, spec } => {
-                let u = u_cur.take().ok_or_else(|| {
-                    Error::Protocol(format!(
-                        "worker {}: QuantCmd before ColStep at t={t}",
-                        params.id
-                    ))
-                })?;
-                let coder = column_coder_for_spec(&spec, params.codec)?;
-                let payload = payload_for_spec(u, &spec, params.codec, coder)?;
-                endpoint.send(&Message::FVector { t, worker: params.id, payload })?;
+                let mut payloads = Vec::with_capacity(vs.len());
+                for (v, spec) in vs.into_iter().zip(&specs) {
+                    let coder = S::coder(spec, &params.prior, params.p_workers, params.codec)?;
+                    payloads.push(payload_for_spec(v, spec, params.codec, coder.as_ref())?);
+                }
+                endpoint.send(&Message::FVector { t, worker: params.id, payloads })?;
             }
             Message::Done => return Ok(iters),
-            other => {
-                return Err(Error::Protocol(format!(
-                    "worker {}: unexpected message {other:?}",
-                    params.id
-                )))
+            msg => {
+                let (reply, vs) = S::worker_serve(params, shard, &mut state, engine, msg)?;
+                endpoint.send(&reply)?;
+                pending = Some(vs);
+                iters += 1;
             }
         }
     }
@@ -219,8 +156,9 @@ pub fn run_column_worker(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::engine::RustEngine;
-    use crate::signal::{Instance, ProblemDims};
+    use crate::coordinator::scenario::{Column, Row};
+    use crate::engine::{ColumnWorkerData, RowBatchData, RustEngine};
+    use crate::signal::{Batch, ProblemDims};
     use crate::util::rng::Rng;
 
     #[test]
@@ -251,55 +189,120 @@ mod tests {
             .is_none());
     }
 
-    #[test]
-    fn column_worker_rejects_quant_before_step() {
+    fn small_batch(seed: u64, b: usize) -> Batch {
         let prior = BernoulliGauss::standard(0.1);
-        let mut rng = Rng::new(2);
-        let inst = Instance::generate(
+        let mut rng = Rng::new(seed);
+        Batch::generate(
             prior,
             ProblemDims { n: 50, m: 10, sigma_e2: 1e-3 },
             &mut rng,
+            b,
         )
-        .unwrap();
-        let data = ColumnWorkerData::try_split(&inst.a, 2).unwrap().remove(0);
+        .unwrap()
+    }
+
+    #[test]
+    fn row_worker_rejects_quant_before_step() {
+        let batch = small_batch(1, 1);
+        let prior = batch.prior;
+        let shard = RowBatchData::try_split(&batch, 2).unwrap().remove(0);
         let engine = RustEngine::new(prior, 1);
-        let params =
-            WorkerParams { id: 0, p_workers: 2, prior, codec: CodecKind::Range };
+        let params = WorkerParams {
+            id: 0,
+            p_workers: 2,
+            batch: 1,
+            prior,
+            codec: CodecKind::Range,
+        };
         let meter = std::sync::Arc::new(crate::metrics::ByteMeter::new());
         let (mut fusion_ep, mut worker_ep) =
             crate::coordinator::transport::inproc_pair(meter);
         let h = std::thread::spawn(move || {
-            run_column_worker(&params, &data, &engine, &mut worker_ep)
+            run_scenario_worker::<Row>(&params, &shard, &engine, &mut worker_ep)
         });
         fusion_ep
-            .send(&Message::QuantCmd { t: 0, spec: QuantSpec::Raw })
+            .send(&Message::QuantCmd { t: 0, specs: vec![QuantSpec::Raw] })
             .unwrap();
         let err = h.join().unwrap();
         assert!(err.is_err(), "expected protocol error, got {err:?}");
     }
 
     #[test]
-    fn worker_rejects_quant_before_step() {
-        let prior = BernoulliGauss::standard(0.1);
-        let mut rng = Rng::new(1);
-        let inst = Instance::generate(
-            prior,
-            ProblemDims { n: 50, m: 10, sigma_e2: 1e-3 },
-            &mut rng,
-        )
-        .unwrap();
-        let data = WorkerData::try_split(&inst.a, &inst.y, 2).unwrap().remove(0);
+    fn column_worker_rejects_quant_before_step() {
+        let batch = small_batch(2, 1);
+        let prior = batch.prior;
+        let shard = ColumnWorkerData::try_split(&batch.a, 2).unwrap().remove(0);
         let engine = RustEngine::new(prior, 1);
-        let params =
-            WorkerParams { id: 0, p_workers: 2, prior, codec: CodecKind::Range };
+        let params = WorkerParams {
+            id: 0,
+            p_workers: 2,
+            batch: 1,
+            prior,
+            codec: CodecKind::Range,
+        };
         let meter = std::sync::Arc::new(crate::metrics::ByteMeter::new());
         let (mut fusion_ep, mut worker_ep) =
             crate::coordinator::transport::inproc_pair(meter);
         let h = std::thread::spawn(move || {
-            run_worker(&params, &data, &engine, &mut worker_ep)
+            run_scenario_worker::<Column>(&params, &shard, &engine, &mut worker_ep)
         });
         fusion_ep
-            .send(&Message::QuantCmd { t: 0, spec: QuantSpec::Raw })
+            .send(&Message::QuantCmd { t: 0, specs: vec![QuantSpec::Raw] })
+            .unwrap();
+        let err = h.join().unwrap();
+        assert!(err.is_err(), "expected protocol error, got {err:?}");
+    }
+
+    #[test]
+    fn row_worker_rejects_wrong_scenario_message() {
+        // A column broadcast arriving at a row worker is a protocol error,
+        // not a hang or a panic.
+        let batch = small_batch(3, 1);
+        let prior = batch.prior;
+        let shard = RowBatchData::try_split(&batch, 2).unwrap().remove(0);
+        let engine = RustEngine::new(prior, 1);
+        let params = WorkerParams {
+            id: 0,
+            p_workers: 2,
+            batch: 1,
+            prior,
+            codec: CodecKind::Range,
+        };
+        let meter = std::sync::Arc::new(crate::metrics::ByteMeter::new());
+        let (mut fusion_ep, mut worker_ep) =
+            crate::coordinator::transport::inproc_pair(meter);
+        let h = std::thread::spawn(move || {
+            run_scenario_worker::<Row>(&params, &shard, &engine, &mut worker_ep)
+        });
+        fusion_ep
+            .send(&Message::ColStep { t: 0, sigma_eff2: vec![0.1], z: vec![0.0; 10] })
+            .unwrap();
+        let err = h.join().unwrap();
+        assert!(err.is_err(), "expected protocol error, got {err:?}");
+    }
+
+    #[test]
+    fn worker_rejects_batch_size_mismatch() {
+        // A StepCmd carrying the wrong number of signals fails loudly.
+        let batch = small_batch(4, 2);
+        let prior = batch.prior;
+        let shard = RowBatchData::try_split(&batch, 2).unwrap().remove(0);
+        let engine = RustEngine::new(prior, 1);
+        let params = WorkerParams {
+            id: 0,
+            p_workers: 2,
+            batch: 2,
+            prior,
+            codec: CodecKind::Range,
+        };
+        let meter = std::sync::Arc::new(crate::metrics::ByteMeter::new());
+        let (mut fusion_ep, mut worker_ep) =
+            crate::coordinator::transport::inproc_pair(meter);
+        let h = std::thread::spawn(move || {
+            run_scenario_worker::<Row>(&params, &shard, &engine, &mut worker_ep)
+        });
+        fusion_ep
+            .send(&Message::StepCmd { t: 0, coefs: vec![0.0], x: vec![0.0; 50] })
             .unwrap();
         let err = h.join().unwrap();
         assert!(err.is_err(), "expected protocol error, got {err:?}");

@@ -15,7 +15,7 @@
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
 use crate::se::prior::BgChannel;
-use crate::signal::BernoulliGauss;
+use crate::signal::{Batch, BernoulliGauss};
 
 /// The per-worker measurement block: `M/P` rows of `A` plus `y^p`.
 #[derive(Debug, Clone)]
@@ -51,6 +51,55 @@ impl WorkerData {
                 y: y[i * rows_per..(i + 1) * rows_per].to_vec(),
             })
             .collect())
+    }
+}
+
+/// The row-mode worker shard for a batched session: one `(M/P) × N` row
+/// block of the shared sensing matrix plus the matching measurement slice
+/// of every signal in the batch (`ys[j·(M/P) .. (j+1)·(M/P)]` is signal
+/// `j`'s slice, column-major like every batched vector in the crate).
+#[derive(Debug, Clone)]
+pub struct RowBatchData {
+    /// Row block `A^p` of the shared sensing matrix, shape (M/P, N).
+    pub a: Matrix,
+    /// Measurement slices, `batch × (M/P)` column-major.
+    pub ys: Vec<f32>,
+    /// Number of signals B.
+    pub batch: usize,
+}
+
+impl RowBatchData {
+    /// Split a signal batch into `p` equal row shards. Errors (instead of
+    /// panicking) when `p` is zero or does not divide `M`.
+    pub fn try_split(batch: &Batch, p: usize) -> Result<Vec<RowBatchData>> {
+        let m = batch.a.rows();
+        if p == 0 || m % p != 0 {
+            return Err(Error::Config(format!(
+                "P={p} must be positive and divide M={m}"
+            )));
+        }
+        let b = batch.batch();
+        let rows_per = m / p;
+        Ok((0..p)
+            .map(|i| {
+                let mut ys = Vec::with_capacity(b * rows_per);
+                for y in &batch.y {
+                    ys.extend_from_slice(&y[i * rows_per..(i + 1) * rows_per]);
+                }
+                RowBatchData {
+                    a: batch.a.row_block(i * rows_per, (i + 1) * rows_per),
+                    ys,
+                    batch: b,
+                }
+            })
+            .collect())
+    }
+
+    /// Measurement slice of signal `j`.
+    #[inline]
+    pub fn y(&self, j: usize) -> &[f32] {
+        let mp = self.a.rows();
+        &self.ys[j * mp..(j + 1) * mp]
     }
 }
 
@@ -111,6 +160,30 @@ pub struct ColLcOut {
     pub eta_prime_mean: f64,
 }
 
+/// Output of one batched row-mode LC step (column-major `batch` blocks).
+#[derive(Debug, Clone)]
+pub struct LcBatchOut {
+    /// Updated local residuals, `batch × (M/P)`.
+    pub z: Vec<f32>,
+    /// Local estimate contributions, `batch × N`.
+    pub f: Vec<f32>,
+    /// Per-signal `‖z^p_j‖²`.
+    pub z_norm2: Vec<f64>,
+}
+
+/// Output of one batched column-mode (C-MP-AMP) worker step.
+#[derive(Debug, Clone)]
+pub struct ColLcBatchOut {
+    /// Updated local estimate blocks, `batch × (N/P)`.
+    pub x_next: Vec<f32>,
+    /// Residual contributions `u^p_j = A^p x_j^p`, `batch × M`.
+    pub u: Vec<f32>,
+    /// Per-signal `‖u^p_j‖²`.
+    pub u_norm2: Vec<f64>,
+    /// Per-signal empirical mean of `η′` over this worker's block.
+    pub eta_prime_mean: Vec<f64>,
+}
+
 /// Output of one fusion GC step.
 #[derive(Debug, Clone)]
 pub struct GcOut {
@@ -122,12 +195,14 @@ pub struct GcOut {
 
 /// A compute engine evaluating LC and GC steps.
 pub trait ComputeEngine: Send + Sync {
-    /// Worker LC step. `coef` is the Onsager coefficient
+    /// Worker LC step on one signal. `coef` is the Onsager coefficient
     /// `(1/κ)·mean(η′_{t−1})` (zero at t = 0), `p_workers` scales the
-    /// `x_t/P` term.
+    /// `x_t/P` term. Takes the row block + measurement slice directly so
+    /// batched shards can replay single signals through the same kernel.
     fn lc_step(
         &self,
-        data: &WorkerData,
+        a: &Matrix,
+        y: &[f32],
         x: &[f32],
         z_prev: &[f32],
         coef: f32,
@@ -136,6 +211,82 @@ pub trait ComputeEngine: Send + Sync {
 
     /// Fusion GC step: denoise `f` at effective noise `sigma_eff2`.
     fn gc_step(&self, f: &[f32], sigma_eff2: f64) -> Result<GcOut>;
+
+    /// Batched row-mode LC step: all `B` signals of the session in one
+    /// call (`xs`/`z_prevs` column-major, `coefs` per signal).
+    ///
+    /// The default implementation replays the batch one signal at a time
+    /// through [`lc_step`](ComputeEngine::lc_step) — numerically identical
+    /// to `B` independent calls by construction. Engines with blocked
+    /// kernels (one pass over `A` for the whole batch) should override it;
+    /// the override must stay bit-for-bit equal to the default
+    /// (`RustEngine`'s is, property-tested).
+    fn lc_step_batch(
+        &self,
+        data: &RowBatchData,
+        xs: &[f32],
+        z_prevs: &[f32],
+        coefs: &[f32],
+        p_workers: usize,
+    ) -> Result<LcBatchOut> {
+        let b = data.batch;
+        let mp = data.a.rows();
+        let n = data.a.cols();
+        debug_assert_eq!(coefs.len(), b);
+        let mut z = Vec::with_capacity(b * mp);
+        let mut f = Vec::with_capacity(b * n);
+        let mut z_norm2 = Vec::with_capacity(b);
+        for j in 0..b {
+            let out = self.lc_step(
+                &data.a,
+                data.y(j),
+                &xs[j * n..(j + 1) * n],
+                &z_prevs[j * mp..(j + 1) * mp],
+                coefs[j],
+                p_workers,
+            )?;
+            z.extend_from_slice(&out.z);
+            f.extend_from_slice(&out.f_partial);
+            z_norm2.push(out.z_norm2);
+        }
+        Ok(LcBatchOut { z, f, z_norm2 })
+    }
+
+    /// Batched column-mode worker step: all `B` signals in one call
+    /// (`xs` is `B × (N/P)`, `zs` is `B × M`, `sigma_eff2` per signal).
+    ///
+    /// Defaults to replaying [`col_lc_step`](ComputeEngine::col_lc_step)
+    /// per signal; blocked-kernel engines should override (bit-for-bit,
+    /// like [`lc_step_batch`](ComputeEngine::lc_step_batch)).
+    fn col_lc_step_batch(
+        &self,
+        data: &ColumnWorkerData,
+        batch: usize,
+        xs: &[f32],
+        zs: &[f32],
+        sigma_eff2: &[f64],
+    ) -> Result<ColLcBatchOut> {
+        let m = data.a.rows();
+        let np = data.a.cols();
+        debug_assert_eq!(sigma_eff2.len(), batch);
+        let mut x_next = Vec::with_capacity(batch * np);
+        let mut u = Vec::with_capacity(batch * m);
+        let mut u_norm2 = Vec::with_capacity(batch);
+        let mut eta_prime_mean = Vec::with_capacity(batch);
+        for j in 0..batch {
+            let out = self.col_lc_step(
+                data,
+                &xs[j * np..(j + 1) * np],
+                &zs[j * m..(j + 1) * m],
+                sigma_eff2[j],
+            )?;
+            x_next.extend_from_slice(&out.x_next);
+            u.extend_from_slice(&out.u);
+            u_norm2.push(out.u_norm2);
+            eta_prime_mean.push(out.eta_prime_mean);
+        }
+        Ok(ColLcBatchOut { x_next, u, u_norm2, eta_prime_mean })
+    }
 
     /// Column-mode worker step (C-MP-AMP, 1701.02578): pseudo-data
     /// `f^p = x^p + (A^p)ᵀ z`, local denoising
@@ -195,31 +346,105 @@ impl RustEngine {
 impl ComputeEngine for RustEngine {
     fn lc_step(
         &self,
-        data: &WorkerData,
+        a: &Matrix,
+        y: &[f32],
         x: &[f32],
         z_prev: &[f32],
         coef: f32,
         p_workers: usize,
     ) -> Result<LcOut> {
-        let mp = data.a.rows();
-        let n = data.a.cols();
+        let mp = a.rows();
+        let n = a.cols();
         debug_assert_eq!(x.len(), n);
         debug_assert_eq!(z_prev.len(), mp);
+        debug_assert_eq!(y.len(), mp);
         // z = y − A x + coef·z_prev
         let mut z = vec![0f32; mp];
-        data.a.matvec_par(x, &mut z, self.threads);
+        a.matvec_par(x, &mut z, self.threads);
         for i in 0..mp {
-            z[i] = data.y[i] - z[i] + coef * z_prev[i];
+            z[i] = y[i] - z[i] + coef * z_prev[i];
         }
         let z_norm2 = crate::linalg::norm2_sq(&z);
         // f = x/P + Aᵀ z
         let mut f = vec![0f32; n];
-        data.a.matvec_t_par(&z, &mut f, self.threads);
+        a.matvec_t_par(&z, &mut f, self.threads);
         let inv_p = 1.0 / p_workers as f32;
         for (fi, &xi) in f.iter_mut().zip(x) {
             *fi += xi * inv_p;
         }
         Ok(LcOut { z, f_partial: f, z_norm2 })
+    }
+
+    fn lc_step_batch(
+        &self,
+        data: &RowBatchData,
+        xs: &[f32],
+        z_prevs: &[f32],
+        coefs: &[f32],
+        p_workers: usize,
+    ) -> Result<LcBatchOut> {
+        let b = data.batch;
+        let mp = data.a.rows();
+        let n = data.a.cols();
+        debug_assert_eq!(xs.len(), b * n);
+        debug_assert_eq!(z_prevs.len(), b * mp);
+        debug_assert_eq!(coefs.len(), b);
+        // Z = A X in one blocked pass over A, then the per-signal residual
+        // epilogue — elementwise ops in the exact order of `lc_step`, so
+        // the batch is bit-for-bit B sequential steps.
+        let mut z = vec![0f32; b * mp];
+        data.a.matmul_par(xs, b, &mut z, self.threads);
+        for j in 0..b {
+            let yj = data.y(j);
+            for i in 0..mp {
+                let k = j * mp + i;
+                z[k] = yj[i] - z[k] + coefs[j] * z_prevs[k];
+            }
+        }
+        let z_norm2: Vec<f64> =
+            (0..b).map(|j| crate::linalg::norm2_sq(&z[j * mp..(j + 1) * mp])).collect();
+        // F = X/P + Aᵀ Z, again one pass over A for the whole batch.
+        let mut f = vec![0f32; b * n];
+        data.a.matmul_t_par(&z, b, &mut f, self.threads);
+        let inv_p = 1.0 / p_workers as f32;
+        for (fi, &xi) in f.iter_mut().zip(xs) {
+            *fi += xi * inv_p;
+        }
+        Ok(LcBatchOut { z, f, z_norm2 })
+    }
+
+    fn col_lc_step_batch(
+        &self,
+        data: &ColumnWorkerData,
+        batch: usize,
+        xs: &[f32],
+        zs: &[f32],
+        sigma_eff2: &[f64],
+    ) -> Result<ColLcBatchOut> {
+        let m = data.a.rows();
+        let np = data.a.cols();
+        debug_assert_eq!(xs.len(), batch * np);
+        debug_assert_eq!(zs.len(), batch * m);
+        debug_assert_eq!(sigma_eff2.len(), batch);
+        // F = X + Aᵀ Z (one blocked pass), per-signal denoising at each
+        // signal's effective noise level, then U = A X_next (one pass).
+        let mut f = vec![0f32; batch * np];
+        data.a.matmul_t_par(zs, batch, &mut f, self.threads);
+        for (fi, &xi) in f.iter_mut().zip(xs) {
+            *fi += xi;
+        }
+        let mut x_next = vec![0f32; batch * np];
+        let mut eta_prime_mean = Vec::with_capacity(batch);
+        for j in 0..batch {
+            let gc = self.gc_step(&f[j * np..(j + 1) * np], sigma_eff2[j])?;
+            x_next[j * np..(j + 1) * np].copy_from_slice(&gc.x_next);
+            eta_prime_mean.push(gc.eta_prime_mean);
+        }
+        let mut u = vec![0f32; batch * m];
+        data.a.matmul_par(&x_next, batch, &mut u, self.threads);
+        let u_norm2: Vec<f64> =
+            (0..batch).map(|j| crate::linalg::norm2_sq(&u[j * m..(j + 1) * m])).collect();
+        Ok(ColLcBatchOut { x_next, u, u_norm2, eta_prime_mean })
     }
 
     fn col_lc_step(
@@ -306,7 +531,7 @@ mod tests {
         let parts = WorkerData::try_split(&inst.a, &inst.y, 3).unwrap();
         let x0 = vec![0f32; 200];
         let z0 = vec![0f32; 20];
-        let out = eng.lc_step(&parts[1], &x0, &z0, 0.0, 3).unwrap();
+        let out = eng.lc_step(&parts[1].a, &parts[1].y, &x0, &z0, 0.0, 3).unwrap();
         // x=0, coef=0 ⇒ z = y.
         assert_eq!(out.z, parts[1].y);
         // f = Aᵀ y here.
@@ -334,7 +559,7 @@ mod tests {
         let mut z_cat = Vec::new();
         for (i, part) in parts.iter().enumerate() {
             let zp = &z_prev_full[i * 10..(i + 1) * 10];
-            let out = eng.lc_step(part, &x, zp, coef, p).unwrap();
+            let out = eng.lc_step(&part.a, &part.y, &x, zp, coef, p).unwrap();
             for (s, v) in f_sum.iter_mut().zip(&out.f_partial) {
                 *s += v;
             }
@@ -464,6 +689,113 @@ mod tests {
             assert!((out.u[i] - u[i]).abs() < 1e-5, "u[{i}]");
         }
         assert!((out.u_norm2 - crate::linalg::norm2_sq(&u)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn row_batch_split_carries_every_signal_slice() {
+        let prior = BernoulliGauss::standard(0.1);
+        let mut rng = Rng::new(8);
+        let batch = crate::signal::Batch::generate(
+            prior,
+            crate::signal::ProblemDims { n: 80, m: 24, sigma_e2: 1e-3 },
+            &mut rng,
+            3,
+        )
+        .unwrap();
+        let shards = RowBatchData::try_split(&batch, 4).unwrap();
+        assert_eq!(shards.len(), 4);
+        for (i, sh) in shards.iter().enumerate() {
+            assert_eq!((sh.a.rows(), sh.a.cols(), sh.batch), (6, 80, 3));
+            for j in 0..3 {
+                assert_eq!(sh.y(j), &batch.y[j][i * 6..(i + 1) * 6], "shard {i} sig {j}");
+            }
+        }
+        // Bad partitions rejected.
+        assert!(RowBatchData::try_split(&batch, 0).is_err());
+        assert!(RowBatchData::try_split(&batch, 7).is_err());
+    }
+
+    #[test]
+    fn lc_step_batch_bitwise_matches_per_signal_steps() {
+        // Both the blocked RustEngine override and the trait default must
+        // reproduce B sequential lc_step calls exactly.
+        let prior = BernoulliGauss::standard(0.08);
+        let mut rng = Rng::new(17);
+        let batch = crate::signal::Batch::generate(
+            prior,
+            crate::signal::ProblemDims { n: 120, m: 40, sigma_e2: 1e-3 },
+            &mut rng,
+            4,
+        )
+        .unwrap();
+        let p = 2;
+        let shard = RowBatchData::try_split(&batch, p).unwrap().remove(1);
+        let (b, mp, n) = (4usize, 20usize, 120usize);
+        let mut xs = vec![0f32; b * n];
+        rng.fill_gaussian(&mut xs, 0.1);
+        let mut zs = vec![0f32; b * mp];
+        rng.fill_gaussian(&mut zs, 0.05);
+        let coefs = [0.0f32, 0.2, 0.4, 0.6];
+        let eng = RustEngine::new(prior, 3);
+        let blocked = eng.lc_step_batch(&shard, &xs, &zs, &coefs, p).unwrap();
+        for j in 0..b {
+            let single = eng
+                .lc_step(
+                    &shard.a,
+                    shard.y(j),
+                    &xs[j * n..(j + 1) * n],
+                    &zs[j * mp..(j + 1) * mp],
+                    coefs[j],
+                    p,
+                )
+                .unwrap();
+            assert_eq!(blocked.z_norm2[j].to_bits(), single.z_norm2.to_bits(), "sig {j}");
+            for i in 0..mp {
+                assert_eq!(
+                    blocked.z[j * mp + i].to_bits(),
+                    single.z[i].to_bits(),
+                    "z sig {j} row {i}"
+                );
+            }
+            for i in 0..n {
+                assert_eq!(
+                    blocked.f[j * n + i].to_bits(),
+                    single.f_partial[i].to_bits(),
+                    "f sig {j} col {i}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn col_lc_step_batch_bitwise_matches_per_signal_steps() {
+        let inst = small_instance();
+        let eng = RustEngine::new(inst.prior, 3);
+        let data = ColumnWorkerData::try_split(&inst.a, 4).unwrap().remove(2);
+        let (b, m, np) = (3usize, 60usize, 50usize);
+        let mut rng = Rng::new(23);
+        let mut xs = vec![0f32; b * np];
+        rng.fill_gaussian(&mut xs, 0.1);
+        let mut zs = vec![0f32; b * m];
+        rng.fill_gaussian(&mut zs, 0.05);
+        let sigma = [0.03f64, 0.02, 0.045];
+        let blocked = eng.col_lc_step_batch(&data, b, &xs, &zs, &sigma).unwrap();
+        for j in 0..b {
+            let single = eng
+                .col_lc_step(&data, &xs[j * np..(j + 1) * np], &zs[j * m..(j + 1) * m], sigma[j])
+                .unwrap();
+            assert_eq!(blocked.u_norm2[j].to_bits(), single.u_norm2.to_bits());
+            assert_eq!(
+                blocked.eta_prime_mean[j].to_bits(),
+                single.eta_prime_mean.to_bits()
+            );
+            for i in 0..np {
+                assert_eq!(blocked.x_next[j * np + i].to_bits(), single.x_next[i].to_bits());
+            }
+            for i in 0..m {
+                assert_eq!(blocked.u[j * m + i].to_bits(), single.u[i].to_bits());
+            }
+        }
     }
 
     #[test]

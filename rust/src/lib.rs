@@ -7,7 +7,10 @@
 //! Pallas stack:
 //!
 //! * [`coordinator`] — fusion center + `P` worker processors exchanging
-//!   lossily-compressed messages over a byte-metered transport,
+//!   lossily-compressed messages over a byte-metered transport; the round
+//!   logic is written once against the scenario-generic
+//!   [`Scenario`](coordinator::Scenario) trait and batched over `B ≥ 1`
+//!   signal instances per session,
 //! * [`se`] — state evolution for the Bernoulli-Gauss prior, including the
 //!   paper's quantization-aware SE (eq. 8),
 //! * [`quant`] — entropy-coded scalar quantization (uniform quantizer +
@@ -78,3 +81,4 @@ pub mod util;
 pub use coordinator::builder::SessionBuilder;
 pub use coordinator::session::{IterSnapshot, RunReport, Session};
 pub use error::{Error, Result};
+pub use signal::Batch;

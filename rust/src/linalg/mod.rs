@@ -124,6 +124,131 @@ impl Matrix {
         }
     }
 
+    /// Blocked batched `out_j = A x_j` for `b` column-major inputs
+    /// (`xs[j·cols .. (j+1)·cols]` is signal `j`; same layout for `out`).
+    ///
+    /// One pass over `A`: each matrix row is loaded once and dotted
+    /// against all `b` inputs while it is hot in cache, instead of `b`
+    /// full passes over the matrix. Every output element is the same
+    /// [`dot`] call [`matvec`](Self::matvec) would make, so the batched
+    /// result is bit-for-bit identical to `b` sequential matvecs
+    /// (property-tested).
+    pub fn matmul(&self, xs: &[f32], b: usize, out: &mut [f32]) {
+        debug_assert_eq!(xs.len(), b * self.cols);
+        debug_assert_eq!(out.len(), b * self.rows);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for j in 0..b {
+                out[j * self.rows + r] = dot(row, &xs[j * self.cols..(j + 1) * self.cols]);
+            }
+        }
+    }
+
+    /// Blocked batched `out_j = Aᵀ z_j` (column-major batch layout as in
+    /// [`matmul`](Self::matmul)). Accumulates row-by-row so each matrix
+    /// row is read once for all `b` inputs; per-signal accumulation order
+    /// matches [`matvec_t`](Self::matvec_t) exactly (bit-for-bit).
+    pub fn matmul_t(&self, zs: &[f32], b: usize, out: &mut [f32]) {
+        debug_assert_eq!(zs.len(), b * self.rows);
+        debug_assert_eq!(out.len(), b * self.cols);
+        out.iter_mut().for_each(|o| *o = 0.0);
+        for r in 0..self.rows {
+            let row = self.row(r);
+            for j in 0..b {
+                let zr = zs[j * self.rows + r];
+                if zr != 0.0 {
+                    axpy(zr, row, &mut out[j * self.cols..(j + 1) * self.cols]);
+                }
+            }
+        }
+    }
+
+    /// Threaded [`matmul`](Self::matmul): row chunks are computed into
+    /// per-thread scratch (the column-major output interleaves signals, so
+    /// chunks are not contiguous) and copied back. Serial below the same
+    /// crossover as [`matvec_par`](Self::matvec_par). Per-element
+    /// arithmetic is unchanged, so results stay bit-for-bit identical to
+    /// the serial kernel.
+    pub fn matmul_par(&self, xs: &[f32], b: usize, out: &mut [f32], threads: usize) {
+        if threads <= 1 || self.rows < 4 * threads || self.rows * self.cols < 4_000_000 {
+            return self.matmul(xs, b, out);
+        }
+        let rows = self.rows;
+        let cols = self.cols;
+        let chunk = rows.div_ceil(threads);
+        let results: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            let mut r0 = 0usize;
+            while r0 < rows {
+                let r1 = (r0 + chunk).min(rows);
+                let mat = &*self;
+                handles.push(s.spawn(move || {
+                    let h = r1 - r0;
+                    let mut tmp = vec![0f32; h * b];
+                    for r in r0..r1 {
+                        let row = mat.row(r);
+                        for j in 0..b {
+                            tmp[j * h + (r - r0)] =
+                                dot(row, &xs[j * cols..(j + 1) * cols]);
+                        }
+                    }
+                    (r0, r1, tmp)
+                }));
+                r0 = r1;
+            }
+            handles.into_iter().map(|h| h.join().expect("matmul thread")).collect()
+        });
+        for (r0, r1, tmp) in results {
+            let h = r1 - r0;
+            for j in 0..b {
+                out[j * rows + r0..j * rows + r1].copy_from_slice(&tmp[j * h..(j + 1) * h]);
+            }
+        }
+    }
+
+    /// Threaded [`matmul_t`](Self::matmul_t): each thread owns a column
+    /// range and walks all rows once for every signal (same partitioning
+    /// as [`matvec_t_par`](Self::matvec_t_par)), accumulating into scratch
+    /// that is copied back. Bit-for-bit identical to the serial kernel.
+    pub fn matmul_t_par(&self, zs: &[f32], b: usize, out: &mut [f32], threads: usize) {
+        if threads <= 1 || self.cols < 4 * threads || self.rows * self.cols < 4_000_000 {
+            return self.matmul_t(zs, b, out);
+        }
+        let rows = self.rows;
+        let cols = self.cols;
+        let chunk = cols.div_ceil(threads);
+        let results: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            let mut c0 = 0usize;
+            while c0 < cols {
+                let c1 = (c0 + chunk).min(cols);
+                let mat = &*self;
+                handles.push(s.spawn(move || {
+                    let w = c1 - c0;
+                    let mut tmp = vec![0f32; w * b];
+                    for r in 0..rows {
+                        let row = &mat.row(r)[c0..c1];
+                        for j in 0..b {
+                            let zr = zs[j * rows + r];
+                            if zr != 0.0 {
+                                axpy(zr, row, &mut tmp[j * w..(j + 1) * w]);
+                            }
+                        }
+                    }
+                    (c0, c1, tmp)
+                }));
+                c0 = c1;
+            }
+            handles.into_iter().map(|h| h.join().expect("matmul_t thread")).collect()
+        });
+        for (c0, c1, tmp) in results {
+            let w = c1 - c0;
+            for j in 0..b {
+                out[j * cols + c0..j * cols + c1].copy_from_slice(&tmp[j * w..(j + 1) * w]);
+            }
+        }
+    }
+
     /// Threaded `A x` over row chunks. Falls back to serial when the
     /// matrix is small enough that spawn overhead + memory-bandwidth
     /// saturation make threads a loss (measured crossover ≈ 4M entries;
@@ -321,6 +446,75 @@ mod tests {
             let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as f64).sum();
             prop_close(dot(&a, &b) as f64, naive, 1e-3 * (1.0 + naive.abs()), "dot")
         });
+    }
+
+    #[test]
+    fn batched_matmul_bitwise_matches_sequential_matvecs() {
+        // The batching contract: a blocked B-signal matmul is bit-for-bit
+        // the same floats as B sequential matvecs, serial and threaded,
+        // forward and transposed.
+        Prop::new("matmul == B × matvec (bitwise)", 25).check(|g| {
+            let mut rng = Rng::new(g.u64());
+            let r = g.usize_in(1, 50);
+            let c = g.usize_in(1, 70);
+            let b = g.usize_in(1, 6);
+            let a = rand_matrix(&mut rng, r, c);
+            let xs = g.gaussian_vec(b * c, 1.0);
+            let zs = g.gaussian_vec(b * r, 1.0);
+            let mut fwd = vec![0f32; b * r];
+            a.matmul(&xs, b, &mut fwd);
+            let mut fwd_par = vec![0f32; b * r];
+            a.matmul_par(&xs, b, &mut fwd_par, 4);
+            let mut t = vec![0f32; b * c];
+            a.matmul_t(&zs, b, &mut t);
+            let mut t_par = vec![0f32; b * c];
+            a.matmul_t_par(&zs, b, &mut t_par, 4);
+            for j in 0..b {
+                let mut want = vec![0f32; r];
+                a.matvec(&xs[j * c..(j + 1) * c], &mut want);
+                for i in 0..r {
+                    let (got, gp) = (fwd[j * r + i], fwd_par[j * r + i]);
+                    prop_assert(
+                        got.to_bits() == want[i].to_bits()
+                            && gp.to_bits() == want[i].to_bits(),
+                        format!("matmul sig {j} row {i}: {got} vs {}", want[i]),
+                    )?;
+                }
+                let mut want_t = vec![0f32; c];
+                a.matvec_t(&zs[j * r..(j + 1) * r], &mut want_t);
+                for i in 0..c {
+                    let (got, gp) = (t[j * c + i], t_par[j * c + i]);
+                    prop_assert(
+                        got.to_bits() == want_t[i].to_bits()
+                            && gp.to_bits() == want_t[i].to_bits(),
+                        format!("matmul_t sig {j} col {i}: {got} vs {}", want_t[i]),
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matmul_threaded_crossover_path_matches() {
+        // Force the threaded branch (≥ 4M entries) once to cover the
+        // scratch-and-copy path on a non-trivial batch.
+        let mut rng = Rng::new(99);
+        let a = rand_matrix(&mut rng, 1000, 4096);
+        let b = 3usize;
+        let mut g = Rng::new(7);
+        let mut xs = vec![0f32; b * 4096];
+        g.fill_gaussian(&mut xs, 1.0);
+        let mut zs = vec![0f32; b * 1000];
+        g.fill_gaussian(&mut zs, 1.0);
+        let (mut s1, mut s2) = (vec![0f32; b * 1000], vec![0f32; b * 1000]);
+        a.matmul(&xs, b, &mut s1);
+        a.matmul_par(&xs, b, &mut s2, 4);
+        assert!(s1.iter().zip(&s2).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let (mut t1, mut t2) = (vec![0f32; b * 4096], vec![0f32; b * 4096]);
+        a.matmul_t(&zs, b, &mut t1);
+        a.matmul_t_par(&zs, b, &mut t2, 4);
+        assert!(t1.iter().zip(&t2).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -104,11 +104,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let quiet = args.has_flag("quiet");
     eprintln!(
-        "mpamp run: N={} M={} P={} ({}-partitioned) ε={} SNR={} dB T={} \
+        "mpamp run: N={} M={} P={} B={} ({}-partitioned) ε={} SNR={} dB T={} \
          schedule={:?} engine={:?}",
         cfg.n,
         cfg.m,
         cfg.p,
+        cfg.batch,
         cfg.partitioning.as_str(),
         cfg.prior.eps,
         cfg.snr_db,
@@ -133,6 +134,19 @@ fn cmd_run(args: &Args) -> Result<()> {
         report.savings_vs_float_pct(),
         report.wall_s
     );
+    if report.batch > 1 {
+        println!(
+            "batch of {}: {:.2} signals/s | per-signal SDR (dB): {}",
+            report.batch,
+            report.signals_per_s(),
+            report
+                .sdr_db_per_signal
+                .iter()
+                .map(|v| format!("{v:.2}"))
+                .collect::<Vec<_>>()
+                .join(", ")
+        );
+    }
     if let Some(out) = args.get("out") {
         report.to_csv().write(out)?;
         eprintln!("wrote {out}");

@@ -124,7 +124,8 @@ impl XlaEngine {
 impl crate::engine::ComputeEngine for XlaEngine {
     fn lc_step(
         &self,
-        _data: &crate::engine::WorkerData,
+        _a: &crate::linalg::Matrix,
+        _y: &[f32],
         _x: &[f32],
         _z_prev: &[f32],
         _coef: f32,

@@ -6,8 +6,9 @@ use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Mutex;
 
-use crate::engine::{ComputeEngine, GcOut, LcOut, WorkerData};
+use crate::engine::{ComputeEngine, GcOut, LcOut};
 use crate::error::{Error, Result};
+use crate::linalg::Matrix;
 use crate::runtime::Manifest;
 use crate::signal::BernoulliGauss;
 
@@ -94,31 +95,34 @@ fn to_f32_vec(lit: &xla::Literal) -> Result<Vec<f32>> {
 impl ComputeEngine for XlaEngine {
     fn lc_step(
         &self,
-        data: &WorkerData,
+        a: &Matrix,
+        y: &[f32],
         x: &[f32],
         z_prev: &[f32],
         coef: f32,
         p_workers: usize,
     ) -> Result<LcOut> {
-        if data.a.rows() != self.mp || data.a.cols() != self.n {
+        if a.rows() != self.mp || a.cols() != self.n {
             return Err(Error::Artifact(format!(
                 "LC artifact compiled for ({}, {}), got shard ({}, {})",
                 self.mp,
                 self.n,
-                data.a.rows(),
-                data.a.cols()
+                a.rows(),
+                a.cols()
             )));
         }
         let mut inner = self.inner.lock().expect("xla engine poisoned");
-        let key = data.a.data().as_ptr() as usize;
+        // The cache key covers both device-resident inputs: the shard
+        // matrix and the measurement slice are immutable for a session, so
+        // their host pointers identify the content.
+        let key = (a.data().as_ptr() as usize) ^ (y.as_ptr() as usize).rotate_left(1);
         if !inner.shard_cache.contains_key(&key) {
             let a_buf = inner.client.buffer_from_host_buffer(
-                data.a.data(),
+                a.data(),
                 &[self.mp, self.n],
                 None,
             )?;
-            let y_buf =
-                inner.client.buffer_from_host_buffer(&data.y, &[self.mp], None)?;
+            let y_buf = inner.client.buffer_from_host_buffer(y, &[self.mp], None)?;
             inner.shard_cache.insert(key, (a_buf, y_buf));
         }
         let xb = inner.client.buffer_from_host_buffer(x, &[self.n], None)?;

@@ -138,11 +138,7 @@ impl Instance {
     /// SDR of an estimate vs the ground truth:
     /// `10 log10(‖s0‖² / ‖x − s0‖²)`.
     pub fn sdr_db(&self, x: &[f32]) -> f64 {
-        let sig = norm2_sq(&self.s0);
-        let mut diff = vec![0f32; self.s0.len()];
-        crate::linalg::sub(x, &self.s0, &mut diff);
-        let err = norm2_sq(&diff).max(1e-300);
-        10.0 * (sig / err).log10()
+        sdr_db(&self.s0, x)
     }
 
     /// Mean-squared error of an estimate, ‖x − s0‖²/N.
@@ -151,6 +147,142 @@ impl Instance {
         crate::linalg::sub(x, &self.s0, &mut diff);
         norm2_sq(&diff) / self.s0.len() as f64
     }
+}
+
+/// A batch of `B ≥ 1` signal instances sharing one sensing matrix:
+/// `y_j = A s0_j + e_j` for `j = 0..B`. Batched sessions carry all `B`
+/// signals through the protocol together so every pass over `A` is
+/// amortized across the batch (see `linalg::Matrix::matmul`).
+///
+/// Determinism contract: [`Batch::generate`] draws `A`, then
+/// `(s0_j, e_j)` per signal in order from one RNG, so a `B = 1` batch is
+/// bit-for-bit the instance [`Instance::generate`] produces from the same
+/// RNG state (asserted in tests) — and signal `j` of a batch, extracted
+/// via [`Batch::instance`], can be replayed through a `B = 1` session for
+/// the batching-equivalence tests.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Shared sensing matrix (M×N, i.i.d. N(0, 1/M)).
+    pub a: Matrix,
+    /// Ground-truth signals, one length-N vector per batch member.
+    pub s0: Vec<Vec<f32>>,
+    /// Noisy measurements, one length-M vector per batch member.
+    pub y: Vec<Vec<f32>>,
+    /// Dimensions + noise level used.
+    pub dims: ProblemDims,
+    /// Source prior used.
+    pub prior: BernoulliGauss,
+}
+
+impl Batch {
+    /// Generate a `batch`-signal batch from the model (one shared `A`).
+    pub fn generate(
+        prior: BernoulliGauss,
+        dims: ProblemDims,
+        rng: &mut Rng,
+        batch: usize,
+    ) -> Result<Batch> {
+        prior.validate()?;
+        if dims.n == 0 || dims.m == 0 {
+            return Err(Error::Config("N and M must be positive".into()));
+        }
+        if batch == 0 {
+            return Err(Error::Config("batch must be ≥ 1".into()));
+        }
+        let (m, n) = (dims.m, dims.n);
+        let mut a_data = vec![0f32; m * n];
+        rng.fill_gaussian(&mut a_data, (1.0 / m as f64).sqrt());
+        let a = Matrix::from_vec(m, n, a_data)?;
+        let mut s0 = Vec::with_capacity(batch);
+        let mut y = Vec::with_capacity(batch);
+        let noise_sd = dims.sigma_e2.sqrt();
+        for _ in 0..batch {
+            let s = prior.sample_vec(n, rng);
+            let mut yj = vec![0f32; m];
+            a.matvec(&s, &mut yj);
+            for v in yj.iter_mut() {
+                *v += rng.gaussian_ms(0.0, noise_sd) as f32;
+            }
+            s0.push(s);
+            y.push(yj);
+        }
+        Ok(Batch { a, s0, y, dims, prior })
+    }
+
+    /// Wrap a single instance as a `B = 1` batch (moves, no copy of `A`).
+    pub fn from_instance(inst: Instance) -> Batch {
+        Batch {
+            a: inst.a,
+            s0: vec![inst.s0],
+            y: vec![inst.y],
+            dims: inst.dims,
+            prior: inst.prior,
+        }
+    }
+
+    /// Number of signals in the batch.
+    pub fn batch(&self) -> usize {
+        self.s0.len()
+    }
+
+    /// Check internal consistency (the fields are public, so a hand-built
+    /// batch can disagree with itself): every signal needs one length-N
+    /// `s0` and one length-M `y`. Sessions validate this up front so an
+    /// inconsistent batch surfaces as a config error instead of an
+    /// out-of-bounds panic inside a worker thread.
+    pub fn validate(&self) -> Result<()> {
+        let (m, n) = (self.a.rows(), self.a.cols());
+        if self.y.len() != self.s0.len() {
+            return Err(Error::Config(format!(
+                "batch holds {} signals but {} measurement vectors",
+                self.s0.len(),
+                self.y.len()
+            )));
+        }
+        if self.s0.is_empty() {
+            return Err(Error::Config("batch must hold at least one signal".into()));
+        }
+        for (j, (s0, y)) in self.s0.iter().zip(&self.y).enumerate() {
+            if s0.len() != n || y.len() != m {
+                return Err(Error::Config(format!(
+                    "batch signal {j}: s0 length {} / y length {} do not match \
+                     A shape (M={m}, N={n})",
+                    s0.len(),
+                    y.len()
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// Extract signal `j` as a standalone [`Instance`] (clones `A` — meant
+    /// for tests and per-signal replay, not the hot path).
+    pub fn instance(&self, j: usize) -> Instance {
+        Instance {
+            a: self.a.clone(),
+            s0: self.s0[j].clone(),
+            y: self.y[j].clone(),
+            dims: self.dims,
+            prior: self.prior,
+        }
+    }
+
+    /// SDR of an estimate for signal `j` vs its ground truth (same
+    /// definition as [`Instance::sdr_db`], no `A` clone).
+    pub fn sdr_db(&self, j: usize, x: &[f32]) -> f64 {
+        sdr_db(&self.s0[j], x)
+    }
+}
+
+/// SDR of an estimate vs a ground-truth signal:
+/// `10 log10(‖s0‖² / ‖x − s0‖²)` — the one definition [`Instance::sdr_db`]
+/// and [`Batch::sdr_db`] both report.
+pub fn sdr_db(s0: &[f32], x: &[f32]) -> f64 {
+    let sig = norm2_sq(s0);
+    let mut diff = vec![0f32; s0.len()];
+    crate::linalg::sub(x, s0, &mut diff);
+    let err = norm2_sq(&diff).max(1e-300);
+    10.0 * (sig / err).log10()
 }
 
 #[cfg(test)]
@@ -224,6 +356,73 @@ mod tests {
         let mut rng = Rng::new(1);
         assert!(Instance::generate(prior, ProblemDims { n: 0, m: 5, sigma_e2: 0.1 }, &mut rng)
             .is_err());
+    }
+
+    #[test]
+    fn batch_of_one_matches_instance_generate_bit_for_bit() {
+        let prior = BernoulliGauss::standard(0.07);
+        let dims = ProblemDims { n: 120, m: 40, sigma_e2: 1e-3 };
+        let mut r1 = Rng::new(1234);
+        let inst = Instance::generate(prior, dims, &mut r1).unwrap();
+        let mut r2 = Rng::new(1234);
+        let batch = Batch::generate(prior, dims, &mut r2, 1).unwrap();
+        assert_eq!(batch.batch(), 1);
+        assert_eq!(batch.a.data(), inst.a.data());
+        assert_eq!(batch.s0[0], inst.s0);
+        assert_eq!(batch.y[0], inst.y);
+        // Extraction round-trips.
+        let ex = batch.instance(0);
+        assert_eq!(ex.y, inst.y);
+        assert_eq!(batch.sdr_db(0, &batch.s0[0]), inst.sdr_db(&inst.s0));
+    }
+
+    #[test]
+    fn batch_validate_catches_inconsistent_hand_built_batches() {
+        let prior = BernoulliGauss::standard(0.1);
+        let dims = ProblemDims { n: 100, m: 30, sigma_e2: 1e-3 };
+        let mut rng = Rng::new(6);
+        let good = Batch::generate(prior, dims, &mut rng, 3).unwrap();
+        good.validate().unwrap();
+        // Fewer y vectors than signals.
+        let mut bad = good.clone();
+        bad.y.pop();
+        assert!(bad.validate().is_err());
+        // A y vector of the wrong length.
+        let mut bad = good.clone();
+        bad.y[1].pop();
+        assert!(bad.validate().is_err());
+        // A signal of the wrong length.
+        let mut bad = good.clone();
+        bad.s0[2].push(0.0);
+        assert!(bad.validate().is_err());
+        // An empty batch.
+        let mut bad = good;
+        bad.s0.clear();
+        bad.y.clear();
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn batch_signals_share_a_but_differ() {
+        let prior = BernoulliGauss::standard(0.1);
+        let dims = ProblemDims { n: 100, m: 30, sigma_e2: 1e-3 };
+        let mut rng = Rng::new(5);
+        let b = Batch::generate(prior, dims, &mut rng, 4).unwrap();
+        assert_eq!(b.batch(), 4);
+        assert_eq!((b.s0.len(), b.y.len()), (4, 4));
+        assert_ne!(b.s0[0], b.s0[1], "signals must be independent draws");
+        assert_ne!(b.y[2], b.y[3]);
+        // Every y_j is consistent with the shared A (up to noise).
+        for j in 0..4 {
+            let mut as0 = vec![0f32; 30];
+            b.a.matvec(&b.s0[j], &mut as0);
+            let mut e = vec![0f32; 30];
+            crate::linalg::sub(&b.y[j], &as0, &mut e);
+            let noise = norm2_sq(&e) / 30.0;
+            assert!(noise < 100.0 * dims.sigma_e2, "signal {j}: noise {noise}");
+        }
+        // Zero-size batches are rejected.
+        assert!(Batch::generate(prior, dims, &mut rng, 0).is_err());
     }
 
     #[test]

@@ -1,0 +1,214 @@
+//! Batching-equivalence coverage: a `B`-signal batched session must be
+//! **bit-for-bit** `B` independent `B = 1` sessions run on the extracted
+//! per-signal instances — row and column, raw and entropy-coded uplinks.
+//! Together with `tests/partitioning.rs` (P = 1 batched sessions equal
+//! centralized AMP bit-for-bit, the PR 2 numeric anchor, now executed by
+//! the scenario-generic `ProtocolCore`), this pins the refactored core to
+//! the pre-refactor numerics exactly.
+
+use std::sync::Arc;
+
+use mpamp::config::{CodecKind, Partitioning, RunConfig, ScheduleKind};
+use mpamp::signal::{Batch, ProblemDims};
+use mpamp::util::rng::Rng;
+use mpamp::Session;
+
+fn test_cfg(
+    partitioning: Partitioning,
+    schedule: ScheduleKind,
+    codec: CodecKind,
+    batch: usize,
+) -> RunConfig {
+    let mut cfg = RunConfig::test_small(0.05);
+    cfg.partitioning = partitioning;
+    cfg.schedule = schedule;
+    cfg.codec = codec;
+    cfg.batch = batch;
+    cfg
+}
+
+/// Run a `B`-signal batched session and `B` independent `B = 1` sessions
+/// on the same per-signal instances; assert the final estimates agree
+/// bit-for-bit and the batch-mean records agree to f64 round-off.
+fn check_batched_matches_independent(
+    partitioning: Partitioning,
+    schedule: ScheduleKind,
+    codec: CodecKind,
+    b: usize,
+) {
+    let label = format!("{partitioning:?}/{schedule:?}/{codec:?}");
+    let cfg = test_cfg(partitioning, schedule.clone(), codec, b);
+    let mut rng = Rng::new(cfg.seed);
+    let batch = Arc::new(
+        Batch::generate(
+            cfg.prior,
+            ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+            &mut rng,
+            b,
+        )
+        .unwrap(),
+    );
+    let batched = Session::with_batch(cfg, batch.clone()).unwrap().run().unwrap();
+    assert_eq!(batched.batch, b, "{label}");
+    assert_eq!(batched.final_xs.len(), b, "{label}");
+
+    let mut indep = Vec::with_capacity(b);
+    for j in 0..b {
+        let cfg1 = test_cfg(partitioning, schedule.clone(), codec, 1);
+        let report = Session::with_instance(cfg1, batch.instance(j))
+            .unwrap()
+            .run()
+            .unwrap();
+        indep.push(report);
+    }
+
+    // Per-signal final estimates: exact.
+    for (j, solo) in indep.iter().enumerate() {
+        for (i, (a, bb)) in
+            solo.final_x().iter().zip(&batched.final_xs[j]).enumerate()
+        {
+            assert_eq!(
+                a.to_bits(),
+                bb.to_bits(),
+                "{label}: signal {j} final_x[{i}] {bb} != independent {a}"
+            );
+        }
+        assert_eq!(
+            solo.sdr_db_per_signal[0].to_bits(),
+            batched.sdr_db_per_signal[j].to_bits(),
+            "{label}: signal {j} final SDR"
+        );
+    }
+    // Batch-mean records equal the mean of the independent records.
+    assert_eq!(batched.iters.len(), indep[0].iters.len(), "{label}");
+    for (t, rec) in batched.iters.iter().enumerate() {
+        let bf = b as f64;
+        let mean_sdr = indep.iter().map(|r| r.iters[t].sdr_db).sum::<f64>() / bf;
+        let mean_sd2 =
+            indep.iter().map(|r| r.iters[t].sigma_d2_hat).sum::<f64>() / bf;
+        let mean_q2 = indep.iter().map(|r| r.iters[t].sigma_q2).sum::<f64>() / bf;
+        let mean_wire = indep.iter().map(|r| r.iters[t].rate_wire).sum::<f64>() / bf;
+        let mean_alloc =
+            indep.iter().map(|r| r.iters[t].rate_alloc).sum::<f64>() / bf;
+        assert!(
+            (rec.sdr_db - mean_sdr).abs() < 1e-12,
+            "{label} t={t}: batched SDR {} vs mean {mean_sdr}",
+            rec.sdr_db
+        );
+        assert!(
+            (rec.sigma_d2_hat - mean_sd2).abs() < 1e-12,
+            "{label} t={t}: σ̂² {} vs mean {mean_sd2}",
+            rec.sigma_d2_hat
+        );
+        assert!(
+            (rec.sigma_q2 - mean_q2).abs() < 1e-12,
+            "{label} t={t}: σ_Q² {} vs mean {mean_q2}",
+            rec.sigma_q2
+        );
+        assert!(
+            (rec.rate_wire - mean_wire).abs() < 1e-12,
+            "{label} t={t}: batched wire rate {} vs mean {mean_wire}",
+            rec.rate_wire
+        );
+        assert!(
+            (rec.rate_alloc - mean_alloc).abs() < 1e-12,
+            "{label} t={t}: alloc rate {} vs mean {mean_alloc}",
+            rec.rate_alloc
+        );
+    }
+}
+
+#[test]
+fn row_batched_raw_matches_independent_runs() {
+    check_batched_matches_independent(
+        Partitioning::Row,
+        ScheduleKind::Uncompressed,
+        CodecKind::Range,
+        8,
+    );
+}
+
+#[test]
+fn row_batched_ecsq_matches_independent_runs() {
+    // Real entropy-coded uplinks: per-signal quantizer specs and range
+    // coding must be identical to the independent runs, byte for byte.
+    check_batched_matches_independent(
+        Partitioning::Row,
+        ScheduleKind::Fixed { bits: 4.0 },
+        CodecKind::Range,
+        8,
+    );
+}
+
+#[test]
+fn column_batched_raw_matches_independent_runs() {
+    check_batched_matches_independent(
+        Partitioning::Column,
+        ScheduleKind::Uncompressed,
+        CodecKind::Range,
+        4,
+    );
+}
+
+#[test]
+fn column_batched_ecsq_matches_independent_runs() {
+    check_batched_matches_independent(
+        Partitioning::Column,
+        ScheduleKind::Fixed { bits: 4.0 },
+        CodecKind::Range,
+        4,
+    );
+}
+
+#[test]
+fn row_batched_bt_schedule_matches_independent_runs() {
+    // The BT controller's online decisions depend on each signal's σ̂²
+    // trajectory — per-signal directives must reproduce the independent
+    // runs exactly.
+    check_batched_matches_independent(
+        Partitioning::Row,
+        ScheduleKind::BackTrack { ratio_max: 1.05, r_max: 6.0 },
+        CodecKind::Range,
+        4,
+    );
+}
+
+#[test]
+fn batched_tcp_matches_inproc() {
+    // Batched frames over real sockets: numerics identical to in-process.
+    let mut cfg = test_cfg(
+        Partitioning::Row,
+        ScheduleKind::Fixed { bits: 4.0 },
+        CodecKind::Range,
+        3,
+    );
+    let inproc = Session::new(cfg.clone()).unwrap().run().unwrap();
+    cfg.transport = mpamp::config::TransportKind::Tcp;
+    let tcp = Session::new(cfg).unwrap().run().unwrap();
+    for (a, b) in inproc.iters.iter().zip(&tcp.iters) {
+        assert!((a.sdr_db - b.sdr_db).abs() < 1e-9, "transport changed numerics");
+        assert!((a.rate_wire - b.rate_wire).abs() < 1e-12);
+    }
+    for (xa, xb) in inproc.final_xs.iter().zip(&tcp.final_xs) {
+        for (a, b) in xa.iter().zip(xb) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}
+
+#[test]
+fn batched_run_recovers_every_signal() {
+    // Sanity beyond equivalence: all B signals actually get recovered.
+    let cfg = test_cfg(
+        Partitioning::Row,
+        ScheduleKind::Fixed { bits: 4.0 },
+        CodecKind::Range,
+        6,
+    );
+    let report = Session::new(cfg).unwrap().run().unwrap();
+    assert_eq!(report.sdr_db_per_signal.len(), 6);
+    for (j, &sdr) in report.sdr_db_per_signal.iter().enumerate() {
+        assert!(sdr > 5.0, "signal {j}: SDR {sdr} dB");
+    }
+    assert!(report.signals_per_s() > 0.0);
+}

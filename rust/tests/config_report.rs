@@ -92,7 +92,9 @@ fn hand_built_report() -> RunReport {
             record(2, 14.0, 2.0, 2.2),
             record(3, 17.5, 1.0, 1.5),
         ],
-        final_x: vec![0.0; 16],
+        final_xs: vec![vec![0.0; 16]],
+        sdr_db_per_signal: vec![17.5],
+        batch: 1,
         dims: (16, 8, 2),
         schedule: "bt".into(),
         engine: "rust".into(),
@@ -116,6 +118,12 @@ fn report_totals_sum_per_iteration_rates() {
     let mut col = hand_built_report();
     col.partitioning = "column".into();
     assert_eq!(col.uplink_payload_bytes(), 28);
+    // Batched runs ship B vectors per worker per iteration.
+    let mut batched = hand_built_report();
+    batched.batch = 4;
+    assert_eq!(batched.uplink_payload_bytes(), 4 * 56);
+    // Throughput: batch / wall seconds.
+    assert!((batched.signals_per_s() - 4.0 / 0.5).abs() < 1e-12);
 }
 
 #[test]
@@ -154,6 +162,9 @@ fn report_serializes_to_csv_and_json() {
     assert!(json.contains("\"partitioning\":\"row\""), "{json}");
     assert!(json.contains("\"iters\":4"), "{json}");
     assert!(json.contains("\"stopped_early\":null"), "{json}");
+    assert!(json.contains("\"batch\":1"), "{json}");
+    assert!(json.contains("\"sdr_db_per_signal\":[17.5]"), "{json}");
+    assert!(json.contains("\"signals_per_s\":2"), "{json}");
     let mut stopped = r;
     stopped.stopped_early = Some("uplink budget spent".into());
     assert!(

@@ -73,7 +73,7 @@ fn check_p1_matches_centralized(
             ));
         }
     }
-    for (i, (a, b)) in cent.final_x.iter().zip(&report.final_x).enumerate() {
+    for (i, (a, b)) in cent.final_x.iter().zip(report.final_x()).enumerate() {
         // Plain float equality (tolerates only the ±0.0 ambiguity).
         if a != b {
             return Err(format!(

@@ -4,7 +4,6 @@
 //! seed/config.
 
 use mpamp::config::{RunConfig, ScheduleKind, TransportKind};
-use mpamp::coordinator::fusion::run_fusion;
 use mpamp::observe::{RecordLog, StopRule, StopSet};
 use mpamp::Session;
 use mpamp::SessionBuilder;
@@ -57,83 +56,98 @@ fn run_equals_manual_step_loop_across_schedules() {
             assert!((a.sigma_d2_hat - b.sigma_d2_hat).abs() < 1e-12, "{label}");
             assert!((a.sigma_q2 - b.sigma_q2).abs() < 1e-12, "{label}");
         }
-        for (a, b) in whole.final_x.iter().zip(&stepped.final_x) {
+        for (a, b) in whole.final_x().iter().zip(stepped.final_x()) {
             assert_eq!(a.to_bits(), b.to_bits(), "{label}: final_x differs");
         }
     }
 }
 
-/// `run()` must also agree with the low-level monolithic `run_fusion`
-/// entry point (the seed's code path, still exported) on the identical
-/// instance: the refactor moved the loop, not the numerics.
+/// `run()` must also agree with a hand-driven [`ProtocolCore`] — the
+/// generic round implementation the session wraps — on the identical
+/// instance: the scenario-generic refactor moved the loop, not the
+/// numerics.
 #[test]
-fn session_matches_monolithic_run_fusion() {
+fn session_matches_hand_driven_protocol_core() {
     use mpamp::alloc::schedule::RateController;
+    use mpamp::coordinator::scenario::{ProtocolCore, Row, Scenario};
     use mpamp::coordinator::transport::inproc_pair;
-    use mpamp::coordinator::worker::{run_worker, WorkerParams};
-    use mpamp::engine::{RustEngine, WorkerData};
+    use mpamp::coordinator::worker::{run_scenario_worker, WorkerParams};
+    use mpamp::engine::RustEngine;
     use mpamp::metrics::ByteMeter;
     use mpamp::se::StateEvolution;
-    use mpamp::signal::{Instance, ProblemDims};
+    use mpamp::signal::{Batch, ProblemDims};
     use mpamp::util::rng::Rng;
     use std::sync::Arc;
 
     let cfg = cfg_for(ScheduleKind::Fixed { bits: 4.0 });
     let mut rng = Rng::new(cfg.seed);
-    let inst = Instance::generate(
+    let batch = Batch::generate(
         cfg.prior,
         ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
         &mut rng,
+        1,
     )
     .unwrap();
 
-    // Monolithic path: hand-built transports + run_fusion in one call.
+    // Hand-driven path: raw transports + the generic core, no Session.
     let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
     let controller = RateController::from_config(&cfg, &se, None).unwrap();
     let engine = RustEngine::new(cfg.prior, cfg.threads);
     let meter = Arc::new(ByteMeter::new());
-    let shards = WorkerData::try_split(&inst.a, &inst.y, cfg.p).unwrap();
+    let shards = <Row as Scenario>::split(&batch, cfg.p).unwrap();
     let (mut fusion_eps, worker_eps): (Vec<_>, Vec<_>) =
         (0..cfg.p).map(|_| inproc_pair(meter.clone())).unzip();
-    let output = std::thread::scope(|s| {
+    let (records, final_xs) = std::thread::scope(|s| {
         for (id, (shard, mut ep)) in
-            shards.iter().zip(worker_eps.into_iter()).enumerate()
+            shards.into_iter().zip(worker_eps.into_iter()).enumerate()
         {
             let params = WorkerParams {
                 id: id as u32,
                 p_workers: cfg.p,
+                batch: 1,
                 prior: cfg.prior,
                 codec: cfg.codec,
             };
             let engine = &engine;
-            s.spawn(move || run_worker(&params, shard, engine, &mut ep));
+            s.spawn(move || {
+                run_scenario_worker::<Row>(&params, &shard, engine, &mut ep)
+            });
         }
-        run_fusion(
-            &cfg,
-            &se,
-            &controller,
-            None,
-            &engine,
-            &mut fusion_eps,
-            Some(&inst),
-        )
-    })
-    .unwrap();
+        let mut core: ProtocolCore<Row> = ProtocolCore::new(&batch, &cfg);
+        let mut records = Vec::new();
+        for _ in 0..cfg.iters {
+            records.push(
+                core.step(
+                    &cfg,
+                    &se,
+                    &controller,
+                    None,
+                    &engine,
+                    &mut fusion_eps,
+                    Some(&batch),
+                )
+                .unwrap(),
+            );
+        }
+        ProtocolCore::<Row>::finish(&mut fusion_eps).unwrap();
+        drop(fusion_eps);
+        (records, core.into_xs())
+    });
 
     // Stepwise path on the same instance.
     let report = SessionBuilder::from_config(cfg)
-        .instance(inst)
+        .instance(batch.instance(0))
         .build()
         .unwrap()
         .run()
         .unwrap();
 
-    assert_eq!(output.iters.len(), report.iters.len());
-    for (a, b) in output.iters.iter().zip(&report.iters) {
+    assert_eq!(records.len(), report.iters.len());
+    for (a, b) in records.iter().zip(&report.iters) {
         assert!((a.sdr_db - b.sdr_db).abs() < 1e-12, "t={}", a.t);
         assert!((a.rate_wire - b.rate_wire).abs() < 1e-12, "t={}", a.t);
     }
-    for (a, b) in output.final_x.iter().zip(&report.final_x) {
+    for (a, b) in final_xs[0].iter().zip(report.final_x()) {
         assert_eq!(a.to_bits(), b.to_bits());
     }
 }

@@ -49,8 +49,8 @@ fn xla_lc_step_matches_rust_engine() {
     let mut rng = Rng::new(5);
     let x: Vec<f32> = (0..N).map(|_| rng.gaussian() as f32 * 0.2).collect();
     let z_prev: Vec<f32> = (0..MP).map(|_| rng.gaussian() as f32 * 0.1).collect();
-    let r = rust.lc_step(&shard, &x, &z_prev, 0.7, P).unwrap();
-    let g = xla.lc_step(&shard, &x, &z_prev, 0.7, P).unwrap();
+    let r = rust.lc_step(&shard.a, &shard.y, &x, &z_prev, 0.7, P).unwrap();
+    let g = xla.lc_step(&shard.a, &shard.y, &x, &z_prev, 0.7, P).unwrap();
     for i in 0..MP {
         assert!(
             (r.z[i] - g.z[i]).abs() < 1e-4,
@@ -162,7 +162,7 @@ fn xla_engine_used_from_many_threads() {
                 let x = vec![0.1f32; N];
                 let z = vec![0.0f32; MP];
                 for _ in 0..3 {
-                    let out = xla.lc_step(shard, &x, &z, 0.0, P).unwrap();
+                    let out = xla.lc_step(&shard.a, &shard.y, &x, &z, 0.0, P).unwrap();
                     assert_eq!(out.f_partial.len(), N);
                 }
             });
