@@ -1,0 +1,99 @@
+//! Ablation A7: SDR-per-bit across **every registered compression
+//! stack** at a matched fixed design rate, on identical data — the
+//! trade-off surface the pluggable-stack redesign opens up (ECSQ vs
+//! dithered ECSQ vs top-K, analytic vs real codecs, plus any stack the
+//! embedding application registers).
+//!
+//! Emits `results/ablation_compressors.csv` plus machine-readable JSON
+//! records with an `sdr_per_bit` field per stack (merged into
+//! `BENCH_pr.json` by the CI `bench-smoke` job).
+//!
+//! Flags (after `cargo bench --bench ablation_compressors --`):
+//! * `--smoke`       cap the sessions at 4 iterations (the CI job)
+//! * `--json <path>` write the JSON records to `<path>`
+
+use mpamp::bench_util::{write_bench_json, BenchRecord};
+use mpamp::experiment::Sweep;
+use mpamp::metrics::Csv;
+use mpamp::observe::{StopRule, StopSet};
+use mpamp::SessionBuilder;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let rate_bits = 4.0;
+    let stacks = mpamp::compress::registry::names();
+    let base = SessionBuilder::test_small(0.05).fixed_rate(rate_bits);
+    let cfg = base.clone().config()?;
+    let mut sweep = Sweep::new();
+    sweep.add_compressors(&format!("fixed{rate_bits}"), &base, &stacks);
+    if smoke {
+        sweep = sweep.stop(StopSet::none().with(StopRule::MaxIters(4)));
+    }
+    let trials = sweep.run()?;
+    assert_eq!(trials.len(), stacks.len(), "one trial per registered stack");
+
+    let mut csv = Csv::new(&[
+        "stack",
+        "rate_bits",
+        "uplink_bits_per_signal_element",
+        "final_sdr_db",
+        "sdr_db_per_bit",
+    ]);
+    let mut records = Vec::new();
+    println!(
+        "compression stacks at fixed {rate_bits}-bit design rate \
+         (N={} M={} P={} ε=0.05):",
+        cfg.n, cfg.m, cfg.p
+    );
+    println!(
+        "{:>22} {:>16} {:>11} {:>12}",
+        "stack", "bits/signal-el", "SDR (dB)", "SDR/bit"
+    );
+    for (stack, trial) in stacks.iter().zip(&trials) {
+        let r = &trial.report;
+        let bits_per_signal_el =
+            (r.uplink_payload_bytes() * 8) as f64 / r.dims.0 as f64;
+        let sdr = r.final_sdr_db();
+        let sdr_per_bit = if bits_per_signal_el > 0.0 { sdr / bits_per_signal_el } else { 0.0 };
+        println!(
+            "{stack:>22} {bits_per_signal_el:>16.2} {sdr:>11.2} {sdr_per_bit:>12.4}"
+        );
+        csv.push_raw(vec![
+            stack.clone(),
+            format!("{rate_bits:.6}"),
+            format!("{bits_per_signal_el:.6}"),
+            format!("{sdr:.6}"),
+            format!("{sdr_per_bit:.6}"),
+        ]);
+        records.push(BenchRecord {
+            name: format!("ablation compressor/{stack}"),
+            wall_s: r.wall_s,
+            bytes_uplinked: r.uplink_payload_bytes(),
+            signals_per_s: r.signals_per_s(),
+            sdr_per_bit: Some(sdr_per_bit),
+        });
+        // Sanity: the ECSQ family must recover the signal at 4 bits (the
+        // top-K budget keeps only ~37 of 600 entries per worker, so it is
+        // measured, not gated). The smoke preset stops after 4 iterations,
+        // so its floor is looser.
+        if stack.starts_with("ecsq") {
+            let floor = if smoke { 2.0 } else { 5.0 };
+            assert!(sdr > floor, "{stack} @ {rate_bits} bits failed: SDR={sdr}");
+        }
+    }
+    csv.write("results/ablation_compressors.csv")?;
+    if let Some(path) = &json_path {
+        write_bench_json(path, &records)?;
+        println!("→ results/ablation_compressors.csv + {path}");
+    } else {
+        println!("→ results/ablation_compressors.csv");
+    }
+    Ok(())
+}

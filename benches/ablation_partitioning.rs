@@ -89,6 +89,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             wall_s: r.wall_s,
             bytes_uplinked: r.uplink_payload_bytes(),
             signals_per_s: r.signals_per_s(),
+            sdr_per_bit: Some(sdr_per_bit),
         });
         // Sanity: at ≥4 bits both scenarios must recover the signal.
         if bits >= 4.0 {

@@ -233,6 +233,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             wall_s,
             bytes_uplinked: bytes,
             signals_per_s: report.signals_per_s(),
+            sdr_per_bit: None,
         });
     }
     // The batching win as one number: wall time of 8 sequential B=1
@@ -257,6 +258,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         wall_s: wall_seq,
         bytes_uplinked: 0,
         signals_per_s: e2e_batch as f64 / wall_seq.max(1e-12),
+        sdr_per_bit: None,
     });
 
     if let Some(path) = json_path {

@@ -1,7 +1,8 @@
 //! Coding-rate allocation across AMP iterations — the paper's two schemes:
 //! the online back-tracking heuristic ([`backtrack`], §3.3) and the
-//! dynamic-programming optimum ([`dp`], §3.4) — plus the unified
-//! per-iteration [`schedule::Directive`] interface the coordinator consumes.
+//! dynamic-programming optimum ([`dp`], §3.4) — behind the open
+//! [`schedule::RateAllocator`] trait whose per-iteration
+//! [`schedule::Directive`]s the coordinator consumes.
 
 pub mod backtrack;
 pub mod dp;
@@ -9,4 +10,4 @@ pub mod schedule;
 
 pub use backtrack::{BtController, BtDecision, RateModel};
 pub use dp::{DpAllocator, DpResult};
-pub use schedule::{Directive, RateController};
+pub use schedule::{allocator_from_config, Directive, RateAllocator};

@@ -1,6 +1,12 @@
-//! Unified rate-schedule interface consumed by the MP-AMP session: every
-//! scheme (uncompressed / fixed / BT / DP) reduces to a per-iteration
-//! [`Directive`] telling the workers how to code `f_t^p`.
+//! Rate allocation as an open trait: every scheme reduces to a
+//! per-iteration [`Directive`] telling the workers how to code `f_t^p`.
+//!
+//! [`RateAllocator`] replaces the old closed `RateController` enum — the
+//! uncompressed / fixed / BT / DP schemes are now ordinary impls
+//! ([`RawAllocator`], [`FixedRateAllocator`], [`BtRateAllocator`],
+//! [`DpRateAllocator`]), and a session accepts any
+//! `Box<dyn RateAllocator>`; [`allocator_from_config`] resolves the
+//! config's `ScheduleKind` into one (running the DP solver when needed).
 
 use crate::alloc::backtrack::{BtController, RateModel};
 use crate::alloc::dp::{DpAllocator, DpResult};
@@ -14,64 +20,102 @@ use crate::se::StateEvolution;
 pub enum Directive {
     /// Send raw 32-bit floats (32 bits/element on the wire).
     Raw,
-    /// ECSQ with the given per-worker quantization MSE target.
+    /// Quantize to the given per-worker quantization MSE target.
     QuantizeMse(f64),
-    /// ECSQ designed for the given rate (bits/element).
+    /// Quantize at the given design rate (bits/element).
     QuantizeRate(f64),
     /// Send nothing (zero-rate iteration; fusion reconstructs zeros).
     Skip,
 }
 
-/// A resolved rate controller for one run.
-pub enum RateController {
-    /// 32-bit float baseline.
-    Uncompressed,
-    /// Fixed rate every iteration.
-    Fixed {
-        /// Bits/element per iteration.
-        bits: f64,
-    },
-    /// BT-MP-AMP (online; decisions depend on σ̂²_{t,D}).
-    BackTrack {
-        /// The controller.
-        ratio_max: f64,
-        /// Per-iteration cap.
-        r_max: f64,
-    },
-    /// DP-MP-AMP (offline; rates precomputed).
-    Dp {
-        /// The DP solution.
-        result: DpResult,
-    },
+/// A per-iteration coding-rate policy. Implementations see the online
+/// σ̂²_{t,D} estimate each round and answer with a [`Directive`]; whether
+/// the directive is realized by ECSQ, dithered ECSQ, top-K, or a custom
+/// stack is the compression registry's business, not the allocator's.
+pub trait RateAllocator: Send + Sync {
+    /// Directive for iteration `t` given the current σ̂²_{t,D} estimate.
+    fn directive(
+        &self,
+        t: usize,
+        sigma_d2_hat: f64,
+        se: &StateEvolution,
+        p_workers: usize,
+        t_iters: usize,
+        cache: Option<&RdCache>,
+    ) -> Directive;
+
+    /// Human-readable scheme name (reports).
+    fn name(&self) -> &'static str;
 }
 
-impl RateController {
-    /// Resolve a config into a controller (runs the DP solver if needed).
-    pub fn from_config(
-        cfg: &RunConfig,
-        se: &StateEvolution,
-        cache: Option<&RdCache>,
-    ) -> Result<Self> {
-        Ok(match &cfg.schedule {
-            ScheduleKind::Uncompressed => RateController::Uncompressed,
-            ScheduleKind::Fixed { bits } => RateController::Fixed { bits: *bits },
-            ScheduleKind::BackTrack { ratio_max, r_max } => {
-                RateController::BackTrack { ratio_max: *ratio_max, r_max: *r_max }
-            }
-            ScheduleKind::Dp { total_rate, delta_r } => {
-                let cache = cache.ok_or_else(|| {
-                    crate::error::Error::Config("DP schedule requires an RdCache".into())
-                })?;
-                let total = total_rate.unwrap_or(2.0 * cfg.iters as f64);
-                let alloc = DpAllocator::new(se, cfg.p, cache)?;
-                let result = alloc.solve(cfg.iters, total, *delta_r)?;
-                RateController::Dp { result }
-            }
-        })
+/// 32-bit float baseline (the paper's uncompressed MP-AMP).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RawAllocator;
+
+impl RateAllocator for RawAllocator {
+    fn directive(
+        &self,
+        _t: usize,
+        _sigma_d2_hat: f64,
+        _se: &StateEvolution,
+        _p_workers: usize,
+        _t_iters: usize,
+        _cache: Option<&RdCache>,
+    ) -> Directive {
+        Directive::Raw
     }
 
-    /// Directive for iteration `t` given the current σ̂²_{t,D} estimate.
-    pub fn directive(
+    fn name(&self) -> &'static str {
+        "uncompressed"
+    }
+}
+
+/// Fixed rate (bits/element) every iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct FixedRateAllocator {
+    /// Bits/element per iteration.
+    pub bits: f64,
+}
+
+impl RateAllocator for FixedRateAllocator {
+    fn directive(
+        &self,
+        _t: usize,
+        _sigma_d2_hat: f64,
+        _se: &StateEvolution,
+        _p_workers: usize,
+        _t_iters: usize,
+        _cache: Option<&RdCache>,
+    ) -> Directive {
+        Directive::QuantizeRate(self.bits)
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+/// BT-MP-AMP (paper §3.3): online back-tracking, decisions depend on the
+/// measured σ̂²_{t,D}.
+///
+/// The controller prices its σ_Q² targets with the **ECSQ rate model**
+/// (`RateModel::Ecsq`), as in the paper. Non-ECSQ stacks still realize
+/// the σ_Q² targets correctly (the quantization-aware SE uses each
+/// stack's own `distortion_model()`), but their *bit cost* for hitting a
+/// target can differ from the model — e.g. `topk.raw` pays `64·K/len`
+/// bits, so `r_max` bounds the modeled rate, not top-K's wire rate.
+/// Coupling allocators to the registered stack's R(D) is a ROADMAP open
+/// item.
+#[derive(Debug, Clone, Copy)]
+pub struct BtRateAllocator {
+    /// Allowed ratio `σ²_{t+1,D} / σ²_{t+1,C}`.
+    pub ratio_max: f64,
+    /// Per-iteration rate cap in bits/element.
+    pub r_max: f64,
+}
+
+impl RateAllocator for BtRateAllocator {
+    fn directive(
         &self,
         t: usize,
         sigma_d2_hat: f64,
@@ -80,43 +124,77 @@ impl RateController {
         t_iters: usize,
         cache: Option<&RdCache>,
     ) -> Directive {
-        match self {
-            RateController::Uncompressed => Directive::Raw,
-            RateController::Fixed { bits } => Directive::QuantizeRate(*bits),
-            RateController::BackTrack { ratio_max, r_max } => {
-                let ctl = BtController::new(se, p_workers, *ratio_max, *r_max, t_iters);
-                let d = ctl.decide(t, sigma_d2_hat, RateModel::Ecsq, cache);
-                if d.sigma_q2 <= 0.0 {
-                    Directive::QuantizeRate(*r_max)
-                } else {
-                    Directive::QuantizeMse(d.sigma_q2)
-                }
-            }
-            RateController::Dp { result } => {
-                let rate = result.rates.get(t).copied().unwrap_or(0.0);
-                if rate <= 0.0 {
-                    Directive::Skip
-                } else {
-                    // ECSQ realization of the DP's RD-optimal σ_Q² target:
-                    // quantize to the σ_Q² the DP assumed; the entropy coder
-                    // then costs ≈ rate + 0.255 bits (paper §4).
-                    Directive::QuantizeMse(
-                        result.sigma_q2.get(t).copied().unwrap_or(f64::INFINITY),
-                    )
-                }
-            }
+        let ctl = BtController::new(se, p_workers, self.ratio_max, self.r_max, t_iters);
+        let d = ctl.decide(t, sigma_d2_hat, RateModel::Ecsq, cache);
+        if d.sigma_q2 <= 0.0 {
+            Directive::QuantizeRate(self.r_max)
+        } else {
+            Directive::QuantizeMse(d.sigma_q2)
         }
     }
 
-    /// Human-readable name (reports).
-    pub fn name(&self) -> &'static str {
-        match self {
-            RateController::Uncompressed => "uncompressed",
-            RateController::Fixed { .. } => "fixed",
-            RateController::BackTrack { .. } => "bt",
-            RateController::Dp { .. } => "dp",
+    fn name(&self) -> &'static str {
+        "bt"
+    }
+}
+
+/// DP-MP-AMP (paper §3.4): offline dynamic-programming allocation; the
+/// rates are precomputed at construction.
+#[derive(Debug, Clone)]
+pub struct DpRateAllocator {
+    /// The DP solution.
+    pub result: DpResult,
+}
+
+impl RateAllocator for DpRateAllocator {
+    fn directive(
+        &self,
+        t: usize,
+        _sigma_d2_hat: f64,
+        _se: &StateEvolution,
+        _p_workers: usize,
+        _t_iters: usize,
+        _cache: Option<&RdCache>,
+    ) -> Directive {
+        let rate = self.result.rates.get(t).copied().unwrap_or(0.0);
+        if rate <= 0.0 {
+            Directive::Skip
+        } else {
+            // ECSQ realization of the DP's RD-optimal σ_Q² target:
+            // quantize to the σ_Q² the DP assumed; the entropy coder
+            // then costs ≈ rate + 0.255 bits (paper §4).
+            Directive::QuantizeMse(self.result.sigma_q2.get(t).copied().unwrap_or(f64::INFINITY))
         }
     }
+
+    fn name(&self) -> &'static str {
+        "dp"
+    }
+}
+
+/// Resolve a config's `ScheduleKind` into an allocator (runs the DP
+/// solver if needed).
+pub fn allocator_from_config(
+    cfg: &RunConfig,
+    se: &StateEvolution,
+    cache: Option<&RdCache>,
+) -> Result<Box<dyn RateAllocator>> {
+    Ok(match &cfg.schedule {
+        ScheduleKind::Uncompressed => Box::new(RawAllocator),
+        ScheduleKind::Fixed { bits } => Box::new(FixedRateAllocator { bits: *bits }),
+        ScheduleKind::BackTrack { ratio_max, r_max } => {
+            Box::new(BtRateAllocator { ratio_max: *ratio_max, r_max: *r_max })
+        }
+        ScheduleKind::Dp { total_rate, delta_r } => {
+            let cache = cache.ok_or_else(|| {
+                crate::error::Error::Config("DP schedule requires an RdCache".into())
+            })?;
+            let total = total_rate.unwrap_or(2.0 * cfg.iters as f64);
+            let alloc = DpAllocator::new(se, cfg.p, cache)?;
+            let result = alloc.solve(cfg.iters, total, *delta_r)?;
+            Box::new(DpRateAllocator { result })
+        }
+    })
 }
 
 #[cfg(test)]
@@ -140,13 +218,15 @@ mod tests {
         let mut cfg = RunConfig::test_small(0.05);
         let (se, cache) = se_cache(0.05, cfg.p);
         cfg.schedule = ScheduleKind::Uncompressed;
-        let rc = RateController::from_config(&cfg, &se, Some(&cache)).unwrap();
+        let rc = allocator_from_config(&cfg, &se, Some(&cache)).unwrap();
+        assert_eq!(rc.name(), "uncompressed");
         assert_eq!(
             rc.directive(0, se.sigma0_sq(), &se, cfg.p, cfg.iters, Some(&cache)),
             Directive::Raw
         );
         cfg.schedule = ScheduleKind::Fixed { bits: 3.0 };
-        let rc = RateController::from_config(&cfg, &se, Some(&cache)).unwrap();
+        let rc = allocator_from_config(&cfg, &se, Some(&cache)).unwrap();
+        assert_eq!(rc.name(), "fixed");
         assert_eq!(
             rc.directive(2, 0.1, &se, cfg.p, cfg.iters, Some(&cache)),
             Directive::QuantizeRate(3.0)
@@ -154,17 +234,12 @@ mod tests {
     }
 
     #[test]
-    fn dp_controller_resolves_rates() {
+    fn dp_allocator_resolves_rates() {
         let mut cfg = RunConfig::test_small(0.05);
         cfg.schedule = ScheduleKind::Dp { total_rate: Some(8.0), delta_r: 0.5 };
         let (se, cache) = se_cache(0.05, cfg.p);
-        let rc = RateController::from_config(&cfg, &se, Some(&cache)).unwrap();
-        if let RateController::Dp { result } = &rc {
-            assert_eq!(result.rates.len(), cfg.iters);
-            assert!((result.rates.iter().sum::<f64>() - 8.0).abs() < 1e-9);
-        } else {
-            panic!("expected DP controller");
-        }
+        let rc = allocator_from_config(&cfg, &se, Some(&cache)).unwrap();
+        assert_eq!(rc.name(), "dp");
         // Directives: Skip for zero-rate, QuantizeMse otherwise.
         for t in 0..cfg.iters {
             let d = rc.directive(t, 0.1, &se, cfg.p, cfg.iters, Some(&cache));
@@ -173,14 +248,20 @@ mod tests {
                 other => panic!("unexpected directive {other:?}"),
             }
         }
+        // Past the horizon the DP charges nothing.
+        assert_eq!(
+            rc.directive(cfg.iters + 3, 0.1, &se, cfg.p, cfg.iters, Some(&cache)),
+            Directive::Skip
+        );
     }
 
     #[test]
-    fn bt_controller_gives_quantize_directives() {
+    fn bt_allocator_gives_quantize_directives() {
         let mut cfg = RunConfig::test_small(0.05);
         cfg.schedule = ScheduleKind::BackTrack { ratio_max: 1.05, r_max: 6.0 };
         let (se, cache) = se_cache(0.05, cfg.p);
-        let rc = RateController::from_config(&cfg, &se, Some(&cache)).unwrap();
+        let rc = allocator_from_config(&cfg, &se, Some(&cache)).unwrap();
+        assert_eq!(rc.name(), "bt");
         let d = rc.directive(0, se.sigma0_sq(), &se, cfg.p, cfg.iters, Some(&cache));
         match d {
             Directive::QuantizeMse(q) => assert!(q > 0.0),
@@ -195,6 +276,36 @@ mod tests {
         cfg.schedule = ScheduleKind::Dp { total_rate: None, delta_r: 0.5 };
         let prior = cfg.prior;
         let se = StateEvolution::new(prior, cfg.kappa(), cfg.sigma_e2());
-        assert!(RateController::from_config(&cfg, &se, None).is_err());
+        assert!(allocator_from_config(&cfg, &se, None).is_err());
+    }
+
+    #[test]
+    fn custom_allocator_plugs_in() {
+        // The point of the trait: a scheme the repo never shipped — rate
+        // halving per iteration — is a three-line impl.
+        struct Halving {
+            r0: f64,
+        }
+        impl RateAllocator for Halving {
+            fn directive(
+                &self,
+                t: usize,
+                _s: f64,
+                _se: &StateEvolution,
+                _p: usize,
+                _ti: usize,
+                _c: Option<&RdCache>,
+            ) -> Directive {
+                Directive::QuantizeRate(self.r0 / (1u64 << t.min(32)) as f64)
+            }
+            fn name(&self) -> &'static str {
+                "halving"
+            }
+        }
+        let cfg = RunConfig::test_small(0.05);
+        let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
+        let b: Box<dyn RateAllocator> = Box::new(Halving { r0: 8.0 });
+        assert_eq!(b.directive(1, 0.1, &se, cfg.p, cfg.iters, None), Directive::QuantizeRate(4.0));
+        assert_eq!(b.name(), "halving");
     }
 }

@@ -204,6 +204,10 @@ pub struct BenchRecord {
     pub bytes_uplinked: u64,
     /// Signal instances recovered per second (0 if not applicable).
     pub signals_per_s: f64,
+    /// Final SDR (dB) per uplinked bit per signal element — the
+    /// compressor-ablation quality metric (`None` for non-session
+    /// benches; serialized only when present).
+    pub sdr_per_bit: Option<f64>,
 }
 
 impl BenchRecord {
@@ -214,6 +218,7 @@ impl BenchRecord {
             wall_s: s.median.as_secs_f64(),
             bytes_uplinked: 0,
             signals_per_s: 0.0,
+            sdr_per_bit: None,
         }
     }
 }
@@ -227,11 +232,15 @@ pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<
         records
             .iter()
             .map(|r| {
-                Json::obj()
+                let mut obj = Json::obj()
                     .set("name", Json::Str(r.name.clone()))
                     .set("wall_s", Json::Num(r.wall_s))
                     .set("bytes_uplinked", Json::Num(r.bytes_uplinked as f64))
-                    .set("signals_per_s", Json::Num(r.signals_per_s))
+                    .set("signals_per_s", Json::Num(r.signals_per_s));
+                if let Some(spb) = r.sdr_per_bit {
+                    obj = obj.set("sdr_per_bit", Json::Num(spb));
+                }
+                obj
             })
             .collect(),
     );
@@ -286,12 +295,14 @@ mod tests {
                 wall_s: 0.0125,
                 bytes_uplinked: 0,
                 signals_per_s: 0.0,
+                sdr_per_bit: None,
             },
             BenchRecord {
                 name: "e2e row".into(),
                 wall_s: 1.5,
                 bytes_uplinked: 4096,
                 signals_per_s: 5.25,
+                sdr_per_bit: Some(0.75),
             },
         ];
         let dir = std::env::temp_dir().join("mpamp_bench_json_test");
@@ -303,6 +314,9 @@ mod tests {
         assert!(text.contains("\"wall_s\":0.0125"), "{text}");
         assert!(text.contains("\"bytes_uplinked\":4096"), "{text}");
         assert!(text.contains("\"signals_per_s\":5.25"), "{text}");
+        // sdr_per_bit serialized only when present.
+        assert!(text.contains("\"sdr_per_bit\":0.75"), "{text}");
+        assert_eq!(text.matches("sdr_per_bit").count(), 1, "{text}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

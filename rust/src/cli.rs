@@ -12,7 +12,7 @@ use crate::error::{Error, Result};
 /// as `--key value` is an option; use `--key=value` to force a value that
 /// looks like a flag.
 pub const KNOWN_FLAGS: &[&str] =
-    &["quiet", "verbose", "json", "help", "check", "no-coding", "keep-going"];
+    &["quiet", "verbose", "json", "help", "check", "no-coding", "keep-going", "names"];
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -111,13 +111,22 @@ COMMANDS:
     dp          Compute the DP-MP-AMP rate allocation offline
     bt          Preview the BT-MP-AMP rate schedule (SE-driven, no data)
     rd          Print a rate-distortion curve for the scalar channel
+    compressors List the registered compression stacks (--names: bare)
     artifacts   Check AOT artifact availability for the XLA engine
     help        Show this help
 
 COMMON OPTIONS:
     --config <file>          Load a TOML run config
+    --preset <name>          Start from a built-in config instead of a
+                             file: 'paper' (N=10000 paper setup) or
+                             'test_small' (fast smoke preset)
     --<key> <value>          Override any config key (e.g. --p 30,
                              --prior.eps 0.05, --schedule.kind dp)
+    --compressor <stack>     Uplink compression stack by registry name
+                             (see `mpamp compressors`): ecsq.range
+                             (default), ecsq.huffman, ecsq.analytic,
+                             ecsq-dithered.range, topk.raw, or any stack
+                             registered by the embedding application
     --partitioning <scheme>  'row' (default) or 'column' (C-MP-AMP:
                              workers own column blocks and uplink
                              quantized partial residuals; P must divide N)
@@ -141,6 +150,8 @@ EXAMPLES:
     mpamp run --prior.eps 0.05 --target-sdr 18 --max-bits 40
     mpamp run --partitioning column --p 40 --schedule.kind fixed
     mpamp run --batch 8 --schedule.kind fixed --schedule.bits 4
+    mpamp run --preset test_small --compressor ecsq-dithered.range
+    mpamp run --preset test_small --compressor topk.raw --partitioning column
     mpamp dp --prior.eps 0.03 --schedule.total_rate 16
 "
 }

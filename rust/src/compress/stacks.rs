@@ -1,0 +1,560 @@
+//! Built-in quantizers and entropy codecs: the paper's ECSQ (plain and
+//! subtractively dithered) and a top-K magnitude sparsifier, plus the
+//! analytic / range / Huffman / raw codecs they pair with in the
+//! [`registry`](crate::compress::registry).
+
+use std::cmp::Ordering;
+
+use crate::compress::{
+    codec_err, BlockCodec, BlockCtx, DesignCtx, EntropyCodec, Quantizer, QuantizerState,
+    SymbolModel,
+};
+use crate::error::Result;
+use crate::quant::entropy::{FreqTable, Huffman};
+use crate::quant::{EncodedBlock, UniformQuantizer};
+use crate::util::rng::Rng;
+
+/// Hard cap on `k_max` accepted off the wire (matches the bin cap of
+/// [`UniformQuantizer::new`]); a hostile spec must not size allocations.
+const MAX_K_MAX: f64 = (1u64 << 20) as f64;
+
+// ---------------------------------------------------------------------
+// ECSQ — the paper's entropy-coded scalar quantizer (§3.2)
+// ---------------------------------------------------------------------
+
+/// Plain mid-tread uniform quantizer, designed from the model channel —
+/// byte-identical to the pre-registry `EcsqCoder` pipeline.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EcsqQuantizer;
+
+/// Subtractively dithered variant: both sides share a seeded dither
+/// sequence `d_i ~ U(−Δ/2, Δ/2)`, the encoder quantizes `x + d_i`, the
+/// decoder subtracts `d_i` after reconstruction. The error `Q(x+d)−(x+d)`
+/// is exactly uniform and independent of the signal (Schuchman's
+/// condition), so reconstruction is unbiased and the Δ²/12 model holds
+/// without the paper's `Δ ≤ 2σ` validity caveat.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct DitheredEcsqQuantizer;
+
+/// Designed ECSQ state shared by the plain and dithered families
+/// (`dither_seed = None` → plain).
+struct EcsqState {
+    q: UniformQuantizer,
+    pmf: Vec<f64>,
+    entropy_bits: f64,
+    dither_seed: Option<u64>,
+}
+
+impl EcsqState {
+    fn build(q: UniformQuantizer, ctx: &DesignCtx, dither_seed: Option<u64>) -> Self {
+        let pmf = q.bin_pmf(&ctx.channel, ctx.noise_var);
+        let entropy_bits = -pmf.iter().map(|&p| crate::util::xlog2x(p)).sum::<f64>();
+        EcsqState { q, pmf, entropy_bits, dither_seed }
+    }
+
+    /// Per-(seed, worker) dither stream; both protocol sides derive the
+    /// identical sequence from the spec's seed and the block's worker id.
+    fn dither_rng(seed: u64, worker: u32) -> Rng {
+        Rng::new(seed ^ (worker as u64 + 1).wrapping_mul(0xA076_1D64_78BD_642F))
+    }
+}
+
+impl QuantizerState for EcsqState {
+    fn params(&self) -> Vec<f64> {
+        vec![self.q.delta, self.q.k_max as f64]
+    }
+
+    fn model(&self) -> Option<SymbolModel> {
+        Some(SymbolModel { pmf: self.pmf.clone() })
+    }
+
+    fn symbol_count(&self, len: usize) -> usize {
+        len
+    }
+
+    fn quantize(&self, ctx: &BlockCtx, xs: &[f32]) -> Vec<usize> {
+        match self.dither_seed {
+            None => self.q.quantize_block(xs),
+            Some(seed) => {
+                let mut rng = Self::dither_rng(seed, ctx.worker);
+                xs.iter()
+                    .map(|&x| {
+                        let d = (rng.uniform() - 0.5) * self.q.delta;
+                        self.q.symbol(x as f64 + d)
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    fn dequantize(&self, ctx: &BlockCtx, syms: &[usize], out: &mut [f32]) -> Result<()> {
+        if syms.len() != out.len() {
+            return Err(codec_err(format!(
+                "ecsq: {} symbols for {} elements",
+                syms.len(),
+                out.len()
+            )));
+        }
+        match self.dither_seed {
+            None => self.q.dequantize_block(syms, out),
+            Some(seed) => {
+                let mut rng = Self::dither_rng(seed, ctx.worker);
+                for (o, &s) in out.iter_mut().zip(syms) {
+                    let d = (rng.uniform() - 0.5) * self.q.delta;
+                    *o = (self.q.reconstruct_symbol(s) - d) as f32;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn distortion_model(&self) -> f64 {
+        self.q.sigma_q2()
+    }
+
+    fn model_bits_per_element(&self) -> f64 {
+        self.entropy_bits
+    }
+}
+
+/// Shared design/rebuild logic of the two ECSQ families.
+fn ecsq_design_mse(
+    ctx: &DesignCtx,
+    sigma_q2: f64,
+    dithered: bool,
+) -> Result<Box<dyn QuantizerState>> {
+    let clip = ctx.channel.clip_range(ctx.noise_var, ctx.clip_sds);
+    let q = UniformQuantizer::for_mse(sigma_q2, clip, 0.0)?;
+    let seed = if dithered { Some(ctx.seed) } else { None };
+    Ok(Box::new(EcsqState::build(q, ctx, seed)))
+}
+
+fn ecsq_design_rate(
+    ctx: &DesignCtx,
+    rate_bits: f64,
+    dithered: bool,
+) -> Result<Box<dyn QuantizerState>> {
+    let q = UniformQuantizer::for_rate(
+        &ctx.channel,
+        ctx.noise_var,
+        rate_bits,
+        ctx.clip_sds,
+        0.0,
+    )?;
+    let seed = if dithered { Some(ctx.seed) } else { None };
+    Ok(Box::new(EcsqState::build(q, ctx, seed)))
+}
+
+fn ecsq_from_params(
+    ctx: &DesignCtx,
+    params: &[f64],
+    dithered: bool,
+) -> Result<Box<dyn QuantizerState>> {
+    if params.len() != 2 {
+        return Err(codec_err(format!("ecsq spec wants 2 params, got {}", params.len())));
+    }
+    let (delta, k_max) = (params[0], params[1]);
+    if !(delta.is_finite() && delta > 0.0) {
+        return Err(codec_err(format!("ecsq spec: bad delta {delta}")));
+    }
+    if !(k_max.is_finite() && k_max >= 1.0 && k_max <= MAX_K_MAX && k_max.fract() == 0.0) {
+        return Err(codec_err(format!("ecsq spec: bad k_max {k_max}")));
+    }
+    let q = UniformQuantizer { delta, k_max: k_max as i32, center: 0.0 };
+    let seed = if dithered { Some(ctx.seed) } else { None };
+    Ok(Box::new(EcsqState::build(q, ctx, seed)))
+}
+
+impl Quantizer for EcsqQuantizer {
+    fn family(&self) -> &'static str {
+        "ecsq"
+    }
+
+    fn design_mse(&self, ctx: &DesignCtx, sigma_q2: f64) -> Result<Box<dyn QuantizerState>> {
+        ecsq_design_mse(ctx, sigma_q2, false)
+    }
+
+    fn design_rate(&self, ctx: &DesignCtx, rate_bits: f64) -> Result<Box<dyn QuantizerState>> {
+        ecsq_design_rate(ctx, rate_bits, false)
+    }
+
+    fn from_params(&self, ctx: &DesignCtx, params: &[f64]) -> Result<Box<dyn QuantizerState>> {
+        ecsq_from_params(ctx, params, false)
+    }
+}
+
+impl Quantizer for DitheredEcsqQuantizer {
+    fn family(&self) -> &'static str {
+        "ecsq-dithered"
+    }
+
+    fn design_mse(&self, ctx: &DesignCtx, sigma_q2: f64) -> Result<Box<dyn QuantizerState>> {
+        ecsq_design_mse(ctx, sigma_q2, true)
+    }
+
+    fn design_rate(&self, ctx: &DesignCtx, rate_bits: f64) -> Result<Box<dyn QuantizerState>> {
+        ecsq_design_rate(ctx, rate_bits, true)
+    }
+
+    fn from_params(&self, ctx: &DesignCtx, params: &[f64]) -> Result<Box<dyn QuantizerState>> {
+        ecsq_from_params(ctx, params, true)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Top-K magnitude sparsifier
+// ---------------------------------------------------------------------
+
+/// Wire bits per kept entry under the raw codec: a u32 index + an f32
+/// value, both as one u32 symbol each.
+const TOPK_BITS_PER_ENTRY: f64 = 64.0;
+
+/// Keep the `K` largest-magnitude elements, drop the rest to zero; kept
+/// values travel exactly (index + f32 bits). A qualitatively different
+/// rate-distortion trade-off from ECSQ: zero error on the kept support,
+/// the model channel's truncated energy `E[F²; |F| ≤ τ(K)]` on the rest —
+/// which is what [`QuantizerState::distortion_model`] reports into the
+/// quantization-aware SE.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TopKQuantizer;
+
+struct TopKState {
+    k: usize,
+    len: usize,
+    drop_var: f64,
+}
+
+impl TopKState {
+    /// Shared constructor: both design paths and `from_params` resolve a
+    /// `k` through here so the distortion model is identical on every
+    /// protocol side.
+    fn for_k(ctx: &DesignCtx, k: usize) -> TopKState {
+        let len = ctx.len.max(1);
+        let k = k.min(len);
+        let drop_var = if k >= len {
+            0.0
+        } else {
+            let tau = tau_for_keep_fraction(ctx, k as f64 / len as f64);
+            dropped_energy(ctx, tau)
+        };
+        TopKState { k, len, drop_var }
+    }
+}
+
+/// `P(|F| > τ)` under the design channel.
+fn keep_fraction(ctx: &DesignCtx, tau: f64) -> f64 {
+    let c = &ctx.channel;
+    (1.0 - (c.cdf_f(tau, ctx.noise_var) - c.cdf_f(-tau, ctx.noise_var))).max(0.0)
+}
+
+/// `E[F²; |F| ≤ τ]` — the energy a magnitude threshold drops.
+fn dropped_energy(ctx: &DesignCtx, tau: f64) -> f64 {
+    ctx.channel
+        .expect_f(ctx.noise_var, |f| if f.abs() <= tau { f * f } else { 0.0 })
+}
+
+/// Invert `keep_fraction`: the magnitude threshold with
+/// `P(|F| > τ) = frac` (bisection; `keep_fraction` is decreasing in τ).
+fn tau_for_keep_fraction(ctx: &DesignCtx, frac: f64) -> f64 {
+    let mut lo = 0.0f64;
+    let mut hi = ctx.channel.clip_range(ctx.noise_var, 40.0).max(1e-12);
+    for _ in 0..80 {
+        let mid = 0.5 * (lo + hi);
+        if keep_fraction(ctx, mid) > frac {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    0.5 * (lo + hi)
+}
+
+impl Quantizer for TopKQuantizer {
+    fn family(&self) -> &'static str {
+        "topk"
+    }
+
+    /// Smallest `K` whose modeled dropped energy stays under the target
+    /// σ_Q²: bisect the magnitude threshold on `E[F²; |F| ≤ τ]`, then
+    /// round the implied keep fraction up (erring toward less distortion).
+    fn design_mse(&self, ctx: &DesignCtx, sigma_q2: f64) -> Result<Box<dyn QuantizerState>> {
+        let len = ctx.len.max(1);
+        let total = ctx.channel.expect_f(ctx.noise_var, |f| f * f);
+        if !(sigma_q2.is_finite()) || sigma_q2 >= total {
+            return Ok(Box::new(TopKState::for_k(ctx, 0)));
+        }
+        let target = sigma_q2.max(0.0);
+        let mut lo = 0.0f64;
+        let mut hi = ctx.channel.clip_range(ctx.noise_var, 40.0).max(1e-12);
+        for _ in 0..80 {
+            let mid = 0.5 * (lo + hi);
+            if dropped_energy(ctx, mid) <= target {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        let tau = 0.5 * (lo + hi);
+        let k = (len as f64 * keep_fraction(ctx, tau)).ceil() as usize;
+        Ok(Box::new(TopKState::for_k(ctx, k.min(len))))
+    }
+
+    /// `K = ⌊rate·len / 64⌋` — each kept entry costs an index + value pair.
+    fn design_rate(&self, ctx: &DesignCtx, rate_bits: f64) -> Result<Box<dyn QuantizerState>> {
+        if !(rate_bits.is_finite() && rate_bits >= 0.0) {
+            return Err(codec_err(format!("topk: bad rate {rate_bits}")));
+        }
+        let len = ctx.len.max(1);
+        let k = ((rate_bits * len as f64) / TOPK_BITS_PER_ENTRY).floor() as usize;
+        Ok(Box::new(TopKState::for_k(ctx, k.min(len))))
+    }
+
+    fn from_params(&self, ctx: &DesignCtx, params: &[f64]) -> Result<Box<dyn QuantizerState>> {
+        if params.len() != 1 {
+            return Err(codec_err(format!("topk spec wants 1 param, got {}", params.len())));
+        }
+        let k = params[0];
+        if !(k.is_finite() && k >= 0.0 && k.fract() == 0.0 && k <= (1u64 << 32) as f64) {
+            return Err(codec_err(format!("topk spec: bad k {k}")));
+        }
+        Ok(Box::new(TopKState::for_k(ctx, k as usize)))
+    }
+}
+
+impl QuantizerState for TopKState {
+    fn params(&self) -> Vec<f64> {
+        vec![self.k as f64]
+    }
+
+    fn model(&self) -> Option<SymbolModel> {
+        None
+    }
+
+    fn symbol_count(&self, len: usize) -> usize {
+        2 * self.k.min(len)
+    }
+
+    fn quantize(&self, _ctx: &BlockCtx, xs: &[f32]) -> Vec<usize> {
+        let k = self.k.min(xs.len());
+        let mut order: Vec<usize> = (0..xs.len()).collect();
+        // Deterministic selection: magnitude descending, index ascending
+        // on ties (both sides only ever see the encoder's choice, but the
+        // tie-break keeps runs reproducible across platforms).
+        order.sort_unstable_by(|&a, &b| {
+            xs[b]
+                .abs()
+                .partial_cmp(&xs[a].abs())
+                .unwrap_or(Ordering::Equal)
+                .then(a.cmp(&b))
+        });
+        let mut top = order[..k].to_vec();
+        top.sort_unstable();
+        let mut syms = Vec::with_capacity(2 * k);
+        for i in top {
+            syms.push(i);
+            syms.push(xs[i].to_bits() as usize);
+        }
+        syms
+    }
+
+    fn dequantize(&self, _ctx: &BlockCtx, syms: &[usize], out: &mut [f32]) -> Result<()> {
+        if syms.len() != self.symbol_count(out.len()) {
+            return Err(codec_err(format!(
+                "topk: {} symbols for K={} over {} elements",
+                syms.len(),
+                self.k,
+                out.len()
+            )));
+        }
+        out.fill(0.0);
+        // The encoder emits strictly increasing indices; anything else
+        // (duplicates, shuffles) is a malformed wire stream, not data.
+        let mut prev: Option<usize> = None;
+        for pair in syms.chunks_exact(2) {
+            let i = pair[0];
+            if i >= out.len() {
+                return Err(codec_err(format!(
+                    "topk: index {i} out of range {}",
+                    out.len()
+                )));
+            }
+            if prev.is_some_and(|p| i <= p) {
+                return Err(codec_err(format!(
+                    "topk: indices not strictly increasing at {i}"
+                )));
+            }
+            prev = Some(i);
+            if pair[1] > u32::MAX as usize {
+                return Err(codec_err(format!("topk: bad value symbol {}", pair[1])));
+            }
+            out[i] = f32::from_bits(pair[1] as u32);
+        }
+        Ok(())
+    }
+
+    fn distortion_model(&self) -> f64 {
+        self.drop_var
+    }
+
+    fn model_bits_per_element(&self) -> f64 {
+        TOPK_BITS_PER_ENTRY * self.k.min(self.len) as f64 / self.len as f64
+    }
+}
+
+// ---------------------------------------------------------------------
+// Entropy codecs
+// ---------------------------------------------------------------------
+
+/// No actual coding: charge the model entropy `H_Q` per symbol (the
+/// paper's accounting) while the dequantized values travel as raw floats.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AnalyticCodec;
+
+/// Static range coder over the quantizer's model pmf (real wire bytes).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RangeCodec;
+
+/// Canonical Huffman over the model pmf (real bytes; integer-bit penalty).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HuffmanCodec;
+
+/// Model-free 4-byte little-endian symbol stream — for quantizers whose
+/// symbols are already incompressible (top-K index + f32-bit pairs).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RawSymbolCodec;
+
+fn require_model<'m>(model: Option<&'m SymbolModel>, codec: &str) -> Result<&'m SymbolModel> {
+    model.ok_or_else(|| {
+        codec_err(format!("{codec} codec needs a symbol model from the quantizer"))
+    })
+}
+
+struct AnalyticBlock {
+    bits_per_sym: f64,
+}
+
+impl BlockCodec for AnalyticBlock {
+    fn encode(&self, syms: &[usize]) -> Result<EncodedBlock> {
+        Ok(EncodedBlock {
+            bytes: Vec::new(),
+            wire_bits: self.bits_per_sym * syms.len() as f64,
+            n: syms.len(),
+        })
+    }
+
+    fn decode(&self, _bytes: &[u8], _n_syms: usize) -> Result<Vec<usize>> {
+        Err(codec_err("analytic codec carries no payload to decode"))
+    }
+}
+
+impl EntropyCodec for AnalyticCodec {
+    fn name(&self) -> &'static str {
+        "analytic"
+    }
+
+    fn carries_payload(&self) -> bool {
+        false
+    }
+
+    fn build(&self, model: Option<&SymbolModel>) -> Result<Box<dyn BlockCodec>> {
+        let model = require_model(model, "analytic")?;
+        Ok(Box::new(AnalyticBlock { bits_per_sym: model.entropy_bits() }))
+    }
+}
+
+struct RangeBlock {
+    freq: FreqTable,
+}
+
+impl BlockCodec for RangeBlock {
+    fn encode(&self, syms: &[usize]) -> Result<EncodedBlock> {
+        let bytes = crate::quant::entropy::range::encode_block(&self.freq, syms);
+        let wire_bits = bytes.len() as f64 * 8.0;
+        Ok(EncodedBlock { bytes, wire_bits, n: syms.len() })
+    }
+
+    fn decode(&self, bytes: &[u8], n_syms: usize) -> Result<Vec<usize>> {
+        crate::quant::entropy::range::decode_block(&self.freq, bytes, n_syms)
+    }
+}
+
+impl EntropyCodec for RangeCodec {
+    fn name(&self) -> &'static str {
+        "range"
+    }
+
+    fn build(&self, model: Option<&SymbolModel>) -> Result<Box<dyn BlockCodec>> {
+        let model = require_model(model, "range")?;
+        Ok(Box::new(RangeBlock { freq: FreqTable::from_pmf(&model.pmf)? }))
+    }
+}
+
+struct HuffmanBlock {
+    huff: Huffman,
+}
+
+impl BlockCodec for HuffmanBlock {
+    fn encode(&self, syms: &[usize]) -> Result<EncodedBlock> {
+        // Exact bit count (not 8·bytes): the pre-registry EcsqCoder
+        // charged Huffman's true bits, and the bit-equality pin holds us
+        // to it.
+        let wire_bits = self.huff.block_bits(syms) as f64;
+        Ok(EncodedBlock { bytes: self.huff.encode_block(syms), wire_bits, n: syms.len() })
+    }
+
+    fn decode(&self, bytes: &[u8], n_syms: usize) -> Result<Vec<usize>> {
+        self.huff.decode_block(bytes, n_syms)
+    }
+}
+
+impl EntropyCodec for HuffmanCodec {
+    fn name(&self) -> &'static str {
+        "huffman"
+    }
+
+    fn build(&self, model: Option<&SymbolModel>) -> Result<Box<dyn BlockCodec>> {
+        let model = require_model(model, "huffman")?;
+        let freq = FreqTable::from_pmf(&model.pmf)?;
+        Ok(Box::new(HuffmanBlock { huff: Huffman::from_table(&freq)? }))
+    }
+}
+
+struct RawSymbolBlock;
+
+impl BlockCodec for RawSymbolBlock {
+    fn encode(&self, syms: &[usize]) -> Result<EncodedBlock> {
+        let mut bytes = Vec::with_capacity(4 * syms.len());
+        for &s in syms {
+            if s > u32::MAX as usize {
+                return Err(codec_err(format!("raw codec: symbol {s} exceeds u32")));
+            }
+            bytes.extend_from_slice(&(s as u32).to_le_bytes());
+        }
+        let wire_bits = bytes.len() as f64 * 8.0;
+        Ok(EncodedBlock { bytes, wire_bits, n: syms.len() })
+    }
+
+    fn decode(&self, bytes: &[u8], n_syms: usize) -> Result<Vec<usize>> {
+        if bytes.len() != 4 * n_syms {
+            return Err(codec_err(format!(
+                "raw codec: {} bytes for {n_syms} symbols",
+                bytes.len()
+            )));
+        }
+        let mut syms = Vec::with_capacity(n_syms);
+        for chunk in bytes.chunks_exact(4) {
+            syms.push(u32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]) as usize);
+        }
+        Ok(syms)
+    }
+}
+
+impl EntropyCodec for RawSymbolCodec {
+    fn name(&self) -> &'static str {
+        "raw"
+    }
+
+    fn build(&self, _model: Option<&SymbolModel>) -> Result<Box<dyn BlockCodec>> {
+        Ok(Box::new(RawSymbolBlock))
+    }
+}

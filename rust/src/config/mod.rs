@@ -68,7 +68,12 @@ pub enum ScheduleKind {
     },
 }
 
-/// Entropy codec used on the wire.
+/// Entropy codec of the legacy standalone [`EcsqCoder`] pipeline, and the
+/// value space of the deprecated `codec` config key (which aliases to
+/// `compressor = "ecsq.<codec>"`). Sessions themselves select their full
+/// compression stack by registry name via [`RunConfig::compressor`].
+///
+/// [`EcsqCoder`]: crate::quant::EcsqCoder
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CodecKind {
     /// No actual coding — account analytic `H_Q` bits (paper's accounting).
@@ -143,8 +148,11 @@ pub struct RunConfig {
     pub threads: usize,
     /// Rate-allocation scheme.
     pub schedule: ScheduleKind,
-    /// Wire codec.
-    pub codec: CodecKind,
+    /// Uplink compression stack, by registry name (e.g. `"ecsq.huffman"`,
+    /// `"ecsq-dithered.range"`, `"topk.raw"`; see
+    /// [`compress::registry`](crate::compress::registry)). Validated
+    /// against the registry by [`RunConfig::validate`].
+    pub compressor: String,
     /// Compute engine.
     pub engine: EngineKind,
     /// Directory holding AOT artifacts (XLA engine).
@@ -182,7 +190,7 @@ impl RunConfig {
             seed: 0x5EED,
             threads: num_threads_default(),
             schedule: ScheduleKind::BackTrack { ratio_max: 1.02, r_max: 6.0 },
-            codec: CodecKind::Range,
+            compressor: crate::compress::registry::DEFAULT_STACK.to_string(),
             engine: EngineKind::Rust,
             artifact_dir: "artifacts".into(),
             transport: TransportKind::InProc,
@@ -276,6 +284,9 @@ impl RunConfig {
             }
             _ => {}
         }
+        // The compression stack must exist in the registry (the error
+        // lists every registered name).
+        crate::compress::registry::get(&self.compressor)?;
         Ok(())
     }
 
@@ -341,12 +352,15 @@ impl RunConfig {
             c.artifact_dir = req_str(v, "artifact_dir")?.to_string();
         }
         if let Some(v) = t.get("codec") {
-            c.codec = match req_str(v, "codec")? {
-                "analytic" => CodecKind::Analytic,
-                "range" => CodecKind::Range,
-                "huffman" => CodecKind::Huffman,
+            // Deprecated alias from the pre-registry config surface:
+            // `codec = "huffman"` selects the ECSQ stack with that codec.
+            c.compressor = match req_str(v, "codec")? {
+                s @ ("analytic" | "range" | "huffman") => format!("ecsq.{s}"),
                 other => return Err(Error::Config(format!("unknown codec '{other}'"))),
             };
+        }
+        if let Some(v) = t.get("compressor") {
+            c.compressor = req_str(v, "compressor")?.to_string();
         }
         if let Some(v) = t.get("engine") {
             c.engine = match req_str(v, "engine")? {
@@ -437,6 +451,13 @@ impl RunConfig {
         if overrides_eps && !overrides_iters {
             table.remove("iters");
         }
+        // A `codec` override must beat the always-encoded `compressor`
+        // base value (inside `from_table` the alias is applied first).
+        let overrides_codec = overrides.iter().any(|(k, _)| k == "codec");
+        let overrides_compressor = overrides.iter().any(|(k, _)| k == "compressor");
+        if overrides_codec && !overrides_compressor {
+            table.remove("compressor");
+        }
         for (k, v) in overrides {
             // CLI values arrive unquoted; fall back to a bare string when
             // the literal is not a number/bool.
@@ -461,12 +482,7 @@ impl RunConfig {
         t.insert("seed".into(), Value::Int(self.seed as i64));
         t.insert("threads".into(), Value::Int(self.threads as i64));
         t.insert("artifact_dir".into(), Value::Str(self.artifact_dir.clone()));
-        let codec = match self.codec {
-            CodecKind::Analytic => "analytic",
-            CodecKind::Range => "range",
-            CodecKind::Huffman => "huffman",
-        };
-        t.insert("codec".into(), Value::Str(codec.into()));
+        t.insert("compressor".into(), Value::Str(self.compressor.clone()));
         let engine = match self.engine {
             EngineKind::Rust => "rust",
             EngineKind::Xla => "xla",
@@ -522,6 +538,7 @@ pub const KNOWN_KEYS: &[&str] = &[
     "threads",
     "artifact_dir",
     "codec",
+    "compressor",
     "engine",
     "transport",
     "schedule.kind",
@@ -699,6 +716,35 @@ mod tests {
     fn unknown_enum_values_rejected() {
         let t = toml::parse("codec = \"lzma\"").unwrap();
         assert!(RunConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn compressor_key_parses_and_validates() {
+        let t = toml::parse("compressor = \"topk.raw\"").unwrap();
+        let c = RunConfig::from_table(&t).unwrap();
+        assert_eq!(c.compressor, "topk.raw");
+        // Round-trips through encode_into.
+        let mut enc = Table::new();
+        c.encode_into(&mut enc);
+        assert_eq!(RunConfig::from_table(&enc).unwrap().compressor, "topk.raw");
+        // Unregistered stacks fail at validate with the menu attached.
+        let t = toml::parse("compressor = \"vq.range\"").unwrap();
+        let err = RunConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("vq.range") && err.contains("ecsq.range"), "{err}");
+    }
+
+    #[test]
+    fn legacy_codec_key_aliases_to_ecsq_stack() {
+        let t = toml::parse("codec = \"huffman\"").unwrap();
+        assert_eq!(RunConfig::from_table(&t).unwrap().compressor, "ecsq.huffman");
+        // An explicit compressor key wins over the alias.
+        let t = toml::parse("codec = \"huffman\"\ncompressor = \"topk.raw\"").unwrap();
+        assert_eq!(RunConfig::from_table(&t).unwrap().compressor, "topk.raw");
+        // ...and a codec *override* beats the encoded base compressor.
+        let c = RunConfig::paper_default(0.05)
+            .apply_overrides(&[("codec".into(), "analytic".into())])
+            .unwrap();
+        assert_eq!(c.compressor, "ecsq.analytic");
     }
 
     #[test]

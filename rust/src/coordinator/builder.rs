@@ -18,8 +18,7 @@
 use std::sync::Arc;
 
 use crate::config::{
-    paper_iters, CodecKind, EngineKind, Partitioning, RdConfig, RunConfig, ScheduleKind,
-    TransportKind,
+    paper_iters, EngineKind, Partitioning, RdConfig, RunConfig, ScheduleKind, TransportKind,
 };
 use crate::coordinator::session::Session;
 use crate::error::Result;
@@ -182,9 +181,12 @@ impl SessionBuilder {
 
     // ---- execution substrate ----
 
-    /// Wire codec.
-    pub fn codec(mut self, codec: CodecKind) -> Self {
-        self.cfg.codec = codec;
+    /// Compression stack for the uplink, by registry name (e.g.
+    /// `"ecsq.huffman"`, `"ecsq-dithered.range"`, `"topk.raw"`; see
+    /// [`compress::registry::names`](crate::compress::registry::names)).
+    /// Validated against the registry at build.
+    pub fn compressor(mut self, name: impl Into<String>) -> Self {
+        self.cfg.compressor = name.into();
         self
     }
 
@@ -278,14 +280,24 @@ mod tests {
             .iters(7)
             .seed(42)
             .fixed_rate(3.5)
-            .codec(CodecKind::Huffman)
+            .compressor("ecsq.huffman")
             .transport(TransportKind::Tcp)
             .config()
             .unwrap();
         assert_eq!((cfg.n, cfg.m, cfg.p, cfg.iters, cfg.seed), (2_000, 600, 10, 7, 42));
         assert_eq!(cfg.schedule, ScheduleKind::Fixed { bits: 3.5 });
-        assert_eq!(cfg.codec, CodecKind::Huffman);
+        assert_eq!(cfg.compressor, "ecsq.huffman");
         assert_eq!(cfg.transport, TransportKind::Tcp);
+    }
+
+    #[test]
+    fn unknown_compressor_fails_at_config_time() {
+        let err = SessionBuilder::test_small(0.05).compressor("ecsq.lzma").config();
+        assert!(err.is_err());
+        let msg = err.unwrap_err().to_string();
+        assert!(msg.contains("ecsq.lzma"), "{msg}");
+        // The error carries the menu of registered stacks.
+        assert!(msg.contains("ecsq.range"), "{msg}");
     }
 
     #[test]

@@ -1,92 +1,26 @@
-//! Fusion-center entry points: quantizer-spec design for both scenarios
-//! and the [`ProtocolState`] dispatcher the stepwise
-//! [`Session`](crate::coordinator::session::Session) driver advances.
+//! Fusion-center entry points: the [`ProtocolState`] dispatcher the
+//! stepwise [`Session`](crate::coordinator::session::Session) driver
+//! advances.
 //!
 //! The per-iteration round logic lives **once**, in the scenario-generic
-//! [`ProtocolCore`]; this module only keeps the spec-design helpers
-//! (shared with workers, benches, and examples) and the thin enum that
-//! picks the monomorphized core for the configured
-//! [`Partitioning`](crate::config::Partitioning).
+//! [`ProtocolCore`]; quantizer-spec design lives in the compression
+//! registry ([`design_spec`](crate::coordinator::scenario::design_spec)
+//! assembles the configured stack per directive). This module keeps the
+//! thin enum that picks the monomorphized core for the configured
+//! [`Partitioning`](crate::config::Partitioning), plus the model-channel
+//! helper shared with benches and examples.
 
-use crate::alloc::schedule::{Directive, RateController};
+use crate::alloc::schedule::RateAllocator;
 use crate::config::{Partitioning, RunConfig};
-use crate::coordinator::message::QuantSpec;
 use crate::coordinator::scenario::{Column, ProtocolCore, Row};
 use crate::coordinator::transport::Endpoint;
 use crate::engine::ComputeEngine;
 use crate::error::Result;
 use crate::metrics::IterRecord;
-use crate::quant::UniformQuantizer;
 use crate::rd::RdCache;
 use crate::se::prior::BgChannel;
 use crate::se::StateEvolution;
 use crate::signal::Batch;
-
-/// Design a row-mode [`QuantSpec`] from a directive, given the current σ̂².
-pub fn spec_for_directive(
-    directive: &Directive,
-    se: &StateEvolution,
-    p_workers: usize,
-    sigma_d2_hat: f64,
-    clip_sds: f64,
-) -> Result<QuantSpec> {
-    Ok(match directive {
-        Directive::Raw => QuantSpec::Raw,
-        Directive::Skip => QuantSpec::Skip,
-        Directive::QuantizeMse(q2) => {
-            let (wch, ws2) = se.channel.worker_channel(sigma_d2_hat, p_workers);
-            let clip = wch.clip_range(ws2, clip_sds);
-            let q = UniformQuantizer::for_mse(*q2, clip, 0.0)?;
-            QuantSpec::Ecsq {
-                delta: q.delta,
-                k_max: q.k_max as u32,
-                sigma_d2_hat,
-            }
-        }
-        Directive::QuantizeRate(rate) => {
-            let (wch, ws2) = se.channel.worker_channel(sigma_d2_hat, p_workers);
-            let q = UniformQuantizer::for_rate(&wch, ws2, *rate, clip_sds, 0.0)?;
-            QuantSpec::Ecsq {
-                delta: q.delta,
-                k_max: q.k_max as u32,
-                sigma_d2_hat,
-            }
-        }
-    })
-}
-
-/// Column-mode [`QuantSpec`] design: the model channel is the Gaussian
-/// uplink-message channel at variance `v_hat`, which the spec carries (in
-/// its `sigma_d2_hat` field) so workers rebuild the identical coder.
-pub fn column_spec_for_directive(
-    directive: &Directive,
-    v_hat: f64,
-    clip_sds: f64,
-) -> Result<QuantSpec> {
-    Ok(match directive {
-        Directive::Raw => QuantSpec::Raw,
-        Directive::Skip => QuantSpec::Skip,
-        Directive::QuantizeMse(q2) => {
-            let (wch, ws2) = BgChannel::column_message_channel(v_hat);
-            let clip = wch.clip_range(ws2, clip_sds);
-            let q = UniformQuantizer::for_mse(*q2, clip, 0.0)?;
-            QuantSpec::Ecsq {
-                delta: q.delta,
-                k_max: q.k_max as u32,
-                sigma_d2_hat: v_hat,
-            }
-        }
-        Directive::QuantizeRate(rate) => {
-            let (wch, ws2) = BgChannel::column_message_channel(v_hat);
-            let q = UniformQuantizer::for_rate(&wch, ws2, *rate, clip_sds, 0.0)?;
-            QuantSpec::Ecsq {
-                delta: q.delta,
-                k_max: q.k_max as u32,
-                sigma_d2_hat: v_hat,
-            }
-        }
-    })
-}
 
 /// The partitioning-dispatched fusion state a [`Session`] drives — a thin
 /// enum over the monomorphized [`ProtocolCore`]s, one protocol round per
@@ -141,7 +75,7 @@ impl ProtocolState {
         &mut self,
         cfg: &RunConfig,
         se: &StateEvolution,
-        controller: &RateController,
+        controller: &dyn RateAllocator,
         cache: Option<&RdCache>,
         engine: &dyn ComputeEngine,
         endpoints: &mut [Endpoint],

@@ -19,28 +19,36 @@ use crate::error::{Error, Result};
 ///
 /// * v1 — single-signal messages (PR 1–2).
 /// * v2 — batched messages (`B` signals per frame) + versioned hello.
-pub const PROTOCOL_VERSION: u8 = 2;
+/// * v3 — named compression-stack specs (`QuantSpec::Stack` carries the
+///   registry name + opaque quantizer parameters instead of hard-wired
+///   ECSQ fields).
+pub const PROTOCOL_VERSION: u8 = 3;
 
 /// How workers should code one signal's uplink vector this iteration
 /// (broadcast by fusion; one spec per batch member rides in a single
 /// [`Message::QuantCmd`]).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum QuantSpec {
     /// Send raw 32-bit floats.
     Raw,
     /// Send nothing (zero-rate iteration).
     Skip,
-    /// Entropy-coded scalar quantization. Workers and fusion rebuild the
-    /// identical quantizer + model pmf from these parameters (plus the
-    /// static prior/P from config) — no codebook on the wire.
-    Ecsq {
-        /// Bin width Δ_Q.
-        delta: f64,
-        /// Largest bin index (2·k_max+1 bins).
-        k_max: u32,
-        /// The variance estimate the model pmf is built from (σ̂²_{t,D}
-        /// in row mode, the message variance v̂ in column mode).
-        sigma_d2_hat: f64,
+    /// Quantize + entropy-code with a registered compression stack.
+    /// Workers and fusion assemble the identical stack from the registry
+    /// name plus these parameters (and the static prior/P from config) —
+    /// no codebook on the wire.
+    Stack {
+        /// Registry name of the stack (e.g. `"ecsq.huffman"`).
+        name: String,
+        /// The variance estimate the model channel is rebuilt from
+        /// (σ̂²_{t,D} in row mode, the message variance v̂ in column
+        /// mode).
+        model_var: f64,
+        /// Deterministic design seed (shared dither streams fork on it).
+        seed: u64,
+        /// Quantizer parameters, interpreted by the named stack (ECSQ:
+        /// `[Δ, k_max]`; top-K: `[K]`).
+        params: Vec<f64>,
     },
 }
 
@@ -142,7 +150,18 @@ const TAG_COLSCALARS: u8 = 7;
 
 const SPEC_RAW: u8 = 0;
 const SPEC_SKIP: u8 = 1;
-const SPEC_ECSQ: u8 = 2;
+const SPEC_STACK: u8 = 2;
+
+/// Cap on the `QuantSpec::Stack` name length accepted by `decode` (a
+/// spec is tiny in memory, but unbounded strings/param vectors sized by
+/// wire-controlled counts would still be a hostile-peer amplification
+/// hole). Matches `registry::MAX_STACK_NAME`, which gates registration.
+const MAX_WIRE_STACK_NAME: u32 = 64;
+
+/// Cap on `QuantSpec::Stack` wire parameters. Enforced symmetrically: at
+/// design time (a custom quantizer whose `params()` overflows this fails
+/// with a clear error before anything is broadcast) and at `decode`.
+pub const MAX_WIRE_SPEC_PARAMS: u32 = 16;
 
 const PAY_RAW: u8 = 0;
 const PAY_CODED: u8 = 1;
@@ -181,11 +200,16 @@ impl Message {
                     match spec {
                         QuantSpec::Raw => out.push(SPEC_RAW),
                         QuantSpec::Skip => out.push(SPEC_SKIP),
-                        QuantSpec::Ecsq { delta, k_max, sigma_d2_hat } => {
-                            out.push(SPEC_ECSQ);
-                            push_f64(&mut out, *delta);
-                            push_u32(&mut out, *k_max);
-                            push_f64(&mut out, *sigma_d2_hat);
+                        QuantSpec::Stack { name, model_var, seed, params } => {
+                            out.push(SPEC_STACK);
+                            push_u32(&mut out, name.len() as u32);
+                            out.extend_from_slice(name.as_bytes());
+                            push_f64(&mut out, *model_var);
+                            push_u64(&mut out, *seed);
+                            push_u32(&mut out, params.len() as u32);
+                            for p in params {
+                                push_f64(&mut out, *p);
+                            }
                         }
                     }
                 }
@@ -253,11 +277,35 @@ impl Message {
                     specs.push(match c.u8()? {
                         SPEC_RAW => QuantSpec::Raw,
                         SPEC_SKIP => QuantSpec::Skip,
-                        SPEC_ECSQ => QuantSpec::Ecsq {
-                            delta: c.f64()?,
-                            k_max: c.u32()?,
-                            sigma_d2_hat: c.f64()?,
-                        },
+                        SPEC_STACK => {
+                            let name_len = c.u32()?;
+                            if name_len == 0 || name_len > MAX_WIRE_STACK_NAME {
+                                return Err(Error::Protocol(format!(
+                                    "stack name length {name_len} outside \
+                                     1..={MAX_WIRE_STACK_NAME}"
+                                )));
+                            }
+                            let name = String::from_utf8(
+                                c.bytes(name_len as usize)?.to_vec(),
+                            )
+                            .map_err(|_| {
+                                Error::Protocol("stack name is not UTF-8".into())
+                            })?;
+                            let model_var = c.f64()?;
+                            let seed = c.u64()?;
+                            let n_params = c.u32()?;
+                            if n_params > MAX_WIRE_SPEC_PARAMS {
+                                return Err(Error::Protocol(format!(
+                                    "spec param count {n_params} exceeds \
+                                     {MAX_WIRE_SPEC_PARAMS}"
+                                )));
+                            }
+                            let mut params = Vec::with_capacity(n_params as usize);
+                            for _ in 0..n_params {
+                                params.push(c.f64()?);
+                            }
+                            QuantSpec::Stack { name, model_var, seed, params }
+                        }
                         other => {
                             return Err(Error::Protocol(format!(
                                 "bad quant spec tag {other}"
@@ -336,6 +384,10 @@ fn push_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
 fn push_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
@@ -402,6 +454,13 @@ impl<'a> Cursor<'a> {
         Ok(count as usize)
     }
 
+    fn u64(&mut self) -> Result<u64> {
+        let b = self.bytes(8)?;
+        let mut a = [0u8; 8];
+        a.copy_from_slice(b);
+        Ok(u64::from_le_bytes(a))
+    }
+
     fn f64(&mut self) -> Result<f64> {
         let b = self.bytes(8)?;
         let mut a = [0u8; 8];
@@ -451,9 +510,19 @@ mod tests {
             Message::QuantCmd {
                 t: 9,
                 specs: vec![
-                    QuantSpec::Ecsq { delta: 0.031, k_max: 200, sigma_d2_hat: 0.7 },
+                    QuantSpec::Stack {
+                        name: "ecsq.range".into(),
+                        model_var: 0.7,
+                        seed: 0xDEAD_BEEF_u64,
+                        params: vec![0.031, 200.0],
+                    },
                     QuantSpec::Raw,
-                    QuantSpec::Ecsq { delta: 0.011, k_max: 64, sigma_d2_hat: 0.2 },
+                    QuantSpec::Stack {
+                        name: "topk.raw".into(),
+                        model_var: 0.2,
+                        seed: 0,
+                        params: vec![64.0],
+                    },
                 ],
             },
             Message::FVector {
@@ -538,6 +607,43 @@ mod tests {
         // The limit itself is generous: a real batch passes untouched.
         let big = Message::QuantCmd { t: 1, specs: vec![QuantSpec::Skip; 512] };
         assert_eq!(Message::decode(&big.encode()).unwrap(), big);
+    }
+
+    #[test]
+    fn decode_rejects_hostile_stack_specs() {
+        // Oversized name length must be rejected before allocation.
+        let mut enc = vec![TAG_QUANT];
+        enc.extend_from_slice(&0u32.to_le_bytes()); // t
+        enc.extend_from_slice(&1u32.to_le_bytes()); // one spec
+        enc.push(SPEC_STACK);
+        enc.extend_from_slice(&(MAX_WIRE_STACK_NAME + 1).to_le_bytes());
+        let err = Message::decode(&enc).unwrap_err().to_string();
+        assert!(err.contains("stack name length"), "{err}");
+        // Oversized param counts likewise.
+        let good_name = b"ecsq.range";
+        let mut enc = vec![TAG_QUANT];
+        enc.extend_from_slice(&0u32.to_le_bytes());
+        enc.extend_from_slice(&1u32.to_le_bytes());
+        enc.push(SPEC_STACK);
+        enc.extend_from_slice(&(good_name.len() as u32).to_le_bytes());
+        enc.extend_from_slice(good_name);
+        enc.extend_from_slice(&0.5f64.to_le_bytes());
+        enc.extend_from_slice(&7u64.to_le_bytes());
+        enc.extend_from_slice(&(MAX_WIRE_SPEC_PARAMS + 1).to_le_bytes());
+        let err = Message::decode(&enc).unwrap_err().to_string();
+        assert!(err.contains("param count"), "{err}");
+        // Non-UTF-8 names fail loudly.
+        let mut enc = vec![TAG_QUANT];
+        enc.extend_from_slice(&0u32.to_le_bytes());
+        enc.extend_from_slice(&1u32.to_le_bytes());
+        enc.push(SPEC_STACK);
+        enc.extend_from_slice(&2u32.to_le_bytes());
+        enc.extend_from_slice(&[0xFF, 0xFE]);
+        enc.extend_from_slice(&0.5f64.to_le_bytes());
+        enc.extend_from_slice(&7u64.to_le_bytes());
+        enc.extend_from_slice(&0u32.to_le_bytes());
+        let err = Message::decode(&enc).unwrap_err().to_string();
+        assert!(err.contains("UTF-8"), "{err}");
     }
 
     #[test]

@@ -25,9 +25,9 @@
 //! # Adding a third scenario
 //!
 //! A new partitioning only has to fill the trait's holes — the round
-//! driver, batching, wire protocol, quantizers, codecs, rate allocators,
-//! metering, and session machinery are inherited. Sketch for a
-//! hypothetical overlapping-block scenario:
+//! driver, batching, wire protocol, the compression-stack registry, rate
+//! allocators, metering, and session machinery are inherited. Sketch for
+//! a hypothetical overlapping-block scenario:
 //!
 //! ```ignore
 //! use mpamp::coordinator::scenario::{ProtocolCore, RoundStat, Scenario};
@@ -49,11 +49,11 @@
 //!     fn begin_round(fu: &mut OverlapFusion, cfg: &RunConfig, t: usize) -> Message { .. }
 //!     fn worker_serve(.., msg: Message) -> Result<(Message, Vec<Vec<f32>>)> { .. }
 //!     fn absorb(fu: &mut OverlapFusion, .., widx: usize, msg: Message) -> Result<()> { .. }
-//!     // Phase 3: what variance the quantizer models:
+//!     // Phase 3: which variance the round's stats carry into the spec,
+//!     // and the model channel every compression stack designs against:
 //!     fn stats(fu: &OverlapFusion, cfg: &RunConfig) -> Vec<RoundStat> { .. }
-//!     fn design_spec(..) -> Result<QuantSpec> { .. }
-//!     fn coder(..) -> Result<Option<EcsqCoder>> { .. }
-//!     fn sigma_q2(..) -> f64 { .. }
+//!     fn spec_var(stat: RoundStat) -> f64 { .. }
+//!     fn channel_for_var(prior: &BernoulliGauss, p: usize, var: f64) -> (BgChannel, f64) { .. }
 //!     // Phase 5: fold the fused uplinks into the next state:
 //!     fn global_step(..) -> Result<()> { .. }
 //!     fn predicted_sigma(..) -> f64 { .. }
@@ -64,27 +64,28 @@
 //!
 //! // Then: drive it with the generic machinery.
 //! let mut core: ProtocolCore<Overlap> = ProtocolCore::new(&batch, &cfg);
-//! let record = core.step(&cfg, &se, &controller, None, &engine, &mut endpoints, Some(&batch))?;
+//! let record = core.step(&cfg, &se, controller.as_ref(), None, &engine, &mut endpoints, Some(&batch))?;
 //! ```
 //!
 //! The two in-tree implementations below are the best reference for what
 //! each hole has to guarantee (notably: `absorb` must validate iteration
-//! and worker ids, and `coder` must be deterministic from the spec alone,
-//! because the worker rebuilds the identical coder on its side).
+//! and worker ids, and `channel_for_var` must be deterministic from the
+//! spec's variance alone, because the worker rebuilds the identical
+//! compressor on its side).
 
 use std::time::Instant;
 
-use crate::alloc::schedule::{Directive, RateController};
-use crate::config::{CodecKind, RunConfig};
-use crate::coordinator::fusion::{column_spec_for_directive, spec_for_directive};
+use crate::alloc::schedule::{Directive, RateAllocator};
+use crate::compress::{design_seed, BlockCtx, Compressor, CompressionStack, DesignCtx, CLIP_SDS};
+use crate::config::RunConfig;
 use crate::coordinator::message::{FPayload, Message, QuantSpec};
 use crate::coordinator::transport::Endpoint;
-use crate::coordinator::worker::{coder_for_spec, column_coder_for_spec, WorkerParams};
+use crate::coordinator::worker::{compressor_for_spec, WorkerParams};
 use crate::engine::{ColumnWorkerData, ComputeEngine, RowBatchData};
 use crate::error::{Error, Result};
 use crate::metrics::IterRecord;
-use crate::quant::{EcsqCoder, EncodedBlock};
 use crate::rd::RdCache;
+use crate::se::prior::BgChannel;
 use crate::se::StateEvolution;
 use crate::signal::{Batch, BernoulliGauss};
 
@@ -140,31 +141,20 @@ pub trait Scenario: Send + Sync + 'static {
     /// Phase 3a: per-signal round statistics, after all replies.
     fn stats(fu: &Self::Fusion, cfg: &RunConfig) -> Vec<RoundStat>;
 
-    /// Phase 3b: design one signal's quantizer spec from its directive.
-    fn design_spec(
-        directive: &Directive,
-        se: &StateEvolution,
-        p_workers: usize,
-        stat: RoundStat,
-    ) -> Result<QuantSpec>;
+    /// Phase 3b, hole 1: the variance a round's spec carries (σ̂²_{t,D}
+    /// in row mode, the empirical message variance v̂ in column mode).
+    fn spec_var(stat: RoundStat) -> f64;
 
-    /// The coder implied by a spec — deterministic from the spec plus the
-    /// static config, because both protocol sides rebuild it.
-    fn coder(
-        spec: &QuantSpec,
+    /// Phase 3b, hole 2: the model channel of one element of the
+    /// uplinked message, rebuilt from a spec variance. Every compression
+    /// stack designs (and re-assembles) against this channel, so it must
+    /// be deterministic in `(prior, p_workers, var)` — both protocol
+    /// sides call it with the spec's `model_var`.
+    fn channel_for_var(
         prior: &BernoulliGauss,
         p_workers: usize,
-        codec: CodecKind,
-    ) -> Result<Option<EcsqCoder>>;
-
-    /// Per-worker quantization MSE σ_Q² implied by a spec (the `Skip`
-    /// reconstruction error differs between scenarios).
-    fn sigma_q2(
-        spec: &QuantSpec,
-        se: &StateEvolution,
-        p_workers: usize,
-        stat: RoundStat,
-    ) -> f64;
+        var: f64,
+    ) -> (BgChannel, f64);
 
     /// Phase 5: fold the fused uplink sums (one per signal) into the
     /// next round's state.
@@ -210,13 +200,87 @@ pub(crate) fn split_batch_vec(flat: Vec<f32>, b: usize) -> Vec<Vec<f32>> {
     (0..b).map(|j| flat[j * len..(j + 1) * len].to_vec()).collect()
 }
 
+/// The [`DesignCtx`] both protocol sides derive for one signal's spec:
+/// the scenario's model channel at the spec variance, the shared clip
+/// range, and the spec's design seed.
+pub fn design_ctx<S: Scenario>(
+    prior: &BernoulliGauss,
+    p_workers: usize,
+    model_var: f64,
+    len: usize,
+    seed: u64,
+) -> DesignCtx {
+    let (channel, noise_var) = S::channel_for_var(prior, p_workers, model_var);
+    DesignCtx { channel, noise_var, clip_sds: CLIP_SDS, len, seed }
+}
+
+/// Design one signal's [`QuantSpec`] from its rate directive with the
+/// configured compression stack (fusion side; the workers re-assemble
+/// the identical stack from the spec via
+/// [`compressor_for_spec`](crate::coordinator::worker::compressor_for_spec)).
+pub fn design_spec<S: Scenario>(
+    stack: &CompressionStack,
+    directive: &Directive,
+    cfg: &RunConfig,
+    t: usize,
+    sig: usize,
+    stat: RoundStat,
+    len: usize,
+) -> Result<QuantSpec> {
+    let model_var = S::spec_var(stat);
+    let seed = design_seed(cfg.seed, t, sig);
+    let ctx = design_ctx::<S>(&cfg.prior, cfg.p, model_var, len, seed);
+    let state = match directive {
+        Directive::Raw => return Ok(QuantSpec::Raw),
+        Directive::Skip => return Ok(QuantSpec::Skip),
+        Directive::QuantizeMse(q2) => stack.design_mse(&ctx, *q2)?,
+        Directive::QuantizeRate(rate) => stack.design_rate(&ctx, *rate)?,
+    };
+    let params = state.params();
+    // Fail at design time with the stack named, not rounds later with a
+    // worker-side decode error: the wire cap is a protocol constant.
+    if params.len() > crate::coordinator::message::MAX_WIRE_SPEC_PARAMS as usize {
+        return Err(Error::Codec(format!(
+            "stack '{}' produced {} wire params; the protocol caps specs at {}",
+            stack.name(),
+            params.len(),
+            crate::coordinator::message::MAX_WIRE_SPEC_PARAMS
+        )));
+    }
+    Ok(QuantSpec::Stack { name: stack.name().to_string(), model_var, seed, params })
+}
+
+/// Per-worker σ_Q² implied by a spec. `Raw` is lossless; a `Skip` round
+/// reconstructs zeros, so the error is the model channel's marginal
+/// variance; a stack spec reports its designed quantizer's own
+/// distortion model (ECSQ: Δ²/12; top-K: dropped energy; custom stacks:
+/// whatever their [`QuantizerState::distortion_model`] says).
+///
+/// [`QuantizerState::distortion_model`]: crate::compress::QuantizerState::distortion_model
+pub fn sigma_q2_for_spec<S: Scenario>(
+    spec: &QuantSpec,
+    comp: Option<&Compressor>,
+    prior: &BernoulliGauss,
+    p_workers: usize,
+    stat: RoundStat,
+) -> f64 {
+    match spec {
+        QuantSpec::Raw => 0.0,
+        QuantSpec::Skip => {
+            let (ch, ws2) = S::channel_for_var(prior, p_workers, S::spec_var(stat));
+            ch.var_f(ws2)
+        }
+        QuantSpec::Stack { .. } => comp.map(|c| c.distortion_model()).unwrap_or(0.0),
+    }
+}
+
 /// Decode one signal's payload and fuse it into `sum` (shared by both
-/// scenarios — they differ only in the coder that gets passed in).
+/// scenarios — they differ only in the compressor that gets passed in).
 fn fuse_payload(
     payload: FPayload,
-    coder: &Option<EcsqCoder>,
+    comp: &Option<Compressor>,
+    worker: u32,
     len: usize,
-    codec: CodecKind,
     sum: &mut [f32],
     wire_bits: &mut f64,
 ) -> Result<()> {
@@ -228,25 +292,27 @@ fn fuse_payload(
                     v.len()
                 )));
             }
-            // Analytic codec: account model entropy instead of the raw
-            // float bits that moved in-process.
-            if let (CodecKind::Analytic, Some(c)) = (codec, coder) {
-                *wire_bits += c.entropy_bits * len as f64 - 32.0 * len as f64;
+            // Payload-free codecs (analytic): account the model bits
+            // instead of the raw float bits that moved in-process.
+            if let Some(c) = comp {
+                if !c.carries_payload() {
+                    *wire_bits += c.model_bits_per_element() * len as f64
+                        - 32.0 * len as f64;
+                }
             }
             crate::linalg::axpy(1.0, &v, sum);
         }
-        FPayload::Coded { n: n_syms, bytes } => {
-            let c = coder.as_ref().ok_or_else(|| {
-                Error::Protocol("coded payload without ECSQ spec".into())
+        FPayload::Coded { n, bytes } => {
+            let c = comp.as_ref().ok_or_else(|| {
+                Error::Protocol("coded payload without a stack spec".into())
             })?;
-            if n_syms as usize != len {
+            if n as usize != len {
                 return Err(Error::Protocol(format!(
-                    "fusion: coded payload length {n_syms} != {len}"
+                    "fusion: coded payload length {n} != {len}"
                 )));
             }
-            let block = EncodedBlock { bytes, wire_bits: 0.0, n: len };
             let mut v = vec![0f32; len];
-            c.decode(&block, None, &mut v)?;
+            c.decode(&BlockCtx { worker }, &bytes, &mut v)?;
             crate::linalg::axpy(1.0, &v, sum);
         }
         FPayload::Skipped => {}
@@ -301,7 +367,7 @@ impl<S: Scenario> ProtocolCore<S> {
         &mut self,
         cfg: &RunConfig,
         se: &StateEvolution,
-        controller: &RateController,
+        controller: &dyn RateAllocator,
         cache: Option<&RdCache>,
         engine: &dyn ComputeEngine,
         endpoints: &mut [Endpoint],
@@ -312,6 +378,8 @@ impl<S: Scenario> ProtocolCore<S> {
         let b = self.b;
         debug_assert_eq!(endpoints.len(), p);
         let t0 = Instant::now();
+        let stack = crate::compress::registry::get(&cfg.compressor)?;
+        let len = S::uplink_len(cfg);
         // 1. Broadcast the round command.
         let cmd = S::begin_round(&mut self.fu, cfg, t);
         for ep in endpoints.iter_mut() {
@@ -322,30 +390,37 @@ impl<S: Scenario> ProtocolCore<S> {
             let msg = ep.recv()?;
             S::absorb(&mut self.fu, cfg, t, widx, msg)?;
         }
-        // 3. Per-signal stats → directives → one batched quantizer design
-        //    round trip covering the whole batch.
+        // 3. Per-signal stats → directives → stack designs → one batched
+        //    quantizer round trip covering the whole batch.
         let stats = S::stats(&self.fu, cfg);
         debug_assert_eq!(stats.len(), b);
         let mut directives = Vec::with_capacity(b);
         let mut specs = Vec::with_capacity(b);
-        for stat in &stats {
+        for (sig, stat) in stats.iter().enumerate() {
             let d = controller.directive(t, stat.sigma_d2_hat, se, p, cfg.iters, cache);
-            specs.push(S::design_spec(&d, se, p, *stat)?);
+            specs.push(design_spec::<S>(&stack, &d, cfg, t, sig, *stat, len)?);
             directives.push(d);
         }
         let quant = Message::QuantCmd { t: t as u32, specs: specs.clone() };
         for ep in endpoints.iter_mut() {
             ep.send(&quant)?;
         }
-        // The decoders matching the workers' encoders, one per signal.
-        let mut coders = Vec::with_capacity(b);
+        // The decoders matching the workers' encoders, one per signal —
+        // assembled from the spec exactly the way the workers do it.
+        let mut comps = Vec::with_capacity(b);
         let mut sigma_q2s = Vec::with_capacity(b);
         for (spec, stat) in specs.iter().zip(&stats) {
-            coders.push(S::coder(spec, &cfg.prior, p, cfg.codec)?);
-            sigma_q2s.push(S::sigma_q2(spec, se, p, *stat));
+            let comp = compressor_for_spec::<S>(spec, &cfg.prior, p, len)?;
+            sigma_q2s.push(sigma_q2_for_spec::<S>(
+                spec,
+                comp.as_ref(),
+                &cfg.prior,
+                p,
+                *stat,
+            ));
+            comps.push(comp);
         }
         // 4. Collect and fuse the batched uplinks.
-        let len = S::uplink_len(cfg);
         let mut sums = vec![vec![0f32; len]; b];
         let mut wire_bits = 0.0f64;
         for (widx, ep) in endpoints.iter_mut().enumerate() {
@@ -368,9 +443,9 @@ impl<S: Scenario> ProtocolCore<S> {
                     for (sig, payload) in payloads.into_iter().enumerate() {
                         fuse_payload(
                             payload,
-                            &coders[sig],
+                            &comps[sig],
+                            widx as u32,
                             len,
-                            cfg.codec,
                             &mut sums[sig],
                             &mut wire_bits,
                         )?;
@@ -386,13 +461,13 @@ impl<S: Scenario> ProtocolCore<S> {
         // Allocation accounting (analytic rate, batch mean).
         let rate_alloc = directives
             .iter()
-            .zip(&coders)
+            .zip(&comps)
             .map(|(d, c)| match d {
                 Directive::Raw => 32.0,
                 Directive::Skip => 0.0,
                 Directive::QuantizeRate(r) => *r,
                 Directive::QuantizeMse(_) => {
-                    c.as_ref().map(|c| c.entropy_bits).unwrap_or(0.0)
+                    c.as_ref().map(|c| c.model_bits_per_element()).unwrap_or(0.0)
                 }
             })
             .sum::<f64>()
@@ -540,40 +615,17 @@ impl Scenario for Row {
             .collect()
     }
 
-    fn design_spec(
-        directive: &Directive,
-        se: &StateEvolution,
-        p_workers: usize,
-        stat: RoundStat,
-    ) -> Result<QuantSpec> {
-        spec_for_directive(directive, se, p_workers, stat.sigma_d2_hat, 8.0)
+    fn spec_var(stat: RoundStat) -> f64 {
+        stat.sigma_d2_hat
     }
 
-    fn coder(
-        spec: &QuantSpec,
+    fn channel_for_var(
         prior: &BernoulliGauss,
         p_workers: usize,
-        codec: CodecKind,
-    ) -> Result<Option<EcsqCoder>> {
-        coder_for_spec(spec, prior, p_workers, codec)
-    }
-
-    fn sigma_q2(
-        spec: &QuantSpec,
-        se: &StateEvolution,
-        p_workers: usize,
-        stat: RoundStat,
-    ) -> f64 {
-        match spec {
-            QuantSpec::Ecsq { delta, .. } => delta * delta / 12.0,
-            QuantSpec::Raw => 0.0,
-            // Zero-rate: reconstruction is 0, per-worker error = Var(F^p).
-            QuantSpec::Skip => {
-                let (wch, ws2) =
-                    se.channel.worker_channel(stat.sigma_d2_hat, p_workers);
-                wch.var_f(ws2)
-            }
-        }
+        var: f64,
+    ) -> (BgChannel, f64) {
+        // The per-worker uplink channel F_t^p at σ̂² (paper §3.2).
+        BgChannel::new(*prior).worker_channel(var, p_workers)
     }
 
     fn global_step(
@@ -803,36 +855,18 @@ impl Scenario for Column {
             .collect()
     }
 
-    fn design_spec(
-        directive: &Directive,
-        _se: &StateEvolution,
-        _p_workers: usize,
-        stat: RoundStat,
-    ) -> Result<QuantSpec> {
-        column_spec_for_directive(directive, stat.msg_var, 8.0)
+    fn spec_var(stat: RoundStat) -> f64 {
+        stat.msg_var
     }
 
-    fn coder(
-        spec: &QuantSpec,
+    fn channel_for_var(
         _prior: &BernoulliGauss,
         _p_workers: usize,
-        codec: CodecKind,
-    ) -> Result<Option<EcsqCoder>> {
-        column_coder_for_spec(spec, codec)
-    }
-
-    fn sigma_q2(
-        spec: &QuantSpec,
-        _se: &StateEvolution,
-        _p_workers: usize,
-        stat: RoundStat,
-    ) -> f64 {
-        match spec {
-            QuantSpec::Ecsq { delta, .. } => delta * delta / 12.0,
-            QuantSpec::Raw => 0.0,
-            // Zero-rate: reconstruction is 0, per-worker error = Var(U^p).
-            QuantSpec::Skip => stat.msg_var,
-        }
+        var: f64,
+    ) -> (BgChannel, f64) {
+        // CLT-Gaussian message channel at the empirical v̂ (its marginal
+        // variance is v̂, so the generic Skip error Var(U^p) is exact).
+        BgChannel::column_message_channel(var)
     }
 
     fn global_step(

@@ -18,7 +18,7 @@ use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use crate::alloc::schedule::RateController;
+use crate::alloc::schedule::{allocator_from_config, RateAllocator};
 use crate::config::{EngineKind, Partitioning, RunConfig, ScheduleKind, TransportKind};
 use crate::coordinator::fusion::ProtocolState;
 use crate::coordinator::message::Message;
@@ -202,7 +202,7 @@ impl IterSnapshot {
 /// Live protocol state: worker threads, their endpoints, and the fusion
 /// iteration state. Created lazily on the first [`Session::step`].
 struct Active {
-    controller: RateController,
+    controller: Box<dyn RateAllocator>,
     meter: Arc<ByteMeter>,
     endpoints: Vec<Endpoint>,
     workers: Vec<JoinHandle<Result<usize>>>,
@@ -386,7 +386,6 @@ impl Session {
                 p_workers: cfg.p,
                 batch: cfg.batch,
                 prior: cfg.prior,
-                codec: cfg.codec,
             };
             let engine = self.engine.clone();
             workers.push(std::thread::spawn(move || {
@@ -401,7 +400,7 @@ impl Session {
         debug_assert!(self.active.is_none());
         let t0 = Instant::now();
         let cfg = &self.cfg;
-        let controller = RateController::from_config(cfg, &self.se, self.cache.as_ref())?;
+        let controller = allocator_from_config(cfg, &self.se, self.cache.as_ref())?;
         let meter = Arc::new(ByteMeter::new());
 
         // Build transport pairs.
@@ -478,7 +477,7 @@ impl Session {
         let stepped = act.state.step(
             &self.cfg,
             &self.se,
-            &act.controller,
+            act.controller.as_ref(),
             self.cache.as_ref(),
             self.engine.as_ref(),
             &mut act.endpoints,
@@ -669,19 +668,18 @@ impl Drop for Session {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::CodecKind;
     use crate::observe::{RecordLog, StopRule};
 
-    fn run_with(schedule: ScheduleKind, codec: CodecKind) -> RunReport {
+    fn run_with(schedule: ScheduleKind, compressor: &str) -> RunReport {
         let mut cfg = RunConfig::test_small(0.05);
         cfg.schedule = schedule;
-        cfg.codec = codec;
+        cfg.compressor = compressor.to_string();
         Session::new(cfg).unwrap().run().unwrap()
     }
 
     #[test]
     fn uncompressed_recovers_signal() {
-        let r = run_with(ScheduleKind::Uncompressed, CodecKind::Range);
+        let r = run_with(ScheduleKind::Uncompressed, "ecsq.range");
         assert_eq!(r.iters.len(), 6);
         assert!(
             r.final_sdr_db() > 10.0,
@@ -694,8 +692,8 @@ mod tests {
 
     #[test]
     fn fixed_rate_compresses_with_small_loss() {
-        let raw = run_with(ScheduleKind::Uncompressed, CodecKind::Range);
-        let fixed = run_with(ScheduleKind::Fixed { bits: 4.0 }, CodecKind::Range);
+        let raw = run_with(ScheduleKind::Uncompressed, "ecsq.range");
+        let fixed = run_with(ScheduleKind::Fixed { bits: 4.0 }, "ecsq.range");
         // ~8x fewer bits...
         assert!(
             fixed.total_uplink_bits_per_element()
@@ -714,7 +712,7 @@ mod tests {
     fn bt_schedule_runs_and_stays_under_cap() {
         let r = run_with(
             ScheduleKind::BackTrack { ratio_max: 1.05, r_max: 6.0 },
-            CodecKind::Range,
+            "ecsq.range",
         );
         for it in &r.iters {
             assert!(it.rate_wire <= 7.0, "t={}: wire rate {}", it.t, it.rate_wire);
@@ -727,9 +725,9 @@ mod tests {
     fn codecs_agree_numerically() {
         // Analytic / Range / Huffman all quantize identically; only the
         // wire bits differ. Same seed ⇒ identical SDR trajectories.
-        let a = run_with(ScheduleKind::Fixed { bits: 3.0 }, CodecKind::Analytic);
-        let b = run_with(ScheduleKind::Fixed { bits: 3.0 }, CodecKind::Range);
-        let c = run_with(ScheduleKind::Fixed { bits: 3.0 }, CodecKind::Huffman);
+        let a = run_with(ScheduleKind::Fixed { bits: 3.0 }, "ecsq.analytic");
+        let b = run_with(ScheduleKind::Fixed { bits: 3.0 }, "ecsq.range");
+        let c = run_with(ScheduleKind::Fixed { bits: 3.0 }, "ecsq.huffman");
         for ((ra, rb), rc) in a.iters.iter().zip(&b.iters).zip(&c.iters) {
             assert!((ra.sdr_db - rb.sdr_db).abs() < 1e-9);
             assert!((ra.sdr_db - rc.sdr_db).abs() < 1e-9);
@@ -789,7 +787,7 @@ mod tests {
 
     #[test]
     fn transport_meter_counts_everything() {
-        let r = run_with(ScheduleKind::Fixed { bits: 4.0 }, CodecKind::Range);
+        let r = run_with(ScheduleKind::Fixed { bits: 4.0 }, "ecsq.range");
         // Uplink raw bytes ≥ payload bits (headers included).
         let payload_bits: f64 = r.iters.iter().map(|it| it.rate_wire).sum::<f64>()
             * (r.dims.0 * r.dims.2) as f64;

@@ -5,18 +5,19 @@
 //! [`Scenario::worker_serve`] (local step + pre-uplink reply), then codes
 //! the pending per-signal uplink vectors when the batched `QuantCmd`
 //! arrives. Row mode uplinks local estimates `f_t^p`, column mode partial
-//! residuals `u_t^p = A^p x_t^p`; the quantize/encode machinery is shared
-//! and differs only in the model channel the scenario's
-//! [`coder`](Scenario::coder) builds.
+//! residuals `u_t^p = A^p x_t^p`; the quantize/encode machinery is the
+//! spec-named [`CompressionStack`](crate::compress::CompressionStack),
+//! assembled identically on both protocol sides by
+//! [`compressor_for_spec`], and differs across scenarios only in the
+//! model channel the scenario's
+//! [`channel_for_var`](Scenario::channel_for_var) rebuilds.
 
-use crate::config::CodecKind;
+use crate::compress::{BlockCtx, Compressor};
 use crate::coordinator::message::{FPayload, Message, QuantSpec};
-use crate::coordinator::scenario::Scenario;
+use crate::coordinator::scenario::{design_ctx, Scenario};
 use crate::coordinator::transport::Endpoint;
 use crate::engine::ComputeEngine;
 use crate::error::{Error, Result};
-use crate::quant::{EcsqCoder, UniformQuantizer};
-use crate::se::prior::BgChannel;
 use crate::signal::BernoulliGauss;
 
 /// Static parameters a worker needs beyond its data shard.
@@ -28,77 +29,53 @@ pub struct WorkerParams {
     pub p_workers: usize,
     /// Number of signal instances B in the session's batch.
     pub batch: usize,
-    /// Source prior (for model-pmf reconstruction).
+    /// Source prior (for model-channel reconstruction).
     pub prior: BernoulliGauss,
-    /// Wire codec.
-    pub codec: CodecKind,
 }
 
-/// Build the ECSQ coder implied by a row-mode [`QuantSpec`] (both sides
-/// call this — determinism of the model pmf is what keeps the codec in
-/// sync).
-pub fn coder_for_spec(
+/// Assemble the compressor implied by a [`QuantSpec`] (both protocol
+/// sides call this — determinism of the registry assembly is what keeps
+/// the codecs in sync). `len` is the per-signal uplink vector length.
+pub fn compressor_for_spec<S: Scenario>(
     spec: &QuantSpec,
     prior: &BernoulliGauss,
     p_workers: usize,
-    codec: CodecKind,
-) -> Result<Option<EcsqCoder>> {
+    len: usize,
+) -> Result<Option<Compressor>> {
     match spec {
         QuantSpec::Raw | QuantSpec::Skip => Ok(None),
-        QuantSpec::Ecsq { delta, k_max, sigma_d2_hat } => {
-            let base = BgChannel::new(*prior);
-            let (wch, ws2) = base.worker_channel(*sigma_d2_hat, p_workers);
-            let q = UniformQuantizer { delta: *delta, k_max: *k_max as i32, center: 0.0 };
-            Ok(Some(EcsqCoder::new(q, &wch, ws2, codec)?))
+        QuantSpec::Stack { name, model_var, seed, params } => {
+            let stack = crate::compress::registry::get(name)?;
+            let ctx = design_ctx::<S>(prior, p_workers, *model_var, len, *seed);
+            Ok(Some(stack.assemble(&ctx, params)?))
         }
     }
 }
 
-/// Column-mode analogue of [`coder_for_spec`]: the message model is the
-/// Gaussian column-uplink channel rebuilt from the variance estimate the
-/// spec carries (its `sigma_d2_hat` field holds `v̂ = Σ‖u^p‖²/(P·M)` in
-/// column mode). Deterministic on both sides, like the row path.
-pub fn column_coder_for_spec(
-    spec: &QuantSpec,
-    codec: CodecKind,
-) -> Result<Option<EcsqCoder>> {
-    match spec {
-        QuantSpec::Raw | QuantSpec::Skip => Ok(None),
-        QuantSpec::Ecsq { delta, k_max, sigma_d2_hat } => {
-            let (wch, ws2) = BgChannel::column_message_channel(*sigma_d2_hat);
-            let q = UniformQuantizer { delta: *delta, k_max: *k_max as i32, center: 0.0 };
-            Ok(Some(EcsqCoder::new(q, &wch, ws2, codec)?))
-        }
-    }
-}
-
-/// Code one uplink vector according to the spec, using the given coder
-/// (scenarios differ only in the model channel the coder was built from).
+/// Code one uplink vector according to the spec, using the compressor
+/// assembled for it.
 fn payload_for_spec(
     v: Vec<f32>,
     spec: &QuantSpec,
-    codec: CodecKind,
-    coder: Option<&EcsqCoder>,
+    comp: Option<&Compressor>,
+    ctx: &BlockCtx,
 ) -> Result<FPayload> {
     Ok(match spec {
         QuantSpec::Raw => FPayload::Raw(v),
         QuantSpec::Skip => FPayload::Skipped,
-        QuantSpec::Ecsq { .. } => {
-            let coder = coder.expect("ECSQ spec yields a coder");
-            let syms = coder.quantizer.quantize_block(&v);
-            match codec {
-                CodecKind::Analytic => {
-                    // Entropy-accounted, not entropy-coded: ship the
-                    // dequantized values so numerics match the coded path
-                    // exactly.
-                    let mut deq = vec![0f32; v.len()];
-                    coder.quantizer.dequantize_block(&syms, &mut deq);
-                    FPayload::Raw(deq)
-                }
-                CodecKind::Range | CodecKind::Huffman => {
-                    let block = coder.encode_symbols(&syms)?;
-                    FPayload::Coded { n: block.n as u32, bytes: block.bytes }
-                }
+        QuantSpec::Stack { .. } => {
+            let comp = comp.expect("stack spec yields a compressor");
+            if comp.carries_payload() {
+                let block = comp.encode(ctx, &v)?;
+                FPayload::Coded { n: v.len() as u32, bytes: block.bytes }
+            } else {
+                // Entropy-accounted, not entropy-coded (analytic codec):
+                // ship the dequantized values so numerics match the coded
+                // path exactly.
+                let syms = comp.quantize(ctx, &v);
+                let mut deq = vec![0f32; v.len()];
+                comp.dequantize(ctx, &syms, &mut deq)?;
+                FPayload::Raw(deq)
             }
         }
     })
@@ -135,10 +112,16 @@ pub fn run_scenario_worker<S: Scenario>(
                         vs.len()
                     )));
                 }
+                let ctx = BlockCtx { worker: params.id };
                 let mut payloads = Vec::with_capacity(vs.len());
                 for (v, spec) in vs.into_iter().zip(&specs) {
-                    let coder = S::coder(spec, &params.prior, params.p_workers, params.codec)?;
-                    payloads.push(payload_for_spec(v, spec, params.codec, coder.as_ref())?);
+                    let comp = compressor_for_spec::<S>(
+                        spec,
+                        &params.prior,
+                        params.p_workers,
+                        v.len(),
+                    )?;
+                    payloads.push(payload_for_spec(v, spec, comp.as_ref(), &ctx)?);
                 }
                 endpoint.send(&Message::FVector { t, worker: params.id, payloads })?;
             }
@@ -161,32 +144,101 @@ mod tests {
     use crate::signal::{Batch, ProblemDims};
     use crate::util::rng::Rng;
 
-    #[test]
-    fn coder_for_spec_deterministic_across_sides() {
-        let prior = BernoulliGauss::standard(0.05);
-        let spec = QuantSpec::Ecsq { delta: 0.01, k_max: 150, sigma_d2_hat: 0.08 };
-        let a = coder_for_spec(&spec, &prior, 30, CodecKind::Range).unwrap().unwrap();
-        let b = coder_for_spec(&spec, &prior, 30, CodecKind::Range).unwrap().unwrap();
-        assert_eq!(a.pmf, b.pmf);
-        assert_eq!(a.quantizer, b.quantizer);
+    fn sample_block(prior: &BernoulliGauss, s2: f64, n: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|_| (prior.sample(&mut rng) + rng.gaussian() * s2.sqrt()) as f32).collect()
     }
 
     #[test]
-    fn column_coder_deterministic_and_gaussian_modeled() {
-        let spec = QuantSpec::Ecsq { delta: 0.004, k_max: 120, sigma_d2_hat: 0.03 };
-        let a = column_coder_for_spec(&spec, CodecKind::Range).unwrap().unwrap();
-        let b = column_coder_for_spec(&spec, CodecKind::Range).unwrap().unwrap();
-        assert_eq!(a.pmf, b.pmf);
-        assert_eq!(a.quantizer, b.quantizer);
-        // The model pmf is symmetric (zero-mean Gaussian message).
-        let n = a.pmf.len();
-        for i in 0..n / 2 {
-            assert!((a.pmf[i] - a.pmf[n - 1 - i]).abs() < 1e-12, "bin {i}");
+    fn compressor_for_spec_deterministic_across_sides() {
+        // Two independent assemblies from the same spec must produce
+        // byte-identical encodings and reconstructions — the property
+        // that keeps fusion and workers in codec lockstep.
+        let prior = BernoulliGauss::standard(0.05);
+        let spec = QuantSpec::Stack {
+            name: "ecsq.range".into(),
+            model_var: 0.08,
+            seed: 42,
+            params: vec![0.01, 150.0],
+        };
+        let a = compressor_for_spec::<Row>(&spec, &prior, 30, 500).unwrap().unwrap();
+        let b = compressor_for_spec::<Row>(&spec, &prior, 30, 500).unwrap().unwrap();
+        let xs = sample_block(&prior, 0.08, 500, 9);
+        let ctx = BlockCtx { worker: 3 };
+        let ea = a.encode(&ctx, &xs).unwrap();
+        let eb = b.encode(&ctx, &xs).unwrap();
+        assert_eq!(ea.bytes, eb.bytes);
+        let (mut ra, mut rb) = (vec![0f32; 500], vec![0f32; 500]);
+        a.decode(&ctx, &ea.bytes, &mut ra).unwrap();
+        b.decode(&ctx, &eb.bytes, &mut rb).unwrap();
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.to_bits(), y.to_bits());
         }
-        // Raw/Skip specs need no coder.
-        assert!(column_coder_for_spec(&QuantSpec::Raw, CodecKind::Range)
+    }
+
+    #[test]
+    fn column_compressor_deterministic_and_gaussian_modeled() {
+        let prior = BernoulliGauss::standard(0.05);
+        let spec = QuantSpec::Stack {
+            name: "ecsq.range".into(),
+            model_var: 0.03,
+            seed: 1,
+            params: vec![0.004, 120.0],
+        };
+        let a = compressor_for_spec::<Column>(&spec, &prior, 4, 200).unwrap().unwrap();
+        let b = compressor_for_spec::<Column>(&spec, &prior, 4, 200).unwrap().unwrap();
+        let mut rng = Rng::new(5);
+        let xs: Vec<f32> = (0..200).map(|_| (rng.gaussian() * 0.03f64.sqrt()) as f32).collect();
+        let ctx = BlockCtx { worker: 0 };
+        assert_eq!(a.encode(&ctx, &xs).unwrap().bytes, b.encode(&ctx, &xs).unwrap().bytes);
+        // Raw/Skip specs need no compressor.
+        assert!(compressor_for_spec::<Column>(&QuantSpec::Raw, &prior, 4, 200)
             .unwrap()
             .is_none());
+        assert!(compressor_for_spec::<Row>(&QuantSpec::Skip, &prior, 4, 200)
+            .unwrap()
+            .is_none());
+    }
+
+    #[test]
+    fn unknown_stack_in_spec_fails_loudly() {
+        let prior = BernoulliGauss::standard(0.05);
+        let spec = QuantSpec::Stack {
+            name: "ecsq.lzma".into(),
+            model_var: 0.05,
+            seed: 0,
+            params: vec![0.01, 100.0],
+        };
+        let err = compressor_for_spec::<Row>(&spec, &prior, 6, 100).unwrap_err();
+        assert!(err.to_string().contains("ecsq.lzma"), "{err}");
+    }
+
+    #[test]
+    fn dithered_streams_differ_per_worker_but_agree_per_side() {
+        let prior = BernoulliGauss::standard(0.05);
+        let spec = QuantSpec::Stack {
+            name: "ecsq-dithered.range".into(),
+            model_var: 0.05,
+            seed: 77,
+            params: vec![0.02, 500.0], // ±10 range: no saturation in test data
+        };
+        let comp = compressor_for_spec::<Row>(&spec, &prior, 6, 300).unwrap().unwrap();
+        let xs = sample_block(&prior, 0.05, 300, 21);
+        let w0 = comp.quantize(&BlockCtx { worker: 0 }, &xs);
+        let w1 = comp.quantize(&BlockCtx { worker: 1 }, &xs);
+        assert_ne!(w0, w1, "per-worker dither streams must differ");
+        // Encoder/decoder agreement for the same worker id.
+        let ctx = BlockCtx { worker: 1 };
+        let block = comp.encode(&ctx, &xs).unwrap();
+        let mut out = vec![0f32; xs.len()];
+        comp.decode(&ctx, &block.bytes, &mut out).unwrap();
+        let delta = 0.02f64;
+        for (x, o) in xs.iter().zip(&out) {
+            assert!(
+                ((x - o).abs() as f64) <= delta + 1e-6,
+                "dithered error |{x}-{o}| beyond Δ"
+            );
+        }
     }
 
     fn small_batch(seed: u64, b: usize) -> Batch {
@@ -201,19 +253,17 @@ mod tests {
         .unwrap()
     }
 
+    fn params_for(prior: BernoulliGauss, batch: usize) -> WorkerParams {
+        WorkerParams { id: 0, p_workers: 2, batch, prior }
+    }
+
     #[test]
     fn row_worker_rejects_quant_before_step() {
         let batch = small_batch(1, 1);
         let prior = batch.prior;
         let shard = RowBatchData::try_split(&batch, 2).unwrap().remove(0);
         let engine = RustEngine::new(prior, 1);
-        let params = WorkerParams {
-            id: 0,
-            p_workers: 2,
-            batch: 1,
-            prior,
-            codec: CodecKind::Range,
-        };
+        let params = params_for(prior, 1);
         let meter = std::sync::Arc::new(crate::metrics::ByteMeter::new());
         let (mut fusion_ep, mut worker_ep) =
             crate::coordinator::transport::inproc_pair(meter);
@@ -233,13 +283,7 @@ mod tests {
         let prior = batch.prior;
         let shard = ColumnWorkerData::try_split(&batch.a, 2).unwrap().remove(0);
         let engine = RustEngine::new(prior, 1);
-        let params = WorkerParams {
-            id: 0,
-            p_workers: 2,
-            batch: 1,
-            prior,
-            codec: CodecKind::Range,
-        };
+        let params = params_for(prior, 1);
         let meter = std::sync::Arc::new(crate::metrics::ByteMeter::new());
         let (mut fusion_ep, mut worker_ep) =
             crate::coordinator::transport::inproc_pair(meter);
@@ -261,13 +305,7 @@ mod tests {
         let prior = batch.prior;
         let shard = RowBatchData::try_split(&batch, 2).unwrap().remove(0);
         let engine = RustEngine::new(prior, 1);
-        let params = WorkerParams {
-            id: 0,
-            p_workers: 2,
-            batch: 1,
-            prior,
-            codec: CodecKind::Range,
-        };
+        let params = params_for(prior, 1);
         let meter = std::sync::Arc::new(crate::metrics::ByteMeter::new());
         let (mut fusion_ep, mut worker_ep) =
             crate::coordinator::transport::inproc_pair(meter);
@@ -288,13 +326,7 @@ mod tests {
         let prior = batch.prior;
         let shard = RowBatchData::try_split(&batch, 2).unwrap().remove(0);
         let engine = RustEngine::new(prior, 1);
-        let params = WorkerParams {
-            id: 0,
-            p_workers: 2,
-            batch: 2,
-            prior,
-            codec: CodecKind::Range,
-        };
+        let params = params_for(prior, 2);
         let meter = std::sync::Arc::new(crate::metrics::ByteMeter::new());
         let (mut fusion_ep, mut worker_ep) =
             crate::coordinator::transport::inproc_pair(meter);

@@ -13,11 +13,20 @@
 //!   signal instances per session,
 //! * [`se`] — state evolution for the Bernoulli-Gauss prior, including the
 //!   paper's quantization-aware SE (eq. 8),
-//! * [`quant`] — entropy-coded scalar quantization (uniform quantizer +
-//!   static range coder / Huffman),
+//! * [`compress`] — the pluggable uplink-compression stack: open
+//!   [`Quantizer`](compress::Quantizer) /
+//!   [`EntropyCodec`](compress::EntropyCodec) traits behind a named
+//!   registry (`"ecsq.huffman"`, `"ecsq-dithered.range"`, `"topk.raw"`,
+//!   ...), each quantizer feeding its own σ_Q² into the
+//!   quantization-aware SE,
+//! * [`quant`] — entropy-coded scalar quantization primitives (uniform
+//!   quantizer + static range coder / Huffman) the built-in stacks are
+//!   assembled from,
 //! * [`rd`] — Blahut–Arimoto rate-distortion substrate,
-//! * [`alloc`] — the two rate-allocation schemes: online back-tracking
-//!   (BT-MP-AMP) and dynamic programming (DP-MP-AMP),
+//! * [`alloc`] — rate allocation behind the open
+//!   [`RateAllocator`](alloc::schedule::RateAllocator) trait: the
+//!   paper's online back-tracking (BT-MP-AMP) and dynamic-programming
+//!   (DP-MP-AMP) schemes, plus fixed/uncompressed baselines,
 //! * [`amp`] — centralized AMP baseline,
 //! * [`observe`] — per-iteration observers and composable stop rules for
 //!   the stepwise session driver,
@@ -63,6 +72,7 @@ pub mod alloc;
 pub mod amp;
 pub mod bench_util;
 pub mod cli;
+pub mod compress;
 pub mod config;
 pub mod coordinator;
 pub mod engine;

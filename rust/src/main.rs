@@ -22,6 +22,7 @@ use mpamp::SessionBuilder;
 /// override).
 const RESERVED: &[&str] = &[
     "config",
+    "preset",
     "out",
     "sigma2",
     "max-iters",
@@ -50,9 +51,21 @@ fn main() {
 }
 
 fn load_config(args: &Args) -> Result<RunConfig> {
-    let base = match args.get("config") {
-        Some(path) => RunConfig::from_file(path)?,
-        None => RunConfig::paper_default(0.05),
+    let base = match (args.get("config"), args.get("preset")) {
+        (Some(_), Some(_)) => {
+            return Err(Error::Config(
+                "--config and --preset are mutually exclusive".into(),
+            ))
+        }
+        (Some(path), None) => RunConfig::from_file(path)?,
+        (None, Some("paper")) => RunConfig::paper_default(0.05),
+        (None, Some("test_small")) => RunConfig::test_small(0.05),
+        (None, Some(other)) => {
+            return Err(Error::Config(format!(
+                "unknown preset '{other}' (try 'paper' or 'test_small')"
+            )))
+        }
+        (None, None) => RunConfig::paper_default(0.05),
     };
     base.apply_overrides(&args.config_overrides(RESERVED))
 }
@@ -65,6 +78,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "dp" => cmd_dp(args),
         "bt" => cmd_bt(args),
         "rd" => cmd_rd(args),
+        "compressors" => cmd_compressors(args),
         "artifacts" => cmd_artifacts(args),
         other => Err(Error::Config(format!(
             "unknown command '{other}' (try `mpamp help`)"
@@ -274,6 +288,20 @@ fn cmd_rd(args: &Args) -> Result<()> {
     for k in 0..=24 {
         let d = var * 2f64.powi(-k);
         println!("{:>12.4e} {:>8.3}", d, curve.rate_for_mse(d));
+    }
+    Ok(())
+}
+
+fn cmd_compressors(args: &Args) -> Result<()> {
+    // `--names`: bare names only, one per line (for scripts / CI loops).
+    if !args.has_flag("names") {
+        eprintln!(
+            "registered compression stacks (select with --compressor or \
+             compressor = \"<name>\" in TOML):"
+        );
+    }
+    for name in mpamp::compress::registry::names() {
+        println!("{name}");
     }
     Ok(())
 }

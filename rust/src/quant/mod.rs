@@ -3,6 +3,12 @@
 //! [`entropy`] the wire codecs. [`EcsqCoder`] ties them together: design a
 //! quantizer from a target MSE or rate, then encode/decode blocks with the
 //! configured codec while tracking analytic and actual bit costs.
+//!
+//! Sessions now assemble their uplink pipeline from the
+//! [`compress`](crate::compress) registry; `EcsqCoder` remains the
+//! standalone reference implementation the registry's `ecsq.*` stacks are
+//! pinned against bit-for-bit (`tests/compression_stacks.rs`) and the
+//! handle benches/offline tools use directly.
 
 pub mod entropy;
 pub mod uniform;

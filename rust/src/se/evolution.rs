@@ -36,6 +36,15 @@ impl StateEvolution {
     /// One quantization-aware SE step (eq. 8): the denoiser input is
     /// `S0 + sqrt(σ_t² + P σ_Q²) Z̃`, so
     /// `σ_{t+1}² = σ_e² + mmse(σ_t² + P σ_Q²)/κ`.
+    ///
+    /// `p_sigma_q2` is `P · σ_Q²` where σ_Q² comes from the configured
+    /// compression stack's own error model
+    /// ([`QuantizerState::distortion_model`]) — Δ²/12 for the ECSQ
+    /// families, the dropped-energy model for top-K — so eq. 8 stays
+    /// correct per-compressor, not just for the paper's uniform
+    /// quantizer.
+    ///
+    /// [`QuantizerState::distortion_model`]: crate::compress::QuantizerState::distortion_model
     pub fn step_quantized(&self, sigma_t2: f64, p_sigma_q2: f64) -> f64 {
         self.sigma_e2 + self.channel.mmse(sigma_t2 + p_sigma_q2) / self.kappa
     }

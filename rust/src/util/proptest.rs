@@ -77,6 +77,13 @@ impl Gen {
         self.rng.bernoulli(p)
     }
 
+    /// Uniformly pick one element of a non-empty slice (e.g. one of the
+    /// registered compression-stack names per case).
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        debug_assert!(!items.is_empty());
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+
     /// Raw u64.
     pub fn u64(&mut self) -> u64 {
         self.rng.next_u64()

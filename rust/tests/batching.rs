@@ -8,7 +8,7 @@
 
 use std::sync::Arc;
 
-use mpamp::config::{CodecKind, Partitioning, RunConfig, ScheduleKind};
+use mpamp::config::{Partitioning, RunConfig, ScheduleKind};
 use mpamp::signal::{Batch, ProblemDims};
 use mpamp::util::rng::Rng;
 use mpamp::Session;
@@ -16,13 +16,13 @@ use mpamp::Session;
 fn test_cfg(
     partitioning: Partitioning,
     schedule: ScheduleKind,
-    codec: CodecKind,
+    compressor: &str,
     batch: usize,
 ) -> RunConfig {
     let mut cfg = RunConfig::test_small(0.05);
     cfg.partitioning = partitioning;
     cfg.schedule = schedule;
-    cfg.codec = codec;
+    cfg.compressor = compressor.to_string();
     cfg.batch = batch;
     cfg
 }
@@ -33,11 +33,11 @@ fn test_cfg(
 fn check_batched_matches_independent(
     partitioning: Partitioning,
     schedule: ScheduleKind,
-    codec: CodecKind,
+    compressor: &str,
     b: usize,
 ) {
-    let label = format!("{partitioning:?}/{schedule:?}/{codec:?}");
-    let cfg = test_cfg(partitioning, schedule.clone(), codec, b);
+    let label = format!("{partitioning:?}/{schedule:?}/{compressor}");
+    let cfg = test_cfg(partitioning, schedule.clone(), compressor, b);
     let mut rng = Rng::new(cfg.seed);
     let batch = Arc::new(
         Batch::generate(
@@ -54,7 +54,7 @@ fn check_batched_matches_independent(
 
     let mut indep = Vec::with_capacity(b);
     for j in 0..b {
-        let cfg1 = test_cfg(partitioning, schedule.clone(), codec, 1);
+        let cfg1 = test_cfg(partitioning, schedule.clone(), compressor, 1);
         let report = Session::with_instance(cfg1, batch.instance(j))
             .unwrap()
             .run()
@@ -123,7 +123,7 @@ fn row_batched_raw_matches_independent_runs() {
     check_batched_matches_independent(
         Partitioning::Row,
         ScheduleKind::Uncompressed,
-        CodecKind::Range,
+        "ecsq.range",
         8,
     );
 }
@@ -135,7 +135,7 @@ fn row_batched_ecsq_matches_independent_runs() {
     check_batched_matches_independent(
         Partitioning::Row,
         ScheduleKind::Fixed { bits: 4.0 },
-        CodecKind::Range,
+        "ecsq.range",
         8,
     );
 }
@@ -145,7 +145,7 @@ fn column_batched_raw_matches_independent_runs() {
     check_batched_matches_independent(
         Partitioning::Column,
         ScheduleKind::Uncompressed,
-        CodecKind::Range,
+        "ecsq.range",
         4,
     );
 }
@@ -155,7 +155,7 @@ fn column_batched_ecsq_matches_independent_runs() {
     check_batched_matches_independent(
         Partitioning::Column,
         ScheduleKind::Fixed { bits: 4.0 },
-        CodecKind::Range,
+        "ecsq.range",
         4,
     );
 }
@@ -168,7 +168,7 @@ fn row_batched_bt_schedule_matches_independent_runs() {
     check_batched_matches_independent(
         Partitioning::Row,
         ScheduleKind::BackTrack { ratio_max: 1.05, r_max: 6.0 },
-        CodecKind::Range,
+        "ecsq.range",
         4,
     );
 }
@@ -179,7 +179,7 @@ fn batched_tcp_matches_inproc() {
     let mut cfg = test_cfg(
         Partitioning::Row,
         ScheduleKind::Fixed { bits: 4.0 },
-        CodecKind::Range,
+        "ecsq.range",
         3,
     );
     let inproc = Session::new(cfg.clone()).unwrap().run().unwrap();
@@ -202,7 +202,7 @@ fn batched_run_recovers_every_signal() {
     let cfg = test_cfg(
         Partitioning::Row,
         ScheduleKind::Fixed { bits: 4.0 },
-        CodecKind::Range,
+        "ecsq.range",
         6,
     );
     let report = Session::new(cfg).unwrap().run().unwrap();

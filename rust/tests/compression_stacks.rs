@@ -1,0 +1,389 @@
+//! Compression-stack coverage for the pluggable-registry redesign.
+//!
+//! 1. **Bit-equality pin**: the registry's `ecsq.*` stacks must reproduce
+//!    the pre-refactor [`EcsqCoder`] pipeline *bit for bit* — same
+//!    symbols, same wire bytes, same charged bits, same reconstructions —
+//!    on both scenario model channels (row worker channel and column
+//!    message channel), across every design target. `EcsqCoder` is kept
+//!    in `quant` precisely as this reference implementation.
+//! 2. **Session pin**: full `"ecsq.huffman"` sessions are bit-stable
+//!    across transports (inproc ≡ TCP) on row and column partitionings.
+//! 3. **Property tests**: encode/decode round-trips and
+//!    `wire_bits`-vs-actual-bytes consistency for every registered stack
+//!    (so a stack registered later is covered automatically).
+//! 4. The two new stacks (`ecsq-dithered.range`, `topk.raw`) run end to
+//!    end on both partitionings under both rate- and MSE-style schedules.
+
+use mpamp::compress::registry;
+use mpamp::compress::{BlockCtx, DesignCtx, CLIP_SDS};
+use mpamp::config::{CodecKind, Partitioning, TransportKind};
+use mpamp::coordinator::scenario::{design_ctx, Column, Row};
+use mpamp::quant::EcsqCoder;
+use mpamp::se::prior::BgChannel;
+use mpamp::signal::BernoulliGauss;
+use mpamp::util::proptest::{prop_assert, Prop};
+use mpamp::util::rng::Rng;
+use mpamp::SessionBuilder;
+
+fn sample_block(channel: &BgChannel, s2: f64, n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (channel.prior.sample(&mut rng) + rng.gaussian() * s2.sqrt()) as f32)
+        .collect()
+}
+
+/// The two scenario model channels the runtime designs against.
+fn pin_contexts(len: usize) -> Vec<(&'static str, DesignCtx)> {
+    let prior = BernoulliGauss::standard(0.05);
+    vec![
+        ("row", design_ctx::<Row>(&prior, 6, 0.05, len, 3)),
+        ("column", design_ctx::<Column>(&prior, 6, 0.03, len, 3)),
+    ]
+}
+
+/// The bit-equality pin: `ecsq.<codec>` ≡ `EcsqCoder` with that codec.
+#[test]
+fn ecsq_stacks_bit_identical_to_reference_coder() {
+    let len = 2_000usize;
+    for (scenario, ctx) in pin_contexts(len) {
+        let xs = sample_block(&ctx.channel, ctx.noise_var, len, 0x5EED);
+        for (codec_name, codec_kind) in [
+            ("analytic", CodecKind::Analytic),
+            ("range", CodecKind::Range),
+            ("huffman", CodecKind::Huffman),
+        ] {
+            for (target_label, reference, stack_state) in [
+                (
+                    "rate3",
+                    EcsqCoder::for_rate(&ctx.channel, ctx.noise_var, 3.0, CLIP_SDS, codec_kind)
+                        .unwrap(),
+                    registry::get(&format!("ecsq.{codec_name}"))
+                        .unwrap()
+                        .design_rate(&ctx, 3.0)
+                        .unwrap(),
+                ),
+                (
+                    "mse",
+                    EcsqCoder::for_mse(
+                        &ctx.channel,
+                        ctx.noise_var,
+                        ctx.noise_var * 0.05,
+                        CLIP_SDS,
+                        codec_kind,
+                    )
+                    .unwrap(),
+                    registry::get(&format!("ecsq.{codec_name}"))
+                        .unwrap()
+                        .design_mse(&ctx, ctx.noise_var * 0.05)
+                        .unwrap(),
+                ),
+            ] {
+                let label = format!("{scenario}/ecsq.{codec_name}/{target_label}");
+                // The runtime path: design → wire params → assemble.
+                let stack = registry::get(&format!("ecsq.{codec_name}")).unwrap();
+                let comp = stack.assemble(&ctx, &stack_state.params()).unwrap();
+                let bctx = BlockCtx { worker: 1 };
+
+                // Same quantizer design (Δ rides in params[0]).
+                let params = stack_state.params();
+                assert_eq!(
+                    params[0].to_bits(),
+                    reference.quantizer.delta.to_bits(),
+                    "{label}: Δ differs"
+                );
+                assert_eq!(params[1] as i32, reference.quantizer.k_max, "{label}: k_max");
+
+                // Same symbols.
+                let ref_syms = reference.quantizer.quantize_block(&xs);
+                let new_syms = comp.quantize(&bctx, &xs);
+                assert_eq!(ref_syms, new_syms, "{label}: symbols differ");
+
+                // Same model σ_Q² and analytic bits.
+                assert_eq!(
+                    comp.distortion_model().to_bits(),
+                    reference.quantizer.sigma_q2().to_bits(),
+                    "{label}: σ_Q²"
+                );
+                assert_eq!(
+                    comp.model_bits_per_element().to_bits(),
+                    reference.entropy_bits.to_bits(),
+                    "{label}: H_Q"
+                );
+
+                // Same wire bytes + charged bits.
+                let ref_block = reference.encode_symbols(&ref_syms).unwrap();
+                let new_block = comp.encode(&bctx, &xs).unwrap();
+                assert_eq!(ref_block.bytes, new_block.bytes, "{label}: wire bytes");
+                assert_eq!(
+                    ref_block.wire_bits.to_bits(),
+                    new_block.wire_bits.to_bits(),
+                    "{label}: wire bits"
+                );
+
+                // Same reconstruction, element for element.
+                let mut ref_out = vec![0f32; len];
+                reference.decode(&ref_block, Some(&ref_syms), &mut ref_out).unwrap();
+                let mut new_out = vec![0f32; len];
+                if comp.carries_payload() {
+                    comp.decode(&bctx, &new_block.bytes, &mut new_out).unwrap();
+                } else {
+                    comp.dequantize(&bctx, &new_syms, &mut new_out).unwrap();
+                }
+                for (i, (a, b)) in ref_out.iter().zip(&new_out).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{label}: element {i}");
+                }
+            }
+        }
+    }
+}
+
+/// Session-level pin: the default-family `"ecsq.huffman"` stack yields
+/// bit-identical runs across transports on both partitionings, and the
+/// deprecated `codec` alias resolves to the very same stack.
+#[test]
+fn ecsq_huffman_sessions_bit_stable_row_column_inproc_tcp() {
+    for partitioning in [Partitioning::Row, Partitioning::Column] {
+        let base = SessionBuilder::test_small(0.05)
+            .partitioning(partitioning)
+            .fixed_rate(4.0)
+            .compressor("ecsq.huffman");
+        let inproc = base.clone().build().unwrap().run().unwrap();
+        let tcp = base
+            .clone()
+            .transport(TransportKind::Tcp)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        let label = format!("{partitioning:?}");
+        assert!(inproc.final_sdr_db() > 8.0, "{label}: SDR {}", inproc.final_sdr_db());
+        assert_eq!(inproc.iters.len(), tcp.iters.len(), "{label}");
+        for (a, b) in inproc.iters.iter().zip(&tcp.iters) {
+            assert_eq!(a.sdr_db.to_bits(), b.sdr_db.to_bits(), "{label} t={}", a.t);
+            assert_eq!(a.rate_wire.to_bits(), b.rate_wire.to_bits(), "{label} t={}", a.t);
+            assert_eq!(a.sigma_q2.to_bits(), b.sigma_q2.to_bits(), "{label} t={}", a.t);
+        }
+        for (xa, xb) in inproc.final_xs.iter().zip(&tcp.final_xs) {
+            for (a, b) in xa.iter().zip(xb) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{label}: final_x");
+            }
+        }
+    }
+    // Alias: the pre-refactor `codec = "huffman"` surface selects the
+    // identical stack string the sessions above ran with.
+    let cfg = mpamp::config::RunConfig::test_small(0.05)
+        .apply_overrides(&[("codec".into(), "huffman".into())])
+        .unwrap();
+    assert_eq!(cfg.compressor, "ecsq.huffman");
+}
+
+/// The two new stacks run end to end on both partitionings, under both a
+/// rate-style (fixed) and an MSE-style (BT) schedule.
+#[test]
+fn dithered_and_topk_run_end_to_end_row_and_column() {
+    for compressor in ["ecsq-dithered.range", "topk.raw"] {
+        for partitioning in [Partitioning::Row, Partitioning::Column] {
+            let report = SessionBuilder::test_small(0.05)
+                .partitioning(partitioning)
+                .fixed_rate(4.0)
+                .compressor(compressor)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap();
+            let label = format!("{compressor}/{partitioning:?}");
+            assert_eq!(report.iters.len(), 6, "{label}");
+            assert!(report.final_sdr_db().is_finite(), "{label}");
+            assert!(report.total_uplink_bits_per_element() > 0.0, "{label}");
+            // Subtractive dither keeps the ECSQ operating point: the run
+            // must still recover the signal at 4 bits/element.
+            if compressor.starts_with("ecsq-dithered") {
+                assert!(
+                    report.final_sdr_db() > 5.0,
+                    "{label}: SDR {}",
+                    report.final_sdr_db()
+                );
+            }
+        }
+        // MSE-targeted directives (BT) exercise design_mse end to end.
+        let report = SessionBuilder::test_small(0.05)
+            .backtrack(1.05, 6.0)
+            .compressor(compressor)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_eq!(report.iters.len(), 6, "{compressor}/bt");
+        assert!(report.final_sdr_db().is_finite(), "{compressor}/bt");
+    }
+}
+
+/// Property: for every registered stack, a wire round trip
+/// (quantize → encode → decode → dequantize) reconstructs exactly what
+/// direct dequantization of the encoder's symbols gives, and the charged
+/// `wire_bits` agree with the bytes that actually travel.
+#[test]
+fn prop_roundtrip_and_wire_bits_for_every_registered_stack() {
+    let names = registry::names();
+    Prop::new("stack wire round trips", 40).check(|g| {
+        let len = g.usize_in(16, 700);
+        let rate = g.f64_in(0.8, 6.0);
+        let prior = BernoulliGauss::standard(g.f64_in(0.02, 0.3));
+        let var = g.f64_log_in(1e-3, 0.5);
+        let ctx = if g.bool_with(0.5) {
+            design_ctx::<Row>(&prior, g.usize_in(2, 30), var, len, g.u64())
+        } else {
+            design_ctx::<Column>(&prior, g.usize_in(2, 30), var, len, g.u64())
+        };
+        let xs = sample_block(&ctx.channel, ctx.noise_var, len, g.u64());
+        let bctx = BlockCtx { worker: *g.choice(&[0u32, 1, 2, 7, 29]) };
+        for name in &names {
+            let stack = registry::get(name).map_err(|e| e.to_string())?;
+            let state = stack.design_rate(&ctx, rate).map_err(|e| e.to_string())?;
+            let comp = stack.assemble(&ctx, &state.params()).map_err(|e| e.to_string())?;
+            let syms = comp.quantize(&bctx, &xs);
+            let mut direct = vec![0f32; len];
+            comp.dequantize(&bctx, &syms, &mut direct).map_err(|e| e.to_string())?;
+            let block = comp.encode(&bctx, &xs).map_err(|e| e.to_string())?;
+            prop_assert(
+                block.wire_bits.is_finite() && block.wire_bits >= 0.0,
+                format!("{name}: wire_bits {}", block.wire_bits),
+            )?;
+            if comp.carries_payload() {
+                // Bytes on the wire must account for every charged bit,
+                // with less than one byte of padding slack.
+                let byte_bits = block.bytes.len() as f64 * 8.0;
+                prop_assert(
+                    byte_bits >= block.wire_bits && byte_bits - block.wire_bits < 8.0,
+                    format!("{name}: {byte_bits} byte-bits vs {} charged", block.wire_bits),
+                )?;
+                let mut via_wire = vec![0f32; len];
+                comp.decode(&bctx, &block.bytes, &mut via_wire)
+                    .map_err(|e| format!("{name}: {e}"))?;
+                for (i, (a, b)) in direct.iter().zip(&via_wire).enumerate() {
+                    prop_assert(
+                        a.to_bits() == b.to_bits(),
+                        format!("{name}: element {i}: {a} != {b}"),
+                    )?;
+                }
+            } else {
+                // Payload-free codecs still charge their analytic bits.
+                prop_assert(
+                    block.bytes.is_empty(),
+                    format!("{name}: payload-free codec produced bytes"),
+                )?;
+            }
+            prop_assert(
+                comp.distortion_model().is_finite() && comp.distortion_model() >= 0.0,
+                format!("{name}: distortion model {}", comp.distortion_model()),
+            )?;
+        }
+        Ok(())
+    });
+}
+
+/// Property: hostile symbol streams and byte streams are rejected, never
+/// trusted (top-K indices out of range, truncated raw streams).
+#[test]
+fn prop_malformed_wire_input_rejected() {
+    Prop::new("malformed stack input rejected", 30).check(|g| {
+        let len = g.usize_in(8, 200);
+        let prior = BernoulliGauss::standard(0.05);
+        let ctx = design_ctx::<Row>(&prior, 6, 0.05, len, g.u64());
+        let stack = registry::get("topk.raw").map_err(|e| e.to_string())?;
+        let comp = stack.assemble(&ctx, &[4.0]).map_err(|e| e.to_string())?;
+        let bctx = BlockCtx { worker: 0 };
+        // An index past the end of the block must error, not panic.
+        let bad_syms = vec![len + g.usize_in(0, 10), 0x3F80_0000, 0, 0, 1, 0, 2, 0];
+        let mut out = vec![0f32; len];
+        prop_assert(
+            comp.dequantize(&bctx, &bad_syms, &mut out).is_err(),
+            "out-of-range index accepted",
+        )?;
+        // Truncated byte streams must error.
+        prop_assert(
+            comp.decode(&bctx, &[1, 2, 3], &mut out).is_err(),
+            "truncated raw stream accepted",
+        )?;
+        // Duplicate indices violate the encoder's strictly-increasing
+        // invariant and must be rejected, not silently overwritten.
+        let dup_syms = vec![0, 0x3F80_0000, 0, 0x3F80_0000, 1, 0, 2, 0];
+        prop_assert(
+            comp.dequantize(&bctx, &dup_syms, &mut out).is_err(),
+            "duplicate topk indices accepted",
+        )?;
+        Ok(())
+    });
+}
+
+/// Top-K semantics: the kept coefficients survive exactly, everything
+/// else reconstructs to zero, and the reported rate matches 64 bits per
+/// kept entry.
+#[test]
+fn topk_keeps_largest_magnitudes_exactly() {
+    let len = 64usize;
+    let prior = BernoulliGauss::standard(0.05);
+    let ctx = design_ctx::<Row>(&prior, 6, 0.05, len, 9);
+    let stack = registry::get("topk.raw").unwrap();
+    let k = 5usize;
+    let comp = stack.assemble(&ctx, &[k as f64]).unwrap();
+    let mut xs = vec![0f32; len];
+    // Plant k large entries among small noise.
+    let mut rng = Rng::new(4);
+    for x in xs.iter_mut() {
+        *x = (rng.gaussian() * 0.01) as f32;
+    }
+    let planted = [(3usize, 5.0f32), (17, -4.0), (31, 3.5), (40, -3.25), (63, 3.0)];
+    for &(i, v) in &planted {
+        xs[i] = v;
+    }
+    let bctx = BlockCtx { worker: 0 };
+    let block = comp.encode(&bctx, &xs).unwrap();
+    assert_eq!(block.bytes.len(), 4 * 2 * k, "4 bytes per index/value symbol");
+    assert!((comp.model_bits_per_element() - 64.0 * k as f64 / len as f64).abs() < 1e-12);
+    let mut out = vec![0f32; len];
+    comp.decode(&bctx, &block.bytes, &mut out).unwrap();
+    for (i, &o) in out.iter().enumerate() {
+        match planted.iter().find(|(j, _)| *j == i) {
+            Some(&(_, v)) => assert_eq!(o.to_bits(), v.to_bits(), "kept {i}"),
+            None => assert_eq!(o.to_bits(), 0f32.to_bits(), "dropped {i} must be zero"),
+        }
+    }
+    // Dropped-energy model: strictly positive (something is dropped) and
+    // bounded by the channel's total second moment.
+    let total = ctx.channel.expect_f(ctx.noise_var, |f| f * f);
+    assert!(comp.distortion_model() > 0.0);
+    assert!(comp.distortion_model() <= total * (1.0 + 1e-9));
+}
+
+/// Subtractive dither: reconstruction error never exceeds Δ/2 away from
+/// saturation, and the dither makes per-worker quantization errors
+/// differ while both protocol sides stay in lockstep.
+#[test]
+fn dithered_ecsq_error_bounded_and_worker_independent() {
+    let len = 1_000usize;
+    let prior = BernoulliGauss::standard(0.05);
+    let ctx = design_ctx::<Row>(&prior, 6, 0.05, len, 0xD17);
+    let stack = registry::get("ecsq-dithered.range").unwrap();
+    let state = stack.design_rate(&ctx, 4.0).unwrap();
+    let comp = stack.assemble(&ctx, &state.params()).unwrap();
+    let delta = state.params()[0];
+    let xs = sample_block(&ctx.channel, ctx.noise_var, len, 12);
+    let mut recon = vec![vec![0f32; len]; 2];
+    for (w, out) in recon.iter_mut().enumerate() {
+        let bctx = BlockCtx { worker: w as u32 };
+        let block = comp.encode(&bctx, &xs).unwrap();
+        comp.decode(&bctx, &block.bytes, out).unwrap();
+        for (i, (x, o)) in xs.iter().zip(out.iter()).enumerate() {
+            assert!(
+                ((x - o).abs() as f64) <= delta / 2.0 + delta + 1e-9,
+                "worker {w} element {i}: |{x} - {o}| vs Δ={delta}"
+            );
+        }
+    }
+    // Different workers see different dither streams.
+    assert!(
+        recon[0].iter().zip(&recon[1]).any(|(a, b)| a.to_bits() != b.to_bits()),
+        "worker dither streams identical"
+    );
+}

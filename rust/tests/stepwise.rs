@@ -68,7 +68,7 @@ fn run_equals_manual_step_loop_across_schedules() {
 /// numerics.
 #[test]
 fn session_matches_hand_driven_protocol_core() {
-    use mpamp::alloc::schedule::RateController;
+    use mpamp::alloc::schedule::allocator_from_config;
     use mpamp::coordinator::scenario::{ProtocolCore, Row, Scenario};
     use mpamp::coordinator::transport::inproc_pair;
     use mpamp::coordinator::worker::{run_scenario_worker, WorkerParams};
@@ -91,7 +91,7 @@ fn session_matches_hand_driven_protocol_core() {
 
     // Hand-driven path: raw transports + the generic core, no Session.
     let se = StateEvolution::new(cfg.prior, cfg.kappa(), cfg.sigma_e2());
-    let controller = RateController::from_config(&cfg, &se, None).unwrap();
+    let controller = allocator_from_config(&cfg, &se, None).unwrap();
     let engine = RustEngine::new(cfg.prior, cfg.threads);
     let meter = Arc::new(ByteMeter::new());
     let shards = <Row as Scenario>::split(&batch, cfg.p).unwrap();
@@ -106,7 +106,6 @@ fn session_matches_hand_driven_protocol_core() {
                 p_workers: cfg.p,
                 batch: 1,
                 prior: cfg.prior,
-                codec: cfg.codec,
             };
             let engine = &engine;
             s.spawn(move || {
@@ -120,7 +119,7 @@ fn session_matches_hand_driven_protocol_core() {
                 core.step(
                     &cfg,
                     &se,
-                    &controller,
+                    controller.as_ref(),
                     None,
                     &engine,
                     &mut fusion_eps,
