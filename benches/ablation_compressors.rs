@@ -78,6 +78,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             bytes_uplinked: r.uplink_payload_bytes(),
             signals_per_s: r.signals_per_s(),
             sdr_per_bit: Some(sdr_per_bit),
+            rounds_per_s: None,
+            gflops: None,
         });
         // Sanity: the ECSQ family must recover the signal at 4 bits (the
         // top-K budget keeps only ~37 of 600 entries per worker, so it is

@@ -90,6 +90,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             bytes_uplinked: r.uplink_payload_bytes(),
             signals_per_s: r.signals_per_s(),
             sdr_per_bit: Some(sdr_per_bit),
+            rounds_per_s: None,
+            gflops: None,
         });
         // Sanity: at ≥4 bits both scenarios must recover the signal.
         if bits >= 4.0 {

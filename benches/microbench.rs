@@ -119,6 +119,24 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         seq.median.as_secs_f64() / blk.median.as_secs_f64().max(1e-12)
     );
 
+    // Raw kernel arithmetic throughput (GFLOP/s records in BENCH_pr.json):
+    // dot and the 4-way-unrolled axpy at an L2-resident size, plus the
+    // blocked matmul above.
+    section("L1: dot / axpy kernel throughput");
+    let kn = 16_384usize;
+    let mut ka = vec![0f32; kn];
+    rng.fill_gaussian(&mut ka, 1.0);
+    let mut kb = vec![0f32; kn];
+    rng.fill_gaussian(&mut kb, 1.0);
+    let mut ky = vec![0f32; kn];
+    let dot_stats = b.bench_throughput("dot (16k), flops", 2 * kn as u64, || {
+        black_box(mpamp::linalg::dot(black_box(&ka), black_box(&kb)));
+    });
+    let axpy_stats =
+        b.bench_throughput("axpy (16k, unrolled), flops", 2 * kn as u64, || {
+            mpamp::linalg::axpy(black_box(1.0001f32), black_box(&ka), &mut ky);
+            black_box(&ky);
+        });
     section(&format!("L3: fusion GC denoiser step (N={})", cfg.n));
     let f: Vec<f32> = (0..cfg.n).map(|_| rng.gaussian() as f32 * 0.5).collect();
     for threads in [1, 4] {
@@ -203,6 +221,13 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         .chain(bq.results())
         .map(BenchRecord::from_stats)
         .collect();
+    // Annotate the FLOP-counted kernel rows with GFLOP/s in place (their
+    // `elements` counted FLOPs) — same records, no duplicates.
+    for stats in [&dot_stats, &axpy_stats, &blk] {
+        if let Some(r) = records.iter_mut().find(|r| r.name == stats.name) {
+            r.gflops = stats.throughput().map(|t| t / 1e9);
+        }
+    }
     let e2e_batch = 8usize;
     for (label, builder) in [
         ("e2e session row/fixed4", SessionBuilder::test_small(0.05).fixed_rate(4.0)),
@@ -234,6 +259,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             bytes_uplinked: bytes,
             signals_per_s: report.signals_per_s(),
             sdr_per_bit: None,
+            rounds_per_s: Some(report.iters.len() as f64 / wall_s.max(1e-12)),
+            gflops: None,
         });
     }
     // The batching win as one number: wall time of 8 sequential B=1
@@ -259,6 +286,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         bytes_uplinked: 0,
         signals_per_s: e2e_batch as f64 / wall_seq.max(1e-12),
         sdr_per_bit: None,
+        rounds_per_s: None,
+        gflops: None,
     });
 
     if let Some(path) = json_path {

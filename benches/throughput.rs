@@ -1,0 +1,208 @@
+//! P5: session-throughput suite for the zero-allocation hot path —
+//! rounds/s, signals/s, and uplink bytes for row + column partitionings
+//! over inproc + TCP at two problem sizes, plus blocked-matmul GFLOP/s
+//! and a no-pool/no-batch control run (B independent single-signal
+//! sessions on 1 thread) to quantify the pooled, batched, encode-once
+//! runtime against.
+//!
+//! Flags (after `cargo bench --bench throughput --`):
+//! * `--smoke`       small size only + short sampling (the CI `perf-smoke` job)
+//! * `--json <path>` write `BENCH_pr.json`-schema records (extended with
+//!   `rounds_per_s` / `gflops`)
+//! * `--crossover`   sweep matmul sizes around `linalg::PAR_MIN_ENTRIES`
+//!   to re-measure the serial↔pooled dispatch crossover on this machine
+
+use mpamp::bench_util::{black_box, section, BenchRecord, Bencher};
+use mpamp::config::{num_threads_default, Partitioning, TransportKind};
+use mpamp::linalg::{Matrix, PAR_MIN_ENTRIES};
+use mpamp::util::rng::Rng;
+use mpamp::SessionBuilder;
+
+struct Size {
+    label: &'static str,
+    n: usize,
+    m: usize,
+    p: usize,
+    batch: usize,
+}
+
+const SIZES: &[Size] = &[
+    Size { label: "small", n: 600, m: 180, p: 6, batch: 4 },
+    Size { label: "mid", n: 2_400, m: 720, p: 6, batch: 8 },
+];
+
+fn builder_for(size: &Size) -> SessionBuilder {
+    SessionBuilder::test_small(0.05)
+        .dims(size.n, size.m)
+        .workers(size.p)
+        .batch(size.batch)
+        .fixed_rate(4.0)
+}
+
+fn crossover_sweep() {
+    section("serial ↔ pooled matmul crossover sweep");
+    println!(
+        "current gate: PAR_MIN_ENTRIES = {PAR_MIN_ENTRIES} entries \
+         (kernels stay serial below it)"
+    );
+    let threads = num_threads_default();
+    let mut rng = Rng::new(11);
+    let b = 4usize;
+    for shift in [17u32, 18, 19, 20, 21, 22] {
+        let entries = 1usize << shift;
+        let rows = 512usize;
+        let cols = entries / rows;
+        let mut data = vec![0f32; rows * cols];
+        rng.fill_gaussian(&mut data, 1.0);
+        let a = Matrix::from_vec(rows, cols, data).unwrap();
+        let mut xs = vec![0f32; b * cols];
+        rng.fill_gaussian(&mut xs, 1.0);
+        let mut out = vec![0f32; b * rows];
+        let mut bench = Bencher::quick();
+        let flops = 2 * b as u64 * rows as u64 * cols as u64;
+        let serial =
+            bench.bench_throughput(&format!("matmul serial 2^{shift}"), flops, || {
+                a.matmul(black_box(&xs), b, &mut out);
+                black_box(&out);
+            });
+        let pooled = bench.bench_throughput(
+            &format!("matmul pooled 2^{shift} ({threads} chunks)"),
+            flops,
+            || {
+                a.matmul_pooled(black_box(&xs), b, &mut out, threads);
+                black_box(&out);
+            },
+        );
+        println!(
+            "2^{shift} entries: pooled speedup over serial = {:.2}x",
+            serial.median.as_secs_f64() / pooled.median.as_secs_f64().max(1e-12)
+        );
+    }
+    println!(
+        "pick the smallest size where pooled wins consistently and update \
+         PAR_MIN_ENTRIES (rust/src/linalg/mod.rs) if this machine disagrees"
+    );
+}
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+    if args.iter().any(|a| a == "--crossover") {
+        crossover_sweep();
+        return Ok(());
+    }
+
+    let sizes: &[Size] = if smoke { &SIZES[..1] } else { SIZES };
+    let mut records: Vec<BenchRecord> = Vec::new();
+
+    for size in sizes {
+        section(&format!(
+            "e2e sessions ({}: N={} M={} P={} B={}, fixed 4-bit ECSQ)",
+            size.label, size.n, size.m, size.p, size.batch
+        ));
+        for partitioning in [Partitioning::Row, Partitioning::Column] {
+            for transport in [TransportKind::InProc, TransportKind::Tcp] {
+                let tname = match transport {
+                    TransportKind::InProc => "inproc",
+                    TransportKind::Tcp => "tcp",
+                };
+                let builder = builder_for(size)
+                    .partitioning(partitioning)
+                    .transport(transport);
+                let t0 = std::time::Instant::now();
+                let report = builder.build()?.run()?;
+                let wall_s = t0.elapsed().as_secs_f64();
+                let rounds_per_s = report.iters.len() as f64 / wall_s.max(1e-12);
+                let name = format!(
+                    "throughput {}/{tname} {}",
+                    partitioning.as_str(),
+                    size.label
+                );
+                println!(
+                    "{name:<38} {wall_s:>8.3} s   {rounds_per_s:>8.1} rounds/s   \
+                     {:>7.2} signals/s   SDR {:>6.2} dB",
+                    report.signals_per_s(),
+                    report.final_sdr_db()
+                );
+                assert!(rounds_per_s > 0.0, "{name}: rounds_per_s must be positive");
+                records.push(BenchRecord {
+                    name,
+                    wall_s,
+                    bytes_uplinked: report.uplink_payload_bytes(),
+                    signals_per_s: report.signals_per_s(),
+                    sdr_per_bit: None,
+                    rounds_per_s: Some(rounds_per_s),
+                    gflops: None,
+                });
+            }
+        }
+
+        // Control: the pre-refactor shape — B independent single-signal
+        // sessions on 1 compute thread over TCP (per-session spawn
+        // overhead, B× broadcast encodes, no blocked kernels). The
+        // batched TCP record above should beat this materially.
+        let t0 = std::time::Instant::now();
+        let mut total_rounds = 0usize;
+        for seed in 0..size.batch as u64 {
+            let report = builder_for(size)
+                .batch(1)
+                .threads(1)
+                .transport(TransportKind::Tcp)
+                .seed(0x5EED + seed)
+                .build()?
+                .run()?;
+            total_rounds += report.iters.len();
+            black_box(report.final_sdr_db());
+        }
+        let wall_s = t0.elapsed().as_secs_f64();
+        let rounds_per_s = total_rounds as f64 / wall_s.max(1e-12);
+        let name = format!(
+            "throughput control row/tcp {} (no-batch, 1 thread, x{})",
+            size.label, size.batch
+        );
+        println!("{name:<38} {wall_s:>8.3} s   {rounds_per_s:>8.1} rounds/s");
+        records.push(BenchRecord {
+            name,
+            wall_s,
+            bytes_uplinked: 0,
+            signals_per_s: size.batch as f64 / wall_s.max(1e-12),
+            sdr_per_bit: None,
+            rounds_per_s: Some(rounds_per_s),
+            gflops: None,
+        });
+
+        // Blocked matmul GFLOP/s at this size's worker-shard shape.
+        let mut bench = Bencher::quick();
+        let rows = size.m / size.p;
+        let mut rng = Rng::new(7);
+        let mut data = vec![0f32; rows * size.n];
+        rng.fill_gaussian(&mut data, 1.0);
+        let a = Matrix::from_vec(rows, size.n, data)?;
+        let mut xs = vec![0f32; size.batch * size.n];
+        rng.fill_gaussian(&mut xs, 1.0);
+        let mut out = vec![0f32; size.batch * rows];
+        let flops = 2 * size.batch as u64 * rows as u64 * size.n as u64;
+        let stats = bench.bench_throughput(
+            &format!("matmul shard ({rows}x{}, B={})", size.n, size.batch),
+            flops,
+            || {
+                a.matmul_par(black_box(&xs), size.batch, &mut out, 4);
+                black_box(&out);
+            },
+        );
+        let mut rec = BenchRecord::from_flops_stats(&stats);
+        rec.name = format!("gflops matmul shard {}", size.label);
+        records.push(rec);
+    }
+
+    if let Some(path) = json_path {
+        mpamp::bench_util::write_bench_json(&path, &records)?;
+        println!("\nwrote {} throughput records → {path}", records.len());
+    }
+    Ok(())
+}

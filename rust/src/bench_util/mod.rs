@@ -208,6 +208,13 @@ pub struct BenchRecord {
     /// compressor-ablation quality metric (`None` for non-session
     /// benches; serialized only when present).
     pub sdr_per_bit: Option<f64>,
+    /// Protocol rounds completed per second — the session throughput
+    /// metric `benches/throughput.rs` tracks (`None` for non-session
+    /// benches; serialized only when present).
+    pub rounds_per_s: Option<f64>,
+    /// Kernel arithmetic throughput in GFLOP/s (`None` for non-kernel
+    /// benches; serialized only when present).
+    pub gflops: Option<f64>,
 }
 
 impl BenchRecord {
@@ -219,7 +226,17 @@ impl BenchRecord {
             bytes_uplinked: 0,
             signals_per_s: 0.0,
             sdr_per_bit: None,
+            rounds_per_s: None,
+            gflops: None,
         }
+    }
+
+    /// Record from kernel stats whose `elements` field counted FLOPs:
+    /// the throughput lands in [`gflops`](BenchRecord::gflops).
+    pub fn from_flops_stats(s: &BenchStats) -> Self {
+        let mut r = Self::from_stats(s);
+        r.gflops = s.throughput().map(|t| t / 1e9);
+        r
     }
 }
 
@@ -239,6 +256,12 @@ pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<
                     .set("signals_per_s", Json::Num(r.signals_per_s));
                 if let Some(spb) = r.sdr_per_bit {
                     obj = obj.set("sdr_per_bit", Json::Num(spb));
+                }
+                if let Some(rps) = r.rounds_per_s {
+                    obj = obj.set("rounds_per_s", Json::Num(rps));
+                }
+                if let Some(gf) = r.gflops {
+                    obj = obj.set("gflops", Json::Num(gf));
                 }
                 obj
             })
@@ -296,6 +319,8 @@ mod tests {
                 bytes_uplinked: 0,
                 signals_per_s: 0.0,
                 sdr_per_bit: None,
+                rounds_per_s: None,
+                gflops: None,
             },
             BenchRecord {
                 name: "e2e row".into(),
@@ -303,6 +328,8 @@ mod tests {
                 bytes_uplinked: 4096,
                 signals_per_s: 5.25,
                 sdr_per_bit: Some(0.75),
+                rounds_per_s: Some(4.0),
+                gflops: Some(1.5),
             },
         ];
         let dir = std::env::temp_dir().join("mpamp_bench_json_test");
@@ -314,9 +341,13 @@ mod tests {
         assert!(text.contains("\"wall_s\":0.0125"), "{text}");
         assert!(text.contains("\"bytes_uplinked\":4096"), "{text}");
         assert!(text.contains("\"signals_per_s\":5.25"), "{text}");
-        // sdr_per_bit serialized only when present.
+        // Optional fields serialized only when present.
         assert!(text.contains("\"sdr_per_bit\":0.75"), "{text}");
         assert_eq!(text.matches("sdr_per_bit").count(), 1, "{text}");
+        assert!(text.contains("\"rounds_per_s\":4"), "{text}");
+        assert_eq!(text.matches("rounds_per_s").count(), 1, "{text}");
+        assert!(text.contains("\"gflops\":1.5"), "{text}");
+        assert_eq!(text.matches("gflops").count(), 1, "{text}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -164,6 +164,15 @@ pub trait Quantizer: Send + Sync {
     /// Family label — the part before the `.` in registered stack names.
     fn family(&self) -> &'static str;
 
+    /// Whether this family's designed states return a symbol-model pmf
+    /// from [`QuantizerState::model`]. Capability flag for the registry:
+    /// pairing a model-free family (top-K) with a model-based codec
+    /// (range/Huffman/analytic) is rejected at registration instead of
+    /// failing rounds later at assembly time.
+    fn provides_model_pmf(&self) -> bool {
+        true
+    }
+
     /// Design for a target per-worker quantization MSE σ_Q².
     fn design_mse(&self, ctx: &DesignCtx, sigma_q2: f64) -> Result<Box<dyn QuantizerState>>;
 
@@ -219,6 +228,14 @@ pub trait EntropyCodec: Send + Sync {
     /// values ship as raw floats, so numerics match the coded paths
     /// exactly.
     fn carries_payload(&self) -> bool {
+        true
+    }
+
+    /// Whether [`build`](EntropyCodec::build) requires a symbol-model
+    /// pmf. Capability flag for the registry (see
+    /// [`Quantizer::provides_model_pmf`]); the model-free
+    /// [`RawSymbolCodec`](stacks::RawSymbolCodec) returns `false`.
+    fn needs_model_pmf(&self) -> bool {
         true
     }
 

@@ -31,10 +31,22 @@ pub const DEFAULT_STACK: &str = "ecsq.range";
 /// cap before allocating).
 pub const MAX_STACK_NAME: usize = 64;
 
+/// Capability flags a stack advertises (derived from its parts) — what
+/// `mpamp compressors` tabulates and registration validates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StackCaps {
+    /// The codec requires a symbol-model pmf from the quantizer.
+    pub needs_model_pmf: bool,
+    /// No encoded bytes travel (entropy-accounted, e.g. the analytic
+    /// codec) — the dequantized values ship as raw floats instead.
+    pub payload_free: bool,
+}
+
 /// A named `(Quantizer, EntropyCodec)` pair.
 #[derive(Clone)]
 pub struct CompressionStack {
-    name: String,
+    name: Arc<str>,
+    description: String,
     quantizer: Arc<dyn Quantizer>,
     codec: Arc<dyn EntropyCodec>,
 }
@@ -46,12 +58,59 @@ impl CompressionStack {
         quantizer: Arc<dyn Quantizer>,
         codec: Arc<dyn EntropyCodec>,
     ) -> Self {
-        CompressionStack { name: name.into(), quantizer, codec }
+        CompressionStack {
+            name: name.into().into(),
+            description: String::new(),
+            quantizer,
+            codec,
+        }
+    }
+
+    /// Attach a one-line human description (shown by `mpamp compressors`).
+    pub fn with_description(mut self, description: impl Into<String>) -> Self {
+        self.description = description.into();
+        self
     }
 
     /// The registry name (what configs, CLI, and `QuantSpec`s carry).
     pub fn name(&self) -> &str {
         &self.name
+    }
+
+    /// The registry name as a shared string — what per-round spec design
+    /// clones (a pointer bump, not a string copy).
+    pub fn name_arc(&self) -> std::sync::Arc<str> {
+        self.name.clone()
+    }
+
+    /// The one-line description (empty if none was attached).
+    pub fn description(&self) -> &str {
+        &self.description
+    }
+
+    /// The stack's advertised capability flags.
+    pub fn caps(&self) -> StackCaps {
+        StackCaps {
+            needs_model_pmf: self.codec.needs_model_pmf(),
+            payload_free: !self.codec.carries_payload(),
+        }
+    }
+
+    /// Error if the stack's parts are incompatible (a model-based codec
+    /// over a model-free quantizer family) — checked at registration so
+    /// a bad pairing fails with the stack named, not rounds later with
+    /// an assembly error on a worker.
+    pub fn validate_caps(&self) -> Result<()> {
+        if self.codec.needs_model_pmf() && !self.quantizer.provides_model_pmf() {
+            return Err(Error::Config(format!(
+                "compression stack '{}': codec '{}' needs a symbol-model pmf \
+                 but quantizer family '{}' provides none",
+                self.name,
+                self.codec.name(),
+                self.quantizer.family()
+            )));
+        }
+        Ok(())
     }
 
     /// The stack's quantizer family.
@@ -101,15 +160,20 @@ fn builtin_stacks() -> StackMap {
     let dithered: Arc<dyn Quantizer> = Arc::new(DitheredEcsqQuantizer);
     let topk: Arc<dyn Quantizer> = Arc::new(TopKQuantizer);
     let stacks = [
-        CompressionStack::new("ecsq.analytic", ecsq.clone(), Arc::new(AnalyticCodec)),
-        CompressionStack::new("ecsq.range", ecsq.clone(), Arc::new(RangeCodec)),
-        CompressionStack::new("ecsq.huffman", ecsq, Arc::new(HuffmanCodec)),
-        CompressionStack::new("ecsq-dithered.range", dithered, Arc::new(RangeCodec)),
-        CompressionStack::new("topk.raw", topk, Arc::new(RawSymbolCodec)),
+        CompressionStack::new("ecsq.analytic", ecsq.clone(), Arc::new(AnalyticCodec))
+            .with_description("ECSQ, entropy-accounted (H_Q bits, raw floats travel)"),
+        CompressionStack::new("ecsq.range", ecsq.clone(), Arc::new(RangeCodec))
+            .with_description("ECSQ over a static range coder (default)"),
+        CompressionStack::new("ecsq.huffman", ecsq, Arc::new(HuffmanCodec))
+            .with_description("ECSQ over canonical Huffman (integer-bit penalty)"),
+        CompressionStack::new("ecsq-dithered.range", dithered, Arc::new(RangeCodec))
+            .with_description("Subtractively-dithered ECSQ, seeded per worker"),
+        CompressionStack::new("topk.raw", topk, Arc::new(RawSymbolCodec))
+            .with_description("Top-K magnitude sparsifier, index+f32 coding"),
     ];
     stacks
         .into_iter()
-        .map(|s| (s.name.clone(), Arc::new(s)))
+        .map(|s| (s.name().to_string(), Arc::new(s)))
         .collect()
 }
 
@@ -133,7 +197,10 @@ pub fn get(name: &str) -> Result<Arc<CompressionStack>> {
 /// Register a new stack. Names must be non-empty, at most
 /// [`MAX_STACK_NAME`] bytes, without whitespace (they travel on the
 /// wire), and not collide with an existing registration — the built-ins
-/// cannot be silently replaced out from under a running session.
+/// cannot be silently replaced out from under a running session. The
+/// stack's capability flags must also be consistent
+/// ([`CompressionStack::validate_caps`]), so an impossible pairing fails
+/// here with the stack named instead of rounds later on a worker.
 pub fn register(stack: CompressionStack) -> Result<()> {
     let name = stack.name().to_string();
     if name.is_empty() || name.len() > MAX_STACK_NAME || name.chars().any(char::is_whitespace)
@@ -143,6 +210,7 @@ pub fn register(stack: CompressionStack) -> Result<()> {
              no whitespace"
         )));
     }
+    stack.validate_caps()?;
     let mut m = map().write().expect("compression registry poisoned");
     if m.contains_key(&name) {
         return Err(Error::Config(format!(
@@ -156,6 +224,12 @@ pub fn register(stack: CompressionStack) -> Result<()> {
 /// All registered stack names, sorted.
 pub fn names() -> Vec<String> {
     map().read().expect("compression registry poisoned").keys().cloned().collect()
+}
+
+/// All registered stacks, sorted by name — what `mpamp compressors`
+/// tabulates (name, parts, capability flags, description).
+pub fn all() -> Vec<Arc<CompressionStack>> {
+    map().read().expect("compression registry poisoned").values().cloned().collect()
 }
 
 #[cfg(test)]
@@ -262,6 +336,36 @@ mod tests {
             }
             assert!(comp.distortion_model() >= 0.0, "{name}");
             assert!(comp.model_bits_per_element() >= 0.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn caps_advertised_and_incompatible_pairs_rejected() {
+        let topk = get("topk.raw").unwrap();
+        assert_eq!(
+            topk.caps(),
+            StackCaps { needs_model_pmf: false, payload_free: false }
+        );
+        let analytic = get("ecsq.analytic").unwrap();
+        assert!(analytic.caps().payload_free);
+        assert!(analytic.caps().needs_model_pmf);
+        assert!(!get("ecsq.range").unwrap().caps().payload_free);
+        // A model-free quantizer under a model-based codec is impossible
+        // to assemble — rejected at registration, with the stack named.
+        let bad = CompressionStack::new(
+            "topk.range-bad",
+            Arc::new(TopKQuantizer),
+            Arc::new(RangeCodec),
+        );
+        let err = register(bad).unwrap_err().to_string();
+        assert!(err.contains("needs a symbol-model pmf"), "{err}");
+        assert!(err.contains("topk.range-bad"), "{err}");
+        assert!(get("topk.range-bad").is_err(), "bad stack must not register");
+        // Every built-in carries a real description for the CLI table.
+        for s in all() {
+            if !s.name().starts_with("nop.") {
+                assert!(!s.description().is_empty(), "{} lacks description", s.name());
+            }
         }
     }
 

@@ -274,6 +274,11 @@ impl Quantizer for TopKQuantizer {
         "topk"
     }
 
+    fn provides_model_pmf(&self) -> bool {
+        // Index + f32-bit pairs carry no exploitable symbol model.
+        false
+    }
+
     /// Smallest `K` whose modeled dropped energy stays under the target
     /// σ_Q²: bisect the magnitude threshold on `E[F²; |F| ≤ τ]`, then
     /// round the implied keep fraction up (erring toward less distortion).
@@ -552,6 +557,10 @@ impl BlockCodec for RawSymbolBlock {
 impl EntropyCodec for RawSymbolCodec {
     fn name(&self) -> &'static str {
         "raw"
+    }
+
+    fn needs_model_pmf(&self) -> bool {
+        false
     }
 
     fn build(&self, _model: Option<&SymbolModel>) -> Result<Box<dyn BlockCodec>> {

@@ -285,8 +285,11 @@ impl RunConfig {
             _ => {}
         }
         // The compression stack must exist in the registry (the error
-        // lists every registered name).
-        crate::compress::registry::get(&self.compressor)?;
+        // lists every registered name) and its advertised capabilities
+        // must be consistent — registration already enforces this for
+        // stacks that went through `register`, so this is a cheap
+        // defense-in-depth check that fails at config time, not mid-run.
+        crate::compress::registry::get(&self.compressor)?.validate_caps()?;
         Ok(())
     }
 

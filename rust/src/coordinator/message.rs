@@ -12,6 +12,8 @@
 //! Peers exchange [`PROTOCOL_VERSION`] in the transport hello so a
 //! mismatched peer fails fast instead of decoding garbage.
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
 
 /// Version byte exchanged in the worker hello frame. Bump on every wire
@@ -38,8 +40,10 @@ pub enum QuantSpec {
     /// name plus these parameters (and the static prior/P from config) —
     /// no codebook on the wire.
     Stack {
-        /// Registry name of the stack (e.g. `"ecsq.huffman"`).
-        name: String,
+        /// Registry name of the stack (e.g. `"ecsq.huffman"`). Shared
+        /// (`Arc`) so per-round spec design clones a pointer, not a
+        /// string.
+        name: Arc<str>,
         /// The variance estimate the model channel is rebuilt from
         /// (σ̂²_{t,D} in row mode, the message variance v̂ in column
         /// mode).
@@ -176,82 +180,49 @@ const PAY_SKIPPED: u8 = 2;
 const MAX_WIRE_BATCH: u32 = 65_536;
 
 impl Message {
-    /// Serialize to bytes.
+    /// Serialize to fresh bytes (a thin wrapper over
+    /// [`encode_into`](Message::encode_into); hot paths reuse a frame
+    /// buffer instead).
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(16);
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize into a reused frame buffer (cleared first). Produces
+    /// byte-identical frames to [`encode`](Message::encode); the
+    /// encode-once broadcast path encodes each round's command exactly
+    /// once and hands the same frame to every endpoint.
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
         match self {
-            Message::StepCmd { t, coefs, x } => {
-                out.push(TAG_STEP);
-                push_u32(&mut out, *t);
-                push_f32_block(&mut out, coefs);
-                push_f32_block(&mut out, x);
-            }
+            Message::StepCmd { t, coefs, x } => encode_step_cmd(out, *t, coefs, x),
             Message::ZNorm { t, worker, z_norm2 } => {
-                out.push(TAG_ZNORM);
-                push_u32(&mut out, *t);
-                push_u32(&mut out, *worker);
-                push_f64_block(&mut out, z_norm2);
+                encode_znorm(out, *t, *worker, z_norm2)
             }
-            Message::QuantCmd { t, specs } => {
-                out.push(TAG_QUANT);
-                push_u32(&mut out, *t);
-                push_u32(&mut out, specs.len() as u32);
-                for spec in specs {
-                    match spec {
-                        QuantSpec::Raw => out.push(SPEC_RAW),
-                        QuantSpec::Skip => out.push(SPEC_SKIP),
-                        QuantSpec::Stack { name, model_var, seed, params } => {
-                            out.push(SPEC_STACK);
-                            push_u32(&mut out, name.len() as u32);
-                            out.extend_from_slice(name.as_bytes());
-                            push_f64(&mut out, *model_var);
-                            push_u64(&mut out, *seed);
-                            push_u32(&mut out, params.len() as u32);
-                            for p in params {
-                                push_f64(&mut out, *p);
-                            }
-                        }
-                    }
-                }
-            }
+            Message::QuantCmd { t, specs } => encode_quant_cmd(out, *t, specs),
             Message::FVector { t, worker, payloads } => {
-                out.push(TAG_FVEC);
-                push_u32(&mut out, *t);
-                push_u32(&mut out, *worker);
-                push_u32(&mut out, payloads.len() as u32);
+                begin_fvector(out, *t, *worker, payloads.len() as u32);
                 for payload in payloads {
                     match payload {
-                        FPayload::Raw(v) => {
-                            out.push(PAY_RAW);
-                            push_f32_block(&mut out, v);
-                        }
+                        FPayload::Raw(v) => push_raw_payload(out, v),
                         FPayload::Coded { n, bytes } => {
-                            out.push(PAY_CODED);
-                            push_u32(&mut out, *n);
-                            push_u32(&mut out, bytes.len() as u32);
-                            out.extend_from_slice(bytes);
+                            push_coded_payload(out, *n, bytes)
                         }
-                        FPayload::Skipped => out.push(PAY_SKIPPED),
+                        FPayload::Skipped => push_skipped_payload(out),
                     }
                 }
             }
             Message::ColStep { t, sigma_eff2, z } => {
-                out.push(TAG_COLSTEP);
-                push_u32(&mut out, *t);
-                push_f64_block(&mut out, sigma_eff2);
-                push_f32_block(&mut out, z);
+                encode_col_step(out, *t, sigma_eff2, z)
             }
             Message::ColScalars { t, worker, u_norm2, eta_prime_mean, x_shard } => {
-                out.push(TAG_COLSCALARS);
-                push_u32(&mut out, *t);
-                push_u32(&mut out, *worker);
-                push_f64_block(&mut out, u_norm2);
-                push_f64_block(&mut out, eta_prime_mean);
-                push_f32_block(&mut out, x_shard);
+                encode_col_scalars(out, *t, *worker, u_norm2, eta_prime_mean, x_shard)
             }
-            Message::Done => out.push(TAG_DONE),
+            Message::Done => {
+                out.clear();
+                out.push(TAG_DONE);
+            }
         }
-        out
     }
 
     /// Deserialize.
@@ -285,12 +256,13 @@ impl Message {
                                      1..={MAX_WIRE_STACK_NAME}"
                                 )));
                             }
-                            let name = String::from_utf8(
-                                c.bytes(name_len as usize)?.to_vec(),
+                            let name: Arc<str> = std::str::from_utf8(
+                                c.bytes(name_len as usize)?,
                             )
                             .map_err(|_| {
                                 Error::Protocol("stack name is not UTF-8".into())
-                            })?;
+                            })?
+                            .into();
                             let model_var = c.f64()?;
                             let seed = c.u64()?;
                             let n_params = c.u32()?;
@@ -378,6 +350,345 @@ impl Message {
             _ => 0.0,
         }
     }
+}
+
+// ---------------------------------------------------------------------
+// Frame builders — the encode-once hot path. Each `encode_*` function
+// writes one complete frame into a reused buffer (cleared first) and is
+// byte-identical to `Message::encode` of the corresponding variant, so
+// senders never materialize an owned `Message` (no cloned broadcast
+// state, no staged reply vectors). `begin_fvector` + `push_*_payload`
+// build the uplink frame payload by payload (appending).
+// ---------------------------------------------------------------------
+
+/// Encode a row-mode `StepCmd` broadcast (clears `out`).
+pub fn encode_step_cmd(out: &mut Vec<u8>, t: u32, coefs: &[f32], x: &[f32]) {
+    out.clear();
+    out.push(TAG_STEP);
+    push_u32(out, t);
+    push_f32_block(out, coefs);
+    push_f32_block(out, x);
+}
+
+/// Encode a column-mode `ColStep` broadcast (clears `out`).
+pub fn encode_col_step(out: &mut Vec<u8>, t: u32, sigma_eff2: &[f64], z: &[f32]) {
+    out.clear();
+    out.push(TAG_COLSTEP);
+    push_u32(out, t);
+    push_f64_block(out, sigma_eff2);
+    push_f32_block(out, z);
+}
+
+/// Encode a `QuantCmd` broadcast (clears `out`).
+pub fn encode_quant_cmd(out: &mut Vec<u8>, t: u32, specs: &[QuantSpec]) {
+    out.clear();
+    out.push(TAG_QUANT);
+    push_u32(out, t);
+    push_u32(out, specs.len() as u32);
+    for spec in specs {
+        match spec {
+            QuantSpec::Raw => out.push(SPEC_RAW),
+            QuantSpec::Skip => out.push(SPEC_SKIP),
+            QuantSpec::Stack { name, model_var, seed, params } => {
+                out.push(SPEC_STACK);
+                push_u32(out, name.len() as u32);
+                out.extend_from_slice(name.as_bytes());
+                push_f64(out, *model_var);
+                push_u64(out, *seed);
+                push_u32(out, params.len() as u32);
+                for p in params {
+                    push_f64(out, *p);
+                }
+            }
+        }
+    }
+}
+
+/// Encode a row-mode `ZNorm` reply (clears `out`).
+pub fn encode_znorm(out: &mut Vec<u8>, t: u32, worker: u32, z_norm2: &[f64]) {
+    out.clear();
+    out.push(TAG_ZNORM);
+    push_u32(out, t);
+    push_u32(out, worker);
+    push_f64_block(out, z_norm2);
+}
+
+/// Encode a column-mode `ColScalars` reply (clears `out`) — straight from
+/// the worker's round state, no per-round `x_shard` clone.
+pub fn encode_col_scalars(
+    out: &mut Vec<u8>,
+    t: u32,
+    worker: u32,
+    u_norm2: &[f64],
+    eta_prime_mean: &[f64],
+    x_shard: &[f32],
+) {
+    out.clear();
+    out.push(TAG_COLSCALARS);
+    push_u32(out, t);
+    push_u32(out, worker);
+    push_f64_block(out, u_norm2);
+    push_f64_block(out, eta_prime_mean);
+    push_f32_block(out, x_shard);
+}
+
+/// Start an `FVector` uplink frame (clears `out`); follow with exactly
+/// `payload_count` `push_*_payload` calls.
+pub fn begin_fvector(out: &mut Vec<u8>, t: u32, worker: u32, payload_count: u32) {
+    out.clear();
+    out.push(TAG_FVEC);
+    push_u32(out, t);
+    push_u32(out, worker);
+    push_u32(out, payload_count);
+}
+
+/// Append one raw-floats payload to an `FVector` frame.
+pub fn push_raw_payload(out: &mut Vec<u8>, v: &[f32]) {
+    out.push(PAY_RAW);
+    push_f32_block(out, v);
+}
+
+/// Append one entropy-coded payload to an `FVector` frame.
+pub fn push_coded_payload(out: &mut Vec<u8>, n: u32, bytes: &[u8]) {
+    out.push(PAY_CODED);
+    push_u32(out, n);
+    push_u32(out, bytes.len() as u32);
+    out.extend_from_slice(bytes);
+}
+
+/// Append one zero-rate payload to an `FVector` frame.
+pub fn push_skipped_payload(out: &mut Vec<u8>) {
+    out.push(PAY_SKIPPED);
+}
+
+// ---------------------------------------------------------------------
+// Borrowed decoders — the zero-copy fusion path. The fusion center reads
+// every worker reply straight out of the endpoint's reused receive
+// buffer: scalar blocks come back as little-endian views, payload bytes
+// as sub-slices. Validation (caps, lengths, trailing bytes) matches
+// `Message::decode` exactly.
+// ---------------------------------------------------------------------
+
+/// Borrowed little-endian `f32` block (a length-prefixed block's body).
+#[derive(Debug, Clone, Copy)]
+pub struct LeF32s<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> LeF32s<'a> {
+    /// Number of encoded floats.
+    pub fn len(&self) -> usize {
+        self.bytes.len() / 4
+    }
+
+    /// Whether the block is empty.
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Iterate the decoded values.
+    pub fn iter(&self) -> impl Iterator<Item = f32> + 'a {
+        self.bytes
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+    }
+
+    /// Sub-view of `count` floats starting at element `start`.
+    pub fn slice(&self, start: usize, count: usize) -> LeF32s<'a> {
+        LeF32s { bytes: &self.bytes[4 * start..4 * (start + count)] }
+    }
+
+    /// Decode into `out` (must have length [`len`](LeF32s::len)).
+    pub fn copy_to(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len());
+        for (o, v) in out.iter_mut().zip(self.iter()) {
+            *o = v;
+        }
+    }
+
+    /// Accumulate into `out` (`out[i] += v[i]`) — the fusion sum, fused
+    /// with the decode so no intermediate vector exists. Bit-identical to
+    /// decoding then `axpy(1.0, v, out)`.
+    pub fn add_to(&self, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.len());
+        for (o, v) in out.iter_mut().zip(self.iter()) {
+            *o += v;
+        }
+    }
+}
+
+/// Borrowed little-endian `f64` block.
+#[derive(Debug, Clone, Copy)]
+pub struct LeF64s<'a> {
+    bytes: &'a [u8],
+}
+
+impl<'a> LeF64s<'a> {
+    /// Number of encoded doubles.
+    pub fn len(&self) -> usize {
+        self.bytes.len() / 8
+    }
+
+    /// Whether the block is empty.
+    pub fn is_empty(&self) -> bool {
+        self.bytes.is_empty()
+    }
+
+    /// Iterate the decoded values.
+    pub fn iter(&self) -> impl Iterator<Item = f64> + 'a {
+        self.bytes.chunks_exact(8).map(|c| {
+            let mut a = [0u8; 8];
+            a.copy_from_slice(c);
+            f64::from_le_bytes(a)
+        })
+    }
+}
+
+impl<'a> Cursor<'a> {
+    /// Borrow a length-prefixed `f32` block without decoding.
+    fn f32_view(&mut self) -> Result<LeF32s<'a>> {
+        let n = self.u32()? as usize;
+        Ok(LeF32s { bytes: self.bytes(4 * n)? })
+    }
+
+    /// Borrow a length-prefixed `f64` block without decoding.
+    fn f64_view(&mut self) -> Result<LeF64s<'a>> {
+        let n = self.u32()? as usize;
+        Ok(LeF64s { bytes: self.bytes(8 * n)? })
+    }
+
+    /// Error unless the whole buffer was consumed (mirrors `decode`).
+    fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Protocol(format!(
+                "trailing bytes: consumed {} of {}",
+                self.pos,
+                self.buf.len()
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// Borrowed view of a `ZNorm` reply.
+#[derive(Debug, Clone, Copy)]
+pub struct ZNormRef<'a> {
+    /// Iteration index.
+    pub t: u32,
+    /// Worker id.
+    pub worker: u32,
+    /// Per-signal squared norms.
+    pub z_norm2: LeF64s<'a>,
+}
+
+/// Parse a `ZNorm` frame without allocating.
+pub fn decode_znorm(buf: &[u8]) -> Result<ZNormRef<'_>> {
+    let mut c = Cursor { buf, pos: 0 };
+    let tag = c.u8()?;
+    if tag != TAG_ZNORM {
+        return Err(Error::Protocol(format!("expected ZNorm frame, got tag {tag}")));
+    }
+    let r = ZNormRef { t: c.u32()?, worker: c.u32()?, z_norm2: c.f64_view()? };
+    c.finish()?;
+    Ok(r)
+}
+
+/// Borrowed view of a `ColScalars` reply.
+#[derive(Debug, Clone, Copy)]
+pub struct ColScalarsRef<'a> {
+    /// Iteration index.
+    pub t: u32,
+    /// Worker id.
+    pub worker: u32,
+    /// Per-signal `‖u^p‖²`.
+    pub u_norm2: LeF64s<'a>,
+    /// Per-signal means of `η′`.
+    pub eta_prime_mean: LeF64s<'a>,
+    /// Updated estimate blocks, `B × (N/P)` column-major.
+    pub x_shard: LeF32s<'a>,
+}
+
+/// Parse a `ColScalars` frame without allocating.
+pub fn decode_col_scalars(buf: &[u8]) -> Result<ColScalarsRef<'_>> {
+    let mut c = Cursor { buf, pos: 0 };
+    let tag = c.u8()?;
+    if tag != TAG_COLSCALARS {
+        return Err(Error::Protocol(format!(
+            "expected ColScalars frame, got tag {tag}"
+        )));
+    }
+    let r = ColScalarsRef {
+        t: c.u32()?,
+        worker: c.u32()?,
+        u_norm2: c.f64_view()?,
+        eta_prime_mean: c.f64_view()?,
+        x_shard: c.f32_view()?,
+    };
+    c.finish()?;
+    Ok(r)
+}
+
+/// Borrowed view of one `FVector` payload.
+#[derive(Debug, Clone, Copy)]
+pub enum FPayloadRef<'a> {
+    /// Raw floats (also carries dequantized analytic-codec values).
+    Raw(LeF32s<'a>),
+    /// Entropy-coded symbols.
+    Coded {
+        /// Number of symbols.
+        n: u32,
+        /// Codec output bytes.
+        bytes: &'a [u8],
+    },
+    /// Zero-rate iteration.
+    Skipped,
+}
+
+impl FPayloadRef<'_> {
+    /// Wire payload bits of this payload (the paper's uplink metric;
+    /// matches [`Message::f_payload_bits`] per payload).
+    pub fn wire_bits(&self) -> f64 {
+        match self {
+            FPayloadRef::Raw(v) => 32.0 * v.len() as f64,
+            FPayloadRef::Coded { bytes, .. } => 8.0 * bytes.len() as f64,
+            FPayloadRef::Skipped => 0.0,
+        }
+    }
+}
+
+/// Parse an `FVector` frame without allocating: `f(sig, payload)` runs
+/// once per payload in signal order. Returns `(t, worker, payload_count)`
+/// after validating the batch cap and trailing bytes exactly like
+/// [`Message::decode`].
+pub fn decode_fvector<'a>(
+    buf: &'a [u8],
+    mut f: impl FnMut(usize, FPayloadRef<'a>) -> Result<()>,
+) -> Result<(u32, u32, usize)> {
+    let mut c = Cursor { buf, pos: 0 };
+    let tag = c.u8()?;
+    if tag != TAG_FVEC {
+        return Err(Error::Protocol(format!("expected FVector frame, got tag {tag}")));
+    }
+    let t = c.u32()?;
+    let worker = c.u32()?;
+    let count = c.batch_count()?;
+    for sig in 0..count {
+        let payload = match c.u8()? {
+            PAY_RAW => FPayloadRef::Raw(c.f32_view()?),
+            PAY_CODED => {
+                let n = c.u32()?;
+                let len = c.u32()? as usize;
+                FPayloadRef::Coded { n, bytes: c.bytes(len)? }
+            }
+            PAY_SKIPPED => FPayloadRef::Skipped,
+            other => {
+                return Err(Error::Protocol(format!("bad payload tag {other}")))
+            }
+        };
+        f(sig, payload)?;
+    }
+    c.finish()?;
+    Ok((t, worker, count))
 }
 
 fn push_u32(out: &mut Vec<u8>, v: u32) {
@@ -644,6 +955,176 @@ mod tests {
         enc.extend_from_slice(&0u32.to_le_bytes());
         let err = Message::decode(&enc).unwrap_err().to_string();
         assert!(err.contains("UTF-8"), "{err}");
+    }
+
+    #[test]
+    fn encode_into_reuses_buffer_and_matches_encode() {
+        // One buffer across many messages: every frame is byte-identical
+        // to the allocating `encode`, regardless of what the buffer held.
+        let msgs = vec![
+            Message::StepCmd { t: 3, coefs: vec![0.25], x: vec![1.0; 9] },
+            Message::Done,
+            Message::ColStep { t: 1, sigma_eff2: vec![0.5, 0.25], z: vec![2.0; 4] },
+            Message::ZNorm { t: 2, worker: 1, z_norm2: vec![7.0] },
+            Message::QuantCmd {
+                t: 4,
+                specs: vec![
+                    QuantSpec::Stack {
+                        name: "ecsq.range".into(),
+                        model_var: 0.3,
+                        seed: 9,
+                        params: vec![0.1, 64.0],
+                    },
+                    QuantSpec::Skip,
+                ],
+            },
+            Message::FVector {
+                t: 5,
+                worker: 2,
+                payloads: vec![
+                    FPayload::Raw(vec![1.5; 3]),
+                    FPayload::Coded { n: 4, bytes: vec![7, 8] },
+                    FPayload::Skipped,
+                ],
+            },
+        ];
+        let mut buf = vec![0xAAu8; 129]; // dirty, oversized
+        for m in msgs {
+            m.encode_into(&mut buf);
+            assert_eq!(buf, m.encode(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn frame_builders_match_message_encode() {
+        // The field-level builders (the encode-once path that never
+        // materializes a Message) produce identical frames.
+        let coefs = vec![0.25f32, -0.5];
+        let x = vec![1.0f32, -2.0, 3.0, 4.0];
+        let mut buf = Vec::new();
+        encode_step_cmd(&mut buf, 7, &coefs, &x);
+        assert_eq!(buf, Message::StepCmd { t: 7, coefs: coefs.clone(), x: x.clone() }.encode());
+        let s2 = vec![0.1f64, 0.2];
+        encode_col_step(&mut buf, 3, &s2, &x);
+        assert_eq!(
+            buf,
+            Message::ColStep { t: 3, sigma_eff2: s2.clone(), z: x.clone() }.encode()
+        );
+        let zn = vec![1.5f64, 2.5];
+        encode_znorm(&mut buf, 2, 4, &zn);
+        assert_eq!(buf, Message::ZNorm { t: 2, worker: 4, z_norm2: zn.clone() }.encode());
+        let eta = vec![0.5f64];
+        encode_col_scalars(&mut buf, 1, 0, &zn, &eta, &x);
+        assert_eq!(
+            buf,
+            Message::ColScalars {
+                t: 1,
+                worker: 0,
+                u_norm2: zn.clone(),
+                eta_prime_mean: eta,
+                x_shard: x.clone(),
+            }
+            .encode()
+        );
+        let specs = vec![
+            QuantSpec::Raw,
+            QuantSpec::Stack {
+                name: "topk.raw".into(),
+                model_var: 0.2,
+                seed: 11,
+                params: vec![64.0],
+            },
+        ];
+        encode_quant_cmd(&mut buf, 9, &specs);
+        assert_eq!(buf, Message::QuantCmd { t: 9, specs }.encode());
+        begin_fvector(&mut buf, 6, 3, 3);
+        push_raw_payload(&mut buf, &x);
+        push_coded_payload(&mut buf, 10, &[1, 2, 3]);
+        push_skipped_payload(&mut buf);
+        assert_eq!(
+            buf,
+            Message::FVector {
+                t: 6,
+                worker: 3,
+                payloads: vec![
+                    FPayload::Raw(x),
+                    FPayload::Coded { n: 10, bytes: vec![1, 2, 3] },
+                    FPayload::Skipped,
+                ],
+            }
+            .encode()
+        );
+    }
+
+    #[test]
+    fn borrowed_decoders_match_owned_decode() {
+        let zn = Message::ZNorm { t: 8, worker: 2, z_norm2: vec![1.5, 0.25, 9.0] };
+        let enc = zn.encode();
+        let view = decode_znorm(&enc).unwrap();
+        assert_eq!((view.t, view.worker), (8, 2));
+        assert_eq!(view.z_norm2.iter().collect::<Vec<_>>(), vec![1.5, 0.25, 9.0]);
+        // Wrong tag and trailing bytes rejected.
+        assert!(decode_znorm(&Message::Done.encode()).is_err());
+        let mut bad = enc.clone();
+        bad.push(0);
+        assert!(decode_znorm(&bad).is_err());
+
+        let cs = Message::ColScalars {
+            t: 4,
+            worker: 1,
+            u_norm2: vec![2.0, 3.0],
+            eta_prime_mean: vec![0.5, 0.75],
+            x_shard: vec![1.0, -1.0, 2.0, -2.0],
+        };
+        let enc = cs.encode();
+        let view = decode_col_scalars(&enc).unwrap();
+        assert_eq!((view.t, view.worker), (4, 1));
+        assert_eq!(view.u_norm2.iter().collect::<Vec<_>>(), vec![2.0, 3.0]);
+        assert_eq!(view.eta_prime_mean.iter().collect::<Vec<_>>(), vec![0.5, 0.75]);
+        let mut got = vec![0f32; 4];
+        view.x_shard.copy_to(&mut got);
+        assert_eq!(got, vec![1.0, -1.0, 2.0, -2.0]);
+
+        let fv = Message::FVector {
+            t: 6,
+            worker: 0,
+            payloads: vec![
+                FPayload::Raw(vec![1.0, 2.0]),
+                FPayload::Coded { n: 5, bytes: vec![9, 8, 7] },
+                FPayload::Skipped,
+            ],
+        };
+        let enc = fv.encode();
+        let mut seen = Vec::new();
+        let mut bits = 0.0;
+        let (t, worker, count) = decode_fvector(&enc, |sig, p| {
+            bits += p.wire_bits();
+            match p {
+                FPayloadRef::Raw(v) => {
+                    let mut sum = vec![10.0f32; v.len()];
+                    v.add_to(&mut sum);
+                    seen.push((sig, format!("raw{:?}", sum)));
+                }
+                FPayloadRef::Coded { n, bytes } => {
+                    seen.push((sig, format!("coded{n}/{bytes:?}")));
+                }
+                FPayloadRef::Skipped => seen.push((sig, "skip".into())),
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!((t, worker, count), (6, 0, 3));
+        assert_eq!(bits, fv.f_payload_bits());
+        assert_eq!(
+            seen,
+            vec![
+                (0, "raw[11.0, 12.0]".to_string()),
+                (1, "coded5/[9, 8, 7]".to_string()),
+                (2, "skip".to_string()),
+            ]
+        );
+        // Truncated payloads rejected, same as the owned decoder.
+        assert!(decode_fvector(&enc[..enc.len() - 1], |_, _| Ok(())).is_err());
     }
 
     #[test]

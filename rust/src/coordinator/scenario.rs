@@ -22,6 +22,24 @@
 //! loops collapsed into one generic
 //! [`run_scenario_worker`](crate::coordinator::worker::run_scenario_worker).
 //!
+//! # Zero-allocation rounds
+//!
+//! The steady-state round loop neither allocates nor spawns: broadcasts
+//! are encoded **once** per round into a persistent frame buffer
+//! (`begin_round` writes the wire bytes directly; every endpoint gets
+//! [`send_encoded`](Endpoint::send_encoded)), worker replies are parsed
+//! **in place** out of each endpoint's reused receive buffer with the
+//! borrowed decoders in [`message`](crate::coordinator::message)
+//! (`absorb` takes the raw frame), fusion sums land in one persistent
+//! flat `B × len` buffer, and the scenario's global computation writes
+//! the next round's state in place (`global_step` takes the flat sums;
+//! the engines' `*_into` kernels denoise straight into fusion state).
+//! Compute parallelism runs on the persistent
+//! [`Pool`](crate::runtime::pool::Pool) — no thread spawns per kernel
+//! call. What still allocates per round is O(B)-small spec design
+//! (boxed quantizer states, wire params) and codec output blocks —
+//! nothing proportional to the signal length.
+//!
 //! # Adding a third scenario
 //!
 //! A new partitioning only has to fill the trait's holes — the round
@@ -45,17 +63,19 @@
 //!     // Fresh fusion/worker state at t = 0:
 //!     fn init(batch: &Batch, cfg: &RunConfig) -> OverlapFusion { .. }
 //!     fn worker_init(shard: &OverlapShard, batch: usize) -> OverlapWorker { .. }
-//!     // Phase 1–2: the broadcast and each worker's reply:
-//!     fn begin_round(fu: &mut OverlapFusion, cfg: &RunConfig, t: usize) -> Message { .. }
-//!     fn worker_serve(.., msg: Message) -> Result<(Message, Vec<Vec<f32>>)> { .. }
-//!     fn absorb(fu: &mut OverlapFusion, .., widx: usize, msg: Message) -> Result<()> { .. }
+//!     // Phase 1–2: encode the broadcast into the reused frame, serve it
+//!     // on the worker (reply sent via `ep`, uplinks staged flat into
+//!     // `pending`), parse the reply frame on the fusion side:
+//!     fn begin_round(fu: &mut OverlapFusion, cfg: &RunConfig, t: usize, frame: &mut Vec<u8>) { .. }
+//!     fn worker_serve(.., msg: Message, pending: &mut Vec<f32>, ep: &mut Endpoint) -> Result<()> { .. }
+//!     fn absorb(fu: &mut OverlapFusion, .., widx: usize, frame: &[u8]) -> Result<()> { .. }
 //!     // Phase 3: which variance the round's stats carry into the spec,
 //!     // and the model channel every compression stack designs against:
-//!     fn stats(fu: &OverlapFusion, cfg: &RunConfig) -> Vec<RoundStat> { .. }
+//!     fn stats(fu: &OverlapFusion, cfg: &RunConfig, out: &mut Vec<RoundStat>) { .. }
 //!     fn spec_var(stat: RoundStat) -> f64 { .. }
 //!     fn channel_for_var(prior: &BernoulliGauss, p: usize, var: f64) -> (BgChannel, f64) { .. }
-//!     // Phase 5: fold the fused uplinks into the next state:
-//!     fn global_step(..) -> Result<()> { .. }
+//!     // Phase 5: fold the fused uplinks (flat B × len) into the next state:
+//!     fn global_step(.., sums: &[f32], ..) -> Result<()> { .. }
 //!     fn predicted_sigma(..) -> f64 { .. }
 //!     fn uplink_len(cfg: &RunConfig) -> usize { .. }
 //!     fn x(fu: &OverlapFusion, sig: usize) -> &[f32] { .. }
@@ -78,7 +98,7 @@ use std::time::Instant;
 use crate::alloc::schedule::{Directive, RateAllocator};
 use crate::compress::{design_seed, BlockCtx, Compressor, CompressionStack, DesignCtx, CLIP_SDS};
 use crate::config::RunConfig;
-use crate::coordinator::message::{FPayload, Message, QuantSpec};
+use crate::coordinator::message::{self, FPayloadRef, Message, QuantSpec};
 use crate::coordinator::transport::Endpoint;
 use crate::coordinator::worker::{compressor_for_spec, WorkerParams};
 use crate::engine::{ColumnWorkerData, ComputeEngine, RowBatchData};
@@ -125,21 +145,26 @@ pub trait Scenario: Send + Sync + 'static {
     /// accounting.
     fn uplink_len(cfg: &RunConfig) -> usize;
 
-    /// Phase 1: reset the round accumulators and build the broadcast.
-    fn begin_round(fu: &mut Self::Fusion, cfg: &RunConfig, t: usize) -> Message;
+    /// Phase 1: reset the round accumulators and encode the broadcast
+    /// directly into `frame` (cleared by the `encode_*` builder) — the
+    /// round state is never cloned into an owned [`Message`], and the
+    /// frame is sent to every endpoint as-is (encode-once).
+    fn begin_round(fu: &mut Self::Fusion, cfg: &RunConfig, t: usize, frame: &mut Vec<u8>);
 
-    /// Phase 2: absorb worker `widx`'s pre-uplink reply (must validate
-    /// the iteration index, worker id, and batch sizes).
+    /// Phase 2: absorb worker `widx`'s pre-uplink reply, parsed in place
+    /// from the endpoint's receive buffer with the borrowed decoders
+    /// (must validate the iteration index, worker id, and batch sizes).
     fn absorb(
         fu: &mut Self::Fusion,
         cfg: &RunConfig,
         t: usize,
         widx: usize,
-        msg: Message,
+        frame: &[u8],
     ) -> Result<()>;
 
-    /// Phase 3a: per-signal round statistics, after all replies.
-    fn stats(fu: &Self::Fusion, cfg: &RunConfig) -> Vec<RoundStat>;
+    /// Phase 3a: per-signal round statistics, after all replies, written
+    /// into the reused `out` (cleared first).
+    fn stats(fu: &Self::Fusion, cfg: &RunConfig, out: &mut Vec<RoundStat>);
 
     /// Phase 3b, hole 1: the variance a round's spec carries (σ̂²_{t,D}
     /// in row mode, the empirical message variance v̂ in column mode).
@@ -156,14 +181,15 @@ pub trait Scenario: Send + Sync + 'static {
         var: f64,
     ) -> (BgChannel, f64);
 
-    /// Phase 5: fold the fused uplink sums (one per signal) into the
-    /// next round's state.
+    /// Phase 5: fold the fused uplink sums (flat `B × len` column-major,
+    /// signal `j`'s sum at `sums[j·len..(j+1)·len]`) into the next
+    /// round's state — in place, via the engine's `*_into` kernels.
     fn global_step(
         fu: &mut Self::Fusion,
         cfg: &RunConfig,
         se: &StateEvolution,
         engine: &dyn ComputeEngine,
-        sums: Vec<Vec<f32>>,
+        sums: &[f32],
         stats: &[RoundStat],
         sigma_q2: &[f64],
     ) -> Result<()>;
@@ -181,16 +207,21 @@ pub trait Scenario: Send + Sync + 'static {
     /// Fresh worker state at `t = 0` for a `batch`-signal session.
     fn worker_init(shard: &Self::Shard, batch: usize) -> Self::WorkerState;
 
-    /// Serve the round's broadcast on the worker: update local state and
-    /// return the pre-uplink reply plus the pending per-signal uplink
-    /// vectors (quantized and shipped when the `QuantCmd` arrives).
+    /// Serve the round's broadcast on the worker: update local state,
+    /// stage the pending per-signal uplink vectors **flat** into
+    /// `pending` (`B × len` column-major, reused every round; quantized
+    /// and shipped when the `QuantCmd` arrives), and send the pre-uplink
+    /// reply directly on `ep` via
+    /// [`send_frame`](Endpoint::send_frame) — no reply staging clones.
     fn worker_serve(
         params: &WorkerParams,
         shard: &Self::Shard,
         ws: &mut Self::WorkerState,
         engine: &dyn ComputeEngine,
         msg: Message,
-    ) -> Result<(Message, Vec<Vec<f32>>)>;
+        pending: &mut Vec<f32>,
+        ep: &mut Endpoint,
+    ) -> Result<()>;
 }
 
 /// Split a flat column-major batch vector into per-signal vectors.
@@ -247,7 +278,7 @@ pub fn design_spec<S: Scenario>(
             crate::coordinator::message::MAX_WIRE_SPEC_PARAMS
         )));
     }
-    Ok(QuantSpec::Stack { name: stack.name().to_string(), model_var, seed, params })
+    Ok(QuantSpec::Stack { name: stack.name_arc(), model_var, seed, params })
 }
 
 /// Per-worker σ_Q² implied by a spec. `Raw` is lossless; a `Skip` round
@@ -274,18 +305,23 @@ pub fn sigma_q2_for_spec<S: Scenario>(
     }
 }
 
-/// Decode one signal's payload and fuse it into `sum` (shared by both
-/// scenarios — they differ only in the compressor that gets passed in).
+/// Fuse one signal's payload into `sum`, straight from the borrowed wire
+/// view (shared by both scenarios — they differ only in the compressor
+/// that gets passed in). Raw payloads accumulate directly out of the
+/// receive buffer; coded payloads decode into the persistent
+/// `decode_scratch` (every dequantizer overwrites the full block, so
+/// reuse is safe).
 fn fuse_payload(
-    payload: FPayload,
+    payload: FPayloadRef<'_>,
     comp: &Option<Compressor>,
     worker: u32,
     len: usize,
     sum: &mut [f32],
+    decode_scratch: &mut Vec<f32>,
     wire_bits: &mut f64,
 ) -> Result<()> {
     match payload {
-        FPayload::Raw(v) => {
+        FPayloadRef::Raw(v) => {
             if v.len() != len {
                 return Err(Error::Protocol(format!(
                     "fusion: raw payload length {} != {len}",
@@ -300,9 +336,9 @@ fn fuse_payload(
                         - 32.0 * len as f64;
                 }
             }
-            crate::linalg::axpy(1.0, &v, sum);
+            v.add_to(sum);
         }
-        FPayload::Coded { n, bytes } => {
+        FPayloadRef::Coded { n, bytes } => {
             let c = comp.as_ref().ok_or_else(|| {
                 Error::Protocol("coded payload without a stack spec".into())
             })?;
@@ -311,13 +347,38 @@ fn fuse_payload(
                     "fusion: coded payload length {n} != {len}"
                 )));
             }
-            let mut v = vec![0f32; len];
-            c.decode(&BlockCtx { worker }, &bytes, &mut v)?;
-            crate::linalg::axpy(1.0, &v, sum);
+            decode_scratch.resize(len, 0.0);
+            c.decode(&BlockCtx { worker }, bytes, decode_scratch)?;
+            crate::linalg::axpy(1.0, decode_scratch, sum);
         }
-        FPayload::Skipped => {}
+        FPayloadRef::Skipped => {}
     }
     Ok(())
+}
+
+/// Per-session round scratch: every buffer the round loop needs, sized
+/// on the first round and reused (cleared or overwritten in place) on
+/// every later one, so steady-state rounds allocate nothing proportional
+/// to the problem size.
+#[derive(Default)]
+struct RoundScratch {
+    /// Broadcast/quant frame — each round command is encoded exactly
+    /// once here and sent pre-encoded to every endpoint.
+    frame: Vec<u8>,
+    /// Per-signal round statistics.
+    stats: Vec<RoundStat>,
+    /// Per-signal rate directives.
+    directives: Vec<Directive>,
+    /// Per-signal quantizer specs.
+    specs: Vec<QuantSpec>,
+    /// Per-signal decoders (rebuilt each round from the specs).
+    comps: Vec<Option<Compressor>>,
+    /// Per-signal σ_Q².
+    sigma_q2s: Vec<f64>,
+    /// Fusion sums, flat `B × len` column-major.
+    sums: Vec<f32>,
+    /// Coded-payload decode scratch (`len`).
+    decode: Vec<f32>,
 }
 
 /// The generic, resumable fusion-side protocol driver: one [`step`]
@@ -329,12 +390,18 @@ pub struct ProtocolCore<S: Scenario> {
     fu: S::Fusion,
     b: usize,
     t: usize,
+    scratch: RoundScratch,
 }
 
 impl<S: Scenario> ProtocolCore<S> {
     /// Fresh state at `t = 0`.
     pub fn new(batch: &Batch, cfg: &RunConfig) -> Self {
-        ProtocolCore { fu: S::init(batch, cfg), b: batch.batch(), t: 0 }
+        ProtocolCore {
+            fu: S::init(batch, cfg),
+            b: batch.batch(),
+            t: 0,
+            scratch: RoundScratch::default(),
+        }
     }
 
     /// Iterations completed so far.
@@ -380,36 +447,43 @@ impl<S: Scenario> ProtocolCore<S> {
         let t0 = Instant::now();
         let stack = crate::compress::registry::get(&cfg.compressor)?;
         let len = S::uplink_len(cfg);
-        // 1. Broadcast the round command.
-        let cmd = S::begin_round(&mut self.fu, cfg, t);
+        // Split-borrow the persistent scratch so fusion state and the
+        // round buffers can be used independently below.
+        let RoundScratch { frame, stats, directives, specs, comps, sigma_q2s, sums, decode } =
+            &mut self.scratch;
+        // 1. Encode the round command once, broadcast the same frame to
+        //    every endpoint.
+        S::begin_round(&mut self.fu, cfg, t, frame);
         for ep in endpoints.iter_mut() {
-            ep.send(&cmd)?;
+            ep.send_encoded(frame)?;
         }
-        // 2. Absorb every worker's pre-uplink reply (worker-id order).
+        // 2. Absorb every worker's pre-uplink reply (worker-id order),
+        //    parsed in place from each endpoint's receive buffer.
         for (widx, ep) in endpoints.iter_mut().enumerate() {
-            let msg = ep.recv()?;
-            S::absorb(&mut self.fu, cfg, t, widx, msg)?;
+            let reply = ep.recv_frame()?;
+            S::absorb(&mut self.fu, cfg, t, widx, reply)?;
         }
         // 3. Per-signal stats → directives → stack designs → one batched
-        //    quantizer round trip covering the whole batch.
-        let stats = S::stats(&self.fu, cfg);
+        //    quantizer round trip covering the whole batch (the QuantCmd
+        //    is likewise encoded once).
+        S::stats(&self.fu, cfg, stats);
         debug_assert_eq!(stats.len(), b);
-        let mut directives = Vec::with_capacity(b);
-        let mut specs = Vec::with_capacity(b);
+        directives.clear();
+        specs.clear();
         for (sig, stat) in stats.iter().enumerate() {
             let d = controller.directive(t, stat.sigma_d2_hat, se, p, cfg.iters, cache);
             specs.push(design_spec::<S>(&stack, &d, cfg, t, sig, *stat, len)?);
             directives.push(d);
         }
-        let quant = Message::QuantCmd { t: t as u32, specs: specs.clone() };
+        message::encode_quant_cmd(frame, t as u32, specs);
         for ep in endpoints.iter_mut() {
-            ep.send(&quant)?;
+            ep.send_encoded(frame)?;
         }
         // The decoders matching the workers' encoders, one per signal —
         // assembled from the spec exactly the way the workers do it.
-        let mut comps = Vec::with_capacity(b);
-        let mut sigma_q2s = Vec::with_capacity(b);
-        for (spec, stat) in specs.iter().zip(&stats) {
+        comps.clear();
+        sigma_q2s.clear();
+        for (spec, stat) in specs.iter().zip(stats.iter()) {
             let comp = compressor_for_spec::<S>(spec, &cfg.prior, p, len)?;
             sigma_q2s.push(sigma_q2_for_spec::<S>(
                 spec,
@@ -420,48 +494,47 @@ impl<S: Scenario> ProtocolCore<S> {
             ));
             comps.push(comp);
         }
-        // 4. Collect and fuse the batched uplinks.
-        let mut sums = vec![vec![0f32; len]; b];
+        // 4. Collect and fuse the batched uplinks, accumulating each
+        //    payload straight out of the receive buffer into the
+        //    persistent flat sums.
+        sums.resize(b * len, 0.0);
+        sums.iter_mut().for_each(|s| *s = 0.0);
         let mut wire_bits = 0.0f64;
         for (widx, ep) in endpoints.iter_mut().enumerate() {
-            let msg = ep.recv()?;
-            wire_bits += msg.f_payload_bits();
-            match msg {
-                Message::FVector { t: rt, worker, payloads } => {
-                    if rt as usize != t || worker as usize != widx {
-                        return Err(Error::Protocol(format!(
-                            "fusion: bad FVector (t={rt}, worker={worker}) expected \
-                             (t={t}, worker={widx})"
-                        )));
-                    }
-                    if payloads.len() != b {
-                        return Err(Error::Protocol(format!(
-                            "fusion: {} payloads from worker {widx}, batch is {b}",
-                            payloads.len()
-                        )));
-                    }
-                    for (sig, payload) in payloads.into_iter().enumerate() {
-                        fuse_payload(
-                            payload,
-                            &comps[sig],
-                            widx as u32,
-                            len,
-                            &mut sums[sig],
-                            &mut wire_bits,
-                        )?;
-                    }
-                }
-                other => {
+            let reply = ep.recv_frame()?;
+            let (rt, worker, count) = message::decode_fvector(reply, |sig, payload| {
+                if sig >= b {
                     return Err(Error::Protocol(format!(
-                        "fusion: expected FVector, got {other:?}"
-                    )))
+                        "fusion: more than {b} payloads from worker {widx}"
+                    )));
                 }
+                wire_bits += payload.wire_bits();
+                fuse_payload(
+                    payload,
+                    &comps[sig],
+                    widx as u32,
+                    len,
+                    &mut sums[sig * len..(sig + 1) * len],
+                    decode,
+                    &mut wire_bits,
+                )
+            })?;
+            if rt as usize != t || worker as usize != widx {
+                return Err(Error::Protocol(format!(
+                    "fusion: bad FVector (t={rt}, worker={worker}) expected \
+                     (t={t}, worker={widx})"
+                )));
+            }
+            if count != b {
+                return Err(Error::Protocol(format!(
+                    "fusion: {count} payloads from worker {widx}, batch is {b}"
+                )));
             }
         }
         // Allocation accounting (analytic rate, batch mean).
         let rate_alloc = directives
             .iter()
-            .zip(&comps)
+            .zip(comps.iter())
             .map(|(d, c)| match d {
                 Directive::Raw => 32.0,
                 Directive::Skip => 0.0,
@@ -472,8 +545,9 @@ impl<S: Scenario> ProtocolCore<S> {
             })
             .sum::<f64>()
             / b as f64;
-        // 5. Scenario-specific global computation over all signals.
-        S::global_step(&mut self.fu, cfg, se, engine, sums, &stats, &sigma_q2s)?;
+        // 5. Scenario-specific global computation over all signals, in
+        //    place on the fusion state.
+        S::global_step(&mut self.fu, cfg, se, engine, sums, stats, sigma_q2s)?;
         self.t = t + 1;
         // 6. Record.
         let sdr_db = match eval {
@@ -484,7 +558,7 @@ impl<S: Scenario> ProtocolCore<S> {
         };
         let sdr_pred_db = stats
             .iter()
-            .zip(&sigma_q2s)
+            .zip(sigma_q2s.iter())
             .map(|(stat, q2)| se.sdr_db(S::predicted_sigma(se, *stat, p as f64 * q2)))
             .sum::<f64>()
             / b as f64;
@@ -500,10 +574,12 @@ impl<S: Scenario> ProtocolCore<S> {
         })
     }
 
-    /// Release the workers: broadcast `Done` on every endpoint.
+    /// Release the workers: broadcast `Done` on every endpoint (encoded
+    /// once, like every other broadcast).
     pub fn finish(endpoints: &mut [Endpoint]) -> Result<()> {
+        let done = Message::Done.encode();
         for ep in endpoints.iter_mut() {
-            ep.send(&Message::Done)?;
+            ep.send_encoded(&done)?;
         }
         Ok(())
     }
@@ -533,11 +609,17 @@ pub struct RowFusion {
     znorm: Vec<f64>,
 }
 
-/// Worker state of the row scenario: the local residuals.
+/// Worker state of the row scenario: the local residuals plus the
+/// round-scratch buffers the engine's `lc_step_batch_into` writes into
+/// (sized once, reused every round).
 #[derive(Debug, Clone)]
 pub struct RowWorker {
     /// Local residuals, `B × (M/P)` column-major.
     z_prev: Vec<f32>,
+    /// Next-round residual scratch (swapped with `z_prev` each round).
+    z_next: Vec<f32>,
+    /// Per-signal `‖z‖²` reply scratch.
+    z_norm2: Vec<f64>,
 }
 
 impl Scenario for Row {
@@ -566,9 +648,12 @@ impl Scenario for Row {
         cfg.n
     }
 
-    fn begin_round(fu: &mut RowFusion, _cfg: &RunConfig, t: usize) -> Message {
+    fn begin_round(fu: &mut RowFusion, _cfg: &RunConfig, t: usize, frame: &mut Vec<u8>) {
         fu.znorm.iter_mut().for_each(|v| *v = 0.0);
-        Message::StepCmd { t: t as u32, coefs: fu.coefs.clone(), x: fu.x.clone() }
+        // Encode the broadcast straight from the fusion state — the old
+        // per-endpoint re-encode cloned `coefs` and the `B × N` estimate
+        // every round.
+        message::encode_step_cmd(frame, t as u32, &fu.coefs, &fu.x);
     }
 
     fn absorb(
@@ -576,43 +661,37 @@ impl Scenario for Row {
         _cfg: &RunConfig,
         t: usize,
         widx: usize,
-        msg: Message,
+        frame: &[u8],
     ) -> Result<()> {
-        match msg {
-            Message::ZNorm { t: rt, worker, z_norm2 } => {
-                if rt as usize != t || worker as usize != widx {
-                    return Err(Error::Protocol(format!(
-                        "fusion: bad ZNorm (t={rt}, worker={worker}) expected \
-                         (t={t}, worker={widx})"
-                    )));
-                }
-                if z_norm2.len() != fu.b {
-                    return Err(Error::Protocol(format!(
-                        "fusion: {} z-norms from worker {widx}, batch is {}",
-                        z_norm2.len(),
-                        fu.b
-                    )));
-                }
-                for (acc, v) in fu.znorm.iter_mut().zip(&z_norm2) {
-                    *acc += v;
-                }
-                Ok(())
-            }
-            other => {
-                Err(Error::Protocol(format!("fusion: expected ZNorm, got {other:?}")))
-            }
+        let reply = message::decode_znorm(frame).map_err(|e| {
+            Error::Protocol(format!("fusion: expected ZNorm from worker {widx}: {e}"))
+        })?;
+        if reply.t as usize != t || reply.worker as usize != widx {
+            return Err(Error::Protocol(format!(
+                "fusion: bad ZNorm (t={}, worker={}) expected (t={t}, worker={widx})",
+                reply.t, reply.worker
+            )));
         }
+        if reply.z_norm2.len() != fu.b {
+            return Err(Error::Protocol(format!(
+                "fusion: {} z-norms from worker {widx}, batch is {}",
+                reply.z_norm2.len(),
+                fu.b
+            )));
+        }
+        for (acc, v) in fu.znorm.iter_mut().zip(reply.z_norm2.iter()) {
+            *acc += v;
+        }
+        Ok(())
     }
 
-    fn stats(fu: &RowFusion, cfg: &RunConfig) -> Vec<RoundStat> {
+    fn stats(fu: &RowFusion, cfg: &RunConfig, out: &mut Vec<RoundStat>) {
         let m = cfg.m as f64;
-        fu.znorm
-            .iter()
-            .map(|&zn| {
-                let s = zn / m;
-                RoundStat { sigma_d2_hat: s, msg_var: s }
-            })
-            .collect()
+        out.clear();
+        out.extend(fu.znorm.iter().map(|&zn| {
+            let s = zn / m;
+            RoundStat { sigma_d2_hat: s, msg_var: s }
+        }));
     }
 
     fn spec_var(stat: RoundStat) -> f64 {
@@ -633,17 +712,21 @@ impl Scenario for Row {
         cfg: &RunConfig,
         se: &StateEvolution,
         engine: &dyn ComputeEngine,
-        sums: Vec<Vec<f32>>,
+        sums: &[f32],
         stats: &[RoundStat],
         sigma_q2: &[f64],
     ) -> Result<()> {
         let n = fu.n;
-        for (j, f_sum) in sums.iter().enumerate() {
-            // Denoise at the quantization-aware effective noise level.
+        for j in 0..fu.b {
+            // Denoise at the quantization-aware effective noise level,
+            // straight into the fusion state (no intermediate estimate).
             let sigma_eff2 = stats[j].sigma_d2_hat + cfg.p as f64 * sigma_q2[j];
-            let gc = engine.gc_step(f_sum, sigma_eff2)?;
-            fu.x[j * n..(j + 1) * n].copy_from_slice(&gc.x_next);
-            fu.coefs[j] = (gc.eta_prime_mean / se.kappa) as f32;
+            let eta = engine.gc_step_into(
+                &sums[j * n..(j + 1) * n],
+                sigma_eff2,
+                &mut fu.x[j * n..(j + 1) * n],
+            )?;
+            fu.coefs[j] = (eta / se.kappa) as f32;
         }
         Ok(())
     }
@@ -661,7 +744,11 @@ impl Scenario for Row {
     }
 
     fn worker_init(shard: &RowBatchData, batch: usize) -> RowWorker {
-        RowWorker { z_prev: vec![0f32; batch * shard.a.rows()] }
+        RowWorker {
+            z_prev: vec![0f32; batch * shard.a.rows()],
+            z_next: Vec::new(),
+            z_norm2: Vec::new(),
+        }
     }
 
     fn worker_serve(
@@ -670,7 +757,9 @@ impl Scenario for Row {
         ws: &mut RowWorker,
         engine: &dyn ComputeEngine,
         msg: Message,
-    ) -> Result<(Message, Vec<Vec<f32>>)> {
+        pending: &mut Vec<f32>,
+        ep: &mut Endpoint,
+    ) -> Result<()> {
         match msg {
             Message::StepCmd { t, coefs, x } => {
                 let b = params.batch;
@@ -684,17 +773,24 @@ impl Scenario for Row {
                         x.len()
                     )));
                 }
-                let out = engine.lc_step_batch(
+                // The pending uplinks (f) land flat in the shared staging
+                // buffer; residuals swap through the reused scratch.
+                engine.lc_step_batch_into(
                     shard,
                     &x,
                     &ws.z_prev,
                     &coefs,
                     params.p_workers,
+                    &mut ws.z_next,
+                    pending,
+                    &mut ws.z_norm2,
                 )?;
-                ws.z_prev = out.z;
-                let reply =
-                    Message::ZNorm { t, worker: params.id, z_norm2: out.z_norm2 };
-                Ok((reply, split_batch_vec(out.f, b)))
+                std::mem::swap(&mut ws.z_prev, &mut ws.z_next);
+                let (id, z_norm2) = (params.id, &ws.z_norm2);
+                ep.send_frame(|buf| {
+                    message::encode_znorm(buf, t, id, z_norm2);
+                    Ok(())
+                })
             }
             other => Err(Error::Protocol(format!(
                 "worker {}: unexpected message {other:?}",
@@ -735,11 +831,21 @@ pub struct ColumnFusion {
     deriv: Vec<f64>,
 }
 
-/// Worker state of the column scenario: the local estimate blocks.
+/// Worker state of the column scenario: the local estimate blocks plus
+/// the round-scratch buffers `col_lc_step_batch_into` writes into (sized
+/// once, reused every round).
 #[derive(Debug, Clone)]
 pub struct ColumnWorker {
     /// Local estimate blocks, `B × (N/P)` column-major.
     x: Vec<f32>,
+    /// Next-round estimate scratch (swapped with `x` each round).
+    x_next: Vec<f32>,
+    /// Per-signal `‖u‖²` reply scratch.
+    u_norm2: Vec<f64>,
+    /// Per-signal η′-mean reply scratch.
+    eta: Vec<f64>,
+    /// Pseudo-data scratch for the engine (`B × (N/P)`).
+    f_scratch: Vec<f32>,
 }
 
 impl Scenario for Column {
@@ -779,7 +885,7 @@ impl Scenario for Column {
         cfg.m
     }
 
-    fn begin_round(fu: &mut ColumnFusion, _cfg: &RunConfig, t: usize) -> Message {
+    fn begin_round(fu: &mut ColumnFusion, _cfg: &RunConfig, t: usize, frame: &mut Vec<u8>) {
         let m = fu.m;
         for j in 0..fu.b {
             fu.sigma_d2[j] =
@@ -789,12 +895,9 @@ impl Scenario for Column {
         fu.deriv.iter_mut().for_each(|v| *v = 0.0);
         // Broadcast the residuals + the denoisers' effective noise levels
         // (the residual variance already carries the quantization noise of
-        // previous iterations — see `StateEvolution::column_residual_step`).
-        Message::ColStep {
-            t: t as u32,
-            sigma_eff2: fu.sigma_d2.clone(),
-            z: fu.z.clone(),
-        }
+        // previous iterations — see `StateEvolution::column_residual_step`),
+        // encoded straight from the fusion state (no clones).
+        message::encode_col_step(frame, t as u32, &fu.sigma_d2, &fu.z);
     }
 
     fn absorb(
@@ -802,57 +905,63 @@ impl Scenario for Column {
         cfg: &RunConfig,
         t: usize,
         widx: usize,
-        msg: Message,
+        frame: &[u8],
     ) -> Result<()> {
         let np = cfg.n / cfg.p;
-        match msg {
-            Message::ColScalars { t: rt, worker, u_norm2, eta_prime_mean, x_shard } => {
-                if rt as usize != t || worker as usize != widx {
-                    return Err(Error::Protocol(format!(
-                        "fusion: bad ColScalars (t={rt}, worker={worker}) expected \
-                         (t={t}, worker={widx})"
-                    )));
-                }
-                if u_norm2.len() != fu.b
-                    || eta_prime_mean.len() != fu.b
-                    || x_shard.len() != fu.b * np
-                {
-                    return Err(Error::Protocol(format!(
-                        "fusion: ColScalars batch sizes ({}, {}, {}) from worker \
-                         {widx} do not match batch {} × N/P {np}",
-                        u_norm2.len(),
-                        eta_prime_mean.len(),
-                        x_shard.len(),
-                        fu.b
-                    )));
-                }
-                for j in 0..fu.b {
-                    fu.unorm[j] += u_norm2[j];
-                    fu.deriv[j] += eta_prime_mean[j];
-                    fu.x[j * fu.n + widx * np..j * fu.n + (widx + 1) * np]
-                        .copy_from_slice(&x_shard[j * np..(j + 1) * np]);
-                }
-                Ok(())
-            }
-            other => Err(Error::Protocol(format!(
-                "fusion: expected ColScalars, got {other:?}"
-            ))),
+        let reply = message::decode_col_scalars(frame).map_err(|e| {
+            Error::Protocol(format!(
+                "fusion: expected ColScalars from worker {widx}: {e}"
+            ))
+        })?;
+        if reply.t as usize != t || reply.worker as usize != widx {
+            return Err(Error::Protocol(format!(
+                "fusion: bad ColScalars (t={}, worker={}) expected \
+                 (t={t}, worker={widx})",
+                reply.t, reply.worker
+            )));
         }
+        if reply.u_norm2.len() != fu.b
+            || reply.eta_prime_mean.len() != fu.b
+            || reply.x_shard.len() != fu.b * np
+        {
+            return Err(Error::Protocol(format!(
+                "fusion: ColScalars batch sizes ({}, {}, {}) from worker \
+                 {widx} do not match batch {} × N/P {np}",
+                reply.u_norm2.len(),
+                reply.eta_prime_mean.len(),
+                reply.x_shard.len(),
+                fu.b
+            )));
+        }
+        for (j, (un, eta)) in
+            reply.u_norm2.iter().zip(reply.eta_prime_mean.iter()).enumerate()
+        {
+            fu.unorm[j] += un;
+            fu.deriv[j] += eta;
+        }
+        // Copy the eval shards straight out of the wire view into the
+        // assembled estimates.
+        for j in 0..fu.b {
+            reply
+                .x_shard
+                .slice(j * np, np)
+                .copy_to(&mut fu.x[j * fu.n + widx * np..j * fu.n + (widx + 1) * np]);
+        }
+        Ok(())
     }
 
-    fn stats(fu: &ColumnFusion, cfg: &RunConfig) -> Vec<RoundStat> {
+    fn stats(fu: &ColumnFusion, cfg: &RunConfig, out: &mut Vec<RoundStat>) {
         // Empirical message variance v̂ = Σ‖u^p‖²/(P·M) — the quantizer's
         // model channel (the same CLT-Gaussian for every worker). The
         // directive still resolves on the residual variance, the SE state
         // variable the allocators understand; see the PR 2 notes on this
         // deliberate approximation in `config::Partitioning::Column`.
         let pm = (cfg.p * cfg.m) as f64;
-        (0..fu.b)
-            .map(|j| RoundStat {
-                sigma_d2_hat: fu.sigma_d2[j],
-                msg_var: fu.unorm[j] / pm,
-            })
-            .collect()
+        out.clear();
+        out.extend((0..fu.b).map(|j| RoundStat {
+            sigma_d2_hat: fu.sigma_d2[j],
+            msg_var: fu.unorm[j] / pm,
+        }));
     }
 
     fn spec_var(stat: RoundStat) -> f64 {
@@ -874,16 +983,17 @@ impl Scenario for Column {
         cfg: &RunConfig,
         se: &StateEvolution,
         _engine: &dyn ComputeEngine,
-        sums: Vec<Vec<f32>>,
+        sums: &[f32],
         _stats: &[RoundStat],
         _sigma_q2: &[f64],
     ) -> Result<()> {
         // Onsager-corrected residual update with the aggregated η′ mean
         // (equal-size blocks ⇒ the mean of per-block means is the global
-        // mean): z_{t+1} = y − Σ û^p + coef·z_t, per signal.
+        // mean): z_{t+1} = y − Σ û^p + coef·z_t, per signal, in place.
         let m = fu.m;
-        for (j, u_sum) in sums.iter().enumerate() {
+        for j in 0..fu.b {
             let coef = ((fu.deriv[j] / cfg.p as f64) / se.kappa) as f32;
+            let u_sum = &sums[j * m..(j + 1) * m];
             for i in 0..m {
                 let k = j * m + i;
                 fu.z[k] = fu.y[k] - u_sum[i] + coef * fu.z[k];
@@ -908,7 +1018,13 @@ impl Scenario for Column {
     }
 
     fn worker_init(shard: &ColumnWorkerData, batch: usize) -> ColumnWorker {
-        ColumnWorker { x: vec![0f32; batch * shard.a.cols()] }
+        ColumnWorker {
+            x: vec![0f32; batch * shard.a.cols()],
+            x_next: Vec::new(),
+            u_norm2: Vec::new(),
+            eta: Vec::new(),
+            f_scratch: Vec::new(),
+        }
     }
 
     fn worker_serve(
@@ -917,7 +1033,9 @@ impl Scenario for Column {
         ws: &mut ColumnWorker,
         engine: &dyn ComputeEngine,
         msg: Message,
-    ) -> Result<(Message, Vec<Vec<f32>>)> {
+        pending: &mut Vec<f32>,
+        ep: &mut Endpoint,
+    ) -> Result<()> {
         match msg {
             Message::ColStep { t, sigma_eff2, z } => {
                 let b = params.batch;
@@ -931,16 +1049,29 @@ impl Scenario for Column {
                         z.len()
                     )));
                 }
-                let out = engine.col_lc_step_batch(shard, b, &ws.x, &z, &sigma_eff2)?;
-                ws.x = out.x_next;
-                let reply = Message::ColScalars {
-                    t,
-                    worker: params.id,
-                    u_norm2: out.u_norm2,
-                    eta_prime_mean: out.eta_prime_mean,
-                    x_shard: ws.x.clone(),
-                };
-                Ok((reply, split_batch_vec(out.u, b)))
+                // The pending uplinks (u) land flat in the shared staging
+                // buffer; estimates swap through the reused scratch, and
+                // the reply encodes straight from the worker state — the
+                // old path cloned the `B × (N/P)` shard every round.
+                engine.col_lc_step_batch_into(
+                    shard,
+                    b,
+                    &ws.x,
+                    &z,
+                    &sigma_eff2,
+                    &mut ws.x_next,
+                    pending,
+                    &mut ws.u_norm2,
+                    &mut ws.eta,
+                    &mut ws.f_scratch,
+                )?;
+                std::mem::swap(&mut ws.x, &mut ws.x_next);
+                let (id, u_norm2, eta, x_shard) =
+                    (params.id, &ws.u_norm2, &ws.eta, &ws.x);
+                ep.send_frame(|buf| {
+                    message::encode_col_scalars(buf, t, id, u_norm2, eta, x_shard);
+                    Ok(())
+                })
             }
             other => Err(Error::Protocol(format!(
                 "worker {}: unexpected message {other:?}",

@@ -23,7 +23,7 @@
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::message::{Message, PROTOCOL_VERSION};
@@ -31,11 +31,45 @@ use crate::error::{Error, Result};
 use crate::metrics::ByteMeter;
 
 /// A reliable, ordered byte-frame channel.
+///
+/// Both implementations are allocation-free in steady state: the TCP
+/// side reads frames into the caller's reused buffer, and the in-process
+/// side circulates frame buffers through a shared [`FramePool`] (a sent
+/// buffer comes back to the sender's side after the receiver swaps it
+/// out).
 pub trait Channel: Send {
     /// Send one frame.
     fn send_bytes(&mut self, buf: &[u8]) -> Result<()>;
-    /// Receive one frame (blocking).
-    fn recv_bytes(&mut self) -> Result<Vec<u8>>;
+    /// Receive one frame (blocking) into `buf`, replacing its contents.
+    fn recv_bytes_into(&mut self, buf: &mut Vec<u8>) -> Result<()>;
+}
+
+/// A small free-list of frame buffers shared by both directions of an
+/// in-process link, so steady-state rounds recycle a fixed set of
+/// allocations instead of `to_vec`-ing every frame.
+struct FramePool {
+    free: Mutex<Vec<Vec<u8>>>,
+}
+
+/// Bound on pooled buffers per link (2 directions × a frame in flight
+/// plus the one being swapped out; beyond that we let extras drop).
+const FRAME_POOL_CAP: usize = 8;
+
+impl FramePool {
+    fn new() -> Arc<FramePool> {
+        Arc::new(FramePool { free: Mutex::new(Vec::new()) })
+    }
+
+    fn get(&self) -> Vec<u8> {
+        self.free.lock().expect("frame pool poisoned").pop().unwrap_or_default()
+    }
+
+    fn put(&self, buf: Vec<u8>) {
+        let mut free = self.free.lock().expect("frame pool poisoned");
+        if free.len() < FRAME_POOL_CAP {
+            free.push(buf);
+        }
+    }
 }
 
 /// Which side of the link this endpoint is.
@@ -47,32 +81,72 @@ pub enum Side {
     Worker,
 }
 
-/// One side of a duplex link, with metering.
+/// One side of a duplex link, with metering. Owns a reused send and
+/// receive frame buffer, so steady-state protocol rounds move frames with
+/// zero per-message allocation on this layer.
 pub struct Endpoint {
     chan: Box<dyn Channel>,
     meter: Arc<ByteMeter>,
     side: Side,
+    send_buf: Vec<u8>,
+    recv_buf: Vec<u8>,
 }
 
 impl Endpoint {
     /// Wrap a channel.
     pub fn new(chan: Box<dyn Channel>, meter: Arc<ByteMeter>, side: Side) -> Self {
-        Endpoint { chan, meter, side }
+        Endpoint { chan, meter, side, send_buf: Vec::new(), recv_buf: Vec::new() }
     }
 
-    /// Send a message (metered).
-    pub fn send(&mut self, msg: &Message) -> Result<()> {
-        let buf = msg.encode();
+    fn meter_send(&self, bytes: usize) {
         match self.side {
-            Side::Worker => self.meter.add_uplink_bits(8 * buf.len() as u64),
-            Side::Fusion => self.meter.add_downlink_bits(8 * buf.len() as u64),
+            Side::Worker => self.meter.add_uplink_bits(8 * bytes as u64),
+            Side::Fusion => self.meter.add_downlink_bits(8 * bytes as u64),
         }
-        self.chan.send_bytes(&buf)
     }
 
-    /// Receive a message (blocking).
+    /// Send a message (metered); encodes into the endpoint's reused
+    /// frame buffer.
+    pub fn send(&mut self, msg: &Message) -> Result<()> {
+        msg.encode_into(&mut self.send_buf);
+        self.meter_send(self.send_buf.len());
+        self.chan.send_bytes(&self.send_buf)
+    }
+
+    /// Send an already-encoded frame (metered). The encode-once broadcast
+    /// path: the fusion center encodes a round command once and hands the
+    /// same bytes to every endpoint.
+    pub fn send_encoded(&mut self, frame: &[u8]) -> Result<()> {
+        self.meter_send(frame.len());
+        self.chan.send_bytes(frame)
+    }
+
+    /// Send a frame built in place by `fill` (metered): `fill` writes a
+    /// complete frame into the endpoint's reused send buffer (see the
+    /// `encode_*` builders in
+    /// [`message`](crate::coordinator::message)) — no owned `Message`,
+    /// no staging clone.
+    pub fn send_frame(&mut self, fill: impl FnOnce(&mut Vec<u8>) -> Result<()>) -> Result<()> {
+        self.send_buf.clear();
+        fill(&mut self.send_buf)?;
+        self.meter_send(self.send_buf.len());
+        self.chan.send_bytes(&self.send_buf)
+    }
+
+    /// Receive a message (blocking); decodes out of the endpoint's reused
+    /// receive buffer.
     pub fn recv(&mut self) -> Result<Message> {
-        Message::decode(&self.chan.recv_bytes()?)
+        self.chan.recv_bytes_into(&mut self.recv_buf)?;
+        Message::decode(&self.recv_buf)
+    }
+
+    /// Receive one raw frame (blocking) into the endpoint's reused
+    /// receive buffer and borrow it — the zero-copy fusion path, parsed
+    /// with the borrowed decoders in
+    /// [`message`](crate::coordinator::message).
+    pub fn recv_frame(&mut self) -> Result<&[u8]> {
+        self.chan.recv_bytes_into(&mut self.recv_buf)?;
+        Ok(&self.recv_buf)
     }
 
     /// The shared meter.
@@ -86,31 +160,47 @@ impl Endpoint {
 struct InProcChannel {
     tx: Sender<Vec<u8>>,
     rx: Receiver<Vec<u8>>,
+    pool: Arc<FramePool>,
 }
 
 impl Channel for InProcChannel {
     fn send_bytes(&mut self, buf: &[u8]) -> Result<()> {
+        // Copy into a recycled buffer instead of `to_vec`: after a couple
+        // of rounds the link circulates a fixed set of allocations.
+        let mut frame = self.pool.get();
+        frame.clear();
+        frame.extend_from_slice(buf);
         self.tx
-            .send(buf.to_vec())
+            .send(frame)
             .map_err(|_| Error::Transport("peer hung up (send)".into()))
     }
 
-    fn recv_bytes(&mut self) -> Result<Vec<u8>> {
-        self.rx.recv().map_err(|_| Error::Transport("peer hung up (recv)".into()))
+    fn recv_bytes_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
+        let frame = self
+            .rx
+            .recv()
+            .map_err(|_| Error::Transport("peer hung up (recv)".into()))?;
+        // Swap the received frame in (zero-copy) and return the old
+        // buffer's allocation to the pool for the next sender.
+        self.pool.put(std::mem::replace(buf, frame));
+        Ok(())
     }
 }
 
 /// Build a metered in-process duplex pair (fusion side, worker side).
+/// Both directions share one [`FramePool`], so frame buffers circulate
+/// between the peers instead of being reallocated per message.
 pub fn inproc_pair(meter: Arc<ByteMeter>) -> (Endpoint, Endpoint) {
     let (tx_f2w, rx_f2w) = channel();
     let (tx_w2f, rx_w2f) = channel();
+    let pool = FramePool::new();
     let fusion = Endpoint::new(
-        Box::new(InProcChannel { tx: tx_f2w, rx: rx_w2f }),
+        Box::new(InProcChannel { tx: tx_f2w, rx: rx_w2f, pool: pool.clone() }),
         meter.clone(),
         Side::Fusion,
     );
     let worker = Endpoint::new(
-        Box::new(InProcChannel { tx: tx_w2f, rx: rx_f2w }),
+        Box::new(InProcChannel { tx: tx_w2f, rx: rx_f2w, pool }),
         meter,
         Side::Worker,
     );
@@ -182,16 +272,21 @@ impl Channel for TcpChannel {
         Ok(())
     }
 
-    fn recv_bytes(&mut self) -> Result<Vec<u8>> {
+    fn recv_bytes_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
         let mut hdr = [0u8; 4];
         self.read_exact_deadlined(&mut hdr)?;
         let len = u32::from_le_bytes(hdr) as usize;
         if len > 1 << 30 {
             return Err(Error::Transport(format!("oversized frame: {len} bytes")));
         }
-        let mut buf = vec![0u8; len];
-        self.read_exact_deadlined(&mut buf)?;
-        Ok(buf)
+        // Reuse the caller's buffer: its capacity is retained across
+        // rounds, so steady-state frames read with no allocation (and no
+        // redundant zeroing — `read_exact` overwrites every byte of
+        // `[0, len)`, so the resize only zero-fills genuinely new tail
+        // capacity).
+        buf.resize(len, 0);
+        self.read_exact_deadlined(buf)?;
+        Ok(())
     }
 }
 
@@ -348,6 +443,34 @@ mod tests {
         assert_eq!(fusion.recv().unwrap(), m2);
         assert_eq!(meter.downlink_bits(), 8 * m1.encode().len() as u64);
         assert_eq!(meter.uplink_bits(), 8 * m2.encode().len() as u64);
+    }
+
+    #[test]
+    fn send_encoded_and_frame_paths_roundtrip_with_metering() {
+        use crate::coordinator::message::{decode_znorm, encode_znorm};
+        let meter = Arc::new(ByteMeter::new());
+        let (mut fusion, mut worker) = inproc_pair(meter.clone());
+        // Encode-once: the same pre-encoded frame can be sent repeatedly.
+        let m = Message::StepCmd { t: 1, coefs: vec![0.5], x: vec![2.0; 6] };
+        let frame = m.encode();
+        fusion.send_encoded(&frame).unwrap();
+        fusion.send_encoded(&frame).unwrap();
+        assert_eq!(worker.recv().unwrap(), m);
+        assert_eq!(worker.recv().unwrap(), m);
+        assert_eq!(meter.downlink_bits(), 2 * 8 * frame.len() as u64);
+        // send_frame builds the reply in place; recv_frame borrows the
+        // raw bytes for the borrowed decoders.
+        worker
+            .send_frame(|buf| {
+                encode_znorm(buf, 1, 0, &[2.5]);
+                Ok(())
+            })
+            .unwrap();
+        let raw = fusion.recv_frame().unwrap();
+        let view = decode_znorm(raw).unwrap();
+        assert_eq!((view.t, view.worker), (1, 0));
+        assert_eq!(view.z_norm2.iter().collect::<Vec<_>>(), vec![2.5]);
+        assert!(meter.uplink_bits() > 0);
     }
 
     #[test]

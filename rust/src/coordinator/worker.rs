@@ -13,7 +13,7 @@
 //! [`channel_for_var`](Scenario::channel_for_var) rebuilds.
 
 use crate::compress::{BlockCtx, Compressor};
-use crate::coordinator::message::{FPayload, Message, QuantSpec};
+use crate::coordinator::message::{self, Message, QuantSpec};
 use crate::coordinator::scenario::{design_ctx, Scenario};
 use crate::coordinator::transport::Endpoint;
 use crate::engine::ComputeEngine;
@@ -52,40 +52,13 @@ pub fn compressor_for_spec<S: Scenario>(
     }
 }
 
-/// Code one uplink vector according to the spec, using the compressor
-/// assembled for it.
-fn payload_for_spec(
-    v: Vec<f32>,
-    spec: &QuantSpec,
-    comp: Option<&Compressor>,
-    ctx: &BlockCtx,
-) -> Result<FPayload> {
-    Ok(match spec {
-        QuantSpec::Raw => FPayload::Raw(v),
-        QuantSpec::Skip => FPayload::Skipped,
-        QuantSpec::Stack { .. } => {
-            let comp = comp.expect("stack spec yields a compressor");
-            if comp.carries_payload() {
-                let block = comp.encode(ctx, &v)?;
-                FPayload::Coded { n: v.len() as u32, bytes: block.bytes }
-            } else {
-                // Entropy-accounted, not entropy-coded (analytic codec):
-                // ship the dequantized values so numerics match the coded
-                // path exactly.
-                let syms = comp.quantize(ctx, &v);
-                let mut deq = vec![0f32; v.len()];
-                comp.dequantize(ctx, &syms, &mut deq)?;
-                FPayload::Raw(deq)
-            }
-        }
-    })
-}
-
 /// Run the worker protocol for scenario `S` until `Done`: serve each
-/// round's broadcast through [`Scenario::worker_serve`], then quantize +
-/// entropy-code the pending per-signal uplink vectors when the batched
-/// `QuantCmd` arrives. Returns the number of iterations served (for tests
-/// / sanity checks).
+/// round's broadcast through [`Scenario::worker_serve`] (which stages
+/// the pending per-signal uplink vectors flat in a reused buffer and
+/// sends its reply directly), then quantize + entropy-code the pending
+/// vectors straight into the endpoint's frame buffer when the batched
+/// `QuantCmd` arrives. Steady-state rounds reuse every buffer involved.
+/// Returns the number of iterations served (for tests / sanity checks).
 pub fn run_scenario_worker<S: Scenario>(
     params: &WorkerParams,
     shard: &S::Shard,
@@ -93,47 +66,102 @@ pub fn run_scenario_worker<S: Scenario>(
     endpoint: &mut Endpoint,
 ) -> Result<usize> {
     let mut state = S::worker_init(shard, params.batch);
-    let mut pending: Option<Vec<Vec<f32>>> = None;
+    // Flat `B × len` staging for the round's pending uplink vectors,
+    // plus dequantization scratch for payload-free codecs.
+    let mut pending: Vec<f32> = Vec::new();
+    let mut have_pending = false;
+    let mut deq: Vec<f32> = Vec::new();
     let mut iters = 0usize;
     loop {
         match endpoint.recv()? {
             Message::QuantCmd { t, specs } => {
-                let vs = pending.take().ok_or_else(|| {
-                    Error::Protocol(format!(
+                if !have_pending {
+                    return Err(Error::Protocol(format!(
                         "worker {}: QuantCmd before the round's step command at t={t}",
                         params.id
-                    ))
-                })?;
-                if specs.len() != vs.len() {
-                    return Err(Error::Protocol(format!(
-                        "worker {}: {} specs for {} pending uplinks at t={t}",
-                        params.id,
-                        specs.len(),
-                        vs.len()
                     )));
                 }
-                let ctx = BlockCtx { worker: params.id };
-                let mut payloads = Vec::with_capacity(vs.len());
-                for (v, spec) in vs.into_iter().zip(&specs) {
-                    let comp = compressor_for_spec::<S>(
-                        spec,
-                        &params.prior,
-                        params.p_workers,
-                        v.len(),
-                    )?;
-                    payloads.push(payload_for_spec(v, spec, comp.as_ref(), &ctx)?);
+                have_pending = false;
+                let b = params.batch;
+                if specs.len() != b {
+                    return Err(Error::Protocol(format!(
+                        "worker {}: {} specs for {b} pending uplinks at t={t}",
+                        params.id,
+                        specs.len(),
+                    )));
                 }
-                endpoint.send(&Message::FVector { t, worker: params.id, payloads })?;
+                debug_assert_eq!(pending.len() % b.max(1), 0);
+                let len = pending.len() / b.max(1);
+                let ctx = BlockCtx { worker: params.id };
+                // Assemble the compressors first (fallible), then build
+                // the FVector frame payload by payload straight from the
+                // flat staging buffer.
+                let pending_ref = &pending;
+                let deq_ref = &mut deq;
+                endpoint.send_frame(|buf| {
+                    message::begin_fvector(buf, t, params.id, b as u32);
+                    for (sig, spec) in specs.iter().enumerate() {
+                        let v = &pending_ref[sig * len..(sig + 1) * len];
+                        let comp = compressor_for_spec::<S>(
+                            spec,
+                            &params.prior,
+                            params.p_workers,
+                            len,
+                        )?;
+                        push_payload(buf, spec, comp.as_ref(), &ctx, v, deq_ref)?;
+                    }
+                    Ok(())
+                })?;
             }
             Message::Done => return Ok(iters),
             msg => {
-                let (reply, vs) = S::worker_serve(params, shard, &mut state, engine, msg)?;
-                endpoint.send(&reply)?;
-                pending = Some(vs);
+                S::worker_serve(
+                    params,
+                    shard,
+                    &mut state,
+                    engine,
+                    msg,
+                    &mut pending,
+                    endpoint,
+                )?;
+                have_pending = true;
                 iters += 1;
             }
         }
     }
+}
+
+/// Code one uplink vector according to its spec, appending the payload
+/// to the frame being built (`deq` is reused dequantization scratch for
+/// payload-free codecs).
+fn push_payload(
+    buf: &mut Vec<u8>,
+    spec: &QuantSpec,
+    comp: Option<&Compressor>,
+    ctx: &BlockCtx,
+    v: &[f32],
+    deq: &mut Vec<f32>,
+) -> Result<()> {
+    match spec {
+        QuantSpec::Raw => message::push_raw_payload(buf, v),
+        QuantSpec::Skip => message::push_skipped_payload(buf),
+        QuantSpec::Stack { .. } => {
+            let comp = comp.expect("stack spec yields a compressor");
+            if comp.carries_payload() {
+                let block = comp.encode(ctx, v)?;
+                message::push_coded_payload(buf, v.len() as u32, &block.bytes);
+            } else {
+                // Entropy-accounted, not entropy-coded (analytic codec):
+                // ship the dequantized values so numerics match the coded
+                // path exactly.
+                let syms = comp.quantize(ctx, v);
+                deq.resize(v.len(), 0.0);
+                comp.dequantize(ctx, &syms, deq)?;
+                message::push_raw_payload(buf, deq);
+            }
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]

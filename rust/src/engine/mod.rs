@@ -14,8 +14,18 @@
 
 use crate::error::{Error, Result};
 use crate::linalg::Matrix;
+use crate::runtime::pool::{Pool, SendPtr};
 use crate::se::prior::BgChannel;
 use crate::signal::{Batch, BernoulliGauss};
+
+/// Upper bound on GC denoiser chunks per call — keeps the per-chunk η′
+/// partial sums in a fixed stack array. Far above any realistic
+/// `threads` setting ([`num_threads_default`](crate::config::num_threads_default)
+/// caps at 16). Note: a config pinning `threads > 64` folds η′ in 64
+/// chunks where the pre-pool spawn kernel used `threads` — the one
+/// (documented) departure from its chunking, and therefore from its
+/// η′ bits, at that extreme.
+const MAX_GC_CHUNKS: usize = 64;
 
 /// The per-worker measurement block: `M/P` rows of `A` plus `y^p`.
 #[derive(Debug, Clone)]
@@ -212,6 +222,20 @@ pub trait ComputeEngine: Send + Sync {
     /// Fusion GC step: denoise `f` at effective noise `sigma_eff2`.
     fn gc_step(&self, f: &[f32], sigma_eff2: f64) -> Result<GcOut>;
 
+    /// Allocation-free GC step: denoise `f` directly into `x_next`
+    /// (same length) and return the empirical `mean(η′)`. The round loop
+    /// calls this so the denoised estimate lands in the session's
+    /// persistent state with no intermediate buffer.
+    ///
+    /// The default delegates to [`gc_step`](ComputeEngine::gc_step) and
+    /// copies — engines should override with an in-place kernel
+    /// (`RustEngine`'s is bit-identical to its `gc_step`).
+    fn gc_step_into(&self, f: &[f32], sigma_eff2: f64, x_next: &mut [f32]) -> Result<f64> {
+        let out = self.gc_step(f, sigma_eff2)?;
+        x_next.copy_from_slice(&out.x_next);
+        Ok(out.eta_prime_mean)
+    }
+
     /// Batched row-mode LC step: all `B` signals of the session in one
     /// call (`xs`/`z_prevs` column-major, `coefs` per signal).
     ///
@@ -252,6 +276,35 @@ pub trait ComputeEngine: Send + Sync {
         Ok(LcBatchOut { z, f, z_norm2 })
     }
 
+    /// Scratch-reuse variant of
+    /// [`lc_step_batch`](ComputeEngine::lc_step_batch): results are
+    /// written into the caller's buffers (resized on first use, reused
+    /// every round after), so the steady-state worker loop allocates
+    /// nothing. Must be bit-for-bit identical to `lc_step_batch`
+    /// regardless of the buffers' prior contents.
+    ///
+    /// The default moves the allocating call's output into the buffers;
+    /// engines with blocked kernels should override to compute in place
+    /// (`RustEngine`'s does).
+    #[allow(clippy::too_many_arguments)]
+    fn lc_step_batch_into(
+        &self,
+        data: &RowBatchData,
+        xs: &[f32],
+        z_prevs: &[f32],
+        coefs: &[f32],
+        p_workers: usize,
+        z_out: &mut Vec<f32>,
+        f_out: &mut Vec<f32>,
+        z_norm2_out: &mut Vec<f64>,
+    ) -> Result<()> {
+        let out = self.lc_step_batch(data, xs, z_prevs, coefs, p_workers)?;
+        *z_out = out.z;
+        *f_out = out.f;
+        *z_norm2_out = out.z_norm2;
+        Ok(())
+    }
+
     /// Batched column-mode worker step: all `B` signals in one call
     /// (`xs` is `B × (N/P)`, `zs` is `B × M`, `sigma_eff2` per signal).
     ///
@@ -286,6 +339,34 @@ pub trait ComputeEngine: Send + Sync {
             eta_prime_mean.push(out.eta_prime_mean);
         }
         Ok(ColLcBatchOut { x_next, u, u_norm2, eta_prime_mean })
+    }
+
+    /// Scratch-reuse variant of
+    /// [`col_lc_step_batch`](ComputeEngine::col_lc_step_batch) (see
+    /// [`lc_step_batch_into`](ComputeEngine::lc_step_batch_into) for the
+    /// contract). `f_scratch` is working space for the pseudo-data
+    /// `F = X + AᵀZ`; the default ignores it.
+    #[allow(clippy::too_many_arguments)]
+    fn col_lc_step_batch_into(
+        &self,
+        data: &ColumnWorkerData,
+        batch: usize,
+        xs: &[f32],
+        zs: &[f32],
+        sigma_eff2: &[f64],
+        x_out: &mut Vec<f32>,
+        u_out: &mut Vec<f32>,
+        u_norm2_out: &mut Vec<f64>,
+        eta_out: &mut Vec<f64>,
+        f_scratch: &mut Vec<f32>,
+    ) -> Result<()> {
+        let _ = f_scratch;
+        let out = self.col_lc_step_batch(data, batch, xs, zs, sigma_eff2)?;
+        *x_out = out.x_next;
+        *u_out = out.u;
+        *u_norm2_out = out.u_norm2;
+        *eta_out = out.eta_prime_mean;
+        Ok(())
     }
 
     /// Column-mode worker step (C-MP-AMP, 1701.02578): pseudo-data
@@ -383,6 +464,24 @@ impl ComputeEngine for RustEngine {
         coefs: &[f32],
         p_workers: usize,
     ) -> Result<LcBatchOut> {
+        let (mut z, mut f, mut z_norm2) = (Vec::new(), Vec::new(), Vec::new());
+        self.lc_step_batch_into(
+            data, xs, z_prevs, coefs, p_workers, &mut z, &mut f, &mut z_norm2,
+        )?;
+        Ok(LcBatchOut { z, f, z_norm2 })
+    }
+
+    fn lc_step_batch_into(
+        &self,
+        data: &RowBatchData,
+        xs: &[f32],
+        z_prevs: &[f32],
+        coefs: &[f32],
+        p_workers: usize,
+        z_out: &mut Vec<f32>,
+        f_out: &mut Vec<f32>,
+        z_norm2_out: &mut Vec<f64>,
+    ) -> Result<()> {
         let b = data.batch;
         let mp = data.a.rows();
         let n = data.a.cols();
@@ -391,26 +490,29 @@ impl ComputeEngine for RustEngine {
         debug_assert_eq!(coefs.len(), b);
         // Z = A X in one blocked pass over A, then the per-signal residual
         // epilogue — elementwise ops in the exact order of `lc_step`, so
-        // the batch is bit-for-bit B sequential steps.
-        let mut z = vec![0f32; b * mp];
-        data.a.matmul_par(xs, b, &mut z, self.threads);
+        // the batch is bit-for-bit B sequential steps. Every output
+        // element is overwritten, so the reused buffers never leak state
+        // across rounds.
+        z_out.resize(b * mp, 0.0);
+        data.a.matmul_par(xs, b, z_out, self.threads);
         for j in 0..b {
             let yj = data.y(j);
             for i in 0..mp {
                 let k = j * mp + i;
-                z[k] = yj[i] - z[k] + coefs[j] * z_prevs[k];
+                z_out[k] = yj[i] - z_out[k] + coefs[j] * z_prevs[k];
             }
         }
-        let z_norm2: Vec<f64> =
-            (0..b).map(|j| crate::linalg::norm2_sq(&z[j * mp..(j + 1) * mp])).collect();
+        z_norm2_out.clear();
+        z_norm2_out
+            .extend((0..b).map(|j| crate::linalg::norm2_sq(&z_out[j * mp..(j + 1) * mp])));
         // F = X/P + Aᵀ Z, again one pass over A for the whole batch.
-        let mut f = vec![0f32; b * n];
-        data.a.matmul_t_par(&z, b, &mut f, self.threads);
+        f_out.resize(b * n, 0.0);
+        data.a.matmul_t_par(z_out, b, f_out, self.threads);
         let inv_p = 1.0 / p_workers as f32;
-        for (fi, &xi) in f.iter_mut().zip(xs) {
+        for (fi, &xi) in f_out.iter_mut().zip(xs) {
             *fi += xi * inv_p;
         }
-        Ok(LcBatchOut { z, f, z_norm2 })
+        Ok(())
     }
 
     fn col_lc_step_batch(
@@ -421,30 +523,65 @@ impl ComputeEngine for RustEngine {
         zs: &[f32],
         sigma_eff2: &[f64],
     ) -> Result<ColLcBatchOut> {
+        let (mut x_next, mut u, mut u_norm2, mut eta, mut scratch) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        self.col_lc_step_batch_into(
+            data,
+            batch,
+            xs,
+            zs,
+            sigma_eff2,
+            &mut x_next,
+            &mut u,
+            &mut u_norm2,
+            &mut eta,
+            &mut scratch,
+        )?;
+        Ok(ColLcBatchOut { x_next, u, u_norm2, eta_prime_mean: eta })
+    }
+
+    fn col_lc_step_batch_into(
+        &self,
+        data: &ColumnWorkerData,
+        batch: usize,
+        xs: &[f32],
+        zs: &[f32],
+        sigma_eff2: &[f64],
+        x_out: &mut Vec<f32>,
+        u_out: &mut Vec<f32>,
+        u_norm2_out: &mut Vec<f64>,
+        eta_out: &mut Vec<f64>,
+        f_scratch: &mut Vec<f32>,
+    ) -> Result<()> {
         let m = data.a.rows();
         let np = data.a.cols();
         debug_assert_eq!(xs.len(), batch * np);
         debug_assert_eq!(zs.len(), batch * m);
         debug_assert_eq!(sigma_eff2.len(), batch);
         // F = X + Aᵀ Z (one blocked pass), per-signal denoising at each
-        // signal's effective noise level, then U = A X_next (one pass).
-        let mut f = vec![0f32; batch * np];
-        data.a.matmul_t_par(zs, batch, &mut f, self.threads);
-        for (fi, &xi) in f.iter_mut().zip(xs) {
+        // signal's effective noise level, then U = A X_next (one pass) —
+        // all into caller-owned buffers, fully overwritten each call.
+        f_scratch.resize(batch * np, 0.0);
+        data.a.matmul_t_par(zs, batch, f_scratch, self.threads);
+        for (fi, &xi) in f_scratch.iter_mut().zip(xs) {
             *fi += xi;
         }
-        let mut x_next = vec![0f32; batch * np];
-        let mut eta_prime_mean = Vec::with_capacity(batch);
+        x_out.resize(batch * np, 0.0);
+        eta_out.clear();
         for j in 0..batch {
-            let gc = self.gc_step(&f[j * np..(j + 1) * np], sigma_eff2[j])?;
-            x_next[j * np..(j + 1) * np].copy_from_slice(&gc.x_next);
-            eta_prime_mean.push(gc.eta_prime_mean);
+            let eta = self.gc_step_into(
+                &f_scratch[j * np..(j + 1) * np],
+                sigma_eff2[j],
+                &mut x_out[j * np..(j + 1) * np],
+            )?;
+            eta_out.push(eta);
         }
-        let mut u = vec![0f32; batch * m];
-        data.a.matmul_par(&x_next, batch, &mut u, self.threads);
-        let u_norm2: Vec<f64> =
-            (0..batch).map(|j| crate::linalg::norm2_sq(&u[j * m..(j + 1) * m])).collect();
-        Ok(ColLcBatchOut { x_next, u, u_norm2, eta_prime_mean })
+        u_out.resize(batch * m, 0.0);
+        data.a.matmul_par(x_out, batch, u_out, self.threads);
+        u_norm2_out.clear();
+        u_norm2_out
+            .extend((0..batch).map(|j| crate::linalg::norm2_sq(&u_out[j * m..(j + 1) * m])));
+        Ok(())
     }
 
     fn col_lc_step(
@@ -479,31 +616,52 @@ impl ComputeEngine for RustEngine {
     }
 
     fn gc_step(&self, f: &[f32], sigma_eff2: f64) -> Result<GcOut> {
-        let n = f.len();
-        let mut x_next = vec![0f32; n];
-        // Spawn overhead beats the win below ~64k elements (§Perf).
-        let threads = if n < 65_536 { 1 } else { self.threads }.min(n.max(1));
-        let chunk = n.div_ceil(threads.max(1)).max(1);
-        let deriv_sums: Vec<f64> = std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            for (ci, out_chunk) in x_next.chunks_mut(chunk).enumerate() {
-                let f0 = ci * chunk;
-                let ch = self.channel;
-                let f_ref = f;
-                handles.push(s.spawn(move || {
-                    let mut dsum = 0.0f64;
-                    for (i, o) in out_chunk.iter_mut().enumerate() {
-                        let fi = f_ref[f0 + i] as f64;
-                        *o = ch.denoise(fi, sigma_eff2) as f32;
-                        dsum += ch.denoise_deriv(fi, sigma_eff2);
-                    }
-                    dsum
-                }));
-            }
-            handles.into_iter().map(|h| h.join().expect("gc thread")).collect()
-        });
-        let eta_prime_mean = deriv_sums.iter().sum::<f64>() / n as f64;
+        let mut x_next = vec![0f32; f.len()];
+        let eta_prime_mean = self.gc_step_into(f, sigma_eff2, &mut x_next)?;
         Ok(GcOut { x_next, eta_prime_mean })
+    }
+
+    fn gc_step_into(&self, f: &[f32], sigma_eff2: f64, x_next: &mut [f32]) -> Result<f64> {
+        let n = f.len();
+        debug_assert_eq!(x_next.len(), n);
+        // Dispatch overhead beats the win below ~64k elements (§Perf);
+        // the same crossover as the pre-pool spawn-per-call kernel keeps
+        // the per-chunk η′ summation — and with it every session's
+        // numerics — unchanged. Chunk counts are capped so the partial
+        // sums fit a fixed stack array (no per-call allocation).
+        let threads =
+            if n < 65_536 { 1 } else { self.threads }.min(n.max(1)).min(MAX_GC_CHUNKS);
+        let chunk = n.div_ceil(threads.max(1)).max(1);
+        let n_chunks = n.div_ceil(chunk);
+        let ch = self.channel;
+        if n_chunks <= 1 {
+            let mut dsum = 0.0f64;
+            for (o, &fv) in x_next.iter_mut().zip(f) {
+                let fi = fv as f64;
+                *o = ch.denoise(fi, sigma_eff2) as f32;
+                dsum += ch.denoise_deriv(fi, sigma_eff2);
+            }
+            return Ok(dsum / n as f64);
+        }
+        let mut dsums = [0f64; MAX_GC_CHUNKS];
+        let out_ptr = SendPtr::new(x_next.as_mut_ptr());
+        let dsum_ptr = SendPtr::new(dsums.as_mut_ptr());
+        Pool::global().run(n_chunks, |ci| {
+            let i0 = ci * chunk;
+            let i1 = (i0 + chunk).min(n);
+            let mut dsum = 0.0f64;
+            for (i, &fv) in f[i0..i1].iter().enumerate() {
+                let fi = fv as f64;
+                // SAFETY: elements [i0, i1) and partial-sum slot `ci`
+                // belong to this chunk alone.
+                unsafe { *out_ptr.add(i0 + i) = ch.denoise(fi, sigma_eff2) as f32 };
+                dsum += ch.denoise_deriv(fi, sigma_eff2);
+            }
+            unsafe { *dsum_ptr.add(ci) = dsum };
+        });
+        // Fold the partials in chunk order — identical to the old
+        // join-in-spawn-order summation, so η′ means are bit-stable.
+        Ok(dsums[..n_chunks].iter().sum::<f64>() / n as f64)
     }
 
     fn name(&self) -> &'static str {
@@ -794,6 +952,87 @@ mod tests {
             }
             for i in 0..m {
                 assert_eq!(blocked.u[j * m + i].to_bits(), single.u[i].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn into_variants_bitwise_match_allocating_calls_on_dirty_buffers() {
+        // The scratch-reuse contract: `*_into` writes the identical bits
+        // as the allocating call no matter what garbage the reused
+        // buffers held from a previous round.
+        let prior = BernoulliGauss::standard(0.08);
+        let mut rng = Rng::new(31);
+        let batch = crate::signal::Batch::generate(
+            prior,
+            crate::signal::ProblemDims { n: 120, m: 40, sigma_e2: 1e-3 },
+            &mut rng,
+            3,
+        )
+        .unwrap();
+        let eng = RustEngine::new(prior, 3);
+        let (b, p) = (3usize, 2usize);
+        let shard = RowBatchData::try_split(&batch, p).unwrap().remove(0);
+        let (mp, n) = (shard.a.rows(), shard.a.cols());
+        let mut xs = vec![0f32; b * n];
+        rng.fill_gaussian(&mut xs, 0.1);
+        let mut zs = vec![0f32; b * mp];
+        rng.fill_gaussian(&mut zs, 0.05);
+        let coefs = [0.1f32, 0.3, 0.5];
+        let want = eng.lc_step_batch(&shard, &xs, &zs, &coefs, p).unwrap();
+        // Deliberately dirty, wrongly-sized buffers.
+        let mut z_out = vec![9.9f32; 7];
+        let mut f_out = vec![-3.3f32; 999];
+        let mut zn = vec![1.25f64; 2];
+        eng.lc_step_batch_into(&shard, &xs, &zs, &coefs, p, &mut z_out, &mut f_out, &mut zn)
+            .unwrap();
+        assert!(z_out.iter().zip(&want.z).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert!(f_out.iter().zip(&want.f).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert!(zn.iter().zip(&want.z_norm2).all(|(a, c)| a.to_bits() == c.to_bits()));
+
+        let cshard = ColumnWorkerData::try_split(&batch.a, 4).unwrap().remove(1);
+        let (m, np) = (cshard.a.rows(), cshard.a.cols());
+        let mut cxs = vec![0f32; b * np];
+        rng.fill_gaussian(&mut cxs, 0.1);
+        let mut czs = vec![0f32; b * m];
+        rng.fill_gaussian(&mut czs, 0.05);
+        let sigma = [0.03f64, 0.02, 0.045];
+        let want = eng.col_lc_step_batch(&cshard, b, &cxs, &czs, &sigma).unwrap();
+        let (mut x_out, mut u_out) = (vec![5.0f32; 3], vec![5.0f32; 1000]);
+        let (mut un, mut eta, mut scr) = (vec![0.5f64; 9], vec![0.5f64; 1], vec![1f32; 2]);
+        eng.col_lc_step_batch_into(
+            &cshard, b, &cxs, &czs, &sigma, &mut x_out, &mut u_out, &mut un, &mut eta,
+            &mut scr,
+        )
+        .unwrap();
+        assert!(x_out.iter().zip(&want.x_next).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert!(u_out.iter().zip(&want.u).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert!(un.iter().zip(&want.u_norm2).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert!(
+            eta.iter().zip(&want.eta_prime_mean).all(|(a, c)| a.to_bits() == c.to_bits())
+        );
+    }
+
+    #[test]
+    fn gc_step_into_matches_gc_step_and_pool_path() {
+        let prior = BernoulliGauss::standard(0.1);
+        let ch = BgChannel::new(prior);
+        // Force the pooled branch with a large input on a multi-thread
+        // engine; the serial branch with a small one. Both must match the
+        // scalar denoiser exactly.
+        for (n, threads) in [(501usize, 3usize), (70_000, 4)] {
+            let eng = RustEngine::new(prior, threads);
+            let mut rng = Rng::new(3);
+            let f: Vec<f32> = (0..n).map(|_| rng.gaussian() as f32).collect();
+            let s2 = 0.09;
+            let out = eng.gc_step(&f, s2).unwrap();
+            let mut x_inplace = vec![42.0f32; n];
+            let eta = eng.gc_step_into(&f, s2, &mut x_inplace).unwrap();
+            assert_eq!(eta.to_bits(), out.eta_prime_mean.to_bits());
+            for i in 0..n {
+                assert_eq!(x_inplace[i].to_bits(), out.x_next[i].to_bits(), "i={i}");
+                let want = ch.denoise(f[i] as f64, s2) as f32;
+                assert!((out.x_next[i] - want).abs() < 1e-6);
             }
         }
     }

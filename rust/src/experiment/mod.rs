@@ -65,8 +65,12 @@ impl Sweep {
 
     /// Bound the number of concurrently running sessions (default: the
     /// machine's available parallelism, capped by the trial count). Each
-    /// session spawns its own `P` worker threads, so a handful of
-    /// concurrent trials already saturates a large machine.
+    /// session spawns its own `P` worker threads, but all of their
+    /// compute kernels dispatch to the one process-global
+    /// [`Pool`](crate::runtime::pool::Pool) — concurrent trials share
+    /// that bounded pool instead of oversubscribing the machine with
+    /// per-kernel thread spawns, so this knob only bounds protocol
+    /// (mostly-blocked) threads.
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = Some(threads.max(1));
         self

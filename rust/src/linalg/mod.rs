@@ -3,10 +3,28 @@
 //! The sensing matrix block a worker owns is `(M/P) × N` row-major `f32`.
 //! Two operations dominate: `A x` (per-row dot products) and `Aᵀ z`
 //! (accumulation across rows). Both are written cache-friendly (unit-stride
-//! inner loops over matrix rows) with optional row-parallelism via scoped
-//! threads; the compiler auto-vectorizes the unrolled inner loops.
+//! inner loops over matrix rows); the compiler auto-vectorizes the
+//! unrolled inner loops.
+//!
+//! Parallel variants (`*_par`) dispatch row/column chunks to the shared
+//! persistent [`Pool`] — no threads are spawned per call, and chunks
+//! write disjoint regions of the caller's output directly, so the
+//! parallel kernels allocate nothing and stay **bit-for-bit identical**
+//! to the serial kernels (property-tested via the `*_pooled` entry
+//! points, which skip the size gate).
 
 use crate::error::{Error, Result};
+use crate::runtime::pool::{Pool, SendPtr};
+
+/// Entry-count crossover below which the `*_par` kernels stay serial.
+///
+/// With per-call thread spawns (the pre-pool implementation) the
+/// measured break-even sat near 4M entries; the persistent pool's
+/// dispatch is a mutex wake instead of `P` spawns+joins, which moves the
+/// break-even down to roughly this size on typical hardware — below it,
+/// memory bandwidth saturation makes extra threads a wash. Re-measure on
+/// target hardware with `cargo bench --bench throughput -- --crossover`.
+pub const PAR_MIN_ENTRIES: usize = 1_000_000;
 
 /// Row-major dense `f32` matrix.
 #[derive(Debug, Clone)]
@@ -163,136 +181,163 @@ impl Matrix {
         }
     }
 
-    /// Threaded [`matmul`](Self::matmul): row chunks are computed into
-    /// per-thread scratch (the column-major output interleaves signals, so
-    /// chunks are not contiguous) and copied back. Serial below the same
-    /// crossover as [`matvec_par`](Self::matvec_par). Per-element
-    /// arithmetic is unchanged, so results stay bit-for-bit identical to
-    /// the serial kernel.
+    /// Parallel [`matmul`](Self::matmul): row chunks dispatched to the
+    /// shared [`Pool`], each writing its (interleaved, disjoint) slice of
+    /// the column-major output directly — no per-call threads, no
+    /// scratch, no copy-back. Serial below the same crossover as
+    /// [`matvec_par`](Self::matvec_par). Per-element arithmetic is
+    /// unchanged, so results stay bit-for-bit identical to the serial
+    /// kernel.
     pub fn matmul_par(&self, xs: &[f32], b: usize, out: &mut [f32], threads: usize) {
-        if threads <= 1 || self.rows < 4 * threads || self.rows * self.cols < 4_000_000 {
+        if threads <= 1 || self.rows < 4 * threads || self.rows * self.cols < PAR_MIN_ENTRIES
+        {
             return self.matmul(xs, b, out);
         }
-        let rows = self.rows;
-        let cols = self.cols;
-        let chunk = rows.div_ceil(threads);
-        let results: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            let mut r0 = 0usize;
-            while r0 < rows {
-                let r1 = (r0 + chunk).min(rows);
-                let mat = &*self;
-                handles.push(s.spawn(move || {
-                    let h = r1 - r0;
-                    let mut tmp = vec![0f32; h * b];
-                    for r in r0..r1 {
-                        let row = mat.row(r);
-                        for j in 0..b {
-                            tmp[j * h + (r - r0)] =
-                                dot(row, &xs[j * cols..(j + 1) * cols]);
-                        }
-                    }
-                    (r0, r1, tmp)
-                }));
-                r0 = r1;
-            }
-            handles.into_iter().map(|h| h.join().expect("matmul thread")).collect()
-        });
-        for (r0, r1, tmp) in results {
-            let h = r1 - r0;
-            for j in 0..b {
-                out[j * rows + r0..j * rows + r1].copy_from_slice(&tmp[j * h..(j + 1) * h]);
-            }
-        }
+        self.matmul_pooled(xs, b, out, threads);
     }
 
-    /// Threaded [`matmul_t`](Self::matmul_t): each thread owns a column
-    /// range and walks all rows once for every signal (same partitioning
-    /// as [`matvec_t_par`](Self::matvec_t_par)), accumulating into scratch
-    /// that is copied back. Bit-for-bit identical to the serial kernel.
+    /// The pooled body of [`matmul_par`](Self::matmul_par) without the
+    /// size gate — `chunks` row chunks on the shared pool regardless of
+    /// shape (exposed so tests can pin pooled == serial at any size).
+    pub fn matmul_pooled(&self, xs: &[f32], b: usize, out: &mut [f32], chunks: usize) {
+        debug_assert_eq!(xs.len(), b * self.cols);
+        debug_assert_eq!(out.len(), b * self.rows);
+        let rows = self.rows;
+        let cols = self.cols;
+        let chunk = rows.div_ceil(chunks.max(1)).max(1);
+        let out_ptr = SendPtr::new(out.as_mut_ptr());
+        Pool::global().run(rows.div_ceil(chunk), |ci| {
+            let r0 = ci * chunk;
+            let r1 = (r0 + chunk).min(rows);
+            for r in r0..r1 {
+                let row = self.row(r);
+                for j in 0..b {
+                    // SAFETY: rows [r0, r1) belong to chunk `ci` alone, so
+                    // the written indices are disjoint across chunks.
+                    unsafe {
+                        *out_ptr.add(j * rows + r) =
+                            dot(row, &xs[j * cols..(j + 1) * cols]);
+                    }
+                }
+            }
+        });
+    }
+
+    /// Parallel [`matmul_t`](Self::matmul_t): each pool chunk owns a
+    /// column range and walks all rows once for every signal (same
+    /// partitioning as [`matvec_t_par`](Self::matvec_t_par)),
+    /// accumulating directly into its disjoint output columns.
+    /// Bit-for-bit identical to the serial kernel.
     pub fn matmul_t_par(&self, zs: &[f32], b: usize, out: &mut [f32], threads: usize) {
-        if threads <= 1 || self.cols < 4 * threads || self.rows * self.cols < 4_000_000 {
+        if threads <= 1 || self.cols < 4 * threads || self.rows * self.cols < PAR_MIN_ENTRIES
+        {
             return self.matmul_t(zs, b, out);
         }
+        self.matmul_t_pooled(zs, b, out, threads);
+    }
+
+    /// The pooled body of [`matmul_t_par`](Self::matmul_t_par) without
+    /// the size gate.
+    pub fn matmul_t_pooled(&self, zs: &[f32], b: usize, out: &mut [f32], chunks: usize) {
+        debug_assert_eq!(zs.len(), b * self.rows);
+        debug_assert_eq!(out.len(), b * self.cols);
         let rows = self.rows;
         let cols = self.cols;
-        let chunk = cols.div_ceil(threads);
-        let results: Vec<(usize, usize, Vec<f32>)> = std::thread::scope(|s| {
-            let mut handles = Vec::new();
-            let mut c0 = 0usize;
-            while c0 < cols {
-                let c1 = (c0 + chunk).min(cols);
-                let mat = &*self;
-                handles.push(s.spawn(move || {
-                    let w = c1 - c0;
-                    let mut tmp = vec![0f32; w * b];
-                    for r in 0..rows {
-                        let row = &mat.row(r)[c0..c1];
-                        for j in 0..b {
-                            let zr = zs[j * rows + r];
-                            if zr != 0.0 {
-                                axpy(zr, row, &mut tmp[j * w..(j + 1) * w]);
-                            }
-                        }
-                    }
-                    (c0, c1, tmp)
-                }));
-                c0 = c1;
-            }
-            handles.into_iter().map(|h| h.join().expect("matmul_t thread")).collect()
-        });
-        for (c0, c1, tmp) in results {
+        let chunk = cols.div_ceil(chunks.max(1)).max(1);
+        let out_ptr = SendPtr::new(out.as_mut_ptr());
+        Pool::global().run(cols.div_ceil(chunk), |ci| {
+            let c0 = ci * chunk;
+            let c1 = (c0 + chunk).min(cols);
             let w = c1 - c0;
+            // SAFETY (both blocks): columns [c0, c1) of every signal's
+            // block belong to chunk `ci` alone; the per-signal views are
+            // created one at a time, never aliased.
             for j in 0..b {
-                out[j * cols + c0..j * cols + c1].copy_from_slice(&tmp[j * w..(j + 1) * w]);
+                let oc = unsafe {
+                    std::slice::from_raw_parts_mut(out_ptr.add(j * cols + c0), w)
+                };
+                oc.iter_mut().for_each(|o| *o = 0.0);
             }
-        }
+            for r in 0..rows {
+                let row = &self.row(r)[c0..c1];
+                for j in 0..b {
+                    let zr = zs[j * rows + r];
+                    if zr != 0.0 {
+                        let oc = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                out_ptr.add(j * cols + c0),
+                                w,
+                            )
+                        };
+                        axpy(zr, row, oc);
+                    }
+                }
+            }
+        });
     }
 
-    /// Threaded `A x` over row chunks. Falls back to serial when the
-    /// matrix is small enough that spawn overhead + memory-bandwidth
-    /// saturation make threads a loss (measured crossover ≈ 4M entries;
-    /// see EXPERIMENTS.md §Perf).
+    /// Parallel `A x` over row chunks on the shared [`Pool`]. Falls back
+    /// to serial when the matrix is small enough that dispatch +
+    /// memory-bandwidth saturation make threads a loss
+    /// ([`PAR_MIN_ENTRIES`]; re-measure with
+    /// `cargo bench --bench throughput -- --crossover`).
     pub fn matvec_par(&self, x: &[f32], out: &mut [f32], threads: usize) {
-        if threads <= 1 || self.rows < 4 * threads || self.rows * self.cols < 4_000_000 {
+        if threads <= 1 || self.rows < 4 * threads || self.rows * self.cols < PAR_MIN_ENTRIES
+        {
             return self.matvec(x, out);
         }
-        let chunk = self.rows.div_ceil(threads);
-        std::thread::scope(|s| {
-            for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
-                let r0 = ci * chunk;
-                let mat = &*self;
-                s.spawn(move || {
-                    for (i, o) in out_chunk.iter_mut().enumerate() {
-                        *o = dot(mat.row(r0 + i), x);
-                    }
-                });
+        self.matvec_pooled(x, out, threads);
+    }
+
+    /// The pooled body of [`matvec_par`](Self::matvec_par) without the
+    /// size gate.
+    pub fn matvec_pooled(&self, x: &[f32], out: &mut [f32], chunks: usize) {
+        debug_assert_eq!(x.len(), self.cols);
+        debug_assert_eq!(out.len(), self.rows);
+        let rows = self.rows;
+        let chunk = rows.div_ceil(chunks.max(1)).max(1);
+        let out_ptr = SendPtr::new(out.as_mut_ptr());
+        Pool::global().run(rows.div_ceil(chunk), |ci| {
+            let r0 = ci * chunk;
+            let r1 = (r0 + chunk).min(rows);
+            for r in r0..r1 {
+                // SAFETY: rows [r0, r1) belong to chunk `ci` alone.
+                unsafe { *out_ptr.add(r) = dot(self.row(r), x) };
             }
         });
     }
 
-    /// Threaded `Aᵀ z`: each thread owns a column range and walks all rows.
-    /// Serial below the measured crossover (see `matvec_par`).
+    /// Parallel `Aᵀ z`: each pool chunk owns a column range and walks all
+    /// rows. Serial below the crossover (see
+    /// [`matvec_par`](Self::matvec_par)).
     pub fn matvec_t_par(&self, z: &[f32], out: &mut [f32], threads: usize) {
-        if threads <= 1 || self.cols < 4 * threads || self.rows * self.cols < 4_000_000 {
+        if threads <= 1 || self.cols < 4 * threads || self.rows * self.cols < PAR_MIN_ENTRIES
+        {
             return self.matvec_t(z, out);
         }
-        let chunk = self.cols.div_ceil(threads);
+        self.matvec_t_pooled(z, out, threads);
+    }
+
+    /// The pooled body of [`matvec_t_par`](Self::matvec_t_par) without
+    /// the size gate.
+    pub fn matvec_t_pooled(&self, z: &[f32], out: &mut [f32], chunks: usize) {
+        debug_assert_eq!(z.len(), self.rows);
+        debug_assert_eq!(out.len(), self.cols);
         let cols = self.cols;
-        std::thread::scope(|s| {
-            for (ci, out_chunk) in out.chunks_mut(chunk).enumerate() {
-                let c0 = ci * chunk;
-                let mat = &*self;
-                s.spawn(move || {
-                    out_chunk.iter_mut().for_each(|o| *o = 0.0);
-                    for (r, &zr) in z.iter().enumerate() {
-                        if zr != 0.0 {
-                            let row = &mat.row(r)[c0..c0 + out_chunk.len()];
-                            axpy(zr, row, out_chunk);
-                        }
-                    }
-                    let _ = cols;
-                });
+        let chunk = cols.div_ceil(chunks.max(1)).max(1);
+        let out_ptr = SendPtr::new(out.as_mut_ptr());
+        Pool::global().run(cols.div_ceil(chunk), |ci| {
+            let c0 = ci * chunk;
+            let c1 = (c0 + chunk).min(cols);
+            // SAFETY: columns [c0, c1) belong to chunk `ci` alone.
+            let out_chunk = unsafe {
+                std::slice::from_raw_parts_mut(out_ptr.add(c0), c1 - c0)
+            };
+            out_chunk.iter_mut().for_each(|o| *o = 0.0);
+            for (r, &zr) in z.iter().enumerate() {
+                if zr != 0.0 {
+                    axpy(zr, &self.row(r)[c0..c1], out_chunk);
+                }
             }
         });
     }
@@ -319,12 +364,24 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
-/// `y += alpha * x`.
+/// `y += alpha * x`, unrolled 4-way with the multi-accumulator style of
+/// [`dot`]. The operation is elementwise (`y[i] += alpha·x[i]`
+/// independently per lane), so unrolling changes instruction scheduling
+/// only — results are bit-identical to the rolled loop by construction.
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
     debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x.iter()) {
-        *yi += alpha * *xi;
+    let n = x.len();
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        y[j] += alpha * x[j];
+        y[j + 1] += alpha * x[j + 1];
+        y[j + 2] += alpha * x[j + 2];
+        y[j + 3] += alpha * x[j + 3];
+    }
+    for j in chunks * 4..n {
+        y[j] += alpha * x[j];
     }
 }
 
@@ -496,9 +553,85 @@ mod tests {
     }
 
     #[test]
+    fn pooled_kernels_bitwise_match_serial_across_chunk_counts() {
+        // The pool contract: every pooled kernel is bit-for-bit the
+        // serial kernel, for chunk counts of 1, 2, odd, and more chunks
+        // than rows/cols (empty tail chunks).
+        Prop::new("pooled == serial (bitwise)", 20).check(|g| {
+            let mut rng = Rng::new(g.u64());
+            let r = g.usize_in(1, 60);
+            let c = g.usize_in(1, 80);
+            let b = g.usize_in(1, 4);
+            let a = rand_matrix(&mut rng, r, c);
+            let x = g.gaussian_vec(c, 1.0);
+            let z = g.gaussian_vec(r, 1.0);
+            let xs = g.gaussian_vec(b * c, 1.0);
+            let zs = g.gaussian_vec(b * r, 1.0);
+            let mut mv = vec![0f32; r];
+            a.matvec(&x, &mut mv);
+            let mut mvt = vec![0f32; c];
+            a.matvec_t(&z, &mut mvt);
+            let mut mm = vec![0f32; b * r];
+            a.matmul(&xs, b, &mut mm);
+            let mut mmt = vec![0f32; b * c];
+            a.matmul_t(&zs, b, &mut mmt);
+            for chunks in [1usize, 2, 3, r + c + 1] {
+                // Dirty outputs: pooled kernels must fully overwrite.
+                let mut o = vec![7.5f32; r];
+                a.matvec_pooled(&x, &mut o, chunks);
+                prop_assert(
+                    o.iter().zip(&mv).all(|(p, s)| p.to_bits() == s.to_bits()),
+                    format!("matvec_pooled chunks={chunks}"),
+                )?;
+                let mut o = vec![7.5f32; c];
+                a.matvec_t_pooled(&z, &mut o, chunks);
+                prop_assert(
+                    o.iter().zip(&mvt).all(|(p, s)| p.to_bits() == s.to_bits()),
+                    format!("matvec_t_pooled chunks={chunks}"),
+                )?;
+                let mut o = vec![7.5f32; b * r];
+                a.matmul_pooled(&xs, b, &mut o, chunks);
+                prop_assert(
+                    o.iter().zip(&mm).all(|(p, s)| p.to_bits() == s.to_bits()),
+                    format!("matmul_pooled chunks={chunks}"),
+                )?;
+                let mut o = vec![7.5f32; b * c];
+                a.matmul_t_pooled(&zs, b, &mut o, chunks);
+                prop_assert(
+                    o.iter().zip(&mmt).all(|(p, s)| p.to_bits() == s.to_bits()),
+                    format!("matmul_t_pooled chunks={chunks}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn axpy_unrolled_matches_rolled() {
+        Prop::new("axpy unrolled == rolled (bitwise)", 50).check(|g| {
+            let n = g.usize_in(0, 133);
+            let alpha = g.f64_in(-2.0, 2.0) as f32;
+            let x = g.gaussian_vec(n, 1.0);
+            let mut y = g.gaussian_vec(n, 1.0);
+            let mut want = y.clone();
+            for (w, &xi) in want.iter_mut().zip(&x) {
+                *w += alpha * xi;
+            }
+            axpy(alpha, &x, &mut y);
+            for i in 0..n {
+                prop_assert(
+                    y[i].to_bits() == want[i].to_bits(),
+                    format!("axpy element {i}"),
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn matmul_threaded_crossover_path_matches() {
-        // Force the threaded branch (≥ 4M entries) once to cover the
-        // scratch-and-copy path on a non-trivial batch.
+        // Force the gated parallel branch (≥ PAR_MIN_ENTRIES) once to
+        // cover the pool dispatch path on a non-trivial batch.
         let mut rng = Rng::new(99);
         let a = rand_matrix(&mut rng, 1000, 4096);
         let b = 3usize;

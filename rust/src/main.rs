@@ -294,14 +294,31 @@ fn cmd_rd(args: &Args) -> Result<()> {
 
 fn cmd_compressors(args: &Args) -> Result<()> {
     // `--names`: bare names only, one per line (for scripts / CI loops).
-    if !args.has_flag("names") {
-        eprintln!(
-            "registered compression stacks (select with --compressor or \
-             compressor = \"<name>\" in TOML):"
-        );
+    if args.has_flag("names") {
+        for name in mpamp::compress::registry::names() {
+            println!("{name}");
+        }
+        return Ok(());
     }
-    for name in mpamp::compress::registry::names() {
-        println!("{name}");
+    eprintln!(
+        "registered compression stacks (select with --compressor or \
+         compressor = \"<name>\" in TOML):"
+    );
+    println!(
+        "{:<22} {:<14} {:<9} {:<8} {:<10} {}",
+        "NAME", "QUANTIZER", "CODEC", "PAYLOAD", "MODEL-PMF", "DESCRIPTION"
+    );
+    for stack in mpamp::compress::registry::all() {
+        let caps = stack.caps();
+        println!(
+            "{:<22} {:<14} {:<9} {:<8} {:<10} {}",
+            stack.name(),
+            stack.quantizer().family(),
+            stack.codec().name(),
+            if caps.payload_free { "free" } else { "coded" },
+            if caps.needs_model_pmf { "needs" } else { "-" },
+            stack.description(),
+        );
     }
     Ok(())
 }

@@ -1,3 +1,6 @@
+//! Runtime services: the persistent compute thread [`pool`] every hot
+//! kernel dispatches to, and the XLA/PJRT engine below.
+//!
 //! XLA/PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts produced
 //! by `make artifacts` (`python/compile/aot.py`) and executes them from the
 //! coordinator hot path. Python is never on this path — the interchange is
@@ -30,6 +33,8 @@ use std::path::Path;
 
 use crate::config::toml;
 use crate::error::{Error, Result};
+
+pub mod pool;
 
 #[cfg(feature = "xla")]
 mod pjrt;

@@ -1,0 +1,408 @@
+//! Persistent chunked thread pool for the compute hot path.
+//!
+//! Before this module every parallel kernel call
+//! ([`Matrix::matmul_par`](crate::linalg::Matrix::matmul_par) and
+//! friends, the engine's GC denoiser) paid for `std::thread::scope` —
+//! fresh OS threads spawned and joined **per call**, plus per-thread
+//! scratch `Vec`s. A protocol round makes several such calls per worker,
+//! so at session scale the spawn/join overhead, not the arithmetic,
+//! dominated the compute axis of the paper's compute/communication
+//! trade-off (Zhu–Baron–Beirami, 1601.03790).
+//!
+//! [`Pool`] keeps a fixed set of worker threads parked on a
+//! `Mutex`/`Condvar` job slot. A [`run`](Pool::run) call publishes one
+//! *chunked task* — a `Fn(usize)` closure plus a chunk count — wakes the
+//! workers, participates in the work itself, and returns when every chunk
+//! has executed. Dispatch allocates nothing: the closure is shared by
+//! reference (the call cannot return before all chunks finish, so the
+//! borrow is sound), chunk indices are handed out under the same mutex
+//! the workers park on, and no queue of boxed jobs exists.
+//!
+//! One process-global pool ([`Pool::global`]), sized by
+//! [`num_threads_default`](crate::config::num_threads_default), is shared
+//! by every session, worker thread, and [`Sweep`](crate::experiment::Sweep)
+//! trial in the process — concurrent callers serialize at task
+//! granularity instead of oversubscribing the machine with scoped
+//! threads. Calls from *inside* a pool task (or with a single chunk)
+//! degrade to inline serial execution, so nesting cannot deadlock.
+//!
+//! The pool makes no ordering promises between chunks; callers own the
+//! determinism story. The linalg kernels get bit-identical results by
+//! making every chunk write a disjoint slice of the output with
+//! arithmetic identical to the serial kernel (see [`SendPtr`]), and the
+//! engine's reductions accumulate per-chunk partials that are folded in
+//! chunk-index order.
+
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::thread::JoinHandle;
+
+/// A type-erased reference to the current chunked task. The raw pointer
+/// is only dereferenced while the publishing [`Pool::run`] call is still
+/// blocked waiting for completion, which keeps the closure alive.
+#[derive(Clone, Copy)]
+struct Task {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+}
+
+// SAFETY: `Task.data` points at a closure constrained to `Sync` by
+// `Pool::run`, so sharing the reference across the pool's threads is
+// exactly what `Sync` licenses.
+unsafe impl Send for Task {}
+
+struct PoolState {
+    /// The active task, if any (cleared by the publisher on completion).
+    task: Option<Task>,
+    /// Total chunks of the active task.
+    chunks: usize,
+    /// Next chunk index to hand out.
+    next: usize,
+    /// Chunks currently executing on some thread.
+    running: usize,
+    /// Set when any chunk panicked (re-raised on the publishing thread).
+    panicked: bool,
+    /// Set by `Drop`; workers exit.
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<PoolState>,
+    /// Workers park here waiting for a task (or shutdown).
+    work_cv: Condvar,
+    /// The publisher parks here waiting for `running` to reach zero.
+    done_cv: Condvar,
+    /// Serializes concurrent `run` calls (one active task at a time).
+    submit: Mutex<()>,
+}
+
+thread_local! {
+    /// True while this thread is executing a pool chunk — a nested
+    /// `Pool::run` from such a thread must execute inline (the submit
+    /// lock is held by an ancestor caller; waiting on it would deadlock).
+    static IN_POOL_TASK: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Persistent chunked thread pool (see the module docs).
+pub struct Pool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+    threads: usize,
+}
+
+impl Pool {
+    /// Build a pool that executes up to `threads` chunks concurrently
+    /// (`threads - 1` parked worker threads; the calling thread always
+    /// participates in its own tasks).
+    pub fn new(threads: usize) -> Pool {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            state: Mutex::new(PoolState {
+                task: None,
+                chunks: 0,
+                next: 0,
+                running: 0,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+            submit: Mutex::new(()),
+        });
+        let workers = (1..threads)
+            .map(|i| {
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("mpamp-pool-{i}"))
+                    .spawn(move || worker_loop(&shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Pool { shared, workers, threads }
+    }
+
+    /// The process-global pool, created on first use and sized by
+    /// [`num_threads_default`](crate::config::num_threads_default). All
+    /// hot-path kernels dispatch here, so concurrent sessions share one
+    /// bounded set of compute threads.
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(|| Pool::new(crate::config::num_threads_default()))
+    }
+
+    /// Maximum chunks executed concurrently (workers + caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Execute `task(i)` for every `i` in `0..chunks`, blocking until all
+    /// chunks have run. Chunks run concurrently on the pool's workers and
+    /// the calling thread; each index is executed exactly once. Panics in
+    /// any chunk are re-raised here after the remaining chunks drain.
+    ///
+    /// Single-chunk calls, single-thread pools, and calls from inside a
+    /// pool task all run inline on the caller — no synchronization, no
+    /// possibility of self-deadlock.
+    pub fn run<F: Fn(usize) + Sync>(&self, chunks: usize, task: F) {
+        if chunks == 0 {
+            return;
+        }
+        if chunks == 1 || self.threads <= 1 || IN_POOL_TASK.with(|f| f.get()) {
+            for i in 0..chunks {
+                task(i);
+            }
+            return;
+        }
+        unsafe fn call<F: Fn(usize)>(data: *const (), i: usize) {
+            // SAFETY: `data` was produced from `&task` below and the
+            // publisher does not return before every chunk finished.
+            let f = unsafe { &*(data.cast::<F>()) };
+            f(i);
+        }
+        let _submit = self.shared.submit.lock().expect("pool submit poisoned");
+        {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            st.task =
+                Some(Task { data: (&task as *const F).cast(), call: call::<F> });
+            st.chunks = chunks;
+            st.next = 0;
+            debug_assert_eq!(st.running, 0);
+            self.shared.work_cv.notify_all();
+        }
+        // The caller participates until the chunk counter is exhausted.
+        loop {
+            let i = {
+                let mut st = self.shared.state.lock().expect("pool state poisoned");
+                if st.next >= st.chunks {
+                    break;
+                }
+                let i = st.next;
+                st.next += 1;
+                st.running += 1;
+                i
+            };
+            let ok = run_chunk(|| task(i));
+            finish_chunk(&self.shared, ok);
+        }
+        // Wait for the workers' in-flight chunks, then retire the task.
+        let mut st = self.shared.state.lock().expect("pool state poisoned");
+        while st.running > 0 {
+            st = self.shared.done_cv.wait(st).expect("pool state poisoned");
+        }
+        st.task = None;
+        let panicked = std::mem::replace(&mut st.panicked, false);
+        drop(st);
+        // Release the submit lock *before* re-raising: unwinding with the
+        // guard held would poison the mutex and permanently brick every
+        // later `run` on this pool (for the global pool: all compute).
+        drop(_submit);
+        if panicked {
+            panic!("pool task panicked");
+        }
+    }
+}
+
+/// Execute one chunk with the re-entrancy guard set; returns false if it
+/// panicked (the payload is swallowed here and re-raised by the
+/// publisher).
+fn run_chunk(f: impl FnOnce()) -> bool {
+    IN_POOL_TASK.with(|flag| flag.set(true));
+    let ok = catch_unwind(AssertUnwindSafe(f)).is_ok();
+    IN_POOL_TASK.with(|flag| flag.set(false));
+    ok
+}
+
+/// Book-keeping after a chunk: drop the running count, record panics, and
+/// wake the publisher when the task has fully drained.
+fn finish_chunk(shared: &Shared, ok: bool) {
+    let mut st = shared.state.lock().expect("pool state poisoned");
+    st.running -= 1;
+    if !ok {
+        st.panicked = true;
+    }
+    if st.next >= st.chunks && st.running == 0 {
+        shared.done_cv.notify_all();
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut st = shared.state.lock().expect("pool state poisoned");
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if st.task.is_some() && st.next < st.chunks {
+            let task = st.task.expect("checked above");
+            let i = st.next;
+            st.next += 1;
+            st.running += 1;
+            drop(st);
+            // SAFETY: the publisher blocks until `running` drains, so the
+            // closure behind `task.data` is alive for this call.
+            let ok = run_chunk(|| unsafe { (task.call)(task.data, i) });
+            finish_chunk(shared, ok);
+            st = shared.state.lock().expect("pool state poisoned");
+        } else {
+            st = shared.work_cv.wait(st).expect("pool state poisoned");
+        }
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().expect("pool state poisoned");
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw mutable pointer wrapper for pool tasks that write **disjoint**
+/// regions of one output buffer (chunked kernels interleave their writes
+/// across the column-major batch layout, so `chunks_mut` cannot express
+/// the split). The caller is responsible for disjointness; every use in
+/// this crate derives the written range from the chunk index alone.
+#[derive(Clone, Copy)]
+pub struct SendPtr<T>(*mut T);
+
+// SAFETY: the wrapper only moves the pointer between threads; writes stay
+// sound because each chunk's range is disjoint by construction.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+impl<T> SendPtr<T> {
+    /// Wrap a base pointer (usually `slice.as_mut_ptr()`).
+    pub fn new(ptr: *mut T) -> Self {
+        SendPtr(ptr)
+    }
+
+    /// Pointer to element `i`.
+    ///
+    /// # Safety
+    /// `i` must be in bounds of the wrapped allocation and the written
+    /// range must not overlap any other chunk's.
+    #[inline]
+    pub unsafe fn add(self, i: usize) -> *mut T {
+        unsafe { self.0.add(i) }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_chunk_exactly_once() {
+        let pool = Pool::new(4);
+        for chunks in [0usize, 1, 2, 3, 5, 16, 111] {
+            let hits: Vec<AtomicUsize> =
+                (0..chunks).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(chunks, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "chunk {i} of {chunks}");
+            }
+        }
+    }
+
+    #[test]
+    fn reusable_across_many_calls() {
+        // The same pool serves many tasks back to back (the steady-state
+        // round loop shape) without leaking state between them.
+        let pool = Pool::new(3);
+        let total = AtomicUsize::new(0);
+        for round in 1..=50usize {
+            pool.run(round, |i| {
+                total.fetch_add(i + 1, Ordering::SeqCst);
+            });
+        }
+        let want: usize = (1..=50).map(|r| r * (r + 1) / 2).sum();
+        assert_eq!(total.load(Ordering::SeqCst), want);
+    }
+
+    #[test]
+    fn single_thread_pool_is_serial_inline() {
+        let pool = Pool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let mut seen = Vec::new();
+        // `Fn` capture of a RefCell-free mutable: use an UnsafeCell-ish
+        // workaround via Mutex to keep the closure `Fn + Sync`.
+        let seen_ref = Mutex::new(&mut seen);
+        pool.run(5, |i| seen_ref.lock().unwrap().push(i));
+        assert_eq!(seen, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn nested_run_degrades_to_inline_serial() {
+        // A chunk that itself calls `run` must not deadlock on the submit
+        // lock — it executes the inner task inline.
+        let pool = Pool::new(4);
+        let count = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            Pool::global().run(8, |_| {
+                count.fetch_add(1, Ordering::SeqCst);
+            });
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 32);
+    }
+
+    #[test]
+    fn concurrent_publishers_serialize_safely() {
+        // Many threads hammering one pool: every task still executes all
+        // its chunks exactly once.
+        let pool = Arc::new(Pool::new(4));
+        let total = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..6)
+            .map(|_| {
+                let pool = pool.clone();
+                let total = total.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..25 {
+                        pool.run(7, |_| {
+                            total.fetch_add(1, Ordering::SeqCst);
+                        });
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 6 * 25 * 7);
+    }
+
+    #[test]
+    fn panicking_chunk_propagates_after_drain() {
+        let pool = Pool::new(3);
+        let err = catch_unwind(AssertUnwindSafe(|| {
+            pool.run(8, |i| {
+                if i == 3 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(err.is_err(), "panic must propagate to the publisher");
+        // The pool stays usable afterwards.
+        let n = AtomicUsize::new(0);
+        pool.run(4, |_| {
+            n.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(n.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn global_pool_is_a_singleton() {
+        let a = Pool::global() as *const Pool;
+        let b = Pool::global() as *const Pool;
+        assert_eq!(a, b);
+        assert!(Pool::global().threads() >= 1);
+        Pool::global().run(3, |_| {});
+    }
+}

@@ -1,0 +1,166 @@
+//! End-to-end pins for the zero-allocation hot path.
+//!
+//! The pooled, encode-once, scratch-reuse runtime must be *numerically
+//! invisible*: a session whose kernels run fully serial (`threads = 1` —
+//! the pre-refactor arithmetic, chunk-free) and one whose kernels
+//! dispatch chunks to the persistent pool (`threads = 4`) must produce
+//! **bit-for-bit identical** estimates, on both partitionings, with raw
+//! and entropy-coded uplinks, over both transports. Together with the
+//! linalg property tests (pooled kernels ≡ serial kernels bitwise) and
+//! the engine `*_into` pins, this is the contract that lets the runtime
+//! change freely underneath the paper's numerics.
+
+use mpamp::config::{Partitioning, TransportKind};
+use mpamp::{RunReport, SessionBuilder};
+
+fn run(
+    partitioning: Partitioning,
+    transport: TransportKind,
+    compressor: &str,
+    raw: bool,
+    threads: usize,
+    batch: usize,
+) -> RunReport {
+    let builder = SessionBuilder::test_small(0.05)
+        .partitioning(partitioning)
+        .transport(transport)
+        .compressor(compressor)
+        .threads(threads)
+        .batch(batch);
+    let builder = if raw { builder.uncompressed() } else { builder.fixed_rate(4.0) };
+    builder.build().unwrap().run().unwrap()
+}
+
+fn assert_reports_bit_identical(a: &RunReport, b: &RunReport, label: &str) {
+    assert_eq!(a.iters.len(), b.iters.len(), "{label}: iteration count");
+    for (ra, rb) in a.iters.iter().zip(&b.iters) {
+        assert_eq!(
+            ra.sdr_db.to_bits(),
+            rb.sdr_db.to_bits(),
+            "{label}: SDR trajectory diverged at t={}",
+            ra.t
+        );
+        assert_eq!(
+            ra.sigma_d2_hat.to_bits(),
+            rb.sigma_d2_hat.to_bits(),
+            "{label}: σ̂² diverged at t={}",
+            ra.t
+        );
+        assert_eq!(
+            ra.rate_wire.to_bits(),
+            rb.rate_wire.to_bits(),
+            "{label}: wire rate diverged at t={}",
+            ra.t
+        );
+    }
+    assert_eq!(a.final_xs.len(), b.final_xs.len(), "{label}");
+    for (j, (xa, xb)) in a.final_xs.iter().zip(&b.final_xs).enumerate() {
+        assert_eq!(xa.len(), xb.len(), "{label}: signal {j}");
+        for (i, (va, vb)) in xa.iter().zip(xb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{label}: final_x[{j}][{i}] differs ({va} vs {vb})"
+            );
+        }
+    }
+}
+
+/// The full grid: {row, column} × {raw, ecsq.range} × {inproc, tcp},
+/// serial (threads = 1) vs pooled (threads = 4), B = 2 so the batched
+/// staging/scratch paths are exercised too.
+#[test]
+fn pooled_session_bitwise_reproduces_serial_session_across_grid() {
+    for partitioning in [Partitioning::Row, Partitioning::Column] {
+        for raw in [true, false] {
+            for transport in [TransportKind::InProc, TransportKind::Tcp] {
+                let label = format!(
+                    "{}/{}/{}",
+                    partitioning.as_str(),
+                    if raw { "raw" } else { "ecsq.range" },
+                    match transport {
+                        TransportKind::InProc => "inproc",
+                        TransportKind::Tcp => "tcp",
+                    }
+                );
+                let serial =
+                    run(partitioning, transport, "ecsq.range", raw, 1, 2);
+                let pooled =
+                    run(partitioning, transport, "ecsq.range", raw, 4, 2);
+                assert_reports_bit_identical(&serial, &pooled, &label);
+            }
+        }
+    }
+}
+
+/// The grid above runs below the parallel gates (test_small shards are
+/// tiny), pinning the encode-once/scratch-reuse plumbing. This test makes
+/// the pool actually engage end-to-end: N = 32 768 puts every worker
+/// shard at/above `PAR_MIN_ENTRIES` (row: 32 × 32 768 = 1M entries;
+/// column: 64 × 16 384 = 1M), so the threads = 4 session dispatches real
+/// pool chunks for the matrix kernels while threads = 1 stays fully
+/// serial — and the estimates must still match bit-for-bit, because the
+/// pooled matvec/matmul chunks compute each output element with
+/// identical arithmetic regardless of chunking.
+///
+/// The GC denoiser deliberately stays below its own 64k crossover here:
+/// its η′ mean folds per-chunk f64 partials, so *chunk count* (i.e. the
+/// thread setting) legitimately perturbs that reduction's f64 bits —
+/// exactly as the pre-pool spawn kernel did. Thread-count invariance is
+/// a property of the matrix kernels, not of the chunked reduction.
+#[test]
+fn pool_engaged_session_bitwise_matches_serial_session() {
+    for partitioning in [Partitioning::Row, Partitioning::Column] {
+        let build = |threads: usize| {
+            SessionBuilder::test_small(0.05)
+                .dims(32_768, 64)
+                .workers(2)
+                .iters(2)
+                .partitioning(partitioning)
+                .uncompressed()
+                .threads(threads)
+                .build()
+                .unwrap()
+                .run()
+                .unwrap()
+        };
+        let serial = build(1);
+        let pooled = build(4);
+        assert_reports_bit_identical(
+            &serial,
+            &pooled,
+            &format!("{}/pool-engaged", partitioning.as_str()),
+        );
+    }
+}
+
+/// Transports must also agree with each other (the frame-buffer reuse and
+/// pooled inproc buffers change the plumbing, never the bytes).
+#[test]
+fn tcp_session_bitwise_matches_inproc_session() {
+    for partitioning in [Partitioning::Row, Partitioning::Column] {
+        let inproc =
+            run(partitioning, TransportKind::InProc, "ecsq.range", false, 2, 3);
+        let tcp = run(partitioning, TransportKind::Tcp, "ecsq.range", false, 2, 3);
+        assert_reports_bit_identical(
+            &inproc,
+            &tcp,
+            &format!("{}/inproc-vs-tcp", partitioning.as_str()),
+        );
+    }
+}
+
+/// Running the identical session twice must be deterministic — the
+/// reused scratch and recycled frame buffers cannot leak state between
+/// rounds or sessions.
+#[test]
+fn repeated_sessions_are_deterministic() {
+    let a = run(Partitioning::Row, TransportKind::InProc, "ecsq.huffman", false, 4, 2);
+    let b = run(Partitioning::Row, TransportKind::InProc, "ecsq.huffman", false, 4, 2);
+    assert_reports_bit_identical(&a, &b, "repeat row/huffman");
+    let a =
+        run(Partitioning::Column, TransportKind::InProc, "ecsq-dithered.range", false, 4, 2);
+    let b =
+        run(Partitioning::Column, TransportKind::InProc, "ecsq-dithered.range", false, 4, 2);
+    assert_reports_bit_identical(&a, &b, "repeat column/dithered");
+}
