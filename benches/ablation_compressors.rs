@@ -80,6 +80,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             sdr_per_bit: Some(sdr_per_bit),
             rounds_per_s: None,
             gflops: None,
+            jobs_per_s: None,
         });
         // Sanity: the ECSQ family must recover the signal at 4 bits (the
         // top-K budget keeps only ~37 of 600 entries per worker, so it is

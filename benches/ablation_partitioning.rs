@@ -92,6 +92,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             sdr_per_bit: Some(sdr_per_bit),
             rounds_per_s: None,
             gflops: None,
+            jobs_per_s: None,
         });
         // Sanity: at ≥4 bits both scenarios must recover the signal.
         if bits >= 4.0 {

@@ -261,6 +261,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             sdr_per_bit: None,
             rounds_per_s: Some(report.iters.len() as f64 / wall_s.max(1e-12)),
             gflops: None,
+            jobs_per_s: None,
         });
     }
     // The batching win as one number: wall time of 8 sequential B=1
@@ -288,6 +289,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         sdr_per_bit: None,
         rounds_per_s: None,
         gflops: None,
+        jobs_per_s: None,
     });
 
     if let Some(path) = json_path {

@@ -138,6 +138,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
                     sdr_per_bit: None,
                     rounds_per_s: Some(rounds_per_s),
                     gflops: None,
+                    jobs_per_s: None,
                 });
             }
         }
@@ -174,6 +175,7 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
             sdr_per_bit: None,
             rounds_per_s: Some(rounds_per_s),
             gflops: None,
+            jobs_per_s: None,
         });
 
         // Blocked matmul GFLOP/s at this size's worker-shard shape.

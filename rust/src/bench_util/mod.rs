@@ -215,6 +215,9 @@ pub struct BenchRecord {
     /// Kernel arithmetic throughput in GFLOP/s (`None` for non-kernel
     /// benches; serialized only when present).
     pub gflops: Option<f64>,
+    /// Completed jobs per second for `mpampd` serving benches (`None`
+    /// for non-serving benches; serialized only when present).
+    pub jobs_per_s: Option<f64>,
 }
 
 impl BenchRecord {
@@ -228,6 +231,7 @@ impl BenchRecord {
             sdr_per_bit: None,
             rounds_per_s: None,
             gflops: None,
+            jobs_per_s: None,
         }
     }
 
@@ -262,6 +266,9 @@ pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<
                 }
                 if let Some(gf) = r.gflops {
                     obj = obj.set("gflops", Json::Num(gf));
+                }
+                if let Some(jps) = r.jobs_per_s {
+                    obj = obj.set("jobs_per_s", Json::Num(jps));
                 }
                 obj
             })
@@ -321,6 +328,7 @@ mod tests {
                 sdr_per_bit: None,
                 rounds_per_s: None,
                 gflops: None,
+                jobs_per_s: None,
             },
             BenchRecord {
                 name: "e2e row".into(),
@@ -330,6 +338,7 @@ mod tests {
                 sdr_per_bit: Some(0.75),
                 rounds_per_s: Some(4.0),
                 gflops: Some(1.5),
+                jobs_per_s: Some(2.5),
             },
         ];
         let dir = std::env::temp_dir().join("mpamp_bench_json_test");
@@ -348,6 +357,8 @@ mod tests {
         assert_eq!(text.matches("rounds_per_s").count(), 1, "{text}");
         assert!(text.contains("\"gflops\":1.5"), "{text}");
         assert_eq!(text.matches("gflops").count(), 1, "{text}");
+        assert!(text.contains("\"jobs_per_s\":2.5"), "{text}");
+        assert_eq!(text.matches("jobs_per_s").count(), 1, "{text}");
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

@@ -106,6 +106,9 @@ USAGE:
 
 COMMANDS:
     run         Run one MP-AMP session and print a per-iteration report
+                (or submit it to a daemon with --connect)
+    serve       Start mpampd: a resident worker fleet serving many
+                concurrent recovery jobs over TCP
     centralized Run the centralized AMP baseline
     se          Print the centralized state-evolution trajectory
     dp          Compute the DP-MP-AMP rate allocation offline
@@ -136,7 +139,22 @@ COMMON OPTIONS:
     --out <file>             Write a CSV/JSON report to <file>
     --quiet                  Suppress the per-iteration table
 
-EARLY-STOPPING OPTIONS (run):
+SERVING OPTIONS:
+    --listen <addr>          (serve) Job listener address
+                             (default 127.0.0.1:7700); the fleet size is
+                             the config's P
+    --max-sessions <k>       (serve) Max concurrently running jobs
+                             (default 4)
+    --max-queue <k>          (serve) Max jobs waiting beyond that
+                             (default 16; 0 rejects on overload)
+    --deadline-s <s>         (serve) Per-job wall-clock deadline in
+                             seconds (over-deadline jobs stop after the
+                             current round and still report)
+    --connect <addr>         (run) Submit the job to a running mpampd
+                             instead of spawning a local fleet; progress
+                             streams back per round
+
+EARLY-STOPPING OPTIONS (run, local only):
     --max-iters <k>          Stop after k iterations (caps config iters)
     --target-sdr <db>        Stop once the empirical SDR reaches <db>
     --stall-window <k>       With --stall-delta: stop when SDR improves
@@ -153,6 +171,8 @@ EXAMPLES:
     mpamp run --preset test_small --compressor ecsq-dithered.range
     mpamp run --preset test_small --compressor topk.raw --partitioning column
     mpamp dp --prior.eps 0.03 --schedule.total_rate 16
+    mpamp serve --preset test_small --listen 127.0.0.1:7700 --max-sessions 4
+    mpamp run --preset test_small --connect 127.0.0.1:7700 --seed 7
 "
 }
 

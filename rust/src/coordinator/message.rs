@@ -24,7 +24,11 @@ use crate::error::{Error, Result};
 /// * v3 — named compression-stack specs (`QuantSpec::Stack` carries the
 ///   registry name + opaque quantizer parameters instead of hard-wired
 ///   ECSQ fields).
-pub const PROTOCOL_VERSION: u8 = 3;
+/// * v4 — session multiplexing: serve-mode links prefix every frame with
+///   a session-ID `u32` so one worker fleet carries interleaved rounds
+///   from many concurrent sessions (standalone links are unchanged —
+///   the prefix exists only on multiplexed daemon links).
+pub const PROTOCOL_VERSION: u8 = 4;
 
 /// How workers should code one signal's uplink vector this iteration
 /// (broadcast by fusion; one spec per batch member rides in a single
@@ -144,13 +148,13 @@ pub enum Message {
     Done,
 }
 
-const TAG_STEP: u8 = 1;
-const TAG_ZNORM: u8 = 2;
-const TAG_QUANT: u8 = 3;
-const TAG_FVEC: u8 = 4;
-const TAG_DONE: u8 = 5;
-const TAG_COLSTEP: u8 = 6;
-const TAG_COLSCALARS: u8 = 7;
+pub(crate) const TAG_STEP: u8 = 1;
+pub(crate) const TAG_ZNORM: u8 = 2;
+pub(crate) const TAG_QUANT: u8 = 3;
+pub(crate) const TAG_FVEC: u8 = 4;
+pub(crate) const TAG_DONE: u8 = 5;
+pub(crate) const TAG_COLSTEP: u8 = 6;
+pub(crate) const TAG_COLSCALARS: u8 = 7;
 
 const SPEC_RAW: u8 = 0;
 const SPEC_SKIP: u8 = 1;
@@ -542,6 +546,14 @@ impl<'a> LeF64s<'a> {
             f64::from_le_bytes(a)
         })
     }
+
+    /// Decode into `out` (must have length [`len`](LeF64s::len)).
+    pub fn copy_to(&self, out: &mut [f64]) {
+        debug_assert_eq!(out.len(), self.len());
+        for (o, v) in out.iter_mut().zip(self.iter()) {
+            *o = v;
+        }
+    }
 }
 
 impl<'a> Cursor<'a> {
@@ -628,6 +640,55 @@ pub fn decode_col_scalars(buf: &[u8]) -> Result<ColScalarsRef<'_>> {
     Ok(r)
 }
 
+/// Borrowed view of a row-mode `StepCmd` broadcast.
+#[derive(Debug, Clone, Copy)]
+pub struct StepCmdRef<'a> {
+    /// Iteration index.
+    pub t: u32,
+    /// Per-signal Onsager coefficients.
+    pub coefs: LeF32s<'a>,
+    /// Current estimates, `B × N` column-major.
+    pub x: LeF32s<'a>,
+}
+
+/// Parse a `StepCmd` frame without allocating — the worker-side
+/// zero-copy path: `B × N` broadcast floats stay in the endpoint's
+/// receive buffer and are copied straight into reused scratch.
+pub fn decode_step_cmd(buf: &[u8]) -> Result<StepCmdRef<'_>> {
+    let mut c = Cursor { buf, pos: 0 };
+    let tag = c.u8()?;
+    if tag != TAG_STEP {
+        return Err(Error::Protocol(format!("expected StepCmd frame, got tag {tag}")));
+    }
+    let r = StepCmdRef { t: c.u32()?, coefs: c.f32_view()?, x: c.f32_view()? };
+    c.finish()?;
+    Ok(r)
+}
+
+/// Borrowed view of a column-mode `ColStep` broadcast.
+#[derive(Debug, Clone, Copy)]
+pub struct ColStepRef<'a> {
+    /// Iteration index.
+    pub t: u32,
+    /// Per-signal denoiser noise levels.
+    pub sigma_eff2: LeF64s<'a>,
+    /// Combined residuals, `B × M` column-major.
+    pub z: LeF32s<'a>,
+}
+
+/// Parse a `ColStep` frame without allocating (the column-mode analogue
+/// of [`decode_step_cmd`]).
+pub fn decode_col_step(buf: &[u8]) -> Result<ColStepRef<'_>> {
+    let mut c = Cursor { buf, pos: 0 };
+    let tag = c.u8()?;
+    if tag != TAG_COLSTEP {
+        return Err(Error::Protocol(format!("expected ColStep frame, got tag {tag}")));
+    }
+    let r = ColStepRef { t: c.u32()?, sigma_eff2: c.f64_view()?, z: c.f32_view()? };
+    c.finish()?;
+    Ok(r)
+}
+
 /// Borrowed view of one `FVector` payload.
 #[derive(Debug, Clone, Copy)]
 pub enum FPayloadRef<'a> {
@@ -691,15 +752,15 @@ pub fn decode_fvector<'a>(
     Ok((t, worker, count))
 }
 
-fn push_u32(out: &mut Vec<u8>, v: u32) {
+pub(crate) fn push_u32(out: &mut Vec<u8>, v: u32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn push_u64(out: &mut Vec<u8>, v: u64) {
+pub(crate) fn push_u64(out: &mut Vec<u8>, v: u64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
-fn push_f64(out: &mut Vec<u8>, v: f64) {
+pub(crate) fn push_f64(out: &mut Vec<u8>, v: f64) {
     out.extend_from_slice(&v.to_le_bytes());
 }
 
@@ -1125,6 +1186,52 @@ mod tests {
         );
         // Truncated payloads rejected, same as the owned decoder.
         assert!(decode_fvector(&enc[..enc.len() - 1], |_, _| Ok(())).is_err());
+    }
+
+    #[test]
+    fn borrowed_broadcast_decoders_match_owned_decode() {
+        // Row broadcast: the worker-side zero-copy view must see the
+        // exact floats the owned decoder produces.
+        let sc = Message::StepCmd {
+            t: 5,
+            coefs: vec![0.25, -0.5],
+            x: vec![1.0, -2.0, 3.5, 0.0, 9.0, -1.25],
+        };
+        let enc = sc.encode();
+        let view = decode_step_cmd(&enc).unwrap();
+        assert_eq!(view.t, 5);
+        let mut coefs = vec![0f32; view.coefs.len()];
+        view.coefs.copy_to(&mut coefs);
+        assert_eq!(coefs, vec![0.25, -0.5]);
+        let mut x = vec![0f32; view.x.len()];
+        view.x.copy_to(&mut x);
+        assert_eq!(x, vec![1.0, -2.0, 3.5, 0.0, 9.0, -1.25]);
+        // Wrong tag and trailing bytes rejected, same as `decode`.
+        assert!(decode_step_cmd(&Message::Done.encode()).is_err());
+        let mut bad = enc.clone();
+        bad.push(0);
+        assert!(decode_step_cmd(&bad).is_err());
+        assert!(decode_step_cmd(&enc[..enc.len() - 1]).is_err());
+
+        // Column broadcast likewise, including the f64 block view.
+        let cs = Message::ColStep {
+            t: 7,
+            sigma_eff2: vec![0.042, 0.011],
+            z: vec![0.5, -1.25, 2.0, 0.25],
+        };
+        let enc = cs.encode();
+        let view = decode_col_step(&enc).unwrap();
+        assert_eq!(view.t, 7);
+        let mut s2 = vec![0f64; view.sigma_eff2.len()];
+        view.sigma_eff2.copy_to(&mut s2);
+        assert_eq!(s2, vec![0.042, 0.011]);
+        let mut z = vec![0f32; view.z.len()];
+        view.z.copy_to(&mut z);
+        assert_eq!(z, vec![0.5, -1.25, 2.0, 0.25]);
+        assert!(decode_col_step(&Message::Done.encode()).is_err());
+        let mut bad = enc.clone();
+        bad.push(0);
+        assert!(decode_col_step(&bad).is_err());
     }
 
     #[test]

@@ -67,7 +67,7 @@
 //!     // on the worker (reply sent via `ep`, uplinks staged flat into
 //!     // `pending`), parse the reply frame on the fusion side:
 //!     fn begin_round(fu: &mut OverlapFusion, cfg: &RunConfig, t: usize, frame: &mut Vec<u8>) { .. }
-//!     fn worker_serve(.., msg: Message, pending: &mut Vec<f32>, ep: &mut Endpoint) -> Result<()> { .. }
+//!     fn worker_serve(.., frame: &[u8], pending: &mut Vec<f32>, ep: &mut Endpoint) -> Result<()> { .. }
 //!     fn absorb(fu: &mut OverlapFusion, .., widx: usize, frame: &[u8]) -> Result<()> { .. }
 //!     // Phase 3: which variance the round's stats carry into the spec,
 //!     // and the model channel every compression stack designs against:
@@ -207,18 +207,22 @@ pub trait Scenario: Send + Sync + 'static {
     /// Fresh worker state at `t = 0` for a `batch`-signal session.
     fn worker_init(shard: &Self::Shard, batch: usize) -> Self::WorkerState;
 
-    /// Serve the round's broadcast on the worker: update local state,
-    /// stage the pending per-signal uplink vectors **flat** into
-    /// `pending` (`B × len` column-major, reused every round; quantized
-    /// and shipped when the `QuantCmd` arrives), and send the pre-uplink
-    /// reply directly on `ep` via
-    /// [`send_frame`](Endpoint::send_frame) — no reply staging clones.
+    /// Serve the round's broadcast on the worker: parse `frame`
+    /// **zero-copy** with the borrowed decoders (copying the wire floats
+    /// into reused `WorkerState` scratch — never an owned `Message` with
+    /// fresh `B × N` vectors), update local state, stage the pending
+    /// per-signal uplink vectors **flat** into `pending` (`B × len`
+    /// column-major, reused every round; quantized and shipped when the
+    /// `QuantCmd` arrives), and send the pre-uplink reply directly on
+    /// `ep` via [`send_frame`](Endpoint::send_frame) — no reply staging
+    /// clones. A frame of the wrong type must fail with a protocol
+    /// error, not hang.
     fn worker_serve(
         params: &WorkerParams,
         shard: &Self::Shard,
         ws: &mut Self::WorkerState,
         engine: &dyn ComputeEngine,
-        msg: Message,
+        frame: &[u8],
         pending: &mut Vec<f32>,
         ep: &mut Endpoint,
     ) -> Result<()>;
@@ -611,7 +615,8 @@ pub struct RowFusion {
 
 /// Worker state of the row scenario: the local residuals plus the
 /// round-scratch buffers the engine's `lc_step_batch_into` writes into
-/// (sized once, reused every round).
+/// and the broadcast-decode scratch the wire floats are copied into
+/// (all sized once, reused every round).
 #[derive(Debug, Clone)]
 pub struct RowWorker {
     /// Local residuals, `B × (M/P)` column-major.
@@ -620,6 +625,10 @@ pub struct RowWorker {
     z_next: Vec<f32>,
     /// Per-signal `‖z‖²` reply scratch.
     z_norm2: Vec<f64>,
+    /// Broadcast decode scratch: per-signal Onsager coefficients.
+    coefs: Vec<f32>,
+    /// Broadcast decode scratch: estimates, `B × N` column-major.
+    x: Vec<f32>,
 }
 
 impl Scenario for Row {
@@ -748,6 +757,8 @@ impl Scenario for Row {
             z_prev: vec![0f32; batch * shard.a.rows()],
             z_next: Vec::new(),
             z_norm2: Vec::new(),
+            coefs: Vec::new(),
+            x: Vec::new(),
         }
     }
 
@@ -756,47 +767,48 @@ impl Scenario for Row {
         shard: &RowBatchData,
         ws: &mut RowWorker,
         engine: &dyn ComputeEngine,
-        msg: Message,
+        frame: &[u8],
         pending: &mut Vec<f32>,
         ep: &mut Endpoint,
     ) -> Result<()> {
-        match msg {
-            Message::StepCmd { t, coefs, x } => {
-                let b = params.batch;
-                let n = shard.a.cols();
-                if coefs.len() != b || x.len() != b * n {
-                    return Err(Error::Protocol(format!(
-                        "worker {}: StepCmd batch {} / x length {} do not match \
-                         batch {b} × N {n}",
-                        params.id,
-                        coefs.len(),
-                        x.len()
-                    )));
-                }
-                // The pending uplinks (f) land flat in the shared staging
-                // buffer; residuals swap through the reused scratch.
-                engine.lc_step_batch_into(
-                    shard,
-                    &x,
-                    &ws.z_prev,
-                    &coefs,
-                    params.p_workers,
-                    &mut ws.z_next,
-                    pending,
-                    &mut ws.z_norm2,
-                )?;
-                std::mem::swap(&mut ws.z_prev, &mut ws.z_next);
-                let (id, z_norm2) = (params.id, &ws.z_norm2);
-                ep.send_frame(|buf| {
-                    message::encode_znorm(buf, t, id, z_norm2);
-                    Ok(())
-                })
-            }
-            other => Err(Error::Protocol(format!(
-                "worker {}: unexpected message {other:?}",
-                params.id
-            ))),
+        let cmd = message::decode_step_cmd(frame)
+            .map_err(|e| Error::Protocol(format!("worker {}: {e}", params.id)))?;
+        let b = params.batch;
+        let n = shard.a.cols();
+        if cmd.coefs.len() != b || cmd.x.len() != b * n {
+            return Err(Error::Protocol(format!(
+                "worker {}: StepCmd batch {} / x length {} do not match \
+                 batch {b} × N {n}",
+                params.id,
+                cmd.coefs.len(),
+                cmd.x.len()
+            )));
         }
+        // Copy the broadcast out of the wire view into reused scratch —
+        // the engine kernels need contiguous slices, but the old owned
+        // decode (a fresh B × N vector every round) is gone.
+        ws.coefs.resize(b, 0.0);
+        cmd.coefs.copy_to(&mut ws.coefs);
+        ws.x.resize(b * n, 0.0);
+        cmd.x.copy_to(&mut ws.x);
+        // The pending uplinks (f) land flat in the shared staging
+        // buffer; residuals swap through the reused scratch.
+        engine.lc_step_batch_into(
+            shard,
+            &ws.x,
+            &ws.z_prev,
+            &ws.coefs,
+            params.p_workers,
+            &mut ws.z_next,
+            pending,
+            &mut ws.z_norm2,
+        )?;
+        std::mem::swap(&mut ws.z_prev, &mut ws.z_next);
+        let (id, z_norm2) = (params.id, &ws.z_norm2);
+        ep.send_frame(|buf| {
+            message::encode_znorm(buf, cmd.t, id, z_norm2);
+            Ok(())
+        })
     }
 }
 
@@ -832,8 +844,9 @@ pub struct ColumnFusion {
 }
 
 /// Worker state of the column scenario: the local estimate blocks plus
-/// the round-scratch buffers `col_lc_step_batch_into` writes into (sized
-/// once, reused every round).
+/// the round-scratch buffers `col_lc_step_batch_into` writes into and
+/// the broadcast-decode scratch the wire floats are copied into (all
+/// sized once, reused every round).
 #[derive(Debug, Clone)]
 pub struct ColumnWorker {
     /// Local estimate blocks, `B × (N/P)` column-major.
@@ -846,6 +859,10 @@ pub struct ColumnWorker {
     eta: Vec<f64>,
     /// Pseudo-data scratch for the engine (`B × (N/P)`).
     f_scratch: Vec<f32>,
+    /// Broadcast decode scratch: per-signal noise levels.
+    sigma_eff2: Vec<f64>,
+    /// Broadcast decode scratch: combined residuals, `B × M` column-major.
+    z: Vec<f32>,
 }
 
 impl Scenario for Column {
@@ -1024,6 +1041,8 @@ impl Scenario for Column {
             u_norm2: Vec::new(),
             eta: Vec::new(),
             f_scratch: Vec::new(),
+            sigma_eff2: Vec::new(),
+            z: Vec::new(),
         }
     }
 
@@ -1032,51 +1051,50 @@ impl Scenario for Column {
         shard: &ColumnWorkerData,
         ws: &mut ColumnWorker,
         engine: &dyn ComputeEngine,
-        msg: Message,
+        frame: &[u8],
         pending: &mut Vec<f32>,
         ep: &mut Endpoint,
     ) -> Result<()> {
-        match msg {
-            Message::ColStep { t, sigma_eff2, z } => {
-                let b = params.batch;
-                let m = shard.a.rows();
-                if sigma_eff2.len() != b || z.len() != b * m {
-                    return Err(Error::Protocol(format!(
-                        "worker {}: ColStep batch {} / z length {} do not match \
-                         batch {b} × M {m}",
-                        params.id,
-                        sigma_eff2.len(),
-                        z.len()
-                    )));
-                }
-                // The pending uplinks (u) land flat in the shared staging
-                // buffer; estimates swap through the reused scratch, and
-                // the reply encodes straight from the worker state — the
-                // old path cloned the `B × (N/P)` shard every round.
-                engine.col_lc_step_batch_into(
-                    shard,
-                    b,
-                    &ws.x,
-                    &z,
-                    &sigma_eff2,
-                    &mut ws.x_next,
-                    pending,
-                    &mut ws.u_norm2,
-                    &mut ws.eta,
-                    &mut ws.f_scratch,
-                )?;
-                std::mem::swap(&mut ws.x, &mut ws.x_next);
-                let (id, u_norm2, eta, x_shard) =
-                    (params.id, &ws.u_norm2, &ws.eta, &ws.x);
-                ep.send_frame(|buf| {
-                    message::encode_col_scalars(buf, t, id, u_norm2, eta, x_shard);
-                    Ok(())
-                })
-            }
-            other => Err(Error::Protocol(format!(
-                "worker {}: unexpected message {other:?}",
-                params.id
-            ))),
+        let cmd = message::decode_col_step(frame)
+            .map_err(|e| Error::Protocol(format!("worker {}: {e}", params.id)))?;
+        let b = params.batch;
+        let m = shard.a.rows();
+        if cmd.sigma_eff2.len() != b || cmd.z.len() != b * m {
+            return Err(Error::Protocol(format!(
+                "worker {}: ColStep batch {} / z length {} do not match \
+                 batch {b} × M {m}",
+                params.id,
+                cmd.sigma_eff2.len(),
+                cmd.z.len()
+            )));
         }
+        // Copy the broadcast out of the wire view into reused scratch
+        // (the old owned decode allocated a fresh B × M vector per round).
+        ws.sigma_eff2.resize(b, 0.0);
+        cmd.sigma_eff2.copy_to(&mut ws.sigma_eff2);
+        ws.z.resize(b * m, 0.0);
+        cmd.z.copy_to(&mut ws.z);
+        // The pending uplinks (u) land flat in the shared staging
+        // buffer; estimates swap through the reused scratch, and
+        // the reply encodes straight from the worker state — the
+        // old path cloned the `B × (N/P)` shard every round.
+        engine.col_lc_step_batch_into(
+            shard,
+            b,
+            &ws.x,
+            &ws.z,
+            &ws.sigma_eff2,
+            &mut ws.x_next,
+            pending,
+            &mut ws.u_norm2,
+            &mut ws.eta,
+            &mut ws.f_scratch,
+        )?;
+        std::mem::swap(&mut ws.x, &mut ws.x_next);
+        let (id, u_norm2, eta, x_shard) = (params.id, &ws.u_norm2, &ws.eta, &ws.x);
+        ep.send_frame(|buf| {
+            message::encode_col_scalars(buf, cmd.t, id, u_norm2, eta, x_shard);
+            Ok(())
+        })
     }
 }

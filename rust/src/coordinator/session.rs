@@ -344,6 +344,49 @@ impl Session {
         })
     }
 
+    /// Build a session that drives **externally supplied** transport
+    /// endpoints instead of spawning its own worker fleet — the serving
+    /// daemon's job driver. `endpoints` are the fusion sides of `cfg.p`
+    /// per-session links (in worker-id order) whose worker sides are
+    /// served elsewhere (the daemon's multiplexed fleet); `meter` is the
+    /// job's own byte meter, shared with those worker sides. The protocol
+    /// state is pre-armed, so `step`/`finish` behave exactly as in a
+    /// standalone session except that there are no worker threads to
+    /// spawn or join — which is what makes a served job's report
+    /// bit-identical to a standalone run by construction.
+    pub(crate) fn with_external_transport(
+        cfg: RunConfig,
+        batch: Arc<Batch>,
+        engine: Arc<dyn ComputeEngine>,
+        meter: Arc<ByteMeter>,
+        endpoints: Vec<Endpoint>,
+    ) -> Result<Self> {
+        if endpoints.len() != cfg.p {
+            return Err(Error::Config(format!(
+                "{} external endpoints for P={} workers",
+                endpoints.len(),
+                cfg.p
+            )));
+        }
+        let mut session = Session::with_batch(cfg, batch)?;
+        session.engine = engine;
+        let controller =
+            allocator_from_config(&session.cfg, &session.se, session.cache.as_ref())?;
+        let state = ProtocolState::new(session.batch.as_ref(), &session.cfg);
+        let iters = session.cfg.iters;
+        session.active = Some(Active {
+            controller,
+            meter,
+            endpoints,
+            workers: Vec::new(),
+            state,
+            records: Vec::with_capacity(iters),
+            t0: Instant::now(),
+            stop_reason: None,
+        });
+        Ok(session)
+    }
+
     /// Access the underlying signal batch (e.g. for external SDR checks).
     pub fn batch(&self) -> &Batch {
         self.batch.as_ref()
@@ -614,6 +657,12 @@ impl Session {
         observer.on_start(&self.cfg);
         while let Some(snap) = self.step()? {
             observer.on_iter(&snap);
+            // Observer-driven stops (client cancel, job deadline) first,
+            // then the history-based rules.
+            if let Some(reason) = observer.should_stop() {
+                self.note_stop(reason);
+                break;
+            }
             if let Some(reason) = stop.triggered(self.history()) {
                 self.note_stop(reason);
                 break;

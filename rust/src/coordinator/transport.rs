@@ -19,6 +19,16 @@
 //! with a 5-byte hello `[PROTOCOL_VERSION, worker_id: u32 LE]`; a peer
 //! speaking a different protocol version is rejected at accept time with
 //! a clear error rather than decoding garbage frames later.
+//!
+//! ## Multiplexed (serve-mode) links — protocol v4
+//!
+//! The `mpamp serve` daemon runs many sessions over one worker fleet.
+//! [`TcpFusionListener::accept_all_mux`] / [`tcp_connect_mux`] build
+//! links whose frames carry a session-ID prefix
+//! (`[len][session: u32 LE][frame]`); [`MuxFusionLink::open_session`] and
+//! [`MuxWorkerLink::session_endpoint`] expose ordinary per-session
+//! [`Endpoint`]s above the prefix, so the protocol core — and the byte
+//! metering — is oblivious to the multiplexing.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -147,6 +157,14 @@ impl Endpoint {
     pub fn recv_frame(&mut self) -> Result<&[u8]> {
         self.chan.recv_bytes_into(&mut self.recv_buf)?;
         Ok(&self.recv_buf)
+    }
+
+    /// Receive one raw frame (blocking) into a caller-owned buffer —
+    /// the worker-side zero-copy path, where the frame must outlive
+    /// further endpoint calls (the reply to a broadcast is sent while
+    /// the borrowed broadcast view is still alive).
+    pub fn recv_frame_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
+        self.chan.recv_bytes_into(buf)
     }
 
     /// The shared meter.
@@ -325,9 +343,36 @@ impl TcpFusionListener {
     /// version mismatch, duplicate id, or expired accept timeout is an
     /// [`Error::Transport`].
     pub fn accept_all(self, meter: Arc<ByteMeter>) -> Result<Vec<Endpoint>> {
+        let read = self.timeouts.read;
+        let mut eps = Vec::with_capacity(self.n_workers);
+        for stream in self.accept_streams()? {
+            eps.push(Endpoint::new(
+                Box::new(TcpChannel::new(stream, read)?),
+                meter.clone(),
+                Side::Fusion,
+            ));
+        }
+        Ok(eps)
+    }
+
+    /// Accept all workers onto **multiplexed** (protocol-v4 serve mode)
+    /// links, in worker-id order. Each returned [`MuxFusionLink`] carries
+    /// interleaved session-tagged frames for any number of concurrent
+    /// sessions over the one physical connection; open per-session
+    /// [`Endpoint`]s with [`MuxFusionLink::open_session`].
+    pub fn accept_all_mux(self) -> Result<Vec<MuxFusionLink>> {
+        let mut links = Vec::with_capacity(self.n_workers);
+        for stream in self.accept_streams()? {
+            links.push(MuxFusionLink::new(stream)?);
+        }
+        Ok(links)
+    }
+
+    /// The shared accept/hello loop: raw streams in worker-id order.
+    fn accept_streams(self) -> Result<Vec<TcpStream>> {
         let deadline = Instant::now() + self.timeouts.accept;
         self.listener.set_nonblocking(true).map_err(Error::Io)?;
-        let mut slots: Vec<Option<Endpoint>> = (0..self.n_workers).map(|_| None).collect();
+        let mut slots: Vec<Option<TcpStream>> = (0..self.n_workers).map(|_| None).collect();
         let mut accepted = 0usize;
         while accepted < self.n_workers {
             let mut stream = match self.listener.accept() {
@@ -374,11 +419,10 @@ impl TcpFusionListener {
             if id >= self.n_workers || slots[id].is_some() {
                 return Err(Error::Transport(format!("bad worker hello id {id}")));
             }
-            slots[id] = Some(Endpoint::new(
-                Box::new(TcpChannel::new(stream, self.timeouts.read)?),
-                meter.clone(),
-                Side::Fusion,
-            ));
+            // Clear the hello-read deadline; steady-state read timeouts
+            // are (re)applied by the channel built around the stream.
+            stream.set_read_timeout(None).map_err(Error::Io)?;
+            slots[id] = Some(stream);
             accepted += 1;
         }
         Ok(slots.into_iter().map(|s| s.unwrap()).collect())
@@ -424,6 +468,294 @@ pub fn tcp_connect_with(
         meter,
         Side::Worker,
     ))
+}
+
+// ---------- multiplexed (serve-mode) TCP transport ----------
+//
+// Protocol v4: on a multiplexed link every frame is wrapped as
+// `[len: u32 LE][session: u32 LE][frame bytes]`, where `len` counts the
+// session id plus the frame. The wrapper lives *below* the metered
+// [`Endpoint`] layer — an endpoint opened for one session sees (and
+// meters) exactly the same frame bytes a standalone link would carry, so
+// a served job's communication accounting is bit-identical to a
+// standalone run of the same config.
+
+/// Session-id routing table of one multiplexed link: the demux reader
+/// thread delivers each inbound frame to its session's queue. `closed`
+/// is flipped (under the same lock) when the reader exits, so a session
+/// opened against an already-dead link fails fast instead of parking on
+/// a queue nobody will ever feed.
+struct MuxRouteTable {
+    routes: std::collections::HashMap<u32, Sender<Vec<u8>>>,
+    closed: bool,
+}
+
+type MuxRoutes = Arc<Mutex<MuxRouteTable>>;
+
+/// Largest accepted mux frame (session id + payload), mirroring the
+/// standalone [`TcpChannel`] bound.
+const MAX_MUX_FRAME: usize = (1 << 30) + 4;
+
+/// Fusion side of one multiplexed worker connection (protocol v4). One
+/// physical TCP stream carries interleaved frames for many sessions: a
+/// background reader thread demultiplexes inbound frames by session id,
+/// and every per-session [`Endpoint`] from
+/// [`open_session`](MuxFusionLink::open_session) shares the write half
+/// behind a mutex (each frame is written atomically).
+///
+/// Dropping the link shuts the stream down — the worker's demux loop sees
+/// EOF and exits cleanly — and joins the reader thread.
+pub struct MuxFusionLink {
+    writer: Arc<Mutex<TcpStream>>,
+    routes: MuxRoutes,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl MuxFusionLink {
+    fn new(stream: TcpStream) -> Result<MuxFusionLink> {
+        stream.set_nodelay(true).map_err(Error::Io)?;
+        stream.set_read_timeout(None).map_err(Error::Io)?;
+        let mut read_half = stream.try_clone().map_err(Error::Io)?;
+        let routes: MuxRoutes = Arc::new(Mutex::new(MuxRouteTable {
+            routes: std::collections::HashMap::new(),
+            closed: false,
+        }));
+        let reader_routes = routes.clone();
+        let reader = std::thread::Builder::new()
+            .name("mpamp-mux-demux".into())
+            .spawn(move || {
+                demux_loop(&mut read_half, &reader_routes);
+                // Link gone (EOF, error, or shutdown): drop every route
+                // sender so blocked session receivers observe the close
+                // instead of waiting forever, and mark the table closed
+                // so later `open_session` calls fail fast too.
+                let mut tbl = reader_routes.lock().expect("mux routes poisoned");
+                tbl.routes.clear();
+                tbl.closed = true;
+            })
+            .map_err(|e| Error::Transport(format!("spawn mux reader: {e}")))?;
+        Ok(MuxFusionLink {
+            writer: Arc::new(Mutex::new(stream)),
+            routes,
+            reader: Some(reader),
+        })
+    }
+
+    /// Open the fusion-side [`Endpoint`] of `session` on this link.
+    /// Frames it sends are tagged with the session id on the wire; frames
+    /// tagged for it are queued by the demux thread. `meter` should be the
+    /// session's own [`ByteMeter`] — metering happens above the mux
+    /// wrapper, so the counted bytes match a standalone link exactly.
+    pub fn open_session(&self, session: u32, meter: Arc<ByteMeter>) -> Endpoint {
+        let (tx, rx) = channel();
+        {
+            let mut tbl = self.routes.lock().expect("mux routes poisoned");
+            if !tbl.closed {
+                tbl.routes.insert(session, tx);
+            }
+            // Closed link: `tx` drops here and the session's first recv
+            // reports the dead link instead of blocking forever.
+        }
+        Endpoint::new(
+            Box::new(MuxChannel {
+                session,
+                writer: self.writer.clone(),
+                rx,
+                routes: self.routes.clone(),
+                scratch: Vec::new(),
+            }),
+            meter,
+            Side::Fusion,
+        )
+    }
+}
+
+impl Drop for MuxFusionLink {
+    fn drop(&mut self) {
+        if let Ok(w) = self.writer.lock() {
+            let _ = w.shutdown(std::net::Shutdown::Both);
+        }
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Inbound half of a multiplexed link: route each `[len][session][frame]`
+/// to the session's queue. Frames for unknown sessions (already finished
+/// or cancelled) are dropped. Returns when the stream closes or any frame
+/// is malformed.
+fn demux_loop(stream: &mut TcpStream, routes: &MuxRoutes) {
+    let mut hdr = [0u8; 4];
+    loop {
+        if stream.read_exact(&mut hdr).is_err() {
+            return;
+        }
+        let len = u32::from_le_bytes(hdr) as usize;
+        if !(4..=MAX_MUX_FRAME).contains(&len) {
+            return;
+        }
+        let mut sid = [0u8; 4];
+        if stream.read_exact(&mut sid).is_err() {
+            return;
+        }
+        let session = u32::from_le_bytes(sid);
+        let mut frame = vec![0u8; len - 4];
+        if stream.read_exact(&mut frame).is_err() {
+            return;
+        }
+        let tx =
+            routes.lock().expect("mux routes poisoned").routes.get(&session).cloned();
+        if let Some(tx) = tx {
+            let _ = tx.send(frame);
+        }
+    }
+}
+
+/// One session's fusion-side view of a multiplexed link.
+struct MuxChannel {
+    session: u32,
+    writer: Arc<Mutex<TcpStream>>,
+    rx: Receiver<Vec<u8>>,
+    routes: MuxRoutes,
+    /// Reused assembly buffer so each send is one `write_all` (atomic
+    /// under the writer lock, one packet with nodelay).
+    scratch: Vec<u8>,
+}
+
+impl Channel for MuxChannel {
+    fn send_bytes(&mut self, buf: &[u8]) -> Result<()> {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&((buf.len() + 4) as u32).to_le_bytes());
+        self.scratch.extend_from_slice(&self.session.to_le_bytes());
+        self.scratch.extend_from_slice(buf);
+        let mut w = self
+            .writer
+            .lock()
+            .map_err(|_| Error::Transport("mux writer poisoned".into()))?;
+        w.write_all(&self.scratch)?;
+        Ok(())
+    }
+
+    fn recv_bytes_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
+        let frame = self.rx.recv().map_err(|_| {
+            Error::Transport(format!(
+                "mux link closed while session {} awaited a frame",
+                self.session
+            ))
+        })?;
+        *buf = frame;
+        Ok(())
+    }
+}
+
+impl Drop for MuxChannel {
+    fn drop(&mut self) {
+        if let Ok(mut tbl) = self.routes.lock() {
+            tbl.routes.remove(&self.session);
+        }
+    }
+}
+
+/// Worker side of one multiplexed connection. The worker's serve loop is
+/// the single reader: [`recv_session_frame`](MuxWorkerLink::recv_session_frame)
+/// yields `(session, frame)` pairs in arrival order, and replies go out
+/// through per-session send-only [`Endpoint`]s from
+/// [`session_endpoint`](MuxWorkerLink::session_endpoint).
+pub struct MuxWorkerLink {
+    reader: TcpStream,
+    writer: Arc<Mutex<TcpStream>>,
+}
+
+/// Worker side: connect to a serve-mode fusion listener and identify as
+/// `worker_id` with the standard versioned hello.
+pub fn tcp_connect_mux(
+    addr: std::net::SocketAddr,
+    worker_id: u32,
+    timeouts: TcpTimeouts,
+) -> Result<MuxWorkerLink> {
+    let mut stream = TcpStream::connect_timeout(&addr, timeouts.connect).map_err(|e| {
+        Error::Transport(format!("tcp connect to {addr} failed: {e}"))
+    })?;
+    stream.set_nodelay(true).map_err(Error::Io)?;
+    let mut hello = [0u8; 5];
+    hello[0] = PROTOCOL_VERSION;
+    hello[1..5].copy_from_slice(&worker_id.to_le_bytes());
+    stream.write_all(&hello)?;
+    let writer = stream.try_clone().map_err(Error::Io)?;
+    Ok(MuxWorkerLink { reader: stream, writer: Arc::new(Mutex::new(writer)) })
+}
+
+impl MuxWorkerLink {
+    /// Block for the next session-tagged frame, writing its payload into
+    /// `buf` and returning the session id. `Ok(None)` means the fusion
+    /// side closed the link — the fleet-wide shutdown signal, not an
+    /// error.
+    pub fn recv_session_frame(&mut self, buf: &mut Vec<u8>) -> Result<Option<u32>> {
+        let mut hdr = [0u8; 4];
+        if let Err(e) = self.reader.read_exact(&mut hdr) {
+            return if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                Ok(None)
+            } else {
+                Err(Error::Io(e))
+            };
+        }
+        let len = u32::from_le_bytes(hdr) as usize;
+        if !(4..=MAX_MUX_FRAME).contains(&len) {
+            return Err(Error::Transport(format!("malformed mux frame length {len}")));
+        }
+        let mut sid = [0u8; 4];
+        self.reader.read_exact(&mut sid).map_err(Error::Io)?;
+        buf.resize(len - 4, 0);
+        self.reader.read_exact(buf).map_err(Error::Io)?;
+        Ok(Some(u32::from_le_bytes(sid)))
+    }
+
+    /// Per-session reply endpoint (send-only — inbound frames arrive via
+    /// [`recv_session_frame`](MuxWorkerLink::recv_session_frame)). `meter`
+    /// should be the session's own [`ByteMeter`], so uplink accounting
+    /// lands on the job it belongs to.
+    pub fn session_endpoint(&self, session: u32, meter: Arc<ByteMeter>) -> Endpoint {
+        Endpoint::new(
+            Box::new(MuxWorkerChannel {
+                session,
+                writer: self.writer.clone(),
+                scratch: Vec::new(),
+            }),
+            meter,
+            Side::Worker,
+        )
+    }
+}
+
+/// One session's worker-side reply channel (send-only).
+struct MuxWorkerChannel {
+    session: u32,
+    writer: Arc<Mutex<TcpStream>>,
+    scratch: Vec<u8>,
+}
+
+impl Channel for MuxWorkerChannel {
+    fn send_bytes(&mut self, buf: &[u8]) -> Result<()> {
+        self.scratch.clear();
+        self.scratch.extend_from_slice(&((buf.len() + 4) as u32).to_le_bytes());
+        self.scratch.extend_from_slice(&self.session.to_le_bytes());
+        self.scratch.extend_from_slice(buf);
+        let mut w = self
+            .writer
+            .lock()
+            .map_err(|_| Error::Transport("mux writer poisoned".into()))?;
+        w.write_all(&self.scratch)?;
+        Ok(())
+    }
+
+    fn recv_bytes_into(&mut self, _buf: &mut Vec<u8>) -> Result<()> {
+        Err(Error::Transport(format!(
+            "mux worker channel for session {} is send-only (inbound frames \
+             arrive via the link's demux loop)",
+            self.session
+        )))
+    }
 }
 
 #[cfg(test)]
@@ -613,6 +945,102 @@ mod tests {
             "v1 peer stalled the accept loop"
         );
         rogue.join().unwrap();
+    }
+
+    #[test]
+    fn mux_link_interleaves_sessions_with_standalone_metering() {
+        use crate::coordinator::message::{decode_step_cmd, decode_znorm, encode_znorm};
+        let listener = TcpFusionListener::bind("127.0.0.1:0", 1).unwrap();
+        let addr = listener.addr().unwrap();
+        let worker_meter_a = Arc::new(ByteMeter::new());
+        let worker_meter_b = Arc::new(ByteMeter::new());
+        let wm_a = worker_meter_a.clone();
+        let wm_b = worker_meter_b.clone();
+        let worker = std::thread::spawn(move || {
+            let mut link = tcp_connect_mux(addr, 0, TcpTimeouts::default()).unwrap();
+            let mut ep_a = link.session_endpoint(7, wm_a);
+            let mut ep_b = link.session_endpoint(9, wm_b);
+            let mut frame = Vec::new();
+            // Serve frames for both sessions in arrival order until EOF.
+            while let Some(session) = link.recv_session_frame(&mut frame).unwrap() {
+                let cmd = decode_step_cmd(&frame).unwrap();
+                let ep = match session {
+                    7 => &mut ep_a,
+                    9 => &mut ep_b,
+                    other => panic!("unexpected session {other}"),
+                };
+                let norm = vec![session as f64 + cmd.t as f64 / 10.0];
+                ep.send_frame(|buf| {
+                    encode_znorm(buf, cmd.t, 0, &norm);
+                    Ok(())
+                })
+                .unwrap();
+            }
+        });
+        let links = listener.accept_all_mux().unwrap();
+        let meter_a = Arc::new(ByteMeter::new());
+        let meter_b = Arc::new(ByteMeter::new());
+        let mut sess_a = links[0].open_session(7, meter_a.clone());
+        let mut sess_b = links[0].open_session(9, meter_b.clone());
+        // Interleave rounds from both sessions over the one stream.
+        for t in 0..3u32 {
+            let cmd_a = Message::StepCmd { t, coefs: vec![0.5], x: vec![1.0; 4] };
+            let cmd_b = Message::StepCmd { t, coefs: vec![0.25], x: vec![2.0; 6] };
+            sess_a.send(&cmd_a).unwrap();
+            sess_b.send(&cmd_b).unwrap();
+            let view_b = decode_znorm(sess_b.recv_frame().unwrap()).unwrap();
+            assert_eq!(view_b.t, t);
+            assert_eq!(
+                view_b.z_norm2.iter().collect::<Vec<_>>(),
+                vec![9.0 + t as f64 / 10.0]
+            );
+            let view_a = decode_znorm(sess_a.recv_frame().unwrap()).unwrap();
+            assert_eq!(view_a.t, t);
+            assert_eq!(
+                view_a.z_norm2.iter().collect::<Vec<_>>(),
+                vec![7.0 + t as f64 / 10.0]
+            );
+        }
+        // Metering sits above the mux prefix: each session's downlink
+        // counts exactly the payload bytes a standalone link would carry.
+        let want_a: u64 = (0..3)
+            .map(|t| {
+                8 * Message::StepCmd { t, coefs: vec![0.5], x: vec![1.0; 4] }
+                    .encode()
+                    .len() as u64
+            })
+            .sum();
+        assert_eq!(meter_a.downlink_bits(), want_a);
+        assert!(meter_b.downlink_bits() > meter_a.downlink_bits());
+        assert!(worker_meter_a.uplink_bits() > 0);
+        assert!(worker_meter_b.uplink_bits() > 0);
+        // Dropping the fusion links is the fleet shutdown signal: the
+        // worker loop sees EOF and joins cleanly.
+        drop(sess_a);
+        drop(sess_b);
+        drop(links);
+        worker.join().unwrap();
+    }
+
+    #[test]
+    fn mux_recv_after_link_drop_reports_closed_session() {
+        let listener = TcpFusionListener::bind("127.0.0.1:0", 1).unwrap();
+        let addr = listener.addr().unwrap();
+        let worker = std::thread::spawn(move || {
+            let link = tcp_connect_mux(addr, 0, TcpTimeouts::default()).unwrap();
+            // Hang up immediately without serving anything.
+            drop(link);
+        });
+        let links = listener.accept_all_mux().unwrap();
+        worker.join().unwrap();
+        let meter = Arc::new(ByteMeter::new());
+        let mut sess = links[0].open_session(3, meter);
+        let err = sess.recv().unwrap_err();
+        assert!(
+            matches!(err, Error::Transport(_)),
+            "expected Transport error, got {err:?}"
+        );
+        assert!(err.to_string().contains("session 3"), "{err}");
     }
 
     #[test]

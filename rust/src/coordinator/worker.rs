@@ -1,16 +1,21 @@
 //! The generic worker processor loop.
 //!
 //! [`run_scenario_worker`] serves protocol rounds for **any**
-//! [`Scenario`]: each round it hands the broadcast to
-//! [`Scenario::worker_serve`] (local step + pre-uplink reply), then codes
-//! the pending per-signal uplink vectors when the batched `QuantCmd`
-//! arrives. Row mode uplinks local estimates `f_t^p`, column mode partial
-//! residuals `u_t^p = A^p x_t^p`; the quantize/encode machinery is the
-//! spec-named [`CompressionStack`](crate::compress::CompressionStack),
-//! assembled identically on both protocol sides by
-//! [`compressor_for_spec`], and differs across scenarios only in the
-//! model channel the scenario's
+//! [`Scenario`]: each round it hands the broadcast frame to
+//! [`Scenario::worker_serve`] (zero-copy borrowed decode, local step,
+//! pre-uplink reply), then codes the pending per-signal uplink vectors
+//! when the batched `QuantCmd` arrives. Row mode uplinks local estimates
+//! `f_t^p`, column mode partial residuals `u_t^p = A^p x_t^p`; the
+//! quantize/encode machinery is the spec-named
+//! [`CompressionStack`](crate::compress::CompressionStack), assembled
+//! identically on both protocol sides by [`compressor_for_spec`], and
+//! differs across scenarios only in the model channel the scenario's
 //! [`channel_for_var`](Scenario::channel_for_var) rebuilds.
+//!
+//! The per-frame core is factored into [`WorkerSession`] so the serving
+//! daemon's multiplexing worker loop (many concurrent sessions over one
+//! physical link) can drive the identical state machine one frame at a
+//! time, while the standalone loop here stays a thin recv-dispatch shell.
 
 use crate::compress::{BlockCtx, Compressor};
 use crate::coordinator::message::{self, Message, QuantSpec};
@@ -52,36 +57,93 @@ pub fn compressor_for_spec<S: Scenario>(
     }
 }
 
-/// Run the worker protocol for scenario `S` until `Done`: serve each
-/// round's broadcast through [`Scenario::worker_serve`] (which stages
-/// the pending per-signal uplink vectors flat in a reused buffer and
-/// sends its reply directly), then quantize + entropy-code the pending
-/// vectors straight into the endpoint's frame buffer when the batched
-/// `QuantCmd` arrives. Steady-state rounds reuse every buffer involved.
-/// Returns the number of iterations served (for tests / sanity checks).
-pub fn run_scenario_worker<S: Scenario>(
-    params: &WorkerParams,
-    shard: &S::Shard,
-    engine: &dyn ComputeEngine,
-    endpoint: &mut Endpoint,
-) -> Result<usize> {
-    let mut state = S::worker_init(shard, params.batch);
-    // Flat `B × len` staging for the round's pending uplink vectors,
-    // plus dequantization scratch for payload-free codecs.
-    let mut pending: Vec<f32> = Vec::new();
-    let mut have_pending = false;
-    let mut deq: Vec<f32> = Vec::new();
-    let mut iters = 0usize;
-    loop {
-        match endpoint.recv()? {
-            Message::QuantCmd { t, specs } => {
-                if !have_pending {
+/// What one served frame means for the session's lifetime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Served {
+    /// The session continues — more frames expected.
+    Continue,
+    /// The fusion side released this session (`Done`).
+    Done,
+}
+
+/// Per-session worker-side protocol state, driven one frame at a time.
+///
+/// [`run_scenario_worker`] wraps this in a blocking recv loop for the
+/// standalone one-session-per-link case; the serving daemon's worker
+/// keeps one `WorkerSession` per live session id and routes each demuxed
+/// frame to [`handle_frame`](WorkerSession::handle_frame). All round
+/// buffers (uplink staging, dequantization scratch, broadcast decode
+/// scratch inside the scenario's `WorkerState`) persist across rounds,
+/// so steady-state rounds allocate nothing proportional to the signal.
+pub(crate) struct WorkerSession<S: Scenario> {
+    state: S::WorkerState,
+    /// Flat `B × len` staging for the round's pending uplink vectors.
+    pending: Vec<f32>,
+    have_pending: bool,
+    /// Dequantization scratch for payload-free codecs.
+    deq: Vec<f32>,
+    iters: usize,
+}
+
+impl<S: Scenario> WorkerSession<S> {
+    /// Fresh session state at `t = 0`.
+    pub(crate) fn new(shard: &S::Shard, batch: usize) -> Self {
+        WorkerSession {
+            state: S::worker_init(shard, batch),
+            pending: Vec::new(),
+            have_pending: false,
+            deq: Vec::new(),
+            iters: 0,
+        }
+    }
+
+    /// Iterations served so far.
+    pub(crate) fn iters(&self) -> usize {
+        self.iters
+    }
+
+    /// Serve one fusion frame: dispatch on the leading tag byte — the
+    /// batched `QuantCmd` codes + uplinks the pending vectors, `Done`
+    /// ends the session, everything else is the scenario's broadcast
+    /// (parsed zero-copy by [`Scenario::worker_serve`]). Replies go out
+    /// on `endpoint`.
+    pub(crate) fn handle_frame(
+        &mut self,
+        params: &WorkerParams,
+        shard: &S::Shard,
+        engine: &dyn ComputeEngine,
+        frame: &[u8],
+        endpoint: &mut Endpoint,
+    ) -> Result<Served> {
+        match frame.first().copied() {
+            Some(message::TAG_DONE) => {
+                if frame.len() != 1 {
+                    return Err(Error::Protocol(format!(
+                        "worker {}: trailing bytes on Done frame",
+                        params.id
+                    )));
+                }
+                Ok(Served::Done)
+            }
+            Some(message::TAG_QUANT) => {
+                // Specs are O(B)-small; the owned decode here is the only
+                // per-round allocation left on the worker's control path.
+                let (t, specs) = match Message::decode(frame)? {
+                    Message::QuantCmd { t, specs } => (t, specs),
+                    other => {
+                        return Err(Error::Protocol(format!(
+                            "worker {}: unexpected message {other:?}",
+                            params.id
+                        )))
+                    }
+                };
+                if !self.have_pending {
                     return Err(Error::Protocol(format!(
                         "worker {}: QuantCmd before the round's step command at t={t}",
                         params.id
                     )));
                 }
-                have_pending = false;
+                self.have_pending = false;
                 let b = params.batch;
                 if specs.len() != b {
                     return Err(Error::Protocol(format!(
@@ -90,14 +152,14 @@ pub fn run_scenario_worker<S: Scenario>(
                         specs.len(),
                     )));
                 }
-                debug_assert_eq!(pending.len() % b.max(1), 0);
-                let len = pending.len() / b.max(1);
+                debug_assert_eq!(self.pending.len() % b.max(1), 0);
+                let len = self.pending.len() / b.max(1);
                 let ctx = BlockCtx { worker: params.id };
                 // Assemble the compressors first (fallible), then build
                 // the FVector frame payload by payload straight from the
                 // flat staging buffer.
-                let pending_ref = &pending;
-                let deq_ref = &mut deq;
+                let pending_ref = &self.pending;
+                let deq_ref = &mut self.deq;
                 endpoint.send_frame(|buf| {
                     message::begin_fvector(buf, t, params.id, b as u32);
                     for (sig, spec) in specs.iter().enumerate() {
@@ -112,21 +174,49 @@ pub fn run_scenario_worker<S: Scenario>(
                     }
                     Ok(())
                 })?;
+                Ok(Served::Continue)
             }
-            Message::Done => return Ok(iters),
-            msg => {
+            _ => {
                 S::worker_serve(
                     params,
                     shard,
-                    &mut state,
+                    &mut self.state,
                     engine,
-                    msg,
-                    &mut pending,
+                    frame,
+                    &mut self.pending,
                     endpoint,
                 )?;
-                have_pending = true;
-                iters += 1;
+                self.have_pending = true;
+                self.iters += 1;
+                Ok(Served::Continue)
             }
+        }
+    }
+}
+
+/// Run the worker protocol for scenario `S` until `Done`: serve each
+/// round's broadcast through [`Scenario::worker_serve`] (which parses
+/// the frame zero-copy, stages the pending per-signal uplink vectors
+/// flat in a reused buffer, and sends its reply directly), then quantize
+/// + entropy-code the pending vectors straight into the endpoint's frame
+/// buffer when the batched `QuantCmd` arrives. Steady-state rounds reuse
+/// every buffer involved. Returns the number of iterations served (for
+/// tests / sanity checks).
+pub fn run_scenario_worker<S: Scenario>(
+    params: &WorkerParams,
+    shard: &S::Shard,
+    engine: &dyn ComputeEngine,
+    endpoint: &mut Endpoint,
+) -> Result<usize> {
+    let mut session = WorkerSession::<S>::new(shard, params.batch);
+    // The frame lives outside the endpoint so the reply to a broadcast
+    // can be sent while the borrowed broadcast view is still alive.
+    let mut frame: Vec<u8> = Vec::new();
+    loop {
+        endpoint.recv_frame_into(&mut frame)?;
+        match session.handle_frame(params, shard, engine, &frame, endpoint)? {
+            Served::Continue => {}
+            Served::Done => return Ok(session.iters()),
         }
     }
 }

@@ -415,12 +415,51 @@ pub trait ComputeEngine: Send + Sync {
 pub struct RustEngine {
     channel: BgChannel,
     threads: usize,
+    /// Size matmul/matvec chunk counts from live [`Pool::global`]
+    /// occupancy instead of the fixed `threads` cap (the serving daemon's
+    /// fair-share mode). Never affects `gc_step_into` — see
+    /// [`par_chunks`](RustEngine::par_chunks).
+    pool_aware: bool,
 }
 
 impl RustEngine {
     /// Build for a prior; `threads` bounds intra-step parallelism.
     pub fn new(prior: BernoulliGauss, threads: usize) -> Self {
-        RustEngine { channel: BgChannel::new(prior), threads: threads.max(1) }
+        RustEngine {
+            channel: BgChannel::new(prior),
+            threads: threads.max(1),
+            pool_aware: false,
+        }
+    }
+
+    /// Like [`new`](RustEngine::new), but matmul/matvec chunk counts are
+    /// chosen per call from live global-pool occupancy
+    /// ([`Pool::fair_chunks`]), so concurrent sessions multiplexed onto
+    /// one process (the `mpamp serve` daemon) split the cores instead of
+    /// each publishing `threads`-sized chunk lists that serialize behind
+    /// the pool's submit lock. Results are bit-identical to [`new`]:
+    /// only kernels that are chunk-count-invariant are sized this way.
+    pub fn new_pool_aware(prior: BernoulliGauss, threads: usize) -> Self {
+        RustEngine {
+            channel: BgChannel::new(prior),
+            threads: threads.max(1),
+            pool_aware: true,
+        }
+    }
+
+    /// Chunk count for the matmul/matvec family. These kernels write
+    /// disjoint per-element outputs with arithmetic independent of the
+    /// chunk split, so occupancy-adaptive counts cannot change a single
+    /// output bit. The GC denoiser is excluded: its η′ reduction folds
+    /// per-chunk partials in chunk order, so `gc_step_into` must keep the
+    /// fixed `threads`-derived count to preserve every session's numerics.
+    #[inline]
+    fn par_chunks(&self) -> usize {
+        if self.pool_aware {
+            Pool::global().fair_chunks(self.threads)
+        } else {
+            self.threads
+        }
     }
 }
 
@@ -441,14 +480,14 @@ impl ComputeEngine for RustEngine {
         debug_assert_eq!(y.len(), mp);
         // z = y − A x + coef·z_prev
         let mut z = vec![0f32; mp];
-        a.matvec_par(x, &mut z, self.threads);
+        a.matvec_par(x, &mut z, self.par_chunks());
         for i in 0..mp {
             z[i] = y[i] - z[i] + coef * z_prev[i];
         }
         let z_norm2 = crate::linalg::norm2_sq(&z);
         // f = x/P + Aᵀ z
         let mut f = vec![0f32; n];
-        a.matvec_t_par(&z, &mut f, self.threads);
+        a.matvec_t_par(&z, &mut f, self.par_chunks());
         let inv_p = 1.0 / p_workers as f32;
         for (fi, &xi) in f.iter_mut().zip(x) {
             *fi += xi * inv_p;
@@ -494,7 +533,7 @@ impl ComputeEngine for RustEngine {
         // element is overwritten, so the reused buffers never leak state
         // across rounds.
         z_out.resize(b * mp, 0.0);
-        data.a.matmul_par(xs, b, z_out, self.threads);
+        data.a.matmul_par(xs, b, z_out, self.par_chunks());
         for j in 0..b {
             let yj = data.y(j);
             for i in 0..mp {
@@ -507,7 +546,7 @@ impl ComputeEngine for RustEngine {
             .extend((0..b).map(|j| crate::linalg::norm2_sq(&z_out[j * mp..(j + 1) * mp])));
         // F = X/P + Aᵀ Z, again one pass over A for the whole batch.
         f_out.resize(b * n, 0.0);
-        data.a.matmul_t_par(z_out, b, f_out, self.threads);
+        data.a.matmul_t_par(z_out, b, f_out, self.par_chunks());
         let inv_p = 1.0 / p_workers as f32;
         for (fi, &xi) in f_out.iter_mut().zip(xs) {
             *fi += xi * inv_p;
@@ -562,7 +601,7 @@ impl ComputeEngine for RustEngine {
         // signal's effective noise level, then U = A X_next (one pass) —
         // all into caller-owned buffers, fully overwritten each call.
         f_scratch.resize(batch * np, 0.0);
-        data.a.matmul_t_par(zs, batch, f_scratch, self.threads);
+        data.a.matmul_t_par(zs, batch, f_scratch, self.par_chunks());
         for (fi, &xi) in f_scratch.iter_mut().zip(xs) {
             *fi += xi;
         }
@@ -577,7 +616,7 @@ impl ComputeEngine for RustEngine {
             eta_out.push(eta);
         }
         u_out.resize(batch * m, 0.0);
-        data.a.matmul_par(x_out, batch, u_out, self.threads);
+        data.a.matmul_par(x_out, batch, u_out, self.par_chunks());
         u_norm2_out.clear();
         u_norm2_out
             .extend((0..batch).map(|j| crate::linalg::norm2_sq(&u_out[j * m..(j + 1) * m])));
@@ -599,13 +638,13 @@ impl ComputeEngine for RustEngine {
         // arithmetic-identical to centralized AMP (asserted bit-for-bit in
         // `tests/partitioning.rs`).
         let mut f = vec![0f32; np];
-        data.a.matvec_t_par(z, &mut f, self.threads);
+        data.a.matvec_t_par(z, &mut f, self.par_chunks());
         for (fi, &xi) in f.iter_mut().zip(x) {
             *fi += xi;
         }
         let gc = self.gc_step(&f, sigma_eff2)?;
         let mut u = vec![0f32; m];
-        data.a.matvec_par(&gc.x_next, &mut u, self.threads);
+        data.a.matvec_par(&gc.x_next, &mut u, self.par_chunks());
         let u_norm2 = crate::linalg::norm2_sq(&u);
         Ok(ColLcOut {
             x_next: gc.x_next,
@@ -629,6 +668,9 @@ impl ComputeEngine for RustEngine {
         // the per-chunk η′ summation — and with it every session's
         // numerics — unchanged. Chunk counts are capped so the partial
         // sums fit a fixed stack array (no per-call allocation).
+        // Deliberately `self.threads`, never `par_chunks()`: the η′ fold
+        // below is chunk-count-sensitive, so occupancy-adaptive sizing
+        // here would make results depend on what else the pool is doing.
         let threads =
             if n < 65_536 { 1 } else { self.threads }.min(n.max(1)).min(MAX_GC_CHUNKS);
         let chunk = n.div_ceil(threads.max(1)).max(1);
@@ -1035,6 +1077,58 @@ mod tests {
                 assert!((out.x_next[i] - want).abs() < 1e-6);
             }
         }
+    }
+
+    #[test]
+    fn pool_aware_engine_bitwise_matches_fixed_thread_engine() {
+        // Occupancy-adaptive chunk sizing may only touch kernels whose
+        // outputs are chunk-count-invariant, so a pool-aware engine must
+        // reproduce the plain engine bit for bit on every step kind.
+        let prior = BernoulliGauss::standard(0.08);
+        let mut rng = Rng::new(77);
+        let batch = crate::signal::Batch::generate(
+            prior,
+            crate::signal::ProblemDims { n: 120, m: 40, sigma_e2: 1e-3 },
+            &mut rng,
+            3,
+        )
+        .unwrap();
+        let fixed = RustEngine::new(prior, 4);
+        let aware = RustEngine::new_pool_aware(prior, 4);
+        let (b, p) = (3usize, 2usize);
+        let shard = RowBatchData::try_split(&batch, p).unwrap().remove(0);
+        let (mp, n) = (shard.a.rows(), shard.a.cols());
+        let mut xs = vec![0f32; b * n];
+        rng.fill_gaussian(&mut xs, 0.1);
+        let mut zs = vec![0f32; b * mp];
+        rng.fill_gaussian(&mut zs, 0.05);
+        let coefs = [0.1f32, 0.3, 0.5];
+        let want = fixed.lc_step_batch(&shard, &xs, &zs, &coefs, p).unwrap();
+        let got = aware.lc_step_batch(&shard, &xs, &zs, &coefs, p).unwrap();
+        assert!(got.z.iter().zip(&want.z).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert!(got.f.iter().zip(&want.f).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert!(got
+            .z_norm2
+            .iter()
+            .zip(&want.z_norm2)
+            .all(|(a, c)| a.to_bits() == c.to_bits()));
+
+        let cshard = ColumnWorkerData::try_split(&batch.a, 4).unwrap().remove(1);
+        let (m, np) = (cshard.a.rows(), cshard.a.cols());
+        let mut cxs = vec![0f32; b * np];
+        rng.fill_gaussian(&mut cxs, 0.1);
+        let mut czs = vec![0f32; b * m];
+        rng.fill_gaussian(&mut czs, 0.05);
+        let sigma = [0.03f64, 0.02, 0.045];
+        let want = fixed.col_lc_step_batch(&cshard, b, &cxs, &czs, &sigma).unwrap();
+        let got = aware.col_lc_step_batch(&cshard, b, &cxs, &czs, &sigma).unwrap();
+        assert!(got.x_next.iter().zip(&want.x_next).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert!(got.u.iter().zip(&want.u).all(|(a, c)| a.to_bits() == c.to_bits()));
+        assert!(got
+            .eta_prime_mean
+            .iter()
+            .zip(&want.eta_prime_mean)
+            .all(|(a, c)| a.to_bits() == c.to_bits()));
     }
 
     #[test]

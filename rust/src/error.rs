@@ -31,6 +31,22 @@ pub enum Error {
     Io(std::io::Error),
 }
 
+impl Error {
+    /// Tag a [`Error::Transport`] with the serve-session it belongs to and
+    /// the peer role that raised it (`"fusion"`, `"worker 3"`, `"client"`),
+    /// so a failure on a multiplexed daemon link is attributable from the
+    /// log line alone. Non-transport errors pass through unchanged — they
+    /// already name their own context.
+    pub fn transport_context(self, session: u32, role: &str) -> Error {
+        match self {
+            Error::Transport(m) => {
+                Error::Transport(format!("session {session} ({role}): {m}"))
+            }
+            other => other,
+        }
+    }
+}
+
 impl fmt::Display for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
@@ -70,3 +86,20 @@ impl From<xla::Error> for Error {
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_context_tags_only_transport_errors() {
+        let e = Error::Transport("peer hung up (recv)".into());
+        let tagged = e.transport_context(17, "worker 3");
+        assert_eq!(
+            tagged.to_string(),
+            "transport error: session 17 (worker 3): peer hung up (recv)"
+        );
+        let cfg = Error::Config("bad p".into()).transport_context(17, "fusion");
+        assert_eq!(cfg.to_string(), "config error: bad p");
+    }
+}

@@ -85,6 +85,7 @@ pub mod quant;
 pub mod rd;
 pub mod runtime;
 pub mod se;
+pub mod serve;
 pub mod signal;
 pub mod util;
 

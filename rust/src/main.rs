@@ -30,6 +30,11 @@ const RESERVED: &[&str] = &[
     "stall-window",
     "stall-delta",
     "max-bits",
+    "listen",
+    "connect",
+    "max-sessions",
+    "max-queue",
+    "deadline-s",
 ];
 
 fn main() {
@@ -73,6 +78,7 @@ fn load_config(args: &Args) -> Result<RunConfig> {
 fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "run" => cmd_run(args),
+        "serve" => cmd_serve(args),
         "centralized" => cmd_centralized(args),
         "se" => cmd_se(args),
         "dp" => cmd_dp(args),
@@ -116,6 +122,9 @@ fn stop_rules(args: &Args) -> Result<StopSet> {
 
 fn cmd_run(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
+    if let Some(addr) = args.get("connect") {
+        return cmd_run_remote(args, addr, cfg);
+    }
     let quiet = args.has_flag("quiet");
     eprintln!(
         "mpamp run: N={} M={} P={} B={} ({}-partitioned) ε={} SNR={} dB T={} \
@@ -169,6 +178,99 @@ fn cmd_run(args: &Args) -> Result<()> {
         println!("{}", report.to_json().render());
     }
     Ok(())
+}
+
+/// `mpamp run --connect <addr>`: submit the config to a running mpampd
+/// and stream its per-round progress instead of spawning a local fleet.
+fn cmd_run_remote(args: &Args, addr: &str, cfg: RunConfig) -> Result<()> {
+    use mpamp::serve::{Client, JobEvent};
+    if !stop_rules(args)?.is_empty() {
+        return Err(Error::Config(
+            "early-stopping options apply to local runs only (the daemon \
+             owns a served job's stopping; use --deadline-s on the serve \
+             side)"
+                .into(),
+        ));
+    }
+    let quiet = args.has_flag("quiet");
+    let mut job = Client::submit(addr, &cfg)?;
+    eprintln!(
+        "mpamp run: submitted to {addr} as session {} (queue position {})",
+        job.session_id(),
+        job.queue_pos()
+    );
+    let mut table = TablePrinter::new();
+    let report = loop {
+        match job.next_event()? {
+            JobEvent::Started => {}
+            JobEvent::Iter(snap) => {
+                if !quiet {
+                    table.on_iter(&snap);
+                }
+            }
+            JobEvent::Report(report) => break report,
+            JobEvent::Cancelled => {
+                return Err(Error::Transport("job was cancelled".into()))
+            }
+            JobEvent::Failed(msg) => {
+                return Err(Error::Transport(format!("daemon error: {msg}")))
+            }
+        }
+    };
+    if let Some(why) = &report.stopped_early {
+        println!("stopped early after {} iterations: {why}", report.iters.len());
+    }
+    println!(
+        "final SDR {:.2} dB | uplink {:.2} bits/element total ({:.1}% savings vs 32-bit) | {:.2}s",
+        report.final_sdr_db(),
+        report.total_uplink_bits_per_element(),
+        report.savings_vs_float_pct(),
+        report.wall_s
+    );
+    if let Some(out) = args.get("out") {
+        report.to_csv().write(out)?;
+        eprintln!("wrote {out}");
+    }
+    if args.has_flag("json") {
+        println!("{}", report.to_json().render());
+    }
+    Ok(())
+}
+
+/// `mpamp serve`: boot the daemon and block until killed.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use mpamp::serve::{Daemon, ServeConfig};
+    let cfg = load_config(args)?;
+    let listen = args.get("listen").unwrap_or("127.0.0.1:7700");
+    let mut sc = ServeConfig::new(listen, cfg.p);
+    if let Some(v) = args.get_parsed::<usize>("max-sessions")? {
+        sc.max_sessions = v;
+    }
+    if let Some(v) = args.get_parsed::<usize>("max-queue")? {
+        sc.max_queue = v;
+    }
+    if let Some(s) = args.get_parsed::<f64>("deadline-s")? {
+        if !(s > 0.0) {
+            return Err(Error::Config("--deadline-s must be > 0".into()));
+        }
+        sc.deadline = Some(std::time::Duration::from_secs_f64(s));
+    }
+    let daemon = Daemon::start(sc)?;
+    eprintln!(
+        "mpampd: serving on {} (fleet P={}, max {} running + {} queued{})",
+        daemon.addr(),
+        cfg.p,
+        args.get_parsed::<usize>("max-sessions")?.unwrap_or(4),
+        args.get_parsed::<usize>("max-queue")?.unwrap_or(16),
+        match args.get_parsed::<f64>("deadline-s")? {
+            Some(s) => format!(", {s}s deadline"),
+            None => String::new(),
+        }
+    );
+    // Serve until the process is killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
 }
 
 fn cmd_centralized(args: &Args) -> Result<()> {

@@ -28,6 +28,16 @@ pub trait RunObserver {
     /// Called after every completed iteration.
     fn on_iter(&mut self, _snap: &IterSnapshot) {}
 
+    /// Consulted after every `on_iter`: return `Some(reason)` to end the
+    /// run early (the reason lands in [`RunReport::stopped_early`], like
+    /// a fired [`StopRule`]). This is the push-style complement to
+    /// [`StopSet`] for observers reacting to signals outside the
+    /// iteration history — a client cancel frame, a job deadline, an
+    /// operator interrupt.
+    fn should_stop(&mut self) -> Option<String> {
+        None
+    }
+
     /// Called once with the final report (after `Done`/join).
     fn on_finish(&mut self, _report: &RunReport) {}
 }
@@ -137,6 +147,12 @@ impl RunObserver for MultiObserver<'_> {
         for p in self.parts.iter_mut() {
             p.on_iter(snap);
         }
+    }
+
+    fn should_stop(&mut self) -> Option<String> {
+        // First stop request wins; later parts are still polled next
+        // iteration if the run somehow continues.
+        self.parts.iter_mut().find_map(|p| p.should_stop())
     }
 
     fn on_finish(&mut self, report: &RunReport) {

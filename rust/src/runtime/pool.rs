@@ -136,6 +136,39 @@ impl Pool {
         self.threads
     }
 
+    /// Snapshot of how many pool threads are currently occupied by the
+    /// active task: chunks executing right now plus chunks already
+    /// published but not yet claimed. Zero when the pool is idle.
+    ///
+    /// This is a racy instantaneous probe — the task may drain (or a new
+    /// one may be published) the moment the lock is released. It exists
+    /// for *sizing* decisions, not synchronization: a caller about to
+    /// publish its own task can choose a chunk count matched to the
+    /// threads that will plausibly be free (see [`fair_chunks`](Pool::fair_chunks)).
+    pub fn busy_threads(&self) -> usize {
+        let st = self.shared.state.lock().expect("pool state poisoned");
+        if st.task.is_some() {
+            st.running + (st.chunks - st.next)
+        } else {
+            0
+        }
+    }
+
+    /// Chunk count for a task published *now*, given live occupancy:
+    /// the threads not already claimed by the active task, clamped to
+    /// `[1, cap]`. With an idle pool this is `cap.min(threads)` — the
+    /// standalone behaviour — and under contention it shrinks so
+    /// concurrent sessions share cores instead of queueing oversized
+    /// chunk lists behind each other.
+    ///
+    /// Callers whose *results* depend on the chunk count (chunk-ordered
+    /// reductions) must NOT size from this probe — it is only for
+    /// kernels that are bit-invariant to chunking.
+    pub fn fair_chunks(&self, cap: usize) -> usize {
+        let free = self.threads.saturating_sub(self.busy_threads()).max(1);
+        free.min(cap).max(1)
+    }
+
     /// Execute `task(i)` for every `i` in `0..chunks`, blocking until all
     /// chunks have run. Chunks run concurrently on the pool's workers and
     /// the calling thread; each index is executed exactly once. Panics in
@@ -395,6 +428,48 @@ mod tests {
             n.fetch_add(1, Ordering::SeqCst);
         });
         assert_eq!(n.load(Ordering::SeqCst), 4);
+    }
+
+    #[test]
+    fn occupancy_probe_idle_and_busy() {
+        let pool = Arc::new(Pool::new(4));
+        // Idle pool: nothing busy, fair share is the full cap (clamped).
+        assert_eq!(pool.busy_threads(), 0);
+        assert_eq!(pool.fair_chunks(8), 4);
+        assert_eq!(pool.fair_chunks(3), 3);
+        assert_eq!(pool.fair_chunks(0), 1);
+
+        // Hold the pool busy with chunks parked on a barrier, then probe
+        // from outside: the active task must be visible as occupancy.
+        let gate = Arc::new((Mutex::new(false), Condvar::new()));
+        let (probe_tx, probe_rx) = std::sync::mpsc::channel::<()>();
+        let publisher = {
+            let pool = pool.clone();
+            let gate = gate.clone();
+            std::thread::spawn(move || {
+                pool.run(4, |i| {
+                    if i == 0 {
+                        probe_tx.send(()).unwrap();
+                    }
+                    let (lock, cv) = &*gate;
+                    let mut open = lock.lock().unwrap();
+                    while !*open {
+                        open = cv.wait(open).unwrap();
+                    }
+                });
+            })
+        };
+        probe_rx.recv().unwrap();
+        let busy = pool.busy_threads();
+        assert!(busy >= 1 && busy <= 4, "busy={busy}");
+        assert!(pool.fair_chunks(8) >= 1);
+        {
+            let (lock, cv) = &*gate;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+        }
+        publisher.join().unwrap();
+        assert_eq!(pool.busy_threads(), 0);
     }
 
     #[test]

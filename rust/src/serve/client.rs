@@ -1,0 +1,159 @@
+//! Client handle for submitting recovery jobs to a running `mpampd`.
+//!
+//! [`Client::submit`] ships a [`RunConfig`] to the daemon and returns a
+//! [`JobHandle`]; the handle is an event stream ([`JobHandle::next_event`])
+//! ending in exactly one terminal event — the full [`RunReport`], a
+//! cancellation, or a daemon-side error. [`JobHandle::await_report`]
+//! collapses the stream for callers that only want the result.
+
+use crate::config::toml::Table;
+use crate::config::RunConfig;
+use crate::coordinator::session::{IterSnapshot, RunReport};
+use crate::error::{Error, Result};
+use crate::serve::wire::{self, JobConn, Reader};
+
+/// One streamed job event.
+#[derive(Debug)]
+pub enum JobEvent {
+    /// The job left the daemon's queue and started running.
+    Started,
+    /// One protocol round completed (same snapshot a local
+    /// `Session::run_observed` observer would see).
+    Iter(IterSnapshot),
+    /// Terminal: the finished run's full report.
+    Report(RunReport),
+    /// Terminal: the job was cancelled (usually by this client).
+    Cancelled,
+    /// Terminal: the daemon failed the job with this message.
+    Failed(String),
+}
+
+/// Job submission entry point.
+pub struct Client;
+
+impl Client {
+    /// Submit `cfg` to the daemon at `addr` (e.g. `"127.0.0.1:7700"`).
+    /// Validates the config locally first, so obvious mistakes fail
+    /// before any bytes move. Returns once the daemon accepts or rejects
+    /// the job.
+    pub fn submit(addr: &str, cfg: &RunConfig) -> Result<JobHandle> {
+        cfg.validate()?;
+        let mut conn = JobConn::client(addr)?;
+        let mut table = Table::new();
+        cfg.encode_into(&mut table);
+        conn.send(wire::J_SUBMIT, |buf| wire::encode_table(buf, &table))?;
+        let (kind, payload) = conn.recv()?;
+        match kind {
+            wire::J_ACCEPTED => {
+                let mut r = Reader::new(payload);
+                let session = r.u32()?;
+                let queue_pos = r.u32()?;
+                r.finish()?;
+                Ok(JobHandle { conn, session, queue_pos, done: false })
+            }
+            wire::J_ERROR => {
+                let mut r = Reader::new(payload);
+                let msg = r.str()?;
+                Err(Error::Transport(format!("mpampd rejected the job: {msg}")))
+            }
+            other => Err(Error::Protocol(format!(
+                "expected accept/reject after submit, got frame kind {other}"
+            ))),
+        }
+    }
+}
+
+/// A submitted job: session identity plus the progress event stream.
+pub struct JobHandle {
+    conn: JobConn,
+    session: u32,
+    queue_pos: u32,
+    done: bool,
+}
+
+impl JobHandle {
+    /// The daemon-assigned session id (appears in daemon-side transport
+    /// error context).
+    pub fn session_id(&self) -> u32 {
+        self.session
+    }
+
+    /// Queue position at admission time: `0` means the job ran
+    /// immediately; `k > 0` means it waited behind `k - 1` other jobs.
+    pub fn queue_pos(&self) -> u32 {
+        self.queue_pos
+    }
+
+    /// Ask the daemon to cancel this job. The stream still ends with a
+    /// terminal event — normally [`JobEvent::Cancelled`], or
+    /// [`JobEvent::Report`] if the run finished before the cancel
+    /// arrived.
+    pub fn cancel(&mut self) -> Result<()> {
+        self.conn.send_empty(wire::J_CANCEL)
+    }
+
+    /// Block for the next event. After a terminal event
+    /// ([`JobEvent::Report`] / [`JobEvent::Cancelled`] /
+    /// [`JobEvent::Failed`]), further calls error.
+    pub fn next_event(&mut self) -> Result<JobEvent> {
+        if self.done {
+            return Err(Error::Protocol(
+                "job already reached its terminal event".into(),
+            ));
+        }
+        let (kind, payload) = self.conn.recv()?;
+        let mut r = Reader::new(payload);
+        match kind {
+            wire::J_STARTED => {
+                r.finish()?;
+                Ok(JobEvent::Started)
+            }
+            wire::J_ITER => {
+                let snap = wire::decode_snapshot(&mut r)?;
+                r.finish()?;
+                Ok(JobEvent::Iter(snap))
+            }
+            wire::J_REPORT => {
+                let report = wire::decode_report(&mut r)?;
+                self.done = true;
+                Ok(JobEvent::Report(report))
+            }
+            wire::J_CANCELLED => {
+                r.finish()?;
+                self.done = true;
+                Ok(JobEvent::Cancelled)
+            }
+            wire::J_ERROR => {
+                let msg = r.str()?;
+                self.done = true;
+                Ok(JobEvent::Failed(msg))
+            }
+            other => Err(Error::Protocol(format!(
+                "unexpected job frame kind {other}"
+            ))),
+        }
+    }
+
+    /// Drain the stream to its terminal event and return the report;
+    /// cancellation and daemon errors surface as [`Error::Transport`].
+    pub fn await_report(mut self) -> Result<RunReport> {
+        loop {
+            match self.next_event()? {
+                JobEvent::Report(report) => return Ok(report),
+                JobEvent::Cancelled => {
+                    return Err(Error::Transport(format!(
+                        "session {}: job was cancelled",
+                        self.session
+                    )))
+                }
+                JobEvent::Failed(msg) => {
+                    return Err(Error::Transport(format!(
+                        "session {}: daemon error: {msg}",
+                        self.session
+                    )))
+                }
+                JobEvent::Started | JobEvent::Iter(_) => {}
+            }
+        }
+    }
+}

@@ -1,0 +1,629 @@
+//! `mpampd` — the long-running serving daemon.
+//!
+//! One daemon process hosts a single worker fleet (`fleet_p` threads,
+//! connected back to the fusion side over loopback TCP with the
+//! protocol-v4 **multiplexed** links) and a public job listener. Each
+//! accepted job connection submits one [`RunConfig`]; admission control
+//! ([`JobQueue`]) decides whether the job runs now, waits, or bounces.
+//! A running job drives an ordinary [`Session`] over per-session mux
+//! endpoints, so its [`RunReport`] — per-iteration records, final
+//! estimates, and exact byte accounting — is **bit-identical to a
+//! standalone run of the same config**, even while other sessions'
+//! rounds interleave on the same fleet sockets.
+//!
+//! Compute is shared through [`Pool::global`]: every served session uses
+//! a pool-aware engine whose chunk-count-invariant kernels size their
+//! fan-out to the pool's free capacity, so concurrent sessions divide
+//! the machine instead of oversubscribing it (and the chunk-ordered
+//! reduction keeps its fixed fan-out, preserving bit-determinism).
+//!
+//! [`Pool::global`]: crate::runtime::pool::Pool::global
+
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::config::{EngineKind, Partitioning, RunConfig};
+use crate::coordinator::scenario::{Column, Row, Scenario};
+use crate::coordinator::session::{IterSnapshot, RunReport, Session};
+use crate::coordinator::transport::{
+    tcp_connect_mux, Endpoint, MuxFusionLink, MuxWorkerLink, TcpFusionListener,
+    TcpTimeouts,
+};
+use crate::coordinator::worker::{Served, WorkerParams, WorkerSession};
+use crate::engine::{ColumnWorkerData, ComputeEngine, RowBatchData, RustEngine};
+use crate::error::{Error, Result};
+use crate::metrics::ByteMeter;
+use crate::observe::{RunObserver, StopSet};
+use crate::serve::queue::{Admission, JobQueue};
+use crate::serve::wire::{self, ClientSignal, JobConn, Reader};
+use crate::signal::{Batch, ProblemDims};
+use crate::util::rng::Rng;
+
+/// Daemon capacity and placement policy.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Job listener address (`"127.0.0.1:0"` picks a free port; read the
+    /// bound address back with [`Daemon::addr`]).
+    pub listen: String,
+    /// Fleet size: every job's `cfg.p` must equal this (shards are
+    /// pinned to fleet workers by id for the whole run).
+    pub fleet_p: usize,
+    /// Max concurrently *running* sessions.
+    pub max_sessions: usize,
+    /// Max sessions *waiting* beyond that (0 = reject on overload).
+    pub max_queue: usize,
+    /// Per-job wall-clock deadline, checked after every round; an
+    /// over-deadline job stops early and still reports.
+    pub deadline: Option<Duration>,
+    /// Timeout policy for the fleet links and the job handshake.
+    pub timeouts: TcpTimeouts,
+}
+
+impl ServeConfig {
+    /// Defaults: 4 concurrent sessions, 16 queued, no deadline.
+    pub fn new(listen: &str, fleet_p: usize) -> Self {
+        ServeConfig {
+            listen: listen.to_string(),
+            fleet_p,
+            max_sessions: 4,
+            max_queue: 16,
+            deadline: None,
+            timeouts: TcpTimeouts::default(),
+        }
+    }
+}
+
+/// Everything a fleet worker needs to serve one session: the scenario's
+/// shard + per-round state behind one dispatch point, and the session's
+/// pool-aware engine.
+enum WorkerEntry {
+    Row {
+        params: WorkerParams,
+        shard: RowBatchData,
+        ws: WorkerSession<Row>,
+        engine: RustEngine,
+    },
+    Column {
+        params: WorkerParams,
+        shard: ColumnWorkerData,
+        ws: WorkerSession<Column>,
+        engine: RustEngine,
+    },
+}
+
+impl WorkerEntry {
+    fn handle(&mut self, frame: &[u8], ep: &mut Endpoint) -> Result<Served> {
+        match self {
+            WorkerEntry::Row { params, shard, ws, engine } => {
+                ws.handle_frame(params, shard, &*engine, frame, ep)
+            }
+            WorkerEntry::Column { params, shard, ws, engine } => {
+                ws.handle_frame(params, shard, &*engine, frame, ep)
+            }
+        }
+    }
+}
+
+/// Hand a session's shard to one fleet worker, ahead of its first frame.
+struct FleetRegister {
+    session: u32,
+    /// The job's meter (shared with the fusion endpoints): metering is
+    /// sender-side, so worker sends land here as uplink bits exactly as
+    /// they do in a standalone run.
+    meter: Arc<ByteMeter>,
+    entry: WorkerEntry,
+}
+
+/// State shared between the acceptor, the job threads, and shutdown.
+struct DaemonShared {
+    cfg: ServeConfig,
+    /// Fusion sides of the fleet links, in worker-id order. Taken (and
+    /// dropped) on shutdown, which EOFs the fleet; job threads arriving
+    /// after that see `None` and bounce.
+    links: Mutex<Option<Vec<MuxFusionLink>>>,
+    /// Per-worker registration channels (`Mutex` keeps the `Sender`
+    /// shareable across job threads on any toolchain).
+    ctrls: Vec<Mutex<Sender<FleetRegister>>>,
+    queue: Mutex<JobQueue>,
+    queue_cv: Condvar,
+    next_session: AtomicU32,
+    shutdown: AtomicBool,
+}
+
+/// A running serving daemon. Dropping it shuts the fleet down and joins
+/// every fleet thread (jobs mid-flight fail over to error frames).
+pub struct Daemon {
+    addr: SocketAddr,
+    shared: Arc<DaemonShared>,
+    acceptor: Option<JoinHandle<()>>,
+    fleet: Vec<JoinHandle<Result<()>>>,
+}
+
+impl Daemon {
+    /// Boot the fleet, bind the job listener, and start accepting.
+    pub fn start(cfg: ServeConfig) -> Result<Daemon> {
+        if cfg.fleet_p == 0 {
+            return Err(Error::Config("fleet_p must be ≥ 1".into()));
+        }
+        // Fleet: P worker threads connect back over loopback, then the
+        // fusion side wraps each connection in a multiplexed link.
+        let fleet_listener =
+            TcpFusionListener::bind_with("127.0.0.1:0", cfg.fleet_p, cfg.timeouts)?;
+        let fleet_addr = fleet_listener.addr()?.to_string();
+        let mut ctrls = Vec::with_capacity(cfg.fleet_p);
+        let mut fleet = Vec::with_capacity(cfg.fleet_p);
+        for id in 0..cfg.fleet_p {
+            let (tx, rx) = mpsc::channel::<FleetRegister>();
+            ctrls.push(Mutex::new(tx));
+            let addr = fleet_addr.clone();
+            let timeouts = cfg.timeouts;
+            fleet.push(
+                std::thread::Builder::new()
+                    .name(format!("mpampd-worker-{id}"))
+                    .spawn(move || {
+                        let link = tcp_connect_mux(&addr, id as u32, timeouts)?;
+                        fleet_worker(link, rx, id as u32)
+                    })
+                    .map_err(Error::Io)?,
+            );
+        }
+        let links = fleet_listener.accept_all_mux()?;
+
+        let job_listener = TcpListener::bind(&cfg.listen).map_err(Error::Io)?;
+        let addr = job_listener.local_addr().map_err(Error::Io)?;
+        let queue = JobQueue::new(cfg.max_sessions, cfg.max_queue);
+        let shared = Arc::new(DaemonShared {
+            cfg,
+            links: Mutex::new(Some(links)),
+            ctrls,
+            queue: Mutex::new(queue),
+            queue_cv: Condvar::new(),
+            next_session: AtomicU32::new(1),
+            shutdown: AtomicBool::new(false),
+        });
+        let acc = shared.clone();
+        let acceptor = std::thread::Builder::new()
+            .name("mpampd-accept".into())
+            .spawn(move || {
+                for conn in job_listener.incoming() {
+                    if acc.shutdown.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let job_shared = acc.clone();
+                    // Job threads are detached: each one ends by writing a
+                    // terminal frame to its own client.
+                    let _ = std::thread::Builder::new()
+                        .name("mpampd-job".into())
+                        .spawn(move || {
+                            let _ = serve_job(job_shared, stream);
+                        });
+                }
+            })
+            .map_err(Error::Io)?;
+        Ok(Daemon { addr, shared, acceptor: Some(acceptor), fleet })
+    }
+
+    /// The bound job-listener address (what clients connect to).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Sessions currently running / waiting (for logs and smoke checks).
+    pub fn load(&self) -> (usize, usize) {
+        let q = self.shared.queue.lock().expect("queue poisoned");
+        (q.running(), q.queued())
+    }
+
+    /// Stop accepting, EOF the fleet, and join it. Called by `Drop`;
+    /// explicit for callers that want shutdown errors surfaced.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop();
+        let mut first_err = None;
+        for h in self.fleet.drain(..) {
+            match h.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => first_err = first_err.or(Some(e)),
+                Err(_) => {
+                    first_err = first_err
+                        .or_else(|| Some(Error::Transport("fleet worker panicked".into())))
+                }
+            }
+        }
+        match first_err {
+            None => Ok(()),
+            Some(e) => Err(e),
+        }
+    }
+
+    fn stop(&mut self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // Unblock the acceptor's `incoming()` with a throwaway connection.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // Dropping the fusion links EOFs every fleet worker's demux read.
+        let links = self.shared.links.lock().expect("links poisoned").take();
+        drop(links);
+        // Wake queued jobs so they notice shutdown and bail out.
+        self.shared.queue_cv.notify_all();
+    }
+}
+
+impl Drop for Daemon {
+    fn drop(&mut self) {
+        self.stop();
+        for h in self.fleet.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+// ---------- fleet side ----------
+
+/// One fleet worker: demultiplex session frames off the shared link,
+/// look up (or register) the session's state, and serve the frame with
+/// the exact same [`WorkerSession`] state machine a standalone worker
+/// thread runs.
+fn fleet_worker(
+    mut link: MuxWorkerLink,
+    ctrl: Receiver<FleetRegister>,
+    worker_id: u32,
+) -> Result<()> {
+    struct Live {
+        entry: WorkerEntry,
+        ep: Endpoint,
+    }
+    let mut live: HashMap<u32, Live> = HashMap::new();
+    let mut frame: Vec<u8> = Vec::new();
+    let role = format!("worker {worker_id}");
+    loop {
+        let sid = match link.recv_session_frame(&mut frame)? {
+            Some(sid) => sid,
+            // Fusion links dropped: clean fleet shutdown.
+            None => return Ok(()),
+        };
+        if !live.contains_key(&sid) {
+            // Registrations are enqueued before the job's first frame is
+            // sent, so draining here always finds a new session's entry.
+            while let Ok(reg) = ctrl.try_recv() {
+                let ep = link.session_endpoint(reg.session, reg.meter);
+                live.insert(reg.session, Live { entry: reg.entry, ep });
+            }
+        }
+        let Some(l) = live.get_mut(&sid) else {
+            return Err(Error::Protocol(format!(
+                "fleet {role}: frame for unregistered session {sid}"
+            )));
+        };
+        match l
+            .entry
+            .handle(&frame, &mut l.ep)
+            .map_err(|e| e.transport_context(sid, &role))?
+        {
+            Served::Continue => {}
+            Served::Done => {
+                live.remove(&sid);
+            }
+        }
+    }
+}
+
+// ---------- job side ----------
+
+enum JobOutcome {
+    Report(RunReport),
+    Cancelled(String),
+}
+
+/// Streams per-round progress to the job's client and turns client
+/// cancels / disconnects / the daemon deadline into an early stop.
+struct ProgressForwarder<'a> {
+    conn: &'a mut JobConn,
+    started: Instant,
+    deadline: Option<Duration>,
+    cancelled: Option<String>,
+}
+
+impl RunObserver for ProgressForwarder<'_> {
+    fn on_iter(&mut self, snap: &IterSnapshot) {
+        if self.cancelled.is_some() {
+            return;
+        }
+        if self
+            .conn
+            .send(wire::J_ITER, |buf| wire::encode_snapshot(buf, snap))
+            .is_err()
+        {
+            self.cancelled = Some("client disconnected".into());
+        }
+    }
+
+    fn should_stop(&mut self) -> Option<String> {
+        if let Some(why) = &self.cancelled {
+            return Some(why.clone());
+        }
+        if let Some(d) = self.deadline {
+            if self.started.elapsed() > d {
+                return Some(format!(
+                    "job deadline exceeded ({:.1}s)",
+                    d.as_secs_f64()
+                ));
+            }
+        }
+        match self.conn.poll_client() {
+            Some(ClientSignal::Cancel) => {
+                self.cancelled = Some("cancelled by client".into());
+                self.cancelled.clone()
+            }
+            Some(ClientSignal::Gone) => {
+                self.cancelled = Some("client disconnected".into());
+                self.cancelled.clone()
+            }
+            None => None,
+        }
+    }
+}
+
+/// A job's config must fit the fleet it will run on.
+fn validate_job(cfg: &RunConfig, serve: &ServeConfig) -> Result<()> {
+    cfg.validate()?;
+    if cfg.p != serve.fleet_p {
+        return Err(Error::Config(format!(
+            "job wants P={} workers but this daemon's fleet has {}",
+            cfg.p, serve.fleet_p
+        )));
+    }
+    if cfg.engine != EngineKind::Rust {
+        return Err(Error::Config(
+            "served jobs require engine = \"rust\" (the fleet shares the \
+             process-wide compute pool)"
+                .into(),
+        ));
+    }
+    Ok(())
+}
+
+/// Drive one job connection end to end. Every failure path ends with a
+/// terminal frame to the client (best-effort) before returning.
+fn serve_job(shared: Arc<DaemonShared>, stream: TcpStream) -> Result<()> {
+    let mut conn = JobConn::server(stream, shared.cfg.timeouts.accept)?;
+    // Submit.
+    let cfg = match recv_submit(&mut conn) {
+        Ok(cfg) => cfg,
+        Err(e) => {
+            let _ = conn.send_error(&e.to_string());
+            return Err(e);
+        }
+    };
+    conn.set_blocking()?;
+    if let Err(e) = validate_job(&cfg, &shared.cfg) {
+        let _ = conn.send_error(&e.to_string());
+        return Err(e);
+    }
+    let sid = shared.next_session.fetch_add(1, Ordering::Relaxed);
+    // Admission.
+    let admission = shared.queue.lock().expect("queue poisoned").admit(sid);
+    match admission {
+        Admission::Reject => {
+            let q = shared.queue.lock().expect("queue poisoned");
+            let msg = format!(
+                "daemon at capacity: {} running, {} queued (max {} + {})",
+                q.running(),
+                q.queued(),
+                shared.cfg.max_sessions,
+                shared.cfg.max_queue
+            );
+            drop(q);
+            let _ = conn.send_error(&msg);
+            return Ok(());
+        }
+        Admission::Run => {
+            // An unreachable client must not leak its admitted slot.
+            if let Err(e) = send_accepted(&mut conn, sid, 0) {
+                shared.queue.lock().expect("queue poisoned").release();
+                shared.queue_cv.notify_all();
+                return Err(e);
+            }
+        }
+        Admission::Queued(pos) => {
+            if let Err(e) = send_accepted(&mut conn, sid, pos as u32) {
+                shared.queue.lock().expect("queue poisoned").abandon(sid);
+                shared.queue_cv.notify_all();
+                return Err(e);
+            }
+            if !wait_for_slot(&shared, &mut conn, sid)? {
+                return Ok(()); // cancelled / disconnected while queued
+            }
+        }
+    }
+    // From here this thread owns a running slot: release it on all paths.
+    let outcome = run_job(&shared, &mut conn, sid, &cfg);
+    shared.queue.lock().expect("queue poisoned").release();
+    shared.queue_cv.notify_all();
+    match outcome {
+        Ok(JobOutcome::Report(report)) => {
+            conn.send(wire::J_REPORT, |buf| wire::encode_report(buf, &report))
+        }
+        Ok(JobOutcome::Cancelled(_)) => conn.send_empty(wire::J_CANCELLED),
+        Err(e) => {
+            let tagged = e.transport_context(sid, "fusion");
+            let _ = conn.send_error(&tagged.to_string());
+            Err(tagged)
+        }
+    }
+}
+
+fn recv_submit(conn: &mut JobConn) -> Result<RunConfig> {
+    let (kind, payload) = conn.recv()?;
+    if kind != wire::J_SUBMIT {
+        return Err(Error::Protocol(format!(
+            "expected a submit frame, got kind {kind}"
+        )));
+    }
+    let mut r = Reader::new(payload);
+    let table = wire::decode_table(&mut r)?;
+    r.finish()?;
+    RunConfig::from_table(&table)
+}
+
+fn send_accepted(conn: &mut JobConn, sid: u32, pos: u32) -> Result<()> {
+    conn.send(wire::J_ACCEPTED, |buf| {
+        wire::push_u32(buf, sid);
+        wire::push_u32(buf, pos);
+    })
+}
+
+/// Park a queued job until its slot frees. Returns `false` when the job
+/// left the queue without running (client cancel/disconnect, shutdown).
+fn wait_for_slot(
+    shared: &DaemonShared,
+    conn: &mut JobConn,
+    sid: u32,
+) -> Result<bool> {
+    loop {
+        {
+            let mut q = shared.queue.lock().expect("queue poisoned");
+            if q.claim(sid) {
+                return Ok(true);
+            }
+            let (mut q, _timeout) = shared
+                .queue_cv
+                .wait_timeout(q, Duration::from_millis(25))
+                .expect("queue poisoned");
+            if q.claim(sid) {
+                return Ok(true);
+            }
+        }
+        // Lock released: poll the client socket between waits.
+        match conn.poll_client() {
+            Some(signal) => {
+                shared.queue.lock().expect("queue poisoned").abandon(sid);
+                shared.queue_cv.notify_all();
+                if signal == ClientSignal::Cancel {
+                    let _ = conn.send_empty(wire::J_CANCELLED);
+                }
+                return Ok(false);
+            }
+            None => {}
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            shared.queue.lock().expect("queue poisoned").abandon(sid);
+            let _ = conn.send_error("daemon is shutting down");
+            return Ok(false);
+        }
+    }
+}
+
+/// Run an admitted job: regenerate the problem from the config's seed
+/// (bit-identical to `Session::new`), register per-worker shards with
+/// the fleet, open the session's fusion-side mux endpoints, and drive a
+/// plain [`Session`] with progress forwarding.
+fn run_job(
+    shared: &DaemonShared,
+    conn: &mut JobConn,
+    sid: u32,
+    cfg: &RunConfig,
+) -> Result<JobOutcome> {
+    conn.send_empty(wire::J_STARTED)?;
+    let mut rng = Rng::new(cfg.seed);
+    let batch = Arc::new(Batch::generate(
+        cfg.prior,
+        ProblemDims { n: cfg.n, m: cfg.m, sigma_e2: cfg.sigma_e2() },
+        &mut rng,
+        cfg.batch,
+    )?);
+    let job_meter = Arc::new(ByteMeter::new());
+    register_fleet(shared, sid, cfg, &batch, &job_meter)?;
+    let endpoints: Vec<Endpoint> = {
+        let guard = shared.links.lock().expect("links poisoned");
+        let Some(links) = guard.as_ref() else {
+            return Err(Error::Transport("daemon is shutting down".into()));
+        };
+        links.iter().map(|l| l.open_session(sid, job_meter.clone())).collect()
+    };
+    let engine: Arc<dyn ComputeEngine> =
+        Arc::new(RustEngine::new_pool_aware(cfg.prior, cfg.threads));
+    let session = Session::with_external_transport(
+        cfg.clone(),
+        batch,
+        engine,
+        job_meter,
+        endpoints,
+    )?;
+    let mut forwarder = ProgressForwarder {
+        conn,
+        started: Instant::now(),
+        deadline: shared.cfg.deadline,
+        cancelled: None,
+    };
+    let report = session.run_observed(&mut forwarder, &StopSet::none())?;
+    match forwarder.cancelled.take() {
+        Some(why) => Ok(JobOutcome::Cancelled(why)),
+        None => Ok(JobOutcome::Report(report)),
+    }
+}
+
+/// Build and ship one session's per-worker state to every fleet worker.
+/// Registration precedes the session's first broadcast, so a fleet
+/// worker that sees an unknown session id only has to drain its control
+/// channel.
+fn register_fleet(
+    shared: &DaemonShared,
+    sid: u32,
+    cfg: &RunConfig,
+    batch: &Arc<Batch>,
+    meter: &Arc<ByteMeter>,
+) -> Result<()> {
+    let entries: Vec<WorkerEntry> = match cfg.partitioning {
+        Partitioning::Row => Row::split(batch, cfg.p)?
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let params = worker_params(i, cfg);
+                let ws = WorkerSession::<Row>::new(&shard, cfg.batch);
+                let engine = RustEngine::new_pool_aware(cfg.prior, cfg.threads);
+                WorkerEntry::Row { params, shard, ws, engine }
+            })
+            .collect(),
+        Partitioning::Column => Column::split(batch, cfg.p)?
+            .into_iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let params = worker_params(i, cfg);
+                let ws = WorkerSession::<Column>::new(&shard, cfg.batch);
+                let engine = RustEngine::new_pool_aware(cfg.prior, cfg.threads);
+                WorkerEntry::Column { params, shard, ws, engine }
+            })
+            .collect(),
+    };
+    for (i, entry) in entries.into_iter().enumerate() {
+        let reg = FleetRegister { session: sid, meter: meter.clone(), entry };
+        shared.ctrls[i]
+            .lock()
+            .expect("fleet control poisoned")
+            .send(reg)
+            .map_err(|_| {
+                Error::Transport(format!("fleet worker {i} is gone"))
+                    .transport_context(sid, "fusion")
+            })?;
+    }
+    Ok(())
+}
+
+fn worker_params(id: usize, cfg: &RunConfig) -> WorkerParams {
+    WorkerParams {
+        id: id as u32,
+        p_workers: cfg.p,
+        batch: cfg.batch,
+        prior: cfg.prior,
+    }
+}

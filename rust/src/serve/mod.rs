@@ -1,0 +1,76 @@
+//! `mpampd`: a multi-session MP-AMP serving daemon.
+//!
+//! A standalone [`Session`](crate::Session) spins up a worker fleet, runs
+//! one recovery, and tears everything down. This module keeps the fleet
+//! **resident**: one daemon process owns `P` fleet workers (connected over
+//! the protocol-v4 multiplexed TCP links, where every frame carries a
+//! session id) and serves many concurrent recovery jobs over them —
+//! interleaving different sessions' rounds on the same sockets, sharing
+//! the process-wide compute pool via pool-aware chunk sizing, and
+//! admission-controlling overload with a bounded run set + FIFO queue.
+//!
+//! The serving path reuses the standalone protocol code end to end (same
+//! [`WorkerSession`](crate::coordinator::worker) state machine, same
+//! fusion driver, same seeded problem generation, sender-side byte
+//! metering below the mux framing), so a served job's
+//! [`RunReport`](crate::RunReport) — per-iteration records, final
+//! estimates, and exact bit accounting — is **bit-identical** to running
+//! the same config standalone.
+//!
+//! # Worked example
+//!
+//! ```no_run
+//! use mpamp::config::RunConfig;
+//! use mpamp::serve::{Client, Daemon, JobEvent, ServeConfig};
+//!
+//! // Daemon side (usually `mpamp serve --listen 127.0.0.1:7700`):
+//! // a resident fleet of 6 workers, at most 2 jobs running at once.
+//! let mut serve_cfg = ServeConfig::new("127.0.0.1:0", 6);
+//! serve_cfg.max_sessions = 2;
+//! let daemon = Daemon::start(serve_cfg).unwrap();
+//! let addr = daemon.addr().to_string();
+//!
+//! // Client side: submit a job whose P matches the fleet, then stream
+//! // per-round progress until the terminal report.
+//! let cfg = RunConfig::test_small(0.05); // P = 6
+//! let mut job = Client::submit(&addr, &cfg).unwrap();
+//! println!("session {} (queue position {})", job.session_id(), job.queue_pos());
+//! loop {
+//!     match job.next_event().unwrap() {
+//!         JobEvent::Started => println!("running"),
+//!         JobEvent::Iter(snap) => {
+//!             println!("t={} SDR={:.2} dB", snap.t(), snap.sdr_db());
+//!         }
+//!         JobEvent::Report(report) => {
+//!             println!(
+//!                 "done: {:.2} dB in {:.2} bits/element",
+//!                 report.final_sdr_db(),
+//!                 report.total_uplink_bits_per_element()
+//!             );
+//!             break;
+//!         }
+//!         JobEvent::Cancelled => break,
+//!         JobEvent::Failed(msg) => panic!("daemon error: {msg}"),
+//!     }
+//! }
+//! daemon.shutdown().unwrap();
+//! ```
+//!
+//! # Capacity policy
+//!
+//! [`ServeConfig::max_sessions`] bounds concurrently *running* jobs;
+//! [`ServeConfig::max_queue`] bounds jobs *waiting* beyond that (a full
+//! queue rejects, an admitted-but-queued job learns its 1-based position
+//! from [`JobHandle::queue_pos`]); [`ServeConfig::deadline`] stops
+//! over-long jobs after the current round while still returning their
+//! partial report. Cancelling ([`JobHandle::cancel`]) — or just
+//! disconnecting — frees the job's slot for the next queued session.
+
+pub mod client;
+pub mod daemon;
+pub mod queue;
+pub(crate) mod wire;
+
+pub use client::{Client, JobEvent, JobHandle};
+pub use daemon::{Daemon, ServeConfig};
+pub use queue::{Admission, JobQueue};

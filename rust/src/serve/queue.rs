@@ -1,0 +1,173 @@
+//! Admission control for the serving daemon: a bounded running set plus
+//! a bounded FIFO wait queue, as pure data (no locks, no sockets) so the
+//! policy is unit-testable in isolation. The daemon wraps one [`JobQueue`]
+//! in a `Mutex`/`Condvar` pair; each job thread admits itself, waits to be
+//! promoted if queued, and releases its slot when the run ends.
+
+use std::collections::{HashSet, VecDeque};
+
+/// Outcome of submitting a job to the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// A running slot was free: the job runs immediately.
+    Run,
+    /// All slots busy; the job waits at this 1-based queue position.
+    Queued(usize),
+    /// Both the running set and the wait queue are full.
+    Reject,
+}
+
+/// Capacity policy state: who is running, who is waiting, and who has
+/// been promoted out of the queue but not yet noticed.
+#[derive(Debug)]
+pub struct JobQueue {
+    max_running: usize,
+    max_queued: usize,
+    running: usize,
+    queued: VecDeque<u32>,
+    /// Sessions moved queue → running by [`release`](JobQueue::release)
+    /// whose owning thread has not yet [`claim`](JobQueue::claim)ed the
+    /// slot (promotion happens under the releasing thread's lock hold).
+    promoted: HashSet<u32>,
+}
+
+impl JobQueue {
+    /// New queue admitting up to `max_running` concurrent sessions and
+    /// holding up to `max_queued` waiting ones.
+    pub fn new(max_running: usize, max_queued: usize) -> Self {
+        JobQueue {
+            max_running: max_running.max(1),
+            max_queued,
+            running: 0,
+            queued: VecDeque::new(),
+            promoted: HashSet::new(),
+        }
+    }
+
+    /// Submit session `id`: take a running slot, join the wait queue, or
+    /// bounce.
+    pub fn admit(&mut self, id: u32) -> Admission {
+        if self.running < self.max_running {
+            self.running += 1;
+            Admission::Run
+        } else if self.queued.len() < self.max_queued {
+            self.queued.push_back(id);
+            Admission::Queued(self.queued.len())
+        } else {
+            Admission::Reject
+        }
+    }
+
+    /// Whether session `id` has been promoted into a running slot; the
+    /// queued job thread polls this after each condvar wake. Consumes the
+    /// promotion — the caller owns the slot from then on.
+    pub fn claim(&mut self, id: u32) -> bool {
+        self.promoted.remove(&id)
+    }
+
+    /// A running session ended: free its slot and promote the longest
+    /// waiter, if any (the promoted session keeps the slot counted as
+    /// running until it releases in turn).
+    pub fn release(&mut self) {
+        debug_assert!(self.running > 0, "release without a running session");
+        self.running = self.running.saturating_sub(1);
+        if let Some(next) = self.queued.pop_front() {
+            self.running += 1;
+            self.promoted.insert(next);
+        }
+    }
+
+    /// A *waiting* session gave up (client cancel or disconnect). If it
+    /// was promoted between its last poll and now, the slot it silently
+    /// held is released onward.
+    pub fn abandon(&mut self, id: u32) {
+        if let Some(idx) = self.queued.iter().position(|&q| q == id) {
+            self.queued.remove(idx);
+        } else if self.promoted.remove(&id) {
+            self.release();
+        }
+    }
+
+    /// Sessions currently holding running slots.
+    pub fn running(&self) -> usize {
+        self.running
+    }
+
+    /// Sessions currently waiting.
+    pub fn queued(&self) -> usize {
+        self.queued.len()
+    }
+
+    /// 1-based wait position of session `id`, if it is queued.
+    pub fn position(&self, id: u32) -> Option<usize> {
+        self.queued.iter().position(|&q| q == id).map(|i| i + 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn admits_up_to_capacity_then_queues_then_rejects() {
+        let mut q = JobQueue::new(2, 1);
+        assert_eq!(q.admit(1), Admission::Run);
+        assert_eq!(q.admit(2), Admission::Run);
+        assert_eq!(q.admit(3), Admission::Queued(1));
+        assert_eq!(q.admit(4), Admission::Reject);
+        assert_eq!(q.running(), 2);
+        assert_eq!(q.queued(), 1);
+        assert_eq!(q.position(3), Some(1));
+        assert_eq!(q.position(4), None);
+    }
+
+    #[test]
+    fn release_promotes_fifo() {
+        let mut q = JobQueue::new(1, 4);
+        assert_eq!(q.admit(10), Admission::Run);
+        assert_eq!(q.admit(11), Admission::Queued(1));
+        assert_eq!(q.admit(12), Admission::Queued(2));
+        q.release();
+        // 11 was promoted and holds the slot even before claiming it.
+        assert_eq!(q.running(), 1);
+        assert_eq!(q.queued(), 1);
+        assert!(!q.claim(12), "12 is still waiting");
+        assert!(q.claim(11), "11 owns the freed slot");
+        assert!(!q.claim(11), "claim consumes the promotion");
+        q.release();
+        assert!(q.claim(12));
+        q.release();
+        assert_eq!(q.running(), 0);
+    }
+
+    #[test]
+    fn abandon_from_queue_and_after_promotion() {
+        let mut q = JobQueue::new(1, 4);
+        assert_eq!(q.admit(1), Admission::Run);
+        assert_eq!(q.admit(2), Admission::Queued(1));
+        assert_eq!(q.admit(3), Admission::Queued(2));
+        // 2 gives up while still queued: 3 moves forward.
+        q.abandon(2);
+        assert_eq!(q.position(3), Some(1));
+        // 1 finishes, promoting 3; 3 then gives up *after* promotion —
+        // the slot must not leak.
+        q.release();
+        q.abandon(3);
+        assert_eq!(q.running(), 0);
+        assert_eq!(q.queued(), 0);
+        assert_eq!(q.admit(4), Admission::Run);
+    }
+
+    #[test]
+    fn zero_queue_capacity_rejects_immediately() {
+        let mut q = JobQueue::new(1, 0);
+        assert_eq!(q.admit(1), Admission::Run);
+        assert_eq!(q.admit(2), Admission::Reject);
+    }
+
+    #[test]
+    fn max_running_floor_is_one() {
+        let mut q = JobQueue::new(0, 0);
+        assert_eq!(q.admit(1), Admission::Run);
+    }
+}

@@ -1,0 +1,574 @@
+//! Job-connection wire protocol for the serving daemon.
+//!
+//! Each recovery job talks to `mpampd` over its **own** TCP connection
+//! (separate from the multiplexed worker-fleet links): a 5-byte hello
+//! `[PROTOCOL_VERSION: u8][JOB_MAGIC: u32 LE]`, then length-prefixed
+//! frames `[len: u32 LE][kind: u8][payload]` where `len` counts the kind
+//! byte plus the payload. All scalars are little-endian; floats travel as
+//! raw IEEE-754 bits so decoded values are bit-identical to what the
+//! daemon computed.
+//!
+//! Client → daemon: [`J_SUBMIT`] (a [`RunConfig`] as its flat config
+//! table), then optionally [`J_CANCEL`]. Daemon → client:
+//! [`J_ACCEPTED`] `{session_id, queue_pos}` (pos 0 = running now),
+//! [`J_STARTED`], one [`J_ITER`] per protocol round (an
+//! [`IterSnapshot`]), and exactly one terminal frame — [`J_REPORT`]
+//! (full [`RunReport`]), [`J_CANCELLED`], or [`J_ERROR`].
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::config::toml::{Table, Value};
+use crate::coordinator::message::PROTOCOL_VERSION;
+use crate::coordinator::session::{IterSnapshot, RunReport};
+use crate::error::{Error, Result};
+use crate::metrics::IterRecord;
+
+/// Magic identifying a job connection's hello (vs a fleet worker hello,
+/// which carries a worker id in these four bytes).
+pub(crate) const JOB_MAGIC: u32 = u32::from_le_bytes(*b"mpjb");
+
+/// Client → daemon: submit a job (payload: encoded config table).
+pub(crate) const J_SUBMIT: u8 = 1;
+/// Client → daemon: cancel the submitted job (no payload).
+pub(crate) const J_CANCEL: u8 = 2;
+/// Daemon → client: job admitted (`{session_id: u32, queue_pos: u32}`).
+pub(crate) const J_ACCEPTED: u8 = 3;
+/// Daemon → client: job left the queue and is running (no payload).
+pub(crate) const J_STARTED: u8 = 4;
+/// Daemon → client: one per-round progress snapshot.
+pub(crate) const J_ITER: u8 = 5;
+/// Daemon → client, terminal: the full run report.
+pub(crate) const J_REPORT: u8 = 6;
+/// Daemon → client, terminal: the job failed (payload: message string).
+pub(crate) const J_ERROR: u8 = 7;
+/// Daemon → client, terminal: the job was cancelled (no payload).
+pub(crate) const J_CANCELLED: u8 = 8;
+
+/// Frame size cap (kind byte + payload); reports carry `B × N` floats.
+const MAX_JOB_FRAME: usize = (1 << 30) + 1;
+
+// ---------- scalar codec helpers ----------
+
+pub(crate) fn push_u32(buf: &mut Vec<u8>, v: u32) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn push_u64(buf: &mut Vec<u8>, v: u64) {
+    buf.extend_from_slice(&v.to_le_bytes());
+}
+
+pub(crate) fn push_f64(buf: &mut Vec<u8>, v: f64) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+pub(crate) fn push_f32(buf: &mut Vec<u8>, v: f32) {
+    buf.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+pub(crate) fn push_str(buf: &mut Vec<u8>, s: &str) {
+    push_u32(buf, s.len() as u32);
+    buf.extend_from_slice(s.as_bytes());
+}
+
+/// Cursor over a received payload; every read is bounds-checked so a
+/// malformed frame fails with a protocol error instead of a panic.
+pub(crate) struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Self {
+        Reader { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let end = self.pos.checked_add(n).filter(|&e| e <= self.buf.len());
+        let Some(end) = end else {
+            return Err(Error::Protocol(format!(
+                "job frame truncated: need {n} bytes at offset {} of {}",
+                self.pos,
+                self.buf.len()
+            )));
+        };
+        let out = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+
+    pub(crate) fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn f64(&mut self) -> Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub(crate) fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String> {
+        let len = self.u32()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Protocol("job frame string is not UTF-8".into()))
+    }
+
+    pub(crate) fn finish(&self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(Error::Protocol(format!(
+                "job frame has {} trailing bytes",
+                self.buf.len() - self.pos
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------- config table codec ----------
+
+/// Encode a flat config table (`BTreeMap` iteration order makes the
+/// encoding deterministic).
+pub(crate) fn encode_table(buf: &mut Vec<u8>, t: &Table) {
+    push_u32(buf, t.len() as u32);
+    for (key, value) in t {
+        push_str(buf, key);
+        match value {
+            Value::Int(v) => {
+                buf.push(0);
+                buf.extend_from_slice(&v.to_le_bytes());
+            }
+            Value::Float(v) => {
+                buf.push(1);
+                push_f64(buf, *v);
+            }
+            Value::Str(v) => {
+                buf.push(2);
+                push_str(buf, v);
+            }
+            Value::Bool(v) => {
+                buf.push(3);
+                buf.push(*v as u8);
+            }
+        }
+    }
+}
+
+/// Decode a flat config table.
+pub(crate) fn decode_table(r: &mut Reader) -> Result<Table> {
+    let count = r.u32()? as usize;
+    let mut t = Table::new();
+    for _ in 0..count {
+        let key = r.str()?;
+        let value = match r.u8()? {
+            0 => Value::Int(i64::from_le_bytes(r.take(8)?.try_into().unwrap())),
+            1 => Value::Float(r.f64()?),
+            2 => Value::Str(r.str()?),
+            3 => Value::Bool(r.u8()? != 0),
+            tag => {
+                return Err(Error::Protocol(format!(
+                    "unknown config value tag {tag} for key '{key}'"
+                )))
+            }
+        };
+        t.insert(key, value);
+    }
+    Ok(t)
+}
+
+// ---------- progress / report codec ----------
+
+/// Encode one per-iteration snapshot.
+pub(crate) fn encode_snapshot(buf: &mut Vec<u8>, s: &IterSnapshot) {
+    push_u64(buf, s.record.t as u64);
+    push_f64(buf, s.record.sdr_db);
+    push_f64(buf, s.record.sdr_pred_db);
+    push_f64(buf, s.record.rate_alloc);
+    push_f64(buf, s.record.rate_wire);
+    push_f64(buf, s.record.sigma_q2);
+    push_f64(buf, s.record.sigma_d2_hat);
+    push_f64(buf, s.record.wall_s);
+    push_f64(buf, s.cum_wire_bits_per_element);
+    push_f64(buf, s.cum_alloc_bits_per_element);
+}
+
+fn decode_record(r: &mut Reader) -> Result<IterRecord> {
+    Ok(IterRecord {
+        t: r.u64()? as usize,
+        sdr_db: r.f64()?,
+        sdr_pred_db: r.f64()?,
+        rate_alloc: r.f64()?,
+        rate_wire: r.f64()?,
+        sigma_q2: r.f64()?,
+        sigma_d2_hat: r.f64()?,
+        wall_s: r.f64()?,
+    })
+}
+
+/// Decode one per-iteration snapshot.
+pub(crate) fn decode_snapshot(r: &mut Reader) -> Result<IterSnapshot> {
+    Ok(IterSnapshot {
+        record: decode_record(r)?,
+        cum_wire_bits_per_element: r.f64()?,
+        cum_alloc_bits_per_element: r.f64()?,
+    })
+}
+
+/// Encode a full run report.
+pub(crate) fn encode_report(buf: &mut Vec<u8>, rep: &RunReport) {
+    push_u32(buf, rep.iters.len() as u32);
+    for rec in &rep.iters {
+        push_u64(buf, rec.t as u64);
+        push_f64(buf, rec.sdr_db);
+        push_f64(buf, rec.sdr_pred_db);
+        push_f64(buf, rec.rate_alloc);
+        push_f64(buf, rec.rate_wire);
+        push_f64(buf, rec.sigma_q2);
+        push_f64(buf, rec.sigma_d2_hat);
+        push_f64(buf, rec.wall_s);
+    }
+    push_u32(buf, rep.final_xs.len() as u32);
+    for x in &rep.final_xs {
+        push_u32(buf, x.len() as u32);
+        for v in x {
+            push_f32(buf, *v);
+        }
+    }
+    push_u32(buf, rep.sdr_db_per_signal.len() as u32);
+    for v in &rep.sdr_db_per_signal {
+        push_f64(buf, *v);
+    }
+    push_u32(buf, rep.batch as u32);
+    push_u32(buf, rep.dims.0 as u32);
+    push_u32(buf, rep.dims.1 as u32);
+    push_u32(buf, rep.dims.2 as u32);
+    push_str(buf, &rep.schedule);
+    push_str(buf, &rep.engine);
+    push_str(buf, &rep.partitioning);
+    push_u64(buf, rep.transport_uplink_bits);
+    push_u64(buf, rep.transport_downlink_bits);
+    push_f64(buf, rep.wall_s);
+    match &rep.stopped_early {
+        None => buf.push(0),
+        Some(why) => {
+            buf.push(1);
+            push_str(buf, why);
+        }
+    }
+}
+
+/// Decode a full run report.
+pub(crate) fn decode_report(r: &mut Reader) -> Result<RunReport> {
+    let n_iters = r.u32()? as usize;
+    let mut iters = Vec::with_capacity(n_iters);
+    for _ in 0..n_iters {
+        iters.push(decode_record(r)?);
+    }
+    let n_sig = r.u32()? as usize;
+    let mut final_xs = Vec::with_capacity(n_sig);
+    for _ in 0..n_sig {
+        let len = r.u32()? as usize;
+        let mut x = Vec::with_capacity(len);
+        for _ in 0..len {
+            x.push(r.f32()?);
+        }
+        final_xs.push(x);
+    }
+    let n_sdr = r.u32()? as usize;
+    let mut sdr_db_per_signal = Vec::with_capacity(n_sdr);
+    for _ in 0..n_sdr {
+        sdr_db_per_signal.push(r.f64()?);
+    }
+    let batch = r.u32()? as usize;
+    let dims = (r.u32()? as usize, r.u32()? as usize, r.u32()? as usize);
+    let schedule = r.str()?;
+    let engine = r.str()?;
+    let partitioning = r.str()?;
+    let transport_uplink_bits = r.u64()?;
+    let transport_downlink_bits = r.u64()?;
+    let wall_s = r.f64()?;
+    let stopped_early = match r.u8()? {
+        0 => None,
+        _ => Some(r.str()?),
+    };
+    r.finish()?;
+    Ok(RunReport {
+        iters,
+        final_xs,
+        sdr_db_per_signal,
+        batch,
+        dims,
+        schedule,
+        engine,
+        partitioning,
+        transport_uplink_bits,
+        transport_downlink_bits,
+        wall_s,
+        stopped_early,
+    })
+}
+
+// ---------- framed job connection ----------
+
+/// What a server-side poll of the client socket observed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum ClientSignal {
+    /// The client sent a well-formed cancel frame.
+    Cancel,
+    /// The client disconnected (or sent something other than a cancel).
+    Gone,
+}
+
+/// One framed job connection (either side). Owns a reused frame buffer,
+/// so streaming a progress event per round allocates nothing in steady
+/// state.
+pub(crate) struct JobConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+}
+
+impl JobConn {
+    /// Client side: connect and send the job hello.
+    pub(crate) fn client(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr).map_err(|e| {
+            Error::Transport(format!("cannot reach mpampd at {addr}: {e}"))
+        })?;
+        stream.set_nodelay(true).map_err(Error::Io)?;
+        let mut hello = [0u8; 5];
+        hello[0] = PROTOCOL_VERSION;
+        hello[1..5].copy_from_slice(&JOB_MAGIC.to_le_bytes());
+        let mut conn = JobConn { stream, buf: Vec::new() };
+        conn.stream.write_all(&hello).map_err(Error::Io)?;
+        Ok(conn)
+    }
+
+    /// Server side: validate the job hello on an accepted stream. The
+    /// handshake (and the submit frame that follows) runs under
+    /// `handshake_timeout` so a silent client cannot pin a daemon thread;
+    /// call [`JobConn::set_blocking`] once the job is admitted.
+    pub(crate) fn server(stream: TcpStream, handshake_timeout: Duration) -> Result<Self> {
+        stream.set_nodelay(true).map_err(Error::Io)?;
+        stream
+            .set_read_timeout(Some(handshake_timeout))
+            .map_err(Error::Io)?;
+        let mut conn = JobConn { stream, buf: Vec::new() };
+        let mut hello = [0u8; 5];
+        conn.stream.read_exact(&mut hello).map_err(|e| {
+            Error::Transport(format!("job hello not received: {e}"))
+        })?;
+        if hello[0] != PROTOCOL_VERSION {
+            return Err(Error::Protocol(format!(
+                "job client speaks protocol v{}, daemon speaks v{PROTOCOL_VERSION}",
+                hello[0]
+            )));
+        }
+        let magic = u32::from_le_bytes(hello[1..5].try_into().unwrap());
+        if magic != JOB_MAGIC {
+            return Err(Error::Protocol(format!(
+                "not a job connection (hello magic {magic:#x})"
+            )));
+        }
+        Ok(conn)
+    }
+
+    /// Drop the read deadline (used once a job is admitted: the client
+    /// legitimately stays silent while results stream toward it).
+    pub(crate) fn set_blocking(&mut self) -> Result<()> {
+        self.stream.set_read_timeout(None).map_err(Error::Io)
+    }
+
+    /// Send one frame whose payload is written by `fill`.
+    pub(crate) fn send(
+        &mut self,
+        kind: u8,
+        fill: impl FnOnce(&mut Vec<u8>),
+    ) -> Result<()> {
+        self.buf.clear();
+        self.buf.extend_from_slice(&[0, 0, 0, 0, kind]);
+        fill(&mut self.buf);
+        let len = (self.buf.len() - 4) as u32;
+        self.buf[..4].copy_from_slice(&len.to_le_bytes());
+        self.stream.write_all(&self.buf).map_err(Error::Io)
+    }
+
+    /// Send a payload-free frame.
+    pub(crate) fn send_empty(&mut self, kind: u8) -> Result<()> {
+        self.send(kind, |_| {})
+    }
+
+    /// Send a terminal error frame (best-effort on an already-failing
+    /// connection, hence the ignored result at most call sites).
+    pub(crate) fn send_error(&mut self, message: &str) -> Result<()> {
+        self.send(J_ERROR, |buf| push_str(buf, message))
+    }
+
+    /// Receive one frame; returns the kind byte and borrows the payload
+    /// from the connection's reused buffer.
+    pub(crate) fn recv(&mut self) -> Result<(u8, &[u8])> {
+        let mut hdr = [0u8; 4];
+        self.stream.read_exact(&mut hdr).map_err(|e| {
+            Error::Transport(format!("job connection closed: {e}"))
+        })?;
+        let len = u32::from_le_bytes(hdr) as usize;
+        if !(1..=MAX_JOB_FRAME).contains(&len) {
+            return Err(Error::Protocol(format!("bad job frame length {len}")));
+        }
+        self.buf.resize(len, 0);
+        self.stream.read_exact(&mut self.buf).map_err(|e| {
+            Error::Transport(format!("job frame truncated by peer: {e}"))
+        })?;
+        Ok((self.buf[0], &self.buf[1..]))
+    }
+
+    /// Server side, non-blocking-ish: peek for a client frame between
+    /// protocol rounds. A cancel frame is consumed; EOF or any other
+    /// traffic reads as [`ClientSignal::Gone`] (the only legal client
+    /// frame after submit is a cancel). Returns `None` when the client is
+    /// silently connected — the common case — within ~5 ms.
+    pub(crate) fn poll_client(&mut self) -> Option<ClientSignal> {
+        let mut hdr = [0u8; 5];
+        if self.stream.set_read_timeout(Some(Duration::from_millis(5))).is_err() {
+            return Some(ClientSignal::Gone);
+        }
+        let peeked = self.stream.peek(&mut hdr);
+        let _ = self.stream.set_read_timeout(None);
+        match peeked {
+            Ok(0) => Some(ClientSignal::Gone),
+            Ok(n) if n >= 5 => {
+                // A full header is buffered: consume exactly those bytes.
+                let mut sink = [0u8; 5];
+                if self.stream.read_exact(&mut sink).is_err() {
+                    return Some(ClientSignal::Gone);
+                }
+                let len = u32::from_le_bytes(hdr[..4].try_into().unwrap());
+                if len == 1 && hdr[4] == J_CANCEL {
+                    Some(ClientSignal::Cancel)
+                } else {
+                    Some(ClientSignal::Gone)
+                }
+            }
+            // Partial header or timeout: nothing actionable yet.
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::RunConfig;
+
+    #[test]
+    fn table_codec_roundtrips_a_config() {
+        let cfg = RunConfig::test_small(0.05);
+        let mut table = Table::new();
+        cfg.encode_into(&mut table);
+        let mut buf = Vec::new();
+        encode_table(&mut buf, &table);
+        let mut r = Reader::new(&buf);
+        let back = decode_table(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(table, back);
+        let decoded = RunConfig::from_table(&back).unwrap();
+        assert_eq!(decoded.n, cfg.n);
+        assert_eq!(decoded.p, cfg.p);
+        assert_eq!(decoded.iters, cfg.iters);
+        assert_eq!(decoded.compressor, cfg.compressor);
+    }
+
+    #[test]
+    fn snapshot_codec_roundtrips_bits() {
+        let snap = IterSnapshot {
+            record: IterRecord {
+                t: 3,
+                sdr_db: 12.5,
+                sdr_pred_db: 12.25,
+                rate_alloc: 4.0,
+                rate_wire: 3.875,
+                sigma_q2: 1.5e-3,
+                sigma_d2_hat: 2.5e-3,
+                wall_s: 0.125,
+            },
+            cum_wire_bits_per_element: 11.625,
+            cum_alloc_bits_per_element: 12.0,
+        };
+        let mut buf = Vec::new();
+        encode_snapshot(&mut buf, &snap);
+        let mut r = Reader::new(&buf);
+        let back = decode_snapshot(&mut r).unwrap();
+        r.finish().unwrap();
+        assert_eq!(back.record.t, 3);
+        assert_eq!(back.record.sdr_db.to_bits(), snap.record.sdr_db.to_bits());
+        assert_eq!(
+            back.record.sigma_d2_hat.to_bits(),
+            snap.record.sigma_d2_hat.to_bits()
+        );
+        assert_eq!(
+            back.cum_wire_bits_per_element.to_bits(),
+            snap.cum_wire_bits_per_element.to_bits()
+        );
+    }
+
+    #[test]
+    fn report_codec_roundtrips_bits() {
+        let rep = RunReport {
+            iters: vec![IterRecord {
+                t: 0,
+                sdr_db: 1.0,
+                sdr_pred_db: 1.5,
+                rate_alloc: 4.0,
+                rate_wire: 3.75,
+                sigma_q2: 0.01,
+                sigma_d2_hat: 0.02,
+                wall_s: 0.5,
+            }],
+            final_xs: vec![vec![0.5, -1.25, 0.0], vec![3.5, 2.0, -0.125]],
+            sdr_db_per_signal: vec![10.0, 11.5],
+            batch: 2,
+            dims: (600, 180, 6),
+            schedule: "bt".into(),
+            engine: "rust".into(),
+            partitioning: "row".into(),
+            transport_uplink_bits: 12_345,
+            transport_downlink_bits: 67_890,
+            wall_s: 1.25,
+            stopped_early: Some("target SDR reached (10 dB)".into()),
+        };
+        let mut buf = Vec::new();
+        encode_report(&mut buf, &rep);
+        let mut r = Reader::new(&buf);
+        let back = decode_report(&mut r).unwrap();
+        assert_eq!(back.iters.len(), 1);
+        assert_eq!(back.iters[0].sdr_db.to_bits(), rep.iters[0].sdr_db.to_bits());
+        assert_eq!(back.final_xs.len(), 2);
+        for (a, b) in back.final_xs.iter().flatten().zip(rep.final_xs.iter().flatten())
+        {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        assert_eq!(back.dims, (600, 180, 6));
+        assert_eq!(back.transport_uplink_bits, 12_345);
+        assert_eq!(back.stopped_early.as_deref(), Some("target SDR reached (10 dB)"));
+    }
+
+    #[test]
+    fn reader_rejects_truncated_and_trailing() {
+        let mut buf = Vec::new();
+        push_u32(&mut buf, 7);
+        let mut r = Reader::new(&buf);
+        assert!(r.u64().is_err(), "truncated read must fail");
+        let mut r = Reader::new(&buf);
+        r.u8().unwrap();
+        assert!(r.finish().is_err(), "trailing bytes must fail");
+    }
+}

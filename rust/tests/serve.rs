@@ -1,0 +1,211 @@
+//! Integration tests for the `mpampd` serving daemon: concurrent served
+//! jobs must be **bit-identical** to standalone sessions, over-capacity
+//! jobs must queue (not drop), and cancellation must free the slot for
+//! the next queued job.
+
+use mpamp::config::{Partitioning, RunConfig, ScheduleKind};
+use mpamp::serve::{Client, Daemon, JobEvent, ServeConfig};
+use mpamp::{RunReport, Session};
+
+/// The four smoke scenarios: {row, column} × {entropy-coded (default
+/// ecsq.range under BT), uncompressed} — all on one P=6 fleet.
+fn job_configs() -> Vec<RunConfig> {
+    let mut cfgs = Vec::new();
+    for (partitioning, raw, seed) in [
+        (Partitioning::Row, false, 101),
+        (Partitioning::Row, true, 202),
+        (Partitioning::Column, false, 303),
+        (Partitioning::Column, true, 404),
+    ] {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.partitioning = partitioning;
+        cfg.seed = seed;
+        if raw {
+            cfg.schedule = ScheduleKind::Uncompressed;
+        }
+        cfgs.push(cfg);
+    }
+    cfgs
+}
+
+/// Everything deterministic must match to the bit; `wall_s` is the one
+/// nondeterministic field and is excluded.
+fn assert_reports_bit_identical(label: &str, want: &RunReport, got: &RunReport) {
+    assert_eq!(want.iters.len(), got.iters.len(), "{label}: iteration count");
+    for (t, (w, g)) in want.iters.iter().zip(&got.iters).enumerate() {
+        assert_eq!(
+            w.sdr_db.to_bits(),
+            g.sdr_db.to_bits(),
+            "{label}: sdr_db differs at t={t}"
+        );
+        assert_eq!(
+            w.sigma_d2_hat.to_bits(),
+            g.sigma_d2_hat.to_bits(),
+            "{label}: sigma_d2_hat differs at t={t}"
+        );
+        assert_eq!(
+            w.rate_wire.to_bits(),
+            g.rate_wire.to_bits(),
+            "{label}: rate_wire differs at t={t}"
+        );
+    }
+    assert_eq!(want.final_xs.len(), got.final_xs.len(), "{label}: batch size");
+    for (sig, (wx, gx)) in want.final_xs.iter().zip(&got.final_xs).enumerate() {
+        assert_eq!(wx.len(), gx.len(), "{label}: x length, signal {sig}");
+        for (i, (w, g)) in wx.iter().zip(gx).enumerate() {
+            assert_eq!(
+                w.to_bits(),
+                g.to_bits(),
+                "{label}: final_x[{sig}][{i}] differs"
+            );
+        }
+    }
+    assert_eq!(
+        want.transport_uplink_bits, got.transport_uplink_bits,
+        "{label}: uplink byte accounting"
+    );
+    assert_eq!(
+        want.transport_downlink_bits, got.transport_downlink_bits,
+        "{label}: downlink byte accounting"
+    );
+    assert_eq!(want.schedule, got.schedule, "{label}: schedule name");
+    assert_eq!(want.partitioning, got.partitioning, "{label}: partitioning");
+}
+
+#[test]
+fn four_concurrent_jobs_bit_identical_to_standalone() {
+    let cfgs = job_configs();
+    // Standalone baselines first (sequential, local fleets).
+    let standalone: Vec<RunReport> = cfgs
+        .iter()
+        .map(|c| Session::new(c.clone()).unwrap().run().unwrap())
+        .collect();
+
+    let daemon = Daemon::start(ServeConfig::new("127.0.0.1:0", 6)).unwrap();
+    let addr = daemon.addr().to_string();
+    // All four jobs in flight at once over the one resident fleet.
+    let handles: Vec<_> = cfgs
+        .iter()
+        .cloned()
+        .map(|cfg| {
+            let addr = addr.clone();
+            std::thread::spawn(move || -> (usize, RunReport) {
+                let mut job = Client::submit(&addr, &cfg).unwrap();
+                assert_eq!(
+                    job.queue_pos(),
+                    0,
+                    "four jobs fit the default max_sessions=4, none should queue"
+                );
+                let mut iter_events = 0usize;
+                loop {
+                    match job.next_event().unwrap() {
+                        JobEvent::Started => {}
+                        JobEvent::Iter(_) => iter_events += 1,
+                        JobEvent::Report(report) => return (iter_events, report),
+                        JobEvent::Cancelled => panic!("job unexpectedly cancelled"),
+                        JobEvent::Failed(msg) => panic!("daemon error: {msg}"),
+                    }
+                }
+            })
+        })
+        .collect();
+    for ((handle, cfg), want) in handles.into_iter().zip(&cfgs).zip(&standalone) {
+        let (iter_events, got) = handle.join().unwrap();
+        let label = format!(
+            "{} / {:?}",
+            cfg.partitioning.as_str(),
+            cfg.schedule
+        );
+        assert_eq!(
+            iter_events,
+            got.iters.len(),
+            "{label}: one progress event per completed round"
+        );
+        assert_reports_bit_identical(&label, want, &got);
+    }
+    daemon.shutdown().unwrap();
+}
+
+#[test]
+fn over_capacity_job_queues_and_cancel_frees_the_slot() {
+    let mut serve_cfg = ServeConfig::new("127.0.0.1:0", 6);
+    serve_cfg.max_sessions = 1;
+    serve_cfg.max_queue = 2;
+    let daemon = Daemon::start(serve_cfg).unwrap();
+    let addr = daemon.addr().to_string();
+
+    // Job A: long enough to still be running while B submits and queues.
+    let mut a_cfg = RunConfig::test_small(0.05);
+    a_cfg.iters = 300;
+    a_cfg.seed = 1;
+    let mut a = Client::submit(&addr, &a_cfg).unwrap();
+    assert_eq!(a.queue_pos(), 0);
+    assert!(matches!(a.next_event().unwrap(), JobEvent::Started));
+    assert!(matches!(a.next_event().unwrap(), JobEvent::Iter(_)));
+
+    // Job B: over capacity — must be queued with a positive position,
+    // not dropped.
+    let mut b_cfg = RunConfig::test_small(0.05);
+    b_cfg.iters = 3;
+    b_cfg.seed = 2;
+    let b_standalone = Session::new(b_cfg.clone()).unwrap().run().unwrap();
+    let b = Client::submit(&addr, &b_cfg).unwrap();
+    assert!(
+        b.queue_pos() > 0,
+        "over-capacity job should be queued, got position {}",
+        b.queue_pos()
+    );
+
+    // Cancelling A frees the slot; B then runs to completion.
+    a.cancel().unwrap();
+    loop {
+        match a.next_event().unwrap() {
+            JobEvent::Iter(_) => {}
+            JobEvent::Cancelled => break,
+            other => panic!("expected cancellation for job A, got {other:?}"),
+        }
+    }
+    let b_report = b.await_report().unwrap();
+    assert_eq!(b_report.iters.len(), 3);
+    assert!(b_report.stopped_early.is_none());
+    // Waiting in the queue must not perturb the result.
+    assert_reports_bit_identical("queued job B", &b_standalone, &b_report);
+    daemon.shutdown().unwrap();
+}
+
+#[test]
+fn full_queue_rejects_and_fleet_mismatch_rejects() {
+    let mut serve_cfg = ServeConfig::new("127.0.0.1:0", 6);
+    serve_cfg.max_sessions = 1;
+    serve_cfg.max_queue = 0;
+    let daemon = Daemon::start(serve_cfg).unwrap();
+    let addr = daemon.addr().to_string();
+
+    let mut a_cfg = RunConfig::test_small(0.05);
+    a_cfg.iters = 300;
+    a_cfg.seed = 3;
+    let mut a = Client::submit(&addr, &a_cfg).unwrap();
+    assert!(matches!(a.next_event().unwrap(), JobEvent::Started));
+    assert!(matches!(a.next_event().unwrap(), JobEvent::Iter(_)));
+
+    // Queue capacity 0: the second job bounces with a capacity error.
+    let b_cfg = RunConfig::test_small(0.05);
+    let err = Client::submit(&addr, &b_cfg).unwrap_err().to_string();
+    assert!(err.contains("capacity"), "unexpected rejection message: {err}");
+
+    // A config whose P does not match the fleet is rejected at submit.
+    let mut wrong_p = RunConfig::test_small(0.05);
+    wrong_p.p = 3; // valid standalone (3 | 180), wrong for this fleet
+    let err = Client::submit(&addr, &wrong_p).unwrap_err().to_string();
+    assert!(err.contains("fleet"), "unexpected rejection message: {err}");
+
+    a.cancel().unwrap();
+    loop {
+        match a.next_event().unwrap() {
+            JobEvent::Iter(_) => {}
+            JobEvent::Cancelled => break,
+            other => panic!("expected cancellation for job A, got {other:?}"),
+        }
+    }
+    daemon.shutdown().unwrap();
+}
