@@ -1,0 +1,602 @@
+//! Perf-trajectory comparison: classify a current `BENCH_pr.json` against
+//! stored baselines (`ci/baselines.json`) with per-metric-family noise
+//! bands, so CI fails on real regressions instead of only schema-checking.
+//!
+//! Each metric family carries a direction (is higher better?) and a
+//! relative tolerance — the noise band. A current value outside the band
+//! on the bad side is a [`Verdict::Regress`]; outside on the good side an
+//! [`Verdict::Improve`]; inside, [`Verdict::Pass`]. Records present only
+//! in the current run are [`Verdict::New`] (pass — they enter the
+//! baseline at the next `--bless`); baseline records that vanished are
+//! [`Verdict::Missing`] (fail — a silently dropped bench is how
+//! trajectories rot). `mpamp lab gate` turns a [`Comparison`] into a
+//! markdown delta table and an exit code; `--bless` rewrites the store.
+
+use std::collections::BTreeMap;
+
+use crate::bench_util::{record_to_json, BenchRecord};
+use crate::error::{Error, Result};
+use crate::metrics::Json;
+
+/// Whether larger values of a metric are better.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricDir {
+    /// Throughput-like: regress when the value falls.
+    Higher,
+    /// Cost-like: regress when the value rises.
+    Lower,
+}
+
+/// The metric families the gate tracks, with direction and default
+/// relative tolerance. Wall-clock families get wide bands (shared CI
+/// runners are noisy); deterministic families (bytes on the wire, SDR per
+/// bit) get tight ones.
+pub const FAMILIES: &[(&str, MetricDir, f64)] = &[
+    ("wall_s", MetricDir::Lower, 0.50),
+    ("bytes_uplinked", MetricDir::Lower, 0.02),
+    ("signals_per_s", MetricDir::Higher, 0.35),
+    ("sdr_per_bit", MetricDir::Higher, 0.05),
+    ("rounds_per_s", MetricDir::Higher, 0.35),
+    ("gflops", MetricDir::Higher, 0.35),
+    ("jobs_per_s", MetricDir::Higher, 0.50),
+];
+
+fn family(metric: &str) -> Option<(MetricDir, f64)> {
+    FAMILIES
+        .iter()
+        .find(|(name, _, _)| *name == metric)
+        .map(|(_, dir, tol)| (*dir, *tol))
+}
+
+/// Classification of one metric or one record.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Within the noise band.
+    Pass,
+    /// Outside the band on the good side.
+    Improve,
+    /// Outside the band on the bad side (fails the gate).
+    Regress,
+    /// Present only in the current run (passes; blessed in next baseline).
+    New,
+    /// Present only in the baseline (fails the gate).
+    Missing,
+}
+
+impl Verdict {
+    /// Stable label for tables and JSON.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Pass => "pass",
+            Verdict::Improve => "improve",
+            Verdict::Regress => "regress",
+            Verdict::New => "new",
+            Verdict::Missing => "missing",
+        }
+    }
+
+    /// Whether this verdict fails the gate.
+    pub fn fails(&self) -> bool {
+        matches!(self, Verdict::Regress | Verdict::Missing)
+    }
+}
+
+/// One metric of one record, classified.
+#[derive(Debug, Clone)]
+pub struct MetricDelta {
+    /// Metric family name.
+    pub metric: &'static str,
+    /// Baseline value (`None` if the baseline record lacks it).
+    pub base: Option<f64>,
+    /// Current value (`None` if it vanished from the current record).
+    pub current: Option<f64>,
+    /// Signed relative change `(current - base) / |base|` when both sides
+    /// exist and the base is nonzero.
+    pub rel: Option<f64>,
+    /// The noise band applied (relative).
+    pub tol: f64,
+    /// Classification.
+    pub verdict: Verdict,
+}
+
+/// One record, classified across its metrics.
+#[derive(Debug, Clone)]
+pub struct RecordDelta {
+    /// Record name.
+    pub name: String,
+    /// Worst metric verdict ([`Verdict::New`]/[`Verdict::Missing`] for
+    /// unmatched records).
+    pub verdict: Verdict,
+    /// Per-metric classification (empty for unmatched records).
+    pub metrics: Vec<MetricDelta>,
+}
+
+/// Result of comparing a current record set against a baseline store.
+#[derive(Debug, Clone)]
+pub struct Comparison {
+    /// Every record, baseline order first, then new records.
+    pub records: Vec<RecordDelta>,
+}
+
+impl Comparison {
+    /// Whether the gate passes (no regressions, no missing records).
+    pub fn gate_passes(&self) -> bool {
+        self.records.iter().all(|r| !r.verdict.fails())
+    }
+
+    /// The failing records.
+    pub fn failures(&self) -> Vec<&RecordDelta> {
+        self.records.iter().filter(|r| r.verdict.fails()).collect()
+    }
+
+    /// Render the per-record markdown delta table CI uploads as a step
+    /// summary.
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str("### Perf gate\n\n");
+        let (fails, improves) = self.records.iter().fold((0, 0), |(f, i), r| {
+            (
+                f + usize::from(r.verdict.fails()),
+                i + usize::from(r.verdict == Verdict::Improve),
+            )
+        });
+        if fails == 0 {
+            out.push_str(&format!(
+                "**PASS** — {} record(s) within their noise bands ({} improved).\n\n",
+                self.records.len(),
+                improves
+            ));
+        } else {
+            out.push_str(&format!(
+                "**FAIL** — {fails} of {} record(s) out of band.\n\n",
+                self.records.len()
+            ));
+        }
+        out.push_str("| record | metric | baseline | current | Δ | band | verdict |\n");
+        out.push_str("|---|---|---:|---:|---:|---:|---|\n");
+        for r in &self.records {
+            if r.metrics.is_empty() {
+                out.push_str(&format!(
+                    "| `{}` | — | — | — | — | — | **{}** |\n",
+                    r.name,
+                    r.verdict.as_str()
+                ));
+                continue;
+            }
+            for m in &r.metrics {
+                let fmt = |v: Option<f64>| match v {
+                    Some(v) => format!("{v:.4}"),
+                    None => "—".into(),
+                };
+                let rel = match m.rel {
+                    Some(rel) => format!("{:+.1}%", rel * 100.0),
+                    None => "—".into(),
+                };
+                let verdict = if m.verdict.fails() || m.verdict == Verdict::Improve {
+                    format!("**{}**", m.verdict.as_str())
+                } else {
+                    m.verdict.as_str().to_string()
+                };
+                out.push_str(&format!(
+                    "| `{}` | {} | {} | {} | {} | ±{:.0}% | {} |\n",
+                    r.name,
+                    m.metric,
+                    fmt(m.base),
+                    fmt(m.current),
+                    rel,
+                    m.tol * 100.0,
+                    verdict
+                ));
+            }
+        }
+        out
+    }
+}
+
+/// The `ci/baselines.json` store: named records plus the per-family noise
+/// bands in force when they were blessed, so tolerance changes are
+/// reviewed like any other diff.
+#[derive(Debug, Clone)]
+pub struct Baselines {
+    /// Free-form provenance note.
+    pub note: String,
+    /// Effective relative tolerance per metric family.
+    pub tolerances: BTreeMap<String, f64>,
+    /// The blessed records.
+    pub records: Vec<BenchRecord>,
+}
+
+impl Baselines {
+    /// New store around `records` with the default per-family bands.
+    pub fn from_records(note: &str, records: Vec<BenchRecord>) -> Baselines {
+        Baselines {
+            note: note.to_string(),
+            tolerances: FAMILIES
+                .iter()
+                .map(|(name, _, tol)| (name.to_string(), *tol))
+                .collect(),
+            records,
+        }
+    }
+
+    /// The band for a metric: the stored override, else the family
+    /// default, else 0 (unknown metrics never gate).
+    pub fn tolerance(&self, metric: &str) -> f64 {
+        self.tolerances
+            .get(metric)
+            .copied()
+            .or_else(|| family(metric).map(|(_, tol)| tol))
+            .unwrap_or(0.0)
+    }
+
+    /// Parse from JSON text. A bare record array (the `BENCH_pr.json`
+    /// schema) is accepted too — it becomes a store with default bands,
+    /// so any bench output can seed a baseline.
+    pub fn from_json_text(text: &str) -> Result<Baselines> {
+        let json = Json::parse(text)?;
+        if json.as_arr().is_some() {
+            return Ok(Baselines::from_records(
+                "seeded from a bare record array",
+                records_from_json(&json)?,
+            ));
+        }
+        let note = json
+            .get("note")
+            .and_then(|n| n.as_str())
+            .unwrap_or_default()
+            .to_string();
+        let mut tolerances: BTreeMap<String, f64> = FAMILIES
+            .iter()
+            .map(|(name, _, tol)| (name.to_string(), *tol))
+            .collect();
+        if let Some(tols) = json.get("tolerances").and_then(|t| t.as_obj()) {
+            for (k, v) in tols {
+                let tol = v.as_f64().filter(|t| *t >= 0.0).ok_or_else(|| {
+                    Error::Config(format!(
+                        "baselines: tolerance '{k}' must be a non-negative number"
+                    ))
+                })?;
+                tolerances.insert(k.clone(), tol);
+            }
+        }
+        let records = json
+            .get("records")
+            .ok_or_else(|| Error::Config("baselines: missing 'records' array".into()))?;
+        Ok(Baselines { note, tolerances, records: records_from_json(records)? })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &str) -> Result<Baselines> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read '{path}': {e}")))?;
+        Self::from_json_text(&text).map_err(|e| Error::Config(format!("{path}: {e}")))
+    }
+
+    /// Render as the store JSON (one record per line for reviewable
+    /// diffs).
+    pub fn render(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("\"note\":{},\n", Json::Str(self.note.clone()).render()));
+        let tols = Json::Obj(
+            self.tolerances
+                .iter()
+                .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                .collect(),
+        );
+        out.push_str(&format!("\"tolerances\":{},\n", tols.render()));
+        out.push_str("\"records\":[\n");
+        for (i, r) in self.records.iter().enumerate() {
+            out.push_str(&record_to_json(r).render());
+            out.push_str(if i + 1 < self.records.len() { ",\n" } else { "\n" });
+        }
+        out.push_str("]\n}\n");
+        out
+    }
+
+    /// Write to a file (the `--bless` path).
+    pub fn save(&self, path: &str) -> Result<()> {
+        if let Some(parent) = std::path::Path::new(path).parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).map_err(Error::Io)?;
+            }
+        }
+        std::fs::write(path, self.render()).map_err(Error::Io)
+    }
+}
+
+/// Parse a JSON array of bench records (the `BENCH_pr.json` schema).
+pub fn records_from_json(json: &Json) -> Result<Vec<BenchRecord>> {
+    let items = json
+        .as_arr()
+        .ok_or_else(|| Error::Config("bench records: expected a JSON array".into()))?;
+    items.iter().map(record_from_json).collect()
+}
+
+fn record_from_json(item: &Json) -> Result<BenchRecord> {
+    let name = item
+        .get("name")
+        .and_then(|n| n.as_str())
+        .ok_or_else(|| Error::Config("bench record: missing 'name'".into()))?
+        .to_string();
+    let req = |key: &str| {
+        item.get(key).and_then(|v| v.as_f64()).ok_or_else(|| {
+            Error::Config(format!("bench record '{name}': missing number '{key}'"))
+        })
+    };
+    let opt = |key: &str| item.get(key).and_then(|v| v.as_f64());
+    Ok(BenchRecord {
+        wall_s: req("wall_s")?,
+        bytes_uplinked: req("bytes_uplinked")? as u64,
+        signals_per_s: req("signals_per_s")?,
+        sdr_per_bit: opt("sdr_per_bit"),
+        rounds_per_s: opt("rounds_per_s"),
+        gflops: opt("gflops"),
+        jobs_per_s: opt("jobs_per_s"),
+        name,
+    })
+}
+
+/// All seven metric slots of a record, present or not. `signals_per_s`
+/// and `bytes_uplinked` use 0 as their "not applicable" sentinel, which
+/// the zero-base rules below treat as absent-on-both-sides.
+fn metric_slots(r: &BenchRecord) -> [(&'static str, Option<f64>); 7] {
+    [
+        ("wall_s", Some(r.wall_s)),
+        ("bytes_uplinked", Some(r.bytes_uplinked as f64)),
+        ("signals_per_s", Some(r.signals_per_s)),
+        ("sdr_per_bit", r.sdr_per_bit),
+        ("rounds_per_s", r.rounds_per_s),
+        ("gflops", r.gflops),
+        ("jobs_per_s", r.jobs_per_s),
+    ]
+}
+
+fn classify(
+    metric: &'static str,
+    base: Option<f64>,
+    current: Option<f64>,
+    tol: f64,
+) -> Option<MetricDelta> {
+    let (dir, _) = family(metric)?;
+    let (b, c) = match (base, current) {
+        // Not tracked in the baseline: nothing to gate (it enters at the
+        // next bless).
+        (None, _) => return None,
+        // Tracked in the baseline but vanished from the current run: a
+        // lost metric is a regression, not a skip.
+        (Some(b), None) => {
+            return Some(MetricDelta {
+                metric,
+                base: Some(b),
+                current: None,
+                rel: None,
+                tol,
+                verdict: Verdict::Regress,
+            })
+        }
+        (Some(b), Some(c)) => (b, c),
+    };
+    let (rel, verdict) = if b == 0.0 {
+        if c == 0.0 {
+            (None, Verdict::Pass)
+        } else {
+            // 0 → nonzero: infinitely out of band; good or bad per
+            // direction (a microbench growing wire traffic regresses, a
+            // zero-throughput slot coming alive improves).
+            let v = match dir {
+                MetricDir::Higher => Verdict::Improve,
+                MetricDir::Lower => Verdict::Regress,
+            };
+            (None, v)
+        }
+    } else {
+        let rel = (c - b) / b.abs();
+        let bad = match dir {
+            MetricDir::Higher => rel < -tol,
+            MetricDir::Lower => rel > tol,
+        };
+        let good = match dir {
+            MetricDir::Higher => rel > tol,
+            MetricDir::Lower => rel < -tol,
+        };
+        let v = if bad {
+            Verdict::Regress
+        } else if good {
+            Verdict::Improve
+        } else {
+            Verdict::Pass
+        };
+        (Some(rel), v)
+    };
+    Some(MetricDelta { metric, base: Some(b), current: Some(c), rel, tol, verdict })
+}
+
+/// Compare current records against the baseline store: baseline records
+/// first (matched by name; absent ones [`Verdict::Missing`]), then
+/// current-only records as [`Verdict::New`].
+pub fn compare(baselines: &Baselines, current: &[BenchRecord]) -> Comparison {
+    let mut records = Vec::with_capacity(baselines.records.len());
+    for base in &baselines.records {
+        let Some(cur) = current.iter().find(|r| r.name == base.name) else {
+            records.push(RecordDelta {
+                name: base.name.clone(),
+                verdict: Verdict::Missing,
+                metrics: Vec::new(),
+            });
+            continue;
+        };
+        let base_slots = metric_slots(base);
+        let cur_slots = metric_slots(cur);
+        let mut metrics = Vec::new();
+        for ((metric, b), (_, c)) in base_slots.into_iter().zip(cur_slots) {
+            if let Some(delta) = classify(metric, b, c, baselines.tolerance(metric)) {
+                metrics.push(delta);
+            }
+        }
+        let verdict = if metrics.iter().any(|m| m.verdict.fails()) {
+            Verdict::Regress
+        } else if metrics.iter().any(|m| m.verdict == Verdict::Improve) {
+            Verdict::Improve
+        } else {
+            Verdict::Pass
+        };
+        records.push(RecordDelta { name: base.name.clone(), verdict, metrics });
+    }
+    for cur in current {
+        if !baselines.records.iter().any(|b| b.name == cur.name) {
+            records.push(RecordDelta {
+                name: cur.name.clone(),
+                verdict: Verdict::New,
+                metrics: Vec::new(),
+            });
+        }
+    }
+    Comparison { records }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(name: &str, wall_s: f64, bytes: u64, rps: Option<f64>) -> BenchRecord {
+        BenchRecord {
+            name: name.into(),
+            wall_s,
+            bytes_uplinked: bytes,
+            signals_per_s: 0.0,
+            sdr_per_bit: None,
+            rounds_per_s: rps,
+            gflops: None,
+            jobs_per_s: None,
+        }
+    }
+
+    #[test]
+    fn identical_records_pass() {
+        let base = Baselines::from_records("t", vec![rec("a", 1.0, 100, Some(5.0))]);
+        let cmp = compare(&base, &base.records);
+        assert!(cmp.gate_passes());
+        assert_eq!(cmp.records[0].verdict, Verdict::Pass);
+    }
+
+    #[test]
+    fn out_of_band_regressions_fail_per_direction() {
+        let base = Baselines::from_records("t", vec![rec("a", 1.0, 100, Some(5.0))]);
+        // wall_s up 2x (band ±50%) — cost metric regresses upward.
+        let cmp = compare(&base, &[rec("a", 2.0, 100, Some(5.0))]);
+        assert!(!cmp.gate_passes());
+        let m = &cmp.records[0].metrics[0];
+        assert_eq!((m.metric, m.verdict), ("wall_s", Verdict::Regress));
+        assert!((m.rel.unwrap() - 1.0).abs() < 1e-12);
+        // rounds_per_s down 2x (band ±35%) — throughput regresses downward.
+        let cmp = compare(&base, &[rec("a", 1.0, 100, Some(2.5))]);
+        assert!(!cmp.gate_passes());
+        // bytes up 1% stays inside its ±2% band.
+        let cmp = compare(&base, &[rec("a", 1.0, 101, Some(5.0))]);
+        assert!(cmp.gate_passes());
+        // bytes up 5% does not.
+        let cmp = compare(&base, &[rec("a", 1.0, 105, Some(5.0))]);
+        assert!(!cmp.gate_passes());
+    }
+
+    #[test]
+    fn improvements_pass_and_are_flagged() {
+        let base = Baselines::from_records("t", vec![rec("a", 1.0, 100, Some(5.0))]);
+        let cmp = compare(&base, &[rec("a", 0.3, 100, Some(9.0))]);
+        assert!(cmp.gate_passes());
+        assert_eq!(cmp.records[0].verdict, Verdict::Improve);
+    }
+
+    #[test]
+    fn new_passes_missing_fails() {
+        let base = Baselines::from_records("t", vec![rec("a", 1.0, 0, None)]);
+        let cmp = compare(&base, &[rec("a", 1.0, 0, None), rec("b", 1.0, 0, None)]);
+        assert!(cmp.gate_passes());
+        assert_eq!(cmp.records[1].verdict, Verdict::New);
+        let cmp = compare(&base, &[rec("b", 1.0, 0, None)]);
+        assert!(!cmp.gate_passes());
+        assert_eq!(cmp.records[0].verdict, Verdict::Missing);
+        assert_eq!(cmp.failures().len(), 1);
+    }
+
+    #[test]
+    fn vanished_metric_regresses_new_metric_waits_for_bless() {
+        let base = Baselines::from_records("t", vec![rec("a", 1.0, 0, Some(5.0))]);
+        // rounds_per_s vanished from the current record.
+        let cmp = compare(&base, &[rec("a", 1.0, 0, None)]);
+        assert!(!cmp.gate_passes());
+        // The reverse — metric only in current — does not gate.
+        let base = Baselines::from_records("t", vec![rec("a", 1.0, 0, None)]);
+        let cmp = compare(&base, &[rec("a", 1.0, 0, Some(5.0))]);
+        assert!(cmp.gate_passes());
+    }
+
+    #[test]
+    fn zero_base_rules() {
+        // bytes 0 → 4096: cost appearing from nowhere regresses.
+        let base = Baselines::from_records("t", vec![rec("a", 1.0, 0, None)]);
+        let cmp = compare(&base, &[rec("a", 1.0, 4096, None)]);
+        assert!(!cmp.gate_passes());
+        // signals_per_s 0 → 5: throughput coming alive improves.
+        let mut b = rec("a", 1.0, 0, None);
+        let mut c = b.clone();
+        c.signals_per_s = 5.0;
+        let base = Baselines::from_records("t", vec![b.clone()]);
+        let cmp = compare(&base, &[c]);
+        assert!(cmp.gate_passes());
+        // 0 → 0 passes.
+        b.signals_per_s = 0.0;
+        let cmp = compare(&base, &[b]);
+        assert_eq!(cmp.records[0].verdict, Verdict::Pass);
+    }
+
+    #[test]
+    fn stored_tolerances_override_defaults() {
+        let mut base = Baselines::from_records("t", vec![rec("a", 1.0, 100, None)]);
+        base.tolerances.insert("bytes_uplinked".into(), 0.5);
+        // +20% bytes would fail the default ±2% band but passes ±50%.
+        let cmp = compare(&base, &[rec("a", 1.0, 120, None)]);
+        assert!(cmp.gate_passes());
+    }
+
+    #[test]
+    fn store_roundtrips_and_accepts_bare_arrays() {
+        let store = Baselines::from_records(
+            "seeded for tests",
+            vec![rec("a", 1.0, 100, Some(5.0)), rec("b µ", 0.5, 0, None)],
+        );
+        let text = store.render();
+        let back = Baselines::from_json_text(&text).unwrap();
+        assert_eq!(back.note, "seeded for tests");
+        assert_eq!(back.records, store.records);
+        assert_eq!(back.tolerance("wall_s"), 0.5);
+        // A bare BENCH_pr.json array seeds a store with default bands.
+        let bare = crate::bench_util::write_bench_records_text(&store.records);
+        let seeded = Baselines::from_json_text(&bare).unwrap();
+        assert_eq!(seeded.records, store.records);
+        assert!(compare(&seeded, &store.records).gate_passes());
+        // Garbage fails loudly.
+        assert!(Baselines::from_json_text("{}").is_err());
+        assert!(Baselines::from_json_text("[{\"name\":\"x\"}]").is_err());
+    }
+
+    #[test]
+    fn markdown_table_names_every_out_of_band_record() {
+        let base = Baselines::from_records(
+            "t",
+            vec![rec("fast", 1.0, 100, Some(5.0)), rec("gone", 1.0, 0, None)],
+        );
+        let cmp = compare(&base, &[rec("fast", 3.0, 100, Some(5.0))]);
+        let md = cmp.markdown();
+        assert!(md.contains("**FAIL**"), "{md}");
+        assert!(md.contains("| `fast` | wall_s |"), "{md}");
+        assert!(md.contains("+200.0%"), "{md}");
+        assert!(md.contains("| `gone` |") && md.contains("**missing**"), "{md}");
+        let ok = compare(&base, &compare_pass_set());
+        assert!(ok.markdown().contains("**PASS**"), "{}", ok.markdown());
+    }
+
+    fn compare_pass_set() -> Vec<BenchRecord> {
+        vec![rec("fast", 1.0, 100, Some(5.0)), rec("gone", 1.0, 0, None)]
+    }
+}

@@ -6,6 +6,8 @@
 //! `harness = false` binaries built on this module, so `cargo bench` works
 //! end-to-end.
 
+pub mod compare;
+
 use std::hint::black_box as std_black_box;
 use std::time::{Duration, Instant};
 
@@ -244,42 +246,57 @@ impl BenchRecord {
     }
 }
 
+/// One record as its `BENCH_pr.json` object (optional metrics serialized
+/// only when present).
+pub fn record_to_json(r: &BenchRecord) -> crate::metrics::Json {
+    use crate::metrics::Json;
+    let mut obj = Json::obj()
+        .set("name", Json::Str(r.name.clone()))
+        .set("wall_s", Json::Num(r.wall_s))
+        .set("bytes_uplinked", Json::Num(r.bytes_uplinked as f64))
+        .set("signals_per_s", Json::Num(r.signals_per_s));
+    if let Some(spb) = r.sdr_per_bit {
+        obj = obj.set("sdr_per_bit", Json::Num(spb));
+    }
+    if let Some(rps) = r.rounds_per_s {
+        obj = obj.set("rounds_per_s", Json::Num(rps));
+    }
+    if let Some(gf) = r.gflops {
+        obj = obj.set("gflops", Json::Num(gf));
+    }
+    if let Some(jps) = r.jobs_per_s {
+        obj = obj.set("jobs_per_s", Json::Num(jps));
+    }
+    obj
+}
+
+/// Records as the `BENCH_pr.json` array text.
+pub fn write_bench_records_text(records: &[BenchRecord]) -> String {
+    crate::metrics::Json::Arr(records.iter().map(record_to_json).collect()).render()
+}
+
 /// Write records as a JSON array of
 /// `{name, wall_s, bytes_uplinked, signals_per_s}` objects — the schema
 /// CI's `bench-smoke` job uploads per PR.
 pub fn write_bench_json(path: &str, records: &[BenchRecord]) -> std::io::Result<()> {
-    use crate::metrics::Json;
-    let arr = Json::Arr(
-        records
-            .iter()
-            .map(|r| {
-                let mut obj = Json::obj()
-                    .set("name", Json::Str(r.name.clone()))
-                    .set("wall_s", Json::Num(r.wall_s))
-                    .set("bytes_uplinked", Json::Num(r.bytes_uplinked as f64))
-                    .set("signals_per_s", Json::Num(r.signals_per_s));
-                if let Some(spb) = r.sdr_per_bit {
-                    obj = obj.set("sdr_per_bit", Json::Num(spb));
-                }
-                if let Some(rps) = r.rounds_per_s {
-                    obj = obj.set("rounds_per_s", Json::Num(rps));
-                }
-                if let Some(gf) = r.gflops {
-                    obj = obj.set("gflops", Json::Num(gf));
-                }
-                if let Some(jps) = r.jobs_per_s {
-                    obj = obj.set("jobs_per_s", Json::Num(jps));
-                }
-                obj
-            })
-            .collect(),
-    );
     if let Some(parent) = std::path::Path::new(path).parent() {
         if !parent.as_os_str().is_empty() {
             std::fs::create_dir_all(parent)?;
         }
     }
-    std::fs::write(path, arr.render())
+    std::fs::write(path, write_bench_records_text(records))
+}
+
+/// Read a `BENCH_pr.json`-schema record array back (the inverse of
+/// [`write_bench_json`]) — what `mpamp lab gate --current` consumes.
+pub fn read_bench_json(path: &str) -> crate::error::Result<Vec<BenchRecord>> {
+    let text = std::fs::read_to_string(path).map_err(|e| {
+        crate::error::Error::Config(format!("cannot read '{path}': {e}"))
+    })?;
+    let json = crate::metrics::Json::parse(&text)
+        .map_err(|e| crate::error::Error::Config(format!("{path}: {e}")))?;
+    compare::records_from_json(&json)
+        .map_err(|e| crate::error::Error::Config(format!("{path}: {e}")))
 }
 
 #[cfg(test)]
@@ -359,6 +376,8 @@ mod tests {
         assert_eq!(text.matches("gflops").count(), 1, "{text}");
         assert!(text.contains("\"jobs_per_s\":2.5"), "{text}");
         assert_eq!(text.matches("jobs_per_s").count(), 1, "{text}");
+        // ...and the reader inverts the writer exactly.
+        assert_eq!(read_bench_json(path.to_str().unwrap()).unwrap(), records);
         std::fs::remove_dir_all(&dir).unwrap();
     }
 

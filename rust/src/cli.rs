@@ -11,8 +11,10 @@ use crate::error::{Error, Result};
 /// Switches that never take a value (`--quiet` etc.). Anything else given
 /// as `--key value` is an option; use `--key=value` to force a value that
 /// looks like a flag.
-pub const KNOWN_FLAGS: &[&str] =
-    &["quiet", "verbose", "json", "help", "check", "no-coding", "keep-going", "names"];
+pub const KNOWN_FLAGS: &[&str] = &[
+    "quiet", "verbose", "json", "help", "check", "no-coding", "keep-going", "names",
+    "bless",
+];
 
 /// Parsed command line.
 #[derive(Debug, Clone, Default)]
@@ -116,6 +118,8 @@ COMMANDS:
     rd          Print a rate-distortion curve for the scalar channel
     compressors List the registered compression stacks (--names: bare)
     artifacts   Check AOT artifact availability for the XLA engine
+    lab         Experiment lab: knob manifest, declarative studies, and
+                the perf-trajectory gate (see LAB COMMANDS below)
     help        Show this help
 
 COMMON OPTIONS:
@@ -154,6 +158,27 @@ SERVING OPTIONS:
                              instead of spawning a local fleet; progress
                              streams back per round
 
+LAB COMMANDS:
+    lab manifest [--out <f>] Print (or write) the machine-readable knob
+                             manifest generated from RunConfig: every
+                             knob with id, type, bounds, default, and
+                             treatment/control/confound/infra role
+    lab manifest --check <f> Exit nonzero unless <f> matches the
+                             generated manifest byte-for-byte (the CI
+                             snapshot check on ci/knob_manifest.json)
+    lab check <files...>     Validate config/study files against the
+                             manifest; errors name the offending knob
+    lab run <study.toml>     Run a declarative study ([base] overrides ×
+                             [grid] axes) through the sweep runner;
+                             --records <f> writes BENCH-schema records
+    lab gate --baseline <f> --current <f>
+                             Compare current bench records against the
+                             baseline store with per-metric noise bands;
+                             prints a markdown delta table (--md <f> to
+                             write it) and exits nonzero on regressions
+                             or missing records. --bless rewrites the
+                             baseline store from the current records.
+
 EARLY-STOPPING OPTIONS (run, local only):
     --max-iters <k>          Stop after k iterations (caps config iters)
     --target-sdr <db>        Stop once the empirical SDR reaches <db>
@@ -173,6 +198,11 @@ EXAMPLES:
     mpamp dp --prior.eps 0.03 --schedule.total_rate 16
     mpamp serve --preset test_small --listen 127.0.0.1:7700 --max-sessions 4
     mpamp run --preset test_small --connect 127.0.0.1:7700 --seed 7
+    mpamp lab manifest --out ci/knob_manifest.json
+    mpamp lab check configs/column_small.toml configs/lab_smoke.toml
+    mpamp lab run configs/lab_smoke.toml --records BENCH_lab.json
+    mpamp lab gate --baseline ci/baselines.json --current BENCH_pr.json
+    mpamp lab gate --baseline ci/baselines.json --current BENCH_pr.json --bless
 "
 }
 

@@ -1,0 +1,595 @@
+//! The machine-readable **knob manifest**: every [`RunConfig`] knob with a
+//! stable id, type, bounds, default, and scientific role, generated from
+//! the config layer itself so the manifest can never drift from what
+//! [`RunConfig::from_table`] actually accepts.
+//!
+//! The manifest is the validation anchor of the experiment lab: overrides
+//! files ([`Study`](crate::lab::Study)) are checked knob-by-knob against
+//! it before any session is built, so a typo'd id, an out-of-bounds value,
+//! or a type mismatch fails with the offending knob named — instead of
+//! silently keeping a default. CI snapshots the rendered manifest
+//! (`ci/knob_manifest.json`) so knob additions are reviewed deliberately.
+
+use crate::config::{RunConfig, KNOWN_KEYS};
+use crate::config::toml::{Table, Value};
+use crate::error::{Error, Result};
+use crate::metrics::Json;
+
+/// Value type of a knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnobType {
+    /// Non-negative integer (TOML `Int`).
+    Int,
+    /// Real number (TOML `Float`; integers widen).
+    Float,
+    /// Free-form string.
+    Str,
+    /// String restricted to [`Knob::options`].
+    Enum,
+}
+
+impl KnobType {
+    /// Stable lowercase label used in the rendered manifest.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KnobType::Int => "int",
+            KnobType::Float => "float",
+            KnobType::Str => "str",
+            KnobType::Enum => "enum",
+        }
+    }
+}
+
+/// Scientific role of a knob, following the knob-system protocol: what
+/// varying it *means* for an experiment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KnobRole {
+    /// The method under study — schedules, compressors, partitionings.
+    /// Sweeping a treatment knob compares algorithms.
+    Treatment,
+    /// The experimental condition — problem size, sparsity, SNR.
+    /// Sweeping a control knob compares regimes, not methods.
+    Control,
+    /// Changes the data realization, not the setup (the RNG seed).
+    /// Sweeping it estimates noise bands.
+    Confound,
+    /// Execution substrate — threads, transport, engine, RD tuning.
+    /// Must not change results beyond float scheduling; sweeping it is a
+    /// determinism check, not an experiment.
+    Infra,
+}
+
+impl KnobRole {
+    /// Stable lowercase label used in the rendered manifest.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            KnobRole::Treatment => "treatment",
+            KnobRole::Control => "control",
+            KnobRole::Confound => "confound",
+            KnobRole::Infra => "infra",
+        }
+    }
+}
+
+/// One declared knob.
+#[derive(Debug, Clone)]
+pub struct Knob {
+    /// Stable id — exactly the `RunConfig` table key (`"schedule.bits"`).
+    pub id: &'static str,
+    /// Value type.
+    pub ty: KnobType,
+    /// Inclusive lower bound (numeric knobs).
+    pub min: Option<f64>,
+    /// Inclusive upper bound (numeric knobs).
+    pub max: Option<f64>,
+    /// Allowed values for [`KnobType::Enum`] knobs.
+    pub options: Vec<String>,
+    /// Scientific role.
+    pub role: KnobRole,
+    /// One-line description.
+    pub doc: &'static str,
+    /// Default value (from [`RunConfig::paper_default`]; `None` for
+    /// conditional knobs the default config does not encode, e.g.
+    /// `schedule.bits` under a BT schedule).
+    pub default: Option<Value>,
+}
+
+impl Knob {
+    /// Validate one value against this knob's type, options, and bounds.
+    /// Errors always name the knob id.
+    pub fn validate_value(&self, v: &Value) -> Result<()> {
+        let type_err = |want: &str| {
+            Error::Config(format!(
+                "knob '{}' expects {want}, got {}",
+                self.id,
+                describe(v)
+            ))
+        };
+        let num = match self.ty {
+            KnobType::Int => match v.as_i64() {
+                Some(i) => i as f64,
+                None => return Err(type_err("an integer")),
+            },
+            KnobType::Float => match v.as_f64() {
+                Some(f) => f,
+                None => return Err(type_err("a number")),
+            },
+            KnobType::Str => {
+                return v.as_str().map(|_| ()).ok_or_else(|| type_err("a string"))
+            }
+            KnobType::Enum => {
+                let s = v.as_str().ok_or_else(|| type_err("a string"))?;
+                if !self.options.iter().any(|o| o == s) {
+                    return Err(Error::Config(format!(
+                        "knob '{}' = \"{s}\" is not one of [{}]",
+                        self.id,
+                        self.options.join(", ")
+                    )));
+                }
+                return Ok(());
+            }
+        };
+        if let Some(min) = self.min {
+            if num < min {
+                return Err(Error::Config(format!(
+                    "knob '{}' = {num} is below its minimum {min}",
+                    self.id
+                )));
+            }
+        }
+        if let Some(max) = self.max {
+            if num > max {
+                return Err(Error::Config(format!(
+                    "knob '{}' = {num} is above its maximum {max}",
+                    self.id
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn describe(v: &Value) -> &'static str {
+    match v {
+        Value::Str(_) => "a string",
+        Value::Int(_) => "an integer",
+        Value::Float(_) => "a float",
+        Value::Bool(_) => "a boolean",
+    }
+}
+
+/// The generated knob manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    /// Manifest format version.
+    pub version: u32,
+    /// Knobs in [`KNOWN_KEYS`] order.
+    pub knobs: Vec<Knob>,
+}
+
+impl Manifest {
+    /// Generate the manifest from the config layer: one knob per
+    /// [`KNOWN_KEYS`] entry, defaults read from
+    /// [`RunConfig::paper_default`]`(0.05)` via the TOML encoding, and
+    /// the compressor option list read live from the registry.
+    pub fn generate() -> Manifest {
+        let mut defaults = Table::new();
+        RunConfig::paper_default(0.05).encode_into(&mut defaults);
+        let knobs: Vec<Knob> = KNOWN_KEYS
+            .iter()
+            .map(|&id| {
+                let mut k = knob_spec(id);
+                // `threads` defaults to the machine's parallelism — a
+                // host-dependent value that would make the rendered
+                // manifest (and its CI snapshot) differ per runner.
+                if id != "threads" {
+                    k.default = defaults.get(id).cloned();
+                }
+                k
+            })
+            .collect();
+        debug_assert_eq!(knobs.len(), KNOWN_KEYS.len());
+        Manifest { version: 1, knobs }
+    }
+
+    /// Look a knob up by id.
+    pub fn knob(&self, id: &str) -> Option<&Knob> {
+        self.knobs.iter().find(|k| k.id == id)
+    }
+
+    /// Validate one `id = value` override. Unknown ids, type mismatches,
+    /// enum misses, and bounds violations all error with the id named.
+    pub fn validate_override(&self, id: &str, v: &Value) -> Result<()> {
+        match self.knob(id) {
+            Some(k) => k.validate_value(v),
+            None => Err(Error::Config(format!(
+                "unknown knob '{id}' (see `mpamp lab manifest` for the \
+                 declared ids)"
+            ))),
+        }
+    }
+
+    /// Validate every entry of a flat config/overrides table.
+    pub fn validate_table(&self, t: &Table) -> Result<()> {
+        for (id, v) in t {
+            self.validate_override(id, v)?;
+        }
+        Ok(())
+    }
+
+    /// Render as JSON (the `ci/knob_manifest.json` snapshot format).
+    pub fn to_json(&self) -> Json {
+        let knobs = self
+            .knobs
+            .iter()
+            .map(|k| {
+                let mut obj = Json::obj()
+                    .set("id", Json::Str(k.id.into()))
+                    .set("type", Json::Str(k.ty.as_str().into()))
+                    .set("role", Json::Str(k.role.as_str().into()));
+                if let Some(min) = k.min {
+                    obj = obj.set("min", Json::Num(min));
+                }
+                if let Some(max) = k.max {
+                    obj = obj.set("max", Json::Num(max));
+                }
+                if !k.options.is_empty() {
+                    obj = obj.set(
+                        "options",
+                        Json::Arr(
+                            k.options.iter().map(|o| Json::Str(o.clone())).collect(),
+                        ),
+                    );
+                }
+                if let Some(d) = &k.default {
+                    obj = obj.set("default", value_to_json(d));
+                }
+                obj.set("doc", Json::Str(k.doc.into()))
+            })
+            .collect();
+        Json::obj()
+            .set("version", Json::Num(f64::from(self.version)))
+            .set(
+                "generated_from",
+                Json::Str("RunConfig::paper_default(0.05)".into()),
+            )
+            .set("knobs", Json::Arr(knobs))
+    }
+
+    /// Render as pretty-enough JSON text: one knob per line, so the CI
+    /// snapshot diff shows exactly which knob changed.
+    pub fn render(&self) -> String {
+        let Json::Obj(entries) = self.to_json() else { unreachable!() };
+        let mut out = String::from("{\n");
+        for (key, v) in &entries {
+            if key == "knobs" {
+                out.push_str("\"knobs\":[\n");
+                let Json::Arr(items) = v else { unreachable!() };
+                for (i, item) in items.iter().enumerate() {
+                    out.push_str(&item.render());
+                    out.push_str(if i + 1 < items.len() { ",\n" } else { "\n" });
+                }
+                out.push_str("]\n");
+            } else {
+                out.push_str(&Json::Str(key.clone()).render());
+                out.push(':');
+                out.push_str(&v.render());
+                out.push_str(",\n");
+            }
+        }
+        out.push_str("}\n");
+        out
+    }
+}
+
+fn value_to_json(v: &Value) -> Json {
+    match v {
+        Value::Str(s) => Json::Str(s.clone()),
+        Value::Int(i) => Json::Num(*i as f64),
+        Value::Float(f) => Json::Num(*f),
+        Value::Bool(b) => Json::Bool(*b),
+    }
+}
+
+/// Static part of each knob declaration (defaults are filled in by
+/// [`Manifest::generate`]). Adding a key to [`KNOWN_KEYS`] without a spec
+/// here panics at manifest generation — which the `lab` tests (and the CI
+/// manifest-snapshot check) turn into a reviewed decision.
+fn knob_spec(id: &'static str) -> Knob {
+    let k = |ty, min, max, options: &[&str], role, doc| Knob {
+        id,
+        ty,
+        min,
+        max,
+        options: options.iter().map(|s| s.to_string()).collect(),
+        role,
+        doc,
+        default: None,
+    };
+    use KnobRole::*;
+    use KnobType::*;
+    match id {
+        "n" => k(Int, Some(1.0), None, &[], Control, "Signal length N"),
+        "m" => k(Int, Some(1.0), None, &[], Control, "Measurement count M"),
+        "p" => k(
+            Int,
+            Some(1.0),
+            None,
+            &[],
+            Control,
+            "Worker processors P (must divide M row-wise, N column-wise)",
+        ),
+        "batch" => k(
+            Int,
+            Some(1.0),
+            None,
+            &[],
+            Control,
+            "Signal instances carried through one session (B >= 1)",
+        ),
+        "partitioning" => k(
+            Enum,
+            None,
+            None,
+            &["row", "column", "col"],
+            Treatment,
+            "Sensing-matrix sharding scenario",
+        ),
+        "prior.eps" => k(
+            Float,
+            Some(0.0),
+            Some(1.0),
+            &[],
+            Control,
+            "Bernoulli-Gauss sparsity (also rederives the paper's T)",
+        ),
+        "prior.mu_s" => k(Float, None, None, &[], Control, "Prior mean of active entries"),
+        "prior.sigma_s2" => k(
+            Float,
+            Some(0.0),
+            None,
+            &[],
+            Control,
+            "Prior variance of active entries",
+        ),
+        "snr_db" => k(Float, None, None, &[], Control, "Measurement SNR in dB"),
+        "iters" => k(
+            Int,
+            Some(0.0),
+            None,
+            &[],
+            Control,
+            "AMP iteration count T (0 = auto from SE steady state)",
+        ),
+        "seed" => k(
+            Int,
+            Some(0.0),
+            None,
+            &[],
+            Confound,
+            "RNG seed (changes the data realization, not the method)",
+        ),
+        "threads" => k(
+            Int,
+            Some(1.0),
+            None,
+            &[],
+            Infra,
+            "Worker-side compute threads for the Rust engine",
+        ),
+        "artifact_dir" => k(
+            Str,
+            None,
+            None,
+            &[],
+            Infra,
+            "AOT artifact directory for the XLA engine",
+        ),
+        "codec" => k(
+            Enum,
+            None,
+            None,
+            &["analytic", "range", "huffman"],
+            Treatment,
+            "Deprecated alias: selects the ecsq.<codec> compressor stack",
+        ),
+        "compressor" => Knob {
+            id,
+            ty: Enum,
+            min: None,
+            max: None,
+            options: crate::compress::registry::names(),
+            role: Treatment,
+            doc: "Uplink compression stack, by registry name",
+            default: None,
+        },
+        "engine" => k(
+            Enum,
+            None,
+            None,
+            &["rust", "xla"],
+            Infra,
+            "Compute engine for the LC/GC steps",
+        ),
+        "transport" => k(
+            Enum,
+            None,
+            None,
+            &["inproc", "tcp"],
+            Infra,
+            "Worker <-> fusion transport",
+        ),
+        "schedule.kind" => k(
+            Enum,
+            None,
+            None,
+            &["uncompressed", "fixed", "bt", "backtrack", "dp"],
+            Treatment,
+            "Uplink rate-allocation scheme",
+        ),
+        "schedule.bits" => k(
+            Float,
+            Some(0.0),
+            None,
+            &[],
+            Treatment,
+            "Fixed schedule: bits/element per iteration",
+        ),
+        "schedule.ratio_max" => k(
+            Float,
+            Some(1.0),
+            None,
+            &[],
+            Treatment,
+            "BT schedule: allowed sigma ratio (> 1)",
+        ),
+        "schedule.r_max" => k(
+            Float,
+            Some(0.0),
+            None,
+            &[],
+            Treatment,
+            "BT schedule: per-iteration rate cap (bits/element)",
+        ),
+        "schedule.total_rate" => k(
+            Float,
+            Some(0.0),
+            None,
+            &[],
+            Treatment,
+            "DP schedule: total budget R (bits/element; absent = 2T)",
+        ),
+        "schedule.delta_r" => k(
+            Float,
+            Some(0.0),
+            None,
+            &[],
+            Treatment,
+            "DP schedule: bit-rate resolution",
+        ),
+        "rd.alphabet" => k(
+            Int,
+            Some(3.0),
+            None,
+            &[],
+            Infra,
+            "Blahut-Arimoto source-alphabet size",
+        ),
+        "rd.curve_points" => k(
+            Int,
+            Some(2.0),
+            None,
+            &[],
+            Infra,
+            "Distortion points per RD curve",
+        ),
+        "rd.tol" => k(
+            Float,
+            Some(0.0),
+            None,
+            &[],
+            Infra,
+            "Blahut-Arimoto convergence tolerance (bits)",
+        ),
+        "rd.gamma_grid" => k(
+            Int,
+            Some(2.0),
+            None,
+            &[],
+            Infra,
+            "Gamma grid points for the RD curve cache",
+        ),
+        other => panic!(
+            "config key '{other}' has no knob spec — declare it in \
+             lab::manifest::knob_spec so the manifest stays complete"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_known_key_has_a_knob() {
+        let m = Manifest::generate();
+        let ids: Vec<&str> = m.knobs.iter().map(|k| k.id).collect();
+        assert_eq!(ids, KNOWN_KEYS.to_vec());
+    }
+
+    #[test]
+    fn defaults_come_from_paper_default() {
+        let m = Manifest::generate();
+        assert_eq!(m.knob("n").unwrap().default, Some(Value::Int(10_000)));
+        assert_eq!(
+            m.knob("schedule.kind").unwrap().default,
+            Some(Value::Str("bt".into()))
+        );
+        // Conditional sub-keys of other schedules stay default-less.
+        assert_eq!(m.knob("schedule.bits").unwrap().default, None);
+        // The deprecated alias has no encoded default either.
+        assert_eq!(m.knob("codec").unwrap().default, None);
+        // `threads` is host-derived — kept default-less so the rendered
+        // manifest is byte-stable across machines (the CI snapshot).
+        assert_eq!(m.knob("threads").unwrap().default, None);
+    }
+
+    #[test]
+    fn compressor_options_track_registry() {
+        let m = Manifest::generate();
+        let opts = &m.knob("compressor").unwrap().options;
+        assert_eq!(*opts, crate::compress::registry::names());
+        assert!(opts.iter().any(|o| o == "ecsq.range"));
+    }
+
+    #[test]
+    fn validation_names_the_offending_knob() {
+        let m = Manifest::generate();
+        let err = m
+            .validate_override("snr_dbb", &Value::Float(20.0))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("snr_dbb"), "{err}");
+        let err = m.validate_override("n", &Value::Int(0)).unwrap_err().to_string();
+        assert!(err.contains("'n'") && err.contains("minimum"), "{err}");
+        let err = m
+            .validate_override("n", &Value::Str("many".into()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("'n'") && err.contains("integer"), "{err}");
+        let err = m
+            .validate_override("partitioning", &Value::Str("diagonal".into()))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("partitioning") && err.contains("row"), "{err}");
+        let err = m
+            .validate_override("prior.eps", &Value::Float(1.5))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("prior.eps") && err.contains("maximum"), "{err}");
+    }
+
+    #[test]
+    fn int_knobs_accept_ints_only_float_knobs_widen() {
+        let m = Manifest::generate();
+        assert!(m.validate_override("n", &Value::Float(10.5)).is_err());
+        // Integers widen into float knobs (TOML `bits = 4`).
+        m.validate_override("schedule.bits", &Value::Int(4)).unwrap();
+    }
+
+    #[test]
+    fn render_is_one_knob_per_line_and_parses_back() {
+        let m = Manifest::generate();
+        let text = m.render();
+        let knob_lines = text
+            .lines()
+            .filter(|l| l.contains("\"id\":"))
+            .count();
+        assert_eq!(knob_lines, KNOWN_KEYS.len());
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(
+            parsed.get("knobs").unwrap().as_arr().unwrap().len(),
+            KNOWN_KEYS.len()
+        );
+    }
+}

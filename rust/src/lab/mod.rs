@@ -1,0 +1,64 @@
+//! The **experiment lab**: declarative studies over the config knob space
+//! plus the perf-trajectory gate CI runs on every PR.
+//!
+//! Three pieces, surfaced as `mpamp lab {manifest,check,run,gate}`:
+//!
+//! * [`manifest`] — a machine-readable knob manifest generated from
+//!   [`RunConfig`](crate::config::RunConfig): every knob with a stable id,
+//!   type, bounds, default, and scientific role (treatment / control /
+//!   confound / infra). CI snapshots it (`ci/knob_manifest.json`) so knob
+//!   additions are reviewed deliberately.
+//! * [`study`] — an overrides-file format validated against the manifest
+//!   that drives [`Sweep`](crate::experiment::Sweep) without custom Rust:
+//!   `[base]` fixed overrides, `[grid]` crossed axes, one labelled trial
+//!   per grid point.
+//! * [`bench_util::compare`](crate::bench_util::compare) — classifies each
+//!   record of a current `BENCH_pr.json` against stored baselines with
+//!   per-metric-family noise bands (`mpamp lab gate`), exiting nonzero on
+//!   out-of-band regressions and re-baselining with `--bless`.
+//!
+//! Worked example — a two-axis study driven entirely from text:
+//!
+//! ```
+//! use mpamp::config::toml;
+//! use mpamp::lab::manifest::Manifest;
+//! use mpamp::lab::study::{records_from_reports, Study};
+//!
+//! let manifest = Manifest::generate();
+//! let text = r#"
+//!     [lab]
+//!     name = "part-vs-rate"
+//!     threads = 2
+//!
+//!     [base]
+//!     n = 400
+//!     m = 120
+//!     p = 4
+//!     iters = 2
+//!     schedule.kind = "fixed"
+//!
+//!     [grid]
+//!     partitioning = "row,column"
+//!     schedule.bits = "2,4"
+//! "#;
+//! let study =
+//!     Study::from_table(&toml::parse(text).unwrap(), "part-vs-rate", &manifest)
+//!         .unwrap();
+//! assert_eq!(study.len(), 4); // full cross product
+//!
+//! let reports = study.run().unwrap();
+//! for record in records_from_reports(&reports) {
+//!     // "part-vs-rate/partitioning=row,schedule.bits=2", ...
+//!     println!("{}: {:?} dB/bit", record.name, record.sdr_per_bit);
+//! }
+//! ```
+//!
+//! The same study as a file is `mpamp lab run study.toml --records out.json`,
+//! and `mpamp lab gate --baseline ci/baselines.json --current out.json`
+//! closes the loop.
+
+pub mod manifest;
+pub mod study;
+
+pub use manifest::{Knob, KnobRole, KnobType, Manifest};
+pub use study::{records_from_reports, Study, StudyTrial};

@@ -1,0 +1,393 @@
+//! Declarative **studies**: an overrides file (TOML subset) that drives
+//! [`Sweep`](crate::experiment::Sweep) without custom Rust per study.
+//!
+//! A study file has three kinds of keys:
+//!
+//! ```toml
+//! [lab]                 # study metadata (reserved, not knobs)
+//! name = "rate-vs-part" # label prefix (default: file stem / "study")
+//! threads = 2           # concurrent trials (default: machine parallelism)
+//!
+//! [base]                # fixed overrides applied to every trial
+//! n = 600
+//! m = 180
+//! p = 6
+//! iters = 6
+//!
+//! [grid]                # swept axes; comma-separated atoms, crossed
+//! partitioning = "row,column"
+//! schedule.bits = "2,4"
+//! ```
+//!
+//! Bare top-level knob keys (`n = 600` outside any section) are also
+//! treated as base overrides, so any existing run config is a valid
+//! one-point study. Every base and axis value is validated against the
+//! [`Manifest`] **before** any session is built, so errors name the
+//! offending knob instead of failing mid-sweep. Trials are the full cross
+//! product of the grid axes (axis order = sorted key order), labelled
+//! `name/key=value,...`, built by overlaying base + grid point onto
+//! [`RunConfig::paper_default`]`(0.05)` semantics via
+//! [`RunConfig::from_table`], and executed by [`Sweep`] — which makes a
+//! one-point study bit-for-bit identical to `Session::new(cfg).run()`
+//! (pinned in `rust/tests/lab.rs`).
+
+use crate::bench_util::BenchRecord;
+use crate::config::toml::{self, Table, Value};
+use crate::config::RunConfig;
+use crate::coordinator::builder::SessionBuilder;
+use crate::error::{Error, Result};
+use crate::experiment::{Sweep, TrialReport};
+use crate::lab::manifest::Manifest;
+
+/// One swept axis: a knob id plus its values in file order.
+#[derive(Debug, Clone)]
+pub struct Axis {
+    /// Knob id (a `RunConfig` table key).
+    pub id: String,
+    /// Values crossed into the grid.
+    pub values: Vec<Value>,
+}
+
+/// A parsed, manifest-validated study.
+#[derive(Debug, Clone)]
+pub struct Study {
+    /// Label prefix for trial names.
+    pub name: String,
+    /// Concurrent-trial bound (`None` = machine default).
+    pub threads: Option<usize>,
+    /// Fixed overrides applied to every trial.
+    pub base: Table,
+    /// Swept axes in sorted-key order.
+    pub axes: Vec<Axis>,
+}
+
+/// One point of the study grid: a label plus the fully merged table.
+#[derive(Debug, Clone)]
+pub struct StudyTrial {
+    /// `name/key=value,...` (just `name` for a one-point study).
+    pub label: String,
+    /// The merged base + grid-point overrides table.
+    pub table: Table,
+    /// The resulting validated config.
+    pub config: RunConfig,
+}
+
+impl Study {
+    /// Parse and validate a study from TOML-subset text. `default_name`
+    /// labels the study when the file has no `lab.name` (callers pass the
+    /// file stem).
+    pub fn from_table(t: &Table, default_name: &str, manifest: &Manifest) -> Result<Study> {
+        let mut name = default_name.to_string();
+        let mut threads = None;
+        let mut base = Table::new();
+        let mut axes: Vec<Axis> = Vec::new();
+        for (key, v) in t {
+            if let Some(meta) = key.strip_prefix("lab.") {
+                match meta {
+                    "name" => {
+                        name = v
+                            .as_str()
+                            .ok_or_else(|| {
+                                Error::Config("'lab.name' must be a string".into())
+                            })?
+                            .to_string();
+                    }
+                    "threads" => {
+                        threads = Some(v.as_usize().filter(|&n| n >= 1).ok_or_else(
+                            || Error::Config("'lab.threads' must be a positive integer".into()),
+                        )?);
+                    }
+                    other => {
+                        return Err(Error::Config(format!(
+                            "unknown study key 'lab.{other}' (lab.name, lab.threads)"
+                        )))
+                    }
+                }
+            } else if let Some(id) = key.strip_prefix("grid.") {
+                manifest.knob(id).ok_or_else(|| {
+                    Error::Config(format!("grid axis 'grid.{id}': unknown knob '{id}'"))
+                })?;
+                let raw = v.as_str().map(str::to_string).unwrap_or_else(|| {
+                    // A bare scalar axis (`grid.p = 6`) is a one-value axis.
+                    match v {
+                        Value::Int(i) => i.to_string(),
+                        Value::Float(f) => f.to_string(),
+                        Value::Bool(b) => b.to_string(),
+                        Value::Str(_) => unreachable!(),
+                    }
+                });
+                let mut values = Vec::new();
+                for atom in raw.split(',') {
+                    let atom = atom.trim();
+                    if atom.is_empty() {
+                        return Err(Error::Config(format!(
+                            "grid axis '{id}': empty value in \"{raw}\""
+                        )));
+                    }
+                    // Atoms arrive unquoted inside the comma list; bare
+                    // words (compressor names, schedule kinds) fall back
+                    // to strings — the same rule as CLI overrides.
+                    let value = toml::parse_value(atom, 0)
+                        .unwrap_or_else(|_| Value::Str(atom.to_string()));
+                    manifest.validate_override(id, &value).map_err(|e| {
+                        Error::Config(format!("grid axis '{id}': {e}"))
+                    })?;
+                    values.push(value);
+                }
+                axes.push(Axis { id: id.to_string(), values });
+            } else {
+                // `base.n` and bare `n` are the same knob.
+                let id = key.strip_prefix("base.").unwrap_or(key);
+                manifest.validate_override(id, v)?;
+                if base.insert(id.to_string(), v.clone()).is_some() {
+                    return Err(Error::Config(format!(
+                        "knob '{id}' set twice (bare and under [base])"
+                    )));
+                }
+            }
+        }
+        for axis in &axes {
+            if base.contains_key(&axis.id) {
+                return Err(Error::Config(format!(
+                    "knob '{}' is both a base override and a grid axis",
+                    axis.id
+                )));
+            }
+        }
+        let study = Study { name, threads, base, axes };
+        // Surface config-level errors (P not dividing M, schedule bounds,
+        // unregistered compressors) at check time for every grid point.
+        for trial in study.trials()? {
+            drop(trial);
+        }
+        Ok(study)
+    }
+
+    /// Load a study file. The file stem becomes the default name.
+    pub fn from_file(path: &str, manifest: &Manifest) -> Result<Study> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read '{path}': {e}")))?;
+        let stem = std::path::Path::new(path)
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .unwrap_or("study");
+        Self::from_table(&toml::parse(&text)?, stem, manifest)
+            .map_err(|e| Error::Config(format!("{path}: {e}")))
+    }
+
+    /// Number of grid points (product of axis sizes; 1 with no grid).
+    pub fn len(&self) -> usize {
+        self.axes.iter().map(|a| a.values.len()).product()
+    }
+
+    /// Whether the grid is degenerate (an axis with zero values).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize every grid point: merged tables, validated configs,
+    /// labels. Order is row-major over the sorted axis keys with the last
+    /// axis fastest, so labels enumerate deterministically.
+    pub fn trials(&self) -> Result<Vec<StudyTrial>> {
+        let mut out = Vec::with_capacity(self.len());
+        let mut idx = vec![0usize; self.axes.len()];
+        loop {
+            let mut table = self.base.clone();
+            let mut label = self.name.clone();
+            for (axis, &i) in self.axes.iter().zip(&idx) {
+                let v = &axis.values[i];
+                table.insert(axis.id.clone(), v.clone());
+                let shown = match v {
+                    Value::Str(s) => s.clone(),
+                    Value::Int(n) => n.to_string(),
+                    Value::Float(f) => f.to_string(),
+                    Value::Bool(b) => b.to_string(),
+                };
+                let sep = if label.len() == self.name.len() { '/' } else { ',' };
+                label.push(sep);
+                label.push_str(&format!("{}={shown}", axis.id));
+            }
+            let config = RunConfig::from_table(&table)
+                .map_err(|e| Error::Config(format!("trial '{label}': {e}")))?;
+            out.push(StudyTrial { label, table, config });
+            // Odometer increment, last axis fastest.
+            let mut k = self.axes.len();
+            loop {
+                if k == 0 {
+                    return Ok(out);
+                }
+                k -= 1;
+                idx[k] += 1;
+                if idx[k] < self.axes[k].values.len() {
+                    break;
+                }
+                idx[k] = 0;
+            }
+        }
+    }
+
+    /// Run the whole grid through [`Sweep`] and return ordered reports.
+    pub fn run(&self) -> Result<Vec<TrialReport>> {
+        let mut sweep = Sweep::new();
+        for trial in self.trials()? {
+            sweep.add(trial.label, SessionBuilder::from_config(trial.config));
+        }
+        if let Some(t) = self.threads {
+            sweep = sweep.threads(t);
+        }
+        sweep.run()
+    }
+}
+
+/// Convert sweep results into the CI bench-record schema, one record per
+/// trial: wall seconds, uplinked bytes, signal throughput, plus the
+/// session-quality metrics the perf gate tracks (`sdr_per_bit`,
+/// `rounds_per_s`).
+pub fn records_from_reports(reports: &[TrialReport]) -> Vec<BenchRecord> {
+    reports
+        .iter()
+        .map(|tr| {
+            let r = &tr.report;
+            let bits = r.total_uplink_bits_per_element();
+            let sdr_per_bit = (bits > 0.0).then(|| r.final_sdr_db() / bits);
+            let rounds_per_s = (r.wall_s > 0.0).then(|| r.iters.len() as f64 / r.wall_s);
+            BenchRecord {
+                name: tr.label.clone(),
+                wall_s: r.wall_s,
+                bytes_uplinked: r.transport_uplink_bits / 8,
+                signals_per_s: r.signals_per_s(),
+                sdr_per_bit: sdr_per_bit.filter(|v| v.is_finite()),
+                rounds_per_s,
+                gflops: None,
+                jobs_per_s: None,
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manifest() -> Manifest {
+        Manifest::generate()
+    }
+
+    fn study(text: &str) -> Result<Study> {
+        Study::from_table(&toml::parse(text).unwrap(), "t", &manifest())
+    }
+
+    #[test]
+    fn grid_crosses_axes_in_sorted_key_order() {
+        let s = study(
+            r#"
+            [base]
+            n = 600
+            m = 180
+            p = 6
+            iters = 2
+            [grid]
+            partitioning = "row,column"
+            schedule.kind = "fixed,uncompressed"
+            "#,
+        )
+        .unwrap();
+        assert_eq!(s.len(), 4);
+        let labels: Vec<String> =
+            s.trials().unwrap().into_iter().map(|t| t.label).collect();
+        // Sorted keys: partitioning < schedule.kind; last axis fastest.
+        assert_eq!(
+            labels,
+            vec![
+                "t/partitioning=row,schedule.kind=fixed",
+                "t/partitioning=row,schedule.kind=uncompressed",
+                "t/partitioning=column,schedule.kind=fixed",
+                "t/partitioning=column,schedule.kind=uncompressed",
+            ]
+        );
+    }
+
+    #[test]
+    fn bare_keys_are_base_overrides() {
+        let s = study("n = 600\nm = 180\np = 6").unwrap();
+        assert_eq!(s.len(), 1);
+        let trials = s.trials().unwrap();
+        assert_eq!(trials[0].label, "t");
+        assert_eq!(trials[0].config.n, 600);
+    }
+
+    #[test]
+    fn lab_section_sets_name_and_threads() {
+        let s = study("[lab]\nname = \"q\"\nthreads = 2\nn = 600\nm = 180\np = 6")
+            .unwrap();
+        assert_eq!(s.name, "q");
+        assert_eq!(s.threads, Some(2));
+        assert!(study("[lab]\nthreads = 0").is_err());
+        assert!(study("[lab]\nnope = 1").is_err());
+    }
+
+    #[test]
+    fn invalid_knobs_name_the_offender() {
+        let err = study("snr_dbb = 20.0").unwrap_err().to_string();
+        assert!(err.contains("snr_dbb"), "{err}");
+        let err = study("[grid]\nprior.eps = \"0.05,1.5\"").unwrap_err().to_string();
+        assert!(err.contains("prior.eps") && err.contains("maximum"), "{err}");
+        let err = study("[grid]\ncompressor = \"ecsq.range,ecsq.zstd\"")
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("compressor") && err.contains("ecsq.zstd"), "{err}");
+    }
+
+    #[test]
+    fn base_grid_collisions_rejected() {
+        let err = study("p = 6\n[grid]\np = \"2,6\"").unwrap_err().to_string();
+        assert!(err.contains("'p'"), "{err}");
+        let err = study("p = 6\n[base]\np = 6").unwrap_err().to_string();
+        assert!(err.contains("'p'") && err.contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn trial_level_config_errors_surface_at_parse_time() {
+        // P=7 divides neither M nor N — caught before any run.
+        let err = study("n = 600\nm = 180\np = 7").unwrap_err().to_string();
+        assert!(err.contains("divide"), "{err}");
+    }
+
+    #[test]
+    fn string_axes_fall_back_to_bare_words() {
+        let s = study(
+            "n = 600\nm = 180\np = 6\n[grid]\ncompressor = \"ecsq.range, ecsq.huffman\"",
+        )
+        .unwrap();
+        let trials = s.trials().unwrap();
+        assert_eq!(trials[0].config.compressor, "ecsq.range");
+        assert_eq!(trials[1].config.compressor, "ecsq.huffman");
+    }
+
+    #[test]
+    fn scalar_axis_is_one_value() {
+        let s = study("n = 600\nm = 180\n[grid]\np = 6").unwrap();
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.trials().unwrap()[0].config.p, 6);
+    }
+
+    #[test]
+    fn records_carry_session_metrics() {
+        let s = study(
+            "[lab]\nthreads = 2\nn = 400\nm = 120\np = 4\niters = 3\n\
+             [grid]\nschedule.kind = \"fixed,uncompressed\"",
+        )
+        .unwrap();
+        let reports = s.run().unwrap();
+        let records = records_from_reports(&reports);
+        assert_eq!(records.len(), 2);
+        for r in &records {
+            assert!(r.wall_s > 0.0);
+            assert!(r.bytes_uplinked > 0);
+            assert!(r.signals_per_s > 0.0);
+            assert!(r.sdr_per_bit.is_some());
+            assert!(r.rounds_per_s.unwrap() > 0.0);
+        }
+        assert!(records[0].name.contains("schedule.kind=fixed"));
+    }
+}

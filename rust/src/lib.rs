@@ -78,6 +78,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod error;
 pub mod experiment;
+pub mod lab;
 pub mod linalg;
 pub mod metrics;
 pub mod observe;

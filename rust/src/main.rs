@@ -86,6 +86,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "rd" => cmd_rd(args),
         "compressors" => cmd_compressors(args),
         "artifacts" => cmd_artifacts(args),
+        "lab" => cmd_lab(args),
         other => Err(Error::Config(format!(
             "unknown command '{other}' (try `mpamp help`)"
         ))),
@@ -255,6 +256,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
         sc.deadline = Some(std::time::Duration::from_secs_f64(s));
     }
+    term_signal::install();
     let daemon = Daemon::start(sc)?;
     eprintln!(
         "mpampd: serving on {} (fleet P={}, max {} running + {} queued{})",
@@ -267,9 +269,62 @@ fn cmd_serve(args: &Args) -> Result<()> {
             None => String::new(),
         }
     );
-    // Serve until the process is killed.
-    loop {
-        std::thread::sleep(std::time::Duration::from_secs(3600));
+    // Serve until SIGTERM/SIGINT, then drain gracefully: stop admitting,
+    // let admitted jobs (running and queued) finish, and exit 0.
+    while !term_signal::received() {
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let (running, queued) = daemon.load();
+    eprintln!(
+        "mpampd: shutdown signal received; draining ({running} running, \
+         {queued} queued)"
+    );
+    daemon.begin_drain();
+    while !daemon.is_idle() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    daemon.shutdown()?;
+    eprintln!("mpampd: drained; exiting");
+    Ok(())
+}
+
+/// Process-wide SIGTERM/SIGINT latch for the serve loop — direct libc
+/// `signal(2)` FFI, since the vendored crate set has no `libc`/`signal-hook`.
+#[cfg(unix)]
+mod term_signal {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static TERM: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_term(_sig: i32) {
+        // Only async-signal-safe work here: flip the latch.
+        TERM.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the handler for SIGINT (2) and SIGTERM (15).
+    pub fn install() {
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            signal(2, on_term);
+            signal(15, on_term);
+        }
+    }
+
+    /// Whether a termination signal has arrived.
+    pub fn received() -> bool {
+        TERM.load(Ordering::SeqCst)
+    }
+}
+
+/// Non-unix fallback: no signal hook; `mpamp serve` runs until killed.
+#[cfg(not(unix))]
+mod term_signal {
+    pub fn install() {}
+
+    pub fn received() -> bool {
+        false
     }
 }
 
@@ -421,6 +476,166 @@ fn cmd_compressors(args: &Args) -> Result<()> {
             if caps.needs_model_pmf { "needs" } else { "-" },
             stack.description(),
         );
+    }
+    Ok(())
+}
+
+/// `mpamp lab <manifest|run|check|gate>` — the experiment lab.
+fn cmd_lab(args: &Args) -> Result<()> {
+    match args.positional.first().map(String::as_str) {
+        Some("manifest") => cmd_lab_manifest(args),
+        Some("run") => cmd_lab_run(args),
+        Some("check") => cmd_lab_check(args),
+        Some("gate") => cmd_lab_gate(args),
+        Some(other) => Err(Error::Config(format!(
+            "unknown lab subcommand '{other}' (manifest, run, check, gate)"
+        ))),
+        None => Err(Error::Config(
+            "usage: mpamp lab <manifest|run|check|gate> (see `mpamp help`)".into(),
+        )),
+    }
+}
+
+fn cmd_lab_manifest(args: &Args) -> Result<()> {
+    let manifest = mpamp::lab::Manifest::generate();
+    let text = manifest.render();
+    if args.has_flag("check") {
+        let path = args.positional.get(1).ok_or_else(|| {
+            Error::Config("usage: mpamp lab manifest --check <snapshot.json>".into())
+        })?;
+        let snapshot = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("cannot read '{path}': {e}")))?;
+        if snapshot != text {
+            return Err(Error::Config(format!(
+                "knob manifest drifted from '{path}': a RunConfig knob was \
+                 added or changed; regenerate with `mpamp lab manifest --out \
+                 {path}` and review the diff"
+            )));
+        }
+        eprintln!("manifest matches {path} ({} knobs)", manifest.knobs.len());
+        return Ok(());
+    }
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(path, &text).map_err(Error::Io)?;
+            eprintln!("wrote {path} ({} knobs)", manifest.knobs.len());
+        }
+        None => print!("{text}"),
+    }
+    Ok(())
+}
+
+fn cmd_lab_run(args: &Args) -> Result<()> {
+    let path = args.positional.get(1).ok_or_else(|| {
+        Error::Config("usage: mpamp lab run <study.toml> [--records <out.json>]".into())
+    })?;
+    let manifest = mpamp::lab::Manifest::generate();
+    let study = mpamp::lab::Study::from_file(path, &manifest)?;
+    eprintln!("lab run: study '{}' — {} trial(s)", study.name, study.len());
+    let reports = study.run()?;
+    if !args.has_flag("quiet") {
+        println!(
+            "{:<56} {:>9} {:>11} {:>9} {:>9}",
+            "TRIAL", "SDR(dB)", "bits/elem", "dB/bit", "wall(s)"
+        );
+        for tr in &reports {
+            let bits = tr.report.total_uplink_bits_per_element();
+            let per_bit =
+                if bits > 0.0 { tr.report.final_sdr_db() / bits } else { f64::NAN };
+            println!(
+                "{:<56} {:>9.2} {:>11.2} {:>9.3} {:>9.2}",
+                tr.label,
+                tr.report.final_sdr_db(),
+                bits,
+                per_bit,
+                tr.report.wall_s
+            );
+        }
+    }
+    let records = mpamp::lab::records_from_reports(&reports);
+    if let Some(out) = args.get("records") {
+        mpamp::bench_util::write_bench_json(out, &records).map_err(Error::Io)?;
+        eprintln!("wrote {} record(s) to {out}", records.len());
+    }
+    Ok(())
+}
+
+fn cmd_lab_check(args: &Args) -> Result<()> {
+    let files = &args.positional[1..];
+    if files.is_empty() {
+        return Err(Error::Config(
+            "usage: mpamp lab check <file.toml> [more files...]".into(),
+        ));
+    }
+    let manifest = mpamp::lab::Manifest::generate();
+    let mut failures = 0usize;
+    for path in files {
+        match mpamp::lab::Study::from_file(path, &manifest) {
+            Ok(study) => {
+                println!("OK   {path} ({} trial(s))", study.len());
+            }
+            Err(e) => {
+                failures += 1;
+                println!("FAIL {path}");
+                eprintln!("  {e}");
+            }
+        }
+    }
+    if failures > 0 {
+        return Err(Error::Config(format!(
+            "{failures} of {} file(s) failed manifest validation",
+            files.len()
+        )));
+    }
+    Ok(())
+}
+
+fn cmd_lab_gate(args: &Args) -> Result<()> {
+    use mpamp::bench_util::compare::{compare, Baselines};
+    let baseline_path = args.get("baseline").ok_or_else(|| {
+        Error::Config(
+            "usage: mpamp lab gate --baseline <baselines.json> --current \
+             <BENCH.json> [--md <out.md>] [--bless]"
+                .into(),
+        )
+    })?;
+    let current_path = args
+        .get("current")
+        .ok_or_else(|| Error::Config("lab gate: missing --current <BENCH.json>".into()))?;
+    let current = mpamp::bench_util::read_bench_json(current_path)?;
+    if args.has_flag("bless") {
+        // Re-baseline: keep the store's note/tolerances when it already
+        // exists, otherwise start one with the default bands.
+        let note = format!("blessed from {current_path}");
+        let store = if std::path::Path::new(baseline_path).exists() {
+            let mut s = Baselines::load(baseline_path)?;
+            s.records = current;
+            s.note = note;
+            s
+        } else {
+            Baselines::from_records(&note, current)
+        };
+        store.save(baseline_path)?;
+        eprintln!(
+            "blessed {} record(s) into {baseline_path}",
+            store.records.len()
+        );
+        return Ok(());
+    }
+    let store = Baselines::load(baseline_path)?;
+    let comparison = compare(&store, &current);
+    let md = comparison.markdown();
+    if let Some(out) = args.get("md") {
+        std::fs::write(out, &md).map_err(Error::Io)?;
+        eprintln!("wrote {out}");
+    }
+    print!("{md}");
+    if !comparison.gate_passes() {
+        return Err(Error::Config(format!(
+            "perf gate failed: {} record(s) out of band (re-baseline \
+             intentionally with --bless)",
+            comparison.failures().len()
+        )));
     }
     Ok(())
 }

@@ -133,6 +133,10 @@ struct DaemonShared {
     queue_cv: Condvar,
     next_session: AtomicU32,
     shutdown: AtomicBool,
+    /// Graceful-drain mode: new submissions bounce, admitted jobs run to
+    /// completion. Set by [`Daemon::begin_drain`] (the CLI's SIGTERM /
+    /// SIGINT path).
+    draining: AtomicBool,
 }
 
 /// A running serving daemon. Dropping it shuts the fleet down and joins
@@ -185,6 +189,7 @@ impl Daemon {
             queue_cv: Condvar::new(),
             next_session: AtomicU32::new(1),
             shutdown: AtomicBool::new(false),
+            draining: AtomicBool::new(false),
         });
         let acc = shared.clone();
         let acceptor = std::thread::Builder::new()
@@ -218,6 +223,26 @@ impl Daemon {
     pub fn load(&self) -> (usize, usize) {
         let q = self.shared.queue.lock().expect("queue poisoned");
         (q.running(), q.queued())
+    }
+
+    /// Enter graceful-drain mode: stop admitting new jobs (submissions
+    /// are rejected with a "draining" message) while already-admitted
+    /// jobs — running *and* queued — finish normally. Poll
+    /// [`is_idle`](Self::is_idle) and then [`shutdown`](Self::shutdown)
+    /// to exit cleanly; this is the `mpamp serve` SIGTERM/SIGINT path.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::SeqCst);
+    }
+
+    /// Whether the drain has been requested via [`begin_drain`](Self::begin_drain).
+    pub fn is_draining(&self) -> bool {
+        self.shared.draining.load(Ordering::SeqCst)
+    }
+
+    /// Whether no job is running or queued (drain complete).
+    pub fn is_idle(&self) -> bool {
+        let q = self.shared.queue.lock().expect("queue poisoned");
+        q.running() == 0 && q.queued() == 0
     }
 
     /// Stop accepting, EOF the fleet, and join it. Called by `Drop`;
@@ -408,6 +433,12 @@ fn serve_job(shared: Arc<DaemonShared>, stream: TcpStream) -> Result<()> {
     if let Err(e) = validate_job(&cfg, &shared.cfg) {
         let _ = conn.send_error(&e.to_string());
         return Err(e);
+    }
+    // A draining daemon finishes what it admitted but takes nothing new.
+    if shared.draining.load(Ordering::SeqCst) {
+        let msg = "daemon is draining; not accepting new jobs";
+        let _ = conn.send_error(msg);
+        return Ok(());
     }
     let sid = shared.next_session.fetch_add(1, Ordering::Relaxed);
     // Admission.

@@ -1,0 +1,372 @@
+//! Experiment-lab integration tests: the knob manifest must cover (and
+//! round-trip) every `RunConfig` knob, studies must validate against it
+//! with the offending knob named, a one-point `lab run` must be
+//! bit-identical to a direct `Session::new(cfg).run()`, and the `lab
+//! gate` CLI must classify pass/regress/improve/new/missing with the
+//! documented exit codes and bless semantics.
+
+use std::process::Command;
+
+use mpamp::bench_util::{read_bench_json, write_bench_json, BenchRecord};
+use mpamp::config::toml;
+use mpamp::config::{Partitioning, RunConfig, ScheduleKind, TransportKind, KNOWN_KEYS};
+use mpamp::lab::{Manifest, Study};
+use mpamp::util::proptest::{prop_assert, Prop};
+use mpamp::Session;
+
+/// The compiled CLI under test (cargo builds bin targets for test runs).
+const BIN: &str = env!("CARGO_BIN_EXE_mpamp");
+
+fn tmp_dir(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("mpamp_lab_{name}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn run_cli(args: &[&str]) -> (bool, String, String) {
+    let out = Command::new(BIN).args(args).output().expect("spawn mpamp");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).into_owned(),
+        String::from_utf8_lossy(&out.stderr).into_owned(),
+    )
+}
+
+// ---------------------------------------------------------------------
+// Manifest coverage + round-trip
+// ---------------------------------------------------------------------
+
+#[test]
+fn manifest_covers_every_config_knob_and_own_defaults_validate() {
+    let m = Manifest::generate();
+    let ids: Vec<&str> = m.knobs.iter().map(|k| k.id).collect();
+    assert_eq!(ids, KNOWN_KEYS.to_vec(), "manifest must mirror KNOWN_KEYS");
+    for knob in &m.knobs {
+        if let Some(default) = &knob.default {
+            knob.validate_value(default).unwrap_or_else(|e| {
+                panic!("default of knob '{}' rejects itself: {e}", knob.id)
+            });
+        }
+    }
+}
+
+/// Drift guard, property-tested through the TOML layer: any `RunConfig`
+/// the config module can encode must validate cleanly knob-by-knob
+/// against the generated manifest — so a new config field without a knob
+/// spec (or a spec with wrong type/bounds) fails here, not in a study.
+#[test]
+fn manifest_roundtrips_randomized_configs_via_toml_layer() {
+    let manifest = Manifest::generate();
+    let stacks = mpamp::compress::registry::names();
+    Prop::new("lab.manifest.roundtrip", 64).check(|g| {
+        let mut cfg = RunConfig::paper_default(0.05);
+        cfg.n = g.usize_in(100, 5_000);
+        cfg.m = g.usize_in(50, 2_000);
+        cfg.p = g.usize_in(1, 16);
+        cfg.batch = g.usize_in(1, 4);
+        cfg.partitioning = if g.bool_with(0.5) {
+            Partitioning::Column
+        } else {
+            Partitioning::Row
+        };
+        cfg.prior.eps = g.f64_in(0.005, 0.95);
+        cfg.prior.mu_s = g.gaussian();
+        cfg.prior.sigma_s2 = g.f64_log_in(0.1, 10.0);
+        cfg.snr_db = g.f64_in(0.0, 40.0);
+        cfg.iters = g.usize_in(0, 40);
+        // The TOML layer carries seeds as i64 — stay in its range.
+        cfg.seed = g.u64() >> 1;
+        cfg.threads = g.usize_in(1, 8);
+        cfg.compressor = g.choice(&stacks).clone();
+        cfg.transport = if g.bool_with(0.5) {
+            TransportKind::Tcp
+        } else {
+            TransportKind::InProc
+        };
+        cfg.schedule = match g.usize_in(0, 3) {
+            0 => ScheduleKind::Uncompressed,
+            1 => ScheduleKind::Fixed { bits: g.f64_in(0.5, 8.0) },
+            2 => ScheduleKind::BackTrack {
+                ratio_max: g.f64_in(1.001, 2.0),
+                r_max: g.f64_in(1.0, 8.0),
+            },
+            _ => {
+                let budget = g.bool_with(0.5);
+                ScheduleKind::Dp {
+                    total_rate: budget.then(|| g.f64_in(4.0, 40.0)),
+                    delta_r: g.f64_in(0.05, 0.5),
+                }
+            }
+        };
+        cfg.rd.alphabet = g.usize_in(3, 1_025);
+        cfg.rd.curve_points = g.usize_in(2, 64);
+        cfg.rd.tol = g.f64_log_in(1e-6, 1e-2);
+        cfg.rd.gamma_grid = g.usize_in(2, 64);
+
+        let mut table = toml::Table::new();
+        cfg.encode_into(&mut table);
+        for (id, v) in &table {
+            manifest
+                .validate_override(id, v)
+                .map_err(|e| format!("encoded knob rejected: {e}"))?;
+        }
+        prop_assert(
+            table.keys().all(|k| KNOWN_KEYS.contains(&k.as_str())),
+            "encode_into emitted a key outside KNOWN_KEYS",
+        )
+    });
+}
+
+// ---------------------------------------------------------------------
+// Determinism pin: declarative one-point study ≡ direct session
+// ---------------------------------------------------------------------
+
+/// `mpamp lab run` with a one-point overrides file must reproduce
+/// `Session::new(cfg).run()` bit for bit — per-iteration SDR and wire
+/// rate, final estimates, and both transport byte counters — on row and
+/// column partitionings with a real compressed stack in the loop.
+#[test]
+fn one_point_study_reproduces_direct_session_bit_for_bit() {
+    let manifest = Manifest::generate();
+    for partitioning in ["row", "column"] {
+        let text = format!(
+            "[lab]\nname = \"pin\"\n[base]\nn = 400\nm = 120\np = 4\niters = 3\n\
+             partitioning = \"{partitioning}\"\nschedule.kind = \"fixed\"\n\
+             schedule.bits = 4.0\ncompressor = \"ecsq.range\"\nseed = 77\n"
+        );
+        let study =
+            Study::from_table(&toml::parse(&text).unwrap(), "pin", &manifest).unwrap();
+        assert_eq!(study.len(), 1, "{partitioning}: one-point study");
+        let trials = study.trials().unwrap();
+        assert_eq!(trials[0].label, "pin");
+
+        let direct = Session::new(trials[0].config.clone()).unwrap().run().unwrap();
+        let reports = study.run().unwrap();
+        assert_eq!(reports.len(), 1);
+        let got = &reports[0].report;
+
+        assert_eq!(
+            direct.iters.len(),
+            got.iters.len(),
+            "{partitioning}: iteration count"
+        );
+        for (t, (w, g)) in direct.iters.iter().zip(&got.iters).enumerate() {
+            assert_eq!(
+                w.sdr_db.to_bits(),
+                g.sdr_db.to_bits(),
+                "{partitioning}: sdr_db differs at t={t}"
+            );
+            assert_eq!(
+                w.rate_wire.to_bits(),
+                g.rate_wire.to_bits(),
+                "{partitioning}: rate_wire differs at t={t}"
+            );
+        }
+        assert_eq!(direct.final_xs.len(), got.final_xs.len());
+        for (wx, gx) in direct.final_xs.iter().zip(&got.final_xs) {
+            assert_eq!(wx.len(), gx.len());
+            for (i, (w, g)) in wx.iter().zip(gx).enumerate() {
+                assert_eq!(
+                    w.to_bits(),
+                    g.to_bits(),
+                    "{partitioning}: final_x[{i}] differs"
+                );
+            }
+        }
+        assert_eq!(
+            direct.transport_uplink_bits, got.transport_uplink_bits,
+            "{partitioning}: uplink byte accounting"
+        );
+        assert_eq!(
+            direct.transport_downlink_bits, got.transport_downlink_bits,
+            "{partitioning}: downlink byte accounting"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// CLI: lab check / lab run
+// ---------------------------------------------------------------------
+
+#[test]
+fn lab_check_cli_accepts_valid_and_names_offending_knobs() {
+    let dir = tmp_dir("check");
+    let good = dir.join("good.toml");
+    std::fs::write(
+        &good,
+        "[base]\nn = 400\nm = 120\np = 4\niters = 2\n[grid]\n\
+         partitioning = \"row,column\"\n",
+    )
+    .unwrap();
+    let (ok, stdout, _) = run_cli(&["lab", "check", good.to_str().unwrap()]);
+    assert!(ok, "valid study must pass: {stdout}");
+    assert!(stdout.contains("OK") && stdout.contains("2 trial(s)"), "{stdout}");
+
+    // Unknown key, out-of-bounds value, type mismatch: each must fail
+    // with the offending knob named.
+    for (name, body, needle) in [
+        ("unknown.toml", "snr_dbb = 20.0\n", "snr_dbb"),
+        ("bounds.toml", "prior.eps = 1.5\n", "maximum"),
+        ("type.toml", "n = \"many\"\n", "integer"),
+    ] {
+        let bad = dir.join(name);
+        std::fs::write(&bad, body).unwrap();
+        let (ok, stdout, stderr) = run_cli(&["lab", "check", bad.to_str().unwrap()]);
+        assert!(!ok, "{name} must fail");
+        assert!(stdout.contains("FAIL"), "{name}: {stdout}");
+        assert!(stderr.contains(needle), "{name}: {stderr}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lab_run_cli_writes_bench_records_for_every_trial() {
+    let dir = tmp_dir("run");
+    let study = dir.join("smoke.toml");
+    std::fs::write(
+        &study,
+        "[lab]\nname = \"smoke\"\nthreads = 2\n[base]\nn = 400\nm = 120\np = 4\n\
+         iters = 2\nschedule.kind = \"fixed\"\n[grid]\npartitioning = \"row,column\"\n",
+    )
+    .unwrap();
+    let records_path = dir.join("BENCH_lab.json");
+    let (ok, _, stderr) = run_cli(&[
+        "lab",
+        "run",
+        study.to_str().unwrap(),
+        "--records",
+        records_path.to_str().unwrap(),
+        "--quiet",
+    ]);
+    assert!(ok, "lab run failed: {stderr}");
+    let records = read_bench_json(records_path.to_str().unwrap()).unwrap();
+    assert_eq!(records.len(), 2);
+    assert_eq!(records[0].name, "smoke/partitioning=row");
+    assert_eq!(records[1].name, "smoke/partitioning=column");
+    for r in &records {
+        assert!(r.wall_s > 0.0 && r.bytes_uplinked > 0 && r.signals_per_s > 0.0);
+        assert!(r.sdr_per_bit.is_some() && r.rounds_per_s.is_some());
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// CLI: lab manifest snapshot check
+// ---------------------------------------------------------------------
+
+#[test]
+fn lab_manifest_cli_snapshot_matches_library_and_detects_drift() {
+    let dir = tmp_dir("manifest");
+    let snap = dir.join("knob_manifest.json");
+    let (ok, _, stderr) =
+        run_cli(&["lab", "manifest", "--out", snap.to_str().unwrap()]);
+    assert!(ok, "manifest --out failed: {stderr}");
+    // CLI output is exactly the library render (what CI snapshots).
+    let written = std::fs::read_to_string(&snap).unwrap();
+    assert_eq!(written, Manifest::generate().render());
+
+    let (ok, _, stderr) =
+        run_cli(&["lab", "manifest", "--check", snap.to_str().unwrap()]);
+    assert!(ok, "pristine snapshot must pass --check: {stderr}");
+
+    // Any byte of drift fails the check with a regeneration hint.
+    std::fs::write(&snap, written + " ").unwrap();
+    let (ok, _, stderr) =
+        run_cli(&["lab", "manifest", "--check", snap.to_str().unwrap()]);
+    assert!(!ok, "tampered snapshot must fail --check");
+    assert!(stderr.contains("drifted"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// CLI: lab gate classification + bless
+// ---------------------------------------------------------------------
+
+fn gate_rec(name: &str, wall_s: f64, bytes: u64, rps: Option<f64>) -> BenchRecord {
+    BenchRecord {
+        name: name.into(),
+        wall_s,
+        bytes_uplinked: bytes,
+        signals_per_s: 2.0,
+        sdr_per_bit: Some(0.8),
+        rounds_per_s: rps,
+        gflops: None,
+        jobs_per_s: None,
+    }
+}
+
+#[test]
+fn lab_gate_cli_classifies_and_blesses() {
+    let dir = tmp_dir("gate");
+    let baseline = dir.join("baselines.json");
+    let current = dir.join("BENCH_pr.json");
+    let bp = baseline.to_str().unwrap();
+    let cp = current.to_str().unwrap();
+    let write_current = |records: &[BenchRecord]| {
+        write_bench_json(cp, records).unwrap();
+    };
+
+    // Bless into a fresh store, then the same records pass the gate.
+    write_current(&[gate_rec("a", 1.0, 100, Some(5.0)), gate_rec("b", 2.0, 0, None)]);
+    let (ok, _, stderr) =
+        run_cli(&["lab", "gate", "--baseline", bp, "--current", cp, "--bless"]);
+    assert!(ok, "bless failed: {stderr}");
+    let (ok, stdout, _) = run_cli(&["lab", "gate", "--baseline", bp, "--current", cp]);
+    assert!(ok, "unchanged records must pass: {stdout}");
+    assert!(stdout.contains("**PASS**"), "{stdout}");
+
+    // Out-of-band wall_s (±50% band): exit nonzero, markdown names the
+    // record, the metric, the delta, and the verdict; --md writes it.
+    let md_path = dir.join("gate.md");
+    write_current(&[gate_rec("a", 3.0, 100, Some(5.0)), gate_rec("b", 2.0, 0, None)]);
+    let (ok, stdout, _) = run_cli(&[
+        "lab", "gate", "--baseline", bp, "--current", cp, "--md",
+        md_path.to_str().unwrap(),
+    ]);
+    assert!(!ok, "regression must exit nonzero: {stdout}");
+    assert!(stdout.contains("**FAIL**"), "{stdout}");
+    assert!(stdout.contains("| `a` | wall_s |"), "{stdout}");
+    assert!(stdout.contains("+200.0%"), "{stdout}");
+    assert!(stdout.contains("**regress**"), "{stdout}");
+    let md = std::fs::read_to_string(&md_path).unwrap();
+    assert!(md.starts_with("### Perf gate"), "{md}");
+
+    // Improvements stay green (flagged, not failed).
+    write_current(&[gate_rec("a", 0.3, 100, Some(9.0)), gate_rec("b", 2.0, 0, None)]);
+    let (ok, stdout, _) = run_cli(&["lab", "gate", "--baseline", bp, "--current", cp]);
+    assert!(ok, "improvement must pass: {stdout}");
+    assert!(stdout.contains("**improve**"), "{stdout}");
+
+    // A record only in the current run is new (passes); a baseline
+    // record missing from the current run fails the gate.
+    write_current(&[
+        gate_rec("a", 1.0, 100, Some(5.0)),
+        gate_rec("b", 2.0, 0, None),
+        gate_rec("c", 1.0, 0, None),
+    ]);
+    let (ok, stdout, _) = run_cli(&["lab", "gate", "--baseline", bp, "--current", cp]);
+    assert!(ok, "new record must pass: {stdout}");
+    assert!(stdout.contains("| `c` |") && stdout.contains("**new**"), "{stdout}");
+    write_current(&[gate_rec("a", 1.0, 100, Some(5.0))]);
+    let (ok, stdout, _) = run_cli(&["lab", "gate", "--baseline", bp, "--current", cp]);
+    assert!(!ok, "missing record must fail: {stdout}");
+    assert!(stdout.contains("| `b` |") && stdout.contains("**missing**"), "{stdout}");
+
+    // --bless re-baselines: the previously failing set now passes, and
+    // the store keeps one record per line for reviewable diffs.
+    write_current(&[gate_rec("a", 3.0, 100, Some(5.0))]);
+    let (ok, _, stderr) =
+        run_cli(&["lab", "gate", "--baseline", bp, "--current", cp, "--bless"]);
+    assert!(ok, "re-bless failed: {stderr}");
+    let (ok, stdout, _) = run_cli(&["lab", "gate", "--baseline", bp, "--current", cp]);
+    assert!(ok, "blessed records must pass: {stdout}");
+    let store_text = std::fs::read_to_string(&baseline).unwrap();
+    assert!(store_text.contains("\"tolerances\""), "{store_text}");
+    assert_eq!(
+        store_text.lines().filter(|l| l.contains("\"name\":")).count(),
+        1,
+        "{store_text}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

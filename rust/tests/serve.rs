@@ -209,3 +209,43 @@ fn full_queue_rejects_and_fleet_mismatch_rejects() {
     }
     daemon.shutdown().unwrap();
 }
+
+/// The graceful-shutdown contract behind `mpamp serve`'s SIGTERM path:
+/// after [`Daemon::begin_drain`] new submissions bounce with a "draining"
+/// message, while already-admitted jobs run to completion — bit-identical
+/// to a standalone session — after which the daemon reports idle.
+#[test]
+fn draining_daemon_bounces_new_jobs_but_finishes_admitted_ones() {
+    let daemon = Daemon::start(ServeConfig::new("127.0.0.1:0", 6)).unwrap();
+    let addr = daemon.addr().to_string();
+
+    // Job A is admitted before the drain begins.
+    let mut a_cfg = RunConfig::test_small(0.05);
+    a_cfg.iters = 5;
+    a_cfg.seed = 7;
+    let a_standalone = Session::new(a_cfg.clone()).unwrap().run().unwrap();
+    let mut a = Client::submit(&addr, &a_cfg).unwrap();
+    assert!(matches!(a.next_event().unwrap(), JobEvent::Started));
+
+    assert!(!daemon.is_draining());
+    daemon.begin_drain();
+    assert!(daemon.is_draining());
+
+    // New submissions bounce with the draining message...
+    let err = Client::submit(&addr, &a_cfg).unwrap_err().to_string();
+    assert!(err.contains("draining"), "unexpected rejection message: {err}");
+
+    // ...while the admitted job finishes normally and unperturbed.
+    let a_report = a.await_report().unwrap();
+    assert!(a_report.stopped_early.is_none());
+    assert_reports_bit_identical("drained job A", &a_standalone, &a_report);
+
+    // The queue empties out, after which shutdown is clean — the same
+    // poll `mpamp serve` does before exiting 0.
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    while !daemon.is_idle() {
+        assert!(std::time::Instant::now() < deadline, "drain never went idle");
+        std::thread::sleep(std::time::Duration::from_millis(10));
+    }
+    daemon.shutdown().unwrap();
+}
