@@ -120,8 +120,10 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     );
 
     // Raw kernel arithmetic throughput (GFLOP/s records in BENCH_pr.json):
-    // dot and the 4-way-unrolled axpy at an L2-resident size, plus the
-    // blocked matmul above.
+    // the tile/lane-blocked dot and the lane-blocked axpy at an
+    // L2-resident size, plus the blocked matmul above. (The axpy record
+    // name keeps its historical "unrolled" tag so blessed baselines stay
+    // comparable across the microkernel overhaul.)
     section("L1: dot / axpy kernel throughput");
     let kn = 16_384usize;
     let mut ka = vec![0f32; kn];

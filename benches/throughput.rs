@@ -42,8 +42,8 @@ fn builder_for(size: &Size) -> SessionBuilder {
 fn crossover_sweep() {
     section("serial ↔ pooled matmul crossover sweep");
     println!(
-        "current gate: PAR_MIN_ENTRIES = {PAR_MIN_ENTRIES} entries \
-         (kernels stay serial below it)"
+        "current gate: PAR_MIN_ENTRIES = {PAR_MIN_ENTRIES} multiply-adds \
+         (rows·cols·b; kernels stay serial below it)"
     );
     let threads = num_threads_default();
     let mut rng = Rng::new(11);
@@ -74,13 +74,17 @@ fn crossover_sweep() {
             },
         );
         println!(
-            "2^{shift} entries: pooled speedup over serial = {:.2}x",
+            "2^{shift} entries (x{b} signals = {} madds): pooled speedup over \
+             serial = {:.2}x",
+            b * entries,
             serial.median.as_secs_f64() / pooled.median.as_secs_f64().max(1e-12)
         );
     }
     println!(
-        "pick the smallest size where pooled wins consistently and update \
-         PAR_MIN_ENTRIES (rust/src/linalg/mod.rs) if this machine disagrees"
+        "pick the smallest madd count where pooled wins consistently and \
+         update PAR_MIN_ENTRIES (rust/src/linalg/mod.rs) if this machine \
+         disagrees; the scheduled reproduction CI job uploads this sweep as \
+         an artifact for a hardware-matched trace"
     );
 }
 
@@ -199,6 +203,56 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
         );
         let mut rec = BenchRecord::from_flops_stats(&stats);
         rec.name = format!("gflops matmul shard {}", size.label);
+        records.push(rec);
+
+        // Transposed kernel (Aᵀ·Z) at the same shard shape — the second
+        // half of every LC round, accumulation-bound rather than
+        // dot-bound, so it gets its own gated record.
+        let mut zs = vec![0f32; size.batch * rows];
+        rng.fill_gaussian(&mut zs, 1.0);
+        let mut out_t = vec![0f32; size.batch * size.n];
+        let stats = bench.bench_throughput(
+            &format!("matmul_t shard ({rows}x{}, B={})", size.n, size.batch),
+            flops,
+            || {
+                a.matmul_t_par(black_box(&zs), size.batch, &mut out_t, 4);
+                black_box(&out_t);
+            },
+        );
+        let mut rec = BenchRecord::from_flops_stats(&stats);
+        rec.name = format!("gflops matmul_t shard {}", size.label);
+        records.push(rec);
+
+        // Fused LC step (forward + residual + transposed accumulation in
+        // one pass per row panel) — the actual per-round kernel.
+        let mut ys = vec![0f32; size.batch * rows];
+        rng.fill_gaussian(&mut ys, 1.0);
+        let mut z_prevs = vec![0f32; size.batch * rows];
+        rng.fill_gaussian(&mut z_prevs, 1.0);
+        let coefs = vec![0.3f32; size.batch];
+        let inv_p = 1.0 / size.p as f32;
+        let mut z_out = vec![0f32; size.batch * rows];
+        let mut f_out = vec![0f32; size.batch * size.n];
+        let stats = bench.bench_throughput(
+            &format!("fused lc_step ({rows}x{}, B={})", size.n, size.batch),
+            2 * flops,
+            || {
+                a.lc_fused(
+                    black_box(&ys),
+                    black_box(&xs),
+                    &z_prevs,
+                    &coefs,
+                    size.batch,
+                    inv_p,
+                    &mut z_out,
+                    &mut f_out,
+                    4,
+                );
+                black_box(&f_out);
+            },
+        );
+        let mut rec = BenchRecord::from_flops_stats(&stats);
+        rec.name = format!("gflops fused lc_step {}", size.label);
         records.push(rec);
     }
 

@@ -454,6 +454,20 @@ pub fn compare(baselines: &Baselines, current: &[BenchRecord]) -> Comparison {
     Comparison { records }
 }
 
+/// Like [`compare`], but for current record sets that intentionally
+/// measure a different slice of the trajectory than the blessed set (the
+/// scheduled reproduction study vs the per-PR bench suite): baseline
+/// records with no counterpart in `current` are *skipped* instead of
+/// classified [`Verdict::Missing`]. Records present on both sides still
+/// gate normally, and current-only records still classify
+/// [`Verdict::New`] — subset mode never loosens a band, it only waives
+/// the coverage requirement.
+pub fn compare_subset(baselines: &Baselines, current: &[BenchRecord]) -> Comparison {
+    let mut cmp = compare(baselines, current);
+    cmp.records.retain(|r| r.verdict != Verdict::Missing);
+    cmp
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -598,5 +612,28 @@ mod tests {
 
     fn compare_pass_set() -> Vec<BenchRecord> {
         vec![rec("fast", 1.0, 100, Some(5.0)), rec("gone", 1.0, 0, None)]
+    }
+
+    #[test]
+    fn subset_waives_missing_records_only() {
+        let base = Baselines::from_records(
+            "t",
+            vec![rec("a", 1.0, 100, Some(5.0)), rec("b", 1.0, 0, None)],
+        );
+        // Current measures only `a`, in band: strict mode fails on the
+        // uncovered `b`, subset mode waives it.
+        let cur = vec![rec("a", 1.0, 100, Some(5.0))];
+        assert!(!compare(&base, &cur).gate_passes());
+        let cmp = compare_subset(&base, &cur);
+        assert!(cmp.gate_passes());
+        assert_eq!(cmp.records.len(), 1);
+        // A covered record that regresses still fails in subset mode —
+        // the bands themselves never loosen.
+        let cmp = compare_subset(&base, &[rec("a", 9.0, 100, Some(5.0))]);
+        assert!(!cmp.gate_passes());
+        // Current-only records still show up as New.
+        let cmp = compare_subset(&base, &[rec("a", 1.0, 100, Some(5.0)), rec("c", 1.0, 0, None)]);
+        assert!(cmp.gate_passes());
+        assert!(cmp.records.iter().any(|r| r.verdict == Verdict::New));
     }
 }

@@ -13,7 +13,7 @@ use crate::error::{Error, Result};
 /// looks like a flag.
 pub const KNOWN_FLAGS: &[&str] = &[
     "quiet", "verbose", "json", "help", "check", "no-coding", "keep-going", "names",
-    "bless",
+    "bless", "subset",
 ];
 
 /// Parsed command line.
@@ -178,6 +178,10 @@ LAB COMMANDS:
                              write it) and exits nonzero on regressions
                              or missing records. --bless rewrites the
                              baseline store from the current records.
+                             --subset skips baseline records the current
+                             set does not measure (for partial suites
+                             like the scheduled reproduction study);
+                             covered records still gate at full strength.
 
 EARLY-STOPPING OPTIONS (run, local only):
     --max-iters <k>          Stop after k iterations (caps config iters)
@@ -203,6 +207,7 @@ EXAMPLES:
     mpamp lab run configs/lab_smoke.toml --records BENCH_lab.json
     mpamp lab gate --baseline ci/baselines.json --current BENCH_pr.json
     mpamp lab gate --baseline ci/baselines.json --current BENCH_pr.json --bless
+    mpamp lab gate --baseline ci/baselines.json --current BENCH_repro.json --subset
 "
 }
 

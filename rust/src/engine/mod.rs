@@ -478,20 +478,14 @@ impl ComputeEngine for RustEngine {
         debug_assert_eq!(x.len(), n);
         debug_assert_eq!(z_prev.len(), mp);
         debug_assert_eq!(y.len(), mp);
-        // z = y − A x + coef·z_prev
+        // z = y − A x + coef·z_prev, f = x/P + Aᵀ z: one fused pass per
+        // row panel (forward, residual, and transposed accumulation share
+        // the hot panel of A) instead of three passes over the shard.
         let mut z = vec![0f32; mp];
-        a.matvec_par(x, &mut z, self.par_chunks());
-        for i in 0..mp {
-            z[i] = y[i] - z[i] + coef * z_prev[i];
-        }
-        let z_norm2 = crate::linalg::norm2_sq(&z);
-        // f = x/P + Aᵀ z
         let mut f = vec![0f32; n];
-        a.matvec_t_par(&z, &mut f, self.par_chunks());
         let inv_p = 1.0 / p_workers as f32;
-        for (fi, &xi) in f.iter_mut().zip(x) {
-            *fi += xi * inv_p;
-        }
+        a.lc_fused(y, x, z_prev, &[coef], 1, inv_p, &mut z, &mut f, self.par_chunks());
+        let z_norm2 = crate::linalg::norm2_sq(&z);
         Ok(LcOut { z, f_partial: f, z_norm2 })
     }
 
@@ -527,30 +521,29 @@ impl ComputeEngine for RustEngine {
         debug_assert_eq!(xs.len(), b * n);
         debug_assert_eq!(z_prevs.len(), b * mp);
         debug_assert_eq!(coefs.len(), b);
-        // Z = A X in one blocked pass over A, then the per-signal residual
-        // epilogue — elementwise ops in the exact order of `lc_step`, so
-        // the batch is bit-for-bit B sequential steps. Every output
-        // element is overwritten, so the reused buffers never leak state
-        // across rounds.
+        // Z = Y − A X + diag(coef)·Z_prev and F = X/P + Aᵀ Z in one fused
+        // pass over A for the whole batch. The fused kernel's per-signal
+        // arithmetic is the exact order of `lc_step` (which is the same
+        // kernel at B = 1), so the batch stays bit-for-bit B sequential
+        // steps. Every output element is overwritten, so the reused
+        // buffers never leak state across rounds.
         z_out.resize(b * mp, 0.0);
-        data.a.matmul_par(xs, b, z_out, self.par_chunks());
-        for j in 0..b {
-            let yj = data.y(j);
-            for i in 0..mp {
-                let k = j * mp + i;
-                z_out[k] = yj[i] - z_out[k] + coefs[j] * z_prevs[k];
-            }
-        }
+        f_out.resize(b * n, 0.0);
+        let inv_p = 1.0 / p_workers as f32;
+        data.a.lc_fused(
+            &data.ys,
+            xs,
+            z_prevs,
+            coefs,
+            b,
+            inv_p,
+            z_out,
+            f_out,
+            self.par_chunks(),
+        );
         z_norm2_out.clear();
         z_norm2_out
             .extend((0..b).map(|j| crate::linalg::norm2_sq(&z_out[j * mp..(j + 1) * mp])));
-        // F = X/P + Aᵀ Z, again one pass over A for the whole batch.
-        f_out.resize(b * n, 0.0);
-        data.a.matmul_t_par(z_out, b, f_out, self.par_chunks());
-        let inv_p = 1.0 / p_workers as f32;
-        for (fi, &xi) in f_out.iter_mut().zip(xs) {
-            *fi += xi * inv_p;
-        }
         Ok(())
     }
 

@@ -1,0 +1,249 @@
+//! Fused LC step: the `matvec → residual → matvec_t` chain of one AMP
+//! round as a single pass per row panel.
+//!
+//! The row-partitioned LC step (paper §2) is
+//!
+//! ```text
+//! z = y − A·x + coef·z_prev        (residual)
+//! f = x/P + Aᵀ·z                   (pseudo-data partial)
+//! ```
+//!
+//! Composed from separate kernels that is three full passes over the
+//! shard. [`Matrix::lc_fused`] instead computes, per [`PANEL_ROWS`]
+//! panel: the panel's `z` rows (forward microkernel), the residual
+//! epilogue on those rows, and the panel's contribution to `Aᵀz` —
+//! while the panel of `A` and the fresh `z` values are still cache-hot.
+//!
+//! # Bitwise contract
+//!
+//! The fused pass is bit-for-bit identical to the composed reference
+//! (`matmul → residual epilogue → matmul_t → estimate epilogue`) by
+//! construction: forward results are panel-invariant (absolute column
+//! tiles), the residual epilogue is elementwise, and `f` accumulates
+//! row panels in strictly ascending row order exactly like
+//! [`Matrix::matmul_t`]. Both outputs are fully overwritten — callers
+//! may pass dirty buffers. Property-pinned across {serial, pooled
+//! chunks 1/2/odd/>dims} × {wide, tall shards} × B∈{1,4} below.
+
+use super::kernel::{self, COL_TILE, PANEL_ROWS};
+use super::{Matrix, PAR_MIN_ENTRIES};
+use crate::runtime::pool::SendPtr;
+
+impl Matrix {
+    /// Fused LC step over `b` column-major signals:
+    /// `z_j = y_j − A·x_j + coef_j·z_prev_j`, `f_j = x_j·inv_p + Aᵀ·z_j`.
+    ///
+    /// `z_out` (`b·rows`) and `f_out` (`b·cols`) are fully overwritten.
+    /// Below the parallel crossover (same gate as
+    /// [`matmul_par`](Self::matmul_par), batch folded in) this runs the
+    /// truly fused serial panel pass; above it, the two passes dispatch
+    /// through the gated pooled kernels. Both paths produce identical
+    /// bits — see the module docs.
+    #[allow(clippy::too_many_arguments)]
+    pub fn lc_fused(
+        &self,
+        ys: &[f32],
+        xs: &[f32],
+        z_prevs: &[f32],
+        coefs: &[f32],
+        b: usize,
+        inv_p: f32,
+        z_out: &mut [f32],
+        f_out: &mut [f32],
+        threads: usize,
+    ) {
+        if !self.par_gate(self.rows, b, threads) {
+            return self.lc_fused_serial(ys, xs, z_prevs, coefs, b, inv_p, z_out, f_out);
+        }
+        self.matmul_par(xs, b, z_out, threads);
+        residual_epilogue(ys, z_prevs, coefs, self.rows, 0, self.rows, z_out);
+        self.matmul_t_par(z_out, b, f_out, threads);
+        estimate_epilogue(xs, inv_p, f_out);
+    }
+
+    /// The pooled body of [`lc_fused`](Self::lc_fused) without the size
+    /// gate — `chunks` pool chunks for both passes regardless of shape
+    /// (exposed so tests can pin pooled ≡ serial-fused at any size).
+    #[allow(clippy::too_many_arguments)]
+    pub fn lc_fused_pooled(
+        &self,
+        ys: &[f32],
+        xs: &[f32],
+        z_prevs: &[f32],
+        coefs: &[f32],
+        b: usize,
+        inv_p: f32,
+        z_out: &mut [f32],
+        f_out: &mut [f32],
+        chunks: usize,
+    ) {
+        self.matmul_pooled(xs, b, z_out, chunks);
+        residual_epilogue(ys, z_prevs, coefs, self.rows, 0, self.rows, z_out);
+        self.matmul_t_pooled(z_out, b, f_out, chunks);
+        estimate_epilogue(xs, inv_p, f_out);
+    }
+
+    /// Serial fused pass: one trip over the shard per panel — forward,
+    /// residual, and transposed accumulation share the hot panel.
+    #[allow(clippy::too_many_arguments)]
+    fn lc_fused_serial(
+        &self,
+        ys: &[f32],
+        xs: &[f32],
+        z_prevs: &[f32],
+        coefs: &[f32],
+        b: usize,
+        inv_p: f32,
+        z_out: &mut [f32],
+        f_out: &mut [f32],
+    ) {
+        let rows = self.rows;
+        let cols = self.cols;
+        debug_assert_eq!(ys.len(), b * rows);
+        debug_assert_eq!(xs.len(), b * cols);
+        debug_assert_eq!(z_prevs.len(), b * rows);
+        debug_assert_eq!(coefs.len(), b);
+        debug_assert_eq!(z_out.len(), b * rows);
+        debug_assert_eq!(f_out.len(), b * cols);
+        f_out.iter_mut().for_each(|o| *o = 0.0);
+        let mut p0 = 0;
+        while p0 < rows {
+            let p1 = (p0 + PANEL_ROWS).min(rows);
+            let z_ptr = SendPtr::new(z_out.as_mut_ptr());
+            // SAFETY: exclusive `&mut z_out`; this is the only live view.
+            unsafe { kernel::forward_rows(&self.data, rows, cols, xs, b, z_ptr, p0, p1) };
+            residual_epilogue(ys, z_prevs, coefs, rows, p0, p1, z_out);
+            // Accumulate this panel's Aᵀz contribution while the panel of
+            // A and the fresh z rows are cache-hot. Per output column the
+            // row visit order is still strictly ascending across panels,
+            // so f matches matmul_t bitwise.
+            let mut t0 = 0;
+            while t0 < cols {
+                let t1 = (t0 + COL_TILE).min(cols);
+                for r in p0..p1 {
+                    let row = &self.data[r * cols + t0..r * cols + t1];
+                    for j in 0..b {
+                        let zr = z_out[j * rows + r];
+                        kernel::axpy(zr, row, &mut f_out[j * cols + t0..j * cols + t1]);
+                    }
+                }
+                t0 = t1;
+            }
+            p0 = p1;
+        }
+        estimate_epilogue(xs, inv_p, f_out);
+    }
+}
+
+/// `z[k] = y[k] − z[k] + coef_j·z_prev[k]` over rows `[r0, r1)` of every
+/// signal — elementwise, so application order never affects bits.
+fn residual_epilogue(
+    ys: &[f32],
+    z_prevs: &[f32],
+    coefs: &[f32],
+    rows: usize,
+    r0: usize,
+    r1: usize,
+    z: &mut [f32],
+) {
+    for (j, &cj) in coefs.iter().enumerate() {
+        for r in r0..r1 {
+            let k = j * rows + r;
+            z[k] = ys[k] - z[k] + cj * z_prevs[k];
+        }
+    }
+}
+
+/// `f[i] += x[i]·inv_p` — the worker's own share of the estimate.
+fn estimate_epilogue(xs: &[f32], inv_p: f32, f: &mut [f32]) {
+    for (fi, &xi) in f.iter_mut().zip(xs) {
+        *fi += xi * inv_p;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::Matrix;
+    use crate::util::proptest::{prop_assert, Prop};
+    use crate::util::rng::Rng;
+
+    fn rand_matrix(rng: &mut Rng, r: usize, c: usize) -> Matrix {
+        let mut data = vec![0f32; r * c];
+        rng.fill_gaussian(&mut data, 1.0);
+        Matrix::from_vec(r, c, data).unwrap()
+    }
+
+    /// The composed reference the fused kernel must reproduce exactly:
+    /// `matmul → residual epilogue → matmul_t → estimate epilogue`.
+    fn composed(
+        a: &Matrix,
+        ys: &[f32],
+        xs: &[f32],
+        zp: &[f32],
+        coefs: &[f32],
+        b: usize,
+        inv_p: f32,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let (r, c) = (a.rows(), a.cols());
+        let mut z = vec![0f32; b * r];
+        a.matmul(xs, b, &mut z);
+        for (j, &cj) in coefs.iter().enumerate() {
+            for i in 0..r {
+                let k = j * r + i;
+                z[k] = ys[k] - z[k] + cj * zp[k];
+            }
+        }
+        let mut f = vec![0f32; b * c];
+        a.matmul_t(&z, b, &mut f);
+        for (fi, &xi) in f.iter_mut().zip(xs) {
+            *fi += xi * inv_p;
+        }
+        (z, f)
+    }
+
+    #[test]
+    fn fused_bitwise_matches_composed_reference() {
+        // {serial fused, pooled chunks 1/2/odd/>dims} × {wide row-shard,
+        // tall column-shard} × B ∈ {1, 4}, with dirty outputs (the
+        // fully-overwritten contract).
+        Prop::new("lc_fused == composed (bitwise)", 10).check(|g| {
+            let mut rng = Rng::new(g.u64());
+            let wide = (g.usize_in(1, 30), g.usize_in(40, 90));
+            let tall = (g.usize_in(40, 90), g.usize_in(1, 30));
+            for &(r, c) in &[wide, tall] {
+                for &b in &[1usize, 4] {
+                    let a = rand_matrix(&mut rng, r, c);
+                    let ys = g.gaussian_vec(b * r, 1.0);
+                    let xs = g.gaussian_vec(b * c, 1.0);
+                    let zp = g.gaussian_vec(b * r, 0.5);
+                    let coefs: Vec<f32> =
+                        (0..b).map(|_| g.f64_in(-0.9, 0.9) as f32).collect();
+                    let inv_p = 0.25f32;
+                    let (z_ref, f_ref) = composed(&a, &ys, &xs, &zp, &coefs, b, inv_p);
+                    // chunks == 0 marks the serial truly-fused panel pass
+                    // (threads=1 forces the gate to the serial branch).
+                    for chunks in [0usize, 1, 2, 3, r + c + 1] {
+                        let mut z = vec![7.5f32; b * r];
+                        let mut f = vec![-2.5f32; b * c];
+                        if chunks == 0 {
+                            a.lc_fused(&ys, &xs, &zp, &coefs, b, inv_p, &mut z, &mut f, 1);
+                        } else {
+                            a.lc_fused_pooled(
+                                &ys, &xs, &zp, &coefs, b, inv_p, &mut z, &mut f, chunks,
+                            );
+                        }
+                        prop_assert(
+                            z.iter().zip(&z_ref).all(|(x, y)| x.to_bits() == y.to_bits()),
+                            format!("z {r}x{c} B={b} chunks={chunks}"),
+                        )?;
+                        prop_assert(
+                            f.iter().zip(&f_ref).all(|(x, y)| x.to_bits() == y.to_bits()),
+                            format!("f {r}x{c} B={b} chunks={chunks}"),
+                        )?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

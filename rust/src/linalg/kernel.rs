@@ -1,0 +1,234 @@
+//! Fixed-lane, cache-blocked microkernels — the single arithmetic
+//! reference for every dense kernel in the AMP hot path.
+//!
+//! # Blocking scheme
+//!
+//! All dense operations reduce to two panel kernels over a row-major
+//! `rows × cols` shard:
+//!
+//! - [`forward_rows`] — `out_j[r] = ⟨A[r,·], x_j⟩` for a row range,
+//!   computed panel-by-panel ([`PANEL_ROWS`] rows at a time) and
+//!   tile-by-tile ([`COL_TILE`] columns at a time) so each `A` panel is
+//!   reused across all `b` signals while L1/L2-resident.
+//! - [`transposed_cols`] — `out_j[c] += z_j[r]·A[r,c]` for a column
+//!   range, walking **all** rows in ascending order (panel over rows,
+//!   tile over the owned columns) so each row of `A` is read once for
+//!   all `b` signals.
+//!
+//! The innermost loops of both are the [`LANES`]-wide kernels
+//! [`dot_lanes`] and [`axpy`]: fixed-width `[f32; 8]` accumulator
+//! arrays over `chunks_exact(LANES)` slices, the shape LLVM reliably
+//! autovectorizes to packed single-precision FMA/mul+add sequences.
+//!
+//! # Bitwise contract
+//!
+//! Summation order is a *function of the element index only*, never of
+//! how work is split:
+//!
+//! - Tile boundaries are **absolute** (multiples of [`COL_TILE`] from
+//!   column 0 of the slice passed in), and [`dot`] folds its lane
+//!   accumulator in one fixed tree per tile — so a row dot product is
+//!   the same float no matter which panel or chunk computed it.
+//! - Transposed accumulation always visits rows `0..rows` in ascending
+//!   order per output column — so column chunking and tiling never
+//!   reorder the sum.
+//! - [`axpy`] is elementwise; lane blocking changes instruction
+//!   scheduling only.
+//!
+//! Consequently serial ≡ pooled (any chunk count) ≡ batched (any `B`)
+//! bit-for-bit *by construction*, which is what lets the repo pin
+//! TCP ≡ in-process and served ≡ standalone sessions bitwise.
+
+use crate::runtime::pool::SendPtr;
+
+/// SIMD lane width of the inner kernels: accumulators are `[f32; LANES]`
+/// arrays processed over `chunks_exact(LANES)` slices.
+///
+/// 8 × f32 = one AVX2 register (two SSE registers / one NEON pair) —
+/// wide enough to saturate the FP ports, narrow enough that the fixed
+/// fold tree stays cheap on the tile tail.
+pub const LANES: usize = 8;
+
+/// Column-tile width (elements) of the blocked kernels. Tiles are
+/// **absolute** — boundaries at multiples of `COL_TILE` from the start
+/// of the row slice — which is what makes per-element sums independent
+/// of panel/chunk splits. 512 × f32 = 2 KiB per row tile, so a
+/// [`PANEL_ROWS`]-row panel tile (64 KiB) plus `b` signal tiles stay
+/// L1/L2-resident.
+pub const COL_TILE: usize = 512;
+
+/// Rows per panel in the blocked kernels. A panel's output/residual
+/// slice (`PANEL_ROWS × b` floats) stays register/L1-hot while the
+/// panel's column tiles stream through.
+pub const PANEL_ROWS: usize = 32;
+
+/// `⟨a, b⟩` over one column tile with a fixed-width lane accumulator.
+///
+/// The `[f32; LANES]` accumulator over `chunks_exact(LANES)` is the
+/// autovectorization-friendly core; the fold tree
+/// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` and the scalar tail are
+/// fixed, so the result depends only on the slice contents.
+#[inline(always)]
+pub(super) fn dot_lanes(a: &[f32], b: &[f32]) -> f32 {
+    let mut acc = [0f32; LANES];
+    let aw = a.chunks_exact(LANES);
+    let bw = b.chunks_exact(LANES);
+    let (at, bt) = (aw.remainder(), bw.remainder());
+    for (ca, cb) in aw.zip(bw) {
+        for ((s, &x), &y) in acc.iter_mut().zip(ca).zip(cb) {
+            *s += x * y;
+        }
+    }
+    let mut s = ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+    for (&x, &y) in at.iter().zip(bt) {
+        s += x * y;
+    }
+    s
+}
+
+/// Dot product: absolute [`COL_TILE`] segments, each reduced by the
+/// fixed-width lane kernel (`dot_lanes`), accumulated left to right.
+///
+/// This exact order — tile partials added in ascending tile index onto
+/// a zero-initialized scalar — is what the blocked matmul kernels
+/// reproduce per output element, so `matmul`/`matvec` results are
+/// bit-for-bit `dot(row, x)` regardless of blocking.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let mut s = 0f32;
+    let mut c0 = 0;
+    while c0 < n {
+        let c1 = (c0 + COL_TILE).min(n);
+        s += dot_lanes(&a[c0..c1], &b[c0..c1]);
+        c0 = c1;
+    }
+    s
+}
+
+/// `y += alpha * x`, lane-blocked ([`LANES`]-wide inner loop).
+///
+/// The operation is elementwise (`y[i] += alpha·x[i]` independently per
+/// lane), so blocking changes instruction scheduling only — results are
+/// bit-identical to the rolled loop by construction.
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    let n = x.len();
+    let split = n - n % LANES;
+    let (xw, xt) = x.split_at(split);
+    let (yw, yt) = y.split_at_mut(split);
+    for (cy, cx) in yw.chunks_exact_mut(LANES).zip(xw.chunks_exact(LANES)) {
+        for (yi, &xi) in cy.iter_mut().zip(cx) {
+            *yi += alpha * xi;
+        }
+    }
+    for (yi, &xi) in yt.iter_mut().zip(xt) {
+        *yi += alpha * xi;
+    }
+}
+
+/// Forward panel kernel: `out[j·rows + r] = ⟨A[r,·], x_j⟩` for rows
+/// `[r0, r1)` of a row-major `rows × cols` shard and `b` column-major
+/// signals (`xs[j·cols..(j+1)·cols]`).
+///
+/// Output elements in the range are zero-initialized, then accumulated
+/// one absolute [`COL_TILE`] at a time via [`dot_lanes`] — per element
+/// the identical float sequence as [`dot`], so the result is invariant
+/// to the row range this call covers (pooled chunks compose bitwise).
+/// Rows are processed in [`PANEL_ROWS`] panels so a hot `A` panel tile
+/// is reused across all `b` signals.
+///
+/// # Safety
+///
+/// `out` must point at a `b·rows` allocation, and indices
+/// `j·rows + r` for `r ∈ [r0, r1)`, `j ∈ [0, b)` must be owned
+/// exclusively by this call (disjoint row ranges across pool chunks).
+#[allow(clippy::too_many_arguments)]
+pub(super) unsafe fn forward_rows(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    xs: &[f32],
+    b: usize,
+    out: SendPtr<f32>,
+    r0: usize,
+    r1: usize,
+) {
+    let mut p0 = r0;
+    while p0 < r1 {
+        let p1 = (p0 + PANEL_ROWS).min(r1);
+        for j in 0..b {
+            for r in p0..p1 {
+                *out.add(j * rows + r) = 0.0;
+            }
+        }
+        let mut c0 = 0;
+        while c0 < cols {
+            let c1 = (c0 + COL_TILE).min(cols);
+            for r in p0..p1 {
+                let row = &data[r * cols + c0..r * cols + c1];
+                for j in 0..b {
+                    let xj = &xs[j * cols + c0..j * cols + c1];
+                    *out.add(j * rows + r) += dot_lanes(row, xj);
+                }
+            }
+            c0 = c1;
+        }
+        p0 = p1;
+    }
+}
+
+/// Transposed panel kernel: `out[j·cols + c] = Σ_r z_j[r]·A[r,c]` for
+/// columns `[c0, c1)` of a row-major `rows × cols` shard and `b`
+/// column-major inputs (`zs[j·rows..(j+1)·rows]`).
+///
+/// The owned column range is zero-initialized, then every row `0..rows`
+/// is accumulated in strictly ascending order (panel over rows, tile
+/// over the owned columns, [`axpy`] inner loop) — per output column the
+/// identical float sequence regardless of column chunking or tiling, so
+/// pooled chunks compose bitwise. Zero inputs are **not** skipped:
+/// `o += 0.0·a` is applied like any other row, keeping `-0.0` edge
+/// cases identical across every dispatch path.
+///
+/// # Safety
+///
+/// `out` must point at a `b·cols` allocation, and indices
+/// `j·cols + c` for `c ∈ [c0, c1)`, `j ∈ [0, b)` must be owned
+/// exclusively by this call (disjoint column ranges across pool
+/// chunks). Per-signal views are created one at a time, never aliased.
+#[allow(clippy::too_many_arguments)]
+pub(super) unsafe fn transposed_cols(
+    data: &[f32],
+    rows: usize,
+    cols: usize,
+    zs: &[f32],
+    b: usize,
+    out: SendPtr<f32>,
+    c0: usize,
+    c1: usize,
+) {
+    for j in 0..b {
+        let oj = std::slice::from_raw_parts_mut(out.add(j * cols + c0), c1 - c0);
+        oj.iter_mut().for_each(|o| *o = 0.0);
+    }
+    let mut p0 = 0;
+    while p0 < rows {
+        let p1 = (p0 + PANEL_ROWS).min(rows);
+        let mut t0 = c0;
+        while t0 < c1 {
+            let t1 = (t0 + COL_TILE).min(c1);
+            for r in p0..p1 {
+                let row = &data[r * cols + t0..r * cols + t1];
+                for j in 0..b {
+                    let zr = zs[j * rows + r];
+                    let oj = std::slice::from_raw_parts_mut(out.add(j * cols + t0), t1 - t0);
+                    axpy(zr, row, oj);
+                }
+            }
+            t0 = t1;
+        }
+        p0 = p1;
+    }
+}

@@ -1,29 +1,49 @@
 //! Dense linear algebra for the AMP hot path.
 //!
-//! The sensing matrix block a worker owns is `(M/P) × N` row-major `f32`.
-//! Two operations dominate: `A x` (per-row dot products) and `Aᵀ z`
-//! (accumulation across rows). Both are written cache-friendly (unit-stride
-//! inner loops over matrix rows); the compiler auto-vectorizes the
-//! unrolled inner loops.
+//! The sensing-matrix block a worker owns is `(M/P) × N` row-major
+//! `f32`. Every dense operation — `A·x`, `Aᵀ·z`, their B-signal batched
+//! forms, and the fused LC step ([`Matrix::lc_fused`]) — is built from
+//! two cache-blocked microkernels (see `kernel.rs`): fixed [`LANES`]-wide
+//! `[f32; 8]` accumulators in the inner loops ([`dot`], [`axpy`]),
+//! absolute [`COL_TILE`] column tiles, and [`PANEL_ROWS`] row panels so
+//! each hot panel of `A` is reused across all `b` signals.
 //!
-//! Parallel variants (`*_par`) dispatch row/column chunks to the shared
+//! One arithmetic reference means serial, pooled, batched, row- and
+//! column-scenario paths all produce identical bits **by construction**:
+//! tile boundaries are absolute (a row dot product is the same float no
+//! matter which chunk computed it) and transposed accumulation always
+//! walks rows in ascending order per output column. The `*_pooled`
+//! entry points skip the size gate so tests can pin pooled ≡ serial at
+//! any size and chunk count.
+//!
+//! Parallel variants (`*_par`) dispatch panel-aligned chunks (see
+//! [`chunk_span`](crate::runtime::pool::chunk_span)) to the shared
 //! persistent [`Pool`] — no threads are spawned per call, and chunks
 //! write disjoint regions of the caller's output directly, so the
-//! parallel kernels allocate nothing and stay **bit-for-bit identical**
-//! to the serial kernels (property-tested via the `*_pooled` entry
-//! points, which skip the size gate).
+//! parallel kernels allocate nothing.
+
+mod fused;
+mod kernel;
+
+pub use kernel::{axpy, dot, COL_TILE, LANES, PANEL_ROWS};
 
 use crate::error::{Error, Result};
-use crate::runtime::pool::{Pool, SendPtr};
+use crate::runtime::pool::{chunk_span, Pool, SendPtr};
 
-/// Entry-count crossover below which the `*_par` kernels stay serial.
+/// FLOP-proportional entry count (`rows·cols·b`) below which the
+/// `*_par` kernels stay serial.
 ///
-/// With per-call thread spawns (the pre-pool implementation) the
-/// measured break-even sat near 4M entries; the persistent pool's
-/// dispatch is a mutex wake instead of `P` spawns+joins, which moves the
-/// break-even down to roughly this size on typical hardware — below it,
-/// memory bandwidth saturation makes extra threads a wash. Re-measure on
-/// target hardware with `cargo bench --bench throughput -- --crossover`.
+/// Carried dispatch-model value: with per-call thread spawns (the
+/// pre-pool implementation) the measured break-even sat near 4M
+/// entries; the persistent pool's dispatch is a mutex wake instead of
+/// `P` spawns+joins, which moves the break-even down to roughly this
+/// size on typical hardware — below it, memory-bandwidth saturation
+/// makes extra threads a wash. The gate compares `rows·cols·b`, so a
+/// B=8 batched matmul (8× the FLOPs of the same-shape matvec) crosses
+/// over at one eighth the matrix size. Re-measure on target hardware
+/// with `cargo bench --bench throughput -- --crossover`; the scheduled
+/// reproduction CI job uploads that sweep as an artifact so future
+/// re-measurements have a hardware-matched trace.
 pub const PAR_MIN_ENTRIES: usize = 1_000_000;
 
 /// Row-major dense `f32` matrix.
@@ -118,79 +138,70 @@ impl Matrix {
         out
     }
 
-    /// `out = A x` (`out` has length `rows`).
+    /// `out = A x` (`out` has length `rows`) — [`matmul`](Self::matmul)
+    /// with `b = 1`.
     pub fn matvec(&self, x: &[f32], out: &mut [f32]) {
-        debug_assert_eq!(x.len(), self.cols);
-        debug_assert_eq!(out.len(), self.rows);
-        for (r, o) in out.iter_mut().enumerate() {
-            *o = dot(self.row(r), x);
-        }
+        self.matmul(x, 1, out);
     }
 
-    /// `out = Aᵀ z` (`out` has length `cols`).
-    ///
-    /// Accumulates row-by-row (`out += z_r * row_r`) so the inner loop stays
-    /// unit-stride over the matrix storage.
+    /// `out = Aᵀ z` (`out` has length `cols`) —
+    /// [`matmul_t`](Self::matmul_t) with `b = 1`. Never materializes
+    /// `Aᵀ`; accumulates row-by-row so the inner loop stays unit-stride
+    /// over the matrix storage.
     pub fn matvec_t(&self, z: &[f32], out: &mut [f32]) {
-        debug_assert_eq!(z.len(), self.rows);
-        debug_assert_eq!(out.len(), self.cols);
-        out.iter_mut().for_each(|o| *o = 0.0);
-        for (r, &zr) in z.iter().enumerate() {
-            if zr != 0.0 {
-                axpy(zr, self.row(r), out);
-            }
-        }
+        self.matmul_t(z, 1, out);
     }
 
     /// Blocked batched `out_j = A x_j` for `b` column-major inputs
     /// (`xs[j·cols .. (j+1)·cols]` is signal `j`; same layout for `out`).
     ///
-    /// One pass over `A`: each matrix row is loaded once and dotted
-    /// against all `b` inputs while it is hot in cache, instead of `b`
-    /// full passes over the matrix. Every output element is the same
-    /// [`dot`] call [`matvec`](Self::matvec) would make, so the batched
-    /// result is bit-for-bit identical to `b` sequential matvecs
-    /// (property-tested).
+    /// One pass over `A` in ([`PANEL_ROWS`] × [`COL_TILE`]) blocks: each
+    /// panel tile is loaded once and dotted against all `b` inputs while
+    /// hot in cache. Every output element is bit-for-bit the same float
+    /// as [`dot`]`(row, x_j)` — tile boundaries are absolute — so the
+    /// batched result is identical to `b` sequential matvecs and
+    /// invariant to how rows are chunked (property-tested).
     pub fn matmul(&self, xs: &[f32], b: usize, out: &mut [f32]) {
         debug_assert_eq!(xs.len(), b * self.cols);
         debug_assert_eq!(out.len(), b * self.rows);
-        for r in 0..self.rows {
-            let row = self.row(r);
-            for j in 0..b {
-                out[j * self.rows + r] = dot(row, &xs[j * self.cols..(j + 1) * self.cols]);
-            }
-        }
+        let ptr = SendPtr::new(out.as_mut_ptr());
+        // SAFETY: exclusive `&mut out`; one call covers rows [0, rows).
+        unsafe { kernel::forward_rows(&self.data, self.rows, self.cols, xs, b, ptr, 0, self.rows) }
     }
 
     /// Blocked batched `out_j = Aᵀ z_j` (column-major batch layout as in
-    /// [`matmul`](Self::matmul)). Accumulates row-by-row so each matrix
-    /// row is read once for all `b` inputs; per-signal accumulation order
-    /// matches [`matvec_t`](Self::matvec_t) exactly (bit-for-bit).
+    /// [`matmul`](Self::matmul)). Walks row panels in ascending order,
+    /// reading each matrix row once for all `b` inputs; per output
+    /// column the accumulation order is fixed (rows ascending), so the
+    /// result is bit-for-bit identical across batch sizes, column
+    /// chunkings, and tilings.
     pub fn matmul_t(&self, zs: &[f32], b: usize, out: &mut [f32]) {
         debug_assert_eq!(zs.len(), b * self.rows);
         debug_assert_eq!(out.len(), b * self.cols);
-        out.iter_mut().for_each(|o| *o = 0.0);
-        for r in 0..self.rows {
-            let row = self.row(r);
-            for j in 0..b {
-                let zr = zs[j * self.rows + r];
-                if zr != 0.0 {
-                    axpy(zr, row, &mut out[j * self.cols..(j + 1) * self.cols]);
-                }
-            }
+        let ptr = SendPtr::new(out.as_mut_ptr());
+        // SAFETY: exclusive `&mut out`; one call covers cols [0, cols).
+        unsafe {
+            kernel::transposed_cols(&self.data, self.rows, self.cols, zs, b, ptr, 0, self.cols)
         }
     }
 
-    /// Parallel [`matmul`](Self::matmul): row chunks dispatched to the
-    /// shared [`Pool`], each writing its (interleaved, disjoint) slice of
-    /// the column-major output directly — no per-call threads, no
-    /// scratch, no copy-back. Serial below the same crossover as
-    /// [`matvec_par`](Self::matvec_par). Per-element arithmetic is
-    /// unchanged, so results stay bit-for-bit identical to the serial
-    /// kernel.
+    /// Batch-aware crossover: go parallel only when there are enough
+    /// split-axis units to keep `threads` busy and at least
+    /// [`PAR_MIN_ENTRIES`] multiply-adds (`rows·cols·b`) to amortize
+    /// pool dispatch.
+    #[inline]
+    fn par_gate(&self, split: usize, b: usize, threads: usize) -> bool {
+        threads > 1 && split >= 4 * threads && self.rows * self.cols * b >= PAR_MIN_ENTRIES
+    }
+
+    /// Parallel [`matmul`](Self::matmul): panel-aligned row chunks
+    /// dispatched to the shared [`Pool`], each writing its (interleaved,
+    /// disjoint) slice of the column-major output directly — no per-call
+    /// threads, no scratch, no copy-back. Serial below the batch-aware
+    /// crossover (see [`PAR_MIN_ENTRIES`]). Bit-for-bit identical to the
+    /// serial kernel for any chunk count.
     pub fn matmul_par(&self, xs: &[f32], b: usize, out: &mut [f32], threads: usize) {
-        if threads <= 1 || self.rows < 4 * threads || self.rows * self.cols < PAR_MIN_ENTRIES
-        {
+        if !self.par_gate(self.rows, b, threads) {
             return self.matmul(xs, b, out);
         }
         self.matmul_pooled(xs, b, out, threads);
@@ -204,33 +215,24 @@ impl Matrix {
         debug_assert_eq!(out.len(), b * self.rows);
         let rows = self.rows;
         let cols = self.cols;
-        let chunk = rows.div_ceil(chunks.max(1)).max(1);
+        let chunk = chunk_span(rows, chunks, PANEL_ROWS);
         let out_ptr = SendPtr::new(out.as_mut_ptr());
         Pool::global().run(rows.div_ceil(chunk), |ci| {
             let r0 = ci * chunk;
             let r1 = (r0 + chunk).min(rows);
-            for r in r0..r1 {
-                let row = self.row(r);
-                for j in 0..b {
-                    // SAFETY: rows [r0, r1) belong to chunk `ci` alone, so
-                    // the written indices are disjoint across chunks.
-                    unsafe {
-                        *out_ptr.add(j * rows + r) =
-                            dot(row, &xs[j * cols..(j + 1) * cols]);
-                    }
-                }
-            }
+            // SAFETY: rows [r0, r1) of every signal's output block belong
+            // to chunk `ci` alone, so writes are disjoint across chunks.
+            unsafe { kernel::forward_rows(&self.data, rows, cols, xs, b, out_ptr, r0, r1) }
         });
     }
 
     /// Parallel [`matmul_t`](Self::matmul_t): each pool chunk owns a
-    /// column range and walks all rows once for every signal (same
-    /// partitioning as [`matvec_t_par`](Self::matvec_t_par)),
-    /// accumulating directly into its disjoint output columns.
-    /// Bit-for-bit identical to the serial kernel.
+    /// lane-aligned column range and walks all rows once for every
+    /// signal, accumulating directly into its disjoint output columns.
+    /// Serial below the batch-aware crossover. Bit-for-bit identical to
+    /// the serial kernel for any chunk count.
     pub fn matmul_t_par(&self, zs: &[f32], b: usize, out: &mut [f32], threads: usize) {
-        if threads <= 1 || self.cols < 4 * threads || self.rows * self.cols < PAR_MIN_ENTRIES
-        {
+        if !self.par_gate(self.cols, b, threads) {
             return self.matmul_t(zs, b, out);
         }
         self.matmul_t_pooled(zs, b, out, threads);
@@ -243,145 +245,43 @@ impl Matrix {
         debug_assert_eq!(out.len(), b * self.cols);
         let rows = self.rows;
         let cols = self.cols;
-        let chunk = cols.div_ceil(chunks.max(1)).max(1);
+        let chunk = chunk_span(cols, chunks, LANES);
         let out_ptr = SendPtr::new(out.as_mut_ptr());
         Pool::global().run(cols.div_ceil(chunk), |ci| {
             let c0 = ci * chunk;
             let c1 = (c0 + chunk).min(cols);
-            let w = c1 - c0;
-            // SAFETY (both blocks): columns [c0, c1) of every signal's
-            // block belong to chunk `ci` alone; the per-signal views are
-            // created one at a time, never aliased.
-            for j in 0..b {
-                let oc = unsafe {
-                    std::slice::from_raw_parts_mut(out_ptr.add(j * cols + c0), w)
-                };
-                oc.iter_mut().for_each(|o| *o = 0.0);
-            }
-            for r in 0..rows {
-                let row = &self.row(r)[c0..c1];
-                for j in 0..b {
-                    let zr = zs[j * rows + r];
-                    if zr != 0.0 {
-                        let oc = unsafe {
-                            std::slice::from_raw_parts_mut(
-                                out_ptr.add(j * cols + c0),
-                                w,
-                            )
-                        };
-                        axpy(zr, row, oc);
-                    }
-                }
-            }
+            // SAFETY: columns [c0, c1) of every signal's block belong to
+            // chunk `ci` alone; per-signal views are created one at a
+            // time, never aliased.
+            unsafe { kernel::transposed_cols(&self.data, rows, cols, zs, b, out_ptr, c0, c1) }
         });
     }
 
-    /// Parallel `A x` over row chunks on the shared [`Pool`]. Falls back
-    /// to serial when the matrix is small enough that dispatch +
-    /// memory-bandwidth saturation make threads a loss
-    /// ([`PAR_MIN_ENTRIES`]; re-measure with
+    /// Parallel `A x` over row chunks on the shared [`Pool`] —
+    /// [`matmul_par`](Self::matmul_par) with `b = 1`. Falls back to
+    /// serial below the crossover ([`PAR_MIN_ENTRIES`]; re-measure with
     /// `cargo bench --bench throughput -- --crossover`).
     pub fn matvec_par(&self, x: &[f32], out: &mut [f32], threads: usize) {
-        if threads <= 1 || self.rows < 4 * threads || self.rows * self.cols < PAR_MIN_ENTRIES
-        {
-            return self.matvec(x, out);
-        }
-        self.matvec_pooled(x, out, threads);
+        self.matmul_par(x, 1, out, threads);
     }
 
     /// The pooled body of [`matvec_par`](Self::matvec_par) without the
     /// size gate.
     pub fn matvec_pooled(&self, x: &[f32], out: &mut [f32], chunks: usize) {
-        debug_assert_eq!(x.len(), self.cols);
-        debug_assert_eq!(out.len(), self.rows);
-        let rows = self.rows;
-        let chunk = rows.div_ceil(chunks.max(1)).max(1);
-        let out_ptr = SendPtr::new(out.as_mut_ptr());
-        Pool::global().run(rows.div_ceil(chunk), |ci| {
-            let r0 = ci * chunk;
-            let r1 = (r0 + chunk).min(rows);
-            for r in r0..r1 {
-                // SAFETY: rows [r0, r1) belong to chunk `ci` alone.
-                unsafe { *out_ptr.add(r) = dot(self.row(r), x) };
-            }
-        });
+        self.matmul_pooled(x, 1, out, chunks);
     }
 
-    /// Parallel `Aᵀ z`: each pool chunk owns a column range and walks all
-    /// rows. Serial below the crossover (see
+    /// Parallel `Aᵀ z` — [`matmul_t_par`](Self::matmul_t_par) with
+    /// `b = 1`. Serial below the crossover (see
     /// [`matvec_par`](Self::matvec_par)).
     pub fn matvec_t_par(&self, z: &[f32], out: &mut [f32], threads: usize) {
-        if threads <= 1 || self.cols < 4 * threads || self.rows * self.cols < PAR_MIN_ENTRIES
-        {
-            return self.matvec_t(z, out);
-        }
-        self.matvec_t_pooled(z, out, threads);
+        self.matmul_t_par(z, 1, out, threads);
     }
 
     /// The pooled body of [`matvec_t_par`](Self::matvec_t_par) without
     /// the size gate.
     pub fn matvec_t_pooled(&self, z: &[f32], out: &mut [f32], chunks: usize) {
-        debug_assert_eq!(z.len(), self.rows);
-        debug_assert_eq!(out.len(), self.cols);
-        let cols = self.cols;
-        let chunk = cols.div_ceil(chunks.max(1)).max(1);
-        let out_ptr = SendPtr::new(out.as_mut_ptr());
-        Pool::global().run(cols.div_ceil(chunk), |ci| {
-            let c0 = ci * chunk;
-            let c1 = (c0 + chunk).min(cols);
-            // SAFETY: columns [c0, c1) belong to chunk `ci` alone.
-            let out_chunk = unsafe {
-                std::slice::from_raw_parts_mut(out_ptr.add(c0), c1 - c0)
-            };
-            out_chunk.iter_mut().for_each(|o| *o = 0.0);
-            for (r, &zr) in z.iter().enumerate() {
-                if zr != 0.0 {
-                    axpy(zr, &self.row(r)[c0..c1], out_chunk);
-                }
-            }
-        });
-    }
-}
-
-/// Dot product with 4-way unrolling (auto-vectorizes well).
-#[inline]
-pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0f32, 0f32, 0f32, 0f32);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for j in chunks * 4..n {
-        s += a[j] * b[j];
-    }
-    s
-}
-
-/// `y += alpha * x`, unrolled 4-way with the multi-accumulator style of
-/// [`dot`]. The operation is elementwise (`y[i] += alpha·x[i]`
-/// independently per lane), so unrolling changes instruction scheduling
-/// only — results are bit-identical to the rolled loop by construction.
-#[inline]
-pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    let n = x.len();
-    let chunks = n / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        y[j] += alpha * x[j];
-        y[j + 1] += alpha * x[j + 1];
-        y[j + 2] += alpha * x[j + 2];
-        y[j + 3] += alpha * x[j + 3];
-    }
-    for j in chunks * 4..n {
-        y[j] += alpha * x[j];
+        self.matmul_t_pooled(z, 1, out, chunks);
     }
 }
 
@@ -496,13 +396,48 @@ mod tests {
 
     #[test]
     fn dot_matches_naive() {
-        Prop::new("dot unrolled == naive", 50).check(|g| {
+        Prop::new("dot lanes == naive", 50).check(|g| {
             let n = g.usize_in(0, 257);
             let a = g.gaussian_vec(n, 1.0);
             let b = g.gaussian_vec(n, 1.0);
             let naive: f64 = a.iter().zip(&b).map(|(&x, &y)| (x * y) as f64).sum();
             prop_close(dot(&a, &b) as f64, naive, 1e-3 * (1.0 + naive.abs()), "dot")
         });
+    }
+
+    #[test]
+    fn dot_follows_documented_tile_lane_order() {
+        // Pin the summation order contract: absolute COL_TILE segments,
+        // LANES-wide accumulator, fixed fold tree, scalar tail — the
+        // order every blocked kernel reproduces per output element.
+        fn reference(a: &[f32], b: &[f32]) -> f32 {
+            let mut s = 0f32;
+            for (ta, tb) in a.chunks(COL_TILE).zip(b.chunks(COL_TILE)) {
+                let mut acc = [0f32; LANES];
+                let mut i = 0;
+                while i + LANES <= ta.len() {
+                    for l in 0..LANES {
+                        acc[l] += ta[i + l] * tb[i + l];
+                    }
+                    i += LANES;
+                }
+                let mut t = ((acc[0] + acc[1]) + (acc[2] + acc[3]))
+                    + ((acc[4] + acc[5]) + (acc[6] + acc[7]));
+                for k in i..ta.len() {
+                    t += ta[k] * tb[k];
+                }
+                s += t;
+            }
+            s
+        }
+        let mut rng = Rng::new(17);
+        for n in [0usize, 5, 8, 63, 511, 512, 513, 1024, 1300] {
+            let mut a = vec![0f32; n];
+            rng.fill_gaussian(&mut a, 1.0);
+            let mut b = vec![0f32; n];
+            rng.fill_gaussian(&mut b, 1.0);
+            assert_eq!(dot(&a, &b).to_bits(), reference(&a, &b).to_bits(), "n={n}");
+        }
     }
 
     #[test]
@@ -608,7 +543,7 @@ mod tests {
 
     #[test]
     fn axpy_unrolled_matches_rolled() {
-        Prop::new("axpy unrolled == rolled (bitwise)", 50).check(|g| {
+        Prop::new("axpy lanes == rolled (bitwise)", 50).check(|g| {
             let n = g.usize_in(0, 133);
             let alpha = g.f64_in(-2.0, 2.0) as f32;
             let x = g.gaussian_vec(n, 1.0);
@@ -626,6 +561,30 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn batch_folded_par_gate_matches_serial_bitwise() {
+        // Satellite pin: rows·cols < PAR_MIN_ENTRIES but rows·cols·b ≥ —
+        // the batch-aware gate sends this batched call through the pool
+        // (the same-shape B=1 call stays serial), and the pooled result
+        // must still be bitwise the serial kernel.
+        let (r, c, b) = (600usize, 600usize, 3usize);
+        assert!(r * c < PAR_MIN_ENTRIES && r * c * b >= PAR_MIN_ENTRIES);
+        let mut rng = Rng::new(41);
+        let a = rand_matrix(&mut rng, r, c);
+        let mut xs = vec![0f32; b * c];
+        rng.fill_gaussian(&mut xs, 1.0);
+        let mut zs = vec![0f32; b * r];
+        rng.fill_gaussian(&mut zs, 1.0);
+        let (mut s, mut p) = (vec![0f32; b * r], vec![0f32; b * r]);
+        a.matmul(&xs, b, &mut s);
+        a.matmul_par(&xs, b, &mut p, 4);
+        assert!(s.iter().zip(&p).all(|(x, y)| x.to_bits() == y.to_bits()));
+        let (mut st, mut pt) = (vec![0f32; b * c], vec![0f32; b * c]);
+        a.matmul_t(&zs, b, &mut st);
+        a.matmul_t_par(&zs, b, &mut pt, 4);
+        assert!(st.iter().zip(&pt).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]
@@ -648,6 +607,17 @@ mod tests {
         a.matmul_t(&zs, b, &mut t1);
         a.matmul_t_par(&zs, b, &mut t2, 4);
         assert!(t1.iter().zip(&t2).all(|(x, y)| x.to_bits() == y.to_bits()));
+        // The fused LC step through the gated parallel branch matches
+        // the serial fused panel pass bitwise (dirty outputs).
+        let mut ys = vec![0f32; b * 1000];
+        g.fill_gaussian(&mut ys, 1.0);
+        let coefs = [0.3f32, -0.2, 0.7];
+        let (mut z1, mut f1) = (vec![7.5f32; b * 1000], vec![7.5f32; b * 4096]);
+        let (mut z2, mut f2) = (vec![-1.0f32; b * 1000], vec![-1.0f32; b * 4096]);
+        a.lc_fused(&ys, &xs, &zs, &coefs, b, 0.25, &mut z1, &mut f1, 1);
+        a.lc_fused(&ys, &xs, &zs, &coefs, b, 0.25, &mut z2, &mut f2, 4);
+        assert!(z1.iter().zip(&z2).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(f1.iter().zip(&f2).all(|(x, y)| x.to_bits() == y.to_bits()));
     }
 
     #[test]

@@ -591,11 +591,11 @@ fn cmd_lab_check(args: &Args) -> Result<()> {
 }
 
 fn cmd_lab_gate(args: &Args) -> Result<()> {
-    use mpamp::bench_util::compare::{compare, Baselines};
+    use mpamp::bench_util::compare::{compare, compare_subset, Baselines};
     let baseline_path = args.get("baseline").ok_or_else(|| {
         Error::Config(
             "usage: mpamp lab gate --baseline <baselines.json> --current \
-             <BENCH.json> [--md <out.md>] [--bless]"
+             <BENCH.json> [--md <out.md>] [--bless] [--subset]"
                 .into(),
         )
     })?;
@@ -623,7 +623,11 @@ fn cmd_lab_gate(args: &Args) -> Result<()> {
         return Ok(());
     }
     let store = Baselines::load(baseline_path)?;
-    let comparison = compare(&store, &current);
+    let comparison = if args.has_flag("subset") {
+        compare_subset(&store, &current)
+    } else {
+        compare(&store, &current)
+    };
     let md = comparison.markdown();
     if let Some(out) = args.get("md") {
         std::fs::write(out, &md).map_err(Error::Io)?;

@@ -325,10 +325,50 @@ impl<T> SendPtr<T> {
     }
 }
 
+/// Span (in split-axis units) of each pool chunk when dividing `total`
+/// units into at most `chunks` chunks, keeping chunk starts aligned to
+/// the kernels' blocking: the even span is rounded up to a multiple of
+/// `align` whenever it is at least one alignment unit wide, so large
+/// chunks begin on panel/lane boundaries (full-width blocks, aligned
+/// `chunks_exact` splits). Spans smaller than `align` are left as-is —
+/// rounding them up would collapse the requested parallelism on narrow
+/// shards (e.g. a 32-row shard split four ways).
+///
+/// Chunk boundaries never affect results: the blocked kernels are
+/// bit-invariant to how the split axis is chunked (see the `linalg`
+/// module docs), so this helper is purely a performance knob.
+pub fn chunk_span(total: usize, chunks: usize, align: usize) -> usize {
+    let raw = total.div_ceil(chunks.max(1)).max(1);
+    let align = align.max(1);
+    if raw >= align {
+        raw.next_multiple_of(align)
+    } else {
+        raw
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn chunk_span_aligns_large_spans_and_keeps_small_ones() {
+        // Large even spans round up to the alignment grid.
+        assert_eq!(chunk_span(1000, 4, 32), 256);
+        assert_eq!(chunk_span(32_768, 4, 8), 8192);
+        // Sub-alignment spans are kept so narrow shards still split.
+        assert_eq!(chunk_span(32, 4, 32), 8);
+        assert_eq!(chunk_span(30, 7, 8), 5);
+        // Degenerate inputs stay sane (≥ 1, no division by zero).
+        assert_eq!(chunk_span(0, 4, 8), 1);
+        assert_eq!(chunk_span(10, 0, 0), 10);
+        // Every unit is covered: ceil(total / span) chunks × span ≥ total.
+        for (t, n, a) in [(600, 4, 512), (601, 3, 8), (7, 16, 32)] {
+            let span = chunk_span(t, n, a);
+            assert!(span * t.div_ceil(span) >= t);
+        }
+    }
 
     #[test]
     fn runs_every_chunk_exactly_once() {

@@ -96,12 +96,15 @@ fn pooled_session_bitwise_reproduces_serial_session_across_grid() {
 /// The grid above runs below the parallel gates (test_small shards are
 /// tiny), pinning the encode-once/scratch-reuse plumbing. This test makes
 /// the pool actually engage end-to-end: N = 32 768 puts every worker
-/// shard at/above `PAR_MIN_ENTRIES` (row: 32 × 32 768 = 1M entries;
-/// column: 64 × 16 384 = 1M), so the threads = 4 session dispatches real
-/// pool chunks for the matrix kernels while threads = 1 stays fully
-/// serial — and the estimates must still match bit-for-bit, because the
-/// pooled matvec/matmul chunks compute each output element with
-/// identical arithmetic regardless of chunking.
+/// shard at/above `PAR_MIN_ENTRIES` (row: 32 × 32 768 × B=1 = 1M
+/// multiply-adds; column: 64 × 16 384 = 1M), so the threads = 4 session
+/// dispatches real pool chunks — the row scenario through the fused
+/// LC-step kernel's parallel branch, the column scenario through the
+/// pooled matmul/matmul_t — while threads = 1 runs the serial fused
+/// panel pass. The estimates must still match bit-for-bit: the blocked
+/// microkernels use absolute column tiles and ascending-row transposed
+/// accumulation, so each output element sums in one fixed order
+/// regardless of chunking or fusion.
 ///
 /// The GC denoiser deliberately stays below its own 64k crossover here:
 /// its η′ mean folds per-chunk f64 partials, so *chunk count* (i.e. the

@@ -370,3 +370,86 @@ fn lab_gate_cli_classifies_and_blesses() {
     );
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// `--subset` waives coverage (baseline records the current set does not
+/// measure) but keeps full-strength bands on the records it does cover —
+/// the mode the scheduled reproduction job uses to gate its study records
+/// against the same committed store as the per-PR suite.
+#[test]
+fn lab_gate_cli_subset_waives_coverage_not_bands() {
+    let dir = tmp_dir("subset");
+    let baseline = dir.join("baselines.json");
+    let current = dir.join("BENCH_repro.json");
+    let bp = baseline.to_str().unwrap();
+    let cp = current.to_str().unwrap();
+
+    write_bench_json(
+        cp,
+        &[gate_rec("a", 1.0, 100, Some(5.0)), gate_rec("b", 2.0, 0, None)],
+    )
+    .unwrap();
+    let (ok, _, stderr) =
+        run_cli(&["lab", "gate", "--baseline", bp, "--current", cp, "--bless"]);
+    assert!(ok, "bless failed: {stderr}");
+
+    // Current measures only `a`, in band: strict fails on the uncovered
+    // `b`, --subset passes without even listing it.
+    write_bench_json(cp, &[gate_rec("a", 1.0, 100, Some(5.0))]).unwrap();
+    let (ok, stdout, _) = run_cli(&["lab", "gate", "--baseline", bp, "--current", cp]);
+    assert!(!ok, "strict mode must fail on missing record: {stdout}");
+    let (ok, stdout, _) =
+        run_cli(&["lab", "gate", "--baseline", bp, "--current", cp, "--subset"]);
+    assert!(ok, "--subset must waive the uncovered record: {stdout}");
+    assert!(!stdout.contains("| `b` |"), "{stdout}");
+
+    // A covered record out of band still fails under --subset.
+    write_bench_json(cp, &[gate_rec("a", 9.0, 100, Some(5.0))]).unwrap();
+    let (ok, stdout, _) =
+        run_cli(&["lab", "gate", "--baseline", bp, "--current", cp, "--subset"]);
+    assert!(!ok, "--subset must keep gating covered records: {stdout}");
+    assert!(stdout.contains("**regress**"), "{stdout}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------
+// The committed store actually enforces
+// ---------------------------------------------------------------------
+
+/// `ci/baselines.json` must be a live gate, not a bootstrap stub: it has
+/// blessed records (including the three kernel GFLOP/s rows the perf-smoke
+/// job requires), it passes against itself, and a collapsed kernel
+/// throughput trips it.
+#[test]
+fn committed_baseline_store_is_nonempty_and_enforces() {
+    use mpamp::bench_util::compare::{compare, Baselines};
+    let store =
+        Baselines::load(concat!(env!("CARGO_MANIFEST_DIR"), "/ci/baselines.json")).unwrap();
+    assert!(!store.records.is_empty(), "ci/baselines.json must have blessed records");
+    for want in
+        ["gflops matmul shard", "gflops matmul_t shard", "gflops fused lc_step"]
+    {
+        assert!(
+            store.records.iter().any(|r| r.name.starts_with(want)),
+            "store must bless a '{want}' record"
+        );
+    }
+    // Blessed records must only use structurally-zero byte counters: the
+    // ±2% bytes_uplinked band is too tight for entropy-coded sessions, so
+    // those records enter the store via an intentional future bless, not
+    // the hand-seeded floor set.
+    assert!(store.records.iter().all(|r| r.bytes_uplinked == 0));
+    assert!(store.tolerance("bytes_uplinked") <= 0.05);
+
+    let cmp = compare(&store, &store.records);
+    assert!(cmp.gate_passes(), "store must pass against itself:\n{}", cmp.markdown());
+
+    // A kernel delivering 1% of its blessed GFLOP/s is out of band.
+    let mut collapsed = store.records.clone();
+    let slot = collapsed
+        .iter_mut()
+        .find(|r| r.gflops.is_some())
+        .expect("store has a gflops record");
+    slot.gflops = slot.gflops.map(|g| g * 0.01);
+    let cmp = compare(&store, &collapsed);
+    assert!(!cmp.gate_passes(), "collapsed kernel must fail:\n{}", cmp.markdown());
+}
