@@ -1,0 +1,41 @@
+#!/usr/bin/env python3
+"""Check one mpampd Prometheus scrape for live job state.
+
+Used by the serve-smoke CI job, which polls `/metrics` while a served
+job runs: exit 0 iff the scrape shows at least one running job
+(`mpamp_jobs_running >= 1`), process-wide round progress
+(`mpamp_rounds_total >= 1`), and a per-job row in the running state
+with nonzero rounds.
+"""
+
+import sys
+
+
+def main(path: str) -> int:
+    scalars = {}
+    running_rows = 0
+    for line in open(path):
+        line = line.strip()
+        if not line or line.startswith("#"):
+            continue
+        name, _, value = line.rpartition(" ")
+        if not name:
+            continue
+        try:
+            v = float(value)
+        except ValueError:
+            continue
+        if name.startswith("mpamp_job_rounds{") and 'state="running"' in name:
+            if v > 0:
+                running_rows += 1
+        scalars[name] = v
+    ok = (
+        scalars.get("mpamp_jobs_running", 0) >= 1
+        and scalars.get("mpamp_rounds_total", 0) >= 1
+        and running_rows >= 1
+    )
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1]))

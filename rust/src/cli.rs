@@ -111,6 +111,8 @@ COMMANDS:
                 (or submit it to a daemon with --connect)
     serve       Start mpampd: a resident worker fleet serving many
                 concurrent recovery jobs over TCP
+    trace       Run one session with telemetry enabled and write its
+                per-round span stream as JSONL
     centralized Run the centralized AMP baseline
     se          Print the centralized state-evolution trajectory
     dp          Compute the DP-MP-AMP rate allocation offline
@@ -141,6 +143,8 @@ COMMON OPTIONS:
                              together (shared sensing matrix, blocked
                              matmuls, one protocol round trip per batch)
     --out <file>             Write a CSV/JSON report to <file>
+    --trace <file>           (run, local) Record telemetry spans and write
+                             them to <file> as JSONL after the run
     --quiet                  Suppress the per-iteration table
 
 SERVING OPTIONS:
@@ -154,9 +158,15 @@ SERVING OPTIONS:
     --deadline-s <s>         (serve) Per-job wall-clock deadline in
                              seconds (over-deadline jobs stop after the
                              current round and still report)
+    --metrics-listen <addr>  (serve) Also serve live process metrics over
+                             HTTP: Prometheus text at /metrics, a JSON
+                             snapshot at /metrics.json
     --connect <addr>         (run) Submit the job to a running mpampd
                              instead of spawning a local fleet; progress
                              streams back per round
+    --priority <class>       (run --connect) Scheduling class: 'high'
+                             jumps the daemon's wait queue, 'normal'
+                             (default) is FIFO behind it
 
 LAB COMMANDS:
     lab manifest [--out <f>] Print (or write) the machine-readable knob
@@ -201,7 +211,11 @@ EXAMPLES:
     mpamp run --preset test_small --compressor topk.raw --partitioning column
     mpamp dp --prior.eps 0.03 --schedule.total_rate 16
     mpamp serve --preset test_small --listen 127.0.0.1:7700 --max-sessions 4
+    mpamp serve --preset test_small --metrics-listen 127.0.0.1:9464
     mpamp run --preset test_small --connect 127.0.0.1:7700 --seed 7
+    mpamp run --preset test_small --connect 127.0.0.1:7700 --priority high
+    mpamp run --preset test_small --trace trace.jsonl
+    mpamp trace trace.jsonl --preset test_small --max-iters 8
     mpamp lab manifest --out ci/knob_manifest.json
     mpamp lab check configs/column_small.toml configs/lab_smoke.toml
     mpamp lab run configs/lab_smoke.toml --records BENCH_lab.json

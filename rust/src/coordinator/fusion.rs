@@ -45,6 +45,16 @@ impl ProtocolState {
         }
     }
 
+    /// Attach a [`Telemetry`](crate::telemetry::Telemetry) handle to the
+    /// underlying core (measurement-only; see
+    /// [`ProtocolCore::set_telemetry`]).
+    pub fn set_telemetry(&mut self, tel: crate::telemetry::Telemetry) {
+        match self {
+            ProtocolState::Row(s) => s.set_telemetry(tel),
+            ProtocolState::Column(s) => s.set_telemetry(tel),
+        }
+    }
+
     /// Iterations completed so far.
     pub fn t(&self) -> usize {
         match self {

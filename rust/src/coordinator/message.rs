@@ -28,7 +28,12 @@ use crate::error::{Error, Result};
 ///   a session-ID `u32` so one worker fleet carries interleaved rounds
 ///   from many concurrent sessions (standalone links are unchanged —
 ///   the prefix exists only on multiplexed daemon links).
-pub const PROTOCOL_VERSION: u8 = 4;
+/// * v5 — job priority: the serve-mode submit frame carries a trailing
+///   priority byte (`0` normal, `1` high) steering the daemon's
+///   two-level admission queue. Fleet/worker framing is unchanged; the
+///   bump keeps v4 clients (whose submit frame lacks the byte) from
+///   being misparsed.
+pub const PROTOCOL_VERSION: u8 = 5;
 
 /// How workers should code one signal's uplink vector this iteration
 /// (broadcast by fusion; one spec per batch member rides in a single

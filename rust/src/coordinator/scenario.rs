@@ -108,6 +108,7 @@ use crate::rd::RdCache;
 use crate::se::prior::BgChannel;
 use crate::se::StateEvolution;
 use crate::signal::{Batch, BernoulliGauss};
+use crate::telemetry::{Stage, Telemetry};
 
 /// Per-signal statistics available when the round's quantizer is designed.
 #[derive(Debug, Clone, Copy)]
@@ -395,17 +396,29 @@ pub struct ProtocolCore<S: Scenario> {
     b: usize,
     t: usize,
     scratch: RoundScratch,
+    tel: Telemetry,
 }
 
 impl<S: Scenario> ProtocolCore<S> {
-    /// Fresh state at `t = 0`.
+    /// Fresh state at `t = 0` (telemetry disabled; see
+    /// [`set_telemetry`](ProtocolCore::set_telemetry)).
     pub fn new(batch: &Batch, cfg: &RunConfig) -> Self {
         ProtocolCore {
             fu: S::init(batch, cfg),
             b: batch.batch(),
             t: 0,
             scratch: RoundScratch::default(),
+            tel: Telemetry::off(),
         }
+    }
+
+    /// Attach a [`Telemetry`] handle: every subsequent round records one
+    /// span per phase plus a whole-round envelope carrying the round's
+    /// wire bits, batch-mean σ_Q², and SE-predicted vs empirical MSE.
+    /// Recording is measurement-only — it never feeds back into the
+    /// algorithm, so traced sessions stay bit-identical to untraced ones.
+    pub fn set_telemetry(&mut self, tel: Telemetry) {
+        self.tel = tel;
     }
 
     /// Iterations completed so far.
@@ -449,6 +462,12 @@ impl<S: Scenario> ProtocolCore<S> {
         let b = self.b;
         debug_assert_eq!(endpoints.len(), p);
         let t0 = Instant::now();
+        // Span recording is gated on one flag check; when the handle is
+        // off the round loop takes no clock reads and no locks.
+        let tel = self.tel.clone();
+        let tel_on = tel.is_on();
+        let round_start_us = if tel_on { tel.clock_us() } else { 0 };
+        let mut mark_us = round_start_us;
         let stack = crate::compress::registry::get(&cfg.compressor)?;
         let len = S::uplink_len(cfg);
         // Split-borrow the persistent scratch so fusion state and the
@@ -461,11 +480,17 @@ impl<S: Scenario> ProtocolCore<S> {
         for ep in endpoints.iter_mut() {
             ep.send_encoded(frame)?;
         }
+        if tel_on {
+            mark_us = tel.phase(Stage::Encode, t, -1, mark_us, 0.0);
+        }
         // 2. Absorb every worker's pre-uplink reply (worker-id order),
         //    parsed in place from each endpoint's receive buffer.
         for (widx, ep) in endpoints.iter_mut().enumerate() {
             let reply = ep.recv_frame()?;
             S::absorb(&mut self.fu, cfg, t, widx, reply)?;
+        }
+        if tel_on {
+            mark_us = tel.phase(Stage::Fusion, t, -1, mark_us, 0.0);
         }
         // 3. Per-signal stats → directives → stack designs → one batched
         //    quantizer round trip covering the whole batch (the QuantCmd
@@ -497,6 +522,9 @@ impl<S: Scenario> ProtocolCore<S> {
                 *stat,
             ));
             comps.push(comp);
+        }
+        if tel_on {
+            mark_us = tel.phase(Stage::Allocator, t, -1, mark_us, 0.0);
         }
         // 4. Collect and fuse the batched uplinks, accumulating each
         //    payload straight out of the receive buffer into the
@@ -535,6 +563,9 @@ impl<S: Scenario> ProtocolCore<S> {
                 )));
             }
         }
+        if tel_on {
+            mark_us = tel.phase(Stage::Uplink, t, -1, mark_us, wire_bits);
+        }
         // Allocation accounting (analytic rate, batch mean).
         let rate_alloc = directives
             .iter()
@@ -553,6 +584,9 @@ impl<S: Scenario> ProtocolCore<S> {
         //    place on the fusion state.
         S::global_step(&mut self.fu, cfg, se, engine, sums, stats, sigma_q2s)?;
         self.t = t + 1;
+        if tel_on {
+            tel.phase(Stage::Denoise, t, -1, mark_us, 0.0);
+        }
         // 6. Record.
         let sdr_db = match eval {
             Some(batch) => {
@@ -566,7 +600,7 @@ impl<S: Scenario> ProtocolCore<S> {
             .map(|(stat, q2)| se.sdr_db(S::predicted_sigma(se, *stat, p as f64 * q2)))
             .sum::<f64>()
             / b as f64;
-        Ok(IterRecord {
+        let rec = IterRecord {
             t,
             sdr_db,
             sdr_pred_db,
@@ -575,7 +609,20 @@ impl<S: Scenario> ProtocolCore<S> {
             sigma_q2: sigma_q2s.iter().sum::<f64>() / b as f64,
             sigma_d2_hat: stats.iter().map(|s| s.sigma_d2_hat).sum::<f64>() / b as f64,
             wall_s: t0.elapsed().as_secs_f64(),
-        })
+        };
+        if tel_on {
+            // The whole-round envelope carries the round's payload: wire
+            // bits (their sum over rounds is the session's uplink payload
+            // bits), mean σ_Q², and SE-predicted vs empirical MSE.
+            let mse_pred = stats
+                .iter()
+                .zip(sigma_q2s.iter())
+                .map(|(stat, q2)| S::predicted_sigma(se, *stat, p as f64 * q2))
+                .sum::<f64>()
+                / b as f64;
+            tel.round(t, round_start_us, wire_bits, rec.sigma_q2, mse_pred, rec.sigma_d2_hat);
+        }
+        Ok(rec)
     }
 
     /// Release the workers: broadcast `Done` on every endpoint (encoded

@@ -24,7 +24,7 @@ use crate::coordinator::fusion::ProtocolState;
 use crate::coordinator::message::Message;
 use crate::coordinator::scenario::{Column, Row, Scenario};
 use crate::coordinator::transport::{inproc_pair, tcp_connect, Endpoint, TcpFusionListener};
-use crate::coordinator::worker::{run_scenario_worker, WorkerParams};
+use crate::coordinator::worker::{run_scenario_worker_traced, WorkerParams};
 use crate::engine::{ComputeEngine, RustEngine};
 use crate::error::{Error, Result};
 use crate::metrics::{ByteMeter, Csv, IterRecord, Json};
@@ -32,6 +32,7 @@ use crate::observe::{NullObserver, RunObserver, StopSet};
 use crate::rd::RdCache;
 use crate::se::StateEvolution;
 use crate::signal::{Batch, Instance, ProblemDims};
+use crate::telemetry::{metrics as tel_metrics, Telemetry};
 use crate::util::rng::Rng;
 
 /// Result of one MP-AMP run.
@@ -242,6 +243,9 @@ pub struct Session {
     /// Set once `finish` produced a report; further `step`/`finish`
     /// calls error instead of silently starting a second run.
     finished: bool,
+    /// Span-recording handle threaded into the protocol core and the
+    /// worker threads (off by default — a true no-op).
+    tel: Telemetry,
 }
 
 /// Former name of [`Session`], kept so existing call sites read naturally.
@@ -341,6 +345,7 @@ impl Session {
             active: None,
             failed: false,
             finished: false,
+            tel: Telemetry::off(),
         })
     }
 
@@ -374,6 +379,7 @@ impl Session {
             allocator_from_config(&session.cfg, &session.se, session.cache.as_ref())?;
         let state = ProtocolState::new(session.batch.as_ref(), &session.cfg);
         let iters = session.cfg.iters;
+        tel_metrics().sessions_started.add(1);
         session.active = Some(Active {
             controller,
             meter,
@@ -385,6 +391,20 @@ impl Session {
             stop_reason: None,
         });
         Ok(session)
+    }
+
+    /// Attach a [`Telemetry`] handle: the protocol core records one span
+    /// per round phase (plus the whole-round envelope with wire bits,
+    /// σ_Q², and SE-predicted vs empirical MSE) and locally spawned
+    /// workers record their encode/local-step spans into the same ring.
+    /// Recording is measurement-only: a traced session is bit-identical
+    /// to an untraced one. Call before the first [`step`](Session::step)
+    /// to capture every round.
+    pub fn set_telemetry(&mut self, tel: Telemetry) {
+        self.tel = tel.clone();
+        if let Some(act) = self.active.as_mut() {
+            act.state.set_telemetry(tel);
+        }
     }
 
     /// Access the underlying signal batch (e.g. for external SDR checks).
@@ -431,8 +451,9 @@ impl Session {
                 prior: cfg.prior,
             };
             let engine = self.engine.clone();
+            let tel = self.tel.clone();
             workers.push(std::thread::spawn(move || {
-                run_scenario_worker::<S>(&params, &shard, engine.as_ref(), &mut ep)
+                run_scenario_worker_traced::<S>(&params, &shard, engine.as_ref(), &mut ep, tel)
             }));
         }
         Ok(workers)
@@ -479,7 +500,9 @@ impl Session {
             Partitioning::Row => self.spawn_workers::<Row>(worker_eps)?,
             Partitioning::Column => self.spawn_workers::<Column>(worker_eps)?,
         };
-        let state = ProtocolState::new(self.batch.as_ref(), cfg);
+        let mut state = ProtocolState::new(self.batch.as_ref(), cfg);
+        state.set_telemetry(self.tel.clone());
+        tel_metrics().sessions_started.add(1);
         self.active = Some(Active {
             controller,
             meter,
@@ -528,6 +551,7 @@ impl Session {
         );
         match stepped {
             Ok(record) => {
+                tel_metrics().rounds_total.add(1);
                 act.records.push(record.clone());
                 let snap = IterSnapshot {
                     cum_wire_bits_per_element: act
@@ -617,6 +641,13 @@ impl Session {
             return Err(e);
         }
         self.finished = true;
+        // Feed the process-wide registry once per session: byte totals
+        // come from the meter, so standalone and served sessions account
+        // identically.
+        let reg = tel_metrics();
+        reg.sessions_finished.add(1);
+        reg.uplink_bytes_total.add(act.meter.uplink_bits() / 8);
+        reg.downlink_bytes_total.add(act.meter.downlink_bits() / 8);
         let final_xs = act.state.into_xs();
         let sdr_db_per_signal: Vec<f64> = final_xs
             .iter()

@@ -24,6 +24,7 @@ use crate::coordinator::transport::Endpoint;
 use crate::engine::ComputeEngine;
 use crate::error::{Error, Result};
 use crate::signal::BernoulliGauss;
+use crate::telemetry::{Stage, Telemetry};
 
 /// Static parameters a worker needs beyond its data shard.
 #[derive(Debug, Clone)]
@@ -83,6 +84,8 @@ pub(crate) struct WorkerSession<S: Scenario> {
     /// Dequantization scratch for payload-free codecs.
     deq: Vec<f32>,
     iters: usize,
+    /// Span recording (off by default — a single flag check per frame).
+    tel: Telemetry,
 }
 
 impl<S: Scenario> WorkerSession<S> {
@@ -94,7 +97,16 @@ impl<S: Scenario> WorkerSession<S> {
             have_pending: false,
             deq: Vec::new(),
             iters: 0,
+            tel: Telemetry::off(),
         }
+    }
+
+    /// Attach a [`Telemetry`] handle: each served broadcast records a
+    /// `denoise` span (the local AMP/LC step) and each `QuantCmd` an
+    /// `encode` span (quantize + entropy-code + uplink), tagged with
+    /// this worker's id. Measurement-only.
+    pub(crate) fn set_telemetry(&mut self, tel: Telemetry) {
+        self.tel = tel;
     }
 
     /// Iterations served so far.
@@ -155,6 +167,8 @@ impl<S: Scenario> WorkerSession<S> {
                 debug_assert_eq!(self.pending.len() % b.max(1), 0);
                 let len = self.pending.len() / b.max(1);
                 let ctx = BlockCtx { worker: params.id };
+                let tel_on = self.tel.is_on();
+                let mark_us = if tel_on { self.tel.clock_us() } else { 0 };
                 // Assemble the compressors first (fallible), then build
                 // the FVector frame payload by payload straight from the
                 // flat staging buffer.
@@ -174,9 +188,14 @@ impl<S: Scenario> WorkerSession<S> {
                     }
                     Ok(())
                 })?;
+                if tel_on {
+                    self.tel.phase(Stage::Encode, t as usize, params.id as i32, mark_us, 0.0);
+                }
                 Ok(Served::Continue)
             }
             _ => {
+                let tel_on = self.tel.is_on();
+                let mark_us = if tel_on { self.tel.clock_us() } else { 0 };
                 S::worker_serve(
                     params,
                     shard,
@@ -186,6 +205,9 @@ impl<S: Scenario> WorkerSession<S> {
                     &mut self.pending,
                     endpoint,
                 )?;
+                if tel_on {
+                    self.tel.phase(Stage::Denoise, self.iters, params.id as i32, mark_us, 0.0);
+                }
                 self.have_pending = true;
                 self.iters += 1;
                 Ok(Served::Continue)
@@ -208,7 +230,23 @@ pub fn run_scenario_worker<S: Scenario>(
     engine: &dyn ComputeEngine,
     endpoint: &mut Endpoint,
 ) -> Result<usize> {
+    run_scenario_worker_traced::<S>(params, shard, engine, endpoint, Telemetry::off())
+}
+
+/// [`run_scenario_worker`] with a [`Telemetry`] handle: the worker's
+/// `encode` (quantize + code + uplink) and `denoise` (local step) spans
+/// are recorded into the handle's ring, tagged with the worker id — the
+/// session driver passes a clone of the fusion side's handle so both
+/// ends of every round land in one stream. Measurement-only.
+pub fn run_scenario_worker_traced<S: Scenario>(
+    params: &WorkerParams,
+    shard: &S::Shard,
+    engine: &dyn ComputeEngine,
+    endpoint: &mut Endpoint,
+    tel: Telemetry,
+) -> Result<usize> {
     let mut session = WorkerSession::<S>::new(shard, params.batch);
+    session.set_telemetry(tel);
     // The frame lives outside the endpoint so the reply to a broadcast
     // can be sent while the borrowed broadcast view is still alive.
     let mut frame: Vec<u8> = Vec::new();

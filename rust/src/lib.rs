@@ -30,6 +30,9 @@
 //! * [`amp`] — centralized AMP baseline,
 //! * [`observe`] — per-iteration observers and composable stop rules for
 //!   the stepwise session driver,
+//! * [`telemetry`] — structured per-round span tracing, the process-wide
+//!   metrics registry, and the Prometheus/JSON exporter behind
+//!   `mpamp serve --metrics-listen` and `mpamp trace`,
 //! * [`experiment`] — the [`Sweep`](experiment::Sweep) runner executing
 //!   config grids across a thread pool,
 //! * [`engine`] / [`runtime`] — pluggable compute engines: a portable pure
@@ -88,6 +91,7 @@ pub mod runtime;
 pub mod se;
 pub mod serve;
 pub mod signal;
+pub mod telemetry;
 pub mod util;
 
 pub use coordinator::builder::SessionBuilder;

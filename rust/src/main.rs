@@ -35,6 +35,9 @@ const RESERVED: &[&str] = &[
     "max-sessions",
     "max-queue",
     "deadline-s",
+    "metrics-listen",
+    "trace",
+    "priority",
 ];
 
 fn main() {
@@ -79,6 +82,7 @@ fn dispatch(args: &Args) -> Result<()> {
     match args.command.as_str() {
         "run" => cmd_run(args),
         "serve" => cmd_serve(args),
+        "trace" => cmd_trace(args),
         "centralized" => cmd_centralized(args),
         "se" => cmd_se(args),
         "dp" => cmd_dp(args),
@@ -126,6 +130,12 @@ fn cmd_run(args: &Args) -> Result<()> {
     if let Some(addr) = args.get("connect") {
         return cmd_run_remote(args, addr, cfg);
     }
+    if args.get("priority").is_some() {
+        return Err(Error::Config(
+            "--priority applies to --connect (daemon-submitted) runs only"
+                .into(),
+        ));
+    }
     let quiet = args.has_flag("quiet");
     eprintln!(
         "mpamp run: N={} M={} P={} B={} ({}-partitioned) ε={} SNR={} dB T={} \
@@ -142,12 +152,31 @@ fn cmd_run(args: &Args) -> Result<()> {
         cfg.engine
     );
     let stop = stop_rules(args)?;
-    let session = SessionBuilder::from_config(cfg).build()?;
+    let tel = match args.get("trace") {
+        Some(_) => mpamp::telemetry::Telemetry::enabled(),
+        None => mpamp::telemetry::Telemetry::off(),
+    };
+    let mut session = SessionBuilder::from_config(cfg).build()?;
+    if tel.is_on() {
+        session.set_telemetry(tel.clone());
+    }
     let mut table = TablePrinter::new();
     let mut null = NullObserver;
     let observer: &mut dyn RunObserver =
         if quiet { &mut null } else { &mut table };
     let report = session.run_observed(observer, &stop)?;
+    if let Some(path) = args.get("trace") {
+        let spans = tel.events();
+        mpamp::telemetry::write_trace_file(path, &spans)?;
+        eprintln!(
+            "wrote {} telemetry span(s) to {path}{}",
+            spans.len(),
+            match tel.dropped() {
+                0 => String::new(),
+                n => format!(" ({n} oldest dropped by the ring)"),
+            }
+        );
+    }
     if let Some(why) = &report.stopped_early {
         println!("stopped early after {} iterations: {why}", report.iters.len());
     }
@@ -184,7 +213,8 @@ fn cmd_run(args: &Args) -> Result<()> {
 /// `mpamp run --connect <addr>`: submit the config to a running mpampd
 /// and stream its per-round progress instead of spawning a local fleet.
 fn cmd_run_remote(args: &Args, addr: &str, cfg: RunConfig) -> Result<()> {
-    use mpamp::serve::{Client, JobEvent};
+    use mpamp::serve::client::DEFAULT_READ_TIMEOUT;
+    use mpamp::serve::{Client, JobEvent, Priority};
     if !stop_rules(args)?.is_empty() {
         return Err(Error::Config(
             "early-stopping options apply to local runs only (the daemon \
@@ -193,11 +223,29 @@ fn cmd_run_remote(args: &Args, addr: &str, cfg: RunConfig) -> Result<()> {
                 .into(),
         ));
     }
+    if args.get("trace").is_some() {
+        return Err(Error::Config(
+            "--trace applies to local runs only (spans are recorded in the \
+             process running the fusion loop)"
+                .into(),
+        ));
+    }
+    let priority = match args.get("priority") {
+        Some(v) => Priority::parse(v).ok_or_else(|| {
+            Error::Config(format!(
+                "unknown --priority '{v}' (expected 'high' or 'normal')"
+            ))
+        })?,
+        None => Priority::Normal,
+    };
     let quiet = args.has_flag("quiet");
-    let mut job = Client::submit(addr, &cfg)?;
+    let mut job =
+        Client::submit_with(addr, &cfg, priority, Some(DEFAULT_READ_TIMEOUT))?;
     eprintln!(
-        "mpamp run: submitted to {addr} as session {} (queue position {})",
+        "mpamp run: submitted to {addr} as session {} (priority {}, queue \
+         position {})",
         job.session_id(),
+        priority.as_str(),
         job.queue_pos()
     );
     let mut table = TablePrinter::new();
@@ -257,6 +305,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         sc.deadline = Some(std::time::Duration::from_secs_f64(s));
     }
     term_signal::install();
+    // The metrics endpoint outlives the daemon into the drain, so the
+    // final scrape still sees the terminal job states.
+    let metrics = match args.get("metrics-listen") {
+        Some(maddr) => {
+            let srv = mpamp::telemetry::MetricsServer::start(maddr)?;
+            eprintln!(
+                "mpampd: metrics on http://{}/metrics (JSON at /metrics.json)",
+                srv.addr()
+            );
+            Some(srv)
+        }
+        None => None,
+    };
     let daemon = Daemon::start(sc)?;
     eprintln!(
         "mpampd: serving on {} (fleet P={}, max {} running + {} queued{})",
@@ -284,7 +345,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(50));
     }
     daemon.shutdown()?;
+    if let Some(srv) = metrics {
+        srv.stop();
+    }
     eprintln!("mpampd: drained; exiting");
+    Ok(())
+}
+
+/// `mpamp trace <out.jsonl>`: run one session with telemetry enabled and
+/// dump its span stream as JSONL (schema in the `mpamp::telemetry`
+/// rustdoc). Accepts the same config/preset/override and early-stopping
+/// options as a local `mpamp run`.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use mpamp::telemetry::{self, Stage, Telemetry};
+    let out = args.positional.first().ok_or_else(|| {
+        Error::Config(
+            "usage: mpamp trace <out.jsonl> [--preset test_small] [overrides]"
+                .into(),
+        )
+    })?;
+    let cfg = load_config(args)?;
+    let stop = stop_rules(args)?;
+    let tel = Telemetry::enabled();
+    let mut session = SessionBuilder::from_config(cfg).build()?;
+    session.set_telemetry(tel.clone());
+    let mut null = NullObserver;
+    let report = session.run_observed(&mut null, &stop)?;
+    let spans = tel.events();
+    telemetry::write_trace_file(out, &spans)?;
+    let rounds = spans.iter().filter(|e| e.stage == Stage::Round).count();
+    let wire_bits: f64 = spans
+        .iter()
+        .filter(|e| e.stage == Stage::Round)
+        .map(|e| e.bits)
+        .sum();
+    println!(
+        "wrote {} span(s) to {out}: {rounds} rounds, {:.0} uplink payload \
+         bits{}",
+        spans.len(),
+        wire_bits,
+        match tel.dropped() {
+            0 => String::new(),
+            n => format!(" ({n} oldest spans dropped by the ring)"),
+        }
+    );
+    println!(
+        "final SDR {:.2} dB in {} iterations | {:.2} bits/element",
+        report.final_sdr_db(),
+        report.iters.len(),
+        report.total_uplink_bits_per_element()
+    );
     Ok(())
 }
 

@@ -187,6 +187,9 @@ impl Pool {
             }
             return;
         }
+        // One relaxed atomic add per parallel dispatch (not per chunk) —
+        // the registry's pool occupancy signal, far off any inner loop.
+        crate::telemetry::metrics().pool_tasks_total.add(1);
         unsafe fn call<F: Fn(usize)>(data: *const (), i: usize) {
             // SAFETY: `data` was produced from `&task` below and the
             // publisher does not return before every chunk finished.

@@ -6,11 +6,20 @@
 //! cancellation, or a daemon-side error. [`JobHandle::await_report`]
 //! collapses the stream for callers that only want the result.
 
+use std::time::Duration;
+
 use crate::config::toml::Table;
 use crate::config::RunConfig;
 use crate::coordinator::session::{IterSnapshot, RunReport};
 use crate::error::{Error, Result};
+use crate::serve::queue::Priority;
 use crate::serve::wire::{self, JobConn, Reader};
+
+/// Default bound on any single blocking read from the daemon. Generous
+/// against slow rounds on loaded fleets, but finite: a daemon killed
+/// mid-run surfaces as a timed-out [`Error::Transport`] instead of
+/// hanging the client forever.
+pub const DEFAULT_READ_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// One streamed job event.
 #[derive(Debug)]
@@ -32,16 +41,33 @@ pub enum JobEvent {
 pub struct Client;
 
 impl Client {
-    /// Submit `cfg` to the daemon at `addr` (e.g. `"127.0.0.1:7700"`).
-    /// Validates the config locally first, so obvious mistakes fail
-    /// before any bytes move. Returns once the daemon accepts or rejects
-    /// the job.
+    /// Submit `cfg` to the daemon at `addr` (e.g. `"127.0.0.1:7700"`)
+    /// at [`Priority::Normal`] with the
+    /// [default read deadline](DEFAULT_READ_TIMEOUT). Validates the
+    /// config locally first, so obvious mistakes fail before any bytes
+    /// move. Returns once the daemon accepts or rejects the job.
     pub fn submit(addr: &str, cfg: &RunConfig) -> Result<JobHandle> {
+        Self::submit_with(addr, cfg, Priority::Normal, Some(DEFAULT_READ_TIMEOUT))
+    }
+
+    /// [`submit`](Self::submit) with explicit scheduling class and read
+    /// deadline. `read_timeout` bounds every blocking read on the
+    /// returned handle (`None` waits forever); an expired deadline
+    /// surfaces as [`Error::Transport`] tagged with the session id.
+    pub fn submit_with(
+        addr: &str,
+        cfg: &RunConfig,
+        priority: Priority,
+        read_timeout: Option<Duration>,
+    ) -> Result<JobHandle> {
         cfg.validate()?;
-        let mut conn = JobConn::client(addr)?;
+        let mut conn = JobConn::client(addr, read_timeout)?;
         let mut table = Table::new();
         cfg.encode_into(&mut table);
-        conn.send(wire::J_SUBMIT, |buf| wire::encode_table(buf, &table))?;
+        conn.send(wire::J_SUBMIT, |buf| {
+            wire::encode_table(buf, &table);
+            buf.push(priority.to_wire());
+        })?;
         let (kind, payload) = conn.recv()?;
         match kind {
             wire::J_ACCEPTED => {
@@ -94,14 +120,20 @@ impl JobHandle {
 
     /// Block for the next event. After a terminal event
     /// ([`JobEvent::Report`] / [`JobEvent::Cancelled`] /
-    /// [`JobEvent::Failed`]), further calls error.
+    /// [`JobEvent::Failed`]), further calls error. A read past the
+    /// handle's deadline (daemon died, network gone) returns
+    /// [`Error::Transport`] tagged with this session's id.
     pub fn next_event(&mut self) -> Result<JobEvent> {
         if self.done {
             return Err(Error::Protocol(
                 "job already reached its terminal event".into(),
             ));
         }
-        let (kind, payload) = self.conn.recv()?;
+        let session = self.session;
+        let (kind, payload) = self
+            .conn
+            .recv()
+            .map_err(|e| e.transport_context(session, "client"))?;
         let mut r = Reader::new(payload);
         match kind {
             wire::J_STARTED => {

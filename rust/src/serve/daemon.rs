@@ -2,7 +2,7 @@
 //!
 //! One daemon process hosts a single worker fleet (`fleet_p` threads,
 //! connected back to the fusion side over loopback TCP with the
-//! protocol-v4 **multiplexed** links) and a public job listener. Each
+//! protocol-v5 **multiplexed** links) and a public job listener. Each
 //! accepted job connection submits one [`RunConfig`]; admission control
 //! ([`JobQueue`]) decides whether the job runs now, waits, or bounces.
 //! A running job drives an ordinary [`Session`] over per-session mux
@@ -39,10 +39,26 @@ use crate::engine::{ColumnWorkerData, ComputeEngine, RowBatchData, RustEngine};
 use crate::error::{Error, Result};
 use crate::metrics::ByteMeter;
 use crate::observe::{RunObserver, StopSet};
-use crate::serve::queue::{Admission, JobQueue};
+use crate::serve::queue::{Admission, JobQueue, Priority};
 use crate::serve::wire::{self, ClientSignal, JobConn, Reader};
 use crate::signal::{Batch, ProblemDims};
+use crate::telemetry::{metrics as tel_metrics, JobState, Telemetry};
 use crate::util::rng::Rng;
+
+/// Ring capacity of the per-job [`Telemetry`] handle attached to served
+/// sessions: enough for every span of a long run's recent rounds while
+/// keeping the per-job footprint small. Attaching it keeps the
+/// process-wide per-stage latency histograms warm under serving load;
+/// telemetry is measurement-only, so reports stay bit-identical.
+const JOB_TELEMETRY_CAPACITY: usize = 4096;
+
+/// Mirror the admission queue into the registry's gauges (called under
+/// the queue lock, so a scrape never sees a half-applied transition).
+fn sync_queue_gauges(q: &JobQueue) {
+    let reg = tel_metrics();
+    reg.jobs_running.set(q.running() as u64);
+    reg.jobs_queued.set(q.queued() as u64);
+}
 
 /// Daemon capacity and placement policy.
 #[derive(Debug, Clone)]
@@ -351,8 +367,12 @@ enum JobOutcome {
 
 /// Streams per-round progress to the job's client and turns client
 /// cancels / disconnects / the daemon deadline into an early stop.
+/// Also refreshes the job's registry row each round, so a metrics
+/// scrape mid-run sees live per-job round counts and uplink bits.
 struct ProgressForwarder<'a> {
     conn: &'a mut JobConn,
+    sid: u32,
+    meter: Arc<ByteMeter>,
     started: Instant,
     deadline: Option<Duration>,
     cancelled: Option<String>,
@@ -360,6 +380,11 @@ struct ProgressForwarder<'a> {
 
 impl RunObserver for ProgressForwarder<'_> {
     fn on_iter(&mut self, snap: &IterSnapshot) {
+        let uplink_bits = self.meter.uplink_bits();
+        tel_metrics().job_update(self.sid, |j| {
+            j.rounds = snap.record.t as u64 + 1;
+            j.uplink_bits = uplink_bits;
+        });
         if self.cancelled.is_some() {
             return;
         }
@@ -422,8 +447,8 @@ fn validate_job(cfg: &RunConfig, serve: &ServeConfig) -> Result<()> {
 fn serve_job(shared: Arc<DaemonShared>, stream: TcpStream) -> Result<()> {
     let mut conn = JobConn::server(stream, shared.cfg.timeouts.accept)?;
     // Submit.
-    let cfg = match recv_submit(&mut conn) {
-        Ok(cfg) => cfg,
+    let (cfg, priority) = match recv_submit(&mut conn) {
+        Ok(sub) => sub,
         Err(e) => {
             let _ = conn.send_error(&e.to_string());
             return Err(e);
@@ -441,10 +466,17 @@ fn serve_job(shared: Arc<DaemonShared>, stream: TcpStream) -> Result<()> {
         return Ok(());
     }
     let sid = shared.next_session.fetch_add(1, Ordering::Relaxed);
+    let reg = tel_metrics();
     // Admission.
-    let admission = shared.queue.lock().expect("queue poisoned").admit(sid);
+    let admission = {
+        let mut q = shared.queue.lock().expect("queue poisoned");
+        let admission = q.admit(sid, priority);
+        sync_queue_gauges(&q);
+        admission
+    };
     match admission {
         Admission::Reject => {
+            reg.jobs_rejected.add(1);
             let q = shared.queue.lock().expect("queue poisoned");
             let msg = format!(
                 "daemon at capacity: {} running, {} queued (max {} + {})",
@@ -458,34 +490,54 @@ fn serve_job(shared: Arc<DaemonShared>, stream: TcpStream) -> Result<()> {
             return Ok(());
         }
         Admission::Run => {
+            reg.job_insert(sid, priority == Priority::High, JobState::Running);
             // An unreachable client must not leak its admitted slot.
             if let Err(e) = send_accepted(&mut conn, sid, 0) {
-                shared.queue.lock().expect("queue poisoned").release();
+                let mut q = shared.queue.lock().expect("queue poisoned");
+                q.release();
+                sync_queue_gauges(&q);
+                drop(q);
                 shared.queue_cv.notify_all();
+                reg.job_update(sid, |j| j.state = JobState::Cancelled);
+                reg.jobs_cancelled.add(1);
                 return Err(e);
             }
         }
         Admission::Queued(pos) => {
+            reg.job_insert(sid, priority == Priority::High, JobState::Queued);
             if let Err(e) = send_accepted(&mut conn, sid, pos as u32) {
-                shared.queue.lock().expect("queue poisoned").abandon(sid);
-                shared.queue_cv.notify_all();
+                abandon_queued(&shared, sid);
+                reg.jobs_cancelled.add(1);
                 return Err(e);
             }
             if !wait_for_slot(&shared, &mut conn, sid)? {
                 return Ok(()); // cancelled / disconnected while queued
             }
+            reg.job_update(sid, |j| j.state = JobState::Running);
         }
     }
     // From here this thread owns a running slot: release it on all paths.
     let outcome = run_job(&shared, &mut conn, sid, &cfg);
-    shared.queue.lock().expect("queue poisoned").release();
+    {
+        let mut q = shared.queue.lock().expect("queue poisoned");
+        q.release();
+        sync_queue_gauges(&q);
+    }
     shared.queue_cv.notify_all();
     match outcome {
         Ok(JobOutcome::Report(report)) => {
+            reg.job_update(sid, |j| j.state = JobState::Done);
+            reg.jobs_completed.add(1);
             conn.send(wire::J_REPORT, |buf| wire::encode_report(buf, &report))
         }
-        Ok(JobOutcome::Cancelled(_)) => conn.send_empty(wire::J_CANCELLED),
+        Ok(JobOutcome::Cancelled(_)) => {
+            reg.job_update(sid, |j| j.state = JobState::Cancelled);
+            reg.jobs_cancelled.add(1);
+            conn.send_empty(wire::J_CANCELLED)
+        }
         Err(e) => {
+            reg.job_update(sid, |j| j.state = JobState::Failed);
+            reg.jobs_failed.add(1);
             let tagged = e.transport_context(sid, "fusion");
             let _ = conn.send_error(&tagged.to_string());
             Err(tagged)
@@ -493,7 +545,19 @@ fn serve_job(shared: Arc<DaemonShared>, stream: TcpStream) -> Result<()> {
     }
 }
 
-fn recv_submit(conn: &mut JobConn) -> Result<RunConfig> {
+/// Drop a still-queued (or just-promoted) session from the queue, mirror
+/// the gauges, mark its registry row cancelled, and wake the waiters.
+fn abandon_queued(shared: &DaemonShared, sid: u32) {
+    {
+        let mut q = shared.queue.lock().expect("queue poisoned");
+        q.abandon(sid);
+        sync_queue_gauges(&q);
+    }
+    shared.queue_cv.notify_all();
+    tel_metrics().job_update(sid, |j| j.state = JobState::Cancelled);
+}
+
+fn recv_submit(conn: &mut JobConn) -> Result<(RunConfig, Priority)> {
     let (kind, payload) = conn.recv()?;
     if kind != wire::J_SUBMIT {
         return Err(Error::Protocol(format!(
@@ -502,8 +566,11 @@ fn recv_submit(conn: &mut JobConn) -> Result<RunConfig> {
     }
     let mut r = Reader::new(payload);
     let table = wire::decode_table(&mut r)?;
+    let priority = Priority::from_wire(r.u8()?).ok_or_else(|| {
+        Error::Protocol("unknown job priority byte in submit frame".into())
+    })?;
     r.finish()?;
-    RunConfig::from_table(&table)
+    Ok((RunConfig::from_table(&table)?, priority))
 }
 
 fn send_accepted(conn: &mut JobConn, sid: u32, pos: u32) -> Result<()> {
@@ -537,8 +604,8 @@ fn wait_for_slot(
         // Lock released: poll the client socket between waits.
         match conn.poll_client() {
             Some(signal) => {
-                shared.queue.lock().expect("queue poisoned").abandon(sid);
-                shared.queue_cv.notify_all();
+                abandon_queued(shared, sid);
+                tel_metrics().jobs_cancelled.add(1);
                 if signal == ClientSignal::Cancel {
                     let _ = conn.send_empty(wire::J_CANCELLED);
                 }
@@ -547,7 +614,14 @@ fn wait_for_slot(
             None => {}
         }
         if shared.shutdown.load(Ordering::SeqCst) {
-            shared.queue.lock().expect("queue poisoned").abandon(sid);
+            {
+                let mut q = shared.queue.lock().expect("queue poisoned");
+                q.abandon(sid);
+                sync_queue_gauges(&q);
+            }
+            let reg = tel_metrics();
+            reg.job_update(sid, |j| j.state = JobState::Failed);
+            reg.jobs_failed.add(1);
             let _ = conn.send_error("daemon is shutting down");
             return Ok(false);
         }
@@ -583,15 +657,20 @@ fn run_job(
     };
     let engine: Arc<dyn ComputeEngine> =
         Arc::new(RustEngine::new_pool_aware(cfg.prior, cfg.threads));
-    let session = Session::with_external_transport(
+    let mut session = Session::with_external_transport(
         cfg.clone(),
         batch,
         engine,
-        job_meter,
+        job_meter.clone(),
         endpoints,
     )?;
+    // Measurement-only: keeps the per-stage latency histograms warm
+    // while leaving the report bit-identical to a standalone run.
+    session.set_telemetry(Telemetry::with_capacity(JOB_TELEMETRY_CAPACITY));
     let mut forwarder = ProgressForwarder {
         conn,
+        sid,
+        meter: job_meter,
         started: Instant::now(),
         deadline: shared.cfg.deadline,
         cancelled: None,

@@ -3,7 +3,7 @@
 //! A standalone [`Session`](crate::Session) spins up a worker fleet, runs
 //! one recovery, and tears everything down. This module keeps the fleet
 //! **resident**: one daemon process owns `P` fleet workers (connected over
-//! the protocol-v4 multiplexed TCP links, where every frame carries a
+//! the protocol-v5 multiplexed TCP links, where every frame carries a
 //! session id) and serves many concurrent recovery jobs over them —
 //! interleaving different sessions' rounds on the same sockets, sharing
 //! the process-wide compute pool via pool-aware chunk sizing, and
@@ -65,6 +65,33 @@
 //! over-long jobs after the current round while still returning their
 //! partial report. Cancelling ([`JobHandle::cancel`]) — or just
 //! disconnecting — frees the job's slot for the next queued session.
+//!
+//! The wait queue has two scheduling classes ([`Priority`], the last
+//! byte of the submit frame — `mpamp run --connect … --priority high`):
+//! a freed slot goes to the longest-waiting high-priority job first,
+//! FIFO within each class, one shared `max_queue` bound across both.
+//!
+//! # Observability
+//!
+//! The daemon feeds the process-wide
+//! [`telemetry`](crate::telemetry) registry: admission gauges
+//! (`jobs_running` / `jobs_queued`), lifecycle counters
+//! (rejected/completed/cancelled/failed), and a per-job table whose
+//! round counts and uplink bits refresh every round. `mpamp serve
+//! --metrics-listen <addr>` exposes all of it over HTTP as Prometheus
+//! text (`/metrics`) and a JSON snapshot (`/metrics.json`) via
+//! [`telemetry::export::MetricsServer`](crate::telemetry::export::MetricsServer),
+//! so a scrape mid-run shows live per-job progress alongside fleet
+//! counters. Served jobs also run with a small per-session
+//! [`Telemetry`](crate::telemetry::Telemetry) ring attached, keeping
+//! the per-stage latency histograms warm — telemetry is
+//! measurement-only, so reports stay bit-identical to standalone runs.
+//!
+//! Client reads carry a default 120 s deadline
+//! ([`Client::submit_with`] tunes or disables it), so a daemon that
+//! dies mid-run surfaces as a timed-out
+//! [`Error::Transport`](crate::Error::Transport) instead of hanging
+//! the client forever.
 
 pub mod client;
 pub mod daemon;
@@ -73,4 +100,4 @@ pub(crate) mod wire;
 
 pub use client::{Client, JobEvent, JobHandle};
 pub use daemon::{Daemon, ServeConfig};
-pub use queue::{Admission, JobQueue};
+pub use queue::{Admission, JobQueue, Priority};

@@ -1,30 +1,94 @@
 //! Admission control for the serving daemon: a bounded running set plus
-//! a bounded FIFO wait queue, as pure data (no locks, no sockets) so the
-//! policy is unit-testable in isolation. The daemon wraps one [`JobQueue`]
-//! in a `Mutex`/`Condvar` pair; each job thread admits itself, waits to be
-//! promoted if queued, and releases its slot when the run ends.
+//! a bounded two-level priority wait queue, as pure data (no locks, no
+//! sockets, no globals) so the policy is unit-testable in isolation. The
+//! daemon wraps one [`JobQueue`] in a `Mutex`/`Condvar` pair; each job
+//! thread admits itself, waits to be promoted if queued, and releases
+//! its slot when the run ends.
+//!
+//! Priority is strict between levels and FIFO within a level: a freed
+//! slot always goes to the longest-waiting [`Priority::High`] job, and
+//! only when no high job waits to the longest-waiting
+//! [`Priority::Normal`] one. Both levels share the one `max_queued`
+//! bound — priority buys ordering, not extra capacity.
 
 use std::collections::{HashSet, VecDeque};
+
+/// Scheduling class of a submitted job. High-priority jobs overtake
+/// normal ones in the daemon's wait queue; within a class, first come,
+/// first served. Travels on the wire as one byte at the tail of the
+/// submit frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Priority {
+    /// Drains first: jumps ahead of every waiting normal-priority job
+    /// (but never preempts a running one).
+    High,
+    /// The default class.
+    #[default]
+    Normal,
+}
+
+impl Priority {
+    /// Stable lowercase name (CLI value and metric label).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::High => "high",
+            Priority::Normal => "normal",
+        }
+    }
+
+    /// Parse a CLI value.
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "high" => Some(Priority::High),
+            "normal" => Some(Priority::Normal),
+            _ => None,
+        }
+    }
+
+    /// Wire byte (tail of the submit frame).
+    pub(crate) fn to_wire(self) -> u8 {
+        match self {
+            Priority::Normal => 0,
+            Priority::High => 1,
+        }
+    }
+
+    /// Decode the wire byte.
+    pub(crate) fn from_wire(b: u8) -> Option<Priority> {
+        match b {
+            0 => Some(Priority::Normal),
+            1 => Some(Priority::High),
+            _ => None,
+        }
+    }
+}
 
 /// Outcome of submitting a job to the queue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Admission {
     /// A running slot was free: the job runs immediately.
     Run,
-    /// All slots busy; the job waits at this 1-based queue position.
+    /// All slots busy; the job waits at this 1-based queue position
+    /// (its place in the strict high-before-normal drain order at
+    /// admission time — later high submissions can push a normal job
+    /// back).
     Queued(usize),
     /// Both the running set and the wait queue are full.
     Reject,
 }
 
-/// Capacity policy state: who is running, who is waiting, and who has
-/// been promoted out of the queue but not yet noticed.
+/// Capacity policy state: who is running, who is waiting at which
+/// priority, and who has been promoted out of the queue but not yet
+/// noticed.
 #[derive(Debug)]
 pub struct JobQueue {
     max_running: usize,
     max_queued: usize,
     running: usize,
-    queued: VecDeque<u32>,
+    /// Waiting high-priority sessions, oldest first.
+    high: VecDeque<u32>,
+    /// Waiting normal-priority sessions, oldest first.
+    normal: VecDeque<u32>,
     /// Sessions moved queue → running by [`release`](JobQueue::release)
     /// whose owning thread has not yet [`claim`](JobQueue::claim)ed the
     /// slot (promotion happens under the releasing thread's lock hold).
@@ -33,26 +97,36 @@ pub struct JobQueue {
 
 impl JobQueue {
     /// New queue admitting up to `max_running` concurrent sessions and
-    /// holding up to `max_queued` waiting ones.
+    /// holding up to `max_queued` waiting ones (both priority levels
+    /// share that bound).
     pub fn new(max_running: usize, max_queued: usize) -> Self {
         JobQueue {
             max_running: max_running.max(1),
             max_queued,
             running: 0,
-            queued: VecDeque::new(),
+            high: VecDeque::new(),
+            normal: VecDeque::new(),
             promoted: HashSet::new(),
         }
     }
 
-    /// Submit session `id`: take a running slot, join the wait queue, or
-    /// bounce.
-    pub fn admit(&mut self, id: u32) -> Admission {
+    /// Submit session `id` at `priority`: take a running slot, join the
+    /// wait queue, or bounce.
+    pub fn admit(&mut self, id: u32, priority: Priority) -> Admission {
         if self.running < self.max_running {
             self.running += 1;
             Admission::Run
-        } else if self.queued.len() < self.max_queued {
-            self.queued.push_back(id);
-            Admission::Queued(self.queued.len())
+        } else if self.queued() < self.max_queued {
+            match priority {
+                Priority::High => {
+                    self.high.push_back(id);
+                    Admission::Queued(self.high.len())
+                }
+                Priority::Normal => {
+                    self.normal.push_back(id);
+                    Admission::Queued(self.high.len() + self.normal.len())
+                }
+            }
         } else {
             Admission::Reject
         }
@@ -65,13 +139,15 @@ impl JobQueue {
         self.promoted.remove(&id)
     }
 
-    /// A running session ended: free its slot and promote the longest
-    /// waiter, if any (the promoted session keeps the slot counted as
+    /// A running session ended: free its slot and promote the
+    /// longest-waiting high-priority session, else the longest-waiting
+    /// normal one (the promoted session keeps the slot counted as
     /// running until it releases in turn).
     pub fn release(&mut self) {
         debug_assert!(self.running > 0, "release without a running session");
         self.running = self.running.saturating_sub(1);
-        if let Some(next) = self.queued.pop_front() {
+        if let Some(next) = self.high.pop_front().or_else(|| self.normal.pop_front())
+        {
             self.running += 1;
             self.promoted.insert(next);
         }
@@ -81,8 +157,10 @@ impl JobQueue {
     /// was promoted between its last poll and now, the slot it silently
     /// held is released onward.
     pub fn abandon(&mut self, id: u32) {
-        if let Some(idx) = self.queued.iter().position(|&q| q == id) {
-            self.queued.remove(idx);
+        if let Some(idx) = self.high.iter().position(|&q| q == id) {
+            self.high.remove(idx);
+        } else if let Some(idx) = self.normal.iter().position(|&q| q == id) {
+            self.normal.remove(idx);
         } else if self.promoted.remove(&id) {
             self.release();
         }
@@ -93,14 +171,22 @@ impl JobQueue {
         self.running
     }
 
-    /// Sessions currently waiting.
+    /// Sessions currently waiting (both priority levels).
     pub fn queued(&self) -> usize {
-        self.queued.len()
+        self.high.len() + self.normal.len()
     }
 
-    /// 1-based wait position of session `id`, if it is queued.
+    /// 1-based wait position of session `id` in the current drain order
+    /// (every waiting high job precedes every waiting normal one), if it
+    /// is queued.
     pub fn position(&self, id: u32) -> Option<usize> {
-        self.queued.iter().position(|&q| q == id).map(|i| i + 1)
+        if let Some(i) = self.high.iter().position(|&q| q == id) {
+            return Some(i + 1);
+        }
+        self.normal
+            .iter()
+            .position(|&q| q == id)
+            .map(|i| self.high.len() + i + 1)
     }
 }
 
@@ -108,13 +194,18 @@ impl JobQueue {
 mod tests {
     use super::*;
 
+    /// Normal-priority shorthand keeps the capacity tests readable.
+    fn admit_n(q: &mut JobQueue, id: u32) -> Admission {
+        q.admit(id, Priority::Normal)
+    }
+
     #[test]
     fn admits_up_to_capacity_then_queues_then_rejects() {
         let mut q = JobQueue::new(2, 1);
-        assert_eq!(q.admit(1), Admission::Run);
-        assert_eq!(q.admit(2), Admission::Run);
-        assert_eq!(q.admit(3), Admission::Queued(1));
-        assert_eq!(q.admit(4), Admission::Reject);
+        assert_eq!(admit_n(&mut q, 1), Admission::Run);
+        assert_eq!(admit_n(&mut q, 2), Admission::Run);
+        assert_eq!(admit_n(&mut q, 3), Admission::Queued(1));
+        assert_eq!(admit_n(&mut q, 4), Admission::Reject);
         assert_eq!(q.running(), 2);
         assert_eq!(q.queued(), 1);
         assert_eq!(q.position(3), Some(1));
@@ -124,9 +215,9 @@ mod tests {
     #[test]
     fn release_promotes_fifo() {
         let mut q = JobQueue::new(1, 4);
-        assert_eq!(q.admit(10), Admission::Run);
-        assert_eq!(q.admit(11), Admission::Queued(1));
-        assert_eq!(q.admit(12), Admission::Queued(2));
+        assert_eq!(admit_n(&mut q, 10), Admission::Run);
+        assert_eq!(admit_n(&mut q, 11), Admission::Queued(1));
+        assert_eq!(admit_n(&mut q, 12), Admission::Queued(2));
         q.release();
         // 11 was promoted and holds the slot even before claiming it.
         assert_eq!(q.running(), 1);
@@ -141,11 +232,50 @@ mod tests {
     }
 
     #[test]
+    fn high_priority_overtakes_waiting_normal_jobs() {
+        let mut q = JobQueue::new(1, 8);
+        assert_eq!(admit_n(&mut q, 1), Admission::Run);
+        assert_eq!(admit_n(&mut q, 2), Admission::Queued(1));
+        assert_eq!(admit_n(&mut q, 3), Admission::Queued(2));
+        // A high job arrives last but reports position 1 and pushes the
+        // normal waiters back in the drain order.
+        assert_eq!(q.admit(4, Priority::High), Admission::Queued(1));
+        assert_eq!(q.position(4), Some(1));
+        assert_eq!(q.position(2), Some(2));
+        assert_eq!(q.position(3), Some(3));
+        // FIFO within the high level.
+        assert_eq!(q.admit(5, Priority::High), Admission::Queued(2));
+        // Drain order: 4, 5 (high, FIFO), then 2, 3 (normal, FIFO).
+        q.release();
+        assert!(q.claim(4));
+        q.release();
+        assert!(q.claim(5));
+        q.release();
+        assert!(q.claim(2));
+        q.release();
+        assert!(q.claim(3));
+        q.release();
+        assert_eq!(q.running(), 0);
+        assert_eq!(q.queued(), 0);
+    }
+
+    #[test]
+    fn priority_levels_share_one_queue_bound() {
+        let mut q = JobQueue::new(1, 2);
+        assert_eq!(admit_n(&mut q, 1), Admission::Run);
+        assert_eq!(admit_n(&mut q, 2), Admission::Queued(1));
+        assert_eq!(q.admit(3, Priority::High), Admission::Queued(1));
+        // The queue is full: even a high submission bounces.
+        assert_eq!(q.admit(4, Priority::High), Admission::Reject);
+        assert_eq!(q.queued(), 2);
+    }
+
+    #[test]
     fn abandon_from_queue_and_after_promotion() {
         let mut q = JobQueue::new(1, 4);
-        assert_eq!(q.admit(1), Admission::Run);
-        assert_eq!(q.admit(2), Admission::Queued(1));
-        assert_eq!(q.admit(3), Admission::Queued(2));
+        assert_eq!(admit_n(&mut q, 1), Admission::Run);
+        assert_eq!(admit_n(&mut q, 2), Admission::Queued(1));
+        assert_eq!(admit_n(&mut q, 3), Admission::Queued(2));
         // 2 gives up while still queued: 3 moves forward.
         q.abandon(2);
         assert_eq!(q.position(3), Some(1));
@@ -155,19 +285,41 @@ mod tests {
         q.abandon(3);
         assert_eq!(q.running(), 0);
         assert_eq!(q.queued(), 0);
-        assert_eq!(q.admit(4), Admission::Run);
+        assert_eq!(admit_n(&mut q, 4), Admission::Run);
+    }
+
+    #[test]
+    fn abandon_removes_a_waiting_high_job() {
+        let mut q = JobQueue::new(1, 4);
+        assert_eq!(admit_n(&mut q, 1), Admission::Run);
+        assert_eq!(q.admit(2, Priority::High), Admission::Queued(1));
+        assert_eq!(admit_n(&mut q, 3), Admission::Queued(2));
+        q.abandon(2);
+        assert_eq!(q.position(3), Some(1));
+        q.release();
+        assert!(q.claim(3));
     }
 
     #[test]
     fn zero_queue_capacity_rejects_immediately() {
         let mut q = JobQueue::new(1, 0);
-        assert_eq!(q.admit(1), Admission::Run);
-        assert_eq!(q.admit(2), Admission::Reject);
+        assert_eq!(admit_n(&mut q, 1), Admission::Run);
+        assert_eq!(admit_n(&mut q, 2), Admission::Reject);
     }
 
     #[test]
     fn max_running_floor_is_one() {
         let mut q = JobQueue::new(0, 0);
-        assert_eq!(q.admit(1), Admission::Run);
+        assert_eq!(admit_n(&mut q, 1), Admission::Run);
+    }
+
+    #[test]
+    fn priority_wire_byte_roundtrips() {
+        for p in [Priority::High, Priority::Normal] {
+            assert_eq!(Priority::from_wire(p.to_wire()), Some(p));
+            assert_eq!(Priority::parse(p.as_str()), Some(p));
+        }
+        assert_eq!(Priority::from_wire(7), None);
+        assert_eq!(Priority::parse("urgent"), None);
     }
 }

@@ -9,7 +9,9 @@
 //! daemon computed.
 //!
 //! Client → daemon: [`J_SUBMIT`] (a [`RunConfig`] as its flat config
-//! table), then optionally [`J_CANCEL`]. Daemon → client:
+//! table, followed by one priority byte — see
+//! [`Priority`](crate::serve::Priority)), then optionally
+//! [`J_CANCEL`]. Daemon → client:
 //! [`J_ACCEPTED`] `{session_id, queue_pos}` (pos 0 = running now),
 //! [`J_STARTED`], one [`J_ITER`] per protocol round (an
 //! [`IterSnapshot`]), and exactly one terminal frame — [`J_REPORT`]
@@ -321,6 +323,21 @@ pub(crate) fn decode_report(r: &mut Reader) -> Result<RunReport> {
 
 // ---------- framed job connection ----------
 
+/// Map a blocking-read failure to [`Error::Transport`], naming an
+/// expired read deadline for what it is (the raw `ErrorKind` differs by
+/// platform: `WouldBlock` on Unix, `TimedOut` on Windows).
+fn recv_error(what: &str, e: &std::io::Error) -> Error {
+    use std::io::ErrorKind;
+    if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) {
+        Error::Transport(
+            "job read timed out: no frame from peer within the read deadline"
+                .into(),
+        )
+    } else {
+        Error::Transport(format!("{what}: {e}"))
+    }
+}
+
 /// What a server-side poll of the client socket observed.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub(crate) enum ClientSignal {
@@ -339,12 +356,17 @@ pub(crate) struct JobConn {
 }
 
 impl JobConn {
-    /// Client side: connect and send the job hello.
-    pub(crate) fn client(addr: &str) -> Result<Self> {
+    /// Client side: connect and send the job hello. `read_timeout`
+    /// bounds every blocking read on the handle (accept frame, progress
+    /// events, the terminal report): a daemon that dies mid-run surfaces
+    /// as a timed-out [`Error::Transport`] instead of hanging the client
+    /// forever. `None` waits indefinitely (the pre-timeout behaviour).
+    pub(crate) fn client(addr: &str, read_timeout: Option<Duration>) -> Result<Self> {
         let stream = TcpStream::connect(addr).map_err(|e| {
             Error::Transport(format!("cannot reach mpampd at {addr}: {e}"))
         })?;
         stream.set_nodelay(true).map_err(Error::Io)?;
+        stream.set_read_timeout(read_timeout).map_err(Error::Io)?;
         let mut hello = [0u8; 5];
         hello[0] = PROTOCOL_VERSION;
         hello[1..5].copy_from_slice(&JOB_MAGIC.to_le_bytes());
@@ -417,17 +439,17 @@ impl JobConn {
     /// from the connection's reused buffer.
     pub(crate) fn recv(&mut self) -> Result<(u8, &[u8])> {
         let mut hdr = [0u8; 4];
-        self.stream.read_exact(&mut hdr).map_err(|e| {
-            Error::Transport(format!("job connection closed: {e}"))
-        })?;
+        self.stream
+            .read_exact(&mut hdr)
+            .map_err(|e| recv_error("job connection closed", &e))?;
         let len = u32::from_le_bytes(hdr) as usize;
         if !(1..=MAX_JOB_FRAME).contains(&len) {
             return Err(Error::Protocol(format!("bad job frame length {len}")));
         }
         self.buf.resize(len, 0);
-        self.stream.read_exact(&mut self.buf).map_err(|e| {
-            Error::Transport(format!("job frame truncated by peer: {e}"))
-        })?;
+        self.stream
+            .read_exact(&mut self.buf)
+            .map_err(|e| recv_error("job frame truncated by peer", &e))?;
         Ok((self.buf[0], &self.buf[1..]))
     }
 

@@ -1,0 +1,354 @@
+//! Exporter layer: render the [`registry`](super::registry) as
+//! Prometheus-style text or a JSON snapshot, and serve both over a
+//! minimal HTTP/1.0 GET endpoint ([`MetricsServer`], behind
+//! `mpamp serve --metrics-listen <addr>`).
+//!
+//! The HTTP server is deliberately tiny — request line + headers read
+//! with a deadline, two routes, `Connection: close` — because its only
+//! job is to hand a scraper the current registry snapshot; it shares
+//! the nonblocking-accept polling idiom of the protocol's TCP
+//! transport rather than pulling in an HTTP stack.
+
+use std::fmt::Write as _;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::{metrics, Histogram, JobStat};
+use super::Stage;
+use crate::error::{Error, Result};
+use crate::metrics::Json;
+use crate::runtime::pool::Pool;
+
+/// Render the registry (plus live pool occupancy probes) in the
+/// Prometheus text exposition format.
+pub fn render_prometheus() -> String {
+    let m = metrics();
+    let pool = Pool::global();
+    let mut out = String::with_capacity(4096);
+    let uptime = m.uptime_s();
+    let rounds = m.rounds_total.get();
+    let mut scalar = |name: &str, kind: &str, help: &str, v: f64| {
+        let _ = writeln!(out, "# HELP {name} {help}");
+        let _ = writeln!(out, "# TYPE {name} {kind}");
+        let _ = writeln!(out, "{name} {v}");
+    };
+    scalar("mpamp_uptime_seconds", "gauge", "Seconds since the registry was first touched.", uptime);
+    scalar("mpamp_jobs_running", "gauge", "Jobs currently holding a running slot.", m.jobs_running.get() as f64);
+    scalar("mpamp_jobs_queued", "gauge", "Jobs waiting in the admission queue.", m.jobs_queued.get() as f64);
+    scalar("mpamp_jobs_rejected_total", "counter", "Jobs bounced for capacity.", m.jobs_rejected.get() as f64);
+    scalar("mpamp_jobs_completed_total", "counter", "Jobs finished with a report.", m.jobs_completed.get() as f64);
+    scalar("mpamp_jobs_cancelled_total", "counter", "Jobs cancelled by client or deadline.", m.jobs_cancelled.get() as f64);
+    scalar("mpamp_jobs_failed_total", "counter", "Jobs terminated with an error.", m.jobs_failed.get() as f64);
+    scalar("mpamp_rounds_total", "counter", "Protocol rounds completed process-wide.", rounds as f64);
+    scalar(
+        "mpamp_rounds_per_second",
+        "gauge",
+        "Rounds completed per second of uptime.",
+        if uptime > 0.0 { rounds as f64 / uptime } else { 0.0 },
+    );
+    scalar("mpamp_uplink_bytes_total", "counter", "Metered uplink bytes.", m.uplink_bytes_total.get() as f64);
+    scalar("mpamp_downlink_bytes_total", "counter", "Metered downlink bytes.", m.downlink_bytes_total.get() as f64);
+    scalar("mpamp_sessions_started_total", "counter", "Sessions that entered the round loop.", m.sessions_started.get() as f64);
+    scalar("mpamp_sessions_finished_total", "counter", "Sessions that finished.", m.sessions_finished.get() as f64);
+    scalar("mpamp_pool_threads", "gauge", "Persistent pool worker threads.", pool.threads() as f64);
+    scalar("mpamp_pool_busy_threads", "gauge", "Pool threads currently busy (queue-depth probe).", pool.busy_threads() as f64);
+    scalar("mpamp_pool_tasks_total", "counter", "Tasks dispatched through the pool.", m.pool_tasks_total.get() as f64);
+
+    let jobs = m.jobs();
+    let _ = writeln!(out, "# HELP mpamp_job_rounds Rounds completed per job.");
+    let _ = writeln!(out, "# TYPE mpamp_job_rounds gauge");
+    for (sid, stat) in &jobs {
+        let _ = writeln!(out, "mpamp_job_rounds{} {}", job_labels(*sid, stat), stat.rounds);
+    }
+    let _ = writeln!(out, "# HELP mpamp_job_uplink_bits Metered uplink bits per job.");
+    let _ = writeln!(out, "# TYPE mpamp_job_uplink_bits gauge");
+    for (sid, stat) in &jobs {
+        let _ = writeln!(out, "mpamp_job_uplink_bits{} {}", job_labels(*sid, stat), stat.uplink_bits);
+    }
+
+    let _ = writeln!(out, "# HELP mpamp_stage_latency_us Per-stage span latency (microseconds).");
+    let _ = writeln!(out, "# TYPE mpamp_stage_latency_us histogram");
+    for stage in Stage::ALL {
+        let h = m.stage(stage);
+        let name = stage.as_str();
+        let counts = h.counts();
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            let le = match Histogram::bucket_bound_us(i) {
+                Some(bound) => bound.to_string(),
+                None => "+Inf".to_string(),
+            };
+            let _ = writeln!(out, "mpamp_stage_latency_us_bucket{{stage=\"{name}\",le=\"{le}\"}} {cum}");
+        }
+        let _ = writeln!(out, "mpamp_stage_latency_us_sum{{stage=\"{name}\"}} {}", h.sum_us());
+        let _ = writeln!(out, "mpamp_stage_latency_us_count{{stage=\"{name}\"}} {cum}");
+    }
+    out
+}
+
+fn job_labels(sid: u32, stat: &JobStat) -> String {
+    format!(
+        "{{session=\"{sid}\",state=\"{}\",priority=\"{}\"}}",
+        stat.state.as_str(),
+        if stat.high_priority { "high" } else { "normal" },
+    )
+}
+
+/// Render the registry as a JSON snapshot (the `/metrics.json` body).
+pub fn render_json() -> Json {
+    let m = metrics();
+    let pool = Pool::global();
+    let uptime = m.uptime_s();
+    let rounds = m.rounds_total.get();
+    let jobs = Json::Arr(
+        m.jobs()
+            .iter()
+            .map(|(sid, stat)| {
+                Json::obj()
+                    .set("session", Json::Num(*sid as f64))
+                    .set("state", Json::Str(stat.state.as_str().to_string()))
+                    .set(
+                        "priority",
+                        Json::Str(
+                            if stat.high_priority { "high" } else { "normal" }.to_string(),
+                        ),
+                    )
+                    .set("rounds", Json::Num(stat.rounds as f64))
+                    .set("uplink_bits", Json::Num(stat.uplink_bits as f64))
+            })
+            .collect(),
+    );
+    let stages = Stage::ALL.iter().fold(Json::obj(), |acc, stage| {
+        let h = m.stage(*stage);
+        acc.set(
+            stage.as_str(),
+            Json::obj()
+                .set("count", Json::Num(h.count() as f64))
+                .set("sum_us", Json::Num(h.sum_us() as f64))
+                .set("p50_us", Json::Num(h.quantile_us(0.50) as f64))
+                .set("p90_us", Json::Num(h.quantile_us(0.90) as f64))
+                .set("p99_us", Json::Num(h.quantile_us(0.99) as f64)),
+        )
+    });
+    Json::obj()
+        .set("uptime_s", Json::Num(uptime))
+        .set("jobs_running", Json::Num(m.jobs_running.get() as f64))
+        .set("jobs_queued", Json::Num(m.jobs_queued.get() as f64))
+        .set("jobs_rejected", Json::Num(m.jobs_rejected.get() as f64))
+        .set("jobs_completed", Json::Num(m.jobs_completed.get() as f64))
+        .set("jobs_cancelled", Json::Num(m.jobs_cancelled.get() as f64))
+        .set("jobs_failed", Json::Num(m.jobs_failed.get() as f64))
+        .set("rounds_total", Json::Num(rounds as f64))
+        .set(
+            "rounds_per_s",
+            Json::Num(if uptime > 0.0 { rounds as f64 / uptime } else { 0.0 }),
+        )
+        .set("uplink_bytes_total", Json::Num(m.uplink_bytes_total.get() as f64))
+        .set("downlink_bytes_total", Json::Num(m.downlink_bytes_total.get() as f64))
+        .set("sessions_started", Json::Num(m.sessions_started.get() as f64))
+        .set("sessions_finished", Json::Num(m.sessions_finished.get() as f64))
+        .set(
+            "pool",
+            Json::obj()
+                .set("threads", Json::Num(pool.threads() as f64))
+                .set("busy_threads", Json::Num(pool.busy_threads() as f64))
+                .set("tasks_total", Json::Num(m.pool_tasks_total.get() as f64)),
+        )
+        .set("jobs", jobs)
+        .set("stages", stages)
+}
+
+/// How long a scraper may dribble its request before we give up on it.
+const REQUEST_TIMEOUT: Duration = Duration::from_secs(2);
+/// Accept-loop poll period while idle (checks the shutdown latch).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
+/// Longest request head we accept.
+const MAX_REQUEST: usize = 4096;
+
+/// A tiny HTTP/1.0 metrics endpoint on its own thread.
+///
+/// Routes: `GET /metrics` → Prometheus text, `GET /metrics.json` →
+/// JSON snapshot, `GET /` → route index. Every response closes the
+/// connection. Stop with [`MetricsServer::stop`] (also on `Drop`).
+pub struct MetricsServer {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl MetricsServer {
+    /// Bind `addr` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and
+    /// start serving scrapes on a background thread.
+    pub fn start(addr: &str) -> Result<MetricsServer> {
+        let listener = TcpListener::bind(addr).map_err(|e| {
+            Error::Transport(format!("metrics endpoint bind {addr}: {e}"))
+        })?;
+        let local = listener.local_addr().map_err(|e| {
+            Error::Transport(format!("metrics endpoint local addr: {e}"))
+        })?;
+        listener.set_nonblocking(true).map_err(|e| {
+            Error::Transport(format!("metrics endpoint nonblocking: {e}"))
+        })?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let latch = Arc::clone(&shutdown);
+        let handle = std::thread::Builder::new()
+            .name("mpamp-metrics".into())
+            .spawn(move || accept_loop(listener, latch))
+            .map_err(|e| Error::Transport(format!("metrics endpoint thread: {e}")))?;
+        Ok(MetricsServer { addr: local, shutdown, handle: Some(handle) })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the server thread.
+    pub fn stop(mut self) {
+        self.stop_inner();
+    }
+
+    fn stop_inner(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for MetricsServer {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, shutdown: Arc<AtomicBool>) {
+    loop {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                // Serve inline: scrapes are small, rare, and read a
+                // lock-free registry — no per-connection thread needed.
+                let _ = serve_conn(stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+            Err(_) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                std::thread::sleep(ACCEPT_POLL);
+            }
+        }
+    }
+}
+
+fn serve_conn(mut stream: TcpStream) -> std::io::Result<()> {
+    stream.set_nonblocking(false)?;
+    stream.set_read_timeout(Some(REQUEST_TIMEOUT))?;
+    let mut head = Vec::with_capacity(512);
+    let mut chunk = [0u8; 512];
+    // Read until the blank line ending the request head (we ignore
+    // headers and bodies — only the request line matters).
+    loop {
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            break;
+        }
+        head.extend_from_slice(&chunk[..n]);
+        if head.windows(4).any(|w| w == b"\r\n\r\n") || head.len() >= MAX_REQUEST {
+            break;
+        }
+    }
+    let line = String::from_utf8_lossy(&head);
+    let mut parts = line.split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let path = parts.next().unwrap_or("");
+    let (status, content_type, body) = if method != "GET" {
+        ("405 Method Not Allowed", "text/plain", "GET only\n".to_string())
+    } else {
+        match path {
+            "/metrics" => ("200 OK", "text/plain; version=0.0.4", render_prometheus()),
+            "/metrics.json" | "/json" => {
+                ("200 OK", "application/json", render_json().render())
+            }
+            "/" => (
+                "200 OK",
+                "text/plain",
+                "mpamp metrics endpoint\n/metrics       Prometheus text\n/metrics.json  JSON snapshot\n"
+                    .to_string(),
+            ),
+            _ => ("404 Not Found", "text/plain", "unknown path\n".to_string()),
+        }
+    };
+    let response = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len(),
+    );
+    stream.write_all(response.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_contain_core_metric_families() {
+        let text = render_prometheus();
+        for family in [
+            "mpamp_rounds_total",
+            "mpamp_jobs_running",
+            "mpamp_uplink_bytes_total",
+            "mpamp_pool_threads",
+            "mpamp_stage_latency_us_bucket{stage=\"round\"",
+        ] {
+            assert!(text.contains(family), "missing {family} in:\n{text}");
+        }
+        let snap = render_json();
+        for key in ["uptime_s", "rounds_total", "jobs", "stages", "pool"] {
+            assert!(snap.get(key).is_some(), "missing JSON key {key}");
+        }
+    }
+
+    fn http_get(addr: &str, path: &str) -> (String, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let (head, body) = buf.split_once("\r\n\r\n").expect("response head");
+        (head.to_string(), body.to_string())
+    }
+
+    #[test]
+    fn http_endpoint_serves_text_json_and_404() {
+        let server = MetricsServer::start("127.0.0.1:0").unwrap();
+        let addr = server.addr().to_string();
+        let (head, body) = http_get(&addr, "/metrics");
+        assert!(head.starts_with("HTTP/1.0 200"), "{head}");
+        assert!(body.contains("mpamp_rounds_total"), "{body}");
+        let (head, body) = http_get(&addr, "/metrics.json");
+        assert!(head.starts_with("HTTP/1.0 200"), "{head}");
+        let snap = Json::parse(&body).unwrap();
+        assert!(snap.get("rounds_total").is_some());
+        let (head, _) = http_get(&addr, "/nope");
+        assert!(head.starts_with("HTTP/1.0 404"), "{head}");
+        server.stop();
+    }
+
+    #[test]
+    fn ephemeral_bind_reports_real_port_and_stops_cleanly() {
+        let server = MetricsServer::start("127.0.0.1:0").unwrap();
+        assert_ne!(server.addr().port(), 0);
+        drop(server); // Drop path joins the thread.
+    }
+}

@@ -1,0 +1,417 @@
+//! Structured observability for MP-AMP sessions and the serving daemon.
+//!
+//! Three layers, each usable on its own:
+//!
+//! 1. **Event core** (this module): a cloneable [`Telemetry`] handle
+//!    recording typed [`SpanEvent`]s — one per protocol [`Stage`] per
+//!    round — into a fixed-capacity per-session ring buffer with
+//!    monotonic microsecond timestamps. The handle is threaded through
+//!    [`ProtocolCore`](crate::coordinator::scenario::ProtocolCore), the
+//!    worker loop, and the daemon's job threads; a disabled handle
+//!    ([`Telemetry::off`], the default everywhere) is a single `Option`
+//!    check per round — no clock reads, no locks, no allocation — so
+//!    the steady-state hot path is untouched.
+//! 2. **Process metrics registry** ([`registry`]): process-wide
+//!    counters, gauges, and fixed log-scale-bucket histograms
+//!    aggregating fleet state (jobs running/queued/rejected, rounds,
+//!    bytes uplinked, pool occupancy, per-stage latency quantiles),
+//!    fed by standalone sessions and the daemon alike.
+//! 3. **Exporter** ([`export`]): Prometheus-style text and JSON
+//!    renderings of the registry, an HTTP/1.0 [`MetricsServer`] behind
+//!    `mpamp serve --metrics-listen <addr>`, and the JSONL trace
+//!    writer behind `mpamp trace` / `mpamp run --trace`.
+//!
+//! # Worked example
+//!
+//! Trace a session, then dump its span stream as JSONL — one object
+//! per span, `round` spans carrying the round's wire bits, σ_Q², and
+//! SE-predicted vs empirical MSE:
+//!
+//! ```no_run
+//! use mpamp::config::RunConfig;
+//! use mpamp::telemetry::{self, Stage, Telemetry};
+//! use mpamp::Session;
+//!
+//! let tel = Telemetry::enabled();
+//! let mut session = Session::new(RunConfig::test_small(0.05))?;
+//! session.set_telemetry(tel.clone());
+//! let report = session.run()?;
+//!
+//! let spans = tel.events();
+//! let rounds = spans.iter().filter(|e| e.stage == Stage::Round).count();
+//! assert_eq!(rounds, report.iters.len());
+//! let wire_bits: f64 =
+//!     spans.iter().filter(|e| e.stage == Stage::Round).map(|e| e.bits).sum();
+//! println!("{} spans, {wire_bits} uplink bits", spans.len());
+//! telemetry::write_trace_file("trace.jsonl", &spans)?;
+//! # Ok::<(), mpamp::Error>(())
+//! ```
+//!
+//! Each JSONL line has the fixed schema
+//! `{"stage","t","worker","start_us","dur_us","bits","sigma_q2",
+//! "mse_pred","mse_emp"}`; `worker` is `-1` for fusion-side spans and
+//! the worker id for worker-side ones, and `start_us` is microseconds
+//! since the handle was created (monotonic clock).
+
+pub mod export;
+pub mod registry;
+
+pub use export::{render_json, render_prometheus, MetricsServer};
+pub use registry::{metrics, Counter, Gauge, Histogram, JobState, JobStat, Metrics};
+
+use std::io::Write;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::error::Result;
+use crate::metrics::Json;
+
+/// Default ring capacity of an [`enabled`](Telemetry::enabled) handle:
+/// 6 fusion-side spans per round means room for ~10k rounds before the
+/// ring wraps.
+pub const DEFAULT_CAPACITY: usize = 1 << 16;
+
+/// The typed stages a span can belong to. Fusion-side rounds emit one
+/// span per stage per round; workers emit `Encode` (quantize +
+/// entropy-code + uplink of the round's pending vectors) and `Denoise`
+/// (the local AMP/LC compute serving the broadcast) spans tagged with
+/// their worker id.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Stage {
+    /// Whole-round envelope; its payload fields carry the round's wire
+    /// bits, mean σ_Q², and SE-predicted vs empirical MSE.
+    Round,
+    /// Fusion side: encoding + broadcasting the round command.
+    /// Worker side: coding + uplinking the pending vectors.
+    Encode,
+    /// Fusion side: receiving and decoding the batched uplinks (the
+    /// span's `bits` field is the round's wire bits).
+    Uplink,
+    /// Absorbing the workers' pre-uplink replies.
+    Fusion,
+    /// Fusion side: the scenario's global (denoiser) step.
+    /// Worker side: the local step serving the broadcast.
+    Denoise,
+    /// Per-signal stats → rate directives → stack designs → QuantCmd.
+    Allocator,
+}
+
+impl Stage {
+    /// All stages, in fusion-side round order.
+    pub const ALL: [Stage; 6] = [
+        Stage::Round,
+        Stage::Encode,
+        Stage::Uplink,
+        Stage::Fusion,
+        Stage::Denoise,
+        Stage::Allocator,
+    ];
+
+    /// Stable lowercase name (trace schema + metric labels).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Stage::Round => "round",
+            Stage::Encode => "encode",
+            Stage::Uplink => "uplink",
+            Stage::Fusion => "fusion",
+            Stage::Denoise => "denoise",
+            Stage::Allocator => "allocator",
+        }
+    }
+}
+
+/// One recorded span. Payload fields are zero where a stage has
+/// nothing to report (only `Round` and `Uplink` spans carry bits; only
+/// `Round` spans carry σ_Q² and the MSE pair).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SpanEvent {
+    /// Which stage this span timed.
+    pub stage: Stage,
+    /// Protocol round index.
+    pub t: u32,
+    /// `-1` for fusion-side spans, the worker id otherwise.
+    pub worker: i32,
+    /// Microseconds since the handle was created (monotonic).
+    pub start_us: u64,
+    /// Span duration in microseconds.
+    pub dur_us: u64,
+    /// Wire bits spent (uplink payload bits for `Uplink`/`Round`).
+    pub bits: f64,
+    /// Batch-mean quantization noise σ_Q² (Round spans).
+    pub sigma_q2: f64,
+    /// SE-predicted MSE entering the denoiser (Round spans).
+    pub mse_pred: f64,
+    /// Empirical MSE estimate σ̂_D² (Round spans).
+    pub mse_emp: f64,
+}
+
+/// Fixed-capacity overwrite-oldest ring of spans.
+struct Ring {
+    buf: Vec<SpanEvent>,
+    cap: usize,
+    head: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: SpanEvent) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.head] = ev;
+            self.head = (self.head + 1) % self.cap;
+            self.dropped += 1;
+        }
+    }
+
+    /// Oldest → newest.
+    fn snapshot(&self) -> Vec<SpanEvent> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        out.extend_from_slice(&self.buf[self.head..]);
+        out.extend_from_slice(&self.buf[..self.head]);
+        out
+    }
+}
+
+struct Inner {
+    epoch: Instant,
+    ring: Mutex<Ring>,
+}
+
+/// Cloneable recording handle. [`Telemetry::off`] (also `Default`) is
+/// a true no-op: every recording method is a single `Option` check.
+/// Enabled handles share one ring across clones (fusion + workers of a
+/// session record into the same stream) and additionally feed the
+/// process-wide per-stage latency histograms in [`registry`].
+#[derive(Clone, Default)]
+pub struct Telemetry(Option<Arc<Inner>>);
+
+impl Telemetry {
+    /// The disabled handle — records nothing, costs nothing.
+    pub fn off() -> Self {
+        Telemetry(None)
+    }
+
+    /// An enabled handle with [`DEFAULT_CAPACITY`] span slots.
+    pub fn enabled() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+
+    /// An enabled handle with a custom ring capacity (≥ 1).
+    pub fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(1);
+        Telemetry(Some(Arc::new(Inner {
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring { buf: Vec::new(), cap, head: 0, dropped: 0 }),
+        })))
+    }
+
+    /// Is this handle recording?
+    pub fn is_on(&self) -> bool {
+        self.0.is_some()
+    }
+
+    /// Microseconds since the handle was created; `0` when disabled
+    /// (callers gate on [`is_on`](Telemetry::is_on) first, so the
+    /// disabled path never reads the clock).
+    pub fn clock_us(&self) -> u64 {
+        match &self.0 {
+            Some(inner) => inner.epoch.elapsed().as_micros() as u64,
+            None => 0,
+        }
+    }
+
+    /// Record a fully-populated span (no-op when disabled). Also
+    /// observes the span's duration in the process-wide per-stage
+    /// latency histogram.
+    pub fn record(&self, ev: SpanEvent) {
+        if let Some(inner) = &self.0 {
+            registry::metrics().stage(ev.stage).observe_us(ev.dur_us);
+            inner.ring.lock().expect("telemetry ring poisoned").push(ev);
+        }
+    }
+
+    /// Record a phase span ending now and return the new clock reading
+    /// (the next phase's start). `bits` is the span's wire-bit payload
+    /// (0 for stages that move no uplink bits).
+    pub fn phase(&self, stage: Stage, t: usize, worker: i32, start_us: u64, bits: f64) -> u64 {
+        let now = self.clock_us();
+        self.record(SpanEvent {
+            stage,
+            t: t as u32,
+            worker,
+            start_us,
+            dur_us: now.saturating_sub(start_us),
+            bits,
+            sigma_q2: 0.0,
+            mse_pred: 0.0,
+            mse_emp: 0.0,
+        });
+        now
+    }
+
+    /// Record the whole-round envelope span with its per-round payload
+    /// (wire bits, batch-mean σ_Q², SE-predicted vs empirical MSE).
+    #[allow(clippy::too_many_arguments)]
+    pub fn round(
+        &self,
+        t: usize,
+        start_us: u64,
+        bits: f64,
+        sigma_q2: f64,
+        mse_pred: f64,
+        mse_emp: f64,
+    ) {
+        let now = self.clock_us();
+        self.record(SpanEvent {
+            stage: Stage::Round,
+            t: t as u32,
+            worker: -1,
+            start_us,
+            dur_us: now.saturating_sub(start_us),
+            bits,
+            sigma_q2,
+            mse_pred,
+            mse_emp,
+        });
+    }
+
+    /// Snapshot of the recorded spans, oldest → newest. Empty for a
+    /// disabled handle.
+    pub fn events(&self) -> Vec<SpanEvent> {
+        match &self.0 {
+            Some(inner) => inner.ring.lock().expect("telemetry ring poisoned").snapshot(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Spans overwritten because the ring wrapped.
+    pub fn dropped(&self) -> u64 {
+        match &self.0 {
+            Some(inner) => inner.ring.lock().expect("telemetry ring poisoned").dropped,
+            None => 0,
+        }
+    }
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match &self.0 {
+            Some(_) => write!(f, "Telemetry(on)"),
+            None => write!(f, "Telemetry(off)"),
+        }
+    }
+}
+
+/// One span as a JSON object (the JSONL trace line schema).
+pub fn event_json(ev: &SpanEvent) -> Json {
+    Json::obj()
+        .set("stage", Json::Str(ev.stage.as_str().to_string()))
+        .set("t", Json::Num(ev.t as f64))
+        .set("worker", Json::Num(ev.worker as f64))
+        .set("start_us", Json::Num(ev.start_us as f64))
+        .set("dur_us", Json::Num(ev.dur_us as f64))
+        .set("bits", Json::Num(ev.bits))
+        .set("sigma_q2", Json::Num(ev.sigma_q2))
+        .set("mse_pred", Json::Num(ev.mse_pred))
+        .set("mse_emp", Json::Num(ev.mse_emp))
+}
+
+/// Write a span stream as JSONL (one [`event_json`] object per line).
+pub fn write_trace<W: Write>(w: &mut W, events: &[SpanEvent]) -> Result<()> {
+    for ev in events {
+        writeln!(w, "{}", event_json(ev).render())?;
+    }
+    Ok(())
+}
+
+/// Write a span stream to `path` as JSONL.
+pub fn write_trace_file(path: &str, events: &[SpanEvent]) -> Result<()> {
+    let file = std::fs::File::create(path)?;
+    let mut w = std::io::BufWriter::new(file);
+    write_trace(&mut w, events)?;
+    w.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(stage: Stage, t: u32, start_us: u64) -> SpanEvent {
+        SpanEvent {
+            stage,
+            t,
+            worker: -1,
+            start_us,
+            dur_us: 5,
+            bits: 12.0,
+            sigma_q2: 0.25,
+            mse_pred: 0.5,
+            mse_emp: 0.4,
+        }
+    }
+
+    #[test]
+    fn off_handle_is_inert() {
+        let tel = Telemetry::off();
+        assert!(!tel.is_on());
+        tel.record(ev(Stage::Round, 0, 0));
+        assert!(tel.events().is_empty());
+        assert_eq!(tel.clock_us(), 0);
+        assert_eq!(tel.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_oldest_first() {
+        let tel = Telemetry::with_capacity(4);
+        for t in 0..6u32 {
+            tel.record(ev(Stage::Round, t, t as u64 * 10));
+        }
+        let got = tel.events();
+        assert_eq!(got.len(), 4);
+        assert_eq!(tel.dropped(), 2);
+        let ts: Vec<u32> = got.iter().map(|e| e.t).collect();
+        assert_eq!(ts, vec![2, 3, 4, 5], "oldest → newest after wrap");
+    }
+
+    #[test]
+    fn clones_share_one_ring() {
+        let tel = Telemetry::with_capacity(16);
+        let other = tel.clone();
+        tel.record(ev(Stage::Encode, 0, 1));
+        other.record(ev(Stage::Denoise, 0, 2));
+        assert_eq!(tel.events().len(), 2);
+        assert_eq!(other.events().len(), 2);
+    }
+
+    #[test]
+    fn phase_returns_monotonic_clock() {
+        let tel = Telemetry::with_capacity(16);
+        let m0 = tel.clock_us();
+        let m1 = tel.phase(Stage::Encode, 0, -1, m0, 0.0);
+        let m2 = tel.phase(Stage::Fusion, 0, -1, m1, 0.0);
+        assert!(m1 >= m0 && m2 >= m1);
+        let evs = tel.events();
+        assert_eq!(evs.len(), 2);
+        assert!(evs[0].start_us <= evs[1].start_us);
+    }
+
+    #[test]
+    fn trace_lines_parse_back_with_full_schema() {
+        let tel = Telemetry::with_capacity(8);
+        tel.round(3, 100, 640.0, 0.01, 0.2, 0.19);
+        let mut out = Vec::new();
+        write_trace(&mut out, &tel.events()).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        let line = text.lines().next().unwrap();
+        let obj = Json::parse(line).unwrap();
+        for key in
+            ["stage", "t", "worker", "start_us", "dur_us", "bits", "sigma_q2", "mse_pred", "mse_emp"]
+        {
+            assert!(obj.get(key).is_some(), "missing key {key} in {line}");
+        }
+        assert_eq!(obj.get("stage").and_then(|j| j.as_str()), Some("round"));
+        assert_eq!(obj.get("bits").and_then(|j| j.as_f64()), Some(640.0));
+    }
+}

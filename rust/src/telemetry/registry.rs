@@ -1,0 +1,388 @@
+//! Process-wide metrics registry: lock-free counters and gauges plus
+//! fixed log-scale-bucket histograms, aggregating fleet state across
+//! every session and daemon in the process.
+//!
+//! The registry is a fixed set of well-known metrics behind
+//! [`metrics()`] (a `OnceLock` singleton) rather than a dynamic
+//! name→metric map: every reader and writer touches plain struct
+//! fields, updates are single relaxed atomic ops, and the exporter
+//! can render the whole set without holding any registration lock.
+//! The one guarded structure is the per-job table (a `Mutex` around a
+//! `BTreeMap`), touched only at job state transitions and scrapes —
+//! never on the per-round hot path.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::Stage;
+
+/// Monotonic event counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add `n` events.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current total.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-write-wins instantaneous value.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    fn new() -> Self {
+        Gauge(AtomicU64::new(0))
+    }
+
+    /// Set the current value.
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Bucket count of a latency [`Histogram`]: powers of 4 from 1 µs
+/// (1 µs, 4 µs, …, 4¹⁴ µs ≈ 268 s) plus a final unbounded bucket.
+pub const HIST_BUCKETS: usize = 16;
+
+/// Fixed log-scale (base-4) microsecond latency histogram. Observing
+/// is two relaxed atomic adds; there is no resizing and no lock.
+pub struct Histogram {
+    counts: [AtomicU64; HIST_BUCKETS],
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    fn new() -> Self {
+        Histogram {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_us: AtomicU64::new(0),
+        }
+    }
+
+    /// Upper bound (inclusive, µs) of bucket `i`; `None` for the final
+    /// unbounded bucket.
+    pub fn bucket_bound_us(i: usize) -> Option<u64> {
+        if i + 1 < HIST_BUCKETS {
+            Some(1u64 << (2 * i as u32))
+        } else {
+            None
+        }
+    }
+
+    /// Observe one duration.
+    pub fn observe_us(&self, us: u64) {
+        let mut i = 0usize;
+        while let Some(bound) = Self::bucket_bound_us(i) {
+            if us <= bound {
+                break;
+            }
+            i += 1;
+        }
+        self.counts[i].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Per-bucket counts (racy snapshot).
+    pub fn counts(&self) -> [u64; HIST_BUCKETS] {
+        std::array::from_fn(|i| self.counts[i].load(Ordering::Relaxed))
+    }
+
+    /// Total observations.
+    pub fn count(&self) -> u64 {
+        self.counts().iter().sum()
+    }
+
+    /// Sum of observed durations (µs).
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Quantile estimate (bucket upper bound containing quantile `q`
+    /// of the observations); `0` when empty. The final unbounded
+    /// bucket reports its lower bound.
+    pub fn quantile_us(&self, q: f64) -> u64 {
+        let counts = self.counts();
+        let total: u64 = counts.iter().sum();
+        if total == 0 {
+            return 0;
+        }
+        let target = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_bound_us(i)
+                    .unwrap_or_else(|| 1u64 << (2 * (HIST_BUCKETS as u32 - 2)));
+            }
+        }
+        unreachable!("quantile target exceeds total")
+    }
+}
+
+/// Lifecycle state of a served or traced job in the per-job table.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobState {
+    /// Admitted but waiting for a running slot.
+    Queued,
+    /// Rounds in flight.
+    Running,
+    /// Finished with a report.
+    Done,
+    /// Cancelled by the client (or deadline).
+    Cancelled,
+    /// Terminated with an error.
+    Failed,
+}
+
+impl JobState {
+    /// Stable lowercase name (metric label).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            JobState::Queued => "queued",
+            JobState::Running => "running",
+            JobState::Done => "done",
+            JobState::Cancelled => "cancelled",
+            JobState::Failed => "failed",
+        }
+    }
+
+    /// Has the job reached a terminal state?
+    pub fn is_terminal(self) -> bool {
+        matches!(self, JobState::Done | JobState::Cancelled | JobState::Failed)
+    }
+}
+
+/// Per-job progress row: round count and uplink bits are refreshed
+/// every round by the daemon's progress forwarder, so a scrape
+/// mid-run shows live per-job round progress.
+#[derive(Debug, Clone, Copy)]
+pub struct JobStat {
+    /// Lifecycle state.
+    pub state: JobState,
+    /// Submitted at high priority?
+    pub high_priority: bool,
+    /// Protocol rounds completed.
+    pub rounds: u64,
+    /// Metered uplink bits so far.
+    pub uplink_bits: u64,
+}
+
+/// Keep at most this many rows in the per-job table; oldest terminal
+/// rows are evicted first so a long-lived daemon stays bounded.
+const MAX_JOB_ROWS: usize = 512;
+
+/// The process-wide metric set. Obtain via [`metrics()`].
+pub struct Metrics {
+    epoch: Instant,
+    /// Jobs currently holding a running slot (daemon).
+    pub jobs_running: Gauge,
+    /// Jobs currently waiting in the admission queue (daemon).
+    pub jobs_queued: Gauge,
+    /// Jobs bounced for capacity (daemon).
+    pub jobs_rejected: Counter,
+    /// Jobs finished with a report (daemon).
+    pub jobs_completed: Counter,
+    /// Jobs cancelled by client or deadline (daemon).
+    pub jobs_cancelled: Counter,
+    /// Jobs terminated with an error (daemon).
+    pub jobs_failed: Counter,
+    /// Protocol rounds completed, process-wide (standalone + served).
+    pub rounds_total: Counter,
+    /// Metered uplink bytes, process-wide (counted once per session at
+    /// finish; per-job live bits are in the job table).
+    pub uplink_bytes_total: Counter,
+    /// Metered downlink bytes, process-wide.
+    pub downlink_bytes_total: Counter,
+    /// Sessions that entered the round loop.
+    pub sessions_started: Counter,
+    /// Sessions that finished with a report.
+    pub sessions_finished: Counter,
+    /// Tasks dispatched through the persistent thread pool.
+    pub pool_tasks_total: Counter,
+    stage_round: Histogram,
+    stage_encode: Histogram,
+    stage_uplink: Histogram,
+    stage_fusion: Histogram,
+    stage_denoise: Histogram,
+    stage_allocator: Histogram,
+    jobs: Mutex<BTreeMap<u32, JobStat>>,
+}
+
+impl Metrics {
+    fn new() -> Self {
+        Metrics {
+            epoch: Instant::now(),
+            jobs_running: Gauge::new(),
+            jobs_queued: Gauge::new(),
+            jobs_rejected: Counter::new(),
+            jobs_completed: Counter::new(),
+            jobs_cancelled: Counter::new(),
+            jobs_failed: Counter::new(),
+            rounds_total: Counter::new(),
+            uplink_bytes_total: Counter::new(),
+            downlink_bytes_total: Counter::new(),
+            sessions_started: Counter::new(),
+            sessions_finished: Counter::new(),
+            pool_tasks_total: Counter::new(),
+            stage_round: Histogram::new(),
+            stage_encode: Histogram::new(),
+            stage_uplink: Histogram::new(),
+            stage_fusion: Histogram::new(),
+            stage_denoise: Histogram::new(),
+            stage_allocator: Histogram::new(),
+            jobs: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Seconds since the registry was first touched.
+    pub fn uptime_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// The latency histogram for `stage`.
+    pub fn stage(&self, stage: Stage) -> &Histogram {
+        match stage {
+            Stage::Round => &self.stage_round,
+            Stage::Encode => &self.stage_encode,
+            Stage::Uplink => &self.stage_uplink,
+            Stage::Fusion => &self.stage_fusion,
+            Stage::Denoise => &self.stage_denoise,
+            Stage::Allocator => &self.stage_allocator,
+        }
+    }
+
+    /// Insert (or reset) a job row.
+    pub fn job_insert(&self, session: u32, high_priority: bool, state: JobState) {
+        let mut jobs = self.jobs.lock().expect("job table poisoned");
+        if jobs.len() >= MAX_JOB_ROWS && !jobs.contains_key(&session) {
+            let evict: Vec<u32> = jobs
+                .iter()
+                .filter(|(_, s)| s.state.is_terminal())
+                .map(|(id, _)| *id)
+                .take(jobs.len() + 1 - MAX_JOB_ROWS)
+                .collect();
+            for id in evict {
+                jobs.remove(&id);
+            }
+        }
+        jobs.insert(
+            session,
+            JobStat { state, high_priority, rounds: 0, uplink_bits: 0 },
+        );
+    }
+
+    /// Update a job row in place (no-op if the row was evicted).
+    pub fn job_update(&self, session: u32, f: impl FnOnce(&mut JobStat)) {
+        let mut jobs = self.jobs.lock().expect("job table poisoned");
+        if let Some(stat) = jobs.get_mut(&session) {
+            f(stat);
+        }
+    }
+
+    /// Snapshot of the per-job table, ordered by session id.
+    pub fn jobs(&self) -> Vec<(u32, JobStat)> {
+        self.jobs
+            .lock()
+            .expect("job table poisoned")
+            .iter()
+            .map(|(id, stat)| (*id, *stat))
+            .collect()
+    }
+}
+
+/// The process-wide registry singleton.
+pub fn metrics() -> &'static Metrics {
+    static REGISTRY: OnceLock<Metrics> = OnceLock::new();
+    REGISTRY.get_or_init(Metrics::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_buckets_are_log_scale_and_quantiles_resolve() {
+        let h = Histogram::new();
+        assert_eq!(Histogram::bucket_bound_us(0), Some(1));
+        assert_eq!(Histogram::bucket_bound_us(1), Some(4));
+        assert_eq!(Histogram::bucket_bound_us(2), Some(16));
+        assert_eq!(Histogram::bucket_bound_us(HIST_BUCKETS - 1), None);
+        assert_eq!(h.quantile_us(0.5), 0, "empty histogram");
+        for us in [1u64, 3, 5, 20, 70, 70, 70, 1_000_000] {
+            h.observe_us(us);
+        }
+        assert_eq!(h.count(), 8);
+        assert_eq!(h.sum_us(), 1 + 3 + 5 + 20 + 70 + 70 + 70 + 1_000_000);
+        // p50 lands in the bucket holding the 4th observation (≤ 256 µs).
+        assert!(h.quantile_us(0.5) <= 256);
+        // p99 lands in the bucket holding the largest observation.
+        assert!(h.quantile_us(0.99) >= 1_000_000);
+    }
+
+    #[test]
+    fn oversized_observation_hits_the_unbounded_bucket() {
+        let h = Histogram::new();
+        h.observe_us(u64::MAX / 2);
+        let counts = h.counts();
+        assert_eq!(counts[HIST_BUCKETS - 1], 1);
+        assert!(h.quantile_us(1.0) > 0);
+    }
+
+    #[test]
+    fn job_table_tracks_transitions_and_evicts_terminal_rows() {
+        // A private registry keeps this test independent of the global.
+        let m = Metrics::new();
+        m.job_insert(7, true, JobState::Queued);
+        m.job_update(7, |s| {
+            s.state = JobState::Running;
+            s.rounds = 3;
+            s.uplink_bits = 640;
+        });
+        let jobs = m.jobs();
+        assert_eq!(jobs.len(), 1);
+        assert_eq!(jobs[0].0, 7);
+        assert_eq!(jobs[0].1.state, JobState::Running);
+        assert!(jobs[0].1.high_priority);
+        assert_eq!(jobs[0].1.rounds, 3);
+        // Fill past the cap with terminal rows; inserts keep the table
+        // bounded by evicting the oldest terminal rows.
+        for id in 100..(100 + MAX_JOB_ROWS as u32) {
+            m.job_insert(id, false, JobState::Done);
+        }
+        m.job_insert(9999, false, JobState::Queued);
+        assert!(m.jobs().len() <= MAX_JOB_ROWS);
+        assert!(m.jobs().iter().any(|(id, _)| *id == 9999));
+        // The non-terminal row 7 survives eviction.
+        assert!(m.jobs().iter().any(|(id, _)| *id == 7));
+    }
+
+    #[test]
+    fn counters_and_gauges_are_monotone_and_settable() {
+        let c = Counter::new();
+        c.add(2);
+        c.add(3);
+        assert_eq!(c.get(), 5);
+        let g = Gauge::new();
+        g.set(9);
+        g.set(4);
+        assert_eq!(g.get(), 4);
+    }
+}

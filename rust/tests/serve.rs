@@ -3,8 +3,10 @@
 //! jobs must queue (not drop), and cancellation must free the slot for
 //! the next queued job.
 
+use std::time::{Duration, Instant};
+
 use mpamp::config::{Partitioning, RunConfig, ScheduleKind};
-use mpamp::serve::{Client, Daemon, JobEvent, ServeConfig};
+use mpamp::serve::{Client, Daemon, JobEvent, Priority, ServeConfig};
 use mpamp::{RunReport, Session};
 
 /// The four smoke scenarios: {row, column} × {entropy-coded (default
@@ -171,6 +173,151 @@ fn over_capacity_job_queues_and_cancel_frees_the_slot() {
     // Waiting in the queue must not perturb the result.
     assert_reports_bit_identical("queued job B", &b_standalone, &b_report);
     daemon.shutdown().unwrap();
+}
+
+/// With one running slot, the promotion order IS the start order: a
+/// high-priority job submitted *after* a normal one must start (and
+/// finish) first once the slot frees up — and the queue-jumping must not
+/// perturb either job's result.
+#[test]
+fn high_priority_job_overtakes_queued_normal_job() {
+    let mut serve_cfg = ServeConfig::new("127.0.0.1:0", 6);
+    serve_cfg.max_sessions = 1;
+    serve_cfg.max_queue = 4;
+    let daemon = Daemon::start(serve_cfg).unwrap();
+    let addr = daemon.addr().to_string();
+
+    // Job A holds the only slot.
+    let mut a_cfg = RunConfig::test_small(0.05);
+    a_cfg.iters = 300;
+    a_cfg.seed = 41;
+    let mut a = Client::submit(&addr, &a_cfg).unwrap();
+    assert!(matches!(a.next_event().unwrap(), JobEvent::Started));
+    assert!(matches!(a.next_event().unwrap(), JobEvent::Iter(_)));
+
+    // Normal-priority B queues first...
+    let mut b_cfg = RunConfig::test_small(0.05);
+    b_cfg.iters = 3;
+    b_cfg.seed = 42;
+    let b_standalone = Session::new(b_cfg.clone()).unwrap().run().unwrap();
+    let mut b = Client::submit(&addr, &b_cfg).unwrap();
+    assert_eq!(b.queue_pos(), 1);
+
+    // ...then high-priority C is admitted ahead of it.
+    let mut c_cfg = RunConfig::test_small(0.05);
+    c_cfg.iters = 3;
+    c_cfg.seed = 43;
+    let c_standalone = Session::new(c_cfg.clone()).unwrap().run().unwrap();
+    let mut c = Client::submit_with(&addr, &c_cfg, Priority::High, None).unwrap();
+    assert_eq!(
+        c.queue_pos(),
+        1,
+        "a high-priority job reports position 1 ahead of the normal waiter"
+    );
+
+    // Watch B from its own thread so its Started instant is observed the
+    // moment the daemon sends it.
+    let b_watcher = std::thread::spawn(move || {
+        let mut started_at = None;
+        loop {
+            match b.next_event().unwrap() {
+                JobEvent::Started => started_at = Some(Instant::now()),
+                JobEvent::Iter(_) => {}
+                JobEvent::Report(report) => {
+                    return (started_at.expect("B reported before starting"), report)
+                }
+                other => panic!("job B: unexpected event {other:?}"),
+            }
+        }
+    });
+
+    // Free the slot: C (high) must start before B (normal) despite B's
+    // earlier submission.
+    a.cancel().unwrap();
+    loop {
+        match a.next_event().unwrap() {
+            JobEvent::Iter(_) => {}
+            JobEvent::Cancelled => break,
+            other => panic!("expected cancellation for job A, got {other:?}"),
+        }
+    }
+    let c_started = loop {
+        match c.next_event().unwrap() {
+            JobEvent::Started => break Instant::now(),
+            other => panic!("job C: unexpected event before start: {other:?}"),
+        }
+    };
+    let c_report = loop {
+        match c.next_event().unwrap() {
+            JobEvent::Iter(_) => {}
+            JobEvent::Report(report) => break report,
+            other => panic!("job C: unexpected event {other:?}"),
+        }
+    };
+    let (b_started, b_report) = b_watcher.join().unwrap();
+    // B's start is gated on C's entire run releasing the one slot, so
+    // the ordering check has a full job run of slack in it.
+    assert!(
+        c_started < b_started,
+        "high-priority C must take the freed slot before normal B"
+    );
+    assert_reports_bit_identical("overtaken job B", &b_standalone, &b_report);
+    assert_reports_bit_identical("overtaking job C", &c_standalone, &c_report);
+    daemon.shutdown().unwrap();
+}
+
+/// Satellite regression: a daemon that accepts a job and then goes
+/// permanently silent must not hang the client forever — the handle's
+/// read deadline expires into a session-tagged [`mpamp::Error::Transport`].
+#[test]
+fn client_read_deadline_surfaces_a_mute_daemon_as_transport_error() {
+    use std::io::{Read, Write};
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // A protocol-faithful but mute daemon: read the hello and the submit
+    // frame, send J_ACCEPTED {session=42, pos=0}, then never speak again
+    // while holding the socket open.
+    let mute_daemon = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut hello = [0u8; 5];
+        s.read_exact(&mut hello).unwrap();
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len).unwrap();
+        let mut frame = vec![0u8; u32::from_le_bytes(len) as usize];
+        s.read_exact(&mut frame).unwrap();
+        let mut accepted = Vec::new();
+        accepted.extend_from_slice(&9u32.to_le_bytes()); // kind + 2×u32
+        accepted.push(3); // J_ACCEPTED
+        accepted.extend_from_slice(&42u32.to_le_bytes());
+        accepted.extend_from_slice(&0u32.to_le_bytes());
+        s.write_all(&accepted).unwrap();
+        // Outlive the client's deadline without closing the socket.
+        std::thread::sleep(Duration::from_millis(1500));
+    });
+
+    let cfg = RunConfig::test_small(0.05);
+    let mut job = Client::submit_with(
+        &addr,
+        &cfg,
+        Priority::Normal,
+        Some(Duration::from_millis(200)),
+    )
+    .unwrap();
+    assert_eq!(job.session_id(), 42);
+    let started = Instant::now();
+    let err = match job.next_event() {
+        Err(e) => e.to_string(),
+        Ok(ev) => panic!("expected a read timeout, got event {ev:?}"),
+    };
+    assert!(
+        started.elapsed() < Duration::from_secs(30),
+        "timeout did not bound the read"
+    );
+    assert!(err.contains("timed out"), "unexpected error: {err}");
+    assert!(err.contains("session 42"), "missing session context: {err}");
+    assert!(err.contains("client"), "missing role context: {err}");
+    mute_daemon.join().unwrap();
 }
 
 #[test]

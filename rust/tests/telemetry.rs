@@ -1,0 +1,316 @@
+//! Integration tests for `mpamp::telemetry`: attaching a recording
+//! handle must never change the math (bit-identical reports across
+//! partitionings and compression stacks), the span stream must pin the
+//! protocol's round structure, the JSONL trace schema must round-trip,
+//! and a served fleet must surface live state through the registry and
+//! the HTTP metrics endpoint.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use mpamp::config::{Partitioning, RunConfig, ScheduleKind};
+use mpamp::metrics::Json;
+use mpamp::serve::{Client, Daemon, JobEvent, Priority, ServeConfig};
+use mpamp::telemetry::{self, JobState, MetricsServer, Stage, Telemetry};
+use mpamp::{RunReport, Session};
+
+/// The four invariance scenarios: {row, column} × {entropy-coded
+/// (default ecsq.range under BT), uncompressed}.
+fn scenario_configs() -> Vec<RunConfig> {
+    let mut cfgs = Vec::new();
+    for (partitioning, raw, seed) in [
+        (Partitioning::Row, false, 515),
+        (Partitioning::Row, true, 626),
+        (Partitioning::Column, false, 737),
+        (Partitioning::Column, true, 848),
+    ] {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.partitioning = partitioning;
+        cfg.seed = seed;
+        if raw {
+            cfg.schedule = ScheduleKind::Uncompressed;
+        }
+        cfgs.push(cfg);
+    }
+    cfgs
+}
+
+/// Everything deterministic must match to the bit; `wall_s` is the one
+/// nondeterministic field and is excluded.
+fn assert_reports_bit_identical(label: &str, want: &RunReport, got: &RunReport) {
+    assert_eq!(want.iters.len(), got.iters.len(), "{label}: iteration count");
+    for (t, (w, g)) in want.iters.iter().zip(&got.iters).enumerate() {
+        assert_eq!(
+            w.sdr_db.to_bits(),
+            g.sdr_db.to_bits(),
+            "{label}: sdr_db differs at t={t}"
+        );
+        assert_eq!(
+            w.sigma_d2_hat.to_bits(),
+            g.sigma_d2_hat.to_bits(),
+            "{label}: sigma_d2_hat differs at t={t}"
+        );
+        assert_eq!(
+            w.rate_wire.to_bits(),
+            g.rate_wire.to_bits(),
+            "{label}: rate_wire differs at t={t}"
+        );
+    }
+    for (sig, (wx, gx)) in want.final_xs.iter().zip(&got.final_xs).enumerate() {
+        for (i, (w, g)) in wx.iter().zip(gx).enumerate() {
+            assert_eq!(
+                w.to_bits(),
+                g.to_bits(),
+                "{label}: final_x[{sig}][{i}] differs"
+            );
+        }
+    }
+    assert_eq!(
+        want.transport_uplink_bits, got.transport_uplink_bits,
+        "{label}: uplink byte accounting"
+    );
+    assert_eq!(
+        want.transport_downlink_bits, got.transport_downlink_bits,
+        "{label}: downlink byte accounting"
+    );
+}
+
+#[test]
+fn telemetry_on_is_bit_identical_to_telemetry_off() {
+    for cfg in scenario_configs() {
+        let label = format!("{} / {:?}", cfg.partitioning.as_str(), cfg.schedule);
+        let plain = Session::new(cfg.clone()).unwrap().run().unwrap();
+        let tel = Telemetry::enabled();
+        let mut traced_session = Session::new(cfg).unwrap();
+        traced_session.set_telemetry(tel.clone());
+        let traced = traced_session.run().unwrap();
+        assert_reports_bit_identical(&label, &plain, &traced);
+        assert!(!tel.events().is_empty(), "{label}: no spans recorded");
+    }
+}
+
+#[test]
+fn span_stream_pins_the_round_structure() {
+    let cfg = RunConfig::test_small(0.05);
+    let p = cfg.p;
+    let tel = Telemetry::enabled();
+    let mut session = Session::new(cfg).unwrap();
+    session.set_telemetry(tel.clone());
+    let report = session.run().unwrap();
+    let rounds = report.iters.len();
+    assert_eq!(rounds, 6, "test_small runs its configured 6 iterations");
+
+    let spans = tel.events();
+    assert_eq!(tel.dropped(), 0, "default ring must not wrap at this scale");
+    let count = |stage: Stage, fusion: bool| {
+        spans
+            .iter()
+            .filter(|e| e.stage == stage && (e.worker < 0) == fusion)
+            .count()
+    };
+    // Fusion side: one span per stage per round.
+    for stage in [
+        Stage::Round,
+        Stage::Encode,
+        Stage::Fusion,
+        Stage::Allocator,
+        Stage::Uplink,
+        Stage::Denoise,
+    ] {
+        assert_eq!(
+            count(stage, true),
+            rounds,
+            "fusion-side {} span count",
+            stage.as_str()
+        );
+    }
+    // Worker side: every worker serves one broadcast (denoise) and one
+    // QuantCmd (encode) per round.
+    assert_eq!(count(Stage::Encode, false), p * rounds, "worker encode spans");
+    assert_eq!(count(Stage::Denoise, false), p * rounds, "worker denoise spans");
+    assert_eq!(spans.len(), 6 * rounds + 2 * p * rounds, "total span count");
+
+    // Round envelopes come out in order, one per protocol round, and the
+    // fusion-side subsequence is monotonic in start time (single thread).
+    let round_ts: Vec<u32> = spans
+        .iter()
+        .filter(|e| e.stage == Stage::Round)
+        .map(|e| e.t)
+        .collect();
+    assert_eq!(round_ts, (0..rounds as u32).collect::<Vec<_>>());
+    let fusion_starts: Vec<u64> =
+        spans.iter().filter(|e| e.worker < 0).map(|e| e.start_us).collect();
+    assert!(
+        fusion_starts.windows(2).all(|w| w[0] <= w[1]),
+        "fusion-side spans must be recorded in monotonic start order"
+    );
+
+    // Per round, the envelope's bits equal the uplink stage's bits; the
+    // sum across rounds is the session's uplink payload byte metric.
+    for t in 0..rounds as u32 {
+        let round_bits = spans
+            .iter()
+            .find(|e| e.stage == Stage::Round && e.t == t)
+            .unwrap()
+            .bits;
+        let uplink_bits = spans
+            .iter()
+            .find(|e| e.stage == Stage::Uplink && e.t == t)
+            .unwrap()
+            .bits;
+        assert_eq!(round_bits.to_bits(), uplink_bits.to_bits(), "bits at t={t}");
+        assert!(round_bits > 0.0, "round {t} moved no uplink bits");
+    }
+    let bits_sum: f64 =
+        spans.iter().filter(|e| e.stage == Stage::Round).map(|e| e.bits).sum();
+    let payload_bytes = report.uplink_payload_bytes() as f64;
+    assert!(
+        (bits_sum / 8.0 - payload_bytes).abs() <= 1.0,
+        "trace bits ({bits_sum}) disagree with report payload bytes ({payload_bytes})"
+    );
+    // Round spans carry the σ_Q² / MSE payload; empirical MSE mirrors
+    // the per-iteration record's σ̂_D².
+    for (t, rec) in report.iters.iter().enumerate() {
+        let env = spans
+            .iter()
+            .find(|e| e.stage == Stage::Round && e.t == t as u32)
+            .unwrap();
+        assert_eq!(env.mse_emp.to_bits(), rec.sigma_d2_hat.to_bits());
+        assert_eq!(env.sigma_q2.to_bits(), rec.sigma_q2.to_bits());
+        assert!(env.mse_pred > 0.0, "round {t} missing SE-predicted MSE");
+    }
+}
+
+#[test]
+fn trace_jsonl_schema_round_trips() {
+    let tel = Telemetry::enabled();
+    let mut session = Session::new(RunConfig::test_small(0.05)).unwrap();
+    session.set_telemetry(tel.clone());
+    session.run().unwrap();
+    let spans = tel.events();
+
+    let mut out = Vec::new();
+    telemetry::write_trace(&mut out, &spans).unwrap();
+    let text = String::from_utf8(out).unwrap();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), spans.len(), "one JSONL line per span");
+    let stage_names: Vec<&str> = Stage::ALL.iter().map(|s| s.as_str()).collect();
+    for (i, line) in lines.iter().enumerate() {
+        let obj = Json::parse(line).unwrap_or_else(|e| panic!("line {i}: {e}"));
+        for key in [
+            "stage", "t", "worker", "start_us", "dur_us", "bits", "sigma_q2",
+            "mse_pred", "mse_emp",
+        ] {
+            assert!(obj.get(key).is_some(), "line {i} missing key {key}");
+        }
+        let stage = obj.get("stage").and_then(|j| j.as_str()).unwrap();
+        assert!(stage_names.contains(&stage), "line {i}: unknown stage {stage}");
+        assert_eq!(
+            obj.get("stage").and_then(|j| j.as_str()),
+            Some(spans[i].stage.as_str()),
+            "line {i}: stage order preserved"
+        );
+    }
+}
+
+fn http_get(addr: &str, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    write!(s, "GET {path} HTTP/1.0\r\nHost: test\r\n\r\n").unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").expect("response head");
+    (head.to_string(), body.to_string())
+}
+
+/// The only test in this binary that starts a daemon, so the process
+/// registry's job table and jobs_* gauges belong to it exclusively
+/// (standalone sessions in the other tests touch only round/session
+/// counters and stage histograms).
+#[test]
+fn served_jobs_surface_in_registry_and_metrics_endpoint() {
+    let reg = mpamp::telemetry::metrics();
+    let completed0 = reg.jobs_completed.get();
+    let cancelled0 = reg.jobs_cancelled.get();
+
+    let daemon = Daemon::start(ServeConfig::new("127.0.0.1:0", 6)).unwrap();
+    let addr = daemon.addr().to_string();
+    let server = MetricsServer::start("127.0.0.1:0").unwrap();
+    let maddr = server.addr().to_string();
+
+    // A long-running job holds a slot while we scrape mid-run.
+    let mut long_cfg = RunConfig::test_small(0.05);
+    long_cfg.iters = 300;
+    long_cfg.seed = 31;
+    let mut long_job = Client::submit(&addr, &long_cfg).unwrap();
+    let long_sid = long_job.session_id();
+    assert!(matches!(long_job.next_event().unwrap(), JobEvent::Started));
+    assert!(matches!(long_job.next_event().unwrap(), JobEvent::Iter(_)));
+
+    let (head, body) = http_get(&maddr, "/metrics");
+    assert!(head.starts_with("HTTP/1.0 200"), "{head}");
+    assert!(body.contains("mpamp_jobs_running 1"), "running gauge:\n{body}");
+    let running_row =
+        format!("mpamp_job_rounds{{session=\"{long_sid}\",state=\"running\",priority=\"normal\"}}");
+    assert!(body.contains(&running_row), "missing {running_row} in:\n{body}");
+    assert!(body.contains("mpamp_rounds_total"), "{body}");
+    assert!(body.contains("mpamp_stage_latency_us_bucket{stage=\"round\""), "{body}");
+
+    // A fast high-priority job shares the fleet and completes.
+    let mut fast_cfg = RunConfig::test_small(0.05);
+    fast_cfg.iters = 3;
+    fast_cfg.seed = 32;
+    let fast_job =
+        Client::submit_with(&addr, &fast_cfg, Priority::High, None).unwrap();
+    let fast_sid = fast_job.session_id();
+    let report = fast_job.await_report().unwrap();
+    assert_eq!(report.iters.len(), 3);
+
+    assert!(reg.jobs_completed.get() >= completed0 + 1, "completed counter");
+    let (_, row) = reg
+        .jobs()
+        .into_iter()
+        .find(|(sid, _)| *sid == fast_sid)
+        .expect("fast job missing from the job table");
+    assert_eq!(row.state, JobState::Done);
+    assert!(row.high_priority, "priority class recorded");
+    assert_eq!(row.rounds, 3, "per-job round progress");
+    assert!(row.uplink_bits > 0, "per-job uplink accounting");
+    assert!(
+        row.uplink_bits <= report.transport_uplink_bits,
+        "job row bits ({}) cannot exceed the metered transport total ({})",
+        row.uplink_bits,
+        report.transport_uplink_bits,
+    );
+    let (_, body) = http_get(&maddr, "/metrics");
+    assert!(
+        body.contains(&format!(
+            "mpamp_job_uplink_bits{{session=\"{fast_sid}\",state=\"done\",priority=\"high\"}}"
+        )),
+        "{body}"
+    );
+
+    // JSON snapshot parses and carries the job table.
+    let (head, body) = http_get(&maddr, "/metrics.json");
+    assert!(head.starts_with("HTTP/1.0 200"), "{head}");
+    let snap = Json::parse(&body).unwrap();
+    assert!(snap.get("rounds_total").and_then(|j| j.as_f64()).unwrap_or(0.0) >= 3.0);
+    assert!(snap.get("jobs").is_some() && snap.get("stages").is_some());
+
+    // Cancelling the long job drains the fleet and zeroes the gauge.
+    long_job.cancel().unwrap();
+    loop {
+        match long_job.next_event().unwrap() {
+            JobEvent::Iter(_) => {}
+            JobEvent::Cancelled => break,
+            other => panic!("expected cancellation for the long job, got {other:?}"),
+        }
+    }
+    assert!(reg.jobs_cancelled.get() >= cancelled0 + 1, "cancel counter");
+    let (_, body) = http_get(&maddr, "/metrics");
+    assert!(body.contains("mpamp_jobs_running 0"), "drained gauge:\n{body}");
+
+    server.stop();
+    daemon.shutdown().unwrap();
+}
