@@ -1,0 +1,120 @@
+//! Ablation A8: recovery quality vs **injected fault rate** — how much
+//! SDR an elastic 4-of-6 session gives up as scripted faults (worker
+//! kills, dropped uplinks, corrupt frames, delayed broadcasts) eat into
+//! the quorum. The fault plans are canned, not seeded, so every point
+//! on the curve is deterministic and the records can be gated like any
+//! other bench family.
+//!
+//! Emits `results/ablation_faults.csv` plus machine-readable JSON
+//! records (merged into `BENCH_pr.json` by the CI `bench-smoke` job).
+//!
+//! Flags (after `cargo bench --bench ablation_faults --`):
+//! * `--smoke`       cap the sessions at 4 iterations (the CI job)
+//! * `--json <path>` write the JSON records to `<path>`
+
+use std::sync::Arc;
+
+use mpamp::bench_util::{write_bench_json, BenchRecord};
+use mpamp::config::RunConfig;
+use mpamp::coordinator::fault::FaultPlan;
+use mpamp::metrics::Csv;
+use mpamp::SessionBuilder;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let json_path = args
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| args.get(i + 1))
+        .cloned();
+
+    let mut base = RunConfig::test_small(0.05);
+    base.seed = 4242;
+    if smoke {
+        base.iters = 4;
+    }
+    // Elastic 4-of-6: two workers of slack, so every plan below is
+    // absorbable (at most one dead worker plus one transient per round).
+    base.min_workers = 4;
+    base.round_deadline_ms = 500;
+
+    // Escalating canned plans: one fault kind at a time, never more
+    // than two workers missing from any single round's fusion.
+    let plans: [(usize, &str); 4] = [
+        (0, ""),
+        (1, "kill:w=1,t=1"),
+        (2, "kill:w=1,t=1;drop:w=3,t=2"),
+        (4, "kill:w=1,t=1;drop:w=3,t=2;corrupt:w=5,t=3;delay:w=0,t=3,ms=25"),
+    ];
+    let slots = (base.p * base.iters) as f64;
+
+    let mut csv = Csv::new(&[
+        "n_faults",
+        "fault_rate",
+        "plan",
+        "final_sdr_db",
+        "uplink_bits_per_signal_element",
+        "sdr_db_per_bit",
+    ]);
+    let mut records = Vec::new();
+    println!(
+        "SDR vs injected fault rate (elastic {}-of-{} fleet, N={} M={} \
+         T={} ε=0.05):",
+        base.min_workers, base.p, base.n, base.m, base.iters
+    );
+    println!(
+        "{:>8} {:>11} {:>16} {:>11} {:>12}",
+        "faults", "fault rate", "bits/signal-el", "SDR (dB)", "SDR/bit"
+    );
+    for (nf, spec) in plans {
+        let plan = if spec.is_empty() {
+            FaultPlan::none()
+        } else {
+            FaultPlan::parse(spec)?
+        };
+        let r = SessionBuilder::from_config(base.clone())
+            .fault_plan(Arc::new(plan))
+            .build()?
+            .run()?;
+        let fault_rate = nf as f64 / slots;
+        let sdr = r.final_sdr_db();
+        let bits_per_signal_el =
+            (r.uplink_payload_bytes() * 8) as f64 / r.dims.0 as f64;
+        let sdr_per_bit = if bits_per_signal_el > 0.0 { sdr / bits_per_signal_el } else { 0.0 };
+        assert!(
+            sdr.is_finite(),
+            "fault plan [{spec}] must be absorbed, got SDR={sdr}"
+        );
+        println!(
+            "{nf:>8} {fault_rate:>11.4} {bits_per_signal_el:>16.2} \
+             {sdr:>11.2} {sdr_per_bit:>12.4}"
+        );
+        csv.push_raw(vec![
+            format!("{nf}"),
+            format!("{fault_rate:.6}"),
+            spec.to_string(),
+            format!("{sdr:.6}"),
+            format!("{bits_per_signal_el:.6}"),
+            format!("{sdr_per_bit:.6}"),
+        ]);
+        records.push(BenchRecord {
+            name: format!("ablation faults/{nf}"),
+            wall_s: r.wall_s,
+            bytes_uplinked: r.uplink_payload_bytes(),
+            signals_per_s: r.signals_per_s(),
+            sdr_per_bit: Some(sdr_per_bit),
+            rounds_per_s: None,
+            gflops: None,
+            jobs_per_s: None,
+        });
+    }
+    csv.write("results/ablation_faults.csv")?;
+    if let Some(path) = &json_path {
+        write_bench_json(path, &records)?;
+        println!("→ results/ablation_faults.csv + {path}");
+    } else {
+        println!("→ results/ablation_faults.csv");
+    }
+    Ok(())
+}

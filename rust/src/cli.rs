@@ -158,6 +158,9 @@ SERVING OPTIONS:
     --deadline-s <s>         (serve) Per-job wall-clock deadline in
                              seconds (over-deadline jobs stop after the
                              current round and still report)
+    --priority-age-s <s>     (serve) Priority aging: promote a normal
+                             job to the high band once it has waited <s>
+                             seconds (default: strict two-level priority)
     --metrics-listen <addr>  (serve) Also serve live process metrics over
                              HTTP: Prometheus text at /metrics, a JSON
                              snapshot at /metrics.json

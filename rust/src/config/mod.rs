@@ -159,6 +159,18 @@ pub struct RunConfig {
     pub artifact_dir: String,
     /// Transport kind.
     pub transport: TransportKind,
+    /// Elastic K-of-P floor: the minimum number of live worker uplinks a
+    /// fusion round may proceed on. `0` disables elasticity — every
+    /// round blocks for all `P` replies (the paper's hard barrier).
+    /// With `K < P` live workers the fused sum is rescaled by `P/K` and
+    /// the missing shard mass is folded into the quantization-noise term
+    /// of the state evolution (see `coordinator::scenario`).
+    pub min_workers: usize,
+    /// Per-round reply deadline in milliseconds for elastic sessions
+    /// (how long the fusion center waits on each worker before moving
+    /// on without it). Required (> 0) whenever `min_workers` is set,
+    /// rejected without it.
+    pub round_deadline_ms: u64,
     /// RD substrate tuning.
     pub rd: RdConfig,
 }
@@ -194,6 +206,8 @@ impl RunConfig {
             engine: EngineKind::Rust,
             artifact_dir: "artifacts".into(),
             transport: TransportKind::InProc,
+            min_workers: 0,
+            round_deadline_ms: 0,
             rd: RdConfig::default(),
         }
     }
@@ -259,6 +273,24 @@ impl RunConfig {
                     ));
                 }
             }
+        }
+        if self.min_workers > self.p {
+            return Err(Error::Config(format!(
+                "elastic.min_workers={} must not exceed P={}",
+                self.min_workers, self.p
+            )));
+        }
+        if self.min_workers > 0 && self.round_deadline_ms == 0 {
+            return Err(Error::Config(
+                "elastic.min_workers requires elastic.round_deadline_ms > 0 (a \
+                 K-of-P floor is meaningless without a round deadline)"
+                    .into(),
+            ));
+        }
+        if self.min_workers == 0 && self.round_deadline_ms > 0 {
+            return Err(Error::Config(
+                "elastic.round_deadline_ms requires elastic.min_workers ≥ 1".into(),
+            ));
         }
         match &self.schedule {
             ScheduleKind::Fixed { bits } if *bits <= 0.0 => {
@@ -379,6 +411,12 @@ impl RunConfig {
                 other => return Err(Error::Config(format!("unknown transport '{other}'"))),
             };
         }
+        if let Some(v) = t.get("elastic.min_workers") {
+            c.min_workers = req_usize(v, "elastic.min_workers")?;
+        }
+        if let Some(v) = t.get("elastic.round_deadline_ms") {
+            c.round_deadline_ms = req_usize(v, "elastic.round_deadline_ms")? as u64;
+        }
         if let Some(v) = t.get("schedule.kind") {
             c.schedule = match req_str(v, "schedule.kind")? {
                 "uncompressed" => ScheduleKind::Uncompressed,
@@ -496,6 +534,11 @@ impl RunConfig {
             TransportKind::Tcp => "tcp",
         };
         t.insert("transport".into(), Value::Str(transport.into()));
+        t.insert("elastic.min_workers".into(), Value::Int(self.min_workers as i64));
+        t.insert(
+            "elastic.round_deadline_ms".into(),
+            Value::Int(self.round_deadline_ms as i64),
+        );
         match &self.schedule {
             ScheduleKind::Uncompressed => {
                 t.insert("schedule.kind".into(), Value::Str("uncompressed".into()));
@@ -544,6 +587,8 @@ pub const KNOWN_KEYS: &[&str] = &[
     "compressor",
     "engine",
     "transport",
+    "elastic.min_workers",
+    "elastic.round_deadline_ms",
     "schedule.kind",
     "schedule.bits",
     "schedule.ratio_max",
@@ -758,6 +803,28 @@ mod tests {
         // ...including typos inside sections.
         let t = toml::parse("[schedule]\nkindd = \"dp\"").unwrap();
         assert!(RunConfig::from_table(&t).is_err());
+    }
+
+    #[test]
+    fn elastic_knobs_parse_validate_and_roundtrip() {
+        let t = toml::parse("[elastic]\nmin_workers = 20\nround_deadline_ms = 250").unwrap();
+        let c = RunConfig::from_table(&t).unwrap();
+        assert_eq!((c.min_workers, c.round_deadline_ms), (20, 250));
+        let mut enc = Table::new();
+        c.encode_into(&mut enc);
+        assert_eq!(RunConfig::from_table(&enc).unwrap(), c);
+        // A floor without a deadline (and vice versa) fails loudly.
+        let t = toml::parse("elastic.min_workers = 20").unwrap();
+        let err = RunConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("round_deadline_ms"), "{err}");
+        let t = toml::parse("elastic.round_deadline_ms = 250").unwrap();
+        let err = RunConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("min_workers"), "{err}");
+        // K must not exceed P.
+        let t =
+            toml::parse("[elastic]\nmin_workers = 31\nround_deadline_ms = 250").unwrap();
+        let err = RunConfig::from_table(&t).unwrap_err().to_string();
+        assert!(err.contains("must not exceed P"), "{err}");
     }
 
     #[test]

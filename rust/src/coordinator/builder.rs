@@ -20,6 +20,7 @@ use std::sync::Arc;
 use crate::config::{
     paper_iters, EngineKind, Partitioning, RdConfig, RunConfig, ScheduleKind, TransportKind,
 };
+use crate::coordinator::fault::FaultPlan;
 use crate::coordinator::session::Session;
 use crate::error::Result;
 use crate::signal::{Batch, BernoulliGauss, Instance};
@@ -31,6 +32,7 @@ pub struct SessionBuilder {
     cfg: RunConfig,
     instance: Option<Arc<Instance>>,
     batch_data: Option<Arc<Batch>>,
+    fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl SessionBuilder {
@@ -41,6 +43,7 @@ impl SessionBuilder {
             cfg: RunConfig::paper_default(eps),
             instance: None,
             batch_data: None,
+            fault_plan: None,
         }
     }
 
@@ -50,12 +53,13 @@ impl SessionBuilder {
             cfg: RunConfig::test_small(eps),
             instance: None,
             batch_data: None,
+            fault_plan: None,
         }
     }
 
     /// Start from an existing config (e.g. loaded from a file / CLI).
     pub fn from_config(cfg: RunConfig) -> Self {
-        SessionBuilder { cfg, instance: None, batch_data: None }
+        SessionBuilder { cfg, instance: None, batch_data: None, fault_plan: None }
     }
 
     // ---- problem shape ----
@@ -214,6 +218,33 @@ impl SessionBuilder {
         self
     }
 
+    // ---- fault tolerance ----
+
+    /// Elastic K-of-P floor: the minimum number of live worker uplinks a
+    /// fusion round may proceed on (0 = disabled, the default). Requires
+    /// [`round_deadline_ms`](Self::round_deadline_ms) — checked at build.
+    pub fn min_workers(mut self, k: usize) -> Self {
+        self.cfg.min_workers = k;
+        self
+    }
+
+    /// Per-round reply deadline in milliseconds for elastic sessions:
+    /// how long the fusion center waits on each worker before proceeding
+    /// without it (rescaling the partial fusion by `P/K`).
+    pub fn round_deadline_ms(mut self, ms: u64) -> Self {
+        self.cfg.round_deadline_ms = ms;
+        self
+    }
+
+    /// Install a deterministic [`FaultPlan`] on the session's worker
+    /// links: uplink drops, delays, kills, and corruptions fire at the
+    /// planned `(worker, round)` points on any transport. Measurement
+    /// and test machinery — an empty plan leaves the session bit-identical.
+    pub fn fault_plan(mut self, plan: Arc<FaultPlan>) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     // ---- data ----
 
     /// Run on this problem instance instead of generating one from the
@@ -247,16 +278,22 @@ impl SessionBuilder {
 
     /// Validate everything and construct the [`Session`].
     pub fn build(self) -> Result<Session> {
-        match (self.batch_data, self.instance) {
-            (Some(_), Some(_)) => Err(crate::error::Error::Config(
-                "both instance() and signal_batch() were set; supply exactly \
-                 one data source"
-                    .into(),
-            )),
-            (Some(batch), None) => Session::with_batch(self.cfg, batch),
-            (None, Some(inst)) => Session::with_instance(self.cfg, inst),
-            (None, None) => Session::new(self.cfg),
+        let mut session = match (self.batch_data, self.instance) {
+            (Some(_), Some(_)) => {
+                return Err(crate::error::Error::Config(
+                    "both instance() and signal_batch() were set; supply exactly \
+                     one data source"
+                        .into(),
+                ))
+            }
+            (Some(batch), None) => Session::with_batch(self.cfg, batch)?,
+            (None, Some(inst)) => Session::with_instance(self.cfg, inst)?,
+            (None, None) => Session::new(self.cfg)?,
+        };
+        if let Some(plan) = self.fault_plan {
+            session.set_fault_plan(plan);
         }
+        Ok(session)
     }
 }
 
@@ -382,6 +419,24 @@ mod tests {
             .build()
             .unwrap_err();
         assert!(err.to_string().contains("exactly"), "{err}");
+    }
+
+    #[test]
+    fn elastic_setters_compose_and_validate() {
+        let cfg = SessionBuilder::test_small(0.05)
+            .min_workers(4)
+            .round_deadline_ms(100)
+            .config()
+            .unwrap();
+        assert_eq!((cfg.min_workers, cfg.round_deadline_ms), (4, 100));
+        // A floor without a deadline fails at config time.
+        assert!(SessionBuilder::test_small(0.05).min_workers(4).config().is_err());
+        // K > P fails at config time.
+        assert!(SessionBuilder::test_small(0.05)
+            .min_workers(7)
+            .round_deadline_ms(100)
+            .config()
+            .is_err());
     }
 
     #[test]

@@ -1,0 +1,470 @@
+//! Deterministic fault injection for MP-AMP transports.
+//!
+//! Every degradation path the fault-tolerant protocol must survive —
+//! dropped uplinks, slow workers, severed connections, corrupted frames
+//! — is reproducible from a [`FaultPlan`]: a plain list of
+//! `(kind, worker, round)` events, either written out explicitly
+//! ([`FaultPlan::parse`]) or drawn from a seed
+//! ([`FaultPlan::generate`]), so a chaos test that fails in CI replays
+//! bit-for-bit on a laptop.
+//!
+//! A plan is installed on a worker-side transport by wrapping its
+//! [`Channel`] in a [`FaultChannel`]
+//! (via [`Endpoint::wrap_channel`](crate::coordinator::transport::Endpoint::wrap_channel)
+//! — [`Session`](crate::coordinator::session::Session) does this
+//! automatically when a plan is set on the builder), or consulted
+//! directly by the daemon's fleet loop, which simulates kills by
+//! severing the real mux socket so the reconnect path is exercised.
+//!
+//! # Worked example
+//!
+//! Kill worker 1 at round 2 and delay worker 0 by 40 ms at round 1,
+//! then run an elastic session that must absorb both:
+//!
+//! ```no_run
+//! use std::sync::Arc;
+//! use mpamp::coordinator::fault::FaultPlan;
+//! use mpamp::SessionBuilder;
+//!
+//! let plan = FaultPlan::parse("kill:w=1,t=2;delay:w=0,t=1,ms=40")?;
+//! let report = SessionBuilder::test_small(0.05)
+//!     .min_workers(4)              // K: proceed on any 4 of the 6 uplinks
+//!     .round_deadline_ms(100)      // per-round reply deadline
+//!     .fault_plan(Arc::new(plan))
+//!     .build()?
+//!     .run()?;
+//! println!("survived with final SDR {:.2} dB", report.final_sdr_db());
+//! # Ok::<(), mpamp::Error>(())
+//! ```
+//!
+//! With `min_workers` at its default (0 = require all `P`) the same
+//! plan fails the session with a typed
+//! [`Error::Transport`](crate::Error::Transport) /
+//! [`Error::Degraded`](crate::Error::Degraded) instead — never a hang:
+//! the round deadline bounds every wait.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::coordinator::message::{TAG_COLSTEP, TAG_FVEC, TAG_STEP};
+use crate::coordinator::transport::{Channel, RecvStatus};
+use crate::error::{Error, Result};
+use crate::util::rng::Rng;
+
+/// One injected fault, targeting `(worker, round)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// The worker's coded uplink frame for round `round` is silently
+    /// never sent (the pre-uplink scalar reply still goes out).
+    DropUplink {
+        /// Target worker id.
+        worker: u32,
+        /// Round whose `FVector` vanishes.
+        round: u32,
+    },
+    /// The worker stalls `ms` milliseconds before serving round
+    /// `round`'s broadcast — a straggler, not a death.
+    Delay {
+        /// Target worker id.
+        worker: u32,
+        /// Round that arrives late.
+        round: u32,
+        /// Stall length in milliseconds.
+        ms: u64,
+    },
+    /// The worker's connection dies at the start of round `round` and
+    /// every later operation on it fails. Standalone sessions lose the
+    /// worker for good; the daemon's fleet loop severs the real socket
+    /// so the reconnect-with-backoff path brings the worker back.
+    KillConn {
+        /// Target worker id.
+        worker: u32,
+        /// Round at which the connection is severed.
+        round: u32,
+    },
+    /// The worker-id field of round `round`'s uplink frame is flipped
+    /// before sending, so fusion-side validation deterministically
+    /// rejects the frame (a detectable corruption, not a silent one).
+    Corrupt {
+        /// Target worker id.
+        worker: u32,
+        /// Round whose uplink frame is corrupted.
+        round: u32,
+    },
+}
+
+impl Fault {
+    /// The worker this fault targets.
+    pub fn worker(&self) -> u32 {
+        match *self {
+            Fault::DropUplink { worker, .. }
+            | Fault::Delay { worker, .. }
+            | Fault::KillConn { worker, .. }
+            | Fault::Corrupt { worker, .. } => worker,
+        }
+    }
+
+    /// The round this fault fires at.
+    pub fn round(&self) -> u32 {
+        match *self {
+            Fault::DropUplink { round, .. }
+            | Fault::Delay { round, .. }
+            | Fault::KillConn { round, .. }
+            | Fault::Corrupt { round, .. } => round,
+        }
+    }
+
+    fn render(&self) -> String {
+        match *self {
+            Fault::DropUplink { worker, round } => format!("drop:w={worker},t={round}"),
+            Fault::Delay { worker, round, ms } => {
+                format!("delay:w={worker},t={round},ms={ms}")
+            }
+            Fault::KillConn { worker, round } => format!("kill:w={worker},t={round}"),
+            Fault::Corrupt { worker, round } => format!("corrupt:w={worker},t={round}"),
+        }
+    }
+}
+
+/// A deterministic set of faults to inject into one session or served
+/// workload. Plans are plain data: identical plans produce identical
+/// degradations on identical configs.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    /// The injected faults, in no particular order.
+    pub faults: Vec<Fault>,
+}
+
+impl FaultPlan {
+    /// A plan injecting nothing (the fault-free baseline).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Draw `n_faults` faults from `seed`, targeting rounds `< rounds`
+    /// and workers `< p`. Deterministic: the same arguments always
+    /// yield the same plan (the proptest harness sweeps seeds).
+    pub fn generate(seed: u64, rounds: u32, p: u32, n_faults: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ 0xFA017_F1A9);
+        let mut faults = Vec::with_capacity(n_faults);
+        for _ in 0..n_faults {
+            let worker = rng.below(p.max(1) as u64) as u32;
+            let round = rng.below(rounds.max(1) as u64) as u32;
+            faults.push(match rng.below(4) {
+                0 => Fault::DropUplink { worker, round },
+                1 => Fault::Delay { worker, round, ms: 5 + rng.below(40) },
+                2 => Fault::KillConn { worker, round },
+                _ => Fault::Corrupt { worker, round },
+            });
+        }
+        FaultPlan { faults }
+    }
+
+    /// Parse the `--fault-plan` syntax: `;`-separated events, each
+    /// `kind:w=<worker>,t=<round>[,ms=<ms>]` with kind one of `drop`,
+    /// `delay`, `kill`, `corrupt`. Example:
+    /// `"kill:w=1,t=2;delay:w=0,t=1,ms=40"`.
+    pub fn parse(s: &str) -> Result<FaultPlan> {
+        let mut faults = Vec::new();
+        for ev in s.split(';').map(str::trim).filter(|e| !e.is_empty()) {
+            let (kind, fields) = ev.split_once(':').ok_or_else(|| {
+                Error::Config(format!("fault '{ev}': expected kind:w=..,t=.."))
+            })?;
+            let mut worker = None;
+            let mut round = None;
+            let mut ms = None;
+            for field in fields.split(',').map(str::trim) {
+                let (key, val) = field.split_once('=').ok_or_else(|| {
+                    Error::Config(format!("fault '{ev}': bad field '{field}'"))
+                })?;
+                let val: u64 = val.trim().parse().map_err(|_| {
+                    Error::Config(format!("fault '{ev}': non-numeric '{val}'"))
+                })?;
+                match key.trim() {
+                    "w" => worker = Some(val as u32),
+                    "t" => round = Some(val as u32),
+                    "ms" => ms = Some(val),
+                    other => {
+                        return Err(Error::Config(format!(
+                            "fault '{ev}': unknown field '{other}'"
+                        )))
+                    }
+                }
+            }
+            let worker = worker
+                .ok_or_else(|| Error::Config(format!("fault '{ev}': missing w=")))?;
+            let round = round
+                .ok_or_else(|| Error::Config(format!("fault '{ev}': missing t=")))?;
+            faults.push(match kind.trim() {
+                "drop" => Fault::DropUplink { worker, round },
+                "delay" => Fault::Delay {
+                    worker,
+                    round,
+                    ms: ms.ok_or_else(|| {
+                        Error::Config(format!("fault '{ev}': delay needs ms="))
+                    })?,
+                },
+                "kill" => Fault::KillConn { worker, round },
+                "corrupt" => Fault::Corrupt { worker, round },
+                other => {
+                    return Err(Error::Config(format!("unknown fault kind '{other}'")))
+                }
+            });
+        }
+        Ok(FaultPlan { faults })
+    }
+
+    /// Render back to the [`parse`](FaultPlan::parse) syntax.
+    pub fn render(&self) -> String {
+        self.faults.iter().map(Fault::render).collect::<Vec<_>>().join(";")
+    }
+
+    /// Is the plan empty?
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    /// Should `worker`'s round-`round` uplink frame vanish?
+    pub fn should_drop(&self, worker: u32, round: u32) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, Fault::DropUplink { worker: w, round: r } if *w == worker && *r == round))
+    }
+
+    /// Milliseconds `worker` stalls before serving round `round` (sum
+    /// of all matching delay faults).
+    pub fn delay_ms(&self, worker: u32, round: u32) -> u64 {
+        self.faults
+            .iter()
+            .filter_map(|f| match f {
+                Fault::Delay { worker: w, round: r, ms } if *w == worker && *r == round => {
+                    Some(*ms)
+                }
+                _ => None,
+            })
+            .sum()
+    }
+
+    /// Does `worker`'s connection die at (or before) round `round`?
+    pub fn should_kill(&self, worker: u32, round: u32) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, Fault::KillConn { worker: w, round: r } if *w == worker && *r <= round))
+    }
+
+    /// Should `worker`'s round-`round` uplink frame be corrupted?
+    pub fn should_corrupt(&self, worker: u32, round: u32) -> bool {
+        self.faults
+            .iter()
+            .any(|f| matches!(f, Fault::Corrupt { worker: w, round: r } if *w == worker && *r == round))
+    }
+}
+
+/// `(tag, t)` of a protocol frame, when it has one (`Done` frames are a
+/// bare tag byte and carry no round).
+pub(crate) fn frame_round(frame: &[u8]) -> Option<(u8, u32)> {
+    if frame.len() < 5 {
+        return None;
+    }
+    Some((frame[0], u32::from_le_bytes(frame[1..5].try_into().ok()?)))
+}
+
+/// A [`Channel`] wrapper executing a [`FaultPlan`] against one worker's
+/// link: drops/corrupts matching uplink frames on the send path, stalls
+/// round-opening broadcasts on the receive path, and — once a kill
+/// round is reached — fails every subsequent operation the way a
+/// severed connection would.
+pub struct FaultChannel {
+    inner: Box<dyn Channel>,
+    plan: Arc<FaultPlan>,
+    worker: u32,
+    killed: bool,
+}
+
+impl FaultChannel {
+    /// Wrap `inner` so `plan`'s faults targeting `worker` fire.
+    pub fn new(inner: Box<dyn Channel>, plan: Arc<FaultPlan>, worker: u32) -> Self {
+        FaultChannel { inner, plan, worker, killed: false }
+    }
+
+    fn killed_err(&self, round: u32) -> Error {
+        Error::Transport(format!(
+            "connection killed by fault plan at round {round} (worker {})",
+            self.worker
+        ))
+    }
+
+    /// Check a frame's round against the plan's kill schedule; latch
+    /// the killed state the first time it fires.
+    fn check_kill(&mut self, round: u32) -> Result<()> {
+        if self.plan.should_kill(self.worker, round) {
+            self.killed = true;
+            return Err(self.killed_err(round));
+        }
+        Ok(())
+    }
+}
+
+impl Channel for FaultChannel {
+    fn send_bytes(&mut self, buf: &[u8]) -> Result<()> {
+        if self.killed {
+            return Err(Error::Transport(format!(
+                "connection killed by fault plan (worker {})",
+                self.worker
+            )));
+        }
+        let Some((tag, t)) = frame_round(buf) else {
+            return self.inner.send_bytes(buf);
+        };
+        self.check_kill(t)?;
+        if tag == TAG_FVEC {
+            if self.plan.should_drop(self.worker, t) {
+                return Ok(()); // the uplink frame vanishes in transit
+            }
+            if self.plan.should_corrupt(self.worker, t) {
+                // Flip a worker-id byte (offset 5 of the fvector header)
+                // so fusion-side validation rejects the frame
+                // deterministically instead of fusing garbage.
+                let mut corrupted = buf.to_vec();
+                corrupted[5] ^= 0x20;
+                return self.inner.send_bytes(&corrupted);
+            }
+        }
+        self.inner.send_bytes(buf)
+    }
+
+    fn recv_bytes_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
+        if self.killed {
+            return Err(Error::Transport(format!(
+                "connection killed by fault plan (worker {})",
+                self.worker
+            )));
+        }
+        self.inner.recv_bytes_into(buf)?;
+        if let Some((tag, t)) = frame_round(buf) {
+            self.check_kill(t)?;
+            if tag == TAG_STEP || tag == TAG_COLSTEP {
+                let ms = self.plan.delay_ms(self.worker, t);
+                if ms > 0 {
+                    std::thread::sleep(Duration::from_millis(ms));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn recv_bytes_into_by(
+        &mut self,
+        buf: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<RecvStatus> {
+        if self.killed {
+            return Err(Error::Transport(format!(
+                "connection killed by fault plan (worker {})",
+                self.worker
+            )));
+        }
+        let status = self.inner.recv_bytes_into_by(buf, timeout)?;
+        if status == RecvStatus::Frame {
+            if let Some((tag, t)) = frame_round(buf) {
+                self.check_kill(t)?;
+                if tag == TAG_STEP || tag == TAG_COLSTEP {
+                    let ms = self.plan.delay_ms(self.worker, t);
+                    if ms > 0 {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
+            }
+        }
+        Ok(status)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_render_roundtrip() {
+        let plan =
+            FaultPlan::parse("drop:w=1,t=2; delay:w=0,t=1,ms=50;kill:w=2,t=3;corrupt:w=1,t=4")
+                .unwrap();
+        assert_eq!(plan.faults.len(), 4);
+        assert!(plan.should_drop(1, 2) && !plan.should_drop(1, 3));
+        assert_eq!(plan.delay_ms(0, 1), 50);
+        assert!(plan.should_kill(2, 3) && plan.should_kill(2, 7), "kill is sticky");
+        assert!(!plan.should_kill(2, 2));
+        assert!(plan.should_corrupt(1, 4));
+        let reparsed = FaultPlan::parse(&plan.render()).unwrap();
+        assert_eq!(plan, reparsed);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_plans() {
+        for bad in [
+            "explode:w=1,t=2",
+            "drop:w=1",
+            "drop:t=2",
+            "delay:w=1,t=2",
+            "drop:w=x,t=2",
+            "drop:w=1,t=2,zz=3",
+            "droppity",
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn generate_is_deterministic_and_in_bounds() {
+        let a = FaultPlan::generate(7, 6, 4, 8);
+        let b = FaultPlan::generate(7, 6, 4, 8);
+        assert_eq!(a, b);
+        assert_eq!(a.faults.len(), 8);
+        for f in &a.faults {
+            assert!(f.worker() < 4, "{f:?}");
+            assert!(f.round() < 6, "{f:?}");
+        }
+        let c = FaultPlan::generate(8, 6, 4, 8);
+        assert_ne!(a, c, "different seeds should differ");
+    }
+
+    #[test]
+    fn fault_channel_drops_corrupts_and_kills() {
+        use crate::coordinator::transport::inproc_pair;
+        use crate::metrics::ByteMeter;
+        let meter = Arc::new(ByteMeter::new());
+        let (mut fusion, mut worker) = inproc_pair(meter);
+        let plan = Arc::new(
+            FaultPlan::parse("drop:w=0,t=1;corrupt:w=0,t=2;kill:w=0,t=3").unwrap(),
+        );
+        worker.wrap_channel(|inner| Box::new(FaultChannel::new(inner, plan, 0)));
+
+        // Round 0: untouched fvector passes through.
+        let mk_fvec = |t: u32| {
+            let mut f = vec![TAG_FVEC];
+            f.extend_from_slice(&t.to_le_bytes());
+            f.extend_from_slice(&0u32.to_le_bytes()); // worker id
+            f.extend_from_slice(&1u32.to_le_bytes()); // payload count
+            f.push(9); // payload byte
+            f
+        };
+        worker.send_encoded(&mk_fvec(0)).unwrap();
+        assert_eq!(fusion.recv_frame().unwrap(), &mk_fvec(0)[..]);
+
+        // Round 1: dropped — nothing arrives (bounded probe times out).
+        worker.send_encoded(&mk_fvec(1)).unwrap();
+        assert!(fusion.recv_frame_by(Duration::from_millis(30)).unwrap().is_none());
+
+        // Round 2: corrupted worker-id field.
+        worker.send_encoded(&mk_fvec(2)).unwrap();
+        let got = fusion.recv_frame().unwrap();
+        assert_eq!(u32::from_le_bytes(got[5..9].try_into().unwrap()), 0x20);
+
+        // Round 3: the connection dies and stays dead.
+        let err = worker.send_encoded(&mk_fvec(3)).unwrap_err();
+        assert!(err.is_peer_loss(), "kill should read as peer loss: {err}");
+        let err = worker.send_encoded(&mk_fvec(4)).unwrap_err();
+        assert!(err.to_string().contains("killed"), "{err}");
+    }
+}

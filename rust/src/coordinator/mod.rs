@@ -4,6 +4,9 @@
 //!   FVector/ColStep/ColScalars/Done) + the protocol version byte,
 //! * [`transport`] — byte-metered in-process + TCP duplex links with
 //!   connect/accept/read timeouts and a versioned hello,
+//! * [`fault`] — deterministic fault injection: seeded [`fault::FaultPlan`]s
+//!   (drop/delay/kill/corrupt) installable on any transport, so every
+//!   degradation path the elastic protocol tolerates is reproducible,
 //! * [`scenario`] — the scenario-generic protocol core: the [`Scenario`]
 //!   trait (implemented by [`scenario::Row`] and [`scenario::Column`])
 //!   and the generic [`scenario::ProtocolCore`] round driver,
@@ -42,6 +45,7 @@
 //! [`Scenario`]: scenario::Scenario
 
 pub mod builder;
+pub mod fault;
 pub mod fusion;
 pub mod message;
 pub mod scenario;
@@ -50,6 +54,7 @@ pub mod transport;
 pub mod worker;
 
 pub use builder::SessionBuilder;
+pub use fault::{Fault, FaultPlan};
 pub use message::{FPayload, Message, QuantSpec, PROTOCOL_VERSION};
 pub use scenario::{ProtocolCore, Scenario};
 pub use session::{IterSnapshot, MpAmpSession, RunReport, Session};

@@ -57,6 +57,7 @@
 //!     type Fusion = OverlapFusion;    // fusion state across rounds
 //!     type WorkerState = OverlapWorker; // worker state across rounds
 //!     const NAME: &'static str = "overlap";
+//!     const REPLY_TAG: u8 = 42; // wire tag of the phase-2 reply frame
 //!
 //!     // How the problem shards across P workers:
 //!     fn split(batch: &Batch, p: usize) -> Result<Vec<OverlapShard>> { .. }
@@ -69,6 +70,8 @@
 //!     fn begin_round(fu: &mut OverlapFusion, cfg: &RunConfig, t: usize, frame: &mut Vec<u8>) { .. }
 //!     fn worker_serve(.., frame: &[u8], pending: &mut Vec<f32>, ep: &mut Endpoint) -> Result<()> { .. }
 //!     fn absorb(fu: &mut OverlapFusion, .., widx: usize, frame: &[u8]) -> Result<()> { .. }
+//!     // Elastic K-of-P: rescale partial phase-2 aggregates to full-P:
+//!     fn rescale_partial_replies(fu: &mut OverlapFusion, cfg: &RunConfig, k: usize) { .. }
 //!     // Phase 3: which variance the round's stats carry into the spec,
 //!     // and the model channel every compression stack designs against:
 //!     fn stats(fu: &OverlapFusion, cfg: &RunConfig, out: &mut Vec<RoundStat>) { .. }
@@ -93,7 +96,7 @@
 //! spec's variance alone, because the worker rebuilds the identical
 //! compressor on its side).
 
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::alloc::schedule::{Directive, RateAllocator};
 use crate::compress::{design_seed, BlockCtx, Compressor, CompressionStack, DesignCtx, CLIP_SDS};
@@ -135,6 +138,11 @@ pub trait Scenario: Send + Sync + 'static {
     /// Stable lowercase scenario label (matches `Partitioning::as_str`).
     const NAME: &'static str;
 
+    /// Wire tag of the scenario's phase-2 (pre-uplink) reply frame. The
+    /// elastic round driver uses it to tell an expected reply from a
+    /// stale straggler frame it should drain and discard.
+    const REPLY_TAG: u8;
+
     /// Shard the signal batch across `p` workers.
     fn split(batch: &Batch, p: usize) -> Result<Vec<Self::Shard>>;
 
@@ -162,6 +170,15 @@ pub trait Scenario: Send + Sync + 'static {
         widx: usize,
         frame: &[u8],
     ) -> Result<()>;
+
+    /// Elastic K-of-P correction, called between phases 2 and 3 when
+    /// only `k < P` pre-uplink replies arrived before the round
+    /// deadline: rescale the phase-2 accumulators in place so the round
+    /// statistics keep estimating the full-`P` aggregates (the fused
+    /// uplink sum itself is rescaled generically by the round driver).
+    /// Never called with `k == P` — the fault-free path is bit-identical
+    /// to a non-elastic session.
+    fn rescale_partial_replies(fu: &mut Self::Fusion, cfg: &RunConfig, k: usize);
 
     /// Phase 3a: per-signal round statistics, after all replies, written
     /// into the reused `out` (cleared first).
@@ -361,6 +378,110 @@ fn fuse_payload(
     Ok(())
 }
 
+/// How one endpoint's deadline-bounded receive resolved for the elastic
+/// round driver.
+enum RoundRecv {
+    /// The expected frame arrived and sits in the endpoint's receive
+    /// buffer (re-borrow it with [`Endpoint::last_frame`]).
+    Frame,
+    /// The deadline expired with the link intact — the worker is a
+    /// straggler this round, not dead.
+    TimedOut,
+    /// A current-round frame arrived but failed the header checks
+    /// (wrong tag or worker id — e.g. a corrupted uplink); the worker
+    /// sends nothing further this round, so give up on it now instead
+    /// of burning the rest of the deadline.
+    Rejected,
+}
+
+/// Header-only verdict on a received frame, produced inside the drain
+/// loop so no borrow of the receive buffer escapes an iteration.
+enum Verdict {
+    Keep,
+    Stale,
+    Reject,
+}
+
+/// Peek a frame's `(tag, t)` header without decoding the body. `None`
+/// for runt frames (the 1-byte `Done` never flows worker → fusion, so
+/// anything shorter than a round header is stale garbage here).
+fn frame_header(frame: &[u8]) -> Option<(u8, u32)> {
+    if frame.len() < 5 {
+        return None;
+    }
+    Some((frame[0], u32::from_le_bytes([frame[1], frame[2], frame[3], frame[4]])))
+}
+
+/// Classify a frame against the phase's expectation. Frames from earlier
+/// rounds (late straggler replies the elastic barrier moved on without)
+/// are `Stale` — drained and discarded. A current-round frame with the
+/// wrong tag or, for uplinks, a worker id that does not match the
+/// endpoint's slot (the signature of a corrupted frame) is `Reject`:
+/// everything behind it is this worker's business, not ours, and the
+/// body validation would refuse it anyway.
+fn classify_frame(frame: &[u8], want_tag: u8, t: u32, want_worker: Option<u32>) -> Verdict {
+    let (tag, ft) = match frame_header(frame) {
+        Some(h) => h,
+        None => return Verdict::Stale,
+    };
+    if ft < t {
+        return Verdict::Stale;
+    }
+    if tag != want_tag || ft != t {
+        return Verdict::Reject;
+    }
+    if let Some(w) = want_worker {
+        // FVector header: worker id at bytes [5..9]. Checking it here —
+        // before any payload is fused — is what keeps a corrupted frame
+        // from polluting the round's sums.
+        if frame.len() < 13 {
+            return Verdict::Reject;
+        }
+        if u32::from_le_bytes([frame[5], frame[6], frame[7], frame[8]]) != w {
+            return Verdict::Reject;
+        }
+    }
+    Verdict::Keep
+}
+
+/// Deadline-bounded receive of the round-`t` frame tagged `want_tag`
+/// (and, for uplinks, from worker `want_worker`), draining and
+/// discarding stale straggler frames along the way. The whole drain —
+/// however many stale frames it swallows — shares one `budget`, so a
+/// flooding peer cannot stall the round past the deadline. On
+/// `Ok(RoundRecv::Frame)` the accepted frame is the endpoint's
+/// [`last_frame`](Endpoint::last_frame).
+fn recv_round_frame(
+    ep: &mut Endpoint,
+    budget: Duration,
+    want_tag: u8,
+    t: u32,
+    want_worker: Option<u32>,
+) -> Result<RoundRecv> {
+    let start = Instant::now();
+    loop {
+        let remaining = budget.saturating_sub(start.elapsed());
+        if remaining.is_zero() {
+            return Ok(RoundRecv::TimedOut);
+        }
+        let verdict = match ep.recv_frame_by(remaining)? {
+            None => return Ok(RoundRecv::TimedOut),
+            Some(frame) => classify_frame(frame, want_tag, t, want_worker),
+        };
+        match verdict {
+            Verdict::Keep => return Ok(RoundRecv::Frame),
+            Verdict::Stale => continue,
+            Verdict::Reject => return Ok(RoundRecv::Rejected),
+        }
+    }
+}
+
+/// How long the elastic barrier polls a worker already marked dead: just
+/// enough to notice a daemon-side reconnect resurrecting the slot,
+/// without spending the full round deadline on a peer that is known
+/// gone.
+const DEAD_POLL: Duration = Duration::from_millis(2);
+
 /// Per-session round scratch: every buffer the round loop needs, sized
 /// on the first round and reused (cleared or overwritten in place) on
 /// every later one, so steady-state rounds allocate nothing proportional
@@ -384,6 +505,13 @@ struct RoundScratch {
     sums: Vec<f32>,
     /// Coded-payload decode scratch (`len`).
     decode: Vec<f32>,
+    /// Elastic rounds only: which workers made this round's phase-2
+    /// barrier (phase 4 collects uplinks from exactly this set).
+    live: Vec<bool>,
+    /// Elastic rounds only: one worker's uplink staged `B × len` before
+    /// it is committed to `sums`, so a worker whose frame fails body
+    /// validation mid-fuse contributes nothing instead of a torn sum.
+    wsum: Vec<f32>,
 }
 
 /// The generic, resumable fusion-side protocol driver: one [`step`]
@@ -396,6 +524,10 @@ pub struct ProtocolCore<S: Scenario> {
     b: usize,
     t: usize,
     scratch: RoundScratch,
+    /// Workers whose link raised peer loss (elastic sessions): polled
+    /// with [`DEAD_POLL`] instead of the round deadline until a frame
+    /// proves them resurrected (daemon reconnect).
+    dead: Vec<bool>,
     tel: Telemetry,
 }
 
@@ -408,6 +540,7 @@ impl<S: Scenario> ProtocolCore<S> {
             b: batch.batch(),
             t: 0,
             scratch: RoundScratch::default(),
+            dead: vec![false; cfg.p],
             tel: Telemetry::off(),
         }
     }
@@ -470,24 +603,93 @@ impl<S: Scenario> ProtocolCore<S> {
         let mut mark_us = round_start_us;
         let stack = crate::compress::registry::get(&cfg.compressor)?;
         let len = S::uplink_len(cfg);
+        // Elastic K-of-P is armed by both knobs together (validation
+        // rejects one without the other); when off, every barrier below
+        // is the original blocking all-P path, bit for bit.
+        let elastic = cfg.min_workers > 0 && cfg.round_deadline_ms > 0;
+        let deadline = Duration::from_millis(cfg.round_deadline_ms.max(1));
+        if self.dead.len() != p {
+            self.dead.resize(p, false);
+        }
+        let dead = &mut self.dead;
         // Split-borrow the persistent scratch so fusion state and the
         // round buffers can be used independently below.
-        let RoundScratch { frame, stats, directives, specs, comps, sigma_q2s, sums, decode } =
-            &mut self.scratch;
+        let RoundScratch {
+            frame,
+            stats,
+            directives,
+            specs,
+            comps,
+            sigma_q2s,
+            sums,
+            decode,
+            live,
+            wsum,
+        } = &mut self.scratch;
+        live.clear();
+        live.resize(p, true);
         // 1. Encode the round command once, broadcast the same frame to
-        //    every endpoint.
+        //    every endpoint. Elastic sessions tolerate a dead endpoint —
+        //    that worker just misses the round.
         S::begin_round(&mut self.fu, cfg, t, frame);
-        for ep in endpoints.iter_mut() {
-            ep.send_encoded(frame)?;
+        for (widx, ep) in endpoints.iter_mut().enumerate() {
+            match ep.send_encoded(frame) {
+                Ok(()) => {}
+                Err(e) if elastic && (e.is_peer_loss() || e.is_timeout()) => {
+                    live[widx] = false;
+                    dead[widx] = true;
+                }
+                Err(e) => return Err(e),
+            }
         }
         if tel_on {
             mark_us = tel.phase(Stage::Encode, t, -1, mark_us, 0.0);
         }
         // 2. Absorb every worker's pre-uplink reply (worker-id order),
         //    parsed in place from each endpoint's receive buffer.
-        for (widx, ep) in endpoints.iter_mut().enumerate() {
-            let reply = ep.recv_frame()?;
-            S::absorb(&mut self.fu, cfg, t, widx, reply)?;
+        //    Elastic sessions bound the wait per endpoint, drain stale
+        //    straggler frames by round tag, and move on once the
+        //    deadline fires — down to `min_workers` live replies.
+        if !elastic {
+            for (widx, ep) in endpoints.iter_mut().enumerate() {
+                let reply = ep.recv_frame()?;
+                S::absorb(&mut self.fu, cfg, t, widx, reply)?;
+            }
+        } else {
+            for (widx, ep) in endpoints.iter_mut().enumerate() {
+                if !live[widx] {
+                    continue;
+                }
+                let budget = if dead[widx] { DEAD_POLL } else { deadline };
+                match recv_round_frame(ep, budget, S::REPLY_TAG, t as u32, None) {
+                    Ok(RoundRecv::Frame) => {
+                        match S::absorb(&mut self.fu, cfg, t, widx, ep.last_frame()) {
+                            Ok(()) => dead[widx] = false,
+                            // A reply that fails body validation counts
+                            // as missing, not fatal — the rescale and
+                            // the K floor below absorb it.
+                            Err(_) => live[widx] = false,
+                        }
+                    }
+                    Ok(RoundRecv::TimedOut) | Ok(RoundRecv::Rejected) => live[widx] = false,
+                    Err(e) if e.is_peer_loss() => {
+                        live[widx] = false;
+                        dead[widx] = true;
+                    }
+                    Err(e) if e.is_timeout() => live[widx] = false,
+                    Err(e) => return Err(e),
+                }
+            }
+            let k = live.iter().filter(|&&l| l).count();
+            if k < cfg.min_workers {
+                return Err(Error::Degraded(format!(
+                    "{k} live pre-uplink replies < min_workers {} at round {t}",
+                    cfg.min_workers
+                )));
+            }
+            if k < p {
+                S::rescale_partial_replies(&mut self.fu, cfg, k);
+            }
         }
         if tel_on {
             mark_us = tel.phase(Stage::Fusion, t, -1, mark_us, 0.0);
@@ -505,8 +707,20 @@ impl<S: Scenario> ProtocolCore<S> {
             directives.push(d);
         }
         message::encode_quant_cmd(frame, t as u32, specs);
-        for ep in endpoints.iter_mut() {
-            ep.send_encoded(frame)?;
+        // Stragglers that missed the phase-2 barrier still get the
+        // QuantCmd: their protocol state machine stays in sync, their
+        // local state keeps evolving from the (global) broadcasts, and
+        // their unfused uplink is drained by round tag later — so a
+        // slow worker rejoins seamlessly at the next round it makes.
+        for (widx, ep) in endpoints.iter_mut().enumerate() {
+            match ep.send_encoded(frame) {
+                Ok(()) => {}
+                Err(e) if elastic && (e.is_peer_loss() || e.is_timeout()) => {
+                    live[widx] = false;
+                    dead[widx] = true;
+                }
+                Err(e) => return Err(e),
+            }
         }
         // The decoders matching the workers' encoders, one per signal —
         // assembled from the spec exactly the way the workers do it.
@@ -532,35 +746,137 @@ impl<S: Scenario> ProtocolCore<S> {
         sums.resize(b * len, 0.0);
         sums.iter_mut().for_each(|s| *s = 0.0);
         let mut wire_bits = 0.0f64;
-        for (widx, ep) in endpoints.iter_mut().enumerate() {
-            let reply = ep.recv_frame()?;
-            let (rt, worker, count) = message::decode_fvector(reply, |sig, payload| {
-                if sig >= b {
+        if !elastic {
+            for (widx, ep) in endpoints.iter_mut().enumerate() {
+                let reply = ep.recv_frame()?;
+                let (rt, worker, count) = message::decode_fvector(reply, |sig, payload| {
+                    if sig >= b {
+                        return Err(Error::Protocol(format!(
+                            "fusion: more than {b} payloads from worker {widx}"
+                        )));
+                    }
+                    wire_bits += payload.wire_bits();
+                    fuse_payload(
+                        payload,
+                        &comps[sig],
+                        widx as u32,
+                        len,
+                        &mut sums[sig * len..(sig + 1) * len],
+                        decode,
+                        &mut wire_bits,
+                    )
+                })?;
+                if rt as usize != t || worker as usize != widx {
                     return Err(Error::Protocol(format!(
-                        "fusion: more than {b} payloads from worker {widx}"
+                        "fusion: bad FVector (t={rt}, worker={worker}) expected \
+                         (t={t}, worker={widx})"
                     )));
                 }
-                wire_bits += payload.wire_bits();
-                fuse_payload(
-                    payload,
-                    &comps[sig],
-                    widx as u32,
-                    len,
-                    &mut sums[sig * len..(sig + 1) * len],
-                    decode,
-                    &mut wire_bits,
-                )
-            })?;
-            if rt as usize != t || worker as usize != widx {
-                return Err(Error::Protocol(format!(
-                    "fusion: bad FVector (t={rt}, worker={worker}) expected \
-                     (t={t}, worker={widx})"
+                if count != b {
+                    return Err(Error::Protocol(format!(
+                        "fusion: {count} payloads from worker {widx}, batch is {b}"
+                    )));
+                }
+            }
+        } else {
+            // Collect uplinks from exactly the phase-2 live set. Each
+            // worker's payloads are staged into `wsum` and committed to
+            // `sums` only after the whole frame validated, so a corrupt
+            // or truncated uplink contributes nothing (staging from
+            // zeros then adding in worker-id order is bit-identical to
+            // fusing in place — `sums` starts at +0.0 and stays
+            // non-negative-zero under addition).
+            wsum.resize(b * len, 0.0);
+            let mut k4 = 0usize;
+            for (widx, ep) in endpoints.iter_mut().enumerate() {
+                if !live[widx] {
+                    continue;
+                }
+                let budget = if dead[widx] { DEAD_POLL } else { deadline };
+                let fused = match recv_round_frame(
+                    ep,
+                    budget,
+                    message::TAG_FVEC,
+                    t as u32,
+                    Some(widx as u32),
+                ) {
+                    Ok(RoundRecv::Frame) => {
+                        wsum.iter_mut().for_each(|s| *s = 0.0);
+                        let mut wbits = 0.0f64;
+                        let parsed = message::decode_fvector(ep.last_frame(), |sig, payload| {
+                            if sig >= b {
+                                return Err(Error::Protocol(format!(
+                                    "fusion: more than {b} payloads from worker {widx}"
+                                )));
+                            }
+                            wbits += payload.wire_bits();
+                            fuse_payload(
+                                payload,
+                                &comps[sig],
+                                widx as u32,
+                                len,
+                                &mut wsum[sig * len..(sig + 1) * len],
+                                decode,
+                                &mut wbits,
+                            )
+                        });
+                        match parsed {
+                            // The (t, worker) header ids were pre-checked
+                            // by the drain loop; the payload count is the
+                            // one body invariant left.
+                            Ok((_, _, count)) if count == b => {
+                                for (s, w) in sums.iter_mut().zip(wsum.iter()) {
+                                    *s += *w;
+                                }
+                                wire_bits += wbits;
+                                true
+                            }
+                            Ok(_) => false,
+                            Err(e) if e.is_peer_loss() => {
+                                dead[widx] = true;
+                                false
+                            }
+                            Err(Error::Protocol(_)) | Err(Error::Codec(_)) => false,
+                            Err(e) => return Err(e),
+                        }
+                    }
+                    Ok(RoundRecv::TimedOut) | Ok(RoundRecv::Rejected) => false,
+                    Err(e) if e.is_peer_loss() => {
+                        dead[widx] = true;
+                        false
+                    }
+                    Err(e) if e.is_timeout() => false,
+                    Err(e) => return Err(e),
+                };
+                if fused {
+                    k4 += 1;
+                } else {
+                    live[widx] = false;
+                }
+            }
+            if k4 < cfg.min_workers {
+                return Err(Error::Degraded(format!(
+                    "{k4} live uplinks < min_workers {} at round {t}",
+                    cfg.min_workers
                 )));
             }
-            if count != b {
-                return Err(Error::Protocol(format!(
-                    "fusion: {count} payloads from worker {widx}, batch is {b}"
-                )));
+            if k4 < p {
+                // Unbias the partial fusion (scale by P/K) and fold the
+                // missing shard mass into the per-worker σ_Q² slot: the
+                // scenario's model channel noise ws² is the per-worker
+                // message variance, so the rescaled sum carries an extra
+                // P·ws²·(P−K)/K of variance. Threading it through
+                // `sigma_q2s` puts it in front of the denoiser's
+                // effective noise level, `S::predicted_sigma`, and the
+                // BT/DP allocators in one move — the same path the
+                // paper's quantization error takes (eq. 8).
+                let scale = (p as f64 / k4 as f64) as f32;
+                sums.iter_mut().for_each(|v| *v *= scale);
+                let miss = (p - k4) as f64 / k4 as f64;
+                for (j, stat) in stats.iter().enumerate() {
+                    let (_, ws2) = S::channel_for_var(&cfg.prior, p, S::spec_var(*stat));
+                    sigma_q2s[j] += ws2 * miss;
+                }
             }
         }
         if tel_on {
@@ -634,6 +950,23 @@ impl<S: Scenario> ProtocolCore<S> {
         }
         Ok(())
     }
+
+    /// [`finish`](ProtocolCore::finish) for elastic sessions: a `Done`
+    /// that cannot be delivered because the peer is gone (or its link
+    /// timed out) is swallowed — the session already survived that
+    /// worker's absence, releasing it is moot. Any other send failure
+    /// still propagates.
+    pub fn finish_lossy(endpoints: &mut [Endpoint]) -> Result<()> {
+        let done = Message::Done.encode();
+        for ep in endpoints.iter_mut() {
+            if let Err(e) = ep.send_encoded(&done) {
+                if !(e.is_peer_loss() || e.is_timeout()) {
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -684,6 +1017,8 @@ impl Scenario for Row {
     type WorkerState = RowWorker;
 
     const NAME: &'static str = "row";
+
+    const REPLY_TAG: u8 = message::TAG_ZNORM;
 
     fn split(batch: &Batch, p: usize) -> Result<Vec<RowBatchData>> {
         RowBatchData::try_split(batch, p)
@@ -739,6 +1074,15 @@ impl Scenario for Row {
             *acc += v;
         }
         Ok(())
+    }
+
+    fn rescale_partial_replies(fu: &mut RowFusion, cfg: &RunConfig, k: usize) {
+        // Only k of P ‖z^p‖² replies made the barrier: rescale the
+        // aggregate so σ̂² = Σ_p‖z^p‖²/M keeps estimating the full-P
+        // residual energy (row shards are equal-sized, so the partial
+        // sum is an unbiased k/P fraction of it).
+        let scale = cfg.p as f64 / k as f64;
+        fu.znorm.iter_mut().for_each(|v| *v *= scale);
     }
 
     fn stats(fu: &RowFusion, cfg: &RunConfig, out: &mut Vec<RoundStat>) {
@@ -919,6 +1263,8 @@ impl Scenario for Column {
 
     const NAME: &'static str = "column";
 
+    const REPLY_TAG: u8 = message::TAG_COLSCALARS;
+
     fn split(batch: &Batch, p: usize) -> Result<Vec<ColumnWorkerData>> {
         ColumnWorkerData::try_split(&batch.a, p)
     }
@@ -1012,6 +1358,18 @@ impl Scenario for Column {
                 .copy_to(&mut fu.x[j * fu.n + widx * np..j * fu.n + (widx + 1) * np]);
         }
         Ok(())
+    }
+
+    fn rescale_partial_replies(fu: &mut ColumnFusion, cfg: &RunConfig, k: usize) {
+        // Only k of P ColScalars replies made the barrier: rescale the
+        // Σ_p‖u^p‖² and Σ_p η̄′ aggregates so v̂ = Σ‖u^p‖²/(P·M) and the
+        // Onsager mean (÷P in `global_step`) keep estimating the full-P
+        // quantities. σ̂² is computed fusion-side from the residual and
+        // needs no correction; a missing worker's eval shard in `x`
+        // simply stays at its last uplinked value (measurement only).
+        let scale = cfg.p as f64 / k as f64;
+        fu.unorm.iter_mut().for_each(|v| *v *= scale);
+        fu.deriv.iter_mut().for_each(|v| *v *= scale);
     }
 
     fn stats(fu: &ColumnFusion, cfg: &RunConfig, out: &mut Vec<RoundStat>) {

@@ -20,6 +20,7 @@ use std::time::Instant;
 
 use crate::alloc::schedule::{allocator_from_config, RateAllocator};
 use crate::config::{EngineKind, Partitioning, RunConfig, ScheduleKind, TransportKind};
+use crate::coordinator::fault::{FaultChannel, FaultPlan};
 use crate::coordinator::fusion::ProtocolState;
 use crate::coordinator::message::Message;
 use crate::coordinator::scenario::{Column, Row, Scenario};
@@ -246,6 +247,9 @@ pub struct Session {
     /// Span-recording handle threaded into the protocol core and the
     /// worker threads (off by default — a true no-op).
     tel: Telemetry,
+    /// Deterministic fault plan installed on the worker-side channels at
+    /// start; `None` (the default) leaves the transports untouched.
+    fault_plan: Option<Arc<FaultPlan>>,
 }
 
 /// Former name of [`Session`], kept so existing call sites read naturally.
@@ -346,6 +350,7 @@ impl Session {
             failed: false,
             finished: false,
             tel: Telemetry::off(),
+            fault_plan: None,
         })
     }
 
@@ -405,6 +410,20 @@ impl Session {
         if let Some(act) = self.active.as_mut() {
             act.state.set_telemetry(tel);
         }
+    }
+
+    /// Install a deterministic [`FaultPlan`] on this session's transports.
+    ///
+    /// Each worker-side channel is wrapped in a
+    /// [`FaultChannel`](crate::coordinator::fault::FaultChannel) when the
+    /// fleet spawns (first [`step`](Session::step)), so drops, delays,
+    /// kills, and corruptions fire at exactly the scripted `(worker,
+    /// round)` coordinates regardless of thread timing. Pair with
+    /// `min_workers`/`round_deadline_ms` so the elastic protocol can
+    /// absorb the injected losses; an empty plan is a strict no-op.
+    /// Call before the first `step`; plans installed later are ignored.
+    pub fn set_fault_plan(&mut self, plan: Arc<FaultPlan>) {
+        self.fault_plan = Some(plan);
     }
 
     /// Access the underlying signal batch (e.g. for external SDR checks).
@@ -468,7 +487,7 @@ impl Session {
         let meter = Arc::new(ByteMeter::new());
 
         // Build transport pairs.
-        let (fusion_eps, worker_eps): (Vec<Endpoint>, Vec<Endpoint>) =
+        let (fusion_eps, mut worker_eps): (Vec<Endpoint>, Vec<Endpoint>) =
             match cfg.transport {
                 TransportKind::InProc => {
                     let pairs: Vec<_> =
@@ -491,6 +510,18 @@ impl Session {
                     (fusion, workers)
                 }
             };
+
+        // Install the fault plan on the worker sides so injected drops /
+        // delays / kills / corruptions hit the wire exactly where the
+        // plan scripts them, on both inproc and TCP transports.
+        if let Some(plan) = &self.fault_plan {
+            for (id, ep) in worker_eps.iter_mut().enumerate() {
+                let plan = plan.clone();
+                ep.wrap_channel(move |inner| {
+                    Box::new(FaultChannel::new(inner, plan, id as u32))
+                });
+            }
+        }
 
         // Spawn the worker threads; they serve protocol rounds until the
         // fusion side broadcasts `Done` (or their endpoint drops). The
@@ -603,13 +634,21 @@ impl Session {
         }
         let mut act = self.active.take().expect("active session");
         let steps = act.records.len();
+        // Elastic sessions expect casualties: a worker lost to a fault or
+        // a missed deadline was already absorbed by the K-of-P rounds, so
+        // its dead link / short serve count is not an error here.
+        let elastic = self.cfg.min_workers > 0;
+        let tolerated =
+            |e: &Error| elastic && (e.is_peer_loss() || e.is_timeout());
         // A failed Done send means the worker already died; keep going so
         // the join below can report its root-cause error.
         let mut root_err: Option<Error> = None; // errors returned by workers
         let mut side_err: Option<Error> = None; // send failures, counts, panics
         for ep in act.endpoints.iter_mut() {
             if let Err(e) = ep.send(&Message::Done) {
-                side_err.get_or_insert(e);
+                if !tolerated(&e) {
+                    side_err.get_or_insert(e);
+                }
             }
         }
         // Drop the endpoints so a worker stuck mid-protocol errors out
@@ -619,12 +658,13 @@ impl Session {
         for (id, h) in act.workers.into_iter().enumerate() {
             match h.join() {
                 Ok(Ok(served)) => {
-                    if served != steps && side_err.is_none() {
+                    if served != steps && !elastic && side_err.is_none() {
                         side_err = Some(Error::Protocol(format!(
                             "worker {id} served {served} != {steps} iterations"
                         )));
                     }
                 }
+                Ok(Err(e)) if tolerated(&e) => {}
                 Ok(Err(e)) => {
                     root_err.get_or_insert(e);
                 }

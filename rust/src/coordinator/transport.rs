@@ -40,6 +40,19 @@ use crate::coordinator::message::{Message, PROTOCOL_VERSION};
 use crate::error::{Error, Result};
 use crate::metrics::ByteMeter;
 
+/// Outcome of a deadline-bounded receive: either a frame arrived in
+/// time, or the deadline expired with the channel still intact (the
+/// frame may yet arrive — elastic rounds use this to proceed without a
+/// straggler and drain its late frame next round).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecvStatus {
+    /// A frame was received into the buffer.
+    Frame,
+    /// The deadline expired before a frame arrived; the channel is
+    /// still usable.
+    TimedOut,
+}
+
 /// A reliable, ordered byte-frame channel.
 ///
 /// Both implementations are allocation-free in steady state: the TCP
@@ -52,6 +65,18 @@ pub trait Channel: Send {
     fn send_bytes(&mut self, buf: &[u8]) -> Result<()>;
     /// Receive one frame (blocking) into `buf`, replacing its contents.
     fn recv_bytes_into(&mut self, buf: &mut Vec<u8>) -> Result<()>;
+    /// Receive one frame, waiting at most `timeout`. The default
+    /// implementation blocks indefinitely (correct for channels with no
+    /// deadline machinery); transports used by elastic K-of-P rounds
+    /// override it so a straggler cannot stall the fleet.
+    fn recv_bytes_into_by(
+        &mut self,
+        buf: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<RecvStatus> {
+        let _ = timeout;
+        self.recv_bytes_into(buf).map(|_| RecvStatus::Frame)
+    }
 }
 
 /// A small free-list of frame buffers shared by both directions of an
@@ -167,6 +192,47 @@ impl Endpoint {
         self.chan.recv_bytes_into(buf)
     }
 
+    /// Deadline-bounded [`recv_frame`](Endpoint::recv_frame): `Ok(None)`
+    /// means the deadline expired with the link intact (elastic rounds
+    /// treat the worker as a straggler and move on); `Ok(Some(frame))`
+    /// borrows the received frame from the endpoint's reuse buffer.
+    pub fn recv_frame_by(&mut self, timeout: Duration) -> Result<Option<&[u8]>> {
+        match self.chan.recv_bytes_into_by(&mut self.recv_buf, timeout)? {
+            RecvStatus::Frame => Ok(Some(&self.recv_buf)),
+            RecvStatus::TimedOut => Ok(None),
+        }
+    }
+
+    /// Borrow the most recently received frame again. The elastic round
+    /// driver classifies a frame inside a drain loop (tag/round peeked,
+    /// no borrow escaping) and then re-borrows it here for the actual
+    /// zero-copy decode once the loop has settled on it.
+    pub fn last_frame(&self) -> &[u8] {
+        &self.recv_buf
+    }
+
+    /// Replace the underlying channel with a wrapper built from it —
+    /// the hook the fault-injection harness uses to interpose a
+    /// [`fault::FaultChannel`](crate::coordinator::fault::FaultChannel)
+    /// on any transport without the transport knowing.
+    pub fn wrap_channel(
+        &mut self,
+        wrap: impl FnOnce(Box<dyn Channel>) -> Box<dyn Channel>,
+    ) {
+        // Temporarily park a stub so `wrap` can consume the real channel.
+        struct Hole;
+        impl Channel for Hole {
+            fn send_bytes(&mut self, _buf: &[u8]) -> Result<()> {
+                Err(Error::Transport("channel hole".into()))
+            }
+            fn recv_bytes_into(&mut self, _buf: &mut Vec<u8>) -> Result<()> {
+                Err(Error::Transport("channel hole".into()))
+            }
+        }
+        let chan = std::mem::replace(&mut self.chan, Box::new(Hole));
+        self.chan = wrap(chan);
+    }
+
     /// The shared meter.
     pub fn meter(&self) -> &Arc<ByteMeter> {
         &self.meter
@@ -202,6 +268,24 @@ impl Channel for InProcChannel {
         // buffer's allocation to the pool for the next sender.
         self.pool.put(std::mem::replace(buf, frame));
         Ok(())
+    }
+
+    fn recv_bytes_into_by(
+        &mut self,
+        buf: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<RecvStatus> {
+        use std::sync::mpsc::RecvTimeoutError;
+        match self.rx.recv_timeout(timeout) {
+            Ok(frame) => {
+                self.pool.put(std::mem::replace(buf, frame));
+                Ok(RecvStatus::Frame)
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(RecvStatus::TimedOut),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::Transport("peer hung up (recv)".into()))
+            }
+        }
     }
 }
 
@@ -306,6 +390,38 @@ impl Channel for TcpChannel {
         self.read_exact_deadlined(buf)?;
         Ok(())
     }
+
+    fn recv_bytes_into_by(
+        &mut self,
+        buf: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<RecvStatus> {
+        // Peek one byte under the deadline: a timeout before the first
+        // byte leaves the stream's framing intact (nothing consumed), so
+        // the straggler's frame can still be drained next round. Once
+        // the first byte is visible the frame is in flight and the
+        // normal (blocking under the steady-state policy) read finishes
+        // it.
+        self.stream
+            .set_read_timeout(Some(timeout.max(Duration::from_millis(1))))
+            .map_err(Error::Io)?;
+        let mut first = [0u8; 1];
+        let peeked = self.stream.peek(&mut first);
+        self.stream.set_read_timeout(self.read_timeout).map_err(Error::Io)?;
+        match peeked {
+            Ok(0) => Err(Error::Transport("peer hung up (recv)".into())),
+            Ok(_) => self.recv_bytes_into(buf).map(|_| RecvStatus::Frame),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+                ) =>
+            {
+                Ok(RecvStatus::TimedOut)
+            }
+            Err(e) => Err(Error::Io(e)),
+        }
+    }
 }
 
 /// Fusion-side TCP listener: bind first (so the address is known), then
@@ -368,6 +484,39 @@ impl TcpFusionListener {
         Ok(links)
     }
 
+    /// Accept **one** serve-mode worker connection without consuming the
+    /// listener: block for at most `timeout`, returning `Ok(None)` if no
+    /// peer arrived (the caller's poll loop checks its shutdown flag and
+    /// calls again). This is the daemon's persistent fleet acceptor —
+    /// unlike [`accept_all_mux`](TcpFusionListener::accept_all_mux) it
+    /// keeps the listener alive so workers that die can reconnect with
+    /// the same versioned hello and be re-admitted mid-flight.
+    pub fn accept_one_mux(
+        &self,
+        timeout: Duration,
+    ) -> Result<Option<(u32, MuxFusionLink)>> {
+        let deadline = Instant::now() + timeout;
+        self.listener.set_nonblocking(true).map_err(Error::Io)?;
+        let mut stream = loop {
+            match self.listener.accept() {
+                Ok((stream, _)) => break stream,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                Err(e) => return Err(Error::Io(e)),
+            }
+        };
+        stream.set_nonblocking(false).map_err(Error::Io)?;
+        let id = read_hello(&mut stream, self.timeouts.accept)?;
+        if id as usize >= self.n_workers {
+            return Err(Error::Transport(format!("bad worker hello id {id}")));
+        }
+        Ok(Some((id, MuxFusionLink::new(stream)?)))
+    }
+
     /// The shared accept/hello loop: raw streams in worker-id order.
     fn accept_streams(self) -> Result<Vec<TcpStream>> {
         let deadline = Instant::now() + self.timeouts.accept;
@@ -427,6 +576,32 @@ impl TcpFusionListener {
         }
         Ok(slots.into_iter().map(|s| s.unwrap()).collect())
     }
+}
+
+/// Read the 5-byte versioned hello `[PROTOCOL_VERSION, worker_id u32 LE]`
+/// from a freshly-accepted stream, bounded by `budget`; clears the
+/// stream's read deadline afterwards.
+fn read_hello(stream: &mut TcpStream, budget: Duration) -> Result<u32> {
+    stream
+        .set_read_timeout(Some(budget.max(Duration::from_millis(1))))
+        .map_err(Error::Io)?;
+    let mut version = [0u8; 1];
+    stream
+        .read_exact(&mut version)
+        .map_err(|e| Error::Transport(format!("tcp hello read failed: {e}")))?;
+    if version[0] != PROTOCOL_VERSION {
+        return Err(Error::Transport(format!(
+            "protocol version mismatch: peer speaks v{}, this build speaks \
+             v{PROTOCOL_VERSION} — upgrade the older side",
+            version[0]
+        )));
+    }
+    let mut id_bytes = [0u8; 4];
+    stream
+        .read_exact(&mut id_bytes)
+        .map_err(|e| Error::Transport(format!("tcp hello read failed: {e}")))?;
+    stream.set_read_timeout(None).map_err(Error::Io)?;
+    Ok(u32::from_le_bytes(id_bytes))
 }
 
 /// Worker side: connect to the fusion listener (default timeouts) and
@@ -547,6 +722,15 @@ impl MuxFusionLink {
     /// session's own [`ByteMeter`] — metering happens above the mux
     /// wrapper, so the counted bytes match a standalone link exactly.
     pub fn open_session(&self, session: u32, meter: Arc<ByteMeter>) -> Endpoint {
+        Endpoint::new(self.open_session_channel(session), meter, Side::Fusion)
+    }
+
+    /// The raw per-session [`Channel`] behind
+    /// [`open_session`](MuxFusionLink::open_session) — the daemon's
+    /// reconnect-following slot channel re-opens one of these on the
+    /// replacement link after a worker comes back, swapping it in under
+    /// the same session [`Endpoint`] (and meter) the job already holds.
+    pub(crate) fn open_session_channel(&self, session: u32) -> Box<dyn Channel> {
         let (tx, rx) = channel();
         {
             let mut tbl = self.routes.lock().expect("mux routes poisoned");
@@ -556,17 +740,20 @@ impl MuxFusionLink {
             // Closed link: `tx` drops here and the session's first recv
             // reports the dead link instead of blocking forever.
         }
-        Endpoint::new(
-            Box::new(MuxChannel {
-                session,
-                writer: self.writer.clone(),
-                rx,
-                routes: self.routes.clone(),
-                scratch: Vec::new(),
-            }),
-            meter,
-            Side::Fusion,
-        )
+        Box::new(MuxChannel {
+            session,
+            writer: self.writer.clone(),
+            rx,
+            routes: self.routes.clone(),
+            scratch: Vec::new(),
+        })
+    }
+
+    /// Has the demux reader exited (worker hung up or the stream was
+    /// shut down)? Once closed a link never recovers — the daemon swaps
+    /// in a fresh link when the worker reconnects.
+    pub fn is_closed(&self) -> bool {
+        self.routes.lock().map(|t| t.closed).unwrap_or(true)
     }
 }
 
@@ -647,6 +834,25 @@ impl Channel for MuxChannel {
         *buf = frame;
         Ok(())
     }
+
+    fn recv_bytes_into_by(
+        &mut self,
+        buf: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<RecvStatus> {
+        use std::sync::mpsc::RecvTimeoutError;
+        match self.rx.recv_timeout(timeout) {
+            Ok(frame) => {
+                *buf = frame;
+                Ok(RecvStatus::Frame)
+            }
+            Err(RecvTimeoutError::Timeout) => Ok(RecvStatus::TimedOut),
+            Err(RecvTimeoutError::Disconnected) => Err(Error::Transport(format!(
+                "mux link closed while session {} awaited a frame",
+                self.session
+            ))),
+        }
+    }
 }
 
 impl Drop for MuxChannel {
@@ -709,6 +915,16 @@ impl MuxWorkerLink {
         buf.resize(len - 4, 0);
         self.reader.read_exact(buf).map_err(Error::Io)?;
         Ok(Some(u32::from_le_bytes(sid)))
+    }
+
+    /// Tear the physical connection down in both directions — the
+    /// deterministic "kill connection at round t" fault: the fusion-side
+    /// demux sees EOF and marks the worker dead, and this side's next
+    /// read fails, sending the worker into its reconnect loop.
+    pub fn kill(&self) -> Result<()> {
+        self.reader
+            .shutdown(std::net::Shutdown::Both)
+            .map_err(|e| Error::Transport(format!("connection killed: {e}")))
     }
 
     /// Per-session reply endpoint (send-only — inbound frames arrive via

@@ -15,6 +15,11 @@ pub enum Error {
     /// Transport-level failures (channel closed, socket error, ...).
     Transport(String),
 
+    /// A session degraded below its elastic floor: fewer than
+    /// `min_workers` live uplinks remained for a round, so the K-of-P
+    /// protocol could not proceed. Carries session/role/round context.
+    Degraded(String),
+
     /// Entropy-coder failures (corrupt stream, model mismatch, ...).
     Codec(String),
 
@@ -42,7 +47,46 @@ impl Error {
             Error::Transport(m) => {
                 Error::Transport(format!("session {session} ({role}): {m}"))
             }
+            Error::Degraded(m) => {
+                Error::Degraded(format!("session {session} ({role}): {m}"))
+            }
             other => other,
+        }
+    }
+
+    /// Does this error describe a bounded wait that expired (deadline /
+    /// read timeout), as opposed to a peer that actively went away? The
+    /// distinction drives the elastic protocol's straggler handling: a
+    /// timed-out worker may still answer next round, a lost peer won't.
+    pub fn is_timeout(&self) -> bool {
+        match self {
+            Error::Transport(m) => m.contains("timed out"),
+            Error::Io(e) => matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ),
+            _ => false,
+        }
+    }
+
+    /// Does this error describe a peer that actively disconnected
+    /// (hangup, EOF, closed mux link, reset socket)? Peer loss marks a
+    /// worker dead until it reconnects; a timeout does not.
+    pub fn is_peer_loss(&self) -> bool {
+        match self {
+            Error::Transport(m) => {
+                m.contains("peer hung up")
+                    || m.contains("link closed")
+                    || m.contains("connection killed")
+            }
+            Error::Io(e) => matches!(
+                e.kind(),
+                std::io::ErrorKind::UnexpectedEof
+                    | std::io::ErrorKind::ConnectionReset
+                    | std::io::ErrorKind::ConnectionAborted
+                    | std::io::ErrorKind::BrokenPipe
+            ),
+            _ => false,
         }
     }
 }
@@ -53,6 +97,7 @@ impl fmt::Display for Error {
             Error::Config(m) => write!(f, "config error: {m}"),
             Error::Protocol(m) => write!(f, "protocol error: {m}"),
             Error::Transport(m) => write!(f, "transport error: {m}"),
+            Error::Degraded(m) => write!(f, "degraded: {m}"),
             Error::Codec(m) => write!(f, "codec error: {m}"),
             Error::Numerical(m) => write!(f, "numerical error: {m}"),
             Error::Artifact(m) => write!(f, "artifact error: {m}"),
@@ -101,5 +146,25 @@ mod tests {
         );
         let cfg = Error::Config("bad p".into()).transport_context(17, "fusion");
         assert_eq!(cfg.to_string(), "config error: bad p");
+        let deg = Error::Degraded("1 live < min_workers 2 at round 4".into())
+            .transport_context(17, "fusion");
+        assert_eq!(
+            deg.to_string(),
+            "degraded: session 17 (fusion): 1 live < min_workers 2 at round 4"
+        );
+    }
+
+    #[test]
+    fn timeout_and_peer_loss_classification() {
+        assert!(Error::Transport("tcp read timed out after 50ms (peer silent)".into())
+            .is_timeout());
+        assert!(!Error::Transport("peer hung up (recv)".into()).is_timeout());
+        assert!(Error::Transport("peer hung up (recv)".into()).is_peer_loss());
+        assert!(Error::Transport(
+            "mux link closed while session 3 awaited a frame".into()
+        )
+        .is_peer_loss());
+        assert!(!Error::Transport("tcp read timed out after 50ms".into()).is_peer_loss());
+        assert!(!Error::Config("bad p".into()).is_timeout());
     }
 }

@@ -419,6 +419,22 @@ fn knob_spec(id: &'static str) -> Knob {
             Infra,
             "Worker <-> fusion transport",
         ),
+        "elastic.min_workers" => k(
+            Int,
+            Some(0.0),
+            None,
+            &[],
+            Treatment,
+            "Elastic K-of-P floor: minimum live uplinks per round (0 = off)",
+        ),
+        "elastic.round_deadline_ms" => k(
+            Int,
+            Some(0.0),
+            None,
+            &[],
+            Treatment,
+            "Elastic per-round reply deadline in ms (0 = hard barrier)",
+        ),
         "schedule.kind" => k(
             Enum,
             None,

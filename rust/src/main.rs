@@ -35,6 +35,8 @@ const RESERVED: &[&str] = &[
     "max-sessions",
     "max-queue",
     "deadline-s",
+    "priority-age-s",
+    "fault-plan",
     "metrics-listen",
     "trace",
     "priority",
@@ -303,6 +305,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
             return Err(Error::Config("--deadline-s must be > 0".into()));
         }
         sc.deadline = Some(std::time::Duration::from_secs_f64(s));
+    }
+    if let Some(s) = args.get_parsed::<f64>("priority-age-s")? {
+        if !(s > 0.0) {
+            return Err(Error::Config("--priority-age-s must be > 0".into()));
+        }
+        sc.priority_age = Some(std::time::Duration::from_secs_f64(s));
+    }
+    // Hidden chaos-testing hook (deliberately absent from `usage()`):
+    // install a deterministic fault plan on the fleet links. Spec
+    // grammar is documented on `coordinator::fault::FaultPlan::parse`.
+    if let Some(spec) = args.get("fault-plan") {
+        let plan = mpamp::coordinator::fault::FaultPlan::parse(spec)?;
+        if !plan.is_empty() {
+            eprintln!("mpampd: FAULT INJECTION ACTIVE: {}", plan.render());
+            sc.fault_plan = Some(std::sync::Arc::new(plan));
+        }
     }
     term_signal::install();
     // The metrics endpoint outlives the daemon into the drain, so the

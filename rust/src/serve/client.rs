@@ -75,7 +75,13 @@ impl Client {
                 let session = r.u32()?;
                 let queue_pos = r.u32()?;
                 r.finish()?;
-                Ok(JobHandle { conn, session, queue_pos, done: false })
+                Ok(JobHandle {
+                    conn,
+                    session,
+                    queue_pos,
+                    started: false,
+                    done: false,
+                })
             }
             wire::J_ERROR => {
                 let mut r = Reader::new(payload);
@@ -94,6 +100,9 @@ pub struct JobHandle {
     conn: JobConn,
     session: u32,
     queue_pos: u32,
+    /// Whether [`JobEvent::Started`] has arrived — before it, the job is
+    /// still queued daemon-side, and read failures are reported as such.
+    started: bool,
     done: bool,
 }
 
@@ -122,7 +131,10 @@ impl JobHandle {
     /// ([`JobEvent::Report`] / [`JobEvent::Cancelled`] /
     /// [`JobEvent::Failed`]), further calls error. A read past the
     /// handle's deadline (daemon died, network gone) returns
-    /// [`Error::Transport`] tagged with this session's id.
+    /// [`Error::Transport`] tagged with this session's id; if the job
+    /// was still queued (no [`JobEvent::Started`] yet), the error says
+    /// so and reports the admission-time queue position, so a client
+    /// parked behind a dead daemon sees *why* nothing ever arrived.
     pub fn next_event(&mut self) -> Result<JobEvent> {
         if self.done {
             return Err(Error::Protocol(
@@ -130,14 +142,25 @@ impl JobHandle {
             ));
         }
         let session = self.session;
-        let (kind, payload) = self
-            .conn
-            .recv()
-            .map_err(|e| e.transport_context(session, "client"))?;
+        let (kind, payload) = match self.conn.recv() {
+            Ok(frame) => frame,
+            Err(e) => {
+                let e = e.transport_context(session, "client");
+                if !self.started && self.queue_pos > 0 {
+                    return Err(Error::Transport(format!(
+                        "session {session}: daemon went away while the job \
+                         was still queued (position {} at admission): {e}",
+                        self.queue_pos
+                    )));
+                }
+                return Err(e);
+            }
+        };
         let mut r = Reader::new(payload);
         match kind {
             wire::J_STARTED => {
                 r.finish()?;
+                self.started = true;
                 Ok(JobEvent::Started)
             }
             wire::J_ITER => {

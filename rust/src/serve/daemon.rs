@@ -17,22 +17,39 @@
 //! the machine instead of oversubscribing it (and the chunk-ordered
 //! reduction keeps its fixed fan-out, preserving bit-determinism).
 //!
+//! # Fault tolerance
+//!
+//! The fleet is **elastic**: each worker connection lives in a
+//! [`FleetSlot`] rather than being fixed for the daemon's lifetime. When
+//! a worker's link dies (process exit, scripted [`FaultPlan`] kill, or a
+//! plain TCP reset), its thread reconnects with capped exponential
+//! backoff and deterministic jitter; the fleet acceptor replays every
+//! in-flight session's registration to the rejoined worker and bumps the
+//! slot generation, which makes the sessions' [`SlotChannel`]s re-open
+//! their routes on the replacement link. A job configured with elastic
+//! K-of-P rounds (`min_workers` + `round_deadline_ms`) keeps fusing on
+//! the live majority in the meantime and only fails once fewer than K
+//! workers remain; the rejoined worker resumes at the next round
+//! boundary.
+//!
 //! [`Pool::global`]: crate::runtime::pool::Pool::global
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use crate::config::{EngineKind, Partitioning, RunConfig};
+use crate::coordinator::fault::{frame_round, Fault, FaultChannel, FaultPlan};
+use crate::coordinator::message::{TAG_COLSTEP, TAG_QUANT, TAG_STEP};
 use crate::coordinator::scenario::{Column, Row, Scenario};
 use crate::coordinator::session::{IterSnapshot, RunReport, Session};
 use crate::coordinator::transport::{
-    tcp_connect_mux, Endpoint, MuxFusionLink, MuxWorkerLink, TcpFusionListener,
-    TcpTimeouts,
+    tcp_connect_mux, Channel, Endpoint, MuxFusionLink, MuxWorkerLink,
+    RecvStatus, Side, TcpFusionListener, TcpTimeouts,
 };
 use crate::coordinator::worker::{Served, WorkerParams, WorkerSession};
 use crate::engine::{ColumnWorkerData, ComputeEngine, RowBatchData, RustEngine};
@@ -60,6 +77,16 @@ fn sync_queue_gauges(q: &JobQueue) {
     reg.jobs_queued.set(q.queued() as u64);
 }
 
+/// Feed a queue promotion (the return of [`JobQueue::release`] /
+/// [`JobQueue::abandon`]) into the per-priority queue-wait histograms.
+fn record_promotion(promoted: Option<(u32, Priority, Duration)>) {
+    if let Some((_, priority, waited)) = promoted {
+        tel_metrics()
+            .queue_wait(priority == Priority::High)
+            .observe_us(waited.as_micros() as u64);
+    }
+}
+
 /// Daemon capacity and placement policy.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
@@ -78,10 +105,20 @@ pub struct ServeConfig {
     pub deadline: Option<Duration>,
     /// Timeout policy for the fleet links and the job handshake.
     pub timeouts: TcpTimeouts,
+    /// Priority aging: a normal-priority job queued at least this long
+    /// is promoted to the back of the high band (`None` = strict
+    /// two-level priority, the pre-aging behaviour).
+    pub priority_age: Option<Duration>,
+    /// Deterministic fault plan installed on every fleet worker's link
+    /// (kill/delay at the link level, drop/corrupt on the per-session
+    /// uplinks). `None` serves faithfully; this is the chaos-testing
+    /// hook behind `mpamp serve --fault-plan`.
+    pub fault_plan: Option<Arc<FaultPlan>>,
 }
 
 impl ServeConfig {
-    /// Defaults: 4 concurrent sessions, 16 queued, no deadline.
+    /// Defaults: 4 concurrent sessions, 16 queued, no deadline, strict
+    /// priority, no injected faults.
     pub fn new(listen: &str, fleet_p: usize) -> Self {
         ServeConfig {
             listen: listen.to_string(),
@@ -90,6 +127,8 @@ impl ServeConfig {
             max_queue: 16,
             deadline: None,
             timeouts: TcpTimeouts::default(),
+            priority_age: None,
+            fault_plan: None,
         }
     }
 }
@@ -135,20 +174,136 @@ struct FleetRegister {
     entry: WorkerEntry,
 }
 
-/// State shared between the acceptor, the job threads, and shutdown.
+/// The fusion side of one fleet worker's connection. `link` is `None`
+/// while the worker is down; the fleet acceptor installs the
+/// replacement link and bumps `generation`, which tells every session's
+/// [`SlotChannel`] on this slot to re-open its route there.
+struct FleetSlot {
+    link: Mutex<Option<MuxFusionLink>>,
+    generation: AtomicU64,
+}
+
+/// Everything needed to replay a session's registration to a worker
+/// that reconnects mid-run (kept from admission until the job's slot is
+/// released).
+struct RejoinEntry {
+    cfg: RunConfig,
+    batch: Arc<Batch>,
+    meter: Arc<ByteMeter>,
+}
+
+/// Stub channel for a slot whose worker is down at session-open time:
+/// every operation reports the dead link — classified as peer loss,
+/// which elastic sessions tolerate — until a refresh swaps in a live
+/// route.
+struct ClosedChannel;
+
+impl Channel for ClosedChannel {
+    fn send_bytes(&mut self, _buf: &[u8]) -> Result<()> {
+        Err(Error::Transport("mux link closed (worker down)".into()))
+    }
+    fn recv_bytes_into(&mut self, _buf: &mut Vec<u8>) -> Result<()> {
+        Err(Error::Transport("mux link closed (worker down)".into()))
+    }
+}
+
+/// A per-session fusion channel that follows its [`FleetSlot`] across
+/// worker reconnects: a send or deadline-bounded receive that fails
+/// with peer loss re-opens the session's route on the slot's current
+/// link (if a replacement arrived) and retries once.
+struct SlotChannel {
+    session: u32,
+    slot: Arc<FleetSlot>,
+    gen: u64,
+    inner: Box<dyn Channel>,
+}
+
+impl SlotChannel {
+    /// Swap `inner` onto the slot's current link if one arrived since
+    /// this channel last looked.
+    fn refresh(&mut self) -> bool {
+        let cur = self.slot.generation.load(Ordering::SeqCst);
+        if cur == self.gen {
+            return false;
+        }
+        let guard = self.slot.link.lock().expect("fleet slot poisoned");
+        let Some(link) = guard.as_ref() else { return false };
+        self.inner = link.open_session_channel(self.session);
+        self.gen = cur;
+        true
+    }
+}
+
+impl Channel for SlotChannel {
+    fn send_bytes(&mut self, buf: &[u8]) -> Result<()> {
+        match self.inner.send_bytes(buf) {
+            Err(e) if e.is_peer_loss() && self.refresh() => {
+                self.inner.send_bytes(buf)
+            }
+            other => other,
+        }
+    }
+    fn recv_bytes_into(&mut self, buf: &mut Vec<u8>) -> Result<()> {
+        // Blocking receives never retry: the retried wait could block
+        // forever on a worker that missed the round's broadcast. The
+        // deadline path below is the elastic one.
+        self.inner.recv_bytes_into(buf)
+    }
+    fn recv_bytes_into_by(
+        &mut self,
+        buf: &mut Vec<u8>,
+        timeout: Duration,
+    ) -> Result<RecvStatus> {
+        match self.inner.recv_bytes_into_by(buf, timeout) {
+            Err(e) if e.is_peer_loss() && self.refresh() => {
+                self.inner.recv_bytes_into_by(buf, timeout)
+            }
+            other => other,
+        }
+    }
+}
+
+/// Open session `sid`'s fusion endpoint on one fleet slot. Never fails:
+/// a slot whose worker is down gets a [`ClosedChannel`] (peer-loss
+/// errors an elastic session degrades over instead of aborting), and a
+/// later round picks the worker back up through the slot generation.
+fn open_slot_endpoint(
+    slot: &Arc<FleetSlot>,
+    sid: u32,
+    meter: Arc<ByteMeter>,
+) -> Endpoint {
+    let gen = slot.generation.load(Ordering::SeqCst);
+    let inner: Box<dyn Channel> = {
+        let guard = slot.link.lock().expect("fleet slot poisoned");
+        match guard.as_ref() {
+            Some(link) => link.open_session_channel(sid),
+            None => Box::new(ClosedChannel),
+        }
+    };
+    Endpoint::new(
+        Box::new(SlotChannel { session: sid, slot: slot.clone(), gen, inner }),
+        meter,
+        Side::Fusion,
+    )
+}
+
+/// State shared between the acceptors, the job threads, and shutdown.
 struct DaemonShared {
     cfg: ServeConfig,
-    /// Fusion sides of the fleet links, in worker-id order. Taken (and
-    /// dropped) on shutdown, which EOFs the fleet; job threads arriving
-    /// after that see `None` and bounce.
-    links: Mutex<Option<Vec<MuxFusionLink>>>,
+    /// Per-worker fleet slots, in worker-id order. Links are taken (and
+    /// dropped) on shutdown, which EOFs the fleet.
+    slots: Vec<Arc<FleetSlot>>,
     /// Per-worker registration channels (`Mutex` keeps the `Sender`
     /// shareable across job threads on any toolchain).
     ctrls: Vec<Mutex<Sender<FleetRegister>>>,
+    /// In-flight sessions, for registration replay to rejoined workers.
+    rejoin: Mutex<HashMap<u32, RejoinEntry>>,
     queue: Mutex<JobQueue>,
     queue_cv: Condvar,
     next_session: AtomicU32,
-    shutdown: AtomicBool,
+    /// Shared with the fleet threads directly (they outlive individual
+    /// links, so they check it between reconnect attempts).
+    shutdown: Arc<AtomicBool>,
     /// Graceful-drain mode: new submissions bounce, admitted jobs run to
     /// completion. Set by [`Daemon::begin_drain`] (the CLI's SIGTERM /
     /// SIGINT path).
@@ -161,6 +316,7 @@ pub struct Daemon {
     addr: SocketAddr,
     shared: Arc<DaemonShared>,
     acceptor: Option<JoinHandle<()>>,
+    fleet_acceptor: Option<JoinHandle<()>>,
     fleet: Vec<JoinHandle<Result<()>>>,
 }
 
@@ -171,42 +327,86 @@ impl Daemon {
             return Err(Error::Config("fleet_p must be ≥ 1".into()));
         }
         // Fleet: P worker threads connect back over loopback, then the
-        // fusion side wraps each connection in a multiplexed link.
+        // fusion side wraps each connection in a multiplexed link. The
+        // threads own their reconnect loops, so they get the fleet
+        // address, the fault plan, and the shutdown flag directly.
         let fleet_listener =
             TcpFusionListener::bind_with("127.0.0.1:0", cfg.fleet_p, cfg.timeouts)?;
-        let fleet_addr = fleet_listener.addr()?.to_string();
+        let fleet_addr = fleet_listener.addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
         let mut ctrls = Vec::with_capacity(cfg.fleet_p);
         let mut fleet = Vec::with_capacity(cfg.fleet_p);
         for id in 0..cfg.fleet_p {
             let (tx, rx) = mpsc::channel::<FleetRegister>();
             ctrls.push(Mutex::new(tx));
-            let addr = fleet_addr.clone();
             let timeouts = cfg.timeouts;
+            let plan = cfg.fault_plan.clone();
+            let stop = shutdown.clone();
             fleet.push(
                 std::thread::Builder::new()
                     .name(format!("mpampd-worker-{id}"))
                     .spawn(move || {
-                        let link = tcp_connect_mux(&addr, id as u32, timeouts)?;
-                        fleet_worker(link, rx, id as u32)
+                        fleet_worker_loop(fleet_addr, rx, id as u32, timeouts, plan, stop)
                     })
                     .map_err(Error::Io)?,
             );
         }
-        let links = fleet_listener.accept_all_mux()?;
+        // Initial fleet accept, one link at a time: unlike the one-shot
+        // `accept_all_mux`, this keeps the listener alive afterwards so
+        // dead workers can reconnect into their slots.
+        let mut pending: Vec<Option<MuxFusionLink>> =
+            (0..cfg.fleet_p).map(|_| None).collect();
+        let deadline = Instant::now() + cfg.timeouts.accept;
+        let mut connected = 0usize;
+        while connected < cfg.fleet_p {
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return Err(Error::Transport(format!(
+                    "fleet accept timed out with {connected}/{} workers connected",
+                    cfg.fleet_p
+                )));
+            }
+            let wait = left.min(Duration::from_millis(250));
+            if let Some((id, link)) = fleet_listener.accept_one_mux(wait)? {
+                let slot = &mut pending[id as usize];
+                if slot.is_some() {
+                    return Err(Error::Protocol(format!(
+                        "fleet worker id {id} connected twice during boot"
+                    )));
+                }
+                *slot = Some(link);
+                connected += 1;
+            }
+        }
+        let slots: Vec<Arc<FleetSlot>> = pending
+            .into_iter()
+            .map(|link| {
+                Arc::new(FleetSlot {
+                    link: Mutex::new(link),
+                    generation: AtomicU64::new(0),
+                })
+            })
+            .collect();
 
         let job_listener = TcpListener::bind(&cfg.listen).map_err(Error::Io)?;
         let addr = job_listener.local_addr().map_err(Error::Io)?;
         let queue = JobQueue::new(cfg.max_sessions, cfg.max_queue);
         let shared = Arc::new(DaemonShared {
             cfg,
-            links: Mutex::new(Some(links)),
+            slots,
             ctrls,
+            rejoin: Mutex::new(HashMap::new()),
             queue: Mutex::new(queue),
             queue_cv: Condvar::new(),
             next_session: AtomicU32::new(1),
-            shutdown: AtomicBool::new(false),
+            shutdown,
             draining: AtomicBool::new(false),
         });
+        let reacc = shared.clone();
+        let fleet_acceptor = std::thread::Builder::new()
+            .name("mpampd-fleet-accept".into())
+            .spawn(move || fleet_accept_loop(fleet_listener, reacc))
+            .map_err(Error::Io)?;
         let acc = shared.clone();
         let acceptor = std::thread::Builder::new()
             .name("mpampd-accept".into())
@@ -227,7 +427,13 @@ impl Daemon {
                 }
             })
             .map_err(Error::Io)?;
-        Ok(Daemon { addr, shared, acceptor: Some(acceptor), fleet })
+        Ok(Daemon {
+            addr,
+            shared,
+            acceptor: Some(acceptor),
+            fleet_acceptor: Some(fleet_acceptor),
+            fleet,
+        })
     }
 
     /// The bound job-listener address (what clients connect to).
@@ -291,9 +497,19 @@ impl Daemon {
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
-        // Dropping the fusion links EOFs every fleet worker's demux read.
-        let links = self.shared.links.lock().expect("links poisoned").take();
-        drop(links);
+        // Dropping the fusion links EOFs every fleet worker's demux read;
+        // the workers then see the shutdown flag and exit instead of
+        // reconnecting.
+        for slot in &self.shared.slots {
+            let link = slot.link.lock().expect("fleet slot poisoned").take();
+            drop(link);
+        }
+        // The fleet acceptor polls with a short timeout, so it notices
+        // the flag within one beat; joining it also drops the fleet
+        // listener, failing any reconnect attempt still in flight.
+        if let Some(h) = self.fleet_acceptor.take() {
+            let _ = h.join();
+        }
         // Wake queued jobs so they notice shutdown and bail out.
         self.shared.queue_cv.notify_all();
     }
@@ -310,52 +526,277 @@ impl Drop for Daemon {
 
 // ---------- fleet side ----------
 
-/// One fleet worker: demultiplex session frames off the shared link,
-/// look up (or register) the session's state, and serve the frame with
-/// the exact same [`WorkerSession`] state machine a standalone worker
-/// thread runs.
-fn fleet_worker(
-    mut link: MuxWorkerLink,
+/// How one serve pass over a fleet link ended.
+enum LinkEnd {
+    /// The daemon is shutting down: exit the worker thread.
+    Shutdown,
+    /// The link died (peer loss, scripted kill): reconnect with backoff.
+    Reconnect,
+    /// An unrecoverable protocol error: surface it from the thread.
+    Fatal(Error),
+}
+
+/// Capped exponential backoff with deterministic per-worker jitter,
+/// sliced into short sleeps so shutdown interrupts a long wait promptly.
+fn backoff_sleep(worker_id: u32, attempt: u32, shutdown: &AtomicBool) {
+    let exp = attempt.clamp(1, 8) - 1;
+    let base = (10u64 << exp).min(2_000);
+    let mut rng = Rng::new(((worker_id as u64) << 32) ^ u64::from(attempt));
+    let mut left = base + rng.below(base / 2 + 1);
+    while left > 0 && !shutdown.load(Ordering::SeqCst) {
+        let slice = left.min(25);
+        std::thread::sleep(Duration::from_millis(slice));
+        left -= slice;
+    }
+}
+
+/// The first not-yet-fired `KillConn` fault due for `worker` at `round`.
+/// `should_kill`'s `round <= t` match is sticky by design (a severed
+/// standalone connection stays severed), but a daemon worker *recovers*
+/// — so each scripted kill must fire exactly once or the worker would
+/// re-kill itself forever after reconnecting.
+fn due_kill(
+    plan: &FaultPlan,
+    worker: u32,
+    round: u32,
+    fired: &HashSet<usize>,
+) -> Option<usize> {
+    plan.faults.iter().enumerate().find_map(|(i, f)| match f {
+        Fault::KillConn { worker: w, round: r }
+            if *w == worker && *r <= round && !fired.contains(&i) =>
+        {
+            Some(i)
+        }
+        _ => None,
+    })
+}
+
+/// One fleet worker thread: connect (and reconnect, with backoff) to the
+/// fusion listener, then serve frames until the link dies or the daemon
+/// shuts down.
+fn fleet_worker_loop(
+    addr: SocketAddr,
     ctrl: Receiver<FleetRegister>,
     worker_id: u32,
+    timeouts: TcpTimeouts,
+    plan: Option<Arc<FaultPlan>>,
+    shutdown: Arc<AtomicBool>,
 ) -> Result<()> {
+    // Kill and delay faults act on the link itself (below); the
+    // per-session endpoints get the plan stripped to its frame-level
+    // faults (drop/corrupt) so nothing fires twice.
+    let frame_plan = plan.as_ref().map(|p| {
+        Arc::new(FaultPlan {
+            faults: p
+                .faults
+                .iter()
+                .filter(|f| {
+                    matches!(f, Fault::DropUplink { .. } | Fault::Corrupt { .. })
+                })
+                .copied()
+                .collect(),
+        })
+    });
+    let mut fired: HashSet<usize> = HashSet::new();
+    let mut attempt: u32 = 0;
+    loop {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let link = match tcp_connect_mux(addr, worker_id, timeouts) {
+            Ok(link) => {
+                attempt = 0;
+                link
+            }
+            Err(_) => {
+                attempt = attempt.saturating_add(1);
+                backoff_sleep(worker_id, attempt, &shutdown);
+                continue;
+            }
+        };
+        match serve_link(
+            link,
+            &ctrl,
+            worker_id,
+            plan.as_deref(),
+            frame_plan.as_ref(),
+            &mut fired,
+            &shutdown,
+        ) {
+            LinkEnd::Shutdown => return Ok(()),
+            LinkEnd::Reconnect => {
+                attempt = attempt.saturating_add(1);
+                backoff_sleep(worker_id, attempt, &shutdown);
+            }
+            LinkEnd::Fatal(e) => return Err(e),
+        }
+    }
+}
+
+/// Serve one fleet link until it ends: demultiplex session frames,
+/// look up (or register) each session's state, and serve the frame with
+/// the exact same [`WorkerSession`] state machine a standalone worker
+/// thread runs.
+fn serve_link(
+    mut link: MuxWorkerLink,
+    ctrl: &Receiver<FleetRegister>,
+    worker_id: u32,
+    plan: Option<&FaultPlan>,
+    frame_plan: Option<&Arc<FaultPlan>>,
+    fired: &mut HashSet<usize>,
+    shutdown: &AtomicBool,
+) -> LinkEnd {
     struct Live {
         entry: WorkerEntry,
         ep: Endpoint,
+        synced: bool,
     }
     let mut live: HashMap<u32, Live> = HashMap::new();
     let mut frame: Vec<u8> = Vec::new();
     let role = format!("worker {worker_id}");
+    let ended = |shutdown: &AtomicBool| {
+        if shutdown.load(Ordering::SeqCst) {
+            LinkEnd::Shutdown
+        } else {
+            LinkEnd::Reconnect
+        }
+    };
     loop {
-        let sid = match link.recv_session_frame(&mut frame)? {
-            Some(sid) => sid,
-            // Fusion links dropped: clean fleet shutdown.
-            None => return Ok(()),
+        let sid = match link.recv_session_frame(&mut frame) {
+            Ok(Some(sid)) => sid,
+            // Fusion side dropped the link: shutdown or reconnect.
+            Ok(None) => return ended(shutdown),
+            Err(e) if e.is_peer_loss() || e.is_timeout() || matches!(e, Error::Io(_)) => {
+                return ended(shutdown)
+            }
+            Err(e) => return LinkEnd::Fatal(e),
         };
+        // Scripted link-level faults: stall this round's broadcast, or
+        // sever the connection (once per scripted kill).
+        if let Some(p) = plan {
+            if let Some((tag, t)) = frame_round(&frame) {
+                if tag == TAG_STEP || tag == TAG_COLSTEP {
+                    let ms = p.delay_ms(worker_id, t);
+                    if ms > 0 {
+                        std::thread::sleep(Duration::from_millis(ms));
+                    }
+                }
+                if let Some(idx) = due_kill(p, worker_id, t, fired) {
+                    fired.insert(idx);
+                    let _ = link.kill();
+                    return ended(shutdown);
+                }
+            }
+        }
         if !live.contains_key(&sid) {
             // Registrations are enqueued before the job's first frame is
             // sent, so draining here always finds a new session's entry.
+            // A replayed registration racing the original is dropped:
+            // re-inserting would reset a live session mid-run.
             while let Ok(reg) = ctrl.try_recv() {
-                let ep = link.session_endpoint(reg.session, reg.meter);
-                live.insert(reg.session, Live { entry: reg.entry, ep });
+                if live.contains_key(&reg.session) {
+                    continue;
+                }
+                let mut ep = link.session_endpoint(reg.session, reg.meter);
+                if let Some(fp) = frame_plan.filter(|fp| !fp.is_empty()) {
+                    let fp = fp.clone();
+                    ep.wrap_channel(move |inner| {
+                        Box::new(FaultChannel::new(inner, fp, worker_id))
+                    });
+                }
+                live.insert(
+                    reg.session,
+                    Live { entry: reg.entry, ep, synced: false },
+                );
             }
         }
         let Some(l) = live.get_mut(&sid) else {
-            return Err(Error::Protocol(format!(
+            return LinkEnd::Fatal(Error::Protocol(format!(
                 "fleet {role}: frame for unregistered session {sid}"
             )));
         };
-        match l
-            .entry
-            .handle(&frame, &mut l.ep)
-            .map_err(|e| e.transport_context(sid, &role))?
-        {
-            Served::Continue => {}
-            Served::Done => {
+        // A freshly (re)registered session must open on a broadcast: a
+        // stale QuantCmd for a round this replacement never stepped is
+        // discarded instead of being fed to the state machine.
+        if !l.synced {
+            if frame.first() == Some(&TAG_QUANT) {
+                continue;
+            }
+            l.synced = true;
+        }
+        match l.entry.handle(&frame, &mut l.ep) {
+            Ok(Served::Continue) => {}
+            Ok(Served::Done) => {
                 live.remove(&sid);
             }
+            Err(e) => return LinkEnd::Fatal(e.transport_context(sid, &role)),
         }
     }
+}
+
+/// Accept fleet reconnects for the daemon's lifetime: replay every
+/// in-flight session's registration to the rejoined worker, then
+/// install the replacement link and bump the slot generation so the
+/// sessions' [`SlotChannel`]s migrate onto it.
+fn fleet_accept_loop(listener: TcpFusionListener, shared: Arc<DaemonShared>) {
+    while !shared.shutdown.load(Ordering::SeqCst) {
+        // `accept_one_mux` validates the hello's worker id < fleet_p.
+        let (id, link) =
+            match listener.accept_one_mux(Duration::from_millis(250)) {
+                Ok(Some(pair)) => pair,
+                Ok(None) | Err(_) => continue,
+            };
+        let idx = id as usize;
+        if replay_sessions(&shared, idx).is_err() {
+            continue;
+        }
+        let slot = &shared.slots[idx];
+        *slot.link.lock().expect("fleet slot poisoned") = Some(link);
+        slot.generation.fetch_add(1, Ordering::SeqCst);
+        tel_metrics().workers_reconnected.add(1);
+    }
+}
+
+/// Queue a fresh registration for every in-flight session onto a
+/// rejoined worker's control channel (consumed when the worker first
+/// sees an unknown session id on the new link).
+fn replay_sessions(shared: &Arc<DaemonShared>, worker: usize) -> Result<()> {
+    let rejoin = shared.rejoin.lock().expect("rejoin registry poisoned");
+    for (&sid, entry) in rejoin.iter() {
+        let we = build_entry(worker, &entry.cfg, &entry.batch)?;
+        let reg =
+            FleetRegister { session: sid, meter: entry.meter.clone(), entry: we };
+        shared.ctrls[worker]
+            .lock()
+            .expect("fleet control poisoned")
+            .send(reg)
+            .map_err(|_| {
+                Error::Transport(format!("fleet worker {worker} is gone"))
+            })?;
+    }
+    Ok(())
+}
+
+/// Rebuild one worker's shard state for a session, for rejoin replay.
+/// The shard split is deterministic in the config, so the replacement
+/// serves the exact bytes the original would have (workers hold no
+/// cross-round state: every round opens with a full broadcast).
+fn build_entry(id: usize, cfg: &RunConfig, batch: &Arc<Batch>) -> Result<WorkerEntry> {
+    let params = worker_params(id, cfg);
+    Ok(match cfg.partitioning {
+        Partitioning::Row => {
+            let shard = Row::split(batch, cfg.p)?.swap_remove(id);
+            let ws = WorkerSession::<Row>::new(&shard, cfg.batch);
+            let engine = RustEngine::new_pool_aware(cfg.prior, cfg.threads);
+            WorkerEntry::Row { params, shard, ws, engine }
+        }
+        Partitioning::Column => {
+            let shard = Column::split(batch, cfg.p)?.swap_remove(id);
+            let ws = WorkerSession::<Column>::new(&shard, cfg.batch);
+            let engine = RustEngine::new_pool_aware(cfg.prior, cfg.threads);
+            WorkerEntry::Column { params, shard, ws, engine }
+        }
+    })
 }
 
 // ---------- job side ----------
@@ -494,7 +935,7 @@ fn serve_job(shared: Arc<DaemonShared>, stream: TcpStream) -> Result<()> {
             // An unreachable client must not leak its admitted slot.
             if let Err(e) = send_accepted(&mut conn, sid, 0) {
                 let mut q = shared.queue.lock().expect("queue poisoned");
-                q.release();
+                record_promotion(q.release());
                 sync_queue_gauges(&q);
                 drop(q);
                 shared.queue_cv.notify_all();
@@ -518,9 +959,10 @@ fn serve_job(shared: Arc<DaemonShared>, stream: TcpStream) -> Result<()> {
     }
     // From here this thread owns a running slot: release it on all paths.
     let outcome = run_job(&shared, &mut conn, sid, &cfg);
+    shared.rejoin.lock().expect("rejoin registry poisoned").remove(&sid);
     {
         let mut q = shared.queue.lock().expect("queue poisoned");
-        q.release();
+        record_promotion(q.release());
         sync_queue_gauges(&q);
     }
     shared.queue_cv.notify_all();
@@ -550,7 +992,7 @@ fn serve_job(shared: Arc<DaemonShared>, stream: TcpStream) -> Result<()> {
 fn abandon_queued(shared: &DaemonShared, sid: u32) {
     {
         let mut q = shared.queue.lock().expect("queue poisoned");
-        q.abandon(sid);
+        record_promotion(q.abandon(sid));
         sync_queue_gauges(&q);
     }
     shared.queue_cv.notify_all();
@@ -590,6 +1032,16 @@ fn wait_for_slot(
     loop {
         {
             let mut q = shared.queue.lock().expect("queue poisoned");
+            // Priority aging: starved normal jobs move to the high band.
+            // Every queued job's wait loop runs this, so aging advances
+            // even when no job finishes; `promote_aged` only counts
+            // actual moves, so concurrent pollers cannot double-count.
+            if let Some(age) = shared.cfg.priority_age {
+                let moved = q.promote_aged(age);
+                if moved > 0 {
+                    tel_metrics().jobs_requeued.add(moved as u64);
+                }
+            }
             if q.claim(sid) {
                 return Ok(true);
             }
@@ -616,7 +1068,7 @@ fn wait_for_slot(
         if shared.shutdown.load(Ordering::SeqCst) {
             {
                 let mut q = shared.queue.lock().expect("queue poisoned");
-                q.abandon(sid);
+                record_promotion(q.abandon(sid));
                 sync_queue_gauges(&q);
             }
             let reg = tel_metrics();
@@ -648,13 +1100,25 @@ fn run_job(
     )?);
     let job_meter = Arc::new(ByteMeter::new());
     register_fleet(shared, sid, cfg, &batch, &job_meter)?;
-    let endpoints: Vec<Endpoint> = {
-        let guard = shared.links.lock().expect("links poisoned");
-        let Some(links) = guard.as_ref() else {
-            return Err(Error::Transport("daemon is shutting down".into()));
-        };
-        links.iter().map(|l| l.open_session(sid, job_meter.clone())).collect()
-    };
+    // Record the session for rejoin replay: a worker reconnecting
+    // mid-run gets this registration replayed and resumes at its next
+    // round boundary. Removed by `serve_job` when the slot is released.
+    shared.rejoin.lock().expect("rejoin registry poisoned").insert(
+        sid,
+        RejoinEntry {
+            cfg: cfg.clone(),
+            batch: batch.clone(),
+            meter: job_meter.clone(),
+        },
+    );
+    if shared.shutdown.load(Ordering::SeqCst) {
+        return Err(Error::Transport("daemon is shutting down".into()));
+    }
+    let endpoints: Vec<Endpoint> = shared
+        .slots
+        .iter()
+        .map(|slot| open_slot_endpoint(slot, sid, job_meter.clone()))
+        .collect();
     let engine: Arc<dyn ComputeEngine> =
         Arc::new(RustEngine::new_pool_aware(cfg.prior, cfg.threads));
     let mut session = Session::with_external_transport(

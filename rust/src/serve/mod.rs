@@ -70,6 +70,21 @@
 //! byte of the submit frame — `mpamp run --connect … --priority high`):
 //! a freed slot goes to the longest-waiting high-priority job first,
 //! FIFO within each class, one shared `max_queue` bound across both.
+//! [`ServeConfig::priority_age`] (`--priority-age-s`) turns on priority
+//! aging: normal jobs that have waited past the threshold promote into
+//! the high band in arrival order, so the normal class can be delayed
+//! but never starved.
+//!
+//! # Fault tolerance
+//!
+//! Fleet workers that lose their mux connection are detected, backed
+//! off, and re-accepted with their session registrations replayed —
+//! elastic jobs (`elastic.min_workers` / `elastic.round_deadline_ms`
+//! in the submitted config) ride through the outage on partial
+//! fusions. See the [`daemon`] module docs for the reconnect design
+//! and [`coordinator::fault`](crate::coordinator::fault) for the
+//! deterministic chaos-testing hooks
+//! ([`ServeConfig::fault_plan`], `mpamp serve --fault-plan`).
 //!
 //! # Observability
 //!

@@ -10,8 +10,17 @@
 //! only when no high job waits to the longest-waiting
 //! [`Priority::Normal`] one. Both levels share the one `max_queued`
 //! bound — priority buys ordering, not extra capacity.
+//!
+//! Strict priority can starve the normal band under a steady stream of
+//! high submissions, so the queue also supports **aging**
+//! ([`promote_aged`](JobQueue::promote_aged)): a normal job that has
+//! waited past a configurable threshold is re-queued at the back of the
+//! high band (FIFO among the promoted, original enqueue time kept), so
+//! every admitted job eventually drains. The daemon calls it from its
+//! wait loop with `--priority-age-s`.
 
 use std::collections::{HashSet, VecDeque};
+use std::time::{Duration, Instant};
 
 /// Scheduling class of a submitted job. High-priority jobs overtake
 /// normal ones in the daemon's wait queue; within a class, first come,
@@ -85,10 +94,12 @@ pub struct JobQueue {
     max_running: usize,
     max_queued: usize,
     running: usize,
-    /// Waiting high-priority sessions, oldest first.
-    high: VecDeque<u32>,
-    /// Waiting normal-priority sessions, oldest first.
-    normal: VecDeque<u32>,
+    /// Waiting high-priority sessions with their enqueue times, oldest
+    /// first (aged normal jobs keep their original enqueue time).
+    high: VecDeque<(u32, Instant)>,
+    /// Waiting normal-priority sessions with their enqueue times,
+    /// oldest first.
+    normal: VecDeque<(u32, Instant)>,
     /// Sessions moved queue → running by [`release`](JobQueue::release)
     /// whose owning thread has not yet [`claim`](JobQueue::claim)ed the
     /// slot (promotion happens under the releasing thread's lock hold).
@@ -119,11 +130,11 @@ impl JobQueue {
         } else if self.queued() < self.max_queued {
             match priority {
                 Priority::High => {
-                    self.high.push_back(id);
+                    self.high.push_back((id, Instant::now()));
                     Admission::Queued(self.high.len())
                 }
                 Priority::Normal => {
-                    self.normal.push_back(id);
+                    self.normal.push_back((id, Instant::now()));
                     Admission::Queued(self.high.len() + self.normal.len())
                 }
             }
@@ -142,28 +153,60 @@ impl JobQueue {
     /// A running session ended: free its slot and promote the
     /// longest-waiting high-priority session, else the longest-waiting
     /// normal one (the promoted session keeps the slot counted as
-    /// running until it releases in turn).
-    pub fn release(&mut self) {
+    /// running until it releases in turn). Returns the promoted
+    /// session, the band it drained from, and how long it waited — the
+    /// daemon feeds the wait into the per-priority queue-wait
+    /// histograms.
+    pub fn release(&mut self) -> Option<(u32, Priority, Duration)> {
         debug_assert!(self.running > 0, "release without a running session");
         self.running = self.running.saturating_sub(1);
-        if let Some(next) = self.high.pop_front().or_else(|| self.normal.pop_front())
-        {
-            self.running += 1;
-            self.promoted.insert(next);
-        }
+        let (next, priority, since) = match self.high.pop_front() {
+            Some((id, t)) => (id, Priority::High, t),
+            None => {
+                let (id, t) = self.normal.pop_front()?;
+                (id, Priority::Normal, t)
+            }
+        };
+        self.running += 1;
+        self.promoted.insert(next);
+        Some((next, priority, since.elapsed()))
     }
 
     /// A *waiting* session gave up (client cancel or disconnect). If it
     /// was promoted between its last poll and now, the slot it silently
-    /// held is released onward.
-    pub fn abandon(&mut self, id: u32) {
-        if let Some(idx) = self.high.iter().position(|&q| q == id) {
+    /// held is released onward (the onward promotion, if any, is
+    /// returned exactly as from [`release`](JobQueue::release)).
+    pub fn abandon(&mut self, id: u32) -> Option<(u32, Priority, Duration)> {
+        if let Some(idx) = self.high.iter().position(|&(q, _)| q == id) {
             self.high.remove(idx);
-        } else if let Some(idx) = self.normal.iter().position(|&q| q == id) {
+            None
+        } else if let Some(idx) = self.normal.iter().position(|&(q, _)| q == id) {
             self.normal.remove(idx);
+            None
         } else if self.promoted.remove(&id) {
-            self.release();
+            self.release()
+        } else {
+            None
         }
+    }
+
+    /// Aging: re-queue every normal-priority waiter that has waited at
+    /// least `max_age` to the back of the high band. Aged jobs keep
+    /// their original enqueue time and relative order (they form a
+    /// prefix of the normal deque, which is FIFO by construction).
+    /// Returns how many jobs moved, for the `jobs_requeued_total`
+    /// counter.
+    pub fn promote_aged(&mut self, max_age: Duration) -> usize {
+        let mut moved = 0usize;
+        while let Some(&(_, since)) = self.normal.front() {
+            if since.elapsed() < max_age {
+                break;
+            }
+            let entry = self.normal.pop_front().expect("front just peeked");
+            self.high.push_back(entry);
+            moved += 1;
+        }
+        moved
     }
 
     /// Sessions currently holding running slots.
@@ -180,12 +223,12 @@ impl JobQueue {
     /// (every waiting high job precedes every waiting normal one), if it
     /// is queued.
     pub fn position(&self, id: u32) -> Option<usize> {
-        if let Some(i) = self.high.iter().position(|&q| q == id) {
+        if let Some(i) = self.high.iter().position(|&(q, _)| q == id) {
             return Some(i + 1);
         }
         self.normal
             .iter()
-            .position(|&q| q == id)
+            .position(|&(q, _)| q == id)
             .map(|i| self.high.len() + i + 1)
     }
 }
@@ -218,16 +261,16 @@ mod tests {
         assert_eq!(admit_n(&mut q, 10), Admission::Run);
         assert_eq!(admit_n(&mut q, 11), Admission::Queued(1));
         assert_eq!(admit_n(&mut q, 12), Admission::Queued(2));
-        q.release();
+        let _ = q.release();
         // 11 was promoted and holds the slot even before claiming it.
         assert_eq!(q.running(), 1);
         assert_eq!(q.queued(), 1);
         assert!(!q.claim(12), "12 is still waiting");
         assert!(q.claim(11), "11 owns the freed slot");
         assert!(!q.claim(11), "claim consumes the promotion");
-        q.release();
+        let _ = q.release();
         assert!(q.claim(12));
-        q.release();
+        let _ = q.release();
         assert_eq!(q.running(), 0);
     }
 
@@ -246,15 +289,15 @@ mod tests {
         // FIFO within the high level.
         assert_eq!(q.admit(5, Priority::High), Admission::Queued(2));
         // Drain order: 4, 5 (high, FIFO), then 2, 3 (normal, FIFO).
-        q.release();
+        let _ = q.release();
         assert!(q.claim(4));
-        q.release();
+        let _ = q.release();
         assert!(q.claim(5));
-        q.release();
+        let _ = q.release();
         assert!(q.claim(2));
-        q.release();
+        let _ = q.release();
         assert!(q.claim(3));
-        q.release();
+        let _ = q.release();
         assert_eq!(q.running(), 0);
         assert_eq!(q.queued(), 0);
     }
@@ -277,12 +320,12 @@ mod tests {
         assert_eq!(admit_n(&mut q, 2), Admission::Queued(1));
         assert_eq!(admit_n(&mut q, 3), Admission::Queued(2));
         // 2 gives up while still queued: 3 moves forward.
-        q.abandon(2);
+        let _ = q.abandon(2);
         assert_eq!(q.position(3), Some(1));
         // 1 finishes, promoting 3; 3 then gives up *after* promotion —
         // the slot must not leak.
-        q.release();
-        q.abandon(3);
+        let _ = q.release();
+        let _ = q.abandon(3);
         assert_eq!(q.running(), 0);
         assert_eq!(q.queued(), 0);
         assert_eq!(admit_n(&mut q, 4), Admission::Run);
@@ -294,9 +337,9 @@ mod tests {
         assert_eq!(admit_n(&mut q, 1), Admission::Run);
         assert_eq!(q.admit(2, Priority::High), Admission::Queued(1));
         assert_eq!(admit_n(&mut q, 3), Admission::Queued(2));
-        q.abandon(2);
+        let _ = q.abandon(2);
         assert_eq!(q.position(3), Some(1));
-        q.release();
+        let _ = q.release();
         assert!(q.claim(3));
     }
 
@@ -311,6 +354,49 @@ mod tests {
     fn max_running_floor_is_one() {
         let mut q = JobQueue::new(0, 0);
         assert_eq!(admit_n(&mut q, 1), Admission::Run);
+    }
+
+    #[test]
+    fn promote_aged_moves_starved_normal_jobs_fifo() {
+        let mut q = JobQueue::new(1, 8);
+        assert_eq!(admit_n(&mut q, 1), Admission::Run);
+        assert_eq!(admit_n(&mut q, 2), Admission::Queued(1));
+        assert_eq!(admit_n(&mut q, 3), Admission::Queued(2));
+        assert_eq!(q.admit(4, Priority::High), Admission::Queued(1));
+        // With a zero threshold every normal waiter ages out at once,
+        // landing *behind* the already-waiting high job and keeping
+        // their own 2-before-3 FIFO order.
+        assert_eq!(q.promote_aged(Duration::ZERO), 2);
+        assert_eq!(q.position(4), Some(1));
+        assert_eq!(q.position(2), Some(2));
+        assert_eq!(q.position(3), Some(3));
+        // Nothing left to age; a huge threshold promotes nothing.
+        assert_eq!(q.promote_aged(Duration::ZERO), 0);
+        assert_eq!(admit_n(&mut q, 5), Admission::Queued(4));
+        assert_eq!(q.promote_aged(Duration::from_secs(3600)), 0);
+        assert_eq!(q.position(5), Some(4));
+        // Promoted jobs drain from (and report) the high band.
+        let _ = q.release();
+        assert!(q.claim(4));
+        let _ = q.release();
+        assert!(q.claim(2));
+        let (id, pri, _wait) = q.release().expect("3 was next");
+        assert_eq!((id, pri), (3, Priority::High));
+    }
+
+    #[test]
+    fn release_reports_band_and_wait() {
+        let mut q = JobQueue::new(1, 4);
+        assert_eq!(admit_n(&mut q, 1), Admission::Run);
+        assert_eq!(q.admit(2, Priority::High), Admission::Queued(1));
+        assert_eq!(admit_n(&mut q, 3), Admission::Queued(2));
+        let (id, pri, _wait) = q.release().expect("2 promoted");
+        assert_eq!((id, pri), (2, Priority::High));
+        assert!(q.claim(2));
+        let (id, pri, _wait) = q.release().expect("3 promoted");
+        assert_eq!((id, pri), (3, Priority::Normal));
+        let _ = q.release();
+        assert_eq!((q.running(), q.queued()), (0, 0));
     }
 
     #[test]

@@ -43,6 +43,8 @@ pub fn render_prometheus() -> String {
     scalar("mpamp_jobs_completed_total", "counter", "Jobs finished with a report.", m.jobs_completed.get() as f64);
     scalar("mpamp_jobs_cancelled_total", "counter", "Jobs cancelled by client or deadline.", m.jobs_cancelled.get() as f64);
     scalar("mpamp_jobs_failed_total", "counter", "Jobs terminated with an error.", m.jobs_failed.get() as f64);
+    scalar("mpamp_jobs_requeued_total", "counter", "Aged normal-priority jobs re-queued into the high band.", m.jobs_requeued.get() as f64);
+    scalar("mpamp_workers_reconnected_total", "counter", "Fleet workers re-accepted after losing their connection.", m.workers_reconnected.get() as f64);
     scalar("mpamp_rounds_total", "counter", "Protocol rounds completed process-wide.", rounds as f64);
     scalar(
         "mpamp_rounds_per_second",
@@ -68,6 +70,25 @@ pub fn render_prometheus() -> String {
     let _ = writeln!(out, "# TYPE mpamp_job_uplink_bits gauge");
     for (sid, stat) in &jobs {
         let _ = writeln!(out, "mpamp_job_uplink_bits{} {}", job_labels(*sid, stat), stat.uplink_bits);
+    }
+
+    let _ = writeln!(out, "# HELP mpamp_queue_wait_us Admission-queue wait per priority class (microseconds).");
+    let _ = writeln!(out, "# TYPE mpamp_queue_wait_us histogram");
+    for high in [true, false] {
+        let h = m.queue_wait(high);
+        let name = if high { "high" } else { "normal" };
+        let counts = h.counts();
+        let mut cum = 0u64;
+        for (i, c) in counts.iter().enumerate() {
+            cum += c;
+            let le = match Histogram::bucket_bound_us(i) {
+                Some(bound) => bound.to_string(),
+                None => "+Inf".to_string(),
+            };
+            let _ = writeln!(out, "mpamp_queue_wait_us_bucket{{priority=\"{name}\",le=\"{le}\"}} {cum}");
+        }
+        let _ = writeln!(out, "mpamp_queue_wait_us_sum{{priority=\"{name}\"}} {}", h.sum_us());
+        let _ = writeln!(out, "mpamp_queue_wait_us_count{{priority=\"{name}\"}} {cum}");
     }
 
     let _ = writeln!(out, "# HELP mpamp_stage_latency_us Per-stage span latency (microseconds).");
@@ -123,6 +144,17 @@ pub fn render_json() -> Json {
             })
             .collect(),
     );
+    let queue_wait = [true, false].iter().fold(Json::obj(), |acc, &high| {
+        let h = m.queue_wait(high);
+        acc.set(
+            if high { "high" } else { "normal" },
+            Json::obj()
+                .set("count", Json::Num(h.count() as f64))
+                .set("sum_us", Json::Num(h.sum_us() as f64))
+                .set("p50_us", Json::Num(h.quantile_us(0.50) as f64))
+                .set("p99_us", Json::Num(h.quantile_us(0.99) as f64)),
+        )
+    });
     let stages = Stage::ALL.iter().fold(Json::obj(), |acc, stage| {
         let h = m.stage(*stage);
         acc.set(
@@ -143,6 +175,8 @@ pub fn render_json() -> Json {
         .set("jobs_completed", Json::Num(m.jobs_completed.get() as f64))
         .set("jobs_cancelled", Json::Num(m.jobs_cancelled.get() as f64))
         .set("jobs_failed", Json::Num(m.jobs_failed.get() as f64))
+        .set("jobs_requeued", Json::Num(m.jobs_requeued.get() as f64))
+        .set("workers_reconnected", Json::Num(m.workers_reconnected.get() as f64))
         .set("rounds_total", Json::Num(rounds as f64))
         .set(
             "rounds_per_s",
@@ -160,6 +194,7 @@ pub fn render_json() -> Json {
                 .set("tasks_total", Json::Num(m.pool_tasks_total.get() as f64)),
         )
         .set("jobs", jobs)
+        .set("queue_wait", queue_wait)
         .set("stages", stages)
 }
 
@@ -310,11 +345,17 @@ mod tests {
             "mpamp_uplink_bytes_total",
             "mpamp_pool_threads",
             "mpamp_stage_latency_us_bucket{stage=\"round\"",
+            "mpamp_jobs_requeued_total",
+            "mpamp_workers_reconnected_total",
+            "mpamp_queue_wait_us_bucket{priority=\"high\"",
+            "mpamp_queue_wait_us_bucket{priority=\"normal\",le=\"+Inf\"}",
         ] {
             assert!(text.contains(family), "missing {family} in:\n{text}");
         }
         let snap = render_json();
-        for key in ["uptime_s", "rounds_total", "jobs", "stages", "pool"] {
+        for key in
+            ["uptime_s", "rounds_total", "jobs", "stages", "pool", "queue_wait"]
+        {
             assert!(snap.get(key).is_some(), "missing JSON key {key}");
         }
     }

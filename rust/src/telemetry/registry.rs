@@ -204,6 +204,10 @@ pub struct Metrics {
     pub jobs_cancelled: Counter,
     /// Jobs terminated with an error (daemon).
     pub jobs_failed: Counter,
+    /// Aged normal-priority jobs re-queued into the high band (daemon).
+    pub jobs_requeued: Counter,
+    /// Fleet workers re-accepted after losing their connection (daemon).
+    pub workers_reconnected: Counter,
     /// Protocol rounds completed, process-wide (standalone + served).
     pub rounds_total: Counter,
     /// Metered uplink bytes, process-wide (counted once per session at
@@ -217,6 +221,10 @@ pub struct Metrics {
     pub sessions_finished: Counter,
     /// Tasks dispatched through the persistent thread pool.
     pub pool_tasks_total: Counter,
+    /// Queue wait of high-priority jobs that left the wait queue (µs).
+    pub queue_wait_high: Histogram,
+    /// Queue wait of normal-priority jobs that left the wait queue (µs).
+    pub queue_wait_normal: Histogram,
     stage_round: Histogram,
     stage_encode: Histogram,
     stage_uplink: Histogram,
@@ -236,12 +244,16 @@ impl Metrics {
             jobs_completed: Counter::new(),
             jobs_cancelled: Counter::new(),
             jobs_failed: Counter::new(),
+            jobs_requeued: Counter::new(),
+            workers_reconnected: Counter::new(),
             rounds_total: Counter::new(),
             uplink_bytes_total: Counter::new(),
             downlink_bytes_total: Counter::new(),
             sessions_started: Counter::new(),
             sessions_finished: Counter::new(),
             pool_tasks_total: Counter::new(),
+            queue_wait_high: Histogram::new(),
+            queue_wait_normal: Histogram::new(),
             stage_round: Histogram::new(),
             stage_encode: Histogram::new(),
             stage_uplink: Histogram::new(),
@@ -255,6 +267,16 @@ impl Metrics {
     /// Seconds since the registry was first touched.
     pub fn uptime_s(&self) -> f64 {
         self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// The queue-wait histogram for a priority class (by its stable
+    /// lowercase label, `"high"` / `"normal"`).
+    pub fn queue_wait(&self, high_priority: bool) -> &Histogram {
+        if high_priority {
+            &self.queue_wait_high
+        } else {
+            &self.queue_wait_normal
+        }
     }
 
     /// The latency histogram for `stage`.

@@ -1,0 +1,228 @@
+//! Fault-tolerance integration tests: elastic K-of-P sessions must be
+//! **bit-identical** to the inelastic protocol when K = P and no faults
+//! fire; scripted faults (kills, drops, corruptions, delays) must be
+//! absorbed by the quorum or fail with a *typed* error — never hang,
+//! never panic, and always reproduce bit-for-bit under the same plan.
+
+use std::sync::Arc;
+
+use mpamp::config::{Partitioning, RunConfig, ScheduleKind};
+use mpamp::coordinator::fault::FaultPlan;
+use mpamp::util::proptest::{prop_assert, Prop};
+use mpamp::{Error, RunReport, Session, SessionBuilder};
+
+/// The four smoke scenarios: {row, column} × {entropy-coded (default
+/// ecsq.range under BT), uncompressed} — same shapes the serving tests
+/// pin, so elastic coverage matches the daemon's.
+fn scenario_configs() -> Vec<RunConfig> {
+    let mut cfgs = Vec::new();
+    for (partitioning, raw, seed) in [
+        (Partitioning::Row, false, 151),
+        (Partitioning::Row, true, 252),
+        (Partitioning::Column, false, 353),
+        (Partitioning::Column, true, 454),
+    ] {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.partitioning = partitioning;
+        cfg.seed = seed;
+        if raw {
+            cfg.schedule = ScheduleKind::Uncompressed;
+        }
+        cfgs.push(cfg);
+    }
+    cfgs
+}
+
+/// Everything deterministic must match to the bit; `wall_s` is the one
+/// nondeterministic field and is excluded.
+fn assert_reports_bit_identical(label: &str, want: &RunReport, got: &RunReport) {
+    assert_eq!(want.iters.len(), got.iters.len(), "{label}: iteration count");
+    for (t, (w, g)) in want.iters.iter().zip(&got.iters).enumerate() {
+        assert_eq!(
+            w.sdr_db.to_bits(),
+            g.sdr_db.to_bits(),
+            "{label}: sdr_db differs at t={t}"
+        );
+        assert_eq!(
+            w.sigma_d2_hat.to_bits(),
+            g.sigma_d2_hat.to_bits(),
+            "{label}: sigma_d2_hat differs at t={t}"
+        );
+        assert_eq!(
+            w.rate_wire.to_bits(),
+            g.rate_wire.to_bits(),
+            "{label}: rate_wire differs at t={t}"
+        );
+    }
+    assert_eq!(want.final_xs.len(), got.final_xs.len(), "{label}: batch size");
+    for (sig, (wx, gx)) in want.final_xs.iter().zip(&got.final_xs).enumerate() {
+        assert_eq!(wx.len(), gx.len(), "{label}: x length, signal {sig}");
+        for (i, (w, g)) in wx.iter().zip(gx).enumerate() {
+            assert_eq!(
+                w.to_bits(),
+                g.to_bits(),
+                "{label}: final_x[{sig}][{i}] differs"
+            );
+        }
+    }
+    assert_eq!(
+        want.transport_uplink_bits, got.transport_uplink_bits,
+        "{label}: uplink byte accounting"
+    );
+    assert_eq!(
+        want.transport_downlink_bits, got.transport_downlink_bits,
+        "{label}: downlink byte accounting"
+    );
+    assert_eq!(want.schedule, got.schedule, "{label}: schedule name");
+    assert_eq!(want.partitioning, got.partitioning, "{label}: partitioning");
+}
+
+fn run_with_plan(cfg: &RunConfig, plan: &Arc<FaultPlan>) -> mpamp::Result<RunReport> {
+    SessionBuilder::from_config(cfg.clone())
+        .fault_plan(plan.clone())
+        .build()?
+        .run()
+}
+
+/// The elastic acceptance pin: with K = P and no faults, the deadline
+/// machinery must be invisible — every scenario's report bit-identical
+/// to the inelastic protocol's.
+#[test]
+fn elastic_k_equals_p_without_faults_is_bit_identical() {
+    for cfg in scenario_configs() {
+        let label = format!(
+            "elastic K=P / {} / {:?}",
+            cfg.partitioning.as_str(),
+            cfg.schedule
+        );
+        let want = Session::new(cfg.clone()).unwrap().run().unwrap();
+        let got = SessionBuilder::from_config(cfg)
+            .min_workers(6)
+            .round_deadline_ms(30_000)
+            .build()
+            .unwrap()
+            .run()
+            .unwrap();
+        assert_reports_bit_identical(&label, &want, &got);
+    }
+}
+
+/// Installing an *empty* fault plan must not perturb a session at all —
+/// the wrapper channels pass every frame through untouched.
+#[test]
+fn empty_fault_plan_is_a_strict_no_op() {
+    let mut cfg = RunConfig::test_small(0.05);
+    cfg.seed = 515;
+    let want = Session::new(cfg.clone()).unwrap().run().unwrap();
+    let got = run_with_plan(&cfg, &Arc::new(FaultPlan::none())).unwrap();
+    assert_reports_bit_identical("empty fault plan", &want, &got);
+}
+
+/// One scripted fault of every kind against an elastic 4-of-6 session:
+/// the quorum absorbs all of them and the run still reports a finite
+/// recovery — the ISSUE's canned kill-one-worker acceptance scenario.
+#[test]
+fn scripted_faults_are_absorbed_by_the_elastic_quorum() {
+    let mut cfg = RunConfig::test_small(0.05);
+    cfg.seed = 616;
+    let plan = FaultPlan::parse(
+        "kill:w=2,t=1;corrupt:w=4,t=2;drop:w=0,t=3;delay:w=1,t=4,ms=30",
+    )
+    .unwrap();
+    let report = SessionBuilder::from_config(cfg.clone())
+        .min_workers(4)
+        .round_deadline_ms(800)
+        .fault_plan(Arc::new(plan))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap();
+    assert_eq!(
+        report.iters.len(),
+        cfg.iters,
+        "every round must complete despite the injected faults"
+    );
+    assert!(
+        report.final_sdr_db().is_finite(),
+        "partial fusions must still produce a finite SDR, got {}",
+        report.final_sdr_db()
+    );
+}
+
+/// Killing the quorum itself must fail *fast* and *typed*: a Degraded
+/// error naming the K floor and the round it fell at — not a hang, not
+/// a panic, not an opaque I/O error.
+#[test]
+fn losing_the_quorum_fails_typed_with_round_context() {
+    let mut cfg = RunConfig::test_small(0.05);
+    cfg.seed = 717;
+    let plan = FaultPlan::parse("kill:w=0,t=2;kill:w=1,t=2;kill:w=2,t=2").unwrap();
+    let err = SessionBuilder::from_config(cfg)
+        .min_workers(4)
+        .round_deadline_ms(1_000)
+        .fault_plan(Arc::new(plan))
+        .build()
+        .unwrap()
+        .run()
+        .unwrap_err();
+    assert!(
+        matches!(err, Error::Degraded(_)),
+        "expected Error::Degraded, got {err:?}"
+    );
+    let msg = err.to_string();
+    assert!(msg.contains("min_workers 4"), "no K-floor context: {msg}");
+    assert!(msg.contains("round 2"), "no round context: {msg}");
+}
+
+/// Property: any seeded fault plan on an elastic session either (a)
+/// completes with a finite report, or (b) fails with a typed
+/// `Transport`/`Degraded` error — and whichever it is, a second run of
+/// the same plan reproduces it bit-for-bit (reports) or verbatim
+/// (error messages). Nothing hangs: every wait in the elastic round
+/// loop is deadline-bounded.
+#[test]
+fn seeded_fault_plans_are_deterministic_and_typed() {
+    Prop::new("elastic fault-plan outcomes", 5).check(|g| {
+        let mut cfg = RunConfig::test_small(0.05);
+        cfg.seed = 900 + g.case as u64;
+        // K = 5 leaves only one worker of slack, so two-fault plans can
+        // trip the Degraded floor; K = 3 absorbs everything generated.
+        cfg.min_workers = *g.choice(&[3usize, 5]);
+        cfg.round_deadline_ms = 400;
+        let n_faults = g.usize_in(1, 2);
+        let plan = Arc::new(FaultPlan::generate(
+            g.u64(),
+            cfg.iters as u32,
+            cfg.p as u32,
+            n_faults,
+        ));
+        let label = format!("K={} plan [{}]", cfg.min_workers, plan.render());
+        let first = run_with_plan(&cfg, &plan);
+        let second = run_with_plan(&cfg, &plan);
+        match (&first, &second) {
+            (Ok(a), Ok(b)) => {
+                assert_reports_bit_identical(&label, a, b);
+                prop_assert(
+                    a.final_sdr_db().is_finite(),
+                    format!("{label}: non-finite SDR"),
+                )
+            }
+            (Err(a), Err(b)) => {
+                prop_assert(
+                    matches!(a, Error::Transport(_) | Error::Degraded(_)),
+                    format!("{label}: untyped failure {a:?}"),
+                )?;
+                prop_assert(
+                    a.to_string() == b.to_string(),
+                    format!("{label}: nondeterministic failure: '{a}' vs '{b}'"),
+                )
+            }
+            _ => Err(format!(
+                "{label}: outcome flipped between two identical runs \
+                 (first ok={}, second ok={})",
+                first.is_ok(),
+                second.is_ok()
+            )),
+        }
+    });
+}

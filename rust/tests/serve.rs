@@ -357,6 +357,222 @@ fn full_queue_rejects_and_fleet_mismatch_rejects() {
     daemon.shutdown().unwrap();
 }
 
+/// Priority aging (`--priority-age-s`): a normal job that has waited
+/// past the threshold is promoted into the high band, so a later
+/// high-priority submission can no longer overtake it.
+#[test]
+fn aged_normal_job_keeps_its_turn_against_later_high_job() {
+    let mut serve_cfg = ServeConfig::new("127.0.0.1:0", 6);
+    serve_cfg.max_sessions = 1;
+    serve_cfg.max_queue = 4;
+    serve_cfg.priority_age = Some(Duration::from_millis(1));
+    let daemon = Daemon::start(serve_cfg).unwrap();
+    let addr = daemon.addr().to_string();
+
+    // Job A holds the only slot.
+    let mut a_cfg = RunConfig::test_small(0.05);
+    a_cfg.iters = 300;
+    a_cfg.seed = 51;
+    let mut a = Client::submit(&addr, &a_cfg).unwrap();
+    assert!(matches!(a.next_event().unwrap(), JobEvent::Started));
+    assert!(matches!(a.next_event().unwrap(), JobEvent::Iter(_)));
+
+    // Normal-priority B queues and ages past the 1ms threshold (its own
+    // wait loop runs the promotion within one 25ms poll beat).
+    let mut b_cfg = RunConfig::test_small(0.05);
+    b_cfg.iters = 3;
+    b_cfg.seed = 52;
+    let mut b = Client::submit(&addr, &b_cfg).unwrap();
+    assert_eq!(b.queue_pos(), 1);
+    std::thread::sleep(Duration::from_millis(500));
+
+    // High-priority C lands *behind* the aged B: both now sit in the
+    // high band, which is FIFO.
+    let mut c_cfg = RunConfig::test_small(0.05);
+    c_cfg.iters = 3;
+    c_cfg.seed = 53;
+    let mut c = Client::submit_with(&addr, &c_cfg, Priority::High, None).unwrap();
+    assert_eq!(
+        c.queue_pos(),
+        2,
+        "B should already sit in the high band when C is admitted"
+    );
+
+    let c_watcher = std::thread::spawn(move || {
+        let mut started_at = None;
+        loop {
+            match c.next_event().unwrap() {
+                JobEvent::Started => started_at = Some(Instant::now()),
+                JobEvent::Iter(_) => {}
+                JobEvent::Report(_) => {
+                    return started_at.expect("C reported before starting")
+                }
+                other => panic!("job C: unexpected event {other:?}"),
+            }
+        }
+    });
+    a.cancel().unwrap();
+    loop {
+        match a.next_event().unwrap() {
+            JobEvent::Iter(_) => {}
+            JobEvent::Cancelled => break,
+            other => panic!("expected cancellation for job A, got {other:?}"),
+        }
+    }
+    let b_started = loop {
+        match b.next_event().unwrap() {
+            JobEvent::Started => break Instant::now(),
+            other => panic!("job B: unexpected event before start: {other:?}"),
+        }
+    };
+    loop {
+        match b.next_event().unwrap() {
+            JobEvent::Iter(_) => {}
+            JobEvent::Report(_) => break,
+            other => panic!("job B: unexpected event {other:?}"),
+        }
+    }
+    let c_started = c_watcher.join().unwrap();
+    assert!(
+        b_started < c_started,
+        "aged normal job B must take the freed slot before the later high C"
+    );
+    daemon.shutdown().unwrap();
+}
+
+/// Satellite regression: a daemon that dies while the job is still
+/// queued must surface a queue-aware transport error — the client knows
+/// it never started and where it stood — not a bare timeout.
+#[test]
+fn daemon_death_while_queued_reports_queue_position() {
+    use std::io::{Read, Write};
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    // Accept, read hello + submit, queue the job at position 3, then die.
+    let dying_daemon = std::thread::spawn(move || {
+        let (mut s, _) = listener.accept().unwrap();
+        let mut hello = [0u8; 5];
+        s.read_exact(&mut hello).unwrap();
+        let mut len = [0u8; 4];
+        s.read_exact(&mut len).unwrap();
+        let mut frame = vec![0u8; u32::from_le_bytes(len) as usize];
+        s.read_exact(&mut frame).unwrap();
+        let mut accepted = Vec::new();
+        accepted.extend_from_slice(&9u32.to_le_bytes()); // kind + 2×u32
+        accepted.push(3); // J_ACCEPTED
+        accepted.extend_from_slice(&42u32.to_le_bytes());
+        accepted.extend_from_slice(&3u32.to_le_bytes()); // queued at 3
+        s.write_all(&accepted).unwrap();
+        // Dropping the socket here is the daemon dying mid-queue.
+    });
+
+    let cfg = RunConfig::test_small(0.05);
+    let mut job = Client::submit_with(
+        &addr,
+        &cfg,
+        Priority::Normal,
+        Some(Duration::from_secs(5)),
+    )
+    .unwrap();
+    assert_eq!((job.session_id(), job.queue_pos()), (42, 3));
+    dying_daemon.join().unwrap();
+    let err = match job.next_event() {
+        Err(e) => e.to_string(),
+        Ok(ev) => panic!("expected a transport error, got event {ev:?}"),
+    };
+    assert!(err.contains("still queued"), "not queue-aware: {err}");
+    assert!(err.contains("position 3"), "missing queue position: {err}");
+    assert!(err.contains("session 42"), "missing session context: {err}");
+}
+
+/// Chaos: a scripted fault plan kills one fleet worker's connection and
+/// delays another mid-run. An elastic K-of-P job keeps fusing on the
+/// live majority, the killed worker reconnects with backoff (visible on
+/// the `workers_reconnected_total` counter), and the daemon still
+/// drains and shuts down cleanly afterwards.
+#[test]
+fn killed_fleet_worker_reconnects_and_elastic_job_completes() {
+    use mpamp::coordinator::fault::FaultPlan;
+
+    let mut serve_cfg = ServeConfig::new("127.0.0.1:0", 6);
+    serve_cfg.fault_plan = Some(std::sync::Arc::new(
+        FaultPlan::parse("kill:w=2,t=1;delay:w=4,t=2,ms=40").unwrap(),
+    ));
+    let daemon = Daemon::start(serve_cfg).unwrap();
+    let addr = daemon.addr().to_string();
+
+    let before = mpamp::telemetry::metrics().workers_reconnected.get();
+    let mut cfg = RunConfig::test_small(0.05);
+    cfg.iters = 8;
+    cfg.seed = 61;
+    cfg.min_workers = 4;
+    cfg.round_deadline_ms = 250;
+    let report = Client::submit(&addr, &cfg).unwrap().await_report().unwrap();
+    assert!(
+        report.final_sdr_db().is_finite(),
+        "elastic job under faults must still produce a finite report"
+    );
+    // The killed worker must come back (the counter is process-global
+    // and monotonic, so compare against the pre-test reading).
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while mpamp::telemetry::metrics().workers_reconnected.get() <= before {
+        assert!(Instant::now() < deadline, "killed worker never reconnected");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    // Drain and shut down with the fleet possibly mid-reconnect.
+    daemon.begin_drain();
+    let drain_deadline = Instant::now() + Duration::from_secs(30);
+    while !daemon.is_idle() {
+        assert!(Instant::now() < drain_deadline, "drain never went idle");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    daemon.shutdown().unwrap();
+}
+
+/// Draining must not depend on a healthy fleet: a drain that begins
+/// *before* a scripted worker kill fires still finishes the admitted
+/// elastic job (the quorum covers the dead-worker window), bounces new
+/// submissions, and reaches idle for a clean shutdown.
+#[test]
+fn drain_finishes_elastic_job_while_a_worker_is_dead() {
+    use mpamp::coordinator::fault::FaultPlan;
+
+    let mut serve_cfg = ServeConfig::new("127.0.0.1:0", 6);
+    serve_cfg.fault_plan =
+        Some(std::sync::Arc::new(FaultPlan::parse("kill:w=1,t=2").unwrap()));
+    let daemon = Daemon::start(serve_cfg).unwrap();
+    let addr = daemon.addr().to_string();
+
+    let mut cfg = RunConfig::test_small(0.05);
+    cfg.iters = 40;
+    cfg.seed = 62;
+    cfg.min_workers = 4;
+    cfg.round_deadline_ms = 250;
+    let mut job = Client::submit(&addr, &cfg).unwrap();
+    assert!(matches!(job.next_event().unwrap(), JobEvent::Started));
+
+    // Drain before the round-2 kill fires: the dead-worker window opens
+    // while the daemon is already draining.
+    daemon.begin_drain();
+    let err = Client::submit(&addr, &cfg).unwrap_err().to_string();
+    assert!(err.contains("draining"), "unexpected rejection message: {err}");
+
+    let report = job.await_report().unwrap();
+    assert_eq!(report.iters.len(), 40, "admitted job must finish its rounds");
+    assert!(
+        report.final_sdr_db().is_finite(),
+        "drained elastic job under a worker kill must still report"
+    );
+
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !daemon.is_idle() {
+        assert!(Instant::now() < deadline, "drain never went idle");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    daemon.shutdown().unwrap();
+}
+
 /// The graceful-shutdown contract behind `mpamp serve`'s SIGTERM path:
 /// after [`Daemon::begin_drain`] new submissions bounce with a "draining"
 /// message, while already-admitted jobs run to completion — bit-identical
